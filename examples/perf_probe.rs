@@ -1,0 +1,40 @@
+// quick probe: where does the per-bundle time go?
+use std::path::PathBuf;
+use std::time::Instant;
+use merlin::runtime::models::run_jag_batch;
+use merlin::runtime::RuntimePool;
+use merlin::data::bundle::{write_bundle, BundleLayout};
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    let rt = RuntimePool::new(&artifacts, 1).unwrap();
+    let layout = BundleLayout::default();
+    let dir = std::env::temp_dir().join("merlin-perfprobe");
+    std::fs::create_dir_all(&dir).unwrap();
+    // PJRT only
+    let t0 = Instant::now();
+    for i in 0..200u64 { run_jag_batch(&rt, 1, i*10, 10).unwrap(); }
+    println!("pjrt+node per bundle: {:?}", t0.elapsed()/200);
+    // + bundle write
+    let t0 = Instant::now();
+    for i in 0..200u64 {
+        let nodes = run_jag_batch(&rt, 1, i*10, 10).unwrap();
+        write_bundle(&layout, &dir, i*10, nodes.into_iter().enumerate().map(|(k,n)|(i*10+k as u64,n)).collect()).unwrap();
+    }
+    println!("pjrt+node+write per bundle: {:?}", t0.elapsed()/200);
+    // encode-only vs compression split
+    use merlin::data::container::write_container;
+    let nodes = run_jag_batch(&rt, 1, 0, 10).unwrap();
+    let mut bundle = merlin::data::node::Node::new();
+    for (k, n) in nodes.into_iter().enumerate() { bundle.mount(&format!("sim_{k:010}"), n); }
+    let t0 = Instant::now();
+    for i in 0..500 { write_container(&dir.join(format!("z{i}.mrln")), &bundle, true).unwrap(); }
+    println!("write compressed: {:?}", t0.elapsed()/500);
+    let t0 = Instant::now();
+    for i in 0..500 { write_container(&dir.join(format!("r{i}.mrln")), &bundle, false).unwrap(); }
+    println!("write raw: {:?}", t0.elapsed()/500);
+    let z = std::fs::metadata(dir.join("z0.mrln")).unwrap().len();
+    let r = std::fs::metadata(dir.join("r0.mrln")).unwrap().len();
+    println!("sizes: compressed {z} raw {r}");
+    std::fs::remove_dir_all(&dir).ok();
+}

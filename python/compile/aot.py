@@ -1,0 +1,63 @@
+"""AOT lowering: jax -> HLO text artifacts + manifest.
+
+HLO *text* (not ``lowered.compile().serialize()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the pinned xla_extension 0.5.1 on the rust side
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model as model_mod
+
+try:  # jax moved xla_client around across versions
+    from jax._src.lib import xla_client as xc
+except ImportError:  # pragma: no cover
+    from jax.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"models": []}
+    for name, (fn, example_args) in sorted(model_mod.model_signatures().items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        # Record the I/O signature for rust-side validation.
+        outs = lowered.out_info
+        out_dims = [list(o.shape) for o in jax.tree.leaves(outs)]
+        in_dims = [list(a.shape) for a in example_args]
+        manifest["models"].append(
+            {"name": name, "inputs": in_dims, "outputs": out_dims}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Layer-1 Pallas kernels for the Merlin reproduction.
+
+Every kernel is written with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); correctness is pinned to the pure-jnp oracles
+in :mod:`compile.kernels.ref` by the pytest suite.
+"""
+
+from . import jag, mlp, ref, seir  # noqa: F401

@@ -1,0 +1,147 @@
+"""Pallas kernel: batched JAG-like ICF simulator.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the original JAG is
+single-core python — there is no GPU kernel to port. What the TPU buys us
+is the *ensemble member as a batched kernel*: the whole (B, 5) → scalars /
+series / images map runs as one VMEM-resident program per batch block.
+
+Structure:
+  * grid over batch blocks (``BLOCK_B`` samples per program instance);
+  * latents + scalars + series: vectorized elementwise math on (BLOCK_B, ·)
+    tiles (VPU work);
+  * images: expressed as an outer product ``brightness(B,C) ⊗ emission
+    (B, 16·16)`` — the emission field itself is computed from broadcast
+    Legendre bases so the hot loop is MXU/VPU friendly and everything
+    stays in VMEM (see ``vmem_bytes`` below).
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import IMG, N_CHANNELS, N_INPUTS, N_SCALARS, N_TIMES
+
+# Batch tile per program instance. 128 samples x (5 + 16 + 32 + 4*256)
+# floats ≈ 0.55 MB of VMEM — comfortably under the ~16 MB budget, sized to
+# keep the (BLOCK_B, 1024) image tile MXU-aligned (128 lanes).
+BLOCK_B = 128
+
+
+def _grids():
+    """Precomputed image-plane bases (compile-time constants)."""
+    yy = jnp.linspace(-1.0, 1.0, IMG, dtype=jnp.float32)
+    xx = jnp.linspace(-1.0, 1.0, IMG, dtype=jnp.float32)
+    gy, gx = jnp.meshgrid(yy, xx, indexing="ij")
+    r = jnp.sqrt(gx**2 + gy**2) + 1e-6
+    ctheta = gy / r
+    leg2 = 0.5 * (3.0 * ctheta**2 - 1.0)
+    leg4 = 0.125 * (35.0 * ctheta**4 - 30.0 * ctheta**2 + 3.0)
+    return r.reshape(-1), leg2.reshape(-1), leg4.reshape(-1)  # (256,)
+
+
+def _jag_kernel(x_ref, scalars_ref, series_ref, images_ref):
+    x = x_ref[...]  # (BLOCK_B, 5)
+    drive = 0.5 + 1.5 * x[:, 0]
+    scale = 0.8 + 0.4 * x[:, 1]
+    p2 = 2.0 * (x[:, 2] - 0.5)
+    p4 = 2.0 * (x[:, 3] - 0.5)
+    mix = x[:, 4]
+
+    vel = drive * (1.1 - 0.3 * scale) * (1.0 - 0.25 * mix)
+    temp = vel**2 * (1.0 - 0.5 * (p2**2 + 0.5 * p4**2))
+    rho = scale * (1.0 + 0.8 * drive) * (1.0 - 0.6 * mix)
+    yld = jnp.maximum(temp, 0.0) ** 4 * rho * 1.0e-1
+
+    scalars_ref[...] = jnp.stack(
+        [
+            yld,
+            vel,
+            temp,
+            rho,
+            p2,
+            p4,
+            mix,
+            drive,
+            scale,
+            yld * (1.0 - mix),
+            vel * scale,
+            temp * rho,
+            jnp.abs(p2) + jnp.abs(p4),
+            yld / (1.0 + vel),
+            rho * drive,
+            temp - vel,
+        ],
+        axis=1,
+    ).astype(jnp.float32)
+
+    t = jnp.linspace(0.0, 1.0, N_TIMES, dtype=jnp.float32)[None, :]
+    t_peak = (0.45 + 0.25 * (1.0 - vel))[:, None]
+    width = (0.05 + 0.1 * scale * (1.0 + 0.5 * mix))[:, None]
+    series_ref[...] = (
+        (yld[:, None] + 0.1) * jnp.exp(-0.5 * ((t - t_peak) / width) ** 2)
+    ).astype(jnp.float32)
+
+    # Image synthesis on the flattened 256-pixel plane.
+    r, leg2b, leg4b = _grids()  # (256,) compile-time constants
+    r_shell = 0.6 * scale[:, None] * (
+        1.0 + 0.15 * p2[:, None] * leg2b[None, :] + 0.1 * p4[:, None] * leg4b[None, :]
+    )  # (BLOCK_B, 256)
+    shell_w = (0.08 + 0.06 * mix)[:, None]
+    emission = jnp.exp(-0.5 * ((r[None, :] - r_shell) / shell_w) ** 2)  # (B', 256)
+    band = jnp.exp(
+        -jnp.arange(N_CHANNELS, dtype=jnp.float32)[None, :]
+        * (0.5 / (0.25 + jnp.maximum(temp, 0.0)))[:, None]
+    )  # (B', C)
+    bright = (yld[:, None] + 0.05) * band  # (B', C)
+    # Outer product (B', C) x (B', 256) -> (B', C, 256): batched rank-1 —
+    # the MXU-shaped core of the kernel.
+    img = bright[:, :, None] * emission[:, None, :]
+    images_ref[...] = img.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def jag_batch(x, *, interpret=True):
+    """Run the JAG kernel on a (B, 5) batch. B must divide by BLOCK_B or be
+    smaller than it (single block). Returns (scalars, series, images) with
+    images shaped (B, C, IMG, IMG)."""
+    b = x.shape[0]
+    block = min(BLOCK_B, b)
+    if b % block != 0:
+        raise ValueError(f"batch {b} not divisible by block {block}")
+    grid = (b // block,)
+    scalars, series, images_flat = pl.pallas_call(
+        _jag_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, N_INPUTS), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block, N_SCALARS), lambda i: (i, 0)),
+            pl.BlockSpec((block, N_TIMES), lambda i: (i, 0)),
+            pl.BlockSpec((block, N_CHANNELS, IMG * IMG), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, N_SCALARS), jnp.float32),
+            jax.ShapeDtypeStruct((b, N_TIMES), jnp.float32),
+            jax.ShapeDtypeStruct((b, N_CHANNELS, IMG * IMG), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return scalars, series, images_flat.reshape(b, N_CHANNELS, IMG, IMG)
+
+
+def vmem_bytes(block=BLOCK_B):
+    """Estimated VMEM working set per program instance (bytes): input tile,
+    latent vectors, and the three output tiles. Used by DESIGN.md §Perf."""
+    floats = (
+        block * N_INPUTS          # x tile
+        + 10 * block              # latents
+        + block * N_SCALARS
+        + block * N_TIMES
+        + block * N_CHANNELS * IMG * IMG  # image tile
+        + 2 * block * IMG * IMG   # emission + r_shell temporaries
+    )
+    return 4 * floats

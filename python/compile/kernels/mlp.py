@@ -1,0 +1,113 @@
+"""Pallas kernels: MLP surrogate forward pass and fused SGD train step.
+
+The §3.2 optimization study trains an ML surrogate on extracted features
+every iteration, then optimizes over it. Our surrogate is a 2-layer tanh
+MLP (5 → H → 16). The train step is the L1 showpiece: **forward + backward
++ SGD update fused into a single kernel**, so the weights make exactly one
+round trip HBM → VMEM → HBM per step instead of one per op (matching the
+"2 HBM passes over weights instead of 6" target in DESIGN.md §Perf).
+
+Dimensions are small enough that a whole step fits one program instance
+(no grid): B=128, H=64 → weights 5·64 + 64·16 ≈ 1.3k floats, activations
+128·64 ≈ 8k floats, everything VMEM-resident. The matmuls (B×I·I×H etc.)
+are the MXU work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HIDDEN = 64
+
+
+def _fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    x = x_ref[...]
+    h = jnp.tanh(x @ w1_ref[...] + b1_ref[...][None, :])
+    out_ref[...] = (h @ w2_ref[...] + b2_ref[...][None, :]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_fwd(x, w1, b1, w2, b2, *, interpret=True):
+    """Forward pass: x (B, I) -> (B, O)."""
+    b, _ = x.shape
+    o = w2.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def _train_kernel(
+    x_ref, y_ref, w1_ref, b1_ref, w2_ref, b2_ref, lr_ref,
+    w1o_ref, b1o_ref, w2o_ref, b2o_ref, loss_ref,
+):
+    x = x_ref[...]          # (B, I)
+    y = y_ref[...]          # (B, O)
+    w1 = w1_ref[...]
+    b1 = b1_ref[...]
+    w2 = w2_ref[...]
+    b2 = b2_ref[...]
+    lr = lr_ref[...][0]
+
+    bsz = x.shape[0]
+    osz = y.shape[1]
+
+    # Forward (activations stay in VMEM for the backward pass).
+    h = jnp.tanh(x @ w1 + b1[None, :])      # (B, H)
+    pred = h @ w2 + b2[None, :]             # (B, O)
+    err = pred - y
+    loss_ref[...] = jnp.mean(err**2).reshape((1,)).astype(jnp.float32)
+
+    # Backward + fused SGD update.
+    gpred = 2.0 * err / (bsz * osz)         # (B, O)
+    gw2 = h.T @ gpred                       # MXU: (H, B) @ (B, O)
+    gb2 = gpred.sum(axis=0)
+    gh = gpred @ w2.T                       # MXU: (B, O) @ (O, H)
+    ghpre = gh * (1.0 - h**2)
+    gw1 = x.T @ ghpre                       # MXU: (I, B) @ (B, H)
+    gb1 = ghpre.sum(axis=0)
+
+    w1o_ref[...] = (w1 - lr * gw1).astype(jnp.float32)
+    b1o_ref[...] = (b1 - lr * gb1).astype(jnp.float32)
+    w2o_ref[...] = (w2 - lr * gw2).astype(jnp.float32)
+    b2o_ref[...] = (b2 - lr * gb2).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mlp_train_step(x, y, w1, b1, w2, b2, lr, *, interpret=True):
+    """One fused SGD step. lr is shape (1,). Returns (w1', b1', w2', b2',
+    loss (1,))."""
+    i = x.shape[1]
+    h = w1.shape[1]
+    o = y.shape[1]
+    return pl.pallas_call(
+        _train_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((i, h), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h, o), jnp.float32),
+            jax.ShapeDtypeStruct((o,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y, w1, b1, w2, b2, lr)
+
+
+def init_params(key, n_in, n_out, hidden=HIDDEN):
+    """Xavier-ish init used by both python tests and the AOT examples."""
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (n_in, hidden), jnp.float32) / jnp.sqrt(n_in)
+    b1 = jnp.zeros((hidden,), jnp.float32)
+    w2 = jax.random.normal(k2, (hidden, n_out), jnp.float32) / jnp.sqrt(hidden)
+    b2 = jnp.zeros((n_out,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+def flops_per_step(b, i, h, o):
+    """MXU FLOPs of one fused train step (fwd 2 matmuls + bwd 3 matmuls)."""
+    fwd = 2 * b * i * h + 2 * b * h * o
+    bwd = 2 * h * b * o + 2 * b * o * h + 2 * i * b * h
+    return fwd + bwd

@@ -1,0 +1,182 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for kernel correctness: small, direct
+translations of the physics/math with no tiling or kernel machinery.
+The pytest + hypothesis suites assert the Pallas implementations match
+these to float32 tolerance across shapes and seeds.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# JAG-like semi-analytic ICF implosion model.
+#
+# The real JAG evolves a capsule through the final ns of a NIF shot and
+# emits scalars, time series, and ray-traced X-ray images. Our analytic
+# analog preserves the *data topology* (5 inputs in [0,1] -> scalars +
+# time series + multi-channel images) and the smooth nonlinear response
+# surface ML surrogates are trained on.
+#
+# Inputs  x: (B, 5)   in [0, 1]
+# Outputs scalars: (B, 16), series: (B, 32), images: (B, 4, 16, 16)
+# ---------------------------------------------------------------------------
+
+N_INPUTS = 5
+N_SCALARS = 16
+N_TIMES = 32
+N_CHANNELS = 4
+IMG = 16
+
+
+def jag_ref(x):
+    """Reference JAG analog. x: (B, 5) float32 -> (scalars, series, images)."""
+    x = jnp.asarray(x, jnp.float32)
+    # Physics-flavored latent quantities.
+    drive = 0.5 + 1.5 * x[:, 0]          # laser drive multiplier
+    scale = 0.8 + 0.4 * x[:, 1]          # capsule scale
+    p2 = 2.0 * (x[:, 2] - 0.5)           # P2 shape perturbation
+    p4 = 2.0 * (x[:, 3] - 0.5)           # P4 shape perturbation
+    mix = x[:, 4]                        # fuel-ablator mix fraction
+
+    # Implosion velocity and stagnation temperature (smooth nonlinear maps).
+    vel = drive * (1.1 - 0.3 * scale) * (1.0 - 0.25 * mix)
+    temp = vel**2 * (1.0 - 0.5 * (p2**2 + 0.5 * p4**2))
+    rho = scale * (1.0 + 0.8 * drive) * (1.0 - 0.6 * mix)
+    # Yield: strongly nonlinear in temperature (fusion reactivity ~ T^4 here).
+    yld = jnp.maximum(temp, 0.0) ** 4 * rho * 1.0e-1
+
+    # 16 scalars: yield + velocity + temp + rho + shape moments + mixes.
+    scalars = jnp.stack(
+        [
+            yld,
+            vel,
+            temp,
+            rho,
+            p2,
+            p4,
+            mix,
+            drive,
+            scale,
+            yld * (1.0 - mix),
+            vel * scale,
+            temp * rho,
+            jnp.abs(p2) + jnp.abs(p4),
+            yld / (1.0 + vel),
+            rho * drive,
+            temp - vel,
+        ],
+        axis=1,
+    ).astype(jnp.float32)
+
+    # 32-sample time series: stagnation x-ray pulse; peak position/width/
+    # height modulated by the latents.
+    t = jnp.linspace(0.0, 1.0, N_TIMES, dtype=jnp.float32)[None, :]  # (1, T)
+    t_peak = (0.45 + 0.25 * (1.0 - vel))[:, None]
+    width = (0.05 + 0.1 * scale * (1.0 + 0.5 * mix))[:, None]
+    series = (yld[:, None] + 0.1) * jnp.exp(-0.5 * ((t - t_peak) / width) ** 2)
+    series = series.astype(jnp.float32)
+
+    # 4-channel 16x16 images: limb-brightened shell with P2/P4 distortion,
+    # one channel per viewing energy band (brightness falls with band,
+    # hotter implosions fall slower).
+    yy = jnp.linspace(-1.0, 1.0, IMG, dtype=jnp.float32)
+    xx = jnp.linspace(-1.0, 1.0, IMG, dtype=jnp.float32)
+    gy, gx = jnp.meshgrid(yy, xx, indexing="ij")       # (16, 16)
+    r = jnp.sqrt(gx**2 + gy**2) + 1e-6
+    ctheta = gy / r
+    # Legendre P2, P4 of cos(theta).
+    leg2 = 0.5 * (3.0 * ctheta**2 - 1.0)
+    leg4 = 0.125 * (35.0 * ctheta**4 - 30.0 * ctheta**2 + 3.0)
+    r_shell = (
+        0.6 * scale[:, None, None]
+        * (1.0 + 0.15 * p2[:, None, None] * leg2[None] + 0.1 * p4[:, None, None] * leg4[None])
+    )  # (B, 16, 16)
+    shell_w = 0.08 + 0.06 * mix[:, None, None]
+    emission = jnp.exp(-0.5 * ((r[None] - r_shell) / shell_w) ** 2)  # (B,16,16)
+    band = jnp.exp(
+        -jnp.arange(N_CHANNELS, dtype=jnp.float32)[None, :]
+        * (0.5 / (0.25 + jnp.maximum(temp, 0.0)))[:, None]
+    )  # (B, C)
+    images = (
+        (yld[:, None, None, None] + 0.05)
+        * band[:, :, None, None]
+        * emission[:, None, :, :]
+    ).astype(jnp.float32)  # (B, 4, 16, 16)
+
+    return scalars, series, images
+
+
+# ---------------------------------------------------------------------------
+# 2-layer MLP surrogate (5 -> H -> 16, tanh): forward and fused SGD step.
+# ---------------------------------------------------------------------------
+
+
+def mlp_fwd_ref(x, w1, b1, w2, b2):
+    """x: (B, I); w1: (I, H); b1: (H,); w2: (H, O); b2: (O,) -> (B, O)."""
+    h = jnp.tanh(x @ w1 + b1[None, :])
+    return h @ w2 + b2[None, :]
+
+
+def mlp_train_ref(x, y, w1, b1, w2, b2, lr):
+    """One fused SGD step on MSE loss. Returns (w1', b1', w2', b2', loss).
+
+    loss = mean((pred - y)^2) over all B*O elements.
+    """
+    b = x.shape[0]
+    o = y.shape[1]
+    h_pre = x @ w1 + b1[None, :]
+    h = jnp.tanh(h_pre)
+    pred = h @ w2 + b2[None, :]
+    err = pred - y                      # (B, O)
+    loss = jnp.mean(err**2)
+    # Backprop (MSE with mean over B*O: d loss/d pred = 2 err / (B*O)).
+    gpred = 2.0 * err / (b * o)
+    gw2 = h.T @ gpred                   # (H, O)
+    gb2 = gpred.sum(axis=0)             # (O,)
+    gh = gpred @ w2.T                   # (B, H)
+    ghpre = gh * (1.0 - h**2)           # tanh'
+    gw1 = x.T @ ghpre                   # (I, H)
+    gb1 = ghpre.sum(axis=0)             # (H,)
+    return (
+        w1 - lr * gw1,
+        b1 - lr * gb1,
+        w2 - lr * gw2,
+        b2 - lr * gb2,
+        loss.reshape((1,)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Metapopulation SEIR day step (the epicast analog).
+#
+# state: (M, 4) = S, E, I, R fractions per metro (rows sum to 1)
+# params: (M, 3) = beta (infectivity), sigma (incubation^-1), gamma
+#         (recovery^-1) per metro
+# mixing: (M, M) row-stochastic contact matrix between metros
+# Returns (next_state, new_infections (M,)).
+# ---------------------------------------------------------------------------
+
+
+def seir_step_ref(state, params, mixing):
+    s, e, i, r = state[:, 0], state[:, 1], state[:, 2], state[:, 3]
+    beta, sigma, gamma = params[:, 0], params[:, 1], params[:, 2]
+    # Force of infection: local beta times mixed infectious fraction.
+    i_mixed = mixing @ i
+    foi = beta * i_mixed
+    new_e = jnp.clip(foi * s, 0.0, s)      # S -> E
+    new_i = jnp.clip(sigma * e, 0.0, e)    # E -> I
+    new_r = jnp.clip(gamma * i, 0.0, i)    # I -> R
+    nxt = jnp.stack(
+        [s - new_e, e + new_e - new_i, i + new_i - new_r, r + new_r], axis=1
+    ).astype(jnp.float32)
+    return nxt, new_i.astype(jnp.float32)
+
+
+def seir_simulate_ref(state0, params, mixing, days):
+    """Unrolled reference trajectory: returns (daily_new_i (T, M), final)."""
+    state = jnp.asarray(state0, jnp.float32)
+    rows = []
+    for _ in range(days):
+        state, new_i = seir_step_ref(state, params, mixing)
+        rows.append(new_i)
+    return jnp.stack(rows, axis=0), state

@@ -1,0 +1,53 @@
+"""Pallas kernel: metapopulation SEIR day step (epicast analog).
+
+epicast is an MPI agent-based model at census-tract resolution; our
+substitute keeps the structure the COVID study workflow needs — per-metro
+parameters (the "local" DAG parameters of §3.3), cross-metro mixing, and a
+daily new-infection trajectory to calibrate against — as a vectorized
+(M, 4) compartment update whose mixing term ``mixing @ I`` is the MXU work.
+The day loop lives in Layer 2 (``lax.scan`` in model.py), so one kernel
+launch per day and the trajectory assembly fuse into a single HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seir_step_kernel(state_ref, params_ref, mixing_ref, next_ref, newi_ref):
+    state = state_ref[...]      # (M, 4)
+    params = params_ref[...]    # (M, 3)
+    mixing = mixing_ref[...]    # (M, M)
+    s = state[:, 0]
+    e = state[:, 1]
+    i = state[:, 2]
+    r = state[:, 3]
+    beta = params[:, 0]
+    sigma = params[:, 1]
+    gamma = params[:, 2]
+    i_mixed = mixing @ i        # MXU: cross-metro exposure
+    foi = beta * i_mixed
+    new_e = jnp.clip(foi * s, 0.0, s)
+    new_i = jnp.clip(sigma * e, 0.0, e)
+    new_r = jnp.clip(gamma * i, 0.0, i)
+    next_ref[...] = jnp.stack(
+        [s - new_e, e + new_e - new_i, i + new_i - new_r, r + new_r], axis=1
+    ).astype(jnp.float32)
+    newi_ref[...] = new_i.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def seir_step(state, params, mixing, *, interpret=True):
+    """One day: (state (M,4), params (M,3), mixing (M,M)) ->
+    (next_state (M,4), new_infections (M,))."""
+    m = state.shape[0]
+    return pl.pallas_call(
+        _seir_step_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 4), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(state, params, mixing)

@@ -1,0 +1,94 @@
+"""Layer 2: the JAX compute graphs lowered to AOT artifacts.
+
+Each public function here is a pure jax function over fixed shapes that
+calls the Layer-1 Pallas kernels. ``aot.py`` lowers them once to HLO text;
+the rust runtime executes them via PJRT. Nothing in this package runs at
+request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import jag as jag_k
+from .kernels import mlp as mlp_k
+from .kernels import seir as seir_k
+
+# Static shapes of the AOT artifacts (DESIGN.md experiment index).
+JAG_BATCHES = (1, 10, 128)      # per-sample, per-bundle, perf-block
+SURROGATE_BATCH = 128
+SURROGATE_IN = jag_k.N_INPUTS   # 5
+SURROGATE_OUT = jag_k.N_SCALARS  # 16 (predict the scalar block)
+SEIR_METROS = 16
+SEIR_DAYS = 64
+
+
+def jag_batch(x):
+    """(B, 5) -> (scalars (B,16), series (B,32), images (B,4,16,16))."""
+    return jag_k.jag_batch(x)
+
+
+def surrogate_fwd(x, w1, b1, w2, b2):
+    """Surrogate prediction: (B, 5) -> (B, 16)."""
+    return (mlp_k.mlp_fwd(x, w1, b1, w2, b2),)
+
+
+def surrogate_train(x, y, w1, b1, w2, b2, lr):
+    """One fused SGD step; see kernels.mlp."""
+    return mlp_k.mlp_train_step(x, y, w1, b1, w2, b2, lr)
+
+
+def seir_simulate(state0, params, mixing):
+    """Scan the SEIR day kernel over SEIR_DAYS days.
+
+    Returns (daily new infections (T, M), final state (M, 4)).
+    """
+
+    def step(state, _):
+        nxt, new_i = seir_k.seir_step(state, params, mixing)
+        return nxt, new_i
+
+    final, traj = jax.lax.scan(step, state0, None, length=SEIR_DAYS)
+    return traj, final
+
+
+def model_signatures():
+    """Name -> (fn, example_args). Drives aot.py and the manifest."""
+    sigs = {}
+    for b in JAG_BATCHES:
+        sigs[f"jag_b{b}"] = (
+            jag_batch,
+            (jax.ShapeDtypeStruct((b, SURROGATE_IN), jnp.float32),),
+        )
+    f32 = jnp.float32
+    h = mlp_k.HIDDEN
+    sigs["surrogate_fwd"] = (
+        surrogate_fwd,
+        (
+            jax.ShapeDtypeStruct((SURROGATE_BATCH, SURROGATE_IN), f32),
+            jax.ShapeDtypeStruct((SURROGATE_IN, h), f32),
+            jax.ShapeDtypeStruct((h,), f32),
+            jax.ShapeDtypeStruct((h, SURROGATE_OUT), f32),
+            jax.ShapeDtypeStruct((SURROGATE_OUT,), f32),
+        ),
+    )
+    sigs["surrogate_train"] = (
+        surrogate_train,
+        (
+            jax.ShapeDtypeStruct((SURROGATE_BATCH, SURROGATE_IN), f32),
+            jax.ShapeDtypeStruct((SURROGATE_BATCH, SURROGATE_OUT), f32),
+            jax.ShapeDtypeStruct((SURROGATE_IN, h), f32),
+            jax.ShapeDtypeStruct((h,), f32),
+            jax.ShapeDtypeStruct((h, SURROGATE_OUT), f32),
+            jax.ShapeDtypeStruct((SURROGATE_OUT,), f32),
+            jax.ShapeDtypeStruct((1,), f32),
+        ),
+    )
+    sigs["seir"] = (
+        seir_simulate,
+        (
+            jax.ShapeDtypeStruct((SEIR_METROS, 4), f32),
+            jax.ShapeDtypeStruct((SEIR_METROS, 3), f32),
+            jax.ShapeDtypeStruct((SEIR_METROS, SEIR_METROS), f32),
+        ),
+    )
+    return sigs

@@ -1,0 +1,68 @@
+"""AOT path: lowering produces loadable HLO text + a consistent manifest."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    d = tempfile.mkdtemp(prefix="merlin-aot-test-")
+    manifest = aot.lower_all(d)
+    return d, manifest
+
+
+class TestAot:
+    def test_all_models_lowered(self, artifacts):
+        d, manifest = artifacts
+        names = {m["name"] for m in manifest["models"]}
+        assert names == set(model.model_signatures().keys())
+        for name in names:
+            path = os.path.join(d, f"{name}.hlo.txt")
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text
+
+    def test_manifest_is_valid_json_with_shapes(self, artifacts):
+        d, _ = artifacts
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        by_name = {m["name"]: m for m in manifest["models"]}
+        assert by_name["jag_b10"]["inputs"] == [[10, 5]]
+        assert by_name["jag_b10"]["outputs"] == [[10, 16], [10, 32], [10, 4, 16, 16]]
+        assert by_name["surrogate_train"]["outputs"][-1] == [1]
+        assert by_name["seir"]["outputs"] == [[64, 16], [16, 4]]
+
+    def test_lowered_jag_executes_like_eager(self, artifacts):
+        # Compile the HLO text back through XLA and compare to eager.
+        try:
+            from jax._src.lib import xla_client as xc
+        except ImportError:
+            pytest.skip("xla_client internals unavailable")
+        d, _ = artifacts
+        x = jax.random.uniform(jax.random.PRNGKey(0), (1, 5), jnp.float32)
+        eager = model.jag_batch(x)
+        lowered = jax.jit(model.jag_batch).lower(
+            jax.ShapeDtypeStruct((1, 5), jnp.float32)
+        )
+        compiled = lowered.compile()
+        got = compiled(x)
+        for g, e in zip(got, eager):
+            np.testing.assert_allclose(g, e, rtol=1e-5, atol=1e-6)
+
+    def test_hlo_has_no_python_callbacks(self, artifacts):
+        # The artifact must be self-contained: no host callbacks that would
+        # drag python onto the rust request path.
+        d, _ = artifacts
+        for name in model.model_signatures():
+            text = open(os.path.join(d, f"{name}.hlo.txt")).read()
+            assert "custom-call" not in text or "Sharding" in text, (
+                f"{name} contains a custom-call the CPU PJRT client cannot run"
+            )

@@ -1,0 +1,251 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle to
+float32 tolerance, across shapes, seeds, and edge-case inputs; hypothesis
+sweeps the input space.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import jag, mlp, ref, seir
+
+RTOL = 2e-5
+ATOL = 1e-5
+
+
+def key(seed):
+    return jax.random.PRNGKey(seed)
+
+
+# ---------------------------------------------------------------------- JAG
+
+
+class TestJag:
+    @pytest.mark.parametrize("batch", [1, 2, 10, 128, 256])
+    def test_matches_reference(self, batch):
+        x = jax.random.uniform(key(batch), (batch, ref.N_INPUTS), jnp.float32)
+        s_k, t_k, i_k = jag.jag_batch(x)
+        s_r, t_r, i_r = ref.jag_ref(x)
+        np.testing.assert_allclose(s_k, s_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(t_k, t_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(i_k, i_r, rtol=RTOL, atol=ATOL)
+
+    def test_output_shapes(self):
+        x = jnp.zeros((10, ref.N_INPUTS), jnp.float32)
+        s, t, i = jag.jag_batch(x)
+        assert s.shape == (10, ref.N_SCALARS)
+        assert t.shape == (10, ref.N_TIMES)
+        assert i.shape == (10, ref.N_CHANNELS, ref.IMG, ref.IMG)
+
+    @pytest.mark.parametrize("corner", [0.0, 1.0])
+    def test_domain_corners(self, corner):
+        x = jnp.full((4, ref.N_INPUTS), corner, jnp.float32)
+        s_k, t_k, i_k = jag.jag_batch(x)
+        s_r, t_r, i_r = ref.jag_ref(x)
+        np.testing.assert_allclose(s_k, s_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(i_k, i_r, rtol=RTOL, atol=ATOL)
+        assert np.all(np.isfinite(s_k))
+
+    def test_yield_nonnegative_and_images_nonnegative(self):
+        x = jax.random.uniform(key(7), (64, ref.N_INPUTS), jnp.float32)
+        s, _, i = jag.jag_batch(x)
+        assert np.all(np.asarray(s)[:, 0] >= 0.0)
+        assert np.all(np.asarray(i) >= 0.0)
+
+    def test_band_brightness_monotone(self):
+        # Harder channels are never brighter than softer ones.
+        x = jax.random.uniform(key(9), (32, ref.N_INPUTS), jnp.float32)
+        _, _, i = jag.jag_batch(x)
+        sums = np.asarray(i).sum(axis=(2, 3))  # (B, C)
+        assert np.all(sums[:, 0] >= sums[:, -1] - 1e-6)
+
+    def test_deterministic(self):
+        x = jax.random.uniform(key(3), (10, ref.N_INPUTS), jnp.float32)
+        a = jag.jag_batch(x)
+        b = jag.jag_batch(x)
+        for xa, xb in zip(a, b):
+            np.testing.assert_array_equal(xa, xb)
+
+    def test_rejects_indivisible_batch(self):
+        with pytest.raises(ValueError):
+            jag.jag_batch(jnp.zeros((129, ref.N_INPUTS), jnp.float32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        batch=st.sampled_from([1, 4, 16, 128]),
+    )
+    def test_hypothesis_sweep(self, seed, batch):
+        x = jax.random.uniform(key(seed), (batch, ref.N_INPUTS), jnp.float32)
+        s_k, t_k, i_k = jag.jag_batch(x)
+        s_r, t_r, i_r = ref.jag_ref(x)
+        np.testing.assert_allclose(s_k, s_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(t_k, t_r, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(i_k, i_r, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------- MLP
+
+
+class TestMlp:
+    def params(self, seed, n_in=5, n_out=16):
+        return mlp.init_params(key(seed), n_in, n_out)
+
+    @pytest.mark.parametrize("batch,n_in,n_out", [(8, 5, 16), (128, 5, 16), (32, 3, 7)])
+    def test_fwd_matches_reference(self, batch, n_in, n_out):
+        w1, b1, w2, b2 = self.params(1, n_in, n_out)
+        x = jax.random.normal(key(2), (batch, n_in), jnp.float32)
+        got = mlp.mlp_fwd(x, w1, b1, w2, b2)
+        want = ref.mlp_fwd_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("lr", [0.0, 0.01, 0.5])
+    def test_train_step_matches_reference(self, lr):
+        w1, b1, w2, b2 = self.params(3)
+        x = jax.random.normal(key(4), (128, 5), jnp.float32)
+        y = jax.random.normal(key(5), (128, 16), jnp.float32)
+        got = mlp.mlp_train_step(x, y, w1, b1, w2, b2, jnp.array([lr], jnp.float32))
+        want = ref.mlp_train_ref(x, y, w1, b1, w2, b2, lr)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=1e-6)
+
+    def test_zero_lr_keeps_params(self):
+        w1, b1, w2, b2 = self.params(6)
+        x = jax.random.normal(key(7), (128, 5), jnp.float32)
+        y = jax.random.normal(key(8), (128, 16), jnp.float32)
+        nw1, nb1, nw2, nb2, _ = mlp.mlp_train_step(
+            x, y, w1, b1, w2, b2, jnp.array([0.0], jnp.float32)
+        )
+        np.testing.assert_array_equal(nw1, w1)
+        np.testing.assert_array_equal(nb2, b2)
+
+    def test_training_reduces_loss(self):
+        w1, b1, w2, b2 = self.params(9)
+        x = jax.random.uniform(key(10), (128, 5), jnp.float32)
+        target_w = jax.random.normal(key(11), (5, 16), jnp.float32)
+        y = x @ target_w  # learnable linear target
+        lr = jnp.array([0.1], jnp.float32)
+        first = None
+        for step in range(300):
+            w1, b1, w2, b2, loss = mlp.mlp_train_step(x, y, w1, b1, w2, b2, lr)
+            if first is None:
+                first = float(loss[0])
+        assert float(loss[0]) < 0.5 * first
+
+    def test_gradient_matches_autodiff(self):
+        # The hand-derived in-kernel backprop must equal jax.grad of the
+        # reference loss.
+        w1, b1, w2, b2 = self.params(12)
+        x = jax.random.normal(key(13), (128, 5), jnp.float32)
+        y = jax.random.normal(key(14), (128, 16), jnp.float32)
+
+        def loss_fn(params):
+            w1, b1, w2, b2 = params
+            pred = ref.mlp_fwd_ref(x, w1, b1, w2, b2)
+            return jnp.mean((pred - y) ** 2)
+
+        grads = jax.grad(loss_fn)((w1, b1, w2, b2))
+        lr = 0.37
+        got = mlp.mlp_train_step(x, y, w1, b1, w2, b2, jnp.array([lr], jnp.float32))
+        np.testing.assert_allclose(got[0], w1 - lr * grads[0], rtol=RTOL, atol=1e-6)
+        np.testing.assert_allclose(got[1], b1 - lr * grads[1], rtol=RTOL, atol=1e-6)
+        np.testing.assert_allclose(got[2], w2 - lr * grads[2], rtol=RTOL, atol=1e-6)
+        np.testing.assert_allclose(got[3], b2 - lr * grads[3], rtol=RTOL, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        batch=st.sampled_from([1, 16, 128]),
+        hidden=st.sampled_from([8, 64]),
+    )
+    def test_hypothesis_sweep(self, seed, batch, hidden):
+        k1, k2, k3 = jax.random.split(key(seed), 3)
+        w1 = jax.random.normal(k1, (5, hidden), jnp.float32)
+        b1 = jnp.zeros((hidden,), jnp.float32)
+        w2 = jax.random.normal(k2, (hidden, 16), jnp.float32)
+        b2 = jnp.zeros((16,), jnp.float32)
+        x = jax.random.normal(k3, (batch, 5), jnp.float32)
+        got = mlp.mlp_fwd(x, w1, b1, w2, b2)
+        want = ref.mlp_fwd_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------- SEIR
+
+
+def seir_setup(m, seed=0, seeded_metros=1):
+    state = np.zeros((m, 4), np.float32)
+    state[:, 0] = 1.0
+    for i in range(seeded_metros):
+        state[i, 0] = 0.99
+        state[i, 2] = 0.01
+    rng = np.random.default_rng(seed)
+    params = np.stack(
+        [
+            rng.uniform(0.2, 0.8, m),
+            rng.uniform(0.1, 0.4, m),
+            rng.uniform(0.05, 0.3, m),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    mixing = np.full((m, m), 0.02 / m, np.float32)
+    np.fill_diagonal(mixing, 0.98 + 0.02 / m)
+    return jnp.asarray(state), jnp.asarray(params), jnp.asarray(mixing)
+
+
+class TestSeir:
+    @pytest.mark.parametrize("m", [1, 4, 16, 64])
+    def test_step_matches_reference(self, m):
+        state, params, mixing = seir_setup(m)
+        got = seir.seir_step(state, params, mixing)
+        want = ref.seir_step_ref(state, params, mixing)
+        np.testing.assert_allclose(got[0], want[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(got[1], want[1], rtol=RTOL, atol=ATOL)
+
+    def test_population_conserved_over_steps(self):
+        state, params, mixing = seir_setup(16)
+        for _ in range(50):
+            state, _ = seir.seir_step(state, params, mixing)
+        np.testing.assert_allclose(
+            np.asarray(state).sum(axis=1), np.ones(16), rtol=1e-4
+        )
+
+    def test_compartments_stay_in_unit_interval(self):
+        state, params, mixing = seir_setup(16, seed=3, seeded_metros=4)
+        for _ in range(100):
+            state, new_i = seir.seir_step(state, params, mixing)
+            arr = np.asarray(state)
+            assert arr.min() >= -1e-6
+            assert arr.max() <= 1.0 + 1e-6
+            assert np.asarray(new_i).min() >= 0.0
+
+    def test_no_infection_no_dynamics(self):
+        m = 8
+        state = np.zeros((m, 4), np.float32)
+        state[:, 0] = 1.0  # fully susceptible, zero infectious
+        params = np.full((m, 3), 0.5, np.float32)
+        mixing = np.eye(m, dtype=np.float32)
+        nxt, new_i = seir.seir_step(jnp.asarray(state), jnp.asarray(params), jnp.asarray(mixing))
+        np.testing.assert_array_equal(np.asarray(nxt), state)
+        np.testing.assert_array_equal(np.asarray(new_i), np.zeros(m, np.float32))
+
+    def test_scan_matches_unrolled_reference(self):
+        from compile import model
+
+        state, params, mixing = seir_setup(model.SEIR_METROS, seed=5)
+        traj, final = model.seir_simulate(state, params, mixing)
+        traj_r, final_r = ref.seir_simulate_ref(state, params, mixing, model.SEIR_DAYS)
+        np.testing.assert_allclose(traj, traj_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(final, final_r, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([2, 16, 32]))
+    def test_hypothesis_sweep(self, seed, m):
+        state, params, mixing = seir_setup(m, seed=seed % 1000, seeded_metros=min(2, m))
+        got = seir.seir_step(state, params, mixing)
+        want = ref.seir_step_ref(state, params, mixing)
+        np.testing.assert_allclose(got[0], want[0], rtol=RTOL, atol=ATOL)

@@ -1,0 +1,115 @@
+//! Fig 3: task enqueuing time [s] and speed [samples/s] vs ensemble size.
+//!
+//! Paper result: peak ≈3·10⁵ samples/s, plateau above 10⁵ samples; the
+//! scan stops at 40 M where RabbitMQ's 2.1 GB message-size limit bites.
+//! We regenerate the same rows for (a) Merlin's hierarchical enqueue
+//! (`merlin run` publishes ONE O(1) root message — "populating the queue
+//! server with the metadata required to create the tasks, not the tasks
+//! themselves"), and (b) the flat Celery-style baseline that materializes
+//! every task, which is the regime the paper's absolute numbers describe.
+
+use std::time::Instant;
+
+use merlin::broker::core::{Broker, BrokerConfig};
+use merlin::hierarchy::{flat, root_task};
+use merlin::metrics::series::Series;
+use merlin::task::{ser, StepTemplate, WorkSpec};
+
+fn template() -> StepTemplate {
+    StepTemplate {
+        study_id: "fig3".into(),
+        step_name: "null".into(),
+        work: WorkSpec::Null {
+            duration_us: 1_000_000,
+        },
+        samples_per_task: 1,
+        seed: 0,
+    }
+}
+
+fn main() {
+    println!("Fig 3 — enqueue time and speed vs number of samples\n");
+
+    // --- (a) hierarchical enqueue (the Merlin design) ---
+    let mut hier = Series::new(
+        "merlin run (hierarchical): one metadata root per study",
+        "samples",
+        &["time_s", "samples_per_s"],
+    );
+    for &n in &[100u64, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 40_000_000] {
+        let broker = Broker::default();
+        let t0 = Instant::now();
+        broker
+            .publish(root_task(template(), n, 100, "q"))
+            .expect("publish root");
+        let dt = t0.elapsed().as_secs_f64();
+        hier.push(n as f64, vec![dt, n as f64 / dt]);
+    }
+    print!("{}", hier.table());
+
+    // --- (b) flat baseline (Celery/Maestro-style: every task eagerly) ---
+    let mut flat_s = Series::new(
+        "flat enqueue baseline: one message per task",
+        "samples",
+        &["time_s", "samples_per_s", "wire_MB"],
+    );
+    for &n in &[100u64, 1_000, 10_000, 100_000, 1_000_000] {
+        let broker = Broker::default();
+        let t0 = Instant::now();
+        let tasks = flat::flat_tasks(&template(), n, "q");
+        let bytes: u64 = if n <= 10_000 {
+            tasks.iter().map(|t| ser::encode(t).len() as u64).sum()
+        } else {
+            // estimate from a sample to keep the bench fast
+            let probe: u64 = tasks
+                .iter()
+                .take(1000)
+                .map(|t| ser::encode(t).len() as u64)
+                .sum();
+            probe * n / 1000
+        };
+        broker.publish_batch(tasks).expect("publish flat");
+        let dt = t0.elapsed().as_secs_f64();
+        flat_s.push(
+            n as f64,
+            vec![dt, n as f64 / dt, bytes as f64 / 1e6],
+        );
+    }
+    print!("\n{}", flat_s.table());
+
+    // --- (c) the 2.1 GB wall the paper hit at 40 M samples ---
+    // A flat submission of the whole ensemble as one batch message would
+    // exceed Rabbit's frame cap; our broker models the same limit.
+    let cfg = BrokerConfig::default();
+    let per_task = ser::encode(&flat::flat_tasks(&template(), 1, "q")[0]).len() as u64;
+    let wall_at = cfg.max_message_bytes as u64 / per_task;
+    println!(
+        "\nmessage-size model: {} B/task -> single-message cap ({} B) reached at ~{:.1} M tasks (paper: 40 M)",
+        per_task,
+        cfg.max_message_bytes,
+        wall_at as f64 / 1e6
+    );
+
+    // Shape checks (the paper's qualitative claims).
+    let speeds = hier.column("samples_per_s").unwrap();
+    assert!(
+        speeds.last().unwrap() > &3e5,
+        "hierarchical enqueue beats the paper's 3e5 samples/s peak"
+    );
+    let flat_speeds = flat_s.column("samples_per_s").unwrap();
+    let peak = flat_speeds.iter().cloned().fold(f64::MIN, f64::max);
+    // The paper's absolute regime: per-task enqueue peaks around 10^5
+    // samples/s (theirs: 3x10^5 against a dedicated Rabbit node).
+    assert!(
+        peak >= 5e4,
+        "flat per-task enqueue in the paper's order of magnitude (peak={peak})"
+    );
+    assert!(
+        flat_speeds.last().unwrap() * 4.0 > peak,
+        "flat speed plateaus rather than growing unboundedly"
+    );
+    let dir = std::path::Path::new("results");
+    hier.save_csv(dir, "fig3_hierarchical").ok();
+    flat_s.save_csv(dir, "fig3_flat").ok();
+    println!("\nfig3 OK (CSV in results/)");
+}

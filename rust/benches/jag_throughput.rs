@@ -1,0 +1,121 @@
+//! §3.1 throughput + L1 batching ablation.
+//!
+//! * per-simulation PJRT cost of the Pallas-JAG artifact at batch 1, 10
+//!   (the paper's bundle size) and 128 — the batching ablation behind the
+//!   bundle design ("meta-tasks exploit on-node memory...");
+//! * end-to-end pipeline throughput (hierarchy -> broker -> workers ->
+//!   bundle files) in sims/hour, the §3.1 headline unit.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use merlin::broker::core::Broker;
+use merlin::data::bundle::BundleLayout;
+use merlin::hierarchy::root_task;
+use merlin::metrics::series::Series;
+use merlin::runtime::models::run_jag_batch;
+use merlin::runtime::{ModelRunner, RuntimePool};
+use merlin::task::{StepTemplate, WorkSpec};
+use merlin::util::clock::{Clock, RealClock};
+use merlin::worker::{run_pool, WorkerConfig};
+
+fn main() {
+    let artifacts = std::env::var("MERLIN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts`; skipping jag_throughput");
+        return;
+    }
+    println!("JAG throughput — PJRT batching ablation + pipeline sims/hour\n");
+    let rt = RuntimePool::new(&artifacts, 4).expect("runtime");
+
+    // --- L1 batching ablation ---
+    let mut abl = Series::new(
+        "PJRT JAG cost by batch size",
+        "batch",
+        &["us_per_call", "us_per_sim", "speedup_vs_b1"],
+    );
+    let mut per_sim_b1 = 0.0;
+    for &b in &[1usize, 10, 128] {
+        // warm up + measure
+        run_jag_batch(&rt, 1, 0, b).unwrap();
+        let reps = (512 / b).max(3);
+        let t0 = Instant::now();
+        for r in 0..reps {
+            run_jag_batch(&rt, 1, (r * b) as u64, b).unwrap();
+        }
+        let us_call = t0.elapsed().as_micros() as f64 / reps as f64;
+        let us_sim = us_call / b as f64;
+        if b == 1 {
+            per_sim_b1 = us_sim;
+        }
+        abl.push(b as f64, vec![us_call, us_sim, per_sim_b1 / us_sim]);
+    }
+    print!("{}", abl.table());
+    let speedups = abl.column("speedup_vs_b1").unwrap();
+    assert!(
+        speedups[1] > 1.5,
+        "bundling 10 sims into one PJRT call must beat per-sim calls (got {:.2}x)",
+        speedups[1]
+    );
+
+    // --- end-to-end pipeline sims/hour ---
+    let mut pipe = Series::new(
+        "pipeline throughput (10-sim bundles, bundle files on disk)",
+        "workers",
+        &["sims_per_s", "sims_per_hour"],
+    );
+    let n: u64 = 10_000;
+    for &(workers, compress) in &[
+        (1usize, true),
+        (2, true),
+        (4, true),
+        (8, true),
+        (8, false), // §Perf iteration: compression off
+    ] {
+        let broker = Broker::default();
+        let data_root = std::env::temp_dir().join(format!(
+            "merlin-jagbench-{}-{workers}-{compress}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&data_root).unwrap();
+        let template = StepTemplate {
+            study_id: "bench".into(),
+            step_name: "jag".into(),
+            work: WorkSpec::Builtin { model: "jag".into() },
+            samples_per_task: 10,
+            seed: 1,
+        };
+        broker.publish(root_task(template, n, 100, "q")).unwrap();
+        let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+        let t0 = Instant::now();
+        let report = run_pool(
+            &broker,
+            None,
+            None,
+            Arc::new(ModelRunner::new(rt.clone())),
+            workers,
+            |i| {
+                let mut cfg = WorkerConfig::simple("q", clock.clone());
+                cfg.data_root = Some(data_root.clone());
+                cfg.layout = BundleLayout::default();
+                cfg.bundle_compress = compress;
+                cfg.idle_exit_ms = 300;
+                cfg.seed = i as u64;
+                cfg
+            },
+        );
+        let dt = t0.elapsed().as_secs_f64() - 0.3; // idle-exit tail
+        assert_eq!(report.samples_ok, n);
+        pipe.push(
+            workers as f64 + if compress { 0.0 } else { 100.0 }, // 108 = w8, compression off
+            vec![n as f64 / dt, n as f64 / dt * 3600.0],
+        );
+        std::fs::remove_dir_all(&data_root).ok();
+    }
+    print!("\n{}", pipe.table());
+    pipe.save_csv(std::path::Path::new("results"), "jag_throughput").ok();
+    println!("\njag_throughput OK (CSV in results/)");
+}

@@ -1,0 +1,111 @@
+//! Blocking TCP client for the results backend.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use crate::broker::client::ClientError;
+use crate::broker::wire;
+use crate::util::json::Json;
+
+pub struct BackendClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl BackendClient {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
+        wire::write_frame(&mut self.writer, req)?;
+        let resp = wire::read_frame(&mut self.reader)?;
+        if resp.get("ok").as_bool() == Some(true) {
+            Ok(resp)
+        } else {
+            Err(ClientError::Server(
+                resp.get("error").as_str().unwrap_or("unknown").to_string(),
+            ))
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("set")),
+            ("key", Json::str(key)),
+            ("value", Json::str(value)),
+        ]))
+        .map(|_| ())
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<String>, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str(key)),
+        ]))?;
+        Ok(r.get("value").as_str().map(String::from))
+    }
+
+    pub fn incr_by(&mut self, key: &str, delta: i64) -> Result<i64, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("incrby")),
+            ("key", Json::str(key)),
+            ("delta", Json::num(delta as f64)),
+        ]))?;
+        r.get("value")
+            .as_i64()
+            .ok_or_else(|| ClientError::Protocol("bad incr value".into()))
+    }
+
+    pub fn hset(&mut self, key: &str, field: &str, value: &str) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("hset")),
+            ("key", Json::str(key)),
+            ("field", Json::str(field)),
+            ("value", Json::str(value)),
+        ]))
+        .map(|_| ())
+    }
+
+    pub fn hget(&mut self, key: &str, field: &str) -> Result<Option<String>, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("hget")),
+            ("key", Json::str(key)),
+            ("field", Json::str(field)),
+        ]))?;
+        Ok(r.get("value").as_str().map(String::from))
+    }
+
+    pub fn sadd(&mut self, key: &str, member: &str) -> Result<bool, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("sadd")),
+            ("key", Json::str(key)),
+            ("member", Json::str(member)),
+        ]))?;
+        Ok(r.get("added").as_bool().unwrap_or(false))
+    }
+
+    pub fn smembers(&mut self, key: &str) -> Result<Vec<String>, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("smembers")),
+            ("key", Json::str(key)),
+        ]))?;
+        Ok(r.get("members")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default())
+    }
+
+    pub fn scard(&mut self, key: &str) -> Result<usize, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("scard")),
+            ("key", Json::str(key)),
+        ]))?;
+        Ok(r.get("card").as_u64().unwrap_or(0) as usize)
+    }
+}

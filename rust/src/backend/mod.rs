@@ -1,0 +1,17 @@
+//! The results backend — Merlin's Redis substitute.
+//!
+//! Celery stores task state and return values in a results backend; Merlin
+//! additionally uses it for study bookkeeping (which samples completed —
+//! the §3.1 resubmission crawl cross-checks this against the data files on
+//! disk). We implement the Redis surface the stack needs: string KV,
+//! hashes, sets, counters, and snapshot persistence, plus a typed
+//! task-state layer ([`state`]) on top. [`net`]/[`client`] expose it over
+//! the same frame protocol as the broker.
+
+pub mod client;
+pub mod net;
+pub mod state;
+pub mod store;
+
+pub use state::{StateStore, TaskState};
+pub use store::Store;

@@ -1,0 +1,192 @@
+//! TCP front-end for the results backend (same frame protocol as the
+//! broker server; Redis-shaped ops encoded as JSON requests).
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::store::Store;
+use crate::broker::wire::{self, WireError};
+use crate::util::json::Json;
+
+pub struct BackendServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl BackendServer {
+    pub fn serve(store: Store, addr: &str) -> std::io::Result<BackendServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("backend-accept".into())
+            .spawn(move || {
+                // Detached connection threads — see broker::net for why.
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let store = store.clone();
+                            stream.set_nodelay(true).ok();
+                            std::thread::spawn(move || handle_conn(store, stream));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(BackendServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            t.join().ok();
+        }
+    }
+}
+
+fn handle_conn(store: Store, stream: TcpStream) {
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    loop {
+        let req = match wire::read_frame(&mut reader) {
+            Ok(v) => v,
+            Err(WireError::Closed) | Err(_) => break,
+        };
+        let resp = dispatch(&store, &req);
+        if wire::write_frame(&mut writer, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+fn dispatch(store: &Store, req: &Json) -> Json {
+    let key = req.get("key").as_str().unwrap_or("");
+    match req.get("op").as_str() {
+        Some("set") => {
+            store.set(key, req.get("value").as_str().unwrap_or(""));
+            wire::ok(vec![])
+        }
+        Some("get") => match store.get(key) {
+            Some(v) => wire::ok(vec![("value", Json::Str(v))]),
+            None => wire::ok(vec![("value", Json::Null)]),
+        },
+        Some("del") => wire::ok(vec![("deleted", Json::Bool(store.del(key)))]),
+        Some("incrby") => {
+            let delta = req.get("delta").as_i64().unwrap_or(1);
+            match store.incr_by(key, delta) {
+                Ok(v) => wire::ok(vec![("value", Json::num(v as f64))]),
+                Err(e) => wire::err(e),
+            }
+        }
+        Some("hset") => {
+            store.hset(
+                key,
+                req.get("field").as_str().unwrap_or(""),
+                req.get("value").as_str().unwrap_or(""),
+            );
+            wire::ok(vec![])
+        }
+        Some("hget") => match store.hget(key, req.get("field").as_str().unwrap_or("")) {
+            Some(v) => wire::ok(vec![("value", Json::Str(v))]),
+            None => wire::ok(vec![("value", Json::Null)]),
+        },
+        Some("hgetall") => {
+            let map = store.hgetall(key);
+            wire::ok(vec![(
+                "value",
+                Json::Obj(map.into_iter().map(|(k, v)| (k, Json::Str(v))).collect()),
+            )])
+        }
+        Some("sadd") => wire::ok(vec![(
+            "added",
+            Json::Bool(store.sadd(key, req.get("member").as_str().unwrap_or(""))),
+        )]),
+        Some("srem") => wire::ok(vec![(
+            "removed",
+            Json::Bool(store.srem(key, req.get("member").as_str().unwrap_or(""))),
+        )]),
+        Some("sismember") => wire::ok(vec![(
+            "ismember",
+            Json::Bool(store.sismember(key, req.get("member").as_str().unwrap_or(""))),
+        )]),
+        Some("smembers") => wire::ok(vec![(
+            "members",
+            Json::arr(store.smembers(key).into_iter().map(Json::Str).collect()),
+        )]),
+        Some("scard") => wire::ok(vec![("card", Json::num(store.scard(key) as f64))]),
+        Some("keys") => wire::ok(vec![(
+            "keys",
+            Json::arr(
+                store
+                    .keys_with_prefix(req.get("prefix").as_str().unwrap_or(""))
+                    .into_iter()
+                    .map(Json::Str)
+                    .collect(),
+            ),
+        )]),
+        other => wire::err(format!("unknown op {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::client::BackendClient;
+
+    #[test]
+    fn tcp_kv_roundtrip() {
+        let store = Store::new();
+        let server = BackendServer::serve(store.clone(), "127.0.0.1:0").unwrap();
+        let mut c = BackendClient::connect(&server.addr.to_string()).unwrap();
+        c.set("k", "v").unwrap();
+        assert_eq!(c.get("k").unwrap().as_deref(), Some("v"));
+        assert_eq!(c.get("missing").unwrap(), None);
+        assert_eq!(c.incr_by("n", 5).unwrap(), 5);
+        assert_eq!(c.incr_by("n", 2).unwrap(), 7);
+        c.hset("h", "f", "1").unwrap();
+        assert_eq!(c.hget("h", "f").unwrap().as_deref(), Some("1"));
+        assert!(c.sadd("s", "m").unwrap());
+        assert!(!c.sadd("s", "m").unwrap());
+        assert_eq!(c.smembers("s").unwrap(), vec!["m"]);
+        // Server writes hit the shared store directly.
+        assert_eq!(store.get("k").as_deref(), Some("v"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_share_counters() {
+        let store = Store::new();
+        let server = BackendServer::serve(store.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = BackendClient::connect(&addr).unwrap();
+                for _ in 0..100 {
+                    c.incr_by("shared", 1).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(store.get("shared").as_deref(), Some("400"));
+        server.shutdown();
+    }
+}

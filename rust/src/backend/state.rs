@@ -1,0 +1,222 @@
+//! Typed task/sample state tracking on top of the raw KV store.
+//!
+//! Key layout (all namespaced by study):
+//!
+//! * `st:<study>:task:<task_id>`           → state string
+//! * `st:<study>:done`                     → set of completed sample indices
+//! * `st:<study>:failed`                   → set of failed sample indices
+//! * `st:<study>:counter:<name>`           → integer counters
+//!
+//! The done/failed *sample* sets (not task sets) are what the §3.1
+//! resubmission crawl intersects with the on-disk data inventory.
+
+use super::store::Store;
+
+/// Celery-compatible task lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    Pending,
+    Received,
+    Started,
+    Success,
+    Failure,
+    Retry,
+    Revoked,
+}
+
+impl TaskState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskState::Pending => "PENDING",
+            TaskState::Received => "RECEIVED",
+            TaskState::Started => "STARTED",
+            TaskState::Success => "SUCCESS",
+            TaskState::Failure => "FAILURE",
+            TaskState::Retry => "RETRY",
+            TaskState::Revoked => "REVOKED",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TaskState> {
+        Some(match s {
+            "PENDING" => TaskState::Pending,
+            "RECEIVED" => TaskState::Received,
+            "STARTED" => TaskState::Started,
+            "SUCCESS" => TaskState::Success,
+            "FAILURE" => TaskState::Failure,
+            "RETRY" => TaskState::Retry,
+            "REVOKED" => TaskState::Revoked,
+            _ => return None,
+        })
+    }
+}
+
+/// Study-scoped state operations.
+#[derive(Clone)]
+pub struct StateStore {
+    store: Store,
+}
+
+impl StateStore {
+    pub fn new(store: Store) -> Self {
+        Self { store }
+    }
+
+    pub fn raw(&self) -> &Store {
+        &self.store
+    }
+
+    pub fn set_task_state(&self, study: &str, task_id: &str, state: TaskState) {
+        self.store
+            .set(&format!("st:{study}:task:{task_id}"), state.as_str());
+    }
+
+    pub fn task_state(&self, study: &str, task_id: &str) -> Option<TaskState> {
+        self.store
+            .get(&format!("st:{study}:task:{task_id}"))
+            .and_then(|s| TaskState::parse(&s))
+    }
+
+    /// Record a sample as successfully completed. Idempotent.
+    pub fn mark_sample_done(&self, study: &str, sample: u64) {
+        self.store.sadd(&format!("st:{study}:done"), &sample.to_string());
+        // A later success clears an earlier failure (resubmission passes).
+        self.store
+            .srem(&format!("st:{study}:failed"), &sample.to_string());
+    }
+
+    /// Record a sample as failed (only stays failed if never re-done).
+    pub fn mark_sample_failed(&self, study: &str, sample: u64) {
+        if !self
+            .store
+            .sismember(&format!("st:{study}:done"), &sample.to_string())
+        {
+            self.store
+                .sadd(&format!("st:{study}:failed"), &sample.to_string());
+        }
+    }
+
+    pub fn done_count(&self, study: &str) -> usize {
+        self.store.scard(&format!("st:{study}:done"))
+    }
+
+    pub fn failed_count(&self, study: &str) -> usize {
+        self.store.scard(&format!("st:{study}:failed"))
+    }
+
+    pub fn done_samples(&self, study: &str) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .store
+            .smembers(&format!("st:{study}:done"))
+            .iter()
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn failed_samples(&self, study: &str) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .store
+            .smembers(&format!("st:{study}:failed"))
+            .iter()
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Samples in `[0, n)` with no success record — the §3.1 resubmission
+    /// set ("crawl the tree, requeue what's missing").
+    pub fn missing_samples(&self, study: &str, n: u64) -> Vec<u64> {
+        let done: std::collections::HashSet<u64> =
+            self.done_samples(study).into_iter().collect();
+        (0..n).filter(|i| !done.contains(i)).collect()
+    }
+
+    pub fn incr_counter(&self, study: &str, name: &str, delta: i64) -> i64 {
+        self.store
+            .incr_by(&format!("st:{study}:counter:{name}"), delta)
+            .unwrap_or(0)
+    }
+
+    pub fn counter(&self, study: &str, name: &str) -> i64 {
+        self.store
+            .get(&format!("st:{study}:counter:{name}"))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_roundtrip() {
+        for s in [
+            TaskState::Pending,
+            TaskState::Received,
+            TaskState::Started,
+            TaskState::Success,
+            TaskState::Failure,
+            TaskState::Retry,
+            TaskState::Revoked,
+        ] {
+            assert_eq!(TaskState::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(TaskState::parse("NOPE"), None);
+    }
+
+    #[test]
+    fn task_state_store() {
+        let st = StateStore::new(Store::new());
+        assert_eq!(st.task_state("s", "t1"), None);
+        st.set_task_state("s", "t1", TaskState::Started);
+        assert_eq!(st.task_state("s", "t1"), Some(TaskState::Started));
+        st.set_task_state("s", "t1", TaskState::Success);
+        assert_eq!(st.task_state("s", "t1"), Some(TaskState::Success));
+    }
+
+    #[test]
+    fn sample_bookkeeping_and_missing() {
+        let st = StateStore::new(Store::new());
+        st.mark_sample_done("s", 0);
+        st.mark_sample_done("s", 2);
+        st.mark_sample_failed("s", 3);
+        assert_eq!(st.done_count("s"), 2);
+        assert_eq!(st.failed_count("s"), 1);
+        assert_eq!(st.missing_samples("s", 5), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn success_overrides_failure() {
+        let st = StateStore::new(Store::new());
+        st.mark_sample_failed("s", 7);
+        assert_eq!(st.failed_samples("s"), vec![7]);
+        st.mark_sample_done("s", 7);
+        assert_eq!(st.failed_samples("s"), Vec::<u64>::new());
+        // ...and a late failure report does not un-complete it.
+        st.mark_sample_failed("s", 7);
+        assert_eq!(st.failed_count("s"), 0);
+        assert_eq!(st.done_samples("s"), vec![7]);
+    }
+
+    #[test]
+    fn studies_are_isolated() {
+        let st = StateStore::new(Store::new());
+        st.mark_sample_done("a", 1);
+        assert_eq!(st.done_count("b"), 0);
+        st.incr_counter("a", "sims", 5);
+        assert_eq!(st.counter("b", "sims"), 0);
+        assert_eq!(st.counter("a", "sims"), 5);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let st = StateStore::new(Store::new());
+        st.incr_counter("s", "bundles", 1);
+        st.incr_counter("s", "bundles", 1);
+        assert_eq!(st.counter("s", "bundles"), 2);
+    }
+}

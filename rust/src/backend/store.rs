@@ -1,0 +1,374 @@
+//! In-memory KV store with Redis-shaped operations and JSON snapshotting.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{to_string, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Str(String),
+    Hash(BTreeMap<String, String>),
+    Set(BTreeSet<String>),
+    Int(i64),
+}
+
+/// Thread-safe store; clone shares state.
+#[derive(Clone, Default)]
+pub struct Store {
+    inner: Arc<Mutex<HashMap<String, Value>>>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- string ops ----
+
+    pub fn set(&self, key: &str, value: &str) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Value::Str(value.to_string()));
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(Value::Int(i)) => Some(i.to_string()),
+            _ => None,
+        }
+    }
+
+    pub fn del(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().remove(key).is_some()
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().contains_key(key)
+    }
+
+    // ---- counters ----
+
+    /// Atomic increment; creates the key at 0 first. Errors if the key
+    /// holds a non-integer value.
+    pub fn incr_by(&self, key: &str, delta: i64) -> Result<i64, String> {
+        let mut g = self.inner.lock().unwrap();
+        match g.entry(key.to_string()).or_insert(Value::Int(0)) {
+            Value::Int(i) => {
+                *i += delta;
+                Ok(*i)
+            }
+            Value::Str(s) => {
+                let parsed: i64 = s.parse().map_err(|_| format!("{key} not an integer"))?;
+                let v = parsed + delta;
+                g.insert(key.to_string(), Value::Int(v));
+                Ok(v)
+            }
+            _ => Err(format!("{key} holds wrong type")),
+        }
+    }
+
+    pub fn incr(&self, key: &str) -> Result<i64, String> {
+        self.incr_by(key, 1)
+    }
+
+    // ---- hashes ----
+
+    pub fn hset(&self, key: &str, field: &str, value: &str) {
+        let mut g = self.inner.lock().unwrap();
+        match g
+            .entry(key.to_string())
+            .or_insert_with(|| Value::Hash(BTreeMap::new()))
+        {
+            Value::Hash(h) => {
+                h.insert(field.to_string(), value.to_string());
+            }
+            other => {
+                *other = Value::Hash(BTreeMap::from([(field.to_string(), value.to_string())]));
+            }
+        }
+    }
+
+    pub fn hget(&self, key: &str, field: &str) -> Option<String> {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Hash(h)) => h.get(field).cloned(),
+            _ => None,
+        }
+    }
+
+    pub fn hgetall(&self, key: &str) -> BTreeMap<String, String> {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Hash(h)) => h.clone(),
+            _ => BTreeMap::new(),
+        }
+    }
+
+    pub fn hlen(&self, key: &str) -> usize {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Hash(h)) => h.len(),
+            _ => 0,
+        }
+    }
+
+    // ---- sets ----
+
+    /// Add to a set; returns true if newly inserted.
+    pub fn sadd(&self, key: &str, member: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g
+            .entry(key.to_string())
+            .or_insert_with(|| Value::Set(BTreeSet::new()))
+        {
+            Value::Set(s) => s.insert(member.to_string()),
+            other => {
+                *other = Value::Set(BTreeSet::from([member.to_string()]));
+                true
+            }
+        }
+    }
+
+    pub fn srem(&self, key: &str, member: &str) -> bool {
+        match self.inner.lock().unwrap().get_mut(key) {
+            Some(Value::Set(s)) => s.remove(member),
+            _ => false,
+        }
+    }
+
+    pub fn sismember(&self, key: &str, member: &str) -> bool {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Set(s)) => s.contains(member),
+            _ => false,
+        }
+    }
+
+    pub fn smembers(&self, key: &str) -> Vec<String> {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Set(s)) => s.iter().cloned().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn scard(&self, key: &str) -> usize {
+        match self.inner.lock().unwrap().get(key) {
+            Some(Value::Set(s)) => s.len(),
+            _ => 0,
+        }
+    }
+
+    /// Keys matching a `prefix*` pattern (the only glob form we need).
+    pub fn keys_with_prefix(&self, prefix: &str) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<String> = g
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ---- persistence (RDB-style snapshot as JSON) ----
+
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        for (k, v) in g.iter() {
+            let entry = match v {
+                Value::Str(s) => Json::obj(vec![("t", Json::str("s")), ("v", Json::str(s))]),
+                Value::Int(i) => Json::obj(vec![("t", Json::str("i")), ("v", Json::num(*i as f64))]),
+                Value::Hash(h) => Json::obj(vec![
+                    ("t", Json::str("h")),
+                    (
+                        "v",
+                        Json::Obj(
+                            h.iter()
+                                .map(|(k, v)| (k.clone(), Json::str(v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+                Value::Set(s) => Json::obj(vec![
+                    ("t", Json::str("z")),
+                    ("v", Json::arr(s.iter().map(Json::str).collect())),
+                ]),
+            };
+            obj.insert(k.clone(), entry);
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, to_string(&self.snapshot_json()))
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Store> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        let store = Store::new();
+        let Some(obj) = v.as_obj() else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "snapshot is not an object",
+            ));
+        };
+        {
+            let mut g = store.inner.lock().unwrap();
+            for (k, entry) in obj {
+                let val = match entry.get("t").as_str() {
+                    Some("s") => Value::Str(entry.get("v").as_str().unwrap_or("").into()),
+                    Some("i") => Value::Int(entry.get("v").as_i64().unwrap_or(0)),
+                    Some("h") => Value::Hash(
+                        entry
+                            .get("v")
+                            .as_obj()
+                            .map(|o| {
+                                o.iter()
+                                    .map(|(k, v)| {
+                                        (k.clone(), v.as_str().unwrap_or("").to_string())
+                                    })
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                    ),
+                    Some("z") => Value::Set(
+                        entry
+                            .get("v")
+                            .as_arr()
+                            .map(|a| {
+                                a.iter()
+                                    .filter_map(|v| v.as_str().map(String::from))
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
+                    ),
+                    _ => continue,
+                };
+                g.insert(k.clone(), val);
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn string_ops() {
+        let s = Store::new();
+        assert_eq!(s.get("k"), None);
+        s.set("k", "v");
+        assert_eq!(s.get("k").as_deref(), Some("v"));
+        assert!(s.exists("k"));
+        assert!(s.del("k"));
+        assert!(!s.del("k"));
+    }
+
+    #[test]
+    fn counters() {
+        let s = Store::new();
+        assert_eq!(s.incr("c").unwrap(), 1);
+        assert_eq!(s.incr_by("c", 10).unwrap(), 11);
+        assert_eq!(s.get("c").as_deref(), Some("11"));
+        s.set("str", "5");
+        assert_eq!(s.incr("str").unwrap(), 6);
+        s.set("bad", "xyz");
+        assert!(s.incr("bad").is_err());
+    }
+
+    #[test]
+    fn hashes() {
+        let s = Store::new();
+        s.hset("h", "a", "1");
+        s.hset("h", "b", "2");
+        assert_eq!(s.hget("h", "a").as_deref(), Some("1"));
+        assert_eq!(s.hlen("h"), 2);
+        let all = s.hgetall("h");
+        assert_eq!(all.len(), 2);
+        assert_eq!(all["b"], "2");
+    }
+
+    #[test]
+    fn sets() {
+        let s = Store::new();
+        assert!(s.sadd("z", "x"));
+        assert!(!s.sadd("z", "x"));
+        assert!(s.sismember("z", "x"));
+        assert_eq!(s.scard("z"), 1);
+        assert!(s.srem("z", "x"));
+        assert_eq!(s.smembers("z"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn prefix_scan() {
+        let s = Store::new();
+        s.set("study:1:a", "x");
+        s.set("study:1:b", "y");
+        s.set("study:2:a", "z");
+        assert_eq!(s.keys_with_prefix("study:1:").len(), 2);
+        assert_eq!(s.keys_with_prefix("nope").len(), 0);
+    }
+
+    #[test]
+    fn concurrent_increments_are_atomic() {
+        let s = Store::new();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    s.incr("c").unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.get("c").as_deref(), Some("8000"));
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let s = Store::new();
+        s.set("str", "hello");
+        s.incr_by("int", 42).unwrap();
+        s.hset("hash", "f", "v");
+        s.sadd("set", "m1");
+        s.sadd("set", "m2");
+        let dir = std::env::temp_dir().join(format!("merlin-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.json");
+        s.save(&path).unwrap();
+        let loaded = Store::load(&path).unwrap();
+        assert_eq!(loaded.get("str").as_deref(), Some("hello"));
+        assert_eq!(loaded.get("int").as_deref(), Some("42"));
+        assert_eq!(loaded.hget("hash", "f").as_deref(), Some("v"));
+        assert_eq!(loaded.smembers("set"), vec!["m1", "m2"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("merlin-store-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "[1,2,3]").unwrap();
+        assert!(Store::load(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(Store::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

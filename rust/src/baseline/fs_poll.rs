@@ -1,0 +1,237 @@
+//! Filesystem-coordination baseline (the Maestro model §1.3 critiques:
+//! "coordination via the filesystem and live background processes ...
+//! limiting throughput").
+//!
+//! Protocol: the conductor writes `spool/task_<id>.json`; a worker claims
+//! a task by atomically renaming it to `spool/task_<id>.claimed.<worker>`;
+//! on completion it writes `spool/done_<id>`. The conductor polls the
+//! directory for `done_*`. All coordination costs are directory scans +
+//! renames — measured by the fig3/fig6 baseline benches.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::task::{ser, StepTask, StepTemplate, TaskEnvelope};
+
+/// Conductor side: spool tasks, poll for completions.
+pub struct FsCoordinator {
+    pub spool: PathBuf,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FsWorkerReport {
+    pub claimed: u64,
+    pub completed: u64,
+}
+
+impl FsCoordinator {
+    pub fn new(spool: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(spool)?;
+        Ok(Self {
+            spool: spool.to_path_buf(),
+        })
+    }
+
+    /// Write all leaf tasks as spool files (the flat-producer analog).
+    pub fn spool_tasks(&self, template: &StepTemplate, n_samples: u64) -> std::io::Result<u64> {
+        let spt = template.samples_per_task.max(1);
+        let mut count = 0;
+        let mut lo = 0;
+        while lo < n_samples {
+            let hi = (lo + spt).min(n_samples);
+            let task = TaskEnvelope::new(
+                "fs",
+                crate::task::Payload::Step(StepTask {
+                    template: template.clone(),
+                    lo,
+                    hi,
+                }),
+            );
+            let path = self.spool.join(format!("task_{lo:012}.json"));
+            std::fs::write(&path, ser::encode(&task))?;
+            lo = hi;
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    /// Count completed task markers.
+    pub fn poll_done(&self) -> std::io::Result<u64> {
+        let mut done = 0;
+        for entry in std::fs::read_dir(&self.spool)? {
+            let entry = entry?;
+            if entry
+                .file_name()
+                .to_str()
+                .map(|n| n.starts_with("done_"))
+                .unwrap_or(false)
+            {
+                done += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Block until `expected` completions or timeout; returns done count.
+    pub fn wait_all(
+        &self,
+        expected: u64,
+        poll: Duration,
+        timeout: Duration,
+    ) -> std::io::Result<u64> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let done = self.poll_done()?;
+            if done >= expected || Instant::now() >= deadline {
+                return Ok(done);
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+/// Worker side: poll the spool for unclaimed task files, claim by rename,
+/// "execute" (invoke `work`), and mark done. Exits after `idle_exit` with
+/// no claims.
+pub fn fs_worker(
+    spool: &Path,
+    worker_id: usize,
+    poll: Duration,
+    idle_exit: Duration,
+    mut work: impl FnMut(&TaskEnvelope),
+) -> std::io::Result<FsWorkerReport> {
+    let mut report = FsWorkerReport::default();
+    let mut last_claim = Instant::now();
+    loop {
+        let mut claimed_any = false;
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(spool)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("task_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        entries.sort();
+        for path in entries {
+            let claim = path.with_extension(format!("claimed.{worker_id}"));
+            // Atomic rename = mutual exclusion (works on POSIX).
+            if std::fs::rename(&path, &claim).is_ok() {
+                claimed_any = true;
+                last_claim = Instant::now();
+                report.claimed += 1;
+                if let Ok(text) = std::fs::read_to_string(&claim) {
+                    if let Ok(task) = ser::decode(&text) {
+                        work(&task);
+                        let id = claim
+                            .file_name()
+                            .and_then(|n| n.to_str())
+                            .unwrap_or("x")
+                            .replace("task_", "done_")
+                            .replace(&format!(".claimed.{worker_id}"), "");
+                        std::fs::write(spool.join(id), b"ok")?;
+                        report.completed += 1;
+                    }
+                }
+            }
+        }
+        if !claimed_any {
+            if last_claim.elapsed() >= idle_exit {
+                return Ok(report);
+            }
+            std::thread::sleep(poll);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{Payload, WorkSpec};
+
+    fn template() -> StepTemplate {
+        StepTemplate {
+            study_id: "fs".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 1,
+            seed: 0,
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "merlin-fs-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn spool_and_drain() {
+        let dir = tmp("drain");
+        let coord = FsCoordinator::new(&dir).unwrap();
+        assert_eq!(coord.spool_tasks(&template(), 20).unwrap(), 20);
+        let mut handles = Vec::new();
+        for w in 0..3 {
+            let dir = dir.clone();
+            handles.push(std::thread::spawn(move || {
+                fs_worker(
+                    &dir,
+                    w,
+                    Duration::from_millis(5),
+                    Duration::from_millis(100),
+                    |_t| {},
+                )
+                .unwrap()
+            }));
+        }
+        let done = coord
+            .wait_all(20, Duration::from_millis(5), Duration::from_secs(10))
+            .unwrap();
+        let total: u64 = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().completed)
+            .sum();
+        assert_eq!(done, 20);
+        assert_eq!(total, 20, "each task claimed exactly once");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn claims_are_exclusive() {
+        let dir = tmp("excl");
+        let coord = FsCoordinator::new(&dir).unwrap();
+        coord.spool_tasks(&template(), 50).unwrap();
+        let mut handles = Vec::new();
+        for w in 0..8 {
+            let dir = dir.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                fs_worker(
+                    &dir,
+                    w,
+                    Duration::from_millis(1),
+                    Duration::from_millis(50),
+                    |t| {
+                        if let Payload::Step(s) = &t.payload {
+                            seen.push(s.lo);
+                        }
+                    },
+                )
+                .unwrap();
+                seen
+            }));
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<_>>(), "no double execution");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline comparators from the paper's related-work discussion (§1.3).
+//!
+//! * [`fs_poll`] — Maestro-style filesystem coordination: a conductor
+//!   process writes task files into a spool directory and polls for status
+//!   files; workers poll for task files. Throughput is bounded by the poll
+//!   interval and directory-scan cost — the contrast case for the broker's
+//!   message-passing design.
+//! * The flat-enqueue producer baseline lives in
+//!   [`crate::hierarchy::flat`] (it shares the broker).
+
+pub mod fs_poll;
+
+pub use fs_poll::{FsCoordinator, FsWorkerReport};

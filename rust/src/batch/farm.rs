@@ -1,0 +1,100 @@
+//! Worker-farm construction (§3.1): mixed-size self-resubmitting job
+//! chains that fill scheduling holes. The JAG study ran 64/128/256/512/1024
+//! node jobs of 40 workers each, every job submitting its successor as a
+//! dependent job.
+
+use super::scheduler::JobSpec;
+
+/// Describes one chain of the farm.
+#[derive(Debug, Clone)]
+pub struct FarmSpec {
+    /// Node counts of the chains (one chain per entry).
+    pub chain_nodes: Vec<u32>,
+    pub workers_per_node: u32,
+    pub walltime_us: u64,
+    /// Resubmissions per chain.
+    pub chain_length: u32,
+}
+
+impl FarmSpec {
+    /// The paper's JAG farm, scaled by `scale` (1.0 = Sierra-size).
+    pub fn jag_study(scale: f64) -> Self {
+        let chain_nodes = [64u32, 128, 256, 512, 1024]
+            .iter()
+            .map(|n| ((*n as f64 * scale).round() as u32).max(1))
+            .collect();
+        Self {
+            chain_nodes,
+            workers_per_node: 40,
+            walltime_us: 3_600_000_000, // 1h virtual walltime
+            chain_length: 8,
+        }
+    }
+
+    /// Materialize the chain-head job specs (each resubmits itself).
+    pub fn jobs(&self) -> Vec<JobSpec> {
+        self.chain_nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nodes)| JobSpec {
+                name: format!("farm-{i}-{nodes}n"),
+                nodes: *nodes,
+                walltime_us: self.walltime_us,
+                workers_per_node: self.workers_per_node,
+                resubmits: self.chain_length.saturating_sub(1),
+                background: false,
+            })
+            .collect()
+    }
+
+    /// Total workers when every chain has a job running (the paper's
+    /// "61,440 concurrent workers" peak corresponds to 1024+512 chains).
+    pub fn max_concurrent_workers(&self) -> u64 {
+        self.chain_nodes
+            .iter()
+            .map(|n| *n as u64 * self.workers_per_node as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::scheduler::{MachineSpec, Simulator};
+    use crate::batch::supply::CountSupply;
+
+    #[test]
+    fn jag_farm_shape() {
+        let farm = FarmSpec::jag_study(1.0);
+        assert_eq!(farm.chain_nodes, vec![64, 128, 256, 512, 1024]);
+        let jobs = farm.jobs();
+        assert_eq!(jobs.len(), 5);
+        assert!(jobs.iter().all(|j| j.workers_per_node == 40));
+        assert_eq!(farm.max_concurrent_workers(), (64 + 128 + 256 + 512 + 1024) * 40);
+    }
+
+    #[test]
+    fn scaled_farm_fits_small_machines() {
+        let farm = FarmSpec::jag_study(1.0 / 64.0);
+        assert_eq!(farm.chain_nodes, vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn farm_drains_workload_on_machine() {
+        let farm = FarmSpec {
+            chain_nodes: vec![1, 2, 4],
+            workers_per_node: 4,
+            walltime_us: 100_000_000,
+            chain_length: 12, // capacity 28 workers x 1200s >> 10k task-seconds
+        };
+        let mut supply = CountSupply::new(10_000, 1_000_000, true);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(8), &mut supply, 5);
+        for (i, j) in farm.jobs().into_iter().enumerate() {
+            sim.submit(j, i as u64);
+        }
+        let r = sim.run();
+        assert_eq!(supply.completed, 10_000);
+        assert!(r.peak_workers <= farm.max_concurrent_workers());
+        assert!(r.peak_workers >= 4, "multiple chains overlapped");
+    }
+}

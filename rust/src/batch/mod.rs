@@ -1,0 +1,24 @@
+//! HPC batch-system simulator — the Pascal/Sierra/Lassen substrate.
+//!
+//! The paper's studies ran on leadership-class machines through Slurm/LSF
+//! batch allocations, with Flux launching workers inside them. We have one
+//! Linux box, so the *scheduling environment* is simulated in virtual
+//! time: machines with node counts, jobs with walltime limits, FIFO +
+//! backfill scheduling, self-resubmitting dependent jobs (the "worker
+//! farm" of §3.1), background load competing for nodes, and node-failure
+//! injection that kills in-flight tasks without acking — the behaviour the
+//! resubmission crawl exists to mop up.
+//!
+//! The simulator drains a [`TaskSupply`]. [`supply::CountSupply`] models
+//! null workloads; [`supply::BrokerSupply`] adapts a real [`crate::broker::Broker`]
+//! so a real task hierarchy (expansion tasks and all) unfolds *inside* the
+//! simulated machine — the paper's stack, end to end, at 10^5-sample scale
+//! in milliseconds of wall time.
+
+pub mod farm;
+pub mod scheduler;
+pub mod supply;
+
+pub use farm::FarmSpec;
+pub use scheduler::{JobSpec, MachineSpec, SimReport, Simulator};
+pub use supply::{BrokerSupply, CountSupply, TaskSupply};

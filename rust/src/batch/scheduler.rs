@@ -1,0 +1,521 @@
+//! Discrete-event batch-system simulator (virtual time, deterministic).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::util::rng::Rng;
+
+use super::supply::TaskSupply;
+
+/// The simulated machine.
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub nodes: u32,
+}
+
+impl MachineSpec {
+    /// Sierra-scale default used by the §3.1 example.
+    pub fn sierra_like(nodes: u32) -> Self {
+        Self {
+            name: "sierra-sim".into(),
+            nodes,
+        }
+    }
+}
+
+/// One batch job request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub nodes: u32,
+    pub walltime_us: u64,
+    /// Worker threads per node (paper's JAG study: 40, one per core).
+    pub workers_per_node: u32,
+    /// Remaining self-resubmissions (the "worker farm" dependent chain).
+    pub resubmits: u32,
+    /// Pure background load: occupies nodes, pulls no tasks.
+    pub background: bool,
+}
+
+/// Failure injection for the simulated machine.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FailureModel {
+    /// Mean time between node failures across the whole machine, in
+    /// virtual µs (0 = no failures). A failure kills one running job.
+    pub mtbf_us: u64,
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    /// Virtual time when the last event fired.
+    pub makespan_us: u64,
+    /// Virtual time when the task supply first drained (0 if never).
+    pub drained_at_us: u64,
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub tasks_completed: u64,
+    pub tasks_killed: u64,
+    /// Busy worker-µs / available worker-µs over job lifetimes.
+    pub utilization: f64,
+    /// Peak simultaneously-running (non-background) workers.
+    pub peak_workers: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Event {
+    Submit(usize),
+    JobEnd(u64),
+    TaskDone { job: u64, claim: u64 },
+    Poll(u64),
+    NodeFail,
+}
+
+struct RunningJob {
+    spec: JobSpec,
+    start_us: u64,
+    end_us: u64,
+    idle_workers: u64,
+    claims: HashMap<u64, (u64, u64)>, // claim -> (claim_time, cost)
+    poll_scheduled: bool,
+    alive: bool,
+}
+
+/// The simulator. Owns a pending queue, running set, and the event heap.
+pub struct Simulator<'a> {
+    #[allow(dead_code)]
+    machine: MachineSpec,
+    supply: &'a mut dyn TaskSupply,
+    failure: FailureModel,
+    rng: Rng,
+    /// Idle-poll interval for workers with no ready task.
+    pub poll_us: u64,
+    /// End a job early once the supply is exhausted and it holds no work.
+    pub exit_when_drained: bool,
+
+    events: BinaryHeap<Reverse<(u64, u64, EventKey)>>,
+    seq: u64,
+    pending_specs: Vec<JobSpec>,
+    queue: VecDeque<usize>,
+    running: HashMap<u64, RunningJob>,
+    free_nodes: u32,
+    next_job_id: u64,
+
+    report: SimReport,
+    busy_us: u64,
+    avail_us: u64,
+}
+
+// Events need a total order for the heap; wrap in a key enum mirroring Event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKey {
+    Submit(usize),
+    JobEnd(u64),
+    TaskDone { job: u64, claim: u64 },
+    Poll(u64),
+    NodeFail,
+}
+
+impl From<Event> for EventKey {
+    fn from(e: Event) -> Self {
+        match e {
+            Event::Submit(i) => EventKey::Submit(i),
+            Event::JobEnd(j) => EventKey::JobEnd(j),
+            Event::TaskDone { job, claim } => EventKey::TaskDone { job, claim },
+            Event::Poll(j) => EventKey::Poll(j),
+            Event::NodeFail => EventKey::NodeFail,
+        }
+    }
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(machine: MachineSpec, supply: &'a mut dyn TaskSupply, seed: u64) -> Self {
+        let free_nodes = machine.nodes;
+        Self {
+            machine,
+            supply,
+            failure: FailureModel::default(),
+            rng: Rng::new(seed),
+            poll_us: 10_000,
+            exit_when_drained: true,
+            events: BinaryHeap::new(),
+            seq: 0,
+            pending_specs: Vec::new(),
+            queue: VecDeque::new(),
+            running: HashMap::new(),
+            free_nodes,
+            next_job_id: 0,
+            report: SimReport::default(),
+            busy_us: 0,
+            avail_us: 0,
+        }
+    }
+
+    pub fn with_failures(mut self, f: FailureModel) -> Self {
+        self.failure = f;
+        self
+    }
+
+    /// Submit a job at virtual time `at_us`.
+    pub fn submit(&mut self, spec: JobSpec, at_us: u64) {
+        let idx = self.pending_specs.len();
+        self.pending_specs.push(spec);
+        self.push(at_us, Event::Submit(idx));
+    }
+
+    fn push(&mut self, t: u64, e: Event) {
+        self.seq += 1;
+        self.events.push(Reverse((t, self.seq, e.into())));
+    }
+
+    /// Run to quiescence; returns the report.
+    pub fn run(mut self) -> SimReport {
+        if self.failure.mtbf_us > 0 {
+            let dt = self.rng.exponential(self.failure.mtbf_us as f64) as u64;
+            self.push(dt, Event::NodeFail);
+        }
+        let mut now = 0u64;
+        while let Some(Reverse((t, _, key))) = self.events.pop() {
+            now = t;
+            match key {
+                EventKey::Submit(idx) => {
+                    self.queue.push_back(idx);
+                    self.try_schedule(now);
+                }
+                EventKey::JobEnd(job) => self.end_job(job, now, false),
+                EventKey::TaskDone { job, claim } => self.task_done(job, claim, now),
+                EventKey::Poll(job) => {
+                    if let Some(r) = self.running.get_mut(&job) {
+                        if r.alive {
+                            r.poll_scheduled = false;
+                            self.pull_work(job, now);
+                        }
+                    }
+                }
+                EventKey::NodeFail => {
+                    self.node_fail(now);
+                    if self.failure.mtbf_us > 0 && !self.supply.exhausted() {
+                        let dt = self.rng.exponential(self.failure.mtbf_us as f64) as u64;
+                        self.push(now + dt, Event::NodeFail);
+                    }
+                }
+            }
+            if self.report.drained_at_us == 0 && self.supply.exhausted() {
+                self.report.drained_at_us = now;
+            }
+        }
+        self.report.makespan_us = now;
+        self.report.utilization = if self.avail_us > 0 {
+            self.busy_us as f64 / self.avail_us as f64
+        } else {
+            0.0
+        };
+        self.report
+    }
+
+    /// FIFO + backfill: start the head job if it fits; otherwise scan for
+    /// any smaller job that fits (EASY-backfill without reservations —
+    /// adequate for the worker-farm pattern where jobs are homogeneous).
+    fn try_schedule(&mut self, now: u64) {
+        loop {
+            let mut started = false;
+            let mut i = 0;
+            while i < self.queue.len() {
+                let idx = self.queue[i];
+                let nodes = self.pending_specs[idx].nodes;
+                if nodes <= self.free_nodes {
+                    self.queue.remove(i);
+                    let spec = self.pending_specs[idx].clone();
+                    self.start_job(spec, now);
+                    started = true;
+                    break;
+                }
+                i += 1;
+            }
+            if !started {
+                break;
+            }
+        }
+    }
+
+    fn start_job(&mut self, spec: JobSpec, now: u64) {
+        self.free_nodes -= spec.nodes;
+        let id = self.next_job_id;
+        self.next_job_id += 1;
+        let end = now + spec.walltime_us;
+        self.push(end, Event::JobEnd(id));
+        // Worker-farm: submit the dependent successor immediately; it waits
+        // in the queue (dependency approximated by FIFO + node pressure).
+        if spec.resubmits > 0 && !spec.background {
+            let mut succ = spec.clone();
+            succ.resubmits -= 1;
+            self.submit(succ, end);
+        }
+        let workers = if spec.background {
+            0
+        } else {
+            spec.nodes as u64 * spec.workers_per_node as u64
+        };
+        self.running.insert(
+            id,
+            RunningJob {
+                start_us: now,
+                end_us: end,
+                idle_workers: workers,
+                claims: HashMap::new(),
+                poll_scheduled: false,
+                alive: true,
+                spec,
+            },
+        );
+        let active: u64 = self
+            .running
+            .values()
+            .filter(|r| r.alive && !r.spec.background)
+            .map(|r| r.spec.nodes as u64 * r.spec.workers_per_node as u64)
+            .sum();
+        self.report.peak_workers = self.report.peak_workers.max(active);
+        if workers > 0 {
+            self.pull_work(id, now);
+        }
+    }
+
+    fn pull_work(&mut self, job: u64, now: u64) {
+        loop {
+            let Some(r) = self.running.get(&job) else { return };
+            if !r.alive || r.idle_workers == 0 || now >= r.end_us {
+                return;
+            }
+            match self.supply.next() {
+                Some((claim, cost)) => {
+                    let r = self.running.get_mut(&job).unwrap();
+                    r.idle_workers -= 1;
+                    r.claims.insert(claim, (now, cost));
+                    self.push(now + cost, Event::TaskDone { job, claim });
+                }
+                None => {
+                    let exhausted = self.supply.exhausted();
+                    let r = self.running.get_mut(&job).unwrap();
+                    if exhausted {
+                        if self.exit_when_drained && r.claims.is_empty() {
+                            self.end_job(job, now, false);
+                        }
+                        return;
+                    }
+                    if !r.poll_scheduled {
+                        r.poll_scheduled = true;
+                        let t = (now + self.poll_us).min(r.end_us.saturating_sub(1)).max(now + 1);
+                        self.push(t, Event::Poll(job));
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn task_done(&mut self, job: u64, claim: u64, now: u64) {
+        let Some(r) = self.running.get_mut(&job) else {
+            return; // job already ended; claim was killed there
+        };
+        if !r.alive || !r.claims.contains_key(&claim) {
+            return;
+        }
+        let (_t0, cost) = r.claims.remove(&claim).unwrap();
+        r.idle_workers += 1;
+        self.busy_us += cost;
+        self.supply.complete(claim, now);
+        self.report.tasks_completed += 1;
+        self.pull_work(job, now);
+    }
+
+    fn end_job(&mut self, job: u64, now: u64, failed: bool) {
+        let Some(r) = self.running.get_mut(&job) else { return };
+        if !r.alive {
+            return;
+        }
+        r.alive = false;
+        // Kill in-flight claims (walltime expiry / node death).
+        let claims: Vec<(u64, (u64, u64))> = r.claims.drain().collect();
+        let workers = if r.spec.background {
+            0
+        } else {
+            r.spec.nodes as u64 * r.spec.workers_per_node as u64
+        };
+        let lifetime = now.saturating_sub(r.start_us);
+        let nodes = r.spec.nodes;
+        for (claim, (t0, _cost)) in claims {
+            self.busy_us += now.saturating_sub(t0);
+            self.supply.kill(claim);
+            self.report.tasks_killed += 1;
+        }
+        self.avail_us += workers * lifetime;
+        self.free_nodes += nodes;
+        if failed {
+            self.report.jobs_failed += 1;
+        } else {
+            self.report.jobs_completed += 1;
+        }
+        self.try_schedule(now);
+    }
+
+    /// A node fails somewhere on the machine: pick a random running job
+    /// weighted by node count and kill it.
+    fn node_fail(&mut self, now: u64) {
+        let victims: Vec<(u64, u32)> = self
+            .running
+            .iter()
+            .filter(|(_, r)| r.alive && !r.spec.background)
+            .map(|(id, r)| (*id, r.spec.nodes))
+            .collect();
+        let total: u64 = victims.iter().map(|(_, n)| *n as u64).sum();
+        if total == 0 {
+            return;
+        }
+        let mut pick = self.rng.below(total);
+        for (id, n) in victims {
+            if pick < n as u64 {
+                self.end_job(id, now, true);
+                return;
+            }
+            pick -= n as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batch::supply::CountSupply;
+
+    const S: u64 = 1_000_000; // 1 virtual second
+
+    fn job(nodes: u32, walltime_s: u64, wpn: u32) -> JobSpec {
+        JobSpec {
+            name: "j".into(),
+            nodes,
+            walltime_us: walltime_s * S,
+            workers_per_node: wpn,
+            resubmits: 0,
+            background: false,
+        }
+    }
+
+    #[test]
+    fn single_worker_serial_drain() {
+        // 10 tasks of 1s on 1 worker: drains at ~10s.
+        let mut supply = CountSupply::new(10, S, false);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(1), &mut supply, 1);
+        sim.submit(job(1, 100, 1), 0);
+        let r = sim.run();
+        assert_eq!(r.tasks_completed, 10);
+        assert_eq!(r.drained_at_us, 10 * S);
+        assert!(r.utilization > 0.9, "util={}", r.utilization);
+    }
+
+    #[test]
+    fn doubling_workers_halves_drain_time() {
+        // The Fig 6 ideal-scaling law.
+        let mut times = Vec::new();
+        for workers in [1u32, 2, 4, 8] {
+            let mut supply = CountSupply::new(64, S, false);
+            let mut sim = Simulator::new(MachineSpec::sierra_like(1), &mut supply, 1);
+            sim.submit(job(1, 1000, workers), 0);
+            let r = sim.run();
+            assert_eq!(r.tasks_completed, 64);
+            times.push(r.drained_at_us);
+        }
+        for w in times.windows(2) {
+            let ratio = w[0] as f64 / w[1] as f64;
+            assert!((ratio - 2.0).abs() < 0.05, "ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn walltime_kills_inflight_tasks() {
+        // 5 tasks of 10s each, walltime 25s, 1 worker: 2 complete, the 3rd
+        // dies at the wall, 2 never start.
+        let mut supply = CountSupply::new(5, 10 * S, false);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(1), &mut supply, 1);
+        sim.submit(job(1, 25, 1), 0);
+        let r = sim.run();
+        assert_eq!(r.tasks_completed, 2);
+        assert_eq!(r.tasks_killed, 1);
+        assert_eq!(supply.lost, 1);
+        // 2 tasks still in the pool, never claimed.
+        assert!(!supply.exhausted());
+    }
+
+    #[test]
+    fn farm_chain_continues_the_drain() {
+        // Same workload, but the job resubmits itself: the successor picks
+        // up where the parent died (requeue_on_kill models redelivery).
+        let mut supply = CountSupply::new(5, 10 * S, true);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(1), &mut supply, 1);
+        let mut j = job(1, 25, 1);
+        j.resubmits = 3;
+        sim.submit(j, 0);
+        let r = sim.run();
+        assert_eq!(supply.completed, 5);
+        assert!(r.jobs_completed >= 2);
+    }
+
+    #[test]
+    fn queue_waits_for_free_nodes() {
+        // Machine of 2 nodes; a 2-node background job blocks a 1-node job
+        // until it ends.
+        let mut supply = CountSupply::new(1, S, false);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(2), &mut supply, 1);
+        let mut bg = job(2, 50, 0);
+        bg.background = true;
+        sim.submit(bg, 0);
+        sim.submit(job(1, 100, 1), 1);
+        let r = sim.run();
+        assert_eq!(r.tasks_completed, 1);
+        // Task can only have completed after the background job's 50s wall.
+        assert!(r.drained_at_us >= 50 * S, "drained={}", r.drained_at_us);
+    }
+
+    #[test]
+    fn backfill_lets_small_jobs_jump() {
+        // 4-node machine: head-of-queue wants 4 nodes (blocked by a 2-node
+        // runner), but a 1-node job behind it fits now.
+        let mut supply = CountSupply::new(1, S, false);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(4), &mut supply, 1);
+        let mut runner = job(2, 100, 0);
+        runner.background = true;
+        sim.submit(runner, 0);
+        let mut big = job(4, 10, 0);
+        big.background = true;
+        sim.submit(big, 1);
+        sim.submit(job(1, 50, 1), 2); // the task job
+        let r = sim.run();
+        // Task completes long before the 100s+10s serial schedule.
+        assert!(r.drained_at_us < 20 * S, "drained={}", r.drained_at_us);
+        assert_eq!(r.tasks_completed, 1);
+    }
+
+    #[test]
+    fn node_failures_kill_jobs_and_farm_recovers() {
+        let mut supply = CountSupply::new(200, S, true);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(4), &mut supply, 7)
+            .with_failures(FailureModel { mtbf_us: 5 * S });
+        let mut j = job(2, 1000, 2);
+        j.resubmits = 200;
+        sim.submit(j, 0);
+        let r = sim.run();
+        assert_eq!(supply.completed, 200, "farm eventually completes all");
+        assert!(r.jobs_failed > 0, "failures actually occurred");
+    }
+
+    #[test]
+    fn utilization_and_peak_workers_reported() {
+        let mut supply = CountSupply::new(100, S, false);
+        let mut sim = Simulator::new(MachineSpec::sierra_like(2), &mut supply, 1);
+        sim.submit(job(2, 60, 4), 0);
+        let r = sim.run();
+        assert_eq!(r.peak_workers, 8);
+        assert!(r.utilization > 0.5);
+        assert!(r.utilization <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,307 @@
+//! Task supplies for the batch simulator.
+
+use crate::broker::core::Broker;
+use crate::task::{Payload, TaskEnvelope};
+
+/// What simulated workers pull from. Costs are virtual microseconds.
+pub trait TaskSupply {
+    /// Claim the next task: `(claim_id, cost_us)`. `None` = nothing ready
+    /// right now (more may appear: see [`TaskSupply::exhausted`]).
+    fn next(&mut self) -> Option<(u64, u64)>;
+    /// The claimed task finished successfully at virtual time `now_us`.
+    fn complete(&mut self, claim: u64, now_us: u64);
+    /// The claimed task was killed (job walltime / node failure).
+    fn kill(&mut self, claim: u64);
+    /// No more work will ever appear (drains the event loop).
+    fn exhausted(&self) -> bool;
+}
+
+/// Fixed count of identical null tasks (the §2.3 overhead studies).
+#[derive(Debug)]
+pub struct CountSupply {
+    remaining: u64,
+    in_flight: u64,
+    pub cost_us: u64,
+    /// Killed tasks return to the pool (true) or are lost (false).
+    pub requeue_on_kill: bool,
+    pub completed: u64,
+    pub killed: u64,
+    pub lost: u64,
+    next_claim: u64,
+}
+
+impl CountSupply {
+    pub fn new(n: u64, cost_us: u64, requeue_on_kill: bool) -> Self {
+        Self {
+            remaining: n,
+            in_flight: 0,
+            cost_us,
+            requeue_on_kill,
+            completed: 0,
+            killed: 0,
+            lost: 0,
+            next_claim: 0,
+        }
+    }
+}
+
+impl TaskSupply for CountSupply {
+    fn next(&mut self) -> Option<(u64, u64)> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        self.in_flight += 1;
+        self.next_claim += 1;
+        Some((self.next_claim, self.cost_us))
+    }
+
+    fn complete(&mut self, _claim: u64, _now_us: u64) {
+        self.in_flight -= 1;
+        self.completed += 1;
+    }
+
+    fn kill(&mut self, _claim: u64) {
+        self.in_flight -= 1;
+        self.killed += 1;
+        if self.requeue_on_kill {
+            self.remaining += 1;
+        } else {
+            self.lost += 1;
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.remaining == 0 && self.in_flight == 0
+    }
+}
+
+/// Cost model for a [`BrokerSupply`]: virtual µs per payload kind.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub expansion_us: u64,
+    pub step_us_per_sample: u64,
+    pub aggregate_us: u64,
+    pub overhead_us: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Paper-calibrated defaults: ~33 ms measured median task overhead
+        // (Fig 5); expansion tasks are pure metadata handling.
+        Self {
+            expansion_us: 5_000,
+            step_us_per_sample: 1_000_000, // the `sleep 1` null sim
+            aggregate_us: 50_000,
+            overhead_us: 33_000,
+        }
+    }
+}
+
+/// Adapter driving a real [`Broker`] from simulated workers: expansion
+/// tasks *actually expand* (children land back on the broker), step tasks
+/// cost per-sample time, kills nack without requeue (dead-letter — crawl
+/// territory), completions ack and count samples.
+pub struct BrokerSupply {
+    broker: Broker,
+    consumer: u64,
+    queue: String,
+    pub cost: CostModel,
+    /// claim id -> broker delivery tag + the envelope (for kill/complete).
+    outstanding: std::collections::HashMap<u64, (u64, TaskEnvelope)>,
+    next_claim: u64,
+    pub samples_completed: u64,
+    pub tasks_completed: u64,
+    pub tasks_killed: u64,
+    /// Virtual timestamp of the first *step* (real) task claim — the Fig 4
+    /// measurement point.
+    pub first_real_claim_us: Option<u64>,
+    pending_first_real: std::collections::HashMap<u64, bool>,
+}
+
+impl BrokerSupply {
+    pub fn new(broker: Broker, queue: &str, cost: CostModel) -> Self {
+        let consumer = broker.register_consumer();
+        Self {
+            broker,
+            consumer,
+            queue: queue.to_string(),
+            cost,
+            outstanding: std::collections::HashMap::new(),
+            next_claim: 0,
+            samples_completed: 0,
+            tasks_completed: 0,
+            tasks_killed: 0,
+            first_real_claim_us: None,
+            pending_first_real: std::collections::HashMap::new(),
+        }
+    }
+}
+
+impl TaskSupply for BrokerSupply {
+    fn next(&mut self) -> Option<(u64, u64)> {
+        let d = self.broker.try_fetch(self.consumer, &[&self.queue], 0)?;
+        let cost = match &d.task.payload {
+            Payload::Expansion(_) => self.cost.expansion_us,
+            Payload::Step(s) => {
+                self.cost.overhead_us + self.cost.step_us_per_sample * (s.hi - s.lo)
+            }
+            Payload::Aggregate(_) => self.cost.aggregate_us,
+            Payload::Control(_) => 1,
+        };
+        self.next_claim += 1;
+        let is_real = matches!(d.task.payload, Payload::Step(_));
+        self.pending_first_real.insert(self.next_claim, is_real);
+        self.outstanding.insert(self.next_claim, (d.tag, d.task));
+        Some((self.next_claim, cost))
+    }
+
+    fn complete(&mut self, claim: u64, now_us: u64) {
+        let Some((tag, task)) = self.outstanding.remove(&claim) else {
+            return;
+        };
+        if self.pending_first_real.remove(&claim) == Some(true)
+            && self.first_real_claim_us.is_none()
+        {
+            self.first_real_claim_us = Some(now_us);
+        }
+        match &task.payload {
+            Payload::Expansion(e) => {
+                let mut children = Vec::new();
+                crate::hierarchy::expand(e, &self.queue, &mut children);
+                // Broker pressure propagates as a panic in simulation: the
+                // study sizes are chosen to fit.
+                self.broker.publish_batch(children).expect("broker full");
+            }
+            Payload::Step(s) => {
+                self.samples_completed += s.hi - s.lo;
+            }
+            _ => {}
+        }
+        self.broker.ack(tag).ok();
+        self.tasks_completed += 1;
+    }
+
+    fn kill(&mut self, claim: u64) {
+        if let Some((tag, task)) = self.outstanding.remove(&claim) {
+            self.pending_first_real.remove(&claim);
+            // Node death: expansion tasks requeue (they're cheap metadata —
+            // redelivery semantics), step tasks dead-letter (their samples
+            // are recovered by the crawl).
+            let requeue = matches!(task.payload, Payload::Expansion(_));
+            self.broker.nack(tag, requeue).ok();
+            self.tasks_killed += 1;
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.outstanding.is_empty() && self.broker.depth() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy;
+    use crate::task::{StepTemplate, WorkSpec};
+
+    #[test]
+    fn count_supply_lifecycle() {
+        let mut s = CountSupply::new(3, 10, false);
+        let (c1, cost) = s.next().unwrap();
+        assert_eq!(cost, 10);
+        let (c2, _) = s.next().unwrap();
+        let (_c3, _) = s.next().unwrap();
+        assert!(s.next().is_none());
+        assert!(!s.exhausted(), "in-flight work pending");
+        s.complete(c1, 100);
+        s.kill(c2);
+        assert_eq!(s.lost, 1);
+        assert!(!s.exhausted());
+        s.complete(3, 200);
+        assert!(s.exhausted());
+        assert_eq!(s.completed, 2);
+    }
+
+    #[test]
+    fn count_supply_requeues_kills() {
+        let mut s = CountSupply::new(1, 10, true);
+        let (c, _) = s.next().unwrap();
+        s.kill(c);
+        assert!(!s.exhausted());
+        let (c, _) = s.next().unwrap();
+        s.complete(c, 50);
+        assert!(s.exhausted());
+        assert_eq!((s.completed, s.killed, s.lost), (1, 1, 0));
+    }
+
+    #[test]
+    fn broker_supply_expands_hierarchy() {
+        let broker = Broker::default();
+        let template = StepTemplate {
+            study_id: "s".into(),
+            step_name: "x".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 1,
+            seed: 0,
+        };
+        broker
+            .publish(hierarchy::root_task(template, 9, 3, "q"))
+            .unwrap();
+        let mut s = BrokerSupply::new(broker, "q", CostModel::default());
+        // Drain serially.
+        let mut now = 0;
+        while let Some((claim, cost)) = s.next() {
+            now += cost;
+            s.complete(claim, now);
+        }
+        assert!(s.exhausted());
+        assert_eq!(s.samples_completed, 9);
+        assert_eq!(s.tasks_completed, 13); // 4 expansion + 9 real (Fig 2)
+        assert!(s.first_real_claim_us.is_some());
+    }
+
+    #[test]
+    fn broker_supply_kill_deadletters_steps() {
+        let broker = Broker::default();
+        let template = StepTemplate {
+            study_id: "s".into(),
+            step_name: "x".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 2,
+            seed: 0,
+        };
+        broker
+            .publish(hierarchy::root_task(template, 2, 2, "q"))
+            .unwrap();
+        let mut s = BrokerSupply::new(broker.clone(), "q", CostModel::default());
+        let (claim, _) = s.next().unwrap(); // the single step task
+        s.kill(claim);
+        assert!(s.exhausted());
+        assert_eq!(s.samples_completed, 0);
+        assert_eq!(broker.stats("q").dead_lettered, 1);
+    }
+
+    #[test]
+    fn step_cost_scales_with_samples() {
+        let broker = Broker::default();
+        let template = StepTemplate {
+            study_id: "s".into(),
+            step_name: "x".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 10,
+            seed: 0,
+        };
+        broker
+            .publish(hierarchy::root_task(template, 10, 2, "q"))
+            .unwrap();
+        let cost = CostModel {
+            step_us_per_sample: 7,
+            overhead_us: 100,
+            ..CostModel::default()
+        };
+        let mut s = BrokerSupply::new(broker, "q", cost);
+        let (_claim, c) = s.next().unwrap();
+        assert_eq!(c, 100 + 70);
+    }
+}

@@ -1,0 +1,166 @@
+//! Blocking TCP client for the broker server. One connection = one broker
+//! consumer (prefetch accounting and crash-requeue are per-connection).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use super::core::{Delivery, QueueStats};
+use super::wire::{self, WireError};
+use crate::task::ser::{task_from_json, task_to_json};
+use crate::util::json::Json;
+
+pub struct BrokerClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+#[derive(Debug)]
+pub enum ClientError {
+    Wire(WireError),
+    Server(String),
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Server(e) => write!(f, "server: {e}"),
+            ClientError::Protocol(e) => write!(f, "protocol: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> Self {
+        ClientError::Wire(e)
+    }
+}
+
+impl BrokerClient {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
+        wire::write_frame(&mut self.writer, req)?;
+        let resp = wire::read_frame(&mut self.reader)?;
+        if resp.get("ok").as_bool() == Some(true) {
+            Ok(resp)
+        } else {
+            Err(ClientError::Server(
+                resp.get("error").as_str().unwrap_or("unknown").to_string(),
+            ))
+        }
+    }
+
+    pub fn publish(&mut self, task: &crate::task::TaskEnvelope) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("publish")),
+            ("task", task_to_json(task)),
+        ]))
+        .map(|_| ())
+    }
+
+    pub fn publish_batch(
+        &mut self,
+        tasks: &[crate::task::TaskEnvelope],
+    ) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("publish_batch")),
+            ("tasks", Json::arr(tasks.iter().map(task_to_json).collect())),
+        ]))
+        .map(|_| ())
+    }
+
+    /// Fetch with a server-side wait of up to `timeout_ms`. `Ok(None)` on
+    /// timeout (no ready message).
+    pub fn fetch(
+        &mut self,
+        queues: &[&str],
+        prefetch: usize,
+        timeout_ms: u64,
+    ) -> Result<Option<Delivery>, ClientError> {
+        let resp = self.call(&Json::obj(vec![
+            ("op", Json::str("fetch")),
+            (
+                "queues",
+                Json::arr(queues.iter().map(|q| Json::str(*q)).collect()),
+            ),
+            ("prefetch", Json::num(prefetch as f64)),
+            ("timeout_ms", Json::num(timeout_ms as f64)),
+        ]))?;
+        match resp.get("tag") {
+            Json::Null => Ok(None),
+            tag => {
+                let tag = tag
+                    .as_u64()
+                    .ok_or_else(|| ClientError::Protocol("bad tag".into()))?;
+                let task = task_from_json(resp.get("task")).map_err(ClientError::Protocol)?;
+                Ok(Some(Delivery { tag, task }))
+            }
+        }
+    }
+
+    pub fn ack(&mut self, tag: u64) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("ack")),
+            ("tag", Json::num(tag as f64)),
+        ]))
+        .map(|_| ())
+    }
+
+    pub fn nack(&mut self, tag: u64, requeue: bool) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("nack")),
+            ("tag", Json::num(tag as f64)),
+            ("requeue", Json::Bool(requeue)),
+        ]))
+        .map(|_| ())
+    }
+
+    pub fn stats(&mut self, queue: &str) -> Result<QueueStats, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("stats")),
+            ("queue", Json::str(queue)),
+        ]))?;
+        Ok(QueueStats {
+            ready: r.get("ready").as_u64().unwrap_or(0) as usize,
+            unacked: r.get("unacked").as_u64().unwrap_or(0) as usize,
+            published: r.get("published").as_u64().unwrap_or(0),
+            delivered: r.get("delivered").as_u64().unwrap_or(0),
+            acked: r.get("acked").as_u64().unwrap_or(0),
+            requeued: r.get("requeued").as_u64().unwrap_or(0),
+            dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
+            bytes_published: r.get("bytes_published").as_u64().unwrap_or(0),
+        })
+    }
+
+    pub fn purge(&mut self, queue: &str) -> Result<usize, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("purge")),
+            ("queue", Json::str(queue)),
+        ]))?;
+        Ok(r.get("purged").as_u64().unwrap_or(0) as usize)
+    }
+
+    pub fn depth(&mut self) -> Result<usize, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("depth"))]))?;
+        Ok(r.get("depth").as_u64().unwrap_or(0) as usize)
+    }
+
+    pub fn queues(&mut self) -> Result<Vec<String>, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("queues"))]))?;
+        Ok(r.get("queues")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default())
+    }
+}

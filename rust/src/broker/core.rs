@@ -1,0 +1,721 @@
+//! In-process broker engine: priority queues + delivery state + statistics.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::task::{ser, TaskEnvelope};
+
+/// Broker tunables. Defaults model the paper's deployment.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Per-message size cap in bytes. RabbitMQ's hard frame limit is
+    /// 2 GiB (2147483648); the paper hit it at ~40 M samples of flat
+    /// metadata. Tests lower this to exercise the failure path.
+    pub max_message_bytes: usize,
+    /// Upper bound on total queued messages (backpressure guard; the §2.2
+    /// pathology of producers reserving the whole server). 0 = unlimited.
+    pub max_depth: usize,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        Self {
+            max_message_bytes: 2 << 30,
+            max_depth: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum BrokerError {
+    MessageTooLarge { bytes: usize, limit: usize },
+    QueueFull { depth: usize },
+    UnknownDeliveryTag(u64),
+    PrefetchExceeded { prefetch: usize },
+}
+
+impl std::fmt::Display for BrokerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BrokerError::MessageTooLarge { bytes, limit } => {
+                write!(f, "message of {bytes} bytes exceeds broker limit {limit}")
+            }
+            BrokerError::QueueFull { depth } => write!(f, "broker at max depth {depth}"),
+            BrokerError::UnknownDeliveryTag(t) => write!(f, "unknown delivery tag {t}"),
+            BrokerError::PrefetchExceeded { prefetch } => {
+                write!(f, "consumer holds {prefetch} unacked messages")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BrokerError {}
+
+/// A message queued with its priority and arrival sequence (FIFO tiebreak).
+struct Queued {
+    priority: u8,
+    seq: u64,
+    task: TaskEnvelope,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap: higher priority first, then lower seq (older) first.
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A delivered-but-unacked message.
+#[derive(Debug)]
+struct InFlight {
+    queue: String,
+    consumer: u64,
+    task: TaskEnvelope,
+}
+
+/// What a consumer receives: the envelope plus the tag to ack/nack with.
+#[derive(Debug)]
+pub struct Delivery {
+    pub tag: u64,
+    pub task: TaskEnvelope,
+}
+
+/// Point-in-time statistics for one queue.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueueStats {
+    pub ready: usize,
+    pub unacked: usize,
+    pub published: u64,
+    pub delivered: u64,
+    pub acked: u64,
+    pub requeued: u64,
+    pub dead_lettered: u64,
+    pub bytes_published: u64,
+}
+
+#[derive(Default)]
+struct QueueState {
+    heap: BinaryHeap<Queued>,
+    stats: QueueStats,
+}
+
+struct Shared {
+    queues: HashMap<String, QueueState>,
+    inflight: HashMap<u64, InFlight>,
+    /// Unacked count per consumer id (prefetch accounting).
+    consumer_unacked: HashMap<u64, usize>,
+    seq: u64,
+    total_ready: usize,
+}
+
+/// The broker. Cheap to clone (`Arc` inside); share one per deployment.
+#[derive(Clone)]
+pub struct Broker {
+    cfg: BrokerConfig,
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+    next_tag: Arc<AtomicU64>,
+    next_consumer: Arc<AtomicU64>,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Self::new(BrokerConfig::default())
+    }
+}
+
+impl Broker {
+    pub fn new(cfg: BrokerConfig) -> Self {
+        Self {
+            cfg,
+            shared: Arc::new((
+                Mutex::new(Shared {
+                    queues: HashMap::new(),
+                    inflight: HashMap::new(),
+                    consumer_unacked: HashMap::new(),
+                    seq: 0,
+                    total_ready: 0,
+                }),
+                Condvar::new(),
+            )),
+            next_tag: Arc::new(AtomicU64::new(1)),
+            next_consumer: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    /// Register a consumer; returns its id for `fetch` prefetch accounting.
+    pub fn register_consumer(&self) -> u64 {
+        self.next_consumer.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Publish one task to its queue. Size accounting uses the wire
+    /// encoding, exactly what the TCP path transmits.
+    pub fn publish(&self, task: TaskEnvelope) -> Result<(), BrokerError> {
+        let bytes = ser::encode(&task).len();
+        self.publish_sized(task, bytes)
+    }
+
+    /// Publish with a caller-provided size (lets the in-process fast path
+    /// skip re-encoding when the caller already measured it).
+    pub fn publish_sized(&self, task: TaskEnvelope, bytes: usize) -> Result<(), BrokerError> {
+        if bytes > self.cfg.max_message_bytes {
+            return Err(BrokerError::MessageTooLarge {
+                bytes,
+                limit: self.cfg.max_message_bytes,
+            });
+        }
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        if self.cfg.max_depth > 0 && s.total_ready >= self.cfg.max_depth {
+            return Err(BrokerError::QueueFull {
+                depth: s.total_ready,
+            });
+        }
+        s.seq += 1;
+        let seq = s.seq;
+        let q = s.queues.entry(task.queue.clone()).or_default();
+        q.stats.published += 1;
+        q.stats.bytes_published += bytes as u64;
+        q.stats.ready += 1;
+        q.heap.push(Queued {
+            priority: task.priority,
+            seq,
+            task,
+        });
+        s.total_ready += 1;
+        cv.notify_one();
+        Ok(())
+    }
+
+    /// Publish a batch under one lock acquisition (flat-enqueue baseline
+    /// and expansion bursts). All-or-nothing on the size check.
+    pub fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), BrokerError> {
+        let mut sized = Vec::with_capacity(tasks.len());
+        for t in tasks {
+            let bytes = ser::encode(&t).len();
+            if bytes > self.cfg.max_message_bytes {
+                return Err(BrokerError::MessageTooLarge {
+                    bytes,
+                    limit: self.cfg.max_message_bytes,
+                });
+            }
+            sized.push((t, bytes));
+        }
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        if self.cfg.max_depth > 0 && s.total_ready + sized.len() > self.cfg.max_depth {
+            return Err(BrokerError::QueueFull {
+                depth: s.total_ready,
+            });
+        }
+        for (t, bytes) in sized {
+            s.seq += 1;
+            let seq = s.seq;
+            let q = s.queues.entry(t.queue.clone()).or_default();
+            q.stats.published += 1;
+            q.stats.bytes_published += bytes as u64;
+            q.stats.ready += 1;
+            q.heap.push(Queued {
+                priority: t.priority,
+                seq,
+                task: t,
+            });
+            s.total_ready += 1;
+        }
+        cv.notify_all();
+        Ok(())
+    }
+
+    /// Blocking fetch: highest-priority ready message across `queues`
+    /// (ties broken globally FIFO), or `None` on timeout. `prefetch`
+    /// bounds this consumer's unacked messages (0 = unlimited).
+    pub fn fetch(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        timeout: Duration,
+    ) -> Option<Delivery> {
+        let (lock, cv) = &*self.shared;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = lock.lock().unwrap();
+        loop {
+            let held = s.consumer_unacked.get(&consumer).copied().unwrap_or(0);
+            if prefetch == 0 || held < prefetch {
+                // Pick the best head among the requested queues.
+                let best = queues
+                    .iter()
+                    .filter_map(|name| {
+                        s.queues
+                            .get(*name)
+                            .and_then(|q| q.heap.peek())
+                            .map(|m| (m.priority, std::cmp::Reverse(m.seq), name.to_string()))
+                    })
+                    .max();
+                if let Some((_, _, qname)) = best {
+                    let q = s.queues.get_mut(&qname).unwrap();
+                    let msg = q.heap.pop().unwrap();
+                    q.stats.ready -= 1;
+                    q.stats.delivered += 1;
+                    s.total_ready -= 1;
+                    let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
+                    s.inflight.insert(
+                        tag,
+                        InFlight {
+                            queue: qname,
+                            consumer,
+                            task: msg.task.clone(),
+                        },
+                    );
+                    *s.consumer_unacked.entry(consumer).or_insert(0) += 1;
+                    return Some(Delivery {
+                        tag,
+                        task: msg.task,
+                    });
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Non-blocking fetch.
+    pub fn try_fetch(&self, consumer: u64, queues: &[&str], prefetch: usize) -> Option<Delivery> {
+        self.fetch(consumer, queues, prefetch, Duration::ZERO)
+    }
+
+    /// Acknowledge successful processing.
+    pub fn ack(&self, tag: u64) -> Result<(), BrokerError> {
+        let (lock, _cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        let inf = s
+            .inflight
+            .remove(&tag)
+            .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
+        if let Some(c) = s.consumer_unacked.get_mut(&inf.consumer) {
+            *c = c.saturating_sub(1);
+        }
+        if let Some(q) = s.queues.get_mut(&inf.queue) {
+            q.stats.unacked = q.stats.unacked.saturating_sub(1);
+            q.stats.acked += 1;
+        }
+        Ok(())
+    }
+
+    /// Negative-ack. With `requeue`, the message returns to its queue with
+    /// one fewer retry; once retries are exhausted it is dead-lettered
+    /// (counted, dropped) — the §3.1 resubmission crawl recovers those.
+    pub fn nack(&self, tag: u64, requeue: bool) -> Result<(), BrokerError> {
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        let mut inf = s
+            .inflight
+            .remove(&tag)
+            .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
+        if let Some(c) = s.consumer_unacked.get_mut(&inf.consumer) {
+            *c = c.saturating_sub(1);
+        }
+        s.seq += 1;
+        let seq = s.seq;
+        let q = s.queues.entry(inf.queue.clone()).or_default();
+        q.stats.unacked = q.stats.unacked.saturating_sub(1);
+        if requeue && inf.task.retries_left > 0 {
+            inf.task.retries_left -= 1;
+            q.stats.requeued += 1;
+            q.stats.ready += 1;
+            q.heap.push(Queued {
+                priority: inf.task.priority,
+                seq,
+                task: inf.task,
+            });
+            s.total_ready += 1;
+            cv.notify_one();
+        } else {
+            q.stats.dead_lettered += 1;
+        }
+        Ok(())
+    }
+
+    /// Requeue everything a (dead) consumer held — what AMQP does when a
+    /// connection drops. Returns how many messages were recovered.
+    pub fn recover_consumer(&self, consumer: u64) -> usize {
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        let tags: Vec<u64> = s
+            .inflight
+            .iter()
+            .filter(|(_, inf)| inf.consumer == consumer)
+            .map(|(t, _)| *t)
+            .collect();
+        let n = tags.len();
+        for tag in tags {
+            let inf = s.inflight.remove(&tag).unwrap();
+            s.seq += 1;
+            let seq = s.seq;
+            let q = s.queues.entry(inf.queue.clone()).or_default();
+            q.stats.unacked = q.stats.unacked.saturating_sub(1);
+            q.stats.requeued += 1;
+            q.stats.ready += 1;
+            // Redelivery does NOT consume a retry (it wasn't a task failure).
+            q.heap.push(Queued {
+                priority: inf.task.priority,
+                seq,
+                task: inf.task,
+            });
+            s.total_ready += 1;
+        }
+        s.consumer_unacked.remove(&consumer);
+        if n > 0 {
+            cv.notify_all();
+        }
+        n
+    }
+
+    /// Drop all ready messages in a queue; returns the count.
+    pub fn purge(&self, queue: &str) -> usize {
+        let (lock, _cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        if let Some(q) = s.queues.get_mut(queue) {
+            let n = q.heap.len();
+            q.heap.clear();
+            q.stats.ready = 0;
+            s.total_ready -= n;
+            n
+        } else {
+            0
+        }
+    }
+
+    pub fn stats(&self, queue: &str) -> QueueStats {
+        let (lock, _cv) = &*self.shared;
+        let s = lock.lock().unwrap();
+        let mut st = s
+            .queues
+            .get(queue)
+            .map(|q| q.stats.clone())
+            .unwrap_or_default();
+        st.unacked = s
+            .inflight
+            .values()
+            .filter(|inf| inf.queue == queue)
+            .count();
+        st
+    }
+
+    pub fn queue_names(&self) -> Vec<String> {
+        let (lock, _cv) = &*self.shared;
+        let s = lock.lock().unwrap();
+        let mut names: Vec<String> = s.queues.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Total ready messages across all queues.
+    pub fn depth(&self) -> usize {
+        let (lock, _cv) = &*self.shared;
+        lock.lock().unwrap().total_ready
+    }
+
+    /// Total unacked messages across all queues.
+    pub fn inflight(&self) -> usize {
+        let (lock, _cv) = &*self.shared;
+        lock.lock().unwrap().inflight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
+
+    fn ping(queue: &str, token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            queue,
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    fn token(d: &Delivery) -> String {
+        match &d.task.payload {
+            Payload::Control(ControlMsg::Ping { token }) => token.clone(),
+            _ => panic!("not a ping"),
+        }
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..5 {
+            b.publish(ping("q", &format!("t{i}"))).unwrap();
+        }
+        for i in 0..5 {
+            let d = b.try_fetch(c, &["q"], 0).unwrap();
+            assert_eq!(token(&d), format!("t{i}"));
+            b.ack(d.tag).unwrap();
+        }
+        assert!(b.try_fetch(c, &["q"], 0).is_none());
+    }
+
+    #[test]
+    fn higher_priority_preempts() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "low").priority(1)).unwrap();
+        b.publish(ping("q", "high").priority(9)).unwrap();
+        b.publish(ping("q", "mid").priority(5)).unwrap();
+        let order: Vec<String> = (0..3)
+            .map(|_| {
+                let d = b.try_fetch(c, &["q"], 0).unwrap();
+                b.ack(d.tag).unwrap();
+                token(&d)
+            })
+            .collect();
+        assert_eq!(order, ["high", "mid", "low"]);
+    }
+
+    #[test]
+    fn fetch_across_multiple_queues_takes_best() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("a", "qa").priority(2)).unwrap();
+        b.publish(ping("b", "qb").priority(8)).unwrap();
+        let d = b.try_fetch(c, &["a", "b"], 0).unwrap();
+        assert_eq!(token(&d), "qb");
+    }
+
+    #[test]
+    fn prefetch_limits_unacked() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..3 {
+            b.publish(ping("q", &format!("t{i}"))).unwrap();
+        }
+        let d1 = b.try_fetch(c, &["q"], 2).unwrap();
+        let _d2 = b.try_fetch(c, &["q"], 2).unwrap();
+        assert!(b.try_fetch(c, &["q"], 2).is_none(), "prefetch=2 blocks 3rd");
+        b.ack(d1.tag).unwrap();
+        assert!(b.try_fetch(c, &["q"], 2).is_some(), "ack frees a slot");
+    }
+
+    #[test]
+    fn prefetch_is_per_consumer() {
+        let b = Broker::default();
+        let c1 = b.register_consumer();
+        let c2 = b.register_consumer();
+        b.publish(ping("q", "a")).unwrap();
+        b.publish(ping("q", "b")).unwrap();
+        let _d1 = b.try_fetch(c1, &["q"], 1).unwrap();
+        assert!(b.try_fetch(c1, &["q"], 1).is_none());
+        assert!(b.try_fetch(c2, &["q"], 1).is_some());
+    }
+
+    #[test]
+    fn nack_requeue_decrements_retries() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "x")).unwrap();
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        let retries = d.task.retries_left;
+        b.nack(d.tag, true).unwrap();
+        let d2 = b.try_fetch(c, &["q"], 0).unwrap();
+        assert_eq!(d2.task.retries_left, retries - 1);
+    }
+
+    #[test]
+    fn exhausted_retries_dead_letter() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        let mut t = ping("q", "x");
+        t.retries_left = 1;
+        b.publish(t).unwrap();
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        b.nack(d.tag, true).unwrap(); // retries 1 -> 0, requeued
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        b.nack(d.tag, true).unwrap(); // retries 0 -> dead letter
+        assert!(b.try_fetch(c, &["q"], 0).is_none());
+        assert_eq!(b.stats("q").dead_lettered, 1);
+    }
+
+    #[test]
+    fn recover_consumer_requeues_without_retry_cost() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "x")).unwrap();
+        b.publish(ping("q", "y")).unwrap();
+        let d1 = b.try_fetch(c, &["q"], 0).unwrap();
+        let _d2 = b.try_fetch(c, &["q"], 0).unwrap();
+        let retries = d1.task.retries_left;
+        assert_eq!(b.recover_consumer(c), 2);
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        assert_eq!(d.task.retries_left, retries, "redelivery keeps retries");
+        assert_eq!(b.inflight(), 1);
+    }
+
+    #[test]
+    fn message_size_cap_enforced() {
+        let b = Broker::new(BrokerConfig {
+            max_message_bytes: 200,
+            max_depth: 0,
+        });
+        let small = ping("q", "ok");
+        b.publish(small).unwrap();
+        let big = ping("q", &"x".repeat(500));
+        match b.publish(big) {
+            Err(BrokerError::MessageTooLarge { limit, .. }) => assert_eq!(limit, 200),
+            other => panic!("expected MessageTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn depth_cap_backpressure() {
+        let b = Broker::new(BrokerConfig {
+            max_message_bytes: 2 << 30,
+            max_depth: 2,
+        });
+        b.publish(ping("q", "a")).unwrap();
+        b.publish(ping("q", "b")).unwrap();
+        assert!(matches!(
+            b.publish(ping("q", "c")),
+            Err(BrokerError::QueueFull { .. })
+        ));
+        // Draining frees capacity.
+        let c = b.register_consumer();
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        b.ack(d.tag).unwrap();
+        b.publish(ping("q", "c")).unwrap();
+    }
+
+    #[test]
+    fn blocking_fetch_wakes_on_publish() {
+        let b = Broker::default();
+        let b2 = b.clone();
+        let handle = std::thread::spawn(move || {
+            let c = b2.register_consumer();
+            b2.fetch(c, &["q"], 0, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        b.publish(ping("q", "wake")).unwrap();
+        let d = handle.join().unwrap().expect("fetch should succeed");
+        assert_eq!(token(&d), "wake");
+    }
+
+    #[test]
+    fn fetch_timeout_returns_none() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        let t0 = std::time::Instant::now();
+        assert!(b.fetch(c, &["empty"], 0, Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn stats_track_lifecycle() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "a")).unwrap();
+        b.publish(ping("q", "b")).unwrap();
+        assert_eq!(b.stats("q").ready, 2);
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        let st = b.stats("q");
+        assert_eq!((st.ready, st.unacked, st.delivered), (1, 1, 1));
+        b.ack(d.tag).unwrap();
+        let st = b.stats("q");
+        assert_eq!((st.ready, st.unacked, st.acked), (1, 0, 1));
+        assert!(st.bytes_published > 0);
+    }
+
+    #[test]
+    fn purge_empties_queue() {
+        let b = Broker::default();
+        for i in 0..10 {
+            b.publish(ping("q", &format!("{i}"))).unwrap();
+        }
+        assert_eq!(b.purge("q"), 10);
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.purge("nonexistent"), 0);
+    }
+
+    #[test]
+    fn ack_unknown_tag_errors() {
+        let b = Broker::default();
+        assert!(matches!(
+            b.ack(999),
+            Err(BrokerError::UnknownDeliveryTag(999))
+        ));
+        assert!(b.nack(999, true).is_err());
+    }
+
+    #[test]
+    fn publish_batch_atomic_on_failure() {
+        let b = Broker::new(BrokerConfig {
+            max_message_bytes: 200,
+            max_depth: 0,
+        });
+        let batch = vec![ping("q", "ok"), ping("q", &"x".repeat(500))];
+        assert!(b.publish_batch(batch).is_err());
+        assert_eq!(b.depth(), 0, "nothing published on batch failure");
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_messages() {
+        let b = Broker::default();
+        let n_producers = 4;
+        let per_producer = 500;
+        let n_consumers = 4;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    b.publish(ping("q", &format!("{p}-{i}"))).unwrap();
+                }
+            }));
+        }
+        let consumed = Arc::new(AtomicU64::new(0));
+        let mut chandles = Vec::new();
+        for _ in 0..n_consumers {
+            let b = b.clone();
+            let consumed = consumed.clone();
+            chandles.push(std::thread::spawn(move || {
+                let c = b.register_consumer();
+                while let Some(d) = b.fetch(c, &["q"], 0, Duration::from_millis(300)) {
+                    b.ack(d.tag).unwrap();
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for h in chandles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            consumed.load(Ordering::Relaxed),
+            (n_producers * per_producer) as u64
+        );
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.inflight(), 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! The message broker — Merlin's RabbitMQ substitute.
+//!
+//! The paper runs a standalone RabbitMQ server on a node adjacent to the
+//! compute cluster; every Celery worker on every batch allocation talks to
+//! it. We implement the slice of AMQP semantics Celery+Merlin rely on:
+//!
+//! * named queues, declared on demand;
+//! * **per-message priorities** with FIFO order inside a priority class
+//!   (Merlin's real-work-over-task-creation policy needs this);
+//! * delivery tags with ack / nack(requeue) and unacked-on-disconnect
+//!   redelivery (workflow resilience, §3.4);
+//! * consumer **prefetch** limits;
+//! * a configurable **message-size cap** (RabbitMQ's 2 GiB frame limit is
+//!   what stopped the paper's Fig 3 scan at 40 M samples — we model it so
+//!   the flat-enqueue baseline hits the same wall);
+//! * queue depth / throughput statistics.
+//!
+//! [`core::Broker`] is the in-process engine; [`net`] wraps it in a TCP
+//! server speaking a length-prefixed JSON frame protocol, and [`client`]
+//! is the matching client so that multi-process deployments coordinate
+//! exactly like cross-node Celery workers.
+
+pub mod client;
+#[allow(clippy::module_inception)]
+pub mod core;
+pub mod net;
+pub mod wire;
+
+pub use self::core::{Broker, BrokerConfig, BrokerError, Delivery, QueueStats};

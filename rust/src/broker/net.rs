@@ -1,0 +1,290 @@
+//! TCP front-end for the broker: one OS thread per connection (workers are
+//! long-lived, counts are modest — the paper's deployments run tens of
+//! thousands of workers against one Rabbit node; our per-connection cost is
+//! a blocked thread and two buffers).
+//!
+//! Each connection is a broker *consumer*: if it drops with unacked
+//! deliveries, those messages are requeued (AMQP redelivery semantics),
+//! which is the resilience mechanism the paper's studies leaned on when
+//! nodes died mid-task.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::core::{Broker, BrokerError};
+use super::wire::{self, WireError};
+use crate::task::ser::{task_from_json, task_to_json};
+use crate::util::json::Json;
+
+/// Handle to a running broker server. Dropping does not stop it; call
+/// [`BrokerServer::shutdown`].
+pub struct BrokerServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl BrokerServer {
+    /// Bind and serve `broker` on `addr` (use port 0 for ephemeral).
+    pub fn serve(broker: Broker, addr: &str) -> std::io::Result<BrokerServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        listener.set_nonblocking(true)?;
+        let accept_thread = std::thread::Builder::new()
+            .name("broker-accept".into())
+            .spawn(move || {
+                // Connection threads are detached: they exit when their
+                // client closes. Joining them here would deadlock shutdown
+                // against still-connected clients.
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let broker = broker.clone();
+                            stream.set_nodelay(true).ok();
+                            std::thread::Builder::new()
+                                .name("broker-conn".into())
+                                .spawn(move || handle_conn(broker, stream))
+                                .expect("spawn conn thread");
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(BrokerServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// Stop accepting. Existing connections end when clients disconnect.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the listener out of accept by connecting once.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            t.join().ok();
+        }
+    }
+}
+
+fn handle_conn(broker: Broker, stream: TcpStream) {
+    let consumer = broker.register_consumer();
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    loop {
+        let req = match wire::read_frame(&mut reader) {
+            Ok(v) => v,
+            Err(WireError::Closed) => break,
+            Err(_) => break,
+        };
+        let resp = dispatch(&broker, consumer, &req);
+        if wire::write_frame(&mut writer, &resp).is_err() {
+            break;
+        }
+    }
+    // Connection gone: requeue whatever this consumer held.
+    broker.recover_consumer(consumer);
+}
+
+fn broker_err(e: BrokerError) -> Json {
+    wire::err(e.to_string())
+}
+
+fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
+    match req.get("op").as_str() {
+        Some("publish") => match task_from_json(req.get("task")) {
+            Ok(task) => match broker.publish(task) {
+                Ok(()) => wire::ok(vec![]),
+                Err(e) => broker_err(e),
+            },
+            Err(e) => wire::err(format!("bad task: {e}")),
+        },
+        Some("publish_batch") => {
+            let Some(items) = req.get("tasks").as_arr() else {
+                return wire::err("missing tasks");
+            };
+            let mut tasks = Vec::with_capacity(items.len());
+            for item in items {
+                match task_from_json(item) {
+                    Ok(t) => tasks.push(t),
+                    Err(e) => return wire::err(format!("bad task: {e}")),
+                }
+            }
+            let n = tasks.len();
+            match broker.publish_batch(tasks) {
+                Ok(()) => wire::ok(vec![("published", Json::num(n as f64))]),
+                Err(e) => broker_err(e),
+            }
+        }
+        Some("fetch") => {
+            let queues: Vec<String> = req
+                .get("queues")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let prefetch = req.get("prefetch").as_u64().unwrap_or(0) as usize;
+            let timeout = Duration::from_millis(req.get("timeout_ms").as_u64().unwrap_or(0));
+            let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+            match broker.fetch(consumer, &refs, prefetch, timeout) {
+                Some(d) => wire::ok(vec![
+                    ("tag", Json::num(d.tag as f64)),
+                    ("task", task_to_json(&d.task)),
+                ]),
+                None => wire::ok(vec![("tag", Json::Null)]),
+            }
+        }
+        Some("ack") => match req.get("tag").as_u64() {
+            Some(tag) => match broker.ack(tag) {
+                Ok(()) => wire::ok(vec![]),
+                Err(e) => broker_err(e),
+            },
+            None => wire::err("missing tag"),
+        },
+        Some("nack") => {
+            let Some(tag) = req.get("tag").as_u64() else {
+                return wire::err("missing tag");
+            };
+            let requeue = req.get("requeue").as_bool().unwrap_or(true);
+            match broker.nack(tag, requeue) {
+                Ok(()) => wire::ok(vec![]),
+                Err(e) => broker_err(e),
+            }
+        }
+        Some("stats") => {
+            let queue = req.get("queue").as_str().unwrap_or("");
+            let st = broker.stats(queue);
+            wire::ok(vec![
+                ("ready", Json::num(st.ready as f64)),
+                ("unacked", Json::num(st.unacked as f64)),
+                ("published", Json::num(st.published as f64)),
+                ("delivered", Json::num(st.delivered as f64)),
+                ("acked", Json::num(st.acked as f64)),
+                ("requeued", Json::num(st.requeued as f64)),
+                ("dead_lettered", Json::num(st.dead_lettered as f64)),
+                ("bytes_published", Json::num(st.bytes_published as f64)),
+            ])
+        }
+        Some("purge") => {
+            let queue = req.get("queue").as_str().unwrap_or("");
+            wire::ok(vec![(
+                "purged",
+                Json::num(broker.purge(queue) as f64),
+            )])
+        }
+        Some("depth") => wire::ok(vec![("depth", Json::num(broker.depth() as f64))]),
+        Some("queues") => wire::ok(vec![(
+            "queues",
+            Json::arr(broker.queue_names().into_iter().map(Json::Str).collect()),
+        )]),
+        other => wire::err(format!("unknown op {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::client::BrokerClient;
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
+
+    fn ping(token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            "q",
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    #[test]
+    fn tcp_publish_fetch_ack_roundtrip() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("hello")).unwrap();
+        let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
+        match &d.task.payload {
+            Payload::Control(ControlMsg::Ping { token }) => assert_eq!(token, "hello"),
+            other => panic!("unexpected payload {other:?}"),
+        }
+        client.ack(d.tag).unwrap();
+        assert_eq!(client.stats("q").unwrap().acked, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn disconnect_requeues_unacked() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        {
+            let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+            client.publish(&ping("orphan")).unwrap();
+            let _d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
+            // Drop without ack.
+        }
+        // Give the server a beat to observe the close.
+        for _ in 0..100 {
+            if broker.depth() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(broker.depth(), 1, "unacked delivery was requeued");
+        server.shutdown();
+    }
+
+    #[test]
+    fn batch_publish_over_tcp() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        let batch: Vec<TaskEnvelope> = (0..50).map(|i| ping(&format!("t{i}"))).collect();
+        client.publish_batch(&batch).unwrap();
+        assert_eq!(client.depth().unwrap(), 50);
+        assert_eq!(client.purge("q").unwrap(), 50);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_share_queue() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut producer = BrokerClient::connect(&addr).unwrap();
+        for i in 0..20 {
+            producer.publish(&ping(&format!("{i}"))).unwrap();
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = BrokerClient::connect(&addr).unwrap();
+                let mut n = 0;
+                while let Some(d) = c.fetch(&["q"], 0, 200).unwrap() {
+                    c.ack(d.tag).unwrap();
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 20);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_op_is_error_response() {
+        let broker = Broker::default();
+        let resp = dispatch(&broker, 1, &Json::obj(vec![("op", Json::str("bogus"))]));
+        assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+}

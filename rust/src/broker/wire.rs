@@ -1,0 +1,144 @@
+//! Length-prefixed JSON frame protocol shared by the broker and backend
+//! TCP servers. A frame is a 4-byte big-endian length followed by that many
+//! bytes of UTF-8 JSON.
+
+use std::io::{Read, Write};
+
+use crate::util::json::{to_string, Json};
+
+/// Hard cap on a single frame (64 MiB) — protects servers from corrupt
+/// length prefixes. Application-level message-size policy (the 2 GiB
+/// RabbitMQ model) lives in `BrokerConfig`, not here.
+pub const MAX_FRAME: usize = 64 << 20;
+
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    FrameTooLarge(usize),
+    BadJson(String),
+    Closed,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::FrameTooLarge(n) => write!(f, "frame of {n} bytes exceeds cap"),
+            WireError::BadJson(e) => write!(f, "bad json frame: {e}"),
+            WireError::Closed => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Write one JSON frame.
+pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<(), WireError> {
+    let body = to_string(v);
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(bytes.len()));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one JSON frame. `Closed` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Err(WireError::Closed),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let text = std::str::from_utf8(&body).map_err(|e| WireError::BadJson(e.to_string()))?;
+    Json::parse(text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+/// Standard `{"ok": true, ...}` response builder.
+pub fn ok(mut extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.append(&mut extra);
+    Json::obj(pairs)
+}
+
+/// Standard error response.
+pub fn err(msg: impl Into<String>) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        let v1 = Json::obj(vec![("op", Json::str("ping"))]);
+        let v2 = Json::arr(vec![Json::num(1.0), Json::str("two")]);
+        write_frame(&mut buf, &v1).unwrap();
+        write_frame(&mut buf, &v2).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), v1);
+        assert_eq!(read_frame(&mut cur).unwrap(), v2);
+        assert!(matches!(read_frame(&mut cur), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"xxxx");
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(WireError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_be_bytes());
+        buf.extend_from_slice(b"abc"); // 3 of 10 bytes
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn bad_json_reported() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&3u32.to_be_bytes());
+        buf.extend_from_slice(b"{{{");
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(WireError::BadJson(_))));
+    }
+
+    #[test]
+    fn ok_err_builders() {
+        let o = ok(vec![("tag", Json::num(5.0))]);
+        assert_eq!(o.get("ok").as_bool(), Some(true));
+        assert_eq!(o.get("tag").as_u64(), Some(5));
+        let e = err("boom");
+        assert_eq!(e.get("ok").as_bool(), Some(false));
+        assert_eq!(e.get("error").as_str(), Some("boom"));
+    }
+}

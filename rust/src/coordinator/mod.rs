@@ -1,0 +1,20 @@
+//! The coordinator: `merlin run` and friends.
+//!
+//! * [`run`] — the producer: expand a study spec (parameters × steps) and
+//!   enqueue the O(1) hierarchical root task per step instance;
+//! * [`orchestrate`] — DAG sequencing: release step instances as their
+//!   dependencies complete (completion observed through the results
+//!   backend, the way Celery chords resolve);
+//! * [`resubmit`] — the §3.1 recovery pass: crawl state/data, requeue
+//!   exactly the missing samples;
+//! * [`status`] — queue depths + per-study completion for the CLI.
+
+pub mod orchestrate;
+pub mod resubmit;
+pub mod run;
+pub mod status;
+
+pub use orchestrate::{orchestrate, StudyReport};
+pub use resubmit::resubmit_missing;
+pub use run::{enqueue_step_instance, step_work, RunOptions};
+pub use status::status_report;

@@ -1,0 +1,207 @@
+//! DAG-level sequencing: release step instances when their dependencies
+//! complete, observing completion through the results backend (Merlin
+//! keeps no live conductor process on a login node — unlike Maestro —
+//! so sequencing state must live in the backend; our orchestrator is a
+//! thin poller over it that any process can run or resume).
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use crate::backend::state::StateStore;
+use crate::broker::core::Broker;
+use crate::dag::expand::{expand_study, ExpandedStudy};
+use crate::spec::study::{SpecError, StudySpec};
+
+use super::run::{enqueue_step_instance, RunOptions};
+
+/// Outcome of a full study orchestration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StudyReport {
+    pub study_id: String,
+    pub instances_run: u64,
+    pub samples_expected: u64,
+    pub samples_done: u64,
+    pub samples_failed: u64,
+    pub timed_out: bool,
+}
+
+impl StudyReport {
+    pub fn completion_rate(&self) -> f64 {
+        if self.samples_expected == 0 {
+            return 1.0;
+        }
+        self.samples_done as f64 / self.samples_expected as f64
+    }
+}
+
+/// Run a whole study: expand, release ready instances, wait for their
+/// samples to complete, release dependents, repeat. Workers must be
+/// consuming the study's queues concurrently (this function only
+/// produces). `timeout` bounds the wait; on expiry the report flags it.
+pub fn orchestrate(
+    broker: &Broker,
+    state: &StateStore,
+    spec: &StudySpec,
+    study_id: &str,
+    opts: &RunOptions,
+    timeout: Duration,
+) -> Result<StudyReport, SpecError> {
+    let expanded: ExpandedStudy = expand_study(spec)?;
+    let deadline = Instant::now() + timeout;
+    let mut report = StudyReport {
+        study_id: study_id.to_string(),
+        ..Default::default()
+    };
+    let mut done: BTreeSet<String> = BTreeSet::new();
+    // instance id -> (study_key, expected samples) for released instances.
+    let mut inflight: Vec<(String, String, u64)> = Vec::new();
+
+    loop {
+        // Release everything whose dependencies are complete.
+        for id in expanded.dag.ready(&done) {
+            if inflight.iter().any(|(i, _, _)| *i == id) {
+                continue;
+            }
+            let inst = expanded
+                .instances
+                .iter()
+                .find(|i| i.id == id)
+                .expect("instance for dag node");
+            let (key, n) = enqueue_step_instance(broker, spec, inst, study_id, opts)
+                .map_err(|e| SpecError(format!("enqueue {id}: {e}")))?;
+            report.instances_run += 1;
+            report.samples_expected += n;
+            inflight.push((id, key, n));
+        }
+        // Check in-flight instances for completion.
+        let mut still = Vec::new();
+        for (id, key, n) in inflight {
+            let ok = state.done_count(&key) as u64;
+            let failed = state.failed_count(&key) as u64;
+            if ok + failed >= n {
+                report.samples_done += ok;
+                report.samples_failed += failed;
+                done.insert(id);
+            } else {
+                still.push((id, key, n));
+            }
+        }
+        inflight = still;
+        if inflight.is_empty() && done.len() == expanded.dag.len() {
+            return Ok(report);
+        }
+        if Instant::now() >= deadline {
+            // Account whatever progress the unfinished instances made.
+            for (_, key, _) in &inflight {
+                report.samples_done += state.done_count(key) as u64;
+                report.samples_failed += state.failed_count(key) as u64;
+            }
+            report.timed_out = true;
+            return Ok(report);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::store::Store;
+    use crate::util::clock::RealClock;
+    use crate::worker::sim::NullSimRunner;
+    use crate::worker::{run_pool, WorkerConfig};
+    use std::sync::Arc;
+
+    fn spec() -> StudySpec {
+        StudySpec::parse(
+            "\
+description:
+  name: chain
+global.parameters:
+  REGION:
+    values: [a, b]
+study:
+  - name: sim
+    run:
+      cmd: 'null: 1 # region $(REGION) sample $(MERLIN_SAMPLE_ID)'
+  - name: post
+    run:
+      cmd: 'null: 1 # region $(REGION)'
+      depends: [sim]
+  - name: collect
+    run:
+      cmd: 'null: 1'
+      depends: [post_*]
+merlin:
+  samples:
+    count: 20
+    seed: 1
+",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn full_study_orchestrates_through_workers() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        let spec = spec();
+        let opts = RunOptions {
+            max_branch: 4,
+            samples_per_task: 3,
+            queue_prefix: "m".into(),
+        };
+        // Workers consume all three step queues.
+        let b2 = broker.clone();
+        let st2 = state.clone();
+        let worker_thread = std::thread::spawn(move || {
+            let clock: Arc<dyn crate::util::clock::Clock> = Arc::new(RealClock::new());
+            run_pool(&b2, Some(&st2), None, Arc::new(NullSimRunner), 4, |i| {
+                let mut cfg = WorkerConfig::simple("unused", clock.clone());
+                cfg.queues = vec!["m.sim".into(), "m.post".into(), "m.collect".into()];
+                cfg.idle_exit_ms = 2_000;
+                cfg.seed = i as u64;
+                cfg
+            })
+        });
+        let report = orchestrate(
+            &broker,
+            &state,
+            &spec,
+            "st1",
+            &opts,
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        let pool = worker_thread.join().unwrap();
+        assert!(!report.timed_out);
+        // 2 regions x (20 sim samples + 1 post) + 1 collect = 43 samples.
+        assert_eq!(report.samples_expected, 43);
+        assert_eq!(report.samples_done, 43);
+        assert_eq!(report.samples_failed, 0);
+        assert_eq!(report.instances_run, 5);
+        assert_eq!(pool.samples_ok, 43);
+        assert!((report.completion_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeout_reports_partial_progress() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        let spec = spec();
+        // No workers: nothing completes; orchestrate must time out quickly.
+        let report = orchestrate(
+            &broker,
+            &state,
+            &spec,
+            "st2",
+            &RunOptions::default(),
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        assert!(report.timed_out);
+        assert_eq!(report.samples_done, 0);
+        // Only the two root (sim) instances were released.
+        assert_eq!(report.instances_run, 2);
+    }
+}

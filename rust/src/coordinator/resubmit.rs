@@ -1,0 +1,179 @@
+//! Resubmission (§3.1's recovery passes and §3.4's "pick up naturally
+//! where the study left off"): determine which samples lack valid results
+//! — from the results backend, the on-disk data crawl, or both — and
+//! requeue exactly those, as real step tasks grouped into contiguous
+//! ranges.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::backend::state::StateStore;
+use crate::broker::core::{Broker, BrokerError};
+use crate::data::bundle::BundleLayout;
+use crate::data::crawl::crawl;
+use crate::task::{Payload, StepTask, StepTemplate, TaskEnvelope};
+
+/// Group sorted sample ids into maximal contiguous `[lo, hi)` ranges no
+/// wider than `max_per_task`.
+pub fn ranges_of(samples: &[u64], max_per_task: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut iter = samples.iter().copied();
+    let Some(first) = iter.next() else {
+        return out;
+    };
+    let (mut lo, mut hi) = (first, first + 1);
+    for s in iter {
+        if s == hi && hi - lo < max_per_task {
+            hi += 1;
+        } else {
+            out.push((lo, hi));
+            lo = s;
+            hi = s + 1;
+        }
+    }
+    out.push((lo, hi));
+    out
+}
+
+/// Requeue every sample of `[0, n)` with no success record in the backend
+/// (optionally cross-checked against the data tree: a sample only counts
+/// as done if its data actually exists and decodes). Returns the number of
+/// samples requeued.
+pub fn resubmit_missing(
+    broker: &Broker,
+    state: &StateStore,
+    template: &StepTemplate,
+    queue: &str,
+    n_samples: u64,
+    data_root: Option<(&Path, &BundleLayout)>,
+) -> Result<u64, BrokerError> {
+    let mut missing: BTreeSet<u64> = state
+        .missing_samples(&template.study_id, n_samples)
+        .into_iter()
+        .collect();
+    if let Some((root, layout)) = data_root {
+        // Trust the disk over the backend: samples the crawl can't find
+        // are missing even if the backend thinks they're done (lost or
+        // corrupt files — the paper's I/O failures).
+        let report = crawl(root, layout).unwrap_or_default();
+        let on_disk: BTreeSet<u64> = report.valid.into_iter().collect();
+        for s in 0..n_samples {
+            if !on_disk.contains(&s) {
+                missing.insert(s);
+            }
+        }
+    }
+    let missing: Vec<u64> = missing.into_iter().collect();
+    let mut tasks = Vec::new();
+    for (lo, hi) in ranges_of(&missing, template.samples_per_task.max(1)) {
+        tasks.push(
+            TaskEnvelope::new(
+                queue,
+                Payload::Step(StepTask {
+                    template: template.clone(),
+                    lo,
+                    hi,
+                }),
+            )
+            .with_content_id(),
+        );
+    }
+    let count = missing.len() as u64;
+    broker.publish_batch(tasks)?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::store::Store;
+    use crate::task::WorkSpec;
+
+    fn template() -> StepTemplate {
+        StepTemplate {
+            study_id: "rs".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 10,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn ranges_group_contiguous() {
+        assert_eq!(ranges_of(&[], 10), Vec::<(u64, u64)>::new());
+        assert_eq!(ranges_of(&[5], 10), vec![(5, 6)]);
+        assert_eq!(ranges_of(&[1, 2, 3, 7, 8, 20], 10), vec![(1, 4), (7, 9), (20, 21)]);
+    }
+
+    #[test]
+    fn ranges_respect_max_width() {
+        let samples: Vec<u64> = (0..25).collect();
+        assert_eq!(ranges_of(&samples, 10), vec![(0, 10), (10, 20), (20, 25)]);
+    }
+
+    #[test]
+    fn resubmits_only_missing() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        for s in [0u64, 1, 2, 5, 6, 9] {
+            state.mark_sample_done("rs", s);
+        }
+        let n = resubmit_missing(&broker, &state, &template(), "q", 10, None).unwrap();
+        assert_eq!(n, 4); // 3, 4, 7, 8
+        // Two range tasks: [3,5) and [7,9).
+        assert_eq!(broker.stats("q").ready, 2);
+        let c = broker.register_consumer();
+        let mut covered = Vec::new();
+        while let Some(d) = broker.try_fetch(c, &["q"], 0) {
+            if let Payload::Step(s) = &d.task.payload {
+                covered.extend(s.lo..s.hi);
+            }
+            broker.ack(d.tag).unwrap();
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, vec![3, 4, 7, 8]);
+    }
+
+    #[test]
+    fn disk_crawl_overrides_backend() {
+        // Backend says everything done, but the disk only has samples 0-1:
+        // the crawl forces 2-3 back onto the queue.
+        let dir = std::env::temp_dir().join(format!("merlin-resub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let layout = BundleLayout {
+            sims_per_bundle: 2,
+            bundles_per_dir: 2,
+        };
+        let mut n0 = crate::data::node::Node::new();
+        n0.set_f64("y", vec![0.0]);
+        crate::data::bundle::write_bundle(
+            &layout,
+            &dir,
+            0,
+            vec![(0, n0.clone()), (1, n0.clone())],
+        )
+        .unwrap();
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        for s in 0..4 {
+            state.mark_sample_done("rs", s);
+        }
+        let n =
+            resubmit_missing(&broker, &state, &template(), "q", 4, Some((&dir, &layout))).unwrap();
+        assert_eq!(n, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nothing_missing_publishes_nothing() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        for s in 0..5 {
+            state.mark_sample_done("rs", s);
+        }
+        let n = resubmit_missing(&broker, &state, &template(), "q", 5, None).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(broker.depth(), 0);
+    }
+}

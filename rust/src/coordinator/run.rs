@@ -1,0 +1,221 @@
+//! The producer side of `merlin run`.
+
+use crate::broker::core::{Broker, BrokerError};
+use crate::dag::expand::StepInstance;
+use crate::hierarchy;
+use crate::spec::study::StudySpec;
+use crate::task::{StepTemplate, WorkSpec};
+
+/// Producer options (CLI flags of `merlin run`).
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Branching factor of the task-generation hierarchy.
+    pub max_branch: u64,
+    /// Samples bundled into one leaf task.
+    pub samples_per_task: u64,
+    /// Queue naming: one queue per step (`<study>.<step>`) so worker
+    /// groups can subscribe selectively (Merlin's `merlin.resources`).
+    pub queue_prefix: String,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            max_branch: 100,
+            samples_per_task: 1,
+            queue_prefix: "merlin".into(),
+        }
+    }
+}
+
+impl RunOptions {
+    pub fn queue_for(&self, step_name: &str) -> String {
+        format!("{}.{step_name}", self.queue_prefix)
+    }
+}
+
+/// Interpret a step command as a [`WorkSpec`].
+///
+/// Merlin steps are shell commands; we add two pseudo-schemes so studies
+/// can target built-in payloads without a subprocess:
+///
+/// * `builtin: <model>` — PJRT simulator from the model registry;
+/// * `null: <millis>`   — the paper's `sleep N` null simulation.
+///
+/// Anything else runs under the step's shell.
+pub fn step_work(cmd: &str, shell: &str) -> WorkSpec {
+    let trimmed = cmd.trim();
+    if let Some(model) = trimmed.strip_prefix("builtin:") {
+        return WorkSpec::Builtin {
+            model: model.trim().to_string(),
+        };
+    }
+    if let Some(ms) = trimmed.strip_prefix("null:") {
+        // First token only: trailing text (e.g. a `# sample $(...)` comment
+        // that makes each sample's script unique, as in the paper's null
+        // study) is ignored.
+        let millis: u64 = ms
+            .split_whitespace()
+            .next()
+            .and_then(|tok| tok.parse().ok())
+            .unwrap_or(1000);
+        return WorkSpec::Null {
+            duration_us: millis * 1000,
+        };
+    }
+    WorkSpec::Shell {
+        cmd: cmd.to_string(),
+        shell: shell.to_string(),
+    }
+}
+
+/// Does this step expand over the sample layer? (Merlin: steps whose
+/// command references a sample token; others run once per instance.)
+pub fn uses_samples(spec: &StudySpec, cmd: &str) -> bool {
+    if cmd.contains("$(MERLIN_SAMPLE_ID)") {
+        return true;
+    }
+    if let Some(samples) = &spec.samples {
+        return samples
+            .column_labels
+            .iter()
+            .any(|c| cmd.contains(&format!("$({c})")));
+    }
+    false
+}
+
+/// Enqueue one step instance: a single O(1) root message regardless of
+/// sample count. Returns (study_key, n_samples) — the orchestrator tracks
+/// completion against `study_key`.
+pub fn enqueue_step_instance(
+    broker: &Broker,
+    spec: &StudySpec,
+    instance: &StepInstance,
+    study_id: &str,
+    opts: &RunOptions,
+) -> Result<(String, u64), BrokerError> {
+    let study_key = format!("{study_id}/{}", instance.id);
+    let n_samples = if uses_samples(spec, &instance.cmd) {
+        spec.samples.as_ref().map(|s| s.count).unwrap_or(1)
+    } else {
+        1
+    };
+    let template = StepTemplate {
+        study_id: study_key.clone(),
+        step_name: instance.step_name.clone(),
+        work: step_work(&instance.cmd, &instance.shell),
+        samples_per_task: opts.samples_per_task.min(n_samples.max(1)),
+        seed: spec.samples.as_ref().map(|s| s.seed).unwrap_or(0),
+    };
+    let queue = opts.queue_for(&instance.step_name);
+    let root = hierarchy::root_task(template, n_samples, opts.max_branch, &queue);
+    broker.publish(root)?;
+    Ok((study_key, n_samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::expand::expand_study;
+
+    fn spec() -> StudySpec {
+        StudySpec::parse(
+            "\
+description:
+  name: s
+study:
+  - name: sim
+    run:
+      cmd: 'null: 5 # sample $(MERLIN_SAMPLE_ID)'
+  - name: post
+    run:
+      cmd: echo done
+      depends: [sim_*]
+merlin:
+  samples:
+    count: 50
+    seed: 3
+",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn step_work_schemes() {
+        assert_eq!(
+            step_work("builtin: jag", "/bin/bash"),
+            WorkSpec::Builtin {
+                model: "jag".into()
+            }
+        );
+        assert_eq!(
+            step_work("null: 250", "/bin/bash"),
+            WorkSpec::Null {
+                duration_us: 250_000
+            }
+        );
+        // Trailing comments (per-sample uniqueness, as in the paper's null
+        // study) must not break duration parsing.
+        assert_eq!(
+            step_work("null: 2  # sample $(MERLIN_SAMPLE_ID)", "/bin/bash"),
+            WorkSpec::Null { duration_us: 2_000 }
+        );
+        assert!(matches!(
+            step_work("echo hi", "/bin/sh"),
+            WorkSpec::Shell { .. }
+        ));
+    }
+
+    #[test]
+    fn sample_detection() {
+        let s = spec();
+        assert!(uses_samples(&s, "run $(MERLIN_SAMPLE_ID)"));
+        assert!(!uses_samples(&s, "echo collect"));
+    }
+
+    #[test]
+    fn sample_column_tokens_count_as_samples() {
+        let s = StudySpec::parse(
+            "\
+description:
+  name: s
+study:
+  - name: a
+    run:
+      cmd: sim --x $(X0)
+merlin:
+  samples:
+    count: 10
+    column_labels: [X0, X1]
+",
+        )
+        .unwrap();
+        assert!(uses_samples(&s, &s.steps[0].cmd));
+    }
+
+    #[test]
+    fn enqueue_single_root_message() {
+        let s = spec();
+        let ex = expand_study(&s).unwrap();
+        let broker = Broker::default();
+        let opts = RunOptions::default();
+        let sim = ex.instances.iter().find(|i| i.step_name == "sim").unwrap();
+        let (key, n) = enqueue_step_instance(&broker, &s, sim, "study-1", &opts).unwrap();
+        assert_eq!(n, 50);
+        assert_eq!(key, "study-1/sim");
+        // ONE message on the broker regardless of the 50 samples.
+        assert_eq!(broker.depth(), 1);
+        assert_eq!(broker.stats("merlin.sim").ready, 1);
+    }
+
+    #[test]
+    fn non_sample_step_is_one_task() {
+        let s = spec();
+        let ex = expand_study(&s).unwrap();
+        let broker = Broker::default();
+        let post = ex.instances.iter().find(|i| i.step_name == "post").unwrap();
+        let (_, n) =
+            enqueue_step_instance(&broker, &s, post, "study-1", &RunOptions::default()).unwrap();
+        assert_eq!(n, 1);
+    }
+}

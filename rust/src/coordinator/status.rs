@@ -1,0 +1,57 @@
+//! `merlin status`: queue depths and per-study completion.
+
+use crate::backend::state::StateStore;
+use crate::broker::core::Broker;
+
+/// Text status report over all queues and the given study keys.
+pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)]) -> String {
+    let mut out = String::new();
+    out.push_str("queues:\n");
+    for q in broker.queue_names() {
+        let st = broker.stats(&q);
+        out.push_str(&format!(
+            "  {q}: ready={} unacked={} published={} acked={} requeued={} dead={}\n",
+            st.ready, st.unacked, st.published, st.acked, st.requeued, st.dead_lettered
+        ));
+    }
+    if !studies.is_empty() {
+        out.push_str("studies:\n");
+        for (study, n) in studies {
+            let done = state.done_count(study);
+            let failed = state.failed_count(study);
+            let pct = if *n > 0 {
+                100.0 * done as f64 / *n as f64
+            } else {
+                100.0
+            };
+            out.push_str(&format!(
+                "  {study}: {done}/{n} done ({pct:.1}%), {failed} failed\n"
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::store::Store;
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
+
+    #[test]
+    fn report_shows_queues_and_studies() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        broker
+            .publish(TaskEnvelope::new(
+                "m.sim",
+                Payload::Control(ControlMsg::Ping { token: "x".into() }),
+            ))
+            .unwrap();
+        state.mark_sample_done("s1", 0);
+        state.mark_sample_failed("s1", 1);
+        let r = status_report(&broker, &state, &[("s1", 4)]);
+        assert!(r.contains("m.sim: ready=1"));
+        assert!(r.contains("s1: 1/4 done (25.0%), 1 failed"));
+    }
+}

@@ -1,0 +1,319 @@
+//! Parameter expansion: StudySpec → concrete step instances + DAG.
+//!
+//! Follows Maestro's model: a step is expanded once per combination of the
+//! parameters **it uses** (tokens in its command, plus parameters inherited
+//! from same-combination dependencies). Parameters it does not reference do
+//! not multiply it — a `collect` step downstream of `sim_*` runs once.
+//! Sample counts are carried as metadata, not expanded (see module docs).
+
+use std::collections::BTreeMap;
+
+use super::graph::{Dag, DagError};
+use crate::spec::study::{SpecError, StudySpec};
+use crate::spec::tokens;
+
+/// One parameterized instance of a step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepInstance {
+    /// `step` for unparameterized steps; `step/P1.v/P2.v` otherwise.
+    pub id: String,
+    pub step_name: String,
+    /// The parameter bindings of this instance (subset of global params).
+    pub bindings: BTreeMap<String, String>,
+    /// Command with parameter + env tokens substituted (sample tokens like
+    /// `$(MERLIN_SAMPLE_ID)` remain for the worker to fill per sample).
+    pub cmd: String,
+    pub shell: String,
+    pub procs: u64,
+}
+
+/// Expansion result: instances in a deterministic order plus the DAG over
+/// instance ids.
+#[derive(Debug, Clone)]
+pub struct ExpandedStudy {
+    pub instances: Vec<StepInstance>,
+    pub dag: Dag,
+}
+
+/// Expand all steps of `spec` across the parameters each uses.
+pub fn expand_study(spec: &StudySpec) -> Result<ExpandedStudy, SpecError> {
+    // 1. Which parameters does each step use? Direct (token in cmd) plus
+    //    inherited through bare (same-combination) dependencies.
+    let param_names: Vec<&String> = spec.parameters.keys().collect();
+    let mut used: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    for step in &spec.steps {
+        let refs = tokens::references(&step.cmd);
+        let direct: Vec<String> = param_names
+            .iter()
+            .filter(|p| refs.contains(**p))
+            .map(|p| (*p).clone())
+            .collect();
+        used.insert(step.name.as_str(), direct);
+    }
+    // Fixed-point inheritance over bare dependencies (spec.validate()
+    // guarantees acyclicity at the step level is NOT checked there, so we
+    // bound iterations by the step count and let Dag cycle-check later).
+    for _ in 0..spec.steps.len() {
+        let mut changed = false;
+        for step in &spec.steps {
+            let mut inherited: Vec<String> = Vec::new();
+            for dep in &step.depends {
+                if dep.ends_with("_*") {
+                    continue; // fan-in collapses parameters
+                }
+                for p in used.get(dep.as_str()).cloned().unwrap_or_default() {
+                    inherited.push(p);
+                }
+            }
+            let mine = used.get_mut(step.name.as_str()).unwrap();
+            for p in inherited {
+                if !mine.contains(&p) {
+                    mine.push(p);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for v in used.values_mut() {
+        v.sort();
+    }
+
+    // 2. Materialize instances.
+    let mut instances = Vec::new();
+    let mut dag = Dag::new();
+    let mut instance_ids: BTreeMap<&str, Vec<String>> = BTreeMap::new();
+    for step in &spec.steps {
+        let params = &used[step.name.as_str()];
+        let combos = combinations(&spec.parameters, params);
+        let mut ids = Vec::with_capacity(combos.len());
+        for bindings in combos {
+            let id = instance_id(&step.name, &bindings);
+            // Substitute env + parameter tokens now; sample tokens later.
+            let mut vars: BTreeMap<String, String> = spec.env.clone();
+            vars.extend(bindings.clone());
+            let cmd = tokens::substitute(&step.cmd, &vars);
+            dag.add_node(&id).map_err(|e| SpecError(e.to_string()))?;
+            ids.push(id.clone());
+            instances.push(StepInstance {
+                id,
+                step_name: step.name.clone(),
+                bindings,
+                cmd,
+                shell: step.shell.clone(),
+                procs: step.procs,
+            });
+        }
+        instance_ids.insert(step.name.as_str(), ids);
+    }
+
+    // 3. Wire edges.
+    for step in &spec.steps {
+        let my_ids = instance_ids[step.name.as_str()].clone();
+        for dep in &step.depends {
+            if let Some(base) = dep.strip_suffix("_*") {
+                // Fan-in: every upstream instance -> every instance of me.
+                for from in &instance_ids[base] {
+                    for to in &my_ids {
+                        dag.add_edge(from, to).map_err(to_spec_err)?;
+                    }
+                }
+            } else {
+                // Same-combination: match on the dep's parameter subset.
+                let dep_params = used[dep.as_str()].clone();
+                for to_inst in instances
+                    .iter()
+                    .filter(|i| i.step_name == step.name)
+                    .cloned()
+                    .collect::<Vec<_>>()
+                {
+                    let dep_bindings: BTreeMap<String, String> = to_inst
+                        .bindings
+                        .iter()
+                        .filter(|(k, _)| dep_params.contains(*k))
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect();
+                    let from = instance_id(dep, &dep_bindings);
+                    dag.add_edge(&from, &to_inst.id).map_err(to_spec_err)?;
+                }
+            }
+        }
+    }
+
+    // 4. Cycle check (step-level cycles materialize as instance cycles).
+    dag.topo_order().map_err(to_spec_err)?;
+    Ok(ExpandedStudy { instances, dag })
+}
+
+fn to_spec_err(e: DagError) -> SpecError {
+    SpecError(e.to_string())
+}
+
+fn instance_id(step: &str, bindings: &BTreeMap<String, String>) -> String {
+    if bindings.is_empty() {
+        step.to_string()
+    } else {
+        let parts: Vec<String> = bindings.iter().map(|(k, v)| format!("{k}.{v}")).collect();
+        format!("{step}/{}", parts.join("/"))
+    }
+}
+
+/// Cross product of the named parameters' value lists, in deterministic
+/// (sorted-name, value-list) order.
+fn combinations(
+    all: &BTreeMap<String, Vec<String>>,
+    names: &[String],
+) -> Vec<BTreeMap<String, String>> {
+    let mut combos: Vec<BTreeMap<String, String>> = vec![BTreeMap::new()];
+    for name in names {
+        let values = &all[name];
+        let mut next = Vec::with_capacity(combos.len() * values.len());
+        for c in &combos {
+            for v in values {
+                let mut c = c.clone();
+                c.insert(name.clone(), v.clone());
+                next.push(c);
+            }
+        }
+        combos = next;
+    }
+    combos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(text: &str) -> StudySpec {
+        StudySpec::parse(text).unwrap()
+    }
+
+    const PARAM_SPEC: &str = "\
+description:
+  name: p
+env:
+  variables:
+    OUT: /tmp/out
+global.parameters:
+  A:
+    values: [1, 2]
+  B:
+    values: [x, y, z]
+study:
+  - name: sim
+    run:
+      cmd: run --a $(A) --b $(B) --out $(OUT) --s $(MERLIN_SAMPLE_ID)
+  - name: post
+    run:
+      cmd: post --a $(A)
+      depends: [sim]
+  - name: collect
+    run:
+      cmd: gather $(OUT)
+      depends: [post_*]
+";
+
+    #[test]
+    fn instance_counts_follow_used_parameters() {
+        let ex = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let count = |name: &str| {
+            ex.instances
+                .iter()
+                .filter(|i| i.step_name == name)
+                .count()
+        };
+        assert_eq!(count("sim"), 6); // A x B
+        assert_eq!(count("post"), 6); // inherits A from cmd, A+B from dep? post uses A directly, inherits A,B from sim
+        assert_eq!(count("collect"), 1); // fan-in collapses
+        assert_eq!(ex.dag.len(), 13);
+    }
+
+    #[test]
+    fn env_and_param_tokens_substituted_sample_tokens_kept() {
+        let ex = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let sim = ex
+            .instances
+            .iter()
+            .find(|i| i.step_name == "sim" && i.bindings["A"] == "1" && i.bindings["B"] == "x")
+            .unwrap();
+        assert!(sim.cmd.contains("--a 1"));
+        assert!(sim.cmd.contains("--b x"));
+        assert!(sim.cmd.contains("--out /tmp/out"));
+        assert!(sim.cmd.contains("$(MERLIN_SAMPLE_ID)"), "sample token deferred");
+    }
+
+    #[test]
+    fn same_combination_edges() {
+        let ex = expand_study(&spec(PARAM_SPEC)).unwrap();
+        // post/A.1/B.x depends exactly on sim/A.1/B.x.
+        let deps = ex.dag.dependencies("post/A.1/B.x");
+        assert_eq!(deps, vec!["sim/A.1/B.x"]);
+    }
+
+    #[test]
+    fn fan_in_edges() {
+        let ex = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let deps = ex.dag.dependencies("collect");
+        assert_eq!(deps.len(), 6, "collect fans in from all post instances");
+    }
+
+    #[test]
+    fn unparameterized_study_single_instances() {
+        let text = "\
+description:
+  name: simple
+study:
+  - name: a
+    run:
+      cmd: echo a
+  - name: b
+    run:
+      cmd: echo b
+      depends: [a]
+";
+        let ex = expand_study(&spec(text)).unwrap();
+        assert_eq!(ex.instances.len(), 2);
+        assert_eq!(ex.instances[0].id, "a");
+        assert_eq!(ex.dag.dependencies("b"), vec!["a"]);
+    }
+
+    #[test]
+    fn step_level_cycle_rejected() {
+        // a <-> b via bare deps: spec.validate allows (no self-dep), but
+        // expansion must reject the instance cycle.
+        let text = "\
+description:
+  name: cyc
+study:
+  - name: a
+    run:
+      cmd: echo a
+      depends: [b]
+  - name: b
+    run:
+      cmd: echo b
+      depends: [a]
+";
+        assert!(expand_study(&spec(text)).is_err());
+    }
+
+    #[test]
+    fn topo_order_runs_sims_before_collect() {
+        let ex = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let order = ex.dag.topo_order().unwrap();
+        let pos = |id: &str| order.iter().position(|x| x == id).unwrap();
+        assert!(pos("sim/A.2/B.z") < pos("post/A.2/B.z"));
+        assert!(pos("post/A.1/B.y") < pos("collect"));
+    }
+
+    #[test]
+    fn deterministic_expansion() {
+        let a = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let b = expand_study(&spec(PARAM_SPEC)).unwrap();
+        let ids_a: Vec<&str> = a.instances.iter().map(|i| i.id.as_str()).collect();
+        let ids_b: Vec<&str> = b.instances.iter().map(|i| i.id.as_str()).collect();
+        assert_eq!(ids_a, ids_b);
+    }
+}

@@ -1,0 +1,284 @@
+//! A small directed-acyclic-graph engine: insertion, cycle detection,
+//! topological order, and ready-frontier queries used by the orchestrator
+//! to release steps as their dependencies complete.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DagError {
+    UnknownNode(String),
+    Cycle(Vec<String>),
+    DuplicateNode(String),
+}
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::UnknownNode(n) => write!(f, "unknown node {n}"),
+            DagError::Cycle(path) => write!(f, "dependency cycle: {}", path.join(" -> ")),
+            DagError::DuplicateNode(n) => write!(f, "duplicate node {n}"),
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
+
+/// DAG over string node ids. Deterministic iteration (BTree-based).
+#[derive(Debug, Default, Clone)]
+pub struct Dag {
+    /// node -> set of dependencies (incoming edges).
+    deps: BTreeMap<String, BTreeSet<String>>,
+    /// node -> set of dependents (outgoing edges).
+    rdeps: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, id: &str) -> Result<(), DagError> {
+        if self.deps.contains_key(id) {
+            return Err(DagError::DuplicateNode(id.to_string()));
+        }
+        self.deps.insert(id.to_string(), BTreeSet::new());
+        self.rdeps.insert(id.to_string(), BTreeSet::new());
+        Ok(())
+    }
+
+    /// Add edge `from -> to` meaning "`to` depends on `from`".
+    pub fn add_edge(&mut self, from: &str, to: &str) -> Result<(), DagError> {
+        if !self.deps.contains_key(from) {
+            return Err(DagError::UnknownNode(from.to_string()));
+        }
+        if !self.deps.contains_key(to) {
+            return Err(DagError::UnknownNode(to.to_string()));
+        }
+        self.deps.get_mut(to).unwrap().insert(from.to_string());
+        self.rdeps.get_mut(from).unwrap().insert(to.to_string());
+        Ok(())
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.deps.contains_key(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.deps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deps.is_empty()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &str> {
+        self.deps.keys().map(String::as_str)
+    }
+
+    pub fn dependencies(&self, id: &str) -> Vec<&str> {
+        self.deps
+            .get(id)
+            .map(|s| s.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn dependents(&self, id: &str) -> Vec<&str> {
+        self.rdeps
+            .get(id)
+            .map(|s| s.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    /// Kahn's algorithm; errors with an actual cycle path on failure.
+    pub fn topo_order(&self) -> Result<Vec<String>, DagError> {
+        let mut indeg: BTreeMap<&str, usize> = self
+            .deps
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.len()))
+            .collect();
+        let mut ready: Vec<&str> = indeg
+            .iter()
+            .filter(|(_, d)| **d == 0)
+            .map(|(k, _)| *k)
+            .collect();
+        let mut order = Vec::with_capacity(self.deps.len());
+        while let Some(n) = ready.pop() {
+            order.push(n.to_string());
+            for dep in self.rdeps[n].iter() {
+                let d = indeg.get_mut(dep.as_str()).unwrap();
+                *d -= 1;
+                if *d == 0 {
+                    ready.push(dep);
+                }
+            }
+        }
+        if order.len() != self.deps.len() {
+            return Err(DagError::Cycle(self.find_cycle()));
+        }
+        Ok(order)
+    }
+
+    /// Locate one cycle (for error reporting) via DFS.
+    fn find_cycle(&self) -> Vec<String> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Mark {
+            White,
+            Gray,
+            Black,
+        }
+        let mut marks: BTreeMap<&str, Mark> =
+            self.deps.keys().map(|k| (k.as_str(), Mark::White)).collect();
+
+        fn dfs<'a>(
+            node: &'a str,
+            dag: &'a Dag,
+            marks: &mut BTreeMap<&'a str, Mark>,
+            stack: &mut Vec<&'a str>,
+        ) -> Option<Vec<String>> {
+            marks.insert(node, Mark::Gray);
+            stack.push(node);
+            for next in dag.rdeps[node].iter() {
+                match marks[next.as_str()] {
+                    Mark::Gray => {
+                        let start = stack.iter().position(|n| *n == next).unwrap();
+                        let mut cycle: Vec<String> =
+                            stack[start..].iter().map(|s| s.to_string()).collect();
+                        cycle.push(next.to_string());
+                        return Some(cycle);
+                    }
+                    Mark::White => {
+                        if let Some(c) = dfs(next, dag, marks, stack) {
+                            return Some(c);
+                        }
+                    }
+                    Mark::Black => {}
+                }
+            }
+            stack.pop();
+            marks.insert(node, Mark::Black);
+            None
+        }
+
+        let keys: Vec<&str> = self.deps.keys().map(String::as_str).collect();
+        for k in keys {
+            if marks[k] == Mark::White {
+                let mut stack = Vec::new();
+                if let Some(c) = dfs(k, self, &mut marks, &mut stack) {
+                    return c;
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Nodes whose dependencies are all in `done` and that are not
+    /// themselves in `done` — the next releasable frontier.
+    pub fn ready(&self, done: &BTreeSet<String>) -> Vec<String> {
+        self.deps
+            .iter()
+            .filter(|(n, deps)| !done.contains(*n) && deps.iter().all(|d| done.contains(d)))
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Dag {
+        let mut d = Dag::new();
+        for n in ["a", "b", "c"] {
+            d.add_node(n).unwrap();
+        }
+        d.add_edge("a", "b").unwrap();
+        d.add_edge("b", "c").unwrap();
+        d
+    }
+
+    #[test]
+    fn topo_chain() {
+        assert_eq!(chain().topo_order().unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn topo_respects_all_edges() {
+        let mut d = Dag::new();
+        for n in ["a", "b", "c", "d"] {
+            d.add_node(n).unwrap();
+        }
+        d.add_edge("a", "c").unwrap();
+        d.add_edge("b", "c").unwrap();
+        d.add_edge("c", "d").unwrap();
+        let order = d.topo_order().unwrap();
+        let pos = |n: &str| order.iter().position(|x| x == n).unwrap();
+        assert!(pos("a") < pos("c"));
+        assert!(pos("b") < pos("c"));
+        assert!(pos("c") < pos("d"));
+    }
+
+    #[test]
+    fn cycle_detected_with_path() {
+        let mut d = chain();
+        d.add_edge("c", "a").unwrap();
+        match d.topo_order() {
+            Err(DagError::Cycle(path)) => {
+                assert!(path.len() >= 3);
+                assert_eq!(path.first(), path.last());
+            }
+            other => panic!("expected cycle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn self_loop_is_cycle() {
+        let mut d = Dag::new();
+        d.add_node("a").unwrap();
+        d.add_edge("a", "a").unwrap();
+        assert!(matches!(d.topo_order(), Err(DagError::Cycle(_))));
+    }
+
+    #[test]
+    fn ready_frontier_advances() {
+        let d = chain();
+        let mut done = BTreeSet::new();
+        assert_eq!(d.ready(&done), vec!["a"]);
+        done.insert("a".to_string());
+        assert_eq!(d.ready(&done), vec!["b"]);
+        done.insert("b".to_string());
+        assert_eq!(d.ready(&done), vec!["c"]);
+        done.insert("c".to_string());
+        assert!(d.ready(&done).is_empty());
+    }
+
+    #[test]
+    fn unknown_and_duplicate_nodes() {
+        let mut d = Dag::new();
+        d.add_node("a").unwrap();
+        assert!(matches!(d.add_node("a"), Err(DagError::DuplicateNode(_))));
+        assert!(matches!(
+            d.add_edge("a", "ghost"),
+            Err(DagError::UnknownNode(_))
+        ));
+        assert!(matches!(
+            d.add_edge("ghost", "a"),
+            Err(DagError::UnknownNode(_))
+        ));
+    }
+
+    #[test]
+    fn diamond_ready_needs_both_parents() {
+        let mut d = Dag::new();
+        for n in ["top", "l", "r", "bottom"] {
+            d.add_node(n).unwrap();
+        }
+        d.add_edge("top", "l").unwrap();
+        d.add_edge("top", "r").unwrap();
+        d.add_edge("l", "bottom").unwrap();
+        d.add_edge("r", "bottom").unwrap();
+        let mut done: BTreeSet<String> = ["top", "l"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(d.ready(&done), vec!["r"]);
+        done.insert("r".into());
+        assert_eq!(d.ready(&done), vec!["bottom"]);
+    }
+}

@@ -1,0 +1,17 @@
+//! DAG construction and expansion — Fig 1's two-tier design.
+//!
+//! Maestro's `global.parameters` define a cross-product of values; steps
+//! whose commands reference a parameter are expanded once per combination
+//! ([`expand`]). Dependencies connect instances ([`graph`]): a bare
+//! dependency binds same-combination instances, while the `_*` suffix
+//! fans in from *all* instances of the upstream step. **Samples** (the
+//! `merlin.samples` block) are deliberately NOT expanded here — they stay
+//! a `(count, seed)` descriptor attached to each step instance and are
+//! unrolled lazily by the hierarchical task generator, which is exactly
+//! the layering the paper credits for scalability.
+
+pub mod expand;
+pub mod graph;
+
+pub use expand::{expand_study, StepInstance};
+pub use graph::{Dag, DagError};

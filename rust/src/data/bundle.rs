@@ -1,0 +1,239 @@
+//! Bundle/aggregate layout policy (§3.1, Fig 7).
+//!
+//! The JAG study wrote each task's 10 simulations as one bundle file, 100
+//! bundle files per leaf directory, and aggregated each full leaf directory
+//! into a single 1000-simulation file. [`BundleLayout`] computes that
+//! addressing; [`write_bundle`]/[`aggregate_dir`] implement the I/O with
+//! no cross-task coordination (unique filenames + atomic renames).
+
+use std::path::{Path, PathBuf};
+
+use super::container::{read_container, write_container, ContainerError};
+use super::node::Node;
+
+/// Addressing policy for a study's sample data tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BundleLayout {
+    /// Simulations per bundle file (paper: 10).
+    pub sims_per_bundle: u64,
+    /// Bundle files per leaf directory (paper: 100).
+    pub bundles_per_dir: u64,
+}
+
+impl Default for BundleLayout {
+    fn default() -> Self {
+        Self {
+            sims_per_bundle: 10,
+            bundles_per_dir: 100,
+        }
+    }
+}
+
+impl BundleLayout {
+    pub fn sims_per_dir(&self) -> u64 {
+        self.sims_per_bundle * self.bundles_per_dir
+    }
+
+    /// Which bundle a sample belongs to.
+    pub fn bundle_index(&self, sample: u64) -> u64 {
+        sample / self.sims_per_bundle
+    }
+
+    /// Which leaf directory a bundle belongs to.
+    pub fn dir_index(&self, bundle: u64) -> u64 {
+        bundle / self.bundles_per_dir
+    }
+
+    /// Leaf directory path for a sample.
+    pub fn dir_for_sample(&self, root: &Path, sample: u64) -> PathBuf {
+        let dir = self.dir_index(self.bundle_index(sample));
+        root.join(format!("leaf_{dir:06}"))
+    }
+
+    /// Bundle file path for a sample range starting at `lo`. Named by the
+    /// exact start sample (not the bundle index): resubmission passes may
+    /// write *partial* bundles (e.g. samples [3,5) recovered after a task
+    /// death) and those must never clobber a sibling file covering other
+    /// samples of the same nominal bundle.
+    pub fn bundle_path(&self, root: &Path, lo: u64) -> PathBuf {
+        self.dir_for_sample(root, lo)
+            .join(format!("bundle_{lo:010}.mrln"))
+    }
+
+    /// Aggregated file path for a leaf directory index.
+    pub fn aggregate_path(&self, root: &Path, dir: u64) -> PathBuf {
+        root.join(format!("leaf_{dir:06}")).join("aggregate.mrln")
+    }
+
+    /// Sample range covered by leaf directory `dir`.
+    pub fn dir_sample_range(&self, dir: u64) -> (u64, u64) {
+        let lo = dir * self.sims_per_dir();
+        (lo, lo + self.sims_per_dir())
+    }
+}
+
+/// Write the bundle for samples `[lo, lo+n)`: `sims` are per-sample node
+/// trees, mounted as `sim_<global_id>/`.
+pub fn write_bundle(
+    layout: &BundleLayout,
+    root: &Path,
+    lo: u64,
+    sims: Vec<(u64, Node)>,
+) -> Result<PathBuf, ContainerError> {
+    write_bundle_opts(layout, root, lo, sims, true)
+}
+
+/// [`write_bundle`] with an explicit compression choice. Compression costs
+/// ~6x the raw dump time for ~1.6x smaller files on JAG data (measured in
+/// EXPERIMENTS.md §Perf); throughput-bound studies turn it off.
+pub fn write_bundle_opts(
+    layout: &BundleLayout,
+    root: &Path,
+    lo: u64,
+    sims: Vec<(u64, Node)>,
+    compress: bool,
+) -> Result<PathBuf, ContainerError> {
+    let path = layout.bundle_path(root, lo);
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let mut bundle = Node::new();
+    for (id, sim) in sims {
+        bundle.mount(&format!("sim_{id:010}"), sim);
+    }
+    write_container(&path, &bundle, compress)?;
+    Ok(path)
+}
+
+/// Merge every readable bundle file in `dir` into `aggregate.mrln`.
+/// Corrupt bundles are skipped (their samples show up as missing in the
+/// crawl). Returns (samples_aggregated, corrupt_bundles).
+pub fn aggregate_dir(dir: &Path) -> Result<(u64, u64), ContainerError> {
+    let mut merged = Node::new();
+    let mut samples = 0u64;
+    let mut corrupt = 0u64;
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("bundle_") && n.ends_with(".mrln"))
+                .unwrap_or(false)
+        })
+        .collect();
+    entries.sort();
+    for path in &entries {
+        match read_container(path) {
+            Ok(node) => {
+                for (name, sim) in node.children() {
+                    merged.mount(name, sim.clone());
+                    samples += 1;
+                }
+            }
+            Err(ContainerError::Io(e)) => return Err(ContainerError::Io(e)),
+            Err(_) => corrupt += 1,
+        }
+    }
+    write_container(&dir.join("aggregate.mrln"), &merged, true)?;
+    Ok((samples, corrupt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "merlin-bundle-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sim(id: u64) -> Node {
+        let mut n = Node::new();
+        n.set_f64("yield", vec![id as f64 * 1.5]);
+        n.set_i64("id", vec![id as i64]);
+        n
+    }
+
+    #[test]
+    fn layout_addressing_matches_paper() {
+        let l = BundleLayout::default();
+        assert_eq!(l.sims_per_dir(), 1000);
+        assert_eq!(l.bundle_index(0), 0);
+        assert_eq!(l.bundle_index(9), 0);
+        assert_eq!(l.bundle_index(10), 1);
+        assert_eq!(l.dir_index(99), 0);
+        assert_eq!(l.dir_index(100), 1);
+        let root = Path::new("/data");
+        assert_eq!(
+            l.bundle_path(root, 0),
+            Path::new("/data/leaf_000000/bundle_0000000000.mrln")
+        );
+        assert_eq!(
+            l.bundle_path(root, 1000),
+            Path::new("/data/leaf_000001/bundle_0000001000.mrln")
+        );
+        // Partial-bundle resubmissions inside the same nominal bundle get
+        // distinct files.
+        assert_ne!(l.bundle_path(root, 3), l.bundle_path(root, 7));
+        assert_eq!(l.dir_sample_range(2), (2000, 3000));
+    }
+
+    #[test]
+    fn bundles_partition_samples() {
+        let l = BundleLayout {
+            sims_per_bundle: 7,
+            bundles_per_dir: 3,
+        };
+        // Every sample maps to exactly one bundle and one dir; boundaries align.
+        for s in 0..100u64 {
+            let b = l.bundle_index(s);
+            assert!(b * 7 <= s && s < (b + 1) * 7);
+            let d = l.dir_index(b);
+            let (lo, hi) = l.dir_sample_range(d);
+            assert!(lo <= s && s < hi);
+        }
+    }
+
+    #[test]
+    fn write_and_aggregate_roundtrip() {
+        let root = tmpdir("agg");
+        let l = BundleLayout {
+            sims_per_bundle: 2,
+            bundles_per_dir: 3,
+        };
+        // Fill leaf dir 0 completely: samples 0..6 in bundles of 2.
+        for lo in [0u64, 2, 4] {
+            let sims: Vec<(u64, Node)> = (lo..lo + 2).map(|i| (i, sim(i))).collect();
+            write_bundle(&l, &root, lo, sims).unwrap();
+        }
+        let dir = root.join("leaf_000000");
+        let (n, corrupt) = aggregate_dir(&dir).unwrap();
+        assert_eq!((n, corrupt), (6, 0));
+        let agg = read_container(&dir.join("aggregate.mrln")).unwrap();
+        assert_eq!(agg.n_children(), 6);
+        assert_eq!(agg.f64s("sim_0000000003/yield"), Some(&[4.5][..]));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn aggregate_skips_corrupt_bundles() {
+        let root = tmpdir("corrupt");
+        let l = BundleLayout {
+            sims_per_bundle: 2,
+            bundles_per_dir: 2,
+        };
+        write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        let p2 = write_bundle(&l, &root, 2, vec![(2, sim(2)), (3, sim(3))]).unwrap();
+        // Corrupt the second bundle.
+        let mut bytes = std::fs::read(&p2).unwrap();
+        let mid = bytes.len() - 5;
+        bytes[mid] ^= 0xAA;
+        std::fs::write(&p2, &bytes).unwrap();
+        let (n, corrupt) = aggregate_dir(&root.join("leaf_000000")).unwrap();
+        assert_eq!((n, corrupt), (2, 1));
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,338 @@
+//! Single-file container for [`Node`] trees — the HDF5 substitute.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "MRLN" | version u32 | flags u32 (bit0 = zlib)
+//! payload_len u64 | crc32(payload) u32 | payload bytes
+//! ```
+//!
+//! The payload is a (possibly deflate-compressed) depth-first encoding of
+//! the tree. The CRC is verified on read: a truncated or bit-flipped file
+//! yields [`ContainerError::Corrupt`], which the §3.1 resubmission crawl
+//! treats as "sample missing, requeue it".
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+
+use super::node::{Leaf, Node};
+
+const MAGIC: &[u8; 4] = b"MRLN";
+const VERSION: u32 = 1;
+const FLAG_ZLIB: u32 = 1;
+
+#[derive(Debug)]
+pub enum ContainerError {
+    Io(std::io::Error),
+    BadMagic,
+    BadVersion(u32),
+    Corrupt(String),
+}
+
+impl std::fmt::Display for ContainerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ContainerError::Io(e) => write!(f, "io: {e}"),
+            ContainerError::BadMagic => write!(f, "not a merlin container"),
+            ContainerError::BadVersion(v) => write!(f, "unsupported container version {v}"),
+            ContainerError::Corrupt(m) => write!(f, "corrupt container: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ContainerError {}
+
+impl From<std::io::Error> for ContainerError {
+    fn from(e: std::io::Error) -> Self {
+        ContainerError::Io(e)
+    }
+}
+
+/// Serialize `node` to `path`. `compress` enables zlib (the study's hdf5
+/// files were zipped; compression also makes corruption detection by CRC
+/// meaningful on sparse float data).
+pub fn write_container(path: &Path, node: &Node, compress: bool) -> Result<(), ContainerError> {
+    let mut payload = Vec::new();
+    encode_node(node, &mut payload);
+    let (flags, body) = if compress {
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&payload)?;
+        (FLAG_ZLIB, enc.finish()?)
+    } else {
+        (0, payload)
+    };
+    let crc = crc32fast::hash(&body);
+    let mut out = Vec::with_capacity(body.len() + 24);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.extend_from_slice(&body);
+    // Write via a temp file + rename so readers never observe partial
+    // writes (the lock-free aggregation protocol depends on this).
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &out)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read and verify a container file.
+pub fn read_container(path: &Path) -> Result<Node, ContainerError> {
+    let data = std::fs::read(path)?;
+    if data.len() < 24 || &data[0..4] != MAGIC {
+        return Err(ContainerError::BadMagic);
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(ContainerError::BadVersion(version));
+    }
+    let flags = u32::from_le_bytes(data[8..12].try_into().unwrap());
+    let len = u64::from_le_bytes(data[12..20].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(data[20..24].try_into().unwrap());
+    let body = data
+        .get(24..24 + len)
+        .ok_or_else(|| ContainerError::Corrupt("truncated payload".into()))?;
+    if data.len() != 24 + len {
+        return Err(ContainerError::Corrupt("trailing bytes".into()));
+    }
+    if crc32fast::hash(body) != crc {
+        return Err(ContainerError::Corrupt("crc mismatch".into()));
+    }
+    let payload = if flags & FLAG_ZLIB != 0 {
+        let mut dec = ZlibDecoder::new(body);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out)
+            .map_err(|e| ContainerError::Corrupt(format!("zlib: {e}")))?;
+        out
+    } else {
+        body.to_vec()
+    };
+    let mut pos = 0;
+    let node = decode_node(&payload, &mut pos)
+        .ok_or_else(|| ContainerError::Corrupt("payload decode".into()))?;
+    if pos != payload.len() {
+        return Err(ContainerError::Corrupt("payload trailing bytes".into()));
+    }
+    Ok(node)
+}
+
+// -- encoding: node := leaf_flag u8 [leaf] child_count u32 (name leaf)* --
+
+fn encode_node(n: &Node, out: &mut Vec<u8>) {
+    match n.leaf_value() {
+        Some(leaf) => {
+            out.push(1);
+            encode_leaf(leaf, out);
+        }
+        None => out.push(0),
+    }
+    let children: Vec<(&str, &Node)> = n.children().collect();
+    out.extend_from_slice(&(children.len() as u32).to_le_bytes());
+    for (name, child) in children {
+        encode_str(name, out);
+        encode_node(child, out);
+    }
+}
+
+fn encode_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn encode_leaf(leaf: &Leaf, out: &mut Vec<u8>) {
+    out.push(leaf.type_tag());
+    match leaf {
+        Leaf::F32(v) => {
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Leaf::F64(v) => {
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Leaf::I64(v) => {
+            out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Leaf::Str(s) => {
+            out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
+        }
+    }
+}
+
+fn take<'a>(data: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+    let slice = data.get(*pos..*pos + n)?;
+    *pos += n;
+    Some(slice)
+}
+
+fn decode_node(data: &[u8], pos: &mut usize) -> Option<Node> {
+    let mut node = Node::new();
+    let has_leaf = take(data, pos, 1)?[0];
+    if has_leaf == 1 {
+        let leaf = decode_leaf(data, pos)?;
+        node.set("", leaf);
+        // set("") sets on self; but make_path("") returns self — fine.
+    } else if has_leaf != 0 {
+        return None;
+    }
+    let n_children = u32::from_le_bytes(take(data, pos, 4)?.try_into().ok()?) as usize;
+    for _ in 0..n_children {
+        let name_len = u32::from_le_bytes(take(data, pos, 4)?.try_into().ok()?) as usize;
+        let name = std::str::from_utf8(take(data, pos, name_len)?).ok()?.to_string();
+        let child = decode_node(data, pos)?;
+        node.mount(&name, child);
+    }
+    Some(node)
+}
+
+fn decode_leaf(data: &[u8], pos: &mut usize) -> Option<Leaf> {
+    let tag = take(data, pos, 1)?[0];
+    let len = u64::from_le_bytes(take(data, pos, 8)?.try_into().ok()?) as usize;
+    Some(match tag {
+        0 => {
+            let raw = take(data, pos, len * 4)?;
+            Leaf::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        1 => {
+            let raw = take(data, pos, len * 8)?;
+            Leaf::F64(
+                raw.chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        2 => {
+            let raw = take(data, pos, len * 8)?;
+            Leaf::I64(
+                raw.chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            )
+        }
+        3 => Leaf::Str(std::str::from_utf8(take(data, pos, len)?).ok()?.to_string()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("merlin-cont-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_node() -> Node {
+        let mut n = Node::new();
+        n.set_f64("outputs/scalars", vec![1.0, 2.5, -3.25]);
+        n.set_f32("outputs/image", (0..1024).map(|i| i as f32 * 0.5).collect());
+        n.set_i64("inputs/sample_id", vec![12345]);
+        n.set_str("meta/code", "jag v1");
+        n
+    }
+
+    #[test]
+    fn roundtrip_uncompressed_and_compressed() {
+        let dir = tmpdir("rt");
+        for (name, compress) in [("raw.mrln", false), ("z.mrln", true)] {
+            let path = dir.join(name);
+            let node = sample_node();
+            write_container(&path, &node, compress).unwrap();
+            let back = read_container(&path).unwrap();
+            assert_eq!(back, node);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compression_shrinks_repetitive_data() {
+        let dir = tmpdir("shrink");
+        let mut n = Node::new();
+        n.set_f64("zeros", vec![0.0; 10_000]);
+        let raw = dir.join("raw.mrln");
+        let z = dir.join("z.mrln");
+        write_container(&raw, &n, false).unwrap();
+        write_container(&z, &n, true).unwrap();
+        let raw_len = std::fs::metadata(&raw).unwrap().len();
+        let z_len = std::fs::metadata(&z).unwrap().len();
+        assert!(z_len < raw_len / 10, "zlib {z_len} vs raw {raw_len}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bitflip_detected_as_corrupt() {
+        let dir = tmpdir("flip");
+        let path = dir.join("f.mrln");
+        write_container(&path, &sample_node(), true).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_container(&path),
+            Err(ContainerError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("t.mrln");
+        write_container(&path, &sample_node(), false).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(matches!(
+            read_container(&path),
+            Err(ContainerError::Corrupt(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_container_rejected() {
+        let dir = tmpdir("mag");
+        let path = dir.join("x.mrln");
+        std::fs::write(&path, b"definitely not a container file").unwrap();
+        assert!(matches!(read_container(&path), Err(ContainerError::BadMagic)));
+        std::fs::write(&path, b"xy").unwrap();
+        assert!(matches!(read_container(&path), Err(ContainerError::BadMagic)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_node_roundtrips() {
+        let dir = tmpdir("empty");
+        let path = dir.join("e.mrln");
+        write_container(&path, &Node::new(), true).unwrap();
+        assert_eq!(read_container(&path).unwrap(), Node::new());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(matches!(
+            read_container(Path::new("/nonexistent/x.mrln")),
+            Err(ContainerError::Io(_))
+        ));
+    }
+}

@@ -1,0 +1,213 @@
+//! The resubmission crawl (§3.1): walk a study's data tree, inventory
+//! which samples have valid on-disk results, and report what is missing or
+//! corrupt so the coordinator can requeue exactly those samples. This is
+//! what took the JAG study from a 70% first-pass completion rate to 99.8%.
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use super::bundle::BundleLayout;
+use super::container::{read_container, ContainerError};
+
+/// Crawl result over a study tree.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CrawlReport {
+    /// Samples with valid data (from bundles or aggregates).
+    pub valid: Vec<u64>,
+    /// Bundle files that failed CRC/decode.
+    pub corrupt_files: u64,
+    /// Files examined.
+    pub files_seen: u64,
+}
+
+impl CrawlReport {
+    /// Samples of `[0, n)` that need resubmission.
+    pub fn missing(&self, n: u64) -> Vec<u64> {
+        let have: HashSet<u64> = self.valid.iter().copied().collect();
+        (0..n).filter(|i| !have.contains(i)).collect()
+    }
+
+    pub fn completion_rate(&self, n: u64) -> f64 {
+        if n == 0 {
+            return 1.0;
+        }
+        self.valid.len() as f64 / n as f64
+    }
+}
+
+/// Walk `root` (a tree of `leaf_*` directories produced by
+/// [`super::bundle`]) and inventory valid samples. Aggregated files are
+/// preferred; individual bundles fill in for unaggregated leaf dirs.
+pub fn crawl(root: &Path, _layout: &BundleLayout) -> std::io::Result<CrawlReport> {
+    let mut report = CrawlReport::default();
+    if !root.exists() {
+        return Ok(report);
+    }
+    let mut leaf_dirs: Vec<_> = std::fs::read_dir(root)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.is_dir()
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("leaf_"))
+                    .unwrap_or(false)
+        })
+        .collect();
+    leaf_dirs.sort();
+    for dir in leaf_dirs {
+        let mut seen_in_dir: HashSet<u64> = HashSet::new();
+        // Prefer the aggregate if present and valid.
+        let agg = dir.join("aggregate.mrln");
+        if agg.exists() {
+            report.files_seen += 1;
+            match read_container(&agg) {
+                Ok(node) => {
+                    for (name, _) in node.children() {
+                        if let Some(id) = parse_sim_id(name) {
+                            seen_in_dir.insert(id);
+                        }
+                    }
+                }
+                Err(ContainerError::Io(e)) => return Err(e),
+                Err(_) => report.corrupt_files += 1,
+            }
+        }
+        // Individual bundles may contain samples not (yet) aggregated.
+        let mut bundles: Vec<_> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("bundle_") && n.ends_with(".mrln"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        bundles.sort();
+        for b in bundles {
+            report.files_seen += 1;
+            match read_container(&b) {
+                Ok(node) => {
+                    for (name, _) in node.children() {
+                        if let Some(id) = parse_sim_id(name) {
+                            seen_in_dir.insert(id);
+                        }
+                    }
+                }
+                Err(ContainerError::Io(e)) => return Err(e),
+                Err(_) => report.corrupt_files += 1,
+            }
+        }
+        report.valid.extend(seen_in_dir);
+    }
+    report.valid.sort_unstable();
+    report.valid.dedup();
+    Ok(report)
+}
+
+fn parse_sim_id(name: &str) -> Option<u64> {
+    name.strip_prefix("sim_")?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::bundle::write_bundle;
+    use crate::data::node::Node;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "merlin-crawl-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sim(id: u64) -> Node {
+        let mut n = Node::new();
+        n.set_f64("y", vec![id as f64]);
+        n
+    }
+
+    fn layout() -> BundleLayout {
+        BundleLayout {
+            sims_per_bundle: 2,
+            bundles_per_dir: 2,
+        }
+    }
+
+    #[test]
+    fn empty_root_is_all_missing() {
+        let root = tmpdir("empty");
+        let report = crawl(&root.join("nothing"), &layout()).unwrap();
+        assert_eq!(report.valid.len(), 0);
+        assert_eq!(report.missing(5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(report.completion_rate(5), 0.0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn crawl_finds_bundled_samples() {
+        let root = tmpdir("find");
+        let l = layout();
+        write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        write_bundle(&l, &root, 4, vec![(4, sim(4)), (5, sim(5))]).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(report.valid, vec![0, 1, 4, 5]);
+        assert_eq!(report.missing(6), vec![2, 3]);
+        assert!((report.completion_rate(6) - 4.0 / 6.0).abs() < 1e-12);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_bundle_counts_as_missing() {
+        let root = tmpdir("cor");
+        let l = layout();
+        let p = write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 1;
+        std::fs::write(&p, &bytes).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(report.valid.len(), 0);
+        assert_eq!(report.corrupt_files, 1);
+        assert_eq!(report.missing(2), vec![0, 1]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn aggregate_and_bundles_both_counted_once() {
+        let root = tmpdir("both");
+        let l = layout();
+        write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        write_bundle(&l, &root, 2, vec![(2, sim(2)), (3, sim(3))]).unwrap();
+        crate::data::bundle::aggregate_dir(&root.join("leaf_000000")).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(report.valid, vec![0, 1, 2, 3]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn resubmission_loop_converges() {
+        // Simulate the paper's multi-pass recovery: run, crawl, resubmit
+        // missing, repeat. Here pass 1 writes evens, pass 2 fills odds.
+        let root = tmpdir("loop");
+        let l = BundleLayout {
+            sims_per_bundle: 1,
+            bundles_per_dir: 4,
+        };
+        for i in (0..8).step_by(2) {
+            write_bundle(&l, &root, i, vec![(i, sim(i))]).unwrap();
+        }
+        let r1 = crawl(&root, &l).unwrap();
+        assert_eq!(r1.missing(8), vec![1, 3, 5, 7]);
+        for i in r1.missing(8) {
+            write_bundle(&l, &root, i, vec![(i, sim(i))]).unwrap();
+        }
+        let r2 = crawl(&root, &l).unwrap();
+        assert!(r2.missing(8).is_empty());
+        assert_eq!(r2.completion_rate(8), 1.0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

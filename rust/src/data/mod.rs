@@ -1,0 +1,25 @@
+//! Hierarchical scientific data handling — the Conduit + HDF5 substitute.
+//!
+//! The §3.1 JAG study's scalability hinged on its data path: each task runs
+//! 10 simulations, collects their outputs in memory as a hierarchical node
+//! tree (Conduit), dumps one compressed file (HDF5), and every 100 bundle
+//! files an aggregation task merges a leaf directory into a single
+//! 1000-simulation file — no file locking, no I/O coordination.
+//!
+//! * [`node`] — Conduit-like tree of groups and typed arrays;
+//! * [`container`] — an HDF5-like single-file container: chunked, zlib
+//!   compressed, CRC-checksummed (corruption detection feeds the
+//!   resubmission crawl);
+//! * [`bundle`] — bundle/aggregate layout policy (N sims/bundle, M
+//!   bundles/leaf-dir);
+//! * [`crawl`] — walk a study tree, inventory valid samples, detect corrupt
+//!   or missing data (the "second pass" of §3.1).
+
+pub mod bundle;
+pub mod container;
+pub mod crawl;
+pub mod node;
+
+pub use bundle::BundleLayout;
+pub use container::{read_container, write_container, ContainerError};
+pub use node::Node;

@@ -1,0 +1,235 @@
+//! Conduit-like hierarchical node: a tree whose leaves are typed arrays or
+//! scalars, addressed by `/`-separated paths. This is the in-memory form
+//! simulation outputs take between "simulator finished" and "bundle dumped
+//! to disk".
+
+use std::collections::BTreeMap;
+
+/// Leaf payloads. Merlin's JAG study carries f32 images, f64 scalars and
+/// time series, ints, and string metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Leaf {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    Str(String),
+}
+
+impl Leaf {
+    pub fn byte_len(&self) -> usize {
+        match self {
+            Leaf::F32(v) => v.len() * 4,
+            Leaf::F64(v) => v.len() * 8,
+            Leaf::I64(v) => v.len() * 8,
+            Leaf::Str(s) => s.len(),
+        }
+    }
+
+    pub fn type_tag(&self) -> u8 {
+        match self {
+            Leaf::F32(_) => 0,
+            Leaf::F64(_) => 1,
+            Leaf::I64(_) => 2,
+            Leaf::Str(_) => 3,
+        }
+    }
+}
+
+/// A hierarchical data node.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Node {
+    children: BTreeMap<String, Node>,
+    leaf: Option<Leaf>,
+}
+
+impl Node {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a leaf at a `/`-separated path, creating interior groups.
+    /// Setting a leaf on a node that has children (or vice versa) follows
+    /// Conduit semantics: the leaf and children can coexist is NOT allowed
+    /// here — we keep it strict to catch layout bugs.
+    pub fn set(&mut self, path: &str, leaf: Leaf) {
+        let node = self.make_path(path);
+        assert!(
+            node.children.is_empty(),
+            "cannot set leaf on group node {path:?}"
+        );
+        node.leaf = Some(leaf);
+    }
+
+    pub fn set_f32(&mut self, path: &str, v: Vec<f32>) {
+        self.set(path, Leaf::F32(v));
+    }
+
+    pub fn set_f64(&mut self, path: &str, v: Vec<f64>) {
+        self.set(path, Leaf::F64(v));
+    }
+
+    pub fn set_i64(&mut self, path: &str, v: Vec<i64>) {
+        self.set(path, Leaf::I64(v));
+    }
+
+    pub fn set_str(&mut self, path: &str, s: impl Into<String>) {
+        self.set(path, Leaf::Str(s.into()));
+    }
+
+    fn make_path(&mut self, path: &str) -> &mut Node {
+        let mut node = self;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            assert!(
+                node.leaf.is_none(),
+                "cannot create child under leaf node at {part:?}"
+            );
+            node = node.children.entry(part.to_string()).or_default();
+        }
+        node
+    }
+
+    /// Fetch a node by path.
+    pub fn get(&self, path: &str) -> Option<&Node> {
+        let mut node = self;
+        for part in path.split('/').filter(|p| !p.is_empty()) {
+            node = node.children.get(part)?;
+        }
+        Some(node)
+    }
+
+    pub fn leaf(&self, path: &str) -> Option<&Leaf> {
+        self.get(path).and_then(|n| n.leaf.as_ref())
+    }
+
+    pub fn f64s(&self, path: &str) -> Option<&[f64]> {
+        match self.leaf(path) {
+            Some(Leaf::F64(v)) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn f32s(&self, path: &str) -> Option<&[f32]> {
+        match self.leaf(path)? {
+            Leaf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn str_at(&self, path: &str) -> Option<&str> {
+        match self.leaf(path)? {
+            Leaf::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Graft `other` under `prefix` (bundle assembly: sim outputs mount at
+    /// `sim_<id>/`). Panics on collision.
+    pub fn mount(&mut self, prefix: &str, other: Node) {
+        let slot = self.make_path(prefix);
+        assert!(
+            slot.children.is_empty() && slot.leaf.is_none(),
+            "mount point {prefix:?} is occupied"
+        );
+        *slot = other;
+    }
+
+    /// Depth-first list of all leaf paths.
+    pub fn leaf_paths(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.walk("", &mut out);
+        out
+    }
+
+    fn walk(&self, prefix: &str, out: &mut Vec<String>) {
+        if self.leaf.is_some() {
+            out.push(prefix.trim_start_matches('/').to_string());
+        }
+        for (name, child) in &self.children {
+            child.walk(&format!("{prefix}/{name}"), out);
+        }
+    }
+
+    /// Total payload bytes across all leaves.
+    pub fn total_bytes(&self) -> usize {
+        let own = self.leaf.as_ref().map(Leaf::byte_len).unwrap_or(0);
+        own + self.children.values().map(Node::total_bytes).sum::<usize>()
+    }
+
+    pub fn children(&self) -> impl Iterator<Item = (&str, &Node)> {
+        self.children.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn n_children(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_leaf(&self) -> bool {
+        self.leaf.is_some()
+    }
+
+    pub fn leaf_value(&self) -> Option<&Leaf> {
+        self.leaf.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut n = Node::new();
+        n.set_f64("outputs/scalars/yield", vec![1.5]);
+        n.set_f32("outputs/image", vec![0.0; 16]);
+        n.set_str("meta/code", "jag");
+        n.set_i64("meta/id", vec![42]);
+        assert_eq!(n.f64s("outputs/scalars/yield"), Some(&[1.5][..]));
+        assert_eq!(n.f32s("outputs/image").unwrap().len(), 16);
+        assert_eq!(n.str_at("meta/code"), Some("jag"));
+        assert!(n.get("missing/path").is_none());
+        assert!(n.leaf("outputs").is_none(), "group has no leaf");
+    }
+
+    #[test]
+    fn leaf_paths_sorted_depth_first() {
+        let mut n = Node::new();
+        n.set_f64("b/y", vec![]);
+        n.set_f64("a/x", vec![]);
+        n.set_f64("a/z/deep", vec![]);
+        assert_eq!(n.leaf_paths(), vec!["a/x", "a/z/deep", "b/y"]);
+    }
+
+    #[test]
+    fn mount_grafts_subtree() {
+        let mut sim = Node::new();
+        sim.set_f64("yield", vec![3.0]);
+        let mut bundle = Node::new();
+        bundle.mount("sim_0007", sim);
+        assert_eq!(bundle.f64s("sim_0007/yield"), Some(&[3.0][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "occupied")]
+    fn mount_collision_panics() {
+        let mut bundle = Node::new();
+        bundle.set_f64("sim_0/x", vec![]);
+        bundle.mount("sim_0", Node::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot set leaf on group")]
+    fn leaf_over_group_panics() {
+        let mut n = Node::new();
+        n.set_f64("a/b", vec![]);
+        n.set_f64("a", vec![]);
+    }
+
+    #[test]
+    fn total_bytes_accumulates() {
+        let mut n = Node::new();
+        n.set_f32("img", vec![0.0; 100]); // 400
+        n.set_f64("ts", vec![0.0; 10]); // 80
+        n.set_str("s", "abcd"); // 4
+        assert_eq!(n.total_bytes(), 484);
+    }
+}

@@ -1,0 +1,12 @@
+//! On-allocation job launcher — the Flux + jsrun substitute.
+//!
+//! Inside a batch allocation, Flux places MPI-driven simulation launches
+//! onto free cores just-in-time (the JAG study peaked at >250 launches per
+//! second; the HYDRA study packed multiple 1-core HYDRAs onto shared
+//! nodes). [`FluxAllocator`] tracks per-node free cores, places `procs`-
+//! sized requests (packing onto shared nodes first), releases them on
+//! completion, and accounts launch throughput.
+
+pub mod alloc;
+
+pub use alloc::{FluxAllocator, Placement};

@@ -1,0 +1,82 @@
+//! Flat enqueue baseline: the producer materializes every leaf task itself,
+//! as a plain Celery/Maestro submission would. This is the comparator for
+//! the Fig 3 (enqueue time) and Fig 4 (startup latency) benches; it also
+//! demonstrates the broker message-count pressure the hierarchical scheme
+//! avoids (§2.2's "task-creation outpacing task-consumption" pathology).
+
+use crate::task::{Payload, StepTask, StepTemplate, TaskEnvelope};
+
+/// Produce all `ceil(n/samples_per_task)` leaf envelopes eagerly.
+pub fn flat_tasks(template: &StepTemplate, n_samples: u64, queue: &str) -> Vec<TaskEnvelope> {
+    let spt = template.samples_per_task.max(1);
+    let count = n_samples.div_ceil(spt);
+    let mut out = Vec::with_capacity(count as usize);
+    let mut lo = 0;
+    while lo < n_samples {
+        let hi = (lo + spt).min(n_samples);
+        out.push(
+            TaskEnvelope::new(
+                queue,
+                Payload::Step(StepTask {
+                    template: template.clone(),
+                    lo,
+                    hi,
+                }),
+            )
+            .with_content_id(),
+        );
+        lo = hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::WorkSpec;
+
+    fn template(spt: u64) -> StepTemplate {
+        StepTemplate {
+            study_id: "s".into(),
+            step_name: "x".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: spt,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn covers_all_samples() {
+        let tasks = flat_tasks(&template(10), 105, "q");
+        assert_eq!(tasks.len(), 11);
+        let mut cursor = 0;
+        for t in &tasks {
+            if let Payload::Step(s) = &t.payload {
+                assert_eq!(s.lo, cursor);
+                cursor = s.hi;
+            }
+        }
+        assert_eq!(cursor, 105);
+    }
+
+    #[test]
+    fn flat_equals_unrolled_hierarchy() {
+        use crate::hierarchy::{root_task, unroll};
+        let t = template(3);
+        let flat: Vec<(u64, u64)> = flat_tasks(&t, 100, "q")
+            .into_iter()
+            .filter_map(|t| match t.payload {
+                Payload::Step(s) => Some((s.lo, s.hi)),
+                _ => None,
+            })
+            .collect();
+        let hier: Vec<(u64, u64)> = unroll(root_task(t, 100, 4, "q"), "q")
+            .into_iter()
+            .filter_map(|t| match t.payload {
+                Payload::Step(s) => Some((s.lo, s.hi)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(flat, hier);
+    }
+}

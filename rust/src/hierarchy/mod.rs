@@ -1,0 +1,312 @@
+//! Hierarchical task generation (§2.2, Figs 1-2) — Merlin's core algorithm.
+//!
+//! Instead of the producer enqueuing all N sample tasks (the Celery/Maestro
+//! default — see [`flat`]), `merlin run` enqueues a **single** expansion
+//! task carrying only metadata. Workers executing an expansion task split
+//! its sample range into at most `max_branch` children, enqueuing child
+//! expansion tasks (or real step tasks at the leaves). Because real tasks
+//! carry a higher priority than expansion tasks, workers drain simulations
+//! before creating more — the server-stability guard of §2.2.
+
+pub mod flat;
+pub mod plan;
+
+use crate::task::{ExpansionTask, Payload, StepTask, StepTemplate, TaskEnvelope};
+
+/// Where the children of one expansion go. Abstracted so the same expansion
+/// logic runs against the in-process broker, the TCP client, or a test sink.
+pub trait TaskSink {
+    fn push(&mut self, task: TaskEnvelope);
+}
+
+impl TaskSink for Vec<TaskEnvelope> {
+    fn push(&mut self, task: TaskEnvelope) {
+        Vec::push(self, task);
+    }
+}
+
+/// Build the root expansion envelope for `n_samples` of `template`.
+/// This is the *only* message `merlin run` sends for the sample layer: its
+/// size is O(1) in the ensemble size (cf. Fig 3's flat-enqueue comparison).
+pub fn root_task(template: StepTemplate, n_samples: u64, max_branch: u64, queue: &str) -> TaskEnvelope {
+    assert!(max_branch >= 2, "max_branch must be >= 2");
+    assert!(n_samples > 0, "empty ensembles have no root");
+    if n_samples <= template.samples_per_task {
+        // Degenerate: the whole ensemble fits one real task.
+        return TaskEnvelope::new(
+            queue,
+            Payload::Step(StepTask {
+                template,
+                lo: 0,
+                hi: n_samples,
+            }),
+        )
+        .with_content_id();
+    }
+    TaskEnvelope::new(
+        queue,
+        Payload::Expansion(ExpansionTask {
+            template,
+            lo: 0,
+            hi: n_samples,
+            max_branch,
+        }),
+    )
+}
+
+/// Execute one expansion node: split `[lo, hi)` into at most `max_branch`
+/// near-equal chunks and emit each as either a real step task (range fits
+/// `samples_per_task`) or a child expansion task.
+///
+/// Chunk sizes are computed so that every level of the resulting tree is
+/// balanced (sizes differ by at most one leaf group), which is what keeps
+/// the Fig 4 unpack latency logarithmic in N.
+pub fn expand(exp: &ExpansionTask, queue: &str, sink: &mut impl TaskSink) -> ExpandStats {
+    let mut stats = ExpandStats::default();
+    let spt = exp.template.samples_per_task.max(1);
+    let total = exp.hi - exp.lo;
+    debug_assert!(total > spt, "expansion node should cover >1 leaf");
+
+    // Number of leaf tasks under this node. Each child covers a full
+    // subtree of capacity b^(depth-1) leaves (the canonical balanced b-ary
+    // layout): this keeps the total expansion-task count at the
+    // sum-of-level-widths minimum that `plan::HierarchyPlan` predicts,
+    // instead of the ~2x blowup naive even splitting produces.
+    let leaves = total.div_ceil(spt);
+    let mut cap = 1u64;
+    while cap.saturating_mul(exp.max_branch) < leaves {
+        cap = cap.saturating_mul(exp.max_branch);
+    }
+    let samples_per_child = cap * spt;
+
+    let mut lo = exp.lo;
+    while lo < exp.hi {
+        let hi = (lo + samples_per_child).min(exp.hi);
+        if hi - lo <= spt {
+            sink.push(
+                TaskEnvelope::new(
+                    queue,
+                    Payload::Step(StepTask {
+                        template: exp.template.clone(),
+                        lo,
+                        hi,
+                    }),
+                )
+                .with_content_id(),
+            );
+            stats.real += 1;
+        } else {
+            sink.push(TaskEnvelope::new(
+                queue,
+                Payload::Expansion(ExpansionTask {
+                    template: exp.template.clone(),
+                    lo,
+                    hi,
+                    max_branch: exp.max_branch,
+                }),
+            ));
+            stats.expansion += 1;
+        }
+        lo = hi;
+    }
+    stats
+}
+
+/// Children emitted by one [`expand`] call.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ExpandStats {
+    pub expansion: u64,
+    pub real: u64,
+}
+
+/// Fully unroll a hierarchy in-process (producer-side; used by tests, the
+/// flat baseline comparison, and `merlin run --eager`). Returns all real
+/// tasks. Expansion is breadth-first, mirroring queue order.
+pub fn unroll(root: TaskEnvelope, queue: &str) -> Vec<TaskEnvelope> {
+    let mut frontier = vec![root];
+    let mut real = Vec::new();
+    while let Some(t) = frontier.pop() {
+        match t.payload {
+            Payload::Expansion(ref e) => {
+                let mut children = Vec::new();
+                expand(e, queue, &mut children);
+                frontier.extend(children);
+            }
+            Payload::Step(_) => real.push(t),
+            _ => {}
+        }
+    }
+    real.sort_by_key(|t| match &t.payload {
+        Payload::Step(s) => s.lo,
+        _ => u64::MAX,
+    });
+    real
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::WorkSpec;
+
+    fn template(spt: u64) -> StepTemplate {
+        StepTemplate {
+            study_id: "s".into(),
+            step_name: "run".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: spt,
+            seed: 1,
+        }
+    }
+
+    /// Walk a hierarchy counting tasks per kind and checking coverage.
+    fn drain(n: u64, spt: u64, branch: u64) -> (u64, u64, Vec<(u64, u64)>) {
+        let root = root_task(template(spt), n, branch, "q");
+        let mut frontier = vec![root];
+        let (mut gens, mut reals) = (0u64, 0u64);
+        let mut ranges = Vec::new();
+        while let Some(t) = frontier.pop() {
+            match t.payload {
+                Payload::Expansion(ref e) => {
+                    gens += 1;
+                    let mut kids = Vec::new();
+                    expand(e, "q", &mut kids);
+                    frontier.extend(kids);
+                }
+                Payload::Step(s) => {
+                    reals += 1;
+                    ranges.push((s.lo, s.hi));
+                }
+                _ => {}
+            }
+        }
+        ranges.sort_unstable();
+        (gens, reals, ranges)
+    }
+
+    #[test]
+    fn fig2_shape_nine_tasks_branch_three() {
+        // Paper Fig 2: 9 real tasks, <=3 per level => 4 generation tasks
+        // (1 root + 3 mid), 9 real tasks, 3 levels.
+        let (gens, reals, ranges) = drain(9, 1, 3);
+        assert_eq!(gens, 4);
+        assert_eq!(reals, 9);
+        assert_eq!(ranges, (0..9).map(|i| (i, i + 1)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coverage_is_exact_partition() {
+        for (n, spt, b) in [
+            (1u64, 1u64, 2u64),
+            (2, 1, 2),
+            (100, 1, 3),
+            (1000, 7, 10),
+            (12345, 10, 100),
+            (99, 100, 2),   // single leaf
+            (101, 100, 2),  // two leaves
+            (1_000_000, 13, 250),
+        ] {
+            let (_, reals, ranges) = drain(n, spt, b);
+            assert_eq!(reals as usize, ranges.len());
+            // Ranges exactly tile [0, n).
+            let mut cursor = 0;
+            for (lo, hi) in &ranges {
+                assert_eq!(*lo, cursor, "gap/overlap at n={n} spt={spt} b={b}");
+                assert!(*hi > *lo);
+                assert!(*hi - *lo <= spt, "oversized leaf");
+                cursor = *hi;
+            }
+            assert_eq!(cursor, n);
+            assert_eq!(reals, n.div_ceil(spt));
+        }
+    }
+
+    #[test]
+    fn expansion_count_is_logarithmic() {
+        // With branch b and L leaves, generation tasks number
+        // ~ L/(b-1) (a full b-ary tree's internal nodes), never more than L.
+        let (gens, reals, _) = drain(1_000_000, 1, 100);
+        assert_eq!(reals, 1_000_000);
+        assert!(gens < 1_000_000 / 99 + 100, "gens={gens}");
+    }
+
+    #[test]
+    fn depth_matches_log() {
+        // Follow only the first child: depth should be ceil(log_b(leaves)).
+        let template = template(1);
+        let root = root_task(template, 1_000_000, 10, "q");
+        let mut depth = 0;
+        let mut node = root;
+        loop {
+            match node.payload {
+                Payload::Expansion(ref e) => {
+                    depth += 1;
+                    let mut kids = Vec::new();
+                    expand(e, "q", &mut kids);
+                    node = kids.into_iter().next().unwrap();
+                }
+                Payload::Step(_) => break,
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(depth, 6); // ceil(log10(1e6)) = 6
+    }
+
+    #[test]
+    fn single_task_ensemble_has_no_expansion() {
+        let root = root_task(template(10), 5, 3, "q");
+        assert!(matches!(root.payload, Payload::Step(_)));
+    }
+
+    #[test]
+    fn children_respect_branch_limit() {
+        let t = template(1);
+        let exp = ExpansionTask {
+            template: t,
+            lo: 0,
+            hi: 1000,
+            max_branch: 7,
+        };
+        let mut kids = Vec::new();
+        let stats = expand(&exp, "q", &mut kids);
+        assert!(kids.len() <= 7);
+        assert_eq!(stats.expansion + stats.real, kids.len() as u64);
+    }
+
+    #[test]
+    fn unroll_yields_sorted_full_coverage() {
+        let real = unroll(root_task(template(3), 100, 4, "q"), "q");
+        assert_eq!(real.len(), 34); // ceil(100/3)
+        let mut cursor = 0;
+        for t in &real {
+            if let Payload::Step(s) = &t.payload {
+                assert_eq!(s.lo, cursor);
+                cursor = s.hi;
+            } else {
+                panic!("unroll returned non-step");
+            }
+        }
+        assert_eq!(cursor, 100);
+    }
+
+    #[test]
+    fn real_tasks_outrank_expansion_tasks() {
+        let t = template(1);
+        let exp = ExpansionTask {
+            template: t,
+            lo: 0,
+            hi: 4,
+            max_branch: 2,
+        };
+        let mut kids = Vec::new();
+        expand(&exp, "q", &mut kids);
+        for k in kids {
+            match k.payload {
+                Payload::Step(_) => assert_eq!(k.priority, crate::task::PRIORITY_REAL),
+                Payload::Expansion(_) => {
+                    assert_eq!(k.priority, crate::task::PRIORITY_EXPANSION)
+                }
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Static analysis of a task hierarchy: level sizes, task counts, expected
+//! unpack latency. Used by `merlin status`, by the Fig 2 demo, and by the
+//! Fig 3/4 benches to sanity-check measured behaviour against theory.
+
+/// Shape of the hierarchy for `n_samples` with `samples_per_task` leaf
+/// granularity and `max_branch` fanout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchyPlan {
+    pub n_samples: u64,
+    pub samples_per_task: u64,
+    pub max_branch: u64,
+    /// Number of real (leaf) tasks.
+    pub real_tasks: u64,
+    /// Expansion tasks per level, root first. Empty when the ensemble fits
+    /// in a single real task.
+    pub expansion_levels: Vec<u64>,
+}
+
+impl HierarchyPlan {
+    pub fn compute(n_samples: u64, samples_per_task: u64, max_branch: u64) -> Self {
+        assert!(n_samples > 0 && samples_per_task > 0 && max_branch >= 2);
+        let real_tasks = n_samples.div_ceil(samples_per_task);
+        let mut expansion_levels = Vec::new();
+        if real_tasks > 1 {
+            // Walk up from the leaves: each level above has ceil(prev/branch)
+            // nodes until a single root remains.
+            let mut width = real_tasks;
+            while width > 1 {
+                width = width.div_ceil(max_branch);
+                expansion_levels.push(width);
+            }
+            expansion_levels.reverse();
+        }
+        Self {
+            n_samples,
+            samples_per_task,
+            max_branch,
+            real_tasks,
+            expansion_levels,
+        }
+    }
+
+    /// Total expansion (generation) tasks.
+    pub fn expansion_tasks(&self) -> u64 {
+        self.expansion_levels.iter().sum()
+    }
+
+    /// Total messages that transit the broker for the sample layer.
+    pub fn total_tasks(&self) -> u64 {
+        self.expansion_tasks() + self.real_tasks
+    }
+
+    /// Tree depth (expansion levels + the leaf level).
+    pub fn depth(&self) -> usize {
+        self.expansion_levels.len() + 1
+    }
+
+    /// Expected time until the FIRST real task is available, in units of
+    /// one expansion-task execution: a worker must unpack one node per
+    /// level regardless of worker count — this is the Fig 4 floor.
+    pub fn critical_path_expansions(&self) -> u64 {
+        self.expansion_levels.len() as u64
+    }
+
+    /// Expected number of expansion executions performed by `workers`
+    /// workers before every real task is enqueued, assuming perfect load
+    /// balance (the Fig 4 "time before sample processing" model divided by
+    /// per-expansion cost).
+    pub fn unpack_work_per_worker(&self, workers: u64) -> u64 {
+        assert!(workers > 0);
+        self.expansion_tasks().div_ceil(workers).max(self.critical_path_expansions())
+    }
+
+    /// ASCII rendering of the tree (the Fig 2 illustration).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "hierarchy: {} samples, {} per task, branch {}\n",
+            self.n_samples, self.samples_per_task, self.max_branch
+        ));
+        for (i, w) in self.expansion_levels.iter().enumerate() {
+            out.push_str(&format!(
+                "  level {i}: {w} generation task{}\n",
+                if *w == 1 { "" } else { "s" }
+            ));
+        }
+        out.push_str(&format!(
+            "  level {}: {} real task{}\n",
+            self.expansion_levels.len(),
+            self.real_tasks,
+            if self.real_tasks == 1 { "" } else { "s" }
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_plan() {
+        // 9 real tasks, branch 3: levels [1, 3] above 9 leaves.
+        let p = HierarchyPlan::compute(9, 1, 3);
+        assert_eq!(p.real_tasks, 9);
+        assert_eq!(p.expansion_levels, vec![1, 3]);
+        assert_eq!(p.expansion_tasks(), 4);
+        assert_eq!(p.total_tasks(), 13);
+        assert_eq!(p.depth(), 3);
+    }
+
+    #[test]
+    fn single_task_plan_is_flat() {
+        let p = HierarchyPlan::compute(5, 10, 3);
+        assert_eq!(p.real_tasks, 1);
+        assert!(p.expansion_levels.is_empty());
+        assert_eq!(p.depth(), 1);
+        assert_eq!(p.critical_path_expansions(), 0);
+    }
+
+    #[test]
+    fn plan_matches_dynamic_expansion() {
+        use crate::hierarchy::{expand, root_task};
+        use crate::task::{Payload, StepTemplate, WorkSpec};
+        for (n, spt, b) in [(100u64, 1u64, 3u64), (1000, 7, 10), (54321, 10, 100)] {
+            let p = HierarchyPlan::compute(n, spt, b);
+            // Dynamically drain and count.
+            let template = StepTemplate {
+                study_id: "s".into(),
+                step_name: "x".into(),
+                work: WorkSpec::Noop,
+                samples_per_task: spt,
+                seed: 0,
+            };
+            let mut frontier = vec![root_task(template, n, b, "q")];
+            let (mut gens, mut reals) = (0u64, 0u64);
+            while let Some(t) = frontier.pop() {
+                match t.payload {
+                    Payload::Expansion(ref e) => {
+                        gens += 1;
+                        let mut kids = Vec::new();
+                        expand(e, "q", &mut kids);
+                        frontier.extend(kids);
+                    }
+                    Payload::Step(_) => reals += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(reals, p.real_tasks, "n={n}");
+            // Capacity-based splitting never exceeds the sum-of-level-widths
+            // plan (partial subtrees can only shrink levels).
+            assert!(
+                gens <= p.expansion_tasks(),
+                "n={n}: dynamic {gens} vs plan {}",
+                p.expansion_tasks()
+            );
+            assert!(gens >= p.depth() as u64 - 1, "n={n}: too few gens {gens}");
+        }
+    }
+
+    #[test]
+    fn critical_path_is_log_depth() {
+        let p = HierarchyPlan::compute(1_000_000, 1, 10);
+        assert_eq!(p.critical_path_expansions(), 6);
+        let p = HierarchyPlan::compute(40_000_000, 1, 100);
+        assert_eq!(p.critical_path_expansions(), 4); // ceil(log100(4e7)) = 4
+    }
+
+    #[test]
+    fn unpack_work_scales_down_with_workers() {
+        let p = HierarchyPlan::compute(1000, 1, 3);
+        let w1 = p.unpack_work_per_worker(1);
+        let w4 = p.unpack_work_per_worker(4);
+        let w64 = p.unpack_work_per_worker(64);
+        assert!(w4 < w1);
+        assert!(w64 <= w4);
+        // Fig 4: beyond enough workers, the critical path floor dominates.
+        assert!(w64 >= p.critical_path_expansions());
+    }
+
+    #[test]
+    fn render_contains_levels() {
+        let r = HierarchyPlan::compute(9, 1, 3).render();
+        assert!(r.contains("level 0: 1 generation task"));
+        assert!(r.contains("level 2: 9 real tasks"));
+    }
+}

@@ -1,0 +1,42 @@
+//! # Merlin — machine-learning-ready HPC ensemble workflows
+//!
+//! A reproduction of *"Enabling Machine Learning-Ready HPC Ensembles with
+//! Merlin"* (Peterson et al., LLNL 2019) as a three-layer Rust + JAX +
+//! Pallas system: this crate is Layer 3, the coordinator; the scientific
+//! payloads (JAG ICF simulator, ML surrogates, SEIR epidemiology) are
+//! AOT-compiled from JAX/Pallas to HLO and executed through PJRT
+//! ([`runtime`]).
+//!
+//! Subsystem map (see DESIGN.md for the paper-to-module correspondence):
+//!
+//! * [`spec`] — Maestro-style YAML study specifications
+//! * [`dag`] — parameter × sample expansion into a step DAG
+//! * [`task`] — task envelopes (the Celery analog)
+//! * [`hierarchy`] — the paper's hierarchical task-generation algorithm
+//! * [`broker`] — the RabbitMQ analog (priority queues, acks, TCP server)
+//! * [`backend`] — the Redis analog (task state + results)
+//! * [`worker`] — consumers that execute tasks
+//! * [`batch`] — HPC batch-system simulator (Slurm/LSF analog)
+//! * [`flux`] — on-allocation just-in-time launcher (Flux analog)
+//! * [`data`] — Conduit/HDF5-analog hierarchical data + bundling
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//! * [`coordinator`] — `merlin run` / `run-workers` / resubmission
+//! * [`metrics`] — instrumentation for the paper's performance figures
+//! * [`baseline`] — comparator implementations (flat enqueue, fs polling)
+
+pub mod backend;
+pub mod baseline;
+pub mod batch;
+pub mod broker;
+pub mod coordinator;
+pub mod dag;
+pub mod data;
+pub mod flux;
+pub mod hierarchy;
+pub mod metrics;
+pub mod runtime;
+pub mod spec;
+pub mod task;
+pub mod testing;
+pub mod util;
+pub mod worker;

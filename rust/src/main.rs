@@ -1,0 +1,339 @@
+//! `merlin` CLI — the user-facing entrypoints of the workflow framework.
+//!
+//! Local (single-process) mode runs the whole stack in-proc: broker,
+//! backend, workers, orchestrator. Distributed mode splits the same
+//! pieces across processes over TCP (`serve-broker` / `serve-backend` /
+//! `run-workers --broker`), mirroring how the paper deploys RabbitMQ on a
+//! dedicated node with Celery workers on batch allocations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use merlin::backend::state::StateStore;
+use merlin::backend::store::Store;
+use merlin::broker::client::BrokerClient;
+use merlin::broker::core::Broker;
+use merlin::broker::net::BrokerServer;
+use merlin::coordinator::{orchestrate, status_report, RunOptions};
+use merlin::hierarchy::plan::HierarchyPlan;
+use merlin::spec::study::StudySpec;
+use merlin::task::{Payload, WorkSpec};
+use merlin::util::clock::RealClock;
+use merlin::worker::{run_pool, NullSimRunner, SimRunner, WorkerConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("run-workers") => cmd_run_workers(&args[1..]),
+        Some("serve-broker") => cmd_serve_broker(&args[1..]),
+        Some("serve-backend") => cmd_serve_backend(&args[1..]),
+        Some("hierarchy") => cmd_hierarchy(&args[1..]),
+        Some("purge") => cmd_purge(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "merlin — ML-ready HPC ensemble workflows (paper reproduction)
+
+USAGE:
+  merlin run <spec.yaml> [--workers N] [--samples-per-task N] [--branch N]
+             [--timeout SECS] [--artifacts DIR] [--data-root DIR]
+      Run a study end-to-end in one process (broker + workers + DAG
+      orchestration). `--artifacts` enables `builtin:` PJRT simulators.
+
+  merlin run-workers --broker HOST:PORT --queues q1,q2 [-c N] [--idle-ms N]
+      Connect N workers to a remote broker (the multi-allocation shape).
+
+  merlin serve-broker [--addr 127.0.0.1:7777]
+  merlin serve-backend [--addr 127.0.0.1:7778]
+      Run the standalone RabbitMQ/Redis-analog servers.
+
+  merlin hierarchy --samples N [--branch B] [--samples-per-task S]
+      Print the task-generation hierarchy plan (Fig 2).
+
+  merlin purge --broker HOST:PORT --queue NAME
+      Drop all ready messages in a queue."
+    );
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn flag_u64(args: &[String], name: &str, default: u64) -> u64 {
+    flag(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(spec_path) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("usage: merlin run <spec.yaml> [flags]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(spec_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {spec_path}: {e}");
+            return 1;
+        }
+    };
+    let spec = match StudySpec::parse(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let workers = flag_u64(args, "--workers", 4) as usize;
+    let opts = RunOptions {
+        max_branch: flag_u64(args, "--branch", 100),
+        samples_per_task: flag_u64(args, "--samples-per-task", 1),
+        queue_prefix: spec.name.clone(),
+    };
+    let timeout = Duration::from_secs(flag_u64(args, "--timeout", 600));
+    let broker = Broker::default();
+    let state = StateStore::new(Store::new());
+    let queues: Vec<String> = spec
+        .steps
+        .iter()
+        .map(|s| opts.queue_for(&s.name))
+        .collect();
+
+    // PJRT runtime only if requested (builtin: steps need it).
+    let sim: Arc<dyn SimRunner> = match flag(args, "--artifacts") {
+        Some(dir) => match merlin::runtime::RuntimePool::new(&PathBuf::from(dir), 1) {
+            Ok(rt) => Arc::new(merlin::runtime::ModelRunner::new(rt)),
+            Err(e) => {
+                eprintln!("runtime: {e}");
+                return 1;
+            }
+        },
+        None => Arc::new(NullSimRunner),
+    };
+    let data_root = flag(args, "--data-root").map(PathBuf::from);
+
+    println!(
+        "study {} : {} steps, {} parameter combos, {} samples",
+        spec.name,
+        spec.steps.len(),
+        spec.parameter_combinations(),
+        spec.samples.as_ref().map(|s| s.count).unwrap_or(0)
+    );
+    let clock: Arc<dyn merlin::util::clock::Clock> = Arc::new(RealClock::new());
+    let b2 = broker.clone();
+    let st2 = state.clone();
+    let q2 = queues.clone();
+    let dr = data_root.clone();
+    let pool_thread = std::thread::spawn(move || {
+        run_pool(&b2, Some(&st2), None, sim, workers, |i| {
+            let mut cfg = WorkerConfig::simple("unused", clock.clone());
+            cfg.queues = q2.clone();
+            cfg.idle_exit_ms = 1_000;
+            cfg.seed = i as u64;
+            cfg.workspace_root = Some(std::env::temp_dir().join("merlin-workspaces"));
+            cfg.data_root = dr.clone();
+            cfg
+        })
+    });
+    let study_id = merlin::util::ids::fresh("study");
+    let report = match orchestrate(&broker, &state, &spec, &study_id, &opts, timeout) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let pool = pool_thread.join().expect("worker pool");
+    println!(
+        "done: {}/{} samples ok, {} failed, {} instances{}",
+        report.samples_done,
+        report.samples_expected,
+        report.samples_failed,
+        report.instances_run,
+        if report.timed_out { " (TIMED OUT)" } else { "" }
+    );
+    println!(
+        "workers: {} steps, {} expansions, {} samples ok",
+        pool.steps, pool.expansions, pool.samples_ok
+    );
+    print!("{}", status_report(&broker, &state, &[]));
+    i32::from(report.timed_out || report.samples_done < report.samples_expected)
+}
+
+fn cmd_run_workers(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--broker") else {
+        eprintln!("--broker HOST:PORT required");
+        return 2;
+    };
+    let queues: Vec<String> = flag(args, "--queues")
+        .map(|q| q.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| vec!["merlin".into()]);
+    let n = flag_u64(args, "-c", 4) as usize;
+    let idle_ms = flag_u64(args, "--idle-ms", 5_000);
+    println!("connecting {n} workers to {addr} on queues {queues:?}");
+    let mut handles = Vec::new();
+    for w in 0..n {
+        let addr = addr.clone();
+        let queues = queues.clone();
+        handles.push(std::thread::spawn(move || {
+            tcp_worker_loop(&addr, &queues, idle_ms, w)
+        }));
+    }
+    let mut total = 0u64;
+    for h in handles {
+        total += h.join().unwrap_or(0);
+    }
+    println!("workers exited after {total} tasks");
+    0
+}
+
+/// Distributed worker loop over the TCP broker client: supports expansion
+/// tasks (hierarchy unfolds through the remote broker), null and shell
+/// steps, and control messages.
+fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize) -> u64 {
+    let Ok(mut client) = BrokerClient::connect(addr) else {
+        eprintln!("worker {worker_id}: cannot connect to {addr}");
+        return 0;
+    };
+    let qrefs: Vec<&str> = queues.iter().map(String::as_str).collect();
+    let mut done = 0u64;
+    let mut idle = 0u64;
+    loop {
+        match client.fetch(&qrefs, 2, 200) {
+            Ok(Some(d)) => {
+                idle = 0;
+                match &d.task.payload {
+                    Payload::Expansion(e) => {
+                        let mut children = Vec::new();
+                        merlin::hierarchy::expand(e, &d.task.queue, &mut children);
+                        if client.publish_batch(&children).is_ok() {
+                            client.ack(d.tag).ok();
+                        } else {
+                            client.nack(d.tag, true).ok();
+                        }
+                    }
+                    Payload::Step(s) => {
+                        for sample in s.lo..s.hi {
+                            match &s.template.work {
+                                WorkSpec::Null { duration_us } => {
+                                    std::thread::sleep(Duration::from_micros(*duration_us));
+                                }
+                                WorkSpec::Shell { cmd, shell } => {
+                                    let root = std::env::temp_dir().join("merlin-workspaces");
+                                    merlin::worker::exec::run_shell_sample(
+                                        &root,
+                                        &s.template.study_id,
+                                        &s.template.step_name,
+                                        sample,
+                                        cmd,
+                                        shell,
+                                    )
+                                    .ok();
+                                }
+                                _ => {}
+                            }
+                        }
+                        client.ack(d.tag).ok();
+                        done += 1;
+                    }
+                    Payload::Aggregate(a) => {
+                        merlin::data::bundle::aggregate_dir(std::path::Path::new(&a.dir)).ok();
+                        client.ack(d.tag).ok();
+                    }
+                    Payload::Control(_) => {
+                        client.ack(d.tag).ok();
+                        return done;
+                    }
+                }
+            }
+            Ok(None) => {
+                idle += 200;
+                if idle >= idle_ms {
+                    return done;
+                }
+            }
+            Err(_) => return done,
+        }
+    }
+}
+
+fn cmd_serve_broker(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7777".into());
+    match BrokerServer::serve(Broker::default(), &addr) {
+        Ok(server) => {
+            println!("broker listening on {}", server.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve_backend(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7778".into());
+    match merlin::backend::net::BackendServer::serve(Store::new(), &addr) {
+        Ok(server) => {
+            println!("backend listening on {}", server.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {addr}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_hierarchy(args: &[String]) -> i32 {
+    let n = flag_u64(args, "--samples", 9);
+    let b = flag_u64(args, "--branch", 3);
+    let spt = flag_u64(args, "--samples-per-task", 1);
+    let plan = HierarchyPlan::compute(n, spt, b);
+    print!("{}", plan.render());
+    println!(
+        "total: {} generation + {} real = {} tasks, critical path {}",
+        plan.expansion_tasks(),
+        plan.real_tasks,
+        plan.total_tasks(),
+        plan.critical_path_expansions()
+    );
+    0
+}
+
+fn cmd_purge(args: &[String]) -> i32 {
+    let (Some(addr), Some(queue)) = (flag(args, "--broker"), flag(args, "--queue")) else {
+        eprintln!("--broker and --queue required");
+        return 2;
+    };
+    match BrokerClient::connect(&addr).map(|mut c| c.purge(&queue)) {
+        Ok(Ok(n)) => {
+            println!("purged {n} messages from {queue}");
+            0
+        }
+        other => {
+            eprintln!("purge failed: {other:?}");
+            1
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Instrumentation for the paper's performance analysis (§2.3).
+//!
+//! Each figure needs a specific measurement: Fig 3 wants enqueue
+//! time/speed, Fig 4 wants time-to-first-sample, Fig 5 wants the per-task
+//! overhead distribution, Fig 6 wants makespan vs workers. [`Recorder`]
+//! collects per-task timing events from workers with negligible overhead
+//! (a mutex push of 4 u64s); [`series`] holds labeled (x, y) sweeps and
+//! renders them as aligned text tables + CSV, which is how the benches
+//! print "the same rows the paper reports".
+
+pub mod recorder;
+pub mod series;
+
+pub use recorder::{Recorder, TaskTiming};
+pub use series::Series;

@@ -1,0 +1,190 @@
+//! Per-task timing capture.
+//!
+//! The paper defines task overhead as "the time between when a worker
+//! acknowledges receiving a task and when it tells the central RabbitMQ
+//! server it has finished, minus the 1-second sleep interval" (Fig 5).
+//! [`TaskTiming`] captures exactly those events, letting the fig5 bench
+//! compute `(done - received) - work`.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::Micros;
+
+/// One task's lifecycle timestamps (µs on the deployment clock) plus the
+/// intrinsic work duration the payload consumed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskTiming {
+    /// When the worker received (fetched) the task.
+    pub received_us: Micros,
+    /// When the worker reported completion (ack).
+    pub done_us: Micros,
+    /// Intrinsic work time (e.g. the null-sim sleep) to subtract.
+    pub work_us: Micros,
+    /// Kind tag: 0 = step/real, 1 = expansion, 2 = aggregate, 3 = other.
+    pub kind: u8,
+}
+
+impl TaskTiming {
+    /// Workflow overhead in µs: total handling time minus intrinsic work.
+    pub fn overhead_us(&self) -> f64 {
+        (self.done_us.saturating_sub(self.received_us) as f64) - self.work_us as f64
+    }
+}
+
+pub const KIND_REAL: u8 = 0;
+pub const KIND_EXPANSION: u8 = 1;
+pub const KIND_AGGREGATE: u8 = 2;
+pub const KIND_OTHER: u8 = 3;
+
+/// Shared, thread-safe sink for task timings. Cloning shares the buffer.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Arc<Mutex<Vec<TaskTiming>>>,
+    /// When the first *real* task started (Fig 4's "starting of sample
+    /// processing" event).
+    first_real_start: Arc<Mutex<Option<Micros>>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, t: TaskTiming) {
+        if t.kind == KIND_REAL {
+            let mut f = self.first_real_start.lock().unwrap();
+            if f.map(|cur| t.received_us < cur).unwrap_or(true) {
+                *f = Some(t.received_us);
+            }
+        }
+        self.inner.lock().unwrap().push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn timings(&self) -> Vec<TaskTiming> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Overheads (in milliseconds) for tasks of `kind`, or all if None.
+    pub fn overheads_ms(&self, kind: Option<u8>) -> Vec<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|t| kind.map(|k| t.kind == k).unwrap_or(true))
+            .map(|t| t.overhead_us() / 1000.0)
+            .collect()
+    }
+
+    /// Timestamp when the first real (sample) task began — Fig 4's event.
+    pub fn first_real_start_us(&self) -> Option<Micros> {
+        *self.first_real_start.lock().unwrap()
+    }
+
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+        *self.first_real_start.lock().unwrap() = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_subtracts_work() {
+        let t = TaskTiming {
+            received_us: 1_000,
+            done_us: 1_060_000,
+            work_us: 1_000_000,
+            kind: KIND_REAL,
+        };
+        assert!((t.overhead_us() - 59_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_can_go_negative_on_clock_noise() {
+        // Defensive: a virtual-clock task whose accounted work exceeds the
+        // measured span must not underflow.
+        let t = TaskTiming {
+            received_us: 0,
+            done_us: 10,
+            work_us: 100,
+            kind: KIND_REAL,
+        };
+        assert_eq!(t.overhead_us(), -90.0);
+    }
+
+    #[test]
+    fn first_real_start_is_minimum_of_real_only() {
+        let r = Recorder::new();
+        r.record(TaskTiming {
+            received_us: 50,
+            done_us: 60,
+            work_us: 0,
+            kind: KIND_EXPANSION,
+        });
+        assert_eq!(r.first_real_start_us(), None);
+        r.record(TaskTiming {
+            received_us: 200,
+            done_us: 210,
+            work_us: 0,
+            kind: KIND_REAL,
+        });
+        r.record(TaskTiming {
+            received_us: 120,
+            done_us: 130,
+            work_us: 0,
+            kind: KIND_REAL,
+        });
+        assert_eq!(r.first_real_start_us(), Some(120));
+    }
+
+    #[test]
+    fn filtered_overheads() {
+        let r = Recorder::new();
+        for (kind, oh) in [(KIND_REAL, 2_000), (KIND_EXPANSION, 5_000), (KIND_REAL, 4_000)] {
+            r.record(TaskTiming {
+                received_us: 0,
+                done_us: oh,
+                work_us: 0,
+                kind,
+            });
+        }
+        assert_eq!(r.overheads_ms(Some(KIND_REAL)), vec![2.0, 4.0]);
+        assert_eq!(r.overheads_ms(None).len(), 3);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let r = Recorder::new();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..1000 {
+                    r.record(TaskTiming {
+                        received_us: i * 10_000 + j,
+                        done_us: i * 10_000 + j + 5,
+                        work_us: 0,
+                        kind: KIND_REAL,
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.len(), 4000);
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.first_real_start_us(), None);
+    }
+}

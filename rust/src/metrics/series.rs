@@ -1,0 +1,162 @@
+//! Labeled measurement series with text-table and CSV rendering — the
+//! output format of every figure-regenerating bench.
+
+use std::fmt::Write as _;
+
+/// A table of rows keyed by an x value, with named y columns.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.columns.len(), "column count mismatch");
+        self.rows.push((x, ys));
+    }
+
+    /// Aligned human-readable table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let mut header = format!("{:>14}", self.x_label);
+        for c in &self.columns {
+            let _ = write!(header, " {c:>14}");
+        }
+        let _ = writeln!(out, "{header}");
+        for (x, ys) in &self.rows {
+            let mut line = format!("{:>14}", fmt_sig(*x));
+            for y in ys {
+                let _ = write!(line, " {:>14}", fmt_sig(*y));
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+
+    /// CSV (header + rows).
+    pub fn csv(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{}", self.x_label);
+        for c in &self.columns {
+            let _ = write!(out, ",{c}");
+        }
+        let _ = writeln!(out);
+        for (x, ys) in &self.rows {
+            let _ = write!(out, "{}", fmt_sig(*x));
+            for y in ys {
+                let _ = write!(out, ",{}", fmt_sig(*y));
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// Write CSV under `results/` (created on demand).
+    pub fn save_csv(&self, dir: &std::path::Path, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.csv())?;
+        Ok(path)
+    }
+
+    /// Column values by name.
+    pub fn column(&self, name: &str) -> Option<Vec<f64>> {
+        let idx = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|(_, ys)| ys[idx]).collect())
+    }
+
+    pub fn xs(&self) -> Vec<f64> {
+        self.rows.iter().map(|(x, _)| *x).collect()
+    }
+}
+
+/// Format with ~6 significant digits, trimming noise.
+fn fmt_sig(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    if v.fract() == 0.0 && v.abs() < 1e12 {
+        return format!("{}", v as i64);
+    }
+    let mag = v.abs();
+    if !(0.001..1e7).contains(&mag) {
+        format!("{v:.4e}")
+    } else {
+        let s = format!("{v:.4}");
+        let s = s.trim_end_matches('0').trim_end_matches('.');
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut s = Series::new("t", "n", &["a", "b"]);
+        s.push(100.0, vec![1.5, 2.0]);
+        s.push(1000.0, vec![3.25, 4.0]);
+        let t = s.table();
+        assert!(t.contains("== t =="));
+        assert!(t.contains("100"));
+        assert!(t.contains("3.25"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut s = Series::new("t", "x", &["y"]);
+        s.push(1.0, vec![2.0]);
+        assert_eq!(s.csv(), "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn column_lookup() {
+        let mut s = Series::new("t", "x", &["a", "b"]);
+        s.push(1.0, vec![10.0, 20.0]);
+        s.push(2.0, vec![11.0, 21.0]);
+        assert_eq!(s.column("b"), Some(vec![20.0, 21.0]));
+        assert_eq!(s.column("missing"), None);
+        assert_eq!(s.xs(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn mismatched_row_panics() {
+        let mut s = Series::new("t", "x", &["a", "b"]);
+        s.push(1.0, vec![1.0]);
+    }
+
+    #[test]
+    fn sig_formatting() {
+        assert_eq!(fmt_sig(0.0), "0");
+        assert_eq!(fmt_sig(42.0), "42");
+        assert_eq!(fmt_sig(0.5), "0.5");
+        assert_eq!(fmt_sig(1.0e9), "1000000000");
+        assert_eq!(fmt_sig(3.14159e-8), "3.1416e-8");
+    }
+
+    #[test]
+    fn save_csv_writes_file() {
+        let mut s = Series::new("t", "x", &["y"]);
+        s.push(5.0, vec![6.0]);
+        let dir = std::env::temp_dir().join(format!("merlin-series-{}", std::process::id()));
+        let path = s.save_csv(&dir, "test").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x,y\n5,6\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT execution of AOT-compiled artifacts.
+//!
+//! `make artifacts` runs the python compile path once, leaving
+//! `artifacts/<model>.hlo.txt` (HLO **text** — see DESIGN.md for why text,
+//! not serialized protos) plus `artifacts/manifest.json` describing each
+//! model's input/output signature. This module loads those files, compiles
+//! them on the PJRT CPU client at startup, and executes them from the
+//! worker hot path with no Python anywhere.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// An f32 tensor shuttled in/out of the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        let expect: i64 = dims.iter().product();
+        assert_eq!(expect as usize, data.len(), "dims {dims:?} vs len {}", data.len());
+        Self { data, dims }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            data: vec![v],
+            dims: vec![],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Signature of one compiled model, from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSig {
+    pub name: String,
+    /// Input dims per argument.
+    pub inputs: Vec<Vec<i64>>,
+    /// Output dims per tuple element.
+    pub outputs: Vec<Vec<i64>>,
+}
+
+/// PJRT runtime: one compiled executable per model.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    sigs: HashMap<String, ModelSig>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest (if present).
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut sigs = HashMap::new();
+        let manifest = artifacts_dir.join("manifest.json");
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)?;
+            let v = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+            if let Some(models) = v.get("models").as_arr() {
+                for m in models {
+                    let name = m.get("name").as_str().unwrap_or_default().to_string();
+                    let parse_dims = |key: &str| -> Vec<Vec<i64>> {
+                        m.get(key)
+                            .as_arr()
+                            .map(|args| {
+                                args.iter()
+                                    .map(|d| {
+                                        d.as_arr()
+                                            .map(|dd| {
+                                                dd.iter()
+                                                    .filter_map(|x| x.as_i64())
+                                                    .collect()
+                                            })
+                                            .unwrap_or_default()
+                                    })
+                                    .collect()
+                            })
+                            .unwrap_or_default()
+                    };
+                    sigs.insert(
+                        name.clone(),
+                        ModelSig {
+                            inputs: parse_dims("inputs"),
+                            outputs: parse_dims("outputs"),
+                            name,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(Self {
+            client,
+            executables: Mutex::new(HashMap::new()),
+            sigs,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn signature(&self, model: &str) -> Option<&ModelSig> {
+        self.sigs.get(model)
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.sigs.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Compile (or fetch the cached) executable for `model`.
+    fn executable(&self, model: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(model) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{model}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {path:?} missing — run `make artifacts` first"
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {model}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(model.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every model in the manifest (startup warm-up so the
+    /// request path never compiles).
+    pub fn warm_up(&self) -> Result<()> {
+        for name in self.models() {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `model` on f32 inputs; returns the output tuple elements.
+    /// Validates shapes against the manifest when available.
+    pub fn execute(&self, model: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if let Some(sig) = self.sigs.get(model) {
+            if sig.inputs.len() != inputs.len() {
+                bail!(
+                    "{model}: expected {} inputs, got {}",
+                    sig.inputs.len(),
+                    inputs.len()
+                );
+            }
+            for (i, (t, dims)) in inputs.iter().zip(&sig.inputs).enumerate() {
+                if &t.dims != dims {
+                    bail!("{model}: input {i} dims {:?} != manifest {:?}", t.dims, dims);
+                }
+            }
+        }
+        let exe = self.executable(model)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.dims.is_empty() {
+                    // rank-0: reshape to scalar
+                    lit.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"))
+                } else {
+                    lit.reshape(&t.dims).map_err(|e| anyhow!("reshape: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {model}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True, so outputs are a tuple.
+        let elements = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut tensors = Vec::with_capacity(elements.len());
+        for el in elements {
+            let shape = el
+                .array_shape()
+                .map_err(|e| anyhow!("result shape: {e:?}"))?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            let el32 = el
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| anyhow!("convert f32: {e:?}"))?;
+            let data = el32.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            tensors.push(Tensor { data, dims });
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need artifacts; they are exercised by integration tests
+    /// after `make artifacts`. Here we test the artifact-missing path and
+    /// tensor invariants, which need no python.
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let dir = std::env::temp_dir().join(format!("merlin-rt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.models().len(), 0);
+        let err = rt.execute("ghost", &[]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.len(), 4);
+        let s = Tensor::scalar(5.0);
+        assert_eq!(s.dims.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims")]
+    fn tensor_dim_mismatch_panics() {
+        Tensor::new(vec![1.0; 3], vec![2, 2]);
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("merlin-rt-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models":[{"name":"jag","inputs":[[8,5]],"outputs":[[8,23],[8,16],[8,768]]}]}"#,
+        )
+        .unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let sig = rt.signature("jag").unwrap();
+        assert_eq!(sig.inputs, vec![vec![8, 5]]);
+        assert_eq!(sig.outputs.len(), 3);
+        // Input validation fires before artifact loading.
+        let bad = Tensor::new(vec![0.0; 10], vec![2, 5]);
+        let err = rt.execute("jag", &[bad]).unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

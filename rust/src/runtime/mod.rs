@@ -1,0 +1,15 @@
+//! PJRT runtime: executes the AOT-compiled JAX/Pallas artifacts from the
+//! rust hot path (no Python at request time).
+//!
+//! [`client::Runtime`] owns the PJRT CPU client and the compiled
+//! executables; [`models`] adapts specific artifacts (the JAG simulator,
+//! the MLP surrogate, the SEIR epidemiological model) to the worker's
+//! [`crate::worker::SimRunner`] interface and to the study examples.
+
+pub mod client;
+pub mod models;
+pub mod pool;
+
+pub use client::{ModelSig, Runtime, Tensor};
+pub use models::{sample_params, ModelRunner, SeirModel, Surrogate};
+pub use pool::RuntimePool;

@@ -1,0 +1,126 @@
+//! Thread-safe façade over the (thread-bound) PJRT runtime.
+//!
+//! The `xla` crate's `PjRtClient` holds `Rc`s — it is neither `Send` nor
+//! `Sync` — but Merlin workers are threads. [`RuntimePool`] spawns N
+//! service threads, each owning its own [`Runtime`] (own PJRT client, own
+//! compiled executables), behind an mpsc request channel. Callers see a
+//! `Send + Sync` handle with a blocking `execute`.
+//!
+//! N > 1 trades memory (N compiled copies) for execute concurrency; the
+//! Fig-throughput benches size it to the worker count.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::client::{Runtime, Tensor};
+
+struct Request {
+    model: String,
+    inputs: Vec<Tensor>,
+    reply: Sender<Result<Vec<Tensor>, String>>,
+}
+
+/// Cloneable, thread-safe handle to a pool of PJRT service threads.
+pub struct RuntimePool {
+    tx: Mutex<Sender<Request>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl RuntimePool {
+    /// Spawn `n_threads` service threads over `artifacts_dir`. Each thread
+    /// creates its own PJRT client and warms up all manifest models, so
+    /// the first task never pays compile time.
+    pub fn new(artifacts_dir: &std::path::Path, n_threads: usize) -> anyhow::Result<Arc<Self>> {
+        assert!(n_threads >= 1);
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut threads = Vec::with_capacity(n_threads);
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        for i in 0..n_threads {
+            let rx = rx.clone();
+            let dir: PathBuf = artifacts_dir.to_path_buf();
+            let ready = ready_tx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-{i}"))
+                    .spawn(move || service_loop(&dir, rx, ready))
+                    .expect("spawn pjrt thread"),
+            );
+        }
+        drop(ready_tx);
+        // Surface startup errors (bad artifacts dir, compile failures).
+        for _ in 0..n_threads {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pjrt thread died during startup"))?
+                .map_err(|e| anyhow::anyhow!("pjrt startup: {e}"))?;
+        }
+        Ok(Arc::new(Self {
+            tx: Mutex::new(tx),
+            threads,
+        }))
+    }
+
+    /// Execute `model` on one of the service threads (blocking).
+    pub fn execute(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, String> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request {
+                model: model.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| "runtime pool shut down".to_string())?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| "runtime pool dropped request".to_string())?
+    }
+}
+
+impl Drop for RuntimePool {
+    fn drop(&mut self) {
+        // Close the channel; service threads exit on recv error.
+        {
+            let (dead_tx, _) = channel();
+            *self.tx.lock().unwrap() = dead_tx;
+        }
+        for t in self.threads.drain(..) {
+            t.join().ok();
+        }
+    }
+}
+
+fn service_loop(
+    dir: &std::path::Path,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    ready: Sender<Result<(), String>>,
+) {
+    let rt = match Runtime::new(dir).and_then(|rt| {
+        rt.warm_up()?;
+        Ok(rt)
+    }) {
+        Ok(rt) => {
+            ready.send(Ok(())).ok();
+            rt
+        }
+        Err(e) => {
+            ready.send(Err(e.to_string())).ok();
+            return;
+        }
+    };
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(req) = req else { break };
+        let result = rt
+            .execute(&req.model, &req.inputs)
+            .map_err(|e| e.to_string());
+        req.reply.send(result).ok();
+    }
+}

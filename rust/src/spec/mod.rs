@@ -1,0 +1,17 @@
+//! Study specifications — Merlin's Maestro-YAML interface.
+//!
+//! Merlin's user-facing surface is a YAML "study" file: metadata, an `env`
+//! block of variables, a `study` list of steps (each with a shell `cmd`,
+//! optional `depends`, optional per-step `shell` — Merlin's extension over
+//! Maestro), `global.parameters` (the DAG layer of Fig 1), and a `merlin`
+//! block describing samples and resources. [`yaml`] is a from-scratch
+//! YAML-subset parser (block maps, block lists, scalars, literal `|`
+//! blocks, comments); [`study`] types the parsed tree; [`tokens`] performs
+//! `$(NAME)` substitution in step commands.
+
+pub mod study;
+pub mod tokens;
+pub mod yaml;
+
+pub use study::{SampleSpec, SpecError, StepSpec, StudySpec};
+pub use yaml::Yaml;

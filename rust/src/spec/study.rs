@@ -1,0 +1,449 @@
+//! Typed study specification, parsed from the Maestro/Merlin YAML layout.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::yaml::Yaml;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecError(pub String);
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "spec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// One workflow step (`study:` list entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSpec {
+    pub name: String,
+    pub description: String,
+    pub cmd: String,
+    /// Interpreter for `cmd`. Merlin extends Maestro by letting each step
+    /// pick its own shell (bash, python, ...).
+    pub shell: String,
+    /// Step dependencies. A trailing `_*` (e.g. `sim_*`) means "all
+    /// parameterized instances of that step" (Maestro convention).
+    pub depends: Vec<String>,
+    /// Processors requested per task (informs the flux launcher).
+    pub procs: u64,
+}
+
+/// The `merlin.samples` block: the scalable sample layer of Fig 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleSpec {
+    /// Number of samples per parameter combination.
+    pub count: u64,
+    /// Names bound to sample vector components (e.g. [X0, X1]).
+    pub column_labels: Vec<String>,
+    /// RNG seed for sample generation (stands in for the paper's
+    /// precomputed blue-noise sample files).
+    pub seed: u64,
+}
+
+/// A `merlin.resources.workers` group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerGroup {
+    pub name: String,
+    /// Worker threads in this group (Celery `-c N`).
+    pub concurrency: u64,
+    /// Step names this group consumes (["all"] = every step queue).
+    pub steps: Vec<String>,
+}
+
+/// A full study specification.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StudySpec {
+    pub name: String,
+    pub description: String,
+    pub env: BTreeMap<String, String>,
+    /// `global.parameters`: NAME → list of values (coerced to strings,
+    /// as they substitute into shell text).
+    pub parameters: BTreeMap<String, Vec<String>>,
+    pub steps: Vec<StepSpec>,
+    pub samples: Option<SampleSpec>,
+    pub workers: Vec<WorkerGroup>,
+}
+
+impl StudySpec {
+    pub fn parse(text: &str) -> Result<StudySpec, SpecError> {
+        let y = Yaml::parse(text).map_err(|e| SpecError(e.to_string()))?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<StudySpec, SpecError> {
+        let name = y
+            .get("description")
+            .get("name")
+            .as_str()
+            .ok_or_else(|| SpecError("description.name is required".into()))?
+            .to_string();
+        let description = y
+            .get("description")
+            .get("description")
+            .as_str()
+            .unwrap_or("")
+            .to_string();
+
+        let mut env = BTreeMap::new();
+        if let Some(vars) = y.get("env").get("variables").as_map() {
+            for (k, v) in vars {
+                env.insert(
+                    k.clone(),
+                    v.coerce_string()
+                        .ok_or_else(|| SpecError(format!("env variable {k} is not a scalar")))?,
+                );
+            }
+        }
+
+        let mut parameters = BTreeMap::new();
+        if let Some(params) = y.get("global.parameters").as_map() {
+            for (k, v) in params {
+                let values = v
+                    .get("values")
+                    .as_list()
+                    .ok_or_else(|| SpecError(format!("parameter {k} missing values list")))?;
+                if values.is_empty() {
+                    return Err(SpecError(format!("parameter {k} has no values")));
+                }
+                let coerced: Option<Vec<String>> =
+                    values.iter().map(|v| v.coerce_string()).collect();
+                parameters.insert(
+                    k.clone(),
+                    coerced.ok_or_else(|| {
+                        SpecError(format!("parameter {k} has non-scalar values"))
+                    })?,
+                );
+            }
+        }
+
+        let steps_yaml = y
+            .get("study")
+            .as_list()
+            .ok_or_else(|| SpecError("study step list is required".into()))?;
+        if steps_yaml.is_empty() {
+            return Err(SpecError("study has no steps".into()));
+        }
+        let mut steps = Vec::with_capacity(steps_yaml.len());
+        for s in steps_yaml {
+            let name = s
+                .get("name")
+                .as_str()
+                .ok_or_else(|| SpecError("step missing name".into()))?
+                .to_string();
+            let run = s.get("run");
+            let cmd = run
+                .get("cmd")
+                .as_str()
+                .ok_or_else(|| SpecError(format!("step {name} missing run.cmd")))?
+                .to_string();
+            let depends = run
+                .get("depends")
+                .as_list()
+                .map(|l| {
+                    l.iter()
+                        .filter_map(|d| d.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default();
+            steps.push(StepSpec {
+                description: s.get("description").as_str().unwrap_or("").to_string(),
+                cmd,
+                shell: run.get("shell").as_str().unwrap_or("/bin/bash").to_string(),
+                depends,
+                procs: run.get("procs").as_u64().unwrap_or(1),
+                name,
+            });
+        }
+
+        let samples = match y.get("merlin").get("samples") {
+            Yaml::Null => None,
+            s => Some(SampleSpec {
+                count: s.get("count").as_u64().unwrap_or(1),
+                column_labels: s
+                    .get("column_labels")
+                    .as_list()
+                    .map(|l| {
+                        l.iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                seed: s.get("seed").as_u64().unwrap_or(0),
+            }),
+        };
+
+        let mut workers = Vec::new();
+        if let Some(groups) = y.get("merlin").get("resources").get("workers").as_map() {
+            for (gname, g) in groups {
+                workers.push(WorkerGroup {
+                    name: gname.clone(),
+                    concurrency: g.get("concurrency").as_u64().unwrap_or(1),
+                    steps: g
+                        .get("steps")
+                        .as_list()
+                        .map(|l| {
+                            l.iter()
+                                .filter_map(|v| v.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_else(|| vec!["all".to_string()]),
+                });
+            }
+        }
+
+        let spec = StudySpec {
+            name,
+            description,
+            env,
+            parameters,
+            steps,
+            samples,
+            workers,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validation: unique step names; dependencies resolve;
+    /// worker groups reference real steps.
+    pub fn validate(&self) -> Result<(), SpecError> {
+        let mut names = BTreeSet::new();
+        for s in &self.steps {
+            if !names.insert(s.name.as_str()) {
+                return Err(SpecError(format!("duplicate step name {}", s.name)));
+            }
+            if s.name.contains('/') || s.name.contains(' ') {
+                return Err(SpecError(format!(
+                    "step name {:?} must be filesystem-safe",
+                    s.name
+                )));
+            }
+        }
+        for s in &self.steps {
+            for d in &s.depends {
+                let base = d.strip_suffix("_*").unwrap_or(d);
+                if !names.contains(base) {
+                    return Err(SpecError(format!(
+                        "step {} depends on unknown step {d}",
+                        s.name
+                    )));
+                }
+                if base == s.name {
+                    return Err(SpecError(format!("step {} depends on itself", s.name)));
+                }
+            }
+        }
+        for g in &self.workers {
+            for st in &g.steps {
+                if st != "all" && !names.contains(st.as_str()) {
+                    return Err(SpecError(format!(
+                        "worker group {} consumes unknown step {st}",
+                        g.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn step(&self, name: &str) -> Option<&StepSpec> {
+        self.steps.iter().find(|s| s.name == name)
+    }
+
+    /// Number of parameter combinations (cross product of value lists);
+    /// 1 when no parameters are declared.
+    pub fn parameter_combinations(&self) -> u64 {
+        self.parameters
+            .values()
+            .map(|v| v.len() as u64)
+            .product::<u64>()
+            .max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "\
+description:
+  name: demo
+  description: a demo study
+
+env:
+  variables:
+    OUT: ./out
+    N_ITER: 3
+
+global.parameters:
+  REGION:
+    values: [north, south]
+    label: REGION.%%
+  LEVEL:
+    values: [1, 2, 3]
+    label: LEVEL.%%
+
+study:
+  - name: sim
+    description: run the simulator
+    run:
+      cmd: |
+        jag --region $(REGION) --level $(LEVEL) --sample $(MERLIN_SAMPLE_ID)
+      shell: /bin/bash
+      procs: 2
+  - name: collect
+    description: aggregate
+    run:
+      cmd: collect $(OUT)
+      depends: [sim_*]
+
+merlin:
+  samples:
+    count: 100
+    column_labels: [X0, X1, X2]
+    seed: 42
+  resources:
+    workers:
+      simworkers:
+        concurrency: 4
+        steps: [sim]
+      allworkers:
+        concurrency: 2
+        steps: [all]
+";
+
+    #[test]
+    fn parses_full_spec() {
+        let s = StudySpec::parse(SPEC).unwrap();
+        assert_eq!(s.name, "demo");
+        assert_eq!(s.env["N_ITER"], "3");
+        assert_eq!(s.parameters["REGION"], vec!["north", "south"]);
+        assert_eq!(s.parameters["LEVEL"], vec!["1", "2", "3"]);
+        assert_eq!(s.parameter_combinations(), 6);
+        assert_eq!(s.steps.len(), 2);
+        assert_eq!(s.step("sim").unwrap().procs, 2);
+        assert_eq!(s.step("collect").unwrap().depends, vec!["sim_*"]);
+        let samples = s.samples.as_ref().unwrap();
+        assert_eq!(samples.count, 100);
+        assert_eq!(samples.column_labels, vec!["X0", "X1", "X2"]);
+        assert_eq!(samples.seed, 42);
+        assert_eq!(s.workers.len(), 2);
+        assert_eq!(s.workers[1].name, "simworkers");
+    }
+
+    #[test]
+    fn no_samples_block_is_none() {
+        let text = "\
+description:
+  name: tiny
+study:
+  - name: a
+    run:
+      cmd: echo hi
+";
+        let s = StudySpec::parse(text).unwrap();
+        assert!(s.samples.is_none());
+        assert_eq!(s.parameter_combinations(), 1);
+        assert_eq!(s.step("a").unwrap().shell, "/bin/bash");
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        assert!(StudySpec::parse("study:\n  - name: a\n    run:\n      cmd: x\n").is_err());
+    }
+
+    #[test]
+    fn missing_cmd_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: a
+    run:
+      shell: /bin/bash
+";
+        let e = StudySpec::parse(text).unwrap_err();
+        assert!(e.0.contains("run.cmd"), "{e}");
+    }
+
+    #[test]
+    fn duplicate_step_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: a
+    run:
+      cmd: x
+  - name: a
+    run:
+      cmd: y
+";
+        assert!(StudySpec::parse(text).unwrap_err().0.contains("duplicate"));
+    }
+
+    #[test]
+    fn unknown_dependency_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: a
+    run:
+      cmd: x
+      depends: [ghost]
+";
+        assert!(StudySpec::parse(text).unwrap_err().0.contains("unknown step"));
+    }
+
+    #[test]
+    fn self_dependency_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: a
+    run:
+      cmd: x
+      depends: [a_*]
+";
+        assert!(StudySpec::parse(text).unwrap_err().0.contains("itself"));
+    }
+
+    #[test]
+    fn empty_parameter_values_rejected() {
+        let text = "\
+description:
+  name: bad
+global.parameters:
+  P:
+    values: []
+study:
+  - name: a
+    run:
+      cmd: x
+";
+        assert!(StudySpec::parse(text).unwrap_err().0.contains("no values"));
+    }
+
+    #[test]
+    fn worker_group_unknown_step_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: a
+    run:
+      cmd: x
+merlin:
+  resources:
+    workers:
+      g:
+        steps: [ghost]
+";
+        assert!(StudySpec::parse(text).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! `$(NAME)` token substitution in step commands — the Maestro/Merlin
+//! variable mechanism. Tokens come from three scopes, resolved in order:
+//! step-reserved tokens (`MERLIN_SAMPLE_ID`, workspace paths), parameter
+//! values for the current parameter combination, and `env.variables`.
+
+use std::collections::BTreeMap;
+
+/// Substitute `$(KEY)` occurrences using `vars`. Unknown tokens are left
+/// verbatim (Maestro behaviour: the shell may own them).
+pub fn substitute(template: &str, vars: &BTreeMap<String, String>) -> String {
+    let mut out = String::with_capacity(template.len());
+    let bytes = template.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'$' && i + 1 < bytes.len() && bytes[i + 1] == b'(' {
+            if let Some(close) = template[i + 2..].find(')') {
+                let key = &template[i + 2..i + 2 + close];
+                if let Some(val) = vars.get(key) {
+                    out.push_str(val);
+                    i += 2 + close + 1;
+                    continue;
+                }
+            }
+        }
+        // Advance one full UTF-8 character.
+        let ch_len = utf8_len(bytes[i]);
+        out.push_str(&template[i..i + ch_len]);
+        i += ch_len;
+    }
+    out
+}
+
+fn utf8_len(b: u8) -> usize {
+    if b < 0x80 {
+        1
+    } else if b >= 0xF0 {
+        4
+    } else if b >= 0xE0 {
+        3
+    } else {
+        2
+    }
+}
+
+/// All `$(KEY)` token names referenced by a template.
+pub fn references(template: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = template;
+    while let Some(start) = rest.find("$(") {
+        rest = &rest[start + 2..];
+        if let Some(end) = rest.find(')') {
+            out.push(rest[..end].to_string());
+            rest = &rest[end + 1..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vars(pairs: &[(&str, &str)]) -> BTreeMap<String, String> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn basic_substitution() {
+        let v = vars(&[("X", "1"), ("NAME", "jag")]);
+        assert_eq!(
+            substitute("run $(NAME) --x=$(X)", &v),
+            "run jag --x=1"
+        );
+    }
+
+    #[test]
+    fn unknown_tokens_left_verbatim() {
+        let v = vars(&[("X", "1")]);
+        assert_eq!(substitute("echo $(X) $(UNKNOWN)", &v), "echo 1 $(UNKNOWN)");
+    }
+
+    #[test]
+    fn shell_dollar_forms_untouched() {
+        let v = vars(&[("X", "1")]);
+        assert_eq!(substitute("echo ${HOME} $PATH $(X)", &v), "echo ${HOME} $PATH 1");
+    }
+
+    #[test]
+    fn adjacent_and_repeated() {
+        let v = vars(&[("A", "x"), ("B", "y")]);
+        assert_eq!(substitute("$(A)$(B)$(A)", &v), "xyx");
+    }
+
+    #[test]
+    fn unterminated_token_is_literal() {
+        let v = vars(&[("A", "x")]);
+        assert_eq!(substitute("echo $(A", &v), "echo $(A");
+    }
+
+    #[test]
+    fn utf8_template() {
+        let v = vars(&[("X", "λ")]);
+        assert_eq!(substitute("α $(X) ω", &v), "α λ ω");
+    }
+
+    #[test]
+    fn references_found() {
+        assert_eq!(
+            references("a $(X) b $(LONG_NAME) $(X)"),
+            vec!["X", "LONG_NAME", "X"]
+        );
+        assert!(references("no tokens $HOME").is_empty());
+    }
+}

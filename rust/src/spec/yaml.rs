@@ -1,0 +1,689 @@
+//! A YAML-subset parser sufficient for Maestro/Merlin study files.
+//!
+//! Supported: block mappings, block sequences (`- item`), nested structures
+//! by indentation, plain/quoted scalars, literal block scalars (`|`),
+//! comments (`#`), flow sequences (`[a, b]`), and empty values. Anchors,
+//! aliases, multi-document streams, and flow mappings are intentionally
+//! out of scope — Merlin's shipped examples use none of them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    /// Insertion-ordered is unnecessary for our consumers; BTreeMap gives
+    /// deterministic iteration for tests.
+    Map(BTreeMap<String, Yaml>),
+}
+
+impl Yaml {
+    pub fn get(&self, key: &str) -> &Yaml {
+        static NULL: Yaml = Yaml::Null;
+        match self {
+            Yaml::Map(m) => m.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// String coercion: scalars render like YAML would (Merlin substitutes
+    /// numeric parameters into shell commands as text).
+    pub fn coerce_string(&self) -> Option<String> {
+        match self {
+            Yaml::Str(s) => Some(s.clone()),
+            Yaml::Num(n) => Some(if n.fract() == 0.0 && n.abs() < 1e15 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }),
+            Yaml::Bool(b) => Some(b.to_string()),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| {
+            (f >= 0.0 && f.fract() == 0.0).then_some(f as u64)
+        })
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::List(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Yaml>> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Yaml, YamlError> {
+        let lines = preprocess(text);
+        if lines.is_empty() {
+            return Ok(Yaml::Null);
+        }
+        let mut pos = 0;
+        let v = parse_block(&lines, &mut pos, lines[0].indent)?;
+        if pos != lines.len() {
+            return Err(YamlError {
+                line: lines[pos].number,
+                msg: "trailing content at lower indentation".into(),
+            });
+        }
+        Ok(v)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+#[derive(Debug)]
+struct Line {
+    indent: usize,
+    content: String,
+    number: usize,
+    /// Raw text (post-indent), kept verbatim for literal block scalars.
+    raw: String,
+}
+
+/// Strip comments/blank lines; record indentation.
+fn preprocess(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let indent = raw_line.len() - raw_line.trim_start_matches(' ').len();
+        let body = &raw_line[indent..];
+        if body.starts_with('\t') {
+            // YAML forbids tabs in indentation; treat as content error later.
+        }
+        let without_comment = strip_comment(body);
+        let trimmed = without_comment.trim_end();
+        if trimmed.is_empty() {
+            // Keep blank lines only for literal blocks — handled separately
+            // by capturing raw text; block parser skips empties.
+            out.push(Line {
+                indent: usize::MAX, // marker: blank
+                content: String::new(),
+                number: i + 1,
+                raw: raw_line.to_string(),
+            });
+            continue;
+        }
+        if trimmed == "---" {
+            continue; // single-document marker
+        }
+        out.push(Line {
+            indent,
+            content: trimmed.to_string(),
+            number: i + 1,
+            raw: raw_line.to_string(),
+        });
+    }
+    // Drop leading/trailing blanks; keep interior ones (for | blocks).
+    while out.first().map(|l| l.indent == usize::MAX).unwrap_or(false) {
+        out.remove(0);
+    }
+    while out.last().map(|l| l.indent == usize::MAX).unwrap_or(false) {
+        out.pop();
+    }
+    out
+}
+
+/// Remove a trailing comment, respecting quotes.
+fn strip_comment(s: &str) -> String {
+    let mut out = String::new();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut prev_ws = true;
+    for c in s.chars() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double && prev_ws => return out,
+            _ => {}
+        }
+        prev_ws = c.is_whitespace();
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    // Skip blank markers.
+    while *pos < lines.len() && lines[*pos].indent == usize::MAX {
+        *pos += 1;
+    }
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    let line = &lines[*pos];
+    if line.indent < indent {
+        return Ok(Yaml::Null);
+    }
+    if line.content.starts_with("- ") || line.content == "-" {
+        parse_list(lines, pos, line.indent)
+    } else {
+        parse_map(lines, pos, line.indent)
+    }
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut items = Vec::new();
+    loop {
+        while *pos < lines.len() && lines[*pos].indent == usize::MAX {
+            *pos += 1;
+        }
+        if *pos >= lines.len() || lines[*pos].indent != indent {
+            break;
+        }
+        let line = &lines[*pos];
+        if !(line.content.starts_with("- ") || line.content == "-") {
+            break;
+        }
+        let number = line.number;
+        let rest = line.content[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // Nested block under the dash.
+            items.push(parse_block(lines, pos, indent + 1)?);
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // Inline first key of a map item: "- name: value".
+            // Re-parse as a map whose first line is `rest` at a virtual
+            // indent of indent+2 followed by subsequent deeper lines.
+            let virtual_indent = indent + 2;
+            let first = parse_map_entry(&rest, number)?;
+            let mut map = BTreeMap::new();
+            let (key, inline_val) = first;
+            if let Some(v) = inline_val {
+                map.insert(key, v);
+            } else {
+                let v = parse_nested_or_null(lines, pos, virtual_indent)?;
+                map.insert(key, v);
+            }
+            // Continue map at virtual indent.
+            while *pos < lines.len() {
+                while *pos < lines.len() && lines[*pos].indent == usize::MAX {
+                    *pos += 1;
+                }
+                if *pos >= lines.len() || lines[*pos].indent < virtual_indent {
+                    break;
+                }
+                let l = &lines[*pos];
+                if l.indent != virtual_indent || l.content.starts_with("- ") {
+                    break;
+                }
+                let number = l.number;
+                let content = l.content.clone();
+                *pos += 1;
+                let (k, v) = parse_map_entry(&content, number)?;
+                let v = match v {
+                    Some(v) => v,
+                    None => parse_nested_or_null(lines, pos, virtual_indent + 1)?,
+                };
+                map.insert(k, v);
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            items.push(parse_scalar(&rest));
+        }
+    }
+    Ok(Yaml::List(items))
+}
+
+/// Parse "key:" or "key: value"; returns (key, Some(value)) for inline
+/// scalar values (including literal-block markers resolved later by caller),
+/// or (key, None) when the value is nested.
+fn parse_map_entry(content: &str, number: usize) -> Result<(String, Option<Yaml>), YamlError> {
+    let idx = find_key_colon(content).ok_or(YamlError {
+        line: number,
+        msg: format!("expected 'key:' in {content:?}"),
+    })?;
+    let key = unquote(content[..idx].trim());
+    let rest = content[idx + 1..].trim();
+    if rest.is_empty() {
+        Ok((key, None))
+    } else if rest == "|" || rest == "|-" {
+        // Literal block marker with no inline text: caller must collect the
+        // block; we signal via a sentinel handled in parse_map.
+        Ok((key, Some(Yaml::Str(format!("\u{0}literal{rest}")))))
+    } else {
+        Ok((key, Some(parse_scalar(rest))))
+    }
+}
+
+/// Find the colon separating a key from its value (respecting quotes).
+fn find_key_colon(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_nested_or_null(lines: &[Line], pos: &mut usize, min_indent: usize) -> Result<Yaml, YamlError> {
+    while *pos < lines.len() && lines[*pos].indent == usize::MAX {
+        *pos += 1;
+    }
+    if *pos < lines.len() && lines[*pos].indent >= min_indent {
+        parse_block(lines, pos, lines[*pos].indent)
+    } else {
+        Ok(Yaml::Null)
+    }
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut map = BTreeMap::new();
+    loop {
+        while *pos < lines.len() && lines[*pos].indent == usize::MAX {
+            *pos += 1;
+        }
+        if *pos >= lines.len() || lines[*pos].indent != indent {
+            break;
+        }
+        let line = &lines[*pos];
+        if line.content.starts_with("- ") {
+            break;
+        }
+        let number = line.number;
+        let content = line.content.clone();
+        *pos += 1;
+        let (key, inline) = parse_map_entry(&content, number)?;
+        let value = match inline {
+            Some(Yaml::Str(s)) if s.starts_with('\u{0}') => {
+                // Literal block scalar: collect deeper raw lines verbatim.
+                let chomp_keep_last = !s.ends_with('-');
+                collect_literal(lines, pos, indent, chomp_keep_last)
+            }
+            Some(v) => v,
+            None => parse_nested_or_null(lines, pos, indent + 1)?,
+        };
+        map.insert(key, value);
+    }
+    Ok(Yaml::Map(map))
+}
+
+/// Collect the raw lines of a `|` literal block (indented deeper than the
+/// key), preserving interior blank lines and relative indentation.
+fn collect_literal(lines: &[Line], pos: &mut usize, key_indent: usize, keep_newline: bool) -> Yaml {
+    let mut collected: Vec<&Line> = Vec::new();
+    let mut block_indent: Option<usize> = None;
+    while *pos < lines.len() {
+        let l = &lines[*pos];
+        if l.indent == usize::MAX {
+            collected.push(l);
+            *pos += 1;
+            continue;
+        }
+        if l.indent <= key_indent {
+            break;
+        }
+        block_indent.get_or_insert(l.indent);
+        collected.push(l);
+        *pos += 1;
+    }
+    // Trim trailing blanks collected past the block end.
+    while collected.last().map(|l| l.indent == usize::MAX).unwrap_or(false) {
+        collected.pop();
+    }
+    let base = block_indent.unwrap_or(key_indent + 2);
+    let mut text = String::new();
+    for l in &collected {
+        if l.indent == usize::MAX {
+            text.push('\n');
+        } else {
+            let raw = &l.raw;
+            let strip = base.min(raw.len() - raw.trim_start_matches(' ').len());
+            text.push_str(&raw[strip..]);
+            text.push('\n');
+        }
+    }
+    if keep_newline {
+        // Clip mode (`|`): exactly one trailing newline.
+        while text.ends_with("\n\n") {
+            text.pop();
+        }
+    } else {
+        // Strip mode (`|-`): none.
+        while text.ends_with('\n') {
+            text.pop();
+        }
+    }
+    Yaml::Str(text)
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    if t.starts_with('[') && t.ends_with(']') {
+        // Flow sequence of scalars.
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::List(Vec::new());
+        }
+        return Yaml::List(
+            split_flow(inner)
+                .into_iter()
+                .map(|item| parse_scalar(item.trim()))
+                .collect(),
+        );
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Yaml::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "null" | "~" | "" => return Yaml::Null,
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        if !t.contains(|c: char| c.is_alphabetic() && c != 'e' && c != 'E')
+            || t.chars().all(|c| c.is_ascii_digit() || ".eE+-".contains(c))
+        {
+            return Yaml::Num(n);
+        }
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Split a flow-sequence body on commas outside quotes.
+fn split_flow(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '[' if !in_single && !in_double => depth += 1,
+            ']' if !in_single && !in_double => depth -= 1,
+            ',' if depth == 0 && !in_single && !in_double => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Yaml::parse("a: 1").unwrap().get("a").as_f64(), Some(1.0));
+        assert_eq!(
+            Yaml::parse("a: hello world").unwrap().get("a").as_str(),
+            Some("hello world")
+        );
+        assert_eq!(
+            Yaml::parse("a: true").unwrap().get("a").as_bool(),
+            Some(true)
+        );
+        assert_eq!(Yaml::parse("a: null").unwrap().get("a"), &Yaml::Null);
+        assert_eq!(Yaml::parse("a: -2.5e3").unwrap().get("a").as_f64(), Some(-2500.0));
+        assert_eq!(
+            Yaml::parse("a: \"quoted: #text\"").unwrap().get("a").as_str(),
+            Some("quoted: #text")
+        );
+    }
+
+    #[test]
+    fn nested_maps() {
+        let y = Yaml::parse("outer:\n  inner:\n    k: v\n  other: 2\n").unwrap();
+        assert_eq!(y.get("outer").get("inner").get("k").as_str(), Some("v"));
+        assert_eq!(y.get("outer").get("other").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn block_lists() {
+        let y = Yaml::parse("items:\n  - one\n  - 2\n  - true\n").unwrap();
+        let l = y.get("items").as_list().unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[0].as_str(), Some("one"));
+        assert_eq!(l[1].as_f64(), Some(2.0));
+        assert_eq!(l[2].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn list_of_maps_maestro_style() {
+        let text = "\
+study:
+  - name: build
+    description: compile
+    run:
+      cmd: make
+  - name: test
+    run:
+      cmd: make test
+";
+        let y = Yaml::parse(text).unwrap();
+        let steps = y.get("study").as_list().unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].get("name").as_str(), Some("build"));
+        assert_eq!(steps[0].get("run").get("cmd").as_str(), Some("make"));
+        assert_eq!(steps[1].get("run").get("cmd").as_str(), Some("make test"));
+    }
+
+    #[test]
+    fn literal_block_scalar() {
+        let text = "\
+run:
+  cmd: |
+    echo start
+    python sim.py --x $(X)
+    echo done
+  shell: /bin/bash
+";
+        let y = Yaml::parse(text).unwrap();
+        // `|` is clip mode: exactly one trailing newline (YAML spec).
+        assert_eq!(
+            y.get("run").get("cmd").as_str(),
+            Some("echo start\npython sim.py --x $(X)\necho done\n")
+        );
+        assert_eq!(y.get("run").get("shell").as_str(), Some("/bin/bash"));
+    }
+
+    #[test]
+    fn literal_block_preserves_relative_indent() {
+        let text = "cmd: |\n  if true; then\n    echo yes\n  fi\n";
+        let y = Yaml::parse(text).unwrap();
+        assert_eq!(
+            y.get("cmd").as_str(),
+            Some("if true; then\n  echo yes\nfi\n")
+        );
+        // `|-` is strip mode: no trailing newline.
+        let y = Yaml::parse("cmd: |-\n  echo a\n  echo b\n").unwrap();
+        assert_eq!(y.get("cmd").as_str(), Some("echo a\necho b"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = "# heading\na: 1\n\n# interlude\nb: 2  # trailing\n";
+        let y = Yaml::parse(text).unwrap();
+        assert_eq!(y.get("a").as_f64(), Some(1.0));
+        assert_eq!(y.get("b").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn flow_sequences() {
+        let y = Yaml::parse("vals: [1, 2.5, x, 'q u o']").unwrap();
+        let l = y.get("vals").as_list().unwrap();
+        assert_eq!(l[0].as_f64(), Some(1.0));
+        assert_eq!(l[1].as_f64(), Some(2.5));
+        assert_eq!(l[2].as_str(), Some("x"));
+        assert_eq!(l[3].as_str(), Some("q u o"));
+        assert_eq!(
+            Yaml::parse("e: []").unwrap().get("e").as_list().unwrap().len(),
+            0
+        );
+    }
+
+    #[test]
+    fn nested_list_under_dash() {
+        let text = "m:\n  -\n    a: 1\n  -\n    a: 2\n";
+        let y = Yaml::parse(text).unwrap();
+        let l = y.get("m").as_list().unwrap();
+        assert_eq!(l[0].get("a").as_f64(), Some(1.0));
+        assert_eq!(l[1].get("a").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn urls_are_strings_not_comments() {
+        // ':' inside value and '#' not preceded by whitespace
+        let y = Yaml::parse("url: http://host:123/path#frag").unwrap();
+        assert_eq!(y.get("url").as_str(), Some("http://host:123/path#frag"));
+    }
+
+    #[test]
+    fn document_marker_skipped() {
+        let y = Yaml::parse("---\na: 1\n").unwrap();
+        assert_eq!(y.get("a").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn empty_input_is_null() {
+        assert_eq!(Yaml::parse("").unwrap(), Yaml::Null);
+        assert_eq!(Yaml::parse("\n# only a comment\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn coerce_string_renders_numbers() {
+        assert_eq!(Yaml::Num(3.0).coerce_string().as_deref(), Some("3"));
+        assert_eq!(Yaml::Num(0.25).coerce_string().as_deref(), Some("0.25"));
+        assert_eq!(Yaml::Bool(true).coerce_string().as_deref(), Some("true"));
+        assert_eq!(Yaml::Null.coerce_string(), None);
+    }
+
+    #[test]
+    fn full_merlin_spec_parses() {
+        let text = "\
+description:
+  name: null_study
+  description: overhead measurement
+
+env:
+  variables:
+    OUTPUT_PATH: ./studies
+
+global.parameters:
+  TRIAL:
+    values: [1, 2, 3]
+    label: TRIAL.%%
+
+study:
+  - name: sleep
+    description: null simulation
+    run:
+      cmd: |
+        sleep 1
+        # sample $(MERLIN_SAMPLE_ID)
+      shell: /bin/bash
+  - name: collect
+    description: gather
+    run:
+      cmd: echo collect
+      depends: [sleep_*]
+
+merlin:
+  samples:
+    generate:
+      cmd: spellbook make-samples
+    file: samples.npy
+    column_labels: [X0, X1]
+  resources:
+    task_server: celery
+    workers:
+      allworkers:
+        args: -c 40
+        steps: [all]
+";
+        let y = Yaml::parse(text).unwrap();
+        assert_eq!(
+            y.get("description").get("name").as_str(),
+            Some("null_study")
+        );
+        let steps = y.get("study").as_list().unwrap();
+        assert_eq!(steps.len(), 2);
+        assert!(steps[0].get("run").get("cmd").as_str().unwrap().contains("sleep 1"));
+        let deps = steps[1].get("run").get("depends").as_list().unwrap();
+        assert_eq!(deps[0].as_str(), Some("sleep_*"));
+        let labels = y.get("merlin").get("samples").get("column_labels").as_list().unwrap();
+        assert_eq!(labels.len(), 2);
+        assert_eq!(
+            y.get("global.parameters").get("TRIAL").get("values").as_list().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            y.get("merlin").get("resources").get("workers").get("allworkers").get("args").as_str(),
+            Some("-c 40")
+        );
+    }
+}

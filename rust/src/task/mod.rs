@@ -1,0 +1,225 @@
+//! Task model: the unit of work that flows through the broker.
+//!
+//! Mirrors Celery's task envelope as Merlin uses it: a queue name, a
+//! priority (Merlin explicitly prioritizes *real* simulation tasks over
+//! *task-creation* tasks — §2.2), a retry budget, and a payload. Payloads
+//! are either **expansion** tasks (the hierarchical task-generation
+//! algorithm's metadata nodes — the white diamonds of Fig 2), **step**
+//! tasks (actual workflow steps — the gray squares), **aggregate** tasks
+//! (the §3.1 bundle-collection stage), or **control** messages.
+
+pub mod ser;
+
+pub use ser::{task_from_json, task_to_json};
+
+/// Priority assigned to real (simulation / step) tasks. Higher drains first.
+pub const PRIORITY_REAL: u8 = 5;
+/// Priority assigned to task-creation (expansion) tasks. Keeping this below
+/// `PRIORITY_REAL` is the §2.2 guard against producers outpacing consumers.
+pub const PRIORITY_EXPANSION: u8 = 3;
+/// Priority of aggregation/cleanup tasks (run after their leaf directory
+/// fills; paper's JAG study runs them opportunistically).
+pub const PRIORITY_AGGREGATE: u8 = 4;
+
+/// What a leaf (real) task actually executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkSpec {
+    /// The paper's `sleep 1` null simulation, generalized: busy-wait or
+    /// sleep for `duration_us` of (virtual or real) time.
+    Null { duration_us: u64 },
+    /// A shell command run as a subprocess in a task-unique workspace.
+    /// `shell` is the interpreter (Merlin extends Maestro with per-step
+    /// shells: bash, python, ...).
+    Shell { cmd: String, shell: String },
+    /// A PJRT-backed simulator from the model registry (JAG, HYDRA-like,
+    /// SEIR, surrogate training...). `model` names an artifact; the sample
+    /// inputs are derived deterministically from (study seed, sample index).
+    Builtin { model: String },
+    /// No-op (used by control/bookkeeping steps in tests).
+    Noop,
+}
+
+/// Template for stamping out leaf tasks from an expansion node. Carried in
+/// the expansion metadata so the producer never materializes leaves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTemplate {
+    pub study_id: String,
+    pub step_name: String,
+    pub work: WorkSpec,
+    /// Samples executed serially inside one leaf task (the §3.1 JAG study
+    /// bundles 10 simulations per task).
+    pub samples_per_task: u64,
+    /// Seed from which per-sample inputs are derived.
+    pub seed: u64,
+}
+
+/// Hierarchical task-generation metadata (§2.2, Figs 1-2): a node covering
+/// the half-open sample range `[lo, hi)`. Executing it enqueues up to
+/// `max_branch` children; ranges at or below `samples_per_task` become real
+/// step tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpansionTask {
+    pub template: StepTemplate,
+    pub lo: u64,
+    pub hi: u64,
+    pub max_branch: u64,
+}
+
+/// A real unit of work covering samples `[lo, hi)` of a step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepTask {
+    pub template: StepTemplate,
+    pub lo: u64,
+    pub hi: u64,
+}
+
+/// Collect `count` bundle files under `dir` into one aggregated file
+/// (§3.1: 100 bundle files x 10 sims -> one 1000-sim file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateTask {
+    pub study_id: String,
+    pub dir: String,
+    pub expected_bundles: u64,
+}
+
+/// Control-plane messages delivered through the same queues.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlMsg {
+    /// Ask one worker to exit after acking.
+    StopWorker,
+    /// Marker used by tests and by `merlin purge` draining.
+    Ping { token: String },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Expansion(ExpansionTask),
+    Step(StepTask),
+    Aggregate(AggregateTask),
+    Control(ControlMsg),
+}
+
+impl Payload {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Expansion(_) => "expansion",
+            Payload::Step(_) => "step",
+            Payload::Aggregate(_) => "aggregate",
+            Payload::Control(_) => "control",
+        }
+    }
+
+    /// The default priority class for this payload (§2.2 policy).
+    pub fn default_priority(&self) -> u8 {
+        match self {
+            Payload::Expansion(_) => PRIORITY_EXPANSION,
+            Payload::Step(_) => PRIORITY_REAL,
+            Payload::Aggregate(_) => PRIORITY_AGGREGATE,
+            Payload::Control(_) => PRIORITY_REAL,
+        }
+    }
+}
+
+/// The envelope that actually sits in a broker queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskEnvelope {
+    pub id: String,
+    pub queue: String,
+    pub priority: u8,
+    pub retries_left: u32,
+    pub payload: Payload,
+}
+
+impl TaskEnvelope {
+    /// Build an envelope with the payload's default priority and the
+    /// standard retry budget.
+    pub fn new(queue: impl Into<String>, payload: Payload) -> Self {
+        let priority = payload.default_priority();
+        Self {
+            id: crate::util::ids::fresh("task"),
+            queue: queue.into(),
+            priority,
+            retries_left: 3,
+            payload,
+        }
+    }
+
+    /// Deterministic id for resubmission idempotency: the same (study,
+    /// step, range) always maps to the same id.
+    pub fn with_content_id(mut self) -> Self {
+        if let Payload::Step(s) = &self.payload {
+            self.id = crate::util::ids::content_id(
+                "task",
+                &[
+                    &s.template.study_id,
+                    &s.template.step_name,
+                    &s.lo.to_string(),
+                    &s.hi.to_string(),
+                ],
+            );
+        }
+        self
+    }
+
+    pub fn priority(mut self, p: u8) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn template() -> StepTemplate {
+        StepTemplate {
+            study_id: "s1".into(),
+            step_name: "run".into(),
+            work: WorkSpec::Null { duration_us: 1000 },
+            samples_per_task: 1,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn default_priorities_follow_policy() {
+        let exp = Payload::Expansion(ExpansionTask {
+            template: template(),
+            lo: 0,
+            hi: 10,
+            max_branch: 3,
+        });
+        let step = Payload::Step(StepTask {
+            template: template(),
+            lo: 0,
+            hi: 1,
+        });
+        assert!(step.default_priority() > exp.default_priority());
+    }
+
+    #[test]
+    fn content_id_stable_for_same_range() {
+        let mk = |lo, hi| {
+            TaskEnvelope::new(
+                "q",
+                Payload::Step(StepTask {
+                    template: template(),
+                    lo,
+                    hi,
+                }),
+            )
+            .with_content_id()
+        };
+        assert_eq!(mk(0, 10).id, mk(0, 10).id);
+        assert_ne!(mk(0, 10).id, mk(10, 20).id);
+    }
+
+    #[test]
+    fn envelope_builder() {
+        let e = TaskEnvelope::new("jobs", Payload::Control(ControlMsg::StopWorker)).priority(9);
+        assert_eq!(e.queue, "jobs");
+        assert_eq!(e.priority, 9);
+        assert_eq!(e.retries_left, 3);
+        assert_eq!(e.payload.kind(), "control");
+    }
+}

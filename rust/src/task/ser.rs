@@ -1,0 +1,270 @@
+//! JSON (de)serialization of task envelopes — the broker wire format.
+//!
+//! Hand-rolled against `util::json` (no serde in the offline vendor). The
+//! format is versioned so persisted queues survive upgrades.
+
+use super::*;
+use crate::util::json::{to_string, Json};
+
+const WIRE_VERSION: u64 = 1;
+
+// NOTE: numbers ride in JSON as f64, so integer fields are exact only up
+// to 2^53. Sample indices (<= 4e7 in the paper's largest study), retry
+// counts, priorities, and seeds all fit comfortably; seeds are documented
+// as 53-bit in the study spec.
+
+pub fn task_to_json(t: &TaskEnvelope) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(WIRE_VERSION as f64)),
+        ("id", Json::str(&t.id)),
+        ("queue", Json::str(&t.queue)),
+        ("priority", Json::num(t.priority as f64)),
+        ("retries_left", Json::num(t.retries_left as f64)),
+        ("payload", payload_to_json(&t.payload)),
+    ])
+}
+
+/// Serialize to the compact wire string.
+pub fn encode(t: &TaskEnvelope) -> String {
+    to_string(&task_to_json(t))
+}
+
+pub fn decode(text: &str) -> Result<TaskEnvelope, String> {
+    let v = Json::parse(text).map_err(|e| e.to_string())?;
+    task_from_json(&v)
+}
+
+pub fn task_from_json(v: &Json) -> Result<TaskEnvelope, String> {
+    let version = v.get("v").as_u64().ok_or("missing version")?;
+    if version != WIRE_VERSION {
+        return Err(format!("unsupported wire version {version}"));
+    }
+    Ok(TaskEnvelope {
+        id: v.get("id").as_str().ok_or("missing id")?.to_string(),
+        queue: v.get("queue").as_str().ok_or("missing queue")?.to_string(),
+        priority: v.get("priority").as_u64().ok_or("missing priority")? as u8,
+        retries_left: v.get("retries_left").as_u64().ok_or("missing retries")? as u32,
+        payload: payload_from_json(v.get("payload"))?,
+    })
+}
+
+fn payload_to_json(p: &Payload) -> Json {
+    match p {
+        Payload::Expansion(e) => Json::obj(vec![
+            ("kind", Json::str("expansion")),
+            ("template", template_to_json(&e.template)),
+            ("lo", Json::num(e.lo as f64)),
+            ("hi", Json::num(e.hi as f64)),
+            ("max_branch", Json::num(e.max_branch as f64)),
+        ]),
+        Payload::Step(s) => Json::obj(vec![
+            ("kind", Json::str("step")),
+            ("template", template_to_json(&s.template)),
+            ("lo", Json::num(s.lo as f64)),
+            ("hi", Json::num(s.hi as f64)),
+        ]),
+        Payload::Aggregate(a) => Json::obj(vec![
+            ("kind", Json::str("aggregate")),
+            ("study_id", Json::str(&a.study_id)),
+            ("dir", Json::str(&a.dir)),
+            ("expected_bundles", Json::num(a.expected_bundles as f64)),
+        ]),
+        Payload::Control(c) => match c {
+            ControlMsg::StopWorker => Json::obj(vec![
+                ("kind", Json::str("control")),
+                ("op", Json::str("stop_worker")),
+            ]),
+            ControlMsg::Ping { token } => Json::obj(vec![
+                ("kind", Json::str("control")),
+                ("op", Json::str("ping")),
+                ("token", Json::str(token)),
+            ]),
+        },
+    }
+}
+
+fn payload_from_json(v: &Json) -> Result<Payload, String> {
+    match v.get("kind").as_str() {
+        Some("expansion") => Ok(Payload::Expansion(ExpansionTask {
+            template: template_from_json(v.get("template"))?,
+            lo: v.get("lo").as_u64().ok_or("missing lo")?,
+            hi: v.get("hi").as_u64().ok_or("missing hi")?,
+            max_branch: v.get("max_branch").as_u64().ok_or("missing max_branch")?,
+        })),
+        Some("step") => Ok(Payload::Step(StepTask {
+            template: template_from_json(v.get("template"))?,
+            lo: v.get("lo").as_u64().ok_or("missing lo")?,
+            hi: v.get("hi").as_u64().ok_or("missing hi")?,
+        })),
+        Some("aggregate") => Ok(Payload::Aggregate(AggregateTask {
+            study_id: v.get("study_id").as_str().ok_or("missing study_id")?.into(),
+            dir: v.get("dir").as_str().ok_or("missing dir")?.into(),
+            expected_bundles: v
+                .get("expected_bundles")
+                .as_u64()
+                .ok_or("missing expected_bundles")?,
+        })),
+        Some("control") => match v.get("op").as_str() {
+            Some("stop_worker") => Ok(Payload::Control(ControlMsg::StopWorker)),
+            Some("ping") => Ok(Payload::Control(ControlMsg::Ping {
+                token: v.get("token").as_str().unwrap_or("").to_string(),
+            })),
+            other => Err(format!("unknown control op {other:?}")),
+        },
+        other => Err(format!("unknown payload kind {other:?}")),
+    }
+}
+
+fn template_to_json(t: &StepTemplate) -> Json {
+    Json::obj(vec![
+        ("study_id", Json::str(&t.study_id)),
+        ("step_name", Json::str(&t.step_name)),
+        ("work", work_to_json(&t.work)),
+        ("samples_per_task", Json::num(t.samples_per_task as f64)),
+        ("seed", Json::num(t.seed as f64)),
+    ])
+}
+
+fn template_from_json(v: &Json) -> Result<StepTemplate, String> {
+    Ok(StepTemplate {
+        study_id: v.get("study_id").as_str().ok_or("missing study_id")?.into(),
+        step_name: v.get("step_name").as_str().ok_or("missing step_name")?.into(),
+        work: work_from_json(v.get("work"))?,
+        samples_per_task: v
+            .get("samples_per_task")
+            .as_u64()
+            .ok_or("missing samples_per_task")?,
+        seed: v.get("seed").as_u64().ok_or("missing seed")?,
+    })
+}
+
+fn work_to_json(w: &WorkSpec) -> Json {
+    match w {
+        WorkSpec::Null { duration_us } => Json::obj(vec![
+            ("kind", Json::str("null")),
+            ("duration_us", Json::num(*duration_us as f64)),
+        ]),
+        WorkSpec::Shell { cmd, shell } => Json::obj(vec![
+            ("kind", Json::str("shell")),
+            ("cmd", Json::str(cmd)),
+            ("shell", Json::str(shell)),
+        ]),
+        WorkSpec::Builtin { model } => Json::obj(vec![
+            ("kind", Json::str("builtin")),
+            ("model", Json::str(model)),
+        ]),
+        WorkSpec::Noop => Json::obj(vec![("kind", Json::str("noop"))]),
+    }
+}
+
+fn work_from_json(v: &Json) -> Result<WorkSpec, String> {
+    match v.get("kind").as_str() {
+        Some("null") => Ok(WorkSpec::Null {
+            duration_us: v.get("duration_us").as_u64().ok_or("missing duration_us")?,
+        }),
+        Some("shell") => Ok(WorkSpec::Shell {
+            cmd: v.get("cmd").as_str().ok_or("missing cmd")?.into(),
+            shell: v.get("shell").as_str().ok_or("missing shell")?.into(),
+        }),
+        Some("builtin") => Ok(WorkSpec::Builtin {
+            model: v.get("model").as_str().ok_or("missing model")?.into(),
+        }),
+        Some("noop") => Ok(WorkSpec::Noop),
+        other => Err(format!("unknown work kind {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn template() -> StepTemplate {
+        StepTemplate {
+            study_id: "study-1".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Shell {
+                cmd: "echo $(SAMPLE)".into(),
+                shell: "/bin/bash".into(),
+            },
+            samples_per_task: 10,
+            seed: 99,
+        }
+    }
+
+    fn roundtrip(t: &TaskEnvelope) {
+        let text = encode(t);
+        let back = decode(&text).expect("decode");
+        assert_eq!(&back, t);
+    }
+
+    #[test]
+    fn roundtrip_all_payloads() {
+        roundtrip(&TaskEnvelope::new(
+            "q",
+            Payload::Expansion(ExpansionTask {
+                template: template(),
+                lo: 0,
+                hi: 1_000_000,
+                max_branch: 100,
+            }),
+        ));
+        roundtrip(&TaskEnvelope::new(
+            "q",
+            Payload::Step(StepTask {
+                template: template(),
+                lo: 40,
+                hi: 50,
+            }),
+        ));
+        roundtrip(&TaskEnvelope::new(
+            "q",
+            Payload::Aggregate(AggregateTask {
+                study_id: "study-1".into(),
+                dir: "/tmp/leaf/0".into(),
+                expected_bundles: 100,
+            }),
+        ));
+        roundtrip(&TaskEnvelope::new(
+            "q",
+            Payload::Control(ControlMsg::Ping { token: "abc".into() }),
+        ));
+        roundtrip(&TaskEnvelope::new("q", Payload::Control(ControlMsg::StopWorker)));
+    }
+
+    #[test]
+    fn roundtrip_all_work_kinds() {
+        for work in [
+            WorkSpec::Null { duration_us: 1_000_000 },
+            WorkSpec::Builtin { model: "jag".into() },
+            WorkSpec::Noop,
+        ] {
+            let mut t = template();
+            t.work = work;
+            roundtrip(&TaskEnvelope::new(
+                "q",
+                Payload::Step(StepTask { template: t, lo: 0, hi: 1 }),
+            ));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode("not json").is_err());
+        assert!(decode("{}").is_err());
+        assert!(decode(r#"{"v":999,"id":"x"}"#).is_err());
+        assert!(decode(r#"{"v":1,"id":"x","queue":"q","priority":1,"retries_left":1,"payload":{"kind":"mystery"}}"#).is_err());
+    }
+
+    #[test]
+    fn shell_cmd_with_special_chars_roundtrips() {
+        let mut t = template();
+        t.work = WorkSpec::Shell {
+            cmd: "echo \"a\\nb\" | grep -v '\t' && echo 'done: 100%'".into(),
+            shell: "/bin/sh".into(),
+        };
+        roundtrip(&TaskEnvelope::new(
+            "q",
+            Payload::Step(StepTask { template: t, lo: 0, hi: 1 }),
+        ));
+    }
+}

@@ -1,0 +1,10 @@
+//! In-house property-based testing (the offline vendor has no `proptest`).
+//!
+//! [`prop`] provides a tiny deterministic harness: generators draw from a
+//! seeded [`crate::util::rng::Rng`], each property runs across many cases,
+//! and failures report the exact seed + case index for replay. No shrinking
+//! — cases are kept small instead.
+
+pub mod prop;
+
+pub use prop::{cases, Gen};

@@ -1,0 +1,140 @@
+//! Minimal property-testing harness.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath; the same snippet runs
+//! // as a unit test below.)
+//! use merlin::testing::prop::{cases, Gen};
+//! cases(0xC0FFEE, 200, |g| {
+//!     let n = g.u64_in(1, 1000);
+//!     let spt = g.u64_in(1, 50);
+//!     assert!(n.div_ceil(spt) >= 1);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to each property case.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// A vector of `len` values built by `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// ASCII identifier-ish string of length in [1, max_len].
+    pub fn ident(&mut self, max_len: usize) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+        let len = self.usize_in(1, max_len.max(1));
+        (0..len)
+            .map(|_| CHARS[self.rng.below(CHARS.len() as u64) as usize] as char)
+            .collect()
+    }
+
+    /// Direct access to the underlying RNG for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `n` cases of `property`, deterministically derived from `seed`.
+/// Panics (with seed + case) on the first failing case.
+pub fn cases(seed: u64, n: usize, mut property: impl FnMut(&mut Gen)) {
+    let mut root = Rng::new(seed);
+    for case in 0..n {
+        let rng = root.fork();
+        let mut g = Gen { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed={seed:#x} case={case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases_deterministically() {
+        let mut values_a = Vec::new();
+        cases(42, 50, |g| values_a.push(g.u64_in(0, 1000)));
+        let mut values_b = Vec::new();
+        cases(42, 50, |g| values_b.push(g.u64_in(0, 1000)));
+        assert_eq!(values_a, values_b);
+        assert_eq!(values_a.len(), 50);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        cases(7, 500, |g| {
+            let v = g.u64_in(10, 20);
+            assert!((10..=20).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let s = g.ident(8);
+            assert!(!s.is_empty() && s.len() <= 8);
+        });
+    }
+
+    #[test]
+    fn failure_reports_seed_and_case() {
+        let result = std::panic::catch_unwind(|| {
+            cases(99, 100, |g| {
+                assert!(g.case < 10, "deliberate failure");
+            });
+        });
+        let msg = match result {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed=0x63"), "{msg}");
+        assert!(msg.contains("case=10"), "{msg}");
+    }
+
+    #[test]
+    fn vec_and_pick() {
+        cases(3, 100, |g| {
+            let v = g.vec_of(5, |g| g.u64_in(0, 9));
+            assert_eq!(v.len(), 5);
+            let item = *g.pick(&v);
+            assert!(v.contains(&item));
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Real and virtual clocks.
+//!
+//! The paper's overhead study uses `sleep 1` null simulations; replaying
+//! 10^5 of those in real time is infeasible in a bounded session, so the
+//! batch-system simulator and the null workload support a **virtual clock**:
+//! a monotonically advancing `u64` of microseconds that threads advance
+//! explicitly. Real-time components (the broker, workers) use the monotonic
+//! `Instant` clock through the same trait so benches can choose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Microsecond timestamps.
+pub type Micros = u64;
+
+/// A clock abstraction: either wall time or simulated time.
+pub trait Clock: Send + Sync {
+    /// Monotonic now, in microseconds since an arbitrary epoch.
+    fn now_us(&self) -> Micros;
+    /// Sleep (really or virtually) for `us` microseconds.
+    fn sleep_us(&self, us: Micros);
+}
+
+/// Wall-clock implementation over `Instant`.
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_us(&self) -> Micros {
+        self.epoch.elapsed().as_micros() as Micros
+    }
+
+    fn sleep_us(&self, us: Micros) {
+        std::thread::sleep(Duration::from_micros(us));
+    }
+}
+
+/// Shared virtual clock. `sleep_us` advances time atomically; this models
+/// compute time without consuming wall time. Note this is a *cooperative*
+/// model suited to the discrete-event batch simulator (which orders events
+/// itself); it does not attempt cross-thread sleep ordering.
+#[derive(Clone)]
+pub struct VirtualClock {
+    now: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self {
+            now: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn advance(&self, us: Micros) {
+        self.now.fetch_add(us, Ordering::SeqCst);
+    }
+
+    pub fn set(&self, t: Micros) {
+        self.now.store(t, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_us(&self) -> Micros {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    fn sleep_us(&self, us: Micros) {
+        self.advance(us);
+    }
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_us(&self) -> Micros {
+        self.start.elapsed().as_micros() as Micros
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn real_clock_sleep_advances() {
+        let c = RealClock::new();
+        let a = c.now_us();
+        c.sleep_us(2_000);
+        assert!(c.now_us() - a >= 2_000);
+    }
+
+    #[test]
+    fn virtual_clock_advances_without_wall_time() {
+        let c = VirtualClock::new();
+        let w = Stopwatch::start();
+        c.sleep_us(3_600_000_000); // one virtual hour
+        assert_eq!(c.now_us(), 3_600_000_000);
+        assert!(w.elapsed_s() < 1.0);
+    }
+
+    #[test]
+    fn virtual_clock_shared_between_clones() {
+        let a = VirtualClock::new();
+        let b = a.clone();
+        a.advance(10);
+        assert_eq!(b.now_us(), 10);
+        b.set(100);
+        assert_eq!(a.now_us(), 100);
+    }
+}

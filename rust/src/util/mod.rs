@@ -1,0 +1,9 @@
+//! Self-contained utilities built from scratch (the offline vendor carries
+//! no `rand`/`serde`/`chrono`), shared across every Merlin subsystem.
+
+pub mod clock;
+pub mod hex;
+pub mod ids;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,242 @@
+//! Statistics helpers for the performance-analysis figures.
+//!
+//! Fig 5 of the paper reports a per-task overhead histogram with outliers
+//! removed by *modified z-score > 5* (Iglewicz & Hoaglin, median/MAD based);
+//! these routines implement exactly that pipeline so the bench regenerates
+//! the same rows.
+
+/// Arithmetic mean. Returns 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (by sorting a copy; inputs here are at most ~10^6 samples).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Median absolute deviation (not scaled).
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&dev)
+}
+
+/// Modified z-scores: 0.6745 * (x - median) / MAD (Iglewicz & Hoaglin).
+/// When MAD is zero (heavily tied data) falls back to mean absolute
+/// deviation, as the standard recipe prescribes.
+pub fn modified_zscores(xs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let med = median(xs);
+    let m = mad(xs);
+    if m > 0.0 {
+        xs.iter().map(|x| 0.6745 * (x - med) / m).collect()
+    } else {
+        let mean_ad = mean(&xs.iter().map(|x| (x - med).abs()).collect::<Vec<_>>());
+        if mean_ad == 0.0 {
+            return vec![0.0; xs.len()];
+        }
+        xs.iter().map(|x| 0.7979 * (x - med) / mean_ad).collect()
+    }
+}
+
+/// Drop observations whose |modified z| exceeds `cutoff` (paper uses 5).
+pub fn reject_outliers(xs: &[f64], cutoff: f64) -> Vec<f64> {
+    let z = modified_zscores(xs);
+    xs.iter()
+        .zip(z)
+        .filter(|(_, z)| z.abs() <= cutoff)
+        .map(|(x, _)| *x)
+        .collect()
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
+/// the range are clamped into the terminal buckets (matching how the paper's
+/// Fig 5 plot window behaves after outlier rejection).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0u64; bins];
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let idx = ((x - lo) / w).floor();
+            let idx = idx.clamp(0.0, (bins - 1) as f64) as usize;
+            counts[idx] += 1;
+        }
+        Self { lo, hi, counts }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Bucket midpoint of the mode.
+    pub fn mode_mid(&self) -> f64 {
+        let (i, _) = self
+            .counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, c)| **c)
+            .unwrap_or((0, &0));
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Render a fixed-width ASCII bar chart (used by the fig5 bench output).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width / max as usize).max(usize::from(c > 0)));
+            out.push_str(&format!(
+                "{:>10.3}-{:<10.3} {:>8} {}\n",
+                self.lo + i as f64 * w,
+                self.lo + (i + 1) as f64 * w,
+                c,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+/// Skewness (Fisher-Pearson, population). Fig 5's distribution is
+/// right-skewed; the bench asserts skewness > 0.
+pub fn skewness(xs: &[f64]) -> f64 {
+    if xs.len() < 3 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let s = stddev(xs);
+    if s == 0.0 {
+        return 0.0;
+    }
+    xs.iter().map(|x| ((x - m) / s).powi(3)).sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_simple() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert_eq!(median(&xs), 3.0);
+    }
+
+    #[test]
+    fn median_even_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(median(&xs), 2.5);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
+        assert!(modified_zscores(&[]).is_empty());
+    }
+
+    #[test]
+    fn mad_of_constant_is_zero() {
+        let xs = [2.0; 10];
+        assert_eq!(mad(&xs), 0.0);
+        // constant data -> all z-scores zero, nothing rejected
+        assert_eq!(reject_outliers(&xs, 5.0).len(), 10);
+    }
+
+    #[test]
+    fn outlier_rejection_drops_spike() {
+        let mut xs = vec![10.0; 100];
+        for (i, x) in xs.iter_mut().enumerate() {
+            *x += (i % 7) as f64 * 0.1; // benign spread
+        }
+        xs.push(1e6);
+        let kept = reject_outliers(&xs, 5.0);
+        assert_eq!(kept.len(), 100);
+        assert!(kept.iter().all(|&x| x < 100.0));
+    }
+
+    #[test]
+    fn histogram_counts_and_clamp() {
+        let xs = [0.5, 1.5, 2.5, 99.0, -5.0];
+        let h = Histogram::build(&xs, 0.0, 3.0, 3);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts, vec![2, 1, 2]); // -5 clamps low, 99 clamps high
+    }
+
+    #[test]
+    fn histogram_mode() {
+        let xs = [1.1, 1.2, 1.3, 2.5];
+        let h = Histogram::build(&xs, 0.0, 3.0, 3);
+        assert!((h.mode_mid() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skewness_sign() {
+        let right = [1.0, 1.0, 1.0, 1.0, 10.0];
+        assert!(skewness(&right) > 0.0);
+        let left = [10.0, 10.0, 10.0, 10.0, 1.0];
+        assert!(skewness(&left) < 0.0);
+    }
+
+    #[test]
+    fn zscores_center_on_median() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 100.0];
+        let z = modified_zscores(&xs);
+        assert_eq!(z[2], 0.0); // median element
+        assert!(z[4] > 5.0); // the outlier
+    }
+}

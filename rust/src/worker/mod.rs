@@ -1,0 +1,25 @@
+//! Workers — the consumer side of the producer-consumer model.
+//!
+//! A worker (`merlin run-workers` spawns many) loops: fetch the
+//! highest-priority task from its queues, execute it, ack. Expansion tasks
+//! run the hierarchical generator and publish children; step tasks run the
+//! actual work (null-sim sleep, a shell subprocess in a task-unique
+//! workspace, or a PJRT-backed simulator bundle); aggregate tasks merge
+//! leaf directories. Per-task timings flow to a [`crate::metrics::Recorder`]
+//! (the Fig 4/5/6 measurements), and sample completion state flows to the
+//! results backend.
+//!
+//! Failure injection ([`FailurePlan`]) models the §3.1 reality: node / I/O
+//! failures that kill whole tasks without acking, and internal (physics)
+//! errors that fail individual samples. The resubmission crawl recovers
+//! the former; the latter stay failed, exactly as in the paper.
+
+pub mod exec;
+pub mod pool;
+pub mod sim;
+#[allow(clippy::module_inception)]
+pub mod worker;
+
+pub use pool::{run_pool, PoolReport};
+pub use sim::{NullSimRunner, SimRunner};
+pub use worker::{FailurePlan, Worker, WorkerConfig, WorkerReport};

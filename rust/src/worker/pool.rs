@@ -1,0 +1,132 @@
+//! Worker pools: N worker threads sharing one broker — the in-allocation
+//! shape of `merlin run-workers -c N`. Fig 4/6 sweeps vary N.
+
+use std::sync::Arc;
+
+use crate::backend::state::StateStore;
+use crate::broker::core::Broker;
+use crate::metrics::recorder::Recorder;
+
+use super::sim::SimRunner;
+use super::worker::{Worker, WorkerConfig, WorkerReport};
+
+/// Aggregate tally of a pool run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolReport {
+    pub workers: usize,
+    pub expansions: u64,
+    pub steps: u64,
+    pub aggregates: u64,
+    pub samples_ok: u64,
+    pub samples_failed: u64,
+    pub tasks_killed: u64,
+}
+
+impl PoolReport {
+    fn absorb(&mut self, r: WorkerReport) {
+        self.expansions += r.expansions;
+        self.steps += r.steps;
+        self.aggregates += r.aggregates;
+        self.samples_ok += r.samples_ok;
+        self.samples_failed += r.samples_failed;
+        self.tasks_killed += r.tasks_killed;
+    }
+}
+
+/// Spawn `n` workers from `make_cfg(i)` and run them to completion.
+pub fn run_pool(
+    broker: &Broker,
+    state: Option<&StateStore>,
+    recorder: Option<&Recorder>,
+    sim: Arc<dyn SimRunner>,
+    n: usize,
+    make_cfg: impl Fn(usize) -> WorkerConfig,
+) -> PoolReport {
+    let mut handles = Vec::with_capacity(n);
+    for i in 0..n {
+        let broker = broker.clone();
+        let state = state.cloned();
+        let recorder = recorder.cloned();
+        let sim = sim.clone();
+        let cfg = make_cfg(i);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("merlin-worker-{i}"))
+                .spawn(move || Worker::new(broker, state, recorder, sim, cfg).run())
+                .expect("spawn worker"),
+        );
+    }
+    let mut report = PoolReport {
+        workers: n,
+        ..Default::default()
+    };
+    for h in handles {
+        report.absorb(h.join().expect("worker panicked"));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy;
+    use crate::task::{StepTemplate, WorkSpec};
+    use crate::util::clock::RealClock;
+    use crate::worker::sim::NullSimRunner;
+
+    fn template() -> StepTemplate {
+        StepTemplate {
+            study_id: "pool-study".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 1,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn pool_processes_everything_once() {
+        let broker = Broker::default();
+        let state = StateStore::new(crate::backend::store::Store::new());
+        broker
+            .publish(hierarchy::root_task(template(), 500, 10, "q"))
+            .unwrap();
+        let clock: Arc<dyn crate::util::clock::Clock> = Arc::new(RealClock::new());
+        let report = run_pool(&broker, Some(&state), None, Arc::new(NullSimRunner), 8, |i| {
+            let mut cfg = WorkerConfig::simple("q", clock.clone());
+            cfg.seed = i as u64;
+            cfg
+        });
+        assert_eq!(report.samples_ok, 500);
+        assert_eq!(report.steps, 500);
+        assert_eq!(state.done_count("pool-study"), 500);
+        assert_eq!(broker.depth(), 0);
+        assert_eq!(broker.inflight(), 0);
+    }
+
+    #[test]
+    fn late_joining_workers_share_work() {
+        // Surge computing (§2.3/Fig 6): workers joining after the queue is
+        // populated still drain it correctly.
+        let broker = Broker::default();
+        broker
+            .publish(hierarchy::root_task(template(), 200, 5, "q"))
+            .unwrap();
+        let clock: Arc<dyn crate::util::clock::Clock> = Arc::new(RealClock::new());
+        // First a single worker starts the drain...
+        let b2 = broker.clone();
+        let c2 = clock.clone();
+        let first = std::thread::spawn(move || {
+            let cfg = WorkerConfig::simple("q", c2);
+            Worker::new(b2, None, None, Arc::new(NullSimRunner), cfg).run()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // ...then a surge pool joins.
+        let surge = run_pool(&broker, None, None, Arc::new(NullSimRunner), 4, |_| {
+            WorkerConfig::simple("q", clock.clone())
+        });
+        let first = first.join().unwrap();
+        assert_eq!(first.samples_ok + surge.samples_ok, 200);
+        assert_eq!(broker.depth(), 0);
+    }
+}

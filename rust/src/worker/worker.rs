@@ -1,0 +1,531 @@
+//! The worker loop.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::backend::state::StateStore;
+use crate::broker::core::{Broker, Delivery};
+use crate::data::bundle::{aggregate_dir, write_bundle_opts, BundleLayout};
+use crate::data::node::Node;
+use crate::hierarchy;
+use crate::metrics::recorder::{
+    Recorder, TaskTiming, KIND_AGGREGATE, KIND_EXPANSION, KIND_OTHER, KIND_REAL,
+};
+use crate::task::{ControlMsg, Payload, StepTask, WorkSpec};
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+
+use super::exec::run_shell_sample;
+use super::sim::SimRunner;
+
+/// Failure injection knobs (model of the §3.1 environment).
+#[derive(Debug, Clone, Copy)]
+pub struct FailurePlan {
+    /// Probability that a whole step task dies without completing (node /
+    /// filesystem failure). The task is dead-lettered — only the
+    /// resubmission crawl brings its samples back.
+    pub task_kill_rate: f64,
+    /// Probability that an individual sample fails with an internal
+    /// (physics) error. These stay failed, as in the paper.
+    pub sample_error_rate: f64,
+}
+
+impl Default for FailurePlan {
+    fn default() -> Self {
+        Self {
+            task_kill_rate: 0.0,
+            sample_error_rate: 0.0,
+        }
+    }
+}
+
+/// Worker configuration.
+pub struct WorkerConfig {
+    /// Queues to consume, in the order passed to the broker (priority
+    /// still wins across queues).
+    pub queues: Vec<String>,
+    /// Prefetch limit (0 = unlimited). Merlin runs Celery with small
+    /// prefetch so late-joining workers can steal work.
+    pub prefetch: usize,
+    /// Exit after this much continuous idleness; 0 = only exit on
+    /// StopWorker.
+    pub idle_exit_ms: u64,
+    /// Workspace root for shell steps.
+    pub workspace_root: Option<PathBuf>,
+    /// Data root for builtin-sim bundles (None = discard outputs).
+    pub data_root: Option<PathBuf>,
+    pub layout: BundleLayout,
+    /// Compress bundle files (paper parity: zipped hdf5). Off = ~6x faster
+    /// dumps at ~1.6x the bytes — see EXPERIMENTS.md §Perf.
+    pub bundle_compress: bool,
+    /// Clock used for null-sim sleeps (real or virtual).
+    pub clock: Arc<dyn Clock>,
+    pub failures: FailurePlan,
+    /// Seed for this worker's failure-injection RNG.
+    pub seed: u64,
+}
+
+impl WorkerConfig {
+    pub fn simple(queue: &str, clock: Arc<dyn Clock>) -> Self {
+        Self {
+            queues: vec![queue.to_string()],
+            prefetch: 2,
+            idle_exit_ms: 200,
+            workspace_root: None,
+            data_root: None,
+            layout: BundleLayout::default(),
+            bundle_compress: true,
+            clock,
+            failures: FailurePlan::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Tally of one worker's run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerReport {
+    pub expansions: u64,
+    pub steps: u64,
+    pub aggregates: u64,
+    pub samples_ok: u64,
+    pub samples_failed: u64,
+    pub tasks_killed: u64,
+    pub stopped_by_control: bool,
+}
+
+pub struct Worker {
+    broker: Broker,
+    state: Option<StateStore>,
+    recorder: Option<Recorder>,
+    sim: Arc<dyn SimRunner>,
+    cfg: WorkerConfig,
+    rng: Rng,
+}
+
+impl Worker {
+    pub fn new(
+        broker: Broker,
+        state: Option<StateStore>,
+        recorder: Option<Recorder>,
+        sim: Arc<dyn SimRunner>,
+        cfg: WorkerConfig,
+    ) -> Self {
+        let rng = Rng::new(cfg.seed ^ WORKER_SALT);
+        Self {
+            broker,
+            state,
+            recorder,
+            sim,
+            cfg,
+            rng,
+        }
+    }
+
+    /// Consume until StopWorker or idle timeout. Returns the tally.
+    pub fn run(&mut self) -> WorkerReport {
+        let consumer = self.broker.register_consumer();
+        let queue_names = self.cfg.queues.clone();
+        let queues: Vec<&str> = queue_names.iter().map(String::as_str).collect();
+        let mut report = WorkerReport::default();
+        let mut last_work = Instant::now();
+        loop {
+            let delivery = self.broker.fetch(
+                consumer,
+                &queues,
+                self.cfg.prefetch,
+                Duration::from_millis(50),
+            );
+            match delivery {
+                Some(d) => {
+                    last_work = Instant::now();
+                    if !self.handle(d, &mut report) {
+                        break;
+                    }
+                }
+                None => {
+                    if self.cfg.idle_exit_ms > 0
+                        && last_work.elapsed() >= Duration::from_millis(self.cfg.idle_exit_ms)
+                    {
+                        break;
+                    }
+                }
+            }
+        }
+        report
+    }
+
+    /// Returns false when the worker should stop.
+    fn handle(&mut self, d: Delivery, report: &mut WorkerReport) -> bool {
+        let received_us = self.cfg.clock.now_us();
+        let queue = d.task.queue.clone();
+        match d.task.payload.clone() {
+            Payload::Control(ControlMsg::StopWorker) => {
+                self.broker.ack(d.tag).ok();
+                report.stopped_by_control = true;
+                return false;
+            }
+            Payload::Control(ControlMsg::Ping { .. }) => {
+                self.broker.ack(d.tag).ok();
+                self.record(received_us, 0, KIND_OTHER);
+            }
+            Payload::Expansion(exp) => {
+                let mut children = Vec::new();
+                hierarchy::expand(&exp, &queue, &mut children);
+                match self.broker.publish_batch(children) {
+                    Ok(()) => {
+                        self.broker.ack(d.tag).ok();
+                        report.expansions += 1;
+                        self.record(received_us, 0, KIND_EXPANSION);
+                    }
+                    Err(_) => {
+                        // Broker pressure: retry later.
+                        self.broker.nack(d.tag, true).ok();
+                    }
+                }
+            }
+            Payload::Step(step) => {
+                // Node-death injection: the task disappears without ack.
+                if self.rng.chance(self.cfg.failures.task_kill_rate) {
+                    self.broker.nack(d.tag, false).ok();
+                    report.tasks_killed += 1;
+                    return true;
+                }
+                let work_us = self.run_step(&step, report);
+                self.broker.ack(d.tag).ok();
+                report.steps += 1;
+                self.record(received_us, work_us, KIND_REAL);
+            }
+            Payload::Aggregate(agg) => {
+                match aggregate_dir(std::path::Path::new(&agg.dir)) {
+                    Ok((samples, _corrupt)) => {
+                        if let Some(state) = &self.state {
+                            state.incr_counter(&agg.study_id, "aggregated_samples", samples as i64);
+                        }
+                        self.broker.ack(d.tag).ok();
+                        report.aggregates += 1;
+                    }
+                    Err(_) => {
+                        self.broker.nack(d.tag, true).ok();
+                    }
+                }
+                self.record(received_us, 0, KIND_AGGREGATE);
+            }
+        }
+        true
+    }
+
+    /// Execute all samples of a step task; returns intrinsic work µs.
+    fn run_step(&mut self, step: &StepTask, report: &mut WorkerReport) -> u64 {
+        let t = &step.template;
+        let mut work_us = 0u64;
+        let mut bundle_nodes: Vec<(u64, Node)> = Vec::new();
+        // Bundle fast path: run the whole range through the batched
+        // simulator in one call (one PJRT execute per bundle).
+        if let WorkSpec::Builtin { model } = &t.work {
+            let outcomes = self
+                .sim
+                .run_range(model, step.lo, step.hi - step.lo, t.seed);
+            for (sample, result) in outcomes {
+                if self.rng.chance(self.cfg.failures.sample_error_rate) {
+                    self.fail_sample(&t.study_id, sample, report);
+                    continue;
+                }
+                match result {
+                    Ok(node) => {
+                        bundle_nodes.push((sample, node));
+                        self.ok_sample(&t.study_id, sample, report);
+                    }
+                    Err(_) => self.fail_sample(&t.study_id, sample, report),
+                }
+            }
+            self.finish_bundle(step, bundle_nodes);
+            return 0;
+        }
+        for sample in step.lo..step.hi {
+            // Internal (physics) error injection.
+            if self.rng.chance(self.cfg.failures.sample_error_rate) {
+                self.fail_sample(&t.study_id, sample, report);
+                continue;
+            }
+            match &t.work {
+                WorkSpec::Null { duration_us } => {
+                    self.cfg.clock.sleep_us(*duration_us);
+                    work_us += duration_us;
+                    self.ok_sample(&t.study_id, sample, report);
+                }
+                WorkSpec::Noop => {
+                    self.ok_sample(&t.study_id, sample, report);
+                }
+                WorkSpec::Shell { cmd, shell } => {
+                    let root = self
+                        .cfg
+                        .workspace_root
+                        .clone()
+                        .unwrap_or_else(std::env::temp_dir);
+                    match run_shell_sample(&root, &t.study_id, &t.step_name, sample, cmd, shell) {
+                        Ok(out) if out.exit_code == 0 => {
+                            self.ok_sample(&t.study_id, sample, report)
+                        }
+                        _ => self.fail_sample(&t.study_id, sample, report),
+                    }
+                }
+                WorkSpec::Builtin { .. } => unreachable!("handled by bundle fast path"),
+            }
+        }
+        self.finish_bundle(step, bundle_nodes);
+        work_us
+    }
+
+    /// Dump collected sim outputs as a bundle file (if a data root is
+    /// configured). A failed dump loses the whole bundle — the crawl will
+    /// find the hole (the paper's I/O-failure mode).
+    fn finish_bundle(&mut self, step: &StepTask, bundle_nodes: Vec<(u64, Node)>) {
+        if bundle_nodes.is_empty() {
+            return;
+        }
+        if let Some(root) = &self.cfg.data_root {
+            if write_bundle_opts(&self.cfg.layout, root, step.lo, bundle_nodes, self.cfg.bundle_compress)
+                .is_err()
+            {
+                for sample in step.lo..step.hi {
+                    if let Some(state) = &self.state {
+                        state.mark_sample_failed(&step.template.study_id, sample);
+                    }
+                }
+            }
+        }
+    }
+
+    fn ok_sample(&mut self, study: &str, sample: u64, report: &mut WorkerReport) {
+        report.samples_ok += 1;
+        if let Some(state) = &self.state {
+            state.mark_sample_done(study, sample);
+        }
+    }
+
+    fn fail_sample(&mut self, study: &str, sample: u64, report: &mut WorkerReport) {
+        report.samples_failed += 1;
+        if let Some(state) = &self.state {
+            state.mark_sample_failed(study, sample);
+        }
+    }
+
+    fn record(&self, received_us: u64, work_us: u64, kind: u8) {
+        if let Some(r) = &self.recorder {
+            r.record(TaskTiming {
+                received_us,
+                done_us: self.cfg.clock.now_us(),
+                work_us,
+                kind,
+            });
+        }
+    }
+}
+
+/// Decorrelates worker failure-injection streams from study sample streams.
+const WORKER_SALT: u64 = 0x57F3_11AA_29C4_8D01;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ExpansionTask, StepTemplate, TaskEnvelope};
+    use crate::util::clock::RealClock;
+
+    fn template(work: WorkSpec, spt: u64) -> StepTemplate {
+        StepTemplate {
+            study_id: "study-w".into(),
+            step_name: "sim".into(),
+            work,
+            samples_per_task: spt,
+            seed: 9,
+        }
+    }
+
+    fn setup() -> (Broker, StateStore, Recorder, Arc<dyn Clock>) {
+        (
+            Broker::default(),
+            StateStore::new(crate::backend::store::Store::new()),
+            Recorder::new(),
+            Arc::new(RealClock::new()),
+        )
+    }
+
+    #[test]
+    fn worker_drains_hierarchy_end_to_end() {
+        let (broker, state, rec, clock) = setup();
+        let t = template(WorkSpec::Noop, 1);
+        let root = hierarchy::root_task(t, 25, 3, "q");
+        broker.publish(root).unwrap();
+        let mut w = Worker::new(
+            broker.clone(),
+            Some(state.clone()),
+            Some(rec.clone()),
+            Arc::new(super::super::sim::NullSimRunner),
+            WorkerConfig::simple("q", clock),
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 25);
+        assert_eq!(report.steps, 25);
+        assert!(report.expansions >= 2);
+        assert_eq!(state.done_count("study-w"), 25);
+        assert_eq!(broker.depth(), 0);
+        assert!(rec.len() > 0);
+        assert!(rec.first_real_start_us().is_some());
+    }
+
+    #[test]
+    fn stop_worker_control_halts() {
+        let (broker, _state, _rec, clock) = setup();
+        broker
+            .publish(TaskEnvelope::new(
+                "q",
+                Payload::Control(ControlMsg::StopWorker),
+            ))
+            .unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.idle_exit_ms = 0; // would hang forever without the control msg
+        let mut w = Worker::new(
+            broker,
+            None,
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert!(report.stopped_by_control);
+    }
+
+    #[test]
+    fn sample_error_injection_marks_failed() {
+        let (broker, state, _rec, clock) = setup();
+        let t = template(WorkSpec::Noop, 10);
+        broker
+            .publish(hierarchy::root_task(t, 10, 3, "q"))
+            .unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.failures.sample_error_rate = 1.0;
+        let mut w = Worker::new(
+            broker,
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_failed, 10);
+        assert_eq!(state.failed_count("study-w"), 10);
+        assert_eq!(state.done_count("study-w"), 0);
+    }
+
+    #[test]
+    fn task_kill_injection_dead_letters() {
+        let (broker, state, _rec, clock) = setup();
+        let t = template(WorkSpec::Noop, 5);
+        broker.publish(hierarchy::root_task(t, 5, 2, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.failures.task_kill_rate = 1.0;
+        let mut w = Worker::new(
+            broker.clone(),
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.tasks_killed, 1);
+        assert_eq!(state.done_count("study-w"), 0);
+        assert_eq!(broker.stats("q").dead_lettered, 1);
+    }
+
+    #[test]
+    fn null_work_sleeps_on_clock() {
+        use crate::util::clock::VirtualClock;
+        let broker = Broker::default();
+        let vclock = VirtualClock::new();
+        let t = template(WorkSpec::Null { duration_us: 1_000_000 }, 1);
+        broker.publish(hierarchy::root_task(t, 3, 2, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", Arc::new(vclock.clone()));
+        let mut w = Worker::new(
+            broker,
+            None,
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let wall = Instant::now();
+        let report = w.run();
+        assert_eq!(report.samples_ok, 3);
+        assert!(vclock.now_us() >= 3_000_000, "virtual time advanced");
+        assert!(wall.elapsed() < Duration::from_secs(2), "no real sleeping");
+    }
+
+    #[test]
+    fn builtin_sims_write_bundles() {
+        let (broker, state, _rec, clock) = setup();
+        let dir = std::env::temp_dir().join(format!(
+            "merlin-worker-bundle-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = template(WorkSpec::Builtin { model: "null".into() }, 5);
+        broker.publish(hierarchy::root_task(t, 20, 4, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.data_root = Some(dir.clone());
+        cfg.layout = BundleLayout {
+            sims_per_bundle: 5,
+            bundles_per_dir: 2,
+        };
+        let mut w = Worker::new(
+            broker,
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 20);
+        let crawl = crate::data::crawl::crawl(
+            &dir,
+            &BundleLayout {
+                sims_per_bundle: 5,
+                bundles_per_dir: 2,
+            },
+        )
+        .unwrap();
+        assert_eq!(crawl.valid.len(), 20);
+        assert!(crawl.missing(20).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shell_steps_execute() {
+        let (broker, state, _rec, clock) = setup();
+        let dir = std::env::temp_dir().join(format!("merlin-worker-sh-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = template(
+            WorkSpec::Shell {
+                cmd: "echo $(MERLIN_SAMPLE_ID) > result.txt".into(),
+                shell: "/bin/sh".into(),
+            },
+            1,
+        );
+        broker.publish(hierarchy::root_task(t, 3, 2, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.workspace_root = Some(dir.clone());
+        let mut w = Worker::new(
+            broker,
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 3);
+        let content =
+            std::fs::read_to_string(dir.join("sim").join("00000001").join("result.txt")).unwrap();
+        assert_eq!(content.trim(), "1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

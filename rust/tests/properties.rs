@@ -1,0 +1,272 @@
+//! Property-based tests over coordinator invariants, using the in-house
+//! harness (`merlin::testing::prop`). Each property runs hundreds of
+//! randomized cases; failures report seed + case for replay.
+
+use std::collections::BTreeSet;
+
+use merlin::broker::core::{Broker, BrokerConfig};
+use merlin::coordinator::resubmit::ranges_of;
+use merlin::hierarchy::plan::HierarchyPlan;
+use merlin::hierarchy::{expand, flat, root_task};
+use merlin::task::{ser, Payload, StepTemplate, TaskEnvelope, WorkSpec};
+use merlin::testing::prop::cases;
+
+fn template(spt: u64, seed: u64) -> StepTemplate {
+    StepTemplate {
+        study_id: format!("prop-{seed}"),
+        step_name: "s".into(),
+        work: WorkSpec::Noop,
+        samples_per_task: spt,
+        seed,
+    }
+}
+
+/// Fully drain a hierarchy, returning (expansions, real ranges).
+fn drain(n: u64, spt: u64, branch: u64) -> (u64, Vec<(u64, u64)>) {
+    let mut frontier = vec![root_task(template(spt, 0), n, branch, "q")];
+    let mut gens = 0;
+    let mut ranges = Vec::new();
+    while let Some(t) = frontier.pop() {
+        match t.payload {
+            Payload::Expansion(ref e) => {
+                gens += 1;
+                let mut kids = Vec::new();
+                expand(e, "q", &mut kids);
+                frontier.extend(kids);
+            }
+            Payload::Step(s) => ranges.push((s.lo, s.hi)),
+            _ => {}
+        }
+    }
+    ranges.sort_unstable();
+    (gens, ranges)
+}
+
+#[test]
+fn prop_hierarchy_partitions_any_ensemble() {
+    cases(0xF16_2, 300, |g| {
+        let n = g.u64_in(1, 200_000);
+        let spt = g.u64_in(1, 64);
+        let branch = g.u64_in(2, 300);
+        let (gens, ranges) = drain(n, spt, branch);
+        // Exact tiling of [0, n) with no oversized leaf.
+        let mut cursor = 0;
+        for (lo, hi) in &ranges {
+            assert_eq!(*lo, cursor, "n={n} spt={spt} b={branch}");
+            assert!(hi - lo <= spt);
+            cursor = *hi;
+        }
+        assert_eq!(cursor, n);
+        // Expansion count never exceeds the static plan's level sum.
+        let plan = HierarchyPlan::compute(n, spt, branch);
+        assert_eq!(ranges.len() as u64, plan.real_tasks);
+        assert!(gens <= plan.expansion_tasks());
+    });
+}
+
+#[test]
+fn prop_hierarchy_equals_flat_baseline() {
+    cases(0xF1A7, 150, |g| {
+        let n = g.u64_in(1, 20_000);
+        let spt = g.u64_in(1, 32);
+        let branch = g.u64_in(2, 64);
+        let t = template(spt, 1);
+        let flat_ranges: Vec<(u64, u64)> = flat::flat_tasks(&t, n, "q")
+            .into_iter()
+            .filter_map(|t| match t.payload {
+                Payload::Step(s) => Some((s.lo, s.hi)),
+                _ => None,
+            })
+            .collect();
+        let (_, hier_ranges) = drain(n, spt, branch);
+        assert_eq!(flat_ranges, hier_ranges);
+    });
+}
+
+#[test]
+fn prop_broker_conserves_messages_and_respects_priority() {
+    cases(0xB20C, 150, |g| {
+        let broker = Broker::default();
+        let n = g.usize_in(1, 200);
+        let mut published = Vec::new();
+        for i in 0..n {
+            let pri = g.u64_in(0, 9) as u8;
+            let t = TaskEnvelope::new(
+                "q",
+                Payload::Control(merlin::task::ControlMsg::Ping {
+                    token: format!("{i}"),
+                }),
+            )
+            .priority(pri);
+            published.push((pri, i));
+            broker.publish(t).unwrap();
+        }
+        let consumer = broker.register_consumer();
+        let mut got = Vec::new();
+        while let Some(d) = broker.try_fetch(consumer, &["q"], 0) {
+            if let Payload::Control(merlin::task::ControlMsg::Ping { token }) = &d.task.payload {
+                got.push((d.task.priority, token.parse::<usize>().unwrap()));
+            }
+            // Random ack/nack exercise: nacked-with-requeue messages come
+            // back; dropped ones dead-letter.
+            broker.ack(d.tag).unwrap();
+        }
+        assert_eq!(got.len(), n, "conservation");
+        // Delivery order: priority non-increasing; FIFO inside a class.
+        for w in got.windows(2) {
+            assert!(w[0].0 >= w[1].0, "priority order violated: {got:?}");
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "FIFO violated in class {}", w[0].0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_broker_requeue_never_loses_or_duplicates() {
+    cases(0xACED, 100, |g| {
+        let broker = Broker::default();
+        let n = g.usize_in(1, 100);
+        for i in 0..n {
+            let mut t = TaskEnvelope::new(
+                "q",
+                Payload::Control(merlin::task::ControlMsg::Ping {
+                    token: format!("{i}"),
+                }),
+            );
+            t.retries_left = 100; // nacks in this test never exhaust
+            broker.publish(t).unwrap();
+        }
+        let consumer = broker.register_consumer();
+        let mut acked = BTreeSet::new();
+        let mut safety = 0;
+        while let Some(d) = broker.try_fetch(consumer, &["q"], 0) {
+            safety += 1;
+            assert!(safety < 100_000, "drain must terminate");
+            let token = match &d.task.payload {
+                Payload::Control(merlin::task::ControlMsg::Ping { token }) => token.clone(),
+                _ => unreachable!(),
+            };
+            if g.chance(0.3) {
+                broker.nack(d.tag, true).unwrap(); // requeue
+            } else {
+                broker.ack(d.tag).unwrap();
+                assert!(acked.insert(token), "double completion");
+            }
+        }
+        assert_eq!(acked.len(), n, "every message eventually acked once");
+        assert_eq!(broker.depth(), 0);
+        assert_eq!(broker.inflight(), 0);
+    });
+}
+
+#[test]
+fn prop_task_serialization_roundtrips() {
+    cases(0x5E2, 300, |g| {
+        let work = match g.u64_in(0, 3) {
+            0 => WorkSpec::Null {
+                duration_us: g.u64_in(0, 1 << 52),
+            },
+            1 => WorkSpec::Shell {
+                cmd: format!("echo '{}' \"$({})\"", g.ident(20), g.ident(8)),
+                shell: format!("/bin/{}", g.ident(6)),
+            },
+            2 => WorkSpec::Builtin {
+                model: g.ident(12),
+            },
+            _ => WorkSpec::Noop,
+        };
+        let lo = g.u64_in(0, 1 << 40);
+        let t = TaskEnvelope::new(
+            g.ident(10),
+            Payload::Step(merlin::task::StepTask {
+                template: StepTemplate {
+                    study_id: g.ident(16),
+                    step_name: g.ident(16),
+                    work,
+                    samples_per_task: g.u64_in(1, 1000),
+                    seed: g.u64_in(0, 1 << 52), // wire format is f64-backed JSON: 2^53 cap
+                },
+                lo,
+                hi: lo + g.u64_in(1, 1000),
+            }),
+        )
+        .priority(g.u64_in(0, 9) as u8);
+        let back = ser::decode(&ser::encode(&t)).expect("roundtrip");
+        assert_eq!(back, t);
+    });
+}
+
+#[test]
+fn prop_resubmission_ranges_cover_exactly_the_missing() {
+    cases(0x2E5B, 200, |g| {
+        let n = g.u64_in(1, 5000);
+        let spt = g.u64_in(1, 50);
+        // Random missing subset.
+        let missing: Vec<u64> = (0..n).filter(|_| g.chance(0.2)).collect();
+        let ranges = ranges_of(&missing, spt);
+        let mut covered = Vec::new();
+        for (lo, hi) in &ranges {
+            assert!(hi > lo && hi - lo <= spt);
+            covered.extend(*lo..*hi);
+        }
+        assert_eq!(covered, missing, "exact coverage, ordered, no extras");
+        // Ranges are disjoint and sorted.
+        for w in ranges.windows(2) {
+            assert!(w[0].1 <= w[1].0);
+        }
+    });
+}
+
+#[test]
+fn prop_message_size_cap_is_exact() {
+    cases(0xCA9, 60, |g| {
+        let limit = g.usize_in(50, 2000);
+        let broker = Broker::new(BrokerConfig {
+            max_message_bytes: limit,
+            max_depth: 0,
+        });
+        let t = TaskEnvelope::new(
+            "q",
+            Payload::Control(merlin::task::ControlMsg::Ping {
+                token: "x".repeat(g.usize_in(0, 3000)),
+            }),
+        );
+        let size = ser::encode(&t).len();
+        let result = broker.publish(t);
+        assert_eq!(
+            result.is_ok(),
+            size <= limit,
+            "cap must bind exactly at the wire size ({size} vs {limit})"
+        );
+    });
+}
+
+#[test]
+fn prop_yaml_literal_blocks_preserve_commands() {
+    // Study files carry arbitrary multi-line shell in `|` blocks; whatever
+    // command lines go in must come back out (modulo the single trailing
+    // newline of clip mode).
+    cases(0x9A31, 150, |g| {
+        let n_lines = g.usize_in(1, 6);
+        let lines: Vec<String> = (0..n_lines)
+            .map(|_| {
+                format!(
+                    "{} --flag {} $({})",
+                    g.ident(8),
+                    g.u64_in(0, 999),
+                    g.ident(6).to_uppercase()
+                )
+            })
+            .collect();
+        let mut doc = String::from("run:\n  cmd: |\n");
+        for l in &lines {
+            doc.push_str("    ");
+            doc.push_str(l);
+            doc.push('\n');
+        }
+        let y = merlin::spec::yaml::Yaml::parse(&doc).expect("parse");
+        let cmd = y.get("run").get("cmd").as_str().expect("cmd");
+        assert_eq!(cmd.trim_end_matches('\n'), lines.join("\n"));
+    });
+}

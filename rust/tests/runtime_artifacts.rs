@@ -1,0 +1,161 @@
+//! Integration: load the AOT artifacts through PJRT and validate numerics
+//! against invariants of the python reference implementations.
+//!
+//! Requires `make artifacts`; every test no-ops (with a note) when the
+//! artifacts directory is absent so `cargo test` stays green pre-build.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use merlin::runtime::models::{run_jag_batch, JAG_INPUTS, JAG_SCALARS, SEIR_METROS};
+use merlin::runtime::{sample_params, ModelRunner, RuntimePool, SeirModel, Surrogate};
+use merlin::worker::SimRunner;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts missing; run `make artifacts` — skipping");
+        None
+    }
+}
+
+fn pool() -> Option<Arc<RuntimePool>> {
+    artifacts_dir().map(|d| RuntimePool::new(&d, 1).expect("runtime pool"))
+}
+
+#[test]
+fn jag_single_sample_has_physical_outputs() {
+    let Some(rt) = pool() else { return };
+    let runner = ModelRunner::new(rt);
+    let node = runner.run("jag", 7, 42).expect("jag run");
+    let scalars = node.f32s("outputs/scalars").unwrap();
+    assert_eq!(scalars.len(), JAG_SCALARS);
+    let series = node.f32s("outputs/series").unwrap();
+    assert_eq!(series.len(), 32);
+    let images = node.f32s("outputs/images").unwrap();
+    assert_eq!(images.len(), 4 * 16 * 16);
+    // Yield (scalar 0) is non-negative; velocity (scalar 1) positive.
+    assert!(scalars[0] >= 0.0);
+    assert!(scalars[1] > 0.0);
+    // Series is a pulse: max > edges.
+    let max = series.iter().cloned().fold(f32::MIN, f32::max);
+    assert!(max >= series[0] && max >= series[31]);
+    // Images are non-negative and channel 0 is the brightest band.
+    assert!(images.iter().all(|v| *v >= 0.0));
+    let c0: f32 = images[0..256].iter().sum();
+    let c3: f32 = images[768..1024].iter().sum();
+    assert!(c0 >= c3, "band brightness decreasing: {c0} vs {c3}");
+}
+
+#[test]
+fn jag_deterministic_per_sample_id() {
+    let Some(rt) = pool() else { return };
+    let runner = ModelRunner::new(rt);
+    let a = runner.run("jag", 123, 9).unwrap();
+    let b = runner.run("jag", 123, 9).unwrap();
+    let c = runner.run("jag", 124, 9).unwrap();
+    assert_eq!(a.f32s("outputs/scalars"), b.f32s("outputs/scalars"));
+    assert_ne!(a.f32s("outputs/scalars"), c.f32s("outputs/scalars"));
+}
+
+#[test]
+fn jag_batched_matches_single() {
+    let Some(rt) = pool() else { return };
+    let nodes = run_jag_batch(&rt, 9, 100, 10).expect("bundle");
+    assert_eq!(nodes.len(), 10);
+    let runner = ModelRunner::new(rt);
+    for (i, n) in nodes.iter().enumerate() {
+        let single = runner.run("jag", 100 + i as u64, 9).unwrap();
+        let a = n.f32s("outputs/scalars").unwrap();
+        let b = single.f32s("outputs/scalars").unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() <= 1e-5 * (1.0 + y.abs()),
+                "sample {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn surrogate_training_reduces_loss_on_jag_data() {
+    let Some(rt) = pool() else { return };
+    // Build a 128-sample training batch from the real JAG artifact.
+    let nodes = run_jag_batch(&rt, 5, 0, 128).expect("jag batch");
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for (i, n) in nodes.iter().enumerate() {
+        x.extend(sample_params(5, i as u64, JAG_INPUTS));
+        y.extend_from_slice(n.f32s("outputs/scalars").unwrap());
+    }
+    let mut surr = Surrogate::new(rt, 77);
+    let first = surr.train_step(&x, &y, 0.05).expect("step");
+    let mut last = first;
+    for _ in 0..200 {
+        last = surr.train_step(&x, &y, 0.05).expect("step");
+    }
+    assert!(
+        last < first * 0.5,
+        "loss should halve: first={first} last={last}"
+    );
+    // Predictions should be finite and in a plausible range.
+    let pred = surr.predict(&x).unwrap();
+    assert_eq!(pred.len(), 128 * JAG_SCALARS);
+    assert!(pred.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn seir_conserves_population_and_spreads() {
+    let Some(rt) = pool() else { return };
+    let model = SeirModel::new(rt);
+    let m = SEIR_METROS;
+    // Metro 0 seeds the outbreak; others start susceptible.
+    let mut state0 = vec![0.0f32; m * 4];
+    for i in 0..m {
+        state0[i * 4] = if i == 0 { 0.99 } else { 1.0 };
+        state0[i * 4 + 2] = if i == 0 { 0.01 } else { 0.0 };
+    }
+    let mut params = Vec::with_capacity(m * 3);
+    for _ in 0..m {
+        params.extend_from_slice(&[0.6, 0.25, 0.15]);
+    }
+    // Mostly-local mixing with weak global coupling.
+    let mut mixing = vec![0.02 / m as f32; m * m];
+    for i in 0..m {
+        mixing[i * m + i] = 0.98 + 0.02 / m as f32;
+    }
+    let (traj, fin) = model.simulate(&state0, &params, &mixing).expect("seir");
+    assert_eq!(traj.len(), merlin::runtime::models::SEIR_DAYS * m);
+    // Population conservation per metro.
+    for i in 0..m {
+        let total: f32 = fin[i * 4..i * 4 + 4].iter().sum();
+        assert!((total - 1.0).abs() < 1e-4, "metro {i} total {total}");
+    }
+    // The outbreak reached other metros via mixing.
+    let recovered_elsewhere: f32 = (1..m).map(|i| fin[i * 4 + 3]).sum();
+    assert!(recovered_elsewhere > 0.0, "epidemic spread across metros");
+    // All values are valid fractions.
+    assert!(fin.iter().all(|v| (-1e-5..=1.0 + 1e-5).contains(v)));
+}
+
+#[test]
+fn surrogate_runs_from_many_threads() {
+    // The RuntimePool must serialize correctly under concurrent callers.
+    let Some(rt) = pool() else { return };
+    let runner = Arc::new(ModelRunner::new(rt));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let runner = runner.clone();
+        handles.push(std::thread::spawn(move || {
+            for s in 0..5 {
+                let node = runner.run("jag", t * 100 + s, 3).expect("run");
+                assert!(node.f32s("outputs/scalars").unwrap()[0] >= 0.0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

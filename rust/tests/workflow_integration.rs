@@ -1,0 +1,275 @@
+//! Cross-module integration: full studies through spec → DAG → broker →
+//! workers → backend, failure/recovery arcs, and the distributed (TCP)
+//! topology.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use merlin::backend::state::StateStore;
+use merlin::backend::store::Store;
+use merlin::broker::client::BrokerClient;
+use merlin::broker::core::Broker;
+use merlin::broker::net::BrokerServer;
+use merlin::coordinator::resubmit::resubmit_missing;
+use merlin::coordinator::{orchestrate, RunOptions};
+use merlin::data::bundle::BundleLayout;
+use merlin::hierarchy;
+use merlin::spec::study::StudySpec;
+use merlin::task::{Payload, StepTemplate, WorkSpec};
+use merlin::util::clock::{Clock, RealClock};
+use merlin::worker::{run_pool, FailurePlan, NullSimRunner, WorkerConfig};
+
+#[test]
+fn failure_injection_then_resubmission_recovers_study() {
+    // The §3.1 arc as a test: first pass loses ~30% of bundles to node
+    // deaths; two resubmission passes bring completion to 100%.
+    let broker = Broker::default();
+    let state = StateStore::new(Store::new());
+    let template = StepTemplate {
+        study_id: "recovery".into(),
+        step_name: "sim".into(),
+        work: WorkSpec::Noop,
+        samples_per_task: 10,
+        seed: 5,
+    };
+    let n = 2_000u64;
+    broker
+        .publish(hierarchy::root_task(template.clone(), n, 50, "q"))
+        .unwrap();
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let mut rates = Vec::new();
+    for (pass, kill) in [0.3f64, 0.1, 0.0].iter().enumerate() {
+        run_pool(&broker, Some(&state), None, Arc::new(NullSimRunner), 4, |i| {
+            let mut cfg = WorkerConfig::simple("q", clock.clone());
+            cfg.idle_exit_ms = 200;
+            cfg.seed = (pass * 100 + i) as u64;
+            cfg.failures = FailurePlan {
+                task_kill_rate: *kill,
+                sample_error_rate: 0.0,
+            };
+            cfg
+        });
+        let done = state.done_count("recovery") as u64;
+        rates.push(done as f64 / n as f64);
+        if *kill > 0.0 {
+            resubmit_missing(&broker, &state, &template, "q", n, None).unwrap();
+        }
+    }
+    assert!(rates[0] < 0.95, "first pass lost work: {:?}", rates);
+    assert!(rates[1] > rates[0], "recovery improves: {rates:?}");
+    assert_eq!(rates[2], 1.0, "final pass completes: {rates:?}");
+}
+
+#[test]
+fn multi_step_study_with_mixed_work_kinds() {
+    let spec = StudySpec::parse(
+        "\
+description:
+  name: mixed
+study:
+  - name: generate
+    run:
+      cmd: 'null: 1 # sample $(MERLIN_SAMPLE_ID)'
+  - name: verify
+    run:
+      cmd: test -n \"$(MERLIN_WORKSPACE)\"
+      shell: /bin/sh
+      depends: [generate_*]
+merlin:
+  samples:
+    count: 30
+    seed: 2
+",
+    )
+    .unwrap();
+    let broker = Broker::default();
+    let state = StateStore::new(Store::new());
+    let opts = RunOptions {
+        max_branch: 8,
+        samples_per_task: 5,
+        queue_prefix: "mx".into(),
+    };
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let ws = std::env::temp_dir().join(format!("merlin-mixed-{}", std::process::id()));
+    let b2 = broker.clone();
+    let st2 = state.clone();
+    let ws2 = ws.clone();
+    let workers = std::thread::spawn(move || {
+        run_pool(&b2, Some(&st2), None, Arc::new(NullSimRunner), 4, |i| {
+            let mut cfg = WorkerConfig::simple("unused", clock.clone());
+            cfg.queues = vec!["mx.generate".into(), "mx.verify".into()];
+            cfg.idle_exit_ms = 1500;
+            cfg.seed = i as u64;
+            cfg.workspace_root = Some(ws2.clone());
+            cfg
+        })
+    });
+    let report = orchestrate(
+        &broker,
+        &state,
+        &spec,
+        "mixed-1",
+        &opts,
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    workers.join().unwrap();
+    std::fs::remove_dir_all(&ws).ok();
+    assert!(!report.timed_out);
+    assert_eq!(report.samples_expected, 31); // 30 sims + 1 verify
+    assert_eq!(report.samples_done, 31);
+}
+
+#[test]
+fn distributed_topology_over_tcp() {
+    // serve-broker + remote producer + remote consumers, with hierarchy
+    // expansion happening through the TCP client (the multi-allocation
+    // deployment shape).
+    let broker = Broker::default();
+    let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // Remote producer.
+    let mut producer = BrokerClient::connect(&addr).unwrap();
+    let template = StepTemplate {
+        study_id: "tcp".into(),
+        step_name: "sim".into(),
+        work: WorkSpec::Noop,
+        samples_per_task: 3,
+        seed: 0,
+    };
+    producer
+        .publish(&hierarchy::root_task(template, 100, 4, "q"))
+        .unwrap();
+
+    // Remote workers: fetch/expand/ack over the wire.
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = BrokerClient::connect(&addr).unwrap();
+            let mut steps = 0u64;
+            let mut idle = 0;
+            loop {
+                match c.fetch(&["q"], 2, 100).unwrap() {
+                    Some(d) => {
+                        idle = 0;
+                        match &d.task.payload {
+                            Payload::Expansion(e) => {
+                                let mut kids = Vec::new();
+                                merlin::hierarchy::expand(e, "q", &mut kids);
+                                c.publish_batch(&kids).unwrap();
+                                c.ack(d.tag).unwrap();
+                            }
+                            Payload::Step(s) => {
+                                steps += s.hi - s.lo;
+                                c.ack(d.tag).unwrap();
+                            }
+                            _ => c.ack(d.tag).unwrap(),
+                        }
+                    }
+                    None => {
+                        idle += 1;
+                        if idle > 5 {
+                            return steps;
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 100, "all samples processed exactly once over TCP");
+    assert_eq!(broker.depth(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn surge_workers_join_mid_study() {
+    // §2.3/Fig 6: "as more workers come online, they can connect to the
+    // central queue server and begin processing work alongside those
+    // already running".
+    let broker = Broker::default();
+    let template = StepTemplate {
+        study_id: "surge".into(),
+        step_name: "sim".into(),
+        work: WorkSpec::Null { duration_us: 5_000 },
+        samples_per_task: 1,
+        seed: 0,
+    };
+    broker
+        .publish(hierarchy::root_task(template, 400, 20, "q"))
+        .unwrap();
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let b1 = broker.clone();
+    let c1 = clock.clone();
+    let starter = std::thread::spawn(move || {
+        run_pool(&b1, None, None, Arc::new(NullSimRunner), 1, |_| {
+            WorkerConfig::simple("q", c1.clone())
+        })
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    let surge = run_pool(&broker, None, None, Arc::new(NullSimRunner), 6, |i| {
+        let mut cfg = WorkerConfig::simple("q", clock.clone());
+        cfg.seed = 100 + i as u64;
+        cfg
+    });
+    let first = starter.join().unwrap();
+    assert_eq!(first.samples_ok + surge.samples_ok, 400);
+    assert!(surge.samples_ok > 0, "surge workers got work");
+}
+
+#[test]
+fn bundled_data_pipeline_with_aggregation() {
+    // builtin sims -> bundle files -> aggregate task -> crawl validates.
+    let broker = Broker::default();
+    let state = StateStore::new(Store::new());
+    let dir = std::env::temp_dir().join(format!("merlin-int-agg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let layout = BundleLayout {
+        sims_per_bundle: 5,
+        bundles_per_dir: 4,
+    };
+    let template = StepTemplate {
+        study_id: "aggtest".into(),
+        step_name: "sim".into(),
+        work: WorkSpec::Builtin { model: "null".into() },
+        samples_per_task: 5,
+        seed: 0,
+    };
+    broker
+        .publish(hierarchy::root_task(template, 40, 4, "q"))
+        .unwrap();
+    let clock: Arc<dyn Clock> = Arc::new(RealClock::new());
+    let mk_cfg = |i: usize| {
+        let mut cfg = WorkerConfig::simple("q", clock.clone());
+        cfg.data_root = Some(dir.clone());
+        cfg.layout = layout;
+        cfg.idle_exit_ms = 300;
+        cfg.seed = i as u64;
+        cfg
+    };
+    let report = run_pool(&broker, Some(&state), None, Arc::new(NullSimRunner), 4, mk_cfg);
+    assert_eq!(report.samples_ok, 40);
+    // Aggregation tasks are enqueued once leaf directories fill (the §3.1
+    // protocol: "once each leaf directory was filled, an aggregation task
+    // collected the bundled files").
+    for d in 0..2 {
+        broker
+            .publish(merlin::task::TaskEnvelope::new(
+                "q",
+                Payload::Aggregate(merlin::task::AggregateTask {
+                    study_id: "aggtest".into(),
+                    dir: dir.join(format!("leaf_{d:06}")).display().to_string(),
+                    expected_bundles: 4,
+                }),
+            ))
+            .unwrap();
+    }
+    let agg = run_pool(&broker, Some(&state), None, Arc::new(NullSimRunner), 4, mk_cfg);
+    assert_eq!(agg.aggregates, 2);
+    let crawl = merlin::data::crawl::crawl(&dir, &layout).unwrap();
+    assert_eq!(crawl.valid.len(), 40);
+    assert!(dir.join("leaf_000000/aggregate.mrln").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}
