@@ -1,0 +1,141 @@
+//! codec_bench: v1 JSON vs v2 binary envelope codec throughput.
+//!
+//! Encodes/decodes a corpus of representative JAG step envelopes (the
+//! §3.1 bundle shape: builtin `jag` work, 10 samples per task) through
+//! both codecs and reports messages/s, MB/s, and bytes per message.
+//! Results go to stdout, `results/codec_bench.csv`, and
+//! `results/codec_bench.json` (both codecs recorded side by side).
+
+use std::time::Instant;
+
+use merlin::metrics::series::Series;
+use merlin::task::{ser, Payload, StepTask, StepTemplate, TaskEnvelope, WorkSpec};
+use merlin::util::json::{to_string, Json};
+
+fn jag_task(i: u64) -> TaskEnvelope {
+    TaskEnvelope::new(
+        "merlin.sim_jag",
+        Payload::Step(StepTask {
+            template: StepTemplate {
+                study_id: "jag-40M/sim_jag.0".into(),
+                step_name: "sim_jag".into(),
+                work: WorkSpec::Builtin { model: "jag".into() },
+                samples_per_task: 10,
+                seed: 0xA5A5_5A5A + i,
+            },
+            lo: i * 10,
+            hi: i * 10 + 10,
+        }),
+    )
+    .with_content_id()
+}
+
+struct CodecStats {
+    encode_msgs_per_s: f64,
+    decode_msgs_per_s: f64,
+    bytes_per_msg: f64,
+    encode_mb_per_s: f64,
+}
+
+fn main() {
+    let n: u64 = 50_000;
+    println!("codec_bench — v1 JSON vs v2 binary on {n} JAG step envelopes\n");
+    let tasks: Vec<TaskEnvelope> = (0..n).map(jag_task).collect();
+
+    // v1 JSON
+    let t0 = Instant::now();
+    let v1_blobs: Vec<String> = tasks.iter().map(ser::encode).collect();
+    let v1_enc_dt = t0.elapsed().as_secs_f64();
+    let v1_bytes: u64 = v1_blobs.iter().map(|b| b.len() as u64).sum();
+    let t0 = Instant::now();
+    for blob in &v1_blobs {
+        let back = ser::decode(blob).expect("v1 decode");
+        assert_eq!(back.queue, "merlin.sim_jag");
+    }
+    let v1_dec_dt = t0.elapsed().as_secs_f64();
+    let v1 = CodecStats {
+        encode_msgs_per_s: n as f64 / v1_enc_dt,
+        decode_msgs_per_s: n as f64 / v1_dec_dt,
+        bytes_per_msg: v1_bytes as f64 / n as f64,
+        encode_mb_per_s: v1_bytes as f64 / 1e6 / v1_enc_dt,
+    };
+
+    // v2 binary
+    let t0 = Instant::now();
+    let v2_blobs: Vec<Vec<u8>> = tasks.iter().map(ser::encode_v2).collect();
+    let v2_enc_dt = t0.elapsed().as_secs_f64();
+    let v2_bytes: u64 = v2_blobs.iter().map(|b| b.len() as u64).sum();
+    let t0 = Instant::now();
+    for blob in &v2_blobs {
+        let back = ser::decode_v2(blob).expect("v2 decode");
+        assert_eq!(back.queue, "merlin.sim_jag");
+    }
+    let v2_dec_dt = t0.elapsed().as_secs_f64();
+    let v2 = CodecStats {
+        encode_msgs_per_s: n as f64 / v2_enc_dt,
+        decode_msgs_per_s: n as f64 / v2_dec_dt,
+        bytes_per_msg: v2_bytes as f64 / n as f64,
+        encode_mb_per_s: v2_bytes as f64 / 1e6 / v2_enc_dt,
+    };
+
+    // Cross-check: both decode to identical envelopes (spot sample).
+    for i in [0usize, (n / 2) as usize, (n - 1) as usize] {
+        assert_eq!(
+            ser::decode_wire(v1_blobs[i].as_bytes()).unwrap(),
+            ser::decode_wire(&v2_blobs[i]).unwrap(),
+        );
+    }
+
+    let mut s = Series::new(
+        "envelope codec throughput (JAG step envelopes)",
+        "version",
+        &["enc_msg_s", "dec_msg_s", "B_per_msg", "enc_MB_s"],
+    );
+    s.push(
+        1.0,
+        vec![v1.encode_msgs_per_s, v1.decode_msgs_per_s, v1.bytes_per_msg, v1.encode_mb_per_s],
+    );
+    s.push(
+        2.0,
+        vec![v2.encode_msgs_per_s, v2.decode_msgs_per_s, v2.bytes_per_msg, v2.encode_mb_per_s],
+    );
+    print!("{}", s.table());
+    println!(
+        "\nsize ratio v1/v2 = {:.2}x, decode speedup v2/v1 = {:.2}x",
+        v1.bytes_per_msg / v2.bytes_per_msg,
+        v2.decode_msgs_per_s / v1.decode_msgs_per_s,
+    );
+
+    assert!(
+        v2.bytes_per_msg < v1.bytes_per_msg,
+        "v2 must be smaller on the wire"
+    );
+    assert!(
+        v2.decode_msgs_per_s > v1.decode_msgs_per_s,
+        "v2 decode must beat JSON parsing"
+    );
+
+    let dir = std::path::Path::new("results");
+    s.save_csv(dir, "codec_bench").ok();
+    let record = |c: &CodecStats| {
+        Json::obj(vec![
+            ("encode_msgs_per_s", Json::num(c.encode_msgs_per_s)),
+            ("decode_msgs_per_s", Json::num(c.decode_msgs_per_s)),
+            ("bytes_per_msg", Json::num(c.bytes_per_msg)),
+            ("encode_mb_per_s", Json::num(c.encode_mb_per_s)),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("n_envelopes", Json::num(n as f64)),
+        ("v1_json", record(&v1)),
+        ("v2_binary", record(&v2)),
+        (
+            "size_ratio_v1_over_v2",
+            Json::num(v1.bytes_per_msg / v2.bytes_per_msg),
+        ),
+    ]);
+    if std::fs::create_dir_all(dir).is_ok() {
+        std::fs::write(dir.join("codec_bench.json"), to_string(&out)).ok();
+    }
+    println!("\ncodec_bench OK (CSV + JSON in results/)");
+}

@@ -5,6 +5,12 @@
 //!   bundle design ("meta-tasks exploit on-node memory...");
 //! * end-to-end pipeline throughput (hierarchy -> broker -> workers ->
 //!   bundle files) in sims/hour, the §3.1 headline unit.
+//!
+//! The pipeline runs on the **sharded** broker with the batch plane end
+//! to end: expansion tasks publish children via `publish_batch` (branch
+//! 100 — batches of up to 100 >= the 64-message batching floor) and the
+//! worker loop pulls its prefetch window with `fetch_n`, so every broker
+//! interaction is one shard-lock pass per batch rather than per message.
 
 use std::path::PathBuf;
 use std::sync::Arc;

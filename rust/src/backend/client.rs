@@ -1,15 +1,15 @@
 //! Blocking TCP client for the results backend.
 
-use std::io::BufReader;
+use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
 use crate::broker::client::ClientError;
-use crate::broker::wire;
+use crate::broker::wire::{self, WireError};
 use crate::util::json::Json;
 
 pub struct BackendClient {
     reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    writer: BufWriter<TcpStream>,
 }
 
 impl BackendClient {
@@ -18,12 +18,13 @@ impl BackendClient {
         stream.set_nodelay(true)?;
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
+            writer: BufWriter::new(stream),
         })
     }
 
     fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
         wire::write_frame(&mut self.writer, req)?;
+        self.writer.flush().map_err(WireError::Io)?;
         let resp = wire::read_frame(&mut self.reader)?;
         if resp.get("ok").as_bool() == Some(true) {
             Ok(resp)

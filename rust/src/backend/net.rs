@@ -1,12 +1,11 @@
 //! TCP front-end for the results backend (same frame protocol as the
 //! broker server; Redis-shaped ops encoded as JSON requests).
 
-use std::io::BufReader;
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 use super::store::Store;
 use crate::broker::wire::{self, WireError};
@@ -22,24 +21,30 @@ impl BackendServer {
     pub fn serve(store: Store, addr: &str) -> std::io::Result<BackendServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let accept_thread = std::thread::Builder::new()
             .name("backend-accept".into())
             .spawn(move || {
-                // Detached connection threads — see broker::net for why.
-                while !stop2.load(Ordering::Relaxed) {
+                // Blocking accept (zero idle CPU); shutdown() wakes it
+                // with a self-connection. Detached connection threads —
+                // see broker::net for why.
+                loop {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                break;
+                            }
                             let store = store.clone();
                             stream.set_nodelay(true).ok();
                             std::thread::spawn(move || handle_conn(store, stream));
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                        Err(_) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(10));
                         }
-                        Err(_) => break,
                     }
                 }
             })?;
@@ -52,23 +57,26 @@ impl BackendServer {
 
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(self.addr);
+        // Self-connect wakeup; join only if it connected — see
+        // broker::net::BrokerServer::shutdown for the rationale.
         if let Some(t) = self.accept_thread.take() {
-            t.join().ok();
+            if TcpStream::connect(crate::broker::net::wake_addr(self.addr)).is_ok() {
+                t.join().ok();
+            }
         }
     }
 }
 
 fn handle_conn(store: Store, stream: TcpStream) {
     let mut reader = BufReader::new(stream.try_clone().expect("clone"));
-    let mut writer = stream;
+    let mut writer = BufWriter::new(stream);
     loop {
         let req = match wire::read_frame(&mut reader) {
             Ok(v) => v,
             Err(WireError::Closed) | Err(_) => break,
         };
         let resp = dispatch(&store, &req);
-        if wire::write_frame(&mut writer, &resp).is_err() {
+        if wire::write_frame(&mut writer, &resp).is_err() || writer.flush().is_err() {
             break;
         }
     }

@@ -1,10 +1,22 @@
 //! In-memory KV store with Redis-shaped operations and JSON snapshotting.
+//!
+//! Sharded like the broker core: the key space is spread over a fixed
+//! array of [`STORE_SHARDS`] independently locked maps, so workers
+//! hammering per-task state writes (the `mark_sample_done` path) only
+//! contend when their keys hash into the same shard. Whole-store
+//! operations (`len`, prefix scans, snapshots) visit shards one at a
+//! time — each sees a consistent shard, the union is a best-effort
+//! point-in-time view, same as Redis `SCAN`.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
+use crate::util::hex::fnv1a;
 use crate::util::json::{to_string, Json};
+
+/// Number of key shards. Power of two so the shard index is a mask.
+pub const STORE_SHARDS: usize = 16;
 
 #[derive(Debug, Clone, PartialEq)]
 enum Value {
@@ -15,9 +27,17 @@ enum Value {
 }
 
 /// Thread-safe store; clone shares state.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct Store {
-    inner: Arc<Mutex<HashMap<String, Value>>>,
+    shards: Arc<Vec<Mutex<HashMap<String, Value>>>>,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self {
+            shards: Arc::new((0..STORE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect()),
+        }
+    }
 }
 
 impl Store {
@@ -25,17 +45,21 @@ impl Store {
         Self::default()
     }
 
+    fn shard(&self, key: &str) -> &Mutex<HashMap<String, Value>> {
+        &self.shards[(fnv1a(key.as_bytes()) as usize) & (STORE_SHARDS - 1)]
+    }
+
     // ---- string ops ----
 
     pub fn set(&self, key: &str, value: &str) {
-        self.inner
+        self.shard(key)
             .lock()
             .unwrap()
             .insert(key.to_string(), Value::Str(value.to_string()));
     }
 
     pub fn get(&self, key: &str) -> Option<String> {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Str(s)) => Some(s.clone()),
             Some(Value::Int(i)) => Some(i.to_string()),
             _ => None,
@@ -43,11 +67,11 @@ impl Store {
     }
 
     pub fn del(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().remove(key).is_some()
+        self.shard(key).lock().unwrap().remove(key).is_some()
     }
 
     pub fn exists(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().contains_key(key)
+        self.shard(key).lock().unwrap().contains_key(key)
     }
 
     // ---- counters ----
@@ -55,7 +79,7 @@ impl Store {
     /// Atomic increment; creates the key at 0 first. Errors if the key
     /// holds a non-integer value.
     pub fn incr_by(&self, key: &str, delta: i64) -> Result<i64, String> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shard(key).lock().unwrap();
         match g.entry(key.to_string()).or_insert(Value::Int(0)) {
             Value::Int(i) => {
                 *i += delta;
@@ -78,7 +102,7 @@ impl Store {
     // ---- hashes ----
 
     pub fn hset(&self, key: &str, field: &str, value: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shard(key).lock().unwrap();
         match g
             .entry(key.to_string())
             .or_insert_with(|| Value::Hash(BTreeMap::new()))
@@ -93,21 +117,21 @@ impl Store {
     }
 
     pub fn hget(&self, key: &str, field: &str) -> Option<String> {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.get(field).cloned(),
             _ => None,
         }
     }
 
     pub fn hgetall(&self, key: &str) -> BTreeMap<String, String> {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.clone(),
             _ => BTreeMap::new(),
         }
     }
 
     pub fn hlen(&self, key: &str) -> usize {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.len(),
             _ => 0,
         }
@@ -117,7 +141,7 @@ impl Store {
 
     /// Add to a set; returns true if newly inserted.
     pub fn sadd(&self, key: &str, member: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shard(key).lock().unwrap();
         match g
             .entry(key.to_string())
             .or_insert_with(|| Value::Set(BTreeSet::new()))
@@ -131,28 +155,28 @@ impl Store {
     }
 
     pub fn srem(&self, key: &str, member: &str) -> bool {
-        match self.inner.lock().unwrap().get_mut(key) {
+        match self.shard(key).lock().unwrap().get_mut(key) {
             Some(Value::Set(s)) => s.remove(member),
             _ => false,
         }
     }
 
     pub fn sismember(&self, key: &str, member: &str) -> bool {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.contains(member),
             _ => false,
         }
     }
 
     pub fn smembers(&self, key: &str) -> Vec<String> {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.iter().cloned().collect(),
             _ => Vec::new(),
         }
     }
 
     pub fn scard(&self, key: &str) -> usize {
-        match self.inner.lock().unwrap().get(key) {
+        match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.len(),
             _ => 0,
         }
@@ -160,18 +184,17 @@ impl Store {
 
     /// Keys matching a `prefix*` pattern (the only glob form we need).
     pub fn keys_with_prefix(&self, prefix: &str) -> Vec<String> {
-        let g = self.inner.lock().unwrap();
-        let mut out: Vec<String> = g
-            .keys()
-            .filter(|k| k.starts_with(prefix))
-            .cloned()
-            .collect();
+        let mut out: Vec<String> = Vec::new();
+        for shard in self.shards.iter() {
+            let g = shard.lock().unwrap();
+            out.extend(g.keys().filter(|k| k.starts_with(prefix)).cloned());
+        }
         out.sort();
         out
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -181,29 +204,33 @@ impl Store {
     // ---- persistence (RDB-style snapshot as JSON) ----
 
     pub fn snapshot_json(&self) -> Json {
-        let g = self.inner.lock().unwrap();
         let mut obj = BTreeMap::new();
-        for (k, v) in g.iter() {
-            let entry = match v {
-                Value::Str(s) => Json::obj(vec![("t", Json::str("s")), ("v", Json::str(s))]),
-                Value::Int(i) => Json::obj(vec![("t", Json::str("i")), ("v", Json::num(*i as f64))]),
-                Value::Hash(h) => Json::obj(vec![
-                    ("t", Json::str("h")),
-                    (
-                        "v",
-                        Json::Obj(
-                            h.iter()
-                                .map(|(k, v)| (k.clone(), Json::str(v)))
-                                .collect(),
+        for shard in self.shards.iter() {
+            let g = shard.lock().unwrap();
+            for (k, v) in g.iter() {
+                let entry = match v {
+                    Value::Str(s) => Json::obj(vec![("t", Json::str("s")), ("v", Json::str(s))]),
+                    Value::Int(i) => {
+                        Json::obj(vec![("t", Json::str("i")), ("v", Json::num(*i as f64))])
+                    }
+                    Value::Hash(h) => Json::obj(vec![
+                        ("t", Json::str("h")),
+                        (
+                            "v",
+                            Json::Obj(
+                                h.iter()
+                                    .map(|(k, v)| (k.clone(), Json::str(v)))
+                                    .collect(),
+                            ),
                         ),
-                    ),
-                ]),
-                Value::Set(s) => Json::obj(vec![
-                    ("t", Json::str("z")),
-                    ("v", Json::arr(s.iter().map(Json::str).collect())),
-                ]),
-            };
-            obj.insert(k.clone(), entry);
+                    ]),
+                    Value::Set(s) => Json::obj(vec![
+                        ("t", Json::str("z")),
+                        ("v", Json::arr(s.iter().map(Json::str).collect())),
+                    ]),
+                };
+                obj.insert(k.clone(), entry);
+            }
         }
         Json::Obj(obj)
     }
@@ -223,40 +250,37 @@ impl Store {
                 "snapshot is not an object",
             ));
         };
-        {
-            let mut g = store.inner.lock().unwrap();
-            for (k, entry) in obj {
-                let val = match entry.get("t").as_str() {
-                    Some("s") => Value::Str(entry.get("v").as_str().unwrap_or("").into()),
-                    Some("i") => Value::Int(entry.get("v").as_i64().unwrap_or(0)),
-                    Some("h") => Value::Hash(
-                        entry
-                            .get("v")
-                            .as_obj()
-                            .map(|o| {
-                                o.iter()
-                                    .map(|(k, v)| {
-                                        (k.clone(), v.as_str().unwrap_or("").to_string())
-                                    })
-                                    .collect()
-                            })
-                            .unwrap_or_default(),
-                    ),
-                    Some("z") => Value::Set(
-                        entry
-                            .get("v")
-                            .as_arr()
-                            .map(|a| {
-                                a.iter()
-                                    .filter_map(|v| v.as_str().map(String::from))
-                                    .collect()
-                            })
-                            .unwrap_or_default(),
-                    ),
-                    _ => continue,
-                };
-                g.insert(k.clone(), val);
-            }
+        for (k, entry) in obj {
+            let val = match entry.get("t").as_str() {
+                Some("s") => Value::Str(entry.get("v").as_str().unwrap_or("").into()),
+                Some("i") => Value::Int(entry.get("v").as_i64().unwrap_or(0)),
+                Some("h") => Value::Hash(
+                    entry
+                        .get("v")
+                        .as_obj()
+                        .map(|o| {
+                            o.iter()
+                                .map(|(k, v)| {
+                                    (k.clone(), v.as_str().unwrap_or("").to_string())
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                ),
+                Some("z") => Value::Set(
+                    entry
+                        .get("v")
+                        .as_arr()
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|v| v.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                ),
+                _ => continue,
+            };
+            store.shard(k).lock().unwrap().insert(k.clone(), val);
         }
         Ok(store)
     }
@@ -323,6 +347,21 @@ mod tests {
     }
 
     #[test]
+    fn keys_spread_across_shards_still_scan_sorted() {
+        let s = Store::new();
+        // Far more keys than shards: every shard gets some.
+        for i in 0..200 {
+            s.set(&format!("k:{i:04}"), "v");
+        }
+        assert_eq!(s.len(), 200);
+        let keys = s.keys_with_prefix("k:");
+        assert_eq!(keys.len(), 200);
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "prefix scan is globally sorted");
+    }
+
+    #[test]
     fn concurrent_increments_are_atomic() {
         let s = Store::new();
         let mut handles = Vec::new();
@@ -338,6 +377,30 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.get("c").as_deref(), Some("8000"));
+    }
+
+    #[test]
+    fn concurrent_disjoint_keys_conserve_writes() {
+        // Per-thread keys land in different shards; total must be exact.
+        let s = Store::new();
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    s.incr(&format!("c:{t}:{}", i % 10)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: i64 = s
+            .keys_with_prefix("c:")
+            .iter()
+            .map(|k| s.get(k).unwrap().parse::<i64>().unwrap())
+            .sum();
+        assert_eq!(total, 8 * 500);
     }
 
     #[test]

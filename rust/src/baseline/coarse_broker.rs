@@ -1,0 +1,167 @@
+//! The seed's single-mutex broker core, kept as a measurable baseline.
+//!
+//! Every enqueue, pop, and stats call funnels through ONE global
+//! `Mutex<HashMap<queue, BinaryHeap>>` — the design the sharded
+//! [`crate::broker::core::Broker`] replaced. `fig3_enqueue` publishes
+//! against both to report the sharding + batching speedup; keep the
+//! semantics here frozen (priority order, FIFO tiebreak, depth cap) so
+//! the comparison stays apples-to-apples.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::task::TaskEnvelope;
+
+struct Queued {
+    priority: u8,
+    seq: u64,
+    task: TaskEnvelope,
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Queued {}
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Shared {
+    queues: HashMap<String, BinaryHeap<Queued>>,
+    seq: u64,
+    total_ready: usize,
+}
+
+/// Single-global-lock broker (enqueue/pop subset). Clone shares state.
+#[derive(Clone)]
+pub struct CoarseBroker {
+    shared: Arc<(Mutex<Shared>, Condvar)>,
+}
+
+impl Default for CoarseBroker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoarseBroker {
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new((
+                Mutex::new(Shared {
+                    queues: HashMap::new(),
+                    seq: 0,
+                    total_ready: 0,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// One lock acquisition per message — the seed's hot path.
+    pub fn publish(&self, task: TaskEnvelope) {
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        s.seq += 1;
+        let seq = s.seq;
+        s.queues.entry(task.queue.clone()).or_default().push(Queued {
+            priority: task.priority,
+            seq,
+            task,
+        });
+        s.total_ready += 1;
+        cv.notify_one();
+    }
+
+    /// One lock acquisition per batch (the seed's `publish_batch`).
+    pub fn publish_batch(&self, tasks: Vec<TaskEnvelope>) {
+        let (lock, cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        for task in tasks {
+            s.seq += 1;
+            let seq = s.seq;
+            s.queues.entry(task.queue.clone()).or_default().push(Queued {
+                priority: task.priority,
+                seq,
+                task,
+            });
+            s.total_ready += 1;
+        }
+        cv.notify_all();
+    }
+
+    /// Pop the best ready message across `queues` (no ack bookkeeping —
+    /// this baseline only measures the enqueue/pop contention path).
+    pub fn try_pop(&self, queues: &[&str]) -> Option<TaskEnvelope> {
+        let (lock, _cv) = &*self.shared;
+        let mut s = lock.lock().unwrap();
+        let best = queues
+            .iter()
+            .filter_map(|name| {
+                s.queues
+                    .get(*name)
+                    .and_then(|q| q.peek())
+                    .map(|m| (m.priority, std::cmp::Reverse(m.seq), name.to_string()))
+            })
+            .max();
+        let (_, _, qname) = best?;
+        let msg = s.queues.get_mut(&qname).unwrap().pop().unwrap();
+        s.total_ready -= 1;
+        Some(msg.task)
+    }
+
+    pub fn depth(&self) -> usize {
+        let (lock, _cv) = &*self.shared;
+        lock.lock().unwrap().total_ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ControlMsg, Payload};
+
+    fn ping(queue: &str, token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            queue,
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    #[test]
+    fn priority_and_fifo_match_the_real_broker() {
+        let b = CoarseBroker::new();
+        b.publish(ping("q", "low").priority(1));
+        b.publish(ping("q", "high").priority(9));
+        b.publish(ping("q", "high2").priority(9));
+        let order: Vec<String> = (0..3)
+            .map(|_| match b.try_pop(&["q"]).unwrap().payload {
+                Payload::Control(ControlMsg::Ping { token }) => token,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, ["high", "high2", "low"]);
+        assert_eq!(b.depth(), 0);
+        assert!(b.try_pop(&["q"]).is_none());
+    }
+
+    #[test]
+    fn batch_publish_counts() {
+        let b = CoarseBroker::new();
+        b.publish_batch((0..64).map(|i| ping("q", &format!("{i}"))).collect());
+        assert_eq!(b.depth(), 64);
+    }
+}

@@ -5,9 +5,14 @@
 //!   files; workers poll for task files. Throughput is bounded by the poll
 //!   interval and directory-scan cost — the contrast case for the broker's
 //!   message-passing design.
+//! * [`coarse_broker`] — the seed's single-global-mutex broker core,
+//!   frozen as the comparator the sharded broker is benchmarked against
+//!   (`fig3_enqueue` reports the speedup).
 //! * The flat-enqueue producer baseline lives in
 //!   [`crate::hierarchy::flat`] (it shares the broker).
 
+pub mod coarse_broker;
 pub mod fs_poll;
 
+pub use coarse_broker::CoarseBroker;
 pub use fs_poll::{FsCoordinator, FsWorkerReport};

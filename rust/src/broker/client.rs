@@ -1,17 +1,25 @@
 //! Blocking TCP client for the broker server. One connection = one broker
 //! consumer (prefetch accounting and crash-requeue are per-connection).
+//!
+//! On connect the client negotiates a wire version (`hello`): against an
+//! upgraded server it lands on wire v2 and routes batch operations through
+//! binary frames (`EnqueueBatch` / `AckBatch` / `PopN`, envelopes in the
+//! compact v2 encoding); against an old server it falls back to per-op
+//! JSON transparently. Writes are buffered — one flush per call, or one
+//! flush for a whole pipelined window of batch frames.
 
-use std::io::BufReader;
+use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
 use super::core::{Delivery, QueueStats};
-use super::wire::{self, WireError};
-use crate::task::ser::{task_from_json, task_to_json};
+use super::wire::{self, BinMsg, Frame, WireError};
+use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
 
 pub struct BrokerClient {
     reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    writer: BufWriter<TcpStream>,
+    wire: u8,
 }
 
 #[derive(Debug)]
@@ -43,14 +51,37 @@ impl BrokerClient {
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(Self {
+        let mut client = Self {
             reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-        })
+            writer: BufWriter::new(stream),
+            wire: 1,
+        };
+        // Negotiate: an old server answers `hello` with an unknown-op
+        // error — that is the v1 fallback, not a failure.
+        match client.call(&Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("max_wire", Json::num(2.0)),
+        ])) {
+            Ok(resp) => client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8,
+            Err(ClientError::Server(_)) => client.wire = 1,
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    e.to_string(),
+                ))
+            }
+        }
+        Ok(client)
+    }
+
+    /// The negotiated wire version (1 = JSON only, 2 = binary batches).
+    pub fn wire_version(&self) -> u8 {
+        self.wire
     }
 
     fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
         wire::write_frame(&mut self.writer, req)?;
+        self.writer.flush().map_err(WireError::Io)?;
         let resp = wire::read_frame(&mut self.reader)?;
         if resp.get("ok").as_bool() == Some(true) {
             Ok(resp)
@@ -61,6 +92,24 @@ impl BrokerClient {
         }
     }
 
+    fn read_bin_reply(&mut self) -> Result<BinMsg, ClientError> {
+        match wire::read_frame_any(&mut self.reader)? {
+            Frame::Bin(body) => match wire::decode_bin(&body)? {
+                BinMsg::Err(e) => Err(ClientError::Server(e)),
+                msg => Ok(msg),
+            },
+            Frame::Json(_) => Err(ClientError::Protocol(
+                "expected binary reply, got json".into(),
+            )),
+        }
+    }
+
+    fn call_bin(&mut self, msg: &BinMsg) -> Result<BinMsg, ClientError> {
+        wire::write_frame_bytes(&mut self.writer, &wire::encode_bin(msg))?;
+        self.writer.flush().map_err(WireError::Io)?;
+        self.read_bin_reply()
+    }
+
     pub fn publish(&mut self, task: &crate::task::TaskEnvelope) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("publish")),
@@ -69,15 +118,84 @@ impl BrokerClient {
         .map(|_| ())
     }
 
+    /// Publish a batch in one round trip. On wire v2 this is a single
+    /// binary `EnqueueBatch` frame of v2 envelopes; on v1, the JSON batch
+    /// op. Either way: one flush, one response.
     pub fn publish_batch(
         &mut self,
         tasks: &[crate::task::TaskEnvelope],
     ) -> Result<(), ClientError> {
-        self.call(&Json::obj(vec![
-            ("op", Json::str("publish_batch")),
-            ("tasks", Json::arr(tasks.iter().map(task_to_json).collect())),
-        ]))
-        .map(|_| ())
+        if self.wire >= 2 {
+            let blobs: Vec<Vec<u8>> = tasks.iter().map(ser::encode_v2).collect();
+            match self.call_bin(&BinMsg::EnqueueBatch(blobs))? {
+                BinMsg::OkCount(_) => Ok(()),
+                other => Err(ClientError::Protocol(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        } else {
+            self.call(&Json::obj(vec![
+                ("op", Json::str("publish_batch")),
+                ("tasks", Json::arr(tasks.iter().map(task_to_json).collect())),
+            ]))
+            .map(|_| ())
+        }
+    }
+
+    /// Pipelined publish: write a window of `EnqueueBatch` frames, flush
+    /// once per window, then collect that window's responses — so a
+    /// million-task enqueue costs one flush + one reply drain per window
+    /// instead of one round trip per batch. The window is bounded: with
+    /// unbounded pipelining both sides can fill their socket buffers
+    /// (server blocked flushing replies nobody reads, client blocked
+    /// writing) and deadlock. Returns the total published. Requires wire
+    /// v2 (falls back to sequential batch calls on v1).
+    pub fn publish_batches_pipelined(
+        &mut self,
+        batches: &[&[crate::task::TaskEnvelope]],
+    ) -> Result<u64, ClientError> {
+        if self.wire < 2 {
+            let mut total = 0u64;
+            for b in batches {
+                self.publish_batch(b)?;
+                total += b.len() as u64;
+            }
+            return Ok(total);
+        }
+        const WINDOW: usize = 32;
+        let mut total = 0u64;
+        for window in batches.chunks(WINDOW) {
+            for b in window {
+                let blobs: Vec<Vec<u8>> = b.iter().map(ser::encode_v2).collect();
+                wire::write_frame_bytes(
+                    &mut self.writer,
+                    &wire::encode_bin(&BinMsg::EnqueueBatch(blobs)),
+                )?;
+            }
+            self.writer.flush().map_err(WireError::Io)?;
+            // Drain the WHOLE window before propagating any error: an
+            // early return would leave unread replies buffered on the
+            // stream and desync every later call on this connection.
+            let mut first_err = None;
+            for _ in 0..window.len() {
+                match self.read_bin_reply() {
+                    Ok(BinMsg::OkCount(n)) => total += n,
+                    Ok(other) => {
+                        first_err.get_or_insert(ClientError::Protocol(format!(
+                            "unexpected reply {other:?}"
+                        )));
+                    }
+                    Err(e @ ClientError::Wire(_)) => return Err(e), // stream dead
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        Ok(total)
     }
 
     /// Fetch with a server-side wait of up to `timeout_ms`. `Ok(None)` on
@@ -109,12 +227,93 @@ impl BrokerClient {
         }
     }
 
+    /// Multi-delivery fetch: up to `max` messages in one round trip (the
+    /// worker prefetch window). Empty vec on timeout.
+    pub fn fetch_n(
+        &mut self,
+        queues: &[&str],
+        prefetch: usize,
+        timeout_ms: u64,
+        max: usize,
+    ) -> Result<Vec<Delivery>, ClientError> {
+        if self.wire >= 2 {
+            let msg = BinMsg::PopN {
+                max: max as u64,
+                prefetch: prefetch as u64,
+                timeout_ms,
+                queues: queues.iter().map(|q| q.to_string()).collect(),
+            };
+            match self.call_bin(&msg)? {
+                BinMsg::Deliveries(items) => {
+                    let mut out = Vec::with_capacity(items.len());
+                    for (tag, bytes) in items {
+                        let task = ser::decode_wire(&bytes).map_err(ClientError::Protocol)?;
+                        out.push(Delivery { tag, task });
+                    }
+                    Ok(out)
+                }
+                other => Err(ClientError::Protocol(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        } else {
+            // v1 servers predate the fetch_n op entirely: emulate the
+            // window with single `fetch` calls (first one waits, the rest
+            // only drain what is already ready).
+            let mut out = Vec::new();
+            while out.len() < max {
+                let wait = if out.is_empty() { timeout_ms } else { 0 };
+                match self.fetch(queues, prefetch, wait)? {
+                    Some(d) => out.push(d),
+                    None => break,
+                }
+            }
+            Ok(out)
+        }
+    }
+
     pub fn ack(&mut self, tag: u64) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("ack")),
             ("tag", Json::num(tag as f64)),
         ]))
         .map(|_| ())
+    }
+
+    /// Acknowledge a batch of tags in one round trip; returns the count
+    /// acked.
+    pub fn ack_batch(&mut self, tags: &[u64]) -> Result<u64, ClientError> {
+        if tags.is_empty() {
+            return Ok(0);
+        }
+        if self.wire >= 2 {
+            match self.call_bin(&BinMsg::AckBatch(tags.to_vec()))? {
+                BinMsg::OkCount(n) => Ok(n),
+                other => Err(ClientError::Protocol(format!(
+                    "unexpected reply {other:?}"
+                ))),
+            }
+        } else {
+            // v1 servers predate the ack_batch op: fall back to per-tag
+            // acks. Mirror the v2 semantics — attempt every tag, then
+            // report the first failure (an early return would leave
+            // completed work unacked and re-executed on redelivery).
+            let mut first_err = None;
+            let mut n = 0u64;
+            for tag in tags {
+                match self.ack(*tag) {
+                    Ok(()) => n += 1,
+                    Err(e @ ClientError::Wire(_)) => return Err(e), // stream dead
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+            match first_err {
+                Some(e) => Err(e),
+                None => Ok(n),
+            }
+        }
     }
 
     pub fn nack(&mut self, tag: u64, requeue: bool) -> Result<(), ClientError> {

@@ -1,11 +1,53 @@
-//! In-process broker engine: priority queues + delivery state + statistics.
+//! In-process broker engine: sharded priority queues + delivery state +
+//! statistics.
+//!
+//! The queue space is split across a fixed array of [`NUM_SHARDS`] shards,
+//! each owning the queues whose name hashes into it. A shard is an
+//! independent `Mutex<ShardState>` + `Condvar`: publishes, pops, acks, and
+//! requeues for queues in different shards never contend. Delivery tags
+//! encode their shard in the low [`SHARD_BITS`] bits, so `ack`/`nack`
+//! resolve their shard without any global lookup. Aggregate figures
+//! (depth, inflight, lifetime totals) are lock-free atomic counters.
+//!
+//! AMQP semantics are preserved *per shard*: strict priority order with
+//! FIFO tiebreak inside every queue (the tiebreak sequence is a global
+//! atomic, so FIFO is also globally meaningful), prefetch accounting per
+//! consumer, and crash-requeue of unacked deliveries. A consumer fetching
+//! from queues that span several shards gets best-effort priority order
+//! across shards (exact within each).
 
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::task::{ser, TaskEnvelope};
+use crate::util::hex::fnv1a;
+
+/// Number of queue shards. Power of two so the shard of a tag is a mask.
+pub const NUM_SHARDS: usize = 16;
+const _: () = assert!(NUM_SHARDS.is_power_of_two());
+const SHARD_BITS: u32 = NUM_SHARDS.trailing_zeros();
+const SHARD_MASK: u64 = (NUM_SHARDS as u64) - 1;
+
+/// Shard owning a queue name.
+fn shard_of(queue: &str) -> usize {
+    (fnv1a(queue.as_bytes()) & SHARD_MASK) as usize
+}
+
+/// Bucket items by shard index, preserving insertion order within each
+/// shard. Shared by the batch fetch/ack paths so the bucketing logic
+/// lives in exactly one place.
+fn group_by_shard<T>(items: impl Iterator<Item = (usize, T)>) -> Vec<(usize, Vec<T>)> {
+    let mut groups: Vec<(usize, Vec<T>)> = Vec::new();
+    for (si, item) in items {
+        match groups.iter_mut().find(|(x, _)| *x == si) {
+            Some((_, v)) => v.push(item),
+            None => groups.push((si, vec![item])),
+        }
+    }
+    groups
+}
 
 /// Broker tunables. Defaults model the paper's deployment.
 #[derive(Debug, Clone)]
@@ -108,28 +150,66 @@ pub struct QueueStats {
     pub bytes_published: u64,
 }
 
+/// Lifetime totals across all queues, read from lock-free counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BrokerTotals {
+    pub published: u64,
+    pub delivered: u64,
+    pub acked: u64,
+    pub requeued: u64,
+    pub dead_lettered: u64,
+}
+
 #[derive(Default)]
 struct QueueState {
     heap: BinaryHeap<Queued>,
     stats: QueueStats,
 }
 
-struct Shared {
+#[derive(Default)]
+struct ShardState {
     queues: HashMap<String, QueueState>,
+    /// Deliveries from this shard's queues, keyed by tag.
     inflight: HashMap<u64, InFlight>,
-    /// Unacked count per consumer id (prefetch accounting).
-    consumer_unacked: HashMap<u64, usize>,
-    seq: u64,
-    total_ready: usize,
+}
+
+#[derive(Default)]
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+struct Inner {
+    cfg: BrokerConfig,
+    shards: Vec<Shard>,
+    /// Global FIFO tiebreak sequence (monotonic across all shards).
+    seq: AtomicU64,
+    next_tag: AtomicU64,
+    next_consumer: AtomicU64,
+    /// Ready-message count across all shards (depth + backpressure).
+    total_ready: AtomicUsize,
+    total_inflight: AtomicUsize,
+    published: AtomicU64,
+    delivered: AtomicU64,
+    acked: AtomicU64,
+    requeued: AtomicU64,
+    dead_lettered: AtomicU64,
+    /// Per-consumer unacked counts (prefetch accounting). The registry is
+    /// read-mostly; the counters themselves are atomics.
+    consumers: RwLock<HashMap<u64, Arc<AtomicUsize>>>,
+    /// Wakeup channel for fetches spanning several shards: every enqueue
+    /// bumps `event_seq`; multi-shard waiters park on `event_cv` only if
+    /// the sequence hasn't moved since they last scanned the shards.
+    event_lock: Mutex<()>,
+    event_cv: Condvar,
+    event_seq: AtomicU64,
+    multi_waiters: AtomicUsize,
 }
 
 /// The broker. Cheap to clone (`Arc` inside); share one per deployment.
 #[derive(Clone)]
 pub struct Broker {
-    cfg: BrokerConfig,
-    shared: Arc<(Mutex<Shared>, Condvar)>,
-    next_tag: Arc<AtomicU64>,
-    next_consumer: Arc<AtomicU64>,
+    inner: Arc<Inner>,
 }
 
 impl Default for Broker {
@@ -141,25 +221,94 @@ impl Default for Broker {
 impl Broker {
     pub fn new(cfg: BrokerConfig) -> Self {
         Self {
-            cfg,
-            shared: Arc::new((
-                Mutex::new(Shared {
-                    queues: HashMap::new(),
-                    inflight: HashMap::new(),
-                    consumer_unacked: HashMap::new(),
-                    seq: 0,
-                    total_ready: 0,
-                }),
-                Condvar::new(),
-            )),
-            next_tag: Arc::new(AtomicU64::new(1)),
-            next_consumer: Arc::new(AtomicU64::new(1)),
+            inner: Arc::new(Inner {
+                cfg,
+                shards: (0..NUM_SHARDS).map(|_| Shard::default()).collect(),
+                seq: AtomicU64::new(0),
+                next_tag: AtomicU64::new(1),
+                next_consumer: AtomicU64::new(1),
+                total_ready: AtomicUsize::new(0),
+                total_inflight: AtomicUsize::new(0),
+                published: AtomicU64::new(0),
+                delivered: AtomicU64::new(0),
+                acked: AtomicU64::new(0),
+                requeued: AtomicU64::new(0),
+                dead_lettered: AtomicU64::new(0),
+                consumers: RwLock::new(HashMap::new()),
+                event_lock: Mutex::new(()),
+                event_cv: Condvar::new(),
+                event_seq: AtomicU64::new(0),
+                multi_waiters: AtomicUsize::new(0),
+            }),
         }
+    }
+
+    pub fn config(&self) -> &BrokerConfig {
+        &self.inner.cfg
     }
 
     /// Register a consumer; returns its id for `fetch` prefetch accounting.
     pub fn register_consumer(&self) -> u64 {
-        self.next_consumer.fetch_add(1, Ordering::Relaxed)
+        let id = self.inner.next_consumer.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .consumers
+            .write()
+            .unwrap()
+            .insert(id, Arc::new(AtomicUsize::new(0)));
+        id
+    }
+
+    fn held_counter(&self, consumer: u64) -> Arc<AtomicUsize> {
+        if let Some(c) = self.inner.consumers.read().unwrap().get(&consumer) {
+            return c.clone();
+        }
+        self.inner
+            .consumers
+            .write()
+            .unwrap()
+            .entry(consumer)
+            .or_insert_with(|| Arc::new(AtomicUsize::new(0)))
+            .clone()
+    }
+
+    fn dec_held(&self, consumer: u64, n: usize) {
+        let c = self.held_counter(consumer);
+        let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    /// Reserve room for `n` ready messages against `max_depth`.
+    fn reserve_depth(&self, n: usize) -> Result<(), BrokerError> {
+        let inner = &self.inner;
+        if inner.cfg.max_depth == 0 {
+            inner.total_ready.fetch_add(n, Ordering::Relaxed);
+            return Ok(());
+        }
+        let mut cur = inner.total_ready.load(Ordering::Relaxed);
+        loop {
+            if cur + n > inner.cfg.max_depth {
+                return Err(BrokerError::QueueFull { depth: cur });
+            }
+            match inner.total_ready.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Wake fetches that wait across several shards.
+    fn ring_multi(&self) {
+        self.inner.event_seq.fetch_add(1, Ordering::SeqCst);
+        if self.inner.multi_waiters.load(Ordering::SeqCst) > 0 {
+            let _g = self.inner.event_lock.lock().unwrap();
+            self.inner.event_cv.notify_all();
+        }
     }
 
     /// Publish one task to its queue. Size accounting uses the wire
@@ -172,72 +321,232 @@ impl Broker {
     /// Publish with a caller-provided size (lets the in-process fast path
     /// skip re-encoding when the caller already measured it).
     pub fn publish_sized(&self, task: TaskEnvelope, bytes: usize) -> Result<(), BrokerError> {
-        if bytes > self.cfg.max_message_bytes {
+        if bytes > self.inner.cfg.max_message_bytes {
             return Err(BrokerError::MessageTooLarge {
                 bytes,
-                limit: self.cfg.max_message_bytes,
+                limit: self.inner.cfg.max_message_bytes,
             });
         }
-        let (lock, cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
-        if self.cfg.max_depth > 0 && s.total_ready >= self.cfg.max_depth {
-            return Err(BrokerError::QueueFull {
-                depth: s.total_ready,
-            });
-        }
-        s.seq += 1;
-        let seq = s.seq;
-        let q = s.queues.entry(task.queue.clone()).or_default();
-        q.stats.published += 1;
-        q.stats.bytes_published += bytes as u64;
-        q.stats.ready += 1;
-        q.heap.push(Queued {
-            priority: task.priority,
-            seq,
-            task,
-        });
-        s.total_ready += 1;
-        cv.notify_one();
-        Ok(())
-    }
-
-    /// Publish a batch under one lock acquisition (flat-enqueue baseline
-    /// and expansion bursts). All-or-nothing on the size check.
-    pub fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), BrokerError> {
-        let mut sized = Vec::with_capacity(tasks.len());
-        for t in tasks {
-            let bytes = ser::encode(&t).len();
-            if bytes > self.cfg.max_message_bytes {
-                return Err(BrokerError::MessageTooLarge {
-                    bytes,
-                    limit: self.cfg.max_message_bytes,
-                });
-            }
-            sized.push((t, bytes));
-        }
-        let (lock, cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
-        if self.cfg.max_depth > 0 && s.total_ready + sized.len() > self.cfg.max_depth {
-            return Err(BrokerError::QueueFull {
-                depth: s.total_ready,
-            });
-        }
-        for (t, bytes) in sized {
-            s.seq += 1;
-            let seq = s.seq;
-            let q = s.queues.entry(t.queue.clone()).or_default();
+        self.reserve_depth(1)?;
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let si = shard_of(&task.queue);
+        let shard = &self.inner.shards[si];
+        {
+            let mut s = shard.state.lock().unwrap();
+            let q = s.queues.entry(task.queue.clone()).or_default();
             q.stats.published += 1;
             q.stats.bytes_published += bytes as u64;
             q.stats.ready += 1;
             q.heap.push(Queued {
-                priority: t.priority,
+                priority: task.priority,
                 seq,
-                task: t,
+                task,
             });
-            s.total_ready += 1;
         }
-        cv.notify_all();
+        self.inner.published.fetch_add(1, Ordering::Relaxed);
+        // notify_all, not notify_one: waiters on this shard's condvar
+        // filter by queue name, so a single wakeup can be absorbed by a
+        // consumer of a *different* queue in the same shard and lost.
+        shard.cv.notify_all();
+        self.ring_multi();
         Ok(())
+    }
+
+    /// Publish a batch: one depth reservation, one lock acquisition per
+    /// *shard touched* (not per message), one wakeup per shard. This is the
+    /// in-process half of the wire protocol's `EnqueueBatch` frame and the
+    /// path expansion bursts and resubmission crawls take. All-or-nothing
+    /// on the size and depth checks.
+    pub fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), BrokerError> {
+        let sized = tasks
+            .into_iter()
+            .map(|t| {
+                let bytes = ser::encode(&t).len();
+                (t, bytes)
+            })
+            .collect();
+        self.publish_batch_sized(sized)
+    }
+
+    /// Batch publish with caller-provided sizes (the in-process fast path
+    /// when sizes are already measured; see [`Broker::publish_sized`]).
+    pub fn publish_batch_sized(
+        &self,
+        sized: Vec<(TaskEnvelope, usize)>,
+    ) -> Result<(), BrokerError> {
+        if sized.is_empty() {
+            return Ok(());
+        }
+        for (_, bytes) in &sized {
+            if *bytes > self.inner.cfg.max_message_bytes {
+                return Err(BrokerError::MessageTooLarge {
+                    bytes: *bytes,
+                    limit: self.inner.cfg.max_message_bytes,
+                });
+            }
+        }
+        self.reserve_depth(sized.len())?;
+        let n = sized.len() as u64;
+        let base = self.inner.seq.fetch_add(n, Ordering::Relaxed);
+        // Group by shard, preserving input order (seq assigned in order).
+        let mut groups: Vec<Vec<(TaskEnvelope, usize, u64)>> =
+            (0..NUM_SHARDS).map(|_| Vec::new()).collect();
+        for (i, (t, bytes)) in sized.into_iter().enumerate() {
+            let si = shard_of(&t.queue);
+            groups[si].push((t, bytes, base + 1 + i as u64));
+        }
+        for (si, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let count = group.len() as u64;
+            let shard = &self.inner.shards[si];
+            {
+                let mut s = shard.state.lock().unwrap();
+                for (t, bytes, seq) in group {
+                    let q = s.queues.entry(t.queue.clone()).or_default();
+                    q.stats.published += 1;
+                    q.stats.bytes_published += bytes as u64;
+                    q.stats.ready += 1;
+                    q.heap.push(Queued {
+                        priority: t.priority,
+                        seq,
+                        task: t,
+                    });
+                }
+            }
+            self.inner.published.fetch_add(count, Ordering::Relaxed);
+            shard.cv.notify_all();
+        }
+        self.ring_multi();
+        Ok(())
+    }
+
+    /// Reserve up to `max_n` prefetch slots for this consumer; returns how
+    /// many were granted (0 when the prefetch window is full).
+    fn reserve_slots(&self, held: &AtomicUsize, prefetch: usize, max_n: usize) -> usize {
+        if prefetch == 0 {
+            held.fetch_add(max_n, Ordering::Relaxed);
+            return max_n;
+        }
+        let mut cur = held.load(Ordering::Relaxed);
+        loop {
+            if cur >= prefetch {
+                return 0;
+            }
+            let n = (prefetch - cur).min(max_n);
+            match held.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return n,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Pop the best ready message among `qnames` (all owned by shard `si`)
+    /// while holding that shard's lock. Returns false when none is ready.
+    fn pop_one_locked(
+        &self,
+        s: &mut ShardState,
+        si: usize,
+        consumer: u64,
+        qnames: &[&str],
+        out: &mut Vec<Delivery>,
+    ) -> bool {
+        let best = qnames
+            .iter()
+            .filter_map(|n| {
+                s.queues
+                    .get(*n)
+                    .and_then(|q| q.heap.peek())
+                    .map(|m| (m.priority, std::cmp::Reverse(m.seq), *n))
+            })
+            .max();
+        let Some((_, _, name)) = best else {
+            return false;
+        };
+        let q = s.queues.get_mut(name).unwrap();
+        let msg = q.heap.pop().unwrap();
+        q.stats.ready -= 1;
+        q.stats.delivered += 1;
+        q.stats.unacked += 1;
+        let raw = self.inner.next_tag.fetch_add(1, Ordering::Relaxed);
+        let tag = (raw << SHARD_BITS) | si as u64;
+        s.inflight.insert(
+            tag,
+            InFlight {
+                queue: name.to_string(),
+                consumer,
+                task: msg.task.clone(),
+            },
+        );
+        self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
+        self.inner.total_inflight.fetch_add(1, Ordering::Relaxed);
+        self.inner.delivered.fetch_add(1, Ordering::Relaxed);
+        out.push(Delivery {
+            tag,
+            task: msg.task,
+        });
+        true
+    }
+
+    /// Pop up to `want` messages across the shard groups, best-first.
+    fn pop_ready(
+        &self,
+        consumer: u64,
+        by_shard: &[(usize, Vec<&str>)],
+        want: usize,
+        out: &mut Vec<Delivery>,
+    ) {
+        if by_shard.len() == 1 {
+            let (si, qnames) = &by_shard[0];
+            let shard = &self.inner.shards[*si];
+            let mut s = shard.state.lock().unwrap();
+            while out.len() < want {
+                if !self.pop_one_locked(&mut s, *si, consumer, qnames, out) {
+                    break;
+                }
+            }
+            return;
+        }
+        while out.len() < want {
+            // Peek every involved shard for its best head, then pop from
+            // the winner. Racy across shards (another consumer may take
+            // the head between peek and pop) — the retry loop tolerates it.
+            let mut best: Option<(u8, std::cmp::Reverse<u64>, usize)> = None;
+            for (si, qnames) in by_shard {
+                let s = self.inner.shards[*si].state.lock().unwrap();
+                for qn in qnames {
+                    if let Some(m) = s.queues.get(*qn).and_then(|q| q.heap.peek()) {
+                        let cand = (m.priority, std::cmp::Reverse(m.seq), *si);
+                        if Some(cand) > best {
+                            best = Some(cand);
+                        }
+                    }
+                }
+            }
+            let Some((_, _, winner)) = best else {
+                break;
+            };
+            // Drain the winning shard while we hold its lock (cross-shard
+            // order is best-effort anyway); re-peeking all shards per
+            // message would cost O(shards x messages) lock acquisitions.
+            let (si, qnames) = by_shard.iter().find(|(x, _)| *x == winner).unwrap();
+            let shard = &self.inner.shards[*si];
+            let mut s = shard.state.lock().unwrap();
+            let mut popped_any = false;
+            while out.len() < want && self.pop_one_locked(&mut s, *si, consumer, qnames, out) {
+                popped_any = true;
+            }
+            if !popped_any {
+                // Lost the race for this shard's head; rescan.
+                continue;
+            }
+        }
     }
 
     /// Blocking fetch: highest-priority ready message across `queues`
@@ -250,50 +559,89 @@ impl Broker {
         prefetch: usize,
         timeout: Duration,
     ) -> Option<Delivery> {
-        let (lock, cv) = &*self.shared;
-        let deadline = std::time::Instant::now() + timeout;
-        let mut s = lock.lock().unwrap();
+        self.fetch_n(consumer, queues, prefetch, 1, timeout)
+            .into_iter()
+            .next()
+    }
+
+    /// Blocking multi-fetch: up to `max_n` messages in one call (one shard
+    /// lock pass when the queues share a shard). Blocks until at least one
+    /// message is available or `timeout` expires; never waits for a *full*
+    /// batch. The wire protocol's `PopN` frame and the worker prefetch
+    /// loop sit on this.
+    pub fn fetch_n(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        if max_n == 0 || queues.is_empty() {
+            return out;
+        }
+        let held = self.held_counter(consumer);
+        // Saturate absurd timeouts (a hostile PopN frame could carry
+        // u64::MAX ms; `Instant + Duration` would panic on overflow).
+        let deadline = Instant::now()
+            .checked_add(timeout)
+            .unwrap_or_else(|| Instant::now() + Duration::from_secs(86_400));
+        let by_shard = group_by_shard(queues.iter().map(|q| (shard_of(q), *q)));
+        let single = by_shard.len() == 1;
+        // Consecutive scans that found nothing while the global event
+        // sequence kept moving (publishes to *other* queues). Bounded so
+        // a multi-shard waiter under unrelated firehose traffic parks
+        // instead of busy-rescanning its shards forever.
+        let mut fruitless_scans = 0u32;
         loop {
-            let held = s.consumer_unacked.get(&consumer).copied().unwrap_or(0);
-            if prefetch == 0 || held < prefetch {
-                // Pick the best head among the requested queues.
-                let best = queues
-                    .iter()
-                    .filter_map(|name| {
-                        s.queues
-                            .get(*name)
-                            .and_then(|q| q.heap.peek())
-                            .map(|m| (m.priority, std::cmp::Reverse(m.seq), name.to_string()))
-                    })
-                    .max();
-                if let Some((_, _, qname)) = best {
-                    let q = s.queues.get_mut(&qname).unwrap();
-                    let msg = q.heap.pop().unwrap();
-                    q.stats.ready -= 1;
-                    q.stats.delivered += 1;
-                    s.total_ready -= 1;
-                    let tag = self.next_tag.fetch_add(1, Ordering::Relaxed);
-                    s.inflight.insert(
-                        tag,
-                        InFlight {
-                            queue: qname,
-                            consumer,
-                            task: msg.task.clone(),
-                        },
-                    );
-                    *s.consumer_unacked.entry(consumer).or_insert(0) += 1;
-                    return Some(Delivery {
-                        tag,
-                        task: msg.task,
-                    });
+            let seen = self.inner.event_seq.load(Ordering::SeqCst);
+            let want = self.reserve_slots(&held, prefetch, max_n);
+            if want > 0 {
+                self.pop_ready(consumer, &by_shard, want, &mut out);
+                if out.len() < want {
+                    held.fetch_sub(want - out.len(), Ordering::Relaxed);
+                }
+                if !out.is_empty() {
+                    return out;
                 }
             }
-            let now = std::time::Instant::now();
+            fruitless_scans += 1;
+            let now = Instant::now();
             if now >= deadline {
-                return None;
+                return out;
             }
-            let (guard, _res) = cv.wait_timeout(s, deadline - now).unwrap();
-            s = guard;
+            let remaining = deadline - now;
+            if single {
+                let (si, qnames) = &by_shard[0];
+                let shard = &self.inner.shards[*si];
+                let guard = shard.state.lock().unwrap();
+                // Re-check under the lock: a publish between our pop
+                // attempt and this wait would otherwise be missed.
+                let became_ready = want > 0
+                    && qnames
+                        .iter()
+                        .any(|n| guard.queues.get(*n).is_some_and(|q| !q.heap.is_empty()));
+                if !became_ready {
+                    let _ = shard.cv.wait_timeout(guard, remaining).unwrap();
+                }
+            } else {
+                self.inner.multi_waiters.fetch_add(1, Ordering::SeqCst);
+                let g = self.inner.event_lock.lock().unwrap();
+                if self.inner.event_seq.load(Ordering::SeqCst) == seen {
+                    // Nothing published anywhere since our scan: park
+                    // until a publisher rings the bell (or the deadline).
+                    let _ = self.inner.event_cv.wait_timeout(g, remaining).unwrap();
+                } else if fruitless_scans >= 3 {
+                    // The sequence keeps moving but none of it was for
+                    // our queues: park briefly instead of spinning. The
+                    // 1 ms cap bounds added latency if a relevant
+                    // publish lands while we hold no fresh scan.
+                    let nap = remaining.min(Duration::from_millis(1));
+                    let _ = self.inner.event_cv.wait_timeout(g, nap).unwrap();
+                }
+                self.inner.multi_waiters.fetch_sub(1, Ordering::SeqCst);
+            }
         }
     }
 
@@ -304,41 +652,146 @@ impl Broker {
 
     /// Acknowledge successful processing.
     pub fn ack(&self, tag: u64) -> Result<(), BrokerError> {
-        let (lock, _cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
-        let inf = s
-            .inflight
-            .remove(&tag)
-            .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
-        if let Some(c) = s.consumer_unacked.get_mut(&inf.consumer) {
-            *c = c.saturating_sub(1);
+        let si = (tag & SHARD_MASK) as usize;
+        let shard = &self.inner.shards[si];
+        let consumer;
+        {
+            let mut s = shard.state.lock().unwrap();
+            let inf = s
+                .inflight
+                .remove(&tag)
+                .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
+            consumer = inf.consumer;
+            if let Some(q) = s.queues.get_mut(&inf.queue) {
+                q.stats.unacked = q.stats.unacked.saturating_sub(1);
+                q.stats.acked += 1;
+            }
         }
-        if let Some(q) = s.queues.get_mut(&inf.queue) {
-            q.stats.unacked = q.stats.unacked.saturating_sub(1);
-            q.stats.acked += 1;
-        }
+        self.dec_held(consumer, 1);
+        self.inner.total_inflight.fetch_sub(1, Ordering::Relaxed);
+        self.inner.acked.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Acknowledge a batch under one lock acquisition per shard touched.
+    /// All tags are attempted; returns the number acked, or the first
+    /// unknown tag as an error (after processing the rest).
+    pub fn ack_batch(&self, tags: &[u64]) -> Result<usize, BrokerError> {
+        let by_shard =
+            group_by_shard(tags.iter().map(|&t| ((t & SHARD_MASK) as usize, t)));
+        let mut first_err = None;
+        let mut acked = 0usize;
+        for (si, stags) in by_shard {
+            let shard = &self.inner.shards[si];
+            let mut consumers_dec: Vec<u64> = Vec::new();
+            {
+                let mut s = shard.state.lock().unwrap();
+                for tag in stags {
+                    match s.inflight.remove(&tag) {
+                        Some(inf) => {
+                            if let Some(q) = s.queues.get_mut(&inf.queue) {
+                                q.stats.unacked = q.stats.unacked.saturating_sub(1);
+                                q.stats.acked += 1;
+                            }
+                            consumers_dec.push(inf.consumer);
+                        }
+                        None => {
+                            first_err.get_or_insert(BrokerError::UnknownDeliveryTag(tag));
+                        }
+                    }
+                }
+            }
+            acked += consumers_dec.len();
+            self.inner
+                .total_inflight
+                .fetch_sub(consumers_dec.len(), Ordering::Relaxed);
+            self.inner
+                .acked
+                .fetch_add(consumers_dec.len() as u64, Ordering::Relaxed);
+            // Aggregate per consumer: one registry lookup + one atomic
+            // update each, not one per tag (a batch is usually all one
+            // connection's tags).
+            consumers_dec.sort_unstable();
+            let mut i = 0;
+            while i < consumers_dec.len() {
+                let c = consumers_dec[i];
+                let mut n = 0;
+                while i < consumers_dec.len() && consumers_dec[i] == c {
+                    n += 1;
+                    i += 1;
+                }
+                self.dec_held(c, n);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(acked),
+        }
     }
 
     /// Negative-ack. With `requeue`, the message returns to its queue with
     /// one fewer retry; once retries are exhausted it is dead-lettered
     /// (counted, dropped) — the §3.1 resubmission crawl recovers those.
     pub fn nack(&self, tag: u64, requeue: bool) -> Result<(), BrokerError> {
-        let (lock, cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
-        let mut inf = s
-            .inflight
-            .remove(&tag)
-            .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
-        if let Some(c) = s.consumer_unacked.get_mut(&inf.consumer) {
-            *c = c.saturating_sub(1);
+        let si = (tag & SHARD_MASK) as usize;
+        let shard = &self.inner.shards[si];
+        let consumer;
+        let mut requeued = false;
+        {
+            let mut s = shard.state.lock().unwrap();
+            let mut inf = s
+                .inflight
+                .remove(&tag)
+                .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
+            consumer = inf.consumer;
+            let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+            let q = s.queues.entry(inf.queue.clone()).or_default();
+            q.stats.unacked = q.stats.unacked.saturating_sub(1);
+            if requeue && inf.task.retries_left > 0 {
+                inf.task.retries_left -= 1;
+                q.stats.requeued += 1;
+                q.stats.ready += 1;
+                q.heap.push(Queued {
+                    priority: inf.task.priority,
+                    seq,
+                    task: inf.task,
+                });
+                requeued = true;
+            } else {
+                q.stats.dead_lettered += 1;
+            }
         }
-        s.seq += 1;
-        let seq = s.seq;
-        let q = s.queues.entry(inf.queue.clone()).or_default();
-        q.stats.unacked = q.stats.unacked.saturating_sub(1);
-        if requeue && inf.task.retries_left > 0 {
-            inf.task.retries_left -= 1;
+        self.dec_held(consumer, 1);
+        self.inner.total_inflight.fetch_sub(1, Ordering::Relaxed);
+        if requeued {
+            self.inner.total_ready.fetch_add(1, Ordering::Relaxed);
+            self.inner.requeued.fetch_add(1, Ordering::Relaxed);
+            shard.cv.notify_all();
+            self.ring_multi();
+        } else {
+            self.inner.dead_lettered.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Return one delivery to its queue **without** consuming a retry —
+    /// the single-tag flavor of [`Broker::recover_consumer`], for
+    /// deliveries that could not be transmitted (nothing failed, so
+    /// redelivery semantics apply, not nack semantics).
+    pub fn requeue(&self, tag: u64) -> Result<(), BrokerError> {
+        let si = (tag & SHARD_MASK) as usize;
+        let shard = &self.inner.shards[si];
+        let consumer;
+        {
+            let mut s = shard.state.lock().unwrap();
+            let inf = s
+                .inflight
+                .remove(&tag)
+                .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
+            consumer = inf.consumer;
+            let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+            let q = s.queues.entry(inf.queue.clone()).or_default();
+            q.stats.unacked = q.stats.unacked.saturating_sub(1);
             q.stats.requeued += 1;
             q.stats.ready += 1;
             q.heap.push(Queued {
@@ -346,58 +799,73 @@ impl Broker {
                 seq,
                 task: inf.task,
             });
-            s.total_ready += 1;
-            cv.notify_one();
-        } else {
-            q.stats.dead_lettered += 1;
         }
+        self.dec_held(consumer, 1);
+        self.inner.total_inflight.fetch_sub(1, Ordering::Relaxed);
+        self.inner.total_ready.fetch_add(1, Ordering::Relaxed);
+        self.inner.requeued.fetch_add(1, Ordering::Relaxed);
+        shard.cv.notify_all();
+        self.ring_multi();
         Ok(())
     }
 
     /// Requeue everything a (dead) consumer held — what AMQP does when a
     /// connection drops. Returns how many messages were recovered.
     pub fn recover_consumer(&self, consumer: u64) -> usize {
-        let (lock, cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
-        let tags: Vec<u64> = s
-            .inflight
-            .iter()
-            .filter(|(_, inf)| inf.consumer == consumer)
-            .map(|(t, _)| *t)
-            .collect();
-        let n = tags.len();
-        for tag in tags {
-            let inf = s.inflight.remove(&tag).unwrap();
-            s.seq += 1;
-            let seq = s.seq;
-            let q = s.queues.entry(inf.queue.clone()).or_default();
-            q.stats.unacked = q.stats.unacked.saturating_sub(1);
-            q.stats.requeued += 1;
-            q.stats.ready += 1;
-            // Redelivery does NOT consume a retry (it wasn't a task failure).
-            q.heap.push(Queued {
-                priority: inf.task.priority,
-                seq,
-                task: inf.task,
-            });
-            s.total_ready += 1;
+        let mut recovered = 0usize;
+        for shard in &self.inner.shards {
+            let mut n_here = 0usize;
+            {
+                let mut s = shard.state.lock().unwrap();
+                let tags: Vec<u64> = s
+                    .inflight
+                    .iter()
+                    .filter(|(_, inf)| inf.consumer == consumer)
+                    .map(|(t, _)| *t)
+                    .collect();
+                for tag in tags {
+                    let inf = s.inflight.remove(&tag).unwrap();
+                    let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                    let q = s.queues.entry(inf.queue.clone()).or_default();
+                    q.stats.unacked = q.stats.unacked.saturating_sub(1);
+                    q.stats.requeued += 1;
+                    q.stats.ready += 1;
+                    // Redelivery does NOT consume a retry (it wasn't a
+                    // task failure).
+                    q.heap.push(Queued {
+                        priority: inf.task.priority,
+                        seq,
+                        task: inf.task,
+                    });
+                    n_here += 1;
+                }
+            }
+            if n_here > 0 {
+                self.inner.total_ready.fetch_add(n_here, Ordering::Relaxed);
+                self.inner.total_inflight.fetch_sub(n_here, Ordering::Relaxed);
+                self.inner.requeued.fetch_add(n_here as u64, Ordering::Relaxed);
+                shard.cv.notify_all();
+                recovered += n_here;
+            }
         }
-        s.consumer_unacked.remove(&consumer);
-        if n > 0 {
-            cv.notify_all();
+        // Drop the consumer's prefetch counter entirely: the consumer is
+        // gone, and keeping the entry would leak one per connection.
+        self.inner.consumers.write().unwrap().remove(&consumer);
+        if recovered > 0 {
+            self.ring_multi();
         }
-        n
+        recovered
     }
 
     /// Drop all ready messages in a queue; returns the count.
     pub fn purge(&self, queue: &str) -> usize {
-        let (lock, _cv) = &*self.shared;
-        let mut s = lock.lock().unwrap();
+        let shard = &self.inner.shards[shard_of(queue)];
+        let mut s = shard.state.lock().unwrap();
         if let Some(q) = s.queues.get_mut(queue) {
             let n = q.heap.len();
             q.heap.clear();
             q.stats.ready = 0;
-            s.total_ready -= n;
+            self.inner.total_ready.fetch_sub(n, Ordering::Relaxed);
             n
         } else {
             0
@@ -405,39 +873,55 @@ impl Broker {
     }
 
     pub fn stats(&self, queue: &str) -> QueueStats {
-        let (lock, _cv) = &*self.shared;
-        let s = lock.lock().unwrap();
-        let mut st = s
-            .queues
+        let shard = &self.inner.shards[shard_of(queue)];
+        let s = shard.state.lock().unwrap();
+        s.queues
             .get(queue)
             .map(|q| q.stats.clone())
-            .unwrap_or_default();
-        st.unacked = s
-            .inflight
-            .values()
-            .filter(|inf| inf.queue == queue)
-            .count();
-        st
+            .unwrap_or_default()
+    }
+
+    /// Lifetime totals across all queues (lock-free reads).
+    pub fn totals(&self) -> BrokerTotals {
+        BrokerTotals {
+            published: self.inner.published.load(Ordering::Relaxed),
+            delivered: self.inner.delivered.load(Ordering::Relaxed),
+            acked: self.inner.acked.load(Ordering::Relaxed),
+            requeued: self.inner.requeued.load(Ordering::Relaxed),
+            dead_lettered: self.inner.dead_lettered.load(Ordering::Relaxed),
+        }
     }
 
     pub fn queue_names(&self) -> Vec<String> {
-        let (lock, _cv) = &*self.shared;
-        let s = lock.lock().unwrap();
-        let mut names: Vec<String> = s.queues.keys().cloned().collect();
+        let mut names: Vec<String> = Vec::new();
+        for shard in &self.inner.shards {
+            let s = shard.state.lock().unwrap();
+            names.extend(s.queues.keys().cloned());
+        }
         names.sort();
         names
     }
 
-    /// Total ready messages across all queues.
+    /// Total ready messages across all queues (lock-free).
     pub fn depth(&self) -> usize {
-        let (lock, _cv) = &*self.shared;
-        lock.lock().unwrap().total_ready
+        self.inner.total_ready.load(Ordering::Relaxed)
     }
 
-    /// Total unacked messages across all queues.
+    /// Total unacked messages across all queues (lock-free).
     pub fn inflight(&self) -> usize {
-        let (lock, _cv) = &*self.shared;
-        lock.lock().unwrap().inflight.len()
+        self.inner.total_inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// A FIFO drain helper for tests/benches: pops everything currently ready.
+pub fn drain_all(broker: &Broker, consumer: u64, queues: &[&str]) -> Vec<Delivery> {
+    let mut out = Vec::new();
+    loop {
+        let mut got = broker.fetch_n(consumer, queues, 0, 64, Duration::ZERO);
+        if got.is_empty() {
+            return out;
+        }
+        out.append(&mut got);
     }
 }
 
@@ -621,6 +1105,22 @@ mod tests {
     }
 
     #[test]
+    fn blocking_multi_queue_fetch_wakes_on_publish() {
+        // Queues chosen to (almost certainly) span shards: the waiter must
+        // park on the cross-shard event channel and still wake promptly.
+        let b = Broker::default();
+        let b2 = b.clone();
+        let handle = std::thread::spawn(move || {
+            let c = b2.register_consumer();
+            b2.fetch(c, &["qa", "qb", "qc", "qd"], 0, Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        b.publish(ping("qc", "wake")).unwrap();
+        let d = handle.join().unwrap().expect("fetch should succeed");
+        assert_eq!(token(&d), "wake");
+    }
+
+    #[test]
     fn fetch_timeout_returns_none() {
         let b = Broker::default();
         let c = b.register_consumer();
@@ -643,6 +1143,68 @@ mod tests {
         let st = b.stats("q");
         assert_eq!((st.ready, st.unacked, st.acked), (1, 0, 1));
         assert!(st.bytes_published > 0);
+    }
+
+    #[test]
+    fn totals_aggregate_across_queues() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..10 {
+            b.publish(ping(&format!("q{i}"), "x")).unwrap();
+        }
+        let names: Vec<String> = (0..10).map(|i| format!("q{i}")).collect();
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let tags: Vec<u64> = drain_all(&b, c, &refs).iter().map(|d| d.tag).collect();
+        assert_eq!(tags.len(), 10);
+        assert_eq!(b.ack_batch(&tags).unwrap(), 10);
+        let t = b.totals();
+        assert_eq!((t.published, t.delivered, t.acked), (10, 10, 10));
+        assert_eq!(b.inflight(), 0);
+    }
+
+    #[test]
+    fn fetch_n_pops_batch_in_priority_order() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "low").priority(1)).unwrap();
+        b.publish(ping("q", "high").priority(9)).unwrap();
+        b.publish(ping("q", "mid").priority(5)).unwrap();
+        let batch = b.fetch_n(c, &["q"], 0, 2, Duration::ZERO);
+        let got: Vec<String> = batch.iter().map(token).collect();
+        assert_eq!(got, ["high", "mid"]);
+        let tags: Vec<u64> = batch.iter().map(|d| d.tag).collect();
+        assert_eq!(b.ack_batch(&tags).unwrap(), 2);
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn fetch_n_respects_prefetch_window() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..8 {
+            b.publish(ping("q", &format!("{i}"))).unwrap();
+        }
+        let batch = b.fetch_n(c, &["q"], 3, 8, Duration::ZERO);
+        assert_eq!(batch.len(), 3, "prefetch caps the batch");
+        assert!(b.fetch_n(c, &["q"], 3, 8, Duration::ZERO).is_empty());
+        let tags: Vec<u64> = batch.iter().map(|d| d.tag).collect();
+        b.ack_batch(&tags).unwrap();
+        assert_eq!(b.fetch_n(c, &["q"], 3, 8, Duration::ZERO).len(), 3);
+    }
+
+    #[test]
+    fn ack_batch_reports_unknown_tag_after_processing_rest() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(ping("q", "a")).unwrap();
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        match b.ack_batch(&[d.tag, 0xDEAD_BEEF]) {
+            Err(BrokerError::UnknownDeliveryTag(t)) => assert_eq!(t, 0xDEAD_BEEF),
+            other => panic!("expected UnknownDeliveryTag, got {other:?}"),
+        }
+        // The known tag was still acked.
+        assert_eq!(b.stats("q").acked, 1);
+        assert_eq!(b.inflight(), 0);
     }
 
     #[test]
@@ -675,6 +1237,31 @@ mod tests {
         let batch = vec![ping("q", "ok"), ping("q", &"x".repeat(500))];
         assert!(b.publish_batch(batch).is_err());
         assert_eq!(b.depth(), 0, "nothing published on batch failure");
+    }
+
+    #[test]
+    fn publish_batch_spanning_shards_preserves_per_queue_fifo() {
+        let b = Broker::default();
+        let mut batch = Vec::new();
+        for i in 0..64 {
+            batch.push(ping(&format!("q{}", i % 8), &format!("{i}")));
+        }
+        b.publish_batch(batch).unwrap();
+        assert_eq!(b.depth(), 64);
+        let c = b.register_consumer();
+        for qi in 0..8 {
+            let qname = format!("q{qi}");
+            let mut last = None;
+            while let Some(d) = b.try_fetch(c, &[qname.as_str()], 0) {
+                let n: u64 = token(&d).parse().unwrap();
+                if let Some(prev) = last {
+                    assert!(n > prev, "FIFO violated in {qname}: {prev} then {n}");
+                }
+                last = Some(n);
+                b.ack(d.tag).unwrap();
+            }
+        }
+        assert_eq!(b.depth(), 0);
     }
 
     #[test]
@@ -714,6 +1301,61 @@ mod tests {
         assert_eq!(
             consumed.load(Ordering::Relaxed),
             (n_producers * per_producer) as u64
+        );
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.inflight(), 0);
+    }
+
+    #[test]
+    fn concurrent_multi_queue_batch_traffic_conserves() {
+        // Producers batch-publish to per-producer queues (distinct shards
+        // with high probability); consumers batch-fetch across all of them.
+        let b = Broker::default();
+        let n_producers = 4usize;
+        let per_batch = 64usize;
+        let batches = 5usize;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for bi in 0..batches {
+                    let batch: Vec<TaskEnvelope> = (0..per_batch)
+                        .map(|i| ping(&format!("shardq{p}"), &format!("{p}-{bi}-{i}")))
+                        .collect();
+                    b.publish_batch(batch).unwrap();
+                }
+            }));
+        }
+        let names: Vec<String> = (0..n_producers).map(|p| format!("shardq{p}")).collect();
+        let consumed = Arc::new(AtomicU64::new(0));
+        let mut chandles = Vec::new();
+        for _ in 0..4 {
+            let b = b.clone();
+            let consumed = consumed.clone();
+            let names = names.clone();
+            chandles.push(std::thread::spawn(move || {
+                let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                let c = b.register_consumer();
+                loop {
+                    let got = b.fetch_n(c, &refs, 0, 16, Duration::from_millis(300));
+                    if got.is_empty() {
+                        break;
+                    }
+                    let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+                    b.ack_batch(&tags).unwrap();
+                    consumed.fetch_add(got.len() as u64, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for h in chandles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            consumed.load(Ordering::Relaxed),
+            (n_producers * per_batch * batches) as u64
         );
         assert_eq!(b.depth(), 0);
         assert_eq!(b.inflight(), 0);

@@ -15,10 +15,14 @@
 //!   the flat-enqueue baseline hits the same wall);
 //! * queue depth / throughput statistics.
 //!
-//! [`core::Broker`] is the in-process engine; [`net`] wraps it in a TCP
-//! server speaking a length-prefixed JSON frame protocol, and [`client`]
-//! is the matching client so that multi-process deployments coordinate
-//! exactly like cross-node Celery workers.
+//! [`core::Broker`] is the in-process engine — **sharded**: queues are
+//! spread over a fixed array of independently locked shards, with batch
+//! publish/fetch/ack operations that amortize one lock acquisition per
+//! shard per batch. [`net`] wraps it in a TCP server speaking a
+//! length-prefixed frame protocol (JSON per-op requests plus binary v2
+//! batch frames — see [`wire`]), and [`client`] is the matching
+//! version-negotiating client so that multi-process deployments
+//! coordinate exactly like cross-node Celery workers.
 
 pub mod client;
 #[allow(clippy::module_inception)]
@@ -26,4 +30,6 @@ pub mod core;
 pub mod net;
 pub mod wire;
 
-pub use self::core::{Broker, BrokerConfig, BrokerError, Delivery, QueueStats};
+pub use self::core::{
+    Broker, BrokerConfig, BrokerError, BrokerTotals, Delivery, QueueStats, NUM_SHARDS,
+};

@@ -3,12 +3,22 @@
 //! thousands of workers against one Rabbit node; our per-connection cost is
 //! a blocked thread and two buffers).
 //!
+//! The accept loop **blocks** in `accept()` — no poll interval, zero idle
+//! CPU. [`BrokerServer::shutdown`] sets the stop flag and then wakes the
+//! loop with a self-connection, so shutdown is prompt.
+//!
 //! Each connection is a broker *consumer*: if it drops with unacked
 //! deliveries, those messages are requeued (AMQP redelivery semantics),
 //! which is the resilience mechanism the paper's studies leaned on when
 //! nodes died mid-task.
+//!
+//! Requests arrive as either JSON frames (the per-op v1 protocol, plus
+//! `hello` negotiation) or binary batch frames (`EnqueueBatch`,
+//! `AckBatch`, `PopN` — see [`super::wire`]). Responses are buffered and
+//! flushed once per request, so a pipelined client that writes N batch
+//! frames before reading gets N responses with minimal syscall traffic.
 
-use std::io::BufReader;
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -16,9 +26,17 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::core::{Broker, BrokerError};
-use super::wire::{self, WireError};
-use crate::task::ser::{task_from_json, task_to_json};
+use super::wire::{self, BinMsg, Frame, WireError};
+use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
+
+/// Highest wire version this server speaks.
+pub const SERVER_MAX_WIRE: u64 = 2;
+
+/// Server-side cap on one PopN / fetch_n window. Bounds the reply frame
+/// (which must stay under `wire::MAX_FRAME`) and the per-request memory
+/// spike; clients wanting more simply issue another request.
+pub const MAX_POP_WINDOW: usize = 1024;
 
 /// Handle to a running broker server. Dropping does not stop it; call
 /// [`BrokerServer::shutdown`].
@@ -35,16 +53,20 @@ impl BrokerServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        listener.set_nonblocking(true)?;
         let accept_thread = std::thread::Builder::new()
             .name("broker-accept".into())
             .spawn(move || {
                 // Connection threads are detached: they exit when their
                 // client closes. Joining them here would deadlock shutdown
                 // against still-connected clients.
-                while !stop2.load(Ordering::Relaxed) {
+                loop {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                // The shutdown self-connect (or a late
+                                // client); drop it and exit.
+                                break;
+                            }
                             let broker = broker.clone();
                             stream.set_nodelay(true).ok();
                             std::thread::Builder::new()
@@ -52,10 +74,14 @@ impl BrokerServer {
                                 .spawn(move || handle_conn(broker, stream))
                                 .expect("spawn conn thread");
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
+                        Err(_) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // Transient accept error (EMFILE, aborted
+                            // handshake): back off briefly and continue.
+                            std::thread::sleep(Duration::from_millis(10));
                         }
-                        Err(_) => break,
                     }
                 }
             })?;
@@ -69,26 +95,56 @@ impl BrokerServer {
     /// Stop accepting. Existing connections end when clients disconnect.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // Poke the listener out of accept by connecting once.
-        let _ = TcpStream::connect(self.addr);
+        // Wake the blocking accept with a self-connection. Only join if
+        // the wakeup actually connected — otherwise the accept thread may
+        // never observe the flag and join would hang; leaking a parked
+        // thread at shutdown is the lesser evil.
         if let Some(t) = self.accept_thread.take() {
-            t.join().ok();
+            if TcpStream::connect(wake_addr(self.addr)).is_ok() {
+                t.join().ok();
+            }
         }
     }
+}
+
+/// Address to self-connect for the shutdown wakeup: a listener bound to
+/// the unspecified address (0.0.0.0 / ::) is not connectable on every
+/// platform, so substitute the matching loopback.
+pub(crate) fn wake_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
+    if addr.ip().is_unspecified() {
+        match addr {
+            std::net::SocketAddr::V4(_) => {
+                addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+            }
+            std::net::SocketAddr::V6(_) => {
+                addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+            }
+        }
+    }
+    addr
 }
 
 fn handle_conn(broker: Broker, stream: TcpStream) {
     let consumer = broker.register_consumer();
     let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    let mut writer = stream;
+    let mut writer = BufWriter::new(stream);
     loop {
-        let req = match wire::read_frame(&mut reader) {
-            Ok(v) => v,
+        let frame = match wire::read_frame_any(&mut reader) {
+            Ok(f) => f,
             Err(WireError::Closed) => break,
             Err(_) => break,
         };
-        let resp = dispatch(&broker, consumer, &req);
-        if wire::write_frame(&mut writer, &resp).is_err() {
+        let write_res = match frame {
+            Frame::Json(req) => {
+                let resp = dispatch(&broker, consumer, &req);
+                wire::write_frame(&mut writer, &resp)
+            }
+            Frame::Bin(body) => {
+                let resp = dispatch_bin(&broker, consumer, &body);
+                wire::write_frame_bytes(&mut writer, &wire::encode_bin(&resp))
+            }
+        };
+        if write_res.is_err() || writer.flush().is_err() {
             break;
         }
     }
@@ -100,8 +156,90 @@ fn broker_err(e: BrokerError) -> Json {
     wire::err(e.to_string())
 }
 
+/// Handle one binary batch frame.
+fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
+    let msg = match wire::decode_bin(body) {
+        Ok(m) => m,
+        Err(e) => return BinMsg::Err(e.to_string()),
+    };
+    match msg {
+        BinMsg::EnqueueBatch(blobs) => {
+            // Size accounting uses the v2 blob length — the bytes actually
+            // transmitted — so no re-encode is needed on this hot path.
+            let mut sized = Vec::with_capacity(blobs.len());
+            for blob in blobs {
+                match ser::decode_wire(&blob) {
+                    Ok(t) => sized.push((t, blob.len())),
+                    Err(e) => return BinMsg::Err(format!("bad task: {e}")),
+                }
+            }
+            let n = sized.len() as u64;
+            match broker.publish_batch_sized(sized) {
+                Ok(()) => BinMsg::OkCount(n),
+                Err(e) => BinMsg::Err(e.to_string()),
+            }
+        }
+        BinMsg::AckBatch(tags) => match broker.ack_batch(&tags) {
+            Ok(n) => BinMsg::OkCount(n as u64),
+            Err(e) => BinMsg::Err(e.to_string()),
+        },
+        BinMsg::PopN {
+            max,
+            prefetch,
+            timeout_ms,
+            queues,
+        } => {
+            let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+            let got = broker.fetch_n(
+                consumer,
+                &refs,
+                prefetch as usize,
+                (max as usize).min(MAX_POP_WINDOW),
+                Duration::from_millis(timeout_ms),
+            );
+            // Byte-budgeted reply: MAX_POP_WINDOW alone cannot keep the
+            // frame under wire::MAX_FRAME when individual tasks are
+            // large. Deliveries that would overflow the budget go
+            // straight back to the queue (no retry cost — nothing
+            // failed) for the next PopN.
+            const POP_REPLY_BUDGET: usize = 48 << 20;
+            let mut items = Vec::new();
+            let mut total = 0usize;
+            for d in got {
+                let blob = ser::encode_v2(&d.task);
+                if blob.len() > POP_REPLY_BUDGET {
+                    // Not transmittable over this protocol at all (only
+                    // possible via an in-process publisher, which skips
+                    // the frame cap): dead-letter it so it can't wedge
+                    // the connection in a redeliver loop — the
+                    // resubmission crawl recovers the samples.
+                    broker.nack(d.tag, false).ok();
+                    continue;
+                }
+                if total + blob.len() > POP_REPLY_BUDGET {
+                    broker.requeue(d.tag).ok();
+                    continue;
+                }
+                total += blob.len();
+                items.push((d.tag, blob));
+            }
+            BinMsg::Deliveries(items)
+        }
+        // Reply ops arriving as requests are protocol errors.
+        other => BinMsg::Err(format!("unexpected request {other:?}")),
+    }
+}
+
 fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
     match req.get("op").as_str() {
+        Some("hello") => {
+            // Version negotiation: both sides speak min(max_wire).
+            let client_max = req.get("max_wire").as_u64().unwrap_or(1);
+            wire::ok(vec![(
+                "wire",
+                Json::num(client_max.min(SERVER_MAX_WIRE) as f64),
+            )])
+        }
         Some("publish") => match task_from_json(req.get("task")) {
             Ok(task) => match broker.publish(task) {
                 Ok(()) => wire::ok(vec![]),
@@ -210,6 +348,7 @@ mod tests {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
         let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(client.wire_version(), 2, "negotiation lands on v2");
         client.publish(&ping("hello")).unwrap();
         let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
         match &d.task.payload {
@@ -255,6 +394,63 @@ mod tests {
     }
 
     #[test]
+    fn binary_batch_enqueue_fetch_n_ack_batch() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        let batch: Vec<TaskEnvelope> = (0..100).map(|i| ping(&format!("t{i}"))).collect();
+        client.publish_batch(&batch).unwrap();
+        // Multi-delivery pop: the whole prefetch window in one round trip.
+        let got = client.fetch_n(&["q"], 0, 500, 64).unwrap();
+        assert_eq!(got.len(), 64);
+        let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+        assert_eq!(client.ack_batch(&tags).unwrap(), 64);
+        let rest = client.fetch_n(&["q"], 0, 500, 64).unwrap();
+        assert_eq!(rest.len(), 36);
+        let tags: Vec<u64> = rest.iter().map(|d| d.tag).collect();
+        assert_eq!(client.ack_batch(&tags).unwrap(), 36);
+        assert_eq!(client.depth().unwrap(), 0);
+        assert_eq!(broker.stats("q").acked, 100);
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_publish_batches_one_flush() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        let batches: Vec<Vec<TaskEnvelope>> = (0..8)
+            .map(|b| (0..64).map(|i| ping(&format!("{b}-{i}"))).collect())
+            .collect();
+        let refs: Vec<&[TaskEnvelope]> = batches.iter().map(Vec::as_slice).collect();
+        let published = client.publish_batches_pipelined(&refs).unwrap();
+        assert_eq!(published, 8 * 64);
+        assert_eq!(broker.depth(), 8 * 64);
+        server.shutdown();
+    }
+
+    #[test]
+    fn v1_json_client_interops_with_v2_server() {
+        // A client that skips negotiation and speaks only per-op JSON (an
+        // "old" deployment) must still work against the upgraded server.
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let req = Json::obj(vec![
+            ("op", Json::str("publish")),
+            ("task", task_to_json(&ping("legacy"))),
+        ]);
+        wire::write_frame(&mut writer, &req).unwrap();
+        writer.flush().unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        assert_eq!(broker.depth(), 1);
+        server.shutdown();
+    }
+
+    #[test]
     fn multiple_clients_share_queue() {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
@@ -279,6 +475,17 @@ mod tests {
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 20);
         server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_prompt() {
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "self-connect wakeup makes shutdown prompt"
+        );
     }
 
     #[test]

@@ -1,9 +1,25 @@
-//! Length-prefixed JSON frame protocol shared by the broker and backend
-//! TCP servers. A frame is a 4-byte big-endian length followed by that many
-//! bytes of UTF-8 JSON.
+//! Length-prefixed frame protocol shared by the broker and backend TCP
+//! servers. A frame is a 4-byte big-endian length followed by that many
+//! body bytes. Two body encodings coexist:
+//!
+//! * **JSON** (wire v1): UTF-8 JSON, first byte is ASCII (`{`, `[`, ...).
+//!   One request/response per frame — the original protocol, still spoken
+//!   by every per-op request.
+//! * **Binary** (wire v2): first byte is [`BIN_MAGIC`] (outside ASCII).
+//!   Carries the batch operations — [`BinMsg::EnqueueBatch`],
+//!   [`BinMsg::AckBatch`], [`BinMsg::PopN`] — whose payloads are v2
+//!   binary task envelopes ([`crate::task::ser`]).
+//!
+//! Writers do **not** flush: [`write_frame`]/[`write_frame_bytes`] write
+//! header and body into the caller's buffered writer (one coalesced OS
+//! write, no intermediate copy), and the caller flushes once per message
+//! *batch*. That turns a million-task enqueue from a million syscall
+//! round trips into one flush per batch frame, and is what the client's
+//! pipelined publish leans on.
 
 use std::io::{Read, Write};
 
+use crate::task::ser::{get_str, get_uvarint, put_str, put_uvarint};
 use crate::util::json::{to_string, Json};
 
 /// Hard cap on a single frame (64 MiB) — protects servers from corrupt
@@ -11,11 +27,16 @@ use crate::util::json::{to_string, Json};
 /// RabbitMQ model) lives in `BrokerConfig`, not here.
 pub const MAX_FRAME: usize = 64 << 20;
 
+/// First byte of every binary (v2) frame body.
+pub const BIN_MAGIC: u8 = 0xB3;
+
 #[derive(Debug)]
 pub enum WireError {
     Io(std::io::Error),
     FrameTooLarge(usize),
     BadJson(String),
+    /// Malformed binary frame (bad magic, unknown op, truncated field).
+    BadFrame(String),
     Closed,
 }
 
@@ -25,6 +46,7 @@ impl std::fmt::Display for WireError {
             WireError::Io(e) => write!(f, "io: {e}"),
             WireError::FrameTooLarge(n) => write!(f, "frame of {n} bytes exceeds cap"),
             WireError::BadJson(e) => write!(f, "bad json frame: {e}"),
+            WireError::BadFrame(e) => write!(f, "bad binary frame: {e}"),
             WireError::Closed => write!(f, "connection closed"),
         }
     }
@@ -38,21 +60,26 @@ impl From<std::io::Error> for WireError {
     }
 }
 
-/// Write one JSON frame.
-pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<(), WireError> {
-    let body = to_string(v);
-    let bytes = body.as_bytes();
-    if bytes.len() > MAX_FRAME {
-        return Err(WireError::FrameTooLarge(bytes.len()));
+/// Write one frame body. Does **not** flush — callers flush once per
+/// batch. Header and body are separate `write_all`s into the caller's
+/// writer (every production caller hands in a `BufWriter`, which
+/// coalesces them); copying them into a temporary buffer here would
+/// double-buffer the hot enqueue path.
+pub fn write_frame_bytes(w: &mut impl Write, body: &[u8]) -> Result<(), WireError> {
+    if body.len() > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(body.len()));
     }
-    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()?;
+    w.write_all(&(body.len() as u32).to_be_bytes())?;
+    w.write_all(body)?;
     Ok(())
 }
 
-/// Read one JSON frame. `Closed` on clean EOF at a frame boundary.
-pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
+/// Write one JSON frame. Does **not** flush (see module docs).
+pub fn write_frame(w: &mut impl Write, v: &Json) -> Result<(), WireError> {
+    write_frame_bytes(w, to_string(v).as_bytes())
+}
+
+fn read_frame_body(r: &mut impl Read) -> Result<Vec<u8>, WireError> {
     let mut len_buf = [0u8; 4];
     match r.read_exact(&mut len_buf) {
         Ok(()) => {}
@@ -65,8 +92,35 @@ pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    let text = std::str::from_utf8(&body).map_err(|e| WireError::BadJson(e.to_string()))?;
+    Ok(body)
+}
+
+/// Read one JSON frame. `Closed` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
+    let body = read_frame_body(r)?;
+    parse_json_body(&body)
+}
+
+fn parse_json_body(body: &[u8]) -> Result<Json, WireError> {
+    let text = std::str::from_utf8(body).map_err(|e| WireError::BadJson(e.to_string()))?;
     Json::parse(text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+/// A frame body, discriminated by its leading byte.
+#[derive(Debug)]
+pub enum Frame {
+    Json(Json),
+    Bin(Vec<u8>),
+}
+
+/// Read one frame of either encoding. Binary bodies (leading byte outside
+/// ASCII) are returned raw for [`decode_bin`].
+pub fn read_frame_any(r: &mut impl Read) -> Result<Frame, WireError> {
+    let body = read_frame_body(r)?;
+    match body.first() {
+        Some(b) if *b >= 0x80 => Ok(Frame::Bin(body)),
+        _ => Ok(Frame::Json(parse_json_body(&body)?)),
+    }
 }
 
 /// Standard `{"ok": true, ...}` response builder.
@@ -82,6 +136,182 @@ pub fn err(msg: impl Into<String>) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.into())),
     ])
+}
+
+// ---------------------------------------------------------------------------
+// binary (v2) batch messages
+// ---------------------------------------------------------------------------
+//
+// bin_frame := BIN_MAGIC op:u8 payload
+// op 0x01 EnqueueBatch : count:varint { len:varint v2-envelope-bytes }*
+// op 0x02 AckBatch     : count:varint { tag:varint }*
+// op 0x03 PopN         : max:varint prefetch:varint timeout_ms:varint
+//                        nqueues:varint { queue:str }*
+// op 0x81 OkCount      : count:varint
+// op 0x82 Deliveries   : count:varint { tag:varint len:varint
+//                        v2-envelope-bytes }*
+// op 0xFF Err          : msg:str
+
+const OP_ENQUEUE_BATCH: u8 = 0x01;
+const OP_ACK_BATCH: u8 = 0x02;
+const OP_POP_N: u8 = 0x03;
+const OP_OK_COUNT: u8 = 0x81;
+const OP_DELIVERIES: u8 = 0x82;
+const OP_ERR: u8 = 0xFF;
+
+/// A decoded binary protocol message.
+#[derive(Debug, PartialEq)]
+pub enum BinMsg {
+    /// Publish a batch of (already wire-encoded) task envelopes.
+    EnqueueBatch(Vec<Vec<u8>>),
+    /// Acknowledge a batch of delivery tags.
+    AckBatch(Vec<u64>),
+    /// Fetch up to `max` deliveries in one round trip.
+    PopN {
+        max: u64,
+        prefetch: u64,
+        timeout_ms: u64,
+        queues: Vec<String>,
+    },
+    /// Success reply carrying a count (published / acked).
+    OkCount(u64),
+    /// Reply to `PopN`: (tag, wire-encoded envelope) pairs.
+    Deliveries(Vec<(u64, Vec<u8>)>),
+    /// Error reply.
+    Err(String),
+}
+
+/// Encode a binary message to a frame body.
+pub fn encode_bin(msg: &BinMsg) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.push(BIN_MAGIC);
+    match msg {
+        BinMsg::EnqueueBatch(tasks) => {
+            out.push(OP_ENQUEUE_BATCH);
+            put_uvarint(&mut out, tasks.len() as u64);
+            for t in tasks {
+                put_uvarint(&mut out, t.len() as u64);
+                out.extend_from_slice(t);
+            }
+        }
+        BinMsg::AckBatch(tags) => {
+            out.push(OP_ACK_BATCH);
+            put_uvarint(&mut out, tags.len() as u64);
+            for tag in tags {
+                put_uvarint(&mut out, *tag);
+            }
+        }
+        BinMsg::PopN {
+            max,
+            prefetch,
+            timeout_ms,
+            queues,
+        } => {
+            out.push(OP_POP_N);
+            put_uvarint(&mut out, *max);
+            put_uvarint(&mut out, *prefetch);
+            put_uvarint(&mut out, *timeout_ms);
+            put_uvarint(&mut out, queues.len() as u64);
+            for q in queues {
+                put_str(&mut out, q);
+            }
+        }
+        BinMsg::OkCount(n) => {
+            out.push(OP_OK_COUNT);
+            put_uvarint(&mut out, *n);
+        }
+        BinMsg::Deliveries(items) => {
+            out.push(OP_DELIVERIES);
+            put_uvarint(&mut out, items.len() as u64);
+            for (tag, bytes) in items {
+                put_uvarint(&mut out, *tag);
+                put_uvarint(&mut out, bytes.len() as u64);
+                out.extend_from_slice(bytes);
+            }
+        }
+        BinMsg::Err(msg) => {
+            out.push(OP_ERR);
+            put_str(&mut out, msg);
+        }
+    }
+    out
+}
+
+fn bad(e: impl std::fmt::Display) -> WireError {
+    WireError::BadFrame(e.to_string())
+}
+
+fn get_blob(body: &[u8], pos: &mut usize) -> Result<Vec<u8>, WireError> {
+    let len = get_uvarint(body, pos).map_err(bad)? as usize;
+    let end = pos.checked_add(len).ok_or_else(|| bad("length overflow"))?;
+    let bytes = body
+        .get(*pos..end)
+        .ok_or_else(|| bad("truncated payload bytes"))?
+        .to_vec();
+    *pos = end;
+    Ok(bytes)
+}
+
+/// Decode a binary frame body.
+pub fn decode_bin(body: &[u8]) -> Result<BinMsg, WireError> {
+    if body.first() != Some(&BIN_MAGIC) {
+        return Err(bad(format!(
+            "unknown binary frame magic {:#04x?}",
+            body.first()
+        )));
+    }
+    let mut pos = 2usize;
+    let op = *body.get(1).ok_or_else(|| bad("missing op byte"))?;
+    let msg = match op {
+        OP_ENQUEUE_BATCH => {
+            let n = get_uvarint(body, &mut pos).map_err(bad)? as usize;
+            let mut tasks = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                tasks.push(get_blob(body, &mut pos)?);
+            }
+            BinMsg::EnqueueBatch(tasks)
+        }
+        OP_ACK_BATCH => {
+            let n = get_uvarint(body, &mut pos).map_err(bad)? as usize;
+            let mut tags = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                tags.push(get_uvarint(body, &mut pos).map_err(bad)?);
+            }
+            BinMsg::AckBatch(tags)
+        }
+        OP_POP_N => {
+            let max = get_uvarint(body, &mut pos).map_err(bad)?;
+            let prefetch = get_uvarint(body, &mut pos).map_err(bad)?;
+            let timeout_ms = get_uvarint(body, &mut pos).map_err(bad)?;
+            let n = get_uvarint(body, &mut pos).map_err(bad)? as usize;
+            let mut queues = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                queues.push(get_str(body, &mut pos).map_err(bad)?);
+            }
+            BinMsg::PopN {
+                max,
+                prefetch,
+                timeout_ms,
+                queues,
+            }
+        }
+        OP_OK_COUNT => BinMsg::OkCount(get_uvarint(body, &mut pos).map_err(bad)?),
+        OP_DELIVERIES => {
+            let n = get_uvarint(body, &mut pos).map_err(bad)? as usize;
+            let mut items = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                let tag = get_uvarint(body, &mut pos).map_err(bad)?;
+                items.push((tag, get_blob(body, &mut pos)?));
+            }
+            BinMsg::Deliveries(items)
+        }
+        OP_ERR => BinMsg::Err(get_str(body, &mut pos).map_err(bad)?),
+        other => return Err(bad(format!("unknown binary op {other:#04x}"))),
+    };
+    if pos != body.len() {
+        return Err(bad(format!("trailing bytes after binary frame at {pos}")));
+    }
+    Ok(msg)
 }
 
 #[cfg(test)]
@@ -100,6 +330,55 @@ mod tests {
         assert_eq!(read_frame(&mut cur).unwrap(), v1);
         assert_eq!(read_frame(&mut cur).unwrap(), v2);
         assert!(matches!(read_frame(&mut cur), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn write_frame_never_flushes() {
+        // Caller-controlled flushing is what the batch pipeline depends
+        // on: a flush inside write_frame would put one syscall round
+        // trip back on every message.
+        struct NoFlush {
+            bytes: Vec<u8>,
+        }
+        impl std::io::Write for NoFlush {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.bytes.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                panic!("write_frame must not flush");
+            }
+        }
+        let mut w = NoFlush { bytes: Vec::new() };
+        write_frame(&mut w, &Json::obj(vec![("op", Json::str("x"))])).unwrap();
+        write_frame_bytes(&mut w, &encode_bin(&BinMsg::OkCount(3))).unwrap();
+        let mut cur = Cursor::new(w.bytes);
+        assert_eq!(
+            read_frame(&mut cur).unwrap().get("op").as_str(),
+            Some("x")
+        );
+        match read_frame_any(&mut cur).unwrap() {
+            Frame::Bin(b) => assert_eq!(decode_bin(&b).unwrap(), BinMsg::OkCount(3)),
+            other => panic!("expected Bin, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_at_exactly_max_frame_roundtrips() {
+        let body = vec![0xB3u8; MAX_FRAME]; // binary-tagged so no JSON parse
+        let mut buf = Vec::new();
+        write_frame_bytes(&mut buf, &body).unwrap();
+        let mut cur = Cursor::new(buf);
+        match read_frame_any(&mut cur).unwrap() {
+            Frame::Bin(b) => assert_eq!(b.len(), MAX_FRAME),
+            other => panic!("expected Bin, got {other:?}"),
+        }
+        // One byte over the cap is rejected on the write side...
+        let over = vec![0u8; MAX_FRAME + 1];
+        assert!(matches!(
+            write_frame_bytes(&mut Vec::new(), &over),
+            Err(WireError::FrameTooLarge(_))
+        ));
     }
 
     #[test]
@@ -140,5 +419,56 @@ mod tests {
         let e = err("boom");
         assert_eq!(e.get("ok").as_bool(), Some(false));
         assert_eq!(e.get("error").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn bin_messages_roundtrip() {
+        let msgs = [
+            BinMsg::EnqueueBatch(vec![vec![0xB2, 2, 0], vec![0xB2, 2, 1, b'x']]),
+            BinMsg::AckBatch(vec![1, 17, u64::MAX]),
+            BinMsg::PopN {
+                max: 64,
+                prefetch: 8,
+                timeout_ms: 250,
+                queues: vec!["merlin.sim".into(), "merlin.post".into()],
+            },
+            BinMsg::OkCount(12345),
+            BinMsg::Deliveries(vec![(9, vec![0xB2, 2]), (10, vec![])]),
+            BinMsg::Err("nope".into()),
+        ];
+        for msg in &msgs {
+            let body = encode_bin(msg);
+            assert_eq!(&decode_bin(&body).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn bin_decode_rejects_malformed() {
+        assert!(decode_bin(&[]).is_err());
+        assert!(decode_bin(&[0x77, 0x01]).is_err(), "wrong magic");
+        assert!(decode_bin(&[BIN_MAGIC]).is_err(), "missing op");
+        assert!(decode_bin(&[BIN_MAGIC, 0x42]).is_err(), "unknown op");
+        // Truncated AckBatch: claims 3 tags, carries 1.
+        let mut body = vec![BIN_MAGIC, 0x02];
+        put_uvarint(&mut body, 3);
+        put_uvarint(&mut body, 7);
+        assert!(matches!(decode_bin(&body), Err(WireError::BadFrame(_))));
+        // Trailing junk after a complete message.
+        let mut body = encode_bin(&BinMsg::OkCount(1));
+        body.push(0);
+        assert!(matches!(decode_bin(&body), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn json_and_bin_frames_interleave_on_one_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &ok(vec![])).unwrap();
+        write_frame_bytes(&mut buf, &encode_bin(&BinMsg::OkCount(7))).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame_any(&mut cur).unwrap(), Frame::Json(_)));
+        match read_frame_any(&mut cur).unwrap() {
+            Frame::Bin(b) => assert_eq!(decode_bin(&b).unwrap(), BinMsg::OkCount(7)),
+            other => panic!("expected Bin, got {other:?}"),
+        }
     }
 }

@@ -16,5 +16,5 @@ pub mod status;
 
 pub use orchestrate::{orchestrate, StudyReport};
 pub use resubmit::resubmit_missing;
-pub use run::{enqueue_step_instance, step_work, RunOptions};
+pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions};
 pub use status::status_report;

@@ -12,7 +12,7 @@ use crate::broker::core::Broker;
 use crate::dag::expand::{expand_study, ExpandedStudy};
 use crate::spec::study::{SpecError, StudySpec};
 
-use super::run::{enqueue_step_instance, RunOptions};
+use super::run::{step_instance_root, RunOptions};
 
 /// Outcome of a full study orchestration.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -57,7 +57,10 @@ pub fn orchestrate(
     let mut inflight: Vec<(String, String, u64)> = Vec::new();
 
     loop {
-        // Release everything whose dependencies are complete.
+        // Release everything whose dependencies are complete — the whole
+        // wave's root messages go out as ONE batch publish (one broker
+        // round trip / lock pass, however many instances unblock at once).
+        let mut wave = Vec::new();
         for id in expanded.dag.ready(&done) {
             if inflight.iter().any(|(i, _, _)| *i == id) {
                 continue;
@@ -67,11 +70,16 @@ pub fn orchestrate(
                 .iter()
                 .find(|i| i.id == id)
                 .expect("instance for dag node");
-            let (key, n) = enqueue_step_instance(broker, spec, inst, study_id, opts)
-                .map_err(|e| SpecError(format!("enqueue {id}: {e}")))?;
+            let (key, n, root) = step_instance_root(spec, inst, study_id, opts);
             report.instances_run += 1;
             report.samples_expected += n;
             inflight.push((id, key, n));
+            wave.push(root);
+        }
+        if !wave.is_empty() {
+            broker
+                .publish_batch(wave)
+                .map_err(|e| SpecError(format!("enqueue wave: {e}")))?;
         }
         // Check in-flight instances for completion.
         let mut still = Vec::new();

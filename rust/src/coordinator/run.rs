@@ -84,16 +84,16 @@ pub fn uses_samples(spec: &StudySpec, cmd: &str) -> bool {
     false
 }
 
-/// Enqueue one step instance: a single O(1) root message regardless of
-/// sample count. Returns (study_key, n_samples) — the orchestrator tracks
-/// completion against `study_key`.
-pub fn enqueue_step_instance(
-    broker: &Broker,
+/// Build the O(1) root message for one step instance without publishing
+/// it. Returns (study_key, n_samples, root envelope) — the orchestrator
+/// batches the roots of a whole release wave into one `publish_batch`
+/// (one broker round trip / lock pass per wave, not per instance).
+pub fn step_instance_root(
     spec: &StudySpec,
     instance: &StepInstance,
     study_id: &str,
     opts: &RunOptions,
-) -> Result<(String, u64), BrokerError> {
+) -> (String, u64, crate::task::TaskEnvelope) {
     let study_key = format!("{study_id}/{}", instance.id);
     let n_samples = if uses_samples(spec, &instance.cmd) {
         spec.samples.as_ref().map(|s| s.count).unwrap_or(1)
@@ -109,6 +109,20 @@ pub fn enqueue_step_instance(
     };
     let queue = opts.queue_for(&instance.step_name);
     let root = hierarchy::root_task(template, n_samples, opts.max_branch, &queue);
+    (study_key, n_samples, root)
+}
+
+/// Enqueue one step instance: a single O(1) root message regardless of
+/// sample count. Returns (study_key, n_samples) — the orchestrator tracks
+/// completion against `study_key`.
+pub fn enqueue_step_instance(
+    broker: &Broker,
+    spec: &StudySpec,
+    instance: &StepInstance,
+    study_id: &str,
+    opts: &RunOptions,
+) -> Result<(String, u64), BrokerError> {
+    let (study_key, n_samples, root) = step_instance_root(spec, instance, study_id, opts);
     broker.publish(root)?;
     Ok((study_key, n_samples))
 }

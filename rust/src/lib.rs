@@ -7,22 +7,31 @@
 //! AOT-compiled from JAX/Pallas to HLO and executed through PJRT
 //! ([`runtime`]).
 //!
-//! Subsystem map (see DESIGN.md for the paper-to-module correspondence):
+//! Subsystem map (see DESIGN.md for the shard layout, the wire v2 frame
+//! grammar, and the v1→v2 negotiation rules):
 //!
 //! * [`spec`] — Maestro-style YAML study specifications
 //! * [`dag`] — parameter × sample expansion into a step DAG
-//! * [`task`] — task envelopes (the Celery analog)
+//! * [`task`] — task envelopes (the Celery analog); [`task::ser`] holds
+//!   both wire codecs: v1 JSON and the compact v2 binary format
 //! * [`hierarchy`] — the paper's hierarchical task-generation algorithm
-//! * [`broker`] — the RabbitMQ analog (priority queues, acks, TCP server)
-//! * [`backend`] — the Redis analog (task state + results)
-//! * [`worker`] — consumers that execute tasks
+//! * [`broker`] — the RabbitMQ analog: a **sharded** priority-queue core
+//!   (per-queue shard locks, lock-free stats, batch
+//!   publish/fetch/ack), a TCP server with batch frames and a
+//!   version-negotiating client
+//! * [`backend`] — the Redis analog (task state + results), sharded KV
+//!   locks under the same hash scheme as the broker
+//! * [`worker`] — consumers that execute tasks; prefetch windows are
+//!   pulled in one batched broker round trip
 //! * [`batch`] — HPC batch-system simulator (Slurm/LSF analog)
 //! * [`flux`] — on-allocation just-in-time launcher (Flux analog)
 //! * [`data`] — Conduit/HDF5-analog hierarchical data + bundling
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
-//! * [`coordinator`] — `merlin run` / `run-workers` / resubmission
+//! * [`coordinator`] — `merlin run` / `run-workers` / resubmission;
+//!   release waves and resubmission crawls publish as single batches
 //! * [`metrics`] — instrumentation for the paper's performance figures
-//! * [`baseline`] — comparator implementations (flat enqueue, fs polling)
+//! * [`baseline`] — comparator implementations (flat enqueue, fs
+//!   polling, and the seed's single-mutex broker core for fig3)
 
 pub mod backend;
 pub mod baseline;

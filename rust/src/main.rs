@@ -206,7 +206,15 @@ fn cmd_run_workers(args: &[String]) -> i32 {
 /// Distributed worker loop over the TCP broker client: supports expansion
 /// tasks (hierarchy unfolds through the remote broker), null and shell
 /// steps, and control messages.
+///
+/// Batched: each round trip pops a whole prefetch window (`PopN`) and
+/// completed deliveries are acknowledged with one `AckBatch` frame per
+/// window instead of one round trip per task.
 fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize) -> u64 {
+    // Matches the prefetch this loop always ran with: the window is the
+    // hoard bound, and raising it would starve sibling workers of
+    // long-running tasks.
+    const WINDOW: usize = 2;
     let Ok(mut client) = BrokerClient::connect(addr) else {
         eprintln!("worker {worker_id}: cannot connect to {addr}");
         return 0;
@@ -215,60 +223,73 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
     let mut done = 0u64;
     let mut idle = 0u64;
     loop {
-        match client.fetch(&qrefs, 2, 200) {
-            Ok(Some(d)) => {
-                idle = 0;
-                match &d.task.payload {
-                    Payload::Expansion(e) => {
-                        let mut children = Vec::new();
-                        merlin::hierarchy::expand(e, &d.task.queue, &mut children);
-                        if client.publish_batch(&children).is_ok() {
-                            client.ack(d.tag).ok();
-                        } else {
-                            client.nack(d.tag, true).ok();
-                        }
-                    }
-                    Payload::Step(s) => {
-                        for sample in s.lo..s.hi {
-                            match &s.template.work {
-                                WorkSpec::Null { duration_us } => {
-                                    std::thread::sleep(Duration::from_micros(*duration_us));
-                                }
-                                WorkSpec::Shell { cmd, shell } => {
-                                    let root = std::env::temp_dir().join("merlin-workspaces");
-                                    merlin::worker::exec::run_shell_sample(
-                                        &root,
-                                        &s.template.study_id,
-                                        &s.template.step_name,
-                                        sample,
-                                        cmd,
-                                        shell,
-                                    )
-                                    .ok();
-                                }
-                                _ => {}
-                            }
-                        }
-                        client.ack(d.tag).ok();
-                        done += 1;
-                    }
-                    Payload::Aggregate(a) => {
-                        merlin::data::bundle::aggregate_dir(std::path::Path::new(&a.dir)).ok();
-                        client.ack(d.tag).ok();
-                    }
-                    Payload::Control(_) => {
-                        client.ack(d.tag).ok();
-                        return done;
-                    }
-                }
-            }
-            Ok(None) => {
-                idle += 200;
-                if idle >= idle_ms {
-                    return done;
-                }
-            }
+        let batch = match client.fetch_n(&qrefs, WINDOW, 200, WINDOW) {
+            Ok(b) => b,
             Err(_) => return done,
+        };
+        if batch.is_empty() {
+            idle += 200;
+            if idle >= idle_ms {
+                return done;
+            }
+            continue;
+        }
+        idle = 0;
+        let mut acks: Vec<u64> = Vec::with_capacity(batch.len());
+        let mut stop = false;
+        for d in batch {
+            match &d.task.payload {
+                Payload::Expansion(e) => {
+                    let mut children = Vec::new();
+                    merlin::hierarchy::expand(e, &d.task.queue, &mut children);
+                    if client.publish_batch(&children).is_ok() {
+                        acks.push(d.tag);
+                    } else {
+                        client.nack(d.tag, true).ok();
+                    }
+                }
+                Payload::Step(s) => {
+                    for sample in s.lo..s.hi {
+                        match &s.template.work {
+                            WorkSpec::Null { duration_us } => {
+                                std::thread::sleep(Duration::from_micros(*duration_us));
+                            }
+                            WorkSpec::Shell { cmd, shell } => {
+                                let root = std::env::temp_dir().join("merlin-workspaces");
+                                merlin::worker::exec::run_shell_sample(
+                                    &root,
+                                    &s.template.study_id,
+                                    &s.template.step_name,
+                                    sample,
+                                    cmd,
+                                    shell,
+                                )
+                                .ok();
+                            }
+                            _ => {}
+                        }
+                    }
+                    acks.push(d.tag);
+                    done += 1;
+                }
+                Payload::Aggregate(a) => {
+                    merlin::data::bundle::aggregate_dir(std::path::Path::new(&a.dir)).ok();
+                    acks.push(d.tag);
+                }
+                Payload::Control(_) => {
+                    acks.push(d.tag);
+                    stop = true;
+                }
+            }
+            if stop {
+                break;
+            }
+        }
+        client.ack_batch(&acks).ok();
+        if stop {
+            // Remaining deliveries of the window are requeued by the
+            // server when this connection closes (AMQP redelivery).
+            return done;
         }
     }
 }

@@ -63,6 +63,94 @@ impl Gen {
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
+
+    /// A string of length in [0, max_len] drawn from a charset that
+    /// stresses both codecs: JSON-escape-worthy characters (quotes,
+    /// backslashes, control chars) and multi-byte UTF-8.
+    pub fn string(&mut self, max_len: usize) -> String {
+        const CHARS: &[char] = &[
+            'a', 'b', 'z', '0', '9', '_', '-', '.', '/', ' ', '"', '\\', '\n', '\t', '\r',
+            '{', '}', '[', ']', ':', ',', '$', '%', 'é', 'ü', '日', '本', '😀', '\u{1}',
+        ];
+        let len = self.usize_in(0, max_len);
+        (0..len)
+            .map(|_| CHARS[self.rng.below(CHARS.len() as u64) as usize])
+            .collect()
+    }
+}
+
+/// Arbitrary-value builders for the task model, used by the codec
+/// equivalence properties (v1 JSON vs v2 binary) and broker fuzzing.
+pub mod arb {
+    use super::Gen;
+    use crate::task::{
+        AggregateTask, ControlMsg, ExpansionTask, Payload, StepTask, StepTemplate, TaskEnvelope,
+        WorkSpec,
+    };
+
+    pub fn work(g: &mut Gen) -> WorkSpec {
+        match g.u64_in(0, 3) {
+            0 => WorkSpec::Null {
+                duration_us: g.u64_in(0, 10_000_000),
+            },
+            1 => WorkSpec::Shell {
+                cmd: g.string(40),
+                shell: g.string(16),
+            },
+            2 => WorkSpec::Builtin { model: g.ident(12) },
+            _ => WorkSpec::Noop,
+        }
+    }
+
+    pub fn template(g: &mut Gen) -> StepTemplate {
+        StepTemplate {
+            study_id: g.string(24),
+            step_name: g.ident(12),
+            work: work(g),
+            samples_per_task: g.u64_in(1, 1000),
+            // v1 rides seeds on f64: keep within the documented 53-bit
+            // range so both codecs are exact (v2 alone handles full u64).
+            seed: g.u64_in(0, (1 << 53) - 1),
+        }
+    }
+
+    pub fn payload(g: &mut Gen) -> Payload {
+        match g.u64_in(0, 4) {
+            0 => {
+                let lo = g.u64_in(0, 1 << 40);
+                Payload::Expansion(ExpansionTask {
+                    template: template(g),
+                    lo,
+                    hi: lo + g.u64_in(1, 1 << 20),
+                    max_branch: g.u64_in(2, 10_000),
+                })
+            }
+            1 => {
+                let lo = g.u64_in(0, 1 << 40);
+                Payload::Step(StepTask {
+                    template: template(g),
+                    lo,
+                    hi: lo + g.u64_in(1, 1000),
+                })
+            }
+            2 => Payload::Aggregate(AggregateTask {
+                study_id: g.string(24),
+                dir: g.string(48),
+                expected_bundles: g.u64_in(0, 1 << 30),
+            }),
+            3 => Payload::Control(ControlMsg::StopWorker),
+            _ => Payload::Control(ControlMsg::Ping { token: g.string(32) }),
+        }
+    }
+
+    /// A fully arbitrary task envelope (id/queue/priority/retries included).
+    pub fn envelope(g: &mut Gen) -> TaskEnvelope {
+        let mut t = TaskEnvelope::new(g.string(20), payload(g));
+        t.id = g.string(32);
+        t.priority = g.u64_in(0, 255) as u8;
+        t.retries_left = g.u64_in(0, 100) as u32;
+        t
+    }
 }
 
 /// Run `n` cases of `property`, deterministically derived from `seed`.
@@ -126,6 +214,20 @@ mod tests {
         };
         assert!(msg.contains("seed=0x63"), "{msg}");
         assert!(msg.contains("case=10"), "{msg}");
+    }
+
+    #[test]
+    fn arb_envelope_is_deterministic_per_seed() {
+        let mut a = Vec::new();
+        cases(0xA5B, 20, |g| a.push(super::arb::envelope(g)));
+        let mut b = Vec::new();
+        cases(0xA5B, 20, |g| b.push(super::arb::envelope(g)));
+        assert_eq!(a, b);
+        // Strings exercise the escape-worthy charset without panicking.
+        cases(0xA5C, 100, |g| {
+            let s = g.string(16);
+            assert!(s.chars().count() <= 16);
+        });
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! The worker loop.
+//!
+//! Fetching is batched: each broker round trip pulls up to a prefetch
+//! window of deliveries ([`crate::broker::core::Broker::fetch_n`] — one
+//! shard-lock pass instead of one per message) into a local buffer that
+//! the loop drains. Deliveries still buffered when the worker stops are
+//! recovered (requeued without retry cost), mirroring AMQP redelivery.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -128,16 +135,27 @@ impl Worker {
         let consumer = self.broker.register_consumer();
         let queue_names = self.cfg.queues.clone();
         let queues: Vec<&str> = queue_names.iter().map(String::as_str).collect();
+        // Batch size of the prefetch pipeline. The prefetch limit IS the
+        // hoard bound the deployment chose, so batch exactly that much;
+        // prefetch=0 ("unlimited") keeps the seed's fetch-one-at-a-time
+        // behavior — buffering more would hide ready tasks from
+        // late-joining workers (the work-stealing property §2.3 relies
+        // on).
+        let window = self.cfg.prefetch.max(1);
         let mut report = WorkerReport::default();
         let mut last_work = Instant::now();
+        let mut buf: VecDeque<Delivery> = VecDeque::new();
         loop {
-            let delivery = self.broker.fetch(
-                consumer,
-                &queues,
-                self.cfg.prefetch,
-                Duration::from_millis(50),
-            );
-            match delivery {
+            if buf.is_empty() {
+                buf.extend(self.broker.fetch_n(
+                    consumer,
+                    &queues,
+                    self.cfg.prefetch,
+                    window,
+                    Duration::from_millis(50),
+                ));
+            }
+            match buf.pop_front() {
                 Some(d) => {
                     last_work = Instant::now();
                     if !self.handle(d, &mut report) {
@@ -153,6 +171,12 @@ impl Worker {
                 }
             }
         }
+        // Anything still buffered was delivered but never processed:
+        // requeue it (no retry cost) for the remaining workers. Always
+        // recover — with an empty buffer this requeues nothing but still
+        // retires this consumer's registry entry in the broker.
+        drop(buf);
+        self.broker.recover_consumer(consumer);
         report
     }
 
