@@ -7,12 +7,14 @@ use crate::broker::client::ClientError;
 use crate::broker::wire::{self, WireError};
 use crate::util::json::Json;
 
+/// A connected backend client (Redis-shaped ops over the frame protocol).
 pub struct BackendClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
 impl BackendClient {
+    /// Connect to a backend server.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -35,6 +37,7 @@ impl BackendClient {
         }
     }
 
+    /// Set a string value.
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("set")),
@@ -44,6 +47,7 @@ impl BackendClient {
         .map(|_| ())
     }
 
+    /// Get a string value (`None` for missing keys).
     pub fn get(&mut self, key: &str) -> Result<Option<String>, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("get")),
@@ -52,6 +56,7 @@ impl BackendClient {
         Ok(r.get("value").as_str().map(String::from))
     }
 
+    /// Add `delta` to an integer key; returns the new value.
     pub fn incr_by(&mut self, key: &str, delta: i64) -> Result<i64, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("incrby")),
@@ -63,6 +68,7 @@ impl BackendClient {
             .ok_or_else(|| ClientError::Protocol("bad incr value".into()))
     }
 
+    /// Set one field of a hash.
     pub fn hset(&mut self, key: &str, field: &str, value: &str) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("hset")),
@@ -73,6 +79,7 @@ impl BackendClient {
         .map(|_| ())
     }
 
+    /// Get one field of a hash.
     pub fn hget(&mut self, key: &str, field: &str) -> Result<Option<String>, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("hget")),
@@ -82,6 +89,7 @@ impl BackendClient {
         Ok(r.get("value").as_str().map(String::from))
     }
 
+    /// Add to a set; returns whether the member was newly inserted.
     pub fn sadd(&mut self, key: &str, member: &str) -> Result<bool, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("sadd")),
@@ -91,6 +99,7 @@ impl BackendClient {
         Ok(r.get("added").as_bool().unwrap_or(false))
     }
 
+    /// All members of a set, sorted.
     pub fn smembers(&mut self, key: &str) -> Result<Vec<String>, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("smembers")),
@@ -102,6 +111,7 @@ impl BackendClient {
             .unwrap_or_default())
     }
 
+    /// Cardinality of a set.
     pub fn scard(&mut self, key: &str) -> Result<usize, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("scard")),

@@ -11,13 +11,17 @@ use super::store::Store;
 use crate::broker::wire::{self, WireError};
 use crate::util::json::Json;
 
+/// Handle to a running backend server. Dropping does not stop it; call
+/// [`BackendServer::shutdown`].
 pub struct BackendServer {
+    /// The bound address (resolves port 0 to the ephemeral port chosen).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
 impl BackendServer {
+    /// Bind and serve `store` on `addr` (use port 0 for ephemeral).
     pub fn serve(store: Store, addr: &str) -> std::io::Result<BackendServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -55,6 +59,7 @@ impl BackendServer {
         })
     }
 
+    /// Stop accepting. Existing connections end when clients disconnect.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Self-connect wakeup; join only if it connected — see

@@ -14,6 +14,7 @@ use super::store::Store;
 
 /// Celery-compatible task lifecycle states.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // the variants are the Celery state names verbatim
 pub enum TaskState {
     Pending,
     Received,
@@ -25,6 +26,7 @@ pub enum TaskState {
 }
 
 impl TaskState {
+    /// The Celery state string (`"PENDING"`, ...).
     pub fn as_str(&self) -> &'static str {
         match self {
             TaskState::Pending => "PENDING",
@@ -37,6 +39,7 @@ impl TaskState {
         }
     }
 
+    /// Parse a Celery state string (inverse of [`TaskState::as_str`]).
     pub fn parse(s: &str) -> Option<TaskState> {
         Some(match s {
             "PENDING" => TaskState::Pending,
@@ -58,19 +61,23 @@ pub struct StateStore {
 }
 
 impl StateStore {
+    /// Wrap a raw KV store with the study-state key layout.
     pub fn new(store: Store) -> Self {
         Self { store }
     }
 
+    /// The underlying KV store (escape hatch for custom keys).
     pub fn raw(&self) -> &Store {
         &self.store
     }
 
+    /// Record a task's lifecycle state.
     pub fn set_task_state(&self, study: &str, task_id: &str, state: TaskState) {
         self.store
             .set(&format!("st:{study}:task:{task_id}"), state.as_str());
     }
 
+    /// A task's last recorded lifecycle state.
     pub fn task_state(&self, study: &str, task_id: &str) -> Option<TaskState> {
         self.store
             .get(&format!("st:{study}:task:{task_id}"))
@@ -96,14 +103,17 @@ impl StateStore {
         }
     }
 
+    /// Number of samples recorded successful.
     pub fn done_count(&self, study: &str) -> usize {
         self.store.scard(&format!("st:{study}:done"))
     }
 
+    /// Number of samples recorded failed (and never re-done).
     pub fn failed_count(&self, study: &str) -> usize {
         self.store.scard(&format!("st:{study}:failed"))
     }
 
+    /// Sorted indices of successful samples.
     pub fn done_samples(&self, study: &str) -> Vec<u64> {
         let mut v: Vec<u64> = self
             .store
@@ -115,6 +125,7 @@ impl StateStore {
         v
     }
 
+    /// Sorted indices of failed samples.
     pub fn failed_samples(&self, study: &str) -> Vec<u64> {
         let mut v: Vec<u64> = self
             .store
@@ -134,12 +145,14 @@ impl StateStore {
         (0..n).filter(|i| !done.contains(i)).collect()
     }
 
+    /// Add `delta` to a named study counter; returns the new value.
     pub fn incr_counter(&self, study: &str, name: &str, delta: i64) -> i64 {
         self.store
             .incr_by(&format!("st:{study}:counter:{name}"), delta)
             .unwrap_or(0)
     }
 
+    /// Current value of a named study counter (0 if never set).
     pub fn counter(&self, study: &str, name: &str) -> i64 {
         self.store
             .get(&format!("st:{study}:counter:{name}"))

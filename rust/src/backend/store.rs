@@ -41,6 +41,7 @@ impl Default for Store {
 }
 
 impl Store {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -51,6 +52,7 @@ impl Store {
 
     // ---- string ops ----
 
+    /// Set a string value (overwrites any previous type).
     pub fn set(&self, key: &str, value: &str) {
         self.shard(key)
             .lock()
@@ -58,6 +60,7 @@ impl Store {
             .insert(key.to_string(), Value::Str(value.to_string()));
     }
 
+    /// Get a string value (integers render as decimal, Redis-style).
     pub fn get(&self, key: &str) -> Option<String> {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Str(s)) => Some(s.clone()),
@@ -66,10 +69,12 @@ impl Store {
         }
     }
 
+    /// Delete a key; returns whether it existed.
     pub fn del(&self, key: &str) -> bool {
         self.shard(key).lock().unwrap().remove(key).is_some()
     }
 
+    /// Whether a key exists (any type).
     pub fn exists(&self, key: &str) -> bool {
         self.shard(key).lock().unwrap().contains_key(key)
     }
@@ -95,12 +100,14 @@ impl Store {
         }
     }
 
+    /// [`Store::incr_by`] with a delta of 1.
     pub fn incr(&self, key: &str) -> Result<i64, String> {
         self.incr_by(key, 1)
     }
 
     // ---- hashes ----
 
+    /// Set one field of a hash (created on demand).
     pub fn hset(&self, key: &str, field: &str, value: &str) {
         let mut g = self.shard(key).lock().unwrap();
         match g
@@ -116,6 +123,7 @@ impl Store {
         }
     }
 
+    /// Get one field of a hash.
     pub fn hget(&self, key: &str, field: &str) -> Option<String> {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.get(field).cloned(),
@@ -123,6 +131,7 @@ impl Store {
         }
     }
 
+    /// All fields of a hash (empty for missing keys / other types).
     pub fn hgetall(&self, key: &str) -> BTreeMap<String, String> {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.clone(),
@@ -130,6 +139,7 @@ impl Store {
         }
     }
 
+    /// Number of fields in a hash.
     pub fn hlen(&self, key: &str) -> usize {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Hash(h)) => h.len(),
@@ -154,6 +164,7 @@ impl Store {
         }
     }
 
+    /// Remove from a set; returns whether the member was present.
     pub fn srem(&self, key: &str, member: &str) -> bool {
         match self.shard(key).lock().unwrap().get_mut(key) {
             Some(Value::Set(s)) => s.remove(member),
@@ -161,6 +172,7 @@ impl Store {
         }
     }
 
+    /// Set membership test.
     pub fn sismember(&self, key: &str, member: &str) -> bool {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.contains(member),
@@ -168,6 +180,7 @@ impl Store {
         }
     }
 
+    /// All members of a set, sorted.
     pub fn smembers(&self, key: &str) -> Vec<String> {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.iter().cloned().collect(),
@@ -175,6 +188,7 @@ impl Store {
         }
     }
 
+    /// Cardinality of a set.
     pub fn scard(&self, key: &str) -> usize {
         match self.shard(key).lock().unwrap().get(key) {
             Some(Value::Set(s)) => s.len(),
@@ -193,16 +207,20 @@ impl Store {
         out
     }
 
+    /// Total number of keys across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// Whether the store holds no keys.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
     // ---- persistence (RDB-style snapshot as JSON) ----
 
+    /// Render the whole store as a typed JSON object (the snapshot
+    /// format [`Store::save`] writes).
     pub fn snapshot_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         for shard in self.shards.iter() {
@@ -235,10 +253,12 @@ impl Store {
         Json::Obj(obj)
     }
 
+    /// Write an RDB-style JSON snapshot to `path`.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, to_string(&self.snapshot_json()))
     }
 
+    /// Load a snapshot previously written by [`Store::save`].
     pub fn load(path: &Path) -> std::io::Result<Store> {
         let text = std::fs::read_to_string(path)?;
         let v = Json::parse(&text)

@@ -11,21 +11,26 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{Delivery, QueueStats};
+use super::core::{Delivery, DurabilityStats, QueueStats};
 use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
 
+/// A connected broker client (one TCP connection, one broker consumer).
 pub struct BrokerClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     wire: u8,
 }
 
+/// Errors surfaced by broker/backend client calls.
 #[derive(Debug)]
 pub enum ClientError {
+    /// Transport-level failure (the connection is unusable).
     Wire(WireError),
+    /// The server processed the request and returned an error.
     Server(String),
+    /// The server's reply violated the protocol (client/server bug).
     Protocol(String),
 }
 
@@ -48,6 +53,7 @@ impl From<WireError> for ClientError {
 }
 
 impl BrokerClient {
+    /// Connect to a broker server and negotiate the wire version.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -110,6 +116,7 @@ impl BrokerClient {
         self.read_bin_reply()
     }
 
+    /// Publish one task (per-op JSON; use the batch calls on hot paths).
     pub fn publish(&mut self, task: &crate::task::TaskEnvelope) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("publish")),
@@ -272,6 +279,7 @@ impl BrokerClient {
         }
     }
 
+    /// Acknowledge one delivery.
     pub fn ack(&mut self, tag: u64) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("ack")),
@@ -316,6 +324,8 @@ impl BrokerClient {
         }
     }
 
+    /// Negative-ack one delivery; with `requeue` it returns to its queue
+    /// at the cost of one retry, otherwise it is dead-lettered.
     pub fn nack(&mut self, tag: u64, requeue: bool) -> Result<(), ClientError> {
         self.call(&Json::obj(vec![
             ("op", Json::str("nack")),
@@ -325,6 +335,32 @@ impl BrokerClient {
         .map(|_| ())
     }
 
+    /// Return one delivery to its queue **without** consuming a retry —
+    /// the orderly-shutdown path for prefetched-but-unprocessed
+    /// deliveries (nothing failed, so redelivery semantics apply; see
+    /// [`crate::broker::core::Broker::requeue`]).
+    pub fn requeue(&mut self, tag: u64) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("requeue")),
+            ("tag", Json::num(tag as f64)),
+        ]))
+        .map(|_| ())
+    }
+
+    /// The server's durability counters (all zero / `durable: false` for
+    /// an in-memory broker).
+    pub fn durability(&mut self) -> Result<DurabilityStats, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("durability"))]))?;
+        Ok(DurabilityStats {
+            durable: r.get("durable").as_bool().unwrap_or(false),
+            wal_records: r.get("wal_records").as_u64().unwrap_or(0),
+            wal_fsyncs: r.get("wal_fsyncs").as_u64().unwrap_or(0),
+            snapshots: r.get("snapshots").as_u64().unwrap_or(0),
+            recovered: r.get("recovered").as_u64().unwrap_or(0),
+        })
+    }
+
+    /// Point-in-time statistics for one queue.
     pub fn stats(&mut self, queue: &str) -> Result<QueueStats, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("stats")),
@@ -342,6 +378,7 @@ impl BrokerClient {
         })
     }
 
+    /// Drop all ready messages in `queue`; returns how many were dropped.
     pub fn purge(&mut self, queue: &str) -> Result<usize, ClientError> {
         let r = self.call(&Json::obj(vec![
             ("op", Json::str("purge")),
@@ -350,11 +387,13 @@ impl BrokerClient {
         Ok(r.get("purged").as_u64().unwrap_or(0) as usize)
     }
 
+    /// Total ready messages across all queues.
     pub fn depth(&mut self) -> Result<usize, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("depth"))]))?;
         Ok(r.get("depth").as_u64().unwrap_or(0) as usize)
     }
 
+    /// Names of all queues declared on the server, sorted.
     pub fn queues(&mut self) -> Result<Vec<String>, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("queues"))]))?;
         Ok(r.get("queues")

@@ -15,13 +15,23 @@
 //! consumer, and crash-requeue of unacked deliveries. A consumer fetching
 //! from queues that span several shards gets best-effort priority order
 //! across shards (exact within each).
+//!
+//! Optionally the broker is **durable**: [`Broker::open_durable`] attaches
+//! a per-shard write-ahead log ([`super::wal`]) plus compacting snapshots
+//! ([`super::snapshot`]), and rebuilds the queue state from them on
+//! startup — unacked in-flight tasks from before a crash come back as
+//! ready (AMQP crash-requeue, extended across broker restarts). Durable
+//! mutations are logged under the shard lock *before* the in-memory
+//! structures change.
 
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::task::{ser, TaskEnvelope};
+use super::snapshot::{self, Snapshot};
+use super::wal::{self, DurabilityConfig, ShardWal, WalOp, WalRecord};
+use crate::task::{ser, Payload, TaskEnvelope};
 use crate::util::hex::fnv1a;
 
 /// Number of queue shards. Power of two so the shard of a tag is a mask.
@@ -70,12 +80,33 @@ impl Default for BrokerConfig {
     }
 }
 
+/// Errors returned by broker operations.
 #[derive(Debug, Clone, PartialEq)]
 pub enum BrokerError {
-    MessageTooLarge { bytes: usize, limit: usize },
-    QueueFull { depth: usize },
+    /// A message exceeded [`BrokerConfig::max_message_bytes`].
+    MessageTooLarge {
+        /// Wire size of the rejected message.
+        bytes: usize,
+        /// The configured limit it exceeded.
+        limit: usize,
+    },
+    /// The broker is at [`BrokerConfig::max_depth`] (backpressure).
+    QueueFull {
+        /// Ready depth observed when the publish was rejected.
+        depth: usize,
+    },
+    /// An ack/nack referenced a tag with no in-flight delivery.
     UnknownDeliveryTag(u64),
-    PrefetchExceeded { prefetch: usize },
+    /// A fetch was denied because the consumer holds its full prefetch
+    /// window of unacked messages.
+    PrefetchExceeded {
+        /// The consumer's prefetch limit.
+        prefetch: usize,
+    },
+    /// A durable broker failed to append to its write-ahead log; the
+    /// publish was refused (write-ahead: nothing enters the queue that
+    /// the log did not capture).
+    Wal(String),
 }
 
 impl std::fmt::Display for BrokerError {
@@ -89,6 +120,7 @@ impl std::fmt::Display for BrokerError {
             BrokerError::PrefetchExceeded { prefetch } => {
                 write!(f, "consumer holds {prefetch} unacked messages")
             }
+            BrokerError::Wal(e) => write!(f, "write-ahead log: {e}"),
         }
     }
 }
@@ -99,6 +131,9 @@ impl std::error::Error for BrokerError {}
 struct Queued {
     priority: u8,
     seq: u64,
+    /// Durable entry id (the WAL `Enqueue` record's LSN); 0 when the
+    /// broker runs without durability.
+    entry: u64,
     task: TaskEnvelope,
 }
 
@@ -127,37 +162,71 @@ impl Ord for Queued {
 struct InFlight {
     queue: String,
     consumer: u64,
+    /// Durable entry id (see [`Queued::entry`]).
+    entry: u64,
     task: TaskEnvelope,
 }
 
 /// What a consumer receives: the envelope plus the tag to ack/nack with.
 #[derive(Debug)]
 pub struct Delivery {
+    /// Delivery tag to pass back to ack/nack/requeue.
     pub tag: u64,
+    /// The delivered task.
     pub task: TaskEnvelope,
 }
 
 /// Point-in-time statistics for one queue.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct QueueStats {
+    /// Messages ready for delivery.
     pub ready: usize,
+    /// Messages delivered and awaiting ack.
     pub unacked: usize,
+    /// Lifetime publishes into this queue.
     pub published: u64,
+    /// Lifetime deliveries out of this queue.
     pub delivered: u64,
+    /// Lifetime acks.
     pub acked: u64,
+    /// Lifetime requeues (nack-with-requeue and redeliveries).
     pub requeued: u64,
+    /// Lifetime dead-letter drops (exhausted retries / nack w/o requeue).
     pub dead_lettered: u64,
+    /// Lifetime bytes published (wire encoding).
     pub bytes_published: u64,
 }
 
 /// Lifetime totals across all queues, read from lock-free counters.
+/// Not durable: totals restart at zero after a broker restart (the
+/// recovered tasks themselves are what durability preserves).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct BrokerTotals {
+    /// Lifetime publishes.
     pub published: u64,
+    /// Lifetime deliveries.
     pub delivered: u64,
+    /// Lifetime acks.
     pub acked: u64,
+    /// Lifetime requeues.
     pub requeued: u64,
+    /// Lifetime dead-letter drops.
     pub dead_lettered: u64,
+}
+
+/// Counters of the durability subsystem (all zero when not durable).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DurabilityStats {
+    /// Whether this broker runs with a WAL attached.
+    pub durable: bool,
+    /// WAL records appended since startup (all shards).
+    pub wal_records: u64,
+    /// Appends that ended in an `fdatasync` (policy-dependent).
+    pub wal_fsyncs: u64,
+    /// Compacting snapshots written since startup.
+    pub snapshots: u64,
+    /// Tasks rebuilt from snapshot + WAL replay at startup.
+    pub recovered: u64,
 }
 
 #[derive(Default)]
@@ -171,6 +240,10 @@ struct ShardState {
     queues: HashMap<String, QueueState>,
     /// Deliveries from this shard's queues, keyed by tag.
     inflight: HashMap<u64, InFlight>,
+    /// Write-ahead log of this shard (None = in-memory broker). Living
+    /// inside the shard state means appends are serialized by the shard
+    /// lock, so log order always matches the logical mutation order.
+    wal: Option<ShardWal>,
 }
 
 #[derive(Default)]
@@ -204,6 +277,16 @@ struct Inner {
     event_cv: Condvar,
     event_seq: AtomicU64,
     multi_waiters: AtomicUsize,
+    /// Durability counters (see [`DurabilityStats`]); `durable` is set
+    /// once by the constructor.
+    durable: bool,
+    wal_records: AtomicU64,
+    wal_fsyncs: AtomicU64,
+    snapshots: AtomicU64,
+    recovered: AtomicU64,
+    /// Exclusive claim on the WAL directory (held for the broker's
+    /// lifetime; released when the last clone drops).
+    _wal_lock: Option<wal::DirLock>,
 }
 
 /// The broker. Cheap to clone (`Arc` inside); share one per deployment.
@@ -219,7 +302,12 @@ impl Default for Broker {
 }
 
 impl Broker {
+    /// A purely in-memory broker (a restart loses all queue state).
     pub fn new(cfg: BrokerConfig) -> Self {
+        Self::new_inner(cfg, false, None)
+    }
+
+    fn new_inner(cfg: BrokerConfig, durable: bool, wal_lock: Option<wal::DirLock>) -> Self {
         Self {
             inner: Arc::new(Inner {
                 cfg,
@@ -239,12 +327,218 @@ impl Broker {
                 event_cv: Condvar::new(),
                 event_seq: AtomicU64::new(0),
                 multi_waiters: AtomicUsize::new(0),
+                durable,
+                wal_records: AtomicU64::new(0),
+                wal_fsyncs: AtomicU64::new(0),
+                snapshots: AtomicU64::new(0),
+                recovered: AtomicU64::new(0),
+                _wal_lock: wal_lock,
             }),
         }
     }
 
+    /// Open a **durable** broker rooted at `dur.dir`: recover the queue
+    /// state persisted by a previous broker on that directory (snapshot +
+    /// WAL replay per shard — tasks that were in flight at the crash come
+    /// back as ready), then attach the per-shard write-ahead logs so every
+    /// further mutation is logged before it is applied.
+    ///
+    /// Fails if the directory's snapshots or logs are unreadable (a
+    /// corrupt *snapshot* is an error — its WAL was truncated when it was
+    /// written, so ignoring it would silently drop state; a torn WAL
+    /// *tail* is not — it is truncated back to the last valid record,
+    /// exactly as if the crash had happened there).
+    pub fn open_durable(cfg: BrokerConfig, dur: DurabilityConfig) -> std::io::Result<Broker> {
+        std::fs::create_dir_all(&dur.dir)?;
+        // Exclusive claim first: a second live broker on the same files
+        // would interleave appends and corrupt the logs.
+        let lock = wal::lock_dir(&dur.dir)?;
+        let broker = Self::new_inner(cfg, true, Some(lock));
+        let mut recovered_total = 0usize;
+        for si in 0..NUM_SHARDS {
+            let (snap_entries, snap_next) = match snapshot::read(&wal::snap_path(&dur.dir, si))? {
+                Some(s) => {
+                    // A snapshot installed under the wrong shard's name
+                    // (hand-restored files) would strand its tasks in a
+                    // shard their queues don't hash to: fail loudly.
+                    if s.shard != si as u64 {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!(
+                                "{} holds a snapshot of shard {}, not shard {si}",
+                                wal::snap_path(&dur.dir, si).display(),
+                                s.shard
+                            ),
+                        ));
+                    }
+                    (s.entries, s.next_lsn)
+                }
+                None => (Vec::new(), 1),
+            };
+            let wal_bytes = match std::fs::read(wal::wal_path(&dur.dir, si)) {
+                Ok(b) => b,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+                Err(e) => return Err(e),
+            };
+            let outcome = wal::decode_records(&wal_bytes);
+            let replayed = wal::replay(&snap_entries, snap_next, &outcome.records);
+            let shard_wal = ShardWal::open(
+                &dur.dir,
+                si,
+                &dur,
+                replayed.next_lsn,
+                outcome.valid_bytes as u64,
+                outcome.records.len() as u64,
+            )?;
+            let n = replayed.live.len();
+            {
+                let mut s = broker.inner.shards[si].state.lock().unwrap();
+                // BTreeMap iteration is entry-id order = original enqueue
+                // order, so FIFO-within-priority survives recovery.
+                for (entry, task) in replayed.live {
+                    let seq = broker.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                    let q = s.queues.entry(task.queue.clone()).or_default();
+                    q.stats.ready += 1;
+                    q.heap.push(Queued {
+                        priority: task.priority,
+                        seq,
+                        entry,
+                        task,
+                    });
+                }
+                s.wal = Some(shard_wal);
+            }
+            broker.inner.total_ready.fetch_add(n, Ordering::Relaxed);
+            recovered_total += n;
+        }
+        broker
+            .inner
+            .recovered
+            .store(recovered_total as u64, Ordering::Relaxed);
+        // The interval policy's loss bound must hold even for a shard
+        // that goes idle right after a burst: a background flusher syncs
+        // dirty WALs every interval (appends on busy shards still sync
+        // inline, so the flusher usually finds them clean). The thread
+        // holds only a Weak ref and exits once the broker is dropped.
+        if let wal::FsyncPolicy::Interval(ms) = dur.fsync {
+            let weak = Arc::downgrade(&broker.inner);
+            std::thread::Builder::new()
+                .name("wal-flush".into())
+                .spawn(move || {
+                    let interval = Duration::from_millis(ms.max(1));
+                    loop {
+                        std::thread::sleep(interval);
+                        let Some(inner) = weak.upgrade() else { break };
+                        Broker { inner }.sync_wal().ok();
+                    }
+                })
+                .expect("spawn wal flusher");
+        }
+        Ok(broker)
+    }
+
+    /// The configuration this broker was built with.
     pub fn config(&self) -> &BrokerConfig {
         &self.inner.cfg
+    }
+
+    /// Whether this broker persists its queue state (see
+    /// [`Broker::open_durable`]).
+    pub fn is_durable(&self) -> bool {
+        self.inner.durable
+    }
+
+    /// Durability counters (all zero for an in-memory broker).
+    pub fn durability_stats(&self) -> DurabilityStats {
+        DurabilityStats {
+            durable: self.inner.durable,
+            wal_records: self.inner.wal_records.load(Ordering::Relaxed),
+            wal_fsyncs: self.inner.wal_fsyncs.load(Ordering::Relaxed),
+            snapshots: self.inner.snapshots.load(Ordering::Relaxed),
+            recovered: self.inner.recovered.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Force an `fdatasync` of every shard WAL regardless of fsync
+    /// policy (the orderly-shutdown path). No-op when not durable.
+    pub fn sync_wal(&self) -> std::io::Result<()> {
+        for shard in &self.inner.shards {
+            let mut s = shard.state.lock().unwrap();
+            if let Some(w) = s.wal.as_mut() {
+                w.sync()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Append records to a shard's WAL (no-op when not durable), keeping
+    /// the global counters current. Completion paths (`ack`/`nack`) call
+    /// this with errors swallowed: losing a completion record degrades to
+    /// redelivery-after-recovery (at-least-once), never to data loss.
+    fn wal_append(s: &mut ShardState, inner: &Inner, recs: &[WalRecord]) -> std::io::Result<()> {
+        let Some(w) = s.wal.as_mut() else {
+            return Ok(());
+        };
+        let synced = w.append(recs)?;
+        inner.wal_records.fetch_add(recs.len() as u64, Ordering::Relaxed);
+        if synced {
+            inner.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Log completion records (`Ack`/`Nack`/`Requeue`) for a set of
+    /// entries, then snapshot if due. Errors are swallowed (see
+    /// [`Broker::wal_append`]).
+    fn wal_mark(&self, s: &mut ShardState, make: impl Fn(u64) -> WalOp, entries: &[u64]) {
+        if entries.is_empty() || s.wal.is_none() {
+            return;
+        }
+        let recs: Vec<WalRecord> = {
+            let w = s.wal.as_mut().unwrap();
+            entries
+                .iter()
+                .map(|e| WalRecord {
+                    lsn: w.alloc(),
+                    op: make(*e),
+                })
+                .collect()
+        };
+        Self::wal_append(s, &self.inner, &recs).ok();
+        self.maybe_snapshot(s);
+    }
+
+    /// Write a compacting snapshot of this shard and reset its WAL, if
+    /// the WAL has grown past the configured threshold. Called with the
+    /// shard lock held (the snapshot is a consistent point-in-time view
+    /// by construction; the write stalls only this shard). A failed
+    /// snapshot write is skipped — the WAL simply keeps growing and the
+    /// next append retries.
+    fn maybe_snapshot(&self, s: &mut ShardState) {
+        let due = s.wal.as_ref().is_some_and(|w| w.snapshot_due());
+        if !due {
+            return;
+        }
+        let mut entries: Vec<(u64, Vec<u8>)> = Vec::new();
+        for q in s.queues.values() {
+            for m in q.heap.iter() {
+                entries.push((m.entry, ser::encode_v2(&m.task)));
+            }
+        }
+        for inf in s.inflight.values() {
+            entries.push((inf.entry, ser::encode_v2(&inf.task)));
+        }
+        entries.sort_unstable_by_key(|(e, _)| *e);
+        let w = s.wal.as_mut().unwrap();
+        let snap = Snapshot {
+            shard: w.shard_index(),
+            next_lsn: w.next_lsn(),
+            entries,
+        };
+        let path = w.snapshot_path().to_path_buf();
+        if snapshot::write_atomic(&path, &snap).is_ok() && w.reset_after_snapshot().is_ok() {
+            self.inner.snapshots.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Register a consumer; returns its id for `fetch` prefetch accounting.
@@ -333,6 +627,20 @@ impl Broker {
         let shard = &self.inner.shards[si];
         {
             let mut s = shard.state.lock().unwrap();
+            // Write-ahead: the log captures the task before the queue
+            // does, so a WAL failure refuses the publish cleanly.
+            let mut entry = 0u64;
+            if s.wal.is_some() {
+                entry = s.wal.as_mut().unwrap().alloc();
+                let rec = WalRecord {
+                    lsn: entry,
+                    op: WalOp::Enqueue(ser::encode_v2(&task)),
+                };
+                if let Err(e) = Self::wal_append(&mut s, &self.inner, &[rec]) {
+                    self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
+                    return Err(BrokerError::Wal(e.to_string()));
+                }
+            }
             let q = s.queues.entry(task.queue.clone()).or_default();
             q.stats.published += 1;
             q.stats.bytes_published += bytes as u64;
@@ -340,8 +648,10 @@ impl Broker {
             q.heap.push(Queued {
                 priority: task.priority,
                 seq,
+                entry,
                 task,
             });
+            self.maybe_snapshot(&mut s);
         }
         self.inner.published.fetch_add(1, Ordering::Relaxed);
         // notify_all, not notify_one: waiters on this shard's condvar
@@ -370,6 +680,9 @@ impl Broker {
 
     /// Batch publish with caller-provided sizes (the in-process fast path
     /// when sizes are already measured; see [`Broker::publish_sized`]).
+    /// On a durable broker a WAL append failure refuses the failing shard
+    /// group and everything after it (earlier groups are already durable
+    /// and stay queued).
     pub fn publish_batch_sized(
         &self,
         sized: Vec<(TaskEnvelope, usize)>,
@@ -395,7 +708,8 @@ impl Broker {
             let si = shard_of(&t.queue);
             groups[si].push((t, bytes, base + 1 + i as u64));
         }
-        for (si, group) in groups.into_iter().enumerate() {
+        for si in 0..NUM_SHARDS {
+            let group = std::mem::take(&mut groups[si]);
             if group.is_empty() {
                 continue;
             }
@@ -403,7 +717,35 @@ impl Broker {
             let shard = &self.inner.shards[si];
             {
                 let mut s = shard.state.lock().unwrap();
-                for (t, bytes, seq) in group {
+                // Write-ahead: one WAL append (and at most one fsync) for
+                // the whole shard group, before any in-memory push.
+                let mut entries = vec![0u64; group.len()];
+                if s.wal.is_some() {
+                    let recs: Vec<WalRecord> = {
+                        let w = s.wal.as_mut().unwrap();
+                        group
+                            .iter()
+                            .enumerate()
+                            .map(|(i, (t, _, _))| {
+                                entries[i] = w.alloc();
+                                WalRecord {
+                                    lsn: entries[i],
+                                    op: WalOp::Enqueue(ser::encode_v2(t)),
+                                }
+                            })
+                            .collect()
+                    };
+                    if let Err(e) = Self::wal_append(&mut s, &self.inner, &recs) {
+                        // Earlier shard groups are already durable and
+                        // queued; refuse this group and everything after
+                        // it, releasing their depth reservation.
+                        let remaining: usize = group.len()
+                            + groups[si + 1..].iter().map(Vec::len).sum::<usize>();
+                        self.inner.total_ready.fetch_sub(remaining, Ordering::Relaxed);
+                        return Err(BrokerError::Wal(e.to_string()));
+                    }
+                }
+                for ((t, bytes, seq), entry) in group.into_iter().zip(entries) {
                     let q = s.queues.entry(t.queue.clone()).or_default();
                     q.stats.published += 1;
                     q.stats.bytes_published += bytes as u64;
@@ -411,9 +753,11 @@ impl Broker {
                     q.heap.push(Queued {
                         priority: t.priority,
                         seq,
+                        entry,
                         task: t,
                     });
                 }
+                self.maybe_snapshot(&mut s);
             }
             self.inner.published.fetch_add(count, Ordering::Relaxed);
             shard.cv.notify_all();
@@ -481,6 +825,7 @@ impl Broker {
             InFlight {
                 queue: name.to_string(),
                 consumer,
+                entry: msg.entry,
                 task: msg.task.clone(),
             },
         );
@@ -650,7 +995,8 @@ impl Broker {
         self.fetch(consumer, queues, prefetch, Duration::ZERO)
     }
 
-    /// Acknowledge successful processing.
+    /// Acknowledge successful processing. On a durable broker this logs
+    /// an `Ack` record, removing the task from the durable set.
     pub fn ack(&self, tag: u64) -> Result<(), BrokerError> {
         let si = (tag & SHARD_MASK) as usize;
         let shard = &self.inner.shards[si];
@@ -666,6 +1012,7 @@ impl Broker {
                 q.stats.unacked = q.stats.unacked.saturating_sub(1);
                 q.stats.acked += 1;
             }
+            self.wal_mark(&mut s, WalOp::Ack, &[inf.entry]);
         }
         self.dec_held(consumer, 1);
         self.inner.total_inflight.fetch_sub(1, Ordering::Relaxed);
@@ -686,6 +1033,7 @@ impl Broker {
             let mut consumers_dec: Vec<u64> = Vec::new();
             {
                 let mut s = shard.state.lock().unwrap();
+                let mut entries: Vec<u64> = Vec::new();
                 for tag in stags {
                     match s.inflight.remove(&tag) {
                         Some(inf) => {
@@ -694,12 +1042,15 @@ impl Broker {
                                 q.stats.acked += 1;
                             }
                             consumers_dec.push(inf.consumer);
+                            entries.push(inf.entry);
                         }
                         None => {
                             first_err.get_or_insert(BrokerError::UnknownDeliveryTag(tag));
                         }
                     }
                 }
+                // One WAL append (at most one fsync) per shard group.
+                self.wal_mark(&mut s, WalOp::Ack, &entries);
             }
             acked += consumers_dec.len();
             self.inner
@@ -747,6 +1098,7 @@ impl Broker {
             let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
             let q = s.queues.entry(inf.queue.clone()).or_default();
             q.stats.unacked = q.stats.unacked.saturating_sub(1);
+            let entry = inf.entry;
             if requeue && inf.task.retries_left > 0 {
                 inf.task.retries_left -= 1;
                 q.stats.requeued += 1;
@@ -754,11 +1106,16 @@ impl Broker {
                 q.heap.push(Queued {
                     priority: inf.task.priority,
                     seq,
+                    entry,
                     task: inf.task,
                 });
                 requeued = true;
+                // Durable: a retry was consumed — replay decrements too.
+                self.wal_mark(&mut s, WalOp::Requeue, &[entry]);
             } else {
                 q.stats.dead_lettered += 1;
+                // Durable: the task leaves the durable set for good.
+                self.wal_mark(&mut s, WalOp::Nack, &[entry]);
             }
         }
         self.dec_held(consumer, 1);
@@ -777,7 +1134,9 @@ impl Broker {
     /// Return one delivery to its queue **without** consuming a retry —
     /// the single-tag flavor of [`Broker::recover_consumer`], for
     /// deliveries that could not be transmitted (nothing failed, so
-    /// redelivery semantics apply, not nack semantics).
+    /// redelivery semantics apply, not nack semantics). No WAL record:
+    /// delivery is not a durable event, so the entry was never removed
+    /// from the durable set.
     pub fn requeue(&self, tag: u64) -> Result<(), BrokerError> {
         let si = (tag & SHARD_MASK) as usize;
         let shard = &self.inner.shards[si];
@@ -797,6 +1156,7 @@ impl Broker {
             q.heap.push(Queued {
                 priority: inf.task.priority,
                 seq,
+                entry: inf.entry,
                 task: inf.task,
             });
         }
@@ -810,7 +1170,9 @@ impl Broker {
     }
 
     /// Requeue everything a (dead) consumer held — what AMQP does when a
-    /// connection drops. Returns how many messages were recovered.
+    /// connection drops. Returns how many messages were recovered. Like
+    /// [`Broker::requeue`], this is redelivery, not failure: no retry is
+    /// consumed and no WAL record is written.
     pub fn recover_consumer(&self, consumer: u64) -> usize {
         let mut recovered = 0usize;
         for shard in &self.inner.shards {
@@ -835,6 +1197,7 @@ impl Broker {
                     q.heap.push(Queued {
                         priority: inf.task.priority,
                         seq,
+                        entry: inf.entry,
                         task: inf.task,
                     });
                     n_here += 1;
@@ -857,21 +1220,63 @@ impl Broker {
         recovered
     }
 
-    /// Drop all ready messages in a queue; returns the count.
+    /// Drop all ready messages in a queue; returns the count. On a
+    /// durable broker the dropped entries are logged as `Nack` records
+    /// (they leave the durable set — a purge survives a restart).
     pub fn purge(&self, queue: &str) -> usize {
         let shard = &self.inner.shards[shard_of(queue)];
         let mut s = shard.state.lock().unwrap();
-        if let Some(q) = s.queues.get_mut(queue) {
-            let n = q.heap.len();
-            q.heap.clear();
-            q.stats.ready = 0;
-            self.inner.total_ready.fetch_sub(n, Ordering::Relaxed);
-            n
-        } else {
-            0
-        }
+        let Some(q) = s.queues.get_mut(queue) else {
+            return 0;
+        };
+        let n = q.heap.len();
+        let entries: Vec<u64> = q.heap.iter().map(|m| m.entry).collect();
+        q.heap.clear();
+        q.stats.ready = 0;
+        self.inner.total_ready.fetch_sub(n, Ordering::Relaxed);
+        self.wal_mark(&mut s, WalOp::Nack, &entries);
+        n
     }
 
+    /// Sample ranges `[lo, hi)` covered by tasks for (`study_id`,
+    /// `step_name`) currently queued or in flight on `queue` — both
+    /// step tasks and still-unexpanded expansion tasks (an expansion's
+    /// range will become exactly those step tasks when a worker runs
+    /// it). This is what a recovery-aware resubmission pass subtracts
+    /// before re-enqueueing (see [`crate::coordinator::resubmit`]). One
+    /// shard lock, O(queue).
+    pub fn queued_step_samples(
+        &self,
+        queue: &str,
+        study_id: &str,
+        step_name: &str,
+    ) -> Vec<(u64, u64)> {
+        let covers = |t: &TaskEnvelope| {
+            let (template, lo, hi) = match &t.payload {
+                Payload::Step(s) => (&s.template, s.lo, s.hi),
+                Payload::Expansion(e) => (&e.template, e.lo, e.hi),
+                _ => return None,
+            };
+            (template.study_id == study_id && template.step_name == step_name)
+                .then_some((lo, hi))
+        };
+        let shard = &self.inner.shards[shard_of(queue)];
+        let s = shard.state.lock().unwrap();
+        let mut out = Vec::new();
+        if let Some(q) = s.queues.get(queue) {
+            out.extend(q.heap.iter().filter_map(|m| covers(&m.task)));
+        }
+        out.extend(
+            s.inflight
+                .values()
+                .filter(|inf| inf.queue == queue)
+                .filter_map(|inf| covers(&inf.task)),
+        );
+        out.sort_unstable();
+        out
+    }
+
+    /// Point-in-time statistics for one queue.
     pub fn stats(&self, queue: &str) -> QueueStats {
         let shard = &self.inner.shards[shard_of(queue)];
         let s = shard.state.lock().unwrap();
@@ -892,6 +1297,7 @@ impl Broker {
         }
     }
 
+    /// Names of all queues ever declared, sorted.
     pub fn queue_names(&self) -> Vec<String> {
         let mut names: Vec<String> = Vec::new();
         for shard in &self.inner.shards {
@@ -1359,5 +1765,251 @@ mod tests {
         );
         assert_eq!(b.depth(), 0);
         assert_eq!(b.inflight(), 0);
+    }
+
+    // ---- durability ----
+
+    fn tmp_wal_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "merlin-core-dur-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn durable(dir: &std::path::Path) -> Broker {
+        Broker::open_durable(
+            BrokerConfig::default(),
+            crate::broker::wal::DurabilityConfig::new(dir),
+        )
+        .unwrap()
+    }
+
+    fn tokens_in(b: &Broker, queues: &[&str]) -> Vec<String> {
+        let c = b.register_consumer();
+        let mut out: Vec<String> = drain_all(b, c, queues).iter().map(token).collect();
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn durable_broker_recovers_queued_and_inflight_tasks() {
+        let dir = tmp_wal_dir("basic");
+        {
+            let b = durable(&dir);
+            assert!(b.is_durable());
+            for i in 0..10 {
+                b.publish(ping("dq", &format!("t{i}"))).unwrap();
+            }
+            let c = b.register_consumer();
+            // Deliver 4 (in flight at "crash"), ack 2 of them.
+            let ds: Vec<Delivery> = (0..4).map(|_| b.try_fetch(c, &["dq"], 0).unwrap()).collect();
+            b.ack(ds[0].tag).unwrap();
+            b.ack(ds[1].tag).unwrap();
+            assert_eq!(b.depth(), 6);
+            assert_eq!(b.inflight(), 2);
+            // Drop without recover_consumer: the crash.
+        }
+        let b = durable(&dir);
+        assert_eq!(b.depth(), 8, "6 ready + 2 unacked in flight");
+        assert_eq!(b.inflight(), 0);
+        assert_eq!(b.durability_stats().recovered, 8);
+        let got = tokens_in(&b, &["dq"]);
+        let mut expect: Vec<String> = (2..10).map(|i| format!("t{i}")).collect();
+        expect.sort();
+        assert_eq!(got, expect, "acked t0/t1 gone, everything else back");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn durable_nack_and_purge_survive_restart() {
+        let dir = tmp_wal_dir("nack");
+        {
+            let b = durable(&dir);
+            b.publish(ping("nq", "dead")).unwrap();
+            b.publish(ping("nq", "retry")).unwrap();
+            for i in 0..3 {
+                b.publish(ping("pq", &format!("purged{i}"))).unwrap();
+            }
+            let c = b.register_consumer();
+            // Dead-letter one, consume a retry on another.
+            loop {
+                let Some(d) = b.try_fetch(c, &["nq"], 0) else { break };
+                match token(&d).as_str() {
+                    "dead" => b.nack(d.tag, false).unwrap(),
+                    _ => {
+                        let is_first = d.task.retries_left == 3;
+                        b.nack(d.tag, true).unwrap();
+                        if !is_first {
+                            break;
+                        }
+                    }
+                }
+            }
+            assert_eq!(b.purge("pq"), 3);
+        }
+        let b = durable(&dir);
+        assert_eq!(b.depth(), 1, "only the retried task survives");
+        let c = b.register_consumer();
+        let d = b.try_fetch(c, &["nq"], 0).unwrap();
+        assert_eq!(token(&d), "retry");
+        assert!(d.task.retries_left < 3, "requeue cost a durable retry");
+        assert!(b.try_fetch(c, &["pq"], 0).is_none(), "purge survived");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn durable_recovery_preserves_priority_and_fifo() {
+        let dir = tmp_wal_dir("order");
+        {
+            let b = durable(&dir);
+            b.publish(ping("oq", "low").priority(1)).unwrap();
+            b.publish(ping("oq", "first").priority(5)).unwrap();
+            b.publish(ping("oq", "second").priority(5)).unwrap();
+            b.publish(ping("oq", "high").priority(9)).unwrap();
+        }
+        let b = durable(&dir);
+        let c = b.register_consumer();
+        let order: Vec<String> = (0..4)
+            .map(|_| {
+                let d = b.try_fetch(c, &["oq"], 0).unwrap();
+                b.ack(d.tag).unwrap();
+                token(&d)
+            })
+            .collect();
+        assert_eq!(order, ["high", "first", "second", "low"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_compaction_preserves_state_and_shrinks_wal() {
+        let dir = tmp_wal_dir("snap");
+        let mut cfg = crate::broker::wal::DurabilityConfig::new(&dir);
+        cfg.snapshot_every = 8; // force frequent compaction
+        {
+            let b = Broker::open_durable(BrokerConfig::default(), cfg.clone()).unwrap();
+            let c = b.register_consumer();
+            for i in 0..50 {
+                b.publish(ping("sq", &format!("t{i}"))).unwrap();
+                // Ack every other task so compaction has garbage to drop.
+                if i % 2 == 0 {
+                    let d = b.try_fetch(c, &["sq"], 0).unwrap();
+                    b.ack(d.tag).unwrap();
+                }
+            }
+            assert!(
+                b.durability_stats().snapshots > 0,
+                "threshold of 8 over 75 records must have snapshotted"
+            );
+            assert_eq!(b.depth(), 25);
+        }
+        let b = Broker::open_durable(BrokerConfig::default(), cfg).unwrap();
+        assert_eq!(b.depth(), 25, "snapshot + tail replay rebuild the state");
+        assert_eq!(tokens_in(&b, &["sq"]).len(), 25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn durable_batch_publish_recovers_across_shards() {
+        let dir = tmp_wal_dir("batch");
+        {
+            let b = durable(&dir);
+            let batch: Vec<TaskEnvelope> = (0..64)
+                .map(|i| ping(&format!("bq{}", i % 8), &format!("{i}")))
+                .collect();
+            b.publish_batch(batch).unwrap();
+        }
+        let b = durable(&dir);
+        assert_eq!(b.depth(), 64);
+        let names: Vec<String> = (0..8).map(|i| format!("bq{i}")).collect();
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        assert_eq!(tokens_in(&b, &refs).len(), 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wal_dir_is_exclusively_locked() {
+        let dir = tmp_wal_dir("lock");
+        let b1 = durable(&dir);
+        let second = Broker::open_durable(
+            BrokerConfig::default(),
+            crate::broker::wal::DurabilityConfig::new(&dir),
+        );
+        assert!(second.is_err(), "second broker on a live wal dir must fail");
+        drop(b1);
+        // The lock is released with the broker, so a restart succeeds.
+        let _b2 = durable(&dir);
+        // A stale lock from a dead pid is reclaimed (simulated: no such
+        // process). Linux-only liveness check; skip elsewhere.
+        drop(_b2);
+        if cfg!(target_os = "linux") {
+            std::fs::write(dir.join("broker.lock"), "999999999").unwrap();
+            let _b3 = durable(&dir);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn in_memory_broker_reports_not_durable() {
+        let b = Broker::default();
+        assert!(!b.is_durable());
+        let st = b.durability_stats();
+        assert_eq!((st.wal_records, st.recovered), (0, 0));
+        b.sync_wal().unwrap();
+    }
+
+    #[test]
+    fn queued_step_samples_reports_ready_and_inflight_ranges() {
+        use crate::task::{StepTask, StepTemplate, WorkSpec};
+        let b = Broker::default();
+        let t = StepTemplate {
+            study_id: "st".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 10,
+            seed: 0,
+        };
+        for (lo, hi) in [(0u64, 10u64), (10, 20), (30, 40)] {
+            b.publish(TaskEnvelope::new(
+                "q",
+                Payload::Step(StepTask {
+                    template: t.clone(),
+                    lo,
+                    hi,
+                }),
+            ))
+            .unwrap();
+        }
+        // A different step must not count.
+        let mut other = t.clone();
+        other.step_name = "post".into();
+        b.publish(TaskEnvelope::new(
+            "q",
+            Payload::Step(StepTask {
+                template: other,
+                lo: 50,
+                hi: 60,
+            }),
+        ))
+        .unwrap();
+        // An unexpanded expansion node covers its whole range too (its
+        // children would re-generate exactly those step tasks).
+        b.publish(TaskEnvelope::new(
+            "q",
+            Payload::Expansion(crate::task::ExpansionTask {
+                template: t.clone(),
+                lo: 60,
+                hi: 90,
+                max_branch: 3,
+            }),
+        ))
+        .unwrap();
+        let c = b.register_consumer();
+        let _inflight = b.try_fetch(c, &["q"], 0).unwrap(); // one range in flight
+        let ranges = b.queued_step_samples("q", "st", "sim");
+        assert_eq!(ranges, vec![(0, 10), (10, 20), (30, 40), (60, 90)]);
+        assert!(b.queued_step_samples("q", "st", "none").is_empty());
+        assert!(b.queued_step_samples("other", "st", "sim").is_empty());
     }
 }

@@ -23,13 +23,23 @@
 //! batch frames — see [`wire`]), and [`client`] is the matching
 //! version-negotiating client so that multi-process deployments
 //! coordinate exactly like cross-node Celery workers.
+//!
+//! Durability is opt-in ([`core::Broker::open_durable`]): [`wal`] is the
+//! per-shard write-ahead log, [`snapshot`] the compacting shard
+//! snapshots, and recovery composes the two so queued and in-flight
+//! tasks survive broker restarts — the fault-tolerance property the
+//! paper's multi-day ensembles lean on.
 
 pub mod client;
 #[allow(clippy::module_inception)]
 pub mod core;
 pub mod net;
+pub mod snapshot;
+pub mod wal;
 pub mod wire;
 
 pub use self::core::{
-    Broker, BrokerConfig, BrokerError, BrokerTotals, Delivery, QueueStats, NUM_SHARDS,
+    Broker, BrokerConfig, BrokerError, BrokerTotals, Delivery, DurabilityStats, QueueStats,
+    NUM_SHARDS,
 };
+pub use self::wal::{DurabilityConfig, FsyncPolicy};

@@ -41,6 +41,7 @@ pub const MAX_POP_WINDOW: usize = 1024;
 /// Handle to a running broker server. Dropping does not stop it; call
 /// [`BrokerServer::shutdown`].
 pub struct BrokerServer {
+    /// The bound address (resolves port 0 to the ephemeral port chosen).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
@@ -298,6 +299,28 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
                 Err(e) => broker_err(e),
             }
         }
+        Some("requeue") => {
+            // Redelivery without retry cost: what a worker sends for
+            // prefetched-but-unprocessed deliveries at orderly shutdown,
+            // so recovery accounting stays exact (nothing failed).
+            let Some(tag) = req.get("tag").as_u64() else {
+                return wire::err("missing tag");
+            };
+            match broker.requeue(tag) {
+                Ok(()) => wire::ok(vec![]),
+                Err(e) => broker_err(e),
+            }
+        }
+        Some("durability") => {
+            let st = broker.durability_stats();
+            wire::ok(vec![
+                ("durable", Json::Bool(st.durable)),
+                ("wal_records", Json::num(st.wal_records as f64)),
+                ("wal_fsyncs", Json::num(st.wal_fsyncs as f64)),
+                ("snapshots", Json::num(st.snapshots as f64)),
+                ("recovered", Json::num(st.recovered as f64)),
+            ])
+        }
         Some("stats") => {
             let queue = req.get("queue").as_str().unwrap_or("");
             let st = broker.stats(queue);
@@ -493,5 +516,44 @@ mod tests {
         let broker = Broker::default();
         let resp = dispatch(&broker, 1, &Json::obj(vec![("op", Json::str("bogus"))]));
         assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn requeue_op_redelivers_without_retry_cost() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("keep")).unwrap();
+        let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
+        let retries = d.task.retries_left;
+        client.requeue(d.tag).unwrap();
+        let d2 = client.fetch(&["q"], 0, 1000).unwrap().expect("redelivery");
+        assert_eq!(d2.task.retries_left, retries, "no retry consumed");
+        assert!(client.requeue(0xBAD).is_err(), "unknown tag is an error");
+        server.shutdown();
+    }
+
+    #[test]
+    fn durability_op_reports_broker_stats() {
+        let dir = std::env::temp_dir().join(format!("merlin-net-dur-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let broker = Broker::open_durable(
+            Default::default(),
+            crate::broker::wal::DurabilityConfig::new(&dir),
+        )
+        .unwrap();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("logged")).unwrap();
+        let st = client.durability().unwrap();
+        assert!(st.durable);
+        assert_eq!(st.wal_records, 1);
+        // An in-memory broker reports durable=false over the same op.
+        let server2 = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let mut client2 = BrokerClient::connect(&server2.addr.to_string()).unwrap();
+        assert!(!client2.durability().unwrap().durable);
+        server.shutdown();
+        server2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

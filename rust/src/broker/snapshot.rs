@@ -1,0 +1,224 @@
+//! Compacting shard snapshots — the other half of broker durability.
+//!
+//! A snapshot captures one shard's complete live task set (ready *and*
+//! in-flight: delivery is not a durable event, so an unacked delivery is
+//! simply live) at a moment in time, together with the WAL LSN horizon it
+//! reflects. After a snapshot lands, the shard's WAL resets to empty;
+//! recovery is `replay(snapshot, wal)` — see [`super::wal::replay`].
+//!
+//! ## File format
+//!
+//! ```text
+//! snap   := "MSNP" ver:u8(=1) body check:varint     check = fnv1a64(body)
+//! body   := shard:varint next_lsn:varint count:varint
+//!           { entry:varint len:varint v2-envelope-bytes }*
+//! ```
+//!
+//! Writes are atomic: the file is written to `<name>.tmp`, `fsync`ed,
+//! then renamed over the live name — a crash mid-write leaves the
+//! previous snapshot intact. A snapshot that fails its checksum or
+//! header validation is reported as an error (not silently treated as
+//! empty: its WAL was truncated when it was written, so ignoring it
+//! would drop state).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::task::ser::{get_uvarint, put_uvarint};
+use crate::util::hex::fnv1a;
+
+/// Leading magic of every snapshot file.
+pub const SNAP_MAGIC: &[u8; 4] = b"MSNP";
+/// Current snapshot format version.
+pub const SNAP_VERSION: u8 = 1;
+
+/// Decoded contents of one shard snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Index of the shard this snapshot belongs to.
+    pub shard: u64,
+    /// WAL LSN horizon: every record with a lower LSN is reflected here.
+    pub next_lsn: u64,
+    /// Live tasks as (entry id, wire-v2 envelope bytes), enqueue order.
+    pub entries: Vec<(u64, Vec<u8>)>,
+}
+
+impl Snapshot {
+    /// Serialize to the on-disk format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(32 + self.entries.len() * 64);
+        put_uvarint(&mut body, self.shard);
+        put_uvarint(&mut body, self.next_lsn);
+        put_uvarint(&mut body, self.entries.len() as u64);
+        for (entry, blob) in &self.entries {
+            put_uvarint(&mut body, *entry);
+            put_uvarint(&mut body, blob.len() as u64);
+            body.extend_from_slice(blob);
+        }
+        let mut out = Vec::with_capacity(body.len() + 16);
+        out.extend_from_slice(SNAP_MAGIC);
+        out.push(SNAP_VERSION);
+        out.extend_from_slice(&body);
+        put_uvarint(&mut out, fnv1a(&body));
+        out
+    }
+
+    /// Parse the on-disk format, validating magic, version, checksum,
+    /// and exact length.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot, String> {
+        let rest = bytes
+            .strip_prefix(SNAP_MAGIC.as_slice())
+            .ok_or("not a snapshot file (bad magic)")?;
+        let (&ver, rest) = rest.split_first().ok_or("truncated snapshot header")?;
+        if ver != SNAP_VERSION {
+            return Err(format!("unsupported snapshot version {ver}"));
+        }
+        // The checksum varint sits at the tail; everything between the
+        // header and it is the body. Parse the body forward and then
+        // verify the remainder is exactly the checksum.
+        let mut pos = 0usize;
+        let shard = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot shard: {e}"))?;
+        let next_lsn =
+            get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot next_lsn: {e}"))?;
+        let count = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot count: {e}"))?;
+        let mut entries = Vec::with_capacity((count as usize).min(4096));
+        for _ in 0..count {
+            let entry = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot entry: {e}"))?;
+            let len = get_uvarint(rest, &mut pos)
+                .map_err(|e| format!("snapshot blob len: {e}"))? as usize;
+            let end = pos.checked_add(len).ok_or("snapshot blob length overflow")?;
+            let blob = rest
+                .get(pos..end)
+                .ok_or("truncated snapshot blob")?
+                .to_vec();
+            pos = end;
+            entries.push((entry, blob));
+        }
+        let body_len = pos;
+        let check = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot checksum: {e}"))?;
+        if pos != rest.len() {
+            return Err(format!("trailing bytes after snapshot at {pos}"));
+        }
+        if check != fnv1a(&rest[..body_len]) {
+            return Err("snapshot checksum mismatch".into());
+        }
+        Ok(Snapshot {
+            shard,
+            next_lsn,
+            entries,
+        })
+    }
+}
+
+/// Write `snap` atomically *and durably* to `path`: `.tmp` + fsync +
+/// rename + fsync of the parent directory. The directory fsync is what
+/// makes the rename itself survive an OS crash — without it the old
+/// snapshot could resurface next to a WAL that was already truncated on
+/// the snapshot's behalf (the caller truncates only after this returns).
+pub fn write_atomic(path: &Path, snap: &Snapshot) -> std::io::Result<()> {
+    let tmp = path.with_extension("snap.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&snap.encode())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        // Directories open read-only on unix; syncing one persists its
+        // entries (the rename above).
+        std::fs::File::open(parent)?.sync_all()?;
+    }
+    Ok(())
+}
+
+/// Read the snapshot at `path`. `Ok(None)` when no snapshot exists yet;
+/// an unreadable or corrupt snapshot is an error (see module docs).
+pub fn read(path: &Path) -> std::io::Result<Option<Snapshot>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    Snapshot::decode(&bytes)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::ser;
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
+
+    fn snap() -> Snapshot {
+        let blob = |t: &str| {
+            ser::encode_v2(&TaskEnvelope::new(
+                "q",
+                Payload::Control(ControlMsg::Ping { token: t.into() }),
+            ))
+        };
+        Snapshot {
+            shard: 3,
+            next_lsn: 42,
+            entries: vec![(7, blob("a")), (9, blob("b")), (40, blob("c"))],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = snap();
+        assert_eq!(Snapshot::decode(&s.encode()).unwrap(), s);
+        let empty = Snapshot {
+            shard: 0,
+            next_lsn: 1,
+            entries: vec![],
+        };
+        assert_eq!(Snapshot::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn decode_rejects_corruption_everywhere() {
+        let bytes = snap().encode();
+        assert!(Snapshot::decode(&[]).is_err());
+        assert!(Snapshot::decode(b"XXXX").is_err());
+        for cut in 0..bytes.len() {
+            assert!(Snapshot::decode(&bytes[..cut]).is_err(), "truncated at {cut}");
+        }
+        for idx in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[idx] ^= 0x10;
+            // Must never panic; almost always errors (the checksum).
+            let _ = Snapshot::decode(&corrupt);
+        }
+        // A body flip specifically must fail the checksum.
+        let mut corrupt = bytes.clone();
+        corrupt[6] ^= 0x01;
+        assert!(Snapshot::decode(&corrupt).is_err());
+    }
+
+    #[test]
+    fn unsupported_version_named_in_error() {
+        let mut bytes = snap().encode();
+        bytes[4] = 9;
+        let err = Snapshot::decode(&bytes).unwrap_err();
+        assert!(err.contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_and_read() {
+        let dir = std::env::temp_dir().join(format!("merlin-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard-03.snap");
+        assert_eq!(read(&path).unwrap(), None, "absent file is None");
+        let s = snap();
+        write_atomic(&path, &s).unwrap();
+        assert_eq!(read(&path).unwrap(), Some(s.clone()));
+        // Overwrite is atomic: the tmp file never lingers.
+        write_atomic(&path, &s).unwrap();
+        assert!(!path.with_extension("snap.tmp").exists());
+        // Corrupt file is an error, not None.
+        std::fs::write(&path, b"MSNPgarbage").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,762 @@
+//! Per-shard append-only write-ahead log — the durable half of the broker.
+//!
+//! Every durable mutation of a shard's queue state is appended here
+//! *before* the in-memory structures change, under the shard lock, so the
+//! log order is exactly the logical order. Records reuse the wire-v2
+//! varint codec from [`crate::task::ser`]; enqueued envelopes are stored
+//! as v2 binary blobs.
+//!
+//! ## Record grammar (see DESIGN.md "Durability & Recovery")
+//!
+//! ```text
+//! wal      := frame*
+//! frame    := len:varint body check:varint        check = fnv1a64(body)
+//! body     := lsn:varint op
+//! op       := 0x01 len:varint v2-envelope-bytes   Enqueue (entry id = lsn)
+//!           | 0x02 entry:varint                   Ack      (task completed)
+//!           | 0x03 entry:varint                   Nack     (dead-lettered)
+//!           | 0x04 entry:varint                   Requeue  (retry consumed)
+//! ```
+//!
+//! Each record carries its own monotonic per-shard LSN; an `Enqueue`'s
+//! LSN doubles as the durable *entry id* that later `Ack`/`Nack`/
+//! `Requeue` records reference. Snapshots store the LSN horizon they
+//! capture, so replaying a WAL that overlaps a snapshot (the crash window
+//! between snapshot rename and WAL truncation) is exactly idempotent:
+//! records below the horizon are skipped.
+//!
+//! ## What is — and is not — logged
+//!
+//! Redelivery (`requeue` without retry cost, `recover_consumer`) is *not*
+//! logged: delivery itself is not a durable event, so a task that was
+//! in flight at the crash is simply ready again after recovery — the AMQP
+//! crash-requeue semantics, now extended across broker restarts.
+//!
+//! ## Torn tails and corruption
+//!
+//! The reader validates each frame's checksum and stops at the first
+//! truncated or corrupt frame, yielding the longest valid prefix; on
+//! reopen the file is truncated back to that prefix so new appends never
+//! land after garbage. A mid-file corruption therefore behaves exactly
+//! like a crash at that offset: everything before it is recovered,
+//! everything after is as if it never happened.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::task::ser::{self, get_uvarint, put_uvarint};
+use crate::task::TaskEnvelope;
+use crate::util::hex::fnv1a;
+
+/// When appended records are pushed to stable storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fdatasync` after every append batch: zero loss on OS crash, one
+    /// disk round trip per broker operation batch.
+    Always,
+    /// `fdatasync` at most once per this many milliseconds: bounds loss
+    /// on OS crash to roughly the interval. Appends sync inline when the
+    /// interval has elapsed; a background flusher (started by
+    /// `Broker::open_durable`) covers shards that go idle with unsynced
+    /// tail appends.
+    Interval(u64),
+    /// Never sync explicitly: writes reach the OS page cache only. A
+    /// *process* crash loses nothing; an OS crash may lose the unsynced
+    /// suffix (recovery still yields a consistent prefix).
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling: `always`, `never`, or `interval:<ms>`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "always" => Some(FsyncPolicy::Always),
+            "never" => Some(FsyncPolicy::Never),
+            _ => s
+                .strip_prefix("interval:")
+                .and_then(|ms| ms.parse().ok())
+                .map(FsyncPolicy::Interval),
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::Always => write!(f, "always"),
+            FsyncPolicy::Interval(ms) => write!(f, "interval:{ms}"),
+            FsyncPolicy::Never => write!(f, "never"),
+        }
+    }
+}
+
+/// Configuration of the broker durability subsystem.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// Directory holding the per-shard `shard-NN.wal` / `shard-NN.snap`
+    /// files. Created on open; one broker per directory.
+    pub dir: PathBuf,
+    /// Fsync policy for WAL appends.
+    pub fsync: FsyncPolicy,
+    /// Write a compacting snapshot (and reset the WAL) once a shard has
+    /// appended this many records since its last snapshot. 0 disables
+    /// snapshotting (the WAL grows without bound).
+    pub snapshot_every: u64,
+}
+
+impl DurabilityConfig {
+    /// Durability rooted at `dir` with the default policy: interval
+    /// fsync every 50 ms, snapshot every 64 Ki records per shard.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            fsync: FsyncPolicy::Interval(50),
+            snapshot_every: 64 * 1024,
+        }
+    }
+}
+
+const OP_ENQUEUE: u8 = 0x01;
+const OP_ACK: u8 = 0x02;
+const OP_NACK: u8 = 0x03;
+const OP_REQUEUE: u8 = 0x04;
+
+/// The durable operation a WAL record describes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalOp {
+    /// A task entered the queue; the record's LSN is its durable entry
+    /// id. The blob is the wire-v2 envelope as published.
+    Enqueue(Vec<u8>),
+    /// The entry completed successfully and left the durable set.
+    Ack(u64),
+    /// The entry was dead-lettered (nack without requeue, exhausted
+    /// retries, or purge) and left the durable set.
+    Nack(u64),
+    /// The entry was nacked back onto its queue, consuming one retry.
+    Requeue(u64),
+}
+
+/// One WAL record: a per-shard LSN plus the operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    /// Monotonic per-shard sequence number of this record.
+    pub lsn: u64,
+    /// The logged operation.
+    pub op: WalOp,
+}
+
+/// Append the framed encoding of `rec` to `out`.
+pub fn encode_record(out: &mut Vec<u8>, rec: &WalRecord) {
+    let mut body = Vec::with_capacity(16);
+    put_uvarint(&mut body, rec.lsn);
+    match &rec.op {
+        WalOp::Enqueue(blob) => {
+            body.push(OP_ENQUEUE);
+            put_uvarint(&mut body, blob.len() as u64);
+            body.extend_from_slice(blob);
+        }
+        WalOp::Ack(e) => {
+            body.push(OP_ACK);
+            put_uvarint(&mut body, *e);
+        }
+        WalOp::Nack(e) => {
+            body.push(OP_NACK);
+            put_uvarint(&mut body, *e);
+        }
+        WalOp::Requeue(e) => {
+            body.push(OP_REQUEUE);
+            put_uvarint(&mut body, *e);
+        }
+    }
+    put_uvarint(out, body.len() as u64);
+    out.extend_from_slice(&body);
+    put_uvarint(out, fnv1a(&body));
+}
+
+/// Result of scanning a WAL byte stream: the longest valid record prefix.
+#[derive(Debug, Default)]
+pub struct DecodeOutcome {
+    /// Records of the valid prefix, in append order.
+    pub records: Vec<WalRecord>,
+    /// Byte length of the valid prefix (where appends may resume).
+    pub valid_bytes: usize,
+    /// True when the whole stream decoded (no torn tail, no corruption).
+    pub clean: bool,
+}
+
+fn decode_one(buf: &[u8], pos: &mut usize) -> Option<WalRecord> {
+    let len = get_uvarint(buf, pos).ok()? as usize;
+    let end = pos.checked_add(len)?;
+    let body = buf.get(*pos..end)?;
+    *pos = end;
+    let check = get_uvarint(buf, pos).ok()?;
+    if check != fnv1a(body) {
+        return None;
+    }
+    let mut bp = 0usize;
+    let lsn = get_uvarint(body, &mut bp).ok()?;
+    let kind = *body.get(bp)?;
+    bp += 1;
+    let op = match kind {
+        OP_ENQUEUE => {
+            let blen = get_uvarint(body, &mut bp).ok()? as usize;
+            let blob = body.get(bp..bp.checked_add(blen)?)?.to_vec();
+            bp += blen;
+            WalOp::Enqueue(blob)
+        }
+        OP_ACK => WalOp::Ack(get_uvarint(body, &mut bp).ok()?),
+        OP_NACK => WalOp::Nack(get_uvarint(body, &mut bp).ok()?),
+        OP_REQUEUE => WalOp::Requeue(get_uvarint(body, &mut bp).ok()?),
+        _ => return None,
+    };
+    if bp != body.len() {
+        return None;
+    }
+    Some(WalRecord { lsn, op })
+}
+
+/// Decode the longest valid prefix of a WAL byte stream. Never errors:
+/// a torn or corrupt frame simply ends the prefix (see module docs).
+pub fn decode_records(buf: &[u8]) -> DecodeOutcome {
+    let mut out = DecodeOutcome::default();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        let mut probe = pos;
+        match decode_one(buf, &mut probe) {
+            Some(rec) => {
+                out.records.push(rec);
+                pos = probe;
+            }
+            None => {
+                out.valid_bytes = pos;
+                return out;
+            }
+        }
+    }
+    out.valid_bytes = pos;
+    out.clean = true;
+    out
+}
+
+/// The durable state of one shard after composing snapshot + WAL replay.
+#[derive(Debug, Default)]
+pub struct ReplayResult {
+    /// Live (neither acked nor dead-lettered) tasks by entry id, in
+    /// enqueue order. Retry budgets reflect logged `Requeue` records.
+    pub live: BTreeMap<u64, TaskEnvelope>,
+    /// The LSN the shard's WAL should continue from.
+    pub next_lsn: u64,
+    /// Enqueue records whose envelope blob failed to decode (corrupt
+    /// snapshot-era data that passed the frame checksum; should be 0).
+    pub undecodable: u64,
+}
+
+/// Rebuild a shard's live task set from snapshot contents (entry id →
+/// envelope blob, plus the snapshot's LSN horizon) and the WAL records
+/// appended after — or overlapping — it. Records with `lsn <
+/// snapshot_next_lsn` are skipped, which makes the crash window between
+/// snapshot rename and WAL truncation exactly idempotent.
+pub fn replay(
+    snapshot_live: &[(u64, Vec<u8>)],
+    snapshot_next_lsn: u64,
+    records: &[WalRecord],
+) -> ReplayResult {
+    let mut out = ReplayResult {
+        next_lsn: snapshot_next_lsn.max(1),
+        ..Default::default()
+    };
+    for (entry, blob) in snapshot_live {
+        match ser::decode_wire(blob) {
+            Ok(t) => {
+                out.live.insert(*entry, t);
+            }
+            Err(_) => out.undecodable += 1,
+        }
+    }
+    for rec in records {
+        if rec.lsn < snapshot_next_lsn {
+            continue; // already reflected in the snapshot
+        }
+        out.next_lsn = out.next_lsn.max(rec.lsn + 1);
+        match &rec.op {
+            WalOp::Enqueue(blob) => match ser::decode_wire(blob) {
+                Ok(t) => {
+                    out.live.insert(rec.lsn, t);
+                }
+                Err(_) => out.undecodable += 1,
+            },
+            WalOp::Ack(e) | WalOp::Nack(e) => {
+                out.live.remove(e);
+            }
+            WalOp::Requeue(e) => {
+                if let Some(t) = out.live.get_mut(e) {
+                    t.retries_left = t.retries_left.saturating_sub(1);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Exclusive-use guard on a WAL directory, released (file removed) when
+/// dropped — i.e. when the last clone of the owning broker goes away.
+pub struct DirLock {
+    path: PathBuf,
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+/// Claim exclusive use of a WAL directory via a `broker.lock` pid file.
+/// Two live brokers appending to the same shard files would interleave
+/// writes and duplicate LSNs — a corrupted log — so the second open must
+/// fail loudly instead.
+///
+/// A lock left by a *dead* process (kill -9, node crash) is detected by
+/// pid liveness (`/proc`, so Linux-only; elsewhere the error message
+/// tells the operator which file to remove) and reclaimed atomically:
+/// the stale file is renamed to a per-contender graveyard name first,
+/// so of several concurrent starters exactly one wins the rename — a
+/// plain remove-then-create would let two starters both "reclaim" and
+/// both come up live. A lock whose holder is still alive is retried
+/// briefly before failing, because the previous owner may be mid-drop
+/// (its interval flusher finishing a last sync keeps the lock for a
+/// few more milliseconds).
+pub fn lock_dir(dir: &Path) -> std::io::Result<DirLock> {
+    let path = dir.join("broker.lock");
+    let deadline = Instant::now() + Duration::from_millis(500);
+    loop {
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                // Construct the guard before writing: if the pid write
+                // fails (ENOSPC on a full WAL disk), the drop removes
+                // the half-made lock instead of leaving an empty file
+                // that no one can ever reclaim (an empty holder parses
+                // as "not stale").
+                let lock = DirLock { path };
+                f.write_all(std::process::id().to_string().as_bytes())?;
+                f.sync_all()?;
+                return Ok(lock);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                let holder = holder.trim().to_string();
+                let stale = cfg!(target_os = "linux")
+                    && holder
+                        .parse::<u32>()
+                        .is_ok_and(|pid| !Path::new(&format!("/proc/{pid}")).exists());
+                if stale {
+                    // Atomic reclaim: one contender wins this rename;
+                    // losers loop and re-evaluate the new state.
+                    let graveyard =
+                        dir.join(format!("broker.lock.stale.{}", std::process::id()));
+                    if std::fs::rename(&path, &graveyard).is_ok() {
+                        std::fs::remove_file(&graveyard).ok();
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::AddrInUse,
+                            "could not reclaim stale wal dir lock",
+                        ));
+                    }
+                    continue;
+                }
+                if Instant::now() >= deadline {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::AddrInUse,
+                        format!(
+                            "wal dir already locked by broker pid {holder}; \
+                             remove {} if that process is really gone",
+                            path.display()
+                        ),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// WAL file name for shard `si`.
+pub fn wal_path(dir: &Path, si: usize) -> PathBuf {
+    dir.join(format!("shard-{si:02}.wal"))
+}
+
+/// Snapshot file name for shard `si`.
+pub fn snap_path(dir: &Path, si: usize) -> PathBuf {
+    dir.join(format!("shard-{si:02}.snap"))
+}
+
+/// The append handle for one shard's WAL, owned by that shard's state
+/// (so appends are serialized by the shard lock — no extra locking).
+pub struct ShardWal {
+    file: File,
+    shard: u64,
+    snap_path: PathBuf,
+    policy: FsyncPolicy,
+    last_sync: Instant,
+    next_lsn: u64,
+    snapshot_every: u64,
+    records_since_snapshot: u64,
+    /// Bytes of complete, accepted frames — the write position. A failed
+    /// append truncates back to this, so a torn frame can never end up
+    /// *followed* by accepted records (recovery stops at the first tear).
+    len: u64,
+    /// Unsynced appends since the last `fdatasync` (lets the interval
+    /// flusher skip clean files).
+    dirty: bool,
+    /// Set when a failed append could not be rolled back; every further
+    /// append is refused so nothing durable lands after the tear.
+    poisoned: bool,
+}
+
+impl ShardWal {
+    /// Open (creating if absent) shard `si`'s WAL under `dir`, truncating
+    /// a torn tail back to `valid_bytes` — the prefix length reported by
+    /// [`decode_records`] — so appends resume at a frame boundary.
+    /// `existing_records` (the prefix's record count) seeds the snapshot
+    /// threshold so a log that was already long at startup compacts
+    /// promptly instead of growing another full interval.
+    pub fn open(
+        dir: &Path,
+        si: usize,
+        cfg: &DurabilityConfig,
+        next_lsn: u64,
+        valid_bytes: u64,
+        existing_records: u64,
+    ) -> std::io::Result<ShardWal> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(wal_path(dir, si))?;
+        if file.metadata()?.len() != valid_bytes {
+            file.set_len(valid_bytes)?;
+        }
+        file.seek(SeekFrom::Start(valid_bytes))?;
+        Ok(ShardWal {
+            file,
+            shard: si as u64,
+            snap_path: snap_path(dir, si),
+            policy: cfg.fsync,
+            last_sync: Instant::now(),
+            next_lsn: next_lsn.max(1),
+            snapshot_every: cfg.snapshot_every,
+            records_since_snapshot: existing_records,
+            len: valid_bytes,
+            dirty: false,
+            poisoned: false,
+        })
+    }
+
+    /// Allocate the next LSN (used as the entry id of an `Enqueue`).
+    pub fn alloc(&mut self) -> u64 {
+        let lsn = self.next_lsn;
+        self.next_lsn += 1;
+        lsn
+    }
+
+    /// The LSN the next record will receive (the snapshot horizon).
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// Roll a failed append back to the last accepted frame boundary;
+    /// poison the WAL if even that fails (see [`ShardWal::append`]).
+    fn rewind(&mut self) {
+        let ok = self.file.set_len(self.len).is_ok()
+            && self.file.seek(SeekFrom::Start(self.len)).is_ok();
+        if !ok {
+            self.poisoned = true;
+        }
+    }
+
+    /// Append a batch of records in one write, then apply the fsync
+    /// policy. Returns whether this append hit the disk (`fdatasync`).
+    ///
+    /// On any error the file is truncated back to the previous frame
+    /// boundary, so a torn frame (e.g. ENOSPC mid-write) can never sit
+    /// *before* later accepted records — recovery would silently drop
+    /// them. A record whose `fdatasync` failed is also rolled back: the
+    /// publish it backs is being refused, so it must not resurface after
+    /// a crash. If the rollback itself fails the WAL is poisoned and all
+    /// further appends error out.
+    pub fn append(&mut self, recs: &[WalRecord]) -> std::io::Result<bool> {
+        if recs.is_empty() {
+            return Ok(false);
+        }
+        if self.poisoned {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "wal poisoned by an earlier unrecoverable append failure",
+            ));
+        }
+        let mut buf = Vec::with_capacity(recs.len() * 24);
+        for rec in recs {
+            encode_record(&mut buf, rec);
+        }
+        if let Err(e) = self.file.write_all(&buf) {
+            self.rewind();
+            return Err(e);
+        }
+        let sync = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::Interval(ms) => self.last_sync.elapsed() >= Duration::from_millis(ms),
+            FsyncPolicy::Never => false,
+        };
+        if sync {
+            if let Err(e) = self.file.sync_data() {
+                self.rewind();
+                return Err(e);
+            }
+            self.last_sync = Instant::now();
+        }
+        self.len += buf.len() as u64;
+        self.dirty = !sync;
+        self.records_since_snapshot += recs.len() as u64;
+        Ok(sync)
+    }
+
+    /// True once enough records accumulated that the shard should write a
+    /// compacting snapshot (see [`DurabilityConfig::snapshot_every`]).
+    pub fn snapshot_due(&self) -> bool {
+        self.snapshot_every > 0 && self.records_since_snapshot >= self.snapshot_every
+    }
+
+    /// Path of this shard's snapshot file.
+    pub fn snapshot_path(&self) -> &Path {
+        &self.snap_path
+    }
+
+    /// Index of the shard this WAL belongs to.
+    pub fn shard_index(&self) -> u64 {
+        self.shard
+    }
+
+    /// Reset the WAL after a successful snapshot: everything it contained
+    /// is now captured by the snapshot, so truncate to empty and sync the
+    /// truncation before any further append. A failure part-way leaves
+    /// the file's real length unknowable relative to `self.len`, so the
+    /// WAL is poisoned (a later `rewind` against a stale `len` could
+    /// punch a zero-filled hole in front of accepted records, silently
+    /// stranding them at recovery).
+    pub fn reset_after_snapshot(&mut self) -> std::io::Result<()> {
+        let res = self
+            .file
+            .set_len(0)
+            .and_then(|()| self.file.seek(SeekFrom::Start(0)).map(|_| ()))
+            .and_then(|()| self.file.sync_data());
+        if let Err(e) = res {
+            self.poisoned = true;
+            return Err(e);
+        }
+        self.len = 0;
+        self.dirty = false;
+        self.records_since_snapshot = 0;
+        Ok(())
+    }
+
+    /// Force an `fdatasync` regardless of policy (the shutdown path and
+    /// the interval flusher). Skips the syscall when nothing was
+    /// appended since the last sync.
+    pub fn sync(&mut self) -> std::io::Result<()> {
+        if self.dirty {
+            self.file.sync_data()?;
+            self.dirty = false;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ControlMsg, Payload};
+
+    fn ping(token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            "q",
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    fn enqueue_rec(lsn: u64, token: &str) -> WalRecord {
+        WalRecord {
+            lsn,
+            op: WalOp::Enqueue(ser::encode_v2(&ping(token))),
+        }
+    }
+
+    #[test]
+    fn records_roundtrip_through_frame_codec() {
+        let recs = vec![
+            enqueue_rec(1, "a"),
+            WalRecord { lsn: 2, op: WalOp::Ack(1) },
+            WalRecord { lsn: 3, op: WalOp::Nack(7) },
+            WalRecord { lsn: 4, op: WalOp::Requeue(9) },
+        ];
+        let mut buf = Vec::new();
+        for r in &recs {
+            encode_record(&mut buf, r);
+        }
+        let out = decode_records(&buf);
+        assert!(out.clean);
+        assert_eq!(out.valid_bytes, buf.len());
+        assert_eq!(out.records, recs);
+    }
+
+    #[test]
+    fn truncation_yields_valid_prefix_at_every_offset() {
+        let recs: Vec<WalRecord> = (1..=5).map(|i| enqueue_rec(i, &format!("t{i}"))).collect();
+        let mut buf = Vec::new();
+        let mut boundaries = vec![0usize];
+        for r in &recs {
+            encode_record(&mut buf, r);
+            boundaries.push(buf.len());
+        }
+        for cut in 0..=buf.len() {
+            let out = decode_records(&buf[..cut]);
+            // The prefix ends at the last complete frame before `cut`.
+            let expect_n = boundaries.iter().filter(|b| **b <= cut).count() - 1;
+            assert_eq!(out.records.len(), expect_n, "cut={cut}");
+            assert_eq!(out.valid_bytes, boundaries[expect_n], "cut={cut}");
+            // A cut exactly at a frame boundary decodes cleanly.
+            assert_eq!(out.clean, boundaries.contains(&cut), "cut={cut}");
+            assert_eq!(out.records, recs[..expect_n]);
+        }
+    }
+
+    #[test]
+    fn corruption_is_caught_by_checksum() {
+        let mut buf = Vec::new();
+        for i in 1..=4 {
+            encode_record(&mut buf, &enqueue_rec(i, &format!("t{i}")));
+        }
+        let clean = decode_records(&buf).records.len();
+        assert_eq!(clean, 4);
+        for idx in 0..buf.len() {
+            let mut corrupt = buf.clone();
+            corrupt[idx] ^= 0x40;
+            let out = decode_records(&corrupt);
+            // Never panics; yields some (possibly shorter) valid prefix
+            // whose records all match the originals up to that length.
+            assert!(out.records.len() <= 4);
+        }
+        // A flipped byte inside the *last* record's body drops exactly it.
+        let mut corrupt = buf.clone();
+        let last = buf.len() - 3;
+        corrupt[last] ^= 0x01;
+        assert!(decode_records(&corrupt).records.len() < 4);
+    }
+
+    #[test]
+    fn replay_applies_ack_nack_requeue() {
+        let mut t = ping("x");
+        t.retries_left = 3;
+        let recs = vec![
+            WalRecord { lsn: 1, op: WalOp::Enqueue(ser::encode_v2(&t)) },
+            enqueue_rec(2, "y"),
+            enqueue_rec(3, "z"),
+            WalRecord { lsn: 4, op: WalOp::Ack(2) },
+            WalRecord { lsn: 5, op: WalOp::Requeue(1) },
+            WalRecord { lsn: 6, op: WalOp::Nack(3) },
+        ];
+        let out = replay(&[], 1, &recs);
+        assert_eq!(out.next_lsn, 7);
+        assert_eq!(out.live.len(), 1);
+        assert_eq!(out.live[&1].retries_left, 2, "requeue consumed a retry");
+        assert_eq!(out.undecodable, 0);
+    }
+
+    #[test]
+    fn replay_skips_records_below_snapshot_horizon() {
+        // The snapshot already reflects lsn < 10; an overlapping WAL
+        // (crash between snapshot rename and WAL truncation) must not
+        // double-apply.
+        let mut t = ping("snap");
+        t.retries_left = 2;
+        let snap = vec![(5u64, ser::encode_v2(&t))];
+        let recs = vec![
+            WalRecord { lsn: 5, op: WalOp::Enqueue(ser::encode_v2(&ping("stale"))) },
+            WalRecord { lsn: 7, op: WalOp::Requeue(5) }, // below horizon: skip
+            WalRecord { lsn: 12, op: WalOp::Requeue(5) }, // above: apply
+        ];
+        let out = replay(&snap, 10, &recs);
+        assert_eq!(out.live.len(), 1);
+        assert_eq!(out.live[&5].retries_left, 1);
+        assert_eq!(out.next_lsn, 13);
+    }
+
+    #[test]
+    fn shard_wal_open_truncates_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("merlin-wal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = DurabilityConfig::new(&dir);
+        let mut buf = Vec::new();
+        encode_record(&mut buf, &enqueue_rec(1, "keep"));
+        let valid = buf.len() as u64;
+        buf.extend_from_slice(&[0xFF, 0x03, 0x99]); // garbage tail
+        std::fs::write(wal_path(&dir, 0), &buf).unwrap();
+        {
+            let outcome = decode_records(&std::fs::read(wal_path(&dir, 0)).unwrap());
+            assert!(!outcome.clean);
+            let mut w = ShardWal::open(
+                &dir,
+                0,
+                &cfg,
+                2,
+                outcome.valid_bytes as u64,
+                outcome.records.len() as u64,
+            )
+            .unwrap();
+            w.append(&[enqueue_rec(2, "after")]).unwrap();
+            w.sync().unwrap();
+        }
+        let bytes = std::fs::read(wal_path(&dir, 0)).unwrap();
+        assert_eq!(bytes.len() as u64, valid * 2, "garbage replaced, not appended after");
+        let out = decode_records(&bytes);
+        assert!(out.clean);
+        assert_eq!(out.records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_policy_parse_and_display() {
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(
+            FsyncPolicy::parse("interval:250"),
+            Some(FsyncPolicy::Interval(250))
+        );
+        assert_eq!(FsyncPolicy::parse("interval:"), None);
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+        for p in [FsyncPolicy::Always, FsyncPolicy::Never, FsyncPolicy::Interval(9)] {
+            assert_eq!(FsyncPolicy::parse(&p.to_string()), Some(p));
+        }
+    }
+
+    #[test]
+    fn append_policies_report_syncs() {
+        let dir = std::env::temp_dir().join(format!("merlin-wal-sync-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut cfg = DurabilityConfig::new(&dir);
+        cfg.fsync = FsyncPolicy::Always;
+        let mut w = ShardWal::open(&dir, 1, &cfg, 1, 0, 0).unwrap();
+        let lsn = w.alloc();
+        assert!(w.append(&[enqueue_rec(lsn, "a")]).unwrap(), "always syncs");
+        cfg.fsync = FsyncPolicy::Never;
+        let mut w = ShardWal::open(&dir, 2, &cfg, 1, 0, 0).unwrap();
+        assert!(!w.append(&[enqueue_rec(1, "b")]).unwrap(), "never does not");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -30,13 +30,18 @@ pub const MAX_FRAME: usize = 64 << 20;
 /// First byte of every binary (v2) frame body.
 pub const BIN_MAGIC: u8 = 0xB3;
 
+/// Errors of the frame layer.
 #[derive(Debug)]
 pub enum WireError {
+    /// Underlying transport failure.
     Io(std::io::Error),
+    /// A frame (or declared frame length) exceeded [`MAX_FRAME`].
     FrameTooLarge(usize),
+    /// A JSON frame body failed to parse.
     BadJson(String),
     /// Malformed binary frame (bad magic, unknown op, truncated field).
     BadFrame(String),
+    /// Clean EOF at a frame boundary (the peer closed).
     Closed,
 }
 
@@ -109,7 +114,9 @@ fn parse_json_body(body: &[u8]) -> Result<Json, WireError> {
 /// A frame body, discriminated by its leading byte.
 #[derive(Debug)]
 pub enum Frame {
+    /// A parsed JSON (wire v1) frame.
     Json(Json),
+    /// A raw binary (wire v2) frame body for [`decode_bin`].
     Bin(Vec<u8>),
 }
 
@@ -168,9 +175,14 @@ pub enum BinMsg {
     AckBatch(Vec<u64>),
     /// Fetch up to `max` deliveries in one round trip.
     PopN {
+        /// Maximum deliveries in the reply (server-capped further by
+        /// [`crate::broker::net::MAX_POP_WINDOW`]).
         max: u64,
+        /// Consumer prefetch limit (0 = unlimited).
         prefetch: u64,
+        /// Server-side wait for the first message, in milliseconds.
         timeout_ms: u64,
+        /// Queues to draw from, best-priority-first across all of them.
         queues: Vec<String>,
     },
     /// Success reply carrying a count (published / acked).

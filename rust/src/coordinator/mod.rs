@@ -6,7 +6,8 @@
 //!   dependencies complete (completion observed through the results
 //!   backend, the way Celery chords resolve);
 //! * [`resubmit`] — the §3.1 recovery pass: crawl state/data, requeue
-//!   exactly the missing samples;
+//!   exactly the missing samples (and, after a durable-broker restart,
+//!   trust broker recovery instead of blindly re-enqueueing);
 //! * [`status`] — queue depths + per-study completion for the CLI.
 
 pub mod orchestrate;
@@ -15,6 +16,6 @@ pub mod run;
 pub mod status;
 
 pub use orchestrate::{orchestrate, StudyReport};
-pub use resubmit::resubmit_missing;
+pub use resubmit::{resubmit_missing, resubmit_missing_trusting_broker};
 pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions};
 pub use status::status_report;

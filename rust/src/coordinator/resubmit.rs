@@ -3,6 +3,13 @@
 //! — from the results backend, the on-disk data crawl, or both — and
 //! requeue exactly those, as real step tasks grouped into contiguous
 //! ranges.
+//!
+//! With a durable broker ([`crate::broker::Broker::open_durable`]) the
+//! crawl can additionally *trust broker recovery*: samples whose step
+//! tasks are already sitting (recovered) in the queue or in flight are
+//! subtracted before re-enqueueing, so a broker restart no longer turns
+//! into a blind double-enqueue of everything unfinished —
+//! [`resubmit_missing_trusting_broker`].
 
 use std::collections::BTreeSet;
 use std::path::Path;
@@ -47,6 +54,35 @@ pub fn resubmit_missing(
     n_samples: u64,
     data_root: Option<(&Path, &BundleLayout)>,
 ) -> Result<u64, BrokerError> {
+    resubmit_inner(broker, state, template, queue, n_samples, data_root, false)
+}
+
+/// [`resubmit_missing`], minus the samples whose step tasks are already
+/// queued or in flight on the broker. This is the pass to run after a
+/// **durable** broker restart: recovery already rebuilt the unfinished
+/// tasks, so re-enqueueing them would double the work. (Safe — though
+/// pointless — against an in-memory broker too: an empty queue subtracts
+/// nothing and the behavior degrades to [`resubmit_missing`].)
+pub fn resubmit_missing_trusting_broker(
+    broker: &Broker,
+    state: &StateStore,
+    template: &StepTemplate,
+    queue: &str,
+    n_samples: u64,
+    data_root: Option<(&Path, &BundleLayout)>,
+) -> Result<u64, BrokerError> {
+    resubmit_inner(broker, state, template, queue, n_samples, data_root, true)
+}
+
+fn resubmit_inner(
+    broker: &Broker,
+    state: &StateStore,
+    template: &StepTemplate,
+    queue: &str,
+    n_samples: u64,
+    data_root: Option<(&Path, &BundleLayout)>,
+    trust_broker: bool,
+) -> Result<u64, BrokerError> {
     let mut missing: BTreeSet<u64> = state
         .missing_samples(&template.study_id, n_samples)
         .into_iter()
@@ -60,6 +96,17 @@ pub fn resubmit_missing(
         for s in 0..n_samples {
             if !on_disk.contains(&s) {
                 missing.insert(s);
+            }
+        }
+    }
+    if trust_broker {
+        // Samples with a recovered (or otherwise still-pending) step task
+        // on the queue are not missing — the workers will get to them.
+        for (lo, hi) in
+            broker.queued_step_samples(queue, &template.study_id, &template.step_name)
+        {
+            for s in lo..hi {
+                missing.remove(&s);
             }
         }
     }
@@ -163,6 +210,47 @@ mod tests {
             resubmit_missing(&broker, &state, &template(), "q", 4, Some((&dir, &layout))).unwrap();
         assert_eq!(n, 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trusting_broker_skips_samples_already_queued() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        // Backend knows 0-1 are done; a recovered task already covers
+        // [2, 6); samples 6-9 are genuinely missing.
+        for s in [0u64, 1] {
+            state.mark_sample_done("rs", s);
+        }
+        broker
+            .publish(
+                TaskEnvelope::new(
+                    "q",
+                    Payload::Step(StepTask {
+                        template: template(),
+                        lo: 2,
+                        hi: 6,
+                    }),
+                )
+                .with_content_id(),
+            )
+            .unwrap();
+        let n = resubmit_missing_trusting_broker(&broker, &state, &template(), "q", 10, None)
+            .unwrap();
+        assert_eq!(n, 4, "only 6-9 resubmitted");
+        // Queue now covers [2,6) + [6,10) and nothing else.
+        let c = broker.register_consumer();
+        let mut covered = Vec::new();
+        while let Some(d) = broker.try_fetch(c, &["q"], 0) {
+            if let Payload::Step(s) = &d.task.payload {
+                covered.extend(s.lo..s.hi);
+            }
+            broker.ack(d.tag).unwrap();
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, (2..10).collect::<Vec<u64>>());
+        // The blind pass would have re-enqueued 2-5 as well.
+        let blind = resubmit_missing(&broker, &state, &template(), "q", 10, None).unwrap();
+        assert_eq!(blind, 8);
     }
 
     #[test]

@@ -57,9 +57,14 @@ USAGE:
   merlin run-workers --broker HOST:PORT --queues q1,q2 [-c N] [--idle-ms N]
       Connect N workers to a remote broker (the multi-allocation shape).
 
-  merlin serve-broker [--addr 127.0.0.1:7777]
+  merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
+                      [--fsync always|never|interval:MS] [--snapshot-every N]
+      Run the standalone RabbitMQ-analog server. With --wal-dir the
+      broker is durable: queue state is write-ahead logged + snapshotted
+      under DIR and recovered on restart (see docs/OPERATIONS.md).
+
   merlin serve-backend [--addr 127.0.0.1:7778]
-      Run the standalone RabbitMQ/Redis-analog servers.
+      Run the standalone Redis-analog server.
 
   merlin hierarchy --samples N [--branch B] [--samples-per-task S]
       Print the task-generation hierarchy plan (Fig 2).
@@ -237,7 +242,8 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
         idle = 0;
         let mut acks: Vec<u64> = Vec::with_capacity(batch.len());
         let mut stop = false;
-        for d in batch {
+        let mut batch = batch.into_iter();
+        for d in batch.by_ref() {
             match &d.task.payload {
                 Payload::Expansion(e) => {
                     let mut children = Vec::new();
@@ -287,8 +293,13 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
         }
         client.ack_batch(&acks).ok();
         if stop {
-            // Remaining deliveries of the window are requeued by the
-            // server when this connection closes (AMQP redelivery).
+            // Nack-free requeue (no retry cost) of the window's
+            // unprocessed remainder, instead of dropping it and relying
+            // on disconnect redelivery: the broker's recovery accounting
+            // (and a durable broker's WAL) see exactly what happened.
+            for d in batch {
+                client.requeue(d.tag).ok();
+            }
             return done;
         }
     }
@@ -296,7 +307,37 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
 
 fn cmd_serve_broker(args: &[String]) -> i32 {
     let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7777".into());
-    match BrokerServer::serve(Broker::default(), &addr) {
+    let broker = match flag(args, "--wal-dir") {
+        Some(dir) => {
+            let mut dur = merlin::broker::DurabilityConfig::new(&dir);
+            if let Some(policy) = flag(args, "--fsync") {
+                match merlin::broker::FsyncPolicy::parse(&policy) {
+                    Some(p) => dur.fsync = p,
+                    None => {
+                        eprintln!("bad --fsync {policy:?} (always | never | interval:MS)");
+                        return 2;
+                    }
+                }
+            }
+            dur.snapshot_every = flag_u64(args, "--snapshot-every", dur.snapshot_every);
+            match Broker::open_durable(Default::default(), dur.clone()) {
+                Ok(b) => {
+                    let st = b.durability_stats();
+                    println!(
+                        "durable broker: wal-dir {} fsync {} snapshot-every {} ({} tasks recovered)",
+                        dir, dur.fsync, dur.snapshot_every, st.recovered
+                    );
+                    b
+                }
+                Err(e) => {
+                    eprintln!("open wal-dir {dir}: {e}");
+                    return 1;
+                }
+            }
+        }
+        None => Broker::default(),
+    };
+    match BrokerServer::serve(broker, &addr) {
         Ok(server) => {
             println!("broker listening on {}", server.addr);
             loop {

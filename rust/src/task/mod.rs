@@ -43,8 +43,11 @@ pub enum WorkSpec {
 /// the expansion metadata so the producer never materializes leaves.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepTemplate {
+    /// Study this step belongs to (state/bookkeeping namespace).
     pub study_id: String,
+    /// Name of the workflow step within the study.
     pub step_name: String,
+    /// What each sample of this step executes.
     pub work: WorkSpec,
     /// Samples executed serially inside one leaf task (the §3.1 JAG study
     /// bundles 10 simulations per task).
@@ -59,17 +62,24 @@ pub struct StepTemplate {
 /// step tasks.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExpansionTask {
+    /// Template for the leaf tasks this node eventually generates.
     pub template: StepTemplate,
+    /// Start of the covered sample range (inclusive).
     pub lo: u64,
+    /// End of the covered sample range (exclusive).
     pub hi: u64,
+    /// Maximum children enqueued per expansion (the tree's branch factor).
     pub max_branch: u64,
 }
 
 /// A real unit of work covering samples `[lo, hi)` of a step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepTask {
+    /// The step being executed.
     pub template: StepTemplate,
+    /// First sample index (inclusive).
     pub lo: u64,
+    /// One past the last sample index (exclusive).
     pub hi: u64,
 }
 
@@ -77,8 +87,11 @@ pub struct StepTask {
 /// (§3.1: 100 bundle files x 10 sims -> one 1000-sim file).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AggregateTask {
+    /// Study the bundles belong to.
     pub study_id: String,
+    /// Leaf directory whose bundle files are aggregated.
     pub dir: String,
+    /// Bundle files expected in the directory when full.
     pub expected_bundles: u64,
 }
 
@@ -91,15 +104,21 @@ pub enum ControlMsg {
     Ping { token: String },
 }
 
+/// The four payload families that flow through the queues.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
+    /// Task-generation metadata (Fig 2's white diamonds).
     Expansion(ExpansionTask),
+    /// Real work (the gray squares).
     Step(StepTask),
+    /// Bundle aggregation (§3.1's collection stage).
     Aggregate(AggregateTask),
+    /// Control-plane messages.
     Control(ControlMsg),
 }
 
 impl Payload {
+    /// Short label of the payload family (metrics / logging).
     pub fn kind(&self) -> &'static str {
         match self {
             Payload::Expansion(_) => "expansion",
@@ -123,10 +142,16 @@ impl Payload {
 /// The envelope that actually sits in a broker queue.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskEnvelope {
+    /// Task id (fresh by default; content-derived for resubmissions).
     pub id: String,
+    /// Queue this envelope is published to.
     pub queue: String,
+    /// Delivery priority (higher drains first; see the `PRIORITY_*`
+    /// constants for the §2.2 policy).
     pub priority: u8,
+    /// Remaining nack-with-requeue budget before dead-lettering.
     pub retries_left: u32,
+    /// What the task does.
     pub payload: Payload,
 }
 
@@ -161,6 +186,7 @@ impl TaskEnvelope {
         self
     }
 
+    /// Builder-style priority override.
     pub fn priority(mut self, p: u8) -> Self {
         self.priority = p;
         self

@@ -94,6 +94,8 @@ fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8, String> {
 // v1 — JSON
 // ---------------------------------------------------------------------------
 
+/// Render an envelope as its v1 JSON object (the per-op protocol's
+/// `task` field).
 pub fn task_to_json(t: &TaskEnvelope) -> Json {
     Json::obj(vec![
         ("v", Json::num(WIRE_VERSION as f64)),
@@ -110,11 +112,14 @@ pub fn encode(t: &TaskEnvelope) -> String {
     to_string(&task_to_json(t))
 }
 
+/// Deserialize from the v1 wire string.
 pub fn decode(text: &str) -> Result<TaskEnvelope, String> {
     let v = Json::parse(text).map_err(|e| e.to_string())?;
     task_from_json(&v)
 }
 
+/// Parse an envelope from its v1 JSON object form (already-parsed
+/// frames; [`decode`] is the from-text entry point).
 pub fn task_from_json(v: &Json) -> Result<TaskEnvelope, String> {
     let version = v.get("v").as_u64().ok_or("missing version")?;
     if version != WIRE_VERSION {

@@ -151,6 +151,42 @@ pub mod arb {
         t.retries_left = g.u64_in(0, 100) as u32;
         t
     }
+
+    /// One abstract broker operation for the durability crash-replay
+    /// suite. Completion ops carry no target: the interpreting test
+    /// resolves them against whatever delivery the broker hands out next
+    /// (skipping the op when nothing is deliverable).
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum BrokerOp {
+        /// Publish this envelope.
+        Enqueue(TaskEnvelope),
+        /// Fetch one delivery and ack it.
+        Ack,
+        /// Fetch one delivery and nack it without requeue (dead-letter).
+        NackDead,
+        /// Fetch one delivery and nack it with requeue (costs a retry).
+        NackRequeue,
+    }
+
+    /// A random op sequence over a fixed queue set: roughly half
+    /// enqueues (unique ids `c<case>-<i>`, small retry budgets so
+    /// requeue paths exhaust), the rest completions.
+    pub fn broker_ops(g: &mut Gen, queues: &[&str], n: usize) -> Vec<BrokerOp> {
+        (0..n)
+            .map(|i| match g.u64_in(0, 9) {
+                0..=4 => {
+                    let mut t = envelope(g);
+                    t.queue = (*g.pick(queues)).to_string();
+                    t.id = format!("c{}-{i}", g.case);
+                    t.retries_left = g.u64_in(0, 3) as u32;
+                    BrokerOp::Enqueue(t)
+                }
+                5..=7 => BrokerOp::Ack,
+                8 => BrokerOp::NackRequeue,
+                _ => BrokerOp::NackDead,
+            })
+            .collect()
+    }
 }
 
 /// Run `n` cases of `property`, deterministically derived from `seed`.

@@ -4,7 +4,9 @@
 //! window of deliveries ([`crate::broker::core::Broker::fetch_n`] — one
 //! shard-lock pass instead of one per message) into a local buffer that
 //! the loop drains. Deliveries still buffered when the worker stops are
-//! recovered (requeued without retry cost), mirroring AMQP redelivery.
+//! explicitly requeued (no retry cost, mirroring AMQP redelivery) so the
+//! broker's recovery accounting stays exact — they never linger in
+//! flight waiting for consumer recovery.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -172,10 +174,15 @@ impl Worker {
             }
         }
         // Anything still buffered was delivered but never processed:
-        // requeue it (no retry cost) for the remaining workers. Always
-        // recover — with an empty buffer this requeues nothing but still
-        // retires this consumer's registry entry in the broker.
-        drop(buf);
+        // explicitly requeue it (no retry cost) rather than dropping the
+        // deliveries and leaving them to consumer recovery — with a
+        // durable broker the accounting must be exact (a dropped buffer
+        // would sit in flight until recovery, skewing depth/inflight).
+        // recover_consumer still runs afterwards: with an empty buffer it
+        // requeues nothing but retires this consumer's registry entry.
+        for d in buf.drain(..) {
+            self.broker.requeue(d.tag).ok();
+        }
         self.broker.recover_consumer(consumer);
         report
     }
@@ -310,7 +317,8 @@ impl Worker {
             return;
         }
         if let Some(root) = &self.cfg.data_root {
-            if write_bundle_opts(&self.cfg.layout, root, step.lo, bundle_nodes, self.cfg.bundle_compress)
+            let compress = self.cfg.bundle_compress;
+            if write_bundle_opts(&self.cfg.layout, root, step.lo, bundle_nodes, compress)
                 .is_err()
             {
                 for sample in step.lo..step.hi {
@@ -419,6 +427,43 @@ mod tests {
         );
         let report = w.run();
         assert!(report.stopped_by_control);
+    }
+
+    #[test]
+    fn stop_requeues_buffered_prefetch_window_exactly() {
+        // The stop control arrives at the head of a full prefetch window:
+        // the two buffered tasks behind it must be requeued immediately
+        // (ready, not in flight) when the worker exits.
+        let (broker, _state, _rec, clock) = setup();
+        broker
+            .publish(TaskEnvelope::new(
+                "q",
+                Payload::Control(ControlMsg::StopWorker),
+            ))
+            .unwrap();
+        for t in ["buf1", "buf2"] {
+            broker
+                .publish(TaskEnvelope::new(
+                    "q",
+                    Payload::Control(ControlMsg::Ping { token: t.into() }),
+                ))
+                .unwrap();
+        }
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.prefetch = 3;
+        cfg.idle_exit_ms = 0;
+        let mut w = Worker::new(
+            broker.clone(),
+            None,
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert!(report.stopped_by_control);
+        assert_eq!(broker.depth(), 2, "buffered tasks requeued, not dropped");
+        assert_eq!(broker.inflight(), 0, "nothing lingers in flight");
+        assert_eq!(broker.stats("q").requeued, 2);
     }
 
     #[test]
