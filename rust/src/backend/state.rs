@@ -6,6 +6,9 @@
 //! * `st:<study>:done`                     → set of completed sample indices
 //! * `st:<study>:failed`                   → set of failed sample indices
 //! * `st:<study>:counter:<name>`           → integer counters
+//! * `st:<study>:obj`                      → set of samples with objectives
+//! * `st:<study>:objv:<sample>`            → objective value (text float)
+//! * `st:<study>:steer`                    → steering progress line
 //!
 //! The done/failed *sample* sets (not task sets) are what the §3.1
 //! resubmission crawl intersects with the on-disk data inventory.
@@ -145,6 +148,56 @@ impl StateStore {
         (0..n).filter(|i| !done.contains(i)).collect()
     }
 
+    /// Record the objective value a completed sample produced — the
+    /// `(params, objective)` training pairs the steering loop consumes.
+    /// Idempotent per sample (a re-run overwrites).
+    pub fn record_objective(&self, study: &str, sample: u64, value: f64) {
+        self.store
+            .set(&format!("st:{study}:objv:{sample}"), &format!("{value}"));
+        self.store.sadd(&format!("st:{study}:obj"), &sample.to_string());
+    }
+
+    /// All recorded `(sample, objective)` pairs, sorted by sample id (so
+    /// downstream consumers are deterministic regardless of worker order).
+    pub fn objectives(&self, study: &str) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = self
+            .store
+            .smembers(&format!("st:{study}:obj"))
+            .iter()
+            .filter_map(|s| {
+                let id: u64 = s.parse().ok()?;
+                let v: f64 = self.store.get(&format!("st:{study}:objv:{id}"))?.parse().ok()?;
+                Some((id, v))
+            })
+            .collect();
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
+    }
+
+    /// Number of samples with a recorded objective.
+    pub fn objective_count(&self, study: &str) -> usize {
+        self.store.scard(&format!("st:{study}:obj"))
+    }
+
+    /// Publish steering progress (round reached, best objective so far,
+    /// samples injected) for `merlin status` to report.
+    pub fn record_steer_progress(&self, study: &str, round: u64, best: f64, samples: u64) {
+        self.store
+            .set(&format!("st:{study}:steer"), &format!("{round} {best} {samples}"));
+    }
+
+    /// Latest steering progress as `(round, best_objective, samples)`,
+    /// if the study is (or was) steered.
+    pub fn steer_progress(&self, study: &str) -> Option<(u64, f64, u64)> {
+        let line = self.store.get(&format!("st:{study}:steer"))?;
+        let mut it = line.split_whitespace();
+        Some((
+            it.next()?.parse().ok()?,
+            it.next()?.parse().ok()?,
+            it.next()?.parse().ok()?,
+        ))
+    }
+
     /// Add `delta` to a named study counter; returns the new value.
     pub fn incr_counter(&self, study: &str, name: &str, delta: i64) -> i64 {
         self.store
@@ -223,6 +276,29 @@ mod tests {
         st.incr_counter("a", "sims", 5);
         assert_eq!(st.counter("b", "sims"), 0);
         assert_eq!(st.counter("a", "sims"), 5);
+    }
+
+    #[test]
+    fn objectives_roundtrip_sorted() {
+        let st = StateStore::new(Store::new());
+        st.record_objective("s", 9, 0.5);
+        st.record_objective("s", 2, -1.25);
+        st.record_objective("s", 5, 3.0);
+        st.record_objective("s", 9, 0.75); // overwrite
+        assert_eq!(st.objective_count("s"), 3);
+        assert_eq!(
+            st.objectives("s"),
+            vec![(2, -1.25), (5, 3.0), (9, 0.75)]
+        );
+        assert!(st.objectives("other").is_empty());
+    }
+
+    #[test]
+    fn steer_progress_roundtrip() {
+        let st = StateStore::new(Store::new());
+        assert_eq!(st.steer_progress("s"), None);
+        st.record_steer_progress("s", 3, 0.015625, 96);
+        assert_eq!(st.steer_progress("s"), Some((3, 0.015625, 96)));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{Delivery, DurabilityStats, QueueStats};
+use super::core::{ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats};
 use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
@@ -66,7 +66,7 @@ impl BrokerClient {
         // error — that is the v1 fallback, not a failure.
         match client.call(&Json::obj(vec![
             ("op", Json::str("hello")),
-            ("max_wire", Json::num(2.0)),
+            ("max_wire", Json::num(3.0)),
         ])) {
             Ok(resp) => client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8,
             Err(ClientError::Server(_)) => client.wire = 1,
@@ -80,7 +80,8 @@ impl BrokerClient {
         Ok(client)
     }
 
-    /// The negotiated wire version (1 = JSON only, 2 = binary batches).
+    /// The negotiated wire version (1 = JSON only, 2 = binary batches,
+    /// 3 = batches + delivery leases).
     pub fn wire_version(&self) -> u8 {
         self.wire
     }
@@ -347,6 +348,86 @@ impl BrokerClient {
         .map(|_| ())
     }
 
+    /// Declare this connection's delivery lease: every subsequent fetch
+    /// carries a visibility deadline of `lease_ms` (0 clears the lease).
+    /// A leased worker must [`BrokerClient::heartbeat`] faster than the
+    /// lease expires or the broker redelivers its unacked window.
+    /// Requires a v3 server.
+    pub fn set_lease(&mut self, lease_ms: u64) -> Result<(), ClientError> {
+        if self.wire < 3 {
+            return Err(ClientError::Server(
+                "server predates delivery leases (wire < 3)".into(),
+            ));
+        }
+        self.call(&Json::obj(vec![
+            ("op", Json::str("set_lease")),
+            ("lease_ms", Json::num(lease_ms as f64)),
+        ]))
+        .map(|_| ())
+    }
+
+    /// Heartbeat: extend the lease on every delivery this connection
+    /// holds. Returns how many were extended. Best-effort on old servers
+    /// (an error, not a silent no-op).
+    pub fn heartbeat(&mut self) -> Result<u64, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("heartbeat"))]))?;
+        Ok(r.get("extended").as_u64().unwrap_or(0))
+    }
+
+    /// Extend (or grant) leases on specific delivery tags in one round
+    /// trip; returns the count extended. Uses a binary `ExtendBatch`
+    /// frame (wire v3).
+    pub fn extend_batch(&mut self, tags: &[u64], lease_ms: u64) -> Result<u64, ClientError> {
+        if tags.is_empty() {
+            return Ok(0);
+        }
+        if self.wire < 3 {
+            return Err(ClientError::Server(
+                "server predates delivery leases (wire < 3)".into(),
+            ));
+        }
+        match self.call_bin(&BinMsg::ExtendBatch {
+            lease_ms,
+            tags: tags.to_vec(),
+        })? {
+            BinMsg::OkCount(n) => Ok(n),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// The server's lease/liveness report.
+    pub fn lease_stats(&mut self) -> Result<LeaseStats, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("leases"))]))?;
+        let consumers = r
+            .get("consumers")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|c| ConsumerLease {
+                        consumer: c.get("consumer").as_u64().unwrap_or(0),
+                        lease_ms: c.get("lease_ms").as_u64().unwrap_or(0),
+                        held: c.get("held").as_u64().unwrap_or(0) as usize,
+                        idle_ms: c.get("idle_ms").as_u64().unwrap_or(0),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(LeaseStats {
+            active: r.get("active").as_u64().unwrap_or(0) as usize,
+            expired: r.get("expired").as_u64().unwrap_or(0),
+            consumers,
+        })
+    }
+
+    /// Force a sweep of expired leases on the server; returns how many
+    /// deliveries were requeued.
+    pub fn reap(&mut self) -> Result<u64, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("reap"))]))?;
+        Ok(r.get("reaped").as_u64().unwrap_or(0))
+    }
+
     /// The server's durability counters (all zero / `durable: false` for
     /// an in-memory broker).
     pub fn durability(&mut self) -> Result<DurabilityStats, ClientError> {
@@ -374,6 +455,7 @@ impl BrokerClient {
             acked: r.get("acked").as_u64().unwrap_or(0),
             requeued: r.get("requeued").as_u64().unwrap_or(0),
             dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
+            lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
             bytes_published: r.get("bytes_published").as_u64().unwrap_or(0),
         })
     }

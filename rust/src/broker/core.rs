@@ -23,7 +23,25 @@
 //! ready (AMQP crash-requeue, extended across broker restarts). Durable
 //! mutations are logged under the shard lock *before* the in-memory
 //! structures change.
+//!
+//! ## Delivery leases (visibility timeouts)
+//!
+//! A consumer may carry a **lease** ([`Broker::set_consumer_lease`], or
+//! [`BrokerConfig::default_lease_ms`] for every consumer): each delivery
+//! to it is then stamped with a visibility deadline. A live worker
+//! extends its deadlines by heartbeating ([`Broker::heartbeat`] extends
+//! every delivery it holds; [`Broker::extend_batch`] extends specific
+//! tags). When a deadline passes, the delivery is **reaped**: requeued
+//! exactly like AMQP redelivery — no retry consumed and, on a durable
+//! broker, **no WAL record** (delivery is not a durable event; the entry
+//! never left the durable set, so replay-after-crash already yields the
+//! same outcome). Reaping is opportunistic (the fetch path sweeps the
+//! shards it scans) plus on demand ([`Broker::reap_expired`], which
+//! long-lived orchestrators call from their poll loops). This is what
+//! keeps a round of a steered study from stranding on a worker that died
+//! holding its prefetch window.
 
+use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -69,6 +87,10 @@ pub struct BrokerConfig {
     /// Upper bound on total queued messages (backpressure guard; the §2.2
     /// pathology of producers reserving the whole server). 0 = unlimited.
     pub max_depth: usize,
+    /// Visibility timeout granted to every consumer that has not set its
+    /// own lease (ms; 0 = deliveries are unleased and sit in flight until
+    /// acked or their consumer is recovered — the classic AMQP model).
+    pub default_lease_ms: u64,
 }
 
 impl Default for BrokerConfig {
@@ -76,6 +98,7 @@ impl Default for BrokerConfig {
         Self {
             max_message_bytes: 2 << 30,
             max_depth: 0,
+            default_lease_ms: 0,
         }
     }
 }
@@ -164,6 +187,9 @@ struct InFlight {
     consumer: u64,
     /// Durable entry id (see [`Queued::entry`]).
     entry: u64,
+    /// Visibility deadline in ms since broker start (`None` = unleased:
+    /// the delivery waits for ack or consumer recovery, never expires).
+    lease_deadline: Option<u64>,
     task: TaskEnvelope,
 }
 
@@ -193,6 +219,9 @@ pub struct QueueStats {
     pub requeued: u64,
     /// Lifetime dead-letter drops (exhausted retries / nack w/o requeue).
     pub dead_lettered: u64,
+    /// Lifetime lease expirations (counted in `requeued` as well: an
+    /// expiry is a redelivery, not a failure).
+    pub lease_expired: u64,
     /// Lifetime bytes published (wire encoding).
     pub bytes_published: u64,
 }
@@ -212,6 +241,33 @@ pub struct BrokerTotals {
     pub requeued: u64,
     /// Lifetime dead-letter drops.
     pub dead_lettered: u64,
+    /// Lifetime lease expirations (subset of `requeued`).
+    pub lease_expired: u64,
+}
+
+/// One consumer's lease contract and liveness, as seen by the broker.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConsumerLease {
+    /// The consumer id (one per worker / TCP connection).
+    pub consumer: u64,
+    /// Its visibility timeout in ms (0 = unleased).
+    pub lease_ms: u64,
+    /// Unacked deliveries it currently holds.
+    pub held: usize,
+    /// Milliseconds since its last heartbeat (or lease-affecting call) —
+    /// the liveness signal `merlin status` reports.
+    pub idle_ms: u64,
+}
+
+/// Point-in-time lease/liveness report (see [`Broker::lease_stats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LeaseStats {
+    /// Leased deliveries currently in flight.
+    pub active: usize,
+    /// Lifetime lease expirations (redeliveries forced by a dead holder).
+    pub expired: u64,
+    /// Per-consumer lease contracts (consumers with a lease configured).
+    pub consumers: Vec<ConsumerLease>,
 }
 
 /// Counters of the durability subsystem (all zero when not durable).
@@ -240,16 +296,48 @@ struct ShardState {
     queues: HashMap<String, QueueState>,
     /// Deliveries from this shard's queues, keyed by tag.
     inflight: HashMap<u64, InFlight>,
+    /// Min-heap of `(deadline_ms, tag)` lease entries, lazily
+    /// invalidated: acks remove only the inflight entry, and extensions
+    /// push a fresh entry, so reaping re-checks each popped entry against
+    /// the delivery's *current* deadline before acting on it.
+    leases: BinaryHeap<Reverse<(u64, u64)>>,
     /// Write-ahead log of this shard (None = in-memory broker). Living
     /// inside the shard state means appends are serialized by the shard
     /// lock, so log order always matches the logical mutation order.
     wal: Option<ShardWal>,
 }
 
-#[derive(Default)]
+/// Sentinel for "no lease pending" in a shard's `next_expiry`.
+const NO_EXPIRY: u64 = u64::MAX;
+
 struct Shard {
     state: Mutex<ShardState>,
     cv: Condvar,
+    /// Earliest lease deadline among this shard's deliveries (ms since
+    /// broker start; [`NO_EXPIRY`] when none). Written only under the
+    /// shard lock but read lock-free by the fetch path, so unleased
+    /// traffic pays one relaxed load — not a lock — for lease support.
+    next_expiry: AtomicU64,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Self {
+            state: Mutex::default(),
+            cv: Condvar::new(),
+            next_expiry: AtomicU64::new(NO_EXPIRY),
+        }
+    }
+}
+
+/// Per-consumer bookkeeping: prefetch accounting plus the lease contract.
+struct ConsumerMeta {
+    /// Unacked deliveries held (prefetch accounting).
+    held: AtomicUsize,
+    /// Visibility timeout stamped on each delivery (ms; 0 = unleased).
+    lease_ms: AtomicU64,
+    /// Last heartbeat, ms since broker start (liveness reporting).
+    last_beat_ms: AtomicU64,
 }
 
 struct Inner {
@@ -267,9 +355,12 @@ struct Inner {
     acked: AtomicU64,
     requeued: AtomicU64,
     dead_lettered: AtomicU64,
-    /// Per-consumer unacked counts (prefetch accounting). The registry is
-    /// read-mostly; the counters themselves are atomics.
-    consumers: RwLock<HashMap<u64, Arc<AtomicUsize>>>,
+    lease_expired: AtomicU64,
+    /// Time base for lease deadlines and liveness (ms since this Instant).
+    epoch: Instant,
+    /// Per-consumer bookkeeping (prefetch + lease contract). The registry
+    /// is read-mostly; the counters themselves are atomics.
+    consumers: RwLock<HashMap<u64, Arc<ConsumerMeta>>>,
     /// Wakeup channel for fetches spanning several shards: every enqueue
     /// bumps `event_seq`; multi-shard waiters park on `event_cv` only if
     /// the sequence hasn't moved since they last scanned the shards.
@@ -322,6 +413,8 @@ impl Broker {
                 acked: AtomicU64::new(0),
                 requeued: AtomicU64::new(0),
                 dead_lettered: AtomicU64::new(0),
+                lease_expired: AtomicU64::new(0),
+                epoch: Instant::now(),
                 consumers: RwLock::new(HashMap::new()),
                 event_lock: Mutex::new(()),
                 event_cv: Condvar::new(),
@@ -541,6 +634,19 @@ impl Broker {
         }
     }
 
+    /// Milliseconds since this broker started (the lease time base).
+    fn now_ms(&self) -> u64 {
+        self.inner.epoch.elapsed().as_millis() as u64
+    }
+
+    fn fresh_meta(&self) -> Arc<ConsumerMeta> {
+        Arc::new(ConsumerMeta {
+            held: AtomicUsize::new(0),
+            lease_ms: AtomicU64::new(self.inner.cfg.default_lease_ms),
+            last_beat_ms: AtomicU64::new(self.now_ms()),
+        })
+    }
+
     /// Register a consumer; returns its id for `fetch` prefetch accounting.
     pub fn register_consumer(&self) -> u64 {
         let id = self.inner.next_consumer.fetch_add(1, Ordering::Relaxed);
@@ -548,28 +654,212 @@ impl Broker {
             .consumers
             .write()
             .unwrap()
-            .insert(id, Arc::new(AtomicUsize::new(0)));
+            .insert(id, self.fresh_meta());
         id
     }
 
-    fn held_counter(&self, consumer: u64) -> Arc<AtomicUsize> {
+    fn consumer_meta(&self, consumer: u64) -> Arc<ConsumerMeta> {
         if let Some(c) = self.inner.consumers.read().unwrap().get(&consumer) {
             return c.clone();
         }
+        let fresh = self.fresh_meta();
         self.inner
             .consumers
             .write()
             .unwrap()
             .entry(consumer)
-            .or_insert_with(|| Arc::new(AtomicUsize::new(0)))
+            .or_insert(fresh)
             .clone()
     }
 
     fn dec_held(&self, consumer: u64, n: usize) {
-        let c = self.held_counter(consumer);
-        let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        let c = self.consumer_meta(consumer);
+        let _ = c.held.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
             Some(v.saturating_sub(n))
         });
+    }
+
+    /// Set (or clear) this consumer's delivery lease: every subsequent
+    /// delivery to it carries a visibility deadline of now + `lease`. A
+    /// worker that sets a lease must [`Broker::heartbeat`] faster than the
+    /// lease expires or its deliveries are reaped back to their queues.
+    pub fn set_consumer_lease(&self, consumer: u64, lease: Option<Duration>) {
+        let meta = self.consumer_meta(consumer);
+        let ms = lease.map_or(0, |d| (d.as_millis() as u64).max(1));
+        meta.lease_ms.store(ms, Ordering::Relaxed);
+        meta.last_beat_ms.store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    /// Heartbeat: push the visibility deadline of every leased delivery
+    /// this consumer holds to now + its lease. Returns how many deliveries
+    /// were extended. This is what a live worker calls on its whole
+    /// prefetch window; a worker that stops calling it is presumed dead
+    /// and its deliveries redeliver at their stamped deadlines.
+    pub fn heartbeat(&self, consumer: u64) -> usize {
+        let meta = self.consumer_meta(consumer);
+        let now = self.now_ms();
+        meta.last_beat_ms.store(now, Ordering::Relaxed);
+        let lease = meta.lease_ms.load(Ordering::Relaxed);
+        if lease == 0 {
+            return 0;
+        }
+        let deadline = now + lease;
+        let mut extended = 0usize;
+        for shard in &self.inner.shards {
+            let mut s = shard.state.lock().unwrap();
+            let tags: Vec<u64> = s
+                .inflight
+                .iter()
+                .filter(|(_, inf)| inf.consumer == consumer && inf.lease_deadline.is_some())
+                .map(|(t, _)| *t)
+                .collect();
+            for tag in tags {
+                s.inflight.get_mut(&tag).unwrap().lease_deadline = Some(deadline);
+                s.leases.push(Reverse((deadline, tag)));
+                extended += 1;
+            }
+        }
+        extended
+    }
+
+    /// Extend (or grant) the lease on specific delivery tags to
+    /// now + `lease`. Unknown tags are skipped; returns how many were
+    /// extended. The wire protocol's `ExtendBatch` frame sits on this.
+    pub fn extend_batch(&self, tags: &[u64], lease: Duration) -> usize {
+        let now = self.now_ms();
+        let deadline = now + (lease.as_millis() as u64).max(1);
+        let by_shard = group_by_shard(tags.iter().map(|&t| ((t & SHARD_MASK) as usize, t)));
+        let mut extended = 0usize;
+        for (si, stags) in by_shard {
+            let shard = &self.inner.shards[si];
+            let mut s = shard.state.lock().unwrap();
+            for tag in stags {
+                if let Some(inf) = s.inflight.get_mut(&tag) {
+                    inf.lease_deadline = Some(deadline);
+                    s.leases.push(Reverse((deadline, tag)));
+                    // Granting a lease to a previously-unleased delivery
+                    // may establish this shard's first deadline.
+                    shard.next_expiry.fetch_min(deadline, Ordering::Relaxed);
+                    extended += 1;
+                }
+            }
+        }
+        extended
+    }
+
+    /// Requeue every delivery whose lease deadline has passed, across all
+    /// shards. Returns how many were redelivered. The fetch path already
+    /// sweeps the shards it scans; long-lived orchestrators call this from
+    /// their poll loops so expiry is detected even when no consumer is
+    /// fetching the affected queues.
+    pub fn reap_expired(&self) -> usize {
+        let now = self.now_ms();
+        (0..NUM_SHARDS).map(|si| self.reap_shard(si, now)).sum()
+    }
+
+    /// Reap one shard if (and only if) its earliest deadline has passed.
+    /// Lease expiry is *redelivery*, not failure: no retry is consumed
+    /// and no WAL record is written — the entry never left the durable
+    /// set, so crash-replay already reproduces this outcome exactly.
+    fn reap_shard(&self, si: usize, now: u64) -> usize {
+        let shard = &self.inner.shards[si];
+        if shard.next_expiry.load(Ordering::Relaxed) > now {
+            return 0;
+        }
+        let mut expired_consumers: Vec<u64> = Vec::new();
+        {
+            let mut s = shard.state.lock().unwrap();
+            while let Some(&Reverse((deadline, tag))) = s.leases.peek() {
+                if deadline > now {
+                    break;
+                }
+                s.leases.pop();
+                // Lazy invalidation: act only if the delivery still exists
+                // and its *current* deadline has really passed (an
+                // extension pushed a fresh entry and stranded this one).
+                let due = s
+                    .inflight
+                    .get(&tag)
+                    .is_some_and(|inf| inf.lease_deadline.is_some_and(|d| d <= now));
+                if !due {
+                    continue;
+                }
+                let inf = s.inflight.remove(&tag).unwrap();
+                let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                let q = s.queues.entry(inf.queue.clone()).or_default();
+                q.stats.unacked = q.stats.unacked.saturating_sub(1);
+                q.stats.requeued += 1;
+                q.stats.lease_expired += 1;
+                q.stats.ready += 1;
+                q.heap.push(Queued {
+                    priority: inf.task.priority,
+                    seq,
+                    entry: inf.entry,
+                    task: inf.task,
+                });
+                expired_consumers.push(inf.consumer);
+            }
+            // Still under the lock (publishes that stamp new deadlines
+            // also hold it), so this store cannot race a fetch_min.
+            let next = s.leases.peek().map(|r| r.0 .0).unwrap_or(NO_EXPIRY);
+            shard.next_expiry.store(next, Ordering::Relaxed);
+        }
+        let n = expired_consumers.len();
+        if n > 0 {
+            self.inner.total_ready.fetch_add(n, Ordering::Relaxed);
+            self.inner.total_inflight.fetch_sub(n, Ordering::Relaxed);
+            self.inner.requeued.fetch_add(n as u64, Ordering::Relaxed);
+            self.inner.lease_expired.fetch_add(n as u64, Ordering::Relaxed);
+            expired_consumers.sort_unstable();
+            let mut i = 0;
+            while i < expired_consumers.len() {
+                let c = expired_consumers[i];
+                let mut k = 0;
+                while i < expired_consumers.len() && expired_consumers[i] == c {
+                    k += 1;
+                    i += 1;
+                }
+                self.dec_held(c, k);
+            }
+            shard.cv.notify_all();
+            self.ring_multi();
+        }
+        n
+    }
+
+    /// Point-in-time lease/liveness report: active leased deliveries,
+    /// lifetime expirations, and each leased consumer's contract.
+    pub fn lease_stats(&self) -> LeaseStats {
+        let now = self.now_ms();
+        let mut active = 0usize;
+        for shard in &self.inner.shards {
+            let s = shard.state.lock().unwrap();
+            active += s
+                .inflight
+                .values()
+                .filter(|inf| inf.lease_deadline.is_some())
+                .count();
+        }
+        let mut consumers: Vec<ConsumerLease> = self
+            .inner
+            .consumers
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(_, m)| m.lease_ms.load(Ordering::Relaxed) > 0)
+            .map(|(id, m)| ConsumerLease {
+                consumer: *id,
+                lease_ms: m.lease_ms.load(Ordering::Relaxed),
+                held: m.held.load(Ordering::Relaxed),
+                idle_ms: now.saturating_sub(m.last_beat_ms.load(Ordering::Relaxed)),
+            })
+            .collect();
+        consumers.sort_unstable_by_key(|c| c.consumer);
+        LeaseStats {
+            active,
+            expired: self.inner.lease_expired.load(Ordering::Relaxed),
+            consumers,
+        }
     }
 
     /// Reserve room for `n` ready messages against `max_depth`.
@@ -793,11 +1083,13 @@ impl Broker {
 
     /// Pop the best ready message among `qnames` (all owned by shard `si`)
     /// while holding that shard's lock. Returns false when none is ready.
+    /// `lease_ms` > 0 stamps the delivery with a visibility deadline.
     fn pop_one_locked(
         &self,
         s: &mut ShardState,
         si: usize,
         consumer: u64,
+        lease_ms: u64,
         qnames: &[&str],
         out: &mut Vec<Delivery>,
     ) -> bool {
@@ -820,12 +1112,22 @@ impl Broker {
         q.stats.unacked += 1;
         let raw = self.inner.next_tag.fetch_add(1, Ordering::Relaxed);
         let tag = (raw << SHARD_BITS) | si as u64;
+        let lease_deadline = (lease_ms > 0).then(|| {
+            let d = self.now_ms() + lease_ms;
+            s.leases.push(Reverse((d, tag)));
+            // Under the shard lock (reaping's recompute also holds it).
+            self.inner.shards[si]
+                .next_expiry
+                .fetch_min(d, Ordering::Relaxed);
+            d
+        });
         s.inflight.insert(
             tag,
             InFlight {
                 queue: name.to_string(),
                 consumer,
                 entry: msg.entry,
+                lease_deadline,
                 task: msg.task.clone(),
             },
         );
@@ -843,6 +1145,7 @@ impl Broker {
     fn pop_ready(
         &self,
         consumer: u64,
+        lease_ms: u64,
         by_shard: &[(usize, Vec<&str>)],
         want: usize,
         out: &mut Vec<Delivery>,
@@ -852,7 +1155,7 @@ impl Broker {
             let shard = &self.inner.shards[*si];
             let mut s = shard.state.lock().unwrap();
             while out.len() < want {
-                if !self.pop_one_locked(&mut s, *si, consumer, qnames, out) {
+                if !self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, out) {
                     break;
                 }
             }
@@ -884,7 +1187,9 @@ impl Broker {
             let shard = &self.inner.shards[*si];
             let mut s = shard.state.lock().unwrap();
             let mut popped_any = false;
-            while out.len() < want && self.pop_one_locked(&mut s, *si, consumer, qnames, out) {
+            while out.len() < want
+                && self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, out)
+            {
                 popped_any = true;
             }
             if !popped_any {
@@ -926,7 +1231,9 @@ impl Broker {
         if max_n == 0 || queues.is_empty() {
             return out;
         }
-        let held = self.held_counter(consumer);
+        let meta = self.consumer_meta(consumer);
+        let held = &meta.held;
+        let lease_ms = meta.lease_ms.load(Ordering::Relaxed);
         // Saturate absurd timeouts (a hostile PopN frame could carry
         // u64::MAX ms; `Instant + Duration` would panic on overflow).
         let deadline = Instant::now()
@@ -940,10 +1247,16 @@ impl Broker {
         // instead of busy-rescanning its shards forever.
         let mut fruitless_scans = 0u32;
         loop {
+            // Redeliver anything whose lease expired in the shards we are
+            // about to scan (one relaxed load per shard when none did).
+            let now_ms = self.now_ms();
+            for (si, _) in &by_shard {
+                self.reap_shard(*si, now_ms);
+            }
             let seen = self.inner.event_seq.load(Ordering::SeqCst);
-            let want = self.reserve_slots(&held, prefetch, max_n);
+            let want = self.reserve_slots(held, prefetch, max_n);
             if want > 0 {
-                self.pop_ready(consumer, &by_shard, want, &mut out);
+                self.pop_ready(consumer, lease_ms, &by_shard, want, &mut out);
                 if out.len() < want {
                     held.fetch_sub(want - out.len(), Ordering::Relaxed);
                 }
@@ -956,7 +1269,19 @@ impl Broker {
             if now >= deadline {
                 return out;
             }
-            let remaining = deadline - now;
+            // Never park past the earliest lease deadline of an involved
+            // shard: an expiring lease is a future publish nobody rings
+            // the bell for.
+            let mut remaining = deadline - now;
+            let next_exp = by_shard
+                .iter()
+                .map(|(si, _)| self.inner.shards[*si].next_expiry.load(Ordering::Relaxed))
+                .min()
+                .unwrap_or(NO_EXPIRY);
+            if next_exp != NO_EXPIRY {
+                let until = Duration::from_millis(next_exp.saturating_sub(now_ms).max(1));
+                remaining = remaining.min(until);
+            }
             if single {
                 let (si, qnames) = &by_shard[0];
                 let shard = &self.inner.shards[*si];
@@ -1294,6 +1619,7 @@ impl Broker {
             acked: self.inner.acked.load(Ordering::Relaxed),
             requeued: self.inner.requeued.load(Ordering::Relaxed),
             dead_lettered: self.inner.dead_lettered.load(Ordering::Relaxed),
+            lease_expired: self.inner.lease_expired.load(Ordering::Relaxed),
         }
     }
 
@@ -1466,7 +1792,7 @@ mod tests {
     fn message_size_cap_enforced() {
         let b = Broker::new(BrokerConfig {
             max_message_bytes: 200,
-            max_depth: 0,
+            ..BrokerConfig::default()
         });
         let small = ping("q", "ok");
         b.publish(small).unwrap();
@@ -1480,8 +1806,8 @@ mod tests {
     #[test]
     fn depth_cap_backpressure() {
         let b = Broker::new(BrokerConfig {
-            max_message_bytes: 2 << 30,
             max_depth: 2,
+            ..BrokerConfig::default()
         });
         b.publish(ping("q", "a")).unwrap();
         b.publish(ping("q", "b")).unwrap();
@@ -1638,7 +1964,7 @@ mod tests {
     fn publish_batch_atomic_on_failure() {
         let b = Broker::new(BrokerConfig {
             max_message_bytes: 200,
-            max_depth: 0,
+            ..BrokerConfig::default()
         });
         let batch = vec![ping("q", "ok"), ping("q", &"x".repeat(500))];
         assert!(b.publish_batch(batch).is_err());
@@ -2011,5 +2337,132 @@ mod tests {
         assert_eq!(ranges, vec![(0, 10), (10, 20), (30, 40), (60, 90)]);
         assert!(b.queued_step_samples("q", "st", "none").is_empty());
         assert!(b.queued_step_samples("other", "st", "sim").is_empty());
+    }
+
+    // ---- delivery leases ----
+
+    #[test]
+    fn lease_expiry_redelivers_without_retry_cost() {
+        let b = Broker::default();
+        let dead = b.register_consumer();
+        b.set_consumer_lease(dead, Some(Duration::from_millis(40)));
+        b.publish(ping("lq", "x")).unwrap();
+        let d = b.try_fetch(dead, &["lq"], 0).unwrap();
+        let retries = d.task.retries_left;
+        assert_eq!(b.inflight(), 1);
+        // The consumer "dies": no ack, no heartbeat, no recovery call.
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(b.reap_expired(), 1);
+        assert_eq!(b.inflight(), 0);
+        assert_eq!(b.depth(), 1);
+        let st = b.stats("lq");
+        assert_eq!(st.lease_expired, 1);
+        assert_eq!(st.requeued, 1);
+        assert_eq!(b.totals().lease_expired, 1);
+        // Redelivered to a healthy consumer with the retry budget intact.
+        let alive = b.register_consumer();
+        let d2 = b.try_fetch(alive, &["lq"], 0).unwrap();
+        assert_eq!(d2.task.retries_left, retries, "expiry is not a failure");
+        b.ack(d2.tag).unwrap();
+    }
+
+    #[test]
+    fn heartbeat_keeps_leases_alive() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.set_consumer_lease(c, Some(Duration::from_millis(250)));
+        b.publish(ping("hq", "x")).unwrap();
+        let d = b.try_fetch(c, &["hq"], 0).unwrap();
+        // Heartbeat well past the original deadline: the delivery must
+        // stay in flight the whole time.
+        for _ in 0..8 {
+            std::thread::sleep(Duration::from_millis(50));
+            assert_eq!(b.heartbeat(c), 1);
+            assert_eq!(b.reap_expired(), 0);
+        }
+        assert_eq!(b.inflight(), 1);
+        // Stop heartbeating: the lease runs out.
+        std::thread::sleep(Duration::from_millis(400));
+        assert_eq!(b.reap_expired(), 1);
+        assert_eq!(b.inflight(), 0);
+        drop(d);
+    }
+
+    #[test]
+    fn extend_batch_grants_and_extends() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        // No consumer-level lease: deliveries start unleased.
+        b.publish(ping("eq", "a")).unwrap();
+        b.publish(ping("eq", "b")).unwrap();
+        let d1 = b.try_fetch(c, &["eq"], 0).unwrap();
+        let d2 = b.try_fetch(c, &["eq"], 0).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(b.reap_expired(), 0, "unleased deliveries never expire");
+        // Grant a short lease to one of them.
+        assert_eq!(b.extend_batch(&[d1.tag], Duration::from_millis(30)), 1);
+        assert_eq!(b.extend_batch(&[0xDEAD], Duration::from_millis(30)), 0);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(b.reap_expired(), 1, "only the granted lease expires");
+        assert_eq!(b.inflight(), 1);
+        b.ack(d2.tag).unwrap();
+    }
+
+    #[test]
+    fn blocked_fetch_wakes_on_lease_expiry() {
+        let b = Broker::default();
+        let dead = b.register_consumer();
+        b.set_consumer_lease(dead, Some(Duration::from_millis(80)));
+        b.publish(ping("wq", "only")).unwrap();
+        let _held = b.try_fetch(dead, &["wq"], 0).unwrap();
+        // A second consumer blocks on the (now empty) queue; the lease
+        // expiry must surface the task well before its 10 s timeout.
+        let b2 = b.clone();
+        let t0 = Instant::now();
+        let handle = std::thread::spawn(move || {
+            let c = b2.register_consumer();
+            b2.fetch(c, &["wq"], 0, Duration::from_secs(10))
+        });
+        let d = handle.join().unwrap().expect("redelivery");
+        assert_eq!(token(&d), "only");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "fetch waited out its full timeout instead of waking on expiry"
+        );
+    }
+
+    #[test]
+    fn default_lease_applies_to_all_consumers() {
+        let b = Broker::new(BrokerConfig {
+            default_lease_ms: 40,
+            ..BrokerConfig::default()
+        });
+        let c = b.register_consumer();
+        b.publish(ping("dq2", "x")).unwrap();
+        let _d = b.try_fetch(c, &["dq2"], 0).unwrap();
+        let stats = b.lease_stats();
+        assert_eq!(stats.active, 1);
+        assert_eq!(stats.consumers.len(), 1);
+        assert_eq!(stats.consumers[0].lease_ms, 40);
+        assert_eq!(stats.consumers[0].held, 1);
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(b.reap_expired(), 1);
+        assert_eq!(b.lease_stats().expired, 1);
+        assert_eq!(b.lease_stats().active, 0);
+    }
+
+    #[test]
+    fn ack_before_expiry_cancels_lease() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.set_consumer_lease(c, Some(Duration::from_millis(30)));
+        b.publish(ping("aq", "x")).unwrap();
+        let d = b.try_fetch(c, &["aq"], 0).unwrap();
+        b.ack(d.tag).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        // The stale heap entry must not resurrect an acked delivery.
+        assert_eq!(b.reap_expired(), 0);
+        assert_eq!(b.depth(), 0);
+        assert_eq!(b.inflight(), 0);
     }
 }

@@ -29,6 +29,12 @@
 //! snapshots, and recovery composes the two so queued and in-flight
 //! tasks survive broker restarts — the fault-tolerance property the
 //! paper's multi-day ensembles lean on.
+//!
+//! Long-lived dynamic studies add **delivery leases** (wire v3): a
+//! consumer can declare a visibility timeout, heartbeat its unacked
+//! window, and have a dead worker's deliveries reaped back to their
+//! queues without consuming a retry — see the lease section of
+//! [`core::Broker`] and DESIGN.md "Iterative Steering & Leases".
 
 pub mod client;
 #[allow(clippy::module_inception)]
@@ -39,7 +45,7 @@ pub mod wal;
 pub mod wire;
 
 pub use self::core::{
-    Broker, BrokerConfig, BrokerError, BrokerTotals, Delivery, DurabilityStats, QueueStats,
-    NUM_SHARDS,
+    Broker, BrokerConfig, BrokerError, BrokerTotals, ConsumerLease, Delivery, DurabilityStats,
+    LeaseStats, QueueStats, NUM_SHARDS,
 };
 pub use self::wal::{DurabilityConfig, FsyncPolicy};

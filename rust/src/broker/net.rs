@@ -30,8 +30,10 @@ use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
 
-/// Highest wire version this server speaks.
-pub const SERVER_MAX_WIRE: u64 = 2;
+/// Highest wire version this server speaks. v3 adds the delivery-lease
+/// surface (`ExtendBatch` binary frames plus the `set_lease` /
+/// `heartbeat` / `leases` / `reap` JSON ops) on top of v2's batches.
+pub const SERVER_MAX_WIRE: u64 = 3;
 
 /// Server-side cap on one PopN / fetch_n window. Bounds the reply frame
 /// (which must stay under `wire::MAX_FRAME`) and the per-request memory
@@ -184,6 +186,10 @@ fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
             Ok(n) => BinMsg::OkCount(n as u64),
             Err(e) => BinMsg::Err(e.to_string()),
         },
+        BinMsg::ExtendBatch { lease_ms, tags } => {
+            let n = broker.extend_batch(&tags, Duration::from_millis(lease_ms));
+            BinMsg::OkCount(n as u64)
+        }
         BinMsg::PopN {
             max,
             prefetch,
@@ -311,6 +317,43 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
                 Err(e) => broker_err(e),
             }
         }
+        Some("set_lease") => {
+            // Declare this connection's lease contract: every subsequent
+            // delivery carries a visibility deadline, and the worker must
+            // heartbeat faster than `lease_ms` or be presumed dead.
+            let ms = req.get("lease_ms").as_u64().unwrap_or(0);
+            let lease = (ms > 0).then(|| Duration::from_millis(ms));
+            broker.set_consumer_lease(consumer, lease);
+            wire::ok(vec![("lease_ms", Json::num(ms as f64))])
+        }
+        Some("heartbeat") => {
+            let n = broker.heartbeat(consumer);
+            wire::ok(vec![("extended", Json::num(n as f64))])
+        }
+        Some("leases") => {
+            let st = broker.lease_stats();
+            let consumers: Vec<Json> = st
+                .consumers
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("consumer", Json::num(c.consumer as f64)),
+                        ("lease_ms", Json::num(c.lease_ms as f64)),
+                        ("held", Json::num(c.held as f64)),
+                        ("idle_ms", Json::num(c.idle_ms as f64)),
+                    ])
+                })
+                .collect();
+            wire::ok(vec![
+                ("active", Json::num(st.active as f64)),
+                ("expired", Json::num(st.expired as f64)),
+                ("consumers", Json::arr(consumers)),
+            ])
+        }
+        Some("reap") => wire::ok(vec![(
+            "reaped",
+            Json::num(broker.reap_expired() as f64),
+        )]),
         Some("durability") => {
             let st = broker.durability_stats();
             wire::ok(vec![
@@ -332,6 +375,7 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
                 ("acked", Json::num(st.acked as f64)),
                 ("requeued", Json::num(st.requeued as f64)),
                 ("dead_lettered", Json::num(st.dead_lettered as f64)),
+                ("lease_expired", Json::num(st.lease_expired as f64)),
                 ("bytes_published", Json::num(st.bytes_published as f64)),
             ])
         }
@@ -371,7 +415,7 @@ mod tests {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
         let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(client.wire_version(), 2, "negotiation lands on v2");
+        assert_eq!(client.wire_version(), 3, "negotiation lands on v3");
         client.publish(&ping("hello")).unwrap();
         let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
         match &d.task.payload {
@@ -530,6 +574,35 @@ mod tests {
         let d2 = client.fetch(&["q"], 0, 1000).unwrap().expect("redelivery");
         assert_eq!(d2.task.retries_left, retries, "no retry consumed");
         assert!(client.requeue(0xBAD).is_err(), "unknown tag is an error");
+        server.shutdown();
+    }
+
+    #[test]
+    fn lease_ops_over_tcp_redeliver_after_disappearance() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut producer = BrokerClient::connect(&addr).unwrap();
+        producer.publish(&ping("stranded")).unwrap();
+        // A leased worker fetches the task, heartbeats once, then goes
+        // silent — the connection stays OPEN, so AMQP disconnect-requeue
+        // never fires; only the lease brings the task back.
+        let mut worker = BrokerClient::connect(&addr).unwrap();
+        worker.set_lease(50).unwrap();
+        let d = worker.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
+        assert_eq!(worker.heartbeat().unwrap(), 1);
+        assert_eq!(worker.extend_batch(&[d.tag], 50).unwrap(), 1);
+        let st = producer.lease_stats().unwrap();
+        assert_eq!(st.active, 1);
+        assert_eq!(st.consumers.len(), 1);
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(producer.reap().unwrap(), 1);
+        let d2 = producer.fetch(&["q"], 0, 1000).unwrap().expect("redelivery");
+        assert_eq!(
+            d2.task.retries_left, d.task.retries_left,
+            "lease expiry consumed no retry"
+        );
+        assert!(producer.stats("q").unwrap().lease_expired >= 1);
         server.shutdown();
     }
 

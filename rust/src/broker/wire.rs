@@ -154,6 +154,8 @@ pub fn err(msg: impl Into<String>) -> Json {
 // op 0x02 AckBatch     : count:varint { tag:varint }*
 // op 0x03 PopN         : max:varint prefetch:varint timeout_ms:varint
 //                        nqueues:varint { queue:str }*
+// op 0x04 ExtendBatch  : lease_ms:varint count:varint { tag:varint }*
+//                        (wire v3: lease heartbeat over a whole window)
 // op 0x81 OkCount      : count:varint
 // op 0x82 Deliveries   : count:varint { tag:varint len:varint
 //                        v2-envelope-bytes }*
@@ -162,6 +164,7 @@ pub fn err(msg: impl Into<String>) -> Json {
 const OP_ENQUEUE_BATCH: u8 = 0x01;
 const OP_ACK_BATCH: u8 = 0x02;
 const OP_POP_N: u8 = 0x03;
+const OP_EXTEND_BATCH: u8 = 0x04;
 const OP_OK_COUNT: u8 = 0x81;
 const OP_DELIVERIES: u8 = 0x82;
 const OP_ERR: u8 = 0xFF;
@@ -185,7 +188,16 @@ pub enum BinMsg {
         /// Queues to draw from, best-priority-first across all of them.
         queues: Vec<String>,
     },
-    /// Success reply carrying a count (published / acked).
+    /// Extend (or grant) delivery leases on a batch of tags to
+    /// now + `lease_ms` — the worker-heartbeat frame of wire v3. Unknown
+    /// tags are skipped; the reply counts the tags actually extended.
+    ExtendBatch {
+        /// New visibility timeout, in milliseconds from now.
+        lease_ms: u64,
+        /// Delivery tags to extend.
+        tags: Vec<u64>,
+    },
+    /// Success reply carrying a count (published / acked / extended).
     OkCount(u64),
     /// Reply to `PopN`: (tag, wire-encoded envelope) pairs.
     Deliveries(Vec<(u64, Vec<u8>)>),
@@ -226,6 +238,14 @@ pub fn encode_bin(msg: &BinMsg) -> Vec<u8> {
             put_uvarint(&mut out, queues.len() as u64);
             for q in queues {
                 put_str(&mut out, q);
+            }
+        }
+        BinMsg::ExtendBatch { lease_ms, tags } => {
+            out.push(OP_EXTEND_BATCH);
+            put_uvarint(&mut out, *lease_ms);
+            put_uvarint(&mut out, tags.len() as u64);
+            for tag in tags {
+                put_uvarint(&mut out, *tag);
             }
         }
         BinMsg::OkCount(n) => {
@@ -306,6 +326,15 @@ pub fn decode_bin(body: &[u8]) -> Result<BinMsg, WireError> {
                 timeout_ms,
                 queues,
             }
+        }
+        OP_EXTEND_BATCH => {
+            let lease_ms = get_uvarint(body, &mut pos).map_err(bad)?;
+            let n = get_uvarint(body, &mut pos).map_err(bad)? as usize;
+            let mut tags = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                tags.push(get_uvarint(body, &mut pos).map_err(bad)?);
+            }
+            BinMsg::ExtendBatch { lease_ms, tags }
         }
         OP_OK_COUNT => BinMsg::OkCount(get_uvarint(body, &mut pos).map_err(bad)?),
         OP_DELIVERIES => {
@@ -443,6 +472,10 @@ mod tests {
                 prefetch: 8,
                 timeout_ms: 250,
                 queues: vec!["merlin.sim".into(), "merlin.post".into()],
+            },
+            BinMsg::ExtendBatch {
+                lease_ms: 30_000,
+                tags: vec![3, 99, u64::MAX],
             },
             BinMsg::OkCount(12345),
             BinMsg::Deliveries(vec![(9, vec![0xB2, 2]), (10, vec![])]),

@@ -5,17 +5,24 @@
 //! * [`orchestrate`] — DAG sequencing: release step instances as their
 //!   dependencies complete (completion observed through the results
 //!   backend, the way Celery chords resolve);
+//! * [`steer`] — ML-in-the-loop steering: a resumable round loop that
+//!   trains a surrogate on completed `(params, objective)` pairs and
+//!   injects surrogate-proposed samples into the **running** study's
+//!   queues (`merlin steer`, the paper's §3.2 optimization loop);
 //! * [`resubmit`] — the §3.1 recovery pass: crawl state/data, requeue
 //!   exactly the missing samples (and, after a durable-broker restart,
 //!   trust broker recovery instead of blindly re-enqueueing);
-//! * [`status`] — queue depths + per-study completion for the CLI.
+//! * [`status`] — queue depths, lease/liveness, steering progress, and
+//!   per-study completion for the CLI (text and JSON).
 
 pub mod orchestrate;
 pub mod resubmit;
 pub mod run;
 pub mod status;
+pub mod steer;
 
 pub use orchestrate::{orchestrate, StudyReport};
 pub use resubmit::{resubmit_missing, resubmit_missing_trusting_broker};
 pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions};
-pub use status::status_report;
+pub use status::{consumer_lease_json, queue_stats_json, status_json, status_report};
+pub use steer::{steer, IdwProposer, SampleProposer, SteerReport};

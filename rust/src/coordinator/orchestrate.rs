@@ -4,7 +4,7 @@
 //! so sequencing state must live in the backend; our orchestrator is a
 //! thin poller over it that any process can run or resume).
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::time::{Duration, Instant};
 
 use crate::backend::state::StateStore;
@@ -17,20 +17,130 @@ use super::run::{step_instance_root, RunOptions};
 /// Outcome of a full study orchestration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StudyReport {
+    /// The study id the run was bookkept under.
     pub study_id: String,
+    /// Step instances released to the queues.
     pub instances_run: u64,
+    /// Samples the released instances were expected to produce.
     pub samples_expected: u64,
+    /// Samples that completed successfully.
     pub samples_done: u64,
+    /// Samples that failed (and were never re-done).
     pub samples_failed: u64,
+    /// Whether orchestration gave up at its deadline.
     pub timed_out: bool,
 }
 
 impl StudyReport {
+    /// `samples_done / samples_expected` (1.0 for an empty study).
     pub fn completion_rate(&self) -> f64 {
         if self.samples_expected == 0 {
             return 1.0;
         }
         self.samples_done as f64 / self.samples_expected as f64
+    }
+}
+
+/// The DAG sequencing engine shared by one-shot orchestration and the
+/// round-based steering loop: tracks which instances are done, which are
+/// in flight, and releases newly unblocked instances as single batch
+/// publishes. Membership checks are hash-map lookups — a steered study
+/// keeps this loop alive for many rounds, so the seed's O(n²) linear
+/// scans (`Vec::iter().any` per ready id, `iter().find` per instance)
+/// would compound.
+pub(crate) struct DagRunner<'a> {
+    expanded: &'a ExpandedStudy,
+    /// instance id → index into `expanded.instances` (O(1) resolution).
+    index: HashMap<&'a str, usize>,
+    done: BTreeSet<String>,
+    /// instance id → (study_key, expected samples) for released instances.
+    inflight: HashMap<String, (String, u64)>,
+}
+
+impl<'a> DagRunner<'a> {
+    pub(crate) fn new(expanded: &'a ExpandedStudy) -> Self {
+        let index = expanded
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| (inst.id.as_str(), i))
+            .collect();
+        Self {
+            expanded,
+            index,
+            done: BTreeSet::new(),
+            inflight: HashMap::new(),
+        }
+    }
+
+    /// Pre-mark an instance complete without releasing it (the steering
+    /// engine runs its steered instances itself, round by round).
+    pub(crate) fn mark_done(&mut self, id: &str) {
+        self.done.insert(id.to_string());
+    }
+
+    /// Release every instance whose dependencies are complete and that is
+    /// not already in flight — the whole wave's root messages go out as
+    /// ONE batch publish (one broker round trip / lock pass, however many
+    /// instances unblock at once).
+    pub(crate) fn release_ready(
+        &mut self,
+        broker: &Broker,
+        spec: &StudySpec,
+        study_id: &str,
+        opts: &RunOptions,
+        report: &mut StudyReport,
+    ) -> Result<(), SpecError> {
+        let mut wave = Vec::new();
+        for id in self.expanded.dag.ready(&self.done) {
+            if self.inflight.contains_key(&id) {
+                continue;
+            }
+            let inst = &self.expanded.instances[self.index[id.as_str()]];
+            let (key, n, root) = step_instance_root(spec, inst, study_id, opts);
+            report.instances_run += 1;
+            report.samples_expected += n;
+            self.inflight.insert(id, (key, n));
+            wave.push(root);
+        }
+        if !wave.is_empty() {
+            broker
+                .publish_batch(wave)
+                .map_err(|e| SpecError(format!("enqueue wave: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Fold completions observed in the backend into `done`.
+    pub(crate) fn poll_completion(&mut self, state: &StateStore, report: &mut StudyReport) {
+        let mut finished: Vec<String> = Vec::new();
+        for (id, (key, n)) in &self.inflight {
+            let ok = state.done_count(key) as u64;
+            let failed = state.failed_count(key) as u64;
+            if ok + failed >= *n {
+                report.samples_done += ok;
+                report.samples_failed += failed;
+                finished.push(id.clone());
+            }
+        }
+        for id in finished {
+            self.inflight.remove(&id);
+            self.done.insert(id);
+        }
+    }
+
+    /// All instances released and completed?
+    pub(crate) fn finished(&self) -> bool {
+        self.inflight.is_empty() && self.done.len() == self.expanded.dag.len()
+    }
+
+    /// Fold whatever partial progress the unfinished instances made into
+    /// the report (the timeout path).
+    pub(crate) fn account_partial(&self, state: &StateStore, report: &mut StudyReport) {
+        for (key, _) in self.inflight.values() {
+            report.samples_done += state.done_count(key) as u64;
+            report.samples_failed += state.failed_count(key) as u64;
+        }
     }
 }
 
@@ -52,61 +162,20 @@ pub fn orchestrate(
         study_id: study_id.to_string(),
         ..Default::default()
     };
-    let mut done: BTreeSet<String> = BTreeSet::new();
-    // instance id -> (study_key, expected samples) for released instances.
-    let mut inflight: Vec<(String, String, u64)> = Vec::new();
-
+    let mut runner = DagRunner::new(&expanded);
     loop {
-        // Release everything whose dependencies are complete — the whole
-        // wave's root messages go out as ONE batch publish (one broker
-        // round trip / lock pass, however many instances unblock at once).
-        let mut wave = Vec::new();
-        for id in expanded.dag.ready(&done) {
-            if inflight.iter().any(|(i, _, _)| *i == id) {
-                continue;
-            }
-            let inst = expanded
-                .instances
-                .iter()
-                .find(|i| i.id == id)
-                .expect("instance for dag node");
-            let (key, n, root) = step_instance_root(spec, inst, study_id, opts);
-            report.instances_run += 1;
-            report.samples_expected += n;
-            inflight.push((id, key, n));
-            wave.push(root);
-        }
-        if !wave.is_empty() {
-            broker
-                .publish_batch(wave)
-                .map_err(|e| SpecError(format!("enqueue wave: {e}")))?;
-        }
-        // Check in-flight instances for completion.
-        let mut still = Vec::new();
-        for (id, key, n) in inflight {
-            let ok = state.done_count(&key) as u64;
-            let failed = state.failed_count(&key) as u64;
-            if ok + failed >= n {
-                report.samples_done += ok;
-                report.samples_failed += failed;
-                done.insert(id);
-            } else {
-                still.push((id, key, n));
-            }
-        }
-        inflight = still;
-        if inflight.is_empty() && done.len() == expanded.dag.len() {
+        runner.release_ready(broker, spec, study_id, opts, &mut report)?;
+        runner.poll_completion(state, &mut report);
+        if runner.finished() {
             return Ok(report);
         }
         if Instant::now() >= deadline {
-            // Account whatever progress the unfinished instances made.
-            for (_, key, _) in &inflight {
-                report.samples_done += state.done_count(key) as u64;
-                report.samples_failed += state.failed_count(key) as u64;
-            }
+            runner.account_partial(state, &mut report);
             report.timed_out = true;
             return Ok(report);
         }
+        // Redeliver anything a dead leased worker stranded, then wait.
+        broker.reap_expired();
         std::thread::sleep(Duration::from_millis(10));
     }
 }

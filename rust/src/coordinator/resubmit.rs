@@ -18,29 +18,11 @@ use crate::backend::state::StateStore;
 use crate::broker::core::{Broker, BrokerError};
 use crate::data::bundle::BundleLayout;
 use crate::data::crawl::crawl;
-use crate::task::{Payload, StepTask, StepTemplate, TaskEnvelope};
+use crate::task::StepTemplate;
 
-/// Group sorted sample ids into maximal contiguous `[lo, hi)` ranges no
-/// wider than `max_per_task`.
-pub fn ranges_of(samples: &[u64], max_per_task: u64) -> Vec<(u64, u64)> {
-    let mut out = Vec::new();
-    let mut iter = samples.iter().copied();
-    let Some(first) = iter.next() else {
-        return out;
-    };
-    let (mut lo, mut hi) = (first, first + 1);
-    for s in iter {
-        if s == hi && hi - lo < max_per_task {
-            hi += 1;
-        } else {
-            out.push((lo, hi));
-            lo = s;
-            hi = s + 1;
-        }
-    }
-    out.push((lo, hi));
-    out
-}
+// Range grouping moved to the dag layer (steering waves use it too);
+// re-exported here for the existing callers.
+pub use crate::dag::expand::ranges_of;
 
 /// Requeue every sample of `[0, n)` with no success record in the backend
 /// (optionally cross-checked against the data tree: a sample only counts
@@ -111,20 +93,7 @@ fn resubmit_inner(
         }
     }
     let missing: Vec<u64> = missing.into_iter().collect();
-    let mut tasks = Vec::new();
-    for (lo, hi) in ranges_of(&missing, template.samples_per_task.max(1)) {
-        tasks.push(
-            TaskEnvelope::new(
-                queue,
-                Payload::Step(StepTask {
-                    template: template.clone(),
-                    lo,
-                    hi,
-                }),
-            )
-            .with_content_id(),
-        );
-    }
+    let tasks = crate::dag::expand::wave_tasks(template, queue, &missing);
     let count = missing.len() as u64;
     broker.publish_batch(tasks)?;
     Ok(count)
@@ -134,7 +103,7 @@ fn resubmit_inner(
 mod tests {
     use super::*;
     use crate::backend::store::Store;
-    use crate::task::WorkSpec;
+    use crate::task::{Payload, StepTask, TaskEnvelope, WorkSpec};
 
     fn template() -> StepTemplate {
         StepTemplate {

@@ -29,6 +29,7 @@ impl Default for RunOptions {
 }
 
 impl RunOptions {
+    /// The queue a step's tasks are published to (`<prefix>.<step>`).
     pub fn queue_for(&self, step_name: &str) -> String {
         format!("{}.{step_name}", self.queue_prefix)
     }
@@ -46,8 +47,15 @@ impl RunOptions {
 pub fn step_work(cmd: &str, shell: &str) -> WorkSpec {
     let trimmed = cmd.trim();
     if let Some(model) = trimmed.strip_prefix("builtin:") {
+        // First token only, like `null:` — trailing text (e.g. a
+        // `# sample $(MERLIN_SAMPLE_ID)` comment that marks the step as
+        // sample-expanded) is not part of the model name.
         return WorkSpec::Builtin {
-            model: model.trim().to_string(),
+            model: model
+                .split_whitespace()
+                .next()
+                .unwrap_or_default()
+                .to_string(),
         };
     }
     if let Some(ms) = trimmed.strip_prefix("null:") {
@@ -160,6 +168,13 @@ merlin:
             step_work("builtin: jag", "/bin/bash"),
             WorkSpec::Builtin {
                 model: "jag".into()
+            }
+        );
+        // Trailing sample tokens mark expansion, not the model name.
+        assert_eq!(
+            step_work("builtin: quadratic # sample $(MERLIN_SAMPLE_ID)", "/bin/bash"),
+            WorkSpec::Builtin {
+                model: "quadratic".into()
             }
         );
         assert_eq!(

@@ -1,7 +1,38 @@
-//! `merlin status`: queue depths and per-study completion.
+//! `merlin status`: queue depths, worker liveness / delivery leases,
+//! steering progress, and per-study completion — as text for humans and
+//! as JSON ([`status_json`]) for tooling.
 
 use crate::backend::state::StateStore;
-use crate::broker::core::Broker;
+use crate::broker::core::{Broker, ConsumerLease, QueueStats};
+use crate::util::json::Json;
+
+/// One queue's stats as a JSON object — shared by the in-process
+/// [`status_json`] and the remote `merlin status --broker` path so the
+/// two reports cannot drift.
+pub fn queue_stats_json(name: &str, st: &QueueStats) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ready", Json::num(st.ready as f64)),
+        ("unacked", Json::num(st.unacked as f64)),
+        ("published", Json::num(st.published as f64)),
+        ("acked", Json::num(st.acked as f64)),
+        ("requeued", Json::num(st.requeued as f64)),
+        ("dead_lettered", Json::num(st.dead_lettered as f64)),
+        ("lease_expired", Json::num(st.lease_expired as f64)),
+    ])
+}
+
+/// One leased consumer's contract/liveness as a JSON object. The `alive`
+/// rule (heartbeated within its own lease window) lives here, once.
+pub fn consumer_lease_json(c: &ConsumerLease) -> Json {
+    Json::obj(vec![
+        ("consumer", Json::num(c.consumer as f64)),
+        ("lease_ms", Json::num(c.lease_ms as f64)),
+        ("held", Json::num(c.held as f64)),
+        ("idle_ms", Json::num(c.idle_ms as f64)),
+        ("alive", Json::Bool(c.idle_ms < c.lease_ms)),
+    ])
+}
 
 /// Text status report over all queues and the given study keys.
 pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)]) -> String {
@@ -12,6 +43,15 @@ pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)
         out.push_str(&format!(
             "  {q}: ready={} unacked={} published={} acked={} requeued={} dead={}\n",
             st.ready, st.unacked, st.published, st.acked, st.requeued, st.dead_lettered
+        ));
+    }
+    let leases = broker.lease_stats();
+    if leases.active > 0 || leases.expired > 0 || !leases.consumers.is_empty() {
+        out.push_str(&format!(
+            "leases: {} active, {} expired, {} leased consumers\n",
+            leases.active,
+            leases.expired,
+            leases.consumers.len()
         ));
     }
     if !studies.is_empty() {
@@ -27,9 +67,73 @@ pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)
             out.push_str(&format!(
                 "  {study}: {done}/{n} done ({pct:.1}%), {failed} failed\n"
             ));
+            if let Some((round, best, injected)) = state.steer_progress(study) {
+                out.push_str(&format!(
+                    "    steering: round {round}, best {best}, {injected} injected\n"
+                ));
+            }
         }
     }
     out
+}
+
+/// Machine-readable status: queue stats (including lease expirations),
+/// broker totals, worker liveness / active leases, and per-study
+/// completion with steering progress where present.
+pub fn status_json(broker: &Broker, state: &StateStore, studies: &[(&str, u64)]) -> Json {
+    let queues: Vec<Json> = broker
+        .queue_names()
+        .into_iter()
+        .map(|q| queue_stats_json(&q, &broker.stats(&q)))
+        .collect();
+    let totals = broker.totals();
+    let leases = broker.lease_stats();
+    let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
+    let studies_json: Vec<Json> = studies
+        .iter()
+        .map(|(study, n)| {
+            let mut pairs = vec![
+                ("study", Json::str(*study)),
+                ("expected", Json::num(*n as f64)),
+                ("done", Json::num(state.done_count(study) as f64)),
+                ("failed", Json::num(state.failed_count(study) as f64)),
+            ];
+            if let Some((round, best, injected)) = state.steer_progress(study) {
+                pairs.push((
+                    "steering",
+                    Json::obj(vec![
+                        ("round", Json::num(round as f64)),
+                        ("best", Json::num(best)),
+                        ("injected", Json::num(injected as f64)),
+                    ]),
+                ));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("queues", Json::arr(queues)),
+        (
+            "totals",
+            Json::obj(vec![
+                ("published", Json::num(totals.published as f64)),
+                ("delivered", Json::num(totals.delivered as f64)),
+                ("acked", Json::num(totals.acked as f64)),
+                ("requeued", Json::num(totals.requeued as f64)),
+                ("dead_lettered", Json::num(totals.dead_lettered as f64)),
+                ("lease_expired", Json::num(totals.lease_expired as f64)),
+            ]),
+        ),
+        (
+            "leases",
+            Json::obj(vec![
+                ("active", Json::num(leases.active as f64)),
+                ("expired", Json::num(leases.expired as f64)),
+                ("consumers", Json::arr(consumers)),
+            ]),
+        ),
+        ("studies", Json::arr(studies_json)),
+    ])
 }
 
 #[cfg(test)]
@@ -53,5 +157,39 @@ mod tests {
         let r = status_report(&broker, &state, &[("s1", 4)]);
         assert!(r.contains("m.sim: ready=1"));
         assert!(r.contains("s1: 1/4 done (25.0%), 1 failed"));
+    }
+
+    #[test]
+    fn json_report_includes_leases_and_steering() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        broker
+            .publish(TaskEnvelope::new(
+                "m.sim",
+                Payload::Control(ControlMsg::Ping { token: "x".into() }),
+            ))
+            .unwrap();
+        let c = broker.register_consumer();
+        broker.set_consumer_lease(c, Some(std::time::Duration::from_millis(30_000)));
+        let _d = broker.try_fetch(c, &["m.sim"], 0).unwrap();
+        state.mark_sample_done("s1", 0);
+        state.record_steer_progress("s1", 3, 0.25, 96);
+        let j = status_json(&broker, &state, &[("s1", 4)]);
+        let queues = j.get("queues").as_arr().unwrap();
+        assert_eq!(queues.len(), 1);
+        assert_eq!(queues[0].get("unacked").as_u64(), Some(1));
+        assert_eq!(j.get("leases").get("active").as_u64(), Some(1));
+        let consumers = j.get("leases").get("consumers").as_arr().unwrap();
+        assert_eq!(consumers.len(), 1);
+        assert_eq!(consumers[0].get("alive").as_bool(), Some(true));
+        let studies = j.get("studies").as_arr().unwrap();
+        assert_eq!(studies[0].get("done").as_u64(), Some(1));
+        let steering = studies[0].get("steering");
+        assert_eq!(steering.get("round").as_u64(), Some(3));
+        assert_eq!(steering.get("injected").as_u64(), Some(96));
+        // The steering line also reaches the text report.
+        let text = status_report(&broker, &state, &[("s1", 4)]);
+        assert!(text.contains("steering: round 3"));
+        assert!(text.contains("leases: 1 active"));
     }
 }

@@ -1,0 +1,503 @@
+//! Round-based ML-in-the-loop steering — the paper's signature dynamic
+//! workflow (§3.2's ICF optimization loop, §3.3's model calibration).
+//!
+//! A steered study does not expand its sample set once. Instead the
+//! coordinator runs the steered step in **rounds**: each round it scores
+//! a fresh candidate pool with a model trained on every completed
+//! `(params, objective)` pair, injects the most promising samples into
+//! the **live** step queue (workers keep consuming throughout), waits for
+//! the wave to land, trains on the new results, and repeats until the
+//! objective converges or the round budget runs out. Downstream DAG steps
+//! release after steering settles, exactly as in a static study.
+//!
+//! The model behind [`SampleProposer`] is pluggable: with PJRT artifacts
+//! present, [`crate::runtime::models::SurrogateProposer`] trains the real
+//! Pallas MLP surrogate; without them, [`IdwProposer`] — a pure-Rust
+//! inverse-distance-weighted nearest-neighbor regressor — keeps the loop
+//! (and CI) running with no runtime at all.
+
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+use crate::backend::state::StateStore;
+use crate::broker::core::Broker;
+use crate::dag::expand::{expand_study, wave_tasks};
+use crate::runtime::models::sample_params;
+use crate::spec::study::{Goal, IterateSpec, SpecError, StudySpec};
+use crate::task::StepTemplate;
+use crate::util::rng::Rng;
+
+use super::orchestrate::{DagRunner, StudyReport};
+use super::run::{step_work, uses_samples, RunOptions};
+
+/// Decorrelates the steering engine's exploration stream from the study
+/// sample streams and worker failure streams.
+const STEER_SALT: u64 = 0xA11C_E5ED_0B5E_55ED;
+
+/// A model that proposes the next steering wave: it observes completed
+/// `(params, objective)` pairs and predicts the objective of candidates.
+pub trait SampleProposer {
+    /// Feed newly completed pairs (`xs[i]` produced `ys[i]`). Called once
+    /// per round with only the samples that finished since the last call.
+    fn observe(&mut self, xs: &[Vec<f32>], ys: &[f64]);
+
+    /// Predicted objective value for each candidate parameter vector.
+    /// With no observations yet, any constant is acceptable (the engine
+    /// bootstraps round 0 uniformly at random regardless).
+    fn score(&mut self, xs: &[Vec<f32>]) -> Vec<f64>;
+
+    /// Short label for reports (`"surrogate"`, `"idw-nearest"`, ...).
+    fn name(&self) -> &'static str;
+}
+
+/// The no-runtime fallback proposer: inverse-distance-weighted k-nearest
+/// regression over everything observed so far. Cheap, deterministic, and
+/// good enough to steer smooth objectives — tests and CI converge on a
+/// quadratic with it, no PJRT artifacts required.
+pub struct IdwProposer {
+    /// Neighbors consulted per prediction.
+    k: usize,
+    /// Every observed (params, objective) pair.
+    pts: Vec<(Vec<f32>, f64)>,
+}
+
+impl IdwProposer {
+    /// A fresh proposer with the default neighborhood size.
+    pub fn new() -> Self {
+        Self { k: 8, pts: Vec::new() }
+    }
+
+    /// Observations absorbed so far.
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    /// True before the first observation.
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+}
+
+impl Default for IdwProposer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SampleProposer for IdwProposer {
+    fn observe(&mut self, xs: &[Vec<f32>], ys: &[f64]) {
+        for (x, y) in xs.iter().zip(ys) {
+            self.pts.push((x.clone(), *y));
+        }
+    }
+
+    fn score(&mut self, xs: &[Vec<f32>]) -> Vec<f64> {
+        xs.iter()
+            .map(|x| {
+                if self.pts.is_empty() {
+                    return 0.0;
+                }
+                let mut near: Vec<(f64, f64)> = self
+                    .pts
+                    .iter()
+                    .map(|(p, y)| {
+                        let d2: f64 = p
+                            .iter()
+                            .zip(x)
+                            .map(|(a, b)| {
+                                let d = (*a - *b) as f64;
+                                d * d
+                            })
+                            .sum();
+                        (d2, *y)
+                    })
+                    .collect();
+                near.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+                near.truncate(self.k);
+                let (mut wsum, mut ysum) = (0.0f64, 0.0f64);
+                for (d2, y) in near {
+                    let w = 1.0 / (d2 + 1e-9);
+                    wsum += w;
+                    ysum += w * y;
+                }
+                ysum / wsum
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "idw-nearest"
+    }
+}
+
+/// Why a steering run stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The round budget (`iterate.max_rounds`) was spent.
+    MaxRounds,
+    /// The best objective crossed `iterate.stop_threshold`.
+    Threshold,
+    /// `iterate.patience` consecutive rounds brought no improvement.
+    Stagnation,
+    /// The wall-clock deadline expired mid-study.
+    TimedOut,
+}
+
+/// Per-round convergence record (the fig-style report's rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    /// Round index (0 = bootstrap wave).
+    pub round: u64,
+    /// Samples injected into the live queue this round.
+    pub injected: u64,
+    /// This round's completions with a recorded objective.
+    pub observed: u64,
+    /// Best objective among this round's completions (NaN if none).
+    pub round_best: f64,
+    /// Mean objective of this round's completions (NaN if none).
+    pub round_mean: f64,
+    /// Cumulative best objective after this round (NaN until one exists).
+    pub best: f64,
+}
+
+/// Outcome of a steered study.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SteerReport {
+    /// The embedded whole-study tallies (steered step + downstream DAG).
+    pub study: StudyReport,
+    /// One record per completed steering round.
+    pub rounds: Vec<RoundRecord>,
+    /// Best objective found, with the sample id that produced it.
+    pub best: Option<(f64, u64)>,
+    /// Why steering stopped.
+    pub stop: StopReason,
+    /// Label of the proposer that drove the rounds.
+    pub proposer: String,
+}
+
+/// Resolve which step a study's `iterate:` block steers: the named step,
+/// or the first sample-using step.
+pub fn steered_step(spec: &StudySpec, it: &IterateSpec) -> Result<String, SpecError> {
+    if let Some(name) = &it.step {
+        return Ok(name.clone());
+    }
+    spec.steps
+        .iter()
+        .find(|s| uses_samples(spec, &s.cmd))
+        .map(|s| s.name.clone())
+        .ok_or_else(|| SpecError("iterate: no sample-using step to steer".into()))
+}
+
+/// Pick `n` distinct ids uniformly from `pool`.
+fn pick_random(rng: &mut Rng, pool: &[u64], n: usize) -> Vec<u64> {
+    let mut ids: Vec<u64> = pool.to_vec();
+    rng.shuffle(&mut ids);
+    ids.truncate(n.min(pool.len()));
+    ids.sort_unstable();
+    ids
+}
+
+/// Rank the candidate pool by predicted objective and pick the wave:
+/// the best-scoring `(1 - explore)` fraction plus a uniformly random
+/// remainder drawn from the unpicked candidates.
+fn pick_wave(
+    rng: &mut Rng,
+    it: &IterateSpec,
+    pool: &[u64],
+    scores: &[f64],
+) -> Vec<u64> {
+    let want = it.samples_per_round as usize;
+    let n_explore = ((it.explore * want as f64).round() as usize).min(want);
+    let n_exploit = want - n_explore;
+    let mut order: Vec<usize> = (0..pool.len()).collect();
+    order.sort_unstable_by(|&a, &b| match it.goal {
+        Goal::Minimize => scores[a].total_cmp(&scores[b]),
+        Goal::Maximize => scores[b].total_cmp(&scores[a]),
+    });
+    let mut chosen: Vec<u64> = order[..n_exploit.min(order.len())]
+        .iter()
+        .map(|&i| pool[i])
+        .collect();
+    let mut rest: Vec<u64> = order[n_exploit.min(order.len())..]
+        .iter()
+        .map(|&i| pool[i])
+        .collect();
+    rng.shuffle(&mut rest);
+    chosen.extend(rest.into_iter().take(n_explore));
+    chosen.sort_unstable();
+    chosen.truncate(want);
+    chosen
+}
+
+/// Run a steered study end-to-end: surrogate-driven rounds on the steered
+/// step (samples injected into the live queues while workers consume),
+/// then normal DAG release of every downstream step. Workers must consume
+/// the study's queues concurrently; their `objective_index` must match
+/// the spec's so completed samples report objectives back through the
+/// backend. `timeout` bounds the whole run.
+pub fn steer(
+    broker: &Broker,
+    state: &StateStore,
+    spec: &StudySpec,
+    study_id: &str,
+    opts: &RunOptions,
+    timeout: Duration,
+    proposer: &mut dyn SampleProposer,
+) -> Result<SteerReport, SpecError> {
+    let it = spec
+        .iterate
+        .clone()
+        .ok_or_else(|| SpecError("study has no iterate: block".into()))?;
+    let expanded = expand_study(spec)?;
+    let step_name = steered_step(spec, &it)?;
+    let insts = expanded.instances_of(&step_name);
+    if insts.len() != 1 {
+        return Err(SpecError(format!(
+            "steered step {step_name} expands to {} instances; steering \
+             requires exactly one (drop its parameters or name another step)",
+            insts.len()
+        )));
+    }
+    let inst = insts[0];
+    if !expanded.dag.dependencies(&inst.id).is_empty() {
+        return Err(SpecError(format!(
+            "steered step {step_name} has dependencies; steering requires a root step"
+        )));
+    }
+
+    let seed = spec.samples.as_ref().map(|s| s.seed).unwrap_or(0);
+    let study_key = format!("{study_id}/{}", inst.id);
+    let template = StepTemplate {
+        study_id: study_key.clone(),
+        step_name: step_name.clone(),
+        work: step_work(&inst.cmd, &inst.shell),
+        samples_per_task: opts.samples_per_task.clamp(1, it.samples_per_round),
+        seed,
+    };
+    let queue = opts.queue_for(&step_name);
+    let deadline = Instant::now() + timeout;
+    let mut report = StudyReport {
+        study_id: study_id.to_string(),
+        instances_run: 1, // the steered instance, released round by round
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed ^ STEER_SALT);
+    let dims = it.dims as usize;
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut best: Option<(f64, u64)> = None;
+    let mut rounds: Vec<RoundRecord> = Vec::new();
+    let mut expected_cum = 0u64;
+    let mut stale_rounds = 0u64;
+    let mut stop = StopReason::MaxRounds;
+    let mut timed_out = false;
+
+    'rounds: for round in 0..it.max_rounds {
+        // Each round scores a fresh, disjoint candidate id range, so a
+        // candidate's deterministic params are never re-proposed.
+        let pool_lo = round * it.pool_per_round;
+        let pool: Vec<u64> = (pool_lo..pool_lo + it.pool_per_round).collect();
+        let wave = if seen.is_empty() {
+            pick_random(&mut rng, &pool, it.samples_per_round as usize)
+        } else {
+            let xs: Vec<Vec<f32>> = pool
+                .iter()
+                .map(|id| sample_params(seed, *id, dims))
+                .collect();
+            let scores = proposer.score(&xs);
+            pick_wave(&mut rng, &it, &pool, &scores)
+        };
+
+        // Inject the wave into the LIVE queue (workers are consuming).
+        let tasks = wave_tasks(&template, &queue, &wave);
+        report.samples_expected += wave.len() as u64;
+        expected_cum += wave.len() as u64;
+        broker
+            .publish_batch(tasks)
+            .map_err(|e| SpecError(format!("inject round {round}: {e}")))?;
+
+        // Wait for the wave to land (objectives recorded by workers).
+        loop {
+            broker.reap_expired();
+            let settled =
+                (state.done_count(&study_key) + state.failed_count(&study_key)) as u64;
+            if settled >= expected_cum {
+                break;
+            }
+            if Instant::now() >= deadline {
+                timed_out = true;
+                stop = StopReason::TimedOut;
+                break 'rounds;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Train on what this round produced.
+        let fresh: Vec<(u64, f64)> = state
+            .objectives(&study_key)
+            .into_iter()
+            .filter(|(id, _)| !seen.contains(id))
+            .collect();
+        let xs: Vec<Vec<f32>> = fresh
+            .iter()
+            .map(|(id, _)| sample_params(seed, *id, dims))
+            .collect();
+        let ys: Vec<f64> = fresh.iter().map(|(_, y)| *y).collect();
+        proposer.observe(&xs, &ys);
+
+        let prev_best = best;
+        let mut round_best = f64::NAN;
+        let mut round_sum = 0.0f64;
+        for (id, y) in &fresh {
+            seen.insert(*id);
+            round_sum += y;
+            if round_best.is_nan() || it.goal.better(*y, round_best) {
+                round_best = *y;
+            }
+            if best.is_none() || it.goal.better(*y, best.unwrap().0) {
+                best = Some((*y, *id));
+            }
+        }
+        let round_mean = if fresh.is_empty() {
+            f64::NAN
+        } else {
+            round_sum / fresh.len() as f64
+        };
+        rounds.push(RoundRecord {
+            round,
+            injected: wave.len() as u64,
+            observed: fresh.len() as u64,
+            round_best,
+            round_mean,
+            best: best.map_or(f64::NAN, |(b, _)| b),
+        });
+        state.record_steer_progress(
+            &study_key,
+            round + 1,
+            best.map_or(f64::NAN, |(b, _)| b),
+            expected_cum,
+        );
+
+        // Stop criteria: threshold crossed, or patience exhausted.
+        if let (Some((b, _)), Some(t)) = (best, it.stop_threshold) {
+            let crossed = match it.goal {
+                Goal::Minimize => b <= t,
+                Goal::Maximize => b >= t,
+            };
+            if crossed {
+                stop = StopReason::Threshold;
+                break;
+            }
+        }
+        let improved = match (prev_best, best) {
+            (Some((p, _)), Some((b, _))) => it.goal.better(b, p),
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        stale_rounds = if improved { 0 } else { stale_rounds + 1 };
+        if it.stop_patience > 0 && stale_rounds >= it.stop_patience {
+            stop = StopReason::Stagnation;
+            break;
+        }
+    }
+
+    // Steered-step tallies come from the backend once, covering every
+    // round (including a partially landed one on timeout).
+    report.samples_done += state.done_count(&study_key) as u64;
+    report.samples_failed += state.failed_count(&study_key) as u64;
+
+    // Steering settled: release the rest of the DAG normally.
+    let mut runner = DagRunner::new(&expanded);
+    runner.mark_done(&inst.id);
+    while !timed_out {
+        runner.release_ready(broker, spec, study_id, opts, &mut report)?;
+        runner.poll_completion(state, &mut report);
+        if runner.finished() {
+            break;
+        }
+        if Instant::now() >= deadline {
+            runner.account_partial(state, &mut report);
+            timed_out = true;
+            break;
+        }
+        broker.reap_expired();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    report.timed_out = timed_out;
+    Ok(SteerReport {
+        study: report,
+        rounds,
+        best,
+        stop,
+        proposer: proposer.name().to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idw_predicts_nearby_values() {
+        let mut p = IdwProposer::new();
+        assert!(p.is_empty());
+        assert_eq!(p.score(&[vec![0.5, 0.5]]), vec![0.0], "no data = flat");
+        // Two clusters: low objective near the origin, high near (1,1).
+        p.observe(
+            &[vec![0.0, 0.0], vec![0.1, 0.0], vec![1.0, 1.0], vec![0.9, 1.0]],
+            &[0.0, 0.1, 10.0, 9.0],
+        );
+        assert_eq!(p.len(), 4);
+        let s = p.score(&[vec![0.05, 0.0], vec![0.95, 1.0]]);
+        assert!(s[0] < 1.0, "near the low cluster: {s:?}");
+        assert!(s[1] > 8.0, "near the high cluster: {s:?}");
+        // An exact hit is dominated by its own weight.
+        let exact = p.score(&[vec![1.0, 1.0]]);
+        assert!((exact[0] - 10.0).abs() < 0.1, "{exact:?}");
+    }
+
+    #[test]
+    fn pick_wave_exploits_and_explores() {
+        let it = IterateSpec {
+            max_rounds: 4,
+            samples_per_round: 4,
+            pool_per_round: 10,
+            objective_index: 0,
+            goal: Goal::Minimize,
+            stop_threshold: None,
+            stop_patience: 0,
+            explore: 0.5,
+            step: None,
+            dims: 2,
+        };
+        let pool: Vec<u64> = (0..10).collect();
+        // Scores equal the id: minimize should exploit the lowest ids.
+        let scores: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut rng = Rng::new(7);
+        let wave = pick_wave(&mut rng, &it, &pool, &scores);
+        assert_eq!(wave.len(), 4);
+        // 2 exploit picks are the global best candidates...
+        assert!(wave.contains(&0) && wave.contains(&1), "{wave:?}");
+        // ...and every pick is unique and from the pool.
+        let uniq: BTreeSet<u64> = wave.iter().copied().collect();
+        assert_eq!(uniq.len(), 4);
+        assert!(wave.iter().all(|id| *id < 10));
+        // Maximize flips the exploited end.
+        let mut it2 = it;
+        it2.goal = Goal::Maximize;
+        it2.explore = 0.0;
+        let wave2 = pick_wave(&mut rng, &it2, &pool, &scores);
+        assert_eq!(wave2, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn pick_random_is_distinct_and_bounded() {
+        let mut rng = Rng::new(3);
+        let pool: Vec<u64> = (100..140).collect();
+        let picked = pick_random(&mut rng, &pool, 16);
+        assert_eq!(picked.len(), 16);
+        let uniq: BTreeSet<u64> = picked.iter().copied().collect();
+        assert_eq!(uniq.len(), 16);
+        assert!(picked.iter().all(|id| (100..140).contains(id)));
+        assert!(pick_random(&mut rng, &pool, 100).len() == 40, "capped at pool");
+    }
+}

@@ -5,12 +5,20 @@
 //! from same-combination dependencies). Parameters it does not reference do
 //! not multiply it — a `collect` step downstream of `sim_*` runs once.
 //! Sample counts are carried as metadata, not expanded (see module docs).
+//!
+//! Besides the one-shot [`expand_study`], this module supports
+//! **incremental** expansion for steered studies: [`ranges_of`] groups an
+//! arbitrary (sorted) sample-id set into contiguous task ranges and
+//! [`wave_tasks`] materializes them as content-addressed step envelopes —
+//! the unit a steering round (or a resubmission crawl) injects into live
+//! queues mid-study.
 
 use std::collections::BTreeMap;
 
 use super::graph::{Dag, DagError};
 use crate::spec::study::{SpecError, StudySpec};
 use crate::spec::tokens;
+use crate::task::{Payload, StepTask, StepTemplate, TaskEnvelope};
 
 /// One parameterized instance of a step.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,6 +41,62 @@ pub struct StepInstance {
 pub struct ExpandedStudy {
     pub instances: Vec<StepInstance>,
     pub dag: Dag,
+}
+
+impl ExpandedStudy {
+    /// All instances of one step, in expansion order.
+    pub fn instances_of(&self, step_name: &str) -> Vec<&StepInstance> {
+        self.instances
+            .iter()
+            .filter(|i| i.step_name == step_name)
+            .collect()
+    }
+
+}
+
+/// Group sorted sample ids into maximal contiguous `[lo, hi)` ranges no
+/// wider than `max_per_task` — the incremental counterpart of the
+/// hierarchy's balanced splitting, used when the sample set is chosen
+/// dynamically (steering waves, resubmission crawls) rather than dense.
+pub fn ranges_of(samples: &[u64], max_per_task: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut iter = samples.iter().copied();
+    let Some(first) = iter.next() else {
+        return out;
+    };
+    let (mut lo, mut hi) = (first, first + 1);
+    for s in iter {
+        if s == hi && hi - lo < max_per_task {
+            hi += 1;
+        } else {
+            out.push((lo, hi));
+            lo = s;
+            hi = s + 1;
+        }
+    }
+    out.push((lo, hi));
+    out
+}
+
+/// Materialize a wave of step tasks covering exactly `samples` (sorted
+/// ids), grouped into ranges of at most `template.samples_per_task`.
+/// Content-addressed ids keep re-injection of the same range idempotent
+/// at the bookkeeping level.
+pub fn wave_tasks(template: &StepTemplate, queue: &str, samples: &[u64]) -> Vec<TaskEnvelope> {
+    ranges_of(samples, template.samples_per_task.max(1))
+        .into_iter()
+        .map(|(lo, hi)| {
+            TaskEnvelope::new(
+                queue,
+                Payload::Step(StepTask {
+                    template: template.clone(),
+                    lo,
+                    hi,
+                }),
+            )
+            .with_content_id()
+        })
+        .collect()
 }
 
 /// Expand all steps of `spec` across the parameters each uses.

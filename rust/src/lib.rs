@@ -18,10 +18,12 @@
 //! * [`broker`] — the RabbitMQ analog: a **sharded** priority-queue core
 //!   (per-queue shard locks, lock-free stats, batch
 //!   publish/fetch/ack), a TCP server with batch frames, a
-//!   version-negotiating client, and an opt-in **durability** layer
+//!   version-negotiating client, an opt-in **durability** layer
 //!   (per-shard write-ahead log + compacting snapshots; queue state
 //!   survives broker restarts — see [`broker::wal`],
-//!   [`broker::snapshot`], and DESIGN.md "Durability & Recovery")
+//!   [`broker::snapshot`], and DESIGN.md "Durability & Recovery"), and
+//!   **delivery leases** (wire v3): visibility timeouts with worker
+//!   heartbeats so a dead worker's tasks redeliver instead of stranding
 //! * [`backend`] — the Redis analog (task state + results), sharded KV
 //!   locks under the same hash scheme as the broker
 //! * [`worker`] — consumers that execute tasks; prefetch windows are
@@ -30,15 +32,19 @@
 //! * [`flux`] — on-allocation just-in-time launcher (Flux analog)
 //! * [`data`] — Conduit/HDF5-analog hierarchical data + bundling
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
-//! * [`coordinator`] — `merlin run` / `run-workers` / resubmission;
-//!   release waves and resubmission crawls publish as single batches
+//! * [`coordinator`] — `merlin run` / `steer` / `run-workers` /
+//!   resubmission; release waves, steering rounds, and resubmission
+//!   crawls publish as single batches. [`coordinator::steer`] is the
+//!   ML-in-the-loop engine: surrogate-driven rounds inject new samples
+//!   into a **running** study (the paper's headline capability)
 //! * [`metrics`] — instrumentation for the paper's performance figures
 //! * [`baseline`] — comparator implementations (flat enqueue, fs
 //!   polling, and the seed's single-mutex broker core for fig3)
 
 // Public items must carry doc comments. Modules not yet through the
-// incremental rustdoc pass (PR 2 covered broker/, task/, backend/) are
-// explicitly allowed below; drop the `allow` when documenting one.
+// incremental rustdoc pass (PR 2 covered broker/, task/, backend/; this
+// PR covers coordinator/, worker/) are explicitly allowed below; drop
+// the `allow` when documenting one.
 #![warn(missing_docs)]
 
 pub mod backend;
@@ -47,7 +53,6 @@ pub mod baseline;
 #[allow(missing_docs)]
 pub mod batch;
 pub mod broker;
-#[allow(missing_docs)]
 pub mod coordinator;
 #[allow(missing_docs)]
 pub mod dag;
@@ -68,5 +73,4 @@ pub mod task;
 pub mod testing;
 #[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod worker;

@@ -15,7 +15,7 @@ use merlin::backend::store::Store;
 use merlin::broker::client::BrokerClient;
 use merlin::broker::core::Broker;
 use merlin::broker::net::BrokerServer;
-use merlin::coordinator::{orchestrate, status_report, RunOptions};
+use merlin::coordinator::{orchestrate, status_report, RunOptions, SampleProposer};
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::spec::study::StudySpec;
 use merlin::task::{Payload, WorkSpec};
@@ -26,10 +26,12 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("steer") => cmd_steer(&args[1..]),
         Some("run-workers") => cmd_run_workers(&args[1..]),
         Some("serve-broker") => cmd_serve_broker(&args[1..]),
         Some("serve-backend") => cmd_serve_backend(&args[1..]),
         Some("hierarchy") => cmd_hierarchy(&args[1..]),
+        Some("status") => cmd_status(&args[1..]),
         Some("purge") => cmd_purge(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print_help();
@@ -54,14 +56,34 @@ USAGE:
       Run a study end-to-end in one process (broker + workers + DAG
       orchestration). `--artifacts` enables `builtin:` PJRT simulators.
 
+  merlin steer <spec.yaml> [--workers N] [--samples-per-task N] [--branch N]
+               [--timeout SECS] [--artifacts DIR] [--data-root DIR]
+               [--lease-ms N]
+      Run a study with an `iterate:` block as an ML-in-the-loop steering
+      loop: each round a surrogate trained on completed samples proposes
+      the next wave, injected into the LIVE queues. With --artifacts the
+      real Pallas surrogate trains through PJRT; without, a pure-Rust
+      nearest-neighbor fallback steers (no runtime needed). Workers carry
+      delivery leases (default 30000 ms) so dead workers' tasks redeliver
+      mid-round.
+
   merlin run-workers --broker HOST:PORT --queues q1,q2 [-c N] [--idle-ms N]
+                     [--lease-ms N]
       Connect N workers to a remote broker (the multi-allocation shape).
+      With --lease-ms each worker declares a delivery lease and
+      heartbeats its prefetch window.
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
                       [--fsync always|never|interval:MS] [--snapshot-every N]
+                      [--lease-ms N]
       Run the standalone RabbitMQ-analog server. With --wal-dir the
       broker is durable: queue state is write-ahead logged + snapshotted
-      under DIR and recovered on restart (see docs/OPERATIONS.md).
+      under DIR and recovered on restart (see docs/OPERATIONS.md). With
+      --lease-ms every consumer gets a default visibility timeout.
+
+  merlin status --broker HOST:PORT
+      Print the broker's queue depths, totals, durability counters, and
+      lease/liveness report as JSON.
 
   merlin serve-backend [--addr 127.0.0.1:7778]
       Run the standalone Redis-analog server.
@@ -181,6 +203,203 @@ fn cmd_run(args: &[String]) -> i32 {
     i32::from(report.timed_out || report.samples_done < report.samples_expected)
 }
 
+/// `merlin steer`: run an `iterate:` study as surrogate-driven rounds —
+/// the ML-in-the-loop shape of the paper's §3.2 optimization study.
+fn cmd_steer(args: &[String]) -> i32 {
+    let Some(spec_path) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("usage: merlin steer <spec.yaml> [flags]");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(spec_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {spec_path}: {e}");
+            return 1;
+        }
+    };
+    let spec = match StudySpec::parse(&text) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let Some(it) = spec.iterate.clone() else {
+        eprintln!("{spec_path}: no merlin.iterate block — use `merlin run` for static studies");
+        return 2;
+    };
+    let workers = flag_u64(args, "--workers", 4) as usize;
+    let opts = RunOptions {
+        max_branch: flag_u64(args, "--branch", 100),
+        samples_per_task: flag_u64(args, "--samples-per-task", 1),
+        queue_prefix: spec.name.clone(),
+    };
+    let timeout = Duration::from_secs(flag_u64(args, "--timeout", 600));
+    let lease_ms = flag_u64(args, "--lease-ms", 30_000);
+    let seed = spec.samples.as_ref().map(|s| s.seed).unwrap_or(0);
+    let broker = Broker::default();
+    let state = StateStore::new(Store::new());
+    let queues: Vec<String> = spec
+        .steps
+        .iter()
+        .map(|s| opts.queue_for(&s.name))
+        .collect();
+
+    // With PJRT artifacts: the real Pallas surrogate and simulators.
+    // Without: the analytic quadratic objective + the IDW fallback, so
+    // steering runs (and CI tests it) with no runtime at all.
+    let (sim, mut proposer): (Arc<dyn SimRunner>, Box<dyn SampleProposer>) =
+        match flag(args, "--artifacts") {
+            Some(dir) => match merlin::runtime::RuntimePool::new(&PathBuf::from(dir), 1) {
+                Ok(rt) => (
+                    Arc::new(merlin::runtime::ModelRunner::new(rt.clone())),
+                    Box::new(merlin::runtime::SurrogateProposer::new(
+                        rt,
+                        seed,
+                        it.objective_index,
+                    )),
+                ),
+                Err(e) => {
+                    eprintln!("runtime: {e}");
+                    return 1;
+                }
+            },
+            None => (
+                Arc::new(merlin::worker::QuadraticSimRunner {
+                    center: 0.3,
+                    dims: it.dims as usize,
+                }),
+                Box::new(merlin::coordinator::IdwProposer::new()),
+            ),
+        };
+    let data_root = flag(args, "--data-root").map(PathBuf::from);
+
+    println!(
+        "steered study {} : {} rounds x {} samples (pool {}), objective scalars[{}], proposer {}",
+        spec.name,
+        it.max_rounds,
+        it.samples_per_round,
+        it.pool_per_round,
+        it.objective_index,
+        proposer.name()
+    );
+    let clock: Arc<dyn merlin::util::clock::Clock> = Arc::new(RealClock::new());
+    let b2 = broker.clone();
+    let st2 = state.clone();
+    let q2 = queues.clone();
+    let dr = data_root.clone();
+    let obj_index = it.objective_index;
+    let pool_thread = std::thread::spawn(move || {
+        run_pool(&b2, Some(&st2), None, sim, workers, |i| {
+            let mut cfg = WorkerConfig::simple("unused", clock.clone());
+            cfg.queues = q2.clone();
+            // Between-round gaps include surrogate training/scoring (and,
+            // with PJRT, real compute): generous idle so the pool outlives
+            // them. Explicit StopWorker messages end the run promptly.
+            cfg.idle_exit_ms = 60_000;
+            cfg.seed = i as u64;
+            cfg.lease_ms = lease_ms;
+            cfg.objective_index = Some(obj_index);
+            cfg.workspace_root = Some(std::env::temp_dir().join("merlin-workspaces"));
+            cfg.data_root = dr.clone();
+            cfg
+        })
+    });
+    let study_id = merlin::util::ids::fresh("study");
+    let report = match merlin::coordinator::steer(
+        &broker,
+        &state,
+        &spec,
+        &study_id,
+        &opts,
+        timeout,
+        proposer.as_mut(),
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    // The study is settled: stop the pool explicitly (each worker acks
+    // one StopWorker; an unconsumed remainder is requeued and drained by
+    // the next exiting worker) instead of waiting out the idle timeout.
+    let stops: Vec<merlin::task::TaskEnvelope> = (0..workers)
+        .map(|_| {
+            merlin::task::TaskEnvelope::new(
+                queues[0].clone(),
+                Payload::Control(merlin::task::ControlMsg::StopWorker),
+            )
+        })
+        .collect();
+    broker.publish_batch(stops).ok();
+    let pool = pool_thread.join().expect("worker pool");
+    print!("{}", merlin::metrics::render_report(&report));
+    println!(
+        "done: {}/{} samples ok, {} failed, {} rounds{}",
+        report.study.samples_done,
+        report.study.samples_expected,
+        report.study.samples_failed,
+        report.rounds.len(),
+        if report.study.timed_out {
+            " (TIMED OUT)"
+        } else {
+            ""
+        }
+    );
+    println!(
+        "workers: {} steps, {} samples ok",
+        pool.steps, pool.samples_ok
+    );
+    print!("{}", status_report(&broker, &state, &[]));
+    i32::from(report.study.timed_out)
+}
+
+/// `merlin status --broker`: the broker-side slice of the status report
+/// (queues, totals, durability, leases) as JSON.
+fn cmd_status(args: &[String]) -> i32 {
+    let Some(addr) = flag(args, "--broker") else {
+        eprintln!("--broker HOST:PORT required");
+        return 2;
+    };
+    let Ok(mut client) = BrokerClient::connect(&addr) else {
+        eprintln!("cannot connect to {addr}");
+        return 1;
+    };
+    use merlin::coordinator::{consumer_lease_json, queue_stats_json};
+    use merlin::util::json::Json;
+    let queues = client.queues().unwrap_or_default();
+    let qjson: Vec<Json> = queues
+        .iter()
+        .filter_map(|q| Some(queue_stats_json(q, &client.stats(q).ok()?)))
+        .collect();
+    let mut pairs = vec![("queues", Json::arr(qjson))];
+    if let Ok(d) = client.durability() {
+        pairs.push((
+            "durability",
+            Json::obj(vec![
+                ("durable", Json::Bool(d.durable)),
+                ("wal_records", Json::num(d.wal_records as f64)),
+                ("snapshots", Json::num(d.snapshots as f64)),
+                ("recovered", Json::num(d.recovered as f64)),
+            ]),
+        ));
+    }
+    if let Ok(l) = client.lease_stats() {
+        let consumers: Vec<Json> = l.consumers.iter().map(consumer_lease_json).collect();
+        pairs.push((
+            "leases",
+            Json::obj(vec![
+                ("active", Json::num(l.active as f64)),
+                ("expired", Json::num(l.expired as f64)),
+                ("consumers", Json::arr(consumers)),
+            ]),
+        ));
+    }
+    println!("{}", merlin::util::json::to_string(&Json::obj(pairs)));
+    0
+}
+
 fn cmd_run_workers(args: &[String]) -> i32 {
     let Some(addr) = flag(args, "--broker") else {
         eprintln!("--broker HOST:PORT required");
@@ -191,13 +410,14 @@ fn cmd_run_workers(args: &[String]) -> i32 {
         .unwrap_or_else(|| vec!["merlin".into()]);
     let n = flag_u64(args, "-c", 4) as usize;
     let idle_ms = flag_u64(args, "--idle-ms", 5_000);
+    let lease_ms = flag_u64(args, "--lease-ms", 0);
     println!("connecting {n} workers to {addr} on queues {queues:?}");
     let mut handles = Vec::new();
     for w in 0..n {
         let addr = addr.clone();
         let queues = queues.clone();
         handles.push(std::thread::spawn(move || {
-            tcp_worker_loop(&addr, &queues, idle_ms, w)
+            tcp_worker_loop(&addr, &queues, idle_ms, lease_ms, w)
         }));
     }
     let mut total = 0u64;
@@ -215,7 +435,18 @@ fn cmd_run_workers(args: &[String]) -> i32 {
 /// Batched: each round trip pops a whole prefetch window (`PopN`) and
 /// completed deliveries are acknowledged with one `AckBatch` frame per
 /// window instead of one round trip per task.
-fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize) -> u64 {
+///
+/// With `lease_ms > 0` the worker declares a delivery lease at connect
+/// and heartbeats its held window once per loop iteration — a worker
+/// that dies (or hangs) mid-window has its tasks redelivered at the
+/// visibility deadline instead of holding them until disconnect.
+fn tcp_worker_loop(
+    addr: &str,
+    queues: &[String],
+    idle_ms: u64,
+    lease_ms: u64,
+    worker_id: usize,
+) -> u64 {
     // Matches the prefetch this loop always ran with: the window is the
     // hoard bound, and raising it would starve sibling workers of
     // long-running tasks.
@@ -224,10 +455,18 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
         eprintln!("worker {worker_id}: cannot connect to {addr}");
         return 0;
     };
+    if lease_ms > 0 {
+        if let Err(e) = client.set_lease(lease_ms) {
+            eprintln!("worker {worker_id}: set_lease: {e}");
+        }
+    }
     let qrefs: Vec<&str> = queues.iter().map(String::as_str).collect();
     let mut done = 0u64;
     let mut idle = 0u64;
     loop {
+        if lease_ms > 0 {
+            client.heartbeat().ok();
+        }
         let batch = match client.fetch_n(&qrefs, WINDOW, 200, WINDOW) {
             Ok(b) => b,
             Err(_) => return done,
@@ -244,6 +483,11 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
         let mut stop = false;
         let mut batch = batch.into_iter();
         for d in batch.by_ref() {
+            // Heartbeat between tasks, not just between windows: one
+            // long task must not let the rest of the window expire.
+            if lease_ms > 0 {
+                client.heartbeat().ok();
+            }
             match &d.task.payload {
                 Payload::Expansion(e) => {
                     let mut children = Vec::new();
@@ -307,6 +551,10 @@ fn tcp_worker_loop(addr: &str, queues: &[String], idle_ms: u64, worker_id: usize
 
 fn cmd_serve_broker(args: &[String]) -> i32 {
     let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7777".into());
+    let cfg = merlin::broker::BrokerConfig {
+        default_lease_ms: flag_u64(args, "--lease-ms", 0),
+        ..Default::default()
+    };
     let broker = match flag(args, "--wal-dir") {
         Some(dir) => {
             let mut dur = merlin::broker::DurabilityConfig::new(&dir);
@@ -320,7 +568,7 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
                 }
             }
             dur.snapshot_every = flag_u64(args, "--snapshot-every", dur.snapshot_every);
-            match Broker::open_durable(Default::default(), dur.clone()) {
+            match Broker::open_durable(cfg, dur.clone()) {
                 Ok(b) => {
                     let st = b.durability_stats();
                     println!(
@@ -335,7 +583,7 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
                 }
             }
         }
-        None => Broker::default(),
+        None => Broker::new(cfg),
     };
     match BrokerServer::serve(broker, &addr) {
         Ok(server) => {

@@ -1,0 +1,92 @@
+//! Per-round convergence reporting for steered studies — the fig-style
+//! table/CSV that shows the objective improving as the surrogate narrows
+//! the search (the paper's §3.2 optimization-loop story).
+
+use crate::coordinator::steer::{RoundRecord, SteerReport};
+
+use super::series::Series;
+
+/// Build the convergence series of a steering run: one row per round with
+/// the samples injected, that round's best/mean objective, and the
+/// cumulative best ("the optimization trace").
+pub fn convergence_series(rounds: &[RoundRecord]) -> Series {
+    let mut s = Series::new(
+        "steering convergence",
+        "round",
+        &["injected", "round_best", "round_mean", "best_so_far"],
+    );
+    for r in rounds {
+        s.push(
+            r.round as f64,
+            vec![r.injected as f64, r.round_best, r.round_mean, r.best],
+        );
+    }
+    s
+}
+
+/// Render a human-readable steering summary: the convergence table plus
+/// the stop reason and final best.
+pub fn render_report(report: &SteerReport) -> String {
+    let mut out = convergence_series(&report.rounds).table();
+    out.push_str(&format!(
+        "proposer {} | stop {:?} | best {}\n",
+        report.proposer,
+        report.stop,
+        match report.best {
+            Some((b, id)) => format!("{b:.6} @ sample {id}"),
+            None => "n/a".into(),
+        }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::orchestrate::StudyReport;
+    use crate::coordinator::steer::StopReason;
+
+    fn rounds() -> Vec<RoundRecord> {
+        vec![
+            RoundRecord {
+                round: 0,
+                injected: 8,
+                observed: 8,
+                round_best: 0.5,
+                round_mean: 1.0,
+                best: 0.5,
+            },
+            RoundRecord {
+                round: 1,
+                injected: 8,
+                observed: 8,
+                round_best: 0.125,
+                round_mean: 0.25,
+                best: 0.125,
+            },
+        ]
+    }
+
+    #[test]
+    fn series_has_one_row_per_round() {
+        let s = convergence_series(&rounds());
+        assert_eq!(s.rows.len(), 2);
+        assert_eq!(s.column("best_so_far").unwrap(), vec![0.5, 0.125]);
+        assert!(s.csv().contains("round,injected,round_best"));
+    }
+
+    #[test]
+    fn report_renders_stop_and_best() {
+        let r = SteerReport {
+            study: StudyReport::default(),
+            rounds: rounds(),
+            best: Some((0.125, 42)),
+            stop: StopReason::Threshold,
+            proposer: "idw-nearest".into(),
+        };
+        let text = render_report(&r);
+        assert!(text.contains("steering convergence"));
+        assert!(text.contains("Threshold"));
+        assert!(text.contains("sample 42"));
+    }
+}

@@ -8,8 +8,10 @@
 //! renders them as aligned text tables + CSV, which is how the benches
 //! print "the same rows the paper reports".
 
+pub mod convergence;
 pub mod recorder;
 pub mod series;
 
+pub use convergence::{convergence_series, render_report};
 pub use recorder::{Recorder, TaskTiming};
 pub use series::Series;

@@ -11,5 +11,5 @@ pub mod models;
 pub mod pool;
 
 pub use client::{ModelSig, Runtime, Tensor};
-pub use models::{sample_params, ModelRunner, SeirModel, Surrogate};
+pub use models::{sample_params, ModelRunner, SeirModel, Surrogate, SurrogateProposer};
 pub use pool::RuntimePool;

@@ -239,6 +239,105 @@ impl Surrogate {
     }
 }
 
+/// [`crate::coordinator::steer::SampleProposer`] over the real Pallas
+/// surrogate: buffers every observed `(params, objective)` pair, runs a
+/// handful of fused SGD steps per round, and scores candidates with the
+/// forward pass — the PJRT-backed half of the steering loop (the
+/// [`crate::coordinator::steer::IdwProposer`] fallback covers runs with
+/// no artifacts).
+pub struct SurrogateProposer {
+    surr: Surrogate,
+    /// Which output scalar is the objective (matches
+    /// `iterate.objective_index`).
+    obj_index: usize,
+    /// Training pool, row-major (n_in per row / n_out per row).
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    rng: Rng,
+    /// SGD steps run per `observe` call.
+    steps_per_round: usize,
+    /// Learning rate of the fused SGD step.
+    lr: f32,
+}
+
+impl SurrogateProposer {
+    /// A proposer over a fresh surrogate on `rt`. `obj_index` selects the
+    /// output scalar treated as the objective.
+    pub fn new(rt: Arc<RuntimePool>, seed: u64, obj_index: usize) -> Self {
+        let surr = Surrogate::new(rt, seed);
+        let obj_index = obj_index.min(surr.n_out - 1);
+        Self {
+            surr,
+            obj_index,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            rng: Rng::new(seed ^ 0x5094_0A7E_D0_u64),
+            steps_per_round: 24,
+            lr: 0.05,
+        }
+    }
+
+    /// Pad or truncate a parameter vector to the surrogate's input width.
+    fn fit_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut row = x.to_vec();
+        row.resize(self.surr.n_in, 0.0);
+        row
+    }
+}
+
+impl crate::coordinator::steer::SampleProposer for SurrogateProposer {
+    fn observe(&mut self, xs: &[Vec<f32>], ys: &[f64]) {
+        for (x, y) in xs.iter().zip(ys) {
+            self.xs.extend(self.fit_row(x));
+            let mut row = vec![0.0f32; self.surr.n_out];
+            row[self.obj_index] = *y as f32;
+            self.ys.extend(row);
+        }
+        let rows = self.xs.len() / self.surr.n_in;
+        if rows == 0 {
+            return;
+        }
+        // Minibatch SGD over the whole pool: sample SURR_BATCH rows with
+        // replacement per step (the AOT artifact's batch is static).
+        for _ in 0..self.steps_per_round {
+            let mut bx = Vec::with_capacity(SURR_BATCH * self.surr.n_in);
+            let mut by = Vec::with_capacity(SURR_BATCH * self.surr.n_out);
+            for _ in 0..SURR_BATCH {
+                let r = self.rng.below(rows as u64) as usize;
+                bx.extend_from_slice(&self.xs[r * self.surr.n_in..(r + 1) * self.surr.n_in]);
+                by.extend_from_slice(&self.ys[r * self.surr.n_out..(r + 1) * self.surr.n_out]);
+            }
+            if self.surr.train_step(&bx, &by, self.lr).is_err() {
+                break;
+            }
+        }
+    }
+
+    fn score(&mut self, xs: &[Vec<f32>]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(SURR_BATCH) {
+            let mut flat = Vec::with_capacity(chunk.len() * self.surr.n_in);
+            for x in chunk {
+                flat.extend(self.fit_row(x));
+            }
+            match self.surr.predict_any(&flat) {
+                Ok(pred) => {
+                    for i in 0..chunk.len() {
+                        out.push(pred[i * self.surr.n_out + self.obj_index] as f64);
+                    }
+                }
+                // A failed forward pass degrades to "no preference".
+                Err(_) => out.resize(out.len() + chunk.len(), 0.0),
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "surrogate"
+    }
+}
+
 /// The epicast stand-in for the §3.3 COVID study.
 pub struct SeirModel {
     rt: Arc<RuntimePool>,

@@ -43,6 +43,105 @@ pub struct SampleSpec {
     pub seed: u64,
 }
 
+/// Optimization direction of an `iterate:` block's objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Goal {
+    /// Lower objective values are better (the default).
+    Minimize,
+    /// Higher objective values are better.
+    Maximize,
+}
+
+impl Goal {
+    /// Does `a` beat `b` under this goal?
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self {
+            Goal::Minimize => a < b,
+            Goal::Maximize => a > b,
+        }
+    }
+}
+
+/// The `merlin.iterate` block: ML-in-the-loop steering of a running
+/// study. Instead of one static sample set, the steered step runs in
+/// **rounds**: each round a surrogate trained on the completed
+/// `(params, objective)` pairs scores a fresh candidate pool and the
+/// best-scoring samples are injected into the live queues.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterateSpec {
+    /// Upper bound on steering rounds (round 0 is the bootstrap wave).
+    pub max_rounds: u64,
+    /// Samples injected per round.
+    pub samples_per_round: u64,
+    /// Candidate pool scored per round (each round draws from a fresh,
+    /// disjoint sample-id range of this width).
+    pub pool_per_round: u64,
+    /// Index into the simulation's `outputs/scalars` vector that is the
+    /// objective value workers report back.
+    pub objective_index: usize,
+    /// Whether the objective is minimized or maximized.
+    pub goal: Goal,
+    /// Stop once the best objective reaches this value (crosses it in the
+    /// goal's direction). `None` = run all rounds.
+    pub stop_threshold: Option<f64>,
+    /// Stop after this many consecutive rounds without improvement
+    /// (0 = never stop early on stagnation).
+    pub stop_patience: u64,
+    /// Fraction of each wave drawn uniformly at random from the pool
+    /// instead of surrogate-ranked (exploration; clamped to [0, 1]).
+    pub explore: f64,
+    /// Name of the steered step (default: the first sample-using step).
+    pub step: Option<String>,
+    /// Dimensionality of the per-sample parameter vector fed to the
+    /// surrogate (must match what the simulation derives from the seed).
+    pub dims: u64,
+}
+
+impl IterateSpec {
+    fn from_yaml(y: &Yaml) -> Result<IterateSpec, SpecError> {
+        let goal = match y.get("goal").as_str().unwrap_or("minimize") {
+            "minimize" => Goal::Minimize,
+            "maximize" => Goal::Maximize,
+            other => {
+                return Err(SpecError(format!(
+                    "iterate.goal must be minimize|maximize, got {other:?}"
+                )))
+            }
+        };
+        let samples_per_round = y.get("samples_per_round").as_u64().unwrap_or(32);
+        let spec = IterateSpec {
+            max_rounds: y.get("max_rounds").as_u64().unwrap_or(8),
+            samples_per_round,
+            pool_per_round: y
+                .get("pool")
+                .as_u64()
+                .unwrap_or(samples_per_round.saturating_mul(8)),
+            objective_index: y.get("objective").as_u64().unwrap_or(0) as usize,
+            goal,
+            stop_threshold: y.get("stop_threshold").as_f64(),
+            stop_patience: y.get("patience").as_u64().unwrap_or(0),
+            explore: y.get("explore").as_f64().unwrap_or(0.25).clamp(0.0, 1.0),
+            step: y.get("step").as_str().map(String::from),
+            dims: y.get("dims").as_u64().unwrap_or(5),
+        };
+        if spec.max_rounds == 0 {
+            return Err(SpecError("iterate.max_rounds must be >= 1".into()));
+        }
+        if spec.samples_per_round == 0 {
+            return Err(SpecError("iterate.samples_per_round must be >= 1".into()));
+        }
+        if spec.pool_per_round < spec.samples_per_round {
+            return Err(SpecError(
+                "iterate.pool must be >= samples_per_round".into(),
+            ));
+        }
+        if spec.dims == 0 {
+            return Err(SpecError("iterate.dims must be >= 1".into()));
+        }
+        Ok(spec)
+    }
+}
+
 /// A `merlin.resources.workers` group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerGroup {
@@ -64,6 +163,9 @@ pub struct StudySpec {
     pub parameters: BTreeMap<String, Vec<String>>,
     pub steps: Vec<StepSpec>,
     pub samples: Option<SampleSpec>,
+    /// `merlin.iterate`: present when the study is steered round-by-round
+    /// instead of expanded once (see [`IterateSpec`]).
+    pub iterate: Option<IterateSpec>,
     pub workers: Vec<WorkerGroup>,
 }
 
@@ -139,15 +241,7 @@ impl StudySpec {
                 .as_str()
                 .ok_or_else(|| SpecError(format!("step {name} missing run.cmd")))?
                 .to_string();
-            let depends = run
-                .get("depends")
-                .as_list()
-                .map(|l| {
-                    l.iter()
-                        .filter_map(|d| d.as_str().map(String::from))
-                        .collect()
-                })
-                .unwrap_or_default();
+            let depends = run.get("depends").as_str_list().unwrap_or_default();
             steps.push(StepSpec {
                 description: s.get("description").as_str().unwrap_or("").to_string(),
                 cmd,
@@ -162,17 +256,14 @@ impl StudySpec {
             Yaml::Null => None,
             s => Some(SampleSpec {
                 count: s.get("count").as_u64().unwrap_or(1),
-                column_labels: s
-                    .get("column_labels")
-                    .as_list()
-                    .map(|l| {
-                        l.iter()
-                            .filter_map(|v| v.as_str().map(String::from))
-                            .collect()
-                    })
-                    .unwrap_or_default(),
+                column_labels: s.get("column_labels").as_str_list().unwrap_or_default(),
                 seed: s.get("seed").as_u64().unwrap_or(0),
             }),
+        };
+
+        let iterate = match y.get("merlin").get("iterate") {
+            Yaml::Null => None,
+            i => Some(IterateSpec::from_yaml(i)?),
         };
 
         let mut workers = Vec::new();
@@ -183,12 +274,7 @@ impl StudySpec {
                     concurrency: g.get("concurrency").as_u64().unwrap_or(1),
                     steps: g
                         .get("steps")
-                        .as_list()
-                        .map(|l| {
-                            l.iter()
-                                .filter_map(|v| v.as_str().map(String::from))
-                                .collect()
-                        })
+                        .as_str_list()
                         .unwrap_or_else(|| vec!["all".to_string()]),
                 });
             }
@@ -201,6 +287,7 @@ impl StudySpec {
             parameters,
             steps,
             samples,
+            iterate,
             workers,
         };
         spec.validate()?;
@@ -242,6 +329,15 @@ impl StudySpec {
                     return Err(SpecError(format!(
                         "worker group {} consumes unknown step {st}",
                         g.name
+                    )));
+                }
+            }
+        }
+        if let Some(it) = &self.iterate {
+            if let Some(step) = &it.step {
+                if !names.contains(step.as_str()) {
+                    return Err(SpecError(format!(
+                        "iterate.step names unknown step {step}"
                     )));
                 }
             }
@@ -332,6 +428,76 @@ merlin:
         assert_eq!(samples.seed, 42);
         assert_eq!(s.workers.len(), 2);
         assert_eq!(s.workers[1].name, "simworkers");
+    }
+
+    #[test]
+    fn iterate_block_parses_with_defaults() {
+        let text = "\
+description:
+  name: steered
+study:
+  - name: sim
+    run:
+      cmd: 'builtin: quadratic # sample $(MERLIN_SAMPLE_ID)'
+merlin:
+  samples:
+    count: 32
+    seed: 7
+  iterate:
+    max_rounds: 6
+    samples_per_round: 16
+    goal: minimize
+    stop_threshold: 0.01
+    patience: 2
+    step: sim
+    dims: 2
+";
+        let s = StudySpec::parse(text).unwrap();
+        let it = s.iterate.as_ref().unwrap();
+        assert_eq!(it.max_rounds, 6);
+        assert_eq!(it.samples_per_round, 16);
+        assert_eq!(it.pool_per_round, 128, "defaults to 8x the wave");
+        assert_eq!(it.objective_index, 0);
+        assert_eq!(it.goal, Goal::Minimize);
+        assert_eq!(it.stop_threshold, Some(0.01));
+        assert_eq!(it.stop_patience, 2);
+        assert!((it.explore - 0.25).abs() < 1e-12);
+        assert_eq!(it.step.as_deref(), Some("sim"));
+        assert_eq!(it.dims, 2);
+        assert!(it.goal.better(0.1, 0.5));
+        assert!(Goal::Maximize.better(0.5, 0.1));
+    }
+
+    #[test]
+    fn iterate_block_rejects_bad_values() {
+        let base = |body: &str| {
+            format!(
+                "description:\n  name: x\nstudy:\n  - name: a\n    run:\n      \
+                 cmd: 'null: 1'\nmerlin:\n  iterate:\n{body}"
+            )
+        };
+        assert!(StudySpec::parse(&base("    goal: sideways\n"))
+            .unwrap_err()
+            .0
+            .contains("goal"));
+        assert!(StudySpec::parse(&base("    max_rounds: 0\n"))
+            .unwrap_err()
+            .0
+            .contains("max_rounds"));
+        assert!(StudySpec::parse(&base("    samples_per_round: 16\n    pool: 4\n"))
+            .unwrap_err()
+            .0
+            .contains("pool"));
+        assert!(StudySpec::parse(&base("    step: ghost\n"))
+            .unwrap_err()
+            .0
+            .contains("unknown step"));
+        // No iterate block at all is fine.
+        let s = StudySpec::parse(
+            "description:\n  name: x\nstudy:\n  - name: a\n    run:\n      cmd: 'null: 1'\n",
+        )
+        .unwrap();
+        assert!(s.iterate.is_none());
     }
 
     #[test]

@@ -86,6 +86,16 @@ impl Yaml {
         }
     }
 
+    /// A list of string scalars (non-string entries are skipped) — the
+    /// shape of `depends:`, `steps:`, and `column_labels:` blocks.
+    pub fn as_str_list(&self) -> Option<Vec<String>> {
+        self.as_list().map(|l| {
+            l.iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect()
+        })
+    }
+
     pub fn parse(text: &str) -> Result<Yaml, YamlError> {
         let lines = preprocess(text);
         if lines.is_empty() {

@@ -12,7 +12,9 @@ use crate::spec::tokens;
 /// Outcome of one shell sample execution.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShellOutcome {
+    /// The subprocess exit code (-1 if killed by a signal).
     pub exit_code: i32,
+    /// The task-unique workspace directory the script ran in.
     pub workspace: PathBuf,
 }
 

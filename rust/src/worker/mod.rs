@@ -21,5 +21,5 @@ pub mod sim;
 pub mod worker;
 
 pub use pool::{run_pool, PoolReport};
-pub use sim::{NullSimRunner, SimRunner};
+pub use sim::{NullSimRunner, QuadraticSimRunner, SimRunner};
 pub use worker::{FailurePlan, Worker, WorkerConfig, WorkerReport};

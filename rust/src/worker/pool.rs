@@ -13,12 +13,19 @@ use super::worker::{Worker, WorkerConfig, WorkerReport};
 /// Aggregate tally of a pool run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct PoolReport {
+    /// Workers the pool ran.
     pub workers: usize,
+    /// Expansion tasks executed across the pool.
     pub expansions: u64,
+    /// Step tasks executed across the pool.
     pub steps: u64,
+    /// Aggregate tasks executed across the pool.
     pub aggregates: u64,
+    /// Samples completed successfully.
     pub samples_ok: u64,
+    /// Samples that failed.
     pub samples_failed: u64,
+    /// Whole tasks lost to injected node death.
     pub tasks_killed: u64,
 }
 

@@ -10,6 +10,8 @@ use crate::data::node::Node;
 /// Runs one simulation of `model` for the global `sample_id`, with inputs
 /// derived deterministically from `(seed, sample_id)`.
 pub trait SimRunner: Send + Sync {
+    /// Execute one sample; the returned node carries the outputs (a
+    /// steering objective, when present, lives in `outputs/scalars`).
     fn run(&self, model: &str, sample_id: u64, seed: u64) -> Result<Node, String>;
 
     /// Run a contiguous range of samples. The default loops [`run`];
@@ -45,9 +47,72 @@ impl SimRunner for NullSimRunner {
     }
 }
 
+/// An analytic stand-in for a physics code with a known optimum: model
+/// `"quadratic"` reports `outputs/scalars = [mean((x_i - center)^2)]`
+/// over the deterministic per-sample inputs, so steering loops have a
+/// smooth objective to converge on without any PJRT runtime. Other model
+/// names delegate to [`NullSimRunner`].
+pub struct QuadraticSimRunner {
+    /// The objective's minimizer in every dimension.
+    pub center: f32,
+    /// Input dimensionality (must match `iterate.dims`).
+    pub dims: usize,
+}
+
+impl Default for QuadraticSimRunner {
+    fn default() -> Self {
+        Self {
+            center: 0.3,
+            dims: 2,
+        }
+    }
+}
+
+impl SimRunner for QuadraticSimRunner {
+    fn run(&self, model: &str, sample_id: u64, seed: u64) -> Result<Node, String> {
+        if model != "quadratic" {
+            return NullSimRunner.run(model, sample_id, seed);
+        }
+        let x = crate::runtime::models::sample_params(seed, sample_id, self.dims);
+        let f = x
+            .iter()
+            .map(|v| {
+                let d = v - self.center;
+                d * d
+            })
+            .sum::<f32>()
+            / self.dims as f32;
+        let mut n = Node::new();
+        n.set_f32("inputs/x", x);
+        n.set_i64("inputs/sample_id", vec![sample_id as i64]);
+        n.set_f32("outputs/scalars", vec![f]);
+        n.set_str("meta/code", "quadratic-analytic");
+        Ok(n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn quadratic_runner_reports_objective() {
+        let r = QuadraticSimRunner {
+            center: 0.3,
+            dims: 2,
+        };
+        let n = r.run("quadratic", 5, 11).unwrap();
+        let scalars = n.f32s("outputs/scalars").unwrap();
+        assert_eq!(scalars.len(), 1);
+        let x = n.f32s("inputs/x").unwrap();
+        let expect = x.iter().map(|v| (v - 0.3) * (v - 0.3)).sum::<f32>() / 2.0;
+        assert!((scalars[0] - expect).abs() < 1e-6);
+        // Deterministic per (seed, sample); other models fall through.
+        assert_eq!(n, r.run("quadratic", 5, 11).unwrap());
+        assert!(r.run("m", 1, 2).unwrap().f64s("outputs/value").is_some());
+        // The exact optimum would be at x == center in every dim.
+        assert!(scalars[0] >= 0.0);
+    }
 
     #[test]
     fn null_runner_deterministic_per_sample() {

@@ -64,18 +64,32 @@ pub struct WorkerConfig {
     pub workspace_root: Option<PathBuf>,
     /// Data root for builtin-sim bundles (None = discard outputs).
     pub data_root: Option<PathBuf>,
+    /// Bundle file layout for builtin-sim outputs.
     pub layout: BundleLayout,
     /// Compress bundle files (paper parity: zipped hdf5). Off = ~6x faster
     /// dumps at ~1.6x the bytes — see EXPERIMENTS.md §Perf.
     pub bundle_compress: bool,
     /// Clock used for null-sim sleeps (real or virtual).
     pub clock: Arc<dyn Clock>,
+    /// Failure-injection knobs (§3.1 environment model).
     pub failures: FailurePlan,
     /// Seed for this worker's failure-injection RNG.
     pub seed: u64,
+    /// Delivery lease declared to the broker (ms; 0 = unleased). A leased
+    /// worker heartbeats its prefetch window so a crash redelivers its
+    /// unacked tasks at the visibility deadline instead of stranding them.
+    pub lease_ms: u64,
+    /// Heartbeat period (ms; 0 = a third of the lease). Must stay well
+    /// under `lease_ms` or healthy workers lose their own deliveries.
+    pub heartbeat_ms: u64,
+    /// When set, record `outputs/scalars[objective_index]` of every
+    /// successful builtin sample into the backend as the sample's
+    /// objective — the training signal of the steering loop.
+    pub objective_index: Option<usize>,
 }
 
 impl WorkerConfig {
+    /// A minimal single-queue configuration (tests and simple pools).
     pub fn simple(queue: &str, clock: Arc<dyn Clock>) -> Self {
         Self {
             queues: vec![queue.to_string()],
@@ -88,6 +102,9 @@ impl WorkerConfig {
             clock,
             failures: FailurePlan::default(),
             seed: 0,
+            lease_ms: 0,
+            heartbeat_ms: 0,
+            objective_index: None,
         }
     }
 }
@@ -95,15 +112,23 @@ impl WorkerConfig {
 /// Tally of one worker's run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct WorkerReport {
+    /// Expansion (task-generation) tasks executed.
     pub expansions: u64,
+    /// Step tasks executed.
     pub steps: u64,
+    /// Aggregate tasks executed.
     pub aggregates: u64,
+    /// Samples completed successfully.
     pub samples_ok: u64,
+    /// Samples that failed.
     pub samples_failed: u64,
+    /// Whole tasks lost to injected node death.
     pub tasks_killed: u64,
+    /// Whether a `StopWorker` control message ended the run.
     pub stopped_by_control: bool,
 }
 
+/// One consumer loop over a set of queues (see the module docs).
 pub struct Worker {
     broker: Broker,
     state: Option<StateStore>,
@@ -114,6 +139,9 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// Assemble a worker over shared infrastructure. `state` and
+    /// `recorder` are optional (workers run without bookkeeping in some
+    /// benches); `sim` handles `WorkSpec::Builtin` steps.
     pub fn new(
         broker: Broker,
         state: Option<StateStore>,
@@ -144,10 +172,32 @@ impl Worker {
         // late-joining workers (the work-stealing property §2.3 relies
         // on).
         let window = self.cfg.prefetch.max(1);
+        // Lease contract: declare the visibility timeout up front, then
+        // heartbeat the whole prefetch window (one broker call extends
+        // every held delivery) well inside the lease period.
+        let heartbeat_every = if self.cfg.lease_ms > 0 {
+            self.broker
+                .set_consumer_lease(consumer, Some(Duration::from_millis(self.cfg.lease_ms)));
+            let ms = if self.cfg.heartbeat_ms > 0 {
+                self.cfg.heartbeat_ms
+            } else {
+                (self.cfg.lease_ms / 3).max(1)
+            };
+            Some(Duration::from_millis(ms))
+        } else {
+            None
+        };
+        let mut last_beat = Instant::now();
         let mut report = WorkerReport::default();
         let mut last_work = Instant::now();
         let mut buf: VecDeque<Delivery> = VecDeque::new();
         loop {
+            if let Some(every) = heartbeat_every {
+                if last_beat.elapsed() >= every {
+                    self.broker.heartbeat(consumer);
+                    last_beat = Instant::now();
+                }
+            }
             if buf.is_empty() {
                 buf.extend(self.broker.fetch_n(
                     consumer,
@@ -265,6 +315,17 @@ impl Worker {
                 }
                 match result {
                     Ok(node) => {
+                        // Steering signal: report the configured output
+                        // scalar back as this sample's objective.
+                        if let (Some(idx), Some(state)) =
+                            (self.cfg.objective_index, &self.state)
+                        {
+                            if let Some(v) =
+                                node.f32s("outputs/scalars").and_then(|s| s.get(idx))
+                            {
+                                state.record_objective(&t.study_id, sample, *v as f64);
+                            }
+                        }
                         bundle_nodes.push((sample, node));
                         self.ok_sample(&t.study_id, sample, report);
                     }
@@ -467,6 +528,65 @@ mod tests {
     }
 
     #[test]
+    fn builtin_steps_record_objectives_when_configured() {
+        let (broker, state, _rec, clock) = setup();
+        let t = template(
+            WorkSpec::Builtin {
+                model: "quadratic".into(),
+            },
+            4,
+        );
+        broker.publish(hierarchy::root_task(t, 12, 3, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.objective_index = Some(0);
+        let mut w = Worker::new(
+            broker,
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::QuadraticSimRunner::default()),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 12);
+        let objs = state.objectives("study-w");
+        assert_eq!(objs.len(), 12, "every sample reported an objective");
+        assert!(objs.iter().all(|(_, v)| (0.0..=1.0).contains(v)));
+        // Objective ids are exactly the sample ids.
+        let ids: Vec<u64> = objs.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn leased_worker_heartbeats_and_survives_short_lease() {
+        // Total work (~30 x 20 ms) far exceeds the 250 ms lease: only the
+        // between-task heartbeats keep the prefetched deliveries alive.
+        // Nothing may be redelivered or double-counted.
+        let (broker, state, _rec, clock) = setup();
+        let t = template(WorkSpec::Null { duration_us: 20_000 }, 1);
+        broker.publish(hierarchy::root_task(t, 30, 6, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.lease_ms = 250;
+        cfg.heartbeat_ms = 40;
+        let mut w = Worker::new(
+            broker.clone(),
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 30);
+        assert_eq!(state.done_count("study-w"), 30);
+        assert_eq!(broker.depth(), 0);
+        assert_eq!(broker.inflight(), 0);
+        assert_eq!(
+            broker.totals().lease_expired,
+            0,
+            "heartbeats kept every lease alive"
+        );
+    }
+
+    #[test]
     fn sample_error_injection_marks_failed() {
         let (broker, state, _rec, clock) = setup();
         let t = template(WorkSpec::Noop, 10);
@@ -515,7 +635,7 @@ mod tests {
         let vclock = VirtualClock::new();
         let t = template(WorkSpec::Null { duration_us: 1_000_000 }, 1);
         broker.publish(hierarchy::root_task(t, 3, 2, "q")).unwrap();
-        let mut cfg = WorkerConfig::simple("q", Arc::new(vclock.clone()));
+        let cfg = WorkerConfig::simple("q", Arc::new(vclock.clone()));
         let mut w = Worker::new(
             broker,
             None,

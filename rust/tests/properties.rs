@@ -224,7 +224,7 @@ fn prop_message_size_cap_is_exact() {
         let limit = g.usize_in(50, 2000);
         let broker = Broker::new(BrokerConfig {
             max_message_bytes: limit,
-            max_depth: 0,
+            ..BrokerConfig::default()
         });
         let t = TaskEnvelope::new(
             "q",
