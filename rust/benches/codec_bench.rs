@@ -38,7 +38,12 @@ struct CodecStats {
 }
 
 fn main() {
-    let n: u64 = 50_000;
+    // MERLIN_BENCH_QUICK=1: the CI smoke size (seconds, not minutes).
+    let n: u64 = if merlin::util::bench_quick() {
+        5_000
+    } else {
+        50_000
+    };
     println!("codec_bench — v1 JSON vs v2 binary on {n} JAG step envelopes\n");
     let tasks: Vec<TaskEnvelope> = (0..n).map(jag_task).collect();
 

@@ -95,7 +95,12 @@ fn run(label: &'static str, policy: Option<FsyncPolicy>, n: u64, batch: usize) -
 }
 
 fn main() {
-    let n: u64 = 20_000;
+    // MERLIN_BENCH_QUICK=1: the CI smoke size (seconds, not minutes).
+    let n: u64 = if merlin::util::bench_quick() {
+        3_000
+    } else {
+        20_000
+    };
     let batch = 256usize;
     println!("wal_bench — durable enqueue throughput, {n} JAG step envelopes, batch {batch}\n");
     let runs = [

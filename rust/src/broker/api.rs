@@ -1,0 +1,311 @@
+//! The queue-service abstraction the coordinator and workers program
+//! against.
+//!
+//! Until federation, every control-plane function took the in-process
+//! [`Broker`] directly, which hard-wired the reproduction to a single
+//! broker process — exactly the ceiling the paper's producer-consumer
+//! architecture exists to avoid. [`TaskQueue`] is the seam: the
+//! in-process [`Broker`] implements it one-to-one, and
+//! [`super::federation::FederatedClient`] implements it by routing every
+//! queue to one of N broker members, so `orchestrate`, `steer`,
+//! resubmission, status, and the worker loop run unchanged against one
+//! broker or a whole fleet.
+
+use std::time::Duration;
+
+use crate::task::TaskEnvelope;
+
+use super::core::{Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats};
+
+/// Error surfaced by [`TaskQueue`] operations. Collapses the broker's
+/// semantic errors and the federation's transport errors into one
+/// string-carrying type (callers either retry, surface the message, or
+/// `.ok()` it — none branch on the variant across backends).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueError(
+    /// Human-readable failure description.
+    pub String,
+);
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+impl From<super::core::BrokerError> for QueueError {
+    fn from(e: super::core::BrokerError) -> Self {
+        QueueError(e.to_string())
+    }
+}
+
+impl From<super::client::ClientError> for QueueError {
+    fn from(e: super::client::ClientError) -> Self {
+        QueueError(e.to_string())
+    }
+}
+
+/// One federation member's health, as reported by
+/// [`TaskQueue::member_health`] (empty for a plain broker).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberHealth {
+    /// Member name (`host:port` for TCP members, `local-N` in-process).
+    pub name: String,
+    /// Whether the member is currently routable.
+    pub up: bool,
+    /// Lifetime connect/IO errors observed against this member.
+    pub errors: u64,
+}
+
+/// The queue service: everything the coordinator, the resubmission
+/// passes, `merlin status`, and the worker loop need from "the broker",
+/// whether that is one in-process [`Broker`] or a federation of them.
+///
+/// All methods take `&self`: implementations are internally synchronized
+/// and cheap to share across threads. Consumer ids scope prefetch/lease
+/// accounting exactly as on [`Broker`]; a federated implementation maps
+/// them onto per-member consumers.
+pub trait TaskQueue: Send + Sync {
+    /// Publish a batch of tasks (routed per-queue by a federation).
+    fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), QueueError>;
+
+    /// Register a consumer for fetch/lease accounting.
+    fn register_consumer(&self) -> u64;
+
+    /// Declare `consumer`'s delivery lease (None clears it).
+    fn set_consumer_lease(&self, consumer: u64, lease: Option<Duration>);
+
+    /// Extend the lease on every delivery `consumer` holds; returns how
+    /// many were extended.
+    fn heartbeat(&self, consumer: u64) -> usize;
+
+    /// Blocking multi-fetch: up to `max_n` deliveries from `queues`.
+    fn fetch_n(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        timeout: Duration,
+    ) -> Vec<Delivery>;
+
+    /// Acknowledge one delivery.
+    fn ack(&self, tag: u64) -> Result<(), QueueError>;
+
+    /// Acknowledge a batch; returns the count acked.
+    fn ack_batch(&self, tags: &[u64]) -> Result<usize, QueueError>;
+
+    /// Negative-ack (requeue costs a retry; otherwise dead-letter).
+    fn nack(&self, tag: u64, requeue: bool) -> Result<(), QueueError>;
+
+    /// Return a delivery to its queue without consuming a retry.
+    fn requeue(&self, tag: u64) -> Result<(), QueueError>;
+
+    /// Requeue everything `consumer` holds and retire it.
+    fn recover_consumer(&self, consumer: u64) -> usize;
+
+    /// Redeliver every expired-lease delivery; returns the count.
+    fn reap_expired(&self) -> usize;
+
+    /// Sample ranges still queued/in-flight for (`study`, `step`) on
+    /// `queue` — what recovery-aware resubmission subtracts. A federation
+    /// aggregates this across all live members (after a failover, tasks
+    /// for one queue can sit on several).
+    fn queued_step_samples(
+        &self,
+        queue: &str,
+        study_id: &str,
+        step_name: &str,
+    ) -> Vec<(u64, u64)>;
+
+    /// Point-in-time statistics for one queue (summed across members).
+    fn stats(&self, queue: &str) -> QueueStats;
+
+    /// Lifetime totals (summed across members).
+    fn totals(&self) -> BrokerTotals;
+
+    /// All queue names (union across members), sorted.
+    fn queue_names(&self) -> Vec<String>;
+
+    /// Lease/liveness report (merged across members).
+    fn lease_stats(&self) -> LeaseStats;
+
+    /// Durability counters (summed; `durable` if any member is).
+    fn durability_stats(&self) -> DurabilityStats;
+
+    /// Total ready messages (summed).
+    fn depth(&self) -> usize;
+
+    /// Drop all ready messages in `queue` (on every member holding any);
+    /// returns the count dropped.
+    fn purge(&self, queue: &str) -> usize;
+
+    /// Members that transitioned **down** since the last call (drained on
+    /// read). The coordinator treats a non-empty answer as "queued work
+    /// may have been lost: run a recovery-aware resubmission pass". A
+    /// plain broker never fails over.
+    fn failed_over(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Per-member health (empty for a plain broker; `merlin status`
+    /// renders it as the federation section).
+    fn member_health(&self) -> Vec<MemberHealth> {
+        Vec::new()
+    }
+}
+
+impl TaskQueue for Broker {
+    fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), QueueError> {
+        Broker::publish_batch(self, tasks).map_err(QueueError::from)
+    }
+
+    fn register_consumer(&self) -> u64 {
+        Broker::register_consumer(self)
+    }
+
+    fn set_consumer_lease(&self, consumer: u64, lease: Option<Duration>) {
+        Broker::set_consumer_lease(self, consumer, lease)
+    }
+
+    fn heartbeat(&self, consumer: u64) -> usize {
+        Broker::heartbeat(self, consumer)
+    }
+
+    fn fetch_n(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        Broker::fetch_n(self, consumer, queues, prefetch, max_n, timeout)
+    }
+
+    fn ack(&self, tag: u64) -> Result<(), QueueError> {
+        Broker::ack(self, tag).map_err(QueueError::from)
+    }
+
+    fn ack_batch(&self, tags: &[u64]) -> Result<usize, QueueError> {
+        Broker::ack_batch(self, tags).map_err(QueueError::from)
+    }
+
+    fn nack(&self, tag: u64, requeue: bool) -> Result<(), QueueError> {
+        Broker::nack(self, tag, requeue).map_err(QueueError::from)
+    }
+
+    fn requeue(&self, tag: u64) -> Result<(), QueueError> {
+        Broker::requeue(self, tag).map_err(QueueError::from)
+    }
+
+    fn recover_consumer(&self, consumer: u64) -> usize {
+        Broker::recover_consumer(self, consumer)
+    }
+
+    fn reap_expired(&self) -> usize {
+        Broker::reap_expired(self)
+    }
+
+    fn queued_step_samples(
+        &self,
+        queue: &str,
+        study_id: &str,
+        step_name: &str,
+    ) -> Vec<(u64, u64)> {
+        Broker::queued_step_samples(self, queue, study_id, step_name)
+    }
+
+    fn stats(&self, queue: &str) -> QueueStats {
+        Broker::stats(self, queue)
+    }
+
+    fn totals(&self) -> BrokerTotals {
+        Broker::totals(self)
+    }
+
+    fn queue_names(&self) -> Vec<String> {
+        Broker::queue_names(self)
+    }
+
+    fn lease_stats(&self) -> LeaseStats {
+        Broker::lease_stats(self)
+    }
+
+    fn durability_stats(&self) -> DurabilityStats {
+        Broker::durability_stats(self)
+    }
+
+    fn depth(&self) -> usize {
+        Broker::depth(self)
+    }
+
+    fn purge(&self, queue: &str) -> usize {
+        Broker::purge(self, queue)
+    }
+}
+
+/// Merge two [`LeaseStats`] (federation aggregation helper).
+pub(crate) fn merge_lease_stats(into: &mut LeaseStats, from: LeaseStats) {
+    into.active += from.active;
+    into.expired += from.expired;
+    into.consumers.extend(from.consumers);
+}
+
+/// Merge two [`QueueStats`] (federation aggregation helper).
+pub(crate) fn merge_queue_stats(into: &mut QueueStats, from: &QueueStats) {
+    into.ready += from.ready;
+    into.unacked += from.unacked;
+    into.published += from.published;
+    into.delivered += from.delivered;
+    into.acked += from.acked;
+    into.requeued += from.requeued;
+    into.dead_lettered += from.dead_lettered;
+    into.lease_expired += from.lease_expired;
+    into.bytes_published += from.bytes_published;
+}
+
+/// Merge two [`DurabilityStats`] (federation aggregation helper).
+pub(crate) fn merge_durability(into: &mut DurabilityStats, from: &DurabilityStats) {
+    into.durable |= from.durable;
+    into.wal_records += from.wal_records;
+    into.wal_fsyncs += from.wal_fsyncs;
+    into.snapshots += from.snapshots;
+    into.recovered += from.recovered;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ControlMsg, Payload};
+
+    #[test]
+    fn broker_implements_task_queue_one_to_one() {
+        let broker = Broker::default();
+        let q: &dyn TaskQueue = &broker;
+        q.publish_batch(vec![TaskEnvelope::new(
+            "q",
+            Payload::Control(ControlMsg::Ping { token: "x".into() }),
+        )])
+        .unwrap();
+        assert_eq!(q.depth(), 1);
+        let c = q.register_consumer();
+        let got = q.fetch_n(c, &["q"], 0, 8, Duration::from_millis(200));
+        assert_eq!(got.len(), 1);
+        q.ack(got[0].tag).unwrap();
+        assert_eq!(q.stats("q").acked, 1);
+        assert_eq!(q.totals().acked, 1);
+        assert_eq!(q.queue_names(), vec!["q".to_string()]);
+        assert!(q.failed_over().is_empty());
+        assert!(q.member_health().is_empty());
+        assert!(!q.durability_stats().durable);
+    }
+
+    #[test]
+    fn queue_error_wraps_broker_and_client_errors() {
+        let e: QueueError = super::super::core::BrokerError::UnknownDeliveryTag(7).into();
+        assert!(e.to_string().contains("unknown delivery tag 7"));
+    }
+}

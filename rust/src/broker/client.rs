@@ -11,7 +11,7 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats};
+use super::core::{BrokerTotals, ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats};
 use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
@@ -439,6 +439,49 @@ impl BrokerClient {
             snapshots: r.get("snapshots").as_u64().unwrap_or(0),
             recovered: r.get("recovered").as_u64().unwrap_or(0),
         })
+    }
+
+    /// The server's lifetime totals across all queues.
+    pub fn totals(&mut self) -> Result<BrokerTotals, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("totals"))]))?;
+        Ok(BrokerTotals {
+            published: r.get("published").as_u64().unwrap_or(0),
+            delivered: r.get("delivered").as_u64().unwrap_or(0),
+            acked: r.get("acked").as_u64().unwrap_or(0),
+            requeued: r.get("requeued").as_u64().unwrap_or(0),
+            dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
+            lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
+        })
+    }
+
+    /// Sample ranges `[lo, hi)` for (`study`, `step`) still queued or in
+    /// flight on `queue` — the server-side half of recovery-aware
+    /// resubmission (see
+    /// [`crate::broker::core::Broker::queued_step_samples`]).
+    pub fn queued_step_samples(
+        &mut self,
+        queue: &str,
+        study_id: &str,
+        step_name: &str,
+    ) -> Result<Vec<(u64, u64)>, ClientError> {
+        let r = self.call(&Json::obj(vec![
+            ("op", Json::str("queued_ranges")),
+            ("queue", Json::str(queue)),
+            ("study", Json::str(study_id)),
+            ("step", Json::str(step_name)),
+        ]))?;
+        Ok(r.get("ranges")
+            .as_arr()
+            .map(|ranges| {
+                ranges
+                    .iter()
+                    .filter_map(|pair| {
+                        let pair = pair.as_arr()?;
+                        Some((pair.first()?.as_u64()?, pair.get(1)?.as_u64()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default())
     }
 
     /// Point-in-time statistics for one queue.

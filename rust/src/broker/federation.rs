@@ -1,0 +1,1313 @@
+//! Broker federation: scale the task-queue tier horizontally by running
+//! N independent, share-nothing broker members and routing every queue to
+//! one of them.
+//!
+//! The paper's central scaling claim is that the producer-consumer
+//! architecture grows by *adding servers and workers independently*; a
+//! single broker process is the ceiling on the server half. A
+//! [`FederatedClient`] removes it without any broker-to-broker protocol:
+//!
+//! * **Routing** — every queue name maps to one member by rendezvous
+//!   (highest-random-weight) hashing ([`rendezvous_weight`]). All
+//!   participants that list the same members in the same order agree on
+//!   the mapping with no coordination, and when a member drops out only
+//!   *its* queues move (the defining HRW property — no global reshuffle).
+//! * **Fan-out** — `publish_batch` groups tasks by owning member and
+//!   ships one batch per member over the existing pipelined wire v2/v3
+//!   frames; `fetch_n` polls the members that own the requested queues;
+//!   `ack_batch` routes tags back to the member that delivered them.
+//! * **Down detection** — [`FederationConfig::down_after`] consecutive
+//!   connect/IO errors mark a member down: its queues re-route to the
+//!   survivors and the transition is reported once through
+//!   [`TaskQueue::failed_over`], which the coordinator answers with a
+//!   recovery-aware resubmission pass
+//!   ([`crate::coordinator::resubmit_missing_trusting_broker`]). A
+//!   durable member that restarts is picked up again by
+//!   [`FederatedClient::try_revive`], its WAL-recovered queue content
+//!   subtracted by the same pass.
+//!
+//! Members stay plain `merlin serve-broker` processes — share-nothing,
+//! individually durable, individually leased. The federation is entirely
+//! client-side state, so every producer, worker, and coordinator builds
+//! its own [`FederatedClient`] from the same member list (one TCP
+//! connection per member per client, like one AMQP channel per server).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::task::TaskEnvelope;
+use crate::util::hex::fnv1a;
+
+use super::api::{
+    merge_durability, merge_lease_stats, merge_queue_stats, MemberHealth, QueueError, TaskQueue,
+};
+use super::client::{BrokerClient, ClientError};
+use super::core::{Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats};
+
+/// Federation tuning knobs.
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Consecutive connect/IO errors against one member before it is
+    /// marked down and its queues re-route to the survivors. 1 fails over
+    /// on the first error; higher values ride out transient hiccups.
+    pub down_after: u32,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self { down_after: 3 }
+    }
+}
+
+/// Rendezvous (highest-random-weight) hash: the weight of `member` for
+/// `queue`. The owner of a queue is the **live** member with the highest
+/// weight; when a member dies, exactly its queues fall to their
+/// second-highest member and every other queue stays put. Members are
+/// identified by their position in the federation's member list, so all
+/// participants must list the same members in the same order.
+pub fn rendezvous_weight(queue: &str, member: u64) -> u64 {
+    // fnv1a folds the queue name; the splitmix64 finalizer decorrelates
+    // member indices so weights behave like independent draws per pair.
+    let mut x = fnv1a(queue.as_bytes()) ^ member.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// One member's transport: an in-process broker handle or a TCP client.
+/// `None` means the member is dead/disconnected (killed, or awaiting
+/// [`FederatedClient::try_revive`]).
+enum Link {
+    Local(Option<Broker>),
+    Remote(Option<Box<BrokerClient>>),
+}
+
+struct MemberState {
+    link: Link,
+    /// Consecutive transport errors (reset on success).
+    consecutive: u32,
+    /// Lifetime transport errors (health reporting).
+    total_errors: u64,
+}
+
+/// Outcome of one member-level operation: transport failures trigger
+/// re-routing / down-marking, fatal (semantic) errors propagate as-is.
+enum MemberErr {
+    Transport(String),
+    Fatal(QueueError),
+}
+
+/// A federated task-queue client over N broker members. Implements
+/// [`TaskQueue`], so the coordinator, resubmission, status, and workers
+/// run against it exactly as against one in-process [`Broker`].
+///
+/// Thread-safe (`&self` everywhere), but note the sharing model: each
+/// member is one connection guarded by one lock, so a handle shared by
+/// many threads serializes per member — like one AMQP channel per server.
+/// Give throughput-critical producers/workers their own handle; local
+/// (in-process) members clone the broker out of the lock and never block
+/// under it.
+pub struct FederatedClient {
+    names: Vec<String>,
+    members: Vec<Mutex<MemberState>>,
+    /// Lock-free routing view of `members[i]`'s liveness.
+    up: Vec<AtomicBool>,
+    cfg: FederationConfig,
+    /// Federated delivery tag → (member index, member-local tag).
+    tags: Mutex<HashMap<u64, (usize, u64)>>,
+    next_tag: AtomicU64,
+    /// Federated consumer → per-member local consumer id (local links).
+    consumers: Mutex<HashMap<u64, Vec<Option<u64>>>>,
+    next_consumer: AtomicU64,
+    /// Declared lease per federated consumer (ms; absent = unleased).
+    /// Local members honor these exactly; remote members are one
+    /// connection shared by every consumer on this handle, so they get
+    /// the **longest** declared lease (see `set_consumer_lease`).
+    consumer_leases: Mutex<HashMap<u64, u64>>,
+    /// The effective connection-level lease re-applied to remote members
+    /// on (re)connect: max over `consumer_leases` (ms; 0 = none).
+    lease_ms: AtomicU64,
+    /// Members newly marked down, drained by `failed_over`.
+    downs: Mutex<Vec<String>>,
+    /// Throttle for opportunistic revival probes (ms since `epoch`).
+    last_revive_ms: AtomicU64,
+    /// Time base for the revival throttle.
+    epoch: Instant,
+}
+
+/// Opportunistic revival probes run at most this often (ms) — a dead
+/// member costs one refused `connect` per interval, not per poll tick.
+const REVIVE_INTERVAL_MS: u64 = 1_000;
+
+impl FederatedClient {
+    /// Federate over in-process broker handles (tests, benches, and the
+    /// in-process half of `merlin loadgen`). Cheap to build per thread:
+    /// clone the same `Vec<Broker>` for every participant.
+    pub fn local(brokers: Vec<Broker>, cfg: FederationConfig) -> Self {
+        assert!(!brokers.is_empty(), "federation needs at least one member");
+        let names = (0..brokers.len()).map(|i| format!("local-{i}")).collect();
+        let members = brokers
+            .into_iter()
+            .map(|b| {
+                Mutex::new(MemberState {
+                    link: Link::Local(Some(b)),
+                    consecutive: 0,
+                    total_errors: 0,
+                })
+            })
+            .collect();
+        Self::assemble(names, members, cfg)
+    }
+
+    /// Federate over TCP members (`host:port` each). Members that refuse
+    /// the initial connection start **down** (revivable via
+    /// [`FederatedClient::try_revive`]); if every member refuses, this is
+    /// an error.
+    pub fn connect(addrs: &[String], cfg: FederationConfig) -> std::io::Result<Self> {
+        if addrs.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "federation needs at least one member address",
+            ));
+        }
+        let mut members = Vec::with_capacity(addrs.len());
+        let mut initial_downs = Vec::new();
+        let mut any_up = false;
+        for addr in addrs {
+            match BrokerClient::connect(addr) {
+                Ok(client) => {
+                    any_up = true;
+                    members.push(Mutex::new(MemberState {
+                        link: Link::Remote(Some(Box::new(client))),
+                        consecutive: 0,
+                        total_errors: 0,
+                    }));
+                }
+                Err(_) => {
+                    initial_downs.push(addr.clone());
+                    members.push(Mutex::new(MemberState {
+                        link: Link::Remote(None),
+                        consecutive: 0,
+                        total_errors: 1,
+                    }));
+                }
+            }
+        }
+        if !any_up {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionRefused,
+                "no federation member reachable",
+            ));
+        }
+        let fed = Self::assemble(addrs.to_vec(), members, cfg);
+        for (i, name) in fed.names.iter().enumerate() {
+            if initial_downs.contains(name) {
+                // Routing excludes them from the start, and revival
+                // probes pick them up; they are NOT queued for
+                // `failed_over` — that reports *transitions* (a member
+                // that was never up held none of this handle's work, so
+                // a recovery resubmission pass would be pure waste).
+                fed.up[i].store(false, Ordering::SeqCst);
+            }
+        }
+        fed
+    }
+
+    fn assemble(
+        names: Vec<String>,
+        members: Vec<Mutex<MemberState>>,
+        cfg: FederationConfig,
+    ) -> Self {
+        let up = members.iter().map(|_| AtomicBool::new(true)).collect();
+        Self {
+            names,
+            members,
+            up,
+            cfg,
+            tags: Mutex::new(HashMap::new()),
+            next_tag: AtomicU64::new(1),
+            consumers: Mutex::new(HashMap::new()),
+            next_consumer: AtomicU64::new(1),
+            consumer_leases: Mutex::new(HashMap::new()),
+            lease_ms: AtomicU64::new(0),
+            downs: Mutex::new(Vec::new()),
+            last_revive_ms: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Total members (up or down).
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Members currently routable.
+    pub fn live_count(&self) -> usize {
+        self.up.iter().filter(|u| u.load(Ordering::SeqCst)).count()
+    }
+
+    /// The live member that owns `queue` under the current routing view,
+    /// or `None` when every member is down.
+    pub fn owner_of(&self, queue: &str) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_w = 0u64;
+        for i in 0..self.members.len() {
+            if !self.up[i].load(Ordering::SeqCst) {
+                continue;
+            }
+            let w = rendezvous_weight(queue, i as u64);
+            if best.is_none() || w > best_w {
+                best = Some(i);
+                best_w = w;
+            }
+        }
+        best
+    }
+
+    /// Member name (address for TCP members).
+    pub fn member_name(&self, idx: usize) -> &str {
+        &self.names[idx]
+    }
+
+    /// Chaos/ops hook: force-kill a member client-side — drop its link,
+    /// mark it down, and surface the transition through `failed_over`.
+    /// (The loadgen chaos mode shuts the member's server down instead and
+    /// lets error accounting discover it; this hook is for deterministic
+    /// tests and for evicting a member an operator knows is gone.)
+    pub fn kill_member(&self, idx: usize) {
+        let mut m = self.members[idx].lock().unwrap();
+        self.mark_down(idx, &mut m);
+    }
+
+    /// Re-attach a (restarted) in-process member. Existing consumer
+    /// registrations against the old broker are discarded; queues owned
+    /// by this member route back to it immediately.
+    pub fn restore_member(&self, idx: usize, broker: Broker) {
+        {
+            let mut m = self.members[idx].lock().unwrap();
+            m.link = Link::Local(Some(broker));
+            m.consecutive = 0;
+        }
+        let mut consumers = self.consumers.lock().unwrap();
+        for per_member in consumers.values_mut() {
+            per_member[idx] = None;
+        }
+        self.up[idx].store(true, Ordering::SeqCst);
+    }
+
+    /// Try to reconnect every down TCP member; returns the names that
+    /// came back. A revived member immediately owns its queues again —
+    /// run a [`crate::coordinator::resubmit_missing_trusting_broker`]
+    /// pass afterwards so WAL-recovered tasks are subtracted instead of
+    /// double-enqueued.
+    pub fn try_revive(&self) -> Vec<String> {
+        let mut revived = Vec::new();
+        for i in 0..self.members.len() {
+            if self.up[i].load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut m = self.members[i].lock().unwrap();
+            let Link::Remote(slot) = &mut m.link else {
+                continue; // killed local members revive via restore_member
+            };
+            if slot.is_some() {
+                continue;
+            }
+            if let Ok(mut client) = BrokerClient::connect(&self.names[i]) {
+                let lease = self.lease_ms.load(Ordering::SeqCst);
+                if lease > 0 {
+                    client.set_lease(lease).ok();
+                }
+                *slot = Some(Box::new(client));
+                m.consecutive = 0;
+                self.up[i].store(true, Ordering::SeqCst);
+                revived.push(self.names[i].clone());
+            }
+        }
+        revived
+    }
+
+    /// Throttled [`FederatedClient::try_revive`]: probes down TCP members
+    /// at most once per second (`REVIVE_INTERVAL_MS`). Hooked into the
+    /// federation's maintenance tick (`reap_expired`) and the CLI worker
+    /// loop's idle path, so a restarted durable member is picked up by
+    /// every long-lived participant without operator action.
+    pub fn maybe_revive(&self) -> Vec<String> {
+        if self.live_count() == self.members.len() {
+            return Vec::new();
+        }
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let last = self.last_revive_ms.load(Ordering::SeqCst);
+        if now_ms.saturating_sub(last) < REVIVE_INTERVAL_MS {
+            return Vec::new();
+        }
+        if self
+            .last_revive_ms
+            .compare_exchange(last, now_ms, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Vec::new(); // another thread is probing this interval
+        }
+        self.try_revive()
+    }
+
+    /// Mark `idx` down under its member lock: drop the link, flip the
+    /// routing flag, forget its delivery tags (the member's inflight set
+    /// died with it), and queue the transition for `failed_over`.
+    fn mark_down(&self, idx: usize, m: &mut MemberState) {
+        if self.up[idx].swap(false, Ordering::SeqCst) {
+            self.downs.lock().unwrap().push(self.names[idx].clone());
+        }
+        match &mut m.link {
+            Link::Local(b) => *b = None,
+            Link::Remote(c) => *c = None,
+        }
+        self.tags.lock().unwrap().retain(|_, (mi, _)| *mi != idx);
+    }
+
+    /// Fold one member-operation outcome into its health accounting.
+    /// Transport errors count toward down-marking; semantic (server)
+    /// errors do not — the member answered.
+    fn note<T>(
+        &self,
+        idx: usize,
+        m: &mut MemberState,
+        r: Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        match r {
+            Ok(v) => {
+                m.consecutive = 0;
+                Ok(v)
+            }
+            Err(ClientError::Wire(e)) => {
+                m.consecutive += 1;
+                m.total_errors += 1;
+                if m.consecutive >= self.cfg.down_after {
+                    self.mark_down(idx, m);
+                } else if let Link::Remote(c) = &mut m.link {
+                    // The connection is unusable after a wire error; drop
+                    // it so the next op reconnects (or marks down).
+                    *c = None;
+                }
+                Err(MemberErr::Transport(e.to_string()))
+            }
+            Err(e) => Err(MemberErr::Fatal(QueueError(e.to_string()))),
+        }
+    }
+
+    /// A usable remote client for `idx`, reconnecting if the previous
+    /// connection was dropped by a transport error.
+    fn remote_client<'a>(
+        &self,
+        idx: usize,
+        m: &'a mut MemberState,
+    ) -> Result<&'a mut BrokerClient, MemberErr> {
+        let Link::Remote(slot) = &mut m.link else {
+            unreachable!("remote_client on local link");
+        };
+        if slot.is_none() {
+            match BrokerClient::connect(&self.names[idx]) {
+                Ok(mut client) => {
+                    let lease = self.lease_ms.load(Ordering::SeqCst);
+                    if lease > 0 {
+                        client.set_lease(lease).ok();
+                    }
+                    *slot = Some(Box::new(client));
+                }
+                Err(e) => {
+                    m.consecutive += 1;
+                    m.total_errors += 1;
+                    if m.consecutive >= self.cfg.down_after {
+                        self.mark_down(idx, m);
+                    }
+                    return Err(MemberErr::Transport(e.to_string()));
+                }
+            }
+        }
+        Ok(slot.as_mut().expect("just connected"))
+    }
+
+    /// One member's transport view: local links hand out a broker clone
+    /// (ops run outside the member lock — the broker is internally
+    /// synchronized), remote links are operated under the lock via
+    /// [`FederatedClient::member_remote`].
+    fn snapshot(&self, idx: usize) -> Snapshot {
+        let m = self.members[idx].lock().unwrap();
+        match &m.link {
+            Link::Local(Some(b)) => Snapshot::Local(b.clone()),
+            Link::Local(None) => Snapshot::DeadLocal,
+            Link::Remote(_) => Snapshot::Remote,
+        }
+    }
+
+    /// Run one operation against a remote member under its lock, with
+    /// reconnect-on-demand and transport-error accounting.
+    fn member_remote<T>(
+        &self,
+        idx: usize,
+        op: impl FnOnce(&mut BrokerClient) -> Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        let mut m = self.members[idx].lock().unwrap();
+        let r = {
+            let client = self.remote_client(idx, &mut m)?;
+            op(client)
+        };
+        self.note(idx, &mut m, r)
+    }
+
+    /// The member-local consumer id backing federated `consumer` on a
+    /// local member, registering one on first use (with the consumer's
+    /// own declared lease, if any).
+    fn local_consumer(&self, consumer: u64, idx: usize, broker: &Broker) -> u64 {
+        let mut consumers = self.consumers.lock().unwrap();
+        let per_member = consumers
+            .entry(consumer)
+            .or_insert_with(|| vec![None; self.members.len()]);
+        if let Some(id) = per_member[idx] {
+            return id;
+        }
+        let id = broker.register_consumer();
+        let lease = self
+            .consumer_leases
+            .lock()
+            .unwrap()
+            .get(&consumer)
+            .copied()
+            .unwrap_or(0);
+        if lease > 0 {
+            broker.set_consumer_lease(id, Some(Duration::from_millis(lease)));
+        }
+        per_member[idx] = Some(id);
+        id
+    }
+
+    /// Publish one owner-group to its member. Ownership of the group is
+    /// taken (no copy on the success path); a transport failure hands it
+    /// back so the caller can re-route it.
+    fn member_publish(
+        &self,
+        idx: usize,
+        tasks: Vec<TaskEnvelope>,
+    ) -> Result<(), (MemberErr, Vec<TaskEnvelope>)> {
+        match self.snapshot(idx) {
+            Snapshot::Local(broker) => broker
+                .publish_batch(tasks)
+                .map_err(|e| (MemberErr::Fatal(QueueError(e.to_string())), Vec::new())),
+            Snapshot::DeadLocal => {
+                Err((MemberErr::Transport("local member killed".into()), tasks))
+            }
+            Snapshot::Remote => match self.member_remote(idx, |c| c.publish_batch(&tasks)) {
+                Ok(()) => Ok(()),
+                Err(e) => Err((e, tasks)),
+            },
+        }
+    }
+
+    /// Fetch up to `max_n` deliveries from one member, remapping their
+    /// tags into the federated tag space.
+    fn member_fetch(
+        &self,
+        idx: usize,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        let got = match self.snapshot(idx) {
+            Snapshot::Local(broker) => {
+                let local = self.local_consumer(consumer, idx, &broker);
+                broker.fetch_n(local, queues, prefetch, max_n, timeout)
+            }
+            Snapshot::DeadLocal => Vec::new(),
+            Snapshot::Remote => self
+                .member_remote(idx, |c| {
+                    c.fetch_n(queues, prefetch, timeout.as_millis() as u64, max_n)
+                })
+                .unwrap_or_default(),
+        };
+        if got.is_empty() {
+            return got;
+        }
+        let mut tags = self.tags.lock().unwrap();
+        got.into_iter()
+            .map(|d| {
+                let fed = self.next_tag.fetch_add(1, Ordering::Relaxed);
+                tags.insert(fed, (idx, d.tag));
+                Delivery {
+                    tag: fed,
+                    task: d.task,
+                }
+            })
+            .collect()
+    }
+
+    /// Resolve a federated tag (removing it — every tag resolution is a
+    /// terminal op: ack, nack, or requeue).
+    fn take_tag(&self, tag: u64) -> Result<(usize, u64), QueueError> {
+        self.tags
+            .lock()
+            .unwrap()
+            .remove(&tag)
+            .ok_or_else(|| QueueError(format!("unknown federated delivery tag {tag}")))
+    }
+
+    /// Indices of the currently routable members.
+    fn live_indices(&self) -> Vec<usize> {
+        (0..self.members.len())
+            .filter(|i| self.up[*i].load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// The member-local consumer id already registered for (`consumer`,
+    /// `idx`), if any (heartbeats must not register new consumers).
+    fn existing_local_consumer(&self, consumer: u64, idx: usize) -> Option<u64> {
+        self.consumers
+            .lock()
+            .unwrap()
+            .get(&consumer)
+            .and_then(|per_member| per_member[idx])
+    }
+
+    /// Declare `consumer`'s delivery lease, reporting the first member
+    /// that refused the declaration (e.g. a pre-wire-v3 server) — a
+    /// worker that believes it is leased when it is not would strand its
+    /// deliveries on a hang instead of redelivering at the deadline.
+    ///
+    /// Local members honor the lease per consumer exactly. Remote
+    /// members are one shared connection per handle (the connection *is*
+    /// the consumer server-side), so they get the **longest** lease
+    /// declared by any consumer on this handle — one consumer clearing
+    /// its lease can never strip protection from its siblings, and
+    /// reconnects re-apply the same effective value.
+    pub fn try_set_consumer_lease(
+        &self,
+        consumer: u64,
+        lease: Option<Duration>,
+    ) -> Result<(), QueueError> {
+        let ms = lease.map_or(0, |d| d.as_millis() as u64);
+        let effective = {
+            let mut leases = self.consumer_leases.lock().unwrap();
+            if ms > 0 {
+                leases.insert(consumer, ms);
+            } else {
+                leases.remove(&consumer);
+            }
+            leases.values().copied().max().unwrap_or(0)
+        };
+        self.lease_ms.store(effective, Ordering::SeqCst);
+        let mut first_err: Option<QueueError> = None;
+        for idx in self.live_indices() {
+            match self.snapshot(idx) {
+                Snapshot::Local(b) => {
+                    let local = self.local_consumer(consumer, idx, &b);
+                    b.set_consumer_lease(local, lease);
+                }
+                Snapshot::DeadLocal => {}
+                Snapshot::Remote => {
+                    if let Err(e) = self.member_remote(idx, |c| c.set_lease(effective)) {
+                        first_err.get_or_insert_with(|| {
+                            QueueError(format!("{}: {}", self.names[idx], merr(e)))
+                        });
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// See [`FederatedClient::snapshot`].
+enum Snapshot {
+    Local(Broker),
+    DeadLocal,
+    Remote,
+}
+
+fn merr(e: MemberErr) -> QueueError {
+    match e {
+        MemberErr::Transport(t) => QueueError(format!("member unreachable: {t}")),
+        MemberErr::Fatal(q) => q,
+    }
+}
+
+impl TaskQueue for FederatedClient {
+    /// Group by owning member and ship one batch per member. A transport
+    /// failure re-routes the failed group under the (possibly shrunk)
+    /// routing view and retries; semantic broker errors (size/depth
+    /// limits) propagate unchanged.
+    fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), QueueError> {
+        if tasks.is_empty() {
+            return Ok(());
+        }
+        let mut pending = tasks;
+        let mut last_transport = String::from("unknown");
+        // Worst case every member but one is dead and each must burn its
+        // full down_after budget before the group re-routes past it:
+        // members * down_after passes, plus one for the final delivery.
+        let attempts = self.members.len() * self.cfg.down_after as usize + 1;
+        for _ in 0..attempts {
+            if pending.is_empty() {
+                return Ok(());
+            }
+            let mut groups: BTreeMap<usize, Vec<TaskEnvelope>> = BTreeMap::new();
+            for t in pending.drain(..) {
+                match self.owner_of(&t.queue) {
+                    Some(i) => groups.entry(i).or_default().push(t),
+                    None => {
+                        return Err(QueueError(
+                            "publish failed: no live federation member".into(),
+                        ))
+                    }
+                }
+            }
+            for (idx, group) in groups {
+                match self.member_publish(idx, group) {
+                    Ok(()) => {}
+                    Err((MemberErr::Fatal(e), _)) => return Err(e),
+                    Err((MemberErr::Transport(e), group)) => {
+                        last_transport = e;
+                        pending.extend(group);
+                    }
+                }
+            }
+        }
+        Err(QueueError(format!(
+            "publish failed after re-routing: {last_transport}"
+        )))
+    }
+
+    fn register_consumer(&self) -> u64 {
+        let id = self.next_consumer.fetch_add(1, Ordering::Relaxed);
+        self.consumers
+            .lock()
+            .unwrap()
+            .insert(id, vec![None; self.members.len()]);
+        id
+    }
+
+    /// See [`FederatedClient::try_set_consumer_lease`] — the trait
+    /// surface returns `()`, so declaration failures are best-effort
+    /// here; callers that must know (the CLI worker loop) use the
+    /// fallible inherent method directly.
+    fn set_consumer_lease(&self, consumer: u64, lease: Option<Duration>) {
+        self.try_set_consumer_lease(consumer, lease).ok();
+    }
+
+    /// Beats only the members that can actually hold deliveries from
+    /// this handle (those appearing in the outstanding tag map) — a
+    /// worker with a 2-delivery window must not pay one round trip per
+    /// federation member per beat.
+    fn heartbeat(&self, consumer: u64) -> usize {
+        let holding: Vec<usize> = {
+            let tags = self.tags.lock().unwrap();
+            let mut members: Vec<usize> = tags.values().map(|(idx, _)| *idx).collect();
+            members.sort_unstable();
+            members.dedup();
+            members
+        };
+        let mut extended = 0usize;
+        for idx in holding {
+            if !self.up[idx].load(Ordering::SeqCst) {
+                continue;
+            }
+            match self.snapshot(idx) {
+                Snapshot::Local(b) => {
+                    if let Some(local) = self.existing_local_consumer(consumer, idx) {
+                        extended += b.heartbeat(local);
+                    }
+                }
+                Snapshot::DeadLocal => {}
+                Snapshot::Remote => {
+                    extended += self
+                        .member_remote(idx, |c| c.heartbeat())
+                        .map(|n| n as usize)
+                        .unwrap_or(0);
+                }
+            }
+        }
+        extended
+    }
+
+    /// Poll the members that own the requested queues. One owner blocks
+    /// for the full timeout; several are probed round-robin in short
+    /// slices until the deadline (the federation has no cross-member
+    /// wakeup channel — members are share-nothing by design).
+    fn fetch_n(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        let mut out = Vec::new();
+        if queues.is_empty() || max_n == 0 {
+            return out;
+        }
+        let deadline = Instant::now()
+            .checked_add(timeout)
+            .unwrap_or_else(|| Instant::now() + Duration::from_secs(86_400));
+        loop {
+            // Re-grouped every pass: a failover mid-wait moves queues.
+            let mut groups: BTreeMap<usize, Vec<&str>> = BTreeMap::new();
+            for q in queues {
+                if let Some(i) = self.owner_of(q) {
+                    groups.entry(i).or_default().push(*q);
+                }
+            }
+            if groups.is_empty() {
+                return out; // every member down: nothing to wait for
+            }
+            let multi = groups.len() > 1;
+            for (idx, qs) in &groups {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                // The first delivery waits; afterwards only drain what
+                // is already ready on the remaining members.
+                let slice = if !out.is_empty() {
+                    Duration::ZERO
+                } else if multi {
+                    remaining.min(Duration::from_millis(20))
+                } else {
+                    remaining
+                };
+                let want = max_n - out.len();
+                out.extend(self.member_fetch(*idx, consumer, qs, prefetch, want, slice));
+                if out.len() >= max_n {
+                    return out;
+                }
+            }
+            if !out.is_empty() || Instant::now() >= deadline {
+                return out;
+            }
+        }
+    }
+
+    fn ack(&self, tag: u64) -> Result<(), QueueError> {
+        let (idx, mtag) = self.take_tag(tag)?;
+        match self.snapshot(idx) {
+            Snapshot::Local(b) => b.ack(mtag).map_err(QueueError::from),
+            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::Remote => self.member_remote(idx, |c| c.ack(mtag)).map_err(merr),
+        }
+    }
+
+    /// Partial-success semantics, tuned for failover windows: unknown
+    /// tags are skipped (a dead member's mappings are dropped by design,
+    /// so stragglers from its deliveries are expected and moot), every
+    /// member's group is attempted, and the acked count is returned
+    /// whenever anything succeeded — an error surfaces only when a
+    /// whole window produced nothing. Callers needing per-tag exactness
+    /// use single [`TaskQueue::ack`] calls.
+    fn ack_batch(&self, tags: &[u64]) -> Result<usize, QueueError> {
+        if tags.is_empty() {
+            return Ok(0);
+        }
+        let mut groups: BTreeMap<usize, Vec<u64>> = BTreeMap::new();
+        let mut dropped = 0usize;
+        {
+            let mut map = self.tags.lock().unwrap();
+            for t in tags {
+                match map.remove(t) {
+                    Some((idx, mtag)) => groups.entry(idx).or_default().push(mtag),
+                    None => dropped += 1,
+                }
+            }
+        }
+        let mut acked = 0usize;
+        let mut first_err: Option<QueueError> = None;
+        for (idx, mtags) in groups {
+            let r = match self.snapshot(idx) {
+                Snapshot::Local(b) => b.ack_batch(&mtags).map_err(QueueError::from),
+                Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+                Snapshot::Remote => self
+                    .member_remote(idx, |c| c.ack_batch(&mtags))
+                    .map(|n| n as usize)
+                    .map_err(merr),
+            };
+            // Attempt every member's group before reporting any failure
+            // — an early return would strand completed work unacked on
+            // healthy members.
+            match r {
+                Ok(n) => acked += n,
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) if acked == 0 && dropped == 0 => Err(e),
+            _ => Ok(acked),
+        }
+    }
+
+    fn nack(&self, tag: u64, requeue: bool) -> Result<(), QueueError> {
+        let (idx, mtag) = self.take_tag(tag)?;
+        match self.snapshot(idx) {
+            Snapshot::Local(b) => b.nack(mtag, requeue).map_err(QueueError::from),
+            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::Remote => self
+                .member_remote(idx, |c| c.nack(mtag, requeue))
+                .map_err(merr),
+        }
+    }
+
+    fn requeue(&self, tag: u64) -> Result<(), QueueError> {
+        let (idx, mtag) = self.take_tag(tag)?;
+        match self.snapshot(idx) {
+            Snapshot::Local(b) => b.requeue(mtag).map_err(QueueError::from),
+            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::Remote => self.member_remote(idx, |c| c.requeue(mtag)).map_err(merr),
+        }
+    }
+
+    /// Local members requeue everything this consumer held; remote
+    /// members recover on disconnect (their server side owns the
+    /// accounting, exactly as for a plain [`BrokerClient`]).
+    fn recover_consumer(&self, consumer: u64) -> usize {
+        {
+            let mut leases = self.consumer_leases.lock().unwrap();
+            leases.remove(&consumer);
+            let effective = leases.values().copied().max().unwrap_or(0);
+            self.lease_ms.store(effective, Ordering::SeqCst);
+        }
+        let per_member = self.consumers.lock().unwrap().remove(&consumer);
+        let mut recovered = 0usize;
+        if let Some(per_member) = per_member {
+            for (idx, local) in per_member.iter().enumerate() {
+                if let (Some(local), Snapshot::Local(b)) = (local, self.snapshot(idx)) {
+                    recovered += b.recover_consumer(*local);
+                }
+            }
+        }
+        recovered
+    }
+
+    /// Sweep every live member. Doubles as the federation's maintenance
+    /// tick: the coordinator calls this on every poll, so a dead member
+    /// accumulates transport errors and is marked down within
+    /// `down_after` ticks even with no publish traffic — and a restarted
+    /// member is probed for revival (throttled) so its WAL-recovered
+    /// queues rejoin the routing view without operator action.
+    fn reap_expired(&self) -> usize {
+        self.maybe_revive();
+        let mut reaped = 0usize;
+        for idx in self.live_indices() {
+            reaped += match self.snapshot(idx) {
+                Snapshot::Local(b) => b.reap_expired(),
+                Snapshot::DeadLocal => 0,
+                Snapshot::Remote => self
+                    .member_remote(idx, |c| c.reap())
+                    .map(|n| n as usize)
+                    .unwrap_or(0),
+            };
+        }
+        reaped
+    }
+
+    /// Aggregated over **all** live members, not just the current owner:
+    /// after a failover, tasks for one queue legitimately sit on several
+    /// members (the old owner's recovered WAL plus the new owner).
+    fn queued_step_samples(
+        &self,
+        queue: &str,
+        study_id: &str,
+        step_name: &str,
+    ) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for idx in self.live_indices() {
+            match self.snapshot(idx) {
+                Snapshot::Local(b) => {
+                    out.extend(b.queued_step_samples(queue, study_id, step_name))
+                }
+                Snapshot::DeadLocal => {}
+                Snapshot::Remote => {
+                    let r = self.member_remote(idx, |c| {
+                        c.queued_step_samples(queue, study_id, step_name)
+                    });
+                    if let Ok(ranges) = r {
+                        out.extend(ranges);
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn stats(&self, queue: &str) -> QueueStats {
+        let mut acc = QueueStats::default();
+        for idx in self.live_indices() {
+            let st = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.stats(queue)),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.stats(queue)).ok(),
+            };
+            if let Some(st) = st {
+                merge_queue_stats(&mut acc, &st);
+            }
+        }
+        acc
+    }
+
+    fn totals(&self) -> BrokerTotals {
+        let mut acc = BrokerTotals::default();
+        for idx in self.live_indices() {
+            let t = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.totals()),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.totals()).ok(),
+            };
+            if let Some(t) = t {
+                acc.published += t.published;
+                acc.delivered += t.delivered;
+                acc.acked += t.acked;
+                acc.requeued += t.requeued;
+                acc.dead_lettered += t.dead_lettered;
+                acc.lease_expired += t.lease_expired;
+            }
+        }
+        acc
+    }
+
+    fn queue_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for idx in self.live_indices() {
+            match self.snapshot(idx) {
+                Snapshot::Local(b) => names.extend(b.queue_names()),
+                Snapshot::DeadLocal => {}
+                Snapshot::Remote => {
+                    if let Ok(qs) = self.member_remote(idx, |c| c.queues()) {
+                        names.extend(qs);
+                    }
+                }
+            }
+        }
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Consumer ids in the merged report are member-local (two members
+    /// can both report a consumer 1); the federation section of `merlin
+    /// status` names members alongside, which is what operators key on.
+    fn lease_stats(&self) -> LeaseStats {
+        let mut acc = LeaseStats::default();
+        for idx in self.live_indices() {
+            let st = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.lease_stats()),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.lease_stats()).ok(),
+            };
+            if let Some(st) = st {
+                merge_lease_stats(&mut acc, st);
+            }
+        }
+        acc
+    }
+
+    fn durability_stats(&self) -> DurabilityStats {
+        let mut acc = DurabilityStats::default();
+        for idx in self.live_indices() {
+            let st = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.durability_stats()),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.durability()).ok(),
+            };
+            if let Some(st) = st {
+                merge_durability(&mut acc, &st);
+            }
+        }
+        acc
+    }
+
+    fn depth(&self) -> usize {
+        let mut depth = 0usize;
+        for idx in self.live_indices() {
+            depth += match self.snapshot(idx) {
+                Snapshot::Local(b) => b.depth(),
+                Snapshot::DeadLocal => 0,
+                Snapshot::Remote => self.member_remote(idx, |c| c.depth()).unwrap_or(0),
+            };
+        }
+        depth
+    }
+
+    fn purge(&self, queue: &str) -> usize {
+        let mut purged = 0usize;
+        for idx in self.live_indices() {
+            purged += match self.snapshot(idx) {
+                Snapshot::Local(b) => b.purge(queue),
+                Snapshot::DeadLocal => 0,
+                Snapshot::Remote => self.member_remote(idx, |c| c.purge(queue)).unwrap_or(0),
+            };
+        }
+        purged
+    }
+
+    fn failed_over(&self) -> Vec<String> {
+        std::mem::take(&mut *self.downs.lock().unwrap())
+    }
+
+    fn member_health(&self) -> Vec<MemberHealth> {
+        (0..self.members.len())
+            .map(|idx| {
+                let m = self.members[idx].lock().unwrap();
+                MemberHealth {
+                    name: self.names[idx].clone(),
+                    up: self.up[idx].load(Ordering::SeqCst),
+                    errors: m.total_errors,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{ControlMsg, Payload, StepTask, StepTemplate, WorkSpec};
+    use std::collections::HashSet;
+
+    fn ping(queue: &str, token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            queue,
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    fn local_fed(n: usize) -> (Vec<Broker>, FederatedClient) {
+        let brokers: Vec<Broker> = (0..n).map(|_| Broker::default()).collect();
+        let fed = FederatedClient::local(brokers.clone(), FederationConfig::default());
+        (brokers, fed)
+    }
+
+    #[test]
+    fn rendezvous_spreads_queues_over_members() {
+        let (_brokers, fed) = local_fed(4);
+        let mut per_member = [0usize; 4];
+        for q in 0..64 {
+            let owner = fed.owner_of(&format!("m.step{q}")).unwrap();
+            per_member[owner] += 1;
+        }
+        // 64 queues over 4 members: every member owns a meaningful share
+        // (the exact split is hash-determined but must not be degenerate).
+        for (i, n) in per_member.iter().enumerate() {
+            assert!(*n >= 4, "member {i} owns only {n}/64 queues: {per_member:?}");
+        }
+    }
+
+    #[test]
+    fn losing_a_member_moves_only_its_queues() {
+        let (_brokers, fed) = local_fed(4);
+        let queues: Vec<String> = (0..64).map(|q| format!("m.step{q}")).collect();
+        let before: Vec<usize> = queues.iter().map(|q| fed.owner_of(q).unwrap()).collect();
+        fed.kill_member(2);
+        for (q, owner_before) in queues.iter().zip(&before) {
+            let owner_after = fed.owner_of(q).unwrap();
+            if *owner_before != 2 {
+                assert_eq!(owner_after, *owner_before, "{q} moved needlessly");
+            } else {
+                assert_ne!(owner_after, 2, "{q} still routed to the dead member");
+            }
+        }
+    }
+
+    #[test]
+    fn publish_routes_each_queue_to_exactly_one_member() {
+        let (brokers, fed) = local_fed(3);
+        let mut tasks = Vec::new();
+        for q in 0..8 {
+            for t in 0..10 {
+                tasks.push(ping(&format!("m.s{q}"), &format!("{q}-{t}")));
+            }
+        }
+        fed.publish_batch(tasks).unwrap();
+        for q in 0..8 {
+            let name = format!("m.s{q}");
+            let holders = brokers
+                .iter()
+                .filter(|b| b.stats(&name).published > 0)
+                .count();
+            assert_eq!(holders, 1, "queue {name} split across members");
+            let owner = fed.owner_of(&name).unwrap();
+            assert_eq!(brokers[owner].stats(&name).published, 10);
+        }
+        assert_eq!(fed.depth(), 80);
+    }
+
+    #[test]
+    fn fetch_ack_roundtrip_remaps_tags_across_members() {
+        let (brokers, fed) = local_fed(3);
+        let queues: Vec<String> = (0..6).map(|q| format!("m.s{q}")).collect();
+        let mut tasks = Vec::new();
+        for q in &queues {
+            for t in 0..5 {
+                tasks.push(ping(q, &format!("{q}-{t}")));
+            }
+        }
+        fed.publish_batch(tasks).unwrap();
+        let c = fed.register_consumer();
+        let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+        let mut tags = Vec::new();
+        loop {
+            let got = fed.fetch_n(c, &refs, 0, 8, Duration::from_millis(50));
+            if got.is_empty() {
+                break;
+            }
+            tags.extend(got.iter().map(|d| d.tag));
+        }
+        assert_eq!(tags.len(), 30);
+        let uniq: HashSet<u64> = tags.iter().copied().collect();
+        assert_eq!(uniq.len(), 30, "federated tags must be unique");
+        assert_eq!(fed.ack_batch(&tags).unwrap(), 30);
+        assert_eq!(fed.totals().acked, 30);
+        for b in &brokers {
+            assert_eq!(b.inflight(), 0);
+            assert_eq!(b.depth(), 0);
+        }
+    }
+
+    #[test]
+    fn killed_member_reroutes_publishes_and_reports_once() {
+        let (brokers, fed) = local_fed(3);
+        let owner = fed.owner_of("m.sim").unwrap();
+        fed.publish_batch(vec![ping("m.sim", "pre")]).unwrap();
+        assert_eq!(brokers[owner].depth(), 1);
+        fed.kill_member(owner);
+        assert_eq!(fed.failed_over(), vec![format!("local-{owner}")]);
+        assert!(fed.failed_over().is_empty(), "transition reported once");
+        // The dead member's content is gone from the aggregate view and
+        // new publishes land on the surviving owner.
+        assert_eq!(fed.depth(), 0);
+        fed.publish_batch(vec![ping("m.sim", "post")]).unwrap();
+        let new_owner = fed.owner_of("m.sim").unwrap();
+        assert_ne!(new_owner, owner);
+        assert_eq!(brokers[new_owner].stats("m.sim").published, 1);
+        assert_eq!(fed.live_count(), 2);
+        let health = fed.member_health();
+        assert!(!health[owner].up);
+        assert_eq!(health.iter().filter(|h| h.up).count(), 2);
+    }
+
+    #[test]
+    fn restore_member_routes_queues_back() {
+        let (_brokers, fed) = local_fed(2);
+        let owner = fed.owner_of("m.sim").unwrap();
+        fed.kill_member(owner);
+        assert_ne!(fed.owner_of("m.sim").unwrap(), owner);
+        let fresh = Broker::default();
+        fed.restore_member(owner, fresh.clone());
+        assert_eq!(fed.owner_of("m.sim").unwrap(), owner);
+        fed.publish_batch(vec![ping("m.sim", "back")]).unwrap();
+        assert_eq!(fresh.depth(), 1);
+    }
+
+    #[test]
+    fn all_members_down_is_an_error_not_a_hang() {
+        let (_brokers, fed) = local_fed(1);
+        fed.kill_member(0);
+        let err = fed.publish_batch(vec![ping("q", "x")]).unwrap_err();
+        assert!(err.to_string().contains("no live federation member"));
+        let c = fed.register_consumer();
+        let got = fed.fetch_n(c, &["q"], 0, 4, Duration::from_millis(10));
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn lease_fans_out_and_heartbeats_extend() {
+        let (_brokers, fed) = local_fed(2);
+        let mut tasks = Vec::new();
+        for q in 0..4 {
+            tasks.push(ping(&format!("m.s{q}"), "t"));
+        }
+        fed.publish_batch(tasks).unwrap();
+        let c = fed.register_consumer();
+        fed.set_consumer_lease(c, Some(Duration::from_millis(30_000)));
+        let refs = ["m.s0", "m.s1", "m.s2", "m.s3"];
+        let got = fed.fetch_n(c, &refs, 0, 4, Duration::from_millis(200));
+        assert_eq!(got.len(), 4);
+        assert_eq!(fed.lease_stats().active, 4);
+        assert_eq!(fed.heartbeat(c), 4, "every held delivery extended");
+        let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+        fed.ack_batch(&tags).unwrap();
+        assert_eq!(fed.lease_stats().active, 0);
+    }
+
+    #[test]
+    fn recover_consumer_requeues_on_local_members() {
+        let (_brokers, fed) = local_fed(2);
+        fed.publish_batch(vec![ping("m.a", "1"), ping("m.b", "2")])
+            .unwrap();
+        let c = fed.register_consumer();
+        let got = fed.fetch_n(c, &["m.a", "m.b"], 0, 2, Duration::from_millis(200));
+        assert_eq!(got.len(), 2);
+        assert_eq!(fed.depth(), 0);
+        assert_eq!(fed.recover_consumer(c), 2);
+        assert_eq!(fed.depth(), 2, "unacked deliveries requeued");
+    }
+
+    #[test]
+    fn queued_step_samples_aggregates_across_members() {
+        // Simulate the post-failover shape: tasks for one queue sitting
+        // on two members (old owner's WAL recovery + new owner).
+        let (brokers, fed) = local_fed(2);
+        let template = StepTemplate {
+            study_id: "st".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 10,
+            seed: 0,
+        };
+        for (b, (lo, hi)) in brokers.iter().zip([(0u64, 10u64), (20, 30)]) {
+            b.publish(TaskEnvelope::new(
+                "m.sim",
+                Payload::Step(StepTask {
+                    template: template.clone(),
+                    lo,
+                    hi,
+                }),
+            ))
+            .unwrap();
+        }
+        let ranges = fed.queued_step_samples("m.sim", "st", "sim");
+        assert_eq!(ranges, vec![(0, 10), (20, 30)]);
+    }
+
+    #[test]
+    fn unknown_tag_is_an_error() {
+        let (_brokers, fed) = local_fed(2);
+        assert!(fed.ack(999).is_err());
+        assert!(fed.requeue(999).is_err());
+        assert!(fed.nack(999, true).is_err());
+    }
+
+    #[test]
+    fn ack_batch_reports_partial_success_past_dead_tags() {
+        // A failover window: some tags in the batch belonged to a member
+        // that died (their mappings were dropped). The survivors' acks
+        // must still land and be counted.
+        let (_brokers, fed) = local_fed(2);
+        fed.publish_batch(vec![ping("m.a", "1"), ping("m.b", "2")])
+            .unwrap();
+        let c = fed.register_consumer();
+        let got = fed.fetch_n(c, &["m.a", "m.b"], 0, 2, Duration::from_millis(200));
+        assert_eq!(got.len(), 2);
+        let mut tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+        tags.push(424242); // stale tag from a dead member
+        assert_eq!(fed.ack_batch(&tags).unwrap(), 2);
+        assert_eq!(fed.totals().acked, 2);
+        // An all-stale window is a no-op, not an error.
+        assert_eq!(fed.ack_batch(&[424242]).unwrap(), 0);
+    }
+}

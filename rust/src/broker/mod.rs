@@ -35,17 +35,28 @@
 //! window, and have a dead worker's deliveries reaped back to their
 //! queues without consuming a retry — see the lease section of
 //! [`core::Broker`] and DESIGN.md "Iterative Steering & Leases".
+//!
+//! Scale-out is client-side: [`federation`] routes every queue to one of
+//! N share-nothing broker members by rendezvous hashing, fails over when
+//! a member dies, and aggregates stats across the fleet. [`api`] defines
+//! the [`api::TaskQueue`] seam both the single [`core::Broker`] and a
+//! [`federation::FederatedClient`] implement, so the coordinator and
+//! workers are federation-agnostic — see DESIGN.md "Federation".
 
+pub mod api;
 pub mod client;
 #[allow(clippy::module_inception)]
 pub mod core;
+pub mod federation;
 pub mod net;
 pub mod snapshot;
 pub mod wal;
 pub mod wire;
 
+pub use self::api::{MemberHealth, QueueError, TaskQueue};
 pub use self::core::{
     Broker, BrokerConfig, BrokerError, BrokerTotals, ConsumerLease, Delivery, DurabilityStats,
     LeaseStats, QueueStats, NUM_SHARDS,
 };
+pub use self::federation::{rendezvous_weight, FederatedClient, FederationConfig};
 pub use self::wal::{DurabilityConfig, FsyncPolicy};

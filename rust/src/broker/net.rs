@@ -41,12 +41,19 @@ pub const SERVER_MAX_WIRE: u64 = 3;
 pub const MAX_POP_WINDOW: usize = 1024;
 
 /// Handle to a running broker server. Dropping does not stop it; call
-/// [`BrokerServer::shutdown`].
+/// [`BrokerServer::shutdown`] (graceful) or
+/// [`BrokerServer::shutdown_hard`] (crash simulation).
 pub struct BrokerServer {
     /// The bound address (resolves port 0 to the ephemeral port chosen).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Live connection handles (clones keyed by connection id; each
+    /// connection thread removes its entry on exit, so the registry
+    /// holds exactly the live set). A hard shutdown severs these —
+    /// federation chaos tests and `kill -9` simulations need the member
+    /// to actually go silent, not merely stop accepting newcomers.
+    conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>,
 }
 
 impl BrokerServer {
@@ -56,12 +63,16 @@ impl BrokerServer {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>> =
+            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let conns2 = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name("broker-accept".into())
             .spawn(move || {
                 // Connection threads are detached: they exit when their
                 // client closes. Joining them here would deadlock shutdown
                 // against still-connected clients.
+                let mut next_conn = 0u64;
                 loop {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
@@ -72,9 +83,20 @@ impl BrokerServer {
                             }
                             let broker = broker.clone();
                             stream.set_nodelay(true).ok();
+                            let conn_id = next_conn;
+                            next_conn += 1;
+                            if let Ok(clone) = stream.try_clone() {
+                                conns2.lock().unwrap().insert(conn_id, clone);
+                            }
+                            let registry = conns2.clone();
                             std::thread::Builder::new()
                                 .name("broker-conn".into())
-                                .spawn(move || handle_conn(broker, stream))
+                                .spawn(move || {
+                                    handle_conn(broker, stream);
+                                    // Keep the registry bounded by the
+                                    // live set (a handle here pins a fd).
+                                    registry.lock().unwrap().remove(&conn_id);
+                                })
                                 .expect("spawn conn thread");
                         }
                         Err(_) => {
@@ -92,11 +114,29 @@ impl BrokerServer {
             addr: local,
             stop,
             accept_thread: Some(accept_thread),
+            conns,
         })
     }
 
     /// Stop accepting. Existing connections end when clients disconnect.
     pub fn shutdown(mut self) {
+        self.stop_accepting();
+    }
+
+    /// Crash the server: stop accepting **and** sever every established
+    /// connection. Clients observe transport errors on their next
+    /// operation — exactly what a federation's down-detection feeds on.
+    /// Unacked deliveries are requeued into the (now unreachable) broker
+    /// by each dying connection's consumer recovery, mirroring what a
+    /// real broker process death leaves behind for WAL recovery.
+    pub fn shutdown_hard(mut self) {
+        self.stop_accepting();
+        for (_, stream) in self.conns.lock().unwrap().drain() {
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
+
+    fn stop_accepting(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Wake the blocking accept with a self-connection. Only join if
         // the wakeup actually connected — otherwise the accept thread may
@@ -364,6 +404,32 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
                 ("recovered", Json::num(st.recovered as f64)),
             ])
         }
+        Some("totals") => {
+            let t = broker.totals();
+            wire::ok(vec![
+                ("published", Json::num(t.published as f64)),
+                ("delivered", Json::num(t.delivered as f64)),
+                ("acked", Json::num(t.acked as f64)),
+                ("requeued", Json::num(t.requeued as f64)),
+                ("dead_lettered", Json::num(t.dead_lettered as f64)),
+                ("lease_expired", Json::num(t.lease_expired as f64)),
+            ])
+        }
+        Some("queued_ranges") => {
+            // Recovery-aware resubmission over TCP: which sample ranges
+            // of (study, step) still sit queued or in flight on `queue`.
+            // Federated coordinators subtract this across members before
+            // re-enqueueing after a failover or member restart.
+            let queue = req.get("queue").as_str().unwrap_or("");
+            let study = req.get("study").as_str().unwrap_or("");
+            let step = req.get("step").as_str().unwrap_or("");
+            let ranges: Vec<Json> = broker
+                .queued_step_samples(queue, study, step)
+                .into_iter()
+                .map(|(lo, hi)| Json::arr(vec![Json::num(lo as f64), Json::num(hi as f64)]))
+                .collect();
+            wire::ok(vec![("ranges", Json::arr(ranges))])
+        }
         Some("stats") => {
             let queue = req.get("queue").as_str().unwrap_or("");
             let st = broker.stats(queue);
@@ -545,6 +611,23 @@ mod tests {
     }
 
     #[test]
+    fn hard_shutdown_severs_established_clients() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("pre")).unwrap();
+        server.shutdown_hard();
+        // The established connection is gone: the next op is a transport
+        // error (not a server error), which is what federation
+        // down-detection keys on.
+        let err = client.publish(&ping("post")).unwrap_err();
+        assert!(
+            matches!(err, crate::broker::client::ClientError::Wire(_)),
+            "expected a wire error, got {err:?}"
+        );
+    }
+
+    #[test]
     fn shutdown_is_prompt() {
         let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
         let t0 = std::time::Instant::now();
@@ -603,6 +686,41 @@ mod tests {
             "lease expiry consumed no retry"
         );
         assert!(producer.stats("q").unwrap().lease_expired >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn totals_and_queued_ranges_over_tcp() {
+        use crate::task::{StepTask, StepTemplate, WorkSpec};
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        let template = StepTemplate {
+            study_id: "st".into(),
+            step_name: "sim".into(),
+            work: WorkSpec::Noop,
+            samples_per_task: 5,
+            seed: 0,
+        };
+        client
+            .publish(&TaskEnvelope::new(
+                "q",
+                Payload::Step(StepTask {
+                    template,
+                    lo: 10,
+                    hi: 15,
+                }),
+            ))
+            .unwrap();
+        assert_eq!(client.totals().unwrap().published, 1);
+        assert_eq!(
+            client.queued_step_samples("q", "st", "sim").unwrap(),
+            vec![(10, 15)]
+        );
+        assert!(client
+            .queued_step_samples("q", "other", "sim")
+            .unwrap()
+            .is_empty());
         server.shutdown();
     }
 

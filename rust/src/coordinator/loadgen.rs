@@ -1,0 +1,718 @@
+//! `merlin loadgen` — an open-loop stress harness for the (federated)
+//! broker tier.
+//!
+//! The paper's scaling argument is architectural: add broker servers and
+//! workers independently and the ensemble grows. This module turns that
+//! claim into a measurement. It spins up N broker members **in-process**
+//! (real TCP servers on loopback, speaking the real wire v2/v3 frames),
+//! drives them with M producers × W workers over S step queues, and
+//! reports aggregate throughput plus enqueue / deliver / ack latency
+//! percentiles as CSV + JSON under `results/`.
+//!
+//! Workload shape is configurable: queue skew (uniform or zipf — real
+//! studies hammer a hot step while others trickle), payload-size
+//! distribution, delivery leases, and an optional chaos switch that
+//! shuts one member's server down mid-run to exercise down-detection and
+//! re-routing under load.
+//!
+//! [`run_scaling`] is the fig6-style section: the same workload against
+//! 1, 2, and 4 federated members with a fixed client-handle budget. One
+//! federated handle is one connection (channel) per member, so the
+//! member count sets the aggregate channel capacity — the federation's
+//! scaling claim in its sharpest client-observable form.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::broker::api::TaskQueue;
+use crate::broker::core::Broker;
+use crate::broker::federation::{FederatedClient, FederationConfig};
+use crate::broker::net::BrokerServer;
+use crate::metrics::series::Series;
+use crate::task::{ControlMsg, Payload, TaskEnvelope};
+use crate::util::json::{to_string, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Loadgen workload configuration (`merlin loadgen` flags).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Federation members (in-process TCP servers).
+    pub members: usize,
+    /// Producer threads.
+    pub producers: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Distinct step queues (`lg.s0` … `lg.s{S-1}`).
+    pub steps: usize,
+    /// Total tasks across all producers.
+    pub tasks: u64,
+    /// Tasks per publish batch.
+    pub batch: usize,
+    /// Queue-pick skew: 0 = uniform; otherwise the zipf exponent (1.0 is
+    /// the classic heavy head — step 0 dominates).
+    pub zipf: f64,
+    /// Payload padding, drawn uniformly from `[payload_min, payload_max]`
+    /// bytes per task.
+    pub payload_min: usize,
+    /// See [`LoadgenConfig::payload_min`].
+    pub payload_max: usize,
+    /// Worker delivery lease (ms; 0 = unleased).
+    pub lease_ms: u64,
+    /// Chaos: shut one member's server down after this fraction of the
+    /// corpus has been enqueued (e.g. 0.3). The victim is the owner of
+    /// `lg.s0` under full membership. `None` = no chaos.
+    pub kill_member_at: Option<f64>,
+    /// Share one federated handle per role (all producers on one, all
+    /// workers on another) instead of one handle per thread. This is the
+    /// scaling-section mode: the handle's per-member channel is the
+    /// serialization point, so capacity grows with member count.
+    pub shared_handles: bool,
+    /// RNG seed (workload shape is deterministic given the seed).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            members: 2,
+            producers: 4,
+            workers: 4,
+            steps: 8,
+            tasks: 40_000,
+            batch: 128,
+            zipf: 0.0,
+            payload_min: 64,
+            payload_max: 512,
+            lease_ms: 0,
+            kill_member_at: None,
+            shared_handles: false,
+            seed: 7,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// Shrink the workload to seconds (CI's `MERLIN_BENCH_QUICK=1`).
+    pub fn quicken(&mut self) {
+        self.tasks = self.tasks.min(6_000);
+    }
+}
+
+/// Outcome of one loadgen run (one row of the CSV).
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Members the run federated over.
+    pub members: usize,
+    /// Tasks successfully enqueued.
+    pub enqueued: u64,
+    /// Deliveries workers received (duplicates included).
+    pub delivered: u64,
+    /// Deliveries successfully acked.
+    pub acked: u64,
+    /// Tasks delivered more than once (should be 0 without chaos).
+    pub duplicates: u64,
+    /// Enqueued tasks never delivered (a killed member's queue content;
+    /// 0 without chaos).
+    pub lost: u64,
+    /// Wall time of the producer phase (s).
+    pub enqueue_wall_s: f64,
+    /// Wall time until the last worker drained (s).
+    pub total_wall_s: f64,
+    /// Aggregate enqueue throughput (tasks/s over the producer phase).
+    pub enqueue_per_s: f64,
+    /// Aggregate deliver+ack throughput (tasks/s over the whole run).
+    pub deliver_per_s: f64,
+    /// Publish-batch latency percentiles (µs per batch).
+    pub enqueue_p50_us: f64,
+    /// See [`LoadgenReport::enqueue_p50_us`].
+    pub enqueue_p95_us: f64,
+    /// See [`LoadgenReport::enqueue_p50_us`].
+    pub enqueue_p99_us: f64,
+    /// Publish-to-delivery latency percentiles (µs per task).
+    pub deliver_p50_us: f64,
+    /// See [`LoadgenReport::deliver_p50_us`].
+    pub deliver_p95_us: f64,
+    /// See [`LoadgenReport::deliver_p50_us`].
+    pub deliver_p99_us: f64,
+    /// Fetch-to-ack latency percentiles (µs per batch).
+    pub ack_p50_us: f64,
+    /// See [`LoadgenReport::ack_p50_us`].
+    pub ack_p95_us: f64,
+    /// See [`LoadgenReport::ack_p50_us`].
+    pub ack_p99_us: f64,
+    /// Members that failed over during the run (chaos victims).
+    pub failovers: Vec<String>,
+}
+
+/// Zipf-or-uniform queue picker over `steps` queues.
+struct QueuePick {
+    cdf: Vec<f64>,
+}
+
+impl QueuePick {
+    fn new(steps: usize, zipf: f64) -> Self {
+        let weights: Vec<f64> = (0..steps)
+            .map(|k| {
+                if zipf <= 0.0 {
+                    1.0
+                } else {
+                    1.0 / ((k + 1) as f64).powf(zipf)
+                }
+            })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Self { cdf }
+    }
+
+    fn pick(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64();
+        self.cdf.iter().position(|c| x <= *c).unwrap_or(self.cdf.len() - 1)
+    }
+}
+
+/// Shared run state across producer/worker threads.
+struct RunState {
+    epoch: Instant,
+    enqueued: AtomicU64,
+    delivered: AtomicU64,
+    acked: AtomicU64,
+    duplicates: AtomicU64,
+    producers_done: AtomicBool,
+    seen: Mutex<HashSet<u64>>,
+    enqueue_lat_us: Mutex<Vec<f64>>,
+    deliver_lat_us: Mutex<Vec<f64>>,
+    ack_lat_us: Mutex<Vec<f64>>,
+}
+
+impl RunState {
+    fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            enqueued: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            acked: AtomicU64::new(0),
+            duplicates: AtomicU64::new(0),
+            producers_done: AtomicBool::new(false),
+            seen: Mutex::new(HashSet::new()),
+            enqueue_lat_us: Mutex::new(Vec::new()),
+            deliver_lat_us: Mutex::new(Vec::new()),
+            ack_lat_us: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+fn payload_token(seq: u64, now_us: u64, pad: usize) -> String {
+    let mut token = format!("{seq} {now_us} ");
+    token.push_str(&"x".repeat(pad));
+    token
+}
+
+/// Parse `(seq, publish_us)` back out of a loadgen ping token.
+fn parse_token(token: &str) -> Option<(u64, u64)> {
+    let mut parts = token.split_whitespace();
+    Some((parts.next()?.parse().ok()?, parts.next()?.parse().ok()?))
+}
+
+fn queue_names(steps: usize) -> Vec<String> {
+    (0..steps).map(|s| format!("lg.s{s}")).collect()
+}
+
+/// Drive one full loadgen run: spin up `cfg.members` broker servers,
+/// run the producer and worker fleets against the federation, optionally
+/// kill a member mid-run, drain, and report.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> LoadgenReport {
+    assert!(cfg.members > 0 && cfg.producers > 0 && cfg.workers > 0 && cfg.steps > 0);
+    // In-process members: real TCP servers on ephemeral loopback ports.
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..cfg.members {
+        let server =
+            BrokerServer::serve(Broker::default(), "127.0.0.1:0").expect("bind loadgen member");
+        addrs.push(server.addr.to_string());
+        servers.push(Some(server));
+    }
+    let servers = Arc::new(Mutex::new(servers));
+    let fed_cfg = FederationConfig::default();
+    let connect = {
+        let addrs = addrs.clone();
+        let fed_cfg = fed_cfg.clone();
+        move || Arc::new(FederatedClient::connect(&addrs, fed_cfg.clone()).expect("connect"))
+    };
+    // Shared-handle mode: one producer handle + one worker handle total.
+    let shared_producer = cfg.shared_handles.then(&connect);
+    let shared_worker = cfg.shared_handles.then(&connect);
+
+    let state = Arc::new(RunState::new());
+    let queues = queue_names(cfg.steps);
+    let mut failovers: Vec<String> = Vec::new();
+
+    // Chaos: pick the victim while every member is still up, then let a
+    // watcher shut its server down once the enqueue crosses the mark.
+    let chaos = cfg.kill_member_at.map(|frac| {
+        let probe = FederatedClient::connect(&addrs, fed_cfg.clone()).expect("probe");
+        let victim = probe.owner_of(&queues[0]).expect("live member");
+        let at = ((cfg.tasks as f64) * frac) as u64;
+        (victim, at)
+    });
+    let watcher = chaos.map(|(victim, at)| {
+        let servers = servers.clone();
+        let state = state.clone();
+        std::thread::spawn(move || {
+            while state.enqueued.load(Ordering::Relaxed) < at {
+                if state.producers_done.load(Ordering::Relaxed) {
+                    // The corpus never reached the kill mark (undersized
+                    // run): leave the member alive rather than killing a
+                    // healthy fleet during the drain.
+                    return None;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Crash, not graceful stop: sever established connections so
+            // every participant observes transport errors and fails over.
+            if let Some(server) = servers.lock().unwrap()[victim].take() {
+                server.shutdown_hard();
+            }
+            Some(victim)
+        })
+    });
+
+    // Workers first (consumers standing by, as in a real deployment).
+    let mut worker_handles = Vec::new();
+    for w in 0..cfg.workers {
+        let fed = shared_worker.clone().unwrap_or_else(&connect);
+        let state = state.clone();
+        let queues = queues.clone();
+        let lease_ms = cfg.lease_ms;
+        worker_handles.push(std::thread::spawn(move || {
+            worker_loop(&*fed, &state, &queues, lease_ms, w)
+        }));
+    }
+
+    // Producers.
+    let enqueue_t0 = Instant::now();
+    let mut producer_handles = Vec::new();
+    for p in 0..cfg.producers {
+        let fed = shared_producer.clone().unwrap_or_else(&connect);
+        let state = state.clone();
+        let queues = queues.clone();
+        let cfg = cfg.clone();
+        producer_handles.push(std::thread::spawn(move || {
+            producer_loop(&*fed, &state, &queues, &cfg, p)
+        }));
+    }
+    for h in producer_handles {
+        h.join().expect("producer panicked");
+    }
+    let enqueue_wall_s = enqueue_t0.elapsed().as_secs_f64();
+    state.producers_done.store(true, Ordering::SeqCst);
+
+    for h in worker_handles {
+        h.join().expect("worker panicked");
+    }
+    let total_wall_s = enqueue_t0.elapsed().as_secs_f64();
+    if let Some(w) = watcher {
+        if let Some(victim) = w.join().expect("watcher panicked") {
+            failovers.push(addrs[victim].clone());
+        }
+    }
+    for server in servers.lock().unwrap().iter_mut() {
+        if let Some(server) = server.take() {
+            server.shutdown();
+        }
+    }
+
+    let enqueued = state.enqueued.load(Ordering::SeqCst);
+    let delivered = state.delivered.load(Ordering::SeqCst);
+    let acked = state.acked.load(Ordering::SeqCst);
+    let duplicates = state.duplicates.load(Ordering::SeqCst);
+    let unique = state.seen.lock().unwrap().len() as u64;
+    let enq = state.enqueue_lat_us.lock().unwrap();
+    let del = state.deliver_lat_us.lock().unwrap();
+    let ack = state.ack_lat_us.lock().unwrap();
+    LoadgenReport {
+        members: cfg.members,
+        enqueued,
+        delivered,
+        acked,
+        duplicates,
+        lost: enqueued.saturating_sub(unique),
+        enqueue_wall_s,
+        total_wall_s,
+        enqueue_per_s: enqueued as f64 / enqueue_wall_s.max(1e-9),
+        deliver_per_s: delivered as f64 / total_wall_s.max(1e-9),
+        enqueue_p50_us: percentile(&enq, 50.0),
+        enqueue_p95_us: percentile(&enq, 95.0),
+        enqueue_p99_us: percentile(&enq, 99.0),
+        deliver_p50_us: percentile(&del, 50.0),
+        deliver_p95_us: percentile(&del, 95.0),
+        deliver_p99_us: percentile(&del, 99.0),
+        ack_p50_us: percentile(&ack, 50.0),
+        ack_p95_us: percentile(&ack, 95.0),
+        ack_p99_us: percentile(&ack, 99.0),
+        failovers,
+    }
+}
+
+fn producer_loop(
+    fed: &FederatedClient,
+    state: &RunState,
+    queues: &[String],
+    cfg: &LoadgenConfig,
+    producer: usize,
+) {
+    let mut rng = Rng::new(cfg.seed ^ (producer as u64).wrapping_mul(0x9E37_79B9));
+    let pick = QueuePick::new(cfg.steps, cfg.zipf);
+    let share = cfg.tasks / cfg.producers as u64
+        + u64::from((producer as u64) < cfg.tasks % cfg.producers as u64);
+    let mut batch: Vec<TaskEnvelope> = Vec::with_capacity(cfg.batch);
+    for i in 0..share {
+        let q = &queues[pick.pick(&mut rng)];
+        let pad = rng.range_usize(cfg.payload_min, cfg.payload_max.max(cfg.payload_min) + 1);
+        let seq = ((producer as u64) << 40) | i;
+        batch.push(TaskEnvelope::new(
+            q.clone(),
+            Payload::Control(ControlMsg::Ping {
+                token: payload_token(seq, state.now_us(), pad),
+            }),
+        ));
+        if batch.len() >= cfg.batch || i + 1 == share {
+            let n = batch.len() as u64;
+            let t0 = Instant::now();
+            match fed.publish_batch(std::mem::take(&mut batch)) {
+                Ok(()) => {
+                    state.enqueued.fetch_add(n, Ordering::Relaxed);
+                    let us = t0.elapsed().as_micros() as f64;
+                    state.enqueue_lat_us.lock().unwrap().push(us);
+                }
+                Err(_) => {
+                    // Total federation outage (all members down): stop
+                    // producing; the report's `lost` accounting explains
+                    // the shortfall.
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    fed: &FederatedClient,
+    state: &RunState,
+    queues: &[String],
+    lease_ms: u64,
+    _worker: usize,
+) -> u64 {
+    let consumer = fed.register_consumer();
+    if lease_ms > 0 {
+        fed.set_consumer_lease(consumer, Some(Duration::from_millis(lease_ms)));
+    }
+    let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+    let mut done = 0u64;
+    let mut idle_since = Instant::now();
+    loop {
+        let got = fed.fetch_n(consumer, &refs, 64, 64, Duration::from_millis(50));
+        if got.is_empty() {
+            let drained = state.producers_done.load(Ordering::SeqCst)
+                && (fed.depth() == 0 || idle_since.elapsed() > Duration::from_secs(3));
+            if drained && idle_since.elapsed() > Duration::from_millis(300) {
+                return done;
+            }
+            continue;
+        }
+        idle_since = Instant::now();
+        let t_fetch = Instant::now();
+        let now_us = state.now_us();
+        let mut tags = Vec::with_capacity(got.len());
+        {
+            let mut lat = state.deliver_lat_us.lock().unwrap();
+            let mut seen = state.seen.lock().unwrap();
+            for d in &got {
+                tags.push(d.tag);
+                if let Payload::Control(ControlMsg::Ping { token }) = &d.task.payload {
+                    if let Some((seq, pub_us)) = parse_token(token) {
+                        lat.push(now_us.saturating_sub(pub_us) as f64);
+                        if !seen.insert(seq) {
+                            state.duplicates.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        state.delivered.fetch_add(got.len() as u64, Ordering::Relaxed);
+        if let Ok(n) = fed.ack_batch(&tags) {
+            state.acked.fetch_add(n as u64, Ordering::Relaxed);
+            let us = t_fetch.elapsed().as_micros() as f64;
+            state.ack_lat_us.lock().unwrap().push(us);
+        }
+        done += got.len() as u64;
+    }
+}
+
+/// The fig6-style scaling section: the identical workload against 1, 2,
+/// and 4 federated members (plus `base.members` when it extends the
+/// ladder — `--scale --members 8` adds an 8-member point) with shared
+/// handles (fixed channel budget). Returns the per-member-count reports
+/// and the aggregate (enqueue+deliver) throughput speedup of 4 members
+/// over 1 — the gated claim stays 4-vs-1 regardless of extra points.
+pub fn run_scaling(base: &LoadgenConfig) -> (Vec<LoadgenReport>, f64) {
+    let mut ladder = vec![1usize, 2, 4];
+    if !ladder.contains(&base.members) {
+        ladder.push(base.members);
+        ladder.sort_unstable();
+    }
+    let mut reports = Vec::new();
+    for members in ladder {
+        let mut cfg = base.clone();
+        cfg.members = members;
+        cfg.shared_handles = true;
+        cfg.kill_member_at = None;
+        reports.push(run_loadgen(&cfg));
+    }
+    let agg = |r: &LoadgenReport| r.enqueue_per_s + r.deliver_per_s;
+    let one = reports.iter().find(|r| r.members == 1).expect("1-member run");
+    let four = reports.iter().find(|r| r.members == 4).expect("4-member run");
+    let speedup = agg(four) / agg(one).max(1e-9);
+    (reports, speedup)
+}
+
+/// Render the scaling section as an aligned table (stdout + CSV).
+pub fn scaling_series(reports: &[LoadgenReport]) -> Series {
+    let mut s = Series::new(
+        "federated scale-out: aggregate throughput vs member count",
+        "members",
+        &[
+            "enqueue_per_s",
+            "deliver_per_s",
+            "agg_per_s",
+            "deliver_p95_us",
+            "lost",
+        ],
+    );
+    for r in reports {
+        s.push(
+            r.members as f64,
+            vec![
+                r.enqueue_per_s,
+                r.deliver_per_s,
+                r.enqueue_per_s + r.deliver_per_s,
+                r.deliver_p95_us,
+                r.lost as f64,
+            ],
+        );
+    }
+    s
+}
+
+/// One report as a JSON object (the `results/loadgen.json` rows and the
+/// `BENCH_federation.json` data points).
+pub fn report_json(r: &LoadgenReport) -> Json {
+    Json::obj(vec![
+        ("members", Json::num(r.members as f64)),
+        ("enqueued", Json::num(r.enqueued as f64)),
+        ("delivered", Json::num(r.delivered as f64)),
+        ("acked", Json::num(r.acked as f64)),
+        ("duplicates", Json::num(r.duplicates as f64)),
+        ("lost", Json::num(r.lost as f64)),
+        ("enqueue_wall_s", Json::num(r.enqueue_wall_s)),
+        ("total_wall_s", Json::num(r.total_wall_s)),
+        ("enqueue_per_s", Json::num(r.enqueue_per_s)),
+        ("deliver_per_s", Json::num(r.deliver_per_s)),
+        ("enqueue_p50_us", Json::num(r.enqueue_p50_us)),
+        ("enqueue_p95_us", Json::num(r.enqueue_p95_us)),
+        ("enqueue_p99_us", Json::num(r.enqueue_p99_us)),
+        ("deliver_p50_us", Json::num(r.deliver_p50_us)),
+        ("deliver_p95_us", Json::num(r.deliver_p95_us)),
+        ("deliver_p99_us", Json::num(r.deliver_p99_us)),
+        ("ack_p50_us", Json::num(r.ack_p50_us)),
+        ("ack_p95_us", Json::num(r.ack_p95_us)),
+        ("ack_p99_us", Json::num(r.ack_p99_us)),
+        (
+            "failovers",
+            Json::arr(r.failovers.iter().map(|f| Json::str(f.as_str())).collect()),
+        ),
+    ])
+}
+
+/// Human-readable one-run summary.
+pub fn render_report(r: &LoadgenReport) -> String {
+    format!(
+        "loadgen [{} member(s)]: {} enqueued @ {:.0}/s, {} delivered @ {:.0}/s, \
+         {} acked, {} dup, {} lost\n  latency us (p50/p95/p99): enqueue-batch \
+         {:.0}/{:.0}/{:.0}, deliver {:.0}/{:.0}/{:.0}, ack-batch {:.0}/{:.0}/{:.0}\n{}",
+        r.members,
+        r.enqueued,
+        r.enqueue_per_s,
+        r.delivered,
+        r.deliver_per_s,
+        r.acked,
+        r.duplicates,
+        r.lost,
+        r.enqueue_p50_us,
+        r.enqueue_p95_us,
+        r.enqueue_p99_us,
+        r.deliver_p50_us,
+        r.deliver_p95_us,
+        r.deliver_p99_us,
+        r.ack_p50_us,
+        r.ack_p95_us,
+        r.ack_p99_us,
+        if r.failovers.is_empty() {
+            String::new()
+        } else {
+            format!("  failed over: {:?}\n", r.failovers)
+        }
+    )
+}
+
+/// Write `results/<stem>.{csv,json}` (and, with a scaling section,
+/// `BENCH_federation.json` — the machine-checked perf trajectory point).
+/// Distinct stems keep a scaling section and a chaos run in the same CI
+/// job from clobbering each other's artifacts.
+pub fn write_outputs(
+    reports: &[LoadgenReport],
+    speedup_4x_vs_1: Option<f64>,
+    quick: bool,
+    stem: &str,
+) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let mut s = Series::new(
+        "loadgen runs",
+        "members",
+        &[
+            "enqueue_per_s",
+            "deliver_per_s",
+            "enqueue_p95_us",
+            "deliver_p95_us",
+            "ack_p95_us",
+            "duplicates",
+            "lost",
+        ],
+    );
+    for r in reports {
+        s.push(
+            r.members as f64,
+            vec![
+                r.enqueue_per_s,
+                r.deliver_per_s,
+                r.enqueue_p95_us,
+                r.deliver_p95_us,
+                r.ack_p95_us,
+                r.duplicates as f64,
+                r.lost as f64,
+            ],
+        );
+    }
+    s.save_csv(dir, stem)?;
+    let mut pairs = vec![
+        ("quick", Json::Bool(quick)),
+        ("runs", Json::arr(reports.iter().map(report_json).collect())),
+    ];
+    if let Some(speedup) = speedup_4x_vs_1 {
+        pairs.push(("agg_speedup_4_members_vs_1", Json::num(speedup)));
+    }
+    let out = Json::obj(pairs);
+    std::fs::write(dir.join(format!("{stem}.json")), to_string(&out))?;
+    if speedup_4x_vs_1.is_some() {
+        // The trajectory point the CI bench-smoke job uploads: federation
+        // scaling, measured, with the workload parameters alongside.
+        std::fs::write("BENCH_federation.json", to_string(&out))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_pick_skews_toward_head() {
+        let mut rng = Rng::new(3);
+        let pick = QueuePick::new(8, 1.2);
+        let mut counts = [0usize; 8];
+        for _ in 0..4_000 {
+            counts[pick.pick(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[7] * 3, "{counts:?}");
+        let uniform = QueuePick::new(4, 0.0);
+        let mut counts = [0usize; 4];
+        for _ in 0..4_000 {
+            counts[uniform.pick(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!(c > 700, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        let t = payload_token(42, 12345, 16);
+        assert_eq!(parse_token(&t), Some((42, 12345)));
+        assert!(t.len() >= 16);
+        assert_eq!(parse_token("garbage"), None);
+    }
+
+    #[test]
+    fn small_loadgen_run_is_lossless() {
+        let cfg = LoadgenConfig {
+            members: 2,
+            producers: 2,
+            workers: 2,
+            steps: 4,
+            tasks: 400,
+            batch: 32,
+            ..Default::default()
+        };
+        let r = run_loadgen(&cfg);
+        assert_eq!(r.enqueued, 400);
+        assert_eq!(r.delivered, 400);
+        assert_eq!(r.acked, 400);
+        assert_eq!(r.duplicates, 0);
+        assert_eq!(r.lost, 0);
+        assert!(r.failovers.is_empty());
+        assert!(r.enqueue_per_s > 0.0 && r.deliver_per_s > 0.0);
+    }
+
+    #[test]
+    fn chaos_run_loses_only_the_victims_queue_content() {
+        let cfg = LoadgenConfig {
+            members: 3,
+            producers: 2,
+            workers: 2,
+            steps: 6,
+            tasks: 1_200,
+            batch: 16,
+            kill_member_at: Some(0.25),
+            lease_ms: 5_000,
+            ..Default::default()
+        };
+        let r = run_loadgen(&cfg);
+        assert_eq!(r.failovers.len(), 1, "exactly one member was killed");
+        // Producers must never abort: transport failures re-route to the
+        // survivors, so the whole corpus is enqueued somewhere.
+        assert_eq!(r.enqueued, 1_200, "producers kept enqueueing: {r:?}");
+        // The run keeps going on the survivors: everything that did not
+        // die with the victim's queues is delivered (loss is bounded by
+        // the victim's pre-kill backlog, strictly less than the corpus).
+        assert!(r.lost < r.enqueued, "survivors made progress: {r:?}");
+        assert!(
+            r.delivered >= r.enqueued - r.lost,
+            "unique deliveries must cover enqueued minus lost: {r:?}"
+        );
+    }
+}

@@ -13,16 +13,32 @@
 //!   exactly the missing samples (and, after a durable-broker restart,
 //!   trust broker recovery instead of blindly re-enqueueing);
 //! * [`status`] — queue depths, lease/liveness, steering progress, and
-//!   per-study completion for the CLI (text and JSON).
+//!   per-study completion for the CLI (text and JSON);
+//! * [`loadgen`] — `merlin loadgen`, the open-loop stress harness over an
+//!   in-process broker federation (throughput + latency percentiles, the
+//!   fig6-style member-scaling section, and chaos kill).
+//!
+//! Every entry point takes `&dyn TaskQueue`, so the same control plane
+//! drives one in-process broker or a whole federation
+//! ([`crate::broker::FederatedClient`]); against a federation the poll
+//! loops also detect member loss and answer it with recovery-aware
+//! resubmission.
 
+pub mod loadgen;
 pub mod orchestrate;
 pub mod resubmit;
 pub mod run;
 pub mod status;
 pub mod steer;
 
+pub use loadgen::{run_loadgen, run_scaling, LoadgenConfig, LoadgenReport};
 pub use orchestrate::{orchestrate, StudyReport};
-pub use resubmit::{resubmit_missing, resubmit_missing_trusting_broker};
-pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions};
-pub use status::{consumer_lease_json, queue_stats_json, status_json, status_report};
+pub use resubmit::{
+    resubmit_missing, resubmit_missing_trusting_broker, resubmit_wave_trusting_broker,
+};
+pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions, StepInstanceRoot};
+pub use status::{
+    broker_sections_json, consumer_lease_json, member_health_json, queue_stats_json, status_json,
+    status_report,
+};
 pub use steer::{steer, IdwProposer, SampleProposer, SteerReport};

@@ -8,10 +8,12 @@ use std::collections::{BTreeSet, HashMap};
 use std::time::{Duration, Instant};
 
 use crate::backend::state::StateStore;
-use crate::broker::core::Broker;
+use crate::broker::api::TaskQueue;
 use crate::dag::expand::{expand_study, ExpandedStudy};
 use crate::spec::study::{SpecError, StudySpec};
+use crate::task::StepTemplate;
 
+use super::resubmit::resubmit_missing_trusting_broker;
 use super::run::{step_instance_root, RunOptions};
 
 /// Outcome of a full study orchestration.
@@ -27,6 +29,10 @@ pub struct StudyReport {
     pub samples_done: u64,
     /// Samples that failed (and were never re-done).
     pub samples_failed: u64,
+    /// Samples re-enqueued by failover recovery passes (a federation
+    /// member died mid-study and its queued work was resubmitted to the
+    /// survivors). Always 0 against a single broker.
+    pub resubmitted: u64,
     /// Whether orchestration gave up at its deadline.
     pub timed_out: bool,
 }
@@ -53,8 +59,18 @@ pub(crate) struct DagRunner<'a> {
     /// instance id → index into `expanded.instances` (O(1) resolution).
     index: HashMap<&'a str, usize>,
     done: BTreeSet<String>,
-    /// instance id → (study_key, expected samples) for released instances.
-    inflight: HashMap<String, (String, u64)>,
+    /// instance id → release bookkeeping for in-flight instances.
+    inflight: HashMap<String, InflightInstance>,
+}
+
+/// What the runner remembers about a released-but-unfinished instance:
+/// enough to poll its completion *and* to resubmit its gap if a
+/// federation member dies while it is in flight.
+struct InflightInstance {
+    study_key: String,
+    expected: u64,
+    template: StepTemplate,
+    queue: String,
 }
 
 impl<'a> DagRunner<'a> {
@@ -85,7 +101,7 @@ impl<'a> DagRunner<'a> {
     /// instances unblock at once).
     pub(crate) fn release_ready(
         &mut self,
-        broker: &Broker,
+        broker: &dyn TaskQueue,
         spec: &StudySpec,
         study_id: &str,
         opts: &RunOptions,
@@ -97,11 +113,19 @@ impl<'a> DagRunner<'a> {
                 continue;
             }
             let inst = &self.expanded.instances[self.index[id.as_str()]];
-            let (key, n, root) = step_instance_root(spec, inst, study_id, opts);
+            let released = step_instance_root(spec, inst, study_id, opts);
             report.instances_run += 1;
-            report.samples_expected += n;
-            self.inflight.insert(id, (key, n));
-            wave.push(root);
+            report.samples_expected += released.n_samples;
+            self.inflight.insert(
+                id,
+                InflightInstance {
+                    study_key: released.study_key,
+                    expected: released.n_samples,
+                    template: released.template,
+                    queue: released.queue,
+                },
+            );
+            wave.push(released.root);
         }
         if !wave.is_empty() {
             broker
@@ -114,10 +138,10 @@ impl<'a> DagRunner<'a> {
     /// Fold completions observed in the backend into `done`.
     pub(crate) fn poll_completion(&mut self, state: &StateStore, report: &mut StudyReport) {
         let mut finished: Vec<String> = Vec::new();
-        for (id, (key, n)) in &self.inflight {
-            let ok = state.done_count(key) as u64;
-            let failed = state.failed_count(key) as u64;
-            if ok + failed >= *n {
+        for (id, inst) in &self.inflight {
+            let ok = state.done_count(&inst.study_key) as u64;
+            let failed = state.failed_count(&inst.study_key) as u64;
+            if ok + failed >= inst.expected {
                 report.samples_done += ok;
                 report.samples_failed += failed;
                 finished.push(id.clone());
@@ -137,10 +161,38 @@ impl<'a> DagRunner<'a> {
     /// Fold whatever partial progress the unfinished instances made into
     /// the report (the timeout path).
     pub(crate) fn account_partial(&self, state: &StateStore, report: &mut StudyReport) {
-        for (key, _) in self.inflight.values() {
-            report.samples_done += state.done_count(key) as u64;
-            report.samples_failed += state.failed_count(key) as u64;
+        for inst in self.inflight.values() {
+            report.samples_done += state.done_count(&inst.study_key) as u64;
+            report.samples_failed += state.failed_count(&inst.study_key) as u64;
         }
+    }
+
+    /// A federation member died: every in-flight instance may have lost
+    /// queued tasks with it. Run the recovery-aware resubmission pass per
+    /// instance — samples already completed (backend) or still covered by
+    /// tasks on surviving members (broker scan) are subtracted, so only
+    /// the actual gap is re-enqueued. Returns how many samples were
+    /// resubmitted.
+    pub(crate) fn resubmit_after_failover(
+        &self,
+        broker: &dyn TaskQueue,
+        state: &StateStore,
+        report: &mut StudyReport,
+    ) -> Result<u64, SpecError> {
+        let mut total = 0u64;
+        for inst in self.inflight.values() {
+            total += resubmit_missing_trusting_broker(
+                broker,
+                state,
+                &inst.template,
+                &inst.queue,
+                inst.expected,
+                None,
+            )
+            .map_err(|e| SpecError(format!("failover resubmit {}: {e}", inst.study_key)))?;
+        }
+        report.resubmitted += total;
+        Ok(total)
     }
 }
 
@@ -148,8 +200,15 @@ impl<'a> DagRunner<'a> {
 /// samples to complete, release dependents, repeat. Workers must be
 /// consuming the study's queues concurrently (this function only
 /// produces). `timeout` bounds the wait; on expiry the report flags it.
+///
+/// `broker` is any [`TaskQueue`]: one in-process broker, or a
+/// [`crate::broker::FederatedClient`] over many. Against a federation
+/// the loop doubles as the failure handler — each poll tick sweeps
+/// leases (which also drives member down-detection) and answers any
+/// member loss with a recovery-aware resubmission pass over the
+/// in-flight instances.
 pub fn orchestrate(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     state: &StateStore,
     spec: &StudySpec,
     study_id: &str,
@@ -175,7 +234,13 @@ pub fn orchestrate(
             return Ok(report);
         }
         // Redeliver anything a dead leased worker stranded, then wait.
+        // Against a federation this sweep is also the failure detector:
+        // a dead member accumulates transport errors here until it is
+        // marked down and reported through `failed_over`.
         broker.reap_expired();
+        if !broker.failed_over().is_empty() {
+            runner.resubmit_after_failover(broker, state, &mut report)?;
+        }
         std::thread::sleep(Duration::from_millis(10));
     }
 }
@@ -184,6 +249,7 @@ pub fn orchestrate(
 mod tests {
     use super::*;
     use crate::backend::store::Store;
+    use crate::broker::core::Broker;
     use crate::util::clock::RealClock;
     use crate::worker::sim::NullSimRunner;
     use crate::worker::{run_pool, WorkerConfig};

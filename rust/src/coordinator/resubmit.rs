@@ -15,7 +15,7 @@ use std::collections::BTreeSet;
 use std::path::Path;
 
 use crate::backend::state::StateStore;
-use crate::broker::core::{Broker, BrokerError};
+use crate::broker::api::{QueueError, TaskQueue};
 use crate::data::bundle::BundleLayout;
 use crate::data::crawl::crawl;
 use crate::task::StepTemplate;
@@ -29,42 +29,75 @@ pub use crate::dag::expand::ranges_of;
 /// as done if its data actually exists and decodes). Returns the number of
 /// samples requeued.
 pub fn resubmit_missing(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     state: &StateStore,
     template: &StepTemplate,
     queue: &str,
     n_samples: u64,
     data_root: Option<(&Path, &BundleLayout)>,
-) -> Result<u64, BrokerError> {
+) -> Result<u64, QueueError> {
     resubmit_inner(broker, state, template, queue, n_samples, data_root, false)
 }
 
 /// [`resubmit_missing`], minus the samples whose step tasks are already
 /// queued or in flight on the broker. This is the pass to run after a
-/// **durable** broker restart: recovery already rebuilt the unfinished
-/// tasks, so re-enqueueing them would double the work. (Safe — though
-/// pointless — against an in-memory broker too: an empty queue subtracts
+/// **durable** broker restart — recovery already rebuilt the unfinished
+/// tasks, so re-enqueueing them would double the work — and after a
+/// **federation failover**, where the survivors (and a revived member's
+/// recovered WAL) still hold part of the work. (Safe — though pointless —
+/// against an empty in-memory broker too: an empty queue subtracts
 /// nothing and the behavior degrades to [`resubmit_missing`].)
 pub fn resubmit_missing_trusting_broker(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     state: &StateStore,
     template: &StepTemplate,
     queue: &str,
     n_samples: u64,
     data_root: Option<(&Path, &BundleLayout)>,
-) -> Result<u64, BrokerError> {
+) -> Result<u64, QueueError> {
     resubmit_inner(broker, state, template, queue, n_samples, data_root, true)
 }
 
+/// The steering-wave variant of [`resubmit_missing_trusting_broker`]:
+/// instead of the dense range `[0, n)`, check exactly `candidates` (the
+/// sample ids a steering engine has injected so far — sparse and
+/// unbounded). A candidate is re-enqueued unless the backend settled it
+/// (done **or** failed — a steered sample that failed stays failed, as in
+/// a static study) or a task covering it still sits on the broker.
+pub fn resubmit_wave_trusting_broker(
+    broker: &dyn TaskQueue,
+    state: &StateStore,
+    template: &StepTemplate,
+    queue: &str,
+    candidates: &[u64],
+) -> Result<u64, QueueError> {
+    let done: BTreeSet<u64> = state.done_samples(&template.study_id).into_iter().collect();
+    let failed: BTreeSet<u64> = state
+        .failed_samples(&template.study_id)
+        .into_iter()
+        .collect();
+    let mut missing: BTreeSet<u64> = candidates
+        .iter()
+        .filter(|s| !done.contains(s) && !failed.contains(s))
+        .copied()
+        .collect();
+    for (lo, hi) in broker.queued_step_samples(queue, &template.study_id, &template.step_name) {
+        for s in lo..hi {
+            missing.remove(&s);
+        }
+    }
+    publish_missing(broker, template, queue, missing)
+}
+
 fn resubmit_inner(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     state: &StateStore,
     template: &StepTemplate,
     queue: &str,
     n_samples: u64,
     data_root: Option<(&Path, &BundleLayout)>,
     trust_broker: bool,
-) -> Result<u64, BrokerError> {
+) -> Result<u64, QueueError> {
     let mut missing: BTreeSet<u64> = state
         .missing_samples(&template.study_id, n_samples)
         .into_iter()
@@ -92,6 +125,17 @@ fn resubmit_inner(
             }
         }
     }
+    publish_missing(broker, template, queue, missing)
+}
+
+/// Stamp the missing set into content-addressed step tasks and publish
+/// them as one batch (routed per-queue by a federation).
+fn publish_missing(
+    broker: &dyn TaskQueue,
+    template: &StepTemplate,
+    queue: &str,
+    missing: BTreeSet<u64>,
+) -> Result<u64, QueueError> {
     let missing: Vec<u64> = missing.into_iter().collect();
     let tasks = crate::dag::expand::wave_tasks(template, queue, &missing);
     let count = missing.len() as u64;
@@ -103,6 +147,7 @@ fn resubmit_inner(
 mod tests {
     use super::*;
     use crate::backend::store::Store;
+    use crate::broker::core::Broker;
     use crate::task::{Payload, StepTask, TaskEnvelope, WorkSpec};
 
     fn template() -> StepTemplate {
@@ -220,6 +265,46 @@ mod tests {
         // The blind pass would have re-enqueued 2-5 as well.
         let blind = resubmit_missing(&broker, &state, &template(), "q", 10, None).unwrap();
         assert_eq!(blind, 8);
+    }
+
+    #[test]
+    fn wave_resubmission_checks_only_candidates() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        // The steering engine injected the sparse ids {3, 40, 41, 90}.
+        // 3 completed, 40 failed (stays failed), 41 is still covered by
+        // a queued task, 90 is the gap.
+        state.mark_sample_done("rs", 3);
+        state.mark_sample_failed("rs", 40);
+        broker
+            .publish(
+                TaskEnvelope::new(
+                    "q",
+                    Payload::Step(StepTask {
+                        template: template(),
+                        lo: 41,
+                        hi: 42,
+                    }),
+                )
+                .with_content_id(),
+            )
+            .unwrap();
+        let n =
+            resubmit_wave_trusting_broker(&broker, &state, &template(), "q", &[3, 40, 41, 90])
+                .unwrap();
+        assert_eq!(n, 1, "only the gap sample 90 is re-enqueued");
+        // Dense ids outside the candidate set (0, 1, 2, ...) are NOT
+        // touched — the wave pass never invents samples.
+        let c = broker.register_consumer();
+        let mut covered = Vec::new();
+        while let Some(d) = broker.try_fetch(c, &["q"], 0) {
+            if let Payload::Step(s) = &d.task.payload {
+                covered.extend(s.lo..s.hi);
+            }
+            broker.ack(d.tag).unwrap();
+        }
+        covered.sort_unstable();
+        assert_eq!(covered, vec![41, 90]);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The producer side of `merlin run`.
 
-use crate::broker::core::{Broker, BrokerError};
+use crate::broker::api::{QueueError, TaskQueue};
 use crate::dag::expand::StepInstance;
 use crate::hierarchy;
 use crate::spec::study::StudySpec;
@@ -92,16 +92,33 @@ pub fn uses_samples(spec: &StudySpec, cmd: &str) -> bool {
     false
 }
 
+/// One step instance's release package: the O(1) root message plus the
+/// bookkeeping the orchestrator needs to track — and, after a broker
+/// failover, resubmit — the instance ([`step_instance_root`]).
+pub struct StepInstanceRoot {
+    /// Completion-tracking key (`<study_id>/<instance id>`).
+    pub study_key: String,
+    /// Samples this instance is expected to produce.
+    pub n_samples: u64,
+    /// Template of the instance's leaf tasks (resubmission re-stamps
+    /// missing samples from it).
+    pub template: StepTemplate,
+    /// Queue the instance's tasks flow through.
+    pub queue: String,
+    /// The single root message to publish.
+    pub root: crate::task::TaskEnvelope,
+}
+
 /// Build the O(1) root message for one step instance without publishing
-/// it. Returns (study_key, n_samples, root envelope) — the orchestrator
-/// batches the roots of a whole release wave into one `publish_batch`
-/// (one broker round trip / lock pass per wave, not per instance).
+/// it — the orchestrator batches the roots of a whole release wave into
+/// one `publish_batch` (one broker round trip / lock pass per wave, not
+/// per instance).
 pub fn step_instance_root(
     spec: &StudySpec,
     instance: &StepInstance,
     study_id: &str,
     opts: &RunOptions,
-) -> (String, u64, crate::task::TaskEnvelope) {
+) -> StepInstanceRoot {
     let study_key = format!("{study_id}/{}", instance.id);
     let n_samples = if uses_samples(spec, &instance.cmd) {
         spec.samples.as_ref().map(|s| s.count).unwrap_or(1)
@@ -116,23 +133,29 @@ pub fn step_instance_root(
         seed: spec.samples.as_ref().map(|s| s.seed).unwrap_or(0),
     };
     let queue = opts.queue_for(&instance.step_name);
-    let root = hierarchy::root_task(template, n_samples, opts.max_branch, &queue);
-    (study_key, n_samples, root)
+    let root = hierarchy::root_task(template.clone(), n_samples, opts.max_branch, &queue);
+    StepInstanceRoot {
+        study_key,
+        n_samples,
+        template,
+        queue,
+        root,
+    }
 }
 
 /// Enqueue one step instance: a single O(1) root message regardless of
 /// sample count. Returns (study_key, n_samples) — the orchestrator tracks
 /// completion against `study_key`.
 pub fn enqueue_step_instance(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     spec: &StudySpec,
     instance: &StepInstance,
     study_id: &str,
     opts: &RunOptions,
-) -> Result<(String, u64), BrokerError> {
-    let (study_key, n_samples, root) = step_instance_root(spec, instance, study_id, opts);
-    broker.publish(root)?;
-    Ok((study_key, n_samples))
+) -> Result<(String, u64), QueueError> {
+    let inst = step_instance_root(spec, instance, study_id, opts);
+    broker.publish_batch(vec![inst.root])?;
+    Ok((inst.study_key, inst.n_samples))
 }
 
 #[cfg(test)]

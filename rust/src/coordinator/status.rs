@@ -3,7 +3,8 @@
 //! as JSON ([`status_json`]) for tooling.
 
 use crate::backend::state::StateStore;
-use crate::broker::core::{Broker, ConsumerLease, QueueStats};
+use crate::broker::api::{MemberHealth, TaskQueue};
+use crate::broker::core::{ConsumerLease, QueueStats};
 use crate::util::json::Json;
 
 /// One queue's stats as a JSON object — shared by the in-process
@@ -34,9 +35,80 @@ pub fn consumer_lease_json(c: &ConsumerLease) -> Json {
     ])
 }
 
+/// One federation member's health as a JSON object (shared by the
+/// in-process and remote status paths).
+pub fn member_health_json(m: &MemberHealth) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(m.name.as_str())),
+        ("up", Json::Bool(m.up)),
+        ("errors", Json::num(m.errors as f64)),
+    ])
+}
+
+/// The broker-side `totals`/`durability`/`leases` sections of a status
+/// report, built from any [`TaskQueue`] — one field list shared by the
+/// in-process [`status_json`] and the remote `merlin status` path so
+/// the two reports cannot drift.
+pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)> {
+    let totals = broker.totals();
+    let durability = broker.durability_stats();
+    let leases = broker.lease_stats();
+    let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
+    vec![
+        (
+            "totals",
+            Json::obj(vec![
+                ("published", Json::num(totals.published as f64)),
+                ("delivered", Json::num(totals.delivered as f64)),
+                ("acked", Json::num(totals.acked as f64)),
+                ("requeued", Json::num(totals.requeued as f64)),
+                ("dead_lettered", Json::num(totals.dead_lettered as f64)),
+                ("lease_expired", Json::num(totals.lease_expired as f64)),
+            ]),
+        ),
+        (
+            "durability",
+            Json::obj(vec![
+                ("durable", Json::Bool(durability.durable)),
+                ("wal_records", Json::num(durability.wal_records as f64)),
+                ("snapshots", Json::num(durability.snapshots as f64)),
+                ("recovered", Json::num(durability.recovered as f64)),
+            ]),
+        ),
+        (
+            "leases",
+            Json::obj(vec![
+                ("active", Json::num(leases.active as f64)),
+                ("expired", Json::num(leases.expired as f64)),
+                ("consumers", Json::arr(consumers)),
+            ]),
+        ),
+    ]
+}
+
 /// Text status report over all queues and the given study keys.
-pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)]) -> String {
+pub fn status_report(
+    broker: &dyn TaskQueue,
+    state: &StateStore,
+    studies: &[(&str, u64)],
+) -> String {
     let mut out = String::new();
+    let members = broker.member_health();
+    if !members.is_empty() {
+        out.push_str(&format!(
+            "federation: {}/{} members up\n",
+            members.iter().filter(|m| m.up).count(),
+            members.len()
+        ));
+        for m in &members {
+            out.push_str(&format!(
+                "  {}: {} ({} transport errors)\n",
+                m.name,
+                if m.up { "up" } else { "DOWN" },
+                m.errors
+            ));
+        }
+    }
     out.push_str("queues:\n");
     for q in broker.queue_names() {
         let st = broker.stats(&q);
@@ -78,17 +150,16 @@ pub fn status_report(broker: &Broker, state: &StateStore, studies: &[(&str, u64)
 }
 
 /// Machine-readable status: queue stats (including lease expirations),
-/// broker totals, worker liveness / active leases, and per-study
-/// completion with steering progress where present.
-pub fn status_json(broker: &Broker, state: &StateStore, studies: &[(&str, u64)]) -> Json {
+/// broker totals, durability counters, worker liveness / active leases,
+/// federation member health (when federated), and per-study completion
+/// with steering progress where present. Against a federation every
+/// number is the aggregate across live members.
+pub fn status_json(broker: &dyn TaskQueue, state: &StateStore, studies: &[(&str, u64)]) -> Json {
     let queues: Vec<Json> = broker
         .queue_names()
         .into_iter()
         .map(|q| queue_stats_json(&q, &broker.stats(&q)))
         .collect();
-    let totals = broker.totals();
-    let leases = broker.lease_stats();
-    let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
     let studies_json: Vec<Json> = studies
         .iter()
         .map(|(study, n)| {
@@ -111,35 +182,24 @@ pub fn status_json(broker: &Broker, state: &StateStore, studies: &[(&str, u64)])
             Json::obj(pairs)
         })
         .collect();
-    Json::obj(vec![
-        ("queues", Json::arr(queues)),
-        (
-            "totals",
-            Json::obj(vec![
-                ("published", Json::num(totals.published as f64)),
-                ("delivered", Json::num(totals.delivered as f64)),
-                ("acked", Json::num(totals.acked as f64)),
-                ("requeued", Json::num(totals.requeued as f64)),
-                ("dead_lettered", Json::num(totals.dead_lettered as f64)),
-                ("lease_expired", Json::num(totals.lease_expired as f64)),
-            ]),
-        ),
-        (
-            "leases",
-            Json::obj(vec![
-                ("active", Json::num(leases.active as f64)),
-                ("expired", Json::num(leases.expired as f64)),
-                ("consumers", Json::arr(consumers)),
-            ]),
-        ),
-        ("studies", Json::arr(studies_json)),
-    ])
+    let mut pairs = vec![("queues", Json::arr(queues))];
+    pairs.extend(broker_sections_json(broker));
+    pairs.push(("studies", Json::arr(studies_json)));
+    let members = broker.member_health();
+    if !members.is_empty() {
+        pairs.push((
+            "federation",
+            Json::arr(members.iter().map(member_health_json).collect()),
+        ));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::store::Store;
+    use crate::broker::core::Broker;
     use crate::task::{ControlMsg, Payload, TaskEnvelope};
 
     #[test]
@@ -157,6 +217,37 @@ mod tests {
         let r = status_report(&broker, &state, &[("s1", 4)]);
         assert!(r.contains("m.sim: ready=1"));
         assert!(r.contains("s1: 1/4 done (25.0%), 1 failed"));
+    }
+
+    #[test]
+    fn federated_status_aggregates_and_reports_members() {
+        use crate::broker::federation::{FederatedClient, FederationConfig};
+        let brokers: Vec<Broker> = (0..3).map(|_| Broker::default()).collect();
+        let fed = FederatedClient::local(brokers, FederationConfig::default());
+        fed.publish_batch(vec![
+            TaskEnvelope::new("m.a", Payload::Control(ControlMsg::Ping { token: "1".into() })),
+            TaskEnvelope::new("m.b", Payload::Control(ControlMsg::Ping { token: "2".into() })),
+        ])
+        .unwrap();
+        let state = StateStore::new(Store::new());
+        let j = status_json(&fed, &state, &[]);
+        assert_eq!(j.get("totals").get("published").as_u64(), Some(2));
+        let members = j.get("federation").as_arr().unwrap();
+        assert_eq!(members.len(), 3);
+        assert!(members.iter().all(|m| m.get("up").as_bool() == Some(true)));
+        fed.kill_member(0);
+        let j = status_json(&fed, &state, &[]);
+        let members = j.get("federation").as_arr().unwrap();
+        assert_eq!(
+            members.iter().filter(|m| m.get("up").as_bool() == Some(true)).count(),
+            2
+        );
+        let text = status_report(&fed, &state, &[]);
+        assert!(text.contains("federation: 2/3 members up"));
+        assert!(text.contains("local-0: DOWN"));
+        // A plain broker's JSON has no federation section.
+        let plain = Broker::default();
+        assert!(matches!(status_json(&plain, &state, &[]).get("federation"), Json::Null));
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
 use crate::backend::state::StateStore;
-use crate::broker::core::Broker;
+use crate::broker::api::TaskQueue;
 use crate::dag::expand::{expand_study, wave_tasks};
 use crate::runtime::models::sample_params;
 use crate::spec::study::{Goal, IterateSpec, SpecError, StudySpec};
@@ -28,6 +28,7 @@ use crate::task::StepTemplate;
 use crate::util::rng::Rng;
 
 use super::orchestrate::{DagRunner, StudyReport};
+use super::resubmit::resubmit_wave_trusting_broker;
 use super::run::{step_work, uses_samples, RunOptions};
 
 /// Decorrelates the steering engine's exploration stream from the study
@@ -236,7 +237,7 @@ fn pick_wave(
 /// the spec's so completed samples report objectives back through the
 /// backend. `timeout` bounds the whole run.
 pub fn steer(
-    broker: &Broker,
+    broker: &dyn TaskQueue,
     state: &StateStore,
     spec: &StudySpec,
     study_id: &str,
@@ -283,6 +284,10 @@ pub fn steer(
     };
     let mut rng = Rng::new(seed ^ STEER_SALT);
     let dims = it.dims as usize;
+    // Every id ever injected — the candidate set a failover recovery
+    // pass re-checks (steered ids are sparse; the dense [0, n) pass
+    // would invent samples nobody proposed).
+    let mut injected_ids: Vec<u64> = Vec::new();
     let mut seen: BTreeSet<u64> = BTreeSet::new();
     let mut best: Option<(f64, u64)> = None;
     let mut rounds: Vec<RoundRecord> = Vec::new();
@@ -311,13 +316,23 @@ pub fn steer(
         let tasks = wave_tasks(&template, &queue, &wave);
         report.samples_expected += wave.len() as u64;
         expected_cum += wave.len() as u64;
+        injected_ids.extend(&wave);
         broker
             .publish_batch(tasks)
             .map_err(|e| SpecError(format!("inject round {round}: {e}")))?;
 
         // Wait for the wave to land (objectives recorded by workers).
         loop {
+            // The sweep doubles as the federation failure detector; a
+            // member lost mid-wave triggers a recovery pass over every
+            // id injected so far (settled and still-queued ids are
+            // subtracted, so only the member's lost tasks re-enqueue).
             broker.reap_expired();
+            if !broker.failed_over().is_empty() {
+                report.resubmitted +=
+                    resubmit_wave_trusting_broker(broker, state, &template, &queue, &injected_ids)
+                        .map_err(|e| SpecError(format!("failover resubmit round {round}: {e}")))?;
+            }
             let settled =
                 (state.done_count(&study_key) + state.failed_count(&study_key)) as u64;
             if settled >= expected_cum {
@@ -420,6 +435,9 @@ pub fn steer(
             break;
         }
         broker.reap_expired();
+        if !broker.failed_over().is_empty() {
+            runner.resubmit_after_failover(broker, state, &mut report)?;
+        }
         std::thread::sleep(Duration::from_millis(5));
     }
     report.timed_out = timed_out;

@@ -21,9 +21,13 @@
 //!   version-negotiating client, an opt-in **durability** layer
 //!   (per-shard write-ahead log + compacting snapshots; queue state
 //!   survives broker restarts — see [`broker::wal`],
-//!   [`broker::snapshot`], and DESIGN.md "Durability & Recovery"), and
+//!   [`broker::snapshot`], and DESIGN.md "Durability & Recovery"),
 //!   **delivery leases** (wire v3): visibility timeouts with worker
-//!   heartbeats so a dead worker's tasks redeliver instead of stranding
+//!   heartbeats so a dead worker's tasks redeliver instead of stranding,
+//!   and **federation** ([`broker::federation`]): N share-nothing
+//!   members with rendezvous-hash queue routing, client-side failover,
+//!   and fleet-wide stat aggregation behind the [`broker::api::TaskQueue`]
+//!   seam the whole control plane programs against
 //! * [`backend`] — the Redis analog (task state + results), sharded KV
 //!   locks under the same hash scheme as the broker
 //! * [`worker`] — consumers that execute tasks; prefetch windows are
@@ -36,7 +40,10 @@
 //!   resubmission; release waves, steering rounds, and resubmission
 //!   crawls publish as single batches. [`coordinator::steer`] is the
 //!   ML-in-the-loop engine: surrogate-driven rounds inject new samples
-//!   into a **running** study (the paper's headline capability)
+//!   into a **running** study (the paper's headline capability);
+//!   [`coordinator::loadgen`] is the `merlin loadgen` stress harness
+//!   over an in-process broker federation (throughput, latency
+//!   percentiles, member-scaling section, chaos kill)
 //! * [`metrics`] — instrumentation for the paper's performance figures
 //! * [`baseline`] — comparator implementations (flat enqueue, fs
 //!   polling, and the seed's single-mutex broker core for fig3)

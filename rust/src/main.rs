@@ -12,10 +12,10 @@ use std::time::Duration;
 
 use merlin::backend::state::StateStore;
 use merlin::backend::store::Store;
-use merlin::broker::client::BrokerClient;
 use merlin::broker::core::Broker;
 use merlin::broker::net::BrokerServer;
-use merlin::coordinator::{orchestrate, status_report, RunOptions, SampleProposer};
+use merlin::broker::{FederatedClient, FederationConfig, TaskQueue};
+use merlin::coordinator::{loadgen, orchestrate, status_report, RunOptions, SampleProposer};
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::spec::study::StudySpec;
 use merlin::task::{Payload, WorkSpec};
@@ -33,6 +33,7 @@ fn main() {
         Some("hierarchy") => cmd_hierarchy(&args[1..]),
         Some("status") => cmd_status(&args[1..]),
         Some("purge") => cmd_purge(&args[1..]),
+        Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("--help") | Some("-h") | None => {
             print_help();
             0
@@ -67,10 +68,13 @@ USAGE:
       delivery leases (default 30000 ms) so dead workers' tasks redeliver
       mid-round.
 
-  merlin run-workers --broker HOST:PORT --queues q1,q2 [-c N] [--idle-ms N]
-                     [--lease-ms N]
+  merlin run-workers --broker HOST:PORT [--broker HOST:PORT ...]
+                     --queues q1,q2 [-c N] [--idle-ms N] [--lease-ms N]
       Connect N workers to a remote broker (the multi-allocation shape).
-      With --lease-ms each worker declares a delivery lease and
+      Repeat --broker to consume a whole federation: every worker draws
+      from each member that owns one of its queues (rendezvous-hash
+      routing; all participants must list the same members in the same
+      order). With --lease-ms each worker declares a delivery lease and
       heartbeats its prefetch window.
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
@@ -80,10 +84,28 @@ USAGE:
       broker is durable: queue state is write-ahead logged + snapshotted
       under DIR and recovered on restart (see docs/OPERATIONS.md). With
       --lease-ms every consumer gets a default visibility timeout.
+      Federation members are plain serve-broker processes — start N of
+      them and list all N addresses on every producer/worker/status call.
 
-  merlin status --broker HOST:PORT
-      Print the broker's queue depths, totals, durability counters, and
-      lease/liveness report as JSON.
+  merlin status --broker HOST:PORT [--broker HOST:PORT ...]
+      Print queue depths, totals, durability counters, and the
+      lease/liveness report as JSON — aggregated across every listed
+      federation member, with per-member health alongside.
+
+  merlin loadgen [--members N] [--producers N] [--workers N] [--steps N]
+                 [--tasks N] [--batch N] [--zipf S] [--payload-min N]
+                 [--payload-max N] [--lease-ms N] [--kill-at FRAC]
+                 [--scale] [--quick] [--seed N]
+      Open-loop stress harness: spin up N federated broker members
+      in-process (real TCP + wire v2/v3) and drive them with producers x
+      workers over S step queues. Reports throughput and enqueue /
+      deliver / ack latency percentiles to stdout and results/
+      (CSV+JSON). --zipf skews queue pick toward step 0; --kill-at 0.3
+      hard-kills one member 30% through the corpus (chaos). --scale runs
+      the fig6-style section (same workload on 1 vs 2 vs 4 members,
+      fixed channel budget) and writes BENCH_federation.json; it fails
+      if 4 members do not reach 2x the 1-member aggregate throughput
+      (full mode; --quick smoke runs never fail on the ratio).
 
   merlin serve-backend [--addr 127.0.0.1:7778]
       Run the standalone Redis-analog server.
@@ -91,8 +113,8 @@ USAGE:
   merlin hierarchy --samples N [--branch B] [--samples-per-task S]
       Print the task-generation hierarchy plan (Fig 2).
 
-  merlin purge --broker HOST:PORT --queue NAME
-      Drop all ready messages in a queue."
+  merlin purge --broker HOST:PORT [--broker HOST:PORT ...] --queue NAME
+      Drop all ready messages in a queue (on every member holding any)."
     );
 }
 
@@ -102,10 +124,43 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Every value of a repeatable flag, in order (`--broker a --broker b`).
+fn flags_all(args: &[String], name: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == name)
+        .filter_map(|(i, _)| args.get(i + 1).cloned())
+        .collect()
+}
+
 fn flag_u64(args: &[String], name: &str, default: u64) -> u64 {
     flag(args, name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
+    flag(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Connect a federation client over every `--broker` value (a single
+/// `--broker` is the degenerate one-member federation).
+fn connect_federation(args: &[String]) -> Result<FederatedClient, i32> {
+    let addrs = flags_all(args, "--broker");
+    if addrs.is_empty() {
+        eprintln!("--broker HOST:PORT required (repeat for a federation)");
+        return Err(2);
+    }
+    FederatedClient::connect(&addrs, FederationConfig::default()).map_err(|e| {
+        eprintln!("cannot connect to {addrs:?}: {e}");
+        1
+    })
 }
 
 fn cmd_run(args: &[String]) -> i32 {
@@ -355,69 +410,60 @@ fn cmd_steer(args: &[String]) -> i32 {
     i32::from(report.study.timed_out)
 }
 
-/// `merlin status --broker`: the broker-side slice of the status report
-/// (queues, totals, durability, leases) as JSON.
+/// `merlin status --broker [--broker ...]`: the broker-side slice of the
+/// status report (queues, totals, durability, leases) as JSON —
+/// aggregated over every listed federation member through the same
+/// `TaskQueue` surface the coordinator uses, plus per-member health.
 fn cmd_status(args: &[String]) -> i32 {
-    let Some(addr) = flag(args, "--broker") else {
-        eprintln!("--broker HOST:PORT required");
-        return 2;
+    let fed = match connect_federation(args) {
+        Ok(f) => f,
+        Err(code) => return code,
     };
-    let Ok(mut client) = BrokerClient::connect(&addr) else {
-        eprintln!("cannot connect to {addr}");
-        return 1;
-    };
-    use merlin::coordinator::{consumer_lease_json, queue_stats_json};
+    use merlin::coordinator::{broker_sections_json, member_health_json, queue_stats_json};
     use merlin::util::json::Json;
-    let queues = client.queues().unwrap_or_default();
-    let qjson: Vec<Json> = queues
+    let qjson: Vec<Json> = fed
+        .queue_names()
         .iter()
-        .filter_map(|q| Some(queue_stats_json(q, &client.stats(q).ok()?)))
+        .map(|q| queue_stats_json(q, &fed.stats(q)))
         .collect();
+    let members: Vec<Json> = fed.member_health().iter().map(member_health_json).collect();
     let mut pairs = vec![("queues", Json::arr(qjson))];
-    if let Ok(d) = client.durability() {
-        pairs.push((
-            "durability",
-            Json::obj(vec![
-                ("durable", Json::Bool(d.durable)),
-                ("wal_records", Json::num(d.wal_records as f64)),
-                ("snapshots", Json::num(d.snapshots as f64)),
-                ("recovered", Json::num(d.recovered as f64)),
-            ]),
-        ));
-    }
-    if let Ok(l) = client.lease_stats() {
-        let consumers: Vec<Json> = l.consumers.iter().map(consumer_lease_json).collect();
-        pairs.push((
-            "leases",
-            Json::obj(vec![
-                ("active", Json::num(l.active as f64)),
-                ("expired", Json::num(l.expired as f64)),
-                ("consumers", Json::arr(consumers)),
-            ]),
-        ));
-    }
+    pairs.extend(broker_sections_json(&fed));
+    pairs.push(("federation", Json::arr(members)));
     println!("{}", merlin::util::json::to_string(&Json::obj(pairs)));
     0
 }
 
 fn cmd_run_workers(args: &[String]) -> i32 {
-    let Some(addr) = flag(args, "--broker") else {
-        eprintln!("--broker HOST:PORT required");
+    let addrs = flags_all(args, "--broker");
+    if addrs.is_empty() {
+        eprintln!("--broker HOST:PORT required (repeat for a federation)");
         return 2;
-    };
+    }
     let queues: Vec<String> = flag(args, "--queues")
         .map(|q| q.split(',').map(str::to_string).collect())
         .unwrap_or_else(|| vec!["merlin".into()]);
     let n = flag_u64(args, "-c", 4) as usize;
     let idle_ms = flag_u64(args, "--idle-ms", 5_000);
     let lease_ms = flag_u64(args, "--lease-ms", 0);
-    println!("connecting {n} workers to {addr} on queues {queues:?}");
+    println!(
+        "connecting {n} workers to {} federation member(s) on queues {queues:?}",
+        addrs.len()
+    );
     let mut handles = Vec::new();
     for w in 0..n {
-        let addr = addr.clone();
+        let addrs = addrs.clone();
         let queues = queues.clone();
         handles.push(std::thread::spawn(move || {
-            tcp_worker_loop(&addr, &queues, idle_ms, lease_ms, w)
+            // One federation handle per worker: its own connection (one
+            // AMQP-channel analog) to every member it consumes from.
+            match FederatedClient::connect(&addrs, FederationConfig::default()) {
+                Ok(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w),
+                Err(e) => {
+                    eprintln!("worker {w}: cannot connect to {addrs:?}: {e}");
+                    0
+                }
+            }
         }));
     }
     let mut total = 0u64;
@@ -428,20 +474,23 @@ fn cmd_run_workers(args: &[String]) -> i32 {
     0
 }
 
-/// Distributed worker loop over the TCP broker client: supports expansion
-/// tasks (hierarchy unfolds through the remote broker), null and shell
-/// steps, and control messages.
+/// Distributed worker loop over the federated broker client: supports
+/// expansion tasks (hierarchy unfolds through the remote members, children
+/// routed per-queue), null and shell steps, and control messages. A
+/// single `--broker` is simply a one-member federation.
 ///
 /// Batched: each round trip pops a whole prefetch window (`PopN`) and
 /// completed deliveries are acknowledged with one `AckBatch` frame per
 /// window instead of one round trip per task.
 ///
-/// With `lease_ms > 0` the worker declares a delivery lease at connect
-/// and heartbeats its held window once per loop iteration — a worker
-/// that dies (or hangs) mid-window has its tasks redelivered at the
-/// visibility deadline instead of holding them until disconnect.
+/// With `lease_ms > 0` the worker declares a delivery lease on every
+/// member connection and heartbeats its held window once per loop
+/// iteration — a worker that dies (or hangs) mid-window has its tasks
+/// redelivered at the visibility deadline instead of holding them until
+/// disconnect. A member that dies mid-run is marked down and its queues
+/// re-route; the worker keeps draining the survivors.
 fn tcp_worker_loop(
-    addr: &str,
+    fed: &FederatedClient,
     queues: &[String],
     idle_ms: u64,
     lease_ms: u64,
@@ -451,12 +500,14 @@ fn tcp_worker_loop(
     // hoard bound, and raising it would starve sibling workers of
     // long-running tasks.
     const WINDOW: usize = 2;
-    let Ok(mut client) = BrokerClient::connect(addr) else {
-        eprintln!("worker {worker_id}: cannot connect to {addr}");
-        return 0;
-    };
+    let consumer = fed.register_consumer();
     if lease_ms > 0 {
-        if let Err(e) = client.set_lease(lease_ms) {
+        // The fallible variant: a worker that silently fails to declare
+        // its lease would strand deliveries on a hang instead of
+        // redelivering at the visibility deadline.
+        if let Err(e) =
+            fed.try_set_consumer_lease(consumer, Some(Duration::from_millis(lease_ms)))
+        {
             eprintln!("worker {worker_id}: set_lease: {e}");
         }
     }
@@ -465,13 +516,18 @@ fn tcp_worker_loop(
     let mut idle = 0u64;
     loop {
         if lease_ms > 0 {
-            client.heartbeat().ok();
+            fed.heartbeat(consumer);
         }
-        let batch = match client.fetch_n(&qrefs, WINDOW, 200, WINDOW) {
-            Ok(b) => b,
-            Err(_) => return done,
-        };
+        let batch = fed.fetch_n(consumer, &qrefs, WINDOW, WINDOW, Duration::from_millis(200));
         if batch.is_empty() {
+            if fed.live_count() == 0 {
+                eprintln!("worker {worker_id}: every federation member is down");
+                return done;
+            }
+            // Idle is the cheap moment to probe restarted members
+            // (throttled inside): a revived durable member's recovered
+            // queues rejoin this worker's routing view.
+            fed.maybe_revive();
             idle += 200;
             if idle >= idle_ms {
                 return done;
@@ -486,16 +542,16 @@ fn tcp_worker_loop(
             // Heartbeat between tasks, not just between windows: one
             // long task must not let the rest of the window expire.
             if lease_ms > 0 {
-                client.heartbeat().ok();
+                fed.heartbeat(consumer);
             }
             match &d.task.payload {
                 Payload::Expansion(e) => {
                     let mut children = Vec::new();
                     merlin::hierarchy::expand(e, &d.task.queue, &mut children);
-                    if client.publish_batch(&children).is_ok() {
+                    if fed.publish_batch(children).is_ok() {
                         acks.push(d.tag);
                     } else {
-                        client.nack(d.tag, true).ok();
+                        fed.nack(d.tag, true).ok();
                     }
                 }
                 Payload::Step(s) => {
@@ -535,14 +591,14 @@ fn tcp_worker_loop(
                 break;
             }
         }
-        client.ack_batch(&acks).ok();
+        fed.ack_batch(&acks).ok();
         if stop {
             // Nack-free requeue (no retry cost) of the window's
             // unprocessed remainder, instead of dropping it and relying
             // on disconnect redelivery: the broker's recovery accounting
             // (and a durable broker's WAL) see exactly what happened.
             for d in batch {
-                client.requeue(d.tag).ok();
+                fed.requeue(d.tag).ok();
             }
             return done;
         }
@@ -632,18 +688,77 @@ fn cmd_hierarchy(args: &[String]) -> i32 {
 }
 
 fn cmd_purge(args: &[String]) -> i32 {
-    let (Some(addr), Some(queue)) = (flag(args, "--broker"), flag(args, "--queue")) else {
+    let Some(queue) = flag(args, "--queue") else {
         eprintln!("--broker and --queue required");
         return 2;
     };
-    match BrokerClient::connect(&addr).map(|mut c| c.purge(&queue)) {
-        Ok(Ok(n)) => {
-            println!("purged {n} messages from {queue}");
-            0
+    let fed = match connect_federation(args) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
+    let n = fed.purge(&queue);
+    println!("purged {n} messages from {queue}");
+    0
+}
+
+/// `merlin loadgen`: the open-loop federation stress harness (see
+/// [`merlin::coordinator::loadgen`]).
+fn cmd_loadgen(args: &[String]) -> i32 {
+    let d = loadgen::LoadgenConfig::default();
+    let mut cfg = loadgen::LoadgenConfig {
+        members: flag_u64(args, "--members", d.members as u64) as usize,
+        producers: flag_u64(args, "--producers", d.producers as u64) as usize,
+        workers: flag_u64(args, "--workers", d.workers as u64) as usize,
+        steps: flag_u64(args, "--steps", d.steps as u64) as usize,
+        tasks: flag_u64(args, "--tasks", d.tasks),
+        batch: flag_u64(args, "--batch", d.batch as u64) as usize,
+        zipf: flag_f64(args, "--zipf", d.zipf),
+        payload_min: flag_u64(args, "--payload-min", d.payload_min as u64) as usize,
+        payload_max: flag_u64(args, "--payload-max", d.payload_max as u64) as usize,
+        lease_ms: flag_u64(args, "--lease-ms", d.lease_ms),
+        kill_member_at: flag(args, "--kill-at").and_then(|v| v.parse::<f64>().ok()),
+        shared_handles: false,
+        seed: flag_u64(args, "--seed", d.seed),
+    };
+    let quick = has_flag(args, "--quick") || merlin::util::bench_quick();
+    if quick {
+        cfg.quicken();
+    }
+    if has_flag(args, "--scale") {
+        println!(
+            "loadgen scaling section: {} tasks, {}x{} producers/workers, {} steps, 1 vs 2 vs 4 \
+             members (shared channel budget)\n",
+            cfg.tasks, cfg.producers, cfg.workers, cfg.steps
+        );
+        let (reports, speedup) = loadgen::run_scaling(&cfg);
+        for r in &reports {
+            print!("{}", loadgen::render_report(r));
         }
-        other => {
-            eprintln!("purge failed: {other:?}");
-            1
+        println!("\n{}", loadgen::scaling_series(&reports).table());
+        println!("aggregate throughput speedup, 4 members vs 1: {speedup:.2}x");
+        if let Err(e) = loadgen::write_outputs(&reports, Some(speedup), quick, "loadgen_scaling") {
+            eprintln!("write results: {e}");
         }
+        // Loss/duplication must be zero without chaos, in any mode.
+        for r in &reports {
+            if r.lost != 0 || r.duplicates != 0 {
+                eprintln!("FAIL: lossless run expected, got {r:?}");
+                return 1;
+            }
+        }
+        // The scaling acceptance gate is a full-mode claim; quick smoke
+        // runs on starved CI cores report the ratio without failing.
+        if !quick && speedup < 2.0 {
+            eprintln!("FAIL: 4-member aggregate is {speedup:.2}x of 1-member (< 2x target)");
+            return 1;
+        }
+        0
+    } else {
+        let r = loadgen::run_loadgen(&cfg);
+        print!("{}", loadgen::render_report(&r));
+        if let Err(e) = loadgen::write_outputs(&[r], None, quick, "loadgen") {
+            eprintln!("write results: {e}");
+        }
+        0
     }
 }

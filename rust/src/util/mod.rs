@@ -7,3 +7,10 @@ pub mod ids;
 pub mod json;
 pub mod rng;
 pub mod stats;
+
+/// True when `MERLIN_BENCH_QUICK=1`: benches and `merlin loadgen` shrink
+/// their workloads to smoke size (seconds, not minutes) — the CI
+/// bench-smoke job's switch.
+pub fn bench_quick() -> bool {
+    std::env::var("MERLIN_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}

@@ -20,6 +20,6 @@ pub mod sim;
 #[allow(clippy::module_inception)]
 pub mod worker;
 
-pub use pool::{run_pool, PoolReport};
+pub use pool::{run_pool, run_pool_on, PoolReport};
 pub use sim::{NullSimRunner, QuadraticSimRunner, SimRunner};
 pub use worker::{FailurePlan, Worker, WorkerConfig, WorkerReport};

@@ -1,9 +1,12 @@
-//! Worker pools: N worker threads sharing one broker — the in-allocation
-//! shape of `merlin run-workers -c N`. Fig 4/6 sweeps vary N.
+//! Worker pools: N worker threads sharing one queue service — the
+//! in-allocation shape of `merlin run-workers -c N`. Fig 4/6 sweeps vary
+//! N. [`run_pool`] consumes a single in-process broker; [`run_pool_on`]
+//! consumes any [`TaskQueue`] (e.g. a broker federation).
 
 use std::sync::Arc;
 
 use crate::backend::state::StateStore;
+use crate::broker::api::TaskQueue;
 use crate::broker::core::Broker;
 use crate::metrics::recorder::Recorder;
 
@@ -40,7 +43,8 @@ impl PoolReport {
     }
 }
 
-/// Spawn `n` workers from `make_cfg(i)` and run them to completion.
+/// Spawn `n` workers from `make_cfg(i)` over one in-process broker and
+/// run them to completion.
 pub fn run_pool(
     broker: &Broker,
     state: Option<&StateStore>,
@@ -49,9 +53,27 @@ pub fn run_pool(
     n: usize,
     make_cfg: impl Fn(usize) -> WorkerConfig,
 ) -> PoolReport {
+    run_pool_on(Arc::new(broker.clone()), state, recorder, sim, n, make_cfg)
+}
+
+/// [`run_pool`] over any shared [`TaskQueue`] — pass an
+/// `Arc<FederatedClient>` to drain a whole broker federation. Note the
+/// sharing model: a federation handle serializes per member, so pools
+/// that must scale over TCP members should give each worker its own
+/// handle (build workers directly with
+/// [`super::worker::Worker::over`]); local-member federations don't
+/// block under the member lock and share fine.
+pub fn run_pool_on(
+    queue: Arc<dyn TaskQueue>,
+    state: Option<&StateStore>,
+    recorder: Option<&Recorder>,
+    sim: Arc<dyn SimRunner>,
+    n: usize,
+    make_cfg: impl Fn(usize) -> WorkerConfig,
+) -> PoolReport {
     let mut handles = Vec::with_capacity(n);
     for i in 0..n {
-        let broker = broker.clone();
+        let queue = queue.clone();
         let state = state.cloned();
         let recorder = recorder.cloned();
         let sim = sim.clone();
@@ -59,7 +81,7 @@ pub fn run_pool(
         handles.push(
             std::thread::Builder::new()
                 .name(format!("merlin-worker-{i}"))
-                .spawn(move || Worker::new(broker, state, recorder, sim, cfg).run())
+                .spawn(move || Worker::over(queue, state, recorder, sim, cfg).run())
                 .expect("spawn worker"),
         );
     }

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::state::StateStore;
+use crate::broker::api::TaskQueue;
 use crate::broker::core::{Broker, Delivery};
 use crate::data::bundle::{aggregate_dir, write_bundle_opts, BundleLayout};
 use crate::data::node::Node;
@@ -129,8 +130,14 @@ pub struct WorkerReport {
 }
 
 /// One consumer loop over a set of queues (see the module docs).
+///
+/// The queue service is any [`TaskQueue`]: one in-process broker
+/// ([`Worker::new`]) or a federation of them ([`Worker::over`] with a
+/// [`crate::broker::FederatedClient`]) — a federated worker draws from
+/// every member that owns one of its step queues and publishes expansion
+/// children back through the same routing.
 pub struct Worker {
-    broker: Broker,
+    queue: Arc<dyn TaskQueue>,
     state: Option<StateStore>,
     recorder: Option<Recorder>,
     sim: Arc<dyn SimRunner>,
@@ -139,7 +146,7 @@ pub struct Worker {
 }
 
 impl Worker {
-    /// Assemble a worker over shared infrastructure. `state` and
+    /// Assemble a worker over a single in-process broker. `state` and
     /// `recorder` are optional (workers run without bookkeeping in some
     /// benches); `sim` handles `WorkSpec::Builtin` steps.
     pub fn new(
@@ -149,9 +156,20 @@ impl Worker {
         sim: Arc<dyn SimRunner>,
         cfg: WorkerConfig,
     ) -> Self {
+        Self::over(Arc::new(broker), state, recorder, sim, cfg)
+    }
+
+    /// Assemble a worker over any [`TaskQueue`] (e.g. a federation).
+    pub fn over(
+        queue: Arc<dyn TaskQueue>,
+        state: Option<StateStore>,
+        recorder: Option<Recorder>,
+        sim: Arc<dyn SimRunner>,
+        cfg: WorkerConfig,
+    ) -> Self {
         let rng = Rng::new(cfg.seed ^ WORKER_SALT);
         Self {
-            broker,
+            queue,
             state,
             recorder,
             sim,
@@ -162,7 +180,7 @@ impl Worker {
 
     /// Consume until StopWorker or idle timeout. Returns the tally.
     pub fn run(&mut self) -> WorkerReport {
-        let consumer = self.broker.register_consumer();
+        let consumer = self.queue.register_consumer();
         let queue_names = self.cfg.queues.clone();
         let queues: Vec<&str> = queue_names.iter().map(String::as_str).collect();
         // Batch size of the prefetch pipeline. The prefetch limit IS the
@@ -176,7 +194,7 @@ impl Worker {
         // heartbeat the whole prefetch window (one broker call extends
         // every held delivery) well inside the lease period.
         let heartbeat_every = if self.cfg.lease_ms > 0 {
-            self.broker
+            self.queue
                 .set_consumer_lease(consumer, Some(Duration::from_millis(self.cfg.lease_ms)));
             let ms = if self.cfg.heartbeat_ms > 0 {
                 self.cfg.heartbeat_ms
@@ -194,12 +212,12 @@ impl Worker {
         loop {
             if let Some(every) = heartbeat_every {
                 if last_beat.elapsed() >= every {
-                    self.broker.heartbeat(consumer);
+                    self.queue.heartbeat(consumer);
                     last_beat = Instant::now();
                 }
             }
             if buf.is_empty() {
-                buf.extend(self.broker.fetch_n(
+                buf.extend(self.queue.fetch_n(
                     consumer,
                     &queues,
                     self.cfg.prefetch,
@@ -231,9 +249,9 @@ impl Worker {
         // recover_consumer still runs afterwards: with an empty buffer it
         // requeues nothing but retires this consumer's registry entry.
         for d in buf.drain(..) {
-            self.broker.requeue(d.tag).ok();
+            self.queue.requeue(d.tag).ok();
         }
-        self.broker.recover_consumer(consumer);
+        self.queue.recover_consumer(consumer);
         report
     }
 
@@ -243,38 +261,38 @@ impl Worker {
         let queue = d.task.queue.clone();
         match d.task.payload.clone() {
             Payload::Control(ControlMsg::StopWorker) => {
-                self.broker.ack(d.tag).ok();
+                self.queue.ack(d.tag).ok();
                 report.stopped_by_control = true;
                 return false;
             }
             Payload::Control(ControlMsg::Ping { .. }) => {
-                self.broker.ack(d.tag).ok();
+                self.queue.ack(d.tag).ok();
                 self.record(received_us, 0, KIND_OTHER);
             }
             Payload::Expansion(exp) => {
                 let mut children = Vec::new();
                 hierarchy::expand(&exp, &queue, &mut children);
-                match self.broker.publish_batch(children) {
+                match self.queue.publish_batch(children) {
                     Ok(()) => {
-                        self.broker.ack(d.tag).ok();
+                        self.queue.ack(d.tag).ok();
                         report.expansions += 1;
                         self.record(received_us, 0, KIND_EXPANSION);
                     }
                     Err(_) => {
                         // Broker pressure: retry later.
-                        self.broker.nack(d.tag, true).ok();
+                        self.queue.nack(d.tag, true).ok();
                     }
                 }
             }
             Payload::Step(step) => {
                 // Node-death injection: the task disappears without ack.
                 if self.rng.chance(self.cfg.failures.task_kill_rate) {
-                    self.broker.nack(d.tag, false).ok();
+                    self.queue.nack(d.tag, false).ok();
                     report.tasks_killed += 1;
                     return true;
                 }
                 let work_us = self.run_step(&step, report);
-                self.broker.ack(d.tag).ok();
+                self.queue.ack(d.tag).ok();
                 report.steps += 1;
                 self.record(received_us, work_us, KIND_REAL);
             }
@@ -284,11 +302,11 @@ impl Worker {
                         if let Some(state) = &self.state {
                             state.incr_counter(&agg.study_id, "aggregated_samples", samples as i64);
                         }
-                        self.broker.ack(d.tag).ok();
+                        self.queue.ack(d.tag).ok();
                         report.aggregates += 1;
                     }
                     Err(_) => {
-                        self.broker.nack(d.tag, true).ok();
+                        self.queue.nack(d.tag, true).ok();
                     }
                 }
                 self.record(received_us, 0, KIND_AGGREGATE);

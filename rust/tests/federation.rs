@@ -1,0 +1,391 @@
+//! Federation integration: multi-member routing end-to-end, failover
+//! under member death, recovery-aware resubmission, and lease expiry
+//! across members.
+//!
+//! The chaos scenarios use **hard** server shutdown (established
+//! connections severed), which is what a real broker-node death looks
+//! like to the fleet: transport errors, down-marking, re-routing, and a
+//! resubmission pass that re-enqueues exactly the gap.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use merlin::backend::state::StateStore;
+use merlin::backend::store::Store;
+use merlin::broker::core::Broker;
+use merlin::broker::net::BrokerServer;
+use merlin::broker::{FederatedClient, FederationConfig, TaskQueue};
+use merlin::coordinator::{orchestrate, resubmit_missing_trusting_broker, RunOptions};
+use merlin::dag::expand::wave_tasks;
+use merlin::spec::study::StudySpec;
+use merlin::task::{ControlMsg, Payload, StepTemplate, TaskEnvelope, WorkSpec};
+use merlin::util::clock::RealClock;
+use merlin::worker::{run_pool_on, NullSimRunner, WorkerConfig};
+
+fn serve_members(n: usize) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+    let mut brokers = Vec::new();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        addrs.push(server.addr.to_string());
+        brokers.push(broker);
+        servers.push(server);
+    }
+    (brokers, servers, addrs)
+}
+
+fn sim_template(study: &str) -> StepTemplate {
+    StepTemplate {
+        study_id: study.into(),
+        step_name: "sim".into(),
+        work: WorkSpec::Noop,
+        samples_per_task: 1,
+        seed: 0,
+    }
+}
+
+/// A full DAG study orchestrated through an in-process local federation:
+/// every instance completes and the step queues actually spread over
+/// more than one member.
+#[test]
+fn study_orchestrates_through_local_federation() {
+    let brokers: Vec<Broker> = (0..3).map(|_| Broker::default()).collect();
+    let fed = Arc::new(FederatedClient::local(
+        brokers.clone(),
+        FederationConfig::default(),
+    ));
+    let state = StateStore::new(Store::new());
+    let spec = StudySpec::parse(
+        "\
+description:
+  name: chain
+study:
+  - name: sim
+    run:
+      cmd: 'null: 1 # sample $(MERLIN_SAMPLE_ID)'
+  - name: post
+    run:
+      cmd: 'null: 1'
+      depends: [sim]
+  - name: collect
+    run:
+      cmd: 'null: 1'
+      depends: [post]
+merlin:
+  samples:
+    count: 30
+    seed: 1
+",
+    )
+    .unwrap();
+    let opts = RunOptions {
+        max_branch: 4,
+        samples_per_task: 3,
+        queue_prefix: "m".into(),
+    };
+    let fed_workers = fed.clone();
+    let st2 = state.clone();
+    let worker_thread = std::thread::spawn(move || {
+        let clock: Arc<dyn merlin::util::clock::Clock> = Arc::new(RealClock::new());
+        run_pool_on(
+            fed_workers,
+            Some(&st2),
+            None,
+            Arc::new(NullSimRunner),
+            4,
+            |i| {
+                let mut cfg = WorkerConfig::simple("unused", clock.clone());
+                cfg.queues = vec!["m.sim".into(), "m.post".into(), "m.collect".into()];
+                cfg.idle_exit_ms = 2_000;
+                cfg.seed = i as u64;
+                cfg
+            },
+        )
+    });
+    let report = orchestrate(
+        &*fed,
+        &state,
+        &spec,
+        "fed-st",
+        &opts,
+        Duration::from_secs(30),
+    )
+    .unwrap();
+    let pool = worker_thread.join().unwrap();
+    assert!(!report.timed_out);
+    assert_eq!(report.samples_expected, 32); // 30 sim + post + collect
+    assert_eq!(report.samples_done, 32);
+    assert_eq!(report.samples_failed, 0);
+    assert_eq!(report.resubmitted, 0, "no failover in a healthy fleet");
+    assert_eq!(pool.samples_ok, 32);
+    // Routing actually used the federation: at least two members carried
+    // traffic, and no queue was split across members.
+    let carrying = brokers.iter().filter(|b| b.totals().published > 0).count();
+    assert!(carrying >= 2, "queues all landed on one member");
+    for q in ["m.sim", "m.post", "m.collect"] {
+        let holders = brokers.iter().filter(|b| b.stats(q).published > 0).count();
+        assert_eq!(holders, 1, "queue {q} split across members");
+    }
+}
+
+/// The satellite scenario, deterministic: a 3-member TCP federation,
+/// one member hard-killed mid-study. The recovery-aware resubmission
+/// pass re-enqueues exactly the dead member's lost tasks (completed
+/// samples and tasks already recovered onto survivors are subtracted),
+/// the study completes with zero lost samples, and no sample executes
+/// twice.
+#[test]
+fn killed_member_resubmission_is_exactly_once() {
+    let (_brokers, servers, addrs) = serve_members(3);
+    let mut servers: Vec<Option<BrokerServer>> = servers.into_iter().map(Some).collect();
+    let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let state = StateStore::new(Store::new());
+    let template = sim_template("fed-chaos");
+    let queue = "m.sim";
+    let victim = fed.owner_of(queue).expect("live owner");
+
+    // Phase 1: the whole 60-sample wave lands on the owner; 20 complete.
+    let ids: Vec<u64> = (0..60).collect();
+    fed.publish_batch(wave_tasks(&template, queue, &ids)).unwrap();
+    let consumer = fed.register_consumer();
+    let mut executed: HashSet<u64> = HashSet::new();
+    let mut drained = 0usize;
+    while drained < 20 {
+        // Tasks cover one sample each, so capping the window keeps the
+        // completed set at exactly 20 (the resubmission count below is
+        // asserted exactly).
+        let want = (20 - drained).min(8);
+        let got = fed.fetch_n(consumer, &[queue], 0, want, Duration::from_millis(500));
+        assert!(!got.is_empty(), "wave must be fetchable");
+        for d in got {
+            if let Payload::Step(s) = &d.task.payload {
+                for sample in s.lo..s.hi {
+                    assert!(executed.insert(sample), "sample {sample} executed twice");
+                    state.mark_sample_done("fed-chaos", sample);
+                    drained += 1;
+                }
+            }
+            fed.ack(d.tag).unwrap();
+        }
+    }
+
+    // Phase 2: the owner dies hard. Its 40 queued tasks die with it.
+    servers[victim].take().unwrap().shutdown_hard();
+
+    // Phase 3: five of the missing samples "recover" onto the surviving
+    // owner first (stand-in for a durable member's WAL recovery being
+    // resubmitted by another coordinator). The recovery-aware pass must
+    // subtract the 20 completed and these 5 queued — exactly 35 go back.
+    let recovered: Vec<u64> = (20..25).collect();
+    fed.publish_batch(wave_tasks(&template, queue, &recovered))
+        .unwrap();
+    let resubmitted =
+        resubmit_missing_trusting_broker(&fed, &state, &template, queue, 60, None).unwrap();
+    assert_eq!(resubmitted, 35, "only the uncovered gap is re-enqueued");
+    let downs = fed.failed_over();
+    assert_eq!(downs, vec![addrs[victim].clone()], "down-transition reported");
+
+    // Phase 4: drain the survivors. Every remaining sample executes
+    // exactly once; the study ends complete with nothing lost.
+    loop {
+        let got = fed.fetch_n(consumer, &[queue], 0, 16, Duration::from_millis(300));
+        if got.is_empty() {
+            break;
+        }
+        for d in got {
+            if let Payload::Step(s) = &d.task.payload {
+                for sample in s.lo..s.hi {
+                    assert!(executed.insert(sample), "sample {sample} executed twice");
+                    state.mark_sample_done("fed-chaos", sample);
+                }
+            }
+            fed.ack(d.tag).unwrap();
+        }
+    }
+    assert_eq!(executed.len(), 60, "zero lost samples");
+    assert_eq!(state.done_count("fed-chaos"), 60, "no double-completion");
+    assert_eq!(fed.depth(), 0);
+    for server in servers.into_iter().flatten() {
+        server.shutdown();
+    }
+}
+
+/// Orchestrate-level failover: workers keep consuming while one member
+/// is hard-killed mid-study; the orchestrator's poll loop detects the
+/// loss, resubmits the gap, and the study still completes fully.
+#[test]
+fn orchestrated_study_survives_member_death() {
+    let (brokers, servers, addrs) = serve_members(3);
+    let mut servers: Vec<Option<BrokerServer>> = servers.into_iter().map(Some).collect();
+    let state = StateStore::new(Store::new());
+    let spec = StudySpec::parse(
+        "\
+description:
+  name: chaos
+study:
+  - name: sim
+    run:
+      cmd: 'null: 3 # sample $(MERLIN_SAMPLE_ID)'
+  - name: collect
+    run:
+      cmd: 'null: 1'
+      depends: [sim]
+merlin:
+  samples:
+    count: 80
+    seed: 2
+",
+    )
+    .unwrap();
+    let opts = RunOptions {
+        max_branch: 8,
+        samples_per_task: 1,
+        queue_prefix: "m".into(),
+    };
+    let coordinator_fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let victim = coordinator_fed.owner_of("m.sim").expect("live owner");
+    let victim_broker = brokers[victim].clone();
+
+    // Federated workers, one handle each (their own failure detectors).
+    let mut worker_threads = Vec::new();
+    for w in 0..4 {
+        let addrs = addrs.clone();
+        let st = state.clone();
+        worker_threads.push(std::thread::spawn(move || {
+            let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+            let clock: Arc<dyn merlin::util::clock::Clock> = Arc::new(RealClock::new());
+            let mut cfg = WorkerConfig::simple("unused", clock);
+            cfg.queues = vec!["m.sim".into(), "m.collect".into()];
+            cfg.idle_exit_ms = 0; // stopped by control message
+            cfg.seed = w as u64;
+            let sim = Arc::new(NullSimRunner);
+            merlin::worker::Worker::over(Arc::new(fed), Some(st), None, sim, cfg).run()
+        }));
+    }
+
+    // The killer: once 10 sim tasks have been acked on the victim, it
+    // dies hard — queued remainder lost, in-flight deliveries stranded.
+    let killer = {
+        let server = servers[victim].take().unwrap();
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while victim_broker.totals().acked < 10 && t0.elapsed() < Duration::from_secs(20) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            server.shutdown_hard();
+        })
+    };
+
+    let report = orchestrate(
+        &coordinator_fed,
+        &state,
+        &spec,
+        "chaos-st",
+        &opts,
+        Duration::from_secs(60),
+    )
+    .unwrap();
+    killer.join().unwrap();
+
+    // Stop the workers promptly (one StopWorker each, routed wherever
+    // m.sim now lives).
+    let stops: Vec<TaskEnvelope> = (0..4)
+        .map(|_| {
+            TaskEnvelope::new("m.sim", Payload::Control(ControlMsg::StopWorker))
+        })
+        .collect();
+    coordinator_fed.publish_batch(stops).unwrap();
+    for t in worker_threads {
+        t.join().unwrap();
+    }
+
+    assert!(!report.timed_out, "study must finish inside the deadline");
+    assert_eq!(report.samples_expected, 81);
+    assert_eq!(report.samples_done, 81, "zero lost samples");
+    assert_eq!(report.samples_failed, 0);
+    assert_eq!(state.done_count("chaos-st/sim"), 80, "no double-completion");
+    assert!(
+        report.resubmitted > 0,
+        "the dead member's queued tasks were resubmitted"
+    );
+    for server in servers.into_iter().flatten() {
+        server.shutdown();
+    }
+}
+
+/// Lease expiry is federation-wide: a silent (but connected) worker's
+/// deliveries come back through a reap issued on a *different* handle,
+/// with no retry consumed.
+#[test]
+fn lease_expiry_redelivers_across_federation() {
+    let (_brokers, servers, addrs) = serve_members(2);
+    let producer = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    producer
+        .publish_batch(vec![TaskEnvelope::new(
+            "m.sim",
+            Payload::Control(ControlMsg::Ping {
+                token: "stranded".into(),
+            }),
+        )])
+        .unwrap();
+    // The doomed worker: leases its delivery, then goes silent without
+    // disconnecting — only lease expiry can bring the task back.
+    let silent = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let c = silent.register_consumer();
+    silent.set_consumer_lease(c, Some(Duration::from_millis(80)));
+    let got = silent.fetch_n(c, &["m.sim"], 0, 1, Duration::from_millis(500));
+    assert_eq!(got.len(), 1);
+    let retries_before = got[0].task.retries_left;
+    assert_eq!(producer.lease_stats().active, 1);
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(producer.reap_expired(), 1, "expired lease reaped via another handle");
+    let pc = producer.register_consumer();
+    let redelivered = producer.fetch_n(pc, &["m.sim"], 0, 1, Duration::from_millis(500));
+    assert_eq!(redelivered.len(), 1, "task redelivered after expiry");
+    assert_eq!(
+        redelivered[0].task.retries_left, retries_before,
+        "lease expiry consumes no retry"
+    );
+    assert!(producer.totals().lease_expired >= 1);
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+/// Aggregated status across TCP members: queue names union, totals sum,
+/// and member health all flow through one federated handle.
+#[test]
+fn federated_status_aggregates_tcp_members() {
+    let (_brokers, servers, addrs) = serve_members(2);
+    let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let mut tasks = Vec::new();
+    for q in 0..6 {
+        tasks.push(TaskEnvelope::new(
+            format!("m.step{q}"),
+            Payload::Control(ControlMsg::Ping {
+                token: format!("{q}"),
+            }),
+        ));
+    }
+    fed.publish_batch(tasks).unwrap();
+    assert_eq!(fed.depth(), 6);
+    assert_eq!(fed.totals().published, 6);
+    assert_eq!(fed.queue_names().len(), 6);
+    let health = fed.member_health();
+    assert_eq!(health.len(), 2);
+    assert!(health.iter().all(|m| m.up));
+    // Ranges for recovery subtraction flow over the wire too.
+    let template = sim_template("fed-status");
+    fed.publish_batch(wave_tasks(&template, "m.sim", &[7, 8, 9]))
+        .unwrap();
+    assert_eq!(
+        fed.queued_step_samples("m.sim", "fed-status", "sim"),
+        vec![(7, 10)]
+    );
+    for server in servers {
+        server.shutdown();
+    }
+}
