@@ -1,0 +1,195 @@
+//! featurestore_bench: the result plane's two hot paths.
+//!
+//! **Ingest**: concurrent workers flushing columnar [`ResultBatch`]es
+//! into the sharded store under each fsync policy (rows/s — the rate the
+//! whole ensemble can report results at). **Export**: compacting the
+//! ingested store into one training-ready container (`merlin export`'s
+//! latency from "study finished" to "surrogate can train"). Every run
+//! ends with a reopen that asserts the recovered row count matches what
+//! was acked, so the numbers are for a store that demonstrably recovers.
+//! Results go to stdout, `results/featurestore_bench.csv`, and
+//! `results/featurestore_bench.json`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use merlin::broker::wal::FsyncPolicy;
+use merlin::data::featurestore::{FeatureStore, ResultBatch, ResultRow, STATUS_OK};
+use merlin::metrics::series::Series;
+use merlin::util::json::{to_string, Json};
+
+const PARAM_DIM: usize = 5;
+const OUTPUT_DIM: usize = 16; // JAG scalar block
+
+fn jag_batch(lo: u64, n: usize) -> ResultBatch {
+    let rows: Vec<ResultRow> = (0..n as u64)
+        .map(|i| {
+            let id = lo + i;
+            ResultRow {
+                sample_id: id,
+                params: (0..PARAM_DIM).map(|d| (id + d as u64) as f32).collect(),
+                outputs: (0..OUTPUT_DIM).map(|d| (id + d as u64) as f64).collect(),
+                status: STATUS_OK,
+                sim_us: 1_000,
+            }
+        })
+        .collect();
+    ResultBatch::from_rows("bench/sim", "sim", &rows)
+}
+
+struct RunStats {
+    label: &'static str,
+    rows_per_s: f64,
+    ingest_ms: f64,
+    export_ms: f64,
+    bytes: u64,
+    fsyncs: u64,
+}
+
+fn run(
+    label: &'static str,
+    fsync: FsyncPolicy,
+    writers: usize,
+    batches_per_writer: u64,
+    rows_per_batch: usize,
+) -> RunStats {
+    let dir = std::env::temp_dir().join(format!(
+        "merlin-fstore-bench-{}-{label}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let total_rows = writers as u64 * batches_per_writer * rows_per_batch as u64;
+    let fs = Arc::new(FeatureStore::open(&dir, 8, fsync).expect("open store"));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..writers {
+        let fs = fs.clone();
+        handles.push(std::thread::spawn(move || {
+            for b in 0..batches_per_writer {
+                let lo = (w as u64 * batches_per_writer + b) * rows_per_batch as u64;
+                fs.append(&jag_batch(lo, rows_per_batch)).expect("append");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("writer");
+    }
+    fs.flush().expect("flush");
+    let ingest = t0.elapsed().as_secs_f64();
+    let st = fs.stats();
+    assert_eq!(st.rows, total_rows, "{label}: every row acked");
+
+    // Export latency: store -> one training container.
+    let out = dir.join("train.mrln");
+    let t1 = Instant::now();
+    let manifest = fs.export("bench/sim", &out, &[]).expect("export");
+    let export = t1.elapsed().as_secs_f64();
+    assert_eq!(manifest.rows, total_rows, "{label}: export is lossless");
+    drop(fs);
+
+    // Recovery check: a reopened store must hand every row back.
+    let reopened = FeatureStore::open(&dir, 8, fsync).expect("reopen");
+    assert_eq!(
+        reopened.stats().rows, total_rows,
+        "{label}: recovery must be lossless"
+    );
+    drop(reopened);
+    std::fs::remove_dir_all(&dir).ok();
+    RunStats {
+        label,
+        rows_per_s: total_rows as f64 / ingest,
+        ingest_ms: ingest * 1e3,
+        export_ms: export * 1e3,
+        bytes: st.bytes,
+        fsyncs: st.fsyncs,
+    }
+}
+
+fn main() {
+    // MERLIN_BENCH_QUICK=1: the CI smoke size (seconds, not minutes).
+    let quick = merlin::util::bench_quick();
+    let (writers, batches, rows) = if quick {
+        (4usize, 40u64, 10usize)
+    } else {
+        (8, 250, 10)
+    };
+    let total = writers as u64 * batches * rows as u64;
+    println!(
+        "featurestore_bench — {writers} writers x {batches} batches x {rows} rows \
+         ({total} JAG-shaped rows, 8 shards)\n"
+    );
+    let runs = [
+        run("fsync_never", FsyncPolicy::Never, writers, batches, rows),
+        run(
+            "fsync_interval_5ms",
+            FsyncPolicy::Interval(5),
+            writers,
+            batches,
+            rows,
+        ),
+        run("fsync_always", FsyncPolicy::Always, writers, batches, rows),
+    ];
+
+    let mut s = Series::new(
+        "feature-store ingest throughput + export latency per fsync policy",
+        "config",
+        &["rows_per_s", "ingest_ms", "export_ms", "bytes", "fsyncs"],
+    );
+    for (i, r) in runs.iter().enumerate() {
+        println!(
+            "  {:>20}: {:>12.0} rows/s ingest ({:>8.1} ms), export {:>8.1} ms, \
+             {} bytes, {} fsyncs",
+            r.label, r.rows_per_s, r.ingest_ms, r.export_ms, r.bytes, r.fsyncs
+        );
+        s.push(
+            i as f64,
+            vec![
+                r.rows_per_s,
+                r.ingest_ms,
+                r.export_ms,
+                r.bytes as f64,
+                r.fsyncs as f64,
+            ],
+        );
+    }
+    println!("\n{}", s.table());
+
+    // Qualitative claims: `never` stays off the fsync path entirely
+    // (flush() issues its one terminal sync per dirty shard), and
+    // `always` pays at least one sync per append.
+    assert!(
+        runs[0].fsyncs <= 8,
+        "never: at most one terminal flush per shard"
+    );
+    assert!(
+        runs[2].fsyncs >= writers as u64 * batches,
+        "always: one fsync per append"
+    );
+
+    let dir = std::path::Path::new("results");
+    s.save_csv(dir, "featurestore_bench").ok();
+    let record = |r: &RunStats| {
+        Json::obj(vec![
+            ("label", Json::str(r.label)),
+            ("rows_per_s", Json::num(r.rows_per_s)),
+            ("ingest_ms", Json::num(r.ingest_ms)),
+            ("export_ms", Json::num(r.export_ms)),
+            ("bytes", Json::num(r.bytes as f64)),
+            ("fsyncs", Json::num(r.fsyncs as f64)),
+        ])
+    };
+    let out = Json::obj(vec![
+        ("rows", Json::num(total as f64)),
+        ("writers", Json::num(writers as f64)),
+        ("quick", Json::Bool(quick)),
+        ("runs", Json::arr(runs.iter().map(record).collect())),
+        (
+            "durability_cost_always_vs_never",
+            Json::num(runs[0].rows_per_s / runs[2].rows_per_s),
+        ),
+    ]);
+    if std::fs::create_dir_all(dir).is_ok() {
+        std::fs::write(dir.join("featurestore_bench.json"), to_string(&out)).ok();
+    }
+    println!("\nfeaturestore_bench OK (CSV + JSON in results/)");
+}

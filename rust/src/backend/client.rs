@@ -1,10 +1,16 @@
-//! Blocking TCP client for the results backend.
+//! Blocking TCP client for the results backend, plus
+//! [`RemoteResultSink`] — the TCP implementation of the result plane's
+//! [`ResultSink`] that distributed workers flush their columnar batches
+//! through.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::sync::Mutex;
 
 use crate::broker::client::ClientError;
 use crate::broker::wire::{self, WireError};
+use crate::data::featurestore::{ResultBatch, ResultSink};
+use crate::util::hex;
 use crate::util::json::Json;
 
 /// A connected backend client (Redis-shaped ops over the frame protocol).
@@ -118,5 +124,60 @@ impl BackendClient {
             ("key", Json::str(key)),
         ]))?;
         Ok(r.get("card").as_u64().unwrap_or(0) as usize)
+    }
+
+    /// Ship one columnar result batch to the server in a single round
+    /// trip. The server appends it to its feature store (when one is
+    /// attached) and, when `objective_index` is given, derives the
+    /// scalar-objective view server-side. Returns the rows recorded.
+    pub fn record_results(
+        &mut self,
+        batch: &ResultBatch,
+        objective_index: Option<usize>,
+    ) -> Result<u64, ClientError> {
+        let mut pairs = vec![
+            ("op", Json::str("record_results")),
+            ("batch", Json::Str(hex::encode(&batch.encode_vec()))),
+        ];
+        if let Some(idx) = objective_index {
+            pairs.push(("objective", Json::num(idx as f64)));
+        }
+        let r = self.call(&Json::obj(pairs))?;
+        Ok(r.get("rows").as_u64().unwrap_or(0))
+    }
+}
+
+/// [`ResultSink`] over a backend TCP connection: the sink a distributed
+/// worker plugs into `WorkerConfig::results` so its per-task batches
+/// land in the backend server's feature store. One connection per sink
+/// (a mutex serializes flushes, which arrive one per step task — far
+/// from hot).
+pub struct RemoteResultSink {
+    client: Mutex<BackendClient>,
+    objective_index: Option<usize>,
+}
+
+impl RemoteResultSink {
+    /// Wrap an already-connected client.
+    pub fn new(client: BackendClient, objective_index: Option<usize>) -> Self {
+        Self {
+            client: Mutex::new(client),
+            objective_index,
+        }
+    }
+
+    /// Connect to a backend server and wrap the connection.
+    pub fn connect(addr: &str, objective_index: Option<usize>) -> std::io::Result<Self> {
+        Ok(Self::new(BackendClient::connect(addr)?, objective_index))
+    }
+}
+
+impl ResultSink for RemoteResultSink {
+    fn record_results(&self, batch: &ResultBatch) -> Result<u64, String> {
+        self.client
+            .lock()
+            .unwrap()
+            .record_results(batch, self.objective_index)
+            .map_err(|e| e.to_string())
     }
 }

@@ -6,12 +6,16 @@
 //! disk). We implement the Redis surface the stack needs: string KV,
 //! hashes, sets, counters, and snapshot persistence, plus a typed
 //! task-state layer ([`state`]) on top. [`net`]/[`client`] expose it over
-//! the same frame protocol as the broker.
+//! the same frame protocol as the broker, including the result plane's
+//! batched `record_results` op (full columnar rows into an attached
+//! [`crate::data::featurestore::FeatureStore`]; the scalar-objective
+//! index is a derived view).
 
 pub mod client;
 pub mod net;
 pub mod state;
 pub mod store;
 
+pub use client::RemoteResultSink;
 pub use state::{StateStore, TaskState};
 pub use store::Store;

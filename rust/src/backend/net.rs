@@ -1,5 +1,13 @@
 //! TCP front-end for the results backend (same frame protocol as the
 //! broker server; Redis-shaped ops encoded as JSON requests).
+//!
+//! Besides the Redis-shaped KV ops, the server speaks the result
+//! plane's batched `record_results` op: a worker ships one framed
+//! columnar [`ResultBatch`] per step task (hex-encoded inside the JSON
+//! frame), the server appends it to its [`FeatureStore`] (when one is
+//! attached via [`BackendServer::serve_with_results`]) and derives the
+//! backward-compatible scalar-objective view in the same call — one
+//! round trip per task instead of one `set`+`sadd` pair per sample.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
@@ -7,8 +15,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::state::StateStore;
 use super::store::Store;
 use crate::broker::wire::{self, WireError};
+use crate::data::featurestore::{derive_objectives, FeatureStore, ResultBatch};
+use crate::util::hex;
 use crate::util::json::Json;
 
 /// Handle to a running backend server. Dropping does not stop it; call
@@ -22,7 +33,21 @@ pub struct BackendServer {
 
 impl BackendServer {
     /// Bind and serve `store` on `addr` (use port 0 for ephemeral).
+    /// Result batches are accepted but only their derived objective view
+    /// is kept; attach a feature store with
+    /// [`BackendServer::serve_with_results`] to persist full rows.
     pub fn serve(store: Store, addr: &str) -> std::io::Result<BackendServer> {
+        Self::serve_with_results(store, None, addr)
+    }
+
+    /// [`BackendServer::serve`] with the result plane attached: every
+    /// `record_results` batch is appended to `results` before the
+    /// derived objective view lands in `store`.
+    pub fn serve_with_results(
+        store: Store,
+        results: Option<Arc<FeatureStore>>,
+        addr: &str,
+    ) -> std::io::Result<BackendServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -40,8 +65,9 @@ impl BackendServer {
                                 break;
                             }
                             let store = store.clone();
+                            let results = results.clone();
                             stream.set_nodelay(true).ok();
-                            std::thread::spawn(move || handle_conn(store, stream));
+                            std::thread::spawn(move || handle_conn(store, results, stream));
                         }
                         Err(_) => {
                             if stop2.load(Ordering::Relaxed) {
@@ -72,7 +98,7 @@ impl BackendServer {
     }
 }
 
-fn handle_conn(store: Store, stream: TcpStream) {
+fn handle_conn(store: Store, results: Option<Arc<FeatureStore>>, stream: TcpStream) {
     let mut reader = BufReader::new(stream.try_clone().expect("clone"));
     let mut writer = BufWriter::new(stream);
     loop {
@@ -80,16 +106,50 @@ fn handle_conn(store: Store, stream: TcpStream) {
             Ok(v) => v,
             Err(WireError::Closed) | Err(_) => break,
         };
-        let resp = dispatch(&store, &req);
+        let resp = dispatch(&store, &results, &req);
         if wire::write_frame(&mut writer, &resp).is_err() || writer.flush().is_err() {
             break;
         }
     }
 }
 
-fn dispatch(store: &Store, req: &Json) -> Json {
+/// Handle the batched result-plane op: decode the framed columnar batch,
+/// append it to the feature store (when attached), and derive the
+/// scalar-objective view when the worker declared one.
+fn dispatch_record_results(
+    store: &Store,
+    results: &Option<Arc<FeatureStore>>,
+    req: &Json,
+) -> Json {
+    let Some(blob) = req.get("batch").as_str().and_then(hex::decode) else {
+        return wire::err("missing or unhex-able batch");
+    };
+    let batch = match ResultBatch::decode_vec(&blob) {
+        Ok(b) => b,
+        Err(e) => return wire::err(format!("bad batch: {e}")),
+    };
+    let stored = match results {
+        Some(fs) => match fs.append(&batch) {
+            Ok(_) => true,
+            Err(e) => return wire::err(format!("feature store append: {e}")),
+        },
+        None => false,
+    };
+    let derived = match req.get("objective").as_u64() {
+        Some(idx) => derive_objectives(&StateStore::new(store.clone()), &batch, idx as usize),
+        None => 0,
+    };
+    wire::ok(vec![
+        ("rows", Json::num(batch.len() as f64)),
+        ("stored", Json::Bool(stored)),
+        ("derived", Json::num(derived as f64)),
+    ])
+}
+
+fn dispatch(store: &Store, results: &Option<Arc<FeatureStore>>, req: &Json) -> Json {
     let key = req.get("key").as_str().unwrap_or("");
     match req.get("op").as_str() {
+        Some("record_results") => dispatch_record_results(store, results, req),
         Some("set") => {
             store.set(key, req.get("value").as_str().unwrap_or(""));
             wire::ok(vec![])
@@ -179,6 +239,54 @@ mod tests {
         // Server writes hit the shared store directly.
         assert_eq!(store.get("k").as_deref(), Some("v"));
         server.shutdown();
+    }
+
+    #[test]
+    fn record_results_over_tcp_appends_and_derives() {
+        use crate::broker::wal::FsyncPolicy;
+        use crate::data::featurestore::{ResultRow, STATUS_OK};
+        let dir = std::env::temp_dir().join(format!(
+            "merlin-backend-rr-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = Store::new();
+        let fs = Arc::new(FeatureStore::open(&dir, 2, FsyncPolicy::Never).unwrap());
+        let server =
+            BackendServer::serve_with_results(store.clone(), Some(fs.clone()), "127.0.0.1:0")
+                .unwrap();
+        let mut c = BackendClient::connect(&server.addr.to_string()).unwrap();
+        let rows: Vec<ResultRow> = (0..5)
+            .map(|i| ResultRow {
+                sample_id: i,
+                params: vec![i as f32, 1.0],
+                outputs: vec![i as f64 * 0.5, 9.0],
+                status: STATUS_OK,
+                sim_us: 3,
+            })
+            .collect();
+        let batch = ResultBatch::from_rows("st/sim", "sim", &rows);
+        let n = c.record_results(&batch, Some(0)).unwrap();
+        assert_eq!(n, 5);
+        // Full rows landed in the server's feature store...
+        let back = fs.rows_for("st/sim").unwrap();
+        assert_eq!(back.len(), 5);
+        assert_eq!(back[3].outputs, vec![1.5, 9.0]);
+        // ...and the derived scalar view landed in the shared KV store.
+        let state = StateStore::new(store.clone());
+        assert_eq!(state.objective_count("st/sim"), 5);
+        assert_eq!(state.objectives("st/sim")[2], (2, 1.0));
+        server.shutdown();
+
+        // A plain backend (no store attached) still derives the view.
+        let store2 = Store::new();
+        let server2 = BackendServer::serve(store2.clone(), "127.0.0.1:0").unwrap();
+        let mut c2 = BackendClient::connect(&server2.addr.to_string()).unwrap();
+        assert_eq!(c2.record_results(&batch, Some(1)).unwrap(), 5);
+        assert_eq!(StateStore::new(store2).objectives("st/sim")[0], (0, 9.0));
+        server2.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

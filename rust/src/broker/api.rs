@@ -123,6 +123,23 @@ pub trait TaskQueue: Send + Sync {
     /// Point-in-time statistics for one queue (summed across members).
     fn stats(&self, queue: &str) -> QueueStats;
 
+    /// Every queue's statistics, sorted by queue name. The default
+    /// composes [`TaskQueue::queue_names`] + per-queue
+    /// [`TaskQueue::stats`]; implementations with a cheaper bulk path
+    /// (the broker's one-pass shard scan, the federation's one
+    /// `stats_all` RPC per member) override it — this is what keeps
+    /// federated `merlin status` at O(members) round trips instead of
+    /// O(queues × members).
+    fn stats_all(&self) -> Vec<(String, QueueStats)> {
+        self.queue_names()
+            .into_iter()
+            .map(|q| {
+                let st = self.stats(&q);
+                (q, st)
+            })
+            .collect()
+    }
+
     /// Lifetime totals (summed across members).
     fn totals(&self) -> BrokerTotals;
 
@@ -220,6 +237,10 @@ impl TaskQueue for Broker {
 
     fn stats(&self, queue: &str) -> QueueStats {
         Broker::stats(self, queue)
+    }
+
+    fn stats_all(&self) -> Vec<(String, QueueStats)> {
+        Broker::stats_all(self)
     }
 
     fn totals(&self) -> BrokerTotals {

@@ -490,17 +490,27 @@ impl BrokerClient {
             ("op", Json::str("stats")),
             ("queue", Json::str(queue)),
         ]))?;
-        Ok(QueueStats {
-            ready: r.get("ready").as_u64().unwrap_or(0) as usize,
-            unacked: r.get("unacked").as_u64().unwrap_or(0) as usize,
-            published: r.get("published").as_u64().unwrap_or(0),
-            delivered: r.get("delivered").as_u64().unwrap_or(0),
-            acked: r.get("acked").as_u64().unwrap_or(0),
-            requeued: r.get("requeued").as_u64().unwrap_or(0),
-            dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
-            lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
-            bytes_published: r.get("bytes_published").as_u64().unwrap_or(0),
-        })
+        Ok(queue_stats_from(&r))
+    }
+
+    /// Every queue's statistics in ONE round trip (the bulk `stats_all`
+    /// op), sorted by queue name. Against a pre-bulk server the op is
+    /// unknown: callers that must interop fall back to
+    /// [`BrokerClient::queues`] + per-queue [`BrokerClient::stats`].
+    pub fn stats_all(&mut self) -> Result<Vec<(String, QueueStats)>, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("stats_all"))]))?;
+        Ok(r.get("queues")
+            .as_arr()
+            .map(|queues| {
+                queues
+                    .iter()
+                    .filter_map(|q| {
+                        let name = q.get("name").as_str()?.to_string();
+                        Some((name, queue_stats_from(q)))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default())
     }
 
     /// Drop all ready messages in `queue`; returns how many were dropped.
@@ -525,5 +535,21 @@ impl BrokerClient {
             .as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
             .unwrap_or_default())
+    }
+}
+
+/// Parse one queue's statistics from a reply object (shared by the
+/// per-queue and bulk stats calls).
+fn queue_stats_from(v: &Json) -> QueueStats {
+    QueueStats {
+        ready: v.get("ready").as_u64().unwrap_or(0) as usize,
+        unacked: v.get("unacked").as_u64().unwrap_or(0) as usize,
+        published: v.get("published").as_u64().unwrap_or(0),
+        delivered: v.get("delivered").as_u64().unwrap_or(0),
+        acked: v.get("acked").as_u64().unwrap_or(0),
+        requeued: v.get("requeued").as_u64().unwrap_or(0),
+        dead_lettered: v.get("dead_lettered").as_u64().unwrap_or(0),
+        lease_expired: v.get("lease_expired").as_u64().unwrap_or(0),
+        bytes_published: v.get("bytes_published").as_u64().unwrap_or(0),
     }
 }

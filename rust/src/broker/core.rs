@@ -1634,6 +1634,23 @@ impl Broker {
         names
     }
 
+    /// Every queue's point-in-time statistics in one pass (one lock
+    /// acquisition per shard instead of one per queue), sorted by queue
+    /// name — the bulk form behind the `stats_all` wire op, which keeps
+    /// federated `merlin status` at one RPC per member instead of
+    /// O(queues × members).
+    pub fn stats_all(&self) -> Vec<(String, QueueStats)> {
+        let mut out: Vec<(String, QueueStats)> = Vec::new();
+        for shard in &self.inner.shards {
+            let s = shard.state.lock().unwrap();
+            for (name, q) in &s.queues {
+                out.push((name.clone(), q.stats.clone()));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
     /// Total ready messages across all queues (lock-free).
     pub fn depth(&self) -> usize {
         self.inner.total_ready.load(Ordering::Relaxed)

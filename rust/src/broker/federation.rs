@@ -958,6 +958,46 @@ impl TaskQueue for FederatedClient {
         acc
     }
 
+    /// One bulk `stats_all` round trip per live member (a pre-bulk
+    /// remote member falls back to queues + per-queue stats on that
+    /// member only), merged by queue name — the O(members) path behind
+    /// federated `merlin status`.
+    fn stats_all(&self) -> Vec<(String, QueueStats)> {
+        let mut acc: BTreeMap<String, QueueStats> = BTreeMap::new();
+        for idx in self.live_indices() {
+            let member: Vec<(String, QueueStats)> = match self.snapshot(idx) {
+                Snapshot::Local(b) => b.stats_all(),
+                Snapshot::DeadLocal => Vec::new(),
+                Snapshot::Remote => match self.member_remote(idx, |c| c.stats_all()) {
+                    Ok(all) => all,
+                    // An old server rejects the op server-side (the
+                    // connection stays healthy): fall back to per-queue
+                    // RPCs against this member alone.
+                    Err(MemberErr::Fatal(_)) => self
+                        .member_remote(idx, |c| c.queues())
+                        .ok()
+                        .map(|queues| {
+                            queues
+                                .into_iter()
+                                .filter_map(|q| {
+                                    let st = self
+                                        .member_remote(idx, |c| c.stats(&q))
+                                        .ok()?;
+                                    Some((q, st))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                    Err(MemberErr::Transport(_)) => Vec::new(),
+                },
+            };
+            for (name, st) in member {
+                merge_queue_stats(acc.entry(name).or_default(), &st);
+            }
+        }
+        acc.into_iter().collect()
+    }
+
     fn totals(&self) -> BrokerTotals {
         let mut acc = BrokerTotals::default();
         for idx in self.live_indices() {
@@ -1120,6 +1160,63 @@ mod tests {
             } else {
                 assert_ne!(owner_after, 2, "{q} still routed to the dead member");
             }
+        }
+    }
+
+    #[test]
+    fn stats_all_aggregates_with_one_pass_per_member() {
+        let (brokers, fed) = local_fed(3);
+        let mut tasks = Vec::new();
+        for q in 0..6 {
+            for t in 0..(q + 1) {
+                tasks.push(ping(&format!("m.s{q}"), &format!("{q}-{t}")));
+            }
+        }
+        fed.publish_batch(tasks).unwrap();
+        let all = TaskQueue::stats_all(&fed);
+        assert_eq!(
+            all.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+            (0..6).map(|q| format!("m.s{q}")).collect::<Vec<_>>(),
+            "sorted union of queue names"
+        );
+        for (q, (name, st)) in all.iter().enumerate() {
+            assert_eq!(st.published, q as u64 + 1, "{name}");
+            assert_eq!(st.ready, q + 1);
+            // The bulk path agrees with the per-queue path.
+            assert_eq!(*st, TaskQueue::stats(&fed, name));
+        }
+        // Individual members hold only their owned slices.
+        let member_rows: usize = brokers.iter().map(|b| b.stats_all().len()).sum();
+        assert_eq!(member_rows, 6, "each queue lives on exactly one member");
+        // A dead member's queues drop out of the aggregate.
+        fed.kill_member(fed.owner_of("m.s5").unwrap());
+        let after = TaskQueue::stats_all(&fed);
+        assert!(after.len() < 6);
+        assert!(after.iter().all(|(n, _)| n.as_str() != "m.s5"));
+    }
+
+    #[test]
+    fn stats_all_over_tcp_members_is_one_rpc_per_member() {
+        use crate::broker::net::BrokerServer;
+        let brokers: Vec<Broker> = (0..2).map(|_| Broker::default()).collect();
+        let servers: Vec<BrokerServer> = brokers
+            .iter()
+            .map(|b| BrokerServer::serve(b.clone(), "127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<String> = servers.iter().map(|s| s.addr.to_string()).collect();
+        let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+        let tasks: Vec<TaskEnvelope> = (0..5)
+            .flat_map(|q| (0..3).map(move |t| (q, t)))
+            .map(|(q, t)| ping(&format!("m.s{q}"), &format!("{q}-{t}")))
+            .collect();
+        fed.publish_batch(tasks).unwrap();
+        let all = TaskQueue::stats_all(&fed);
+        assert_eq!(all.len(), 5);
+        assert!(all.iter().all(|(_, st)| st.published == 3));
+        let total: u64 = all.iter().map(|(_, st)| st.published).sum();
+        assert_eq!(total, 15);
+        for s in servers {
+            s.shutdown();
         }
     }
 

@@ -25,7 +25,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::core::{Broker, BrokerError};
+use super::core::{Broker, BrokerError, QueueStats};
 use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
@@ -197,6 +197,23 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
 
 fn broker_err(e: BrokerError) -> Json {
     wire::err(e.to_string())
+}
+
+/// The JSON field list of one queue's statistics — shared by the
+/// per-queue `stats` op and the bulk `stats_all` op so the two replies
+/// cannot drift.
+fn stats_pairs(st: &QueueStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("ready", Json::num(st.ready as f64)),
+        ("unacked", Json::num(st.unacked as f64)),
+        ("published", Json::num(st.published as f64)),
+        ("delivered", Json::num(st.delivered as f64)),
+        ("acked", Json::num(st.acked as f64)),
+        ("requeued", Json::num(st.requeued as f64)),
+        ("dead_lettered", Json::num(st.dead_lettered as f64)),
+        ("lease_expired", Json::num(st.lease_expired as f64)),
+        ("bytes_published", Json::num(st.bytes_published as f64)),
+    ]
 }
 
 /// Handle one binary batch frame.
@@ -432,18 +449,22 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
         }
         Some("stats") => {
             let queue = req.get("queue").as_str().unwrap_or("");
-            let st = broker.stats(queue);
-            wire::ok(vec![
-                ("ready", Json::num(st.ready as f64)),
-                ("unacked", Json::num(st.unacked as f64)),
-                ("published", Json::num(st.published as f64)),
-                ("delivered", Json::num(st.delivered as f64)),
-                ("acked", Json::num(st.acked as f64)),
-                ("requeued", Json::num(st.requeued as f64)),
-                ("dead_lettered", Json::num(st.dead_lettered as f64)),
-                ("lease_expired", Json::num(st.lease_expired as f64)),
-                ("bytes_published", Json::num(st.bytes_published as f64)),
-            ])
+            wire::ok(stats_pairs(&broker.stats(queue)))
+        }
+        Some("stats_all") => {
+            // One reply for every queue on this broker: the bulk form
+            // that keeps a federated `merlin status` at one RPC per
+            // member instead of one per (queue, member) pair.
+            let queues: Vec<Json> = broker
+                .stats_all()
+                .into_iter()
+                .map(|(name, st)| {
+                    let mut pairs = vec![("name", Json::Str(name))];
+                    pairs.extend(stats_pairs(&st));
+                    Json::obj(pairs)
+                })
+                .collect();
+            wire::ok(vec![("queues", Json::arr(queues))])
         }
         Some("purge") => {
             let queue = req.get("queue").as_str().unwrap_or("");
@@ -686,6 +707,36 @@ mod tests {
             "lease expiry consumed no retry"
         );
         assert!(producer.stats("q").unwrap().lease_expired >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bulk_stats_all_over_tcp_matches_per_queue() {
+        let broker = Broker::default();
+        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        for (q, n) in [("qa", 2), ("qb", 5)] {
+            for i in 0..n {
+                client
+                    .publish(&TaskEnvelope::new(
+                        q,
+                        Payload::Control(ControlMsg::Ping {
+                            token: format!("{q}-{i}"),
+                        }),
+                    ))
+                    .unwrap();
+            }
+        }
+        let all = client.stats_all().unwrap();
+        assert_eq!(
+            all.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["qa", "qb"]
+        );
+        for (name, st) in &all {
+            assert_eq!(*st, client.stats(name).unwrap(), "{name}");
+            assert_eq!(*st, broker.stats(name));
+        }
+        assert_eq!(all[1].1.published, 5);
         server.shutdown();
     }
 

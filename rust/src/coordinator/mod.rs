@@ -38,7 +38,7 @@ pub use resubmit::{
 };
 pub use run::{enqueue_step_instance, step_instance_root, step_work, RunOptions, StepInstanceRoot};
 pub use status::{
-    broker_sections_json, consumer_lease_json, member_health_json, queue_stats_json, status_json,
-    status_report,
+    broker_sections_json, consumer_lease_json, dataset_json, member_health_json, queue_stats_json,
+    status_json, status_json_full, status_report, status_report_full,
 };
 pub use steer::{steer, IdwProposer, SampleProposer, SteerReport};

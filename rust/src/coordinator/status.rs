@@ -1,10 +1,16 @@
 //! `merlin status`: queue depths, worker liveness / delivery leases,
-//! steering progress, and per-study completion — as text for humans and
-//! as JSON ([`status_json`]) for tooling.
+//! steering progress, per-study completion, and the feature store's
+//! dataset tallies — as text for humans and as JSON ([`status_json`])
+//! for tooling.
+//!
+//! Queue statistics come from the bulk [`TaskQueue::stats_all`] surface:
+//! one shard pass in-process, one RPC per member against a federation —
+//! never one RPC per (queue, member) pair.
 
 use crate::backend::state::StateStore;
 use crate::broker::api::{MemberHealth, TaskQueue};
 use crate::broker::core::{ConsumerLease, QueueStats};
+use crate::metrics::recorder::DatasetStats;
 use crate::util::json::Json;
 
 /// One queue's stats as a JSON object — shared by the in-process
@@ -86,11 +92,49 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
     ]
 }
 
+/// The feature-store dataset section: totals plus per-study row counts,
+/// with completeness against the expected counts in `studies` (when the
+/// study is listed there).
+pub fn dataset_json(ds: &DatasetStats, studies: &[(&str, u64)]) -> Json {
+    let per_study: Vec<Json> = ds
+        .studies
+        .iter()
+        .map(|s| {
+            let mut pairs = vec![
+                ("study", Json::str(s.study.as_str())),
+                ("ok_rows", Json::num(s.ok_rows as f64)),
+                ("failed_rows", Json::num(s.failed_rows as f64)),
+            ];
+            if let Some((_, n)) = studies.iter().find(|(name, _)| *name == s.study) {
+                pairs.push(("completeness", Json::num(s.completeness(*n))));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("rows", Json::num(ds.rows as f64)),
+        ("bytes", Json::num(ds.bytes as f64)),
+        ("batches", Json::num(ds.batches as f64)),
+        ("studies", Json::arr(per_study)),
+    ])
+}
+
 /// Text status report over all queues and the given study keys.
 pub fn status_report(
     broker: &dyn TaskQueue,
     state: &StateStore,
     studies: &[(&str, u64)],
+) -> String {
+    status_report_full(broker, state, studies, None)
+}
+
+/// [`status_report`] plus the feature store's dataset section when a
+/// result plane is attached.
+pub fn status_report_full(
+    broker: &dyn TaskQueue,
+    state: &StateStore,
+    studies: &[(&str, u64)],
+    dataset: Option<&DatasetStats>,
 ) -> String {
     let mut out = String::new();
     let members = broker.member_health();
@@ -110,8 +154,7 @@ pub fn status_report(
         }
     }
     out.push_str("queues:\n");
-    for q in broker.queue_names() {
-        let st = broker.stats(&q);
+    for (q, st) in broker.stats_all() {
         out.push_str(&format!(
             "  {q}: ready={} unacked={} published={} acked={} requeued={} dead={}\n",
             st.ready, st.unacked, st.published, st.acked, st.requeued, st.dead_lettered
@@ -146,6 +189,31 @@ pub fn status_report(
             }
         }
     }
+    if let Some(ds) = dataset {
+        out.push_str(&format!(
+            "dataset: {} rows in {} batches ({} bytes)\n",
+            ds.rows, ds.batches, ds.bytes
+        ));
+        for s in &ds.studies {
+            let expected = studies
+                .iter()
+                .find(|(name, _)| *name == s.study)
+                .map(|(_, n)| *n);
+            match expected {
+                Some(n) => out.push_str(&format!(
+                    "  {}: {} ok rows, {} failed ({:.1}% complete)\n",
+                    s.study,
+                    s.ok_rows,
+                    s.failed_rows,
+                    100.0 * s.completeness(n)
+                )),
+                None => out.push_str(&format!(
+                    "  {}: {} ok rows, {} failed\n",
+                    s.study, s.ok_rows, s.failed_rows
+                )),
+            }
+        }
+    }
     out
 }
 
@@ -155,10 +223,21 @@ pub fn status_report(
 /// with steering progress where present. Against a federation every
 /// number is the aggregate across live members.
 pub fn status_json(broker: &dyn TaskQueue, state: &StateStore, studies: &[(&str, u64)]) -> Json {
+    status_json_full(broker, state, studies, None)
+}
+
+/// [`status_json`] plus the feature store's `dataset` section when a
+/// result plane is attached.
+pub fn status_json_full(
+    broker: &dyn TaskQueue,
+    state: &StateStore,
+    studies: &[(&str, u64)],
+    dataset: Option<&DatasetStats>,
+) -> Json {
     let queues: Vec<Json> = broker
-        .queue_names()
+        .stats_all()
         .into_iter()
-        .map(|q| queue_stats_json(&q, &broker.stats(&q)))
+        .map(|(q, st)| queue_stats_json(&q, &st))
         .collect();
     let studies_json: Vec<Json> = studies
         .iter()
@@ -185,6 +264,9 @@ pub fn status_json(broker: &dyn TaskQueue, state: &StateStore, studies: &[(&str,
     let mut pairs = vec![("queues", Json::arr(queues))];
     pairs.extend(broker_sections_json(broker));
     pairs.push(("studies", Json::arr(studies_json)));
+    if let Some(ds) = dataset {
+        pairs.push(("dataset", dataset_json(ds, studies)));
+    }
     let members = broker.member_health();
     if !members.is_empty() {
         pairs.push((
@@ -248,6 +330,71 @@ mod tests {
         // A plain broker's JSON has no federation section.
         let plain = Broker::default();
         assert!(matches!(status_json(&plain, &state, &[]).get("federation"), Json::Null));
+    }
+
+    #[test]
+    fn dataset_section_reports_rows_and_completeness() {
+        use crate::metrics::recorder::{DatasetStats, StudyDatasetStats};
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        let ds = DatasetStats {
+            rows: 10,
+            bytes: 2048,
+            batches: 3,
+            fsyncs: 1,
+            studies: vec![
+                StudyDatasetStats {
+                    study: "s1".into(),
+                    ok_rows: 8,
+                    failed_rows: 2,
+                },
+                StudyDatasetStats {
+                    study: "other".into(),
+                    ok_rows: 1,
+                    failed_rows: 0,
+                },
+            ],
+        };
+        let j = status_json_full(&broker, &state, &[("s1", 16)], Some(&ds));
+        let d = j.get("dataset");
+        assert_eq!(d.get("rows").as_u64(), Some(10));
+        assert_eq!(d.get("batches").as_u64(), Some(3));
+        let per = d.get("studies").as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].get("ok_rows").as_u64(), Some(8));
+        assert!((per[0].get("completeness").as_f64().unwrap() - 0.5).abs() < 1e-12);
+        // A study not in the expected list has no completeness figure.
+        assert!(matches!(per[1].get("completeness"), Json::Null));
+        let text = status_report_full(&broker, &state, &[("s1", 16)], Some(&ds));
+        assert!(text.contains("dataset: 10 rows in 3 batches"));
+        assert!(text.contains("s1: 8 ok rows, 2 failed (50.0% complete)"));
+        assert!(text.contains("other: 1 ok rows, 0 failed"));
+        // Without a dataset the section is absent from both forms.
+        assert!(matches!(status_json(&broker, &state, &[]).get("dataset"), Json::Null));
+        assert!(!status_report(&broker, &state, &[]).contains("dataset:"));
+    }
+
+    #[test]
+    fn bulk_stats_all_matches_per_queue_stats() {
+        let broker = Broker::default();
+        for q in ["m.a", "m.b", "m.c"] {
+            broker
+                .publish(TaskEnvelope::new(
+                    q,
+                    Payload::Control(ControlMsg::Ping { token: q.into() }),
+                ))
+                .unwrap();
+        }
+        let q: &dyn TaskQueue = &broker;
+        let all = q.stats_all();
+        assert_eq!(
+            all.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["m.a", "m.b", "m.c"],
+            "sorted by queue name"
+        );
+        for (name, st) in &all {
+            assert_eq!(*st, broker.stats(name));
+        }
     }
 
     #[test]

@@ -10,18 +10,27 @@
 //! objective converges or the round budget runs out. Downstream DAG steps
 //! release after steering settles, exactly as in a static study.
 //!
+//! Training data comes from the **feature store** (the result plane,
+//! [`crate::data::featurestore`]): workers flush columnar
+//! `(sample_id, params[], outputs[], status, timing)` batches, and the
+//! engine reads each settled wave's rows back — stored inputs, stored
+//! outputs, any output column as the objective — instead of the old
+//! single-scalar KV view (which survives as a derived view for status
+//! reporting).
+//!
 //! The model behind [`SampleProposer`] is pluggable: with PJRT artifacts
 //! present, [`crate::runtime::models::SurrogateProposer`] trains the real
 //! Pallas MLP surrogate; without them, [`IdwProposer`] — a pure-Rust
 //! inverse-distance-weighted nearest-neighbor regressor — keeps the loop
 //! (and CI) running with no runtime at all.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::{Duration, Instant};
 
 use crate::backend::state::StateStore;
 use crate::broker::api::TaskQueue;
 use crate::dag::expand::{expand_study, wave_tasks};
+use crate::data::featurestore::{FeatureStore, ScanCursor};
 use crate::runtime::models::sample_params;
 use crate::spec::study::{Goal, IterateSpec, SpecError, StudySpec};
 use crate::task::StepTemplate;
@@ -174,6 +183,10 @@ pub struct SteerReport {
     pub stop: StopReason,
     /// Label of the proposer that drove the rounds.
     pub proposer: String,
+    /// The steered step's study key (`<study_id>/<instance>`) — the key
+    /// its rows carry in the feature store, which is what `--export`
+    /// compacts.
+    pub steered_study: String,
 }
 
 /// Resolve which step a study's `iterate:` block steers: the named step,
@@ -232,13 +245,23 @@ fn pick_wave(
 
 /// Run a steered study end-to-end: surrogate-driven rounds on the steered
 /// step (samples injected into the live queues while workers consume),
-/// then normal DAG release of every downstream step. Workers must consume
-/// the study's queues concurrently; their `objective_index` must match
-/// the spec's so completed samples report objectives back through the
-/// backend. `timeout` bounds the whole run.
+/// then normal DAG release of every downstream step. `timeout` bounds
+/// the whole run.
+///
+/// `results` is the **feature store** the study's workers flush their
+/// result batches into (`WorkerConfig::results` over the same store, or
+/// a `RemoteResultSink` into the same backend server): each round the
+/// proposer trains on the rows the wave landed — the stored
+/// `params[]`/`outputs[]` matrices, with `iterate.objective` selecting
+/// the objective column. Completion itself is still observed through
+/// the backend's done/failed marks, which workers apply only *after*
+/// their rows are flushed, so a settled wave's rows are always
+/// readable.
+#[allow(clippy::too_many_arguments)] // one entry point, every arg a distinct subsystem
 pub fn steer(
     broker: &dyn TaskQueue,
     state: &StateStore,
+    results: &FeatureStore,
     spec: &StudySpec,
     study_id: &str,
     opts: &RunOptions,
@@ -295,6 +318,9 @@ pub fn steer(
     let mut stale_rounds = 0u64;
     let mut stop = StopReason::MaxRounds;
     let mut timed_out = false;
+    // Incremental feature-store reads: each round decodes only the
+    // bytes appended since the previous round, not the whole store.
+    let mut cursor = ScanCursor::default();
 
     'rounds: for round in 0..it.max_rounds {
         // Each round scores a fresh, disjoint candidate id range, so a
@@ -346,23 +372,47 @@ pub fn steer(
             std::thread::sleep(Duration::from_millis(5));
         }
 
-        // Train on what this round produced.
-        let fresh: Vec<(u64, f64)> = state
-            .objectives(&study_key)
-            .into_iter()
-            .filter(|(id, _)| !seen.contains(id))
-            .collect();
-        let xs: Vec<Vec<f32>> = fresh
-            .iter()
-            .map(|(id, _)| sample_params(seed, *id, dims))
-            .collect();
-        let ys: Vec<f64> = fresh.iter().map(|(_, y)| *y).collect();
+        // Train on what this round produced — read from the feature
+        // store (the result plane), not the scalar KV view: rows carry
+        // the stored `params[]`/`outputs[]` matrices, so the proposer
+        // trains on exactly what the simulation consumed and produced,
+        // and multi-output studies expose any output column as the
+        // objective via `iterate.objective`. Dataless rows (no stored
+        // params) fall back to the deterministic sample map; redelivery
+        // duplicates within the round dedup by sample id.
+        let new_batches = results
+            .scan_new(&mut cursor)
+            .map_err(|e| SpecError(format!("feature store read round {round}: {e}")))?;
+        let mut fresh_map: BTreeMap<u64, (Vec<f32>, f64)> = BTreeMap::new();
+        for b in new_batches.iter().filter(|b| b.study == study_key) {
+            for r in b.rows() {
+                if !r.is_ok() || seen.contains(&r.sample_id) {
+                    continue;
+                }
+                let Some(y) = r.outputs.get(it.objective_index).copied() else {
+                    continue;
+                };
+                if !y.is_finite() {
+                    continue;
+                }
+                let x = if r.params.is_empty() {
+                    sample_params(seed, r.sample_id, dims)
+                } else {
+                    r.params
+                };
+                fresh_map.insert(r.sample_id, (x, y));
+            }
+        }
+        let fresh: Vec<(u64, Vec<f32>, f64)> =
+            fresh_map.into_iter().map(|(id, (x, y))| (id, x, y)).collect();
+        let xs: Vec<Vec<f32>> = fresh.iter().map(|(_, x, _)| x.clone()).collect();
+        let ys: Vec<f64> = fresh.iter().map(|(_, _, y)| *y).collect();
         proposer.observe(&xs, &ys);
 
         let prev_best = best;
         let mut round_best = f64::NAN;
         let mut round_sum = 0.0f64;
-        for (id, y) in &fresh {
+        for (id, _, y) in &fresh {
             seen.insert(*id);
             round_sum += y;
             if round_best.is_nan() || it.goal.better(*y, round_best) {
@@ -447,6 +497,7 @@ pub fn steer(
         best,
         stop,
         proposer: proposer.name().to_string(),
+        steered_study: study_key,
     })
 }
 

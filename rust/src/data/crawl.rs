@@ -1,13 +1,42 @@
-//! The resubmission crawl (§3.1): walk a study's data tree, inventory
-//! which samples have valid on-disk results, and report what is missing or
-//! corrupt so the coordinator can requeue exactly those samples. This is
-//! what took the JAG study from a 70% first-pass completion rate to 99.8%.
+//! The resubmission crawl (§3.1): walk a study's data tree **along its
+//! [`BundleLayout`]-prescribed paths**, inventory which samples have valid
+//! on-disk results, and report what is missing or corrupt so the
+//! coordinator can requeue exactly those samples. This is what took the
+//! JAG study from a 70% first-pass completion rate to 99.8%.
+//!
+//! The crawl is layout-aware, not a naive directory walk: leaf
+//! directories are visited by their layout index (so each directory's
+//! prescribed sample window is known), bundle files found outside the
+//! directory the layout prescribes for their start sample are counted as
+//! misplaced, and the report carries **per-bundle completeness** — which
+//! nominal bundles are whole, partial, or absent — which is exactly the
+//! gap list a resubmission pass feeds back into the queues.
 
 use std::collections::HashSet;
 use std::path::Path;
 
 use super::bundle::BundleLayout;
 use super::container::{read_container, ContainerError};
+
+/// Completeness of one nominal bundle (a `sims_per_bundle`-wide sample
+/// window). Bundles with zero valid samples do not appear — their whole
+/// window shows up in [`CrawlReport::missing`] instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BundleCompleteness {
+    /// Nominal bundle index (`sample / sims_per_bundle`).
+    pub bundle: u64,
+    /// Valid samples found inside the bundle's window.
+    pub found: u64,
+    /// The window width (`layout.sims_per_bundle`).
+    pub expected: u64,
+}
+
+impl BundleCompleteness {
+    /// True when every sample of the window is present.
+    pub fn complete(&self) -> bool {
+        self.found >= self.expected
+    }
+}
 
 /// Crawl result over a study tree.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -18,6 +47,13 @@ pub struct CrawlReport {
     pub corrupt_files: u64,
     /// Files examined.
     pub files_seen: u64,
+    /// Bundle files found outside the leaf directory the layout
+    /// prescribes for their start sample (their samples still count as
+    /// valid — data is data — but a writer is addressing wrong).
+    pub misplaced_files: u64,
+    /// Per-bundle completeness for every nominal bundle with at least
+    /// one valid sample, sorted by bundle index.
+    pub bundles: Vec<BundleCompleteness>,
 }
 
 impl CrawlReport {
@@ -33,28 +69,47 @@ impl CrawlReport {
         }
         self.valid.len() as f64 / n as f64
     }
+
+    /// The partially-filled bundles (found > 0 but short of the window)
+    /// — the holes a targeted resubmission pass fills first.
+    pub fn incomplete_bundles(&self) -> Vec<BundleCompleteness> {
+        let mut out = Vec::new();
+        for b in &self.bundles {
+            if !b.complete() {
+                out.push(*b);
+            }
+        }
+        out
+    }
 }
 
-/// Walk `root` (a tree of `leaf_*` directories produced by
-/// [`super::bundle`]) and inventory valid samples. Aggregated files are
-/// preferred; individual bundles fill in for unaggregated leaf dirs.
-pub fn crawl(root: &Path, _layout: &BundleLayout) -> std::io::Result<CrawlReport> {
+/// Inventory valid samples under `root` along the layout's prescribed
+/// paths (see the module docs). Aggregated files are preferred;
+/// individual bundles fill in for unaggregated leaf dirs.
+pub fn crawl(root: &Path, layout: &BundleLayout) -> std::io::Result<CrawlReport> {
     let mut report = CrawlReport::default();
     if !root.exists() {
         return Ok(report);
     }
-    let mut leaf_dirs: Vec<_> = std::fs::read_dir(root)?
+    // Discover which leaf-dir indices exist, then visit each through its
+    // prescribed path. (A whole directory can be absent when every one
+    // of its bundles was lost; iteration must not stop at the gap.)
+    let mut dir_indices: Vec<u64> = std::fs::read_dir(root)?
         .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| {
-            p.is_dir()
-                && p.file_name()
-                    .and_then(|n| n.to_str())
-                    .map(|n| n.starts_with("leaf_"))
-                    .unwrap_or(false)
+        .filter(|p| p.is_dir())
+        .filter_map(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .and_then(|n| n.strip_prefix("leaf_"))
+                .and_then(|n| n.parse().ok())
         })
         .collect();
-    leaf_dirs.sort();
-    for dir in leaf_dirs {
+    dir_indices.sort_unstable();
+    for d in dir_indices {
+        // The layout-prescribed path for leaf dir `d` (identical to what
+        // `BundleLayout::dir_for_sample` yields for its window).
+        let (dir_lo, _) = layout.dir_sample_range(d);
+        let dir = layout.dir_for_sample(root, dir_lo);
         let mut seen_in_dir: HashSet<u64> = HashSet::new();
         // Prefer the aggregate if present and valid.
         let agg = dir.join("aggregate.mrln");
@@ -73,19 +128,24 @@ pub fn crawl(root: &Path, _layout: &BundleLayout) -> std::io::Result<CrawlReport
             }
         }
         // Individual bundles may contain samples not (yet) aggregated.
-        let mut bundles: Vec<_> = std::fs::read_dir(&dir)?
+        let mut bundles: Vec<(u64, std::path::PathBuf)> = std::fs::read_dir(&dir)?
             .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| {
-                p.file_name()
-                    .and_then(|n| n.to_str())
-                    .map(|n| n.starts_with("bundle_") && n.ends_with(".mrln"))
-                    .unwrap_or(false)
+            .filter_map(|p| {
+                let name = p.file_name()?.to_str()?.to_string();
+                let lo = parse_bundle_lo(&name)?;
+                Some((lo, p))
             })
             .collect();
         bundles.sort();
-        for b in bundles {
+        for (lo, path) in bundles {
             report.files_seen += 1;
-            match read_container(&b) {
+            // A bundle starting at `lo` belongs in exactly one leaf dir
+            // under the layout; finding it elsewhere means a writer's
+            // addressing disagrees with the crawl's.
+            if layout.bundle_path(root, lo) != path {
+                report.misplaced_files += 1;
+            }
+            match read_container(&path) {
                 Ok(node) => {
                     for (name, _) in node.children() {
                         if let Some(id) = parse_sim_id(name) {
@@ -101,11 +161,32 @@ pub fn crawl(root: &Path, _layout: &BundleLayout) -> std::io::Result<CrawlReport
     }
     report.valid.sort_unstable();
     report.valid.dedup();
+    // Per-bundle completeness over the deduplicated sample set (valid is
+    // sorted, so each bundle's samples are contiguous here).
+    for &s in &report.valid {
+        let b = layout.bundle_index(s);
+        if let Some(last) = report.bundles.last_mut() {
+            if last.bundle == b {
+                last.found += 1;
+                continue;
+            }
+        }
+        report.bundles.push(BundleCompleteness {
+            bundle: b,
+            found: 1,
+            expected: layout.sims_per_bundle,
+        });
+    }
     Ok(report)
 }
 
 fn parse_sim_id(name: &str) -> Option<u64> {
     name.strip_prefix("sim_")?.parse().ok()
+}
+
+fn parse_bundle_lo(name: &str) -> Option<u64> {
+    let stem = name.strip_prefix("bundle_")?;
+    stem.strip_suffix(".mrln")?.parse().ok()
 }
 
 #[cfg(test)]
@@ -144,6 +225,7 @@ mod tests {
         assert_eq!(report.valid.len(), 0);
         assert_eq!(report.missing(5), vec![0, 1, 2, 3, 4]);
         assert_eq!(report.completion_rate(5), 0.0);
+        assert!(report.bundles.is_empty());
         std::fs::remove_dir_all(&root).ok();
     }
 
@@ -157,6 +239,65 @@ mod tests {
         assert_eq!(report.valid, vec![0, 1, 4, 5]);
         assert_eq!(report.missing(6), vec![2, 3]);
         assert!((report.completion_rate(6) - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(report.misplaced_files, 0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn per_bundle_completeness_reports_partial_bundles() {
+        let root = tmpdir("partial");
+        let l = layout();
+        // Bundle 0 complete (samples 0-1), bundle 2 half-full (sample 5
+        // only), bundle 1 absent entirely.
+        write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        write_bundle(&l, &root, 5, vec![(5, sim(5))]).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(
+            report.bundles,
+            vec![
+                BundleCompleteness { bundle: 0, found: 2, expected: 2 },
+                BundleCompleteness { bundle: 2, found: 1, expected: 2 },
+            ]
+        );
+        assert!(report.bundles[0].complete());
+        assert_eq!(
+            report.incomplete_bundles(),
+            vec![BundleCompleteness { bundle: 2, found: 1, expected: 2 }]
+        );
+        // The gap detector and the bundle view agree: bundle 1's window
+        // plus the missing half of bundle 2.
+        assert_eq!(report.missing(6), vec![2, 3, 4]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn misplaced_bundle_detected_but_still_counted() {
+        let root = tmpdir("misplaced");
+        let l = layout();
+        write_bundle(&l, &root, 0, vec![(0, sim(0))]).unwrap();
+        // A bundle whose start sample (4) prescribes leaf_000001, dropped
+        // into leaf_000000 by a buggy writer.
+        let wrong = root.join("leaf_000000").join("bundle_0000000004.mrln");
+        let mut node = Node::new();
+        node.mount("sim_0000000004", sim(4));
+        crate::data::container::write_container(&wrong, &node, true).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(report.misplaced_files, 1);
+        assert_eq!(report.valid, vec![0, 4], "misplaced data still counts");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn leaf_dir_gaps_do_not_stop_the_crawl() {
+        let root = tmpdir("gaps");
+        let l = layout();
+        // Leaf dirs 0 and 2 exist; leaf dir 1 (samples 4-7) is entirely
+        // lost. The crawl must still reach dir 2.
+        write_bundle(&l, &root, 0, vec![(0, sim(0)), (1, sim(1))]).unwrap();
+        write_bundle(&l, &root, 8, vec![(8, sim(8)), (9, sim(9))]).unwrap();
+        let report = crawl(&root, &l).unwrap();
+        assert_eq!(report.valid, vec![0, 1, 8, 9]);
+        assert_eq!(report.missing(10), vec![2, 3, 4, 5, 6, 7]);
         std::fs::remove_dir_all(&root).ok();
     }
 
@@ -185,6 +326,8 @@ mod tests {
         crate::data::bundle::aggregate_dir(&root.join("leaf_000000")).unwrap();
         let report = crawl(&root, &l).unwrap();
         assert_eq!(report.valid, vec![0, 1, 2, 3]);
+        assert_eq!(report.bundles.len(), 2);
+        assert!(report.bundles.iter().all(BundleCompleteness::complete));
         std::fs::remove_dir_all(&root).ok();
     }
 
@@ -208,6 +351,8 @@ mod tests {
         let r2 = crawl(&root, &l).unwrap();
         assert!(r2.missing(8).is_empty());
         assert_eq!(r2.completion_rate(8), 1.0);
+        assert_eq!(r2.bundles.len(), 8, "1-sample bundles all complete");
+        assert!(r2.incomplete_bundles().is_empty());
         std::fs::remove_dir_all(&root).ok();
     }
 }

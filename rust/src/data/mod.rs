@@ -12,14 +12,21 @@
 //!   resubmission crawl);
 //! * [`bundle`] — bundle/aggregate layout policy (N sims/bundle, M
 //!   bundles/leaf-dir);
-//! * [`crawl`] — walk a study tree, inventory valid samples, detect corrupt
-//!   or missing data (the "second pass" of §3.1).
+//! * [`crawl`] — walk a study tree along its [`BundleLayout`]-prescribed
+//!   paths, inventory valid samples, detect corrupt or missing data (the
+//!   "second pass" of §3.1);
+//! * [`featurestore`] — the columnar **result plane**: batched
+//!   `(sample_id, params[], outputs[], status, timing)` records with
+//!   WAL-style crash safety, compaction into the bundle layout, and
+//!   one-container training-set export (`merlin export`).
 
 pub mod bundle;
 pub mod container;
 pub mod crawl;
+pub mod featurestore;
 pub mod node;
 
 pub use bundle::BundleLayout;
 pub use container::{read_container, write_container, ContainerError};
+pub use featurestore::{FeatureStore, ResultBatch, ResultRow, ResultSink};
 pub use node::Node;

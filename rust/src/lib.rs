@@ -29,12 +29,19 @@
 //!   and fleet-wide stat aggregation behind the [`broker::api::TaskQueue`]
 //!   seam the whole control plane programs against
 //! * [`backend`] — the Redis analog (task state + results), sharded KV
-//!   locks under the same hash scheme as the broker
+//!   locks under the same hash scheme as the broker; speaks the result
+//!   plane's batched `record_results` op over TCP
 //! * [`worker`] — consumers that execute tasks; prefetch windows are
 //!   pulled in one batched broker round trip
 //! * [`batch`] — HPC batch-system simulator (Slurm/LSF analog)
 //! * [`flux`] — on-allocation just-in-time launcher (Flux analog)
-//! * [`data`] — Conduit/HDF5-analog hierarchical data + bundling
+//! * [`data`] — Conduit/HDF5-analog hierarchical data + bundling, and
+//!   the columnar **feature store** ([`data::featurestore`]): the
+//!   system's result plane — workers flush batched
+//!   `(sample_id, params[], outputs[], status, timing)` records with
+//!   WAL-style crash safety, the steering loop trains from its reads,
+//!   and `merlin export` compacts a study into one training-ready
+//!   container (see DESIGN.md "Result Plane & Feature Store")
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //! * [`coordinator`] — `merlin run` / `steer` / `run-workers` /
 //!   resubmission; release waves, steering rounds, and resubmission

@@ -14,8 +14,11 @@ use merlin::backend::state::StateStore;
 use merlin::backend::store::Store;
 use merlin::broker::core::Broker;
 use merlin::broker::net::BrokerServer;
+use merlin::broker::wal::FsyncPolicy;
 use merlin::broker::{FederatedClient, FederationConfig, TaskQueue};
-use merlin::coordinator::{loadgen, orchestrate, status_report, RunOptions, SampleProposer};
+use merlin::coordinator::{loadgen, orchestrate, status_report_full, RunOptions, SampleProposer};
+use merlin::data::featurestore::{self, FeatureStore};
+use merlin::data::BundleLayout;
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::spec::study::StudySpec;
 use merlin::task::{Payload, WorkSpec};
@@ -27,6 +30,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("steer") => cmd_steer(&args[1..]),
+        Some("export") => cmd_export(&args[1..]),
         Some("run-workers") => cmd_run_workers(&args[1..]),
         Some("serve-broker") => cmd_serve_broker(&args[1..]),
         Some("serve-backend") => cmd_serve_backend(&args[1..]),
@@ -59,23 +63,40 @@ USAGE:
 
   merlin steer <spec.yaml> [--workers N] [--samples-per-task N] [--branch N]
                [--timeout SECS] [--artifacts DIR] [--data-root DIR]
-               [--lease-ms N]
+               [--lease-ms N] [--features-dir DIR] [--export FILE]
       Run a study with an `iterate:` block as an ML-in-the-loop steering
       loop: each round a surrogate trained on completed samples proposes
       the next wave, injected into the LIVE queues. With --artifacts the
       real Pallas surrogate trains through PJRT; without, a pure-Rust
       nearest-neighbor fallback steers (no runtime needed). Workers carry
       delivery leases (default 30000 ms) so dead workers' tasks redeliver
-      mid-round.
+      mid-round. Every worker result lands as a columnar row in the
+      feature store (--features-dir; default <data-root>/features or a
+      temp dir), which is what the proposer trains on; --export compacts
+      the steered study into one training-ready container afterwards.
+
+  merlin export --store DIR [--study NAME] [--out FILE] [--labels a,b]
+                [--compact-root DIR] [--sims-per-bundle N]
+                [--bundles-per-dir N]
+      Compact a feature store (finished or in-flight) into one
+      training-ready container with a manifest: dense row-major
+      params/outputs matrices plus sample ids, timings, and labels.
+      With one study in the store --study is optional. --compact-root
+      additionally merges the rows into BundleLayout-addressed
+      bundle files under DIR.
 
   merlin run-workers --broker HOST:PORT [--broker HOST:PORT ...]
                      --queues q1,q2 [-c N] [--idle-ms N] [--lease-ms N]
+                     [--backend HOST:PORT] [--objective N]
       Connect N workers to a remote broker (the multi-allocation shape).
       Repeat --broker to consume a whole federation: every worker draws
       from each member that owns one of its queues (rendezvous-hash
       routing; all participants must list the same members in the same
       order). With --lease-ms each worker declares a delivery lease and
-      heartbeats its prefetch window.
+      heartbeats its prefetch window. With --backend each worker ships
+      its result batches to that backend server's feature store (start
+      it with --features-dir); --objective additionally derives the
+      scalar-objective view server-side.
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
                       [--fsync always|never|interval:MS] [--snapshot-every N]
@@ -107,8 +128,12 @@ USAGE:
       if 4 members do not reach 2x the 1-member aggregate throughput
       (full mode; --quick smoke runs never fail on the ratio).
 
-  merlin serve-backend [--addr 127.0.0.1:7778]
-      Run the standalone Redis-analog server.
+  merlin serve-backend [--addr 127.0.0.1:7778] [--features-dir DIR]
+                       [--features-shards N] [--fsync always|never|interval:MS]
+      Run the standalone Redis-analog server. With --features-dir the
+      server also hosts the result plane: workers' `record_results`
+      batches are persisted as a crash-safe columnar feature store under
+      DIR (exportable later with `merlin export --store DIR`).
 
   merlin hierarchy --samples N [--branch B] [--samples-per-task S]
       Print the task-generation hierarchy plan (Fig 2).
@@ -147,6 +172,38 @@ fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
 
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+/// A distributed worker's result row: status + timing (the CLI worker
+/// runs only null/shell work, which carries no params/outputs).
+fn cli_row(sample: u64, ok: bool, sim_us: u64) -> merlin::data::ResultRow {
+    merlin::data::ResultRow {
+        sample_id: sample,
+        params: Vec::new(),
+        outputs: Vec::new(),
+        status: if ok {
+            merlin::data::featurestore::STATUS_OK
+        } else {
+            merlin::data::featurestore::STATUS_FAILED
+        },
+        sim_us,
+    }
+}
+
+/// Open the run's feature store (the result plane): `--features-dir`
+/// wins, else `<data-root>/features`, else a per-pid temp dir.
+fn open_feature_store(
+    args: &[String],
+    data_root: &Option<PathBuf>,
+) -> std::io::Result<Arc<FeatureStore>> {
+    let dir = flag(args, "--features-dir")
+        .map(PathBuf::from)
+        .or_else(|| data_root.as_ref().map(|r| r.join("features")))
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("merlin-features-{}", std::process::id()))
+        });
+    let store = FeatureStore::open(&dir, 4, FsyncPolicy::Interval(50))?;
+    Ok(Arc::new(store))
 }
 
 /// Connect a federation client over every `--broker` value (a single
@@ -209,6 +266,13 @@ fn cmd_run(args: &[String]) -> i32 {
         None => Arc::new(NullSimRunner),
     };
     let data_root = flag(args, "--data-root").map(PathBuf::from);
+    let features = match open_feature_store(args, &data_root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("feature store: {e}");
+            return 1;
+        }
+    };
 
     println!(
         "study {} : {} steps, {} parameter combos, {} samples",
@@ -222,6 +286,8 @@ fn cmd_run(args: &[String]) -> i32 {
     let st2 = state.clone();
     let q2 = queues.clone();
     let dr = data_root.clone();
+    let sink = features.clone();
+    let output_limit = spec.outputs.as_ref().map(|o| o.count as usize);
     let pool_thread = std::thread::spawn(move || {
         run_pool(&b2, Some(&st2), None, sim, workers, |i| {
             let mut cfg = WorkerConfig::simple("unused", clock.clone());
@@ -230,6 +296,8 @@ fn cmd_run(args: &[String]) -> i32 {
             cfg.seed = i as u64;
             cfg.workspace_root = Some(std::env::temp_dir().join("merlin-workspaces"));
             cfg.data_root = dr.clone();
+            cfg.results = Some(sink.clone() as Arc<dyn merlin::data::ResultSink>);
+            cfg.output_limit = output_limit;
             cfg
         })
     });
@@ -254,7 +322,11 @@ fn cmd_run(args: &[String]) -> i32 {
         "workers: {} steps, {} expansions, {} samples ok",
         pool.steps, pool.expansions, pool.samples_ok
     );
-    print!("{}", status_report(&broker, &state, &[]));
+    features.flush().ok();
+    print!(
+        "{}",
+        status_report_full(&broker, &state, &[], Some(&features.stats()))
+    );
     i32::from(report.timed_out || report.samples_done < report.samples_expected)
 }
 
@@ -328,6 +400,13 @@ fn cmd_steer(args: &[String]) -> i32 {
             ),
         };
     let data_root = flag(args, "--data-root").map(PathBuf::from);
+    let features = match open_feature_store(args, &data_root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("feature store: {e}");
+            return 1;
+        }
+    };
 
     println!(
         "steered study {} : {} rounds x {} samples (pool {}), objective scalars[{}], proposer {}",
@@ -344,6 +423,8 @@ fn cmd_steer(args: &[String]) -> i32 {
     let q2 = queues.clone();
     let dr = data_root.clone();
     let obj_index = it.objective_index;
+    let sink = features.clone();
+    let output_limit = spec.outputs.as_ref().map(|o| o.count as usize);
     let pool_thread = std::thread::spawn(move || {
         run_pool(&b2, Some(&st2), None, sim, workers, |i| {
             let mut cfg = WorkerConfig::simple("unused", clock.clone());
@@ -355,6 +436,8 @@ fn cmd_steer(args: &[String]) -> i32 {
             cfg.seed = i as u64;
             cfg.lease_ms = lease_ms;
             cfg.objective_index = Some(obj_index);
+            cfg.results = Some(sink.clone() as Arc<dyn merlin::data::ResultSink>);
+            cfg.output_limit = output_limit;
             cfg.workspace_root = Some(std::env::temp_dir().join("merlin-workspaces"));
             cfg.data_root = dr.clone();
             cfg
@@ -364,6 +447,7 @@ fn cmd_steer(args: &[String]) -> i32 {
     let report = match merlin::coordinator::steer(
         &broker,
         &state,
+        &features,
         &spec,
         &study_id,
         &opts,
@@ -403,10 +487,38 @@ fn cmd_steer(args: &[String]) -> i32 {
         }
     );
     println!(
-        "workers: {} steps, {} samples ok",
-        pool.steps, pool.samples_ok
+        "workers: {} steps, {} samples ok ({} result rows)",
+        pool.steps, pool.samples_ok, pool.result_rows
     );
-    print!("{}", status_report(&broker, &state, &[]));
+    features.flush().ok();
+    print!(
+        "{}",
+        status_report_full(&broker, &state, &[], Some(&features.stats()))
+    );
+    // One-flag hand-off to training: compact the steered study into a
+    // single container right here.
+    if let Some(out) = flag(args, "--export") {
+        let labels = spec
+            .outputs
+            .as_ref()
+            .map(|o| o.labels.clone())
+            .unwrap_or_default();
+        // The steered step's exact feature-store key comes back in the
+        // report (a prefix match could hit a downstream step instead).
+        let study_key = report.steered_study.clone();
+        let batches = features.scan().unwrap_or_default();
+        let rows = featurestore::rows_in(&batches, &study_key);
+        match featurestore::export_rows(&study_key, &rows, &PathBuf::from(&out), &labels) {
+            Ok(m) => println!(
+                "exported {} rows ({} failed left behind) to {out}: params {} wide, outputs {} wide",
+                m.rows, m.failed, m.param_dim, m.output_dim
+            ),
+            Err(e) => {
+                eprintln!("export: {e}");
+                return 1;
+            }
+        }
+    }
     i32::from(report.study.timed_out)
 }
 
@@ -414,6 +526,8 @@ fn cmd_steer(args: &[String]) -> i32 {
 /// status report (queues, totals, durability, leases) as JSON —
 /// aggregated over every listed federation member through the same
 /// `TaskQueue` surface the coordinator uses, plus per-member health.
+/// Queue statistics arrive through the bulk `stats_all` op: one RPC per
+/// member, however many queues the fleet carries.
 fn cmd_status(args: &[String]) -> i32 {
     let fed = match connect_federation(args) {
         Ok(f) => f,
@@ -422,15 +536,88 @@ fn cmd_status(args: &[String]) -> i32 {
     use merlin::coordinator::{broker_sections_json, member_health_json, queue_stats_json};
     use merlin::util::json::Json;
     let qjson: Vec<Json> = fed
-        .queue_names()
-        .iter()
-        .map(|q| queue_stats_json(q, &fed.stats(q)))
+        .stats_all()
+        .into_iter()
+        .map(|(q, st)| queue_stats_json(&q, &st))
         .collect();
     let members: Vec<Json> = fed.member_health().iter().map(member_health_json).collect();
     let mut pairs = vec![("queues", Json::arr(qjson))];
     pairs.extend(broker_sections_json(&fed));
     pairs.push(("federation", Json::arr(members)));
     println!("{}", merlin::util::json::to_string(&Json::obj(pairs)));
+    0
+}
+
+/// `merlin export`: compact a feature store into one training-ready
+/// container (and optionally into bundle-layout files) — the
+/// simulation→training-data hand-off as a single command.
+fn cmd_export(args: &[String]) -> i32 {
+    let Some(store_dir) = flag(args, "--store") else {
+        eprintln!("usage: merlin export --store DIR [--study NAME] [--out FILE]");
+        return 2;
+    };
+    // Read-only tolerant scan: works against a store a live study is
+    // still appending to (torn tails are skipped, not truncated).
+    let batches = match featurestore::scan_dir(&PathBuf::from(&store_dir)) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("scan {store_dir}: {e}");
+            return 1;
+        }
+    };
+    let studies = featurestore::studies_in(&batches);
+    let study = match flag(args, "--study") {
+        Some(s) => s,
+        None => match studies.as_slice() {
+            [only] => only.clone(),
+            [] => {
+                eprintln!("{store_dir}: empty feature store");
+                return 1;
+            }
+            many => {
+                eprintln!(
+                    "{store_dir} holds {} studies ({}); pick one with --study",
+                    many.len(),
+                    many.join(", ")
+                );
+                return 2;
+            }
+        },
+    };
+    if !studies.iter().any(|s| *s == study) {
+        eprintln!("{store_dir}: no rows for study {study:?} (studies: {studies:?})");
+        return 1;
+    }
+    let rows = featurestore::rows_in(&batches, &study);
+    let labels: Vec<String> = flag(args, "--labels")
+        .map(|l| l.split(',').map(str::to_string).collect())
+        .unwrap_or_default();
+    let out = flag(args, "--out").unwrap_or_else(|| "train.mrln".into());
+    match featurestore::export_rows(&study, &rows, &PathBuf::from(&out), &labels) {
+        Ok(m) => println!(
+            "exported {} rows ({} failed left behind) to {out}: params {} wide, outputs {} wide",
+            m.rows, m.failed, m.param_dim, m.output_dim
+        ),
+        Err(e) => {
+            eprintln!("export: {e}");
+            return 1;
+        }
+    }
+    if let Some(root) = flag(args, "--compact-root") {
+        let layout = BundleLayout {
+            sims_per_bundle: flag_u64(args, "--sims-per-bundle", 10),
+            bundles_per_dir: flag_u64(args, "--bundles-per-dir", 100),
+        };
+        match featurestore::compact_rows(&rows, &layout, &PathBuf::from(&root)) {
+            Ok((bundles, compacted)) => {
+                println!("compacted {compacted} rows into {bundles} bundle files under {root}")
+            }
+            Err(e) => {
+                eprintln!("compact: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -446,6 +633,8 @@ fn cmd_run_workers(args: &[String]) -> i32 {
     let n = flag_u64(args, "-c", 4) as usize;
     let idle_ms = flag_u64(args, "--idle-ms", 5_000);
     let lease_ms = flag_u64(args, "--lease-ms", 0);
+    let backend = flag(args, "--backend");
+    let objective = flag(args, "--objective").and_then(|v| v.parse::<usize>().ok());
     println!(
         "connecting {n} workers to {} federation member(s) on queues {queues:?}",
         addrs.len()
@@ -454,11 +643,25 @@ fn cmd_run_workers(args: &[String]) -> i32 {
     for w in 0..n {
         let addrs = addrs.clone();
         let queues = queues.clone();
+        let backend = backend.clone();
         handles.push(std::thread::spawn(move || {
             // One federation handle per worker: its own connection (one
             // AMQP-channel analog) to every member it consumes from.
+            // Likewise one result-sink connection per worker.
+            let sink = match &backend {
+                Some(addr) => {
+                    match merlin::backend::RemoteResultSink::connect(addr, objective) {
+                        Ok(s) => Some(s),
+                        Err(e) => {
+                            eprintln!("worker {w}: cannot connect backend {addr}: {e}");
+                            None
+                        }
+                    }
+                }
+                None => None,
+            };
             match FederatedClient::connect(&addrs, FederationConfig::default()) {
-                Ok(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w),
+                Ok(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w, sink),
                 Err(e) => {
                     eprintln!("worker {w}: cannot connect to {addrs:?}: {e}");
                     0
@@ -489,12 +692,17 @@ fn cmd_run_workers(args: &[String]) -> i32 {
 /// redelivered at the visibility deadline instead of holding them until
 /// disconnect. A member that dies mid-run is marked down and its queues
 /// re-route; the worker keeps draining the survivors.
+///
+/// With a `results` sink every finished step task flushes one columnar
+/// batch (status + timing rows for null/shell work) to the backend's
+/// feature store, mirroring the in-process worker's result plane.
 fn tcp_worker_loop(
     fed: &FederatedClient,
     queues: &[String],
     idle_ms: u64,
     lease_ms: u64,
     worker_id: usize,
+    results: Option<merlin::backend::RemoteResultSink>,
 ) -> u64 {
     // Matches the prefetch this loop always ran with: the window is the
     // hoard bound, and raising it would starve sibling workers of
@@ -555,25 +763,39 @@ fn tcp_worker_loop(
                     }
                 }
                 Payload::Step(s) => {
+                    let mut rows: Vec<merlin::data::ResultRow> = Vec::new();
                     for sample in s.lo..s.hi {
                         match &s.template.work {
                             WorkSpec::Null { duration_us } => {
                                 std::thread::sleep(Duration::from_micros(*duration_us));
+                                rows.push(cli_row(sample, true, *duration_us));
                             }
                             WorkSpec::Shell { cmd, shell } => {
                                 let root = std::env::temp_dir().join("merlin-workspaces");
-                                merlin::worker::exec::run_shell_sample(
-                                    &root,
-                                    &s.template.study_id,
-                                    &s.template.step_name,
-                                    sample,
-                                    cmd,
-                                    shell,
-                                )
-                                .ok();
+                                let ok = matches!(
+                                    merlin::worker::exec::run_shell_sample(
+                                        &root,
+                                        &s.template.study_id,
+                                        &s.template.step_name,
+                                        sample,
+                                        cmd,
+                                        shell,
+                                    ),
+                                    Ok(out) if out.exit_code == 0
+                                );
+                                rows.push(cli_row(sample, ok, 0));
                             }
                             _ => {}
                         }
+                    }
+                    if let (Some(sink), false) = (&results, rows.is_empty()) {
+                        use merlin::data::ResultSink;
+                        let batch = merlin::data::ResultBatch::from_rows(
+                            &s.template.study_id,
+                            &s.template.step_name,
+                            &rows,
+                        );
+                        sink.record_results(&batch).ok();
                     }
                     acks.push(d.tag);
                     done += 1;
@@ -657,7 +879,37 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
 
 fn cmd_serve_backend(args: &[String]) -> i32 {
     let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7778".into());
-    match merlin::backend::net::BackendServer::serve(Store::new(), &addr) {
+    let results = match flag(args, "--features-dir") {
+        Some(dir) => {
+            let shards = flag_u64(args, "--features-shards", 4) as usize;
+            let fsync = match flag(args, "--fsync") {
+                Some(p) => match FsyncPolicy::parse(&p) {
+                    Some(p) => p,
+                    None => {
+                        eprintln!("bad --fsync {p:?} (always | never | interval:MS)");
+                        return 2;
+                    }
+                },
+                None => FsyncPolicy::Interval(50),
+            };
+            match FeatureStore::open(&PathBuf::from(&dir), shards, fsync) {
+                Ok(fs) => {
+                    let st = fs.stats();
+                    println!(
+                        "feature store: {dir} ({shards} shards, fsync {fsync}, {} rows recovered)",
+                        st.rows
+                    );
+                    Some(Arc::new(fs))
+                }
+                Err(e) => {
+                    eprintln!("open features-dir {dir}: {e}");
+                    return 1;
+                }
+            }
+        }
+        None => None,
+    };
+    match merlin::backend::net::BackendServer::serve_with_results(Store::new(), results, &addr) {
         Ok(server) => {
             println!("backend listening on {}", server.addr);
             loop {

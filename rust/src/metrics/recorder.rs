@@ -36,6 +36,53 @@ pub const KIND_EXPANSION: u8 = 1;
 pub const KIND_AGGREGATE: u8 = 2;
 pub const KIND_OTHER: u8 = 3;
 
+/// One study's dataset tallies in the feature store (the result plane's
+/// per-study view — what `merlin status` renders as completeness).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StudyDatasetStats {
+    /// Study key the rows belong to.
+    pub study: String,
+    /// Rows recorded with OK status (training-usable).
+    pub ok_rows: u64,
+    /// Rows recorded as failed.
+    pub failed_rows: u64,
+}
+
+impl StudyDatasetStats {
+    /// Fraction of `expected` samples with an OK row (1.0 when nothing
+    /// was expected).
+    pub fn completeness(&self, expected: u64) -> f64 {
+        if expected == 0 {
+            return 1.0;
+        }
+        self.ok_rows as f64 / expected as f64
+    }
+}
+
+/// Point-in-time dataset statistics of a feature store: how much
+/// ML-ready data the result plane holds, wired into `status_json` and
+/// the `merlin status` report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DatasetStats {
+    /// Total rows across all studies (ok + failed).
+    pub rows: u64,
+    /// Bytes of framed batch data on disk.
+    pub bytes: u64,
+    /// Record batches appended.
+    pub batches: u64,
+    /// fsyncs issued by the store's flush policy.
+    pub fsyncs: u64,
+    /// Per-study tallies, sorted by study key.
+    pub studies: Vec<StudyDatasetStats>,
+}
+
+impl DatasetStats {
+    /// The tallies for one study, if any rows were recorded for it.
+    pub fn study(&self, study: &str) -> Option<&StudyDatasetStats> {
+        self.studies.iter().find(|s| s.study == study)
+    }
+}
+
 /// Shared, thread-safe sink for task timings. Cloning shares the buffer.
 #[derive(Clone, Default)]
 pub struct Recorder {

@@ -142,6 +142,38 @@ impl IterateSpec {
     }
 }
 
+/// The `merlin.outputs` block: what each sample contributes to the
+/// result plane (the feature store's `outputs[]` column block). With no
+/// block, workers capture every scalar the simulation reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputSpec {
+    /// Output scalars captured per sample (caps the row width).
+    pub count: u64,
+    /// Column labels for the first `labels.len()` outputs (stored in the
+    /// `merlin export` manifest).
+    pub labels: Vec<String>,
+}
+
+impl OutputSpec {
+    fn from_yaml(y: &Yaml) -> Result<OutputSpec, SpecError> {
+        let labels = y.get("column_labels").as_str_list().unwrap_or_default();
+        let count = y
+            .get("count")
+            .as_u64()
+            .unwrap_or_else(|| (labels.len() as u64).max(1));
+        if count == 0 {
+            return Err(SpecError("outputs.count must be >= 1".into()));
+        }
+        if labels.len() as u64 > count {
+            return Err(SpecError(format!(
+                "outputs has {} column_labels but count {count}",
+                labels.len()
+            )));
+        }
+        Ok(OutputSpec { count, labels })
+    }
+}
+
 /// A `merlin.resources.workers` group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerGroup {
@@ -163,6 +195,9 @@ pub struct StudySpec {
     pub parameters: BTreeMap<String, Vec<String>>,
     pub steps: Vec<StepSpec>,
     pub samples: Option<SampleSpec>,
+    /// `merlin.outputs`: the per-sample output block captured into the
+    /// result plane (see [`OutputSpec`]); `None` = capture everything.
+    pub outputs: Option<OutputSpec>,
     /// `merlin.iterate`: present when the study is steered round-by-round
     /// instead of expanded once (see [`IterateSpec`]).
     pub iterate: Option<IterateSpec>,
@@ -261,6 +296,11 @@ impl StudySpec {
             }),
         };
 
+        let outputs = match y.get("merlin").get("outputs") {
+            Yaml::Null => None,
+            o => Some(OutputSpec::from_yaml(o)?),
+        };
+
         let iterate = match y.get("merlin").get("iterate") {
             Yaml::Null => None,
             i => Some(IterateSpec::from_yaml(i)?),
@@ -287,6 +327,7 @@ impl StudySpec {
             parameters,
             steps,
             samples,
+            outputs,
             iterate,
             workers,
         };
@@ -338,6 +379,16 @@ impl StudySpec {
                 if !names.contains(step.as_str()) {
                     return Err(SpecError(format!(
                         "iterate.step names unknown step {step}"
+                    )));
+                }
+            }
+            // The objective must be one of the captured outputs, or the
+            // steering loop would train on a column that never lands.
+            if let Some(out) = &self.outputs {
+                if it.objective_index as u64 >= out.count {
+                    return Err(SpecError(format!(
+                        "iterate.objective {} is outside outputs.count {}",
+                        it.objective_index, out.count
                     )));
                 }
             }
@@ -498,6 +549,64 @@ merlin:
         )
         .unwrap();
         assert!(s.iterate.is_none());
+    }
+
+    #[test]
+    fn outputs_block_parses_and_validates() {
+        let text = "\
+description:
+  name: multi
+study:
+  - name: sim
+    run:
+      cmd: 'builtin: jag # sample $(MERLIN_SAMPLE_ID)'
+merlin:
+  samples:
+    count: 8
+    seed: 1
+  outputs:
+    count: 4
+    column_labels: [yield, temp]
+";
+        let s = StudySpec::parse(text).unwrap();
+        let out = s.outputs.as_ref().unwrap();
+        assert_eq!(out.count, 4);
+        assert_eq!(out.labels, vec!["yield", "temp"]);
+        // count defaults to the label count (min 1).
+        let defaulted = text.replace("    count: 4\n", "");
+        let s2 = StudySpec::parse(&defaulted).unwrap();
+        assert_eq!(s2.outputs.as_ref().unwrap().count, 2);
+        // More labels than count is rejected.
+        let bad = text.replace("count: 4", "count: 1");
+        assert!(StudySpec::parse(&bad).unwrap_err().0.contains("column_labels"));
+        // No outputs block at all is fine.
+        let none = StudySpec::parse(
+            "description:\n  name: x\nstudy:\n  - name: a\n    run:\n      cmd: 'null: 1'\n",
+        )
+        .unwrap();
+        assert!(none.outputs.is_none());
+    }
+
+    #[test]
+    fn objective_outside_outputs_rejected() {
+        let text = "\
+description:
+  name: bad
+study:
+  - name: sim
+    run:
+      cmd: 'builtin: quadratic # sample $(MERLIN_SAMPLE_ID)'
+merlin:
+  outputs:
+    count: 2
+  iterate:
+    objective: 5
+    dims: 2
+";
+        let e = StudySpec::parse(text).unwrap_err();
+        assert!(e.0.contains("outside outputs.count"), "{e}");
+        let ok = text.replace("    objective: 5\n", "    objective: 1\n");
+        assert!(StudySpec::parse(&ok).is_ok());
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct PoolReport {
     pub samples_failed: u64,
     /// Whole tasks lost to injected node death.
     pub tasks_killed: u64,
+    /// Result rows flushed to the configured result sink.
+    pub result_rows: u64,
+    /// Result batches the sink refused.
+    pub result_flush_errors: u64,
 }
 
 impl PoolReport {
@@ -40,6 +44,8 @@ impl PoolReport {
         self.samples_ok += r.samples_ok;
         self.samples_failed += r.samples_failed;
         self.tasks_killed += r.tasks_killed;
+        self.result_rows += r.result_rows;
+        self.result_flush_errors += r.result_flush_errors;
     }
 }
 

@@ -7,6 +7,16 @@
 //! explicitly requeued (no retry cost, mirroring AMQP redelivery) so the
 //! broker's recovery accounting stays exact — they never linger in
 //! flight waiting for consumer recovery.
+//!
+//! Result reporting is batched too: every step task's samples are
+//! collected into one columnar [`ResultBatch`] and flushed to the
+//! configured [`ResultSink`] (the feature store, in-process or over TCP)
+//! **before** the samples' completion marks land in the backend — a
+//! coordinator that observes a settled wave can therefore always read
+//! that wave's rows. The old per-sample `record_objective` calls are
+//! gone; the scalar-objective index is derived from the same batch
+//! ([`crate::data::featurestore::derive_objectives`]) for backward
+//! compatibility.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -17,12 +27,15 @@ use crate::backend::state::StateStore;
 use crate::broker::api::TaskQueue;
 use crate::broker::core::{Broker, Delivery};
 use crate::data::bundle::{aggregate_dir, write_bundle_opts, BundleLayout};
+use crate::data::featurestore::{
+    self, ResultBatch, ResultRow, ResultSink, STATUS_FAILED, STATUS_OK,
+};
 use crate::data::node::Node;
 use crate::hierarchy;
 use crate::metrics::recorder::{
     Recorder, TaskTiming, KIND_AGGREGATE, KIND_EXPANSION, KIND_OTHER, KIND_REAL,
 };
-use crate::task::{ControlMsg, Payload, StepTask, WorkSpec};
+use crate::task::{ControlMsg, Payload, StepTask, StepTemplate, WorkSpec};
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
 
@@ -83,10 +96,20 @@ pub struct WorkerConfig {
     /// Heartbeat period (ms; 0 = a third of the lease). Must stay well
     /// under `lease_ms` or healthy workers lose their own deliveries.
     pub heartbeat_ms: u64,
-    /// When set, record `outputs/scalars[objective_index]` of every
-    /// successful builtin sample into the backend as the sample's
-    /// objective — the training signal of the steering loop.
+    /// When set, derive the backward-compatible scalar-objective view:
+    /// `outputs[objective_index]` of every successful sample is recorded
+    /// into the backend from the flushed result batch. (The steering
+    /// loop itself trains from feature-store reads; this view feeds
+    /// `merlin status` and pre-feature-store consumers.)
     pub objective_index: Option<usize>,
+    /// The result plane: where this worker flushes one columnar
+    /// [`ResultBatch`] per step task. `None` = results are not captured
+    /// (bench workers, pure-overhead studies).
+    pub results: Option<Arc<dyn ResultSink>>,
+    /// Cap on output scalars captured per row (the spec's
+    /// `merlin.outputs.count`); `None` = capture everything the
+    /// simulation reports.
+    pub output_limit: Option<usize>,
 }
 
 impl WorkerConfig {
@@ -106,6 +129,8 @@ impl WorkerConfig {
             lease_ms: 0,
             heartbeat_ms: 0,
             objective_index: None,
+            results: None,
+            output_limit: None,
         }
     }
 }
@@ -125,6 +150,11 @@ pub struct WorkerReport {
     pub samples_failed: u64,
     /// Whole tasks lost to injected node death.
     pub tasks_killed: u64,
+    /// Result rows flushed to the configured [`ResultSink`].
+    pub result_rows: u64,
+    /// Result batches the sink refused (rows recovered through the
+    /// derived objective view and the resubmission crawl).
+    pub result_flush_errors: u64,
     /// Whether a `StopWorker` control message ended the run.
     pub stopped_by_control: bool,
 }
@@ -316,57 +346,65 @@ impl Worker {
     }
 
     /// Execute all samples of a step task; returns intrinsic work µs.
+    ///
+    /// Every path collects one [`ResultRow`] per sample; the batch is
+    /// flushed to the result plane *before* completion marks land (see
+    /// the module docs for why that ordering matters to steering).
     fn run_step(&mut self, step: &StepTask, report: &mut WorkerReport) -> u64 {
         let t = &step.template;
         let mut work_us = 0u64;
         let mut bundle_nodes: Vec<(u64, Node)> = Vec::new();
+        let mut rows: Vec<ResultRow> = Vec::new();
+        // Deferred completion marks: (sample, ok). Applied after the
+        // result batch and the bundle file are flushed.
+        let mut marks: Vec<(u64, bool)> = Vec::new();
         // Bundle fast path: run the whole range through the batched
         // simulator in one call (one PJRT execute per bundle).
         if let WorkSpec::Builtin { model } = &t.work {
+            let t0 = self.cfg.clock.now_us();
             let outcomes = self
                 .sim
                 .run_range(model, step.lo, step.hi - step.lo, t.seed);
+            let span = self.cfg.clock.now_us().saturating_sub(t0);
+            let per_sample_us = span / (step.hi - step.lo).max(1);
             for (sample, result) in outcomes {
                 if self.rng.chance(self.cfg.failures.sample_error_rate) {
-                    self.fail_sample(&t.study_id, sample, report);
+                    rows.push(failed_row(sample));
+                    marks.push((sample, false));
                     continue;
                 }
                 match result {
                     Ok(node) => {
-                        // Steering signal: report the configured output
-                        // scalar back as this sample's objective.
-                        if let (Some(idx), Some(state)) =
-                            (self.cfg.objective_index, &self.state)
-                        {
-                            if let Some(v) =
-                                node.f32s("outputs/scalars").and_then(|s| s.get(idx))
-                            {
-                                state.record_objective(&t.study_id, sample, *v as f64);
-                            }
-                        }
+                        rows.push(self.row_from_node(sample, &node, per_sample_us));
                         bundle_nodes.push((sample, node));
-                        self.ok_sample(&t.study_id, sample, report);
+                        marks.push((sample, true));
                     }
-                    Err(_) => self.fail_sample(&t.study_id, sample, report),
+                    Err(_) => {
+                        rows.push(failed_row(sample));
+                        marks.push((sample, false));
+                    }
                 }
             }
-            self.finish_bundle(step, bundle_nodes);
+            self.finish_step(step, bundle_nodes, rows, marks, report);
             return 0;
         }
         for sample in step.lo..step.hi {
             // Internal (physics) error injection.
             if self.rng.chance(self.cfg.failures.sample_error_rate) {
-                self.fail_sample(&t.study_id, sample, report);
+                rows.push(failed_row(sample));
+                marks.push((sample, false));
                 continue;
             }
             match &t.work {
                 WorkSpec::Null { duration_us } => {
                     self.cfg.clock.sleep_us(*duration_us);
                     work_us += duration_us;
-                    self.ok_sample(&t.study_id, sample, report);
+                    rows.push(timing_row(sample, *duration_us));
+                    marks.push((sample, true));
                 }
                 WorkSpec::Noop => {
-                    self.ok_sample(&t.study_id, sample, report);
+                    rows.push(timing_row(sample, 0));
+                    marks.push((sample, true));
                 }
                 WorkSpec::Shell { cmd, shell } => {
                     let root = self
@@ -374,38 +412,110 @@ impl Worker {
                         .workspace_root
                         .clone()
                         .unwrap_or_else(std::env::temp_dir);
-                    match run_shell_sample(&root, &t.study_id, &t.step_name, sample, cmd, shell) {
-                        Ok(out) if out.exit_code == 0 => {
-                            self.ok_sample(&t.study_id, sample, report)
-                        }
-                        _ => self.fail_sample(&t.study_id, sample, report),
+                    let ok = matches!(
+                        run_shell_sample(&root, &t.study_id, &t.step_name, sample, cmd, shell),
+                        Ok(out) if out.exit_code == 0
+                    );
+                    if ok {
+                        rows.push(timing_row(sample, 0));
+                    } else {
+                        rows.push(failed_row(sample));
                     }
+                    marks.push((sample, ok));
                 }
                 WorkSpec::Builtin { .. } => unreachable!("handled by bundle fast path"),
             }
         }
-        self.finish_bundle(step, bundle_nodes);
+        self.finish_step(step, bundle_nodes, rows, marks, report);
         work_us
     }
 
-    /// Dump collected sim outputs as a bundle file (if a data root is
-    /// configured). A failed dump loses the whole bundle — the crawl will
-    /// find the hole (the paper's I/O-failure mode).
-    fn finish_bundle(&mut self, step: &StepTask, bundle_nodes: Vec<(u64, Node)>) {
-        if bundle_nodes.is_empty() {
-            return;
+    /// A training-ready row from a finished simulation node: params from
+    /// `inputs/x`, outputs from `outputs/scalars` (falling back to the
+    /// null sim's `outputs/value`), capped by the spec's output budget.
+    fn row_from_node(&self, sample: u64, node: &Node, sim_us: u64) -> ResultRow {
+        let params = match node.f32s("inputs/x") {
+            Some(x) => x.to_vec(),
+            None => Vec::new(),
+        };
+        let mut outputs: Vec<f64> = match node.f32s("outputs/scalars") {
+            Some(s) => s.iter().map(|v| *v as f64).collect(),
+            // The null sim reports through `outputs/value` instead.
+            None => match node.f64s("outputs/value") {
+                Some(v) => v.to_vec(),
+                None => Vec::new(),
+            },
+        };
+        if let Some(limit) = self.cfg.output_limit {
+            outputs.truncate(limit);
         }
-        if let Some(root) = &self.cfg.data_root {
-            let compress = self.cfg.bundle_compress;
-            if write_bundle_opts(&self.cfg.layout, root, step.lo, bundle_nodes, compress)
-                .is_err()
-            {
-                for sample in step.lo..step.hi {
-                    if let Some(state) = &self.state {
-                        state.mark_sample_failed(&step.template.study_id, sample);
+        ResultRow {
+            sample_id: sample,
+            params,
+            outputs,
+            status: STATUS_OK,
+            sim_us,
+        }
+    }
+
+    /// Settle a finished step task, in the order the result plane
+    /// depends on:
+    ///
+    /// 1. flush the columnar result batch (and the derived objective
+    ///    view) so the rows are visible before any completion mark;
+    /// 2. dump the bundle file — a failed dump downgrades every mark to
+    ///    failed (the whole bundle is lost; the crawl finds the hole);
+    /// 3. apply the completion marks to the backend.
+    fn finish_step(
+        &mut self,
+        step: &StepTask,
+        bundle_nodes: Vec<(u64, Node)>,
+        rows: Vec<ResultRow>,
+        mut marks: Vec<(u64, bool)>,
+        report: &mut WorkerReport,
+    ) {
+        self.flush_results(&step.template, &rows, report);
+        if !bundle_nodes.is_empty() {
+            if let Some(root) = &self.cfg.data_root {
+                let compress = self.cfg.bundle_compress;
+                if write_bundle_opts(&self.cfg.layout, root, step.lo, bundle_nodes, compress)
+                    .is_err()
+                {
+                    for mark in &mut marks {
+                        mark.1 = false;
                     }
                 }
             }
+        }
+        for (sample, ok) in marks {
+            if ok {
+                self.ok_sample(&step.template.study_id, sample, report);
+            } else {
+                self.fail_sample(&step.template.study_id, sample, report);
+            }
+        }
+    }
+
+    /// One columnar flush per step task: rows to the [`ResultSink`],
+    /// plus the derived scalar-objective view into the backend.
+    fn flush_results(
+        &mut self,
+        t: &StepTemplate,
+        rows: &[ResultRow],
+        report: &mut WorkerReport,
+    ) {
+        if rows.is_empty() {
+            return;
+        }
+        let batch = ResultBatch::from_rows(&t.study_id, &t.step_name, rows);
+        if let Some(sink) = &self.cfg.results {
+            match sink.record_results(&batch) {
+                Ok(n) => report.result_rows += n,
+                Err(_) => report.result_flush_errors += 1,
+            }
+        }
+        if let (Some(idx), Some(state)) = (self.cfg.objective_index, &self.state) {
+            featurestore::derive_objectives(state, &batch, idx);
         }
     }
 
@@ -437,6 +547,28 @@ impl Worker {
 
 /// Decorrelates worker failure-injection streams from study sample streams.
 const WORKER_SALT: u64 = 0x57F3_11AA_29C4_8D01;
+
+/// A failed sample's row: no data, just the status for the record.
+fn failed_row(sample: u64) -> ResultRow {
+    ResultRow {
+        sample_id: sample,
+        params: Vec::new(),
+        outputs: Vec::new(),
+        status: STATUS_FAILED,
+        sim_us: 0,
+    }
+}
+
+/// A dataless ok row (null/noop/shell steps): status + timing only.
+fn timing_row(sample: u64, sim_us: u64) -> ResultRow {
+    ResultRow {
+        sample_id: sample,
+        params: Vec::new(),
+        outputs: Vec::new(),
+        status: STATUS_OK,
+        sim_us,
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -572,6 +704,86 @@ mod tests {
         // Objective ids are exactly the sample ids.
         let ids: Vec<u64> = objs.iter().map(|(id, _)| *id).collect();
         assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn builtin_steps_flush_result_batches_to_the_sink() {
+        use crate::broker::wal::FsyncPolicy;
+        use crate::data::featurestore::FeatureStore;
+        let (broker, state, _rec, clock) = setup();
+        let dir = std::env::temp_dir().join(format!(
+            "merlin-worker-sink-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let fs = Arc::new(FeatureStore::open(&dir, 2, FsyncPolicy::Never).unwrap());
+        let t = template(
+            WorkSpec::Builtin {
+                model: "quadratic".into(),
+            },
+            4,
+        );
+        broker.publish(hierarchy::root_task(t, 12, 3, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.objective_index = Some(0);
+        cfg.results = Some(fs.clone());
+        let mut w = Worker::new(
+            broker,
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::QuadraticSimRunner::default()),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 12);
+        assert_eq!(report.result_rows, 12, "every sample landed a row");
+        assert_eq!(report.result_flush_errors, 0);
+        let rows = fs.rows_for("study-w").unwrap();
+        assert_eq!(rows.len(), 12);
+        assert!(rows.iter().all(|r| r.is_ok()));
+        assert!(rows.iter().all(|r| r.params.len() == 2));
+        assert!(rows.iter().all(|r| r.outputs.len() == 1));
+        // The derived scalar view matches the rows exactly.
+        let objs = state.objectives("study-w");
+        assert_eq!(objs.len(), 12);
+        for (id, v) in objs {
+            let row = rows.iter().find(|r| r.sample_id == id).unwrap();
+            assert!((row.outputs[0] - v).abs() < 1e-12);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn output_limit_caps_captured_scalars() {
+        use crate::broker::wal::FsyncPolicy;
+        use crate::data::featurestore::FeatureStore;
+        let (broker, state, _rec, clock) = setup();
+        let dir = std::env::temp_dir().join(format!(
+            "merlin-worker-olim-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let fs = Arc::new(FeatureStore::open(&dir, 1, FsyncPolicy::Never).unwrap());
+        let t = template(WorkSpec::Builtin { model: "null".into() }, 2);
+        broker.publish(hierarchy::root_task(t, 4, 2, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.results = Some(fs.clone());
+        cfg.output_limit = Some(0);
+        let mut w = Worker::new(
+            broker,
+            Some(state),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 4);
+        let rows = fs.rows_for("study-w").unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.outputs.is_empty()), "capped at 0");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

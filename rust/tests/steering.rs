@@ -1,19 +1,25 @@
 //! End-to-end ML-in-the-loop steering: a YAML study with an `iterate:`
 //! block runs multiple surrogate-driven rounds in-process — samples
 //! injected into LIVE queues while sim workers consume — and the
-//! no-runtime fallback proposer converges on a quadratic objective.
-//! Plus: a dead leased worker's tasks redeliver to live workers
-//! mid-study without consuming a retry.
+//! no-runtime fallback proposer converges on a quadratic objective,
+//! training from **feature-store reads** (the result plane). Every
+//! worker result lands as a columnar row, `merlin export`'s compaction
+//! produces one container whose row count equals the done-sample count,
+//! and a dead leased worker's tasks redeliver to live workers mid-study
+//! without consuming a retry.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
 use merlin::backend::state::StateStore;
 use merlin::backend::store::Store;
 use merlin::broker::core::{Broker, BrokerConfig};
+use merlin::broker::wal::FsyncPolicy;
 use merlin::coordinator::steer::{steer, IdwProposer, StopReason};
-use merlin::coordinator::{status_json, RunOptions};
+use merlin::coordinator::{status_json_full, RunOptions};
 use merlin::dag::expand::wave_tasks;
+use merlin::data::featurestore::{export_rows, FeatureStore, ResultSink};
 use merlin::metrics::convergence_series;
 use merlin::spec::study::StudySpec;
 use merlin::task::{StepTemplate, WorkSpec};
@@ -35,6 +41,9 @@ merlin:
   samples:
     count: 48
     seed: 11
+  outputs:
+    count: 1
+    column_labels: [objective]
   iterate:
     max_rounds: 6
     samples_per_round: 48
@@ -45,9 +54,19 @@ merlin:
     dims: 2
 ";
 
+fn store_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "merlin-steer-store-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
 fn worker_pool(
     broker: &Broker,
     state: &StateStore,
+    results: Arc<FeatureStore>,
     queues: Vec<String>,
     n: usize,
 ) -> std::thread::JoinHandle<merlin::worker::PoolReport> {
@@ -72,6 +91,8 @@ fn worker_pool(
                 cfg.lease_ms = 500;
                 cfg.heartbeat_ms = 100;
                 cfg.objective_index = Some(0);
+                cfg.results = Some(results.clone() as Arc<dyn ResultSink>);
+                cfg.output_limit = Some(1);
                 cfg
             },
         )
@@ -83,17 +104,20 @@ fn steered_yaml_study_converges_with_fallback_proposer() {
     let spec = StudySpec::parse(STEERED_SPEC).unwrap();
     let broker = Broker::default();
     let state = StateStore::new(Store::new());
+    let dir = store_dir("e2e");
+    let results = Arc::new(FeatureStore::open(&dir, 4, FsyncPolicy::Interval(50)).unwrap());
     let opts = RunOptions {
         max_branch: 8,
         samples_per_task: 4,
         queue_prefix: "sq".into(),
     };
     let queues: Vec<String> = spec.steps.iter().map(|s| opts.queue_for(&s.name)).collect();
-    let pool = worker_pool(&broker, &state, queues, 4);
+    let pool = worker_pool(&broker, &state, results.clone(), queues, 4);
     let mut proposer = IdwProposer::new();
     let report = steer(
         &broker,
         &state,
+        &results,
         &spec,
         "st-e2e",
         &opts,
@@ -106,6 +130,7 @@ fn steered_yaml_study_converges_with_fallback_proposer() {
     // All rounds ran (no threshold / patience configured) and every
     // injected sample completed through the live queues.
     assert_eq!(report.stop, StopReason::MaxRounds);
+    assert_eq!(report.steered_study, "st-e2e/sim", "the export key");
     assert!(!report.study.timed_out);
     assert_eq!(report.rounds.len(), 6);
     // 6 rounds x 48 samples on the steered step + 1 downstream collect.
@@ -116,9 +141,45 @@ fn steered_yaml_study_converges_with_fallback_proposer() {
     assert_eq!(broker.depth(), 0, "queues drained");
     assert_eq!(broker.inflight(), 0);
 
-    // The proposer saw every steered sample.
+    // The result plane holds EVERY worker result: the steered step's
+    // rows plus the downstream collect sample.
+    assert_eq!(workers.result_rows, 6 * 48 + 1);
+    assert_eq!(workers.result_flush_errors, 0);
+    let steered_rows = results.rows_for("st-e2e/sim").unwrap();
+    assert_eq!(steered_rows.len(), 6 * 48);
+    assert!(steered_rows.iter().all(|r| r.is_ok()));
+    assert!(steered_rows.iter().all(|r| r.params.len() == 2));
+    assert!(steered_rows.iter().all(|r| r.outputs.len() == 1));
+
+    // The proposer saw every steered sample — trained from the store's
+    // rows, and the derived scalar view agrees with them.
     assert_eq!(proposer.len(), 6 * 48);
     assert_eq!(state.objective_count("st-e2e/sim"), 6 * 48);
+
+    // `merlin export` compaction: one container whose row count equals
+    // the steered done-sample count, training matrices dense.
+    results.flush().unwrap();
+    let out = dir.join("train.mrln");
+    let manifest = results
+        .export("st-e2e/sim", &out, &["objective".to_string()])
+        .unwrap();
+    assert_eq!(manifest.rows, 6 * 48, "row count == done samples");
+    assert_eq!(manifest.failed, 0);
+    assert_eq!((manifest.param_dim, manifest.output_dim), (2, 1));
+    let container = merlin::data::read_container(&out).unwrap();
+    assert_eq!(
+        container.f32s("data/params").unwrap().len(),
+        6 * 48 * 2,
+        "dense row-major params"
+    );
+    assert_eq!(container.f64s("data/outputs").unwrap().len(), 6 * 48);
+    assert_eq!(container.str_at("manifest/labels"), Some("objective"));
+    // The same export is reachable through the read-only scan path the
+    // CLI uses (works against in-flight stores).
+    let batches = merlin::data::featurestore::scan_dir(&dir).unwrap();
+    let rows = merlin::data::featurestore::rows_in(&batches, "st-e2e/sim");
+    let m2 = export_rows("st-e2e/sim", &rows, &dir.join("train2.mrln"), &[]).unwrap();
+    assert_eq!(m2.rows, manifest.rows);
 
     // Convergence: the cumulative best is monotone (non-worsening) and
     // lands deep inside the quadratic bowl. With 2 dims, a pure-random
@@ -138,21 +199,33 @@ fn steered_yaml_study_converges_with_fallback_proposer() {
     assert!(report.rounds.iter().all(|r| r.injected == 48));
     assert!(report.rounds.iter().all(|r| r.observed == 48));
 
-    // The best sample's recorded objective matches the report.
-    let objs = state.objectives("st-e2e/sim");
-    let recorded = objs.iter().find(|(id, _)| *id == best_sample).unwrap().1;
-    assert!((recorded - best).abs() < 1e-9);
+    // The best sample's stored row matches the report.
+    let row = steered_rows
+        .iter()
+        .find(|r| r.sample_id == best_sample)
+        .unwrap();
+    assert!((row.outputs[0] - best).abs() < 1e-9);
 
     // The fig-style convergence series has one row per round, and the
-    // status JSON carries the steering progress for `merlin status`.
+    // status JSON carries steering progress AND the dataset section.
     let series = convergence_series(&report.rounds);
     assert_eq!(series.rows.len(), 6);
     assert_eq!(series.column("best_so_far").unwrap().last().copied(), Some(best));
-    let j = status_json(&broker, &state, &[("st-e2e/sim", 6 * 48)]);
+    let ds = results.stats();
+    let j = status_json_full(&broker, &state, &[("st-e2e/sim", 6 * 48)], Some(&ds));
     let studies = j.get("studies").as_arr().unwrap();
     let steering = studies[0].get("steering");
     assert_eq!(steering.get("round").as_u64(), Some(6));
     assert_eq!(steering.get("injected").as_u64(), Some(6 * 48));
+    let dataset = j.get("dataset");
+    assert_eq!(dataset.get("rows").as_u64(), Some(6 * 48 + 1));
+    let per = dataset.get("studies").as_arr().unwrap();
+    let steered_ds = per
+        .iter()
+        .find(|s| s.get("study").as_str() == Some("st-e2e/sim"))
+        .unwrap();
+    assert!((steered_ds.get("completeness").as_f64().unwrap() - 1.0).abs() < 1e-12);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -166,17 +239,20 @@ fn threshold_stop_ends_steering_early() {
     let spec = StudySpec::parse(&text).unwrap();
     let broker = Broker::default();
     let state = StateStore::new(Store::new());
+    let dir = store_dir("thresh");
+    let results = Arc::new(FeatureStore::open(&dir, 2, FsyncPolicy::Never).unwrap());
     let opts = RunOptions {
         max_branch: 8,
         samples_per_task: 4,
         queue_prefix: "sq2".into(),
     };
     let queues: Vec<String> = spec.steps.iter().map(|s| opts.queue_for(&s.name)).collect();
-    let pool = worker_pool(&broker, &state, queues, 2);
+    let pool = worker_pool(&broker, &state, results.clone(), queues, 2);
     let mut proposer = IdwProposer::new();
     let report = steer(
         &broker,
         &state,
+        &results,
         &spec,
         "st-thresh",
         &opts,
@@ -189,6 +265,8 @@ fn threshold_stop_ends_steering_early() {
     assert_eq!(report.rounds.len(), 1);
     assert_eq!(report.study.samples_expected, 48 + 1, "one wave + collect");
     assert_eq!(report.study.samples_done, 48 + 1);
+    assert_eq!(results.rows_for("st-thresh/sim").unwrap().len(), 48);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -199,6 +277,8 @@ fn dead_leased_workers_tasks_redeliver_to_live_workers_without_retry_cost() {
     // stranded, no retries consumed.
     let broker = Broker::new(BrokerConfig::default());
     let state = StateStore::new(Store::new());
+    let dir = store_dir("dead");
+    let results = Arc::new(FeatureStore::open(&dir, 2, FsyncPolicy::Never).unwrap());
     let template = StepTemplate {
         study_id: "st-dead/sim".into(),
         step_name: "sim".into(),
@@ -224,12 +304,15 @@ fn dead_leased_workers_tasks_redeliver_to_live_workers_without_retry_cost() {
 
     // Live (unleased is fine) workers drain the queue; their fetch loop
     // reaps the dead worker's leases once they expire.
-    let pool = worker_pool(&broker, &state, vec!["dq.sim".into()], 2);
+    let pool = worker_pool(&broker, &state, results.clone(), vec!["dq.sim".into()], 2);
     let workers = pool.join().unwrap();
     assert_eq!(workers.samples_ok, 10, "all ten samples completed");
     assert_eq!(state.done_count("st-dead/sim"), 10);
     assert_eq!(broker.depth(), 0);
     assert_eq!(broker.inflight(), 0, "nothing stranded by the dead worker");
+    // Every redelivered sample's row landed exactly once in the store
+    // (last-wins dedup makes the view exact even under redelivery).
+    assert_eq!(results.rows_for("st-dead/sim").unwrap().len(), 10);
     let totals = broker.totals();
     assert_eq!(totals.lease_expired, 3, "exactly the dead worker's window");
     assert_eq!(totals.dead_lettered, 0, "no retries were consumed");
@@ -237,4 +320,5 @@ fn dead_leased_workers_tasks_redeliver_to_live_workers_without_retry_cost() {
     assert_eq!(st.lease_expired, 3);
     // Redelivered tasks kept their full retry budget all the way through.
     assert_eq!(retries, 3);
+    std::fs::remove_dir_all(&dir).ok();
 }
