@@ -23,7 +23,7 @@ impl BackendClient {
     /// Connect to a backend server.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
+        crate::net::tune_stream(&stream)?;
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),

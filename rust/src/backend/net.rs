@@ -8,27 +8,53 @@
 //! attached via [`BackendServer::serve_with_results`]) and derives the
 //! backward-compatible scalar-objective view in the same call — one
 //! round trip per task instead of one `set`+`sadd` pair per sample.
+//!
+//! Like [`crate::broker::net::BrokerServer`], the backend runs either
+//! threaded (portable) or on the epoll reactor (Linux), selected by
+//! [`ServeConfig`]. The backend protocol has no long-poll op, so its
+//! reactor service never parks — every frame is dispatch-and-reply on
+//! the blocking pool (feature-store appends are exactly the fsync-bound
+//! work the pool exists for).
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::state::StateStore;
 use super::store::Store;
 use crate::broker::wire::{self, WireError};
 use crate::data::featurestore::{derive_objectives, FeatureStore, ResultBatch};
+use crate::net::ServeConfig;
 use crate::util::hex;
 use crate::util::json::Json;
 
+#[cfg(target_os = "linux")]
+use crate::net::{FrameService, ServiceReply, WakeHint};
+
 /// Handle to a running backend server. Dropping does not stop it; call
-/// [`BackendServer::shutdown`].
+/// [`BackendServer::shutdown`] (graceful) or
+/// [`BackendServer::shutdown_hard`] (crash simulation).
 pub struct BackendServer {
     /// The bound address (resolves port 0 to the ephemeral port chosen).
-    pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    pub addr: SocketAddr,
+    imp: ServerImpl,
+}
+
+enum ServerImpl {
+    Threaded {
+        stop: Arc<AtomicBool>,
+        accept_thread: Option<JoinHandle<()>>,
+        /// Live connection clones keyed by connection id; each
+        /// connection thread removes its entry on exit. Hard shutdown
+        /// severs these so chaos runs can make a backend go silent —
+        /// shutdown parity with the broker server.
+        conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    },
+    #[cfg(target_os = "linux")]
+    Reactor(crate::net::reactor::ReactorHandle),
 }
 
 impl BackendServer {
@@ -48,16 +74,52 @@ impl BackendServer {
         results: Option<Arc<FeatureStore>>,
         addr: &str,
     ) -> std::io::Result<BackendServer> {
+        Self::serve_with_config(store, results, addr, ServeConfig::default())
+    }
+
+    /// [`BackendServer::serve_with_results`] with an explicit server
+    /// mode and resource guards.
+    pub fn serve_with_config(
+        store: Store,
+        results: Option<Arc<FeatureStore>>,
+        addr: &str,
+        cfg: ServeConfig,
+    ) -> std::io::Result<BackendServer> {
+        let use_reactor = cfg.use_reactor()?;
+        #[cfg(target_os = "linux")]
+        if use_reactor {
+            let listener = TcpListener::bind(addr)?;
+            let local = listener.local_addr()?;
+            let service = Arc::new(BackendService { store, results });
+            let handle = crate::net::reactor::serve(listener, service, cfg.reactor_config())?;
+            return Ok(BackendServer {
+                addr: local,
+                imp: ServerImpl::Reactor(handle),
+            });
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = use_reactor; // always false here: use_reactor() errors on forced Reactor
+        Self::serve_threaded(store, results, addr)
+    }
+
+    fn serve_threaded(
+        store: Store,
+        results: Option<Arc<FeatureStore>>,
+        addr: &str,
+    ) -> std::io::Result<BackendServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let conns2 = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name("backend-accept".into())
             .spawn(move || {
                 // Blocking accept (zero idle CPU); shutdown() wakes it
                 // with a self-connection. Detached connection threads —
                 // see broker::net for why.
+                let mut next_conn = 0u64;
                 loop {
                     match listener.accept() {
                         Ok((stream, _)) => {
@@ -66,8 +128,20 @@ impl BackendServer {
                             }
                             let store = store.clone();
                             let results = results.clone();
-                            stream.set_nodelay(true).ok();
-                            std::thread::spawn(move || handle_conn(store, results, stream));
+                            crate::net::tune_stream(&stream).ok();
+                            let conn_id = next_conn;
+                            next_conn += 1;
+                            if let Ok(clone) = stream.try_clone() {
+                                conns2.lock().unwrap().insert(conn_id, clone);
+                            }
+                            let registry = conns2.clone();
+                            std::thread::Builder::new()
+                                .name("backend-conn".into())
+                                .spawn(move || {
+                                    handle_conn(store, results, stream);
+                                    registry.lock().unwrap().remove(&conn_id);
+                                })
+                                .expect("spawn conn thread");
                         }
                         Err(_) => {
                             if stop2.load(Ordering::Relaxed) {
@@ -80,20 +154,67 @@ impl BackendServer {
             })?;
         Ok(BackendServer {
             addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
+            imp: ServerImpl::Threaded {
+                stop,
+                accept_thread: Some(accept_thread),
+                conns,
+            },
         })
     }
 
     /// Stop accepting. Existing connections end when clients disconnect.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // Self-connect wakeup; join only if it connected — see
-        // broker::net::BrokerServer::shutdown for the rationale.
-        if let Some(t) = self.accept_thread.take() {
-            if TcpStream::connect(crate::broker::net::wake_addr(self.addr)).is_ok() {
-                t.join().ok();
+    pub fn shutdown(self) {
+        let addr = self.addr;
+        match self.imp {
+            ServerImpl::Threaded {
+                stop,
+                accept_thread,
+                ..
+            } => threaded_stop(addr, &stop, accept_thread),
+            #[cfg(target_os = "linux")]
+            ServerImpl::Reactor(h) => h.shutdown(),
+        }
+    }
+
+    /// Crash the server: stop accepting **and** sever every established
+    /// connection, so in-flight clients observe transport errors — the
+    /// backend-side signal chaos runs key on.
+    pub fn shutdown_hard(self) {
+        let addr = self.addr;
+        match self.imp {
+            ServerImpl::Threaded {
+                stop,
+                accept_thread,
+                conns,
+            } => {
+                threaded_stop(addr, &stop, accept_thread);
+                for (_, stream) in conns.lock().unwrap().drain() {
+                    stream.shutdown(std::net::Shutdown::Both).ok();
+                }
             }
+            #[cfg(target_os = "linux")]
+            ServerImpl::Reactor(h) => h.shutdown_hard(),
+        }
+    }
+
+    /// Reactor counters when running in reactor mode (`None` when
+    /// threaded).
+    #[cfg(target_os = "linux")]
+    pub fn reactor_stats(&self) -> Option<crate::net::reactor::ReactorStats> {
+        match &self.imp {
+            ServerImpl::Reactor(h) => Some(h.stats()),
+            _ => None,
+        }
+    }
+}
+
+fn threaded_stop(addr: SocketAddr, stop: &AtomicBool, accept_thread: Option<JoinHandle<()>>) {
+    stop.store(true, Ordering::Relaxed);
+    // Self-connect wakeup; join only if it connected — see
+    // broker::net::BrokerServer::shutdown for the rationale.
+    if let Some(t) = accept_thread {
+        if TcpStream::connect(crate::broker::net::wake_addr(addr)).is_ok() {
+            t.join().ok();
         }
     }
 }
@@ -109,6 +230,33 @@ fn handle_conn(store: Store, results: Option<Arc<FeatureStore>>, stream: TcpStre
         let resp = dispatch(&store, &results, &req);
         if wire::write_frame(&mut writer, &resp).is_err() || writer.flush().is_err() {
             break;
+        }
+    }
+}
+
+/// The backend as a reactor [`FrameService`]: stateless per connection
+/// (no consumer identity, no long-poll), so every frame is a pure
+/// dispatch-and-reply on the blocking pool.
+#[cfg(target_os = "linux")]
+struct BackendService {
+    store: Store,
+    results: Option<Arc<FeatureStore>>,
+}
+
+#[cfg(target_os = "linux")]
+impl FrameService for BackendService {
+    fn on_connect(&self, _conn: u64) {}
+
+    fn on_disconnect(&self, _conn: u64) {}
+
+    fn handle(&self, _conn: u64, body: &[u8], _last_try: bool) -> ServiceReply {
+        let resp = match wire::parse_json_body(body) {
+            Ok(req) => dispatch(&self.store, &self.results, &req),
+            Err(e) => wire::err(e.to_string()),
+        };
+        ServiceReply::Reply {
+            frame: crate::util::json::to_string(&resp).into_bytes(),
+            wake: WakeHint::None,
         }
     }
 }
@@ -239,6 +387,20 @@ mod tests {
         // Server writes hit the shared store directly.
         assert_eq!(store.get("k").as_deref(), Some("v"));
         server.shutdown();
+    }
+
+    #[test]
+    fn threaded_mode_kv_and_hard_shutdown() {
+        let store = Store::new();
+        let server =
+            BackendServer::serve_with_config(store, None, "127.0.0.1:0", ServeConfig::threaded())
+                .unwrap();
+        let mut c = BackendClient::connect(&server.addr.to_string()).unwrap();
+        c.set("k", "v").unwrap();
+        assert_eq!(c.get("k").unwrap().as_deref(), Some("v"));
+        server.shutdown_hard();
+        // The established connection was severed, not just the listener.
+        assert!(c.get("k").is_err(), "hard shutdown severs live clients");
     }
 
     #[test]

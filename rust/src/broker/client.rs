@@ -56,7 +56,7 @@ impl BrokerClient {
     /// Connect to a broker server and negotiate the wire version.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
+        crate::net::tune_stream(&stream)?;
         let mut client = Self {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),

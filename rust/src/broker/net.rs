@@ -1,16 +1,25 @@
-//! TCP front-end for the broker: one OS thread per connection (workers are
-//! long-lived, counts are modest — the paper's deployments run tens of
-//! thousands of workers against one Rabbit node; our per-connection cost is
-//! a blocked thread and two buffers).
+//! TCP front-end for the broker.
 //!
-//! The accept loop **blocks** in `accept()` — no poll interval, zero idle
-//! CPU. [`BrokerServer::shutdown`] sets the stop flag and then wakes the
-//! loop with a self-connection, so shutdown is prompt.
+//! Two server implementations share one dispatch layer (selected by
+//! [`crate::net::ServeConfig`], default [`crate::net::NetMode::Auto`]):
 //!
-//! Each connection is a broker *consumer*: if it drops with unacked
-//! deliveries, those messages are requeued (AMQP redelivery semantics),
-//! which is the resilience mechanism the paper's studies leaned on when
-//! nodes died mid-task.
+//! * **Threaded** (portable fallback): one OS thread per connection,
+//!   blocking reads. The accept loop **blocks** in `accept()` — no poll
+//!   interval, zero idle CPU — and [`BrokerServer::shutdown`] wakes it
+//!   with a self-connection.
+//! * **Reactor** (Linux): the epoll event loop in
+//!   [`crate::net::reactor`]. One reactor thread multiplexes every
+//!   connection; dispatch runs on a small fixed blocking pool; a fetch
+//!   against empty queues *parks* server-side
+//!   ([`crate::net::ServiceReply::Park`]) instead of pinning a thread,
+//!   and publish frames carry wake hints that un-park matching waiters.
+//!   Thread count is `O(1 + pool)`, not `O(connections)` — the path to
+//!   the paper's tens-of-thousands-of-workers regime.
+//!
+//! Each connection is a broker *consumer* in both modes: if it drops
+//! with unacked deliveries, those messages are requeued (AMQP
+//! redelivery semantics), which is the resilience mechanism the paper's
+//! studies leaned on when nodes died mid-task.
 //!
 //! Requests arrive as either JSON frames (the per-op v1 protocol, plus
 //! `hello` negotiation) or binary batch frames (`EnqueueBatch`,
@@ -18,17 +27,22 @@
 //! flushed once per request, so a pipelined client that writes N batch
 //! frames before reading gets N responses with minimal syscall traffic.
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::core::{Broker, BrokerError, QueueStats};
 use super::wire::{self, BinMsg, Frame, WireError};
+use crate::net::ServeConfig;
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
+
+#[cfg(target_os = "linux")]
+use crate::net::{FrameService, ServiceReply, WakeHint};
 
 /// Highest wire version this server speaks. v3 adds the delivery-lease
 /// surface (`ExtendBatch` binary frames plus the `set_lease` /
@@ -45,7 +59,19 @@ pub const MAX_POP_WINDOW: usize = 1024;
 /// [`BrokerServer::shutdown_hard`] (crash simulation).
 pub struct BrokerServer {
     /// The bound address (resolves port 0 to the ephemeral port chosen).
-    pub addr: std::net::SocketAddr,
+    pub addr: SocketAddr,
+    imp: ServerImpl,
+}
+
+enum ServerImpl {
+    Threaded(ThreadedParts),
+    #[cfg(target_os = "linux")]
+    Reactor(crate::net::reactor::ReactorHandle),
+}
+
+/// The threaded server's moving parts: stop flag, accept thread, and
+/// the live-connection registry.
+struct ThreadedParts {
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     /// Live connection handles (clones keyed by connection id; each
@@ -53,18 +79,70 @@ pub struct BrokerServer {
     /// holds exactly the live set). A hard shutdown severs these —
     /// federation chaos tests and `kill -9` simulations need the member
     /// to actually go silent, not merely stop accepting newcomers.
-    conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+}
+
+impl ThreadedParts {
+    fn stop_accepting(&mut self, addr: SocketAddr) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept with a self-connection. Only join if
+        // the wakeup actually connected — otherwise the accept thread may
+        // never observe the flag and join would hang; leaking a parked
+        // thread at shutdown is the lesser evil.
+        if let Some(t) = self.accept_thread.take() {
+            if TcpStream::connect(wake_addr(addr)).is_ok() {
+                t.join().ok();
+            }
+        }
+    }
+
+    fn sever_all(&self) {
+        for (_, stream) in self.conns.lock().unwrap().drain() {
+            stream.shutdown(std::net::Shutdown::Both).ok();
+        }
+    }
 }
 
 impl BrokerServer {
-    /// Bind and serve `broker` on `addr` (use port 0 for ephemeral).
+    /// Bind and serve `broker` on `addr` (use port 0 for ephemeral) with
+    /// the default [`ServeConfig`]: reactor on Linux, threaded elsewhere.
     pub fn serve(broker: Broker, addr: &str) -> std::io::Result<BrokerServer> {
+        Self::serve_with(broker, addr, ServeConfig::default())
+    }
+
+    /// Bind and serve `broker` on `addr` with an explicit server mode
+    /// and resource guards.
+    pub fn serve_with(
+        broker: Broker,
+        addr: &str,
+        cfg: ServeConfig,
+    ) -> std::io::Result<BrokerServer> {
+        let use_reactor = cfg.use_reactor()?;
+        #[cfg(target_os = "linux")]
+        if use_reactor {
+            let listener = TcpListener::bind(addr)?;
+            let local = listener.local_addr()?;
+            let service = Arc::new(BrokerService {
+                broker,
+                consumers: Mutex::new(HashMap::new()),
+            });
+            let handle = crate::net::reactor::serve(listener, service, cfg.reactor_config())?;
+            return Ok(BrokerServer {
+                addr: local,
+                imp: ServerImpl::Reactor(handle),
+            });
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = use_reactor; // always false here: use_reactor() errors on forced Reactor
+        Self::serve_threaded(broker, addr)
+    }
+
+    fn serve_threaded(broker: Broker, addr: &str) -> std::io::Result<BrokerServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>> =
-            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let conns2 = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name("broker-accept".into())
@@ -82,7 +160,7 @@ impl BrokerServer {
                                 break;
                             }
                             let broker = broker.clone();
-                            stream.set_nodelay(true).ok();
+                            crate::net::tune_stream(&stream).ok();
                             let conn_id = next_conn;
                             next_conn += 1;
                             if let Ok(clone) = stream.try_clone() {
@@ -112,15 +190,22 @@ impl BrokerServer {
             })?;
         Ok(BrokerServer {
             addr: local,
-            stop,
-            accept_thread: Some(accept_thread),
-            conns,
+            imp: ServerImpl::Threaded(ThreadedParts {
+                stop,
+                accept_thread: Some(accept_thread),
+                conns,
+            }),
         })
     }
 
     /// Stop accepting. Existing connections end when clients disconnect.
-    pub fn shutdown(mut self) {
-        self.stop_accepting();
+    pub fn shutdown(self) {
+        let addr = self.addr;
+        match self.imp {
+            ServerImpl::Threaded(mut t) => t.stop_accepting(addr),
+            #[cfg(target_os = "linux")]
+            ServerImpl::Reactor(h) => h.shutdown(),
+        }
     }
 
     /// Crash the server: stop accepting **and** sever every established
@@ -129,23 +214,26 @@ impl BrokerServer {
     /// Unacked deliveries are requeued into the (now unreachable) broker
     /// by each dying connection's consumer recovery, mirroring what a
     /// real broker process death leaves behind for WAL recovery.
-    pub fn shutdown_hard(mut self) {
-        self.stop_accepting();
-        for (_, stream) in self.conns.lock().unwrap().drain() {
-            stream.shutdown(std::net::Shutdown::Both).ok();
+    pub fn shutdown_hard(self) {
+        let addr = self.addr;
+        match self.imp {
+            ServerImpl::Threaded(mut t) => {
+                t.stop_accepting(addr);
+                t.sever_all();
+            }
+            #[cfg(target_os = "linux")]
+            ServerImpl::Reactor(h) => h.shutdown_hard(),
         }
     }
 
-    fn stop_accepting(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // Wake the blocking accept with a self-connection. Only join if
-        // the wakeup actually connected — otherwise the accept thread may
-        // never observe the flag and join would hang; leaking a parked
-        // thread at shutdown is the lesser evil.
-        if let Some(t) = self.accept_thread.take() {
-            if TcpStream::connect(wake_addr(self.addr)).is_ok() {
-                t.join().ok();
-            }
+    /// Reactor counters when running in reactor mode (`None` when
+    /// threaded). Loadgen and the net-plane tests read these to assert
+    /// bounded buffers and connection accounting.
+    #[cfg(target_os = "linux")]
+    pub fn reactor_stats(&self) -> Option<crate::net::reactor::ReactorStats> {
+        match &self.imp {
+            ServerImpl::Reactor(h) => Some(h.stats()),
+            _ => None,
         }
     }
 }
@@ -153,15 +241,11 @@ impl BrokerServer {
 /// Address to self-connect for the shutdown wakeup: a listener bound to
 /// the unspecified address (0.0.0.0 / ::) is not connectable on every
 /// platform, so substitute the matching loopback.
-pub(crate) fn wake_addr(mut addr: std::net::SocketAddr) -> std::net::SocketAddr {
+pub(crate) fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
     if addr.ip().is_unspecified() {
         match addr {
-            std::net::SocketAddr::V4(_) => {
-                addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
-            }
-            std::net::SocketAddr::V6(_) => {
-                addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
-            }
+            SocketAddr::V4(_) => addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)),
+            SocketAddr::V6(_) => addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)),
         }
     }
     addr
@@ -195,6 +279,158 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
     broker.recover_consumer(consumer);
 }
 
+/// The broker as a reactor [`FrameService`]: one consumer per
+/// connection, blocking fetches replaced by park/retry, publishes
+/// emitting targeted wake hints.
+#[cfg(target_os = "linux")]
+struct BrokerService {
+    broker: Broker,
+    /// conn id → broker consumer id, registered at accept and recovered
+    /// (unacked deliveries requeued) at disconnect.
+    consumers: Mutex<HashMap<u64, u64>>,
+}
+
+#[cfg(target_os = "linux")]
+impl BrokerService {
+    fn consumer(&self, conn: u64) -> u64 {
+        let mut g = self.consumers.lock().unwrap();
+        let broker = &self.broker;
+        *g.entry(conn).or_insert_with(|| broker.register_consumer())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl FrameService for BrokerService {
+    fn on_connect(&self, conn: u64) {
+        let consumer = self.broker.register_consumer();
+        self.consumers.lock().unwrap().insert(conn, consumer);
+    }
+
+    fn on_disconnect(&self, conn: u64) {
+        if let Some(consumer) = self.consumers.lock().unwrap().remove(&conn) {
+            self.broker.recover_consumer(consumer);
+        }
+    }
+
+    fn handle(&self, conn: u64, body: &[u8], last_try: bool) -> ServiceReply {
+        let consumer = self.consumer(conn);
+        if body.first().is_some_and(|b| *b >= 0x80) {
+            let msg = match wire::decode_bin(body) {
+                Ok(m) => m,
+                Err(e) => return reply_bin(BinMsg::Err(e.to_string()), WakeHint::None),
+            };
+            match msg {
+                BinMsg::PopN {
+                    max,
+                    prefetch,
+                    timeout_ms,
+                    queues,
+                } => {
+                    // Never block a pool thread in fetch_n: poll, and
+                    // park the frame when the client asked to wait.
+                    let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+                    let reply =
+                        pop_reply(&self.broker, consumer, max, prefetch, &refs, Duration::ZERO);
+                    let empty = matches!(&reply, BinMsg::Deliveries(items) if items.is_empty());
+                    if empty && timeout_ms > 0 && !last_try {
+                        return ServiceReply::Park {
+                            wait: Duration::from_millis(timeout_ms),
+                            queues,
+                        };
+                    }
+                    reply_bin(reply, WakeHint::None)
+                }
+                BinMsg::EnqueueBatch(blobs) => {
+                    let (reply, touched) = enqueue_blobs(&self.broker, blobs);
+                    let wake = if touched.is_empty() {
+                        WakeHint::None
+                    } else {
+                        WakeHint::Queues(touched)
+                    };
+                    reply_bin(reply, wake)
+                }
+                other => reply_bin(dispatch_bin_msg(&self.broker, consumer, other), WakeHint::None),
+            }
+        } else {
+            let req = match wire::parse_json_body(body) {
+                Ok(r) => r,
+                Err(e) => return reply_json(wire::err(e.to_string()), WakeHint::None),
+            };
+            if req.get("op").as_str() == Some("fetch") {
+                let queues: Vec<String> = req
+                    .get("queues")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                    .unwrap_or_default();
+                let prefetch = req.get("prefetch").as_u64().unwrap_or(0) as usize;
+                let timeout_ms = req.get("timeout_ms").as_u64().unwrap_or(0);
+                let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+                let resp = fetch_reply(&self.broker, consumer, &refs, prefetch, Duration::ZERO);
+                if timeout_ms > 0 && !last_try && resp.get("tag").as_u64().is_none() {
+                    return ServiceReply::Park {
+                        wait: Duration::from_millis(timeout_ms),
+                        queues,
+                    };
+                }
+                return reply_json(resp, WakeHint::None);
+            }
+            let wake = json_wake_hint(&req);
+            reply_json(dispatch(&self.broker, consumer, &req), wake)
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn reply_json(resp: Json, wake: WakeHint) -> ServiceReply {
+    ServiceReply::Reply {
+        frame: crate::util::json::to_string(&resp).into_bytes(),
+        wake,
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn reply_bin(msg: BinMsg, wake: WakeHint) -> ServiceReply {
+    ServiceReply::Reply {
+        frame: wire::encode_bin(&msg),
+        wake,
+    }
+}
+
+/// Which parked fetches a JSON request could satisfy, derived from the
+/// op alone (before dispatch — the hint only names queues, so running it
+/// early costs nothing and keeps dispatch untouched).
+#[cfg(target_os = "linux")]
+fn json_wake_hint(req: &Json) -> WakeHint {
+    match req.get("op").as_str() {
+        Some("publish") => match req.get("task").get("queue").as_str() {
+            Some(q) => WakeHint::Queues(vec![q.to_string()]),
+            None => WakeHint::None,
+        },
+        Some("publish_batch") => {
+            let mut qs: Vec<String> = Vec::new();
+            if let Some(items) = req.get("tasks").as_arr() {
+                for t in items {
+                    if let Some(q) = t.get("queue").as_str() {
+                        if !qs.iter().any(|e| e == q) {
+                            qs.push(q.to_string());
+                        }
+                    }
+                }
+            }
+            if qs.is_empty() {
+                WakeHint::None
+            } else {
+                WakeHint::Queues(qs)
+            }
+        }
+        // Requeues and lease reaps return messages to ready state, but
+        // naming the queues would need broker-side plumbing: wake all
+        // parked fetches and let the retry sort it out (rare ops).
+        Some("nack") | Some("requeue") | Some("reap") => WakeHint::All,
+        _ => WakeHint::None,
+    }
+}
+
 fn broker_err(e: BrokerError) -> Json {
     wire::err(e.to_string())
 }
@@ -216,29 +452,111 @@ fn stats_pairs(st: &QueueStats) -> Vec<(&'static str, Json)> {
     ]
 }
 
-/// Handle one binary batch frame.
-fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
-    let msg = match wire::decode_bin(body) {
-        Ok(m) => m,
-        Err(e) => return BinMsg::Err(e.to_string()),
-    };
-    match msg {
-        BinMsg::EnqueueBatch(blobs) => {
-            // Size accounting uses the v2 blob length — the bytes actually
-            // transmitted — so no re-encode is needed on this hot path.
-            let mut sized = Vec::with_capacity(blobs.len());
-            for blob in blobs {
-                match ser::decode_wire(&blob) {
-                    Ok(t) => sized.push((t, blob.len())),
-                    Err(e) => return BinMsg::Err(format!("bad task: {e}")),
-                }
-            }
-            let n = sized.len() as u64;
-            match broker.publish_batch_sized(sized) {
-                Ok(()) => BinMsg::OkCount(n),
-                Err(e) => BinMsg::Err(e.to_string()),
-            }
+/// One JSON fetch: wait up to `wait` for a delivery, reply `tag: null`
+/// when nothing arrived. The threaded server passes the client's
+/// timeout (blocking its connection thread); the reactor passes zero
+/// and parks the frame instead.
+fn fetch_reply(
+    broker: &Broker,
+    consumer: u64,
+    queues: &[&str],
+    prefetch: usize,
+    wait: Duration,
+) -> Json {
+    match broker.fetch(consumer, queues, prefetch, wait) {
+        Some(d) => wire::ok(vec![
+            ("tag", Json::num(d.tag as f64)),
+            ("task", task_to_json(&d.task)),
+        ]),
+        None => wire::ok(vec![("tag", Json::Null)]),
+    }
+}
+
+/// One binary PopN window: up to `max` deliveries within the reply-frame
+/// byte budget. Same threaded-blocks / reactor-parks split as
+/// [`fetch_reply`].
+fn pop_reply(
+    broker: &Broker,
+    consumer: u64,
+    max: u64,
+    prefetch: u64,
+    queues: &[&str],
+    wait: Duration,
+) -> BinMsg {
+    let got = broker.fetch_n(
+        consumer,
+        queues,
+        prefetch as usize,
+        (max as usize).min(MAX_POP_WINDOW),
+        wait,
+    );
+    // Byte-budgeted reply: MAX_POP_WINDOW alone cannot keep the
+    // frame under wire::MAX_FRAME when individual tasks are
+    // large. Deliveries that would overflow the budget go
+    // straight back to the queue (no retry cost — nothing
+    // failed) for the next PopN.
+    const POP_REPLY_BUDGET: usize = 48 << 20;
+    let mut items = Vec::new();
+    let mut total = 0usize;
+    for d in got {
+        let blob = ser::encode_v2(&d.task);
+        if blob.len() > POP_REPLY_BUDGET {
+            // Not transmittable over this protocol at all (only
+            // possible via an in-process publisher, which skips
+            // the frame cap): dead-letter it so it can't wedge
+            // the connection in a redeliver loop — the
+            // resubmission crawl recovers the samples.
+            broker.nack(d.tag, false).ok();
+            continue;
         }
+        if total + blob.len() > POP_REPLY_BUDGET {
+            broker.requeue(d.tag).ok();
+            continue;
+        }
+        total += blob.len();
+        items.push((d.tag, blob));
+    }
+    BinMsg::Deliveries(items)
+}
+
+/// Decode and publish one batch of v2 task blobs, returning the reply
+/// and the distinct queue names touched (the reactor's wake hint).
+fn enqueue_blobs(broker: &Broker, blobs: Vec<Vec<u8>>) -> (BinMsg, Vec<String>) {
+    // Size accounting uses the v2 blob length — the bytes actually
+    // transmitted — so no re-encode is needed on this hot path.
+    let mut sized = Vec::with_capacity(blobs.len());
+    let mut touched: Vec<String> = Vec::new();
+    for blob in blobs {
+        match ser::decode_wire(&blob) {
+            Ok(t) => {
+                if !touched.iter().any(|q| q == &t.queue) {
+                    touched.push(t.queue.clone());
+                }
+                sized.push((t, blob.len()));
+            }
+            Err(e) => return (BinMsg::Err(format!("bad task: {e}")), Vec::new()),
+        }
+    }
+    let n = sized.len() as u64;
+    match broker.publish_batch_sized(sized) {
+        Ok(()) => (BinMsg::OkCount(n), touched),
+        Err(e) => (BinMsg::Err(e.to_string()), Vec::new()),
+    }
+}
+
+/// Handle one binary batch frame (threaded path: decode + dispatch).
+fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
+    match wire::decode_bin(body) {
+        Ok(m) => dispatch_bin_msg(broker, consumer, m),
+        Err(e) => BinMsg::Err(e.to_string()),
+    }
+}
+
+/// Handle one decoded binary request. PopN blocks up to the client's
+/// timeout — reactor callers special-case PopN before reaching here.
+fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
+    match msg {
+        BinMsg::EnqueueBatch(blobs) => enqueue_blobs(broker, blobs).0,
         BinMsg::AckBatch(tags) => match broker.ack_batch(&tags) {
             Ok(n) => BinMsg::OkCount(n as u64),
             Err(e) => BinMsg::Err(e.to_string()),
@@ -254,40 +572,14 @@ fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
             queues,
         } => {
             let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-            let got = broker.fetch_n(
+            pop_reply(
+                broker,
                 consumer,
+                max,
+                prefetch,
                 &refs,
-                prefetch as usize,
-                (max as usize).min(MAX_POP_WINDOW),
                 Duration::from_millis(timeout_ms),
-            );
-            // Byte-budgeted reply: MAX_POP_WINDOW alone cannot keep the
-            // frame under wire::MAX_FRAME when individual tasks are
-            // large. Deliveries that would overflow the budget go
-            // straight back to the queue (no retry cost — nothing
-            // failed) for the next PopN.
-            const POP_REPLY_BUDGET: usize = 48 << 20;
-            let mut items = Vec::new();
-            let mut total = 0usize;
-            for d in got {
-                let blob = ser::encode_v2(&d.task);
-                if blob.len() > POP_REPLY_BUDGET {
-                    // Not transmittable over this protocol at all (only
-                    // possible via an in-process publisher, which skips
-                    // the frame cap): dead-letter it so it can't wedge
-                    // the connection in a redeliver loop — the
-                    // resubmission crawl recovers the samples.
-                    broker.nack(d.tag, false).ok();
-                    continue;
-                }
-                if total + blob.len() > POP_REPLY_BUDGET {
-                    broker.requeue(d.tag).ok();
-                    continue;
-                }
-                total += blob.len();
-                items.push((d.tag, blob));
-            }
-            BinMsg::Deliveries(items)
+            )
         }
         // Reply ops arriving as requests are protocol errors.
         other => BinMsg::Err(format!("unexpected request {other:?}")),
@@ -337,13 +629,7 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
             let prefetch = req.get("prefetch").as_u64().unwrap_or(0) as usize;
             let timeout = Duration::from_millis(req.get("timeout_ms").as_u64().unwrap_or(0));
             let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-            match broker.fetch(consumer, &refs, prefetch, timeout) {
-                Some(d) => wire::ok(vec![
-                    ("tag", Json::num(d.tag as f64)),
-                    ("task", task_to_json(&d.task)),
-                ]),
-                None => wire::ok(vec![("tag", Json::Null)]),
-            }
+            fetch_reply(broker, consumer, &refs, prefetch, timeout)
         }
         Some("ack") => match req.get("tag").as_u64() {
             Some(tag) => match broker.ack(tag) {
@@ -515,6 +801,40 @@ mod tests {
     }
 
     #[test]
+    fn threaded_mode_roundtrip_and_hard_shutdown() {
+        // The portable fallback stays fully functional when forced, on
+        // every platform — the non-Linux parity anchor.
+        let broker = Broker::default();
+        let server =
+            BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", ServeConfig::threaded())
+                .unwrap();
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("threaded")).unwrap();
+        let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
+        client.ack(d.tag).unwrap();
+        server.shutdown_hard();
+        let err = client.publish(&ping("post")).unwrap_err();
+        assert!(matches!(err, crate::broker::client::ClientError::Wire(_)));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reactor_mode_counts_connections() {
+        let broker = Broker::default();
+        let server =
+            BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", ServeConfig::reactor())
+                .unwrap();
+        assert!(server.reactor_stats().is_some());
+        let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
+        client.publish(&ping("counted")).unwrap();
+        let st = server.reactor_stats().unwrap();
+        assert_eq!(st.accepted, 1);
+        assert_eq!(st.live_conns, 1);
+        assert!(st.frames >= 1, "hello + publish dispatched");
+        server.shutdown_hard();
+    }
+
+    #[test]
     fn disconnect_requeues_unacked() {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
@@ -655,7 +975,7 @@ mod tests {
         server.shutdown();
         assert!(
             t0.elapsed() < Duration::from_secs(1),
-            "self-connect wakeup makes shutdown prompt"
+            "shutdown wakeup (eventfd / self-connect) makes shutdown prompt"
         );
     }
 

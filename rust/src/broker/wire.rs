@@ -106,9 +106,59 @@ pub fn read_frame(r: &mut impl Read) -> Result<Json, WireError> {
     parse_json_body(&body)
 }
 
-fn parse_json_body(body: &[u8]) -> Result<Json, WireError> {
+/// Parse a JSON frame *body* (no length prefix) from a slice. This is the
+/// decode half of [`read_frame`] for callers that accumulate bytes
+/// themselves — the epoll reactor's per-connection state machine — instead
+/// of owning a blocking `Read`.
+pub fn parse_json_body(body: &[u8]) -> Result<Json, WireError> {
     let text = std::str::from_utf8(body).map_err(|e| WireError::BadJson(e.to_string()))?;
     Json::parse(text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+/// Byte length of the frame header (the big-endian body length).
+pub const FRAME_HEADER: usize = 4;
+
+/// Incremental frame decode from an accumulation buffer. If `buf` begins
+/// with a complete frame, returns `Some((consumed, body))` where
+/// `consumed == FRAME_HEADER + body.len()` is the number of bytes the
+/// caller should drain; returns `None` when more bytes are needed (a
+/// partial header or a partial body — never an error). Errors only on a
+/// length prefix exceeding [`MAX_FRAME`], which is unrecoverable: the
+/// stream can no longer be framed and must be closed.
+///
+/// This is the non-blocking analog of [`read_frame_any`]'s framing step;
+/// body classification stays with the caller (leading byte `>= 0x80` is
+/// binary, see [`decode_bin`]; anything else is JSON, see
+/// [`parse_json_body`]).
+pub fn split_frame(buf: &[u8]) -> Result<Option<(usize, &[u8])>, WireError> {
+    if buf.len() < FRAME_HEADER {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let total = FRAME_HEADER + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((total, &buf[FRAME_HEADER..total])))
+}
+
+/// How many more bytes (at least) are needed before the frame at the
+/// front of `buf` is complete; `0` when a full frame (or an oversized
+/// length prefix, which [`split_frame`] will reject) is already present.
+/// The reactor uses this to keep reading past its inbound high-water mark
+/// only while the *current* frame is still incomplete.
+pub fn frame_deficit(buf: &[u8]) -> usize {
+    if buf.len() < FRAME_HEADER {
+        return FRAME_HEADER - buf.len();
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME {
+        return 0;
+    }
+    (FRAME_HEADER + len).saturating_sub(buf.len())
 }
 
 /// A frame body, discriminated by its leading byte.
@@ -502,6 +552,55 @@ mod tests {
         let mut body = encode_bin(&BinMsg::OkCount(1));
         body.push(0);
         assert!(matches!(decode_bin(&body), Err(WireError::BadFrame(_))));
+    }
+
+    #[test]
+    fn split_frame_incremental_reassembly() {
+        // One JSON and one binary frame, presented to split_frame a byte
+        // at a time — the reactor's read-accumulate path in miniature.
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &ok(vec![("tag", Json::num(9.0))])).unwrap();
+        write_frame_bytes(&mut stream, &encode_bin(&BinMsg::OkCount(4))).unwrap();
+        let mut buf = Vec::new();
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        for b in &stream {
+            buf.push(*b);
+            while let Some((consumed, body)) = split_frame(&buf).unwrap() {
+                frames.push(body.to_vec());
+                buf.drain(..consumed);
+            }
+        }
+        assert!(buf.is_empty());
+        assert_eq!(frames.len(), 2);
+        assert_eq!(
+            parse_json_body(&frames[0]).unwrap().get("tag").as_u64(),
+            Some(9)
+        );
+        assert!(frames[1][0] >= 0x80);
+        assert_eq!(decode_bin(&frames[1]).unwrap(), BinMsg::OkCount(4));
+    }
+
+    #[test]
+    fn split_frame_rejects_oversized_prefix() {
+        let mut buf = (u32::MAX).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"xxxx");
+        assert!(matches!(
+            split_frame(&buf),
+            Err(WireError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn frame_deficit_counts_down() {
+        let mut stream = Vec::new();
+        write_frame_bytes(&mut stream, b"hello").unwrap();
+        // Empty buffer: needs a header.
+        assert_eq!(frame_deficit(&[]), FRAME_HEADER);
+        assert_eq!(frame_deficit(&stream[..2]), 2);
+        // Header present: needs the 5-byte body.
+        assert_eq!(frame_deficit(&stream[..4]), 5);
+        assert_eq!(frame_deficit(&stream[..7]), 2);
+        assert_eq!(frame_deficit(&stream), 0);
     }
 
     #[test]

@@ -20,17 +20,30 @@
 //! federated handle is one connection (channel) per member, so the
 //! member count sets the aggregate channel capacity — the federation's
 //! scaling claim in its sharpest client-observable form.
+//!
+//! [`run_connscale`] is the network-plane section (`--connections`): a
+//! ladder of concurrent connections against one broker — most parked in
+//! a server-side long-poll, a few actively fetching — reporting how
+//! many connections each server mode sustains, how many OS threads the
+//! process pays for them, and the active fetch latency under that load.
+//! The reactor's claim is the flat thread line: `O(1 + pool)` threads at
+//! 5,000 connections, where the threaded server pays one thread each.
 
 use std::collections::HashSet;
+use std::io::Write;
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::broker::api::TaskQueue;
+use crate::broker::client::BrokerClient;
 use crate::broker::core::Broker;
 use crate::broker::federation::{FederatedClient, FederationConfig};
 use crate::broker::net::BrokerServer;
+use crate::broker::wire::{self, BinMsg};
 use crate::metrics::series::Series;
+use crate::net::ServeConfig;
 use crate::task::{ControlMsg, Payload, TaskEnvelope};
 use crate::util::json::{to_string, Json};
 use crate::util::rng::Rng;
@@ -636,6 +649,320 @@ pub fn write_outputs(
     Ok(())
 }
 
+/// Connection-scaling section configuration (`--connections`).
+#[derive(Debug, Clone)]
+pub struct ConnScaleConfig {
+    /// Ladder of total concurrent connections per rung.
+    pub connections: Vec<usize>,
+    /// Actively-fetching worker connections per rung (the rest sit in a
+    /// server-side long-poll park, like a real worker fleet between
+    /// release waves).
+    pub active: usize,
+    /// Total fetch round trips measured per rung (split across the
+    /// active workers).
+    pub probes: usize,
+    /// Reactor blocking-pool size.
+    pub net_threads: usize,
+}
+
+impl Default for ConnScaleConfig {
+    fn default() -> Self {
+        Self {
+            connections: vec![64, 512, 2048, 5000],
+            active: 8,
+            probes: 2_000,
+            net_threads: 4,
+        }
+    }
+}
+
+impl ConnScaleConfig {
+    /// Shrink the ladder to seconds (CI's `MERLIN_BENCH_QUICK=1`).
+    pub fn quicken(&mut self) {
+        self.connections = vec![64, 256];
+        self.probes = self.probes.min(400);
+    }
+}
+
+/// One rung of the connection-scaling ladder.
+#[derive(Debug, Clone)]
+pub struct ConnScaleRung {
+    /// Server mode the rung ran against (`reactor` / `threaded`).
+    pub mode: String,
+    /// Connections the rung asked for.
+    pub requested: usize,
+    /// Connections actually established and held for the measurement
+    /// (may fall short of `requested` under fd-limit pressure; the rung
+    /// reports instead of failing).
+    pub connected: usize,
+    /// Server-side live-connection count at peak (reactor stats; equals
+    /// `connected` + 0 when threaded, which has no counter).
+    pub server_live: usize,
+    /// OS threads in this process at peak (`/proc/self/status`; 0 where
+    /// unavailable). The reactor's headline: flat in `connected`.
+    pub process_threads: u64,
+    /// Fetch round trips measured.
+    pub fetches: usize,
+    /// Active-worker fetch round-trip latency percentiles (µs).
+    pub fetch_p50_us: f64,
+    /// See [`ConnScaleRung::fetch_p50_us`].
+    pub fetch_p99_us: f64,
+}
+
+/// OS thread count of this process (Linux `/proc`; 0 elsewhere).
+fn process_threads() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:"))
+                .and_then(|v| v.trim().parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// How long parked idle connections ask the broker to hold their fetch.
+/// Long enough to outlive the rung's measurement window, so every idle
+/// connection stays parked (reactor) or thread-pinned (threaded) while
+/// the active workers are probed.
+const IDLE_PARK_MS: u64 = 30_000;
+
+/// Drive one rung: a broker in `mode`, `requested` connections total
+/// (`cfg.active` of them fetching a stocked queue, the rest parked in a
+/// long-poll on an empty queue), measuring fetch round-trip latency and
+/// the process thread count at peak.
+fn run_connscale_rung(
+    mode: ServeConfig,
+    mode_name: &str,
+    requested: usize,
+    cfg: &ConnScaleConfig,
+) -> ConnScaleRung {
+    let mut serve_cfg = mode;
+    serve_cfg.net_threads = cfg.net_threads;
+    serve_cfg.max_connections = requested + 64;
+    let server = BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", serve_cfg)
+        .expect("bind connscale broker");
+    let addr = server.addr.to_string();
+
+    // Stock the hot queue so every probe fetch returns a delivery.
+    let active = cfg.active.max(1).min(requested.max(1));
+    let probes = cfg.probes.max(active);
+    {
+        let mut feeder = BrokerClient::connect(&addr).expect("connect feeder");
+        let batch: Vec<TaskEnvelope> = (0..probes)
+            .map(|i| {
+                TaskEnvelope::new(
+                    "cs.hot",
+                    Payload::Control(ControlMsg::Ping {
+                        token: format!("cs{i}"),
+                    }),
+                )
+            })
+            .collect();
+        feeder.publish_batch(&batch).expect("stock hot queue");
+    }
+
+    // Idle fleet: raw sockets, each sending one binary PopN long-poll on
+    // an empty queue. No client threads — the whole point is that the
+    // *server* must hold N connections, not that this process can spawn
+    // N threads to drive them.
+    let park_frame = {
+        let body = wire::encode_bin(&BinMsg::PopN {
+            max: 1,
+            prefetch: 0,
+            timeout_ms: IDLE_PARK_MS,
+            queues: vec!["cs.idle".into()],
+        });
+        let mut f = Vec::with_capacity(4 + body.len());
+        f.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        f.extend_from_slice(&body);
+        f
+    };
+    let idle_target = requested.saturating_sub(active);
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(idle_target);
+    for _ in 0..idle_target {
+        match TcpStream::connect(&addr) {
+            Ok(mut s) => {
+                crate::net::tune_stream(&s).ok();
+                if s.write_all(&park_frame).is_err() {
+                    break;
+                }
+                idle.push(s);
+            }
+            // fd limit or backlog pressure: hold what we got and report.
+            Err(_) => break,
+        }
+    }
+
+    // Active workers: real clients hammering the stocked queue.
+    let lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(probes)));
+    let mut handles = Vec::new();
+    for w in 0..active {
+        let addr = addr.clone();
+        let lat = lat.clone();
+        let share = probes / active + usize::from(w < probes % active);
+        handles.push(std::thread::spawn(move || {
+            let mut c = BrokerClient::connect(&addr).expect("connect worker");
+            for _ in 0..share {
+                let t0 = Instant::now();
+                match c.fetch(&["cs.hot"], 0, 2_000) {
+                    Ok(Some(d)) => {
+                        let us = t0.elapsed().as_micros() as f64;
+                        c.ack(d.tag).ok();
+                        lat.lock().unwrap().push(us);
+                    }
+                    _ => break,
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("connscale worker panicked");
+    }
+
+    // Peak snapshot: threads + server-side connection accounting while
+    // the idle fleet is still parked.
+    let threads = process_threads();
+    #[cfg(target_os = "linux")]
+    let server_live = server
+        .reactor_stats()
+        .map(|s| s.live_conns)
+        .unwrap_or(idle.len());
+    #[cfg(not(target_os = "linux"))]
+    let server_live = idle.len();
+    let connected = idle.len() + active;
+
+    let samples = lat.lock().unwrap();
+    let rung = ConnScaleRung {
+        mode: mode_name.to_string(),
+        requested,
+        connected,
+        server_live,
+        process_threads: threads,
+        fetches: samples.len(),
+        fetch_p50_us: percentile(&samples, 50.0),
+        fetch_p99_us: percentile(&samples, 99.0),
+    };
+    drop(samples);
+    drop(idle);
+    // Hard shutdown: parked long-polls would otherwise pin threaded
+    // connection threads (and the reactor's drain) for up to the park
+    // timeout.
+    server.shutdown_hard();
+    rung
+}
+
+/// The connection-scaling ladder. On Linux: every requested rung against
+/// the reactor, then one low-concurrency threaded rung (capped at 64
+/// connections — each costs an OS thread) as the latency baseline the
+/// reactor's p99 is gated against. Elsewhere: threaded rungs only,
+/// capped the same way.
+pub fn run_connscale(cfg: &ConnScaleConfig) -> Vec<ConnScaleRung> {
+    assert!(!cfg.connections.is_empty(), "empty --connections ladder");
+    let mut rungs = Vec::new();
+    let low = cfg.connections.iter().copied().min().unwrap_or(64).min(64);
+    if crate::net::reactor_available() {
+        for &n in &cfg.connections {
+            rungs.push(run_connscale_rung(ServeConfig::reactor(), "reactor", n, cfg));
+        }
+        // Threaded comparison last: its detached, park-pinned connection
+        // threads linger up to the park timeout and would pollute the
+        // thread counts of any rung measured after it.
+        rungs.push(run_connscale_rung(ServeConfig::threaded(), "threaded", low, cfg));
+    } else {
+        for &n in &cfg.connections {
+            rungs.push(run_connscale_rung(ServeConfig::threaded(), "threaded", n.min(512), cfg));
+        }
+        rungs.push(run_connscale_rung(ServeConfig::threaded(), "threaded", low, cfg));
+    }
+    rungs
+}
+
+/// Render the connection-scaling section as an aligned table.
+pub fn connscale_series(rungs: &[ConnScaleRung]) -> Series {
+    let mut s = Series::new(
+        "network plane: connections vs threads & fetch latency",
+        "requested",
+        &[
+            "connected",
+            "server_live",
+            "threads",
+            "fetch_p50_us",
+            "fetch_p99_us",
+        ],
+    );
+    for r in rungs {
+        s.push(
+            r.requested as f64,
+            vec![
+                r.connected as f64,
+                r.server_live as f64,
+                r.process_threads as f64,
+                r.fetch_p50_us,
+                r.fetch_p99_us,
+            ],
+        );
+    }
+    s
+}
+
+/// One rung as a JSON object (`BENCH_connscale.json` data points).
+pub fn connscale_rung_json(r: &ConnScaleRung) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(&r.mode)),
+        ("requested", Json::num(r.requested as f64)),
+        ("connected", Json::num(r.connected as f64)),
+        ("server_live", Json::num(r.server_live as f64)),
+        ("process_threads", Json::num(r.process_threads as f64)),
+        ("fetches", Json::num(r.fetches as f64)),
+        ("fetch_p50_us", Json::num(r.fetch_p50_us)),
+        ("fetch_p99_us", Json::num(r.fetch_p99_us)),
+    ])
+}
+
+/// Human-readable connscale summary.
+pub fn render_connscale(rungs: &[ConnScaleRung]) -> String {
+    let mut out = String::from("connection scaling (parked long-polls + active fetchers):\n");
+    for r in rungs {
+        out.push_str(&format!(
+            "  {:>8} x{:>5}: {:>5} connected ({} live server-side), {:>3} threads, \
+             fetch p50/p99 {:.0}/{:.0} us over {} probes\n",
+            r.mode,
+            r.requested,
+            r.connected,
+            r.server_live,
+            r.process_threads,
+            r.fetch_p50_us,
+            r.fetch_p99_us,
+            r.fetches,
+        ));
+    }
+    out
+}
+
+/// Write `results/<stem>.{csv,json}` plus `BENCH_connscale.json` — the
+/// network plane's machine-checked perf trajectory point.
+pub fn write_connscale_outputs(
+    rungs: &[ConnScaleRung],
+    quick: bool,
+    stem: &str,
+) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    connscale_series(rungs).save_csv(dir, stem)?;
+    let out = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        (
+            "reactor_available",
+            Json::Bool(crate::net::reactor_available()),
+        ),
+        ("rungs", Json::arr(rungs.iter().map(connscale_rung_json).collect())),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.json")), to_string(&out))?;
+    std::fs::write("BENCH_connscale.json", to_string(&out))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -686,6 +1013,34 @@ mod tests {
         assert_eq!(r.lost, 0);
         assert!(r.failovers.is_empty());
         assert!(r.enqueue_per_s > 0.0 && r.deliver_per_s > 0.0);
+    }
+
+    #[test]
+    fn connscale_tiny_ladder_reports_rungs() {
+        let cfg = ConnScaleConfig {
+            connections: vec![12],
+            active: 4,
+            probes: 60,
+            net_threads: 2,
+        };
+        let rungs = run_connscale(&cfg);
+        assert!(rungs.len() >= 2, "ladder rung + threaded baseline");
+        for r in &rungs {
+            assert_eq!(r.requested, 12);
+            assert_eq!(r.connected, 12, "{r:?}");
+            assert_eq!(r.fetches, 60, "{r:?}");
+            assert!(r.fetch_p50_us > 0.0 && r.fetch_p99_us >= r.fetch_p50_us);
+        }
+        #[cfg(target_os = "linux")]
+        {
+            let reactor = rungs.iter().find(|r| r.mode == "reactor").expect("reactor rung");
+            assert!(rungs.iter().any(|r| r.mode == "threaded"));
+            assert!(
+                reactor.server_live >= 12,
+                "parked + active conns all live server-side: {reactor:?}"
+            );
+            assert!(reactor.process_threads > 0, "thread count readable");
+        }
     }
 
     #[test]

@@ -51,6 +51,12 @@
 //!   [`coordinator::loadgen`] is the `merlin loadgen` stress harness
 //!   over an in-process broker federation (throughput, latency
 //!   percentiles, member-scaling section, chaos kill)
+//! * [`net`] — the event-driven network plane: a std-only epoll reactor
+//!   (Linux) multiplexing every broker/backend connection through one
+//!   event thread plus a small blocking pool, with the original
+//!   thread-per-connection servers as the portable fallback
+//!   ([`net::ServeConfig`] selects; see DESIGN.md "Event-Driven Network
+//!   Plane")
 //! * [`metrics`] — instrumentation for the paper's performance figures
 //! * [`baseline`] — comparator implementations (flat enqueue, fs
 //!   polling, and the seed's single-mutex broker core for fig3)
@@ -78,6 +84,7 @@ pub mod flux;
 pub mod hierarchy;
 #[allow(missing_docs)]
 pub mod metrics;
+pub mod net;
 #[allow(missing_docs)]
 pub mod runtime;
 #[allow(missing_docs)]

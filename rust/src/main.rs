@@ -100,11 +100,19 @@ USAGE:
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
                       [--fsync always|never|interval:MS] [--snapshot-every N]
-                      [--lease-ms N]
+                      [--lease-ms N] [--net auto|threaded|reactor]
+                      [--max-connections N] [--idle-timeout-ms N]
+                      [--net-threads N]
       Run the standalone RabbitMQ-analog server. With --wal-dir the
       broker is durable: queue state is write-ahead logged + snapshotted
       under DIR and recovered on restart (see docs/OPERATIONS.md). With
       --lease-ms every consumer gets a default visibility timeout.
+      --net picks the server implementation: the std-only epoll reactor
+      (Linux; the default where available — thread count stays O(1 +
+      --net-threads) at any connection count) or the portable
+      thread-per-connection fallback. --max-connections caps the fd
+      table and --idle-timeout-ms sweeps silent connections (reactor
+      mode; see docs/OPERATIONS.md "Network plane tuning").
       Federation members are plain serve-broker processes — start N of
       them and list all N addresses on every producer/worker/status call.
 
@@ -116,7 +124,8 @@ USAGE:
   merlin loadgen [--members N] [--producers N] [--workers N] [--steps N]
                  [--tasks N] [--batch N] [--zipf S] [--payload-min N]
                  [--payload-max N] [--lease-ms N] [--kill-at FRAC]
-                 [--scale] [--quick] [--seed N]
+                 [--scale] [--connections N1,N2,...] [--net-threads N]
+                 [--quick] [--seed N]
       Open-loop stress harness: spin up N federated broker members
       in-process (real TCP + wire v2/v3) and drive them with producers x
       workers over S step queues. Reports throughput and enqueue /
@@ -127,13 +136,24 @@ USAGE:
       fixed channel budget) and writes BENCH_federation.json; it fails
       if 4 members do not reach 2x the 1-member aggregate throughput
       (full mode; --quick smoke runs never fail on the ratio).
+      --connections runs the network-plane section instead: a ladder of
+      concurrent connections against one broker (most parked in a
+      server-side long-poll, 8 actively fetching), reporting connections
+      sustained, process threads, and fetch p50/p99 per rung, writing
+      BENCH_connscale.json. Full mode fails if the reactor drops
+      connections at the top rung or its low-concurrency p99 regresses
+      past 1.5x the threaded baseline measured in the same run.
 
   merlin serve-backend [--addr 127.0.0.1:7778] [--features-dir DIR]
                        [--features-shards N] [--fsync always|never|interval:MS]
+                       [--net auto|threaded|reactor] [--max-connections N]
+                       [--idle-timeout-ms N] [--net-threads N]
       Run the standalone Redis-analog server. With --features-dir the
       server also hosts the result plane: workers' `record_results`
       batches are persisted as a crash-safe columnar feature store under
-      DIR (exportable later with `merlin export --store DIR`).
+      DIR (exportable later with `merlin export --store DIR`). --net and
+      friends select and tune the server implementation exactly as for
+      serve-broker.
 
   merlin hierarchy --samples N [--branch B] [--samples-per-task S]
       Print the task-generation hierarchy plan (Fig 2).
@@ -172,6 +192,26 @@ fn flag_f64(args: &[String], name: &str, default: f64) -> f64 {
 
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+/// Network-plane server flags shared by `serve-broker` and
+/// `serve-backend` (`--net`, `--max-connections`, `--idle-timeout-ms`,
+/// `--net-threads`).
+fn serve_config_from_flags(args: &[String]) -> Result<merlin::net::ServeConfig, i32> {
+    let mut cfg = merlin::net::ServeConfig::default();
+    if let Some(m) = flag(args, "--net") {
+        match merlin::net::NetMode::parse(&m) {
+            Some(mode) => cfg.mode = mode,
+            None => {
+                eprintln!("bad --net {m:?} (auto | threaded | reactor)");
+                return Err(2);
+            }
+        }
+    }
+    cfg.max_connections = flag_u64(args, "--max-connections", cfg.max_connections as u64) as usize;
+    cfg.idle_timeout_ms = flag_u64(args, "--idle-timeout-ms", cfg.idle_timeout_ms);
+    cfg.net_threads = flag_u64(args, "--net-threads", cfg.net_threads as u64) as usize;
+    Ok(cfg)
 }
 
 /// A distributed worker's result row: status + timing (the CLI worker
@@ -829,6 +869,10 @@ fn tcp_worker_loop(
 
 fn cmd_serve_broker(args: &[String]) -> i32 {
     let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7777".into());
+    let net_cfg = match serve_config_from_flags(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
     let cfg = merlin::broker::BrokerConfig {
         default_lease_ms: flag_u64(args, "--lease-ms", 0),
         ..Default::default()
@@ -863,9 +907,14 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
         }
         None => Broker::new(cfg),
     };
-    match BrokerServer::serve(broker, &addr) {
+    let mode = if net_cfg.use_reactor().unwrap_or(false) {
+        "reactor"
+    } else {
+        "threaded"
+    };
+    match BrokerServer::serve_with(broker, &addr, net_cfg) {
         Ok(server) => {
-            println!("broker listening on {}", server.addr);
+            println!("broker listening on {} ({mode} mode)", server.addr);
             loop {
                 std::thread::sleep(Duration::from_secs(3600));
             }
@@ -879,6 +928,10 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
 
 fn cmd_serve_backend(args: &[String]) -> i32 {
     let addr = flag(args, "--addr").unwrap_or_else(|| "127.0.0.1:7778".into());
+    let net_cfg = match serve_config_from_flags(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
     let results = match flag(args, "--features-dir") {
         Some(dir) => {
             let shards = flag_u64(args, "--features-shards", 4) as usize;
@@ -909,9 +962,19 @@ fn cmd_serve_backend(args: &[String]) -> i32 {
         }
         None => None,
     };
-    match merlin::backend::net::BackendServer::serve_with_results(Store::new(), results, &addr) {
+    let mode = if net_cfg.use_reactor().unwrap_or(false) {
+        "reactor"
+    } else {
+        "threaded"
+    };
+    match merlin::backend::net::BackendServer::serve_with_config(
+        Store::new(),
+        results,
+        &addr,
+        net_cfg,
+    ) {
         Ok(server) => {
-            println!("backend listening on {}", server.addr);
+            println!("backend listening on {} ({mode} mode)", server.addr);
             loop {
                 std::thread::sleep(Duration::from_secs(3600));
             }
@@ -975,6 +1038,59 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     let quick = has_flag(args, "--quick") || merlin::util::bench_quick();
     if quick {
         cfg.quicken();
+    }
+    if let Some(ladder) = flag(args, "--connections") {
+        let connections: Vec<usize> = ladder
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|n| *n > 0)
+            .collect();
+        if connections.is_empty() {
+            eprintln!("bad --connections {ladder:?} (expect N1,N2,...)");
+            return 2;
+        }
+        let mut ccfg = loadgen::ConnScaleConfig::default();
+        if quick {
+            ccfg.quicken();
+        }
+        // An explicit ladder always wins over quicken()'s default one.
+        ccfg.connections = connections;
+        ccfg.net_threads = flag_u64(args, "--net-threads", ccfg.net_threads as u64) as usize;
+        println!(
+            "loadgen connection-scaling section: ladder {:?}, {} active fetchers, {} probes/rung\n",
+            ccfg.connections, ccfg.active, ccfg.probes
+        );
+        let rungs = loadgen::run_connscale(&ccfg);
+        print!("{}", loadgen::render_connscale(&rungs));
+        println!("\n{}", loadgen::connscale_series(&rungs).table());
+        if let Err(e) = loadgen::write_connscale_outputs(&rungs, quick, "loadgen_connscale") {
+            eprintln!("write results: {e}");
+        }
+        // Full-mode acceptance gates (quick smoke runs only report):
+        // the reactor must hold every connection at the top rung, and
+        // its low-concurrency p99 must stay near the threaded baseline.
+        if !quick && merlin::net::reactor_available() {
+            let reactor: Vec<_> = rungs.iter().filter(|r| r.mode == "reactor").collect();
+            let top = reactor.iter().max_by_key(|r| r.requested).expect("reactor rung");
+            if top.connected < top.requested {
+                eprintln!(
+                    "FAIL: reactor held {}/{} connections at the top rung",
+                    top.connected, top.requested
+                );
+                return 1;
+            }
+            let low = reactor.iter().min_by_key(|r| r.requested).expect("reactor rung");
+            if let Some(base) = rungs.iter().find(|r| r.mode == "threaded") {
+                if low.fetch_p99_us > base.fetch_p99_us * 1.5 {
+                    eprintln!(
+                        "FAIL: reactor p99 at {} conns is {:.0}us vs threaded {:.0}us (>1.5x)",
+                        low.requested, low.fetch_p99_us, base.fetch_p99_us
+                    );
+                    return 1;
+                }
+            }
+        }
+        return 0;
     }
     if has_flag(args, "--scale") {
         println!(

@@ -1,0 +1,331 @@
+//! Per-connection state machine for the epoll reactor.
+//!
+//! Each accepted socket owns two persistent buffers and a tiny amount of
+//! bookkeeping; the reactor drives it through a fixed readiness cycle:
+//!
+//! ```text
+//! read-accumulate -> frame-decode -> dispatch (blocking pool) ->
+//!     write-buffer drain -> back to read
+//! ```
+//!
+//! Buffers are reused across frames (capacity is retained, with a
+//! shrink guard after oversized bursts) so the steady-state hot path
+//! performs no per-frame buffer allocations. Backpressure is two-sided:
+//!
+//! * **Inbound** — reading pauses once `inbuf` holds a complete frame
+//!   *and* exceeds the high-water mark; TCP flow control then pushes
+//!   back on the client. The current frame is always read to
+//!   completion, so a single large frame (up to `MAX_FRAME`) never
+//!   deadlocks against the mark.
+//! * **Outbound** — the reactor dispatches at most one frame per
+//!   connection at a time and refuses to start the next until the
+//!   write buffer has drained below the resume threshold, so a slow
+//!   reader bounds its own buffer at roughly one in-flight reply.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::broker::wire;
+
+/// Bytes appended to `inbuf` per `read` call (minimum).
+const READ_CHUNK: usize = 16 << 10;
+/// Largest single `read` request, even mid-jumbo-frame.
+const MAX_READ_CHUNK: usize = 256 << 10;
+/// Shrink a drained buffer whose capacity ballooned past this...
+const BUF_SHRINK_AT: usize = 4 << 20;
+/// ...back down to this, keeping steady-state reuse allocation-free.
+const BUF_SHRINK_TO: usize = 64 << 10;
+
+/// A frame held server-side because its queues were empty (long-poll
+/// fetch). The reactor retries it — on a targeted wakeup, on a
+/// backoff tick, and finally at `deadline` with `last_try` set.
+pub(crate) struct Parked {
+    /// The original request frame body.
+    pub body: Vec<u8>,
+    /// Queues the request is waiting on (wake filter).
+    pub queues: Vec<String>,
+    /// When the client-requested wait expires.
+    pub deadline: Instant,
+    /// Next scheduled blind retry.
+    pub next_retry: Instant,
+}
+
+/// State for one accepted connection.
+pub(crate) struct Conn {
+    /// The non-blocking socket.
+    pub stream: TcpStream,
+    /// Read-accumulation buffer; frames are split off its front.
+    pub inbuf: Vec<u8>,
+    /// Pending response bytes (length prefixes included).
+    outbuf: Vec<u8>,
+    /// How much of `outbuf` has already been written.
+    outpos: usize,
+    /// One frame is on the blocking pool; replies must stay in request
+    /// order, so no further frame is dispatched until it completes.
+    pub busy: bool,
+    /// Long-poll frame waiting for queue readiness.
+    pub parked: Option<Parked>,
+    /// First park deadline, pinned across park/retry cycles so retries
+    /// never extend the client's requested wait.
+    pub park_deadline: Option<Instant>,
+    /// Current blind-retry backoff interval.
+    pub park_interval: Duration,
+    /// Peer sent FIN (`EPOLLRDHUP` / zero-length read).
+    pub peer_closed: bool,
+    /// Connection is condemned; torn down once no job is in flight.
+    pub dead: bool,
+    /// Queued for a pump pass this reactor iteration.
+    pub dirty: bool,
+    /// Last socket event or reply, for the idle sweep.
+    pub last_activity: Instant,
+    /// Currently registered epoll read interest.
+    pub want_in: bool,
+    /// Currently registered epoll write interest.
+    pub want_out: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, now: Instant, park_interval: Duration) -> Self {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            busy: false,
+            parked: None,
+            park_deadline: None,
+            park_interval,
+            peer_closed: false,
+            dead: false,
+            dirty: false,
+            last_activity: now,
+            want_in: true,
+            want_out: false,
+        }
+    }
+
+    /// Unsent response bytes.
+    pub fn pending_out(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+
+    /// A complete frame is sitting at the front of `inbuf`.
+    pub fn frame_ready(&self) -> bool {
+        !self.inbuf.is_empty() && wire::frame_deficit(&self.inbuf) == 0
+    }
+
+    /// Whether the reactor should keep `EPOLLIN` armed: always, until
+    /// the buffer is over the high-water mark *and* already holds a
+    /// complete frame (an incomplete frame must keep reading or it
+    /// would never finish).
+    pub fn wants_read(&self, high_water: usize) -> bool {
+        !self.peer_closed
+            && !self.dead
+            && (self.inbuf.len() < high_water || wire::frame_deficit(&self.inbuf) > 0)
+    }
+
+    /// Read until `WouldBlock`, EOF, or the inbound pause condition.
+    /// Returns bytes read; EOF sets `peer_closed` instead of erroring.
+    pub fn fill(&mut self, high_water: usize) -> std::io::Result<usize> {
+        let mut total = 0usize;
+        while self.wants_read(high_water) {
+            let len = self.inbuf.len();
+            let deficit = wire::frame_deficit(&self.inbuf);
+            let grow = deficit.clamp(READ_CHUNK, MAX_READ_CHUNK);
+            self.inbuf.resize(len + grow, 0);
+            match self.stream.read(&mut self.inbuf[len..]) {
+                Ok(0) => {
+                    self.inbuf.truncate(len);
+                    self.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.truncate(len + n);
+                    total += n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    self.inbuf.truncate(len);
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    self.inbuf.truncate(len);
+                }
+                Err(e) => {
+                    self.inbuf.truncate(len);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(total)
+    }
+
+    /// Move the frame at the front of `inbuf`, if complete, into
+    /// `scratch` (cleared first; its capacity is the reuse pool's).
+    /// `Ok(false)` means more bytes are needed; `Err` poisons the
+    /// stream (oversized length prefix) and the caller must close.
+    pub fn take_frame(&mut self, scratch: &mut Vec<u8>) -> Result<bool, wire::WireError> {
+        match wire::split_frame(&self.inbuf)? {
+            Some((consumed, body)) => {
+                scratch.clear();
+                scratch.extend_from_slice(body);
+                self.inbuf.drain(..consumed);
+                if self.inbuf.capacity() > BUF_SHRINK_AT && self.inbuf.len() < BUF_SHRINK_TO {
+                    self.inbuf.shrink_to(BUF_SHRINK_TO);
+                }
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Append one response frame (header + body) to the write buffer.
+    pub fn queue_reply(&mut self, body: &[u8]) {
+        self.outbuf
+            .extend_from_slice(&(body.len() as u32).to_be_bytes());
+        self.outbuf.extend_from_slice(body);
+    }
+
+    /// Write as much of `outbuf` as the socket accepts. `Ok(true)` when
+    /// fully drained (buffer is reset for reuse), `Ok(false)` on
+    /// `WouldBlock` with bytes remaining.
+    pub fn flush(&mut self) -> std::io::Result<bool> {
+        while self.outpos < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.outpos..]) {
+                Ok(0) => {
+                    return Err(std::io::ErrorKind::WriteZero.into());
+                }
+                Ok(n) => self.outpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.outbuf.clear();
+        self.outpos = 0;
+        if self.outbuf.capacity() > BUF_SHRINK_AT {
+            self.outbuf.shrink_to(BUF_SHRINK_TO);
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A connected non-blocking socket pair over loopback.
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, server)
+    }
+
+    fn conn(server: TcpStream) -> Conn {
+        Conn::new(server, Instant::now(), Duration::from_millis(25))
+    }
+
+    #[test]
+    fn fill_and_take_frame_across_split_writes() {
+        let (mut client, server) = pair();
+        let mut c = conn(server);
+        let mut frame = Vec::new();
+        wire::write_frame_bytes(&mut frame, b"hello world").unwrap();
+        // Dribble the frame in two halves with a poll between them.
+        client.write_all(&frame[..5]).unwrap();
+        client.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.inbuf.len() < 5 && Instant::now() < deadline {
+            c.fill(1 << 20).unwrap();
+        }
+        let mut scratch = Vec::new();
+        assert!(!c.take_frame(&mut scratch).unwrap(), "frame incomplete");
+        client.write_all(&frame[5..]).unwrap();
+        client.flush().unwrap();
+        while !c.frame_ready() && Instant::now() < deadline {
+            c.fill(1 << 20).unwrap();
+        }
+        assert!(c.take_frame(&mut scratch).unwrap());
+        assert_eq!(scratch, b"hello world");
+        assert!(c.inbuf.is_empty());
+    }
+
+    #[test]
+    fn inbound_pause_waits_for_complete_frame() {
+        let (mut client, server) = pair();
+        let mut c = conn(server);
+        // A frame bigger than the high-water mark must still be read to
+        // completion: wants_read stays true while the frame is short.
+        let body = vec![0xB3u8; 64 << 10];
+        let mut frame = Vec::new();
+        wire::write_frame_bytes(&mut frame, &body).unwrap();
+        client.write_all(&frame).unwrap();
+        client.flush().unwrap();
+        let hw = 1024; // absurdly low high-water mark
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !c.frame_ready() && Instant::now() < deadline {
+            c.fill(hw).unwrap();
+        }
+        assert!(c.frame_ready());
+        // Now that a complete frame is buffered past the mark, reading
+        // pauses until it is consumed.
+        assert!(!c.wants_read(hw));
+        let mut scratch = Vec::new();
+        assert!(c.take_frame(&mut scratch).unwrap());
+        assert_eq!(scratch.len(), body.len());
+        assert!(c.wants_read(hw));
+    }
+
+    #[test]
+    fn flush_reports_wouldblock_then_drains() {
+        let (client, server) = pair();
+        let mut c = conn(server);
+        // Queue far more than the kernel buffers will take at once.
+        let chunk = vec![7u8; 256 << 10];
+        for _ in 0..64 {
+            c.queue_reply(&chunk);
+        }
+        let queued = c.pending_out();
+        assert!(queued > 8 << 20);
+        assert!(!c.flush().unwrap(), "peer is not reading yet");
+        assert!(c.pending_out() < queued, "some bytes must have moved");
+        // Drain on the client side until the server can finish.
+        let mut sink = client;
+        sink.set_nonblocking(false).unwrap();
+        sink.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut devnull = vec![0u8; 1 << 20];
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match sink.read(&mut devnull) {
+                Ok(0) => panic!("server closed unexpectedly"),
+                Ok(_) => {}
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(e) => panic!("client read: {e}"),
+            }
+            if c.flush().unwrap() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "flush never completed");
+        }
+        assert_eq!(c.pending_out(), 0);
+    }
+
+    #[test]
+    fn eof_sets_peer_closed() {
+        let (client, server) = pair();
+        let mut c = conn(server);
+        drop(client);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !c.peer_closed && Instant::now() < deadline {
+            c.fill(1 << 20).unwrap();
+        }
+        assert!(c.peer_closed);
+        assert!(!c.wants_read(1 << 20));
+    }
+}

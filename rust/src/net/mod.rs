@@ -1,0 +1,247 @@
+//! The event-driven network plane.
+//!
+//! Every TCP surface in the system (broker, backend) can run in one of
+//! two server modes:
+//!
+//! * **Threaded** — the original portable servers: one OS thread per
+//!   accepted connection, blocking reads. Simple, works everywhere, and
+//!   caps a process at a few hundred workers before thread stacks and
+//!   scheduler pressure dominate.
+//! * **Reactor** — a std-only epoll event loop ([`reactor`], Linux only):
+//!   one reactor thread multiplexes every connection through
+//!   non-blocking sockets and per-connection state machines
+//!   ([`conn`]), and a small fixed blocking pool absorbs the
+//!   CPU/fsync-bound work (WAL appends, feature-store flushes, fetch
+//!   dispatch). Thread count is `O(1 + pool)`, not `O(connections)` —
+//!   the prerequisite for the paper's "tens of thousands of concurrent
+//!   simulations" regime.
+//!
+//! [`ServeConfig`] selects the mode; the default ([`NetMode::Auto`])
+//! picks the reactor on Linux and the threaded fallback elsewhere, so
+//! portable callers never have to care. See DESIGN.md "Event-Driven
+//! Network Plane" for the readiness state machine, the blocking-pool
+//! handoff rules, and the backpressure invariants.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod conn;
+#[cfg(target_os = "linux")]
+pub mod reactor;
+
+/// Which server implementation a TCP endpoint runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetMode {
+    /// Reactor where available (Linux), threaded fallback elsewhere.
+    Auto,
+    /// Force the portable thread-per-connection servers.
+    Threaded,
+    /// Force the epoll reactor; serving fails on platforms without it.
+    Reactor,
+}
+
+impl NetMode {
+    /// Parse a CLI `--net` value.
+    pub fn parse(s: &str) -> Option<NetMode> {
+        match s {
+            "auto" => Some(NetMode::Auto),
+            "threaded" => Some(NetMode::Threaded),
+            "reactor" => Some(NetMode::Reactor),
+            _ => None,
+        }
+    }
+
+    /// The mode's CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            NetMode::Auto => "auto",
+            NetMode::Threaded => "threaded",
+            NetMode::Reactor => "reactor",
+        }
+    }
+}
+
+/// Whether the epoll reactor is compiled into this build.
+pub fn reactor_available() -> bool {
+    cfg!(target_os = "linux")
+}
+
+/// Server-mode and resource-guard configuration shared by
+/// `BrokerServer` and `BackendServer`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Server implementation to use.
+    pub mode: NetMode,
+    /// Accepted-connection cap; connections beyond it are refused at
+    /// accept time (reactor mode only — the threaded servers predate
+    /// the guard and keep their historical unbounded behavior).
+    pub max_connections: usize,
+    /// Close connections with no traffic for this long; 0 disables the
+    /// sweep (reactor mode only). A connection parked in a server-side
+    /// long-poll wait counts as active.
+    pub idle_timeout_ms: u64,
+    /// Size of the reactor's blocking pool — the threads that run
+    /// dispatch, WAL appends, and feature-store flushes.
+    pub net_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            mode: NetMode::Auto,
+            max_connections: 16_384,
+            idle_timeout_ms: 0,
+            net_threads: 4,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// A config forcing the portable threaded servers.
+    pub fn threaded() -> Self {
+        ServeConfig {
+            mode: NetMode::Threaded,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// A config forcing the epoll reactor.
+    pub fn reactor() -> Self {
+        ServeConfig {
+            mode: NetMode::Reactor,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Resolve [`NetMode::Auto`] against the platform: `Ok(true)` to run
+    /// the reactor, `Ok(false)` for the threaded fallback, `Err` when a
+    /// forced mode is unavailable on this platform.
+    pub fn use_reactor(&self) -> std::io::Result<bool> {
+        match self.mode {
+            NetMode::Auto => Ok(reactor_available()),
+            NetMode::Threaded => Ok(false),
+            NetMode::Reactor if reactor_available() => Ok(true),
+            NetMode::Reactor => Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "reactor mode requires Linux epoll; use --net threaded",
+            )),
+        }
+    }
+
+    /// Lower this config onto the reactor's own knob set.
+    #[cfg(target_os = "linux")]
+    pub(crate) fn reactor_config(&self) -> reactor::ReactorConfig {
+        reactor::ReactorConfig {
+            max_connections: self.max_connections,
+            idle_timeout: self.idle_timeout(),
+            blocking_threads: self.net_threads.max(1),
+            ..reactor::ReactorConfig::default()
+        }
+    }
+
+    /// Idle timeout as a `Duration`, `None` when disabled.
+    pub fn idle_timeout(&self) -> Option<Duration> {
+        if self.idle_timeout_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(self.idle_timeout_ms))
+        }
+    }
+}
+
+/// Socket options every Merlin TCP stream wants, applied on both the
+/// connect and the accept side. One shared helper so the broker and
+/// backend clients can't drift apart again (the backend client shipped
+/// without `TCP_NODELAY` once — every `record_results` batch ate a
+/// Nagle delay).
+pub fn tune_stream(stream: &TcpStream) -> std::io::Result<()> {
+    // Request/response protocol: each flush should hit the wire now,
+    // not wait 40 ms for Nagle/delayed-ACK interaction.
+    stream.set_nodelay(true)
+}
+
+/// How a completed frame changes queue readiness — the reactor uses
+/// this to wake connections parked in a server-side long-poll wait
+/// (see [`ServiceReply::Park`]) without polling them.
+#[derive(Debug)]
+pub enum WakeHint {
+    /// Nothing became ready (queries, acks, empty replies).
+    None,
+    /// These queues may have gained messages (publishes).
+    Queues(Vec<String>),
+    /// Readiness may have changed anywhere (requeue/nack/reap — the
+    /// affected queues aren't cheap to name).
+    All,
+}
+
+/// A service's verdict on one request frame.
+#[derive(Debug)]
+pub enum ServiceReply {
+    /// Respond with this frame body (length prefix added by the
+    /// reactor).
+    Reply {
+        /// Response frame body.
+        frame: Vec<u8>,
+        /// Wake hint for parked long-poll waiters.
+        wake: WakeHint,
+    },
+    /// Nothing to deliver yet: hold the frame and retry it until `wait`
+    /// has elapsed (long-poll fetch with an empty queue). The service
+    /// must produce a `Reply` when retried with `last_try == true`.
+    Park {
+        /// Remaining server-side wait requested by the client.
+        wait: Duration,
+        /// Queues the frame is waiting on, for targeted wakeups.
+        queues: Vec<String>,
+    },
+}
+
+/// One frame-dispatching protocol endpoint (broker, backend) as seen by
+/// the reactor. Implementations must be fully thread-safe: `handle` runs
+/// on blocking-pool threads, potentially concurrently for *different*
+/// connections (frames of one connection are strictly serialized).
+pub trait FrameService: Send + Sync + 'static {
+    /// A connection was accepted (`conn` ids are unique per server).
+    fn on_connect(&self, conn: u64);
+    /// A connection closed; runs after its last `handle` has returned.
+    fn on_disconnect(&self, conn: u64);
+    /// Process one request frame body and produce a reply. `last_try`
+    /// is true when a parked frame reached its deadline — the service
+    /// must answer (typically with an empty result), not park again.
+    fn handle(&self, conn: u64, body: &[u8], last_try: bool) -> ServiceReply;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [NetMode::Auto, NetMode::Threaded, NetMode::Reactor] {
+            assert_eq!(NetMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(NetMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn auto_mode_matches_platform() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.use_reactor().unwrap(), reactor_available());
+        assert!(!ServeConfig::threaded().use_reactor().unwrap());
+        let forced = ServeConfig::reactor();
+        if reactor_available() {
+            assert!(forced.use_reactor().unwrap());
+        } else {
+            assert!(forced.use_reactor().is_err());
+        }
+    }
+
+    #[test]
+    fn idle_timeout_zero_disables() {
+        let mut cfg = ServeConfig::default();
+        assert!(cfg.idle_timeout().is_none());
+        cfg.idle_timeout_ms = 250;
+        assert_eq!(cfg.idle_timeout(), Some(Duration::from_millis(250)));
+    }
+}

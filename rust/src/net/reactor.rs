@@ -1,0 +1,874 @@
+//! A std-only epoll reactor (Linux).
+//!
+//! Zero dependencies: the four syscalls the loop needs —
+//! `epoll_create1`, `epoll_ctl`, `epoll_wait`, `eventfd` — are declared
+//! as in-tree FFI prototypes (std already links libc on every Linux
+//! target), wrapped in `OwnedFd` so descriptor lifetimes stay RAII.
+//!
+//! One reactor thread owns the listener, the epoll set, and every
+//! connection's state machine ([`super::conn::Conn`]). It never blocks
+//! on anything but `epoll_wait`: request dispatch — including WAL
+//! appends, feature-store fsyncs, and snapshot work — runs on a small
+//! fixed blocking pool, with frame bodies moved out to the pool and
+//! buffer capacity moved back on completion (no per-frame buffer
+//! allocation in steady state). Completions return through a shared
+//! vector plus an eventfd wakeup — the same eventfd that replaces the
+//! old "self-connect to your own listener" shutdown hack: a shutdown is
+//! now one atomic store and one 8-byte write, with no dependency on
+//! the listener still being routable.
+//!
+//! Long-poll fetches never hold a pool thread: a service that has
+//! nothing to deliver returns [`ServiceReply::Park`] and the reactor
+//! holds the frame, retrying it on targeted wakeups (a publish names
+//! the queues it touched), on an exponential-backoff blind tick (for
+//! work published outside this server, e.g. an in-process broker
+//! handle), and finally at the client's deadline with `last_try` set.
+//!
+//! Total thread count is `1 + blocking_threads`, independent of the
+//! number of connections — the property the connection-scaling bench
+//! (`merlin loadgen --connections ...`) measures.
+
+use std::collections::{HashMap, HashSet};
+use std::fs::File;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::os::raw::c_int;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::conn::{Conn, Parked};
+use super::{FrameService, ServiceReply, WakeHint};
+
+/// In-tree prototypes for the epoll/eventfd syscall surface. Constants
+/// mirror `<sys/epoll.h>` / `<sys/eventfd.h>` for every Linux target
+/// this crate supports.
+mod sys {
+    use std::os::raw::{c_int, c_uint};
+
+    /// `struct epoll_event`. On x86-64 the kernel ABI packs it.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    }
+}
+
+/// RAII epoll instance.
+struct Epoll {
+    fd: OwnedFd,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Epoll> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Epoll {
+            fd: unsafe { OwnedFd::from_raw_fd(fd) },
+        })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data };
+        let rc = unsafe { sys::epoll_ctl(self.fd.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            Err(std::io::Error::last_os_error())
+        } else {
+            Ok(())
+        }
+    }
+
+    fn add(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, data)
+    }
+
+    fn modify(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, data)
+    }
+
+    fn del(&self, fd: RawFd) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: c_int) -> std::io::Result<usize> {
+        loop {
+            let rc = unsafe {
+                sys::epoll_wait(
+                    self.fd.as_raw_fd(),
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+fn new_eventfd() -> std::io::Result<File> {
+    let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+    if fd < 0 {
+        return Err(std::io::Error::last_os_error());
+    }
+    Ok(File::from(unsafe { OwnedFd::from_raw_fd(fd) }))
+}
+
+/// epoll token for the listener.
+const TOK_LISTENER: u64 = u64::MAX;
+/// epoll token for the wakeup eventfd.
+const TOK_WAKE: u64 = u64::MAX - 1;
+
+const STOP_RUN: u8 = 0;
+const STOP_GRACEFUL: u8 = 1;
+const STOP_HARD: u8 = 2;
+
+/// Reuse-pool bounds: keep at most this many scratch buffers...
+const BUFPOOL_MAX: usize = 64;
+/// ...and never retain one whose capacity ballooned past this.
+const BUFPOOL_CAP: usize = 4 << 20;
+
+/// Reactor tuning. `ServeConfig` maps onto this; tests construct it
+/// directly to pin specific thresholds.
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// Accept cap: connections past it are closed immediately.
+    pub max_connections: usize,
+    /// Close connections idle for this long (`None` = never).
+    pub idle_timeout: Option<Duration>,
+    /// Blocking-pool size (min 1).
+    pub blocking_threads: usize,
+    /// Initial blind-retry interval for parked long-poll frames.
+    pub park_retry: Duration,
+    /// Blind-retry backoff cap.
+    pub park_retry_cap: Duration,
+    /// Inbound buffer high-water mark (reading pauses past it once a
+    /// complete frame is buffered).
+    pub in_high_water: usize,
+    /// Dispatch the next pipelined frame only once the write buffer has
+    /// drained below this.
+    pub out_resume: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            max_connections: 16_384,
+            idle_timeout: None,
+            blocking_threads: 4,
+            park_retry: Duration::from_millis(25),
+            park_retry_cap: Duration::from_millis(250),
+            in_high_water: 1 << 20,
+            out_resume: 1 << 20,
+        }
+    }
+}
+
+/// A point-in-time snapshot of reactor counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReactorStats {
+    /// Currently open connections.
+    pub live_conns: usize,
+    /// Connections accepted over the server's lifetime.
+    pub accepted: u64,
+    /// Connections refused by the max-connections guard.
+    pub rejected: u64,
+    /// Request frames dispatched.
+    pub frames: u64,
+    /// Largest write-buffer backlog ever observed on one connection.
+    pub max_outbuf: usize,
+    /// Connections closed by the idle sweep.
+    pub idle_closed: u64,
+}
+
+#[derive(Default)]
+struct StatCells {
+    live_conns: AtomicUsize,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    frames: AtomicU64,
+    max_outbuf: AtomicUsize,
+    idle_closed: AtomicU64,
+}
+
+struct Job {
+    conn: u64,
+    body: Vec<u8>,
+    last_try: bool,
+}
+
+enum Outcome {
+    Reply {
+        frame: Vec<u8>,
+        wake: WakeHint,
+        body: Vec<u8>,
+    },
+    Park {
+        body: Vec<u8>,
+        wait: Duration,
+        queues: Vec<String>,
+    },
+}
+
+struct Completion {
+    conn: u64,
+    outcome: Outcome,
+}
+
+/// FIFO handed to the blocking pool.
+struct JobQueue {
+    q: Mutex<(std::collections::VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            q: Mutex::new((std::collections::VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut g = self.q.lock().unwrap();
+        g.0.push_back(job);
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(job) = g.0.pop_front() {
+                return Some(job);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn stop(&self) {
+        self.q.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// State shared between the reactor thread, the blocking pool, and
+/// every [`ReactorHandle`].
+struct Shared {
+    stop: AtomicU8,
+    wake: File,
+    completions: Mutex<Vec<Completion>>,
+    stats: StatCells,
+}
+
+impl Shared {
+    fn wake_reactor(&self) {
+        // Failure modes (counter saturated, fd closing during teardown)
+        // all mean "a wakeup is already pending or moot".
+        let _ = (&self.wake).write(&1u64.to_ne_bytes());
+    }
+}
+
+/// Handle to a running reactor server.
+pub struct ReactorHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    /// The bound listen address.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot the reactor's counters.
+    pub fn stats(&self) -> ReactorStats {
+        let s = &self.shared.stats;
+        ReactorStats {
+            live_conns: s.live_conns.load(Ordering::Relaxed),
+            accepted: s.accepted.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            frames: s.frames.load(Ordering::Relaxed),
+            max_outbuf: s.max_outbuf.load(Ordering::Relaxed),
+            idle_closed: s.idle_closed.load(Ordering::Relaxed),
+        }
+    }
+
+    fn signal(&self, level: u8) {
+        self.shared.stop.fetch_max(level, Ordering::SeqCst);
+        self.shared.wake_reactor();
+    }
+
+    /// Graceful shutdown: stop accepting, keep serving established
+    /// connections; the reactor thread exits on its own once the last
+    /// one closes (it is detached here, exactly as the threaded
+    /// servers detach their per-connection threads).
+    pub fn shutdown(mut self) {
+        self.signal(STOP_GRACEFUL);
+        drop(self.thread.take());
+    }
+
+    /// Hard shutdown: sever every established connection and join the
+    /// reactor. All fds are closed by the time this returns.
+    pub fn shutdown_hard(mut self) {
+        self.signal(STOP_HARD);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ReactorHandle {
+    fn drop(&mut self) {
+        if self.thread.is_some() {
+            self.signal(STOP_GRACEFUL);
+        }
+    }
+}
+
+/// Start a reactor serving `service` on `listener`. Spawns one reactor
+/// thread plus `cfg.blocking_threads` pool threads; returns once the
+/// epoll set is live.
+pub fn serve(
+    listener: TcpListener,
+    service: Arc<dyn FrameService>,
+    cfg: ReactorConfig,
+) -> std::io::Result<ReactorHandle> {
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let ep = Epoll::new()?;
+    let wake = new_eventfd()?;
+    ep.add(listener.as_raw_fd(), sys::EPOLLIN, TOK_LISTENER)?;
+    ep.add(wake.as_raw_fd(), sys::EPOLLIN, TOK_WAKE)?;
+    let shared = Arc::new(Shared {
+        stop: AtomicU8::new(STOP_RUN),
+        wake,
+        completions: Mutex::new(Vec::new()),
+        stats: StatCells::default(),
+    });
+    let jobs = Arc::new(JobQueue::new());
+    let mut pool = Vec::new();
+    for i in 0..cfg.blocking_threads.max(1) {
+        let (jobs, service, shared) = (jobs.clone(), service.clone(), shared.clone());
+        let t = std::thread::Builder::new()
+            .name(format!("net-pool-{i}"))
+            .spawn(move || pool_loop(&jobs, &*service, &shared))?;
+        pool.push(t);
+    }
+    let reactor = Reactor {
+        ep,
+        listener: Some(listener),
+        service,
+        cfg,
+        shared: shared.clone(),
+        jobs: jobs.clone(),
+        conns: HashMap::new(),
+        next_id: 1,
+        bufpool: Vec::new(),
+        dirty: Vec::new(),
+        parked_count: 0,
+        woke_all: false,
+        woke_queues: HashSet::new(),
+        next_idle_sweep: Instant::now(),
+        accept_paused_until: None,
+    };
+    let thread = std::thread::Builder::new()
+        .name("net-reactor".into())
+        .spawn(move || reactor.run(pool))?;
+    Ok(ReactorHandle {
+        addr,
+        shared,
+        thread: Some(thread),
+    })
+}
+
+fn pool_loop(jobs: &JobQueue, service: &dyn FrameService, shared: &Shared) {
+    while let Some(job) = jobs.pop() {
+        let outcome = match service.handle(job.conn, &job.body, job.last_try) {
+            ServiceReply::Reply { frame, wake } => Outcome::Reply {
+                frame,
+                wake,
+                body: job.body,
+            },
+            ServiceReply::Park { wait, queues } => Outcome::Park {
+                body: job.body,
+                wait,
+                queues,
+            },
+        };
+        shared.completions.lock().unwrap().push(Completion {
+            conn: job.conn,
+            outcome,
+        });
+        shared.wake_reactor();
+    }
+}
+
+struct Reactor {
+    ep: Epoll,
+    listener: Option<TcpListener>,
+    service: Arc<dyn FrameService>,
+    cfg: ReactorConfig,
+    shared: Arc<Shared>,
+    jobs: Arc<JobQueue>,
+    conns: HashMap<u64, Conn>,
+    next_id: u64,
+    /// Scratch-buffer reuse pool: frame bodies move out to the blocking
+    /// pool and their capacity moves back here on completion.
+    bufpool: Vec<Vec<u8>>,
+    /// Connections needing a pump pass this iteration.
+    dirty: Vec<u64>,
+    parked_count: usize,
+    /// Wake hints accumulated from this iteration's completions.
+    woke_all: bool,
+    woke_queues: HashSet<String>,
+    next_idle_sweep: Instant,
+    accept_paused_until: Option<Instant>,
+}
+
+impl Reactor {
+    fn run(mut self, pool: Vec<JoinHandle<()>>) {
+        let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 512];
+        loop {
+            let timeout = self.poll_timeout(Instant::now());
+            let n = match self.ep.wait(&mut events, timeout) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            let now = Instant::now();
+            for i in 0..n {
+                let ev = events[i];
+                match ev.data {
+                    TOK_WAKE => self.drain_wakefd(),
+                    TOK_LISTENER => self.accept_ready(now),
+                    id => self.conn_event(id, ev.events, now),
+                }
+            }
+            self.drain_completions(now);
+            self.pump_dirty(now);
+            self.run_timers(now);
+            match self.shared.stop.load(Ordering::SeqCst) {
+                STOP_HARD => break,
+                STOP_GRACEFUL => {
+                    if let Some(l) = self.listener.take() {
+                        let _ = self.ep.del(l.as_raw_fd());
+                    }
+                    if self.conns.is_empty() {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Stop the pool first so no handle() runs concurrently with the
+        // disconnect callbacks below (a fetch completing after its
+        // consumer was recovered would strand deliveries).
+        self.jobs.stop();
+        for t in pool {
+            let _ = t.join();
+        }
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            self.teardown(id);
+        }
+    }
+
+    /// Milliseconds until the nearest timer, or -1 to sleep until an
+    /// event. Rounded up so timers never fire a hair early and spin.
+    fn poll_timeout(&self, now: Instant) -> c_int {
+        let mut next: Option<Instant> = None;
+        let bump = |t: Instant, next: &mut Option<Instant>| match *next {
+            Some(c) if c <= t => {}
+            _ => *next = Some(t),
+        };
+        if self.parked_count > 0 {
+            for c in self.conns.values() {
+                if let Some(p) = &c.parked {
+                    bump(p.next_retry.min(p.deadline), &mut next);
+                }
+            }
+        }
+        if self.cfg.idle_timeout.is_some() && !self.conns.is_empty() {
+            bump(self.next_idle_sweep, &mut next);
+        }
+        if let Some(t) = self.accept_paused_until {
+            bump(t, &mut next);
+        }
+        match next {
+            None => -1,
+            Some(t) => {
+                let ms = t.saturating_duration_since(now).as_millis();
+                (ms.min(60_000) as c_int).saturating_add(1)
+            }
+        }
+    }
+
+    fn drain_wakefd(&mut self) {
+        let mut buf = [0u8; 8];
+        let _ = (&self.shared.wake).read(&mut buf);
+    }
+
+    fn accept_ready(&mut self, now: Instant) {
+        if self.accept_paused_until.is_some() || self.listener.is_none() {
+            return;
+        }
+        loop {
+            let res = self.listener.as_ref().unwrap().accept();
+            match res {
+                Ok((stream, _)) => {
+                    if self.conns.len() >= self.cfg.max_connections {
+                        self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        drop(stream);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = super::tune_stream(&stream);
+                    let id = self.next_id;
+                    self.next_id += 1;
+                    if self
+                        .ep
+                        .add(stream.as_raw_fd(), sys::EPOLLIN | sys::EPOLLRDHUP, id)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns
+                        .insert(id, Conn::new(stream, now, self.cfg.park_retry));
+                    self.shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    self.shared
+                        .stats
+                        .live_conns
+                        .store(self.conns.len(), Ordering::Relaxed);
+                    self.service.on_connect(id);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // EMFILE and friends: pause accepting briefly instead
+                    // of spinning on a level-triggered ready listener.
+                    self.accept_paused_until = Some(now + Duration::from_millis(50));
+                    if let Some(l) = &self.listener {
+                        let _ = self.ep.del(l.as_raw_fd());
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, id: u64, mask: u32, now: Instant) {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        conn.last_activity = now;
+        if mask & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            conn.dead = true;
+        } else {
+            if mask & sys::EPOLLRDHUP != 0 {
+                conn.peer_closed = true;
+            }
+            if mask & sys::EPOLLIN != 0 && conn.fill(self.cfg.in_high_water).is_err() {
+                conn.dead = true;
+            }
+            if mask & sys::EPOLLOUT != 0 && !conn.dead && conn.flush().is_err() {
+                conn.dead = true;
+            }
+        }
+        self.mark_dirty(id);
+    }
+
+    fn mark_dirty(&mut self, id: u64) {
+        if let Some(c) = self.conns.get_mut(&id) {
+            if !c.dirty {
+                c.dirty = true;
+                self.dirty.push(id);
+            }
+        }
+    }
+
+    fn recycle(&mut self, mut buf: Vec<u8>) {
+        if self.bufpool.len() < BUFPOOL_MAX && buf.capacity() <= BUFPOOL_CAP {
+            buf.clear();
+            self.bufpool.push(buf);
+        }
+    }
+
+    fn drain_completions(&mut self, now: Instant) {
+        let batch = std::mem::take(&mut *self.shared.completions.lock().unwrap());
+        for Completion { conn: id, outcome } in batch {
+            match outcome {
+                Outcome::Reply { frame, wake, body } => {
+                    self.recycle(body);
+                    match wake {
+                        WakeHint::None => {}
+                        WakeHint::All => self.woke_all = true,
+                        WakeHint::Queues(qs) => self.woke_queues.extend(qs),
+                    }
+                    if let Some(conn) = self.conns.get_mut(&id) {
+                        conn.busy = false;
+                        conn.park_deadline = None;
+                        conn.park_interval = self.cfg.park_retry;
+                        conn.last_activity = now;
+                        if !conn.dead {
+                            conn.queue_reply(&frame);
+                            let backlog = conn.pending_out();
+                            self.shared
+                                .stats
+                                .max_outbuf
+                                .fetch_max(backlog, Ordering::Relaxed);
+                        }
+                        self.mark_dirty(id);
+                    }
+                    self.recycle(frame);
+                }
+                Outcome::Park { body, wait, queues } => {
+                    let Some(conn) = self.conns.get_mut(&id) else {
+                        self.recycle(body);
+                        continue;
+                    };
+                    conn.busy = false;
+                    if conn.dead || conn.peer_closed {
+                        self.recycle(body);
+                    } else {
+                        // Pin the deadline at first park; retries keep it.
+                        let deadline = *conn.park_deadline.get_or_insert_with(|| {
+                            now.checked_add(wait)
+                                .unwrap_or(now + Duration::from_secs(86_400))
+                        });
+                        // Exponential backoff on blind retries, so a
+                        // fleet of idle long-pollers costs O(conns) pool
+                        // jobs per park_retry_cap, not per park_retry.
+                        let interval = conn.park_interval;
+                        conn.park_interval = (interval * 2).min(self.cfg.park_retry_cap);
+                        conn.parked = Some(Parked {
+                            body,
+                            queues,
+                            deadline,
+                            next_retry: (now + interval).min(deadline),
+                        });
+                        self.parked_count += 1;
+                    }
+                    self.mark_dirty(id);
+                }
+            }
+        }
+    }
+
+    fn pump_dirty(&mut self, now: Instant) {
+        let mut i = 0;
+        while i < self.dirty.len() {
+            let id = self.dirty[i];
+            i += 1;
+            self.pump_one(id, now);
+        }
+        self.dirty.clear();
+    }
+
+    fn pump_one(&mut self, id: u64, _now: Instant) {
+        let mut submit: Option<Vec<u8>> = None;
+        let mut close = false;
+        {
+            let Some(conn) = self.conns.get_mut(&id) else {
+                return;
+            };
+            conn.dirty = false;
+            if !conn.dead && conn.pending_out() > 0 && conn.flush().is_err() {
+                conn.dead = true;
+            }
+            if !conn.dead
+                && !conn.busy
+                && conn.parked.is_none()
+                && conn.pending_out() < self.cfg.out_resume
+            {
+                let mut buf = self.bufpool.pop().unwrap_or_default();
+                match conn.take_frame(&mut buf) {
+                    Ok(true) => {
+                        conn.busy = true;
+                        submit = Some(buf);
+                    }
+                    Ok(false) => self.bufpool.push(buf),
+                    Err(_) => {
+                        conn.dead = true;
+                        self.bufpool.push(buf);
+                    }
+                }
+            }
+            if !conn.dead
+                && conn.peer_closed
+                && !conn.busy
+                && submit.is_none()
+                && conn.pending_out() == 0
+                && !conn.frame_ready()
+            {
+                // FIN received, nothing buffered in either direction
+                // (a parked long-poll has no one left to answer).
+                conn.dead = true;
+            }
+            if conn.dead {
+                // A busy connection defers teardown to its completion.
+                close = !conn.busy;
+            } else {
+                let want_in = conn.wants_read(self.cfg.in_high_water);
+                let want_out = conn.pending_out() > 0;
+                if want_in != conn.want_in || want_out != conn.want_out {
+                    conn.want_in = want_in;
+                    conn.want_out = want_out;
+                    let mut mask = sys::EPOLLRDHUP;
+                    if want_in {
+                        mask |= sys::EPOLLIN;
+                    }
+                    if want_out {
+                        mask |= sys::EPOLLOUT;
+                    }
+                    if self.ep.modify(conn.stream.as_raw_fd(), mask, id).is_err() {
+                        conn.dead = true;
+                        close = !conn.busy;
+                    }
+                }
+            }
+        }
+        if let Some(body) = submit {
+            self.shared.stats.frames.fetch_add(1, Ordering::Relaxed);
+            self.jobs.push(Job {
+                conn: id,
+                body,
+                last_try: false,
+            });
+        }
+        if close {
+            self.teardown(id);
+        }
+    }
+
+    fn run_timers(&mut self, now: Instant) {
+        // Parked long-poll frames: targeted wakeups, blind backoff
+        // retries, and final deadline tries.
+        if self.parked_count > 0 {
+            let woke_all = self.woke_all;
+            let woke_queues = std::mem::take(&mut self.woke_queues);
+            let mut due: Vec<(u64, bool)> = Vec::new();
+            for (id, c) in &self.conns {
+                if c.busy || c.dead {
+                    continue;
+                }
+                if let Some(p) = &c.parked {
+                    let last = now >= p.deadline;
+                    let woken = woke_all
+                        || (!woke_queues.is_empty()
+                            && p.queues.iter().any(|q| woke_queues.contains(q)));
+                    if last || woken || now >= p.next_retry {
+                        due.push((*id, last));
+                    }
+                }
+            }
+            for (id, last) in due {
+                let Some(conn) = self.conns.get_mut(&id) else {
+                    continue;
+                };
+                let Some(p) = conn.parked.take() else {
+                    continue;
+                };
+                self.parked_count -= 1;
+                conn.busy = true;
+                self.jobs.push(Job {
+                    conn: id,
+                    body: p.body,
+                    last_try: last,
+                });
+            }
+        }
+        self.woke_all = false;
+        self.woke_queues.clear();
+        // Idle sweep.
+        if let Some(idle) = self.cfg.idle_timeout {
+            if now >= self.next_idle_sweep {
+                let tick = (idle / 4).max(Duration::from_millis(10));
+                self.next_idle_sweep = now + tick;
+                let stale: Vec<u64> = self
+                    .conns
+                    .iter()
+                    .filter(|(_, c)| {
+                        !c.busy
+                            && c.parked.is_none()
+                            && c.pending_out() == 0
+                            && now.duration_since(c.last_activity) >= idle
+                    })
+                    .map(|(id, _)| *id)
+                    .collect();
+                for id in stale {
+                    self.shared.stats.idle_closed.fetch_add(1, Ordering::Relaxed);
+                    self.teardown(id);
+                }
+            }
+        }
+        // Re-arm a paused accept loop.
+        if let Some(t) = self.accept_paused_until {
+            if now >= t {
+                self.accept_paused_until = None;
+                if let Some(l) = &self.listener {
+                    let _ = self.ep.add(l.as_raw_fd(), sys::EPOLLIN, TOK_LISTENER);
+                }
+            }
+        }
+    }
+
+    fn teardown(&mut self, id: u64) {
+        if let Some(conn) = self.conns.remove(&id) {
+            if let Some(p) = conn.parked {
+                self.parked_count -= 1;
+                self.recycle(p.body);
+            }
+            let _ = self.ep.del(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            drop(conn.stream);
+            self.shared
+                .stats
+                .live_conns
+                .store(self.conns.len(), Ordering::Relaxed);
+            self.service.on_disconnect(id);
+        }
+    }
+}

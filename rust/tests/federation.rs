@@ -23,18 +23,28 @@ use merlin::task::{ControlMsg, Payload, StepTemplate, TaskEnvelope, WorkSpec};
 use merlin::util::clock::RealClock;
 use merlin::worker::{run_pool_on, NullSimRunner, WorkerConfig};
 
-fn serve_members(n: usize) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+fn serve_members_with(
+    n: usize,
+    cfg: &merlin::net::ServeConfig,
+) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
     let mut brokers = Vec::new();
     let mut servers = Vec::new();
     let mut addrs = Vec::new();
     for _ in 0..n {
         let broker = Broker::default();
-        let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
+        let server =
+            BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", cfg.clone()).unwrap();
         addrs.push(server.addr.to_string());
         brokers.push(broker);
         servers.push(server);
     }
     (brokers, servers, addrs)
+}
+
+/// Default server mode: reactor on Linux, threaded elsewhere — so the
+/// whole file doubles as reactor integration coverage where available.
+fn serve_members(n: usize) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+    serve_members_with(n, &merlin::net::ServeConfig::default())
 }
 
 fn sim_template(study: &str) -> StepTemplate {
@@ -388,4 +398,121 @@ fn federated_status_aggregates_tcp_members() {
     for server in servers {
         server.shutdown();
     }
+}
+
+/// The wire-level assertions both server modes must pass identically:
+/// batch publish, status aggregation, windowed fetch + batch ack,
+/// long-poll wakeup, recovery ranges, lease expiry via a second handle,
+/// and hard-shutdown down-marking. Invoked once per mode below — the
+/// threaded-vs-reactor parity suite.
+fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
+    let (_brokers, servers, addrs) = serve_members_with(2, &cfg);
+    let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+
+    // Batch publish over six queues; aggregated status must see it all.
+    let mut tasks = Vec::new();
+    for q in 0..6 {
+        tasks.push(TaskEnvelope::new(
+            format!("m.step{q}"),
+            Payload::Control(ControlMsg::Ping {
+                token: format!("{q}"),
+            }),
+        ));
+    }
+    fed.publish_batch(tasks).unwrap();
+    assert_eq!(fed.depth(), 6);
+    assert_eq!(fed.totals().published, 6);
+    assert_eq!(fed.queue_names().len(), 6);
+    assert!(fed.member_health().iter().all(|m| m.up));
+
+    // Windowed multi-queue fetch with batched ack.
+    let consumer = fed.register_consumer();
+    let queues: Vec<String> = (0..6).map(|q| format!("m.step{q}")).collect();
+    let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+    let got = fed.fetch_n(consumer, &refs, 0, 6, Duration::from_millis(2_000));
+    assert_eq!(got.len(), 6, "whole corpus in one windowed fetch");
+    let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+    assert_eq!(fed.ack_batch(&tags).unwrap(), 6);
+    assert_eq!(fed.depth(), 0);
+
+    // Long-poll fetch waits for a late publisher instead of returning
+    // empty — the park/wake path in reactor mode, a blocked connection
+    // thread in threaded mode.
+    let late = {
+        let pub_fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            pub_fed
+                .publish_batch(vec![TaskEnvelope::new(
+                    "m.step0",
+                    Payload::Control(ControlMsg::Ping {
+                        token: "late".into(),
+                    }),
+                )])
+                .unwrap();
+        })
+    };
+    let t0 = Instant::now();
+    let got = fed.fetch_n(consumer, &["m.step0"], 0, 1, Duration::from_secs(5));
+    late.join().unwrap();
+    assert_eq!(got.len(), 1, "long-poll picked up the late publish");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "delivered on wake, not at deadline"
+    );
+    fed.ack(got[0].tag).unwrap();
+
+    // Recovery ranges flow over the wire.
+    let template = sim_template("parity");
+    fed.publish_batch(wave_tasks(&template, "m.sim", &[3, 4, 5]))
+        .unwrap();
+    assert_eq!(
+        fed.queued_step_samples("m.sim", "parity", "sim"),
+        vec![(3, 6)]
+    );
+
+    // Lease expiry via a second handle: redelivery without retry cost.
+    let silent = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let c = silent.register_consumer();
+    silent.set_consumer_lease(c, Some(Duration::from_millis(80)));
+    let held = silent.fetch_n(c, &["m.sim"], 0, 1, Duration::from_millis(500));
+    assert_eq!(held.len(), 1);
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(fed.reap_expired(), 1, "expired lease reaped via the other handle");
+    let back = fed.fetch_n(consumer, &["m.sim"], 0, 3, Duration::from_millis(500));
+    assert_eq!(back.len(), 3, "expired delivery redelivered with the rest");
+    assert!(
+        back.iter()
+            .all(|d| d.task.retries_left == held[0].task.retries_left),
+        "lease expiry consumes no retry"
+    );
+    let back_tags: Vec<u64> = back.iter().map(|d| d.tag).collect();
+    fed.ack_batch(&back_tags).unwrap();
+
+    // Hard shutdown severs established connections; after down_after
+    // consecutive transport errors the member is down-marked.
+    let mut servers = servers;
+    servers.remove(0).shutdown_hard();
+    for _ in 0..4 {
+        let _ = fed.depth();
+    }
+    let health = fed.member_health();
+    assert!(
+        health.iter().any(|m| !m.up),
+        "hard-killed member must be down-marked: {health:?}"
+    );
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+#[test]
+fn wire_parity_threaded_mode() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded());
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_reactor_mode() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor());
 }

@@ -1,0 +1,291 @@
+//! Event-driven network plane integration: the reactor-specific
+//! behaviors that threaded-vs-reactor parity (tests/federation.rs)
+//! cannot see — partial-frame reassembly, write-side backpressure
+//! bounds, the idle sweep, the max-connections guard, park/wake
+//! long-polling, and fd hygiene across hard shutdown.
+//!
+//! The raw-socket helpers speak the frame protocol directly (4-byte BE
+//! length + body) so tests control exactly how bytes hit the wire.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+#[cfg(target_os = "linux")]
+use std::time::Instant;
+
+#[cfg(target_os = "linux")]
+use merlin::broker::client::BrokerClient;
+use merlin::broker::core::Broker;
+use merlin::broker::net::BrokerServer;
+#[cfg(target_os = "linux")]
+use merlin::net::ServeConfig;
+#[cfg(target_os = "linux")]
+use merlin::task::{ControlMsg, Payload, TaskEnvelope};
+
+/// Length-prefix `body` into one wire frame.
+fn frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Read one complete reply frame body off a raw socket.
+fn read_reply(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let mut body = vec![0u8; u32::from_be_bytes(len) as usize];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(target_os = "linux")]
+fn ping(queue: &str, token: String) -> TaskEnvelope {
+    TaskEnvelope::new(queue, Payload::Control(ControlMsg::Ping { token }))
+}
+
+/// A frame delivered one byte at a time must reassemble identically to
+/// one delivered whole, and two frames coalesced into a single write
+/// must both dispatch. Runs against the default mode, so it covers the
+/// reactor's read-accumulate loop on Linux and the threaded
+/// `BufReader` path elsewhere.
+#[test]
+fn split_and_coalesced_frames_reassemble() {
+    let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+
+    // Byte-at-a-time: the worst fragmentation TCP can produce.
+    let req = frame(br#"{"op":"depth"}"#);
+    for b in &req {
+        stream.write_all(std::slice::from_ref(b)).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let reply = read_reply(&mut stream).unwrap();
+    let text = String::from_utf8(reply).unwrap();
+    assert!(text.contains("\"ok\""), "split-read reply parses: {text}");
+
+    // Two frames in one write: both must come back, in order.
+    let mut two = frame(br#"{"op":"depth"}"#);
+    two.extend_from_slice(&frame(br#"{"op":"queues"}"#));
+    stream.write_all(&two).unwrap();
+    stream.flush().unwrap();
+    let first = String::from_utf8(read_reply(&mut stream).unwrap()).unwrap();
+    let second = String::from_utf8(read_reply(&mut stream).unwrap()).unwrap();
+    assert!(first.contains("depth"), "first coalesced reply: {first}");
+    assert!(second.contains("queues"), "second coalesced reply: {second}");
+
+    server.shutdown();
+}
+
+/// A slow reader pipelining large-reply requests must (a) get every
+/// reply, in order, and (b) never balloon the server-side write buffer
+/// past the high-water mark plus one frame — the reactor defers the
+/// next dispatch until the backlog drains below `out_resume` (1 MiB).
+#[cfg(target_os = "linux")]
+#[test]
+fn slow_reader_backpressure_is_bounded_and_ordered() {
+    let broker = Broker::default();
+    let server =
+        BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", ServeConfig::reactor()).unwrap();
+
+    // 8 × ~512 KiB payloads: ~4 MiB of replies against a 1 MiB resume
+    // threshold, so unbounded pipelining would be visible in the stats.
+    const N: usize = 8;
+    let filler = "x".repeat(512 * 1024);
+    let mut feeder = BrokerClient::connect(&server.addr.to_string()).unwrap();
+    let tasks: Vec<TaskEnvelope> = (0..N)
+        .map(|i| ping("np.big", format!("tok-{i:04}-{filler}")))
+        .collect();
+    feeder.publish_batch(&tasks).unwrap();
+
+    // Pipeline every fetch up front, then go silent before reading.
+    let mut stream = TcpStream::connect(server.addr).unwrap();
+    let req = frame(br#"{"op":"fetch","queues":["np.big"],"prefetch":0,"timeout_ms":0}"#);
+    for _ in 0..N {
+        stream.write_all(&req).unwrap();
+    }
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    for i in 0..N {
+        let reply = String::from_utf8(read_reply(&mut stream).unwrap()).unwrap();
+        assert!(
+            reply.contains(&format!("tok-{i:04}-")),
+            "reply {i} out of order or lost"
+        );
+    }
+
+    let stats = server.reactor_stats().expect("reactor mode has stats");
+    assert!(
+        stats.max_outbuf >= 500_000,
+        "a buffered big reply must register in max_outbuf: {}",
+        stats.max_outbuf
+    );
+    assert!(
+        stats.max_outbuf < 3 << 20,
+        "backlog bounded by out_resume + one frame, got {}",
+        stats.max_outbuf
+    );
+    assert!(stats.frames >= N as u64);
+    server.shutdown();
+}
+
+/// Connections silent past the idle timeout are swept: the peer sees
+/// EOF and the sweep counter moves. Busy connections stay up.
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_sweep_closes_silent_connections() {
+    let mut cfg = ServeConfig::reactor();
+    cfg.idle_timeout_ms = 200;
+    let server = BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", cfg).unwrap();
+
+    let mut idle = TcpStream::connect(server.addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut buf = [0u8; 1];
+    let n = idle.read(&mut buf).unwrap_or(1);
+    assert_eq!(n, 0, "idle connection must be closed by the sweep");
+
+    let stats = server.reactor_stats().unwrap();
+    assert!(stats.idle_closed >= 1, "sweep counted: {stats:?}");
+    assert_eq!(stats.live_conns, 0);
+    server.shutdown();
+}
+
+/// The max-connections guard refuses accepts past the cap instead of
+/// letting fd exhaustion take the whole process down.
+#[cfg(target_os = "linux")]
+#[test]
+fn max_connections_guard_rejects_excess() {
+    let mut cfg = ServeConfig::reactor();
+    cfg.max_connections = 2;
+    let server = BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", cfg).unwrap();
+
+    let conns: Vec<TcpStream> = (0..5)
+        .map(|_| TcpStream::connect(server.addr).unwrap())
+        .collect();
+    // Rejected connections see immediate EOF; surviving ones stay open.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = server.reactor_stats().unwrap();
+        if stats.rejected >= 3 {
+            assert!(stats.live_conns <= 2, "cap enforced: {stats:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "guard never fired: {stats:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    drop(conns);
+    server.shutdown();
+}
+
+/// Hard shutdown returns every fd to the OS: listener, epoll, eventfd,
+/// and all live connection sockets.
+#[cfg(target_os = "linux")]
+#[test]
+fn hard_shutdown_releases_all_fds() {
+    fn count_fds() -> usize {
+        std::fs::read_dir("/proc/self/fd").unwrap().count()
+    }
+
+    let baseline = count_fds();
+    let server =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    let mut clients: Vec<BrokerClient> = (0..3)
+        .map(|_| BrokerClient::connect(&server.addr.to_string()).unwrap())
+        .collect();
+    for c in &mut clients {
+        assert_eq!(c.depth().unwrap(), 0);
+    }
+    assert!(count_fds() > baseline, "live server + clients hold fds");
+
+    drop(clients);
+    server.shutdown_hard(); // joins the reactor thread
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if count_fds() <= baseline {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fds leaked: {} > baseline {}",
+            count_fds(),
+            baseline
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// A long-poll fetch against an empty queue parks server-side and is
+/// woken by a publish from another connection — on both the JSON
+/// (`fetch`) and binary (`PopN`) paths — well before the deadline.
+#[cfg(target_os = "linux")]
+#[test]
+fn parked_fetch_wakes_on_publish() {
+    let server =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    let addr = server.addr.to_string();
+
+    for use_bin in [false, true] {
+        let addr2 = addr.clone();
+        let token = format!("wake-{use_bin}");
+        let tok2 = token.clone();
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let mut c = BrokerClient::connect(&addr2).unwrap();
+            c.publish_batch(&[ping("np.wake", tok2)]).unwrap();
+        });
+        let mut c = BrokerClient::connect(&addr).unwrap();
+        let t0 = Instant::now();
+        let tag = if use_bin {
+            let got = c.fetch_n(&["np.wake"], 0, 10_000, 1).unwrap();
+            assert_eq!(got.len(), 1, "binary park/wake delivered");
+            got[0].tag
+        } else {
+            let got = c.fetch(&["np.wake"], 0, 10_000).unwrap();
+            got.expect("json park/wake delivered").tag
+        };
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "woken by publish, not the deadline"
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(100), "actually waited");
+        c.ack(tag).unwrap();
+        publisher.join().unwrap();
+    }
+    server.shutdown();
+}
+
+/// The backend speaks the same reactor: KV round trips work in reactor
+/// mode and hard shutdown severs established clients.
+#[cfg(target_os = "linux")]
+#[test]
+fn backend_reactor_roundtrip_and_hard_shutdown() {
+    use merlin::backend::client::BackendClient;
+    use merlin::backend::net::BackendServer;
+    use merlin::backend::store::Store;
+
+    let server = BackendServer::serve_with_config(
+        Store::new(),
+        None,
+        "127.0.0.1:0",
+        ServeConfig::reactor(),
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+    let mut c = BackendClient::connect(&addr).unwrap();
+    c.set("np.k", "v1").unwrap();
+    assert_eq!(c.get("np.k").unwrap().as_deref(), Some("v1"));
+    assert_eq!(c.incr_by("np.n", 5).unwrap(), 5);
+    let stats = server.reactor_stats().expect("backend reactor stats");
+    assert!(stats.frames >= 3, "{stats:?}");
+
+    server.shutdown_hard();
+    assert!(
+        c.get("np.k").is_err(),
+        "hard shutdown severs the established connection"
+    );
+}
