@@ -7,6 +7,12 @@
 //! compact v2 encoding); against an old server it falls back to per-op
 //! JSON transparently. Writes are buffered — one flush per call, or one
 //! flush for a whole pipelined window of batch frames.
+//!
+//! This client itself always speaks lockstep (one request, one reply),
+//! whatever version it negotiates. What wire v4 adds — correlated
+//! frames — is consumed by [`crate::net::muxclient`], which takes over
+//! a negotiated connection via [`BrokerClient::into_stream`] and uses
+//! the [`muxops`] codecs to pipeline many requests on it.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
@@ -55,6 +61,13 @@ impl From<WireError> for ClientError {
 impl BrokerClient {
     /// Connect to a broker server and negotiate the wire version.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
+        Self::connect_with_max_wire(addr, ser::WIRE_V4)
+    }
+
+    /// Connect advertising at most `max_wire` — the negotiation-matrix
+    /// seam. Tests pin an old client against a new server (and vice
+    /// versa) to prove every fallback rung stays lossless.
+    pub fn connect_with_max_wire(addr: &str, max_wire: u64) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         crate::net::tune_stream(&stream)?;
         let mut client = Self {
@@ -66,7 +79,7 @@ impl BrokerClient {
         // error — that is the v1 fallback, not a failure.
         match client.call(&Json::obj(vec![
             ("op", Json::str("hello")),
-            ("max_wire", Json::num(3.0)),
+            ("max_wire", Json::num(max_wire as f64)),
         ])) {
             Ok(resp) => client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8,
             Err(ClientError::Server(_)) => client.wire = 1,
@@ -81,9 +94,20 @@ impl BrokerClient {
     }
 
     /// The negotiated wire version (1 = JSON only, 2 = binary batches,
-    /// 3 = batches + delivery leases).
+    /// 3 = batches + delivery leases, 4 = v3 plus correlated frames).
     pub fn wire_version(&self) -> u8 {
         self.wire
+    }
+
+    /// Tear the client down to its raw negotiated socket — the handoff
+    /// to [`crate::net::muxclient::MuxPool::attach`], which takes over
+    /// the stream once `connect` has done the blocking dial and hello.
+    /// Buffered request bytes are flushed first; at a call boundary the
+    /// read side holds no reply bytes (every call drains its own
+    /// reply), so nothing is lost in the handoff.
+    pub fn into_stream(mut self) -> std::io::Result<TcpStream> {
+        self.writer.flush()?;
+        self.writer.into_inner().map_err(|e| e.into_error())
     }
 
     fn call(&mut self, req: &Json) -> Result<Json, ClientError> {
@@ -252,14 +276,7 @@ impl BrokerClient {
                 queues: queues.iter().map(|q| q.to_string()).collect(),
             };
             match self.call_bin(&msg)? {
-                BinMsg::Deliveries(items) => {
-                    let mut out = Vec::with_capacity(items.len());
-                    for (tag, bytes) in items {
-                        let task = ser::decode_wire(&bytes).map_err(ClientError::Protocol)?;
-                        out.push(Delivery { tag, task });
-                    }
-                    Ok(out)
-                }
+                BinMsg::Deliveries(items) => deliveries_from(items),
                 other => Err(ClientError::Protocol(format!(
                     "unexpected reply {other:?}"
                 ))),
@@ -400,25 +417,7 @@ impl BrokerClient {
     /// The server's lease/liveness report.
     pub fn lease_stats(&mut self) -> Result<LeaseStats, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("leases"))]))?;
-        let consumers = r
-            .get("consumers")
-            .as_arr()
-            .map(|a| {
-                a.iter()
-                    .map(|c| ConsumerLease {
-                        consumer: c.get("consumer").as_u64().unwrap_or(0),
-                        lease_ms: c.get("lease_ms").as_u64().unwrap_or(0),
-                        held: c.get("held").as_u64().unwrap_or(0) as usize,
-                        idle_ms: c.get("idle_ms").as_u64().unwrap_or(0),
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
-        Ok(LeaseStats {
-            active: r.get("active").as_u64().unwrap_or(0) as usize,
-            expired: r.get("expired").as_u64().unwrap_or(0),
-            consumers,
-        })
+        Ok(lease_stats_from(&r))
     }
 
     /// Force a sweep of expired leases on the server; returns how many
@@ -432,26 +431,13 @@ impl BrokerClient {
     /// an in-memory broker).
     pub fn durability(&mut self) -> Result<DurabilityStats, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("durability"))]))?;
-        Ok(DurabilityStats {
-            durable: r.get("durable").as_bool().unwrap_or(false),
-            wal_records: r.get("wal_records").as_u64().unwrap_or(0),
-            wal_fsyncs: r.get("wal_fsyncs").as_u64().unwrap_or(0),
-            snapshots: r.get("snapshots").as_u64().unwrap_or(0),
-            recovered: r.get("recovered").as_u64().unwrap_or(0),
-        })
+        Ok(durability_from(&r))
     }
 
     /// The server's lifetime totals across all queues.
     pub fn totals(&mut self) -> Result<BrokerTotals, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("totals"))]))?;
-        Ok(BrokerTotals {
-            published: r.get("published").as_u64().unwrap_or(0),
-            delivered: r.get("delivered").as_u64().unwrap_or(0),
-            acked: r.get("acked").as_u64().unwrap_or(0),
-            requeued: r.get("requeued").as_u64().unwrap_or(0),
-            dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
-            lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
-        })
+        Ok(totals_from(&r))
     }
 
     /// Sample ranges `[lo, hi)` for (`study`, `step`) still queued or in
@@ -470,18 +456,7 @@ impl BrokerClient {
             ("study", Json::str(study_id)),
             ("step", Json::str(step_name)),
         ]))?;
-        Ok(r.get("ranges")
-            .as_arr()
-            .map(|ranges| {
-                ranges
-                    .iter()
-                    .filter_map(|pair| {
-                        let pair = pair.as_arr()?;
-                        Some((pair.first()?.as_u64()?, pair.get(1)?.as_u64()?))
-                    })
-                    .collect()
-            })
-            .unwrap_or_default())
+        Ok(ranges_from(&r))
     }
 
     /// Point-in-time statistics for one queue.
@@ -499,18 +474,7 @@ impl BrokerClient {
     /// [`BrokerClient::queues`] + per-queue [`BrokerClient::stats`].
     pub fn stats_all(&mut self) -> Result<Vec<(String, QueueStats)>, ClientError> {
         let r = self.call(&Json::obj(vec![("op", Json::str("stats_all"))]))?;
-        Ok(r.get("queues")
-            .as_arr()
-            .map(|queues| {
-                queues
-                    .iter()
-                    .filter_map(|q| {
-                        let name = q.get("name").as_str()?.to_string();
-                        Some((name, queue_stats_from(q)))
-                    })
-                    .collect()
-            })
-            .unwrap_or_default())
+        Ok(stats_all_from(&r))
     }
 
     /// Drop all ready messages in `queue`; returns how many were dropped.
@@ -551,5 +515,354 @@ fn queue_stats_from(v: &Json) -> QueueStats {
         dead_lettered: v.get("dead_lettered").as_u64().unwrap_or(0),
         lease_expired: v.get("lease_expired").as_u64().unwrap_or(0),
         bytes_published: v.get("bytes_published").as_u64().unwrap_or(0),
+    }
+}
+
+/// Parse a bulk `stats_all` reply (shared with [`muxops`]).
+fn stats_all_from(r: &Json) -> Vec<(String, QueueStats)> {
+    r.get("queues")
+        .as_arr()
+        .map(|queues| {
+            queues
+                .iter()
+                .filter_map(|q| {
+                    let name = q.get("name").as_str()?.to_string();
+                    Some((name, queue_stats_from(q)))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Parse a `totals` reply (shared with [`muxops`]).
+fn totals_from(r: &Json) -> BrokerTotals {
+    BrokerTotals {
+        published: r.get("published").as_u64().unwrap_or(0),
+        delivered: r.get("delivered").as_u64().unwrap_or(0),
+        acked: r.get("acked").as_u64().unwrap_or(0),
+        requeued: r.get("requeued").as_u64().unwrap_or(0),
+        dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
+        lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
+    }
+}
+
+/// Parse a `queued_ranges` reply's `[lo, hi)` pairs (shared with
+/// [`muxops`]).
+fn ranges_from(r: &Json) -> Vec<(u64, u64)> {
+    r.get("ranges")
+        .as_arr()
+        .map(|ranges| {
+            ranges
+                .iter()
+                .filter_map(|pair| {
+                    let pair = pair.as_arr()?;
+                    Some((pair.first()?.as_u64()?, pair.get(1)?.as_u64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Parse a `leases` reply (shared with [`muxops`]).
+fn lease_stats_from(r: &Json) -> LeaseStats {
+    let consumers = r
+        .get("consumers")
+        .as_arr()
+        .map(|a| {
+            a.iter()
+                .map(|c| ConsumerLease {
+                    consumer: c.get("consumer").as_u64().unwrap_or(0),
+                    lease_ms: c.get("lease_ms").as_u64().unwrap_or(0),
+                    held: c.get("held").as_u64().unwrap_or(0) as usize,
+                    idle_ms: c.get("idle_ms").as_u64().unwrap_or(0),
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    LeaseStats {
+        active: r.get("active").as_u64().unwrap_or(0) as usize,
+        expired: r.get("expired").as_u64().unwrap_or(0),
+        consumers,
+    }
+}
+
+/// Parse a `durability` reply (shared with [`muxops`]).
+fn durability_from(r: &Json) -> DurabilityStats {
+    DurabilityStats {
+        durable: r.get("durable").as_bool().unwrap_or(false),
+        wal_records: r.get("wal_records").as_u64().unwrap_or(0),
+        wal_fsyncs: r.get("wal_fsyncs").as_u64().unwrap_or(0),
+        snapshots: r.get("snapshots").as_u64().unwrap_or(0),
+        recovered: r.get("recovered").as_u64().unwrap_or(0),
+    }
+}
+
+/// Decode a `Deliveries` reply's (tag, v2-blob) pairs (shared with
+/// [`muxops`]).
+fn deliveries_from(items: Vec<(u64, Vec<u8>)>) -> Result<Vec<Delivery>, ClientError> {
+    let mut out = Vec::with_capacity(items.len());
+    for (tag, bytes) in items {
+        let task = ser::decode_wire(&bytes).map_err(ClientError::Protocol)?;
+        out.push(Delivery { tag, task });
+    }
+    Ok(out)
+}
+
+/// Stateless request/reply codecs for the multiplexed client path.
+///
+/// [`crate::net::muxclient::MuxPool`] moves raw frame bodies; these
+/// helpers give the federation layer the same op surface as
+/// [`BrokerClient`], split into an *encode request body* half (built
+/// before submitting to the pool) and a *decode reply body* half (run
+/// once the matched completion arrives). Only the modern encodings are
+/// covered — binary batches plus the v3 JSON per-ops — because members
+/// that negotiate below wire v3 stay on the mutexed [`BrokerClient`]
+/// fallback, which still speaks every vintage.
+pub mod muxops {
+    use super::*;
+
+    fn json_body(req: &Json) -> Vec<u8> {
+        crate::util::json::to_string(req).into_bytes()
+    }
+
+    /// Decode a JSON reply body, mapping `ok: false` to
+    /// [`ClientError::Server`].
+    fn json_reply(body: &[u8]) -> Result<Json, ClientError> {
+        let resp = wire::parse_json_body(body)?;
+        if resp.get("ok").as_bool() == Some(true) {
+            Ok(resp)
+        } else {
+            Err(ClientError::Server(
+                resp.get("error").as_str().unwrap_or("unknown").to_string(),
+            ))
+        }
+    }
+
+    /// Decode a binary reply body, mapping `Err` frames to
+    /// [`ClientError::Server`].
+    fn bin_reply(body: &[u8]) -> Result<BinMsg, ClientError> {
+        if !body.first().is_some_and(|b| *b >= 0x80) {
+            return Err(ClientError::Protocol(
+                "expected binary reply, got json".into(),
+            ));
+        }
+        match wire::decode_bin(body)? {
+            BinMsg::Err(e) => Err(ClientError::Server(e)),
+            msg => Ok(msg),
+        }
+    }
+
+    fn ok_count(body: &[u8]) -> Result<u64, ClientError> {
+        match bin_reply(body)? {
+            BinMsg::OkCount(n) => Ok(n),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Reply decoder for JSON ops whose result is just `ok`.
+    pub fn unit_rsp(body: &[u8]) -> Result<(), ClientError> {
+        json_reply(body).map(|_| ())
+    }
+
+    /// `EnqueueBatch` of v2-encoded envelopes.
+    pub fn publish_batch_req(tasks: &[crate::task::TaskEnvelope]) -> Vec<u8> {
+        wire::encode_bin(&BinMsg::EnqueueBatch(
+            tasks.iter().map(ser::encode_v2).collect(),
+        ))
+    }
+
+    /// Count published by a [`publish_batch_req`].
+    pub fn publish_batch_rsp(body: &[u8]) -> Result<u64, ClientError> {
+        ok_count(body)
+    }
+
+    /// `PopN` window request.
+    pub fn fetch_n_req(queues: &[&str], prefetch: usize, timeout_ms: u64, max: usize) -> Vec<u8> {
+        wire::encode_bin(&BinMsg::PopN {
+            max: max as u64,
+            prefetch: prefetch as u64,
+            timeout_ms,
+            queues: queues.iter().map(|q| q.to_string()).collect(),
+        })
+    }
+
+    /// Deliveries returned by a [`fetch_n_req`].
+    pub fn fetch_n_rsp(body: &[u8]) -> Result<Vec<Delivery>, ClientError> {
+        match bin_reply(body)? {
+            BinMsg::Deliveries(items) => deliveries_from(items),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// `AckBatch` request.
+    pub fn ack_batch_req(tags: &[u64]) -> Vec<u8> {
+        wire::encode_bin(&BinMsg::AckBatch(tags.to_vec()))
+    }
+
+    /// Count acked by an [`ack_batch_req`].
+    pub fn ack_batch_rsp(body: &[u8]) -> Result<u64, ClientError> {
+        ok_count(body)
+    }
+
+    /// `set_lease` request (decode with [`unit_rsp`]).
+    pub fn set_lease_req(lease_ms: u64) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("set_lease")),
+            ("lease_ms", Json::num(lease_ms as f64)),
+        ]))
+    }
+
+    /// `heartbeat` request.
+    pub fn heartbeat_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("heartbeat"))]))
+    }
+
+    /// Count of leases extended by a [`heartbeat_req`].
+    pub fn heartbeat_rsp(body: &[u8]) -> Result<u64, ClientError> {
+        Ok(json_reply(body)?.get("extended").as_u64().unwrap_or(0))
+    }
+
+    /// Single `ack` (decode with [`unit_rsp`]).
+    pub fn ack_req(tag: u64) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("ack")),
+            ("tag", Json::num(tag as f64)),
+        ]))
+    }
+
+    /// Single `nack` (decode with [`unit_rsp`]).
+    pub fn nack_req(tag: u64, requeue: bool) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("nack")),
+            ("tag", Json::num(tag as f64)),
+            ("requeue", Json::Bool(requeue)),
+        ]))
+    }
+
+    /// Single `requeue` (decode with [`unit_rsp`]).
+    pub fn requeue_req(tag: u64) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("requeue")),
+            ("tag", Json::num(tag as f64)),
+        ]))
+    }
+
+    /// `reap` request.
+    pub fn reap_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("reap"))]))
+    }
+
+    /// Count requeued by a [`reap_req`].
+    pub fn reap_rsp(body: &[u8]) -> Result<u64, ClientError> {
+        Ok(json_reply(body)?.get("reaped").as_u64().unwrap_or(0))
+    }
+
+    /// `queued_ranges` request.
+    pub fn queued_ranges_req(queue: &str, study_id: &str, step_name: &str) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("queued_ranges")),
+            ("queue", Json::str(queue)),
+            ("study", Json::str(study_id)),
+            ("step", Json::str(step_name)),
+        ]))
+    }
+
+    /// Ranges returned by a [`queued_ranges_req`].
+    pub fn queued_ranges_rsp(body: &[u8]) -> Result<Vec<(u64, u64)>, ClientError> {
+        Ok(ranges_from(&json_reply(body)?))
+    }
+
+    /// Per-queue `stats` request.
+    pub fn stats_req(queue: &str) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("stats")),
+            ("queue", Json::str(queue)),
+        ]))
+    }
+
+    /// Statistics returned by a [`stats_req`].
+    pub fn stats_rsp(body: &[u8]) -> Result<QueueStats, ClientError> {
+        Ok(queue_stats_from(&json_reply(body)?))
+    }
+
+    /// Bulk `stats_all` request.
+    pub fn stats_all_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("stats_all"))]))
+    }
+
+    /// Per-queue statistics returned by a [`stats_all_req`].
+    pub fn stats_all_rsp(body: &[u8]) -> Result<Vec<(String, QueueStats)>, ClientError> {
+        Ok(stats_all_from(&json_reply(body)?))
+    }
+
+    /// `totals` request.
+    pub fn totals_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("totals"))]))
+    }
+
+    /// Lifetime totals returned by a [`totals_req`].
+    pub fn totals_rsp(body: &[u8]) -> Result<BrokerTotals, ClientError> {
+        Ok(totals_from(&json_reply(body)?))
+    }
+
+    /// `depth` request.
+    pub fn depth_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("depth"))]))
+    }
+
+    /// Ready-message count returned by a [`depth_req`].
+    pub fn depth_rsp(body: &[u8]) -> Result<usize, ClientError> {
+        Ok(json_reply(body)?.get("depth").as_u64().unwrap_or(0) as usize)
+    }
+
+    /// `purge` request.
+    pub fn purge_req(queue: &str) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("purge")),
+            ("queue", Json::str(queue)),
+        ]))
+    }
+
+    /// Count purged by a [`purge_req`].
+    pub fn purge_rsp(body: &[u8]) -> Result<usize, ClientError> {
+        Ok(json_reply(body)?.get("purged").as_u64().unwrap_or(0) as usize)
+    }
+
+    /// `queues` (queue-name listing) request.
+    pub fn queues_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("queues"))]))
+    }
+
+    /// Queue names returned by a [`queues_req`].
+    pub fn queues_rsp(body: &[u8]) -> Result<Vec<String>, ClientError> {
+        Ok(json_reply(body)?
+            .get("queues")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default())
+    }
+
+    /// `leases` (lease/liveness report) request.
+    pub fn lease_stats_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("leases"))]))
+    }
+
+    /// Report returned by a [`lease_stats_req`].
+    pub fn lease_stats_rsp(body: &[u8]) -> Result<LeaseStats, ClientError> {
+        Ok(lease_stats_from(&json_reply(body)?))
+    }
+
+    /// `durability` counters request.
+    pub fn durability_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("durability"))]))
+    }
+
+    /// Counters returned by a [`durability_req`].
+    pub fn durability_rsp(body: &[u8]) -> Result<DurabilityStats, ClientError> {
+        Ok(durability_from(&json_reply(body)?))
     }
 }

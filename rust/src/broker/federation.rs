@@ -31,20 +31,39 @@
 //! client-side state, so every producer, worker, and coordinator builds
 //! its own [`FederatedClient`] from the same member list (one TCP
 //! connection per member per client, like one AMQP channel per server).
+//!
+//! Remote links ride one of two transports, selected by
+//! [`FederationConfig::client_net`]:
+//!
+//! * **Mux** (default where available) — every member's connection is
+//!   driven by one shared [`crate::net::muxclient::MuxPool`] event
+//!   thread; requests carry wire v4 correlation ids, so fan-outs
+//!   (publish groups, heartbeats, `stats_all`, multi-owner fetches)
+//!   issue to all members concurrently *and* overlap in flight on each
+//!   member's single connection. The per-member mutex guards only error
+//!   accounting — never a round trip.
+//! * **Mutex** (portable fallback, and automatic for members that
+//!   negotiated below wire v3) — the original blocking
+//!   [`BrokerClient`], one connection guarded by one lock per member,
+//!   serializing that member's operations.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::net::ClientNetMode;
 use crate::task::TaskEnvelope;
 use crate::util::hex::fnv1a;
 
 use super::api::{
     merge_durability, merge_lease_stats, merge_queue_stats, MemberHealth, QueueError, TaskQueue,
 };
-use super::client::{BrokerClient, ClientError};
+use super::client::{muxops, BrokerClient, ClientError};
 use super::core::{Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats};
+
+#[cfg(target_os = "linux")]
+use crate::net::muxclient::{MuxError, MuxPool};
 
 /// Federation tuning knobs.
 #[derive(Debug, Clone)]
@@ -52,14 +71,29 @@ pub struct FederationConfig {
     /// Consecutive connect/IO errors against one member before it is
     /// marked down and its queues re-route to the survivors. 1 fails over
     /// on the first error; higher values ride out transient hiccups.
+    /// (A mux-linked connection death fails every overlapped request it
+    /// carried, and each counts — a member killed mid-pipeline is marked
+    /// down faster than under the one-at-a-time mutexed client.)
     pub down_after: u32,
+    /// Which transport remote member links ride: the multiplexing pool
+    /// or the portable mutexed client (see [`ClientNetMode`]).
+    pub client_net: ClientNetMode,
 }
 
 impl Default for FederationConfig {
     fn default() -> Self {
-        Self { down_after: 3 }
+        Self {
+            down_after: 3,
+            client_net: ClientNetMode::Auto,
+        }
     }
 }
+
+/// Deadline for one pooled RPC. Generous: it covers a slow member, not a
+/// dead one — connection death fails in-flight waiters immediately, so
+/// the deadline only catches a member that accepted the bytes and went
+/// silent.
+const MUX_RPC_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Rendezvous (highest-random-weight) hash: the weight of `member` for
 /// `queue`. The owner of a queue is the **live** member with the highest
@@ -85,6 +119,10 @@ pub fn rendezvous_weight(queue: &str, member: u64) -> u64 {
 enum Link {
     Local(Option<Broker>),
     Remote(Option<Box<BrokerClient>>),
+    /// The connection lives in the shared mux pool (attached or not —
+    /// the pool's `is_attached` is the live view); the member state here
+    /// carries only error accounting.
+    Mux,
 }
 
 struct MemberState {
@@ -106,10 +144,13 @@ enum MemberErr {
 /// [`TaskQueue`], so the coordinator, resubmission, status, and workers
 /// run against it exactly as against one in-process [`Broker`].
 ///
-/// Thread-safe (`&self` everywhere), but note the sharing model: each
-/// member is one connection guarded by one lock, so a handle shared by
-/// many threads serializes per member — like one AMQP channel per server.
-/// Give throughput-critical producers/workers their own handle; local
+/// Thread-safe (`&self` everywhere). The sharing model depends on the
+/// link transport: mux-linked members (the default on Linux) pipeline
+/// requests from any number of threads over one connection each, with
+/// the per-member lock held only for error accounting and reconnects;
+/// mutexed members (the portable / pre-wire-v3 fallback) serialize per
+/// member — like one AMQP channel per server — so give
+/// throughput-critical producers/workers their own handle there. Local
 /// (in-process) members clone the broker out of the lock and never block
 /// under it.
 pub struct FederatedClient {
@@ -134,6 +175,11 @@ pub struct FederatedClient {
     lease_ms: AtomicU64,
     /// Members newly marked down, drained by `failed_over`.
     downs: Mutex<Vec<String>>,
+    /// The shared pool driving mux-linked members' connections; `None`
+    /// when every remote link is mutexed (local federations, non-Linux,
+    /// or `client_net: mutex`).
+    #[cfg(target_os = "linux")]
+    pool: Option<MuxPool>,
     /// Throttle for opportunistic revival probes (ms since `epoch`).
     last_revive_ms: AtomicU64,
     /// Time base for the revival throttle.
@@ -168,6 +214,11 @@ impl FederatedClient {
     /// the initial connection start **down** (revivable via
     /// [`FederatedClient::try_revive`]); if every member refuses, this is
     /// an error.
+    ///
+    /// [`FederationConfig::client_net`] picks the link transport:
+    /// resolved up front, so a forced-but-unavailable mode fails loudly
+    /// here instead of silently degrading. Under mux, members that
+    /// negotiated below wire v3 individually stay on the mutexed client.
     pub fn connect(addrs: &[String], cfg: FederationConfig) -> std::io::Result<Self> {
         if addrs.is_empty() {
             return Err(std::io::Error::new(
@@ -175,6 +226,7 @@ impl FederatedClient {
                 "federation needs at least one member address",
             ));
         }
+        let use_mux = cfg.client_net.use_mux()?;
         let mut members = Vec::with_capacity(addrs.len());
         let mut initial_downs = Vec::new();
         let mut any_up = false;
@@ -204,7 +256,7 @@ impl FederatedClient {
                 "no federation member reachable",
             ));
         }
-        let fed = Self::assemble(addrs.to_vec(), members, cfg);
+        let mut fed = Self::assemble(addrs.to_vec(), members, cfg);
         for (i, name) in fed.names.iter().enumerate() {
             if initial_downs.contains(name) {
                 // Routing excludes them from the start, and revival
@@ -215,7 +267,10 @@ impl FederatedClient {
                 fed.up[i].store(false, Ordering::SeqCst);
             }
         }
-        fed
+        if use_mux {
+            fed.enable_mux()?;
+        }
+        Ok(fed)
     }
 
     fn assemble(
@@ -236,6 +291,8 @@ impl FederatedClient {
             consumer_leases: Mutex::new(HashMap::new()),
             lease_ms: AtomicU64::new(0),
             downs: Mutex::new(Vec::new()),
+            #[cfg(target_os = "linux")]
+            pool: None,
             last_revive_ms: AtomicU64::new(0),
             epoch: Instant::now(),
         }
@@ -312,18 +369,30 @@ impl FederatedClient {
                 continue;
             }
             let mut m = self.members[i].lock().unwrap();
-            let Link::Remote(slot) = &mut m.link else {
-                continue; // killed local members revive via restore_member
-            };
-            if slot.is_some() {
-                continue;
-            }
-            if let Ok(mut client) = BrokerClient::connect(&self.names[i]) {
-                let lease = self.lease_ms.load(Ordering::SeqCst);
-                if lease > 0 {
-                    client.set_lease(lease).ok();
+            let came_back = if matches!(m.link, Link::Mux) {
+                // A mux link revives by re-attaching into the pool (the
+                // lease is re-applied and correlation ids start fresh).
+                self.mux_reattach(i, &mut m)
+            } else {
+                let Link::Remote(slot) = &mut m.link else {
+                    continue; // killed local members revive via restore_member
+                };
+                if slot.is_some() {
+                    continue;
                 }
-                *slot = Some(Box::new(client));
+                match BrokerClient::connect(&self.names[i]) {
+                    Ok(mut client) => {
+                        let lease = self.lease_ms.load(Ordering::SeqCst);
+                        if lease > 0 {
+                            client.set_lease(lease).ok();
+                        }
+                        *slot = Some(Box::new(client));
+                        true
+                    }
+                    Err(_) => false,
+                }
+            };
+            if came_back {
                 m.consecutive = 0;
                 self.up[i].store(true, Ordering::SeqCst);
                 revived.push(self.names[i].clone());
@@ -366,8 +435,21 @@ impl FederatedClient {
         match &mut m.link {
             Link::Local(b) => *b = None,
             Link::Remote(c) => *c = None,
+            Link::Mux => self.mux_detach(idx),
         }
         self.tags.lock().unwrap().retain(|_, (mi, _)| *mi != idx);
+    }
+
+    /// Shared transport-failure accounting: bump the member's error
+    /// counters and mark it down once `down_after` consecutive failures
+    /// accumulate. Returns the error for the caller to propagate.
+    fn note_transport(&self, idx: usize, m: &mut MemberState, e: String) -> MemberErr {
+        m.consecutive += 1;
+        m.total_errors += 1;
+        if m.consecutive >= self.cfg.down_after {
+            self.mark_down(idx, m);
+        }
+        MemberErr::Transport(e)
     }
 
     /// Fold one member-operation outcome into its health accounting.
@@ -385,16 +467,16 @@ impl FederatedClient {
                 Ok(v)
             }
             Err(ClientError::Wire(e)) => {
-                m.consecutive += 1;
-                m.total_errors += 1;
-                if m.consecutive >= self.cfg.down_after {
-                    self.mark_down(idx, m);
-                } else if let Link::Remote(c) = &mut m.link {
-                    // The connection is unusable after a wire error; drop
-                    // it so the next op reconnects (or marks down).
-                    *c = None;
+                let err = self.note_transport(idx, m, e.to_string());
+                // The connection is unusable after a wire error; drop it
+                // so the next op reconnects (or marks down). mark_down
+                // already dropped it when the budget ran out.
+                match &mut m.link {
+                    Link::Local(_) => {}
+                    Link::Remote(c) => *c = None,
+                    Link::Mux => self.mux_detach(idx),
                 }
-                Err(MemberErr::Transport(e.to_string()))
+                Err(err)
             }
             Err(e) => Err(MemberErr::Fatal(QueueError(e.to_string()))),
         }
@@ -419,14 +501,7 @@ impl FederatedClient {
                     }
                     *slot = Some(Box::new(client));
                 }
-                Err(e) => {
-                    m.consecutive += 1;
-                    m.total_errors += 1;
-                    if m.consecutive >= self.cfg.down_after {
-                        self.mark_down(idx, m);
-                    }
-                    return Err(MemberErr::Transport(e.to_string()));
-                }
+                Err(e) => return Err(self.note_transport(idx, m, e.to_string())),
             }
         }
         Ok(slot.as_mut().expect("just connected"))
@@ -442,6 +517,7 @@ impl FederatedClient {
             Link::Local(Some(b)) => Snapshot::Local(b.clone()),
             Link::Local(None) => Snapshot::DeadLocal,
             Link::Remote(_) => Snapshot::Remote,
+            Link::Mux => Snapshot::Mux,
         }
     }
 
@@ -505,6 +581,14 @@ impl FederatedClient {
                 Ok(()) => Ok(()),
                 Err(e) => Err((e, tasks)),
             },
+            Snapshot::Mux => {
+                let req = muxops::publish_batch_req(&tasks);
+                let r = self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::publish_batch_rsp);
+                match r {
+                    Ok(_) => Ok(()),
+                    Err(e) => Err((e, tasks)),
+                }
+            }
         }
     }
 
@@ -530,7 +614,18 @@ impl FederatedClient {
                     c.fetch_n(queues, prefetch, timeout.as_millis() as u64, max_n)
                 })
                 .unwrap_or_default(),
+            Snapshot::Mux => {
+                let ms = timeout.as_millis() as u64;
+                let req = muxops::fetch_n_req(queues, prefetch, ms, max_n);
+                self.mux_call(idx, &req, timeout + MUX_RPC_TIMEOUT, muxops::fetch_n_rsp)
+                    .unwrap_or_default()
+            }
         };
+        self.remap_deliveries(idx, got)
+    }
+
+    /// Remap member-local delivery tags into the federated tag space.
+    fn remap_deliveries(&self, idx: usize, got: Vec<Delivery>) -> Vec<Delivery> {
         if got.is_empty() {
             return got;
         }
@@ -561,6 +656,25 @@ impl FederatedClient {
     fn live_indices(&self) -> Vec<usize> {
         (0..self.members.len())
             .filter(|i| self.up[*i].load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Per-queue stats against one mux member, for servers that predate
+    /// the bulk `stats_all` op (the connection stays healthy — the
+    /// server rejected the op, not the transport).
+    fn mux_stats_fallback(&self, idx: usize) -> Vec<(String, QueueStats)> {
+        let req = muxops::queues_req();
+        let queues = match self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::queues_rsp) {
+            Ok(qs) => qs,
+            Err(_) => return Vec::new(),
+        };
+        queues
+            .into_iter()
+            .filter_map(|q| {
+                let req = muxops::stats_req(&q);
+                let st = self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::stats_rsp).ok()?;
+                Some((q, st))
+            })
             .collect()
     }
 
@@ -602,6 +716,7 @@ impl FederatedClient {
         };
         self.lease_ms.store(effective, Ordering::SeqCst);
         let mut first_err: Option<QueueError> = None;
+        let mut mux_idxs = Vec::new();
         for idx in self.live_indices() {
             match self.snapshot(idx) {
                 Snapshot::Local(b) => {
@@ -616,6 +731,22 @@ impl FederatedClient {
                         });
                     }
                 }
+                Snapshot::Mux => mux_idxs.push(idx),
+            }
+        }
+        // Mux members declare concurrently — one overlapped round trip
+        // for the whole fleet.
+        if !mux_idxs.is_empty() {
+            let reqs = mux_idxs
+                .iter()
+                .map(|i| (*i, muxops::set_lease_req(effective)))
+                .collect();
+            for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
+                if let Err(e) = self.mux_parse(idx, r, muxops::unit_rsp) {
+                    first_err.get_or_insert_with(|| {
+                        QueueError(format!("{}: {}", self.names[idx], merr(e)))
+                    });
+                }
             }
         }
         match first_err {
@@ -625,11 +756,237 @@ impl FederatedClient {
     }
 }
 
+/// Mux-transport plumbing (see [`crate::net::muxclient`]). Every helper
+/// that portable code calls has a stub in the `not(linux)` block below,
+/// so the operation arms stay cfg-free; `Link::Mux` members only exist
+/// where the pool does.
+#[cfg(target_os = "linux")]
+impl FederatedClient {
+    /// Move every already-connected remote link into a freshly created
+    /// pool. Members that negotiated below wire v3 keep their mutexed
+    /// link; members that were down at connect time become (detached)
+    /// mux links, revived through the pool later.
+    fn enable_mux(&mut self) -> std::io::Result<()> {
+        let pool = MuxPool::new(self.members.len())?;
+        for (idx, member) in self.members.iter().enumerate() {
+            let mut m = member.lock().unwrap();
+            let Link::Remote(slot) = &mut m.link else {
+                continue;
+            };
+            match slot.take() {
+                Some(client) if client.wire_version() >= 3 => {
+                    // A failed handover leaves a detached mux link that
+                    // reconnects on first use.
+                    pool.attach(idx, *client).ok();
+                    m.link = Link::Mux;
+                }
+                Some(client) => *slot = Some(client), // pre-v3: stay mutexed
+                None => m.link = Link::Mux,
+            }
+        }
+        self.pool = Some(pool);
+        Ok(())
+    }
+
+    fn mux_pool(&self) -> &MuxPool {
+        self.pool.as_ref().expect("mux link without pool")
+    }
+
+    /// Dial, handshake, re-apply the connection lease, and attach member
+    /// `idx`. Runs under the member lock so concurrent reconnects don't
+    /// race duplicate dials. No error accounting here — callers decide
+    /// (revival probes stay quiet, request paths count failures).
+    fn mux_attach_locked(&self, idx: usize, m: &mut MemberState) -> Result<(), MemberErr> {
+        match BrokerClient::connect(&self.names[idx]) {
+            Ok(mut client) => {
+                let lease = self.lease_ms.load(Ordering::SeqCst);
+                if lease > 0 {
+                    client.set_lease(lease).ok();
+                }
+                if client.wire_version() < 3 {
+                    // The member came back speaking an old wire version
+                    // (downgraded restart): fall back to the mutexed
+                    // client permanently.
+                    m.link = Link::Remote(Some(Box::new(client)));
+                    return Ok(());
+                }
+                self.mux_pool()
+                    .attach(idx, client)
+                    .map_err(|e| MemberErr::Transport(e.to_string()))
+            }
+            Err(e) => Err(MemberErr::Transport(e.to_string())),
+        }
+    }
+
+    /// Make sure member `idx` has a pooled connection, reconnecting
+    /// (with accounting) if its previous one died. A fresh attachment
+    /// starts a fresh correlation-id space — replies from the dead
+    /// connection can never complete new requests.
+    fn mux_ensure_attached(&self, idx: usize) -> Result<(), MemberErr> {
+        if self.mux_pool().is_attached(idx) {
+            return Ok(());
+        }
+        let mut m = self.members[idx].lock().unwrap();
+        if !matches!(m.link, Link::Mux) || self.mux_pool().is_attached(idx) {
+            return Ok(()); // downgraded meanwhile, or raced a reconnect
+        }
+        match self.mux_attach_locked(idx, &mut m) {
+            Ok(()) => {
+                m.consecutive = 0;
+                Ok(())
+            }
+            Err(MemberErr::Transport(e)) => Err(self.note_transport(idx, &mut m, e)),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Fold one completed pooled request into member accounting.
+    fn mux_settle(&self, idx: usize, r: Result<Vec<u8>, MuxError>) -> Result<Vec<u8>, MemberErr> {
+        match r {
+            Ok(b) => {
+                self.members[idx].lock().unwrap().consecutive = 0;
+                Ok(b)
+            }
+            Err(e) => {
+                if matches!(e, MuxError::Timeout) {
+                    // The pool detaches on transport death itself; a
+                    // timed-out connection is condemned here so the next
+                    // op re-dials instead of queueing behind a hang.
+                    self.mux_pool().detach(idx);
+                }
+                let mut m = self.members[idx].lock().unwrap();
+                Err(self.note_transport(idx, &mut m, e.to_string()))
+            }
+        }
+    }
+
+    /// One request over the pool: reconnect-on-demand, submit, wait,
+    /// account. The member lock is never held across the round trip.
+    fn mux_request(
+        &self,
+        idx: usize,
+        body: &[u8],
+        timeout: Duration,
+    ) -> Result<Vec<u8>, MemberErr> {
+        self.mux_ensure_attached(idx)?;
+        let r = self.mux_pool().request(idx, body, timeout);
+        self.mux_settle(idx, r)
+    }
+
+    /// Submit one request to every `(member, body)` pair, then wait for
+    /// all: fan-outs overlap across members and in flight per link
+    /// instead of paying one serialized RTT per member.
+    fn mux_fanout(
+        &self,
+        reqs: Vec<(usize, Vec<u8>)>,
+        timeout: Duration,
+    ) -> Vec<(usize, Result<Vec<u8>, MemberErr>)> {
+        let submitted: Vec<_> = reqs
+            .into_iter()
+            .map(|(idx, body)| match self.mux_ensure_attached(idx) {
+                Ok(()) => (idx, Ok(self.mux_pool().submit(idx, &body))),
+                Err(e) => (idx, Err(e)),
+            })
+            .collect();
+        submitted
+            .into_iter()
+            .map(|(idx, w)| match w {
+                Ok(w) => (idx, self.mux_settle(idx, w.wait(timeout))),
+                Err(e) => (idx, Err(e)),
+            })
+            .collect()
+    }
+
+    /// Decode a pooled reply with the same accounting as the mutexed
+    /// path (wire-level decode failures are transport errors and condemn
+    /// the connection; server errors are fatal).
+    fn mux_parse<T>(
+        &self,
+        idx: usize,
+        r: Result<Vec<u8>, MemberErr>,
+        parse: impl FnOnce(&[u8]) -> Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        let body = r?;
+        let mut m = self.members[idx].lock().unwrap();
+        self.note(idx, &mut m, parse(&body))
+    }
+
+    /// Request + decode: the single-member convenience.
+    fn mux_call<T>(
+        &self,
+        idx: usize,
+        body: &[u8],
+        timeout: Duration,
+        parse: impl FnOnce(&[u8]) -> Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        let r = self.mux_request(idx, body, timeout);
+        self.mux_parse(idx, r, parse)
+    }
+
+    /// Drop member `idx`'s pooled connection (if any).
+    fn mux_detach(&self, idx: usize) {
+        if let Some(pool) = &self.pool {
+            pool.detach(idx);
+        }
+    }
+
+    /// Revival probe: quiet reconnect-and-attach for a down mux member.
+    fn mux_reattach(&self, idx: usize, m: &mut MemberState) -> bool {
+        self.mux_attach_locked(idx, m).is_ok()
+    }
+}
+
+/// Portable stubs for the mux plumbing: `ClientNetMode::use_mux` is
+/// always false off-Linux, so no `Link::Mux` member ever exists and none
+/// of these can be reached.
+#[cfg(not(target_os = "linux"))]
+impl FederatedClient {
+    fn enable_mux(&mut self) -> std::io::Result<()> {
+        unreachable!("mux links exist only on Linux")
+    }
+
+    fn mux_detach(&self, _idx: usize) {
+        unreachable!("mux links exist only on Linux")
+    }
+
+    fn mux_reattach(&self, _idx: usize, _m: &mut MemberState) -> bool {
+        unreachable!("mux links exist only on Linux")
+    }
+
+    fn mux_fanout(
+        &self,
+        _reqs: Vec<(usize, Vec<u8>)>,
+        _timeout: Duration,
+    ) -> Vec<(usize, Result<Vec<u8>, MemberErr>)> {
+        unreachable!("mux links exist only on Linux")
+    }
+
+    fn mux_call<T>(
+        &self,
+        _idx: usize,
+        _body: &[u8],
+        _timeout: Duration,
+        _parse: impl FnOnce(&[u8]) -> Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        unreachable!("mux links exist only on Linux")
+    }
+
+    fn mux_parse<T>(
+        &self,
+        _idx: usize,
+        _r: Result<Vec<u8>, MemberErr>,
+        _parse: impl FnOnce(&[u8]) -> Result<T, ClientError>,
+    ) -> Result<T, MemberErr> {
+        unreachable!("mux links exist only on Linux")
+    }
+}
+
 /// See [`FederatedClient::snapshot`].
 enum Snapshot {
     Local(Broker),
     DeadLocal,
     Remote,
+    Mux,
 }
 
 fn merr(e: MemberErr) -> QueueError {
@@ -669,13 +1026,37 @@ impl TaskQueue for FederatedClient {
                     }
                 }
             }
+            let mut mux_groups: Vec<(usize, Vec<TaskEnvelope>)> = Vec::new();
             for (idx, group) in groups {
+                if matches!(self.snapshot(idx), Snapshot::Mux) {
+                    mux_groups.push((idx, group));
+                    continue;
+                }
                 match self.member_publish(idx, group) {
                     Ok(()) => {}
                     Err((MemberErr::Fatal(e), _)) => return Err(e),
                     Err((MemberErr::Transport(e), group)) => {
                         last_transport = e;
                         pending.extend(group);
+                    }
+                }
+            }
+            // Mux-owned groups ship concurrently: submit one batch per
+            // member, then wait for all.
+            if !mux_groups.is_empty() {
+                let reqs = mux_groups
+                    .iter()
+                    .map(|(i, g)| (*i, muxops::publish_batch_req(g)))
+                    .collect();
+                let results = self.mux_fanout(reqs, MUX_RPC_TIMEOUT);
+                for ((_, group), (idx, r)) in mux_groups.into_iter().zip(results) {
+                    match self.mux_parse(idx, r, muxops::publish_batch_rsp) {
+                        Ok(_) => {}
+                        Err(MemberErr::Fatal(e)) => return Err(e),
+                        Err(MemberErr::Transport(e)) => {
+                            last_transport = e;
+                            pending.extend(group);
+                        }
                     }
                 }
             }
@@ -705,7 +1086,11 @@ impl TaskQueue for FederatedClient {
     /// Beats only the members that can actually hold deliveries from
     /// this handle (those appearing in the outstanding tag map) — a
     /// worker with a 2-delivery window must not pay one round trip per
-    /// federation member per beat.
+    /// federation member per beat. Mux-linked members beat
+    /// **concurrently**: their correlated heartbeats are all in flight
+    /// on the pool at once, so a multi-member beat costs one worst-case
+    /// round trip, not the sum over members (the mutexed fallback still
+    /// pays one serialized RTT per member).
     fn heartbeat(&self, consumer: u64) -> usize {
         let holding: Vec<usize> = {
             let tags = self.tags.lock().unwrap();
@@ -715,6 +1100,7 @@ impl TaskQueue for FederatedClient {
             members
         };
         let mut extended = 0usize;
+        let mut mux_idxs: Vec<usize> = Vec::new();
         for idx in holding {
             if !self.up[idx].load(Ordering::SeqCst) {
                 continue;
@@ -732,6 +1118,16 @@ impl TaskQueue for FederatedClient {
                         .map(|n| n as usize)
                         .unwrap_or(0);
                 }
+                Snapshot::Mux => mux_idxs.push(idx),
+            }
+        }
+        if !mux_idxs.is_empty() {
+            let reqs = mux_idxs.iter().map(|i| (*i, muxops::heartbeat_req())).collect();
+            for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
+                extended += self
+                    .mux_parse(idx, r, muxops::heartbeat_rsp)
+                    .map(|n| n as usize)
+                    .unwrap_or(0);
             }
         }
         extended
@@ -768,7 +1164,71 @@ impl TaskQueue for FederatedClient {
                 return out; // every member down: nothing to wait for
             }
             let multi = groups.len() > 1;
-            for (idx, qs) in &groups {
+            // Mux-linked owners are probed **concurrently**: one
+            // windowed fetch per owner, all in flight on the pool at
+            // once, so a multi-owner pass costs one slice rather than
+            // one serialized slice per owner.
+            let mut mux_groups: Vec<(usize, Vec<&str>)> = Vec::new();
+            let mut rest: Vec<(usize, Vec<&str>)> = Vec::new();
+            for (idx, qs) in groups {
+                match self.snapshot(idx) {
+                    Snapshot::Mux => mux_groups.push((idx, qs)),
+                    _ => rest.push((idx, qs)),
+                }
+            }
+            if !mux_groups.is_empty() {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                // Each concurrent owner is asked for a fair share of
+                // the window: probing every owner with the full window
+                // would jointly overshoot by up to groups× and pay a
+                // requeue round trip per excess delivery. Shares are
+                // ceilinged (joint overshoot at most `groups - 1`), and
+                // a pass over skewed content comes back short — so
+                // passes repeat at zero slice, re-sharing what is left,
+                // until the window fills or a pass gains nothing.
+                let mut slice = if !out.is_empty() {
+                    Duration::ZERO
+                } else if multi {
+                    remaining.min(Duration::from_millis(20))
+                } else {
+                    remaining
+                };
+                loop {
+                    let want = max_n - out.len();
+                    let share = want.div_ceil(mux_groups.len());
+                    let ms = slice.as_millis() as u64;
+                    let reqs = mux_groups
+                        .iter()
+                        .map(|(i, qs)| (*i, muxops::fetch_n_req(qs, prefetch, ms, share)))
+                        .collect();
+                    let before = out.len();
+                    for (idx, r) in self.mux_fanout(reqs, slice + MUX_RPC_TIMEOUT) {
+                        let Ok(mut got) = self.mux_parse(idx, r, muxops::fetch_n_rsp) else {
+                            continue;
+                        };
+                        // Ceilinged shares can still jointly overshoot
+                        // the window by a sliver; hand the excess
+                        // straight back before it ever gets a
+                        // federation tag.
+                        let keep = max_n.saturating_sub(out.len()).min(got.len());
+                        for d in got.split_off(keep) {
+                            let req = muxops::requeue_req(d.tag);
+                            self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::unit_rsp).ok();
+                        }
+                        out.extend(self.remap_deliveries(idx, got));
+                    }
+                    if out.len() >= max_n {
+                        return out;
+                    }
+                    // One owner was already offered the whole window;
+                    // a dry pass means no owner has more ready now.
+                    if mux_groups.len() == 1 || out.len() == before {
+                        break;
+                    }
+                    slice = Duration::ZERO;
+                }
+            }
+            for (idx, qs) in &rest {
                 let remaining = deadline.saturating_duration_since(Instant::now());
                 // The first delivery waits; afterwards only drain what
                 // is already ready on the remaining members.
@@ -797,6 +1257,11 @@ impl TaskQueue for FederatedClient {
             Snapshot::Local(b) => b.ack(mtag).map_err(QueueError::from),
             Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
             Snapshot::Remote => self.member_remote(idx, |c| c.ack(mtag)).map_err(merr),
+            Snapshot::Mux => {
+                let req = muxops::ack_req(mtag);
+                self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::unit_rsp)
+                    .map_err(merr)
+            }
         }
     }
 
@@ -824,6 +1289,7 @@ impl TaskQueue for FederatedClient {
         }
         let mut acked = 0usize;
         let mut first_err: Option<QueueError> = None;
+        let mut mux_groups: Vec<(usize, Vec<u64>)> = Vec::new();
         for (idx, mtags) in groups {
             let r = match self.snapshot(idx) {
                 Snapshot::Local(b) => b.ack_batch(&mtags).map_err(QueueError::from),
@@ -832,6 +1298,10 @@ impl TaskQueue for FederatedClient {
                     .member_remote(idx, |c| c.ack_batch(&mtags))
                     .map(|n| n as usize)
                     .map_err(merr),
+                Snapshot::Mux => {
+                    mux_groups.push((idx, mtags));
+                    continue;
+                }
             };
             // Attempt every member's group before reporting any failure
             // — an early return would strand completed work unacked on
@@ -840,6 +1310,22 @@ impl TaskQueue for FederatedClient {
                 Ok(n) => acked += n,
                 Err(e) => {
                     first_err.get_or_insert(e);
+                }
+            }
+        }
+        // Mux-owned groups ack concurrently — one correlated batch per
+        // member, all in flight at once.
+        if !mux_groups.is_empty() {
+            let reqs = mux_groups
+                .iter()
+                .map(|(i, mtags)| (*i, muxops::ack_batch_req(mtags)))
+                .collect();
+            for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
+                match self.mux_parse(idx, r, muxops::ack_batch_rsp) {
+                    Ok(n) => acked += n as usize,
+                    Err(e) => {
+                        first_err.get_or_insert(merr(e));
+                    }
                 }
             }
         }
@@ -857,6 +1343,11 @@ impl TaskQueue for FederatedClient {
             Snapshot::Remote => self
                 .member_remote(idx, |c| c.nack(mtag, requeue))
                 .map_err(merr),
+            Snapshot::Mux => {
+                let req = muxops::nack_req(mtag, requeue);
+                self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::unit_rsp)
+                    .map_err(merr)
+            }
         }
     }
 
@@ -866,6 +1357,11 @@ impl TaskQueue for FederatedClient {
             Snapshot::Local(b) => b.requeue(mtag).map_err(QueueError::from),
             Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
             Snapshot::Remote => self.member_remote(idx, |c| c.requeue(mtag)).map_err(merr),
+            Snapshot::Mux => {
+                let req = muxops::requeue_req(mtag);
+                self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::unit_rsp)
+                    .map_err(merr)
+            }
         }
     }
 
@@ -908,6 +1404,10 @@ impl TaskQueue for FederatedClient {
                     .member_remote(idx, |c| c.reap())
                     .map(|n| n as usize)
                     .unwrap_or(0),
+                Snapshot::Mux => self
+                    .mux_call(idx, &muxops::reap_req(), MUX_RPC_TIMEOUT, muxops::reap_rsp)
+                    .map(|n| n as usize)
+                    .unwrap_or(0),
             };
         }
         reaped
@@ -937,6 +1437,13 @@ impl TaskQueue for FederatedClient {
                         out.extend(ranges);
                     }
                 }
+                Snapshot::Mux => {
+                    let req = muxops::queued_ranges_req(queue, study_id, step_name);
+                    let r = self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::queued_ranges_rsp);
+                    if let Ok(ranges) = r {
+                        out.extend(ranges);
+                    }
+                }
             }
         }
         out.sort_unstable();
@@ -950,6 +1457,10 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => Some(b.stats(queue)),
                 Snapshot::DeadLocal => None,
                 Snapshot::Remote => self.member_remote(idx, |c| c.stats(queue)).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::stats_req(queue);
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::stats_rsp).ok()
+                }
             };
             if let Some(st) = st {
                 merge_queue_stats(&mut acc, &st);
@@ -964,10 +1475,15 @@ impl TaskQueue for FederatedClient {
     /// federated `merlin status`.
     fn stats_all(&self) -> Vec<(String, QueueStats)> {
         let mut acc: BTreeMap<String, QueueStats> = BTreeMap::new();
+        let mut mux_idxs: Vec<usize> = Vec::new();
         for idx in self.live_indices() {
             let member: Vec<(String, QueueStats)> = match self.snapshot(idx) {
                 Snapshot::Local(b) => b.stats_all(),
                 Snapshot::DeadLocal => Vec::new(),
+                Snapshot::Mux => {
+                    mux_idxs.push(idx);
+                    continue;
+                }
                 Snapshot::Remote => match self.member_remote(idx, |c| c.stats_all()) {
                     Ok(all) => all,
                     // An old server rejects the op server-side (the
@@ -995,6 +1511,24 @@ impl TaskQueue for FederatedClient {
                 merge_queue_stats(acc.entry(name).or_default(), &st);
             }
         }
+        // Mux members answer concurrently: every member's bulk
+        // `stats_all` is in flight on the pool at once.
+        if !mux_idxs.is_empty() {
+            let reqs = mux_idxs.iter().map(|i| (*i, muxops::stats_all_req())).collect();
+            for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
+                let member = match self.mux_parse(idx, r, muxops::stats_all_rsp) {
+                    Ok(all) => all,
+                    // An old server rejects the op server-side (the
+                    // connection stays healthy): fall back to per-queue
+                    // RPCs against this member alone.
+                    Err(MemberErr::Fatal(_)) => self.mux_stats_fallback(idx),
+                    Err(MemberErr::Transport(_)) => Vec::new(),
+                };
+                for (name, st) in member {
+                    merge_queue_stats(acc.entry(name).or_default(), &st);
+                }
+            }
+        }
         acc.into_iter().collect()
     }
 
@@ -1005,6 +1539,10 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => Some(b.totals()),
                 Snapshot::DeadLocal => None,
                 Snapshot::Remote => self.member_remote(idx, |c| c.totals()).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::totals_req();
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::totals_rsp).ok()
+                }
             };
             if let Some(t) = t {
                 acc.published += t.published;
@@ -1029,6 +1567,12 @@ impl TaskQueue for FederatedClient {
                         names.extend(qs);
                     }
                 }
+                Snapshot::Mux => {
+                    let req = muxops::queues_req();
+                    if let Ok(qs) = self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::queues_rsp) {
+                        names.extend(qs);
+                    }
+                }
             }
         }
         names.sort();
@@ -1046,6 +1590,10 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => Some(b.lease_stats()),
                 Snapshot::DeadLocal => None,
                 Snapshot::Remote => self.member_remote(idx, |c| c.lease_stats()).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::lease_stats_req();
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::lease_stats_rsp).ok()
+                }
             };
             if let Some(st) = st {
                 merge_lease_stats(&mut acc, st);
@@ -1061,6 +1609,10 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => Some(b.durability_stats()),
                 Snapshot::DeadLocal => None,
                 Snapshot::Remote => self.member_remote(idx, |c| c.durability()).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::durability_req();
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::durability_rsp).ok()
+                }
             };
             if let Some(st) = st {
                 merge_durability(&mut acc, &st);
@@ -1076,6 +1628,9 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => b.depth(),
                 Snapshot::DeadLocal => 0,
                 Snapshot::Remote => self.member_remote(idx, |c| c.depth()).unwrap_or(0),
+                Snapshot::Mux => self
+                    .mux_call(idx, &muxops::depth_req(), MUX_RPC_TIMEOUT, muxops::depth_rsp)
+                    .unwrap_or(0),
             };
         }
         depth
@@ -1088,6 +1643,10 @@ impl TaskQueue for FederatedClient {
                 Snapshot::Local(b) => b.purge(queue),
                 Snapshot::DeadLocal => 0,
                 Snapshot::Remote => self.member_remote(idx, |c| c.purge(queue)).unwrap_or(0),
+                Snapshot::Mux => {
+                    let req = muxops::purge_req(queue);
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::purge_rsp).unwrap_or(0)
+                }
             };
         }
         purged

@@ -26,6 +26,10 @@
 //! `AckBatch`, `PopN` — see [`super::wire`]). Responses are buffered and
 //! flushed once per request, so a pipelined client that writes N batch
 //! frames before reading gets N responses with minimal syscall traffic.
+//! Either encoding may additionally arrive wrapped in a wire-v4
+//! correlation header; the reply is wrapped with the request's id, which
+//! is what lets [`crate::net::muxclient`] interleave many requests on
+//! one connection and match completions out of order.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
@@ -46,8 +50,13 @@ use crate::net::{FrameService, ServiceReply, WakeHint};
 
 /// Highest wire version this server speaks. v3 adds the delivery-lease
 /// surface (`ExtendBatch` binary frames plus the `set_lease` /
-/// `heartbeat` / `leases` / `reap` JSON ops) on top of v2's batches.
-pub const SERVER_MAX_WIRE: u64 = 3;
+/// `heartbeat` / `leases` / `reap` JSON ops) on top of v2's batches;
+/// v4 adds the correlation header ([`wire::CORR_MAGIC`]): a request may
+/// arrive wrapped with a `u32` id, and the reply is wrapped with the
+/// same id. The server keeps no per-connection negotiation state — it
+/// echoes the header iff the request carried one, so v3-and-older
+/// clients on the same listener are untouched.
+pub const SERVER_MAX_WIRE: u64 = 4;
 
 /// Server-side cap on one PopN / fetch_n window. Bounds the reply frame
 /// (which must stay under `wire::MAX_FRAME`) and the per-request memory
@@ -267,8 +276,7 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
                 wire::write_frame(&mut writer, &resp)
             }
             Frame::Bin(body) => {
-                let resp = dispatch_bin(&broker, consumer, &body);
-                wire::write_frame_bytes(&mut writer, &wire::encode_bin(&resp))
+                wire::write_frame_bytes(&mut writer, &bin_body_reply(&broker, consumer, &body))
             }
         };
         if write_res.is_err() || writer.flush().is_err() {
@@ -277,6 +285,33 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
     }
     // Connection gone: requeue whatever this consumer held.
     broker.recover_consumer(consumer);
+}
+
+/// One binary-space frame on the threaded path, returning the encoded
+/// reply body. Plain v2/v3 batch frames dispatch directly; a correlated
+/// (v4) frame is unwrapped, dispatched by its inner encoding, and the
+/// reply re-wrapped with the same id. A malformed correlation header
+/// leaves no id to echo, so it gets an *unwrapped* `Err` — frame-level
+/// sync is intact (the length prefix was fine), and a multiplexing
+/// client treats any unmatched reply as a connection-fatal desync.
+fn bin_body_reply(broker: &Broker, consumer: u64, body: &[u8]) -> Vec<u8> {
+    if !wire::is_corr(body) {
+        return wire::encode_bin(&dispatch_bin(broker, consumer, body));
+    }
+    let (corr_id, inner) = match wire::decode_corr(body) {
+        Ok(x) => x,
+        Err(e) => return wire::encode_bin(&BinMsg::Err(e.to_string())),
+    };
+    let reply = if inner.first().is_some_and(|b| *b >= 0x80) {
+        wire::encode_bin(&dispatch_bin(broker, consumer, inner))
+    } else {
+        let resp = match wire::parse_json_body(inner) {
+            Ok(req) => dispatch(broker, consumer, &req),
+            Err(e) => wire::err(e.to_string()),
+        };
+        crate::util::json::to_string(&resp).into_bytes()
+    };
+    wire::encode_corr(corr_id, &reply)
 }
 
 /// The broker as a reactor [`FrameService`]: one consumer per
@@ -313,6 +348,30 @@ impl FrameService for BrokerService {
     }
 
     fn handle(&self, conn: u64, body: &[u8], last_try: bool) -> ServiceReply {
+        // Correlated (v4) frames: strip the header, dispatch the inner
+        // encoding, and echo the id on the reply. Parks need no special
+        // casing — the reactor retries the original (still-wrapped)
+        // body, so the id survives the park/retry cycle for free.
+        if wire::is_corr(body) {
+            let (corr_id, inner) = match wire::decode_corr(body) {
+                Ok(x) => x,
+                Err(e) => return reply_bin(BinMsg::Err(e.to_string()), WakeHint::None),
+            };
+            return match self.handle_inner(conn, inner, last_try) {
+                ServiceReply::Reply { frame, wake } => ServiceReply::Reply {
+                    frame: wire::encode_corr(corr_id, &frame),
+                    wake,
+                },
+                park => park,
+            };
+        }
+        self.handle_inner(conn, body, last_try)
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl BrokerService {
+    fn handle_inner(&self, conn: u64, body: &[u8], last_try: bool) -> ServiceReply {
         let consumer = self.consumer(conn);
         if body.first().is_some_and(|b| *b >= 0x80) {
             let msg = match wire::decode_bin(body) {
@@ -593,7 +652,7 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
             let client_max = req.get("max_wire").as_u64().unwrap_or(1);
             wire::ok(vec![(
                 "wire",
-                Json::num(client_max.min(SERVER_MAX_WIRE) as f64),
+                Json::num(wire::negotiate(client_max, SERVER_MAX_WIRE) as f64),
             )])
         }
         Some("publish") => match task_from_json(req.get("task")) {
@@ -788,7 +847,7 @@ mod tests {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
         let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(client.wire_version(), 3, "negotiation lands on v3");
+        assert_eq!(client.wire_version(), 4, "negotiation lands on v4");
         client.publish(&ping("hello")).unwrap();
         let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
         match &d.task.payload {
@@ -922,6 +981,72 @@ mod tests {
         assert_eq!(resp.get("ok").as_bool(), Some(true));
         assert_eq!(broker.depth(), 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn correlated_requests_echo_their_ids() {
+        // Raw v4 exchange against both server modes: pipeline three
+        // wrapped requests (JSON and binary inners, non-sequential ids)
+        // before reading, then check every reply carries its request's
+        // id. A malformed header gets an unwrapped error, not a close.
+        let modes: Vec<ServeConfig> = if cfg!(target_os = "linux") {
+            vec![ServeConfig::threaded(), ServeConfig::reactor()]
+        } else {
+            vec![ServeConfig::threaded()]
+        };
+        for cfg in modes {
+            let broker = Broker::default();
+            let server = BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", cfg).unwrap();
+            let stream = TcpStream::connect(server.addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            let publish = crate::util::json::to_string(&Json::obj(vec![
+                ("op", Json::str("publish")),
+                ("task", task_to_json(&ping("corr"))),
+            ]))
+            .into_bytes();
+            let depth =
+                crate::util::json::to_string(&Json::obj(vec![("op", Json::str("depth"))]))
+                    .into_bytes();
+            let pop = wire::encode_bin(&BinMsg::PopN {
+                max: 1,
+                prefetch: 0,
+                timeout_ms: 1000,
+                queues: vec!["q".into()],
+            });
+            for (id, body) in [(7u32, &publish), (3, &depth), (900_000, &pop)] {
+                wire::write_frame_bytes(&mut writer, &wire::encode_corr(id, body)).unwrap();
+            }
+            writer.flush().unwrap();
+            for (id, json) in [(7u32, true), (3, true), (900_000, false)] {
+                let body = match wire::read_frame_any(&mut reader).unwrap() {
+                    Frame::Bin(b) => b,
+                    other => panic!("expected wrapped reply, got {other:?}"),
+                };
+                let (got, inner) = wire::decode_corr(&body).unwrap();
+                assert_eq!(got, id);
+                if json {
+                    let resp = wire::parse_json_body(inner).unwrap();
+                    assert_eq!(resp.get("ok").as_bool(), Some(true));
+                } else {
+                    match wire::decode_bin(inner).unwrap() {
+                        BinMsg::Deliveries(items) => assert_eq!(items.len(), 1),
+                        other => panic!("expected deliveries, got {other:?}"),
+                    }
+                }
+            }
+            // Truncated correlation header: unwrapped error reply.
+            wire::write_frame_bytes(&mut writer, &[wire::CORR_MAGIC, 0, 1]).unwrap();
+            writer.flush().unwrap();
+            match wire::read_frame_any(&mut reader).unwrap() {
+                Frame::Bin(b) => {
+                    assert!(!wire::is_corr(&b));
+                    assert!(matches!(wire::decode_bin(&b).unwrap(), BinMsg::Err(_)));
+                }
+                other => panic!("expected bin error, got {other:?}"),
+            }
+            server.shutdown_hard();
+        }
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //!   Carries the batch operations — [`BinMsg::EnqueueBatch`],
 //!   [`BinMsg::AckBatch`], [`BinMsg::PopN`] — whose payloads are v2
 //!   binary task envelopes ([`crate::task::ser`]).
+//! * **Correlated** (wire v4): first byte is [`CORR_MAGIC`]. A 5-byte
+//!   header (`0xB4` + a big-endian `u32` correlation id) wrapped around
+//!   either of the encodings above. Requests carry a client-chosen id;
+//!   the server echoes the same id on the reply, which is what lets a
+//!   multiplexing client ([`crate::net::muxclient`]) pipeline many
+//!   requests on one connection and match completions out of order.
 //!
 //! Writers do **not** flush: [`write_frame`]/[`write_frame_bytes`] write
 //! header and body into the caller's buffered writer (one coalesced OS
@@ -29,6 +35,12 @@ pub const MAX_FRAME: usize = 64 << 20;
 
 /// First byte of every binary (v2) frame body.
 pub const BIN_MAGIC: u8 = 0xB3;
+
+/// First byte of every correlated (wire v4) frame body.
+pub const CORR_MAGIC: u8 = 0xB4;
+
+/// Byte length of the correlation header: [`CORR_MAGIC`] + `u32` id.
+pub const CORR_HEADER: usize = 5;
 
 /// Errors of the frame layer.
 #[derive(Debug)]
@@ -405,6 +417,66 @@ pub fn decode_bin(body: &[u8]) -> Result<BinMsg, WireError> {
     Ok(msg)
 }
 
+// ---------------------------------------------------------------------------
+// correlated (v4) frames
+// ---------------------------------------------------------------------------
+//
+// corr_frame := CORR_MAGIC corr_id:u32be inner
+// inner      := json-body | bin_frame        (never another corr_frame)
+//
+// The header rides *inside* the length-prefixed frame body, so the outer
+// framing (and MAX_FRAME) is unchanged. Requests carry a client-chosen
+// id; replies echo the request's id verbatim. A server wraps a reply iff
+// the request was wrapped, so v3-and-older clients on the same listener
+// never see a correlation header.
+
+/// Is this frame body a correlated (wire v4) frame?
+pub fn is_corr(body: &[u8]) -> bool {
+    body.first() == Some(&CORR_MAGIC)
+}
+
+/// Wrap an inner frame body (JSON or v2 binary) with a correlation id.
+pub fn encode_corr(corr_id: u32, inner: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(CORR_HEADER + inner.len());
+    out.push(CORR_MAGIC);
+    out.extend_from_slice(&corr_id.to_be_bytes());
+    out.extend_from_slice(inner);
+    out
+}
+
+/// Split a correlated frame body into `(corr_id, inner)`. Strict: the
+/// magic must match, the header must be complete, and the inner body
+/// must be non-empty and must not itself be correlation-wrapped (no
+/// nesting) — anything else is a framing error, and the connection that
+/// produced it can no longer be trusted to stay in sync.
+pub fn decode_corr(body: &[u8]) -> Result<(u32, &[u8]), WireError> {
+    if body.first() != Some(&CORR_MAGIC) {
+        return Err(bad(format!(
+            "unknown correlated frame magic {:#04x?}",
+            body.first()
+        )));
+    }
+    if body.len() < CORR_HEADER {
+        return Err(bad("truncated correlation header"));
+    }
+    let corr_id = u32::from_be_bytes([body[1], body[2], body[3], body[4]]);
+    let inner = &body[CORR_HEADER..];
+    if inner.is_empty() {
+        return Err(bad("empty body inside correlated frame"));
+    }
+    if inner[0] == CORR_MAGIC {
+        return Err(bad("nested correlated frame"));
+    }
+    Ok((corr_id, inner))
+}
+
+/// The wire version a hello negotiates: the highest version both sides
+/// speak, never above what either offered. Pure so the v3↔v4 fallback
+/// matrix is property-testable (`tests/properties.rs`).
+pub fn negotiate(client_max: u64, server_max: u64) -> u64 {
+    client_max.min(server_max).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -614,5 +686,57 @@ mod tests {
             Frame::Bin(b) => assert_eq!(decode_bin(&b).unwrap(), BinMsg::OkCount(7)),
             other => panic!("expected Bin, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn corr_roundtrips_json_and_bin_inners() {
+        let json = to_string(&ok(vec![("n", Json::num(3.0))])).into_bytes();
+        let (id, inner) = decode_corr(&encode_corr(7, &json)).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(inner, &json[..]);
+
+        let bin = encode_bin(&BinMsg::OkCount(12));
+        let (id, inner) = decode_corr(&encode_corr(u32::MAX, &bin)).unwrap();
+        assert_eq!(id, u32::MAX);
+        assert_eq!(decode_bin(inner).unwrap(), BinMsg::OkCount(12));
+    }
+
+    #[test]
+    fn corr_frames_stay_in_binary_space() {
+        // A correlated body must land in `Frame::Bin` through
+        // `read_frame_any`, like every non-JSON encoding.
+        let body = encode_corr(1, &encode_bin(&BinMsg::OkCount(1)));
+        assert!(is_corr(&body));
+        assert!(body[0] >= 0x80);
+        let mut stream = Vec::new();
+        write_frame_bytes(&mut stream, &body).unwrap();
+        match read_frame_any(&mut Cursor::new(stream)).unwrap() {
+            Frame::Bin(b) => assert_eq!(decode_corr(&b).unwrap().0, 1),
+            other => panic!("expected Bin, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corr_decode_rejects_malformed() {
+        // Wrong magic.
+        assert!(decode_corr(&[BIN_MAGIC, 0, 0, 0, 1, 0x01]).is_err());
+        assert!(decode_corr(&[]).is_err());
+        // Truncated header: magic present but id incomplete.
+        assert!(decode_corr(&[CORR_MAGIC, 0, 0]).is_err());
+        // Complete header, empty inner body.
+        assert!(decode_corr(&[CORR_MAGIC, 0, 0, 0, 9]).is_err());
+        // Nesting is not a thing.
+        let nested = encode_corr(2, &encode_corr(3, b"{}"));
+        assert!(decode_corr(&nested).is_err());
+    }
+
+    #[test]
+    fn negotiate_takes_the_lower_side() {
+        assert_eq!(negotiate(4, 4), 4);
+        assert_eq!(negotiate(4, 3), 3);
+        assert_eq!(negotiate(3, 4), 3);
+        assert_eq!(negotiate(1, 4), 1);
+        // Degenerate hellos never negotiate below v1.
+        assert_eq!(negotiate(0, 4), 1);
     }
 }

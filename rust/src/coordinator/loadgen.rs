@@ -43,7 +43,7 @@ use crate::broker::federation::{FederatedClient, FederationConfig};
 use crate::broker::net::BrokerServer;
 use crate::broker::wire::{self, BinMsg};
 use crate::metrics::series::Series;
-use crate::net::ServeConfig;
+use crate::net::{ClientNetMode, ServeConfig};
 use crate::task::{ControlMsg, Payload, TaskEnvelope};
 use crate::util::json::{to_string, Json};
 use crate::util::rng::Rng;
@@ -963,6 +963,260 @@ pub fn write_connscale_outputs(
     Ok(())
 }
 
+/// Mux-client rung configuration (the second half of `--connections`):
+/// many federation members, one driver thread, the whole corpus
+/// fetch/acked through a single federated handle per transport.
+#[derive(Debug, Clone)]
+pub struct MuxClientConfig {
+    /// Federation members (in-process TCP servers, one step queue each).
+    pub members: usize,
+    /// Stocked corpus the driver must fetch and ack per transport.
+    pub tasks: u64,
+    /// Deliveries requested per fetch round (also the ack batch size).
+    pub window: usize,
+}
+
+impl Default for MuxClientConfig {
+    fn default() -> Self {
+        Self {
+            members: 64,
+            tasks: 20_000,
+            window: 64,
+        }
+    }
+}
+
+impl MuxClientConfig {
+    /// Shrink the corpus to seconds (CI's `MERLIN_BENCH_QUICK=1`). The
+    /// member count stays put: the rung's claim is per-member client
+    /// cost, and 64 members is the claim's stated scale.
+    pub fn quicken(&mut self) {
+        self.tasks = self.tasks.min(2_000);
+    }
+}
+
+/// One mux-client rung: one transport driven over the same members and
+/// the same corpus size.
+#[derive(Debug, Clone)]
+pub struct MuxClientRung {
+    /// Client transport the rung drove (`mux` / `mutex`).
+    pub transport: String,
+    /// Federation members behind the handle.
+    pub members: usize,
+    /// Tasks fetched and acked (the whole corpus on a clean run).
+    pub acked: u64,
+    /// Wall time to drain the corpus (s).
+    pub wall_s: f64,
+    /// Drain throughput (tasks/s).
+    pub per_s: f64,
+    /// Process threads just before the measured handle connected.
+    pub baseline_threads: u64,
+    /// Peak process threads while draining.
+    pub peak_threads: u64,
+    /// `peak - baseline`: what the client transport itself costs. The
+    /// gated mux claim: one pool event thread however many members the
+    /// handle federates, where a thread-per-member client would pay
+    /// `members`.
+    pub client_threads: u64,
+    /// Fetch+ack round latency percentiles (µs per window).
+    pub round_p50_us: f64,
+    /// See [`MuxClientRung::round_p50_us`].
+    pub round_p99_us: f64,
+}
+
+/// Drive one transport over an already-running member fleet: stock the
+/// corpus (through a throwaway mutexed feeder, dropped before the
+/// baseline thread count is taken), then fetch/ack it all from a single
+/// driver thread while sampling the process thread count.
+fn run_muxclient_rung(
+    addrs: &[String],
+    net: ClientNetMode,
+    cfg: &MuxClientConfig,
+) -> MuxClientRung {
+    let queues: Vec<String> = (0..cfg.members).map(|m| format!("mx.s{m}")).collect();
+    {
+        let feeder_cfg = FederationConfig {
+            client_net: ClientNetMode::Mutex,
+            ..FederationConfig::default()
+        };
+        let feeder = FederatedClient::connect(addrs, feeder_cfg).expect("connect feeder");
+        let mut batch: Vec<TaskEnvelope> = Vec::with_capacity(512);
+        for i in 0..cfg.tasks {
+            batch.push(TaskEnvelope::new(
+                queues[i as usize % queues.len()].clone(),
+                Payload::Control(ControlMsg::Ping {
+                    token: format!("mx{i}"),
+                }),
+            ));
+            if batch.len() >= 512 || i + 1 == cfg.tasks {
+                feeder.publish_batch(std::mem::take(&mut batch)).expect("stock members");
+            }
+        }
+    }
+
+    let baseline = process_threads();
+    let fed_cfg = FederationConfig {
+        client_net: net,
+        ..FederationConfig::default()
+    };
+    let fed = FederatedClient::connect(addrs, fed_cfg).expect("connect rung handle");
+    let consumer = fed.register_consumer();
+    let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+    let mut acked = 0u64;
+    let mut lat: Vec<f64> = Vec::new();
+    let mut peak = process_threads();
+    let t0 = Instant::now();
+    while acked < cfg.tasks && t0.elapsed() < Duration::from_secs(120) {
+        let r0 = Instant::now();
+        let got = fed.fetch_n(consumer, &refs, cfg.window, cfg.window, Duration::from_millis(50));
+        peak = peak.max(process_threads());
+        if got.is_empty() {
+            if fed.depth() == 0 {
+                break;
+            }
+            continue;
+        }
+        let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+        if let Ok(n) = fed.ack_batch(&tags) {
+            acked += n as u64;
+            lat.push(r0.elapsed().as_micros() as f64);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    MuxClientRung {
+        transport: net.name().to_string(),
+        members: cfg.members,
+        acked,
+        wall_s,
+        per_s: acked as f64 / wall_s.max(1e-9),
+        baseline_threads: baseline,
+        peak_threads: peak,
+        client_threads: peak.saturating_sub(baseline),
+        round_p50_us: percentile(&lat, 50.0),
+        round_p99_us: percentile(&lat, 99.0),
+    }
+}
+
+/// The mux-client section: the same many-member drain through the
+/// multiplexing pool (where available) and through the portable mutexed
+/// client, each rung measuring what the client transport itself costs
+/// in OS threads and round latency.
+pub fn run_muxclient(cfg: &MuxClientConfig) -> Vec<MuxClientRung> {
+    assert!(cfg.members > 0 && cfg.window > 0 && cfg.tasks > 0);
+    let mut servers = Vec::with_capacity(cfg.members);
+    let mut addrs = Vec::with_capacity(cfg.members);
+    for _ in 0..cfg.members {
+        // Lean members: the rung measures *client*-side thread cost, so
+        // keep the in-process servers' own thread budget minimal and
+        // constant (the threaded fallback would add a thread per
+        // accepted connection and pollute the baseline).
+        let mut serve_cfg = if crate::net::reactor_available() {
+            ServeConfig::reactor()
+        } else {
+            ServeConfig::threaded()
+        };
+        serve_cfg.net_threads = 1;
+        let server = BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", serve_cfg)
+            .expect("bind muxclient member");
+        addrs.push(server.addr.to_string());
+        servers.push(server);
+    }
+    let mut nets = vec![ClientNetMode::Mutex];
+    if crate::net::reactor_available() {
+        nets.insert(0, ClientNetMode::Mux);
+    }
+    let rungs = nets.into_iter().map(|net| run_muxclient_rung(&addrs, net, cfg)).collect();
+    for server in servers {
+        server.shutdown();
+    }
+    rungs
+}
+
+/// Render the mux-client section as an aligned table.
+pub fn muxclient_series(rungs: &[MuxClientRung]) -> Series {
+    let mut s = Series::new(
+        "mux client: client-side threads & drain throughput vs transport",
+        "members",
+        &[
+            "client_threads",
+            "peak_threads",
+            "per_s",
+            "round_p50_us",
+            "round_p99_us",
+        ],
+    );
+    for r in rungs {
+        s.push(
+            r.members as f64,
+            vec![
+                r.client_threads as f64,
+                r.peak_threads as f64,
+                r.per_s,
+                r.round_p50_us,
+                r.round_p99_us,
+            ],
+        );
+    }
+    s
+}
+
+/// One mux-client rung as a JSON object (`BENCH_muxclient.json` rows).
+pub fn muxclient_rung_json(r: &MuxClientRung) -> Json {
+    Json::obj(vec![
+        ("transport", Json::str(&r.transport)),
+        ("members", Json::num(r.members as f64)),
+        ("acked", Json::num(r.acked as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("per_s", Json::num(r.per_s)),
+        ("baseline_threads", Json::num(r.baseline_threads as f64)),
+        ("peak_threads", Json::num(r.peak_threads as f64)),
+        ("client_threads", Json::num(r.client_threads as f64)),
+        ("round_p50_us", Json::num(r.round_p50_us)),
+        ("round_p99_us", Json::num(r.round_p99_us)),
+    ])
+}
+
+/// Human-readable mux-client summary.
+pub fn render_muxclient(rungs: &[MuxClientRung]) -> String {
+    let mut out = String::from("mux client (one driver thread, one handle, many members):\n");
+    for r in rungs {
+        out.push_str(&format!(
+            "  {:>6} x{:>3} members: {} acked @ {:.0}/s, +{} client thread(s) ({} -> {}), \
+             round p50/p99 {:.0}/{:.0} us\n",
+            r.transport,
+            r.members,
+            r.acked,
+            r.per_s,
+            r.client_threads,
+            r.baseline_threads,
+            r.peak_threads,
+            r.round_p50_us,
+            r.round_p99_us,
+        ));
+    }
+    out
+}
+
+/// Write `results/<stem>.{csv,json}` plus `BENCH_muxclient.json` — the
+/// client half of the network plane's machine-checked perf trajectory.
+pub fn write_muxclient_outputs(
+    rungs: &[MuxClientRung],
+    quick: bool,
+    stem: &str,
+) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    muxclient_series(rungs).save_csv(dir, stem)?;
+    let out = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        ("mux_available", Json::Bool(crate::net::reactor_available())),
+        ("rungs", Json::arr(rungs.iter().map(muxclient_rung_json).collect())),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.json")), to_string(&out))?;
+    std::fs::write("BENCH_muxclient.json", to_string(&out))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1040,6 +1294,31 @@ mod tests {
                 "parked + active conns all live server-side: {reactor:?}"
             );
             assert!(reactor.process_threads > 0, "thread count readable");
+        }
+    }
+
+    #[test]
+    fn muxclient_tiny_rung_drains_cleanly() {
+        let cfg = MuxClientConfig {
+            members: 6,
+            tasks: 180,
+            window: 24,
+        };
+        let rungs = run_muxclient(&cfg);
+        assert!(rungs.iter().any(|r| r.transport == "mutex"));
+        for r in &rungs {
+            assert_eq!(r.members, 6);
+            assert_eq!(r.acked, 180, "{r:?}");
+            assert!(r.per_s > 0.0);
+        }
+        #[cfg(target_os = "linux")]
+        {
+            let mux = rungs.iter().find(|r| r.transport == "mux").expect("mux rung");
+            assert!(mux.baseline_threads > 0, "thread count readable");
+            // No per-member threads. The bound is loose here because
+            // parallel test threads inflate the sample; the loadgen
+            // binary gates the tight <= 3 budget in its own process.
+            assert!(mux.client_threads <= 16, "{mux:?}");
         }
     }
 

@@ -88,6 +88,7 @@ USAGE:
   merlin run-workers --broker HOST:PORT [--broker HOST:PORT ...]
                      --queues q1,q2 [-c N] [--idle-ms N] [--lease-ms N]
                      [--backend HOST:PORT] [--objective N]
+                     [--client-net auto|mutex|mux]
       Connect N workers to a remote broker (the multi-allocation shape).
       Repeat --broker to consume a whole federation: every worker draws
       from each member that owns one of its queues (rendezvous-hash
@@ -96,7 +97,12 @@ USAGE:
       heartbeats its prefetch window. With --backend each worker ships
       its result batches to that backend server's feature store (start
       it with --features-dir); --objective additionally derives the
-      scalar-objective view server-side.
+      scalar-objective view server-side. --client-net picks the
+      federation transport: the multiplexing pool (Linux; the default
+      where available — all N workers share one wire-v4 connection per
+      member, requests pipelined by correlation id) or the portable
+      mutexed client (one connection per member per worker). Also
+      accepted by status/purge and every other federated command.
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
                       [--fsync always|never|interval:MS] [--snapshot-every N]
@@ -125,7 +131,7 @@ USAGE:
                  [--tasks N] [--batch N] [--zipf S] [--payload-min N]
                  [--payload-max N] [--lease-ms N] [--kill-at FRAC]
                  [--scale] [--connections N1,N2,...] [--net-threads N]
-                 [--quick] [--seed N]
+                 [--mux-members N] [--quick] [--seed N]
       Open-loop stress harness: spin up N federated broker members
       in-process (real TCP + wire v2/v3) and drive them with producers x
       workers over S step queues. Reports throughput and enqueue /
@@ -142,7 +148,12 @@ USAGE:
       sustained, process threads, and fetch p50/p99 per rung, writing
       BENCH_connscale.json. Full mode fails if the reactor drops
       connections at the top rung or its low-concurrency p99 regresses
-      past 1.5x the threaded baseline measured in the same run.
+      past 1.5x the threaded baseline measured in the same run. The
+      section finishes with the mux-client rung (--mux-members, default
+      64): one driver thread drains a stocked corpus through one
+      federated handle per transport (multiplexing pool vs mutexed
+      client), writing BENCH_muxclient.json and failing in every mode
+      if the pool adds more than 3 client-side threads.
 
   merlin serve-backend [--addr 127.0.0.1:7778] [--features-dir DIR]
                        [--features-shards N] [--fsync always|never|interval:MS]
@@ -214,6 +225,29 @@ fn serve_config_from_flags(args: &[String]) -> Result<merlin::net::ServeConfig, 
     Ok(cfg)
 }
 
+/// The federation client-transport flag shared by every federated
+/// command (`--client-net auto|mutex|mux`).
+fn client_net_from_flags(args: &[String]) -> Result<merlin::net::ClientNetMode, i32> {
+    match flag(args, "--client-net") {
+        None => Ok(merlin::net::ClientNetMode::Auto),
+        Some(m) => match merlin::net::ClientNetMode::parse(&m) {
+            Some(mode) => Ok(mode),
+            None => {
+                eprintln!("bad --client-net {m:?} (auto | mutex | mux)");
+                Err(2)
+            }
+        },
+    }
+}
+
+/// Federation config from CLI flags (currently just `--client-net`).
+fn federation_config_from_flags(args: &[String]) -> Result<FederationConfig, i32> {
+    Ok(FederationConfig {
+        client_net: client_net_from_flags(args)?,
+        ..FederationConfig::default()
+    })
+}
+
 /// A distributed worker's result row: status + timing (the CLI worker
 /// runs only null/shell work, which carries no params/outputs).
 fn cli_row(sample: u64, ok: bool, sim_us: u64) -> merlin::data::ResultRow {
@@ -254,7 +288,8 @@ fn connect_federation(args: &[String]) -> Result<FederatedClient, i32> {
         eprintln!("--broker HOST:PORT required (repeat for a federation)");
         return Err(2);
     }
-    FederatedClient::connect(&addrs, FederationConfig::default()).map_err(|e| {
+    let cfg = federation_config_from_flags(args)?;
+    FederatedClient::connect(&addrs, cfg).map_err(|e| {
         eprintln!("cannot connect to {addrs:?}: {e}");
         1
     })
@@ -675,19 +710,48 @@ fn cmd_run_workers(args: &[String]) -> i32 {
     let lease_ms = flag_u64(args, "--lease-ms", 0);
     let backend = flag(args, "--backend");
     let objective = flag(args, "--objective").and_then(|v| v.parse::<usize>().ok());
+    let fed_cfg = match federation_config_from_flags(args) {
+        Ok(c) => c,
+        Err(code) => return code,
+    };
+    let use_mux = match fed_cfg.client_net.use_mux() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("--client-net: {e}");
+            return 2;
+        }
+    };
     println!(
-        "connecting {n} workers to {} federation member(s) on queues {queues:?}",
+        "connecting {n} workers ({} transport) to {} federation member(s) on queues {queues:?}",
+        if use_mux { "mux" } else { "mutex" },
         addrs.len()
     );
+    // Mux: one shared federation handle — one pooled connection per
+    // member carries every worker's fetch window, pipelined by
+    // correlation id, so N workers cost member_count connections, not
+    // N x member_count. Mutex: one handle (one connection per member —
+    // the AMQP-channel analog) per worker, since a shared mutexed handle
+    // would serialize the whole pool per member.
+    let shared = if use_mux {
+        match FederatedClient::connect(&addrs, fed_cfg.clone()) {
+            Ok(fed) => Some(Arc::new(fed)),
+            Err(e) => {
+                eprintln!("cannot connect to {addrs:?}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
     let mut handles = Vec::new();
     for w in 0..n {
         let addrs = addrs.clone();
         let queues = queues.clone();
         let backend = backend.clone();
+        let fed_cfg = fed_cfg.clone();
+        let shared = shared.clone();
         handles.push(std::thread::spawn(move || {
-            // One federation handle per worker: its own connection (one
-            // AMQP-channel analog) to every member it consumes from.
-            // Likewise one result-sink connection per worker.
+            // One result-sink connection per worker either way.
             let sink = match &backend {
                 Some(addr) => {
                     match merlin::backend::RemoteResultSink::connect(addr, objective) {
@@ -700,12 +764,15 @@ fn cmd_run_workers(args: &[String]) -> i32 {
                 }
                 None => None,
             };
-            match FederatedClient::connect(&addrs, FederationConfig::default()) {
-                Ok(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w, sink),
-                Err(e) => {
-                    eprintln!("worker {w}: cannot connect to {addrs:?}: {e}");
-                    0
-                }
+            match shared {
+                Some(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w, sink),
+                None => match FederatedClient::connect(&addrs, fed_cfg) {
+                    Ok(fed) => tcp_worker_loop(&fed, &queues, idle_ms, lease_ms, w, sink),
+                    Err(e) => {
+                        eprintln!("worker {w}: cannot connect to {addrs:?}: {e}");
+                        0
+                    }
+                },
             }
         }));
     }
@@ -1088,6 +1155,40 @@ fn cmd_loadgen(args: &[String]) -> i32 {
                     );
                     return 1;
                 }
+            }
+        }
+        // The mux-client rung rides the network-plane section: the same
+        // plane measured from the client side. Many members, one driver
+        // thread, the corpus drained through the multiplexing pool and
+        // through the mutexed client. Gated in every mode, quick
+        // included — the thread budget is a structural claim, not a
+        // throughput number that starved CI cores could wobble.
+        let mut mcfg = loadgen::MuxClientConfig::default();
+        if quick {
+            mcfg.quicken();
+        }
+        mcfg.members = flag_u64(args, "--mux-members", mcfg.members as u64) as usize;
+        println!(
+            "\nloadgen mux-client rung: {} members, {} tasks, window {}\n",
+            mcfg.members, mcfg.tasks, mcfg.window
+        );
+        let mrungs = loadgen::run_muxclient(&mcfg);
+        print!("{}", loadgen::render_muxclient(&mrungs));
+        println!("\n{}", loadgen::muxclient_series(&mrungs).table());
+        if let Err(e) = loadgen::write_muxclient_outputs(&mrungs, quick, "loadgen_muxclient") {
+            eprintln!("write results: {e}");
+        }
+        if let Some(mux) = mrungs.iter().find(|r| r.transport == "mux") {
+            if mux.acked < mcfg.tasks {
+                eprintln!("FAIL: mux rung drained {}/{} tasks", mux.acked, mcfg.tasks);
+                return 1;
+            }
+            if mux.client_threads > 3 {
+                eprintln!(
+                    "FAIL: mux client added {} threads over {} members (> 3 budget)",
+                    mux.client_threads, mux.members
+                );
+                return 1;
             }
         }
         return 0;

@@ -21,12 +21,20 @@
 //! portable callers never have to care. See DESIGN.md "Event-Driven
 //! Network Plane" for the readiness state machine, the blocking-pool
 //! handoff rules, and the backpressure invariants.
+//!
+//! The client side mirrors the split: the federation coordinator can
+//! drive its member links through the multiplexing pool ([`muxclient`],
+//! Linux only, wire v4 correlation ids) or through the portable mutexed
+//! [`crate::broker::client::BrokerClient`]. [`ClientNetMode`] selects
+//! that, with [`ClientNetMode::Auto`] picking the pool where available.
 
 use std::net::TcpStream;
 use std::time::Duration;
 
 #[cfg(target_os = "linux")]
 pub(crate) mod conn;
+#[cfg(target_os = "linux")]
+pub mod muxclient;
 #[cfg(target_os = "linux")]
 pub mod reactor;
 
@@ -65,6 +73,55 @@ impl NetMode {
 /// Whether the epoll reactor is compiled into this build.
 pub fn reactor_available() -> bool {
     cfg!(target_os = "linux")
+}
+
+/// Which client implementation federation remote links run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientNetMode {
+    /// Multiplexing pool where available (Linux + member wire ≥ 3),
+    /// mutexed fallback elsewhere.
+    Auto,
+    /// Force the portable one-mutex-per-member blocking client.
+    Mutex,
+    /// Force the multiplexing pool; connecting fails on platforms
+    /// without it.
+    Mux,
+}
+
+impl ClientNetMode {
+    /// Parse a CLI `--client-net` value.
+    pub fn parse(s: &str) -> Option<ClientNetMode> {
+        match s {
+            "auto" => Some(ClientNetMode::Auto),
+            "mutex" => Some(ClientNetMode::Mutex),
+            "mux" => Some(ClientNetMode::Mux),
+            _ => None,
+        }
+    }
+
+    /// The mode's CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ClientNetMode::Auto => "auto",
+            ClientNetMode::Mutex => "mutex",
+            ClientNetMode::Mux => "mux",
+        }
+    }
+
+    /// Resolve [`ClientNetMode::Auto`] against the platform: `Ok(true)`
+    /// to run the mux pool, `Ok(false)` for the mutexed fallback, `Err`
+    /// when a forced mode is unavailable on this platform.
+    pub fn use_mux(self) -> std::io::Result<bool> {
+        match self {
+            ClientNetMode::Auto => Ok(reactor_available()),
+            ClientNetMode::Mutex => Ok(false),
+            ClientNetMode::Mux if reactor_available() => Ok(true),
+            ClientNetMode::Mux => Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mux client mode requires Linux epoll; use --client-net mutex",
+            )),
+        }
+    }
 }
 
 /// Server-mode and resource-guard configuration shared by
@@ -222,6 +279,26 @@ mod tests {
             assert_eq!(NetMode::parse(m.name()), Some(m));
         }
         assert_eq!(NetMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn client_mode_parse_roundtrip() {
+        let modes = [ClientNetMode::Auto, ClientNetMode::Mutex, ClientNetMode::Mux];
+        for m in modes {
+            assert_eq!(ClientNetMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ClientNetMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn client_auto_mode_matches_platform() {
+        assert_eq!(ClientNetMode::Auto.use_mux().unwrap(), reactor_available());
+        assert!(!ClientNetMode::Mutex.use_mux().unwrap());
+        if reactor_available() {
+            assert!(ClientNetMode::Mux.use_mux().unwrap());
+        } else {
+            assert!(ClientNetMode::Mux.use_mux().is_err());
+        }
     }
 
     #[test]

@@ -1,0 +1,733 @@
+//! Multiplexing client connection pool — the client-side twin of the
+//! server [`super::reactor`].
+//!
+//! A federation coordinator talks to N member brokers. With the
+//! blocking [`crate::broker::client::BrokerClient`] each member costs a
+//! mutex held for a full round trip per operation, and a long-poll
+//! fetch pins its caller for the whole wait. The pool inverts that:
+//! **one** epoll event thread drives every member link, any number of
+//! application threads submit requests concurrently, and wire v4's
+//! correlation header ([`crate::broker::wire::encode_corr`]) lets many
+//! requests overlap in flight on each member's single connection.
+//!
+//! ```text
+//! submit(member, body) ──► per-member outbuf ──► event thread writes
+//!     │    (assign corr id, register waiter)        pipelined frames
+//!     ▼
+//! Waiter::wait(deadline) ◄── completions matched by corr id as the
+//!                            event thread reads reply frames
+//! ```
+//!
+//! The pool does **no** dialing or negotiation: callers connect and
+//! hello-handshake with `BrokerClient::connect` (blocking, on their own
+//! thread), then hand the negotiated socket over via
+//! [`MuxPool::attach`]. Members that negotiated wire v4 are pipelined;
+//! a v3 member transparently falls back to **lockstep** — the pool
+//! queues its requests and keeps exactly one on the wire, matching
+//! replies in FIFO order — so mixed-version fleets still run through
+//! one event thread. Members below v3 (or non-Linux builds) stay on the
+//! mutexed client entirely; that seam lives in
+//! [`crate::broker::federation`].
+//!
+//! Failure semantics, which the chaos tests pin down:
+//!
+//! * A member connection dying (EOF, reset, detach, reply desync) fails
+//!   **every** waiter in flight on that member with
+//!   [`MuxError::Transport`] — no hang, and no cross-talk onto other
+//!   members' waiters.
+//! * Correlation ids are per-connection: a reattach starts a fresh
+//!   counter and a fresh pending map, and the old socket is closed
+//!   before the new one attaches, so a late reply from a dead
+//!   connection can never complete a new request.
+//! * [`Waiter::wait`] is deadline-bounded; a timeout leaves the request
+//!   in flight server-side (the reply is discarded on arrival), so
+//!   callers treat it like any transport error and detach the member.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::reactor::{new_eventfd, sys, Epoll};
+use crate::broker::client::BrokerClient;
+use crate::broker::wire;
+
+/// epoll token for the wakeup eventfd (member tokens are their index).
+const TOK_WAKE: u64 = u64::MAX - 1;
+
+/// Bytes appended to a member's read buffer per `read` call (minimum).
+const READ_CHUNK: usize = 16 << 10;
+/// Largest single `read` request, even mid-jumbo-frame.
+const MAX_READ_CHUNK: usize = 256 << 10;
+
+/// How a multiplexed request failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MuxError {
+    /// The member's connection died (or was detached) with this request
+    /// in flight, or the request could not be written at all.
+    Transport(String),
+    /// No reply within the caller's deadline. The request may still
+    /// complete server-side; the reply, if it arrives, is discarded.
+    Timeout,
+    /// The member has no attached connection.
+    NotAttached,
+}
+
+impl std::fmt::Display for MuxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MuxError::Transport(e) => write!(f, "transport: {e}"),
+            MuxError::Timeout => write!(f, "timed out waiting for reply"),
+            MuxError::NotAttached => write!(f, "member not attached"),
+        }
+    }
+}
+
+impl std::error::Error for MuxError {}
+
+/// One request's completion slot: filled exactly once by the event
+/// thread (reply body or error), read once by the submitting caller.
+struct WaitSlot {
+    done: Mutex<Option<Result<Vec<u8>, MuxError>>>,
+    cv: Condvar,
+}
+
+impl WaitSlot {
+    fn new() -> Arc<WaitSlot> {
+        Arc::new(WaitSlot {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn complete(&self, result: Result<Vec<u8>, MuxError>) {
+        let mut g = self.done.lock().unwrap();
+        // First verdict wins (a detach racing a reply must not clobber).
+        if g.is_none() {
+            *g = Some(result);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Handle to one in-flight request. Blocking [`Waiter::wait`] keeps
+/// callers' synchronous signatures; holding several waiters before
+/// waiting on any is how a caller fans requests out to overlap.
+pub struct Waiter {
+    slot: Arc<WaitSlot>,
+}
+
+impl Waiter {
+    /// Block until the reply arrives or `timeout` elapses.
+    pub fn wait(self, timeout: Duration) -> Result<Vec<u8>, MuxError> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.done.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(MuxError::Timeout);
+            }
+            let (g2, _) = self.slot.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+/// One member's attached connection (absent between detach and the next
+/// attach).
+struct MemberConn {
+    stream: TcpStream,
+    /// Negotiated wire version (≥ 3; ≥ 4 enables pipelining).
+    wire: u8,
+    /// Read-accumulation buffer; reply frames are split off its front.
+    inbuf: Vec<u8>,
+    /// Encoded request frames not yet accepted by the socket.
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// Next correlation id (pipelined mode); restarts at 1 per attach.
+    next_id: u32,
+    /// Pipelined mode: in-flight requests by correlation id.
+    pending: HashMap<u32, Arc<WaitSlot>>,
+    /// Lockstep mode: the (single) request on the wire, FIFO.
+    inflight: VecDeque<Arc<WaitSlot>>,
+    /// Lockstep mode: requests waiting for the wire to free up.
+    backlog: VecDeque<(Vec<u8>, Arc<WaitSlot>)>,
+    /// Whether `EPOLLOUT` interest is currently registered.
+    want_out: bool,
+}
+
+impl MemberConn {
+    fn pipelined(&self) -> bool {
+        self.wire >= 4
+    }
+
+    fn in_flight(&self) -> usize {
+        self.pending.len() + self.inflight.len() + self.backlog.len()
+    }
+
+    /// Append one length-prefixed frame to the write buffer.
+    fn queue_frame(&mut self, body: &[u8]) {
+        self.outbuf.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        self.outbuf.extend_from_slice(body);
+    }
+
+    /// Lockstep: put the next backlog request on the wire if it is free.
+    fn promote_backlog(&mut self) {
+        if self.inflight.is_empty() {
+            if let Some((body, slot)) = self.backlog.pop_front() {
+                self.queue_frame(&body);
+                self.inflight.push_back(slot);
+            }
+        }
+    }
+
+    /// Fail every request this connection carries and return how many.
+    fn fail_all(&mut self, reason: &str) -> u64 {
+        let mut n = 0u64;
+        for (_, slot) in self.pending.drain() {
+            slot.complete(Err(MuxError::Transport(reason.to_string())));
+            n += 1;
+        }
+        for slot in self.inflight.drain(..) {
+            slot.complete(Err(MuxError::Transport(reason.to_string())));
+            n += 1;
+        }
+        for (_, slot) in self.backlog.drain(..) {
+            slot.complete(Err(MuxError::Transport(reason.to_string())));
+            n += 1;
+        }
+        n
+    }
+}
+
+/// A snapshot of one member's pool-side state, for tests and loadgen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemberStats {
+    /// Whether a connection is currently attached.
+    pub attached: bool,
+    /// Negotiated wire version (0 when detached).
+    pub wire: u8,
+    /// Requests submitted but not yet completed.
+    pub in_flight: usize,
+    /// Next correlation id the pipelined path would assign.
+    pub next_corr_id: u32,
+}
+
+/// Pool-wide counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Requests submitted over the pool's lifetime.
+    pub submitted: u64,
+    /// Requests completed with a reply.
+    pub completed: u64,
+    /// Requests failed with a transport error (connection death).
+    pub transport_errors: u64,
+    /// Members with an attached connection right now.
+    pub attached: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    transport_errors: AtomicU64,
+}
+
+struct Shared {
+    stop: AtomicBool,
+    wake: File,
+    ep: Epoll,
+    members: Vec<Mutex<Option<MemberConn>>>,
+    counters: Counters,
+}
+
+impl Shared {
+    fn wake_event_thread(&self) {
+        let _ = (&self.wake).write(&1u64.to_ne_bytes());
+    }
+
+    /// Tear one member's connection down, failing its waiters. Caller
+    /// must NOT hold the member lock.
+    fn kill_member(&self, idx: usize, reason: &str) {
+        let mut g = self.members[idx].lock().unwrap();
+        self.kill_locked(&mut g, reason);
+    }
+
+    fn kill_locked(&self, conn_slot: &mut Option<MemberConn>, reason: &str) {
+        if let Some(mut conn) = conn_slot.take() {
+            self.ep.del(conn.stream.as_raw_fd()).ok();
+            conn.stream.shutdown(std::net::Shutdown::Both).ok();
+            let n = conn.fail_all(reason);
+            self.counters.transport_errors.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Drive one member's socket: drain writes, accumulate reads, match
+    /// completed reply frames to waiters. Runs on the event thread (and
+    /// never blocks — the socket is non-blocking).
+    fn pump(&self, idx: usize) {
+        let mut g = self.members[idx].lock().unwrap();
+        let Some(conn) = g.as_mut() else { return };
+        if let Err(reason) = Self::pump_conn(conn, &self.counters) {
+            self.kill_locked(&mut g, &reason);
+            return;
+        }
+        // Register write interest only while bytes are queued (a
+        // level-triggered EPOLLOUT on a drained buffer would spin).
+        let Some(conn) = g.as_mut() else { return };
+        let want_out = conn.outpos < conn.outbuf.len();
+        if want_out != conn.want_out {
+            let mut events = sys::EPOLLIN | sys::EPOLLRDHUP;
+            if want_out {
+                events |= sys::EPOLLOUT;
+            }
+            if self.ep.modify(conn.stream.as_raw_fd(), events, idx as u64).is_ok() {
+                conn.want_out = want_out;
+            }
+        }
+    }
+
+    /// The I/O half of [`Shared::pump`]; `Err(reason)` condemns the
+    /// connection.
+    fn pump_conn(conn: &mut MemberConn, counters: &Counters) -> Result<(), String> {
+        // Writes first: submitted frames sit in outbuf until here.
+        while conn.outpos < conn.outbuf.len() {
+            match conn.stream.write(&conn.outbuf[conn.outpos..]) {
+                Ok(0) => return Err("connection closed mid-write".into()),
+                Ok(n) => conn.outpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("write: {e}")),
+            }
+        }
+        if conn.outpos == conn.outbuf.len() {
+            conn.outbuf.clear();
+            conn.outpos = 0;
+        }
+
+        // Reads: accumulate until WouldBlock.
+        loop {
+            let len = conn.inbuf.len();
+            let deficit = wire::frame_deficit(&conn.inbuf);
+            let grow = deficit.clamp(READ_CHUNK, MAX_READ_CHUNK);
+            conn.inbuf.resize(len + grow, 0);
+            match conn.stream.read(&mut conn.inbuf[len..]) {
+                Ok(0) => {
+                    conn.inbuf.truncate(len);
+                    return Err("connection closed by member".into());
+                }
+                Ok(n) => conn.inbuf.truncate(len + n),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    conn.inbuf.truncate(len);
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    conn.inbuf.truncate(len);
+                }
+                Err(e) => {
+                    conn.inbuf.truncate(len);
+                    return Err(format!("read: {e}"));
+                }
+            }
+        }
+
+        // Split complete reply frames and complete their waiters.
+        loop {
+            let (consumed, body) = match wire::split_frame(&conn.inbuf) {
+                Ok(Some((consumed, body))) => (consumed, body.to_vec()),
+                Ok(None) => break,
+                Err(e) => return Err(format!("bad frame: {e}")),
+            };
+            conn.inbuf.drain(..consumed);
+            if conn.pipelined() {
+                // An unwrapped or malformed reply on a pipelined
+                // connection means the streams are out of step —
+                // nothing later can be matched with confidence.
+                let (corr_id, inner) =
+                    wire::decode_corr(&body).map_err(|e| format!("reply desync: {e}"))?;
+                let Some(slot) = conn.pending.remove(&corr_id) else {
+                    return Err(format!("reply for unknown correlation id {corr_id}"));
+                };
+                slot.complete(Ok(inner.to_vec()));
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let Some(slot) = conn.inflight.pop_front() else {
+                    return Err("reply with no request in flight".into());
+                };
+                slot.complete(Ok(body));
+                counters.completed.fetch_add(1, Ordering::Relaxed);
+                conn.promote_backlog();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A reactor-driven pool of member connections: see the module docs.
+pub struct MuxPool {
+    shared: Arc<Shared>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl MuxPool {
+    /// Create a pool with `members` slots (all detached) and start its
+    /// event thread.
+    pub fn new(members: usize) -> std::io::Result<MuxPool> {
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            wake: new_eventfd()?,
+            ep: Epoll::new()?,
+            members: (0..members).map(|_| Mutex::new(None)).collect(),
+            counters: Counters::default(),
+        });
+        shared.ep.add(shared.wake.as_raw_fd(), sys::EPOLLIN, TOK_WAKE)?;
+        let shared2 = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("net-muxclient".into())
+            .spawn(move || event_loop(shared2))?;
+        Ok(MuxPool {
+            shared,
+            thread: Mutex::new(Some(thread)),
+        })
+    }
+
+    /// Number of member slots.
+    pub fn members(&self) -> usize {
+        self.shared.members.len()
+    }
+
+    /// Hand a connected, hello-negotiated client over to the pool as
+    /// member `idx`. Fails (without touching any existing attachment)
+    /// if the negotiated wire version is below 3 — such members belong
+    /// on the mutexed fallback. An existing attachment for `idx` is
+    /// killed first, failing its waiters.
+    pub fn attach(&self, idx: usize, client: BrokerClient) -> std::io::Result<()> {
+        let wire_version = client.wire_version();
+        if wire_version < 3 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                format!("member speaks wire v{wire_version} (< 3): use the mutexed client"),
+            ));
+        }
+        let stream = client.into_stream()?;
+        stream.set_nonblocking(true)?;
+        let mut g = self.shared.members[idx].lock().unwrap();
+        self.shared.kill_locked(&mut g, "replaced by reattach");
+        let events = sys::EPOLLIN | sys::EPOLLRDHUP;
+        self.shared.ep.add(stream.as_raw_fd(), events, idx as u64)?;
+        *g = Some(MemberConn {
+            stream,
+            wire: wire_version,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            next_id: 1,
+            pending: HashMap::new(),
+            inflight: VecDeque::new(),
+            backlog: VecDeque::new(),
+            want_out: false,
+        });
+        Ok(())
+    }
+
+    /// Drop member `idx`'s connection (if any), failing every waiter it
+    /// carries with [`MuxError::Transport`].
+    pub fn detach(&self, idx: usize) {
+        self.shared.kill_member(idx, "detached");
+    }
+
+    /// Whether member `idx` currently has an attached connection.
+    pub fn is_attached(&self, idx: usize) -> bool {
+        self.shared.members[idx].lock().unwrap().is_some()
+    }
+
+    /// One member's pool-side state.
+    pub fn member_stats(&self, idx: usize) -> MemberStats {
+        match self.shared.members[idx].lock().unwrap().as_ref() {
+            Some(c) => MemberStats {
+                attached: true,
+                wire: c.wire,
+                in_flight: c.in_flight(),
+                next_corr_id: c.next_id,
+            },
+            None => MemberStats {
+                attached: false,
+                wire: 0,
+                in_flight: 0,
+                next_corr_id: 0,
+            },
+        }
+    }
+
+    /// Pool-wide counters.
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.shared.counters;
+        let attached = self.shared.members.iter();
+        PoolStats {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            transport_errors: c.transport_errors.load(Ordering::Relaxed),
+            attached: attached.filter(|m| m.lock().unwrap().is_some()).count(),
+        }
+    }
+
+    /// Submit one request body (JSON or binary, unwrapped) to member
+    /// `idx` and return a waiter for its reply. Never blocks: a
+    /// detached member fails the waiter immediately with
+    /// [`MuxError::NotAttached`]. Callers that want overlap submit
+    /// several waiters before waiting on any.
+    pub fn submit(&self, idx: usize, body: &[u8]) -> Waiter {
+        let slot = WaitSlot::new();
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let mut woke = false;
+        {
+            let mut g = self.shared.members[idx].lock().unwrap();
+            match g.as_mut() {
+                None => slot.complete(Err(MuxError::NotAttached)),
+                Some(conn) => {
+                    if conn.pipelined() {
+                        let id = conn.next_id;
+                        conn.next_id = conn.next_id.wrapping_add(1).max(1);
+                        conn.queue_frame(&wire::encode_corr(id, body));
+                        conn.pending.insert(id, slot.clone());
+                    } else {
+                        conn.backlog.push_back((body.to_vec(), slot.clone()));
+                        conn.promote_backlog();
+                    }
+                    woke = true;
+                }
+            }
+        }
+        if woke {
+            self.shared.wake_event_thread();
+        }
+        Waiter { slot }
+    }
+
+    /// Submit and wait: the synchronous convenience most callers use.
+    pub fn request(&self, idx: usize, body: &[u8], timeout: Duration) -> Result<Vec<u8>, MuxError> {
+        self.submit(idx, body).wait(timeout)
+    }
+
+    /// Stop the event thread and close every connection, failing all
+    /// in-flight waiters. Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.wake_event_thread();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            t.join().ok();
+        }
+        for idx in 0..self.shared.members.len() {
+            self.shared.kill_member(idx, "pool shutdown");
+        }
+    }
+}
+
+impl Drop for MuxPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn event_loop(shared: Arc<Shared>) {
+    let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 256];
+    while !shared.stop.load(Ordering::Relaxed) {
+        let n = match shared.ep.wait(&mut events, 500) {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        let mut pump_all = false;
+        let mut touched: Vec<usize> = Vec::new();
+        for ev in events.iter().take(n) {
+            let data = ev.data;
+            if data == TOK_WAKE {
+                let mut buf = [0u8; 8];
+                let _ = (&shared.wake).read(&mut buf);
+                // A wake means *some* member has new output; pumping
+                // every member is a handful of uncontended locks and
+                // keeps the submit path free of per-member bookkeeping.
+                pump_all = true;
+            } else {
+                touched.push(data as usize);
+            }
+        }
+        if pump_all {
+            for idx in 0..shared.members.len() {
+                shared.pump(idx);
+            }
+        } else {
+            touched.sort_unstable();
+            touched.dedup();
+            for idx in touched {
+                shared.pump(idx);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::client::muxops;
+    use crate::broker::core::Broker;
+    use crate::broker::net::BrokerServer;
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
+
+    fn ping(queue: &str, token: &str) -> TaskEnvelope {
+        TaskEnvelope::new(
+            queue,
+            Payload::Control(ControlMsg::Ping {
+                token: token.into(),
+            }),
+        )
+    }
+
+    fn attach_member(pool: &MuxPool, idx: usize, addr: &str) {
+        let client = BrokerClient::connect(addr).unwrap();
+        assert_eq!(client.wire_version(), 4);
+        pool.attach(idx, client).unwrap();
+    }
+
+    #[test]
+    fn pool_roundtrips_json_and_binary_ops() {
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(1).unwrap();
+        attach_member(&pool, 0, &server.addr.to_string());
+        let t = Duration::from_secs(5);
+        let body = pool.request(0, &muxops::publish_batch_req(&[ping("q", "a")]), t).unwrap();
+        assert_eq!(muxops::publish_batch_rsp(&body).unwrap(), 1);
+        let body = pool.request(0, &muxops::depth_req(), t).unwrap();
+        assert_eq!(muxops::depth_rsp(&body).unwrap(), 1);
+        let body = pool.request(0, &muxops::fetch_n_req(&["q"], 0, 1000, 8), t).unwrap();
+        let got = muxops::fetch_n_rsp(&body).unwrap();
+        assert_eq!(got.len(), 1);
+        let body = pool.request(0, &muxops::ack_batch_req(&[got[0].tag]), t).unwrap();
+        assert_eq!(muxops::ack_batch_rsp(&body).unwrap(), 1);
+        let st = pool.stats();
+        assert_eq!(st.submitted, 4);
+        assert_eq!(st.completed, 4);
+        assert_eq!(st.transport_errors, 0);
+        pool.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_overlap_on_one_connection() {
+        // Two long-poll fetches park server-side on one connection; a
+        // publish submitted AFTER them (same connection) must still get
+        // through and wake them — impossible under lockstep, and the
+        // whole point of correlation ids.
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(1).unwrap();
+        attach_member(&pool, 0, &server.addr.to_string());
+        let w1 = pool.submit(0, &muxops::fetch_n_req(&["q"], 0, 2000, 1));
+        let w2 = pool.submit(0, &muxops::fetch_n_req(&["q"], 0, 2000, 1));
+        let tasks = [ping("q", "x"), ping("q", "y")];
+        let t0 = Instant::now();
+        let body = pool
+            .request(0, &muxops::publish_batch_req(&tasks), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(muxops::publish_batch_rsp(&body).unwrap(), 2);
+        let got1 = muxops::fetch_n_rsp(&w1.wait(Duration::from_secs(5)).unwrap()).unwrap();
+        let got2 = muxops::fetch_n_rsp(&w2.wait(Duration::from_secs(5)).unwrap()).unwrap();
+        assert_eq!(got1.len() + got2.len(), 2);
+        assert!(
+            t0.elapsed() < Duration::from_millis(1500),
+            "publish overtook the parked fetches (took {:?})",
+            t0.elapsed()
+        );
+        pool.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn v3_member_falls_back_to_lockstep() {
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(1).unwrap();
+        let client = BrokerClient::connect_with_max_wire(&server.addr.to_string(), 3).unwrap();
+        assert_eq!(client.wire_version(), 3);
+        pool.attach(0, client).unwrap();
+        assert_eq!(pool.member_stats(0).wire, 3);
+        let t = Duration::from_secs(5);
+        // Burst of pipeline-style submissions still completes, one at a
+        // time on the wire, replies matched FIFO.
+        let waiters: Vec<Waiter> = (0..8)
+            .map(|i| {
+                pool.submit(0, &muxops::publish_batch_req(&[ping("q", &format!("t{i}"))]))
+            })
+            .collect();
+        for w in waiters {
+            assert_eq!(muxops::publish_batch_rsp(&w.wait(t).unwrap()).unwrap(), 1);
+        }
+        let body = pool.request(0, &muxops::depth_req(), t).unwrap();
+        assert_eq!(muxops::depth_rsp(&body).unwrap(), 8);
+        pool.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn wire_v2_member_is_refused() {
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(1).unwrap();
+        let client = BrokerClient::connect_with_max_wire(&server.addr.to_string(), 2).unwrap();
+        assert!(pool.attach(0, client).is_err());
+        assert!(!pool.is_attached(0));
+        pool.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn detached_member_fails_fast_and_reattach_resets_ids() {
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(2).unwrap();
+        assert_eq!(
+            pool.request(1, &muxops::depth_req(), Duration::from_secs(5)),
+            Err(MuxError::NotAttached)
+        );
+        attach_member(&pool, 0, &server.addr.to_string());
+        for _ in 0..5 {
+            pool.request(0, &muxops::depth_req(), Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(pool.member_stats(0).next_corr_id, 6);
+        pool.detach(0);
+        assert!(!pool.is_attached(0));
+        attach_member(&pool, 0, &server.addr.to_string());
+        assert_eq!(pool.member_stats(0).next_corr_id, 1, "fresh ids per attach");
+        pool.request(0, &muxops::depth_req(), Duration::from_secs(5)).unwrap();
+        pool.shutdown();
+        server.shutdown();
+    }
+
+    #[test]
+    fn member_death_fails_only_that_members_waiters() {
+        let alive = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let doomed = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let pool = MuxPool::new(2).unwrap();
+        attach_member(&pool, 0, &alive.addr.to_string());
+        attach_member(&pool, 1, &doomed.addr.to_string());
+        // Park long-polls on both members, then kill one.
+        let w_alive = pool.submit(0, &muxops::fetch_n_req(&["q"], 0, 3000, 1));
+        let w_doomed = pool.submit(1, &muxops::fetch_n_req(&["q"], 0, 3000, 1));
+        doomed.shutdown_hard();
+        assert!(matches!(
+            w_doomed.wait(Duration::from_secs(5)),
+            Err(MuxError::Transport(_))
+        ));
+        // The surviving member is untouched: its parked fetch still
+        // completes once fed.
+        let publish = muxops::publish_batch_req(&[ping("q", "z")]);
+        pool.request(0, &publish, Duration::from_secs(5)).unwrap();
+        let got = muxops::fetch_n_rsp(&w_alive.wait(Duration::from_secs(5)).unwrap()).unwrap();
+        assert_eq!(got.len(), 1);
+        pool.shutdown();
+        alive.shutdown();
+    }
+}

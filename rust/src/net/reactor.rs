@@ -44,8 +44,9 @@ use super::{FrameService, ServiceReply, WakeHint};
 
 /// In-tree prototypes for the epoll/eventfd syscall surface. Constants
 /// mirror `<sys/epoll.h>` / `<sys/eventfd.h>` for every Linux target
-/// this crate supports.
-mod sys {
+/// this crate supports. Shared with the client-side event loop in
+/// [`super::muxclient`].
+pub(crate) mod sys {
     use std::os::raw::{c_int, c_uint};
 
     /// `struct epoll_event`. On x86-64 the kernel ABI packs it.
@@ -85,12 +86,12 @@ mod sys {
 }
 
 /// RAII epoll instance.
-struct Epoll {
+pub(crate) struct Epoll {
     fd: OwnedFd,
 }
 
 impl Epoll {
-    fn new() -> std::io::Result<Epoll> {
+    pub(crate) fn new() -> std::io::Result<Epoll> {
         let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -110,19 +111,23 @@ impl Epoll {
         }
     }
 
-    fn add(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+    pub(crate) fn add(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
         self.ctl(sys::EPOLL_CTL_ADD, fd, events, data)
     }
 
-    fn modify(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
+    pub(crate) fn modify(&self, fd: RawFd, events: u32, data: u64) -> std::io::Result<()> {
         self.ctl(sys::EPOLL_CTL_MOD, fd, events, data)
     }
 
-    fn del(&self, fd: RawFd) -> std::io::Result<()> {
+    pub(crate) fn del(&self, fd: RawFd) -> std::io::Result<()> {
         self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
     }
 
-    fn wait(&self, events: &mut [sys::EpollEvent], timeout_ms: c_int) -> std::io::Result<usize> {
+    pub(crate) fn wait(
+        &self,
+        events: &mut [sys::EpollEvent],
+        timeout_ms: c_int,
+    ) -> std::io::Result<usize> {
         loop {
             let rc = unsafe {
                 sys::epoll_wait(
@@ -143,7 +148,7 @@ impl Epoll {
     }
 }
 
-fn new_eventfd() -> std::io::Result<File> {
+pub(crate) fn new_eventfd() -> std::io::Result<File> {
     let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
     if fd < 0 {
         return Err(std::io::Error::last_os_error());

@@ -16,6 +16,13 @@
 //! [`V2_MAGIC`] (outside ASCII, so it can never be the start of a JSON
 //! document) — which is what lets a v2 broker drain queues persisted by a
 //! v1 deployment. Unknown versions are rejected with a clear error.
+//!
+//! Negotiated *connection* wire versions sit above the envelope codecs:
+//! v3 added delivery leases (same encodings, new ops) and v4
+//! ([`WIRE_V4`]) adds the correlation header of
+//! `broker::wire::encode_corr` so one connection can carry many requests
+//! in flight. Envelope bytes are identical across v2–v4; the version only
+//! changes what may wrap them on the socket.
 
 use super::*;
 use crate::util::json::{to_string, Json};
@@ -27,6 +34,10 @@ pub const WIRE_V2: u8 = 2;
 /// First byte of every v2 binary envelope. 0xB2 is not valid UTF-8 as a
 /// leading byte of a JSON document, so version sniffing is unambiguous.
 pub const V2_MAGIC: u8 = 0xB2;
+
+/// Highest connection wire version this build negotiates: correlated
+/// frames (request pipelining). See `broker::wire` for the header codec.
+pub const WIRE_V4: u64 = 4;
 
 // NOTE: v1 numbers ride in JSON as f64, so integer fields are exact only
 // up to 2^53. Sample indices (<= 4e7 in the paper's largest study), retry

@@ -63,12 +63,16 @@ pub fn run_pool(
 }
 
 /// [`run_pool`] over any shared [`TaskQueue`] — pass an
-/// `Arc<FederatedClient>` to drain a whole broker federation. Note the
-/// sharing model: a federation handle serializes per member, so pools
-/// that must scale over TCP members should give each worker its own
-/// handle (build workers directly with
-/// [`super::worker::Worker::over`]); local-member federations don't
-/// block under the member lock and share fine.
+/// `Arc<FederatedClient>` to drain a whole broker federation. The
+/// sharing model depends on the federation's link transport: mux-linked
+/// members (the default on Linux) pipeline every worker's fetch window
+/// concurrently over one connection per member, so the whole pool
+/// shares one handle well; mutexed members (the portable / pre-wire-v3
+/// fallback) serialize per member, so pools that must scale over such
+/// members should give each worker its own handle (build workers
+/// directly with [`super::worker::Worker::over`]). Local-member
+/// federations don't block under the member lock and share fine either
+/// way.
 pub fn run_pool_on(
     queue: Arc<dyn TaskQueue>,
     state: Option<&StateStore>,

@@ -3,10 +3,14 @@
 //! Fetching is batched: each broker round trip pulls up to a prefetch
 //! window of deliveries ([`crate::broker::core::Broker::fetch_n`] — one
 //! shard-lock pass instead of one per message) into a local buffer that
-//! the loop drains. Deliveries still buffered when the worker stops are
-//! explicitly requeued (no retry cost, mirroring AMQP redelivery) so the
-//! broker's recovery accounting stays exact — they never linger in
-//! flight waiting for consumer recovery.
+//! the loop drains, topping the window back up once it is half empty
+//! instead of draining to zero first — so consecutive windows overlap
+//! and, over a mux-linked federation handle, many workers' windows
+//! pipeline concurrently on one connection per member. Deliveries still
+//! buffered when the worker stops are explicitly requeued (no retry
+//! cost, mirroring AMQP redelivery) so the broker's recovery accounting
+//! stays exact — they never linger in flight waiting for consumer
+//! recovery.
 //!
 //! Result reporting is batched too: every step task's samples are
 //! collected into one columnar [`ResultBatch`] and flushed to the
@@ -246,13 +250,24 @@ impl Worker {
                     last_beat = Instant::now();
                 }
             }
-            if buf.is_empty() {
+            // Top the window back up once it is half empty rather than
+            // draining it to zero first: the refill still moves half a
+            // window per round trip (batching preserved), but the next
+            // window is requested while the current one is being worked
+            // — and never blocks while work is buffered (zero wait),
+            // so a slow broker can't stall a busy worker.
+            if buf.len() <= window / 2 {
+                let wait = if buf.is_empty() {
+                    Duration::from_millis(50)
+                } else {
+                    Duration::ZERO
+                };
                 buf.extend(self.queue.fetch_n(
                     consumer,
                     &queues,
                     self.cfg.prefetch,
-                    window,
-                    Duration::from_millis(50),
+                    window - buf.len(),
+                    wait,
                 ));
             }
             match buf.pop_front() {

@@ -400,14 +400,48 @@ fn federated_status_aggregates_tcp_members() {
     }
 }
 
-/// The wire-level assertions both server modes must pass identically:
-/// batch publish, status aggregation, windowed fetch + batch ack,
-/// long-poll wakeup, recovery ranges, lease expiry via a second handle,
-/// and hard-shutdown down-marking. Invoked once per mode below — the
-/// threaded-vs-reactor parity suite.
-fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
-    let (_brokers, servers, addrs) = serve_members_with(2, &cfg);
-    let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+/// The client transport a parity run drives the federation through:
+/// local in-process members (no wire at all), the portable mutexed
+/// client, or the Linux multiplexing pool. All three must produce
+/// identical results for every operation the suite exercises.
+#[derive(Clone, Copy, Debug)]
+enum ClientMode {
+    InProcess,
+    Mutex,
+    #[cfg(target_os = "linux")]
+    Mux,
+}
+
+impl ClientMode {
+    fn fed_config(self) -> FederationConfig {
+        FederationConfig {
+            client_net: match self {
+                ClientMode::InProcess | ClientMode::Mutex => merlin::net::ClientNetMode::Mutex,
+                #[cfg(target_os = "linux")]
+                ClientMode::Mux => merlin::net::ClientNetMode::Mux,
+            },
+            ..FederationConfig::default()
+        }
+    }
+}
+
+/// The wire-level assertions every server mode x client transport pair
+/// must pass identically: batch publish, status aggregation, windowed
+/// fetch + batch ack, long-poll wakeup, recovery ranges, lease expiry
+/// via a second handle, and (for the wire transports) hard-shutdown
+/// down-marking. Invoked once per mode below — the
+/// threaded-vs-reactor-vs-in-process and mux-vs-mutex parity suite.
+fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode) {
+    let (brokers, servers, addrs) = serve_members_with(2, &cfg);
+    let connect = || match client {
+        ClientMode::InProcess => {
+            // Same Broker instances, no wire: the semantic baseline the
+            // two wire transports are held to.
+            FederatedClient::local(brokers.clone(), client.fed_config())
+        }
+        _ => FederatedClient::connect(&addrs, client.fed_config()).unwrap(),
+    };
+    let fed = connect();
 
     // Batch publish over six queues; aggregated status must see it all.
     let mut tasks = Vec::new();
@@ -439,7 +473,7 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
     // empty — the park/wake path in reactor mode, a blocked connection
     // thread in threaded mode.
     let late = {
-        let pub_fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+        let pub_fed = connect();
         std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(150));
             pub_fed
@@ -472,7 +506,7 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
     );
 
     // Lease expiry via a second handle: redelivery without retry cost.
-    let silent = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+    let silent = connect();
     let c = silent.register_consumer();
     silent.set_consumer_lease(c, Some(Duration::from_millis(80)));
     let held = silent.fetch_n(c, &["m.sim"], 0, 1, Duration::from_millis(500));
@@ -490,8 +524,16 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
     fed.ack_batch(&back_tags).unwrap();
 
     // Hard shutdown severs established connections; after down_after
-    // consecutive transport errors the member is down-marked.
+    // consecutive transport errors the member is down-marked. An
+    // in-process handle has no wire to sever, so the phase is a wire
+    // transport concern only.
     let mut servers = servers;
+    if matches!(client, ClientMode::InProcess) {
+        for server in servers {
+            server.shutdown();
+        }
+        return;
+    }
     servers.remove(0).shutdown_hard();
     for _ in 0..4 {
         let _ = fed.depth();
@@ -508,11 +550,140 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig) {
 
 #[test]
 fn wire_parity_threaded_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded());
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_reactor_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor());
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex);
+}
+
+#[test]
+fn wire_parity_in_process_mode() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_mux_mode() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux);
+}
+
+/// One-connection-at-a-time TCP delay proxy: every accepted connection
+/// is relayed to `upstream`, with each client->server chunk held back
+/// by `delay`. Makes member round-trip time visible so concurrency
+/// (or its absence) shows up in wall time.
+#[cfg(target_os = "linux")]
+fn delay_proxy(upstream: String, delay: Duration) -> String {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(client) = conn else { break };
+            let Ok(server) = std::net::TcpStream::connect(&upstream) else {
+                break;
+            };
+            let (mut c_in, mut c_out) = (client.try_clone().unwrap(), client);
+            let (mut s_out, mut s_in) = (server.try_clone().unwrap(), server);
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 4096];
+                loop {
+                    match c_in.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            std::thread::sleep(delay);
+                            if s_out.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                s_out.shutdown(std::net::Shutdown::Both).ok();
+            });
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 4096];
+                loop {
+                    match s_in.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            if c_out.write_all(&buf[..n]).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                c_out.shutdown(std::net::Shutdown::Both).ok();
+            });
+        }
+    });
+    addr
+}
+
+/// The heartbeat-overlap assertion: four members each a proxy-enforced
+/// ~100ms away, one delivery held on every member, one beat. Mux-linked
+/// members' correlated heartbeats are all in flight at once, so the
+/// beat lands in about one round trip — strictly under the 4x-delay
+/// floor any serialized per-member path (the old hold-the-member-mutex
+/// -for-the-full-RTT scheme) cannot get below.
+#[cfg(target_os = "linux")]
+#[test]
+fn mux_lease_heartbeats_overlap_across_members() {
+    const DELAY: Duration = Duration::from_millis(100);
+    let (_brokers, servers, addrs) = serve_members(4);
+    let proxied: Vec<String> = addrs
+        .iter()
+        .map(|a| delay_proxy(a.clone(), DELAY))
+        .collect();
+    let cfg = FederationConfig {
+        client_net: merlin::net::ClientNetMode::Mux,
+        ..FederationConfig::default()
+    };
+    let fed = FederatedClient::connect(&proxied, cfg).unwrap();
+
+    // Heartbeats only go to members actually holding deliveries for the
+    // consumer, so pin one delivery on each of the four members:
+    // rendezvous-route queue names until every member owns one.
+    let mut chosen: Vec<String> = Vec::new();
+    let mut covered = [false; 4];
+    let mut q = 0usize;
+    while covered.iter().any(|c| !c) {
+        let name = format!("hb.q{q}");
+        q += 1;
+        let owner = fed.owner_of(&name).expect("live owner");
+        if !covered[owner] {
+            covered[owner] = true;
+            chosen.push(name);
+        }
+    }
+    let tasks: Vec<TaskEnvelope> = chosen
+        .iter()
+        .map(|q| {
+            TaskEnvelope::new(
+                q.clone(),
+                Payload::Control(ControlMsg::Ping { token: q.clone() }),
+            )
+        })
+        .collect();
+    fed.publish_batch(tasks).unwrap();
+    let consumer = fed.register_consumer();
+    fed.set_consumer_lease(consumer, Some(Duration::from_secs(30)));
+    let refs: Vec<&str> = chosen.iter().map(String::as_str).collect();
+    let got = fed.fetch_n(consumer, &refs, 0, 4, Duration::from_secs(10));
+    assert_eq!(got.len(), 4, "one delivery per member");
+
+    let t0 = Instant::now();
+    let extended = fed.heartbeat(consumer);
+    let wall = t0.elapsed();
+    assert_eq!(extended, 4, "every member's lease extended");
+    assert!(
+        wall < DELAY * 4,
+        "4-member beat took {wall:?}; serialized per-member round trips \
+         would need at least {:?}",
+        DELAY * 4
+    );
+    for server in servers {
+        server.shutdown();
+    }
 }

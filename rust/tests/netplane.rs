@@ -259,6 +259,127 @@ fn parked_fetch_wakes_on_publish() {
     server.shutdown();
 }
 
+/// Chaos: hard-kill a member broker while a batch of correlated
+/// requests is pipelined on its mux connection. Every parked waiter
+/// must resolve promptly with a transport error (no hang), a request
+/// in flight to the *other* member must complete with its own reply
+/// (no cross-talk), the dead link's fds must come back, and a
+/// reattached connection must start the correlation-id space fresh.
+#[cfg(target_os = "linux")]
+#[test]
+fn mux_pool_member_death_fails_waiters_without_crosstalk() {
+    use merlin::broker::client::muxops;
+    use merlin::net::muxclient::{MuxError, MuxPool};
+
+    fn count_fds() -> usize {
+        std::fs::read_dir("/proc/self/fd").unwrap().count()
+    }
+
+    const IN_FLIGHT: usize = 16;
+
+    // Survivor first, then the baseline: everything open at this point
+    // (survivor server, its accepted conn, the pool's epoll/eventfd and
+    // survivor link) is meant to outlive the chaos.
+    let survivor_server =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    let pool = MuxPool::new(2).unwrap();
+    pool.attach(1, BrokerClient::connect(&survivor_server.addr.to_string()).unwrap()).unwrap();
+    let baseline = count_fds();
+
+    let victim_server =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    pool.attach(0, BrokerClient::connect(&victim_server.addr.to_string()).unwrap()).unwrap();
+    assert!(count_fds() > baseline, "victim server + link hold fds");
+
+    // Pipeline a batch of long-polls onto the victim's one connection
+    // and one onto the survivor's. All get correlation ids up front; all
+    // park (both queues are empty) instead of replying.
+    let victims: Vec<_> = (0..IN_FLIGHT)
+        .map(|_| pool.submit(0, &muxops::fetch_n_req(&["np.chaos.park"], 0, 10_000, 1)))
+        .collect();
+    let survivor = pool.submit(1, &muxops::fetch_n_req(&["np.chaos.sv"], 0, 10_000, 1));
+    let stats0 = pool.member_stats(0);
+    assert_eq!(stats0.in_flight, IN_FLIGHT, "all victim requests in flight");
+    assert_eq!(stats0.next_corr_id, 1 + IN_FLIGHT as u32, "ids assigned per request");
+
+    victim_server.shutdown_hard();
+    // Wake the survivor while the victim's failure storm is in
+    // progress: its reply must route to its own waiter, untouched.
+    let mut waker = BrokerClient::connect(&survivor_server.addr.to_string()).unwrap();
+    waker.publish_batch(&[ping("np.chaos.sv", "sv-alive".into())]).unwrap();
+
+    let t0 = Instant::now();
+    for w in victims {
+        match w.wait(Duration::from_secs(5)) {
+            Err(MuxError::Transport(_)) => {}
+            other => panic!("victim waiter must see a transport error, got {other:?}"),
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "waiters failed promptly, not one-deadline-each: {:?}",
+        t0.elapsed()
+    );
+
+    let got = muxops::fetch_n_rsp(&survivor.wait(Duration::from_secs(5)).unwrap()).unwrap();
+    assert_eq!(got.len(), 1, "survivor's fetch completed");
+    match &got[0].task.payload {
+        Payload::Control(ControlMsg::Ping { token }) => {
+            assert_eq!(token, "sv-alive", "survivor reply uncorrupted by the failure storm");
+        }
+        other => panic!("unexpected payload {other:?}"),
+    }
+    drop(waker);
+
+    // Transport errors surfaced the death to the pool: the victim slot
+    // auto-detached and every failed request is counted.
+    assert!(!pool.is_attached(0), "dead member auto-detached");
+    let stats = pool.stats();
+    assert!(
+        stats.transport_errors >= IN_FLIGHT as u64,
+        "every in-flight request counted as a transport error: {stats:?}"
+    );
+    assert_eq!(stats.attached, 1, "survivor still attached");
+
+    // Every fd the victim side held — its server, its accepted conn,
+    // the pool's dead link — must come back to the OS.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if count_fds() <= baseline {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fds leaked after member death: {} > baseline {}",
+            count_fds(),
+            baseline
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Reattach to a replacement broker: the correlation-id space starts
+    // fresh and the slot serves live traffic again.
+    let replacement =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    pool.attach(0, BrokerClient::connect(&replacement.addr.to_string()).unwrap()).unwrap();
+    let fresh = pool.member_stats(0);
+    assert!(fresh.attached);
+    assert_eq!(fresh.wire, 4, "replacement negotiated v4");
+    assert_eq!(fresh.next_corr_id, 1, "reconnect reassigns ids from scratch");
+    let body = pool
+        .request(0, &muxops::depth_req(), Duration::from_secs(5))
+        .expect("reattached slot round-trips");
+    assert_eq!(muxops::depth_rsp(&body).unwrap(), 0);
+    assert_eq!(pool.member_stats(0).next_corr_id, 2, "live request consumed id 1");
+
+    pool.shutdown();
+    replacement.shutdown();
+    survivor_server.shutdown();
+}
+
 /// The backend speaks the same reactor: KV round trips work in reactor
 /// mode and hard shutdown severs established clients.
 #[cfg(target_os = "linux")]

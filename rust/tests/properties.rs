@@ -5,6 +5,7 @@
 use std::collections::BTreeSet;
 
 use merlin::broker::core::{Broker, BrokerConfig};
+use merlin::broker::wire;
 use merlin::coordinator::resubmit::ranges_of;
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::hierarchy::{expand, flat, root_task};
@@ -308,6 +309,98 @@ fn prop_v2_decoder_rejects_random_corruption() {
         let bit = 1u8 << g.u64_in(0, 7);
         corrupt[idx] ^= bit;
         let _ = ser::decode_wire(&corrupt); // must not panic
+    });
+}
+
+#[test]
+fn prop_corr_header_roundtrips_any_id_and_body() {
+    // Wire v4's correlation header must be transparent: any id, any
+    // inner body (v1 JSON or v2 binary), wrap then unwrap is identity,
+    // and the inner still decodes to the original envelope.
+    cases(0xC04A, 400, |g| {
+        let t = merlin::testing::prop::arb::envelope(g);
+        let inner = if g.chance(0.5) {
+            ser::encode(&t).into_bytes()
+        } else {
+            ser::encode_v2(&t)
+        };
+        let id = g.u64_in(0, u32::MAX as u64) as u32;
+        let framed = wire::encode_corr(id, &inner);
+        assert!(wire::is_corr(&framed));
+        // Neither inner encoding can be mistaken for a correlated body
+        // (v1 opens with '{', v2 with its own magic) — the header is
+        // sniffable, which is what lets v3 peers skip it entirely.
+        assert!(!wire::is_corr(&inner));
+        let (back_id, back_inner) = wire::decode_corr(&framed).expect("roundtrip");
+        assert_eq!(back_id, id);
+        assert_eq!(back_inner, &inner[..]);
+        assert_eq!(ser::decode_wire(back_inner).expect("inner decode"), t);
+        // Correlation headers never nest.
+        let double = wire::encode_corr(id, &framed);
+        assert!(wire::decode_corr(&double).is_err(), "nested header accepted");
+    });
+}
+
+#[test]
+fn prop_corr_header_rejects_corruption_without_desync() {
+    // Truncations inside the header (or down to an empty inner body)
+    // always error; a random bit flip never panics and never moves the
+    // frame cursor — the length-prefixed framing above the header stays
+    // in sync whatever the body bytes say.
+    cases(0xC04B, 300, |g| {
+        let t = merlin::testing::prop::arb::envelope(g);
+        let inner = ser::encode_v2(&t);
+        let id = g.u64_in(0, u32::MAX as u64) as u32;
+        let framed = wire::encode_corr(id, &inner);
+        let cut = g.usize_in(0, wire::CORR_HEADER);
+        assert!(wire::decode_corr(&framed[..cut]).is_err(), "truncated at {cut}");
+        let mut corrupt = framed.clone();
+        let idx = g.usize_in(0, corrupt.len() - 1);
+        corrupt[idx] ^= 1u8 << g.u64_in(0, 7);
+        match wire::decode_corr(&corrupt) {
+            Ok((cid, cinner)) => {
+                // Only a flip past the magic can still parse; the slice
+                // boundaries must be exactly where they always were.
+                assert!(idx >= 1, "flipped magic must not decode");
+                if (1..wire::CORR_HEADER).contains(&idx) {
+                    assert_ne!(cid, id, "flipped id byte must change the id");
+                } else {
+                    assert_eq!(cid, id);
+                }
+                assert_eq!(cinner.len(), inner.len());
+            }
+            Err(_) => {} // rejected is always acceptable — but never a panic
+        }
+        // Stream level: the flipped body still occupies exactly one
+        // length-prefixed frame, so the next frame starts where it
+        // should — corruption is contained to one request/response.
+        let mut buf = Vec::with_capacity(4 + corrupt.len());
+        buf.extend_from_slice(&(corrupt.len() as u32).to_be_bytes());
+        buf.extend_from_slice(&corrupt);
+        let (total, body) = wire::split_frame(&buf).expect("framing intact").expect("one frame");
+        assert_eq!(total, buf.len());
+        assert_eq!(body.len(), corrupt.len());
+    });
+}
+
+#[test]
+fn prop_wire_negotiation_matrix() {
+    // Version negotiation over the v3 <-> v4 matrix: the link speaks
+    // min(client, server), correlation requires both ends at v4+, and a
+    // peer advertising nothing (0) clamps to v1 instead of v0.
+    cases(0xC04C, 200, |g| {
+        let client = g.u64_in(1, 6);
+        let server = g.u64_in(1, 6);
+        let v = wire::negotiate(client, server);
+        assert_eq!(v, client.min(server));
+        assert_eq!(
+            v >= ser::WIRE_V4,
+            client >= ser::WIRE_V4 && server >= ser::WIRE_V4,
+            "correlation speaks only when both ends are v4+ ({client} vs {server})"
+        );
+        assert_eq!(wire::negotiate(0, server), 1);
+        assert_eq!(wire::negotiate(client, 0), 1);
+        assert_eq!(wire::negotiate(0, 0), 1);
     });
 }
 
