@@ -15,7 +15,9 @@ use std::time::Duration;
 
 use crate::task::TaskEnvelope;
 
-use super::core::{Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats};
+use super::core::{
+    Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+};
 
 /// Error surfaced by [`TaskQueue`] operations. Collapses the broker's
 /// semantic errors and the federation's transport errors into one
@@ -91,6 +93,24 @@ pub trait TaskQueue: Send + Sync {
         timeout: Duration,
     ) -> Vec<Delivery>;
 
+    /// [`TaskQueue::fetch_n`] advertising a receiver byte budget
+    /// (`0` = unlimited): the queue service's grant scheduler will not
+    /// hand this window more payload bytes than the receiver can absorb.
+    /// The default ignores the budget — implementations with a grant
+    /// scheduler (the in-process broker, the federation) override it.
+    fn fetch_n_budgeted(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        let _ = budget_bytes;
+        self.fetch_n(consumer, queues, prefetch, max_n, timeout)
+    }
+
     /// Acknowledge one delivery.
     fn ack(&self, tag: u64) -> Result<(), QueueError>;
 
@@ -152,6 +172,14 @@ pub trait TaskQueue: Send + Sync {
     /// Durability counters (summed; `durable` if any member is).
     fn durability_stats(&self) -> DurabilityStats;
 
+    /// Grant-scheduler counters (summed across members;
+    /// `grant_queue_len`/`overcommit_active` are point-in-time sums).
+    /// The default reports all zeros — implementations backed by a
+    /// grant scheduler override it.
+    fn sched_stats(&self) -> SchedStats {
+        SchedStats::default()
+    }
+
     /// Total ready messages (summed).
     fn depth(&self) -> usize;
 
@@ -200,6 +228,18 @@ impl TaskQueue for Broker {
         timeout: Duration,
     ) -> Vec<Delivery> {
         Broker::fetch_n(self, consumer, queues, prefetch, max_n, timeout)
+    }
+
+    fn fetch_n_budgeted(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        Broker::fetch_n_budgeted(self, consumer, queues, prefetch, max_n, budget_bytes, timeout)
     }
 
     fn ack(&self, tag: u64) -> Result<(), QueueError> {
@@ -259,6 +299,10 @@ impl TaskQueue for Broker {
         Broker::durability_stats(self)
     }
 
+    fn sched_stats(&self) -> SchedStats {
+        Broker::sched_stats(self)
+    }
+
     fn depth(&self) -> usize {
         Broker::depth(self)
     }
@@ -286,6 +330,17 @@ pub(crate) fn merge_queue_stats(into: &mut QueueStats, from: &QueueStats) {
     into.dead_lettered += from.dead_lettered;
     into.lease_expired += from.lease_expired;
     into.bytes_published += from.bytes_published;
+    into.granted += from.granted;
+}
+
+/// Merge two [`SchedStats`] (federation aggregation helper). Lifetime
+/// counters sum; the point-in-time gauges sum too — across a federation
+/// they read as "grant backlog fleet-wide".
+pub(crate) fn merge_sched_stats(into: &mut SchedStats, from: &SchedStats) {
+    into.granted += from.granted;
+    into.grant_queue_len += from.grant_queue_len;
+    into.overcommit_active += from.overcommit_active;
+    into.fruitless_scans += from.fruitless_scans;
 }
 
 /// Merge two [`DurabilityStats`] (federation aggregation helper).
@@ -313,7 +368,11 @@ mod tests {
         .unwrap();
         assert_eq!(q.depth(), 1);
         let c = q.register_consumer();
-        let got = q.fetch_n(c, &["q"], 0, 8, Duration::from_millis(200));
+        // A 1-byte budget through the trait seam still yields one
+        // message (never-split-below-one), proving the budgeted path is
+        // wired to the broker's grant scheduler, not the ignoring
+        // default.
+        let got = q.fetch_n_budgeted(c, &["q"], 0, 8, 1, Duration::from_millis(200));
         assert_eq!(got.len(), 1);
         q.ack(got[0].tag).unwrap();
         assert_eq!(q.stats("q").acked, 1);

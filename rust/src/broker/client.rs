@@ -17,7 +17,9 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{BrokerTotals, ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats};
+use super::core::{
+    BrokerTotals, ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+};
 use super::wire::{self, BinMsg, Frame, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
@@ -27,6 +29,11 @@ pub struct BrokerClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     wire: u8,
+    /// Server advertised the grant scheduler (`hello` capability): PopN
+    /// may carry the optional trailing byte-budget field. Against older
+    /// servers the field is omitted entirely — their strict decoders
+    /// reject trailing bytes.
+    grants: bool,
 }
 
 /// Errors surfaced by broker/backend client calls.
@@ -74,6 +81,7 @@ impl BrokerClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
             wire: 1,
+            grants: false,
         };
         // Negotiate: an old server answers `hello` with an unknown-op
         // error — that is the v1 fallback, not a failure.
@@ -81,7 +89,10 @@ impl BrokerClient {
             ("op", Json::str("hello")),
             ("max_wire", Json::num(max_wire as f64)),
         ])) {
-            Ok(resp) => client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8,
+            Ok(resp) => {
+                client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8;
+                client.grants = resp.get("grants").as_bool().unwrap_or(false);
+            }
             Err(ClientError::Server(_)) => client.wire = 1,
             Err(e) => {
                 return Err(std::io::Error::new(
@@ -97,6 +108,12 @@ impl BrokerClient {
     /// 3 = batches + delivery leases, 4 = v3 plus correlated frames).
     pub fn wire_version(&self) -> u8 {
         self.wire
+    }
+
+    /// Whether the server advertised the grant-based delivery scheduler
+    /// (and so understands the PopN byte-budget field).
+    pub fn grants(&self) -> bool {
+        self.grants
     }
 
     /// Tear the client down to its raw negotiated socket — the handoff
@@ -268,12 +285,28 @@ impl BrokerClient {
         timeout_ms: u64,
         max: usize,
     ) -> Result<Vec<Delivery>, ClientError> {
+        self.fetch_n_budgeted(queues, prefetch, timeout_ms, max, 0)
+    }
+
+    /// [`BrokerClient::fetch_n`] advertising a receiver byte budget:
+    /// the server's grant scheduler will not hand this window more than
+    /// `budget_bytes` of task payload (0 = no budget). Silently ignored
+    /// (field omitted) against servers that predate grants.
+    pub fn fetch_n_budgeted(
+        &mut self,
+        queues: &[&str],
+        prefetch: usize,
+        timeout_ms: u64,
+        max: usize,
+        budget_bytes: u64,
+    ) -> Result<Vec<Delivery>, ClientError> {
         if self.wire >= 2 {
             let msg = BinMsg::PopN {
                 max: max as u64,
                 prefetch: prefetch as u64,
                 timeout_ms,
                 queues: queues.iter().map(|q| q.to_string()).collect(),
+                budget: if self.grants { budget_bytes } else { 0 },
             };
             match self.call_bin(&msg)? {
                 BinMsg::Deliveries(items) => deliveries_from(items),
@@ -440,6 +473,14 @@ impl BrokerClient {
         Ok(totals_from(&r))
     }
 
+    /// The server's delivery-scheduler counters (grants, parked grant
+    /// queue, overcommit margin, fruitless scans). Errors against
+    /// servers that predate the grant scheduler.
+    pub fn sched_stats(&mut self) -> Result<SchedStats, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("sched"))]))?;
+        Ok(sched_stats_from(&r))
+    }
+
     /// Sample ranges `[lo, hi)` for (`study`, `step`) still queued or in
     /// flight on `queue` — the server-side half of recovery-aware
     /// resubmission (see
@@ -515,6 +556,17 @@ fn queue_stats_from(v: &Json) -> QueueStats {
         dead_lettered: v.get("dead_lettered").as_u64().unwrap_or(0),
         lease_expired: v.get("lease_expired").as_u64().unwrap_or(0),
         bytes_published: v.get("bytes_published").as_u64().unwrap_or(0),
+        granted: v.get("granted").as_u64().unwrap_or(0),
+    }
+}
+
+/// Parse a `sched` reply (shared with [`muxops`]).
+fn sched_stats_from(r: &Json) -> SchedStats {
+    SchedStats {
+        granted: r.get("granted").as_u64().unwrap_or(0),
+        grant_queue_len: r.get("grant_queue_len").as_u64().unwrap_or(0) as usize,
+        overcommit_active: r.get("overcommit_active").as_u64().unwrap_or(0) as usize,
+        fruitless_scans: r.get("fruitless_scans").as_u64().unwrap_or(0),
     }
 }
 
@@ -678,13 +730,28 @@ pub mod muxops {
         ok_count(body)
     }
 
-    /// `PopN` window request.
+    /// `PopN` window request (no receiver budget — legacy-identical
+    /// encoding).
     pub fn fetch_n_req(queues: &[&str], prefetch: usize, timeout_ms: u64, max: usize) -> Vec<u8> {
+        fetch_n_req_budgeted(queues, prefetch, timeout_ms, max, 0)
+    }
+
+    /// `PopN` window request advertising a receiver byte budget. Only
+    /// send a nonzero budget to members whose hello advertised
+    /// `grants` — older decoders reject the trailing field.
+    pub fn fetch_n_req_budgeted(
+        queues: &[&str],
+        prefetch: usize,
+        timeout_ms: u64,
+        max: usize,
+        budget_bytes: u64,
+    ) -> Vec<u8> {
         wire::encode_bin(&BinMsg::PopN {
             max: max as u64,
             prefetch: prefetch as u64,
             timeout_ms,
             queues: queues.iter().map(|q| q.to_string()).collect(),
+            budget: budget_bytes,
         })
     }
 
@@ -864,5 +931,15 @@ pub mod muxops {
     /// Counters returned by a [`durability_req`].
     pub fn durability_rsp(body: &[u8]) -> Result<DurabilityStats, ClientError> {
         Ok(durability_from(&json_reply(body)?))
+    }
+
+    /// `sched` (grant-scheduler counters) request.
+    pub fn sched_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("sched"))]))
+    }
+
+    /// Counters returned by a [`sched_req`].
+    pub fn sched_rsp(body: &[u8]) -> Result<SchedStats, ClientError> {
+        Ok(sched_stats_from(&json_reply(body)?))
     }
 }

@@ -3,8 +3,9 @@
 //!
 //! The queue space is split across a fixed array of [`NUM_SHARDS`] shards,
 //! each owning the queues whose name hashes into it. A shard is an
-//! independent `Mutex<ShardState>` + `Condvar`: publishes, pops, acks, and
-//! requeues for queues in different shards never contend. Delivery tags
+//! independent `Mutex<ShardState>` plus a grant queue of parked fetches:
+//! publishes, pops, acks, and requeues for queues in different shards
+//! never contend. Delivery tags
 //! encode their shard in the low [`SHARD_BITS`] bits, so `ack`/`nack`
 //! resolve their shard without any global lookup. Aggregate figures
 //! (depth, inflight, lifetime totals) are lock-free atomic counters.
@@ -40,9 +41,27 @@
 //! long-lived orchestrators call from their poll loops). This is what
 //! keeps a round of a steered study from stranding on a worker that died
 //! holding its prefetch window.
+//!
+//! ## Receiver-driven grants (overload control)
+//!
+//! Delivery order and wakeup order are both **scheduled**, not lock
+//! acquisition order. Each queue keeps its ready messages in per-wave
+//! sub-heaps keyed by the task's `(study, step)` identity; the default
+//! [`SchedMode::Srwf`] policy grants from the wave with the fewest
+//! remaining ready messages first (message priority, then global FIFO
+//! seq, break ties), so a short late-arriving wave is not stuck behind a
+//! hundred-thousand-sample sweep. Parked fetches join a per-shard FIFO
+//! **grant queue**; every readiness event (publish, requeue, lease reap,
+//! consumer recovery) wakes exactly `ready +`
+//! [`BrokerConfig::overcommit_degree`] matching waiters — targeted,
+//! count-limited wakeups instead of a notify-all thundering herd. The
+//! overcommit margin keeps a stalled grantee from idling a queue.
+//! Budgeted fetches ([`Broker::fetch_n_budgeted`]) additionally cap a
+//! window by advertised bytes; a window is never split below one
+//! message. See DESIGN.md "Receiver-Driven Overload Control".
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -77,6 +96,23 @@ fn group_by_shard<T>(items: impl Iterator<Item = (usize, T)>) -> Vec<(usize, Vec
     groups
 }
 
+/// Delivery scheduling policy (see the module docs and DESIGN.md
+/// "Receiver-Driven Overload Control").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Shortest-remaining-wave-first: rank ready messages by the ready
+    /// depth of their `(study, step)` wave, smallest first, with message
+    /// priority and global FIFO seq as tiebreaks. Tasks with no wave
+    /// identity (control, aggregates) share one wave per queue, so
+    /// single-wave traffic orders exactly like [`SchedMode::Fifo`].
+    #[default]
+    Srwf,
+    /// Legacy order: message priority, then global FIFO seq — exactly
+    /// the pre-grant broker. The parity cells and `--no-grants` runs
+    /// pin this.
+    Fifo,
+}
+
 /// Broker tunables. Defaults model the paper's deployment.
 #[derive(Debug, Clone)]
 pub struct BrokerConfig {
@@ -91,6 +127,13 @@ pub struct BrokerConfig {
     /// own lease (ms; 0 = deliveries are unleased and sit in flight until
     /// acked or their consumer is recovered — the classic AMQP model).
     pub default_lease_ms: u64,
+    /// Delivery scheduling policy (see [`SchedMode`]).
+    pub sched: SchedMode,
+    /// Grant-queue waiters woken *beyond* instantaneous ready capacity
+    /// on each readiness event, so a stalled grantee cannot idle a
+    /// queue. 0 = wake exactly as many waiters as there are ready
+    /// messages.
+    pub overcommit_degree: usize,
 }
 
 impl Default for BrokerConfig {
@@ -99,6 +142,8 @@ impl Default for BrokerConfig {
             max_message_bytes: 2 << 30,
             max_depth: 0,
             default_lease_ms: 0,
+            sched: SchedMode::Srwf,
+            overcommit_degree: 1,
         }
     }
 }
@@ -157,6 +202,9 @@ struct Queued {
     /// Durable entry id (the WAL `Enqueue` record's LSN); 0 when the
     /// broker runs without durability.
     entry: u64,
+    /// Wire-encoded size (byte-budget accounting; approximate on
+    /// recovery, exact on publish).
+    bytes: usize,
     task: TaskEnvelope,
 }
 
@@ -187,6 +235,8 @@ struct InFlight {
     consumer: u64,
     /// Durable entry id (see [`Queued::entry`]).
     entry: u64,
+    /// Wire-encoded size (carried so requeues keep budget accounting).
+    bytes: usize,
     /// Visibility deadline in ms since broker start (`None` = unleased:
     /// the delivery waits for ack or consumer recovery, never expires).
     lease_deadline: Option<u64>,
@@ -224,6 +274,28 @@ pub struct QueueStats {
     pub lease_expired: u64,
     /// Lifetime bytes published (wire encoding).
     pub bytes_published: u64,
+    /// Lifetime deliveries made by the grant scheduler
+    /// ([`SchedMode::Srwf`]); stays 0 under [`SchedMode::Fifo`], which
+    /// is how `merlin status` shows whether grants are live.
+    pub granted: u64,
+}
+
+/// Point-in-time grant-scheduler report (see [`Broker::sched_stats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedStats {
+    /// Lifetime deliveries granted under [`SchedMode::Srwf`] (all
+    /// queues; 0 under [`SchedMode::Fifo`]).
+    pub granted: u64,
+    /// Fetches currently parked waiting for a grant (per-shard grant
+    /// queues plus cross-shard waiters).
+    pub grant_queue_len: usize,
+    /// Waiters currently woken *beyond* instantaneous ready capacity
+    /// (the [`BrokerConfig::overcommit_degree`] margin) that have not
+    /// yet rescanned.
+    pub overcommit_active: usize,
+    /// Lifetime fetch scan passes that found nothing ready (the bounded
+    /// rescan counter in [`Broker::fetch_n`], previously invisible).
+    pub fruitless_scans: u64,
 }
 
 /// Lifetime totals across all queues, read from lock-free counters.
@@ -285,10 +357,149 @@ pub struct DurabilityStats {
     pub recovered: u64,
 }
 
+/// Wave identity of a queued task: `(study_id, step_name)` for step and
+/// expansion work, `None` for everything else (control, aggregates), so
+/// wave-less traffic shares one sub-heap per queue and orders exactly
+/// like the legacy single-heap broker.
+type WaveKey = Option<(String, String)>;
+
+/// Wave identity of a task (see [`WaveKey`]).
+fn wave_key(task: &TaskEnvelope) -> WaveKey {
+    let template = match &task.payload {
+        Payload::Step(s) => &s.template,
+        Payload::Expansion(e) => &e.template,
+        _ => return None,
+    };
+    Some((template.study_id.clone(), template.step_name.clone()))
+}
+
+/// One queue's best ready message under a scheduling mode, as a value
+/// the cross-queue/cross-shard selection loops can compare without
+/// holding references into the heaps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Candidate {
+    /// Ready depth of the message's wave (SRWF's primary rank).
+    remaining: usize,
+    priority: u8,
+    seq: u64,
+    bytes: usize,
+}
+
+impl Candidate {
+    /// Whether this candidate should be delivered before `other`.
+    /// Deterministic in both modes: `seq` is globally unique.
+    fn beats(&self, other: &Candidate, mode: SchedMode) -> bool {
+        match mode {
+            SchedMode::Srwf => {
+                (self.remaining, Reverse(self.priority), self.seq)
+                    < (other.remaining, Reverse(other.priority), other.seq)
+            }
+            SchedMode::Fifo => {
+                (self.priority, Reverse(self.seq)) > (other.priority, Reverse(other.seq))
+            }
+        }
+    }
+}
+
 #[derive(Default)]
 struct QueueState {
-    heap: BinaryHeap<Queued>,
+    /// Ready messages, split into one priority heap per wave. SRWF ranks
+    /// waves by `len()` (the incrementally-tracked remaining depth);
+    /// FIFO mode takes the best head across waves, which is exactly the
+    /// old single-heap order.
+    waves: HashMap<WaveKey, BinaryHeap<Queued>>,
     stats: QueueStats,
+}
+
+impl QueueState {
+    fn push(&mut self, m: Queued) {
+        self.waves.entry(wave_key(&m.task)).or_default().push(m);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.waves.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.waves.values().map(BinaryHeap::len).sum()
+    }
+
+    fn iter(&self) -> impl Iterator<Item = &Queued> {
+        self.waves.values().flat_map(|h| h.iter())
+    }
+
+    /// Drop every ready message (the purge path). Entry ids are
+    /// returned for WAL marking.
+    fn clear(&mut self) -> Vec<u64> {
+        let entries = self.iter().map(|m| m.entry).collect();
+        self.waves.clear();
+        entries
+    }
+
+    /// The wave this queue would deliver from next under `mode`, and
+    /// its head as a comparable candidate.
+    fn best_wave(&self, mode: SchedMode) -> Option<(&WaveKey, Candidate)> {
+        let mut best: Option<(&WaveKey, Candidate)> = None;
+        for (key, heap) in &self.waves {
+            let Some(head) = heap.peek() else { continue };
+            let cand = Candidate {
+                remaining: heap.len(),
+                priority: head.priority,
+                seq: head.seq,
+                bytes: head.bytes,
+            };
+            let better = match best.as_ref() {
+                Some((_, b)) => cand.beats(b, mode),
+                None => true,
+            };
+            if better {
+                best = Some((key, cand));
+            }
+        }
+        best
+    }
+
+    fn peek_best(&self, mode: SchedMode) -> Option<Candidate> {
+        self.best_wave(mode).map(|(_, c)| c)
+    }
+
+    /// Pop the message [`QueueState::peek_best`] selected. Empty wave
+    /// heaps are removed so wave counts stay meaningful (and `waves`
+    /// doesn't leak one entry per completed wave).
+    fn pop_best(&mut self, mode: SchedMode) -> Option<Queued> {
+        let key = self.best_wave(mode)?.0.clone();
+        let heap = self.waves.get_mut(&key).unwrap();
+        let msg = heap.pop();
+        if heap.is_empty() {
+            self.waves.remove(&key);
+        }
+        msg
+    }
+}
+
+/// One parked fetch in a shard's grant queue: a private condvar so the
+/// scheduler can wake *exactly this* waiter, in FIFO park order —
+/// never a notify-all over every parked fetch.
+struct GrantSlot {
+    /// True once granted (set by the waker, read by the waiter).
+    granted: Mutex<bool>,
+    cv: Condvar,
+    /// Queues the waiter can consume from (wakeup targeting filter).
+    queues: Vec<String>,
+    /// Whether this grant was issued beyond instantaneous ready
+    /// capacity (the overcommit margin); cleared when the waiter wakes.
+    overcommitted: std::sync::atomic::AtomicBool,
+}
+
+impl GrantSlot {
+    fn new(queues: &[&str]) -> Arc<GrantSlot> {
+        Arc::new(GrantSlot {
+            granted: Mutex::new(false),
+            cv: Condvar::new(),
+            queues: queues.iter().map(|q| q.to_string()).collect(),
+            overcommitted: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
 }
 
 #[derive(Default)]
@@ -301,6 +512,10 @@ struct ShardState {
     /// push a fresh entry, so reaping re-checks each popped entry against
     /// the delivery's *current* deadline before acting on it.
     leases: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Parked fetches waiting for this shard's queues, FIFO by park
+    /// time. Readiness events pop matching slots (count-limited) and
+    /// wake them individually; waiters that time out remove themselves.
+    grant_q: VecDeque<Arc<GrantSlot>>,
     /// Write-ahead log of this shard (None = in-memory broker). Living
     /// inside the shard state means appends are serialized by the shard
     /// lock, so log order always matches the logical mutation order.
@@ -312,7 +527,6 @@ const NO_EXPIRY: u64 = u64::MAX;
 
 struct Shard {
     state: Mutex<ShardState>,
-    cv: Condvar,
     /// Earliest lease deadline among this shard's deliveries (ms since
     /// broker start; [`NO_EXPIRY`] when none). Written only under the
     /// shard lock but read lock-free by the fetch path, so unleased
@@ -324,7 +538,6 @@ impl Default for Shard {
     fn default() -> Self {
         Self {
             state: Mutex::default(),
-            cv: Condvar::new(),
             next_expiry: AtomicU64::new(NO_EXPIRY),
         }
     }
@@ -368,6 +581,14 @@ struct Inner {
     event_cv: Condvar,
     event_seq: AtomicU64,
     multi_waiters: AtomicUsize,
+    /// Grant-scheduler counters (see [`SchedStats`]).
+    granted: AtomicU64,
+    overcommit_active: AtomicUsize,
+    fruitless_scans: AtomicU64,
+    /// Readiness callback `(queue, count)` invoked (outside the shard
+    /// lock) whenever messages become ready — the seam an event-driven
+    /// server uses to wake *its* parked connections without polling.
+    ready_hook: RwLock<Option<Arc<dyn Fn(&str, usize) + Send + Sync>>>,
     /// Durability counters (see [`DurabilityStats`]); `durable` is set
     /// once by the constructor.
     durable: bool,
@@ -420,6 +641,10 @@ impl Broker {
                 event_cv: Condvar::new(),
                 event_seq: AtomicU64::new(0),
                 multi_waiters: AtomicUsize::new(0),
+                granted: AtomicU64::new(0),
+                overcommit_active: AtomicUsize::new(0),
+                fruitless_scans: AtomicU64::new(0),
+                ready_hook: RwLock::new(None),
                 durable,
                 wal_records: AtomicU64::new(0),
                 wal_fsyncs: AtomicU64::new(0),
@@ -490,12 +715,14 @@ impl Broker {
                 // order, so FIFO-within-priority survives recovery.
                 for (entry, task) in replayed.live {
                     let seq = broker.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                    let bytes = ser::encode(&task).len();
                     let q = s.queues.entry(task.queue.clone()).or_default();
                     q.stats.ready += 1;
-                    q.heap.push(Queued {
+                    q.push(Queued {
                         priority: task.priority,
                         seq,
                         entry,
+                        bytes,
                         task,
                     });
                 }
@@ -614,7 +841,7 @@ impl Broker {
         }
         let mut entries: Vec<(u64, Vec<u8>)> = Vec::new();
         for q in s.queues.values() {
-            for m in q.heap.iter() {
+            for m in q.iter() {
                 entries.push((m.entry, ser::encode_v2(&m.task)));
             }
         }
@@ -767,6 +994,8 @@ impl Broker {
             return 0;
         }
         let mut expired_consumers: Vec<u64> = Vec::new();
+        let mut readied: HashMap<String, usize> = HashMap::new();
+        let wake;
         {
             let mut s = shard.state.lock().unwrap();
             while let Some(&Reverse((deadline, tag))) = s.leases.peek() {
@@ -786,15 +1015,17 @@ impl Broker {
                 }
                 let inf = s.inflight.remove(&tag).unwrap();
                 let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                *readied.entry(inf.queue.clone()).or_default() += 1;
                 let q = s.queues.entry(inf.queue.clone()).or_default();
                 q.stats.unacked = q.stats.unacked.saturating_sub(1);
                 q.stats.requeued += 1;
                 q.stats.lease_expired += 1;
                 q.stats.ready += 1;
-                q.heap.push(Queued {
+                q.push(Queued {
                     priority: inf.task.priority,
                     seq,
                     entry: inf.entry,
+                    bytes: inf.bytes,
                     task: inf.task,
                 });
                 expired_consumers.push(inf.consumer);
@@ -803,6 +1034,9 @@ impl Broker {
             // also hold it), so this store cannot race a fetch_min.
             let next = s.leases.peek().map(|r| r.0 .0).unwrap_or(NO_EXPIRY);
             shard.next_expiry.store(next, Ordering::Relaxed);
+            let names: Vec<&str> = readied.keys().map(String::as_str).collect();
+            let total: usize = readied.values().sum();
+            wake = self.take_grants(&mut s, &names, total);
         }
         let n = expired_consumers.len();
         if n > 0 {
@@ -821,7 +1055,10 @@ impl Broker {
                 }
                 self.dec_held(c, k);
             }
-            shard.cv.notify_all();
+            Self::wake_grants(wake);
+            for (qn, k) in &readied {
+                self.notify_ready(qn, *k);
+            }
             self.ring_multi();
         }
         n
@@ -895,6 +1132,86 @@ impl Broker {
         }
     }
 
+    /// Pop up to `ready + overcommit_degree` grant-queue slots whose
+    /// queue filter intersects `queues`, in FIFO park order, marking the
+    /// ones beyond `ready` as overcommitted. Called with the shard lock
+    /// held; the returned slots are woken *after* it is released (see
+    /// [`Broker::wake_grants`]). Non-matching waiters are skipped, not
+    /// woken — this is the targeted replacement for the old per-shard
+    /// `notify_all` herd.
+    fn take_grants(
+        &self,
+        s: &mut ShardState,
+        queues: &[&str],
+        ready: usize,
+    ) -> Vec<Arc<GrantSlot>> {
+        if ready == 0 || s.grant_q.is_empty() {
+            return Vec::new();
+        }
+        let budget = ready + self.inner.cfg.overcommit_degree;
+        let mut taken = Vec::new();
+        let mut i = 0;
+        while i < s.grant_q.len() && taken.len() < budget {
+            let matches = s.grant_q[i]
+                .queues
+                .iter()
+                .any(|q| queues.contains(&q.as_str()));
+            if !matches {
+                i += 1;
+                continue;
+            }
+            let slot = s.grant_q.remove(i).unwrap();
+            if taken.len() >= ready {
+                slot.overcommitted
+                    .store(true, std::sync::atomic::Ordering::Relaxed);
+                self.inner.overcommit_active.fetch_add(1, Ordering::Relaxed);
+            }
+            taken.push(slot);
+        }
+        taken
+    }
+
+    /// Wake previously-taken grant slots — exactly these waiters, each
+    /// on its own condvar.
+    fn wake_grants(slots: Vec<Arc<GrantSlot>>) {
+        for slot in slots {
+            *slot.granted.lock().unwrap() = true;
+            slot.cv.notify_one();
+        }
+    }
+
+    /// Install (or clear) the readiness callback: `hook(queue, count)`
+    /// runs after every event that makes messages ready (publish,
+    /// requeue, lease reap, consumer recovery), outside any shard lock.
+    /// The reactor-mode broker server uses this to wake its parked
+    /// long-poll connections without a blind retry tick.
+    pub fn set_ready_hook(&self, hook: Option<Arc<dyn Fn(&str, usize) + Send + Sync>>) {
+        *self.inner.ready_hook.write().unwrap() = hook;
+    }
+
+    /// Invoke the readiness hook, if installed. Never called under a
+    /// shard lock (the hook may take its own locks).
+    fn notify_ready(&self, queue: &str, count: usize) {
+        let hook = self.inner.ready_hook.read().unwrap().clone();
+        if let Some(h) = hook {
+            h(queue, count);
+        }
+    }
+
+    /// Point-in-time grant-scheduler report.
+    pub fn sched_stats(&self) -> SchedStats {
+        let mut parked = self.inner.multi_waiters.load(Ordering::SeqCst);
+        for shard in &self.inner.shards {
+            parked += shard.state.lock().unwrap().grant_q.len();
+        }
+        SchedStats {
+            granted: self.inner.granted.load(Ordering::Relaxed),
+            grant_queue_len: parked,
+            overcommit_active: self.inner.overcommit_active.load(Ordering::Relaxed),
+            fruitless_scans: self.inner.fruitless_scans.load(Ordering::Relaxed),
+        }
+    }
+
     /// Publish one task to its queue. Size accounting uses the wire
     /// encoding, exactly what the TCP path transmits.
     pub fn publish(&self, task: TaskEnvelope) -> Result<(), BrokerError> {
@@ -915,6 +1232,8 @@ impl Broker {
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let si = shard_of(&task.queue);
         let shard = &self.inner.shards[si];
+        let qname = task.queue.clone();
+        let wake;
         {
             let mut s = shard.state.lock().unwrap();
             // Write-ahead: the log captures the task before the queue
@@ -931,23 +1250,25 @@ impl Broker {
                     return Err(BrokerError::Wal(e.to_string()));
                 }
             }
-            let q = s.queues.entry(task.queue.clone()).or_default();
+            let q = s.queues.entry(qname.clone()).or_default();
             q.stats.published += 1;
             q.stats.bytes_published += bytes as u64;
             q.stats.ready += 1;
-            q.heap.push(Queued {
+            q.push(Queued {
                 priority: task.priority,
                 seq,
                 entry,
+                bytes,
                 task,
             });
             self.maybe_snapshot(&mut s);
+            // Targeted: only waiters whose filter covers this queue are
+            // woken, one message's worth plus the overcommit margin.
+            wake = self.take_grants(&mut s, &[qname.as_str()], 1);
         }
         self.inner.published.fetch_add(1, Ordering::Relaxed);
-        // notify_all, not notify_one: waiters on this shard's condvar
-        // filter by queue name, so a single wakeup can be absorbed by a
-        // consumer of a *different* queue in the same shard and lost.
-        shard.cv.notify_all();
+        Self::wake_grants(wake);
+        self.notify_ready(&qname, 1);
         self.ring_multi();
         Ok(())
     }
@@ -1035,22 +1356,32 @@ impl Broker {
                         return Err(BrokerError::Wal(e.to_string()));
                     }
                 }
+                let mut readied: HashMap<String, usize> = HashMap::new();
                 for ((t, bytes, seq), entry) in group.into_iter().zip(entries) {
+                    *readied.entry(t.queue.clone()).or_default() += 1;
                     let q = s.queues.entry(t.queue.clone()).or_default();
                     q.stats.published += 1;
                     q.stats.bytes_published += bytes as u64;
                     q.stats.ready += 1;
-                    q.heap.push(Queued {
+                    q.push(Queued {
                         priority: t.priority,
                         seq,
                         entry,
+                        bytes,
                         task: t,
                     });
                 }
                 self.maybe_snapshot(&mut s);
+                let names: Vec<&str> = readied.keys().map(String::as_str).collect();
+                let total: usize = readied.values().sum();
+                let wake = self.take_grants(&mut s, &names, total);
+                drop(s);
+                Self::wake_grants(wake);
+                for (qn, k) in &readied {
+                    self.notify_ready(qn, *k);
+                }
             }
             self.inner.published.fetch_add(count, Ordering::Relaxed);
-            shard.cv.notify_all();
         }
         self.ring_multi();
         Ok(())
@@ -1082,7 +1413,10 @@ impl Broker {
     }
 
     /// Pop the best ready message among `qnames` (all owned by shard `si`)
-    /// while holding that shard's lock. Returns false when none is ready.
+    /// while holding that shard's lock. Returns false when none is ready
+    /// or the next candidate would overflow `budget_left` (the byte
+    /// budget never splits below one message: the first pop always
+    /// proceeds so a tiny budget still makes progress).
     /// `lease_ms` > 0 stamps the delivery with a visibility deadline.
     fn pop_one_locked(
         &self,
@@ -1091,25 +1425,39 @@ impl Broker {
         consumer: u64,
         lease_ms: u64,
         qnames: &[&str],
+        budget_left: &mut u64,
         out: &mut Vec<Delivery>,
     ) -> bool {
-        let best = qnames
-            .iter()
-            .filter_map(|n| {
-                s.queues
-                    .get(*n)
-                    .and_then(|q| q.heap.peek())
-                    .map(|m| (m.priority, std::cmp::Reverse(m.seq), *n))
-            })
-            .max();
-        let Some((_, _, name)) = best else {
+        let mode = self.inner.cfg.sched;
+        let mut best: Option<(Candidate, &str)> = None;
+        for n in qnames {
+            let Some(cand) = s.queues.get(*n).and_then(|q| q.peek_best(mode)) else {
+                continue;
+            };
+            let better = match best.as_ref() {
+                Some((b, _)) => cand.beats(b, mode),
+                None => true,
+            };
+            if better {
+                best = Some((cand, *n));
+            }
+        }
+        let Some((cand, name)) = best else {
             return false;
         };
+        if !out.is_empty() && (cand.bytes as u64) > *budget_left {
+            return false;
+        }
         let q = s.queues.get_mut(name).unwrap();
-        let msg = q.heap.pop().unwrap();
+        let msg = q.pop_best(mode).unwrap();
         q.stats.ready -= 1;
         q.stats.delivered += 1;
         q.stats.unacked += 1;
+        if mode == SchedMode::Srwf {
+            q.stats.granted += 1;
+            self.inner.granted.fetch_add(1, Ordering::Relaxed);
+        }
+        *budget_left = budget_left.saturating_sub(msg.bytes as u64);
         let raw = self.inner.next_tag.fetch_add(1, Ordering::Relaxed);
         let tag = (raw << SHARD_BITS) | si as u64;
         let lease_deadline = (lease_ms > 0).then(|| {
@@ -1127,6 +1475,7 @@ impl Broker {
                 queue: name.to_string(),
                 consumer,
                 entry: msg.entry,
+                bytes: msg.bytes,
                 lease_deadline,
                 task: msg.task.clone(),
             },
@@ -1141,21 +1490,25 @@ impl Broker {
         true
     }
 
-    /// Pop up to `want` messages across the shard groups, best-first.
+    /// Pop up to `want` messages (and at most `budget_left` bytes, never
+    /// splitting below one message) across the shard groups, best-first.
     fn pop_ready(
         &self,
         consumer: u64,
         lease_ms: u64,
         by_shard: &[(usize, Vec<&str>)],
         want: usize,
+        budget_left: &mut u64,
         out: &mut Vec<Delivery>,
     ) {
+        let mode = self.inner.cfg.sched;
         if by_shard.len() == 1 {
             let (si, qnames) = &by_shard[0];
             let shard = &self.inner.shards[*si];
             let mut s = shard.state.lock().unwrap();
             while out.len() < want {
-                if !self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, out) {
+                if !self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, budget_left, out)
+                {
                     break;
                 }
             }
@@ -1165,19 +1518,22 @@ impl Broker {
             // Peek every involved shard for its best head, then pop from
             // the winner. Racy across shards (another consumer may take
             // the head between peek and pop) — the retry loop tolerates it.
-            let mut best: Option<(u8, std::cmp::Reverse<u64>, usize)> = None;
+            let mut best: Option<(Candidate, usize)> = None;
             for (si, qnames) in by_shard {
                 let s = self.inner.shards[*si].state.lock().unwrap();
                 for qn in qnames {
-                    if let Some(m) = s.queues.get(*qn).and_then(|q| q.heap.peek()) {
-                        let cand = (m.priority, std::cmp::Reverse(m.seq), *si);
-                        if Some(cand) > best {
-                            best = Some(cand);
+                    if let Some(cand) = s.queues.get(*qn).and_then(|q| q.peek_best(mode)) {
+                        let better = match best.as_ref() {
+                            Some((b, _)) => cand.beats(b, mode),
+                            None => true,
+                        };
+                        if better {
+                            best = Some((cand, *si));
                         }
                     }
                 }
             }
-            let Some((_, _, winner)) = best else {
+            let Some((_, winner)) = best else {
                 break;
             };
             // Drain the winning shard while we hold its lock (cross-shard
@@ -1188,13 +1544,19 @@ impl Broker {
             let mut s = shard.state.lock().unwrap();
             let mut popped_any = false;
             while out.len() < want
-                && self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, out)
+                && self.pop_one_locked(&mut s, *si, consumer, lease_ms, qnames, budget_left, out)
             {
                 popped_any = true;
             }
             if !popped_any {
-                // Lost the race for this shard's head; rescan.
-                continue;
+                if out.is_empty() {
+                    // Lost the race for this shard's head; rescan.
+                    continue;
+                }
+                // Budget refusal (only possible once out is non-empty) or
+                // a race loss after partial progress: stop rather than
+                // rescan forever against a budget that can't fit the head.
+                break;
             }
         }
     }
@@ -1227,6 +1589,26 @@ impl Broker {
         max_n: usize,
         timeout: Duration,
     ) -> Vec<Delivery> {
+        self.fetch_n_budgeted(consumer, queues, prefetch, max_n, 0, timeout)
+    }
+
+    /// [`Broker::fetch_n`] with an advertised byte budget: the batch stops
+    /// before a message that would push its wire bytes past
+    /// `budget_bytes`, but never splits below one message (a tiny budget
+    /// still makes progress). `budget_bytes == 0` means unlimited — the
+    /// legacy default every old client gets. This is the receiver-driven
+    /// credit the wire `PopN` budget field lowers onto (DESIGN.md
+    /// "Receiver-Driven Overload Control").
+    pub fn fetch_n_budgeted(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
+        let budget = if budget_bytes == 0 { u64::MAX } else { budget_bytes };
         let mut out = Vec::new();
         if max_n == 0 || queues.is_empty() {
             return out;
@@ -1256,7 +1638,8 @@ impl Broker {
             let seen = self.inner.event_seq.load(Ordering::SeqCst);
             let want = self.reserve_slots(held, prefetch, max_n);
             if want > 0 {
-                self.pop_ready(consumer, lease_ms, &by_shard, want, &mut out);
+                let mut budget_left = budget;
+                self.pop_ready(consumer, lease_ms, &by_shard, want, &mut budget_left, &mut out);
                 if out.len() < want {
                     held.fetch_sub(want - out.len(), Ordering::Relaxed);
                 }
@@ -1265,6 +1648,7 @@ impl Broker {
                 }
             }
             fruitless_scans += 1;
+            self.inner.fruitless_scans.fetch_add(1, Ordering::Relaxed);
             let now = Instant::now();
             if now >= deadline {
                 return out;
@@ -1285,15 +1669,56 @@ impl Broker {
             if single {
                 let (si, qnames) = &by_shard[0];
                 let shard = &self.inner.shards[*si];
-                let guard = shard.state.lock().unwrap();
+                let mut guard = shard.state.lock().unwrap();
                 // Re-check under the lock: a publish between our pop
                 // attempt and this wait would otherwise be missed.
                 let became_ready = want > 0
                     && qnames
                         .iter()
-                        .any(|n| guard.queues.get(*n).is_some_and(|q| !q.heap.is_empty()));
+                        .any(|n| guard.queues.get(*n).is_some_and(|q| !q.is_empty()));
                 if !became_ready {
-                    let _ = shard.cv.wait_timeout(guard, remaining).unwrap();
+                    // Enqueue a grant slot and sleep on it. Readiness
+                    // events wake exactly the head grantees (FIFO, plus
+                    // the overcommit margin) instead of every parked
+                    // waiter on the shard — the anti-thundering-herd
+                    // core of receiver-driven delivery.
+                    let slot = GrantSlot::new(qnames);
+                    guard.grant_q.push_back(slot.clone());
+                    drop(guard);
+                    let start = Instant::now();
+                    let mut granted = slot.granted.lock().unwrap();
+                    while !*granted {
+                        let elapsed = start.elapsed();
+                        if elapsed >= remaining {
+                            break;
+                        }
+                        let (g, _) = slot
+                            .cv
+                            .wait_timeout(granted, remaining - elapsed)
+                            .unwrap();
+                        granted = g;
+                    }
+                    let mut was_granted = *granted;
+                    drop(granted);
+                    if !was_granted {
+                        // Timed out ungranted: withdraw from the queue so
+                        // a later readiness event doesn't burn a grant on
+                        // a departed waiter. A grant may still race in
+                        // between the timeout and this lock; honor it.
+                        let mut s = shard.state.lock().unwrap();
+                        if let Some(pos) =
+                            s.grant_q.iter().position(|g| Arc::ptr_eq(g, &slot))
+                        {
+                            s.grant_q.remove(pos);
+                        } else {
+                            was_granted = *slot.granted.lock().unwrap();
+                        }
+                    }
+                    if was_granted
+                        && slot.overcommitted.swap(false, Ordering::Relaxed)
+                    {
+                        self.inner.overcommit_active.fetch_sub(1, Ordering::Relaxed);
+                    }
                 }
             } else {
                 self.inner.multi_waiters.fetch_add(1, Ordering::SeqCst);
@@ -1413,6 +1838,8 @@ impl Broker {
         let shard = &self.inner.shards[si];
         let consumer;
         let mut requeued = false;
+        let mut qname = String::new();
+        let mut wake = Vec::new();
         {
             let mut s = shard.state.lock().unwrap();
             let mut inf = s
@@ -1428,15 +1855,18 @@ impl Broker {
                 inf.task.retries_left -= 1;
                 q.stats.requeued += 1;
                 q.stats.ready += 1;
-                q.heap.push(Queued {
+                qname = inf.queue.clone();
+                q.push(Queued {
                     priority: inf.task.priority,
                     seq,
                     entry,
+                    bytes: inf.bytes,
                     task: inf.task,
                 });
                 requeued = true;
                 // Durable: a retry was consumed — replay decrements too.
                 self.wal_mark(&mut s, WalOp::Requeue, &[entry]);
+                wake = self.take_grants(&mut s, &[qname.as_str()], 1);
             } else {
                 q.stats.dead_lettered += 1;
                 // Durable: the task leaves the durable set for good.
@@ -1448,7 +1878,8 @@ impl Broker {
         if requeued {
             self.inner.total_ready.fetch_add(1, Ordering::Relaxed);
             self.inner.requeued.fetch_add(1, Ordering::Relaxed);
-            shard.cv.notify_all();
+            Self::wake_grants(wake);
+            self.notify_ready(&qname, 1);
             self.ring_multi();
         } else {
             self.inner.dead_lettered.fetch_add(1, Ordering::Relaxed);
@@ -1466,6 +1897,8 @@ impl Broker {
         let si = (tag & SHARD_MASK) as usize;
         let shard = &self.inner.shards[si];
         let consumer;
+        let qname;
+        let wake;
         {
             let mut s = shard.state.lock().unwrap();
             let inf = s
@@ -1473,23 +1906,27 @@ impl Broker {
                 .remove(&tag)
                 .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
             consumer = inf.consumer;
+            qname = inf.queue.clone();
             let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
             let q = s.queues.entry(inf.queue.clone()).or_default();
             q.stats.unacked = q.stats.unacked.saturating_sub(1);
             q.stats.requeued += 1;
             q.stats.ready += 1;
-            q.heap.push(Queued {
+            q.push(Queued {
                 priority: inf.task.priority,
                 seq,
                 entry: inf.entry,
+                bytes: inf.bytes,
                 task: inf.task,
             });
+            wake = self.take_grants(&mut s, &[qname.as_str()], 1);
         }
         self.dec_held(consumer, 1);
         self.inner.total_inflight.fetch_sub(1, Ordering::Relaxed);
         self.inner.total_ready.fetch_add(1, Ordering::Relaxed);
         self.inner.requeued.fetch_add(1, Ordering::Relaxed);
-        shard.cv.notify_all();
+        Self::wake_grants(wake);
+        self.notify_ready(&qname, 1);
         self.ring_multi();
         Ok(())
     }
@@ -1502,6 +1939,8 @@ impl Broker {
         let mut recovered = 0usize;
         for shard in &self.inner.shards {
             let mut n_here = 0usize;
+            let mut readied: HashMap<String, usize> = HashMap::new();
+            let wake;
             {
                 let mut s = shard.state.lock().unwrap();
                 let tags: Vec<u64> = s
@@ -1513,26 +1952,33 @@ impl Broker {
                 for tag in tags {
                     let inf = s.inflight.remove(&tag).unwrap();
                     let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                    *readied.entry(inf.queue.clone()).or_default() += 1;
                     let q = s.queues.entry(inf.queue.clone()).or_default();
                     q.stats.unacked = q.stats.unacked.saturating_sub(1);
                     q.stats.requeued += 1;
                     q.stats.ready += 1;
                     // Redelivery does NOT consume a retry (it wasn't a
                     // task failure).
-                    q.heap.push(Queued {
+                    q.push(Queued {
                         priority: inf.task.priority,
                         seq,
                         entry: inf.entry,
+                        bytes: inf.bytes,
                         task: inf.task,
                     });
                     n_here += 1;
                 }
+                let names: Vec<&str> = readied.keys().map(String::as_str).collect();
+                wake = self.take_grants(&mut s, &names, n_here);
             }
             if n_here > 0 {
                 self.inner.total_ready.fetch_add(n_here, Ordering::Relaxed);
                 self.inner.total_inflight.fetch_sub(n_here, Ordering::Relaxed);
                 self.inner.requeued.fetch_add(n_here as u64, Ordering::Relaxed);
-                shard.cv.notify_all();
+                Self::wake_grants(wake);
+                for (qn, k) in &readied {
+                    self.notify_ready(qn, *k);
+                }
                 recovered += n_here;
             }
         }
@@ -1554,9 +2000,8 @@ impl Broker {
         let Some(q) = s.queues.get_mut(queue) else {
             return 0;
         };
-        let n = q.heap.len();
-        let entries: Vec<u64> = q.heap.iter().map(|m| m.entry).collect();
-        q.heap.clear();
+        let entries = q.clear();
+        let n = entries.len();
         q.stats.ready = 0;
         self.inner.total_ready.fetch_sub(n, Ordering::Relaxed);
         self.wal_mark(&mut s, WalOp::Nack, &entries);
@@ -1589,7 +2034,7 @@ impl Broker {
         let s = shard.state.lock().unwrap();
         let mut out = Vec::new();
         if let Some(q) = s.queues.get(queue) {
-            out.extend(q.heap.iter().filter_map(|m| covers(&m.task)));
+            out.extend(q.iter().filter_map(|m| covers(&m.task)));
         }
         out.extend(
             s.inflight
@@ -2481,5 +2926,248 @@ mod tests {
         assert_eq!(b.reap_expired(), 0);
         assert_eq!(b.depth(), 0);
         assert_eq!(b.inflight(), 0);
+    }
+
+    // ---- receiver-driven grants ----
+
+    fn wave_task(queue: &str, study: &str, lo: u64) -> TaskEnvelope {
+        use crate::task::{StepTask, StepTemplate, WorkSpec};
+        TaskEnvelope::new(
+            queue,
+            Payload::Step(StepTask {
+                template: StepTemplate {
+                    study_id: study.into(),
+                    step_name: "sim".into(),
+                    work: WorkSpec::Noop,
+                    samples_per_task: 1,
+                    seed: 0,
+                },
+                lo,
+                hi: lo + 1,
+            }),
+        )
+    }
+
+    fn study_of(d: &Delivery) -> String {
+        match &d.task.payload {
+            Payload::Step(s) => s.template.study_id.clone(),
+            _ => panic!("not a step task"),
+        }
+    }
+
+    #[test]
+    fn srwf_short_wave_overtakes_long_wave() {
+        // A long study wave enqueued first, a short one injected behind
+        // it. Under SRWF the short wave's remaining depth ranks it
+        // first, so it drains before the backlog — and the long wave
+        // still completes in full (no starvation).
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..20 {
+            b.publish(wave_task("q", "long", i)).unwrap();
+        }
+        for i in 0..3 {
+            b.publish(wave_task("q", "short", i)).unwrap();
+        }
+        let mut order = Vec::new();
+        while let Some(d) = b.try_fetch(c, &["q"], 0) {
+            order.push(study_of(&d));
+            b.ack(d.tag).unwrap();
+        }
+        assert_eq!(order.len(), 23, "both waves complete");
+        assert!(
+            order[..3].iter().all(|s| s == "short"),
+            "short wave overtakes the long backlog: {order:?}"
+        );
+        assert!(order[3..].iter().all(|s| s == "long"));
+        assert_eq!(b.sched_stats().granted, 23);
+        assert_eq!(b.stats("q").granted, 23);
+    }
+
+    #[test]
+    fn fifo_mode_keeps_arrival_order_across_waves() {
+        // The legacy path the parity suites pin: strict publish order,
+        // no wave reordering, and the granted counter stays dark.
+        let b = Broker::new(BrokerConfig {
+            sched: SchedMode::Fifo,
+            ..BrokerConfig::default()
+        });
+        let c = b.register_consumer();
+        for i in 0..5 {
+            b.publish(wave_task("q", "long", i)).unwrap();
+        }
+        b.publish(wave_task("q", "short", 0)).unwrap();
+        let mut order = Vec::new();
+        while let Some(d) = b.try_fetch(c, &["q"], 0) {
+            order.push(study_of(&d));
+            b.ack(d.tag).unwrap();
+        }
+        assert_eq!(order[..5], ["long"; 5][..], "legacy order: {order:?}");
+        assert_eq!(order[5], "short");
+        assert_eq!(b.sched_stats().granted, 0, "fifo mode never grants");
+        assert_eq!(b.stats("q").granted, 0);
+    }
+
+    #[test]
+    fn srwf_priority_still_beats_wave_depth() {
+        // Priority outranks nothing *within* SRWF's wave pick, but a
+        // high-priority message forms its wave's head — so a priority-9
+        // straggler in the long wave is delivered the moment its wave is
+        // selected, and wave choice itself ignores priority only between
+        // waves of different depth. Verify the documented tiebreak:
+        // equal-depth waves fall back to priority then seq.
+        let b = Broker::default();
+        let c = b.register_consumer();
+        b.publish(wave_task("q", "a", 0)).unwrap();
+        b.publish(wave_task("q", "b", 0).priority(9)).unwrap();
+        // Both waves have depth 1: the priority-9 head must win.
+        let d = b.try_fetch(c, &["q"], 0).unwrap();
+        assert_eq!(study_of(&d), "b");
+    }
+
+    #[test]
+    fn byte_budget_never_splits_below_one_message() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        for i in 0..4 {
+            b.publish(ping("q", &format!("m{i}"))).unwrap();
+        }
+        // A 1-byte budget still delivers one message.
+        let got = b.fetch_n_budgeted(c, &["q"], 0, 10, 1, Duration::ZERO);
+        assert_eq!(got.len(), 1);
+        for d in got {
+            b.ack(d.tag).unwrap();
+        }
+        // Budget 0 = unlimited (the legacy default old clients get).
+        let got = b.fetch_n_budgeted(c, &["q"], 0, 10, 0, Duration::ZERO);
+        assert_eq!(got.len(), 3);
+        for d in got {
+            b.ack(d.tag).unwrap();
+        }
+    }
+
+    #[test]
+    fn byte_budget_splits_at_message_boundary() {
+        let b = Broker::default();
+        let c = b.register_consumer();
+        let size = ser::encode(&ping("q", "aa")).len() as u64;
+        for t in ["aa", "bb", "cc"] {
+            b.publish(ping("q", t)).unwrap();
+        }
+        // Room for exactly two same-sized messages.
+        let got = b.fetch_n_budgeted(c, &["q"], 0, 10, 2 * size, Duration::ZERO);
+        assert_eq!(got.len(), 2);
+        for d in got {
+            b.ack(d.tag).unwrap();
+        }
+        assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn grant_wakeups_are_count_limited() {
+        // Three fetchers park on one queue; a single publish with
+        // overcommit 0 wakes exactly one (the anti-thundering-herd
+        // contract). The others time out empty-handed.
+        let b = Broker::new(BrokerConfig {
+            overcommit_degree: 0,
+            ..BrokerConfig::default()
+        });
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let b2 = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = b2.register_consumer();
+                b2.fetch(c, &["gq"], 0, Duration::from_millis(600))
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(b.sched_stats().grant_queue_len, 3);
+        b.publish(ping("gq", "one")).unwrap();
+        let got: Vec<Delivery> = handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(got.len(), 1, "exactly one waiter is granted");
+        assert_eq!(token(&got[0]), "one");
+        assert_eq!(b.sched_stats().grant_queue_len, 0);
+    }
+
+    #[test]
+    fn grants_follow_park_order() {
+        // FIFO by park time: the longer-waiting fetcher gets the grant.
+        let b = Broker::new(BrokerConfig {
+            overcommit_degree: 0,
+            ..BrokerConfig::default()
+        });
+        let b1 = b.clone();
+        let first = std::thread::spawn(move || {
+            let c = b1.register_consumer();
+            b1.fetch(c, &["fq"], 0, Duration::from_millis(900))
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let b2 = b.clone();
+        let second = std::thread::spawn(move || {
+            let c = b2.register_consumer();
+            b2.fetch(c, &["fq"], 0, Duration::from_millis(900))
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        b.publish(ping("fq", "head")).unwrap();
+        let d1 = first.join().unwrap();
+        let d2 = second.join().unwrap();
+        assert_eq!(
+            d1.map(|d| token(&d)),
+            Some("head".into()),
+            "first-parked waiter granted first"
+        );
+        assert!(d2.is_none(), "second waiter was not woken for nothing");
+    }
+
+    #[test]
+    fn overcommit_margin_clears_after_wake() {
+        // Default overcommit 1: a publish may wake the grantee plus one
+        // margin waiter. Exactly one message is delivered either way,
+        // and the margin accounting returns to zero once the extra
+        // waiter rescans.
+        let b = Broker::default();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let b2 = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = b2.register_consumer();
+                b2.fetch(c, &["oq"], 0, Duration::from_millis(400))
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        b.publish(ping("oq", "one")).unwrap();
+        let got: Vec<Delivery> = handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(got.len(), 1);
+        let st = b.sched_stats();
+        assert_eq!(st.overcommit_active, 0, "margin waiters all rescanned");
+        assert_eq!(st.grant_queue_len, 0);
+    }
+
+    #[test]
+    fn parked_waiter_timeout_withdraws_its_slot() {
+        let b = Broker::default();
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let c = b2.register_consumer();
+            b2.fetch(c, &["tq"], 0, Duration::from_millis(100))
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(b.sched_stats().grant_queue_len, 1);
+        assert!(h.join().unwrap().is_none());
+        assert_eq!(
+            b.sched_stats().grant_queue_len,
+            0,
+            "timed-out waiter removed its grant slot"
+        );
+        // A later publish must not burn a grant on the departed waiter.
+        b.publish(ping("tq", "late")).unwrap();
+        let c = b.register_consumer();
+        assert_eq!(token(&b.try_fetch(c, &["tq"], 0).unwrap()), "late");
     }
 }

@@ -57,10 +57,13 @@ use crate::task::TaskEnvelope;
 use crate::util::hex::fnv1a;
 
 use super::api::{
-    merge_durability, merge_lease_stats, merge_queue_stats, MemberHealth, QueueError, TaskQueue,
+    merge_durability, merge_lease_stats, merge_queue_stats, merge_sched_stats, MemberHealth,
+    QueueError, TaskQueue,
 };
 use super::client::{muxops, BrokerClient, ClientError};
-use super::core::{Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats};
+use super::core::{
+    Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+};
 
 #[cfg(target_os = "linux")]
 use crate::net::muxclient::{MuxError, MuxPool};
@@ -592,8 +595,10 @@ impl FederatedClient {
         }
     }
 
-    /// Fetch up to `max_n` deliveries from one member, remapping their
-    /// tags into the federated tag space.
+    /// Fetch up to `max_n` deliveries (at most `budget` payload bytes,
+    /// 0 = unlimited) from one member, remapping their tags into the
+    /// federated tag space. Budgets only reach members that advertised
+    /// grant support; everyone else gets the legacy unbudgeted request.
     fn member_fetch(
         &self,
         idx: usize,
@@ -601,27 +606,44 @@ impl FederatedClient {
         queues: &[&str],
         prefetch: usize,
         max_n: usize,
+        budget: u64,
         timeout: Duration,
     ) -> Vec<Delivery> {
         let got = match self.snapshot(idx) {
             Snapshot::Local(broker) => {
                 let local = self.local_consumer(consumer, idx, &broker);
-                broker.fetch_n(local, queues, prefetch, max_n, timeout)
+                broker.fetch_n_budgeted(local, queues, prefetch, max_n, budget, timeout)
             }
             Snapshot::DeadLocal => Vec::new(),
             Snapshot::Remote => self
                 .member_remote(idx, |c| {
-                    c.fetch_n(queues, prefetch, timeout.as_millis() as u64, max_n)
+                    // BrokerClient zeroes the budget itself against
+                    // servers that did not advertise grants.
+                    c.fetch_n_budgeted(queues, prefetch, timeout.as_millis() as u64, max_n, budget)
                 })
                 .unwrap_or_default(),
             Snapshot::Mux => {
                 let ms = timeout.as_millis() as u64;
-                let req = muxops::fetch_n_req(queues, prefetch, ms, max_n);
+                let budget = if self.mux_member_grants(idx) { budget } else { 0 };
+                let req = muxops::fetch_n_req_budgeted(queues, prefetch, ms, max_n, budget);
                 self.mux_call(idx, &req, timeout + MUX_RPC_TIMEOUT, muxops::fetch_n_rsp)
                     .unwrap_or_default()
             }
         };
         self.remap_deliveries(idx, got)
+    }
+
+    /// Whether mux member `idx` advertised grant-based delivery in its
+    /// hello (false when detached or on the mutexed build).
+    fn mux_member_grants(&self, idx: usize) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            if let Some(pool) = &self.pool {
+                return pool.member_stats(idx).grants;
+            }
+        }
+        let _ = idx;
+        false
     }
 
     /// Remap member-local delivery tags into the federated tag space.
@@ -1145,6 +1167,25 @@ impl TaskQueue for FederatedClient {
         max_n: usize,
         timeout: Duration,
     ) -> Vec<Delivery> {
+        self.fetch_n_budgeted(consumer, queues, prefetch, max_n, 0, timeout)
+    }
+
+    /// [`TaskQueue::fetch_n`] with a receiver byte budget, fair-shared
+    /// across the concurrently-probed owners the same way the message
+    /// window is: each mux owner in a pass is offered
+    /// `ceil(budget / owners)` bytes, so the fan-out jointly respects
+    /// the receiver's capacity instead of overshooting by owners×.
+    /// Serially-probed owners (local / mutexed links) are each bounded
+    /// by the full remaining budget — they already drain one at a time.
+    fn fetch_n_budgeted(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
         let mut out = Vec::new();
         if queues.is_empty() || max_n == 0 {
             return out;
@@ -1196,10 +1237,18 @@ impl TaskQueue for FederatedClient {
                 loop {
                     let want = max_n - out.len();
                     let share = want.div_ceil(mux_groups.len());
+                    let budget_share = if budget_bytes == 0 {
+                        0
+                    } else {
+                        budget_bytes.div_ceil(mux_groups.len() as u64)
+                    };
                     let ms = slice.as_millis() as u64;
                     let reqs = mux_groups
                         .iter()
-                        .map(|(i, qs)| (*i, muxops::fetch_n_req(qs, prefetch, ms, share)))
+                        .map(|(i, qs)| {
+                            let b = if self.mux_member_grants(*i) { budget_share } else { 0 };
+                            (*i, muxops::fetch_n_req_budgeted(qs, prefetch, ms, share, b))
+                        })
                         .collect();
                     let before = out.len();
                     for (idx, r) in self.mux_fanout(reqs, slice + MUX_RPC_TIMEOUT) {
@@ -1240,7 +1289,7 @@ impl TaskQueue for FederatedClient {
                     remaining
                 };
                 let want = max_n - out.len();
-                out.extend(self.member_fetch(*idx, consumer, qs, prefetch, want, slice));
+                out.extend(self.member_fetch(*idx, consumer, qs, prefetch, want, budget_bytes, slice));
                 if out.len() >= max_n {
                     return out;
                 }
@@ -1616,6 +1665,25 @@ impl TaskQueue for FederatedClient {
             };
             if let Some(st) = st {
                 merge_durability(&mut acc, &st);
+            }
+        }
+        acc
+    }
+
+    fn sched_stats(&self) -> SchedStats {
+        let mut acc = SchedStats::default();
+        for idx in self.live_indices() {
+            let st = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.sched_stats()),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.sched_stats()).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::sched_req();
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::sched_rsp).ok()
+                }
+            };
+            if let Some(st) = st {
+                merge_sched_stats(&mut acc, &st);
             }
         }
         acc

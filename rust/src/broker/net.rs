@@ -11,10 +11,15 @@
 //!   [`crate::net::reactor`]. One reactor thread multiplexes every
 //!   connection; dispatch runs on a small fixed blocking pool; a fetch
 //!   against empty queues *parks* server-side
-//!   ([`crate::net::ServiceReply::Park`]) instead of pinning a thread,
-//!   and publish frames carry wake hints that un-park matching waiters.
-//!   Thread count is `O(1 + pool)`, not `O(connections)` — the path to
-//!   the paper's tens-of-thousands-of-workers regime.
+//!   ([`crate::net::ServiceReply::Park`]) instead of pinning a thread.
+//!   Parked waiters are woken by the broker's grant machinery: the
+//!   server installs a ready hook ([`Broker::set_ready_hook`]) that
+//!   injects one wake credit per message made ready — publishes,
+//!   requeues, lease reaps, even in-process publishers that never touch
+//!   this listener — and the reactor spends credits on parked frames in
+//!   park FIFO order, so one message wakes one waiter instead of the
+//!   herd. Thread count is `O(1 + pool)`, not `O(connections)` — the
+//!   path to the paper's tens-of-thousands-of-workers regime.
 //!
 //! Each connection is a broker *consumer* in both modes: if it drops
 //! with unacked deliveries, those messages are requeued (AMQP
@@ -131,11 +136,21 @@ impl BrokerServer {
         if use_reactor {
             let listener = TcpListener::bind(addr)?;
             let local = listener.local_addr()?;
+            let hook_broker = broker.clone();
             let service = Arc::new(BrokerService {
                 broker,
                 consumers: Mutex::new(HashMap::new()),
             });
             let handle = crate::net::reactor::serve(listener, service, cfg.reactor_config())?;
+            // Every message made ready — by a frame on this listener, an
+            // in-process publisher, a requeue, or a lease reap — becomes
+            // one wake credit for the reactor's parked long-polls. This
+            // is the grant queue's network edge: credits are spent in
+            // park FIFO order, count-limited to actual readiness.
+            let wakes = handle.wake_budget();
+            hook_broker.set_ready_hook(Some(Arc::new(move |queue: &str, count: usize| {
+                wakes.notify(queue, count);
+            })));
             return Ok(BrokerServer {
                 addr: local,
                 imp: ServerImpl::Reactor(handle),
@@ -384,12 +399,20 @@ impl BrokerService {
                     prefetch,
                     timeout_ms,
                     queues,
+                    budget,
                 } => {
                     // Never block a pool thread in fetch_n: poll, and
                     // park the frame when the client asked to wait.
                     let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-                    let reply =
-                        pop_reply(&self.broker, consumer, max, prefetch, &refs, Duration::ZERO);
+                    let reply = pop_reply(
+                        &self.broker,
+                        consumer,
+                        max,
+                        prefetch,
+                        budget,
+                        &refs,
+                        Duration::ZERO,
+                    );
                     let empty = matches!(&reply, BinMsg::Deliveries(items) if items.is_empty());
                     if empty && timeout_ms > 0 && !last_try {
                         return ServiceReply::Park {
@@ -399,15 +422,9 @@ impl BrokerService {
                     }
                     reply_bin(reply, WakeHint::None)
                 }
-                BinMsg::EnqueueBatch(blobs) => {
-                    let (reply, touched) = enqueue_blobs(&self.broker, blobs);
-                    let wake = if touched.is_empty() {
-                        WakeHint::None
-                    } else {
-                        WakeHint::Queues(touched)
-                    };
-                    reply_bin(reply, wake)
-                }
+                // No wake hints here: the ready hook installed at serve
+                // time already injected one credit per message this op
+                // made ready, so emitting a hint too would double-wake.
                 other => reply_bin(dispatch_bin_msg(&self.broker, consumer, other), WakeHint::None),
             }
         } else {
@@ -433,8 +450,8 @@ impl BrokerService {
                 }
                 return reply_json(resp, WakeHint::None);
             }
-            let wake = json_wake_hint(&req);
-            reply_json(dispatch(&self.broker, consumer, &req), wake)
+            // Wake hints are the ready hook's job now (see serve_with).
+            reply_json(dispatch(&self.broker, consumer, &req), WakeHint::None)
         }
     }
 }
@@ -452,41 +469,6 @@ fn reply_bin(msg: BinMsg, wake: WakeHint) -> ServiceReply {
     ServiceReply::Reply {
         frame: wire::encode_bin(&msg),
         wake,
-    }
-}
-
-/// Which parked fetches a JSON request could satisfy, derived from the
-/// op alone (before dispatch — the hint only names queues, so running it
-/// early costs nothing and keeps dispatch untouched).
-#[cfg(target_os = "linux")]
-fn json_wake_hint(req: &Json) -> WakeHint {
-    match req.get("op").as_str() {
-        Some("publish") => match req.get("task").get("queue").as_str() {
-            Some(q) => WakeHint::Queues(vec![q.to_string()]),
-            None => WakeHint::None,
-        },
-        Some("publish_batch") => {
-            let mut qs: Vec<String> = Vec::new();
-            if let Some(items) = req.get("tasks").as_arr() {
-                for t in items {
-                    if let Some(q) = t.get("queue").as_str() {
-                        if !qs.iter().any(|e| e == q) {
-                            qs.push(q.to_string());
-                        }
-                    }
-                }
-            }
-            if qs.is_empty() {
-                WakeHint::None
-            } else {
-                WakeHint::Queues(qs)
-            }
-        }
-        // Requeues and lease reaps return messages to ready state, but
-        // naming the queues would need broker-side plumbing: wake all
-        // parked fetches and let the retry sort it out (rare ops).
-        Some("nack") | Some("requeue") | Some("reap") => WakeHint::All,
-        _ => WakeHint::None,
     }
 }
 
@@ -508,6 +490,7 @@ fn stats_pairs(st: &QueueStats) -> Vec<(&'static str, Json)> {
         ("dead_lettered", Json::num(st.dead_lettered as f64)),
         ("lease_expired", Json::num(st.lease_expired as f64)),
         ("bytes_published", Json::num(st.bytes_published as f64)),
+        ("granted", Json::num(st.granted as f64)),
     ]
 }
 
@@ -531,35 +514,49 @@ fn fetch_reply(
     }
 }
 
-/// One binary PopN window: up to `max` deliveries within the reply-frame
-/// byte budget. Same threaded-blocks / reactor-parks split as
-/// [`fetch_reply`].
+/// Server-side ceiling on one PopN reply's bytes: keeps the frame under
+/// `wire::MAX_FRAME` no matter what budget the client advertised.
+const POP_REPLY_BUDGET: u64 = 48 << 20;
+
+/// One binary PopN window: up to `max` deliveries within the byte
+/// budget. `budget` is the client's advertised credit (0 = none sent —
+/// a legacy client — which gets the full server ceiling); the effective
+/// budget is its min with [`POP_REPLY_BUDGET`], handed down to
+/// [`Broker::fetch_n_budgeted`] so the scheduler never grants past what
+/// the receiver asked to absorb. Same threaded-blocks / reactor-parks
+/// split as [`fetch_reply`].
 fn pop_reply(
     broker: &Broker,
     consumer: u64,
     max: u64,
     prefetch: u64,
+    budget: u64,
     queues: &[&str],
     wait: Duration,
 ) -> BinMsg {
-    let got = broker.fetch_n(
+    let budget = if budget == 0 {
+        POP_REPLY_BUDGET
+    } else {
+        budget.min(POP_REPLY_BUDGET)
+    };
+    let got = broker.fetch_n_budgeted(
         consumer,
         queues,
         prefetch as usize,
         (max as usize).min(MAX_POP_WINDOW),
+        budget,
         wait,
     );
-    // Byte-budgeted reply: MAX_POP_WINDOW alone cannot keep the
-    // frame under wire::MAX_FRAME when individual tasks are
-    // large. Deliveries that would overflow the budget go
-    // straight back to the queue (no retry cost — nothing
-    // failed) for the next PopN.
-    const POP_REPLY_BUDGET: usize = 48 << 20;
+    // Defense in depth on the reply frame: the scheduler budgets by the
+    // broker's stored sizes (wire blob length for network publishes,
+    // re-encode length otherwise), so re-check against the transmitted
+    // encoding. Deliveries that would overflow go straight back to the
+    // queue (no retry cost — nothing failed) for the next PopN.
     let mut items = Vec::new();
-    let mut total = 0usize;
+    let mut total = 0u64;
     for d in got {
         let blob = ser::encode_v2(&d.task);
-        if blob.len() > POP_REPLY_BUDGET {
+        if blob.len() as u64 > POP_REPLY_BUDGET {
             // Not transmittable over this protocol at all (only
             // possible via an in-process publisher, which skips
             // the frame cap): dead-letter it so it can't wedge
@@ -568,38 +565,33 @@ fn pop_reply(
             broker.nack(d.tag, false).ok();
             continue;
         }
-        if total + blob.len() > POP_REPLY_BUDGET {
+        if !items.is_empty() && total + blob.len() as u64 > budget {
             broker.requeue(d.tag).ok();
             continue;
         }
-        total += blob.len();
+        total += blob.len() as u64;
         items.push((d.tag, blob));
     }
     BinMsg::Deliveries(items)
 }
 
-/// Decode and publish one batch of v2 task blobs, returning the reply
-/// and the distinct queue names touched (the reactor's wake hint).
-fn enqueue_blobs(broker: &Broker, blobs: Vec<Vec<u8>>) -> (BinMsg, Vec<String>) {
+/// Decode and publish one batch of v2 task blobs. Waking parked
+/// fetchers is the broker's job: `publish_batch_sized` pushes one ready
+/// credit per message through the ready hook.
+fn enqueue_blobs(broker: &Broker, blobs: Vec<Vec<u8>>) -> BinMsg {
     // Size accounting uses the v2 blob length — the bytes actually
     // transmitted — so no re-encode is needed on this hot path.
     let mut sized = Vec::with_capacity(blobs.len());
-    let mut touched: Vec<String> = Vec::new();
     for blob in blobs {
         match ser::decode_wire(&blob) {
-            Ok(t) => {
-                if !touched.iter().any(|q| q == &t.queue) {
-                    touched.push(t.queue.clone());
-                }
-                sized.push((t, blob.len()));
-            }
-            Err(e) => return (BinMsg::Err(format!("bad task: {e}")), Vec::new()),
+            Ok(t) => sized.push((t, blob.len())),
+            Err(e) => return BinMsg::Err(format!("bad task: {e}")),
         }
     }
     let n = sized.len() as u64;
     match broker.publish_batch_sized(sized) {
-        Ok(()) => (BinMsg::OkCount(n), touched),
-        Err(e) => (BinMsg::Err(e.to_string()), Vec::new()),
+        Ok(()) => BinMsg::OkCount(n),
+        Err(e) => BinMsg::Err(e.to_string()),
     }
 }
 
@@ -615,7 +607,7 @@ fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
 /// timeout — reactor callers special-case PopN before reaching here.
 fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
     match msg {
-        BinMsg::EnqueueBatch(blobs) => enqueue_blobs(broker, blobs).0,
+        BinMsg::EnqueueBatch(blobs) => enqueue_blobs(broker, blobs),
         BinMsg::AckBatch(tags) => match broker.ack_batch(&tags) {
             Ok(n) => BinMsg::OkCount(n as u64),
             Err(e) => BinMsg::Err(e.to_string()),
@@ -629,6 +621,7 @@ fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
             prefetch,
             timeout_ms,
             queues,
+            budget,
         } => {
             let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
             pop_reply(
@@ -636,6 +629,7 @@ fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
                 consumer,
                 max,
                 prefetch,
+                budget,
                 &refs,
                 Duration::from_millis(timeout_ms),
             )
@@ -648,12 +642,19 @@ fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
 fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
     match req.get("op").as_str() {
         Some("hello") => {
-            // Version negotiation: both sides speak min(max_wire).
+            // Version negotiation: both sides speak min(max_wire). The
+            // `grants` capability tells budget-aware clients this server
+            // understands the optional trailing PopN budget field;
+            // without it they omit the field and stay byte-identical to
+            // legacy traffic.
             let client_max = req.get("max_wire").as_u64().unwrap_or(1);
-            wire::ok(vec![(
-                "wire",
-                Json::num(wire::negotiate(client_max, SERVER_MAX_WIRE) as f64),
-            )])
+            wire::ok(vec![
+                (
+                    "wire",
+                    Json::num(wire::negotiate(client_max, SERVER_MAX_WIRE) as f64),
+                ),
+                ("grants", Json::Bool(true)),
+            ])
         }
         Some("publish") => match task_from_json(req.get("task")) {
             Ok(task) => match broker.publish(task) {
@@ -764,6 +765,18 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
                 ("wal_fsyncs", Json::num(st.wal_fsyncs as f64)),
                 ("snapshots", Json::num(st.snapshots as f64)),
                 ("recovered", Json::num(st.recovered as f64)),
+            ])
+        }
+        Some("sched") => {
+            // Delivery-scheduler observability: lifetime grants, parked
+            // fetches waiting in grant queues, live overcommit margin,
+            // and scans that found nothing deliverable.
+            let st = broker.sched_stats();
+            wire::ok(vec![
+                ("granted", Json::num(st.granted as f64)),
+                ("grant_queue_len", Json::num(st.grant_queue_len as f64)),
+                ("overcommit_active", Json::num(st.overcommit_active as f64)),
+                ("fruitless_scans", Json::num(st.fruitless_scans as f64)),
             ])
         }
         Some("totals") => {
@@ -1013,6 +1026,7 @@ mod tests {
                 prefetch: 0,
                 timeout_ms: 1000,
                 queues: vec!["q".into()],
+                budget: 0,
             });
             for (id, body) in [(7u32, &publish), (3, &depth), (900_000, &pop)] {
                 wire::write_frame_bytes(&mut writer, &wire::encode_corr(id, body)).unwrap();

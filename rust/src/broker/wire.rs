@@ -215,7 +215,14 @@ pub fn err(msg: impl Into<String>) -> Json {
 // op 0x01 EnqueueBatch : count:varint { len:varint v2-envelope-bytes }*
 // op 0x02 AckBatch     : count:varint { tag:varint }*
 // op 0x03 PopN         : max:varint prefetch:varint timeout_ms:varint
-//                        nqueues:varint { queue:str }*
+//                        nqueues:varint { queue:str }* [budget:varint]
+//                        (budget is the wire-v4 receiver credit in bytes,
+//                        0 = unlimited. OPTIONAL TRAILING FIELD: encoders
+//                        omit it when 0, so pre-grant frames are
+//                        byte-identical and pre-grant decoders — which
+//                        reject trailing bytes — never see it. Clients
+//                        send it only after the server hello advertised
+//                        `grants`.)
 // op 0x04 ExtendBatch  : lease_ms:varint count:varint { tag:varint }*
 //                        (wire v3: lease heartbeat over a whole window)
 // op 0x81 OkCount      : count:varint
@@ -249,6 +256,11 @@ pub enum BinMsg {
         timeout_ms: u64,
         /// Queues to draw from, best-priority-first across all of them.
         queues: Vec<String>,
+        /// Receiver byte credit for the reply window (0 = unlimited).
+        /// Encoded as an *optional trailing* varint — omitted when 0 —
+        /// so frames without it are byte-identical to the pre-grant
+        /// protocol and old peers interoperate unchanged.
+        budget: u64,
     },
     /// Extend (or grant) delivery leases on a batch of tags to
     /// now + `lease_ms` — the worker-heartbeat frame of wire v3. Unknown
@@ -292,6 +304,7 @@ pub fn encode_bin(msg: &BinMsg) -> Vec<u8> {
             prefetch,
             timeout_ms,
             queues,
+            budget,
         } => {
             out.push(OP_POP_N);
             put_uvarint(&mut out, *max);
@@ -300,6 +313,12 @@ pub fn encode_bin(msg: &BinMsg) -> Vec<u8> {
             put_uvarint(&mut out, queues.len() as u64);
             for q in queues {
                 put_str(&mut out, q);
+            }
+            // Optional trailing field: 0 (unlimited) is expressed by
+            // omission, keeping budget-free frames byte-identical to the
+            // pre-grant encoding (old decoders reject trailing bytes).
+            if *budget != 0 {
+                put_uvarint(&mut out, *budget);
             }
         }
         BinMsg::ExtendBatch { lease_ms, tags } => {
@@ -382,11 +401,18 @@ pub fn decode_bin(body: &[u8]) -> Result<BinMsg, WireError> {
             for _ in 0..n {
                 queues.push(get_str(body, &mut pos).map_err(bad)?);
             }
+            // Optional trailing budget (absent on pre-grant frames).
+            let budget = if pos < body.len() {
+                get_uvarint(body, &mut pos).map_err(bad)?
+            } else {
+                0
+            };
             BinMsg::PopN {
                 max,
                 prefetch,
                 timeout_ms,
                 queues,
+                budget,
             }
         }
         OP_EXTEND_BATCH => {
@@ -594,6 +620,14 @@ mod tests {
                 prefetch: 8,
                 timeout_ms: 250,
                 queues: vec!["merlin.sim".into(), "merlin.post".into()],
+                budget: 0,
+            },
+            BinMsg::PopN {
+                max: 64,
+                prefetch: 8,
+                timeout_ms: 250,
+                queues: vec!["merlin.sim".into()],
+                budget: 48 << 20,
             },
             BinMsg::ExtendBatch {
                 lease_ms: 30_000,
@@ -607,6 +641,40 @@ mod tests {
             let body = encode_bin(msg);
             assert_eq!(&decode_bin(&body).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn popn_budget_is_optional_and_trailing() {
+        // A zero budget encodes to exactly the pre-grant frame: build
+        // the legacy encoding by hand and compare bytes.
+        let msg = BinMsg::PopN {
+            max: 16,
+            prefetch: 4,
+            timeout_ms: 500,
+            queues: vec!["q1".into(), "q2".into()],
+            budget: 0,
+        };
+        let mut legacy = vec![BIN_MAGIC, 0x03];
+        put_uvarint(&mut legacy, 16);
+        put_uvarint(&mut legacy, 4);
+        put_uvarint(&mut legacy, 500);
+        put_uvarint(&mut legacy, 2);
+        put_str(&mut legacy, "q1");
+        put_str(&mut legacy, "q2");
+        assert_eq!(encode_bin(&msg), legacy, "budget 0 must encode by omission");
+        // And a legacy frame decodes with the defaulted budget.
+        assert_eq!(decode_bin(&legacy).unwrap(), msg);
+        // A nonzero budget rides as one trailing varint.
+        let budgeted = BinMsg::PopN {
+            max: 16,
+            prefetch: 4,
+            timeout_ms: 500,
+            queues: vec!["q1".into(), "q2".into()],
+            budget: 300,
+        };
+        let body = encode_bin(&budgeted);
+        assert!(body.len() > legacy.len());
+        assert_eq!(decode_bin(&body).unwrap(), budgeted);
     }
 
     #[test]

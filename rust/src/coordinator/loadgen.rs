@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 
 use crate::broker::api::TaskQueue;
 use crate::broker::client::BrokerClient;
-use crate::broker::core::Broker;
+use crate::broker::core::{Broker, BrokerConfig, SchedMode};
 use crate::broker::federation::{FederatedClient, FederationConfig};
 use crate::broker::net::BrokerServer;
 use crate::broker::wire::{self, BinMsg};
@@ -772,6 +772,7 @@ fn run_connscale_rung(
             prefetch: 0,
             timeout_ms: IDLE_PARK_MS,
             queues: vec!["cs.idle".into()],
+            budget: 0,
         });
         let mut f = Vec::with_capacity(4 + body.len());
         f.extend_from_slice(&(body.len() as u32).to_be_bytes());
@@ -1217,6 +1218,405 @@ pub fn write_muxclient_outputs(
     Ok(())
 }
 
+/// Incast section configuration (`--incast W,Q`): a herd of `fetchers`
+/// consumer connections contending for a trickle of work over `queues`
+/// step queues against **one** broker — the §overload pathology the
+/// grant scheduler exists for. Every cell runs twice, once under SRWF
+/// grants and once under the legacy FIFO order, and the big herd is
+/// paired with a small-herd baseline so the gate can check that
+/// incast-proofing the tail did not tax throughput.
+#[derive(Debug, Clone)]
+pub struct IncastConfig {
+    /// The incast herd: concurrent fetcher connections.
+    pub fetchers: usize,
+    /// Step queues the corpus is spread over.
+    pub queues: usize,
+    /// Small-herd baseline cell (throughput reference).
+    pub baseline_fetchers: usize,
+    /// Corpus per cell.
+    pub tasks: u64,
+    /// Queue-pick skew (zipf exponent; incast runs hot-headed).
+    pub zipf: f64,
+    /// Payload padding bytes per task.
+    pub payload: usize,
+    /// Receiver byte budget each fetcher advertises per window.
+    pub budget_bytes: u64,
+    /// Reactor blocking-pool size.
+    pub net_threads: usize,
+}
+
+impl Default for IncastConfig {
+    fn default() -> Self {
+        Self {
+            fetchers: 1024,
+            queues: 4,
+            baseline_fetchers: 64,
+            tasks: 40_000,
+            zipf: 1.0,
+            payload: 256,
+            budget_bytes: 64 << 10,
+            net_threads: 4,
+        }
+    }
+}
+
+impl IncastConfig {
+    /// Shrink the herd and corpus to seconds (CI's `MERLIN_BENCH_QUICK=1`).
+    pub fn quicken(&mut self) {
+        self.fetchers = self.fetchers.min(128);
+        self.baseline_fetchers = self.baseline_fetchers.min(32);
+        self.tasks = self.tasks.min(4_000);
+    }
+}
+
+/// One incast cell: one scheduler mode × one herd size.
+#[derive(Debug, Clone)]
+pub struct IncastCell {
+    /// Scheduler the broker ran (`srwf` / `fifo`).
+    pub sched: String,
+    /// Fetcher connections in the herd.
+    pub fetchers: usize,
+    /// Step queues.
+    pub queues: usize,
+    /// Tasks enqueued (the corpus on a clean run).
+    pub enqueued: u64,
+    /// Tasks fetched and acked.
+    pub acked: u64,
+    /// Wall time to drain (s).
+    pub wall_s: f64,
+    /// Drain throughput (tasks/s).
+    pub per_s: f64,
+    /// Enqueue→ack latency percentiles (µs per task).
+    pub e2e_p50_us: f64,
+    /// See [`IncastCell::e2e_p50_us`].
+    pub e2e_p99_us: f64,
+    /// See [`IncastCell::e2e_p50_us`].
+    pub e2e_p999_us: f64,
+    /// Non-empty fetch round-trip ("grant") latency percentiles (µs).
+    /// This is the incast tail: under blind retry it stretches with the
+    /// herd; under targeted grants it should track the p50.
+    pub fetch_p50_us: f64,
+    /// See [`IncastCell::fetch_p50_us`].
+    pub fetch_p99_us: f64,
+    /// See [`IncastCell::fetch_p50_us`].
+    pub fetch_p999_us: f64,
+    /// Broker grant-scheduler counters at drain end.
+    pub granted: u64,
+    /// See [`crate::broker::core::SchedStats::fruitless_scans`].
+    pub fruitless_scans: u64,
+    /// Targeted park wakeups the reactor issued (0 off-Linux/threaded).
+    pub park_wakes: u64,
+}
+
+/// The machine-checked incast verdict, derived from the SRWF cells.
+#[derive(Debug, Clone)]
+pub struct IncastGate {
+    /// Big-herd SRWF `fetch_p999 / fetch_p50` — the tail-flatness claim.
+    pub tail_ratio: f64,
+    /// Big-herd SRWF throughput over the small-herd SRWF baseline.
+    pub throughput_ratio: f64,
+    /// `tail_ratio <= 3.0`.
+    pub pass_tail: bool,
+    /// `throughput_ratio >= 0.9`.
+    pub pass_throughput: bool,
+}
+
+/// Drive one incast cell: one broker under `sched`, `fetchers`
+/// concurrent budgeted consumers, one producer trickling the corpus in
+/// while the herd contends for it.
+fn run_incast_cell(sched: SchedMode, fetchers: usize, cfg: &IncastConfig) -> IncastCell {
+    let broker = Broker::new(BrokerConfig {
+        sched,
+        ..BrokerConfig::default()
+    });
+    let mut serve_cfg = if crate::net::reactor_available() {
+        ServeConfig::reactor()
+    } else {
+        ServeConfig::threaded()
+    };
+    serve_cfg.net_threads = cfg.net_threads;
+    serve_cfg.max_connections = fetchers + 16;
+    let server = BrokerServer::serve_with(broker, "127.0.0.1:0", serve_cfg)
+        .expect("bind incast broker");
+    let addr = server.addr.to_string();
+    let queues: Vec<String> = (0..cfg.queues).map(|q| format!("ic.s{q}")).collect();
+
+    let epoch = Instant::now();
+    let enqueued = Arc::new(AtomicU64::new(0));
+    let acked = Arc::new(AtomicU64::new(0));
+    let producer_done = Arc::new(AtomicBool::new(false));
+    let e2e_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let fetch_lat: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // Herd first: consumers standing by (mostly parked) before the
+    // trickle starts — that standing herd IS the incast.
+    let mut herd = Vec::with_capacity(fetchers);
+    for _ in 0..fetchers {
+        let addr = addr.clone();
+        let queues = queues.clone();
+        let enqueued = enqueued.clone();
+        let acked = acked.clone();
+        let producer_done = producer_done.clone();
+        let e2e_lat = e2e_lat.clone();
+        let fetch_lat = fetch_lat.clone();
+        let budget = cfg.budget_bytes;
+        herd.push(std::thread::spawn(move || {
+            let Ok(mut c) = BrokerClient::connect(&addr) else { return };
+            let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+            let bail = Instant::now();
+            loop {
+                let t0 = Instant::now();
+                let got = c
+                    .fetch_n_budgeted(&refs, 8, 100, 8, budget)
+                    .unwrap_or_default();
+                if got.is_empty() {
+                    let drained = producer_done.load(Ordering::SeqCst)
+                        && acked.load(Ordering::SeqCst) >= enqueued.load(Ordering::SeqCst);
+                    if drained || bail.elapsed() > Duration::from_secs(120) {
+                        return;
+                    }
+                    continue;
+                }
+                let round_us = t0.elapsed().as_micros() as f64;
+                let now_us = epoch.elapsed().as_micros() as u64;
+                let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+                {
+                    let mut e2e = e2e_lat.lock().unwrap();
+                    for d in &got {
+                        if let Payload::Control(ControlMsg::Ping { token }) = &d.task.payload {
+                            if let Some((_, pub_us)) = parse_token(token) {
+                                e2e.push(now_us.saturating_sub(pub_us) as f64);
+                            }
+                        }
+                    }
+                }
+                fetch_lat.lock().unwrap().push(round_us);
+                if let Ok(n) = c.ack_batch(&tags) {
+                    acked.fetch_add(n, Ordering::SeqCst);
+                }
+            }
+        }));
+    }
+
+    // One producer trickling the whole corpus through the standing
+    // herd: at any instant ready depth is far below the herd size, so
+    // delivery order and wakeup discipline — not raw bandwidth — set
+    // the tail.
+    let t0 = Instant::now();
+    {
+        let mut rng = Rng::new(0x1C57 ^ fetchers as u64);
+        let pick = QueuePick::new(cfg.queues, cfg.zipf);
+        let mut feeder = BrokerClient::connect(&addr).expect("connect incast feeder");
+        let mut batch: Vec<TaskEnvelope> = Vec::with_capacity(128);
+        for i in 0..cfg.tasks {
+            let q = &queues[pick.pick(&mut rng)];
+            batch.push(TaskEnvelope::new(
+                q.clone(),
+                Payload::Control(ControlMsg::Ping {
+                    token: payload_token(i, epoch.elapsed().as_micros() as u64, cfg.payload),
+                }),
+            ));
+            if batch.len() >= 128 || i + 1 == cfg.tasks {
+                let n = batch.len() as u64;
+                feeder.publish_batch(&std::mem::take(&mut batch)).expect("incast publish");
+                enqueued.fetch_add(n, Ordering::SeqCst);
+            }
+        }
+    }
+    producer_done.store(true, Ordering::SeqCst);
+    for h in herd {
+        h.join().expect("incast fetcher panicked");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // Scheduler + reactor counters before teardown.
+    let sched_stats = BrokerClient::connect(&addr)
+        .ok()
+        .and_then(|mut c| c.sched_stats().ok())
+        .unwrap_or_default();
+    #[cfg(target_os = "linux")]
+    let park_wakes = server.reactor_stats().map(|s| s.park_wakes).unwrap_or(0);
+    #[cfg(not(target_os = "linux"))]
+    let park_wakes = 0;
+    server.shutdown_hard();
+
+    let e2e = e2e_lat.lock().unwrap();
+    let fetch = fetch_lat.lock().unwrap();
+    let acked = acked.load(Ordering::SeqCst);
+    IncastCell {
+        sched: match sched {
+            SchedMode::Srwf => "srwf".to_string(),
+            SchedMode::Fifo => "fifo".to_string(),
+        },
+        fetchers,
+        queues: cfg.queues,
+        enqueued: enqueued.load(Ordering::SeqCst),
+        acked,
+        wall_s,
+        per_s: acked as f64 / wall_s.max(1e-9),
+        e2e_p50_us: percentile(&e2e, 50.0),
+        e2e_p99_us: percentile(&e2e, 99.0),
+        e2e_p999_us: percentile(&e2e, 99.9),
+        fetch_p50_us: percentile(&fetch, 50.0),
+        fetch_p99_us: percentile(&fetch, 99.0),
+        fetch_p999_us: percentile(&fetch, 99.9),
+        granted: sched_stats.granted,
+        fruitless_scans: sched_stats.fruitless_scans,
+        park_wakes,
+    }
+}
+
+/// The incast section: SRWF and FIFO cells at the baseline and full
+/// herd sizes (4 cells), plus the gate verdict over the SRWF pair.
+pub fn run_incast(cfg: &IncastConfig) -> (Vec<IncastCell>, IncastGate) {
+    assert!(cfg.fetchers > 0 && cfg.queues > 0 && cfg.tasks > 0);
+    let baseline = cfg.baseline_fetchers.max(1).min(cfg.fetchers);
+    let mut cells = Vec::new();
+    for sched in [SchedMode::Srwf, SchedMode::Fifo] {
+        for herd in [baseline, cfg.fetchers] {
+            if herd == baseline && baseline == cfg.fetchers && !cells.is_empty() {
+                continue; // degenerate config: one herd size per sched
+            }
+            cells.push(run_incast_cell(sched, herd, cfg));
+        }
+    }
+    let srwf_big = cells
+        .iter()
+        .filter(|c| c.sched == "srwf")
+        .max_by_key(|c| c.fetchers)
+        .expect("srwf cell");
+    let srwf_base = cells
+        .iter()
+        .filter(|c| c.sched == "srwf")
+        .min_by_key(|c| c.fetchers)
+        .expect("srwf baseline");
+    let tail_ratio = srwf_big.fetch_p999_us / srwf_big.fetch_p50_us.max(1e-9);
+    let throughput_ratio = srwf_big.per_s / srwf_base.per_s.max(1e-9);
+    let gate = IncastGate {
+        tail_ratio,
+        throughput_ratio,
+        pass_tail: tail_ratio <= 3.0,
+        pass_throughput: throughput_ratio >= 0.9,
+    };
+    (cells, gate)
+}
+
+/// Render the incast section as an aligned table.
+pub fn incast_series(cells: &[IncastCell]) -> Series {
+    let mut s = Series::new(
+        "incast: grant tail latency & throughput vs herd size",
+        "fetchers",
+        &[
+            "srwf",
+            "acked",
+            "per_s",
+            "fetch_p50_us",
+            "fetch_p999_us",
+            "e2e_p99_us",
+            "park_wakes",
+        ],
+    );
+    for c in cells {
+        s.push(
+            c.fetchers as f64,
+            vec![
+                f64::from(u8::from(c.sched == "srwf")),
+                c.acked as f64,
+                c.per_s,
+                c.fetch_p50_us,
+                c.fetch_p999_us,
+                c.e2e_p99_us,
+                c.park_wakes as f64,
+            ],
+        );
+    }
+    s
+}
+
+/// One incast cell as a JSON object (`BENCH_incast.json` rows).
+pub fn incast_cell_json(c: &IncastCell) -> Json {
+    Json::obj(vec![
+        ("sched", Json::str(&c.sched)),
+        ("fetchers", Json::num(c.fetchers as f64)),
+        ("queues", Json::num(c.queues as f64)),
+        ("enqueued", Json::num(c.enqueued as f64)),
+        ("acked", Json::num(c.acked as f64)),
+        ("wall_s", Json::num(c.wall_s)),
+        ("per_s", Json::num(c.per_s)),
+        ("e2e_p50_us", Json::num(c.e2e_p50_us)),
+        ("e2e_p99_us", Json::num(c.e2e_p99_us)),
+        ("e2e_p999_us", Json::num(c.e2e_p999_us)),
+        ("fetch_p50_us", Json::num(c.fetch_p50_us)),
+        ("fetch_p99_us", Json::num(c.fetch_p99_us)),
+        ("fetch_p999_us", Json::num(c.fetch_p999_us)),
+        ("granted", Json::num(c.granted as f64)),
+        ("fruitless_scans", Json::num(c.fruitless_scans as f64)),
+        ("park_wakes", Json::num(c.park_wakes as f64)),
+    ])
+}
+
+/// Human-readable incast summary.
+pub fn render_incast(cells: &[IncastCell], gate: &IncastGate) -> String {
+    let mut out = String::from("incast (standing fetcher herd vs one trickling producer):\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  {:>4} x{:>5} fetchers/{} queues: {} acked @ {:.0}/s, fetch p50/p99/p999 \
+             {:.0}/{:.0}/{:.0} us, e2e p50/p99/p999 {:.0}/{:.0}/{:.0} us, \
+             {} granted, {} park wakes\n",
+            c.sched,
+            c.fetchers,
+            c.queues,
+            c.acked,
+            c.per_s,
+            c.fetch_p50_us,
+            c.fetch_p99_us,
+            c.fetch_p999_us,
+            c.e2e_p50_us,
+            c.e2e_p99_us,
+            c.e2e_p999_us,
+            c.granted,
+            c.park_wakes,
+        ));
+    }
+    out.push_str(&format!(
+        "  gate: tail p999/p50 = {:.2} ({}), herd/baseline throughput = {:.2} ({})\n",
+        gate.tail_ratio,
+        if gate.pass_tail { "pass <= 3.0" } else { "FAIL > 3.0" },
+        gate.throughput_ratio,
+        if gate.pass_throughput { "pass >= 0.9" } else { "FAIL < 0.9" },
+    ));
+    out
+}
+
+/// Write `results/<stem>.{csv,json}` plus `BENCH_incast.json` — the
+/// receiver-driven overload control trajectory point CI gates on in
+/// full mode.
+pub fn write_incast_outputs(
+    cells: &[IncastCell],
+    gate: &IncastGate,
+    quick: bool,
+    stem: &str,
+) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    incast_series(cells).save_csv(dir, stem)?;
+    let out = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        (
+            "reactor_available",
+            Json::Bool(crate::net::reactor_available()),
+        ),
+        ("cells", Json::arr(cells.iter().map(incast_cell_json).collect())),
+        ("tail_ratio", Json::num(gate.tail_ratio)),
+        ("throughput_ratio", Json::num(gate.throughput_ratio)),
+        ("pass_tail", Json::Bool(gate.pass_tail)),
+        ("pass_throughput", Json::Bool(gate.pass_throughput)),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.json")), to_string(&out))?;
+    std::fs::write("BENCH_incast.json", to_string(&out))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1320,6 +1720,37 @@ mod tests {
             // binary gates the tight <= 3 budget in its own process.
             assert!(mux.client_threads <= 16, "{mux:?}");
         }
+    }
+
+    #[test]
+    fn incast_tiny_cells_drain_losslessly_under_both_scheds() {
+        let cfg = IncastConfig {
+            fetchers: 8,
+            queues: 2,
+            baseline_fetchers: 4,
+            tasks: 240,
+            zipf: 1.0,
+            payload: 32,
+            budget_bytes: 16 << 10,
+            net_threads: 2,
+        };
+        let (cells, gate) = run_incast(&cfg);
+        assert_eq!(cells.len(), 4, "srwf/fifo x baseline/herd");
+        for c in &cells {
+            assert_eq!(c.enqueued, 240, "{c:?}");
+            assert_eq!(c.acked, 240, "lossless drain: {c:?}");
+            assert!(c.per_s > 0.0);
+            assert!(c.fetch_p50_us > 0.0);
+        }
+        assert!(
+            cells.iter().any(|c| c.sched == "srwf") && cells.iter().any(|c| c.sched == "fifo")
+        );
+        // SRWF cells ran the grant scheduler for real.
+        assert!(
+            cells.iter().filter(|c| c.sched == "srwf").all(|c| c.granted >= 240),
+            "{cells:?}"
+        );
+        assert!(gate.tail_ratio > 0.0 && gate.throughput_ratio > 0.0);
     }
 
     #[test]

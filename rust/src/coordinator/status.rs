@@ -26,6 +26,7 @@ pub fn queue_stats_json(name: &str, st: &QueueStats) -> Json {
         ("requeued", Json::num(st.requeued as f64)),
         ("dead_lettered", Json::num(st.dead_lettered as f64)),
         ("lease_expired", Json::num(st.lease_expired as f64)),
+        ("granted", Json::num(st.granted as f64)),
     ])
 }
 
@@ -51,13 +52,14 @@ pub fn member_health_json(m: &MemberHealth) -> Json {
     ])
 }
 
-/// The broker-side `totals`/`durability`/`leases` sections of a status
-/// report, built from any [`TaskQueue`] — one field list shared by the
-/// in-process [`status_json`] and the remote `merlin status` path so
-/// the two reports cannot drift.
+/// The broker-side `totals`/`durability`/`scheduler`/`leases` sections
+/// of a status report, built from any [`TaskQueue`] — one field list
+/// shared by the in-process [`status_json`] and the remote
+/// `merlin status` path so the two reports cannot drift.
 pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)> {
     let totals = broker.totals();
     let durability = broker.durability_stats();
+    let sched = broker.sched_stats();
     let leases = broker.lease_stats();
     let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
     vec![
@@ -79,6 +81,15 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
                 ("wal_records", Json::num(durability.wal_records as f64)),
                 ("snapshots", Json::num(durability.snapshots as f64)),
                 ("recovered", Json::num(durability.recovered as f64)),
+            ]),
+        ),
+        (
+            "scheduler",
+            Json::obj(vec![
+                ("granted", Json::num(sched.granted as f64)),
+                ("grant_queue_len", Json::num(sched.grant_queue_len as f64)),
+                ("overcommit_active", Json::num(sched.overcommit_active as f64)),
+                ("fruitless_scans", Json::num(sched.fruitless_scans as f64)),
             ]),
         ),
         (
@@ -156,8 +167,15 @@ pub fn status_report_full(
     out.push_str("queues:\n");
     for (q, st) in broker.stats_all() {
         out.push_str(&format!(
-            "  {q}: ready={} unacked={} published={} acked={} requeued={} dead={}\n",
-            st.ready, st.unacked, st.published, st.acked, st.requeued, st.dead_lettered
+            "  {q}: ready={} unacked={} published={} acked={} requeued={} dead={} granted={}\n",
+            st.ready, st.unacked, st.published, st.acked, st.requeued, st.dead_lettered, st.granted
+        ));
+    }
+    let sched = broker.sched_stats();
+    if sched.granted > 0 || sched.grant_queue_len > 0 || sched.fruitless_scans > 0 {
+        out.push_str(&format!(
+            "scheduler: {} granted, {} waiting for grants, {} overcommitted, {} fruitless scans\n",
+            sched.granted, sched.grant_queue_len, sched.overcommit_active, sched.fruitless_scans
         ));
     }
     let leases = broker.lease_stats();
@@ -372,6 +390,37 @@ mod tests {
         // Without a dataset the section is absent from both forms.
         assert!(matches!(status_json(&broker, &state, &[]).get("dataset"), Json::Null));
         assert!(!status_report(&broker, &state, &[]).contains("dataset:"));
+    }
+
+    #[test]
+    fn scheduler_section_reports_grant_counters() {
+        let broker = Broker::default();
+        let state = StateStore::new(Store::new());
+        broker
+            .publish(TaskEnvelope::new(
+                "m.sim",
+                Payload::Control(ControlMsg::Ping { token: "x".into() }),
+            ))
+            .unwrap();
+        let c = broker.register_consumer();
+        let got = broker.fetch_n_budgeted(
+            c,
+            &["m.sim"],
+            0,
+            8,
+            1 << 20,
+            std::time::Duration::from_millis(200),
+        );
+        assert_eq!(got.len(), 1);
+        let j = status_json(&broker, &state, &[]);
+        let sched = j.get("scheduler");
+        assert_eq!(sched.get("granted").as_u64(), Some(1));
+        assert_eq!(sched.get("grant_queue_len").as_u64(), Some(0));
+        let queues = j.get("queues").as_arr().unwrap();
+        assert_eq!(queues[0].get("granted").as_u64(), Some(1));
+        let text = status_report(&broker, &state, &[]);
+        assert!(text.contains("granted=1"));
+        assert!(text.contains("scheduler: 1 granted"));
     }
 
     #[test]

@@ -130,8 +130,9 @@ USAGE:
   merlin loadgen [--members N] [--producers N] [--workers N] [--steps N]
                  [--tasks N] [--batch N] [--zipf S] [--payload-min N]
                  [--payload-max N] [--lease-ms N] [--kill-at FRAC]
-                 [--scale] [--connections N1,N2,...] [--net-threads N]
-                 [--mux-members N] [--quick] [--seed N]
+                 [--scale] [--connections N1,N2,...] [--incast W,Q]
+                 [--budget-bytes N] [--net-threads N] [--mux-members N]
+                 [--quick] [--seed N]
       Open-loop stress harness: spin up N federated broker members
       in-process (real TCP + wire v2/v3) and drive them with producers x
       workers over S step queues. Reports throughput and enqueue /
@@ -154,6 +155,16 @@ USAGE:
       federated handle per transport (multiplexing pool vs mutexed
       client), writing BENCH_muxclient.json and failing in every mode
       if the pool adds more than 3 client-side threads.
+      --incast W,Q runs the receiver-driven overload section instead: a
+      herd of W budgeted fetchers (--budget-bytes per request) camp on Q
+      queues while one producer trickles the corpus in, measured once
+      under SRWF grant scheduling and once under plain FIFO, each at a
+      small baseline herd and at the full herd. Reports grant (fetch
+      round-trip) and enqueue->ack p50/p99/p999 per cell and writes
+      BENCH_incast.json. Full mode fails if the SRWF full-herd grant
+      p999 exceeds 3x its own p50 or the full herd delivers less than
+      90% of the baseline herd's throughput; every mode fails if any
+      cell loses tasks.
 
   merlin serve-backend [--addr 127.0.0.1:7778] [--features-dir DIR]
                        [--features-shards N] [--fsync always|never|interval:MS]
@@ -1105,6 +1116,69 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     let quick = has_flag(args, "--quick") || merlin::util::bench_quick();
     if quick {
         cfg.quicken();
+    }
+    if let Some(spec) = flag(args, "--incast") {
+        // `--incast W,Q`: W fetcher connections over Q queues against
+        // one broker — the receiver-driven overload control section.
+        let parts: Vec<usize> = spec
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|n| *n > 0)
+            .collect();
+        if parts.len() != 2 {
+            eprintln!("bad --incast {spec:?} (expect W,Q e.g. 1024,4)");
+            return 2;
+        }
+        let mut icfg = loadgen::IncastConfig::default();
+        if quick {
+            icfg.quicken();
+        }
+        // The explicit herd shape always wins over quicken()'s default.
+        icfg.fetchers = parts[0];
+        icfg.queues = parts[1];
+        icfg.baseline_fetchers = icfg.baseline_fetchers.min(icfg.fetchers);
+        icfg.tasks = flag_u64(args, "--tasks", icfg.tasks);
+        icfg.zipf = flag_f64(args, "--zipf", icfg.zipf);
+        icfg.budget_bytes = flag_u64(args, "--budget-bytes", icfg.budget_bytes);
+        icfg.net_threads = flag_u64(args, "--net-threads", icfg.net_threads as u64) as usize;
+        println!(
+            "loadgen incast section: {} fetchers over {} queues, {} tasks, zipf {}, \
+             budget {} bytes (srwf + fifo cells, {}-fetcher baseline)\n",
+            icfg.fetchers, icfg.queues, icfg.tasks, icfg.zipf, icfg.budget_bytes,
+            icfg.baseline_fetchers
+        );
+        let (cells, gate) = loadgen::run_incast(&icfg);
+        print!("{}", loadgen::render_incast(&cells, &gate));
+        println!("\n{}", loadgen::incast_series(&cells).table());
+        if let Err(e) = loadgen::write_incast_outputs(&cells, &gate, quick, "loadgen_incast") {
+            eprintln!("write results: {e}");
+        }
+        // Lossless in any mode: every enqueued task must be acked.
+        for c in &cells {
+            if c.acked != c.enqueued {
+                eprintln!("FAIL: incast cell dropped tasks: {c:?}");
+                return 1;
+            }
+        }
+        // The tail/throughput gates are full-mode claims; quick smoke
+        // runs on starved CI cores report the ratios without failing.
+        if !quick {
+            if !gate.pass_tail {
+                eprintln!(
+                    "FAIL: incast grant tail p999/p50 = {:.2} (> 3.0)",
+                    gate.tail_ratio
+                );
+                return 1;
+            }
+            if !gate.pass_throughput {
+                eprintln!(
+                    "FAIL: incast herd throughput is {:.2}x of the baseline (< 0.9)",
+                    gate.throughput_ratio
+                );
+                return 1;
+            }
+        }
+        return 0;
     }
     if let Some(ladder) = flag(args, "--connections") {
         let connections: Vec<usize> = ladder

@@ -38,8 +38,10 @@ const BUF_SHRINK_AT: usize = 4 << 20;
 const BUF_SHRINK_TO: usize = 64 << 10;
 
 /// A frame held server-side because its queues were empty (long-poll
-/// fetch). The reactor retries it — on a targeted wakeup, on a
-/// backoff tick, and finally at `deadline` with `last_try` set.
+/// fetch). The reactor retries it — on a count-limited targeted wakeup
+/// (in park FIFO order), and finally at `deadline` with `last_try`
+/// set. There is no blind retry tick: readiness arrives as explicit
+/// wake budgets from the service's grant machinery.
 pub(crate) struct Parked {
     /// The original request frame body.
     pub body: Vec<u8>,
@@ -47,8 +49,6 @@ pub(crate) struct Parked {
     pub queues: Vec<String>,
     /// When the client-requested wait expires.
     pub deadline: Instant,
-    /// Next scheduled blind retry.
-    pub next_retry: Instant,
 }
 
 /// State for one accepted connection.
@@ -69,8 +69,10 @@ pub(crate) struct Conn {
     /// First park deadline, pinned across park/retry cycles so retries
     /// never extend the client's requested wait.
     pub park_deadline: Option<Instant>,
-    /// Current blind-retry backoff interval.
-    pub park_interval: Duration,
+    /// Monotonic park generation: bumped each time the frame parks, so
+    /// the reactor's FIFO wake queue can detect stale entries for a
+    /// connection that was woken (or torn down) and parked again.
+    pub park_token: u64,
     /// Peer sent FIN (`EPOLLRDHUP` / zero-length read).
     pub peer_closed: bool,
     /// Connection is condemned; torn down once no job is in flight.
@@ -86,7 +88,7 @@ pub(crate) struct Conn {
 }
 
 impl Conn {
-    pub fn new(stream: TcpStream, now: Instant, park_interval: Duration) -> Self {
+    pub fn new(stream: TcpStream, now: Instant) -> Self {
         Conn {
             stream,
             inbuf: Vec::new(),
@@ -95,7 +97,7 @@ impl Conn {
             busy: false,
             parked: None,
             park_deadline: None,
-            park_interval,
+            park_token: 0,
             peer_closed: false,
             dead: false,
             dirty: false,
@@ -226,7 +228,7 @@ mod tests {
     }
 
     fn conn(server: TcpStream) -> Conn {
-        Conn::new(server, Instant::now(), Duration::from_millis(25))
+        Conn::new(server, Instant::now())
     }
 
     #[test]

@@ -221,12 +221,20 @@ pub fn tune_stream(stream: &TcpStream) -> std::io::Result<()> {
 /// How a completed frame changes queue readiness — the reactor uses
 /// this to wake connections parked in a server-side long-poll wait
 /// (see [`ServiceReply::Park`]) without polling them.
+///
+/// Wakeups are *count-limited*: each `(queue, count)` pair is a budget
+/// of how many parked waiters may be woken for that queue, consumed in
+/// park FIFO order. A publish of one message wakes one waiter, not the
+/// whole herd. Services whose readiness originates outside the frame
+/// stream (an in-process broker handle, lease reaping) inject the same
+/// budgets through [`reactor::WakeBudget`] instead.
 #[derive(Debug)]
 pub enum WakeHint {
     /// Nothing became ready (queries, acks, empty replies).
     None,
-    /// These queues may have gained messages (publishes).
-    Queues(Vec<String>),
+    /// These queues gained messages: wake up to `count` parked waiters
+    /// per queue (publishes — count is the number of messages enqueued).
+    Queues(Vec<(String, usize)>),
     /// Readiness may have changed anywhere (requeue/nack/reap — the
     /// affected queues aren't cheap to name).
     All,

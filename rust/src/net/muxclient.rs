@@ -147,6 +147,9 @@ struct MemberConn {
     stream: TcpStream,
     /// Negotiated wire version (≥ 3; ≥ 4 enables pipelining).
     wire: u8,
+    /// Whether the member's hello advertised grant-based delivery
+    /// (receiver budgets may be sent in `PopN`).
+    grants: bool,
     /// Read-accumulation buffer; reply frames are split off its front.
     inbuf: Vec<u8>,
     /// Encoded request frames not yet accepted by the socket.
@@ -215,6 +218,9 @@ pub struct MemberStats {
     pub attached: bool,
     /// Negotiated wire version (0 when detached).
     pub wire: u8,
+    /// Whether the member advertised grant-based delivery (false when
+    /// detached). Budgeted `PopN` requests are only legal when true.
+    pub grants: bool,
     /// Requests submitted but not yet completed.
     pub in_flight: usize,
     /// Next correlation id the pipelined path would assign.
@@ -417,6 +423,7 @@ impl MuxPool {
                 format!("member speaks wire v{wire_version} (< 3): use the mutexed client"),
             ));
         }
+        let grants = client.grants();
         let stream = client.into_stream()?;
         stream.set_nonblocking(true)?;
         let mut g = self.shared.members[idx].lock().unwrap();
@@ -426,6 +433,7 @@ impl MuxPool {
         *g = Some(MemberConn {
             stream,
             wire: wire_version,
+            grants,
             inbuf: Vec::new(),
             outbuf: Vec::new(),
             outpos: 0,
@@ -455,12 +463,14 @@ impl MuxPool {
             Some(c) => MemberStats {
                 attached: true,
                 wire: c.wire,
+                grants: c.grants,
                 in_flight: c.in_flight(),
                 next_corr_id: c.next_id,
             },
             None => MemberStats {
                 attached: false,
                 wire: 0,
+                grants: false,
                 in_flight: 0,
                 next_corr_id: 0,
             },
@@ -594,6 +604,8 @@ mod tests {
         let client = BrokerClient::connect(addr).unwrap();
         assert_eq!(client.wire_version(), 4);
         pool.attach(idx, client).unwrap();
+        let st = pool.member_stats(idx);
+        assert!(st.grants, "modern member must advertise grants");
     }
 
     #[test]

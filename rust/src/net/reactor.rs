@@ -19,16 +19,23 @@
 //!
 //! Long-poll fetches never hold a pool thread: a service that has
 //! nothing to deliver returns [`ServiceReply::Park`] and the reactor
-//! holds the frame, retrying it on targeted wakeups (a publish names
-//! the queues it touched), on an exponential-backoff blind tick (for
-//! work published outside this server, e.g. an in-process broker
-//! handle), and finally at the client's deadline with `last_try` set.
+//! holds the frame, retrying it on *count-limited* targeted wakeups —
+//! each readiness event carries a per-queue credit of how many waiters
+//! it can satisfy, consumed in park FIFO order, so one publish wakes
+//! one waiter instead of the whole herd — and finally at the client's
+//! deadline with `last_try` set. Credits arrive in-band as
+//! [`WakeHint::Queues`] counts on completions, or out-of-band through
+//! [`WakeBudget`] (the broker's grant machinery injects one for every
+//! message made ready, covering in-process publishers, lease reaps,
+//! and requeues that never cross this listener). The blind
+//! exponential retry tick this replaces woke every parked connection
+//! every backoff interval whether or not anything was ready.
 //!
 //! Total thread count is `1 + blocking_threads`, independent of the
 //! number of connections — the property the connection-scaling bench
 //! (`merlin loadgen --connections ...`) measures.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::fs::File;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -180,10 +187,6 @@ pub struct ReactorConfig {
     pub idle_timeout: Option<Duration>,
     /// Blocking-pool size (min 1).
     pub blocking_threads: usize,
-    /// Initial blind-retry interval for parked long-poll frames.
-    pub park_retry: Duration,
-    /// Blind-retry backoff cap.
-    pub park_retry_cap: Duration,
     /// Inbound buffer high-water mark (reading pauses past it once a
     /// complete frame is buffered).
     pub in_high_water: usize,
@@ -198,8 +201,6 @@ impl Default for ReactorConfig {
             max_connections: 16_384,
             idle_timeout: None,
             blocking_threads: 4,
-            park_retry: Duration::from_millis(25),
-            park_retry_cap: Duration::from_millis(250),
             in_high_water: 1 << 20,
             out_resume: 1 << 20,
         }
@@ -221,6 +222,11 @@ pub struct ReactorStats {
     pub max_outbuf: usize,
     /// Connections closed by the idle sweep.
     pub idle_closed: u64,
+    /// Parked long-poll frames re-dispatched by a targeted,
+    /// count-limited wakeup (not by their deadline). With one message
+    /// published into a herd of parked fetchers, this moves by exactly
+    /// one — the anti-thundering-herd regression signal.
+    pub park_wakes: u64,
 }
 
 #[derive(Default)]
@@ -231,6 +237,7 @@ struct StatCells {
     frames: AtomicU64,
     max_outbuf: AtomicUsize,
     idle_closed: AtomicU64,
+    park_wakes: AtomicU64,
 }
 
 struct Job {
@@ -303,6 +310,9 @@ struct Shared {
     stop: AtomicU8,
     wake: File,
     completions: Mutex<Vec<Completion>>,
+    /// Out-of-band wake credits: `(queue, count)` pairs injected by
+    /// [`WakeBudget`] holders for readiness the frame stream never saw.
+    pending_wakes: Mutex<Vec<(String, usize)>>,
     stats: StatCells,
 }
 
@@ -337,6 +347,17 @@ impl ReactorHandle {
             frames: s.frames.load(Ordering::Relaxed),
             max_outbuf: s.max_outbuf.load(Ordering::Relaxed),
             idle_closed: s.idle_closed.load(Ordering::Relaxed),
+            park_wakes: s.park_wakes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A cloneable credit injector for this reactor: whoever makes a
+    /// queue ready outside the frame stream (in-process publishers,
+    /// lease reaps) calls [`WakeBudget::notify`] to wake that many
+    /// parked long-poll waiters, in park order.
+    pub fn wake_budget(&self) -> WakeBudget {
+        WakeBudget {
+            shared: self.shared.clone(),
         }
     }
 
@@ -372,6 +393,30 @@ impl Drop for ReactorHandle {
     }
 }
 
+/// Out-of-band wake credits for parked long-poll frames (see
+/// [`ReactorHandle::wake_budget`]). Cheap to clone; safe to call after
+/// the reactor stopped (the nudge is simply ignored).
+#[derive(Clone)]
+pub struct WakeBudget {
+    shared: Arc<Shared>,
+}
+
+impl WakeBudget {
+    /// `queue` gained `count` ready messages: allow up to that many
+    /// parked waiters on it to be woken.
+    pub fn notify(&self, queue: &str, count: usize) {
+        if count == 0 {
+            return;
+        }
+        self.shared
+            .pending_wakes
+            .lock()
+            .unwrap()
+            .push((queue.to_string(), count));
+        self.shared.wake_reactor();
+    }
+}
+
 /// Start a reactor serving `service` on `listener`. Spawns one reactor
 /// thread plus `cfg.blocking_threads` pool threads; returns once the
 /// epoll set is live.
@@ -390,6 +435,7 @@ pub fn serve(
         stop: AtomicU8::new(STOP_RUN),
         wake,
         completions: Mutex::new(Vec::new()),
+        pending_wakes: Mutex::new(Vec::new()),
         stats: StatCells::default(),
     });
     let jobs = Arc::new(JobQueue::new());
@@ -413,8 +459,9 @@ pub fn serve(
         bufpool: Vec::new(),
         dirty: Vec::new(),
         parked_count: 0,
-        woke_all: false,
-        woke_queues: HashSet::new(),
+        park_fifo: std::collections::VecDeque::new(),
+        wake_all: false,
+        wake_budgets: HashMap::new(),
         next_idle_sweep: Instant::now(),
         accept_paused_until: None,
     };
@@ -465,12 +512,26 @@ struct Reactor {
     /// Connections needing a pump pass this iteration.
     dirty: Vec<u64>,
     parked_count: usize,
-    /// Wake hints accumulated from this iteration's completions.
-    woke_all: bool,
-    woke_queues: HashSet<String>,
+    /// Park arrival order: `(conn id, park_token)` per parked frame.
+    /// Wake credits are spent front-to-back, so the longest-waiting
+    /// fetcher is granted first. Entries go stale when their connection
+    /// is woken or torn down; the token mismatch filters them lazily.
+    park_fifo: std::collections::VecDeque<(u64, u64)>,
+    /// A `WakeHint::All` arrived this iteration: wake every parked frame.
+    wake_all: bool,
+    /// Per-queue wake credits with their deposit time. A credit wakes
+    /// exactly one parked waiter; unspent credits expire after
+    /// [`WAKE_BUDGET_TTL`] — they are kept briefly (rather than dropped
+    /// when no waiter matches) to close the race where a fetch polls
+    /// empty, the publish credit arrives, and only then does the park
+    /// completion reach the reactor.
+    wake_budgets: HashMap<String, (usize, Instant)>,
     next_idle_sweep: Instant,
     accept_paused_until: Option<Instant>,
 }
+
+/// How long an unspent wake credit stays redeemable.
+const WAKE_BUDGET_TTL: Duration = Duration::from_millis(100);
 
 impl Reactor {
     fn run(mut self, pool: Vec<JoinHandle<()>>) {
@@ -490,6 +551,7 @@ impl Reactor {
                     id => self.conn_event(id, ev.events, now),
                 }
             }
+            self.drain_external_wakes(now);
             self.drain_completions(now);
             self.pump_dirty(now);
             self.run_timers(now);
@@ -530,7 +592,7 @@ impl Reactor {
         if self.parked_count > 0 {
             for c in self.conns.values() {
                 if let Some(p) = &c.parked {
-                    bump(p.next_retry.min(p.deadline), &mut next);
+                    bump(p.deadline, &mut next);
                 }
             }
         }
@@ -580,8 +642,7 @@ impl Reactor {
                     {
                         continue;
                     }
-                    self.conns
-                        .insert(id, Conn::new(stream, now, self.cfg.park_retry));
+                    self.conns.insert(id, Conn::new(stream, now));
                     self.shared.stats.accepted.fetch_add(1, Ordering::Relaxed);
                     self.shared
                         .stats
@@ -641,6 +702,40 @@ impl Reactor {
         }
     }
 
+    /// Move externally injected wake credits into the budget map.
+    fn drain_external_wakes(&mut self, now: Instant) {
+        let batch = std::mem::take(&mut *self.shared.pending_wakes.lock().unwrap());
+        for (q, n) in batch {
+            self.add_budget(q, n, now);
+        }
+    }
+
+    fn add_budget(&mut self, queue: String, count: usize, now: Instant) {
+        let e = self.wake_budgets.entry(queue).or_insert((0, now));
+        e.0 = e.0.saturating_add(count);
+        e.1 = now;
+    }
+
+    /// Spend one wake credit covering any of `queues`, if one is live.
+    fn take_credit(&mut self, queues: &[String], now: Instant) -> bool {
+        if self.wake_all {
+            return true;
+        }
+        for q in queues {
+            if let Some((n, born)) = self.wake_budgets.get_mut(q) {
+                if *n > 0 && now.duration_since(*born) <= WAKE_BUDGET_TTL {
+                    *n -= 1;
+                    let empty = *n == 0;
+                    if empty {
+                        self.wake_budgets.remove(q);
+                    }
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
     fn drain_completions(&mut self, now: Instant) {
         let batch = std::mem::take(&mut *self.shared.completions.lock().unwrap());
         for Completion { conn: id, outcome } in batch {
@@ -649,13 +744,16 @@ impl Reactor {
                     self.recycle(body);
                     match wake {
                         WakeHint::None => {}
-                        WakeHint::All => self.woke_all = true,
-                        WakeHint::Queues(qs) => self.woke_queues.extend(qs),
+                        WakeHint::All => self.wake_all = true,
+                        WakeHint::Queues(qs) => {
+                            for (q, n) in qs {
+                                self.add_budget(q, n, now);
+                            }
+                        }
                     }
                     if let Some(conn) = self.conns.get_mut(&id) {
                         conn.busy = false;
                         conn.park_deadline = None;
-                        conn.park_interval = self.cfg.park_retry;
                         conn.last_activity = now;
                         if !conn.dead {
                             conn.queue_reply(&frame);
@@ -670,32 +768,52 @@ impl Reactor {
                     self.recycle(frame);
                 }
                 Outcome::Park { body, wait, queues } => {
-                    let Some(conn) = self.conns.get_mut(&id) else {
-                        self.recycle(body);
-                        continue;
+                    let dead = match self.conns.get(&id) {
+                        None => {
+                            self.recycle(body);
+                            continue;
+                        }
+                        Some(c) => c.dead || c.peer_closed,
                     };
-                    conn.busy = false;
-                    if conn.dead || conn.peer_closed {
+                    if dead {
+                        let conn = self.conns.get_mut(&id).unwrap();
+                        conn.busy = false;
                         self.recycle(body);
-                    } else {
-                        // Pin the deadline at first park; retries keep it.
-                        let deadline = *conn.park_deadline.get_or_insert_with(|| {
+                        self.mark_dirty(id);
+                        continue;
+                    }
+                    // Pin the deadline at first park; retries keep it.
+                    let deadline = {
+                        let conn = self.conns.get_mut(&id).unwrap();
+                        *conn.park_deadline.get_or_insert_with(|| {
                             now.checked_add(wait)
                                 .unwrap_or(now + Duration::from_secs(86_400))
-                        });
-                        // Exponential backoff on blind retries, so a
-                        // fleet of idle long-pollers costs O(conns) pool
-                        // jobs per park_retry_cap, not per park_retry.
-                        let interval = conn.park_interval;
-                        conn.park_interval = (interval * 2).min(self.cfg.park_retry_cap);
-                        conn.parked = Some(Parked {
+                        })
+                    };
+                    // A credit may have landed between the service's
+                    // empty poll and this completion: spend it now and
+                    // re-dispatch immediately instead of parking into a
+                    // wait no wakeup is coming for.
+                    if self.take_credit(&queues, now) {
+                        self.shared.stats.park_wakes.fetch_add(1, Ordering::Relaxed);
+                        self.jobs.push(Job {
+                            conn: id,
                             body,
-                            queues,
-                            deadline,
-                            next_retry: (now + interval).min(deadline),
+                            last_try: now >= deadline,
                         });
-                        self.parked_count += 1;
+                        continue;
                     }
+                    let conn = self.conns.get_mut(&id).unwrap();
+                    conn.busy = false;
+                    conn.park_token += 1;
+                    let token = conn.park_token;
+                    conn.parked = Some(Parked {
+                        body,
+                        queues,
+                        deadline,
+                    });
+                    self.parked_count += 1;
+                    self.park_fifo.push_back((id, token));
                     self.mark_dirty(id);
                 }
             }
@@ -788,45 +906,82 @@ impl Reactor {
         }
     }
 
+    /// Un-park a frame and hand it back to the blocking pool.
+    fn dispatch_parked(&mut self, id: u64, last: bool, targeted: bool) {
+        let Some(conn) = self.conns.get_mut(&id) else {
+            return;
+        };
+        let Some(p) = conn.parked.take() else {
+            return;
+        };
+        self.parked_count -= 1;
+        conn.busy = true;
+        if targeted {
+            self.shared.stats.park_wakes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.jobs.push(Job {
+            conn: id,
+            body: p.body,
+            last_try: last,
+        });
+    }
+
     fn run_timers(&mut self, now: Instant) {
-        // Parked long-poll frames: targeted wakeups, blind backoff
-        // retries, and final deadline tries.
+        // Parked long-poll frames: final deadline tries first (the
+        // client's wait is up regardless of credits), then count-limited
+        // targeted wakeups in park FIFO order.
         if self.parked_count > 0 {
-            let woke_all = self.woke_all;
-            let woke_queues = std::mem::take(&mut self.woke_queues);
-            let mut due: Vec<(u64, bool)> = Vec::new();
+            let mut due: Vec<u64> = Vec::new();
             for (id, c) in &self.conns {
                 if c.busy || c.dead {
                     continue;
                 }
                 if let Some(p) = &c.parked {
-                    let last = now >= p.deadline;
-                    let woken = woke_all
-                        || (!woke_queues.is_empty()
-                            && p.queues.iter().any(|q| woke_queues.contains(q)));
-                    if last || woken || now >= p.next_retry {
-                        due.push((*id, last));
+                    if now >= p.deadline {
+                        due.push(*id);
                     }
                 }
             }
-            for (id, last) in due {
-                let Some(conn) = self.conns.get_mut(&id) else {
-                    continue;
-                };
-                let Some(p) = conn.parked.take() else {
-                    continue;
-                };
-                self.parked_count -= 1;
-                conn.busy = true;
-                self.jobs.push(Job {
-                    conn: id,
-                    body: p.body,
-                    last_try: last,
-                });
+            for id in due {
+                self.dispatch_parked(id, true, false);
             }
         }
-        self.woke_all = false;
-        self.woke_queues.clear();
+        if self.parked_count > 0 && (self.wake_all || !self.wake_budgets.is_empty()) {
+            let mut scan = std::mem::take(&mut self.park_fifo);
+            let mut keep = std::collections::VecDeque::with_capacity(scan.len());
+            while let Some((id, token)) = scan.pop_front() {
+                let live = match self.conns.get(&id) {
+                    Some(c) => {
+                        !c.busy && !c.dead && c.park_token == token && c.parked.is_some()
+                    }
+                    None => false,
+                };
+                if !live {
+                    continue; // stale: woken earlier or torn down
+                }
+                let queues: Vec<String> = self
+                    .conns
+                    .get(&id)
+                    .and_then(|c| c.parked.as_ref())
+                    .map(|p| p.queues.clone())
+                    .unwrap_or_default();
+                if self.take_credit(&queues, now) {
+                    self.dispatch_parked(id, false, true);
+                } else {
+                    keep.push_back((id, token));
+                    if !self.wake_all && self.wake_budgets.is_empty() {
+                        // No credits left: keep the rest untouched.
+                        keep.extend(scan.drain(..));
+                        break;
+                    }
+                }
+            }
+            self.park_fifo = keep;
+        }
+        self.wake_all = false;
+        // Expire credits nothing redeemed in time.
+        self.wake_budgets
+            .retain(|_, (n, born)| *n > 0 && now.duration_since(*born) <= WAKE_BUDGET_TTL);
         // Idle sweep.
         if let Some(idle) = self.cfg.idle_timeout {
             if now >= self.next_idle_sweep {

@@ -114,6 +114,11 @@ pub struct WorkerConfig {
     /// `merlin.outputs.count`); `None` = capture everything the
     /// simulation reports.
     pub output_limit: Option<usize>,
+    /// Receiver byte budget advertised on every fetch (0 = unlimited).
+    /// With a grant-scheduling broker this bounds how much task payload
+    /// one refill round trip can carry; the refill window then adapts
+    /// to what the scheduler actually granted (see [`Worker::run`]).
+    pub budget_bytes: u64,
 }
 
 impl WorkerConfig {
@@ -135,6 +140,7 @@ impl WorkerConfig {
             objective_index: None,
             results: None,
             output_limit: None,
+            budget_bytes: 0,
         }
     }
 }
@@ -243,6 +249,13 @@ impl Worker {
         let mut report = WorkerReport::default();
         let mut last_work = Instant::now();
         let mut buf: VecDeque<Delivery> = VecDeque::new();
+        // Refill window sized from the last grant: when the broker's
+        // scheduler clips a budgeted refill (returned fewer deliveries
+        // than asked while still returning some), the next ask matches
+        // the clipped size — the receiver stops requesting windows the
+        // grant plane will not fill. A fully-granted refill earns the
+        // window back one slot per round trip (additive recovery).
+        let mut grant_window = window;
         loop {
             if let Some(every) = heartbeat_every {
                 if last_beat.elapsed() >= every {
@@ -262,13 +275,26 @@ impl Worker {
                 } else {
                     Duration::ZERO
                 };
-                buf.extend(self.queue.fetch_n(
+                let want = (window - buf.len()).min(grant_window).max(1);
+                let got = self.queue.fetch_n_budgeted(
                     consumer,
                     &queues,
                     self.cfg.prefetch,
-                    window - buf.len(),
+                    want,
+                    self.cfg.budget_bytes,
                     wait,
-                ));
+                );
+                // Only adapt when a budget is in play: without one, a
+                // short return just means the queue ran dry, and
+                // shrinking the window would degrade tail batching.
+                if self.cfg.budget_bytes != 0 && !got.is_empty() {
+                    grant_window = if got.len() < want {
+                        got.len()
+                    } else {
+                        (grant_window + 1).min(window)
+                    };
+                }
+                buf.extend(got);
             }
             match buf.pop_front() {
                 Some(d) => {
@@ -829,6 +855,31 @@ mod tests {
             0,
             "heartbeats kept every lease alive"
         );
+    }
+
+    #[test]
+    fn tiny_byte_budget_adapts_window_and_drains_everything() {
+        // A 1-byte receiver budget clips every grant to a single
+        // message (never-split-below-one). The refill window collapses
+        // to match the grants, and the worker still drains the whole
+        // study — metering must never become starvation.
+        let (broker, state, _rec, clock) = setup();
+        let t = template(WorkSpec::Noop, 1);
+        broker.publish(hierarchy::root_task(t, 12, 4, "q")).unwrap();
+        let mut cfg = WorkerConfig::simple("q", clock);
+        cfg.prefetch = 4;
+        cfg.budget_bytes = 1;
+        let mut w = Worker::new(
+            broker.clone(),
+            Some(state.clone()),
+            None,
+            Arc::new(super::super::sim::NullSimRunner),
+            cfg,
+        );
+        let report = w.run();
+        assert_eq!(report.samples_ok, 12);
+        assert_eq!(broker.depth(), 0);
+        assert_eq!(broker.inflight(), 0);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use merlin::backend::state::StateStore;
 use merlin::backend::store::Store;
-use merlin::broker::core::Broker;
+use merlin::broker::core::{Broker, BrokerConfig, SchedMode};
 use merlin::broker::net::BrokerServer;
 use merlin::broker::{FederatedClient, FederationConfig, TaskQueue};
 use merlin::coordinator::{orchestrate, resubmit_missing_trusting_broker, RunOptions};
@@ -23,15 +23,19 @@ use merlin::task::{ControlMsg, Payload, StepTemplate, TaskEnvelope, WorkSpec};
 use merlin::util::clock::RealClock;
 use merlin::worker::{run_pool_on, NullSimRunner, WorkerConfig};
 
-fn serve_members_with(
+fn serve_members_sched(
     n: usize,
     cfg: &merlin::net::ServeConfig,
+    sched: SchedMode,
 ) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
     let mut brokers = Vec::new();
     let mut servers = Vec::new();
     let mut addrs = Vec::new();
     for _ in 0..n {
-        let broker = Broker::default();
+        let broker = Broker::new(BrokerConfig {
+            sched,
+            ..BrokerConfig::default()
+        });
         let server =
             BrokerServer::serve_with(broker.clone(), "127.0.0.1:0", cfg.clone()).unwrap();
         addrs.push(server.addr.to_string());
@@ -39,6 +43,13 @@ fn serve_members_with(
         servers.push(server);
     }
     (brokers, servers, addrs)
+}
+
+fn serve_members_with(
+    n: usize,
+    cfg: &merlin::net::ServeConfig,
+) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+    serve_members_sched(n, cfg, SchedMode::default())
 }
 
 /// Default server mode: reactor on Linux, threaded elsewhere — so the
@@ -429,10 +440,18 @@ impl ClientMode {
 /// must pass identically: batch publish, status aggregation, windowed
 /// fetch + batch ack, long-poll wakeup, recovery ranges, lease expiry
 /// via a second handle, and (for the wire transports) hard-shutdown
-/// down-marking. Invoked once per mode below — the
+/// down-marking. Invoked once per (mode, grants) cell below — the
 /// threaded-vs-reactor-vs-in-process and mux-vs-mutex parity suite.
-fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode) {
-    let (brokers, servers, addrs) = serve_members_with(2, &cfg);
+///
+/// `grants` selects the delivery scheduler the members run (SRWF with a
+/// budgeted windowed fetch vs legacy FIFO with an unbudgeted one): the
+/// observable results must be identical either way, and the grant
+/// counters must move exactly when grants are on. This is the
+/// invisibility contract — receiver-driven delivery changes tail
+/// behavior, never correctness or the wire surface old clients see.
+fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: bool) {
+    let sched = if grants { SchedMode::Srwf } else { SchedMode::Fifo };
+    let (brokers, servers, addrs) = serve_members_sched(2, &cfg, sched);
     let connect = || match client {
         ClientMode::InProcess => {
             // Same Broker instances, no wire: the semantic baseline the
@@ -459,15 +478,27 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode) {
     assert_eq!(fed.queue_names().len(), 6);
     assert!(fed.member_health().iter().all(|m| m.up));
 
-    // Windowed multi-queue fetch with batched ack.
+    // Windowed multi-queue fetch with batched ack — budgeted when
+    // grants are on (the budget is generous; clipping is the
+    // properties suite's concern, transparency is this one's).
     let consumer = fed.register_consumer();
     let queues: Vec<String> = (0..6).map(|q| format!("m.step{q}")).collect();
     let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-    let got = fed.fetch_n(consumer, &refs, 0, 6, Duration::from_millis(2_000));
+    let budget = if grants { 1 << 20 } else { 0 };
+    let got = fed.fetch_n_budgeted(consumer, &refs, 0, 6, budget, Duration::from_millis(2_000));
     assert_eq!(got.len(), 6, "whole corpus in one windowed fetch");
     let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
     assert_eq!(fed.ack_batch(&tags).unwrap(), 6);
     assert_eq!(fed.depth(), 0);
+    let sched_stats = fed.sched_stats();
+    if grants {
+        assert!(
+            sched_stats.granted >= 6,
+            "SRWF members count grants, aggregated over the wire: {sched_stats:?}"
+        );
+    } else {
+        assert_eq!(sched_stats.granted, 0, "fifo members never grant: {sched_stats:?}");
+    }
 
     // Long-poll fetch waits for a late publisher instead of returning
     // empty — the park/wake path in reactor mode, a blocked connection
@@ -550,24 +581,46 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode) {
 
 #[test]
 fn wire_parity_threaded_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, true);
+}
+
+#[test]
+fn wire_parity_threaded_mode_no_grants() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, false);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_reactor_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, true);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_reactor_mode_no_grants() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, false);
 }
 
 #[test]
 fn wire_parity_in_process_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, true);
+}
+
+#[test]
+fn wire_parity_in_process_mode_no_grants() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, false);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_mux_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, true);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_mux_mode_no_grants() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, false);
 }
 
 /// One-connection-at-a-time TCP delay proxy: every accepted connection

@@ -259,6 +259,68 @@ fn parked_fetch_wakes_on_publish() {
     server.shutdown();
 }
 
+/// Anti-thundering-herd regression: with a whole herd of long-poll
+/// fetchers parked on one queue, publishing a single message wakes
+/// exactly ONE of them — `park_wakes` moves by one and exactly one
+/// fetcher comes back with the task. The blind park-retry design this
+/// replaced re-dispatched every parked connection on any readiness
+/// signal and let them race for one message; under incast that is
+/// herd-1 fruitless broker scans per publish.
+#[cfg(target_os = "linux")]
+#[test]
+fn single_publish_wakes_exactly_one_parked_fetcher() {
+    const HERD: usize = 12;
+    let server =
+        BrokerServer::serve_with(Broker::default(), "127.0.0.1:0", ServeConfig::reactor())
+            .unwrap();
+    let addr = server.addr.to_string();
+
+    let fetchers: Vec<_> = (0..HERD)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = BrokerClient::connect(&addr).unwrap();
+                let got = c.fetch_n(&["np.herd"], 0, 3_000, 1).unwrap();
+                // Ack in-thread so the winner's delivery can never be
+                // requeued by connection teardown (which would wake a
+                // second fetcher and fog the count).
+                for d in &got {
+                    c.ack(d.tag).unwrap();
+                }
+                got.len()
+            })
+        })
+        .collect();
+
+    // Every connection dispatches a hello frame then its PopN frame;
+    // once 2×HERD frames are in, all fetchers are parked (or at worst
+    // mid-park, which the credit hand-off covers identically).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = server.reactor_stats().unwrap();
+        if stats.frames >= 2 * HERD as u64 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "herd never parked: {stats:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let before = server.reactor_stats().unwrap().park_wakes;
+
+    let mut publisher = BrokerClient::connect(&addr).unwrap();
+    publisher.publish_batch(&[ping("np.herd", "one".into())]).unwrap();
+
+    let delivered: usize = fetchers.into_iter().map(|f| f.join().unwrap()).sum();
+    assert_eq!(delivered, 1, "exactly one fetcher got the message");
+    let after = server.reactor_stats().unwrap().park_wakes;
+    assert_eq!(
+        after - before,
+        1,
+        "one publish = one targeted wakeup, not a herd stampede"
+    );
+    server.shutdown();
+}
+
 /// Chaos: hard-kill a member broker while a batch of correlated
 /// requests is pipelined on its mux connection. Every parked waiter
 /// must resolve promptly with a transport error (no hang), a request

@@ -9,7 +9,7 @@ use merlin::broker::wire;
 use merlin::coordinator::resubmit::ranges_of;
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::hierarchy::{expand, flat, root_task};
-use merlin::task::{ser, Payload, StepTemplate, TaskEnvelope, WorkSpec};
+use merlin::task::{ser, Payload, StepTask, StepTemplate, TaskEnvelope, WorkSpec};
 use merlin::testing::prop::cases;
 
 fn template(spt: u64, seed: u64) -> StepTemplate {
@@ -401,6 +401,175 @@ fn prop_wire_negotiation_matrix() {
         assert_eq!(wire::negotiate(0, server), 1);
         assert_eq!(wire::negotiate(client, 0), 1);
         assert_eq!(wire::negotiate(0, 0), 1);
+    });
+}
+
+#[test]
+fn prop_budgeted_fetch_never_exceeds_budget_yet_always_progresses() {
+    // The grant invariant of receiver-driven delivery: a budgeted batch
+    // never carries more wire bytes than the advertised budget — except
+    // the never-split-below-one case, where a single over-budget
+    // message is still granted so a starving window makes progress.
+    // And whatever budgets are drawn, every message is delivered
+    // exactly once: clipping a batch must never drop the clipped tail.
+    cases(0x62A7, 80, |g| {
+        let broker = Broker::default();
+        let n = g.usize_in(1, 120);
+        for i in 0..n {
+            let t = TaskEnvelope::new(
+                "q",
+                Payload::Control(merlin::task::ControlMsg::Ping {
+                    token: format!("{i}-{}", "x".repeat(g.usize_in(0, 400))),
+                }),
+            );
+            broker.publish(t).unwrap();
+        }
+        let consumer = broker.register_consumer();
+        let mut seen = 0usize;
+        let mut safety = 0;
+        loop {
+            safety += 1;
+            assert!(safety < 10_000, "drain must terminate");
+            let budget = g.u64_in(1, 2000);
+            let max_n = g.usize_in(1, 16);
+            let got = broker.fetch_n_budgeted(
+                consumer,
+                &["q"],
+                0,
+                max_n,
+                budget,
+                std::time::Duration::ZERO,
+            );
+            if got.is_empty() {
+                break;
+            }
+            let bytes: u64 = got.iter().map(|d| ser::encode(&d.task).len() as u64).sum();
+            if got.len() > 1 {
+                assert!(
+                    bytes <= budget,
+                    "over-granted: {bytes} wire bytes > {budget} budget across {} messages",
+                    got.len()
+                );
+            }
+            let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+            seen += got.len();
+            assert_eq!(broker.ack_batch(&tags).unwrap(), tags.len());
+        }
+        assert_eq!(seen, n, "budget clipping must never lose messages");
+        assert_eq!(broker.depth(), 0);
+        assert_eq!(broker.inflight(), 0);
+        let sched = broker.sched_stats();
+        assert_eq!(sched.granted, n as u64, "every delivery was one grant");
+        assert_eq!(sched.grant_queue_len, 0, "no stuck grants after drain");
+        assert_eq!(sched.overcommit_active, 0);
+    });
+}
+
+#[test]
+fn prop_grant_accounting_counts_every_delivery_once() {
+    // Credits are conserved through requeue cycles: `granted` moves
+    // exactly once per delivery (redeliveries of nacked messages
+    // included — a requeued message costs a fresh grant), the per-queue
+    // and broker-wide counters agree, and the grant queue is empty once
+    // the drain completes.
+    cases(0x62AC, 60, |g| {
+        let broker = Broker::default();
+        let n = g.usize_in(1, 80);
+        for i in 0..n {
+            let mut t = TaskEnvelope::new(
+                "q",
+                Payload::Control(merlin::task::ControlMsg::Ping {
+                    token: format!("{i}"),
+                }),
+            );
+            t.retries_left = 100; // nacks in this test never exhaust
+            broker.publish(t).unwrap();
+        }
+        let consumer = broker.register_consumer();
+        let mut deliveries = 0u64;
+        let mut acked = BTreeSet::new();
+        let mut safety = 0;
+        while let Some(d) = broker.try_fetch(consumer, &["q"], 0) {
+            safety += 1;
+            assert!(safety < 100_000, "drain must terminate");
+            deliveries += 1;
+            let token = match &d.task.payload {
+                Payload::Control(merlin::task::ControlMsg::Ping { token }) => token.clone(),
+                _ => unreachable!(),
+            };
+            if g.chance(0.25) {
+                broker.nack(d.tag, true).unwrap(); // requeue: costs a new grant
+            } else {
+                broker.ack(d.tag).unwrap();
+                assert!(acked.insert(token), "double completion");
+            }
+        }
+        assert_eq!(acked.len(), n, "every message eventually acked once");
+        let sched = broker.sched_stats();
+        assert_eq!(sched.granted, deliveries, "one grant per delivery, requeues included");
+        assert_eq!(broker.stats("q").granted, deliveries, "per-queue counter agrees");
+        assert_eq!(sched.grant_queue_len, 0);
+        assert_eq!(sched.overcommit_active, 0);
+    });
+}
+
+#[test]
+fn prop_srwf_drains_waves_shortest_first_contiguously() {
+    // The scheduling theorem behind the tail-latency claim: whatever
+    // wave sizes are drawn, SRWF delivers each (study, step) wave as
+    // one contiguous block, blocks ordered by remaining depth — i.e.
+    // ascending initial size, publish order breaking ties. (Popping
+    // from the shortest wave keeps it strictly shortest, so the
+    // scheduler never oscillates between waves.)
+    cases(0x52F5, 80, |g| {
+        let broker = Broker::default();
+        let k = g.usize_in(1, 6);
+        let sizes: Vec<usize> = (0..k).map(|_| g.usize_in(1, 20)).collect();
+        let mut total = 0usize;
+        for (w, sz) in sizes.iter().enumerate() {
+            for i in 0..*sz {
+                broker
+                    .publish(TaskEnvelope::new(
+                        "q",
+                        Payload::Step(StepTask {
+                            template: StepTemplate {
+                                study_id: format!("w{w}"),
+                                step_name: "s".into(),
+                                work: WorkSpec::Noop,
+                                samples_per_task: 1,
+                                seed: 0,
+                            },
+                            lo: i as u64,
+                            hi: i as u64 + 1,
+                        }),
+                    ))
+                    .unwrap();
+                total += 1;
+            }
+        }
+        let consumer = broker.register_consumer();
+        let mut order = Vec::new();
+        while let Some(d) = broker.try_fetch(consumer, &["q"], 0) {
+            if let Payload::Step(s) = &d.task.payload {
+                order.push(s.template.study_id.clone());
+            }
+            broker.ack(d.tag).unwrap();
+        }
+        assert_eq!(order.len(), total, "conservation");
+        let mut blocks: Vec<(String, usize)> = Vec::new();
+        for s in &order {
+            match blocks.last_mut() {
+                Some((name, c)) if name == s => *c += 1,
+                _ => blocks.push((s.clone(), 1)),
+            }
+        }
+        assert_eq!(blocks.len(), k, "each wave drains contiguously: {order:?}");
+        let expected: Vec<(String, usize)> = {
+            let mut idx: Vec<usize> = (0..k).collect();
+            idx.sort_by_key(|i| sizes[*i]); // stable: publish order breaks ties
+            idx.iter().map(|i| (format!("w{i}"), sizes[*i])).collect()
+        };
+        assert_eq!(blocks, expected, "shortest remaining wave first");
     });
 }
 
