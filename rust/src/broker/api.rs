@@ -21,17 +21,41 @@ use super::core::{
 
 /// Error surfaced by [`TaskQueue`] operations. Collapses the broker's
 /// semantic errors and the federation's transport errors into one
-/// string-carrying type (callers either retry, surface the message, or
-/// `.ok()` it — none branch on the variant across backends).
+/// type. [`QueueError::QuotaExceeded`] is the one variant callers
+/// branch on — a producer that hits its tenant quota backs off instead
+/// of retrying or failing the study; everything else stays a
+/// string-carrying [`QueueError::Other`] (callers retry, surface the
+/// message, or `.ok()` it). The typed variant survives the wire: the
+/// server attaches `code: "quota_exceeded"` and clients re-type it.
 #[derive(Debug, Clone, PartialEq)]
-pub struct QueueError(
-    /// Human-readable failure description.
-    pub String,
-);
+pub enum QueueError {
+    /// A per-tenant quota refused the operation (publish rate, resident
+    /// tasks, or resident bytes).
+    QuotaExceeded(String),
+    /// Any other failure (semantic or transport).
+    Other(String),
+}
+
+impl QueueError {
+    /// Shorthand for the untyped variant.
+    pub fn msg(s: impl Into<String>) -> Self {
+        QueueError::Other(s.into())
+    }
+
+    /// The human-readable message, whatever the variant.
+    pub fn message(&self) -> &str {
+        match self {
+            QueueError::QuotaExceeded(s) | QueueError::Other(s) => s,
+        }
+    }
+}
 
 impl std::fmt::Display for QueueError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}", self.0)
+        match self {
+            QueueError::QuotaExceeded(s) => write!(f, "quota exceeded: {s}"),
+            QueueError::Other(s) => write!(f, "{s}"),
+        }
     }
 }
 
@@ -39,13 +63,19 @@ impl std::error::Error for QueueError {}
 
 impl From<super::core::BrokerError> for QueueError {
     fn from(e: super::core::BrokerError) -> Self {
-        QueueError(e.to_string())
+        match e {
+            super::core::BrokerError::QuotaExceeded(m) => QueueError::QuotaExceeded(m),
+            other => QueueError::Other(other.to_string()),
+        }
     }
 }
 
 impl From<super::client::ClientError> for QueueError {
     fn from(e: super::client::ClientError) -> Self {
-        QueueError(e.to_string())
+        match e {
+            super::client::ClientError::Quota(m) => QueueError::QuotaExceeded(m),
+            other => QueueError::Other(other.to_string()),
+        }
     }
 }
 
@@ -59,6 +89,11 @@ pub struct MemberHealth {
     pub up: bool,
     /// Lifetime connect/IO errors observed against this member.
     pub errors: u64,
+    /// The error this member contributed to the most recent aggregating
+    /// fan-out (`stats_all`/`sched`/`totals`/…), if any — how partial
+    /// aggregation results surface instead of silently dropping the
+    /// member. Cleared when a later fan-out succeeds against it.
+    pub error: Option<String>,
 }
 
 /// The queue service: everything the coordinator, the resubmission
@@ -200,6 +235,18 @@ pub trait TaskQueue: Send + Sync {
     fn member_health(&self) -> Vec<MemberHealth> {
         Vec::new()
     }
+
+    /// Per-tenant usage counters (merged by tenant id across a
+    /// federation). Empty on single-tenant deployments and against
+    /// servers that predate tenancy.
+    fn tenant_stats(&self) -> Vec<super::tenant::TenantUsage> {
+        Vec::new()
+    }
+
+    /// Credit `sim_us` microseconds of simulated compute to the calling
+    /// tenant's usage counters (surfaced by [`Self::tenant_stats`]).
+    /// Best-effort accounting — a no-op on servers that predate tenancy.
+    fn report_usage(&self, _sim_us: u64) {}
 }
 
 impl TaskQueue for Broker {
@@ -309,6 +356,14 @@ impl TaskQueue for Broker {
 
     fn purge(&self, queue: &str) -> usize {
         Broker::purge(self, queue)
+    }
+
+    fn tenant_stats(&self) -> Vec<super::tenant::TenantUsage> {
+        Broker::tenant_stats(self)
+    }
+
+    fn report_usage(&self, sim_us: u64) {
+        Broker::record_sim_us(self, sim_us)
     }
 }
 

@@ -17,10 +17,10 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{
-    BrokerTotals, ConsumerLease, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
-};
-use super::wire::{self, BinMsg, Frame, WireError};
+use super::core::{BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats};
+use super::sideops;
+use super::tenant::TenantUsage;
+use super::wire::{self, BinMsg, Frame, HelloFeatures, Session, WireError};
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
 
@@ -28,12 +28,9 @@ use crate::util::json::Json;
 pub struct BrokerClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
-    wire: u8,
-    /// Server advertised the grant scheduler (`hello` capability): PopN
-    /// may carry the optional trailing byte-budget field. Against older
-    /// servers the field is omitted entirely — their strict decoders
-    /// reject trailing bytes.
-    grants: bool,
+    /// The negotiated session: wire version, grant capability, and (on
+    /// auth-required servers) the authenticated tenant id.
+    session: Session,
 }
 
 /// Errors surfaced by broker/backend client calls.
@@ -41,6 +38,12 @@ pub struct BrokerClient {
 pub enum ClientError {
     /// Transport-level failure (the connection is unusable).
     Wire(WireError),
+    /// The server refused authentication (bad/missing token, or an op
+    /// attempted before a successful hello on an auth-required server).
+    Auth(String),
+    /// The server refused a publish on a per-tenant quota (rate limit or
+    /// queued-tasks/bytes ceiling). Retryable after backlog drains.
+    Quota(String),
     /// The server processed the request and returned an error.
     Server(String),
     /// The server's reply violated the protocol (client/server bug).
@@ -51,6 +54,8 @@ impl std::fmt::Display for ClientError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Auth(e) => write!(f, "auth: {e}"),
+            ClientError::Quota(e) => write!(f, "quota: {e}"),
             ClientError::Server(e) => write!(f, "server: {e}"),
             ClientError::Protocol(e) => write!(f, "protocol: {e}"),
         }
@@ -65,35 +70,65 @@ impl From<WireError> for ClientError {
     }
 }
 
+/// Re-type a JSON error reply: the server attaches a machine-readable
+/// `code` to auth and quota refusals ([`wire::err_code`]); everything
+/// else stays [`ClientError::Server`].
+fn server_error(resp: &Json) -> ClientError {
+    let msg = resp.get("error").as_str().unwrap_or("unknown").to_string();
+    match resp.get("code").as_str() {
+        Some(c) if c == wire::ERR_CODE_AUTH => ClientError::Auth(msg),
+        Some(c) if c == wire::ERR_CODE_QUOTA => ClientError::Quota(msg),
+        _ => ClientError::Server(msg),
+    }
+}
+
+/// Re-type a binary `Err` frame (no code field on the binary path, so
+/// the typed failures are recognized by their stable message prefixes).
+fn bin_error(msg: String) -> ClientError {
+    if msg.starts_with("quota exceeded") {
+        ClientError::Quota(msg)
+    } else if msg.starts_with("authentication required") || msg.starts_with("invalid auth token") {
+        ClientError::Auth(msg)
+    } else {
+        ClientError::Server(msg)
+    }
+}
+
 impl BrokerClient {
     /// Connect to a broker server and negotiate the wire version.
     pub fn connect(addr: &str) -> std::io::Result<Self> {
-        Self::connect_with_max_wire(addr, ser::WIRE_V4)
+        Self::connect_with(addr, ser::WIRE_V5, None)
     }
 
     /// Connect advertising at most `max_wire` — the negotiation-matrix
     /// seam. Tests pin an old client against a new server (and vice
     /// versa) to prove every fallback rung stays lossless.
     pub fn connect_with_max_wire(addr: &str, max_wire: u64) -> std::io::Result<Self> {
+        Self::connect_with(addr, max_wire, None)
+    }
+
+    /// Connect, optionally presenting an auth token at hello. Against an
+    /// auth-required server the token is mandatory (a refusal fails the
+    /// connect); against an auth-off server it is ignored.
+    pub fn connect_with(
+        addr: &str,
+        max_wire: u64,
+        token: Option<&str>,
+    ) -> std::io::Result<Self> {
         let stream = TcpStream::connect(addr)?;
         crate::net::tune_stream(&stream)?;
         let mut client = Self {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
-            wire: 1,
-            grants: false,
+            session: Session::legacy(),
         };
-        // Negotiate: an old server answers `hello` with an unknown-op
-        // error — that is the v1 fallback, not a failure.
-        match client.call(&Json::obj(vec![
-            ("op", Json::str("hello")),
-            ("max_wire", Json::num(max_wire as f64)),
-        ])) {
-            Ok(resp) => {
-                client.wire = resp.get("wire").as_u64().unwrap_or(1) as u8;
-                client.grants = resp.get("grants").as_bool().unwrap_or(false);
-            }
-            Err(ClientError::Server(_)) => client.wire = 1,
+        let offer = HelloFeatures::client(max_wire, token.map(String::from));
+        match client.call(&offer.request_json()) {
+            Ok(resp) => client.session = Session::from_reply(&resp),
+            // An old server answers `hello` with an unknown-op error —
+            // that is the v1 fallback, not a failure. Auth refusals are
+            // typed, so they fail the connect instead of degrading.
+            Err(ClientError::Server(_)) => client.session = Session::legacy(),
             Err(e) => {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::Other,
@@ -104,16 +139,28 @@ impl BrokerClient {
         Ok(client)
     }
 
+    /// The negotiated session (wire version, capabilities, tenant).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
     /// The negotiated wire version (1 = JSON only, 2 = binary batches,
-    /// 3 = batches + delivery leases, 4 = v3 plus correlated frames).
+    /// 3 = batches + delivery leases, 4 = v3 plus correlated frames,
+    /// 5 = v4 plus authenticated sessions).
     pub fn wire_version(&self) -> u8 {
-        self.wire
+        self.session.wire
     }
 
     /// Whether the server advertised the grant-based delivery scheduler
     /// (and so understands the PopN byte-budget field).
     pub fn grants(&self) -> bool {
-        self.grants
+        self.session.grants
+    }
+
+    /// The tenant id this connection authenticated as (auth-required
+    /// servers only; `None` on auth-off servers).
+    pub fn tenant(&self) -> Option<&str> {
+        self.session.tenant.as_deref()
     }
 
     /// Tear the client down to its raw negotiated socket — the handoff
@@ -134,16 +181,14 @@ impl BrokerClient {
         if resp.get("ok").as_bool() == Some(true) {
             Ok(resp)
         } else {
-            Err(ClientError::Server(
-                resp.get("error").as_str().unwrap_or("unknown").to_string(),
-            ))
+            Err(server_error(&resp))
         }
     }
 
     fn read_bin_reply(&mut self) -> Result<BinMsg, ClientError> {
         match wire::read_frame_any(&mut self.reader)? {
             Frame::Bin(body) => match wire::decode_bin(&body)? {
-                BinMsg::Err(e) => Err(ClientError::Server(e)),
+                BinMsg::Err(e) => Err(bin_error(e)),
                 msg => Ok(msg),
             },
             Frame::Json(_) => Err(ClientError::Protocol(
@@ -174,7 +219,7 @@ impl BrokerClient {
         &mut self,
         tasks: &[crate::task::TaskEnvelope],
     ) -> Result<(), ClientError> {
-        if self.wire >= 2 {
+        if self.session.wire >= 2 {
             let blobs: Vec<Vec<u8>> = tasks.iter().map(ser::encode_v2).collect();
             match self.call_bin(&BinMsg::EnqueueBatch(blobs))? {
                 BinMsg::OkCount(_) => Ok(()),
@@ -203,7 +248,7 @@ impl BrokerClient {
         &mut self,
         batches: &[&[crate::task::TaskEnvelope]],
     ) -> Result<u64, ClientError> {
-        if self.wire < 2 {
+        if self.session.wire < 2 {
             let mut total = 0u64;
             for b in batches {
                 self.publish_batch(b)?;
@@ -300,13 +345,13 @@ impl BrokerClient {
         max: usize,
         budget_bytes: u64,
     ) -> Result<Vec<Delivery>, ClientError> {
-        if self.wire >= 2 {
+        if self.session.wire >= 2 {
             let msg = BinMsg::PopN {
                 max: max as u64,
                 prefetch: prefetch as u64,
                 timeout_ms,
                 queues: queues.iter().map(|q| q.to_string()).collect(),
-                budget: if self.grants { budget_bytes } else { 0 },
+                budget: if self.session.grants { budget_bytes } else { 0 },
             };
             match self.call_bin(&msg)? {
                 BinMsg::Deliveries(items) => deliveries_from(items),
@@ -345,7 +390,7 @@ impl BrokerClient {
         if tags.is_empty() {
             return Ok(0);
         }
-        if self.wire >= 2 {
+        if self.session.wire >= 2 {
             match self.call_bin(&BinMsg::AckBatch(tags.to_vec()))? {
                 BinMsg::OkCount(n) => Ok(n),
                 other => Err(ClientError::Protocol(format!(
@@ -404,7 +449,7 @@ impl BrokerClient {
     /// lease expires or the broker redelivers its unacked window.
     /// Requires a v3 server.
     pub fn set_lease(&mut self, lease_ms: u64) -> Result<(), ClientError> {
-        if self.wire < 3 {
+        if self.session.wire < 3 {
             return Err(ClientError::Server(
                 "server predates delivery leases (wire < 3)".into(),
             ));
@@ -431,7 +476,7 @@ impl BrokerClient {
         if tags.is_empty() {
             return Ok(0);
         }
-        if self.wire < 3 {
+        if self.session.wire < 3 {
             return Err(ClientError::Server(
                 "server predates delivery leases (wire < 3)".into(),
             ));
@@ -541,33 +586,43 @@ impl BrokerClient {
             .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
             .unwrap_or_default())
     }
+
+    /// Per-tenant usage counters (`tenants` side-op). On an auth-off
+    /// single-tenant server the single row is the whole-broker totals.
+    pub fn tenants(&mut self) -> Result<Vec<TenantUsage>, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("tenants"))]))?;
+        Ok(tenants_from(&r))
+    }
+
+    /// Credit simulation compute time (µs) to this connection's tenant —
+    /// the usage-metering hook workers call after each result batch.
+    pub fn report_usage(&mut self, sim_us: u64) -> Result<(), ClientError> {
+        self.call(&Json::obj(vec![
+            ("op", Json::str("usage")),
+            ("sim_us", Json::num(sim_us as f64)),
+        ]))
+        .map(|_| ())
+    }
 }
 
-/// Parse one queue's statistics from a reply object (shared by the
-/// per-queue and bulk stats calls).
+/// Parse one queue's statistics from a reply object — a thin wrapper
+/// over the field list the server encodes with, so the two ends cannot
+/// drift (shared by the per-queue and bulk stats calls and [`muxops`]).
 fn queue_stats_from(v: &Json) -> QueueStats {
-    QueueStats {
-        ready: v.get("ready").as_u64().unwrap_or(0) as usize,
-        unacked: v.get("unacked").as_u64().unwrap_or(0) as usize,
-        published: v.get("published").as_u64().unwrap_or(0),
-        delivered: v.get("delivered").as_u64().unwrap_or(0),
-        acked: v.get("acked").as_u64().unwrap_or(0),
-        requeued: v.get("requeued").as_u64().unwrap_or(0),
-        dead_lettered: v.get("dead_lettered").as_u64().unwrap_or(0),
-        lease_expired: v.get("lease_expired").as_u64().unwrap_or(0),
-        bytes_published: v.get("bytes_published").as_u64().unwrap_or(0),
-        granted: v.get("granted").as_u64().unwrap_or(0),
-    }
+    sideops::decode(sideops::QUEUE_STATS, v)
 }
 
 /// Parse a `sched` reply (shared with [`muxops`]).
 fn sched_stats_from(r: &Json) -> SchedStats {
-    SchedStats {
-        granted: r.get("granted").as_u64().unwrap_or(0),
-        grant_queue_len: r.get("grant_queue_len").as_u64().unwrap_or(0) as usize,
-        overcommit_active: r.get("overcommit_active").as_u64().unwrap_or(0) as usize,
-        fruitless_scans: r.get("fruitless_scans").as_u64().unwrap_or(0),
-    }
+    sideops::decode(sideops::SCHED_STATS, r)
+}
+
+/// Parse a `tenants` reply (shared with [`muxops`]).
+fn tenants_from(r: &Json) -> Vec<TenantUsage> {
+    r.get("tenants")
+        .as_arr()
+        .map(|a| a.iter().map(sideops::tenant_usage_from_json).collect())
+        .unwrap_or_default()
 }
 
 /// Parse a bulk `stats_all` reply (shared with [`muxops`]).
@@ -588,14 +643,7 @@ fn stats_all_from(r: &Json) -> Vec<(String, QueueStats)> {
 
 /// Parse a `totals` reply (shared with [`muxops`]).
 fn totals_from(r: &Json) -> BrokerTotals {
-    BrokerTotals {
-        published: r.get("published").as_u64().unwrap_or(0),
-        delivered: r.get("delivered").as_u64().unwrap_or(0),
-        acked: r.get("acked").as_u64().unwrap_or(0),
-        requeued: r.get("requeued").as_u64().unwrap_or(0),
-        dead_lettered: r.get("dead_lettered").as_u64().unwrap_or(0),
-        lease_expired: r.get("lease_expired").as_u64().unwrap_or(0),
-    }
+    sideops::decode(sideops::TOTALS, r)
 }
 
 /// Parse a `queued_ranges` reply's `[lo, hi)` pairs (shared with
@@ -617,36 +665,12 @@ fn ranges_from(r: &Json) -> Vec<(u64, u64)> {
 
 /// Parse a `leases` reply (shared with [`muxops`]).
 fn lease_stats_from(r: &Json) -> LeaseStats {
-    let consumers = r
-        .get("consumers")
-        .as_arr()
-        .map(|a| {
-            a.iter()
-                .map(|c| ConsumerLease {
-                    consumer: c.get("consumer").as_u64().unwrap_or(0),
-                    lease_ms: c.get("lease_ms").as_u64().unwrap_or(0),
-                    held: c.get("held").as_u64().unwrap_or(0) as usize,
-                    idle_ms: c.get("idle_ms").as_u64().unwrap_or(0),
-                })
-                .collect()
-        })
-        .unwrap_or_default();
-    LeaseStats {
-        active: r.get("active").as_u64().unwrap_or(0) as usize,
-        expired: r.get("expired").as_u64().unwrap_or(0),
-        consumers,
-    }
+    sideops::lease_stats_from_json(r)
 }
 
 /// Parse a `durability` reply (shared with [`muxops`]).
 fn durability_from(r: &Json) -> DurabilityStats {
-    DurabilityStats {
-        durable: r.get("durable").as_bool().unwrap_or(false),
-        wal_records: r.get("wal_records").as_u64().unwrap_or(0),
-        wal_fsyncs: r.get("wal_fsyncs").as_u64().unwrap_or(0),
-        snapshots: r.get("snapshots").as_u64().unwrap_or(0),
-        recovered: r.get("recovered").as_u64().unwrap_or(0),
-    }
+    sideops::durability_from_json(r)
 }
 
 /// Decode a `Deliveries` reply's (tag, v2-blob) pairs (shared with
@@ -677,21 +701,21 @@ pub mod muxops {
         crate::util::json::to_string(req).into_bytes()
     }
 
-    /// Decode a JSON reply body, mapping `ok: false` to
-    /// [`ClientError::Server`].
+    /// Decode a JSON reply body, mapping `ok: false` to the typed
+    /// [`ClientError`] its `code` field selects (same rules as the
+    /// mutexed client's call path).
     fn json_reply(body: &[u8]) -> Result<Json, ClientError> {
         let resp = wire::parse_json_body(body)?;
         if resp.get("ok").as_bool() == Some(true) {
             Ok(resp)
         } else {
-            Err(ClientError::Server(
-                resp.get("error").as_str().unwrap_or("unknown").to_string(),
-            ))
+            Err(server_error(&resp))
         }
     }
 
-    /// Decode a binary reply body, mapping `Err` frames to
-    /// [`ClientError::Server`].
+    /// Decode a binary reply body, mapping `Err` frames to a typed
+    /// [`ClientError`] by message prefix (binary errors carry no code
+    /// field).
     fn bin_reply(body: &[u8]) -> Result<BinMsg, ClientError> {
         if !body.first().is_some_and(|b| *b >= 0x80) {
             return Err(ClientError::Protocol(
@@ -699,7 +723,7 @@ pub mod muxops {
             ));
         }
         match wire::decode_bin(body)? {
-            BinMsg::Err(e) => Err(ClientError::Server(e)),
+            BinMsg::Err(e) => Err(bin_error(e)),
             msg => Ok(msg),
         }
     }
@@ -941,5 +965,28 @@ pub mod muxops {
     /// Counters returned by a [`sched_req`].
     pub fn sched_rsp(body: &[u8]) -> Result<SchedStats, ClientError> {
         Ok(sched_stats_from(&json_reply(body)?))
+    }
+
+    /// `tenants` (per-tenant usage) request.
+    pub fn tenants_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("tenants"))]))
+    }
+
+    /// Usage rows returned by a [`tenants_req`].
+    pub fn tenants_rsp(body: &[u8]) -> Result<Vec<TenantUsage>, ClientError> {
+        Ok(tenants_from(&json_reply(body)?))
+    }
+
+    /// `usage` (credit simulation µs) request — decode with
+    /// [`unit_rsp`].
+    pub fn usage_req(sim_us: u64) -> Vec<u8> {
+        json_body(&Json::obj(vec![
+            ("op", Json::str("usage")),
+            ("sim_us", Json::num(sim_us as f64)),
+        ]))
+    }
+
+    pub fn usage_rsp(body: &[u8]) -> Result<(), ClientError> {
+        json_reply(body).map(|_| ())
     }
 }

@@ -67,6 +67,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use super::snapshot::{self, Snapshot};
+use super::tenant::{TenantConfig, TenantSpec, TenantUsage, NS_SEP};
 use super::wal::{self, DurabilityConfig, ShardWal, WalOp, WalRecord};
 use crate::task::{ser, Payload, TaskEnvelope};
 use crate::util::hex::fnv1a;
@@ -134,6 +135,11 @@ pub struct BrokerConfig {
     /// queue. 0 = wake exactly as many waiters as there are ready
     /// messages.
     pub overcommit_degree: usize,
+    /// Tenant table: auth tokens, fair-share weights, quotas. The
+    /// default (auth off, no extra tenants) keeps the broker exactly
+    /// single-tenant — no namespacing, no per-tenant accounting on the
+    /// hot path. See DESIGN.md "Multi-Tenant Control Plane".
+    pub tenants: TenantConfig,
 }
 
 impl Default for BrokerConfig {
@@ -144,6 +150,7 @@ impl Default for BrokerConfig {
             default_lease_ms: 0,
             sched: SchedMode::Srwf,
             overcommit_degree: 1,
+            tenants: TenantConfig::default(),
         }
     }
 }
@@ -175,6 +182,11 @@ pub enum BrokerError {
     /// publish was refused (write-ahead: nothing enters the queue that
     /// the log did not capture).
     Wal(String),
+    /// A publish was refused by the publisher's tenant quota (rate,
+    /// resident tasks, or resident bytes) or used a reserved queue
+    /// name. Quota refusal is backpressure, not failure: the publisher
+    /// should drain or slow down and retry.
+    QuotaExceeded(String),
 }
 
 impl std::fmt::Display for BrokerError {
@@ -189,6 +201,7 @@ impl std::fmt::Display for BrokerError {
                 write!(f, "consumer holds {prefetch} unacked messages")
             }
             BrokerError::Wal(e) => write!(f, "write-ahead log: {e}"),
+            BrokerError::QuotaExceeded(e) => write!(f, "quota exceeded: {e}"),
         }
     }
 }
@@ -553,9 +566,129 @@ struct ConsumerMeta {
     last_beat_ms: AtomicU64,
 }
 
+/// Stride-scheduling scale: a weight-w tenant's virtual time advances by
+/// `STRIDE_SCALE / w` per delivery, so long-run delivery shares converge
+/// to the weight ratio whatever the wave mix looks like.
+const STRIDE_SCALE: u64 = 1 << 20;
+
+/// Publish-rate token bucket (guarded by a per-tenant mutex; publishes
+/// for one tenant serialize on it only when a rate is configured).
+struct TokenBucket {
+    tokens: f64,
+    last_ms: u64,
+}
+
+/// Runtime state of one tenant: the spec plus fair-share virtual time,
+/// quota gauges, and usage counters. Slot 0 is always the default
+/// tenant. Counters are only maintained when tenancy is active, so the
+/// single-tenant hot path is untouched.
+struct TenantState {
+    spec: TenantSpec,
+    /// Virtual-time increment per delivery (`STRIDE_SCALE / weight`).
+    stride: u64,
+    /// Stride-scheduling virtual time; advanced on every delivery.
+    vtime: AtomicU64,
+    /// Fetch calls currently inside the broker for this tenant — the
+    /// "has consumers contending right now" signal the fairness gate
+    /// needs (a tenant with backlog but no fetchers must not stall
+    /// everyone else).
+    waiting: AtomicUsize,
+    /// Ready messages across this tenant's queues.
+    ready: AtomicU64,
+    /// Resident (ready + unacked) tasks — what `max-tasks` caps.
+    resident_tasks: AtomicU64,
+    /// Resident payload bytes — what `max-bytes` caps.
+    resident_bytes: AtomicU64,
+    bucket: Mutex<TokenBucket>,
+    published: AtomicU64,
+    bytes_published: AtomicU64,
+    delivered: AtomicU64,
+    acked: AtomicU64,
+    requeued: AtomicU64,
+    dead_lettered: AtomicU64,
+    lease_expired: AtomicU64,
+    quota_denied: AtomicU64,
+    sim_us: AtomicU64,
+}
+
+impl TenantState {
+    fn new(spec: TenantSpec) -> Self {
+        let weight = spec.weight.max(1) as u64;
+        let burst = if spec.publish_burst > 0 {
+            spec.publish_burst
+        } else {
+            spec.publish_rate
+        };
+        TenantState {
+            stride: STRIDE_SCALE / weight,
+            vtime: AtomicU64::new(0),
+            waiting: AtomicUsize::new(0),
+            ready: AtomicU64::new(0),
+            resident_tasks: AtomicU64::new(0),
+            resident_bytes: AtomicU64::new(0),
+            bucket: Mutex::new(TokenBucket {
+                tokens: burst as f64,
+                last_ms: 0,
+            }),
+            published: AtomicU64::new(0),
+            bytes_published: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
+            acked: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            dead_lettered: AtomicU64::new(0),
+            lease_expired: AtomicU64::new(0),
+            quota_denied: AtomicU64::new(0),
+            sim_us: AtomicU64::new(0),
+            spec,
+        }
+    }
+
+    fn usage(&self) -> TenantUsage {
+        TenantUsage {
+            id: self.spec.id.clone(),
+            weight: self.spec.weight,
+            published: self.published.load(Ordering::Relaxed),
+            bytes_published: self.bytes_published.load(Ordering::Relaxed),
+            delivered: self.delivered.load(Ordering::Relaxed),
+            acked: self.acked.load(Ordering::Relaxed),
+            requeued: self.requeued.load(Ordering::Relaxed),
+            dead_lettered: self.dead_lettered.load(Ordering::Relaxed),
+            lease_expired: self.lease_expired.load(Ordering::Relaxed),
+            quota_denied: self.quota_denied.load(Ordering::Relaxed),
+            sim_us: self.sim_us.load(Ordering::Relaxed),
+            queued_tasks: self.resident_tasks.load(Ordering::Relaxed),
+            queued_bytes: self.resident_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Does this tenant table change any observable behavior? False for the
+/// pristine default config — the condition under which every tenant
+/// hook in the hot paths is skipped entirely.
+fn tenancy_active(cfg: &TenantConfig) -> bool {
+    cfg.auth
+        || cfg.tenants.iter().any(|t| {
+            t.id != super::tenant::DEFAULT_TENANT
+                || t.weight != 1
+                || t.max_queued_tasks != 0
+                || t.max_queued_bytes != 0
+                || t.publish_rate != 0
+        })
+}
+
 struct Inner {
     cfg: BrokerConfig,
     shards: Vec<Shard>,
+    /// Tenant table (slot 0 = default tenant, always present).
+    tenants: Vec<TenantState>,
+    /// Tenant id → slot index.
+    tenant_ids: HashMap<String, u16>,
+    /// Auth token → slot index.
+    tokens: HashMap<String, u16>,
+    /// Whether hellos must present a valid token.
+    auth: bool,
+    /// Whether any tenant hook fires at all (see [`tenancy_active`]).
+    multi_tenant: bool,
     /// Global FIFO tiebreak sequence (monotonic across all shards).
     seq: AtomicU64,
     next_tag: AtomicU64,
@@ -602,9 +735,17 @@ struct Inner {
 }
 
 /// The broker. Cheap to clone (`Arc` inside); share one per deployment.
+///
+/// A `Broker` value is a **tenant-scoped handle**: cloning preserves the
+/// scope, [`Broker::authenticate`] / [`Broker::with_tenant`] mint a
+/// handle scoped to another tenant over the same shared state. The
+/// constructors return the default-tenant handle, which behaves exactly
+/// like the pre-tenant broker when no tenant table is configured.
 #[derive(Clone)]
 pub struct Broker {
     inner: Arc<Inner>,
+    /// Tenant slot this handle operates as (0 = default tenant).
+    tenant: u16,
 }
 
 impl Default for Broker {
@@ -620,10 +761,42 @@ impl Broker {
     }
 
     fn new_inner(cfg: BrokerConfig, durable: bool, wal_lock: Option<wal::DirLock>) -> Self {
+        // Build the tenant table: the default tenant is always slot 0;
+        // a configured spec with the default id overrides its
+        // weight/quotas (and may give it a token) instead of adding a
+        // second slot.
+        let mut specs: Vec<TenantSpec> =
+            vec![TenantSpec::new(super::tenant::DEFAULT_TENANT)];
+        for spec in &cfg.tenants.tenants {
+            if spec.id == super::tenant::DEFAULT_TENANT {
+                specs[0] = spec.clone();
+            } else {
+                specs.push(spec.clone());
+            }
+        }
+        let tenant_ids: HashMap<String, u16> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.id.clone(), i as u16))
+            .collect();
+        let tokens: HashMap<String, u16> = specs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.token.clone().map(|t| (t, i as u16)))
+            .collect();
+        let auth = cfg.tenants.auth;
+        let multi_tenant = tenancy_active(&cfg.tenants);
+        let tenants: Vec<TenantState> = specs.into_iter().map(TenantState::new).collect();
         Self {
+            tenant: 0,
             inner: Arc::new(Inner {
                 cfg,
                 shards: (0..NUM_SHARDS).map(|_| Shard::default()).collect(),
+                tenants,
+                tenant_ids,
+                tokens,
+                auth,
+                multi_tenant,
                 seq: AtomicU64::new(0),
                 next_tag: AtomicU64::new(1),
                 next_consumer: AtomicU64::new(1),
@@ -735,6 +908,23 @@ impl Broker {
             .inner
             .recovered
             .store(recovered_total as u64, Ordering::Relaxed);
+        // Recovered tasks re-entered under their namespaced queue names;
+        // rebuild the per-tenant quota/readiness gauges from the queues
+        // (everything comes back *ready*, so inflight contributes none).
+        if broker.inner.multi_tenant {
+            for shard in &broker.inner.shards {
+                let s = shard.state.lock().unwrap();
+                for (name, q) in &s.queues {
+                    let ts = &broker.inner.tenants
+                        [broker.tenant_of_queue(name) as usize];
+                    let n = q.len() as u64;
+                    let bytes: u64 = q.iter().map(|m| m.bytes as u64).sum();
+                    ts.ready.fetch_add(n, Ordering::Relaxed);
+                    ts.resident_tasks.fetch_add(n, Ordering::Relaxed);
+                    ts.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+                }
+            }
+        }
         // The interval policy's loss bound must hold even for a shard
         // that goes idle right after a burst: a background flusher syncs
         // dirty WALs every interval (appends on busy shards still sync
@@ -749,7 +939,7 @@ impl Broker {
                     loop {
                         std::thread::sleep(interval);
                         let Some(inner) = weak.upgrade() else { break };
-                        Broker { inner }.sync_wal().ok();
+                        Broker { inner, tenant: 0 }.sync_wal().ok();
                     }
                 })
                 .expect("spawn wal flusher");
@@ -760,6 +950,250 @@ impl Broker {
     /// The configuration this broker was built with.
     pub fn config(&self) -> &BrokerConfig {
         &self.inner.cfg
+    }
+
+    // ---- tenancy -------------------------------------------------------
+
+    /// Whether hellos must present a valid auth token.
+    pub fn auth_required(&self) -> bool {
+        self.inner.auth
+    }
+
+    /// The tenant this handle operates as.
+    pub fn tenant_id(&self) -> &str {
+        &self.inner.tenants[self.tenant as usize].spec.id
+    }
+
+    /// Resolve a hello-time token into a tenant-scoped handle. With auth
+    /// off, any token (or none) yields the default tenant — exactly the
+    /// pre-tenant behavior. With auth on, a missing or unknown token is
+    /// refused with a human-readable reason (the server maps it onto
+    /// the typed `auth` wire error).
+    pub fn authenticate(&self, token: Option<&str>) -> Result<Broker, String> {
+        if !self.inner.auth {
+            return Ok(Broker {
+                inner: self.inner.clone(),
+                tenant: 0,
+            });
+        }
+        let tok = token.ok_or_else(|| "authentication required".to_string())?;
+        match self.inner.tokens.get(tok) {
+            Some(&t) => Ok(Broker {
+                inner: self.inner.clone(),
+                tenant: t,
+            }),
+            None => Err("invalid auth token".into()),
+        }
+    }
+
+    /// A handle scoped to the named tenant (test/ops seam — the wire
+    /// path always goes through [`Broker::authenticate`]).
+    pub fn with_tenant(&self, id: &str) -> Option<Broker> {
+        self.inner.tenant_ids.get(id).map(|&t| Broker {
+            inner: self.inner.clone(),
+            tenant: t,
+        })
+    }
+
+    /// Per-tenant usage counters for every tenant, default first. On a
+    /// broker with no tenant table the single entry is synthesized from
+    /// the global counters (per-tenant gauges are not maintained then).
+    pub fn tenant_stats(&self) -> Vec<TenantUsage> {
+        if !self.inner.multi_tenant {
+            let t = self.totals();
+            let ts = &self.inner.tenants[0];
+            return vec![TenantUsage {
+                id: ts.spec.id.clone(),
+                weight: ts.spec.weight,
+                published: t.published,
+                bytes_published: 0,
+                delivered: t.delivered,
+                acked: t.acked,
+                requeued: t.requeued,
+                dead_lettered: t.dead_lettered,
+                lease_expired: t.lease_expired,
+                quota_denied: 0,
+                sim_us: ts.sim_us.load(Ordering::Relaxed),
+                queued_tasks: (self.inner.total_ready.load(Ordering::Relaxed)
+                    + self.inner.total_inflight.load(Ordering::Relaxed))
+                    as u64,
+                queued_bytes: 0,
+            }];
+        }
+        self.inner.tenants.iter().map(TenantState::usage).collect()
+    }
+
+    /// Credit simulation microseconds to this handle's tenant (workers
+    /// report per-batch compute time via the `usage` side-op).
+    pub fn record_sim_us(&self, us: u64) {
+        self.inner.tenants[self.tenant as usize]
+            .sim_us
+            .fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// This handle's tenant state.
+    fn ts(&self) -> &TenantState {
+        &self.inner.tenants[self.tenant as usize]
+    }
+
+    /// Tenant slot owning an *internal* queue name (0 for un-prefixed
+    /// names and unknown prefixes).
+    fn tenant_of_queue(&self, internal: &str) -> u16 {
+        match internal.split_once(NS_SEP) {
+            Some((id, _)) => self.inner.tenant_ids.get(id).copied().unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    /// Tenant state owning an internal queue name.
+    fn tstate_of_queue(&self, internal: &str) -> &TenantState {
+        &self.inner.tenants[self.tenant_of_queue(internal) as usize]
+    }
+
+    /// The internal (namespaced) name this handle's tenant uses for a
+    /// public queue name. The default tenant owns the root namespace —
+    /// un-prefixed names — which keeps single-tenant deployments (and
+    /// their WALs) byte-identical to the pre-tenant broker.
+    /// `pub(crate)` because the reactor server parks fetches under
+    /// internal names (ready-hook wake credits are keyed by them).
+    pub(crate) fn internal_name(&self, public: &str) -> String {
+        if self.tenant == 0 {
+            public.to_string()
+        } else {
+            format!("{}{}{}", self.tenant_id(), NS_SEP, public)
+        }
+    }
+
+    /// If this handle's tenant owns `internal`, its public name. The
+    /// default tenant never sees namespaced queues; other tenants see
+    /// exactly their own prefix stripped. This is the one filter every
+    /// cross-queue read op goes through, so no read can leak another
+    /// tenant's queues.
+    fn owns<'a>(&self, internal: &'a str) -> Option<&'a str> {
+        if !self.inner.multi_tenant {
+            return Some(internal);
+        }
+        if self.tenant == 0 {
+            if internal.contains(NS_SEP) {
+                None
+            } else {
+                Some(internal)
+            }
+        } else {
+            internal
+                .strip_prefix(self.tenant_id())?
+                .strip_prefix(NS_SEP)
+        }
+    }
+
+    /// Strip the namespace prefix off a delivered task's queue name so
+    /// consumers always see the public name they published under.
+    fn strip_ns(task: &mut TaskEnvelope) {
+        if let Some(i) = task.queue.find(NS_SEP) {
+            task.queue = task.queue[i + NS_SEP.len_utf8()..].to_string();
+        }
+    }
+
+    /// Admit `n` publishes totalling `bytes` against this tenant's
+    /// quotas, updating the resident gauges on success (the publish
+    /// paths keep them; completion paths decrement). On refusal nothing
+    /// is reserved and `quota_denied` is bumped.
+    fn admit(&self, n: u64, bytes: u64) -> Result<(), BrokerError> {
+        let ts = self.ts();
+        if ts.spec.publish_rate > 0 {
+            let mut b = ts.bucket.lock().unwrap();
+            let now = self.now_ms();
+            let cap = if ts.spec.publish_burst > 0 {
+                ts.spec.publish_burst
+            } else {
+                ts.spec.publish_rate
+            } as f64;
+            let refill =
+                now.saturating_sub(b.last_ms) as f64 * ts.spec.publish_rate as f64 / 1000.0;
+            b.tokens = (b.tokens + refill).min(cap);
+            b.last_ms = now;
+            if b.tokens < n as f64 {
+                drop(b);
+                ts.quota_denied.fetch_add(n, Ordering::Relaxed);
+                return Err(BrokerError::QuotaExceeded(format!(
+                    "tenant {} publish rate {}/s",
+                    ts.spec.id, ts.spec.publish_rate
+                )));
+            }
+            b.tokens -= n as f64;
+        }
+        if ts.spec.max_queued_tasks > 0 {
+            let new = ts.resident_tasks.fetch_add(n, Ordering::Relaxed) + n;
+            if new > ts.spec.max_queued_tasks {
+                ts.resident_tasks.fetch_sub(n, Ordering::Relaxed);
+                ts.quota_denied.fetch_add(n, Ordering::Relaxed);
+                return Err(BrokerError::QuotaExceeded(format!(
+                    "tenant {} at max queued tasks {}",
+                    ts.spec.id, ts.spec.max_queued_tasks
+                )));
+            }
+        } else {
+            ts.resident_tasks.fetch_add(n, Ordering::Relaxed);
+        }
+        if ts.spec.max_queued_bytes > 0 {
+            let new = ts.resident_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+            if new > ts.spec.max_queued_bytes {
+                ts.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+                ts.resident_tasks.fetch_sub(n, Ordering::Relaxed);
+                ts.quota_denied.fetch_add(n, Ordering::Relaxed);
+                return Err(BrokerError::QuotaExceeded(format!(
+                    "tenant {} at max queued bytes {}",
+                    ts.spec.id, ts.spec.max_queued_bytes
+                )));
+            }
+        } else {
+            ts.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Roll back an [`Broker::admit`] reservation for publishes that
+    /// failed after admission (depth cap, WAL refusal).
+    fn unadmit(&self, n: u64, bytes: u64) {
+        let ts = self.ts();
+        ts.resident_tasks.fetch_sub(n, Ordering::Relaxed);
+        ts.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Smallest virtual time among *other* tenants that are contending
+    /// right now (backlog **and** fetchers); `None` when nobody else is.
+    fn contender_min_vtime(&self) -> Option<u64> {
+        let mut min_v: Option<u64> = None;
+        for (i, t) in self.inner.tenants.iter().enumerate() {
+            if i == self.tenant as usize {
+                continue;
+            }
+            if t.ready.load(Ordering::Relaxed) > 0
+                && t.waiting.load(Ordering::Relaxed) > 0
+            {
+                let v = t.vtime.load(Ordering::Relaxed);
+                min_v = Some(min_v.map_or(v, |m: u64| m.min(v)));
+            }
+        }
+        min_v
+    }
+
+    /// The weighted fair-share gate: may this tenant take a delivery
+    /// right now? Eligible unless its virtual time has run more than one
+    /// stride past the slowest contending tenant. The tenant at minimum
+    /// virtual time is always eligible, so the gate can never deadlock;
+    /// a tenant alone on the broker is never gated at all.
+    fn tenant_eligible(&self) -> bool {
+        if !self.inner.multi_tenant {
+            return true;
+        }
+        let me = self.ts();
+        match self.contender_min_vtime() {
+            None => true,
+            Some(min_v) => {
+                me.vtime.load(Ordering::Relaxed) <= min_v.saturating_add(me.stride)
+            }
+        }
     }
 
     /// Whether this broker persists its queue state (see
@@ -1028,6 +1462,12 @@ impl Broker {
                     bytes: inf.bytes,
                     task: inf.task,
                 });
+                if self.inner.multi_tenant {
+                    let ts = self.tstate_of_queue(&inf.queue);
+                    ts.requeued.fetch_add(1, Ordering::Relaxed);
+                    ts.lease_expired.fetch_add(1, Ordering::Relaxed);
+                    ts.ready.fetch_add(1, Ordering::Relaxed);
+                }
                 expired_consumers.push(inf.consumer);
             }
             // Still under the lock (publishes that stamp new deadlines
@@ -1221,14 +1661,31 @@ impl Broker {
 
     /// Publish with a caller-provided size (lets the in-process fast path
     /// skip re-encoding when the caller already measured it).
-    pub fn publish_sized(&self, task: TaskEnvelope, bytes: usize) -> Result<(), BrokerError> {
+    pub fn publish_sized(&self, mut task: TaskEnvelope, bytes: usize) -> Result<(), BrokerError> {
         if bytes > self.inner.cfg.max_message_bytes {
             return Err(BrokerError::MessageTooLarge {
                 bytes,
                 limit: self.inner.cfg.max_message_bytes,
             });
         }
-        self.reserve_depth(1)?;
+        let multi = self.inner.multi_tenant;
+        if multi {
+            if task.queue.contains(NS_SEP) {
+                return Err(BrokerError::QuotaExceeded(
+                    "queue name contains a reserved control character".into(),
+                ));
+            }
+            if self.tenant != 0 {
+                task.queue = self.internal_name(&task.queue);
+            }
+            self.admit(1, bytes as u64)?;
+        }
+        if let Err(e) = self.reserve_depth(1) {
+            if multi {
+                self.unadmit(1, bytes as u64);
+            }
+            return Err(e);
+        }
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let si = shard_of(&task.queue);
         let shard = &self.inner.shards[si];
@@ -1247,6 +1704,9 @@ impl Broker {
                 };
                 if let Err(e) = Self::wal_append(&mut s, &self.inner, &[rec]) {
                     self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
+                    if multi {
+                        self.unadmit(1, bytes as u64);
+                    }
                     return Err(BrokerError::Wal(e.to_string()));
                 }
             }
@@ -1267,6 +1727,12 @@ impl Broker {
             wake = self.take_grants(&mut s, &[qname.as_str()], 1);
         }
         self.inner.published.fetch_add(1, Ordering::Relaxed);
+        if multi {
+            let ts = self.ts();
+            ts.published.fetch_add(1, Ordering::Relaxed);
+            ts.bytes_published.fetch_add(bytes as u64, Ordering::Relaxed);
+            ts.ready.fetch_add(1, Ordering::Relaxed);
+        }
         Self::wake_grants(wake);
         self.notify_ready(&qname, 1);
         self.ring_multi();
@@ -1296,7 +1762,7 @@ impl Broker {
     /// and stay queued).
     pub fn publish_batch_sized(
         &self,
-        sized: Vec<(TaskEnvelope, usize)>,
+        mut sized: Vec<(TaskEnvelope, usize)>,
     ) -> Result<(), BrokerError> {
         if sized.is_empty() {
             return Ok(());
@@ -1309,7 +1775,28 @@ impl Broker {
                 });
             }
         }
-        self.reserve_depth(sized.len())?;
+        let multi = self.inner.multi_tenant;
+        let mut total_bytes = 0u64;
+        if multi {
+            if sized.iter().any(|(t, _)| t.queue.contains(NS_SEP)) {
+                return Err(BrokerError::QuotaExceeded(
+                    "queue name contains a reserved control character".into(),
+                ));
+            }
+            if self.tenant != 0 {
+                for (t, _) in &mut sized {
+                    t.queue = self.internal_name(&t.queue);
+                }
+            }
+            total_bytes = sized.iter().map(|(_, b)| *b as u64).sum();
+            self.admit(sized.len() as u64, total_bytes)?;
+        }
+        if let Err(e) = self.reserve_depth(sized.len()) {
+            if multi {
+                self.unadmit(sized.len() as u64, total_bytes);
+            }
+            return Err(e);
+        }
         let n = sized.len() as u64;
         let base = self.inner.seq.fetch_add(n, Ordering::Relaxed);
         // Group by shard, preserving input order (seq assigned in order).
@@ -1325,6 +1812,7 @@ impl Broker {
                 continue;
             }
             let count = group.len() as u64;
+            let gbytes: u64 = group.iter().map(|(_, b, _)| *b as u64).sum();
             let shard = &self.inner.shards[si];
             {
                 let mut s = shard.state.lock().unwrap();
@@ -1353,6 +1841,15 @@ impl Broker {
                         let remaining: usize = group.len()
                             + groups[si + 1..].iter().map(Vec::len).sum::<usize>();
                         self.inner.total_ready.fetch_sub(remaining, Ordering::Relaxed);
+                        if multi {
+                            let rb: u64 = gbytes
+                                + groups[si + 1..]
+                                    .iter()
+                                    .flatten()
+                                    .map(|(_, b, _)| *b as u64)
+                                    .sum::<u64>();
+                            self.unadmit(remaining as u64, rb);
+                        }
                         return Err(BrokerError::Wal(e.to_string()));
                     }
                 }
@@ -1382,6 +1879,12 @@ impl Broker {
                 }
             }
             self.inner.published.fetch_add(count, Ordering::Relaxed);
+            if multi {
+                let ts = self.ts();
+                ts.published.fetch_add(count, Ordering::Relaxed);
+                ts.bytes_published.fetch_add(gbytes, Ordering::Relaxed);
+                ts.ready.fetch_add(count, Ordering::Relaxed);
+            }
         }
         self.ring_multi();
         Ok(())
@@ -1483,10 +1986,17 @@ impl Broker {
         self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
         self.inner.total_inflight.fetch_add(1, Ordering::Relaxed);
         self.inner.delivered.fetch_add(1, Ordering::Relaxed);
-        out.push(Delivery {
-            tag,
-            task: msg.task,
-        });
+        let mut task = msg.task;
+        if self.inner.multi_tenant {
+            // Advance the owning tenant's virtual time by its stride —
+            // the stride-scheduling charge the fairness gate compares.
+            let ts = self.tstate_of_queue(name);
+            ts.vtime.fetch_add(ts.stride, Ordering::Relaxed);
+            ts.ready.fetch_sub(1, Ordering::Relaxed);
+            ts.delivered.fetch_add(1, Ordering::Relaxed);
+            Self::strip_ns(&mut task);
+        }
+        out.push(Delivery { tag, task });
         true
     }
 
@@ -1608,6 +2118,42 @@ impl Broker {
         budget_bytes: u64,
         timeout: Duration,
     ) -> Vec<Delivery> {
+        if !self.inner.multi_tenant {
+            return self.fetch_loop(consumer, queues, prefetch, max_n, budget_bytes, timeout);
+        }
+        // Tenant bookkeeping around the blocking loop: mark this tenant
+        // as contending (the fairness gate only yields to tenants that
+        // actually have fetchers), and floor its virtual time at the
+        // slowest contender's so a long-idle tenant doesn't return with
+        // an ancient vtime and monopolize until it "catches up".
+        let ts = self.ts();
+        ts.waiting.fetch_add(1, Ordering::Relaxed);
+        if let Some(floor) = self.contender_min_vtime() {
+            ts.vtime.fetch_max(floor, Ordering::Relaxed);
+        }
+        let out = if self.tenant == 0 {
+            self.fetch_loop(consumer, queues, prefetch, max_n, budget_bytes, timeout)
+        } else {
+            let mapped: Vec<String> =
+                queues.iter().map(|q| self.internal_name(q)).collect();
+            let refs: Vec<&str> = mapped.iter().map(String::as_str).collect();
+            self.fetch_loop(consumer, &refs, prefetch, max_n, budget_bytes, timeout)
+        };
+        ts.waiting.fetch_sub(1, Ordering::Relaxed);
+        out
+    }
+
+    /// The blocking scan/park loop behind [`Broker::fetch_n_budgeted`];
+    /// queue names are already internal here.
+    fn fetch_loop(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<Delivery> {
         let budget = if budget_bytes == 0 { u64::MAX } else { budget_bytes };
         let mut out = Vec::new();
         if max_n == 0 || queues.is_empty() {
@@ -1636,7 +2182,16 @@ impl Broker {
                 self.reap_shard(*si, now_ms);
             }
             let seen = self.inner.event_seq.load(Ordering::SeqCst);
-            let want = self.reserve_slots(held, prefetch, max_n);
+            // Weighted fair-share: a tenant that has outrun the slowest
+            // contending tenant's virtual time by more than one stride
+            // scans nothing this pass (its ready messages stay put; its
+            // own publish traffic and the bounded park below retry it).
+            let eligible = self.tenant_eligible();
+            let want = if eligible {
+                self.reserve_slots(held, prefetch, max_n)
+            } else {
+                0
+            };
             if want > 0 {
                 let mut budget_left = budget;
                 self.pop_ready(consumer, lease_ms, &by_shard, want, &mut budget_left, &mut out);
@@ -1665,6 +2220,12 @@ impl Broker {
             if next_exp != NO_EXPIRY {
                 let until = Duration::from_millis(next_exp.saturating_sub(now_ms).max(1));
                 remaining = remaining.min(until);
+            }
+            if !eligible {
+                // Nobody rings a bell when another tenant's virtual time
+                // catches up; poll at a bounded cadence instead of
+                // parking the full timeout.
+                remaining = remaining.min(Duration::from_millis(1));
             }
             if single {
                 let (si, qnames) = &by_shard[0];
@@ -1762,6 +2323,12 @@ impl Broker {
                 q.stats.unacked = q.stats.unacked.saturating_sub(1);
                 q.stats.acked += 1;
             }
+            if self.inner.multi_tenant {
+                let ts = self.tstate_of_queue(&inf.queue);
+                ts.acked.fetch_add(1, Ordering::Relaxed);
+                ts.resident_tasks.fetch_sub(1, Ordering::Relaxed);
+                ts.resident_bytes.fetch_sub(inf.bytes as u64, Ordering::Relaxed);
+            }
             self.wal_mark(&mut s, WalOp::Ack, &[inf.entry]);
         }
         self.dec_held(consumer, 1);
@@ -1790,6 +2357,13 @@ impl Broker {
                             if let Some(q) = s.queues.get_mut(&inf.queue) {
                                 q.stats.unacked = q.stats.unacked.saturating_sub(1);
                                 q.stats.acked += 1;
+                            }
+                            if self.inner.multi_tenant {
+                                let ts = self.tstate_of_queue(&inf.queue);
+                                ts.acked.fetch_add(1, Ordering::Relaxed);
+                                ts.resident_tasks.fetch_sub(1, Ordering::Relaxed);
+                                ts.resident_bytes
+                                    .fetch_sub(inf.bytes as u64, Ordering::Relaxed);
                             }
                             consumers_dec.push(inf.consumer);
                             entries.push(inf.entry);
@@ -1864,11 +2438,22 @@ impl Broker {
                     task: inf.task,
                 });
                 requeued = true;
+                if self.inner.multi_tenant {
+                    let ts = self.tstate_of_queue(&qname);
+                    ts.requeued.fetch_add(1, Ordering::Relaxed);
+                    ts.ready.fetch_add(1, Ordering::Relaxed);
+                }
                 // Durable: a retry was consumed — replay decrements too.
                 self.wal_mark(&mut s, WalOp::Requeue, &[entry]);
                 wake = self.take_grants(&mut s, &[qname.as_str()], 1);
             } else {
                 q.stats.dead_lettered += 1;
+                if self.inner.multi_tenant {
+                    let ts = self.tstate_of_queue(&inf.queue);
+                    ts.dead_lettered.fetch_add(1, Ordering::Relaxed);
+                    ts.resident_tasks.fetch_sub(1, Ordering::Relaxed);
+                    ts.resident_bytes.fetch_sub(inf.bytes as u64, Ordering::Relaxed);
+                }
                 // Durable: the task leaves the durable set for good.
                 self.wal_mark(&mut s, WalOp::Nack, &[entry]);
             }
@@ -1919,6 +2504,11 @@ impl Broker {
                 bytes: inf.bytes,
                 task: inf.task,
             });
+            if self.inner.multi_tenant {
+                let ts = self.tstate_of_queue(&qname);
+                ts.requeued.fetch_add(1, Ordering::Relaxed);
+                ts.ready.fetch_add(1, Ordering::Relaxed);
+            }
             wake = self.take_grants(&mut s, &[qname.as_str()], 1);
         }
         self.dec_held(consumer, 1);
@@ -1966,6 +2556,11 @@ impl Broker {
                         bytes: inf.bytes,
                         task: inf.task,
                     });
+                    if self.inner.multi_tenant {
+                        let ts = self.tstate_of_queue(&inf.queue);
+                        ts.requeued.fetch_add(1, Ordering::Relaxed);
+                        ts.ready.fetch_add(1, Ordering::Relaxed);
+                    }
                     n_here += 1;
                 }
                 let names: Vec<&str> = readied.keys().map(String::as_str).collect();
@@ -1995,15 +2590,23 @@ impl Broker {
     /// durable broker the dropped entries are logged as `Nack` records
     /// (they leave the durable set — a purge survives a restart).
     pub fn purge(&self, queue: &str) -> usize {
-        let shard = &self.inner.shards[shard_of(queue)];
+        let queue = self.internal_name(queue);
+        let shard = &self.inner.shards[shard_of(&queue)];
         let mut s = shard.state.lock().unwrap();
-        let Some(q) = s.queues.get_mut(queue) else {
+        let Some(q) = s.queues.get_mut(&queue) else {
             return 0;
         };
+        let bytes: u64 = q.iter().map(|m| m.bytes as u64).sum();
         let entries = q.clear();
         let n = entries.len();
         q.stats.ready = 0;
         self.inner.total_ready.fetch_sub(n, Ordering::Relaxed);
+        if self.inner.multi_tenant {
+            let ts = self.tstate_of_queue(&queue);
+            ts.ready.fetch_sub(n as u64, Ordering::Relaxed);
+            ts.resident_tasks.fetch_sub(n as u64, Ordering::Relaxed);
+            ts.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        }
         self.wal_mark(&mut s, WalOp::Nack, &entries);
         n
     }
@@ -2030,10 +2633,11 @@ impl Broker {
             (template.study_id == study_id && template.step_name == step_name)
                 .then_some((lo, hi))
         };
-        let shard = &self.inner.shards[shard_of(queue)];
+        let queue = self.internal_name(queue);
+        let shard = &self.inner.shards[shard_of(&queue)];
         let s = shard.state.lock().unwrap();
         let mut out = Vec::new();
-        if let Some(q) = s.queues.get(queue) {
+        if let Some(q) = s.queues.get(&queue) {
             out.extend(q.iter().filter_map(|m| covers(&m.task)));
         }
         out.extend(
@@ -2046,18 +2650,32 @@ impl Broker {
         out
     }
 
-    /// Point-in-time statistics for one queue.
+    /// Point-in-time statistics for one queue (of this handle's tenant).
     pub fn stats(&self, queue: &str) -> QueueStats {
-        let shard = &self.inner.shards[shard_of(queue)];
+        let queue = self.internal_name(queue);
+        let shard = &self.inner.shards[shard_of(&queue)];
         let s = shard.state.lock().unwrap();
         s.queues
-            .get(queue)
+            .get(&queue)
             .map(|q| q.stats.clone())
             .unwrap_or_default()
     }
 
-    /// Lifetime totals across all queues (lock-free reads).
+    /// Lifetime totals (lock-free reads). On a broker with an active
+    /// tenant table this is scoped to the handle's tenant; otherwise
+    /// the global counters.
     pub fn totals(&self) -> BrokerTotals {
+        if self.inner.multi_tenant {
+            let ts = self.ts();
+            return BrokerTotals {
+                published: ts.published.load(Ordering::Relaxed),
+                delivered: ts.delivered.load(Ordering::Relaxed),
+                acked: ts.acked.load(Ordering::Relaxed),
+                requeued: ts.requeued.load(Ordering::Relaxed),
+                dead_lettered: ts.dead_lettered.load(Ordering::Relaxed),
+                lease_expired: ts.lease_expired.load(Ordering::Relaxed),
+            };
+        }
         BrokerTotals {
             published: self.inner.published.load(Ordering::Relaxed),
             delivered: self.inner.delivered.load(Ordering::Relaxed),
@@ -2068,12 +2686,18 @@ impl Broker {
         }
     }
 
-    /// Names of all queues ever declared, sorted.
+    /// Names of this tenant's queues ever declared, sorted (public
+    /// names — the namespace filter means no tenant ever lists
+    /// another's queues).
     pub fn queue_names(&self) -> Vec<String> {
         let mut names: Vec<String> = Vec::new();
         for shard in &self.inner.shards {
             let s = shard.state.lock().unwrap();
-            names.extend(s.queues.keys().cloned());
+            names.extend(
+                s.queues
+                    .keys()
+                    .filter_map(|k| self.owns(k).map(str::to_string)),
+            );
         }
         names.sort();
         names
@@ -2089,15 +2713,20 @@ impl Broker {
         for shard in &self.inner.shards {
             let s = shard.state.lock().unwrap();
             for (name, q) in &s.queues {
-                out.push((name.clone(), q.stats.clone()));
+                if let Some(public) = self.owns(name) {
+                    out.push((public.to_string(), q.stats.clone()));
+                }
             }
         }
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
 
-    /// Total ready messages across all queues (lock-free).
+    /// Total ready messages across this tenant's queues (lock-free).
     pub fn depth(&self) -> usize {
+        if self.inner.multi_tenant {
+            return self.ts().ready.load(Ordering::Relaxed) as usize;
+        }
         self.inner.total_ready.load(Ordering::Relaxed)
     }
 
@@ -3169,5 +3798,211 @@ mod tests {
         b.publish(ping("tq", "late")).unwrap();
         let c = b.register_consumer();
         assert_eq!(token(&b.try_fetch(c, &["tq"], 0).unwrap()), "late");
+    }
+
+    // ---- tenancy ----
+
+    fn two_tenant_broker() -> Broker {
+        Broker::new(BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![
+                    crate::broker::tenant::TenantSpec::new("alice").token("tok-a"),
+                    crate::broker::tenant::TenantSpec::new("bob").token("tok-b"),
+                ],
+            },
+            ..BrokerConfig::default()
+        })
+    }
+
+    #[test]
+    fn authenticate_scopes_or_rejects() {
+        let b = two_tenant_broker();
+        assert!(b.auth_required());
+        let a = b.authenticate(Some("tok-a")).unwrap();
+        assert_eq!(a.tenant_id(), "alice");
+        assert!(b.authenticate(Some("wrong")).is_err());
+        assert!(b.authenticate(None).is_err());
+        // Auth off: any token maps to the default tenant.
+        let open = Broker::default();
+        assert_eq!(
+            open.authenticate(Some("anything")).unwrap().tenant_id(),
+            "default"
+        );
+    }
+
+    #[test]
+    fn tenant_namespaces_never_collide_or_leak() {
+        let b = two_tenant_broker();
+        let alice = b.with_tenant("alice").unwrap();
+        let bob = b.with_tenant("bob").unwrap();
+        alice.publish(ping("shared", "from-alice")).unwrap();
+        bob.publish(ping("shared", "from-bob")).unwrap();
+        b.publish(ping("shared", "from-default")).unwrap();
+        // Same public name, three distinct queues.
+        let ca = alice.register_consumer();
+        let da = alice.try_fetch(ca, &["shared"], 0).unwrap();
+        assert_eq!(token(&da), "from-alice");
+        assert_eq!(da.task.queue, "shared", "delivered name is the public one");
+        assert!(alice.try_fetch(ca, &["shared"], 0).is_none());
+        // Read ops are scoped too.
+        assert_eq!(alice.queue_names(), vec!["shared".to_string()]);
+        assert_eq!(bob.stats("shared").ready, 1);
+        assert_eq!(bob.depth(), 1);
+        assert_eq!(alice.depth(), 0);
+        let all = b.stats_all();
+        assert_eq!(all.len(), 1, "default tenant sees only its own queue");
+        alice.ack(da.tag).unwrap();
+        let t = alice.totals();
+        assert_eq!((t.published, t.delivered, t.acked), (1, 1, 1));
+        assert_eq!(bob.totals().delivered, 0);
+    }
+
+    #[test]
+    fn task_quota_refuses_then_recovers_on_ack() {
+        let b = Broker::new(BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![crate::broker::tenant::TenantSpec {
+                    max_queued_tasks: 2,
+                    ..crate::broker::tenant::TenantSpec::new("alice").token("t")
+                }],
+            },
+            ..BrokerConfig::default()
+        });
+        let alice = b.with_tenant("alice").unwrap();
+        alice.publish(ping("q", "a")).unwrap();
+        alice.publish(ping("q", "b")).unwrap();
+        match alice.publish(ping("q", "c")) {
+            Err(BrokerError::QuotaExceeded(_)) => {}
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        assert_eq!(alice.tenant_stats()[1].quota_denied, 1);
+        // The quota covers resident tasks: a fetch alone frees nothing.
+        let c = alice.register_consumer();
+        let d = alice.try_fetch(c, &["q"], 0).unwrap();
+        assert!(alice.publish(ping("q", "c")).is_err());
+        alice.ack(d.tag).unwrap();
+        alice.publish(ping("q", "c")).unwrap();
+        // Other tenants are unaffected throughout.
+        b.publish(ping("q", "default-ok")).unwrap();
+    }
+
+    #[test]
+    fn publish_rate_bucket_refuses_burst_overflow() {
+        let b = Broker::new(BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![crate::broker::tenant::TenantSpec {
+                    publish_rate: 10,
+                    publish_burst: 3,
+                    ..crate::broker::tenant::TenantSpec::new("alice").token("t")
+                }],
+            },
+            ..BrokerConfig::default()
+        });
+        let alice = b.with_tenant("alice").unwrap();
+        for i in 0..3 {
+            alice.publish(ping("q", &format!("{i}"))).unwrap();
+        }
+        assert!(matches!(
+            alice.publish(ping("q", "over")),
+            Err(BrokerError::QuotaExceeded(_))
+        ));
+        // ~100 ms refills one token at 10/s.
+        std::thread::sleep(Duration::from_millis(150));
+        alice.publish(ping("q", "refilled")).unwrap();
+    }
+
+    #[test]
+    fn weighted_shares_converge_under_contention() {
+        // alice weight 2, bob weight 1, both flooded and both fetching:
+        // deliveries should split ~2:1.
+        let b = Broker::new(BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![
+                    crate::broker::tenant::TenantSpec::new("alice")
+                        .token("ta")
+                        .weight(2),
+                    crate::broker::tenant::TenantSpec::new("bob").token("tb"),
+                ],
+            },
+            ..BrokerConfig::default()
+        });
+        let total = 600usize;
+        for t in ["alice", "bob"] {
+            let h = b.with_tenant(t).unwrap();
+            for i in 0..total {
+                h.publish(ping("q", &format!("{i}"))).unwrap();
+            }
+        }
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for t in ["alice", "bob"] {
+            let h = b.with_tenant(t).unwrap();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = h.register_consumer();
+                let mut got = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let ds = h.fetch_n(c, &["q"], 0, 4, Duration::from_millis(20));
+                    got += ds.len() as u64;
+                    let tags: Vec<u64> = ds.iter().map(|d| d.tag).collect();
+                    if !tags.is_empty() {
+                        h.ack_batch(&tags).unwrap();
+                    }
+                }
+                got
+            }));
+        }
+        // Let them contend for a fixed window, then stop and count.
+        std::thread::sleep(Duration::from_millis(500));
+        stop.store(true, Ordering::Relaxed);
+        let counts: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let (a, bo) = (counts[0], counts[1]);
+        assert!(a + bo > 60, "drained too little to judge shares: {a}+{bo}");
+        let share = a as f64 / (a + bo) as f64;
+        assert!(
+            (0.47..=0.87).contains(&share),
+            "alice (weight 2) took {share:.2} of {} deliveries",
+            a + bo
+        );
+    }
+
+    #[test]
+    fn durable_tenant_queues_survive_restart_with_gauges() {
+        let dir = tmp_wal_dir("tenant");
+        let cfg = || BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![crate::broker::tenant::TenantSpec::new("alice").token("t")],
+            },
+            ..BrokerConfig::default()
+        };
+        {
+            let b = Broker::open_durable(
+                cfg(),
+                crate::broker::wal::DurabilityConfig::new(&dir),
+            )
+            .unwrap();
+            let alice = b.with_tenant("alice").unwrap();
+            alice.publish(ping("q", "persisted")).unwrap();
+            b.publish(ping("q", "root")).unwrap();
+        }
+        let b = Broker::open_durable(
+            cfg(),
+            crate::broker::wal::DurabilityConfig::new(&dir),
+        )
+        .unwrap();
+        let alice = b.with_tenant("alice").unwrap();
+        assert_eq!(alice.depth(), 1, "gauges rebuilt from recovery");
+        assert_eq!(alice.tenant_stats()[1].queued_tasks, 1);
+        let c = alice.register_consumer();
+        let d = alice.try_fetch(c, &["q"], 0).unwrap();
+        assert_eq!(token(&d), "persisted");
+        let c0 = b.register_consumer();
+        assert_eq!(token(&b.try_fetch(c0, &["q"], 0).unwrap()), "root");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -53,7 +53,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::net::ClientNetMode;
-use crate::task::TaskEnvelope;
+use crate::task::{ser, TaskEnvelope};
 use crate::util::hex::fnv1a;
 
 use super::api::{
@@ -64,6 +64,8 @@ use super::client::{muxops, BrokerClient, ClientError};
 use super::core::{
     Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
 };
+use super::sideops;
+use super::tenant::TenantUsage;
 
 #[cfg(target_os = "linux")]
 use crate::net::muxclient::{MuxError, MuxPool};
@@ -81,6 +83,10 @@ pub struct FederationConfig {
     /// Which transport remote member links ride: the multiplexing pool
     /// or the portable mutexed client (see [`ClientNetMode`]).
     pub client_net: ClientNetMode,
+    /// Auth token presented at every member hello (initial connect,
+    /// reconnect, revival probe, mux re-attach). Mandatory against
+    /// auth-required members; ignored by auth-off members.
+    pub auth_token: Option<String>,
 }
 
 impl Default for FederationConfig {
@@ -88,7 +94,16 @@ impl Default for FederationConfig {
         Self {
             down_after: 3,
             client_net: ClientNetMode::Auto,
+            auth_token: None,
         }
+    }
+}
+
+impl FederationConfig {
+    /// Dial one member with this federation's credentials — the single
+    /// connect path every link (initial, reconnect, revive, mux) uses.
+    fn dial(&self, addr: &str) -> std::io::Result<BrokerClient> {
+        BrokerClient::connect_with(addr, ser::WIRE_V5, self.auth_token.as_deref())
     }
 }
 
@@ -134,6 +149,11 @@ struct MemberState {
     consecutive: u32,
     /// Lifetime transport errors (health reporting).
     total_errors: u64,
+    /// The member's most recent operation error, cleared on the next
+    /// success — how aggregating fan-outs (`stats_all`/`sched`/`totals`)
+    /// surface a member they had to skip instead of silently dropping it
+    /// (reported through [`MemberHealth::error`]).
+    last_error: Option<String>,
 }
 
 /// Outcome of one member-level operation: transport failures trigger
@@ -207,6 +227,7 @@ impl FederatedClient {
                     link: Link::Local(Some(b)),
                     consecutive: 0,
                     total_errors: 0,
+                    last_error: None,
                 })
             })
             .collect();
@@ -234,21 +255,23 @@ impl FederatedClient {
         let mut initial_downs = Vec::new();
         let mut any_up = false;
         for addr in addrs {
-            match BrokerClient::connect(addr) {
+            match cfg.dial(addr) {
                 Ok(client) => {
                     any_up = true;
                     members.push(Mutex::new(MemberState {
                         link: Link::Remote(Some(Box::new(client))),
                         consecutive: 0,
                         total_errors: 0,
+                        last_error: None,
                     }));
                 }
-                Err(_) => {
+                Err(e) => {
                     initial_downs.push(addr.clone());
                     members.push(Mutex::new(MemberState {
                         link: Link::Remote(None),
                         consecutive: 0,
                         total_errors: 1,
+                        last_error: Some(e.to_string()),
                     }));
                 }
             }
@@ -383,7 +406,7 @@ impl FederatedClient {
                 if slot.is_some() {
                     continue;
                 }
-                match BrokerClient::connect(&self.names[i]) {
+                match self.cfg.dial(&self.names[i]) {
                     Ok(mut client) => {
                         let lease = self.lease_ms.load(Ordering::SeqCst);
                         if lease > 0 {
@@ -449,6 +472,7 @@ impl FederatedClient {
     fn note_transport(&self, idx: usize, m: &mut MemberState, e: String) -> MemberErr {
         m.consecutive += 1;
         m.total_errors += 1;
+        m.last_error = Some(e.clone());
         if m.consecutive >= self.cfg.down_after {
             self.mark_down(idx, m);
         }
@@ -467,6 +491,7 @@ impl FederatedClient {
         match r {
             Ok(v) => {
                 m.consecutive = 0;
+                m.last_error = None;
                 Ok(v)
             }
             Err(ClientError::Wire(e)) => {
@@ -481,7 +506,13 @@ impl FederatedClient {
                 }
                 Err(err)
             }
-            Err(e) => Err(MemberErr::Fatal(QueueError(e.to_string()))),
+            Err(e) => {
+                // The member answered with a semantic refusal: no
+                // down-marking, but record it so aggregating fan-outs
+                // that skip this member surface why.
+                m.last_error = Some(e.to_string());
+                Err(MemberErr::Fatal(QueueError::from(e)))
+            }
         }
     }
 
@@ -496,7 +527,7 @@ impl FederatedClient {
             unreachable!("remote_client on local link");
         };
         if slot.is_none() {
-            match BrokerClient::connect(&self.names[idx]) {
+            match self.cfg.dial(&self.names[idx]) {
                 Ok(mut client) => {
                     let lease = self.lease_ms.load(Ordering::SeqCst);
                     if lease > 0 {
@@ -576,7 +607,7 @@ impl FederatedClient {
         match self.snapshot(idx) {
             Snapshot::Local(broker) => broker
                 .publish_batch(tasks)
-                .map_err(|e| (MemberErr::Fatal(QueueError(e.to_string())), Vec::new())),
+                .map_err(|e| (MemberErr::Fatal(QueueError::from(e)), Vec::new())),
             Snapshot::DeadLocal => {
                 Err((MemberErr::Transport("local member killed".into()), tasks))
             }
@@ -671,7 +702,7 @@ impl FederatedClient {
             .lock()
             .unwrap()
             .remove(&tag)
-            .ok_or_else(|| QueueError(format!("unknown federated delivery tag {tag}")))
+            .ok_or_else(|| QueueError::msg(format!("unknown federated delivery tag {tag}")))
     }
 
     /// Indices of the currently routable members.
@@ -749,7 +780,7 @@ impl FederatedClient {
                 Snapshot::Remote => {
                     if let Err(e) = self.member_remote(idx, |c| c.set_lease(effective)) {
                         first_err.get_or_insert_with(|| {
-                            QueueError(format!("{}: {}", self.names[idx], merr(e)))
+                            QueueError::msg(format!("{}: {}", self.names[idx], merr(e)))
                         });
                     }
                 }
@@ -766,7 +797,7 @@ impl FederatedClient {
             for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
                 if let Err(e) = self.mux_parse(idx, r, muxops::unit_rsp) {
                     first_err.get_or_insert_with(|| {
-                        QueueError(format!("{}: {}", self.names[idx], merr(e)))
+                        QueueError::msg(format!("{}: {}", self.names[idx], merr(e)))
                     });
                 }
             }
@@ -819,7 +850,7 @@ impl FederatedClient {
     /// race duplicate dials. No error accounting here — callers decide
     /// (revival probes stay quiet, request paths count failures).
     fn mux_attach_locked(&self, idx: usize, m: &mut MemberState) -> Result<(), MemberErr> {
-        match BrokerClient::connect(&self.names[idx]) {
+        match self.cfg.dial(&self.names[idx]) {
             Ok(mut client) => {
                 let lease = self.lease_ms.load(Ordering::SeqCst);
                 if lease > 0 {
@@ -1013,7 +1044,7 @@ enum Snapshot {
 
 fn merr(e: MemberErr) -> QueueError {
     match e {
-        MemberErr::Transport(t) => QueueError(format!("member unreachable: {t}")),
+        MemberErr::Transport(t) => QueueError::msg(format!("member unreachable: {t}")),
         MemberErr::Fatal(q) => q,
     }
 }
@@ -1042,8 +1073,8 @@ impl TaskQueue for FederatedClient {
                 match self.owner_of(&t.queue) {
                     Some(i) => groups.entry(i).or_default().push(t),
                     None => {
-                        return Err(QueueError(
-                            "publish failed: no live federation member".into(),
+                        return Err(QueueError::msg(
+                            "publish failed: no live federation member",
                         ))
                     }
                 }
@@ -1083,7 +1114,7 @@ impl TaskQueue for FederatedClient {
                 }
             }
         }
-        Err(QueueError(format!(
+        Err(QueueError::msg(format!(
             "publish failed after re-routing: {last_transport}"
         )))
     }
@@ -1304,7 +1335,7 @@ impl TaskQueue for FederatedClient {
         let (idx, mtag) = self.take_tag(tag)?;
         match self.snapshot(idx) {
             Snapshot::Local(b) => b.ack(mtag).map_err(QueueError::from),
-            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::DeadLocal => Err(QueueError::msg("local member killed")),
             Snapshot::Remote => self.member_remote(idx, |c| c.ack(mtag)).map_err(merr),
             Snapshot::Mux => {
                 let req = muxops::ack_req(mtag);
@@ -1342,7 +1373,7 @@ impl TaskQueue for FederatedClient {
         for (idx, mtags) in groups {
             let r = match self.snapshot(idx) {
                 Snapshot::Local(b) => b.ack_batch(&mtags).map_err(QueueError::from),
-                Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+                Snapshot::DeadLocal => Err(QueueError::msg("local member killed")),
                 Snapshot::Remote => self
                     .member_remote(idx, |c| c.ack_batch(&mtags))
                     .map(|n| n as usize)
@@ -1388,7 +1419,7 @@ impl TaskQueue for FederatedClient {
         let (idx, mtag) = self.take_tag(tag)?;
         match self.snapshot(idx) {
             Snapshot::Local(b) => b.nack(mtag, requeue).map_err(QueueError::from),
-            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::DeadLocal => Err(QueueError::msg("local member killed")),
             Snapshot::Remote => self
                 .member_remote(idx, |c| c.nack(mtag, requeue))
                 .map_err(merr),
@@ -1404,7 +1435,7 @@ impl TaskQueue for FederatedClient {
         let (idx, mtag) = self.take_tag(tag)?;
         match self.snapshot(idx) {
             Snapshot::Local(b) => b.requeue(mtag).map_err(QueueError::from),
-            Snapshot::DeadLocal => Err(QueueError("local member killed".into())),
+            Snapshot::DeadLocal => Err(QueueError::msg("local member killed")),
             Snapshot::Remote => self.member_remote(idx, |c| c.requeue(mtag)).map_err(merr),
             Snapshot::Mux => {
                 let req = muxops::requeue_req(mtag);
@@ -1732,9 +1763,92 @@ impl TaskQueue for FederatedClient {
                     name: self.names[idx].clone(),
                     up: self.up[idx].load(Ordering::SeqCst),
                     errors: m.total_errors,
+                    error: m.last_error.clone(),
                 }
             })
             .collect()
+    }
+
+    /// Per-tenant usage merged by tenant id across the fleet — the same
+    /// partial-success shape as `ack_batch`: every member is attempted,
+    /// a member that errors is skipped (its error lands in
+    /// [`MemberHealth::error`]), and whatever the rest answered is
+    /// returned.
+    fn tenant_stats(&self) -> Vec<TenantUsage> {
+        let mut acc: BTreeMap<String, TenantUsage> = BTreeMap::new();
+        let mut mux_idxs: Vec<usize> = Vec::new();
+        for idx in self.live_indices() {
+            let rows = match self.snapshot(idx) {
+                Snapshot::Local(b) => b.tenant_stats(),
+                Snapshot::DeadLocal => Vec::new(),
+                Snapshot::Remote => {
+                    self.member_remote(idx, |c| c.tenants()).unwrap_or_default()
+                }
+                Snapshot::Mux => {
+                    mux_idxs.push(idx);
+                    continue;
+                }
+            };
+            merge_tenant_rows(&mut acc, rows);
+        }
+        if !mux_idxs.is_empty() {
+            let reqs = mux_idxs.iter().map(|i| (*i, muxops::tenants_req())).collect();
+            for (idx, r) in self.mux_fanout(reqs, MUX_RPC_TIMEOUT) {
+                let rows = self.mux_parse(idx, r, muxops::tenants_rsp).unwrap_or_default();
+                merge_tenant_rows(&mut acc, rows);
+            }
+        }
+        acc.into_values().collect()
+    }
+
+    fn report_usage(&self, sim_us: u64) {
+        // Sim time is a per-tenant sum and `tenant_stats` adds the
+        // members up, so crediting the first live member that accepts
+        // the report keeps the federation-level total right.
+        for idx in self.live_indices() {
+            let ok = match self.snapshot(idx) {
+                Snapshot::Local(b) => {
+                    b.record_sim_us(sim_us);
+                    true
+                }
+                Snapshot::DeadLocal => false,
+                Snapshot::Remote => {
+                    self.member_remote(idx, |c| c.report_usage(sim_us)).is_ok()
+                }
+                Snapshot::Mux => self
+                    .mux_call(
+                        idx,
+                        &muxops::usage_req(sim_us),
+                        MUX_RPC_TIMEOUT,
+                        muxops::usage_rsp,
+                    )
+                    .is_ok(),
+            };
+            if ok {
+                return;
+            }
+        }
+    }
+}
+
+/// Fold one member's tenant-usage rows into the by-id aggregate. The
+/// numeric counters sum through the same shared field list the wire
+/// encode/decode uses ([`sideops::TENANT_USAGE`]); identity fields (id,
+/// weight) come from the first member that reported the tenant.
+fn merge_tenant_rows(acc: &mut BTreeMap<String, TenantUsage>, rows: Vec<TenantUsage>) {
+    use std::collections::btree_map::Entry;
+    for u in rows {
+        match acc.entry(u.id.clone()) {
+            Entry::Vacant(e) => {
+                e.insert(u);
+            }
+            Entry::Occupied(mut e) => {
+                let t = e.get_mut();
+                for f in sideops::TENANT_USAGE {
+                    (f.set)(t, (f.get)(t) + (f.get)(&u));
+                }
+            }
+        }
     }
 }
 

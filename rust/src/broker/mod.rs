@@ -49,7 +49,9 @@ pub mod client;
 pub mod core;
 pub mod federation;
 pub mod net;
+pub mod sideops;
 pub mod snapshot;
+pub mod tenant;
 pub mod wal;
 pub mod wire;
 
@@ -59,4 +61,5 @@ pub use self::core::{
     LeaseStats, QueueStats, NUM_SHARDS,
 };
 pub use self::federation::{rendezvous_weight, FederatedClient, FederationConfig};
+pub use self::tenant::{parse_token_file, TenantConfig, TenantSpec, TenantUsage};
 pub use self::wal::{DurabilityConfig, FsyncPolicy};

@@ -44,8 +44,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::core::{Broker, BrokerError, QueueStats};
-use super::wire::{self, BinMsg, Frame, WireError};
+use super::core::{Broker, BrokerError};
+use super::sideops;
+use super::wire::{self, BinMsg, Frame, HelloFeatures, WireError};
 use crate::net::ServeConfig;
 use crate::task::ser::{self, task_from_json, task_to_json};
 use crate::util::json::Json;
@@ -58,10 +59,13 @@ use crate::net::{FrameService, ServiceReply, WakeHint};
 /// `heartbeat` / `leases` / `reap` JSON ops) on top of v2's batches;
 /// v4 adds the correlation header ([`wire::CORR_MAGIC`]): a request may
 /// arrive wrapped with a `u32` id, and the reply is wrapped with the
-/// same id. The server keeps no per-connection negotiation state — it
-/// echoes the header iff the request carried one, so v3-and-older
-/// clients on the same listener are untouched.
-pub const SERVER_MAX_WIRE: u64 = 4;
+/// same id. The server keeps no per-connection negotiation state for
+/// framing — it echoes the header iff the request carried one, so
+/// v3-and-older clients on the same listener are untouched. v5 adds the
+/// authenticated session: a hello may carry an auth token, the reply
+/// may carry the tenant id, and on auth-required servers every other op
+/// is refused (typed [`wire::ERR_CODE_AUTH`]) until a hello succeeds.
+pub const SERVER_MAX_WIRE: u64 = 5;
 
 /// Server-side cap on one PopN / fetch_n window. Bounds the reply frame
 /// (which must stay under `wire::MAX_FRAME`) and the per-request memory
@@ -139,7 +143,7 @@ impl BrokerServer {
             let hook_broker = broker.clone();
             let service = Arc::new(BrokerService {
                 broker,
-                consumers: Mutex::new(HashMap::new()),
+                conns: Mutex::new(HashMap::new()),
             });
             let handle = crate::net::reactor::serve(listener, service, cfg.reactor_config())?;
             // Every message made ready — by a frame on this listener, an
@@ -275,8 +279,117 @@ pub(crate) fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
     addr
 }
 
+/// Message every auth-gated refusal carries (op before a successful
+/// hello on an auth-required server, or a token-less hello on one).
+const AUTH_REQUIRED: &str = "authentication required";
+
+/// The single hello entry point both servers share: parse the client's
+/// offer ([`HelloFeatures::from_request`]), run the auth gate, fold the
+/// two offers into the connection's [`wire::Session`], and return the
+/// tenant-scoped broker handle alongside the reply frame. A rejected
+/// token yields no handle and a typed [`wire::ERR_CODE_AUTH`] error;
+/// with auth off any token (or none) resolves to the default tenant and
+/// the reply is byte-identical to the legacy hello exchange.
+fn hello_session(broker: &Broker, req: &Json) -> (Option<Broker>, Json) {
+    let client = HelloFeatures::from_request(req);
+    let scoped = match broker.authenticate(client.token.as_deref()) {
+        Ok(b) => b,
+        Err(msg) => return (None, wire::err_code(msg, wire::ERR_CODE_AUTH)),
+    };
+    let server = HelloFeatures {
+        max_wire: SERVER_MAX_WIRE,
+        grants: true,
+        token: None,
+    };
+    let tenant = broker
+        .auth_required()
+        .then(|| scoped.tenant_id().to_string());
+    let session = HelloFeatures::negotiate(&client, &server).with_tenant(tenant);
+    (Some(scoped), session.reply_json())
+}
+
+/// Per-connection session state (threaded path): the — possibly
+/// tenant-scoped — broker handle, the connection's consumer id, and
+/// whether the auth gate has been passed. A successful hello swaps in
+/// the scoped handle; with auth off the gate starts open and the handle
+/// stays the listener's root broker, exactly the pre-tenant behavior
+/// (which is also what keeps hello-less legacy clients working).
+struct ConnCtx {
+    broker: Broker,
+    consumer: u64,
+    authed: bool,
+}
+
+impl ConnCtx {
+    fn new(broker: Broker) -> ConnCtx {
+        let consumer = broker.register_consumer();
+        let authed = !broker.auth_required();
+        ConnCtx {
+            broker,
+            consumer,
+            authed,
+        }
+    }
+
+    /// One JSON request: hello renegotiates the session; every other op
+    /// passes the auth gate, then the shared dispatch.
+    fn dispatch_json(&mut self, req: &Json) -> Json {
+        if req.get("op").as_str() == Some("hello") {
+            let (scoped, reply) = hello_session(&self.broker, req);
+            if let Some(b) = scoped {
+                self.broker = b;
+                self.authed = true;
+            }
+            return reply;
+        }
+        if !self.authed {
+            return wire::err_code(AUTH_REQUIRED, wire::ERR_CODE_AUTH);
+        }
+        dispatch(&self.broker, self.consumer, req)
+    }
+
+    /// One binary batch frame: auth gate, decode, dispatch.
+    fn dispatch_bin(&self, body: &[u8]) -> BinMsg {
+        if !self.authed {
+            return BinMsg::Err(AUTH_REQUIRED.into());
+        }
+        match wire::decode_bin(body) {
+            Ok(m) => dispatch_bin_msg(&self.broker, self.consumer, m),
+            Err(e) => BinMsg::Err(e.to_string()),
+        }
+    }
+
+    /// One binary-space frame on the threaded path, returning the
+    /// encoded reply body. Plain v2/v3 batch frames dispatch directly; a
+    /// correlated (v4) frame is unwrapped, dispatched by its inner
+    /// encoding, and the reply re-wrapped with the same id. A malformed
+    /// correlation header leaves no id to echo, so it gets an
+    /// *unwrapped* `Err` — frame-level sync is intact (the length prefix
+    /// was fine), and a multiplexing client treats any unmatched reply
+    /// as a connection-fatal desync.
+    fn bin_body_reply(&mut self, body: &[u8]) -> Vec<u8> {
+        if !wire::is_corr(body) {
+            return wire::encode_bin(&self.dispatch_bin(body));
+        }
+        let (corr_id, inner) = match wire::decode_corr(body) {
+            Ok(x) => x,
+            Err(e) => return wire::encode_bin(&BinMsg::Err(e.to_string())),
+        };
+        let reply = if inner.first().is_some_and(|b| *b >= 0x80) {
+            wire::encode_bin(&self.dispatch_bin(inner))
+        } else {
+            let resp = match wire::parse_json_body(inner) {
+                Ok(req) => self.dispatch_json(&req),
+                Err(e) => wire::err(e.to_string()),
+            };
+            crate::util::json::to_string(&resp).into_bytes()
+        };
+        wire::encode_corr(corr_id, &reply)
+    }
+}
+
 fn handle_conn(broker: Broker, stream: TcpStream) {
-    let consumer = broker.register_consumer();
+    let mut ctx = ConnCtx::new(broker);
     let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = BufWriter::new(stream);
     loop {
@@ -287,11 +400,11 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
         };
         let write_res = match frame {
             Frame::Json(req) => {
-                let resp = dispatch(&broker, consumer, &req);
+                let resp = ctx.dispatch_json(&req);
                 wire::write_frame(&mut writer, &resp)
             }
             Frame::Bin(body) => {
-                wire::write_frame_bytes(&mut writer, &bin_body_reply(&broker, consumer, &body))
+                wire::write_frame_bytes(&mut writer, &ctx.bin_body_reply(&body))
             }
         };
         if write_res.is_err() || writer.flush().is_err() {
@@ -299,34 +412,17 @@ fn handle_conn(broker: Broker, stream: TcpStream) {
         }
     }
     // Connection gone: requeue whatever this consumer held.
-    broker.recover_consumer(consumer);
+    ctx.broker.recover_consumer(ctx.consumer);
 }
 
-/// One binary-space frame on the threaded path, returning the encoded
-/// reply body. Plain v2/v3 batch frames dispatch directly; a correlated
-/// (v4) frame is unwrapped, dispatched by its inner encoding, and the
-/// reply re-wrapped with the same id. A malformed correlation header
-/// leaves no id to echo, so it gets an *unwrapped* `Err` — frame-level
-/// sync is intact (the length prefix was fine), and a multiplexing
-/// client treats any unmatched reply as a connection-fatal desync.
-fn bin_body_reply(broker: &Broker, consumer: u64, body: &[u8]) -> Vec<u8> {
-    if !wire::is_corr(body) {
-        return wire::encode_bin(&dispatch_bin(broker, consumer, body));
-    }
-    let (corr_id, inner) = match wire::decode_corr(body) {
-        Ok(x) => x,
-        Err(e) => return wire::encode_bin(&BinMsg::Err(e.to_string())),
-    };
-    let reply = if inner.first().is_some_and(|b| *b >= 0x80) {
-        wire::encode_bin(&dispatch_bin(broker, consumer, inner))
-    } else {
-        let resp = match wire::parse_json_body(inner) {
-            Ok(req) => dispatch(broker, consumer, &req),
-            Err(e) => wire::err(e.to_string()),
-        };
-        crate::util::json::to_string(&resp).into_bytes()
-    };
-    wire::encode_corr(corr_id, &reply)
+/// Per-connection session state on the reactor path — same contents as
+/// the threaded [`ConnCtx`], but living in the service's map because
+/// the reactor owns the event loop instead of a per-connection thread.
+#[cfg(target_os = "linux")]
+struct ConnState {
+    consumer: u64,
+    broker: Broker,
+    authed: bool,
 }
 
 /// The broker as a reactor [`FrameService`]: one consumer per
@@ -335,30 +431,40 @@ fn bin_body_reply(broker: &Broker, consumer: u64, body: &[u8]) -> Vec<u8> {
 #[cfg(target_os = "linux")]
 struct BrokerService {
     broker: Broker,
-    /// conn id → broker consumer id, registered at accept and recovered
+    /// conn id → session state, created at accept and recovered
     /// (unacked deliveries requeued) at disconnect.
-    consumers: Mutex<HashMap<u64, u64>>,
+    conns: Mutex<HashMap<u64, ConnState>>,
 }
 
 #[cfg(target_os = "linux")]
 impl BrokerService {
-    fn consumer(&self, conn: u64) -> u64 {
-        let mut g = self.consumers.lock().unwrap();
-        let broker = &self.broker;
-        *g.entry(conn).or_insert_with(|| broker.register_consumer())
+    fn fresh_state(&self) -> ConnState {
+        ConnState {
+            consumer: self.broker.register_consumer(),
+            broker: self.broker.clone(),
+            authed: !self.broker.auth_required(),
+        }
+    }
+
+    /// Snapshot a connection's session (registering it if a frame beats
+    /// `on_connect` — defensive, mirrors the old lazy registration).
+    fn state(&self, conn: u64) -> (u64, Broker, bool) {
+        let mut g = self.conns.lock().unwrap();
+        let st = g.entry(conn).or_insert_with(|| self.fresh_state());
+        (st.consumer, st.broker.clone(), st.authed)
     }
 }
 
 #[cfg(target_os = "linux")]
 impl FrameService for BrokerService {
     fn on_connect(&self, conn: u64) {
-        let consumer = self.broker.register_consumer();
-        self.consumers.lock().unwrap().insert(conn, consumer);
+        let state = self.fresh_state();
+        self.conns.lock().unwrap().insert(conn, state);
     }
 
     fn on_disconnect(&self, conn: u64) {
-        if let Some(consumer) = self.consumers.lock().unwrap().remove(&conn) {
-            self.broker.recover_consumer(consumer);
+        if let Some(st) = self.conns.lock().unwrap().remove(&conn) {
+            st.broker.recover_consumer(st.consumer);
         }
     }
 
@@ -387,8 +493,11 @@ impl FrameService for BrokerService {
 #[cfg(target_os = "linux")]
 impl BrokerService {
     fn handle_inner(&self, conn: u64, body: &[u8], last_try: bool) -> ServiceReply {
-        let consumer = self.consumer(conn);
+        let (consumer, broker, authed) = self.state(conn);
         if body.first().is_some_and(|b| *b >= 0x80) {
+            if !authed {
+                return reply_bin(BinMsg::Err(AUTH_REQUIRED.into()), WakeHint::None);
+            }
             let msg = match wire::decode_bin(body) {
                 Ok(m) => m,
                 Err(e) => return reply_bin(BinMsg::Err(e.to_string()), WakeHint::None),
@@ -405,7 +514,7 @@ impl BrokerService {
                     // park the frame when the client asked to wait.
                     let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
                     let reply = pop_reply(
-                        &self.broker,
+                        &broker,
                         consumer,
                         max,
                         prefetch,
@@ -415,6 +524,11 @@ impl BrokerService {
                     );
                     let empty = matches!(&reply, BinMsg::Deliveries(items) if items.is_empty());
                     if empty && timeout_ms > 0 && !last_try {
+                        // Park under *internal* queue names: ready-hook
+                        // wake credits are keyed by them, and a scoped
+                        // tenant's public names would never match.
+                        let queues =
+                            queues.iter().map(|q| broker.internal_name(q)).collect();
                         return ServiceReply::Park {
                             wait: Duration::from_millis(timeout_ms),
                             queues,
@@ -425,13 +539,30 @@ impl BrokerService {
                 // No wake hints here: the ready hook installed at serve
                 // time already injected one credit per message this op
                 // made ready, so emitting a hint too would double-wake.
-                other => reply_bin(dispatch_bin_msg(&self.broker, consumer, other), WakeHint::None),
+                other => reply_bin(dispatch_bin_msg(&broker, consumer, other), WakeHint::None),
             }
         } else {
             let req = match wire::parse_json_body(body) {
                 Ok(r) => r,
                 Err(e) => return reply_json(wire::err(e.to_string()), WakeHint::None),
             };
+            if req.get("op").as_str() == Some("hello") {
+                let (scoped, reply) = hello_session(&broker, &req);
+                if let Some(b) = scoped {
+                    let mut g = self.conns.lock().unwrap();
+                    if let Some(st) = g.get_mut(&conn) {
+                        st.broker = b;
+                        st.authed = true;
+                    }
+                }
+                return reply_json(reply, WakeHint::None);
+            }
+            if !authed {
+                return reply_json(
+                    wire::err_code(AUTH_REQUIRED, wire::ERR_CODE_AUTH),
+                    WakeHint::None,
+                );
+            }
             if req.get("op").as_str() == Some("fetch") {
                 let queues: Vec<String> = req
                     .get("queues")
@@ -441,8 +572,10 @@ impl BrokerService {
                 let prefetch = req.get("prefetch").as_u64().unwrap_or(0) as usize;
                 let timeout_ms = req.get("timeout_ms").as_u64().unwrap_or(0);
                 let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-                let resp = fetch_reply(&self.broker, consumer, &refs, prefetch, Duration::ZERO);
+                let resp = fetch_reply(&broker, consumer, &refs, prefetch, Duration::ZERO);
                 if timeout_ms > 0 && !last_try && resp.get("tag").as_u64().is_none() {
+                    // Same internal-name parking as the PopN branch.
+                    let queues = queues.iter().map(|q| broker.internal_name(q)).collect();
                     return ServiceReply::Park {
                         wait: Duration::from_millis(timeout_ms),
                         queues,
@@ -451,7 +584,7 @@ impl BrokerService {
                 return reply_json(resp, WakeHint::None);
             }
             // Wake hints are the ready hook's job now (see serve_with).
-            reply_json(dispatch(&self.broker, consumer, &req), WakeHint::None)
+            reply_json(dispatch(&broker, consumer, &req), WakeHint::None)
         }
     }
 }
@@ -472,26 +605,15 @@ fn reply_bin(msg: BinMsg, wake: WakeHint) -> ServiceReply {
     }
 }
 
+/// Map a broker error onto the wire: quota refusals carry the typed
+/// [`wire::ERR_CODE_QUOTA`] code so clients re-type them without string
+/// matching; everything else stays a bare error, byte-identical to the
+/// legacy shape.
 fn broker_err(e: BrokerError) -> Json {
-    wire::err(e.to_string())
-}
-
-/// The JSON field list of one queue's statistics — shared by the
-/// per-queue `stats` op and the bulk `stats_all` op so the two replies
-/// cannot drift.
-fn stats_pairs(st: &QueueStats) -> Vec<(&'static str, Json)> {
-    vec![
-        ("ready", Json::num(st.ready as f64)),
-        ("unacked", Json::num(st.unacked as f64)),
-        ("published", Json::num(st.published as f64)),
-        ("delivered", Json::num(st.delivered as f64)),
-        ("acked", Json::num(st.acked as f64)),
-        ("requeued", Json::num(st.requeued as f64)),
-        ("dead_lettered", Json::num(st.dead_lettered as f64)),
-        ("lease_expired", Json::num(st.lease_expired as f64)),
-        ("bytes_published", Json::num(st.bytes_published as f64)),
-        ("granted", Json::num(st.granted as f64)),
-    ]
+    match &e {
+        BrokerError::QuotaExceeded(_) => wire::err_code(e.to_string(), wire::ERR_CODE_QUOTA),
+        _ => wire::err(e.to_string()),
+    }
 }
 
 /// One JSON fetch: wait up to `wait` for a delivery, reply `tag: null`
@@ -639,23 +761,19 @@ fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
     }
 }
 
+/// Dispatch one JSON request against a (tenant-scoped) broker handle.
+/// `hello` and the auth gate are the per-connection layer's job
+/// ([`ConnCtx`] / [`BrokerService`]) and never reach here; side ops
+/// (stats, admin, tenancy) route through the [`sideops::SIDE_OPS`]
+/// table; only the data-plane ops that need the connection's consumer
+/// id — or publish/ack semantics — keep hand-written arms.
 fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
-    match req.get("op").as_str() {
-        Some("hello") => {
-            // Version negotiation: both sides speak min(max_wire). The
-            // `grants` capability tells budget-aware clients this server
-            // understands the optional trailing PopN budget field;
-            // without it they omit the field and stay byte-identical to
-            // legacy traffic.
-            let client_max = req.get("max_wire").as_u64().unwrap_or(1);
-            wire::ok(vec![
-                (
-                    "wire",
-                    Json::num(wire::negotiate(client_max, SERVER_MAX_WIRE) as f64),
-                ),
-                ("grants", Json::Bool(true)),
-            ])
+    if let Some(op) = req.get("op").as_str() {
+        if let Some(reply) = sideops::dispatch(broker, op, req) {
+            return reply;
         }
+    }
+    match req.get("op").as_str() {
         Some("publish") => match task_from_json(req.get("task")) {
             Ok(task) => match broker.publish(task) {
                 Ok(()) => wire::ok(vec![]),
@@ -733,109 +851,6 @@ fn dispatch(broker: &Broker, consumer: u64, req: &Json) -> Json {
             let n = broker.heartbeat(consumer);
             wire::ok(vec![("extended", Json::num(n as f64))])
         }
-        Some("leases") => {
-            let st = broker.lease_stats();
-            let consumers: Vec<Json> = st
-                .consumers
-                .iter()
-                .map(|c| {
-                    Json::obj(vec![
-                        ("consumer", Json::num(c.consumer as f64)),
-                        ("lease_ms", Json::num(c.lease_ms as f64)),
-                        ("held", Json::num(c.held as f64)),
-                        ("idle_ms", Json::num(c.idle_ms as f64)),
-                    ])
-                })
-                .collect();
-            wire::ok(vec![
-                ("active", Json::num(st.active as f64)),
-                ("expired", Json::num(st.expired as f64)),
-                ("consumers", Json::arr(consumers)),
-            ])
-        }
-        Some("reap") => wire::ok(vec![(
-            "reaped",
-            Json::num(broker.reap_expired() as f64),
-        )]),
-        Some("durability") => {
-            let st = broker.durability_stats();
-            wire::ok(vec![
-                ("durable", Json::Bool(st.durable)),
-                ("wal_records", Json::num(st.wal_records as f64)),
-                ("wal_fsyncs", Json::num(st.wal_fsyncs as f64)),
-                ("snapshots", Json::num(st.snapshots as f64)),
-                ("recovered", Json::num(st.recovered as f64)),
-            ])
-        }
-        Some("sched") => {
-            // Delivery-scheduler observability: lifetime grants, parked
-            // fetches waiting in grant queues, live overcommit margin,
-            // and scans that found nothing deliverable.
-            let st = broker.sched_stats();
-            wire::ok(vec![
-                ("granted", Json::num(st.granted as f64)),
-                ("grant_queue_len", Json::num(st.grant_queue_len as f64)),
-                ("overcommit_active", Json::num(st.overcommit_active as f64)),
-                ("fruitless_scans", Json::num(st.fruitless_scans as f64)),
-            ])
-        }
-        Some("totals") => {
-            let t = broker.totals();
-            wire::ok(vec![
-                ("published", Json::num(t.published as f64)),
-                ("delivered", Json::num(t.delivered as f64)),
-                ("acked", Json::num(t.acked as f64)),
-                ("requeued", Json::num(t.requeued as f64)),
-                ("dead_lettered", Json::num(t.dead_lettered as f64)),
-                ("lease_expired", Json::num(t.lease_expired as f64)),
-            ])
-        }
-        Some("queued_ranges") => {
-            // Recovery-aware resubmission over TCP: which sample ranges
-            // of (study, step) still sit queued or in flight on `queue`.
-            // Federated coordinators subtract this across members before
-            // re-enqueueing after a failover or member restart.
-            let queue = req.get("queue").as_str().unwrap_or("");
-            let study = req.get("study").as_str().unwrap_or("");
-            let step = req.get("step").as_str().unwrap_or("");
-            let ranges: Vec<Json> = broker
-                .queued_step_samples(queue, study, step)
-                .into_iter()
-                .map(|(lo, hi)| Json::arr(vec![Json::num(lo as f64), Json::num(hi as f64)]))
-                .collect();
-            wire::ok(vec![("ranges", Json::arr(ranges))])
-        }
-        Some("stats") => {
-            let queue = req.get("queue").as_str().unwrap_or("");
-            wire::ok(stats_pairs(&broker.stats(queue)))
-        }
-        Some("stats_all") => {
-            // One reply for every queue on this broker: the bulk form
-            // that keeps a federated `merlin status` at one RPC per
-            // member instead of one per (queue, member) pair.
-            let queues: Vec<Json> = broker
-                .stats_all()
-                .into_iter()
-                .map(|(name, st)| {
-                    let mut pairs = vec![("name", Json::Str(name))];
-                    pairs.extend(stats_pairs(&st));
-                    Json::obj(pairs)
-                })
-                .collect();
-            wire::ok(vec![("queues", Json::arr(queues))])
-        }
-        Some("purge") => {
-            let queue = req.get("queue").as_str().unwrap_or("");
-            wire::ok(vec![(
-                "purged",
-                Json::num(broker.purge(queue) as f64),
-            )])
-        }
-        Some("depth") => wire::ok(vec![("depth", Json::num(broker.depth() as f64))]),
-        Some("queues") => wire::ok(vec![(
-            "queues",
-            Json::arr(broker.queue_names().into_iter().map(Json::Str).collect()),
-        )]),
         other => wire::err(format!("unknown op {other:?}")),
     }
 }
@@ -860,7 +875,7 @@ mod tests {
         let broker = Broker::default();
         let server = BrokerServer::serve(broker.clone(), "127.0.0.1:0").unwrap();
         let mut client = BrokerClient::connect(&server.addr.to_string()).unwrap();
-        assert_eq!(client.wire_version(), 4, "negotiation lands on v4");
+        assert_eq!(client.wire_version(), 5, "negotiation lands on v5");
         client.publish(&ping("hello")).unwrap();
         let d = client.fetch(&["q"], 0, 1000).unwrap().expect("delivery");
         match &d.task.payload {
@@ -1123,6 +1138,115 @@ mod tests {
         let broker = Broker::default();
         let resp = dispatch(&broker, 1, &Json::obj(vec![("op", Json::str("bogus"))]));
         assert_eq!(resp.get("ok").as_bool(), Some(false));
+    }
+
+    fn auth_broker() -> Broker {
+        Broker::new(crate::broker::BrokerConfig {
+            tenants: crate::broker::tenant::TenantConfig {
+                auth: true,
+                tenants: vec![crate::broker::tenant::TenantSpec::new("alice").token("tok-a")],
+            },
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn auth_gates_every_op_until_hello_succeeds() {
+        // Both server modes share hello_session and the auth gate; prove
+        // it end to end on each: pre-hello ops refused with the typed
+        // code, bad token refused, good token scopes the session (the
+        // reply names the tenant, queue names come back public).
+        let modes: Vec<ServeConfig> = if cfg!(target_os = "linux") {
+            vec![ServeConfig::threaded(), ServeConfig::reactor()]
+        } else {
+            vec![ServeConfig::threaded()]
+        };
+        for cfg in modes {
+            let server = BrokerServer::serve_with(auth_broker(), "127.0.0.1:0", cfg).unwrap();
+            let stream = TcpStream::connect(server.addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            let mut call = |req: &Json| {
+                wire::write_frame(&mut writer, req).unwrap();
+                writer.flush().unwrap();
+                wire::read_frame(&mut reader).unwrap()
+            };
+            // JSON op before hello: typed auth error.
+            let resp = call(&Json::obj(vec![("op", Json::str("depth"))]));
+            assert_eq!(resp.get("ok").as_bool(), Some(false));
+            assert_eq!(resp.get("code").as_str(), Some(wire::ERR_CODE_AUTH));
+            // Wrong token: hello rejected with the same code.
+            let resp = call(&Json::obj(vec![
+                ("op", Json::str("hello")),
+                ("max_wire", Json::num(5.0)),
+                ("token", Json::str("wrong")),
+            ]));
+            assert_eq!(resp.get("ok").as_bool(), Some(false));
+            assert_eq!(resp.get("code").as_str(), Some(wire::ERR_CODE_AUTH));
+            // Right token: session opens and names the tenant.
+            let resp = call(&Json::obj(vec![
+                ("op", Json::str("hello")),
+                ("max_wire", Json::num(5.0)),
+                ("token", Json::str("tok-a")),
+            ]));
+            assert_eq!(resp.get("ok").as_bool(), Some(true));
+            assert_eq!(resp.get("wire").as_u64(), Some(5));
+            assert_eq!(resp.get("tenant").as_str(), Some("alice"));
+            // Ops now work, and the delivered queue name is public.
+            let resp = call(&Json::obj(vec![
+                ("op", Json::str("publish")),
+                ("task", task_to_json(&ping("scoped"))),
+            ]));
+            assert_eq!(resp.get("ok").as_bool(), Some(true));
+            let resp = call(&Json::obj(vec![
+                ("op", Json::str("fetch")),
+                ("queues", Json::arr(vec![Json::str("q")])),
+                ("timeout_ms", Json::num(1000.0)),
+            ]));
+            assert_eq!(resp.get("ok").as_bool(), Some(true));
+            assert_eq!(resp.get("task").get("queue").as_str(), Some("q"));
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn auth_gates_binary_frames_too() {
+        let server = BrokerServer::serve(auth_broker(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let frame = wire::encode_bin(&BinMsg::AckBatch(vec![1]));
+        wire::write_frame_bytes(&mut writer, &frame).unwrap();
+        writer.flush().unwrap();
+        match wire::read_frame_any(&mut reader).unwrap() {
+            Frame::Bin(b) => match wire::decode_bin(&b).unwrap() {
+                BinMsg::Err(msg) => assert!(msg.contains("authentication required")),
+                other => panic!("expected auth error, got {other:?}"),
+            },
+            other => panic!("expected binary reply, got {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn auth_off_hello_reply_keeps_legacy_shape() {
+        // No tenant field on auth-off servers: the reply stays
+        // byte-compatible with every pre-v5 client's expectations.
+        let server = BrokerServer::serve(Broker::default(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let req = Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("max_wire", Json::num(5.0)),
+            ("token", Json::str("ignored")),
+        ]);
+        wire::write_frame(&mut writer, &req).unwrap();
+        writer.flush().unwrap();
+        let resp = wire::read_frame(&mut reader).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        assert!(resp.get("tenant").as_str().is_none());
+        server.shutdown();
     }
 
     #[test]

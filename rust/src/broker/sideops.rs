@@ -1,0 +1,355 @@
+//! Consolidated side-operation surface: one dispatch table for the
+//! broker's observability and admin ops, with field lists shared by the
+//! server encoder and the client decoder.
+//!
+//! Before this module, the JSON field list of every side op lived twice
+//! — hand-written in [`super::net`]'s encoder and again in
+//! [`super::client`]'s parser — and each new op re-plumbed a fresh match
+//! arm on both sides. Here every numeric reply field is declared once as
+//! a [`Field`] (wire name + getter + setter): the server encodes through
+//! [`encode`], the client rebuilds the struct through [`decode`], and
+//! the two ends cannot drift. [`SIDE_OPS`] is the single server dispatch
+//! table — ops that need no consumer identity (stats, admin, tenancy)
+//! route through it in both the threaded and reactor servers, and
+//! [`super::client::BrokerClient`]'s accessors are thin wrappers over
+//! the same lists.
+
+use super::core::{Broker, BrokerTotals, ConsumerLease, DurabilityStats, QueueStats, SchedStats};
+use super::tenant::TenantUsage;
+use super::wire;
+use crate::util::json::Json;
+
+/// One numeric field of a side-op reply: wire name plus getter and
+/// setter. Declaring both directions side by side is what keeps server
+/// encode and client decode in lockstep.
+pub struct Field<T> {
+    /// JSON key on the wire.
+    pub name: &'static str,
+    /// Read the field for encoding (server side).
+    pub get: fn(&T) -> u64,
+    /// Write the field after decoding (client side).
+    pub set: fn(&mut T, u64),
+}
+
+impl<T> Field<T> {
+    const fn new(name: &'static str, get: fn(&T) -> u64, set: fn(&mut T, u64)) -> Self {
+        Field { name, get, set }
+    }
+}
+
+/// Encode a stats struct as JSON pairs, in declared field order.
+pub fn encode<T>(fields: &[Field<T>], v: &T) -> Vec<(&'static str, Json)> {
+    fields
+        .iter()
+        .map(|f| (f.name, Json::num((f.get)(v) as f64)))
+        .collect()
+}
+
+/// Rebuild a stats struct from a JSON reply. Fields missing from the
+/// reply stay at their default — how an older server's reply decodes
+/// loss-free on a newer client.
+pub fn decode<T: Default>(fields: &[Field<T>], resp: &Json) -> T {
+    let mut out = T::default();
+    for f in fields {
+        if let Some(n) = resp.get(f.name).as_u64() {
+            (f.set)(&mut out, n);
+        }
+    }
+    out
+}
+
+/// `stats` / `stats_all` reply fields — one list for the per-queue op,
+/// the bulk op, and the client parser.
+pub static QUEUE_STATS: &[Field<QueueStats>] = &[
+    Field::new("ready", |s| s.ready as u64, |s, v| s.ready = v as usize),
+    Field::new("unacked", |s| s.unacked as u64, |s, v| s.unacked = v as usize),
+    Field::new("published", |s| s.published, |s, v| s.published = v),
+    Field::new("delivered", |s| s.delivered, |s, v| s.delivered = v),
+    Field::new("acked", |s| s.acked, |s, v| s.acked = v),
+    Field::new("requeued", |s| s.requeued, |s, v| s.requeued = v),
+    Field::new("dead_lettered", |s| s.dead_lettered, |s, v| s.dead_lettered = v),
+    Field::new("lease_expired", |s| s.lease_expired, |s, v| s.lease_expired = v),
+    Field::new("bytes_published", |s| s.bytes_published, |s, v| s.bytes_published = v),
+    Field::new("granted", |s| s.granted, |s, v| s.granted = v),
+];
+
+/// `sched` reply fields.
+pub static SCHED_STATS: &[Field<SchedStats>] = &[
+    Field::new("granted", |s| s.granted, |s, v| s.granted = v),
+    Field::new(
+        "grant_queue_len",
+        |s| s.grant_queue_len as u64,
+        |s, v| s.grant_queue_len = v as usize,
+    ),
+    Field::new(
+        "overcommit_active",
+        |s| s.overcommit_active as u64,
+        |s, v| s.overcommit_active = v as usize,
+    ),
+    Field::new("fruitless_scans", |s| s.fruitless_scans, |s, v| s.fruitless_scans = v),
+];
+
+/// `totals` reply fields.
+pub static TOTALS: &[Field<BrokerTotals>] = &[
+    Field::new("published", |s| s.published, |s, v| s.published = v),
+    Field::new("delivered", |s| s.delivered, |s, v| s.delivered = v),
+    Field::new("acked", |s| s.acked, |s, v| s.acked = v),
+    Field::new("requeued", |s| s.requeued, |s, v| s.requeued = v),
+    Field::new("dead_lettered", |s| s.dead_lettered, |s, v| s.dead_lettered = v),
+    Field::new("lease_expired", |s| s.lease_expired, |s, v| s.lease_expired = v),
+];
+
+/// `durability` numeric reply fields (`durable` is the one bool, handled
+/// by [`durability_from_json`] / the server handler directly).
+pub static DURABILITY: &[Field<DurabilityStats>] = &[
+    Field::new("wal_records", |s| s.wal_records, |s, v| s.wal_records = v),
+    Field::new("wal_fsyncs", |s| s.wal_fsyncs, |s, v| s.wal_fsyncs = v),
+    Field::new("snapshots", |s| s.snapshots, |s, v| s.snapshots = v),
+    Field::new("recovered", |s| s.recovered, |s, v| s.recovered = v),
+];
+
+/// Per-consumer rows inside a `leases` reply.
+pub static CONSUMER_LEASE: &[Field<ConsumerLease>] = &[
+    Field::new("consumer", |s| s.consumer, |s, v| s.consumer = v),
+    Field::new("lease_ms", |s| s.lease_ms, |s, v| s.lease_ms = v),
+    Field::new("held", |s| s.held as u64, |s, v| s.held = v as usize),
+    Field::new("idle_ms", |s| s.idle_ms, |s, v| s.idle_ms = v),
+];
+
+/// Numeric fields of a `tenants` reply row (`id` and `weight` are typed
+/// separately — see [`tenant_usage_json`]).
+pub static TENANT_USAGE: &[Field<TenantUsage>] = &[
+    Field::new("published", |u| u.published, |u, v| u.published = v),
+    Field::new("bytes_published", |u| u.bytes_published, |u, v| u.bytes_published = v),
+    Field::new("delivered", |u| u.delivered, |u, v| u.delivered = v),
+    Field::new("acked", |u| u.acked, |u, v| u.acked = v),
+    Field::new("requeued", |u| u.requeued, |u, v| u.requeued = v),
+    Field::new("dead_lettered", |u| u.dead_lettered, |u, v| u.dead_lettered = v),
+    Field::new("lease_expired", |u| u.lease_expired, |u, v| u.lease_expired = v),
+    Field::new("quota_denied", |u| u.quota_denied, |u, v| u.quota_denied = v),
+    Field::new("sim_us", |u| u.sim_us, |u, v| u.sim_us = v),
+    Field::new("queued_tasks", |u| u.queued_tasks, |u, v| u.queued_tasks = v),
+    Field::new("queued_bytes", |u| u.queued_bytes, |u, v| u.queued_bytes = v),
+];
+
+/// One tenant's usage row, as the `tenants` op replies with it.
+pub fn tenant_usage_json(u: &TenantUsage) -> Json {
+    let mut pairs = vec![
+        ("id", Json::str(u.id.as_str())),
+        ("weight", Json::num(u.weight as f64)),
+    ];
+    pairs.extend(encode(TENANT_USAGE, u));
+    Json::obj(pairs)
+}
+
+/// Parse one `tenants` reply row.
+pub fn tenant_usage_from_json(v: &Json) -> TenantUsage {
+    let mut u: TenantUsage = decode(TENANT_USAGE, v);
+    u.id = v.get("id").as_str().unwrap_or_default().to_string();
+    u.weight = v.get("weight").as_u64().unwrap_or(1) as u32;
+    u
+}
+
+/// Parse a `durability` reply.
+pub fn durability_from_json(resp: &Json) -> DurabilityStats {
+    let mut st: DurabilityStats = decode(DURABILITY, resp);
+    st.durable = resp.get("durable").as_bool().unwrap_or(false);
+    st
+}
+
+/// Parse a `leases` reply.
+pub fn lease_stats_from_json(resp: &Json) -> super::core::LeaseStats {
+    super::core::LeaseStats {
+        active: resp.get("active").as_u64().unwrap_or(0) as usize,
+        expired: resp.get("expired").as_u64().unwrap_or(0),
+        consumers: resp
+            .get("consumers")
+            .as_arr()
+            .map(|a| a.iter().map(|c| decode(CONSUMER_LEASE, c)).collect())
+            .unwrap_or_default(),
+    }
+}
+
+/// A server-side side-op handler: `(scoped broker, request) → reply`.
+/// Side ops never need the connection's consumer id — that is the
+/// dividing line between this table and the data-plane ops that stay in
+/// [`super::net`]'s dispatch.
+pub type SideOp = fn(&Broker, &Json) -> Json;
+
+/// Every side op, by wire name. Adding an op means adding one row here
+/// (plus a thin client wrapper); both server implementations route
+/// through this table.
+pub static SIDE_OPS: &[(&str, SideOp)] = &[
+    ("stats", op_stats),
+    ("stats_all", op_stats_all),
+    ("sched", op_sched),
+    ("totals", op_totals),
+    ("durability", op_durability),
+    ("leases", op_leases),
+    ("queued_ranges", op_queued_ranges),
+    ("depth", op_depth),
+    ("queues", op_queues),
+    ("reap", op_reap),
+    ("purge", op_purge),
+    ("tenants", op_tenants),
+    ("usage", op_usage),
+];
+
+/// Look up and run a side op. `None` means `op` is not a side op (the
+/// caller falls through to the data-plane dispatch).
+pub fn dispatch(broker: &Broker, op: &str, req: &Json) -> Option<Json> {
+    let (_, run) = SIDE_OPS.iter().find(|(name, _)| *name == op)?;
+    Some(run(broker, req))
+}
+
+fn op_stats(broker: &Broker, req: &Json) -> Json {
+    let queue = req.get("queue").as_str().unwrap_or("");
+    wire::ok(encode(QUEUE_STATS, &broker.stats(queue)))
+}
+
+fn op_stats_all(broker: &Broker, _req: &Json) -> Json {
+    // One reply for every queue on this broker: the bulk form that keeps
+    // a federated `merlin status` at one RPC per member instead of one
+    // per (queue, member) pair.
+    let queues: Vec<Json> = broker
+        .stats_all()
+        .into_iter()
+        .map(|(name, st)| {
+            let mut pairs = vec![("name", Json::Str(name))];
+            pairs.extend(encode(QUEUE_STATS, &st));
+            Json::obj(pairs)
+        })
+        .collect();
+    wire::ok(vec![("queues", Json::arr(queues))])
+}
+
+fn op_sched(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(encode(SCHED_STATS, &broker.sched_stats()))
+}
+
+fn op_totals(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(encode(TOTALS, &broker.totals()))
+}
+
+fn op_durability(broker: &Broker, _req: &Json) -> Json {
+    let st = broker.durability_stats();
+    let mut pairs = vec![("durable", Json::Bool(st.durable))];
+    pairs.extend(encode(DURABILITY, &st));
+    wire::ok(pairs)
+}
+
+fn op_leases(broker: &Broker, _req: &Json) -> Json {
+    let st = broker.lease_stats();
+    let consumers: Vec<Json> = st
+        .consumers
+        .iter()
+        .map(|c| Json::obj(encode(CONSUMER_LEASE, c)))
+        .collect();
+    wire::ok(vec![
+        ("active", Json::num(st.active as f64)),
+        ("expired", Json::num(st.expired as f64)),
+        ("consumers", Json::arr(consumers)),
+    ])
+}
+
+fn op_queued_ranges(broker: &Broker, req: &Json) -> Json {
+    // Recovery-aware resubmission over TCP: which sample ranges of
+    // (study, step) still sit queued or in flight on `queue`. Federated
+    // coordinators subtract this across members before re-enqueueing
+    // after a failover or member restart.
+    let queue = req.get("queue").as_str().unwrap_or("");
+    let study = req.get("study").as_str().unwrap_or("");
+    let step = req.get("step").as_str().unwrap_or("");
+    let ranges: Vec<Json> = broker
+        .queued_step_samples(queue, study, step)
+        .into_iter()
+        .map(|(lo, hi)| Json::arr(vec![Json::num(lo as f64), Json::num(hi as f64)]))
+        .collect();
+    wire::ok(vec![("ranges", Json::arr(ranges))])
+}
+
+fn op_depth(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(vec![("depth", Json::num(broker.depth() as f64))])
+}
+
+fn op_queues(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(vec![(
+        "queues",
+        Json::arr(broker.queue_names().into_iter().map(Json::Str).collect()),
+    )])
+}
+
+fn op_reap(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(vec![("reaped", Json::num(broker.reap_expired() as f64))])
+}
+
+fn op_purge(broker: &Broker, req: &Json) -> Json {
+    let queue = req.get("queue").as_str().unwrap_or("");
+    wire::ok(vec![("purged", Json::num(broker.purge(queue) as f64))])
+}
+
+fn op_tenants(broker: &Broker, _req: &Json) -> Json {
+    let rows: Vec<Json> = broker.tenant_stats().iter().map(tenant_usage_json).collect();
+    wire::ok(vec![("tenants", Json::arr(rows))])
+}
+
+fn op_usage(broker: &Broker, req: &Json) -> Json {
+    // Workers credit simulation compute time to their tenant: the
+    // federation's usage-metering hook for "who burned the cycles".
+    let us = req.get("sim_us").as_u64().unwrap_or(0);
+    broker.record_sim_us(us);
+    wire::ok(vec![])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_stats_roundtrip_through_shared_fields() {
+        let st = QueueStats {
+            ready: 1,
+            unacked: 2,
+            published: 3,
+            delivered: 4,
+            acked: 5,
+            requeued: 6,
+            dead_lettered: 7,
+            lease_expired: 8,
+            bytes_published: 9,
+            granted: 10,
+        };
+        let json = Json::obj(encode(QUEUE_STATS, &st));
+        assert_eq!(decode::<QueueStats>(QUEUE_STATS, &json), st);
+    }
+
+    #[test]
+    fn decode_tolerates_missing_fields() {
+        // An older server omitting a field leaves it at default — the
+        // forward-compat contract every client parser inherits.
+        let json = Json::obj(vec![("published", Json::num(7.0))]);
+        let t: BrokerTotals = decode(TOTALS, &json);
+        assert_eq!(t.published, 7);
+        assert_eq!(t.delivered, 0);
+    }
+
+    #[test]
+    fn tenant_usage_roundtrips_with_identity() {
+        let u = TenantUsage {
+            id: "alice".into(),
+            weight: 3,
+            published: 11,
+            queued_bytes: 12,
+            ..Default::default()
+        };
+        assert_eq!(tenant_usage_from_json(&tenant_usage_json(&u)), u);
+    }
+
+    #[test]
+    fn unknown_op_is_not_a_side_op() {
+        let broker = Broker::default();
+        let req = Json::obj(vec![("op", Json::str("publish"))]);
+        assert!(dispatch(&broker, "publish", &req).is_none());
+        assert!(dispatch(&broker, "depth", &req).is_some());
+    }
+}

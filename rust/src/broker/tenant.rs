@@ -1,0 +1,251 @@
+//! Tenant registry: authentication tokens, weights, and quotas.
+//!
+//! "Millions of users" means many tenants sharing one federation, not
+//! one study owner. A [`TenantConfig`] maps hello-time auth tokens to
+//! tenant identities, each with a fair-share weight and admission
+//! quotas; [`super::core::Broker`] builds its per-tenant state (queue
+//! namespaces, usage counters, token buckets, stride-scheduling virtual
+//! time) from it. The config is parsed from the `serve-broker
+//! --auth-tokens FILE` token file — see [`parse_token_file`] for the
+//! line grammar and docs/OPERATIONS.md for the runbook.
+
+/// The reserved identity unauthenticated connections map to when auth
+/// is off. Its queues live in the *root* namespace (no prefix), which is
+/// what keeps single-tenant deployments byte-identical to the
+/// pre-tenant broker — including WAL contents across an upgrade.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Separator between a tenant id and a queue name in the broker's
+/// internal (namespaced) queue names. A control byte: it cannot appear
+/// in a tenant id (enforced at parse) and makes cross-tenant collision
+/// impossible whatever queue names studies pick.
+pub const NS_SEP: char = '\u{1}';
+
+/// One tenant: identity, credential, fair-share weight, and quotas.
+/// Zero means "unlimited" for every quota field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant identity — the queue-namespace prefix and the id reported
+    /// in per-tenant stats.
+    pub id: String,
+    /// Auth token that maps to this tenant at hello time. `None` only
+    /// for the implicit default tenant.
+    pub token: Option<String>,
+    /// Weighted fair-share weight (stride scheduling: a weight-2 tenant
+    /// receives twice the deliveries of a weight-1 tenant under
+    /// contention). Clamped to at least 1.
+    pub weight: u32,
+    /// Max tasks resident (ready + unacked) for this tenant; 0 = none.
+    pub max_queued_tasks: u64,
+    /// Max payload bytes resident for this tenant; 0 = unlimited.
+    pub max_queued_bytes: u64,
+    /// Publish admission rate, tasks/second (token bucket); 0 = unlimited.
+    pub publish_rate: u64,
+    /// Token-bucket burst capacity; 0 defaults to `publish_rate`.
+    pub publish_burst: u64,
+}
+
+impl TenantSpec {
+    /// An unlimited, weight-1 tenant with the given id and no token.
+    pub fn new(id: impl Into<String>) -> Self {
+        TenantSpec {
+            id: id.into(),
+            token: None,
+            weight: 1,
+            max_queued_tasks: 0,
+            max_queued_bytes: 0,
+            publish_rate: 0,
+            publish_burst: 0,
+        }
+    }
+
+    /// Builder: set the auth token.
+    pub fn token(mut self, token: impl Into<String>) -> Self {
+        self.token = Some(token.into());
+        self
+    }
+
+    /// Builder: set the fair-share weight.
+    pub fn weight(mut self, weight: u32) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+}
+
+/// The broker's whole tenant table. Default: auth off, no extra
+/// tenants — every connection is the default tenant and the broker
+/// behaves exactly as before tenancy existed.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantConfig {
+    /// When true, every connection must present a token at hello that
+    /// maps to a tenant; token-less or wrong-token hellos (and any op
+    /// attempted before a successful hello) get a typed `auth` error.
+    /// When false, tokens are ignored and everyone is the default
+    /// tenant.
+    pub auth: bool,
+    /// Authenticated tenants (the default tenant is implicit and always
+    /// present). A spec whose id is [`DEFAULT_TENANT`] overrides the
+    /// default tenant's weight/quotas (and gives it a token).
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantConfig {
+    /// Is this effectively the pre-tenant single-tenant broker? (Auth
+    /// off and nobody besides the implicit default tenant.)
+    pub fn is_single_tenant(&self) -> bool {
+        !self.auth && self.tenants.iter().all(|t| t.id == DEFAULT_TENANT)
+    }
+}
+
+/// Parse a token file into an auth-on [`TenantConfig`].
+///
+/// Line grammar (whitespace-separated; `#` starts a comment; blank
+/// lines ignored):
+///
+/// ```text
+/// <token> <tenant-id> [weight=N] [rate=N] [burst=N] [max-tasks=N] [max-bytes=N]
+/// ```
+///
+/// Tokens and tenant ids must be unique across the file.
+pub fn parse_token_file(text: &str) -> Result<TenantConfig, String> {
+    let mut tenants: Vec<TenantSpec> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (token, id) = match (parts.next(), parts.next()) {
+            (Some(t), Some(i)) => (t.to_string(), i.to_string()),
+            _ => {
+                return Err(format!(
+                    "token file line {}: expected `<token> <tenant-id> [key=value ...]`",
+                    lineno + 1
+                ))
+            }
+        };
+        if id.contains(NS_SEP) {
+            return Err(format!(
+                "token file line {}: tenant id contains a control byte",
+                lineno + 1
+            ));
+        }
+        if tenants.iter().any(|t| t.id == id) {
+            return Err(format!("token file line {}: duplicate tenant id {id}", lineno + 1));
+        }
+        if tenants.iter().any(|t| t.token.as_deref() == Some(&token)) {
+            return Err(format!("token file line {}: duplicate token", lineno + 1));
+        }
+        let mut spec = TenantSpec::new(id).token(token);
+        for kv in parts {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("token file line {}: bad option {kv}", lineno + 1))?;
+            let n: u64 = val
+                .parse()
+                .map_err(|_| format!("token file line {}: bad number in {kv}", lineno + 1))?;
+            match key {
+                "weight" => spec.weight = (n as u32).max(1),
+                "rate" => spec.publish_rate = n,
+                "burst" => spec.publish_burst = n,
+                "max-tasks" => spec.max_queued_tasks = n,
+                "max-bytes" => spec.max_queued_bytes = n,
+                other => {
+                    return Err(format!(
+                        "token file line {}: unknown option {other}",
+                        lineno + 1
+                    ))
+                }
+            }
+        }
+        tenants.push(spec);
+    }
+    if tenants.is_empty() {
+        return Err("token file declares no tenants".into());
+    }
+    Ok(TenantConfig {
+        auth: true,
+        tenants,
+    })
+}
+
+/// Per-tenant usage counters, as reported by the `tenants` side-op and
+/// `merlin status`. Lifetime counters except the two `queued_*` gauges
+/// (the quota-tracked resident footprint).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantUsage {
+    /// Tenant identity.
+    pub id: String,
+    /// Fair-share weight.
+    pub weight: u32,
+    /// Tasks accepted from this tenant.
+    pub published: u64,
+    /// Payload bytes accepted.
+    pub bytes_published: u64,
+    /// Deliveries handed to this tenant's consumers.
+    pub delivered: u64,
+    /// Deliveries acknowledged.
+    pub acked: u64,
+    /// Deliveries returned to a queue (nack-requeue, requeue, recovery).
+    pub requeued: u64,
+    /// Deliveries dead-lettered.
+    pub dead_lettered: u64,
+    /// Deliveries reaped on lease expiry.
+    pub lease_expired: u64,
+    /// Publishes refused by quota (rate, tasks, or bytes).
+    pub quota_denied: u64,
+    /// Simulation microseconds credited via the `usage` op (workers
+    /// report compute time from their result rows).
+    pub sim_us: u64,
+    /// Tasks currently resident (ready + unacked) — the footprint
+    /// `max-tasks` caps.
+    pub queued_tasks: u64,
+    /// Payload bytes currently resident — what `max-bytes` caps.
+    pub queued_bytes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_file_parses_options_and_defaults() {
+        let cfg = parse_token_file(
+            "# fleet tokens\n\
+             tok-a alice weight=2 rate=100 burst=200 max-tasks=50 max-bytes=4096\n\
+             \n\
+             tok-b bob   # trailing comment\n",
+        )
+        .unwrap();
+        assert!(cfg.auth);
+        assert_eq!(cfg.tenants.len(), 2);
+        let a = &cfg.tenants[0];
+        assert_eq!(a.id, "alice");
+        assert_eq!(a.token.as_deref(), Some("tok-a"));
+        assert_eq!(
+            (a.weight, a.publish_rate, a.publish_burst),
+            (2, 100, 200)
+        );
+        assert_eq!((a.max_queued_tasks, a.max_queued_bytes), (50, 4096));
+        let b = &cfg.tenants[1];
+        assert_eq!((b.id.as_str(), b.weight), ("bob", 1));
+        assert_eq!(b.max_queued_tasks, 0, "unspecified quotas are unlimited");
+    }
+
+    #[test]
+    fn token_file_rejects_malformed_lines() {
+        assert!(parse_token_file("loner\n").is_err(), "missing tenant id");
+        assert!(parse_token_file("t a weight=x\n").is_err(), "bad number");
+        assert!(parse_token_file("t a shape=9\n").is_err(), "unknown key");
+        assert!(parse_token_file("t1 a\nt2 a\n").is_err(), "dup id");
+        assert!(parse_token_file("t a\nt b\n").is_err(), "dup token");
+        assert!(parse_token_file("").is_err(), "empty file");
+    }
+
+    #[test]
+    fn default_config_is_single_tenant() {
+        assert!(TenantConfig::default().is_single_tenant());
+        let cfg = parse_token_file("t alice\n").unwrap();
+        assert!(!cfg.is_single_tenant());
+    }
+}

@@ -207,6 +207,159 @@ pub fn err(msg: impl Into<String>) -> Json {
     ])
 }
 
+/// Machine-readable code for authentication failures (hello rejected,
+/// or an op attempted on an unauthenticated connection while the server
+/// requires auth).
+pub const ERR_CODE_AUTH: &str = "auth";
+
+/// Machine-readable code for per-tenant quota rejections (rate limit or
+/// queued-tasks/bytes ceiling).
+pub const ERR_CODE_QUOTA: &str = "quota_exceeded";
+
+/// Error response carrying a machine-readable `code` alongside the
+/// human-readable message — what lets clients re-type
+/// `QuotaExceeded`/auth failures across the wire instead of string
+/// matching. Servers only attach codes to the typed failures above;
+/// every other error stays a bare [`err`], byte-identical to the legacy
+/// shape.
+pub fn err_code(msg: impl Into<String>, code: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+        ("code", Json::str(code)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// hello negotiation
+// ---------------------------------------------------------------------------
+
+/// One side's `hello` offer: everything a peer can advertise at
+/// connection setup, in one place. Capabilities accreted flag-by-flag
+/// (a version int, then a `grants` bool, now an auth token); this struct
+/// is the single surface new capability bits land on, and
+/// [`HelloFeatures::negotiate`] is the single function that turns a
+/// client offer + a server offer into the connection's [`Session`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloFeatures {
+    /// Highest wire version this side speaks.
+    pub max_wire: u64,
+    /// Whether this side runs the receiver-driven grant scheduler (a
+    /// server capability; clients always understand grant replies).
+    pub grants: bool,
+    /// Authentication token, if the client presents one. Absent on the
+    /// wire when `None`, so token-less hellos are byte-identical to
+    /// every earlier protocol vintage.
+    pub token: Option<String>,
+}
+
+impl HelloFeatures {
+    /// A client-side offer.
+    pub fn client(max_wire: u64, token: Option<String>) -> Self {
+        HelloFeatures {
+            max_wire,
+            grants: true,
+            token,
+        }
+    }
+
+    /// The client's hello request frame. With no token this is exactly
+    /// the legacy `{"op":"hello","max_wire":N}` — old servers keep
+    /// interoperating unchanged.
+    pub fn request_json(&self) -> Json {
+        let mut pairs = vec![
+            ("op", Json::str("hello")),
+            ("max_wire", Json::num(self.max_wire as f64)),
+        ];
+        if let Some(t) = &self.token {
+            pairs.push(("token", Json::str(t)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse a client hello request (server side). Unknown fields are
+    /// ignored — that is how future capability bits stay
+    /// backward-compatible.
+    pub fn from_request(req: &Json) -> Self {
+        HelloFeatures {
+            max_wire: req.get("max_wire").as_u64().unwrap_or(1),
+            grants: true,
+            token: req.get("token").as_str().map(String::from),
+        }
+    }
+
+    /// Fold a client offer and a server offer into the connection's
+    /// [`Session`]: wire version is the highest both speak (never below
+    /// 1), grants holds iff the server runs the scheduler. Tenant
+    /// identity is resolved by the server's auth layer *before* this is
+    /// called (a bad token never reaches negotiation) and attached via
+    /// [`Session::with_tenant`].
+    pub fn negotiate(client: &HelloFeatures, server: &HelloFeatures) -> Session {
+        Session {
+            wire: negotiate(client.max_wire, server.max_wire) as u8,
+            grants: server.grants,
+            tenant: None,
+        }
+    }
+}
+
+/// The negotiated per-connection state a hello produces — what both
+/// threaded and reactor servers keep per connection, and what the
+/// mutexed and multiplexed clients carry instead of scattered
+/// per-capability bools.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Session {
+    /// Negotiated wire version (1 = JSON only, 2 = binary batches,
+    /// 3 = + delivery leases, 4 = + correlated frames, 5 = + auth).
+    pub wire: u8,
+    /// Server advertised the grant scheduler (PopN may carry the
+    /// optional trailing byte-budget field).
+    pub grants: bool,
+    /// Tenant id this connection authenticated as. `None` on auth-off
+    /// servers (and in their replies — the field is omitted so auth-off
+    /// hellos stay byte-identical to the legacy exchange).
+    pub tenant: Option<String>,
+}
+
+impl Session {
+    /// The pre-hello / failed-hello session: wire v1, no capabilities.
+    pub fn legacy() -> Self {
+        Session {
+            wire: 1,
+            grants: false,
+            tenant: None,
+        }
+    }
+
+    /// Attach the authenticated tenant id (builder-style).
+    pub fn with_tenant(mut self, tenant: Option<String>) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    /// The server's hello reply. Without a tenant this is exactly the
+    /// legacy `{"ok":true,"wire":W,"grants":true}` reply.
+    pub fn reply_json(&self) -> Json {
+        let mut pairs = vec![
+            ("wire", Json::num(self.wire as f64)),
+            ("grants", Json::Bool(self.grants)),
+        ];
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", Json::str(t)));
+        }
+        ok(pairs)
+    }
+
+    /// Parse a server's hello reply (client side).
+    pub fn from_reply(resp: &Json) -> Self {
+        Session {
+            wire: resp.get("wire").as_u64().unwrap_or(1) as u8,
+            grants: resp.get("grants").as_bool().unwrap_or(false),
+            tenant: resp.get("tenant").as_str().map(String::from),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // binary (v2) batch messages
 // ---------------------------------------------------------------------------
@@ -806,5 +959,62 @@ mod tests {
         assert_eq!(negotiate(1, 4), 1);
         // Degenerate hellos never negotiate below v1.
         assert_eq!(negotiate(0, 4), 1);
+    }
+
+    #[test]
+    fn tokenless_hello_request_matches_legacy_bytes() {
+        // The consolidation must not move a byte for old peers: a
+        // token-less client hello is exactly the hand-built legacy
+        // request, and a tenant-less server reply is exactly the legacy
+        // reply.
+        let legacy_req = Json::obj(vec![
+            ("op", Json::str("hello")),
+            ("max_wire", Json::num(4.0)),
+        ]);
+        assert_eq!(
+            to_string(&HelloFeatures::client(4, None).request_json()),
+            to_string(&legacy_req)
+        );
+        let legacy_rsp = ok(vec![("wire", Json::num(4.0)), ("grants", Json::Bool(true))]);
+        let sess = HelloFeatures::negotiate(
+            &HelloFeatures::client(4, None),
+            &HelloFeatures::client(4, None),
+        );
+        assert_eq!(to_string(&sess.reply_json()), to_string(&legacy_rsp));
+    }
+
+    #[test]
+    fn hello_features_roundtrip_with_token_and_tenant() {
+        let offer = HelloFeatures::client(5, Some("secret".into()));
+        let parsed = HelloFeatures::from_request(&offer.request_json());
+        assert_eq!(parsed, offer);
+        let sess = HelloFeatures::negotiate(&offer, &HelloFeatures::client(5, None))
+            .with_tenant(Some("alice".into()));
+        assert_eq!(sess.wire, 5);
+        assert!(sess.grants);
+        let back = Session::from_reply(&sess.reply_json());
+        assert_eq!(back, sess);
+        assert_eq!(back.tenant.as_deref(), Some("alice"));
+    }
+
+    #[test]
+    fn negotiate_features_takes_lower_wire() {
+        let sess = HelloFeatures::negotiate(
+            &HelloFeatures::client(3, None),
+            &HelloFeatures::client(5, None),
+        );
+        assert_eq!(sess.wire, 3);
+        assert_eq!(Session::legacy().wire, 1);
+        assert!(!Session::legacy().grants);
+    }
+
+    #[test]
+    fn err_code_rides_alongside_the_message() {
+        let e = err_code("bad token", ERR_CODE_AUTH);
+        assert_eq!(e.get("ok").as_bool(), Some(false));
+        assert_eq!(e.get("error").as_str(), Some("bad token"));
+        assert_eq!(e.get("code").as_str(), Some(ERR_CODE_AUTH));
+        // Bare errors carry no code field at all (legacy shape).
+        assert_eq!(err("boom").get("code").as_str(), None);
     }
 }

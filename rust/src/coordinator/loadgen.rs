@@ -41,10 +41,11 @@ use crate::broker::client::BrokerClient;
 use crate::broker::core::{Broker, BrokerConfig, SchedMode};
 use crate::broker::federation::{FederatedClient, FederationConfig};
 use crate::broker::net::BrokerServer;
+use crate::broker::tenant::{TenantConfig, TenantSpec};
 use crate::broker::wire::{self, BinMsg};
 use crate::metrics::series::Series;
 use crate::net::{ClientNetMode, ServeConfig};
-use crate::task::{ControlMsg, Payload, TaskEnvelope};
+use crate::task::{ser, ControlMsg, Payload, TaskEnvelope};
 use crate::util::json::{to_string, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::percentile;
@@ -1617,6 +1618,415 @@ pub fn write_incast_outputs(
     Ok(())
 }
 
+/// Tenant fairness section configuration (`--tenants W1,W2,...`): one
+/// auth-on SRWF broker carrying one tenant per listed weight, every
+/// tenant flooding its own (namespaced) queue while its fetchers drain
+/// it. The section measures what share of deliveries each tenant
+/// obtained under full contention — the weighted fair-share claim — and
+/// what the flood does to the weakest tenant's grant tail.
+#[derive(Debug, Clone)]
+pub struct TenantFairnessConfig {
+    /// Fair-share weight per tenant (tenant `t{i}` gets `weights[i]`).
+    pub weights: Vec<u32>,
+    /// Fetcher connections per tenant.
+    pub fetchers: usize,
+    /// Deliveries requested per fetch round. Prefetch stays 0 so every
+    /// delivery is a fresh broker-side grant decision — the thing the
+    /// fairness gate arbitrates.
+    pub window: usize,
+    /// Tasks per publish batch (producers run open-loop, far ahead of
+    /// delivery, so every queue stays backlogged through the window).
+    pub batch: usize,
+    /// Per-tenant enqueue cap per phase (bounds runtime).
+    pub max_tasks: u64,
+    /// Contention measurement window (ms).
+    pub measure_ms: u64,
+    /// Unloaded baseline window (ms): the victim tenant alone.
+    pub baseline_ms: u64,
+    /// Payload padding bytes per task.
+    pub payload: usize,
+    /// Reactor blocking-pool size.
+    pub net_threads: usize,
+}
+
+impl Default for TenantFairnessConfig {
+    fn default() -> Self {
+        Self {
+            weights: vec![2, 1, 1],
+            fetchers: 2,
+            window: 4,
+            batch: 128,
+            max_tasks: 200_000,
+            measure_ms: 1_500,
+            baseline_ms: 600,
+            payload: 64,
+            net_threads: 4,
+        }
+    }
+}
+
+impl TenantFairnessConfig {
+    /// Shrink the windows to seconds (CI's `MERLIN_BENCH_QUICK=1`).
+    pub fn quicken(&mut self) {
+        self.measure_ms = self.measure_ms.min(600);
+        self.baseline_ms = self.baseline_ms.min(300);
+        self.max_tasks = self.max_tasks.min(40_000);
+    }
+}
+
+/// One tenant's flood-phase outcome.
+#[derive(Debug, Clone)]
+pub struct TenantCell {
+    /// Tenant id (`t0` … in weight-list order).
+    pub id: String,
+    /// Configured fair-share weight.
+    pub weight: u32,
+    /// `weight / sum(weights)` — the share the scheduler owes.
+    pub weight_share: f64,
+    /// Tasks the tenant's producer enqueued during the flood.
+    pub enqueued: u64,
+    /// Deliveries the tenant's fetchers acked during the flood.
+    pub acked: u64,
+    /// `acked / total acked` — the share the tenant actually got.
+    pub share: f64,
+    /// Non-empty fetch round-trip ("grant") percentiles during the
+    /// flood (µs).
+    pub fetch_p50_us: f64,
+    /// See [`TenantCell::fetch_p50_us`].
+    pub fetch_p99_us: f64,
+    /// Broker-side lifetime publish counter afterwards (the `tenants`
+    /// side-op view; includes the baseline phase for the victim).
+    pub published: u64,
+    /// Broker-side quota denials (0 unless the tenant was rate-limited).
+    pub quota_denied: u64,
+}
+
+/// The machine-checked fairness verdict.
+#[derive(Debug, Clone)]
+pub struct TenantGate {
+    /// Largest `|share - weight_share|` across tenants.
+    pub max_share_err: f64,
+    /// `max_share_err <= 0.10`.
+    pub pass_shares: bool,
+    /// The weakest (lowest-weight) tenant, whose grant tail the flood
+    /// gate watches.
+    pub victim: String,
+    /// Victim grant p99 with the broker all to itself (µs).
+    pub victim_unloaded_p99_us: f64,
+    /// Victim grant p99 under the full flood (µs).
+    pub victim_flood_p99_us: f64,
+    /// `flood / unloaded`.
+    pub victim_ratio: f64,
+    /// `victim_ratio <= 2.0`.
+    pub pass_victim: bool,
+}
+
+/// Per-tenant outcome of one fairness phase.
+#[derive(Default)]
+struct TenantPhase {
+    enqueued: u64,
+    acked: u64,
+    fetch_lat: Vec<f64>,
+}
+
+/// Run one phase: each active tenant gets one open-loop producer plus
+/// `cfg.fetchers` fetcher connections, every connection authenticated
+/// with that tenant's token, all publishing to and draining the same
+/// *public* queue name — isolation comes entirely from the per-tenant
+/// namespace. Runs for `window_ms`, then stops and reports per-tenant
+/// counts.
+fn run_tenant_phase(
+    addr: &str,
+    tokens: &[String],
+    active: &[usize],
+    cfg: &TenantFairnessConfig,
+    window_ms: u64,
+) -> Vec<TenantPhase> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut producers = Vec::new();
+    let mut fetchers = Vec::new();
+    for &t in active {
+        {
+            let addr = addr.to_string();
+            let token = tokens[t].clone();
+            let stop = stop.clone();
+            let cfg = cfg.clone();
+            producers.push((
+                t,
+                std::thread::spawn(move || {
+                    let mut c = BrokerClient::connect_with(&addr, ser::WIRE_V5, Some(&token))
+                        .expect("connect tenant producer");
+                    let mut sent = 0u64;
+                    let mut batch: Vec<TaskEnvelope> = Vec::with_capacity(cfg.batch);
+                    while !stop.load(Ordering::Relaxed) && sent < cfg.max_tasks {
+                        batch.clear();
+                        for i in 0..cfg.batch as u64 {
+                            batch.push(TaskEnvelope::new(
+                                "tf.q",
+                                Payload::Control(ControlMsg::Ping {
+                                    token: payload_token(sent + i, 0, cfg.payload),
+                                }),
+                            ));
+                        }
+                        match c.publish_batch(&batch) {
+                            Ok(()) => sent += batch.len() as u64,
+                            // Quota denial (a rate-limited tenant): back
+                            // off a beat and keep flooding — the broker's
+                            // counters record the denial.
+                            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                        }
+                    }
+                    sent
+                }),
+            ));
+        }
+        for _ in 0..cfg.fetchers {
+            let addr = addr.to_string();
+            let token = tokens[t].clone();
+            let stop = stop.clone();
+            let window = cfg.window;
+            fetchers.push((
+                t,
+                std::thread::spawn(move || {
+                    let mut c = BrokerClient::connect_with(&addr, ser::WIRE_V5, Some(&token))
+                        .expect("connect tenant fetcher");
+                    let mut acked = 0u64;
+                    let mut lat = Vec::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        let t0 = Instant::now();
+                        let got = c.fetch_n(&["tf.q"], 0, 20, window).unwrap_or_default();
+                        if got.is_empty() {
+                            continue;
+                        }
+                        lat.push(t0.elapsed().as_micros() as f64);
+                        let tags: Vec<u64> = got.iter().map(|d| d.tag).collect();
+                        if let Ok(n) = c.ack_batch(&tags) {
+                            acked += n;
+                        }
+                    }
+                    (acked, lat)
+                }),
+            ));
+        }
+    }
+    std::thread::sleep(Duration::from_millis(window_ms));
+    stop.store(true, Ordering::Relaxed);
+    let mut phases: Vec<TenantPhase> =
+        (0..tokens.len()).map(|_| TenantPhase::default()).collect();
+    for (t, h) in producers {
+        phases[t].enqueued += h.join().expect("tenant producer panicked");
+    }
+    for (t, h) in fetchers {
+        let (acked, lat) = h.join().expect("tenant fetcher panicked");
+        phases[t].acked += acked;
+        phases[t].fetch_lat.extend(lat);
+    }
+    phases
+}
+
+/// The tenant fairness section: one auth-on SRWF broker, one tenant per
+/// weight. Phase 1 (baseline): the weakest tenant runs alone — its
+/// unloaded grant tail. Phase 2 (flood): every tenant floods and drains
+/// concurrently — delivered shares vs weight shares, and the victim's
+/// tail under contention.
+pub fn run_tenants(cfg: &TenantFairnessConfig) -> (Vec<TenantCell>, TenantGate) {
+    assert!(!cfg.weights.is_empty() && cfg.fetchers > 0 && cfg.window > 0);
+    let ids: Vec<String> = (0..cfg.weights.len()).map(|i| format!("t{i}")).collect();
+    let tokens: Vec<String> = (0..cfg.weights.len()).map(|i| format!("tok{i}")).collect();
+    let specs: Vec<TenantSpec> = ids
+        .iter()
+        .zip(&tokens)
+        .zip(&cfg.weights)
+        .map(|((id, tok), w)| TenantSpec::new(id.clone()).token(tok.clone()).weight(*w))
+        .collect();
+    let broker = Broker::new(BrokerConfig {
+        sched: SchedMode::Srwf,
+        tenants: TenantConfig {
+            auth: true,
+            tenants: specs,
+        },
+        ..BrokerConfig::default()
+    });
+    let mut serve_cfg = if crate::net::reactor_available() {
+        ServeConfig::reactor()
+    } else {
+        ServeConfig::threaded()
+    };
+    serve_cfg.net_threads = cfg.net_threads;
+    serve_cfg.max_connections = cfg.weights.len() * (cfg.fetchers + 1) + 16;
+    let server = BrokerServer::serve_with(broker, "127.0.0.1:0", serve_cfg)
+        .expect("bind tenants broker");
+    let addr = server.addr.to_string();
+
+    // The victim: the weakest tenant (first minimum). Its unloaded
+    // grant tail is the baseline the flood gate compares against.
+    let victim = cfg
+        .weights
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, w)| **w)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+
+    let baseline = run_tenant_phase(&addr, &tokens, &[victim], cfg, cfg.baseline_ms);
+    let victim_unloaded_p99_us = percentile(&baseline[victim].fetch_lat, 99.0);
+
+    let all: Vec<usize> = (0..cfg.weights.len()).collect();
+    let flood = run_tenant_phase(&addr, &tokens, &all, cfg, cfg.measure_ms);
+
+    // Broker-side lifetime counters — the `tenants` side-op is the
+    // authoritative per-tenant ledger the CSV rows cross-reference.
+    let usage = BrokerClient::connect_with(&addr, ser::WIRE_V5, Some(&tokens[0]))
+        .ok()
+        .and_then(|mut c| c.tenants().ok())
+        .unwrap_or_default();
+    server.shutdown_hard();
+
+    let total_weight: f64 = cfg.weights.iter().map(|w| f64::from(*w)).sum();
+    let total_acked: f64 = flood.iter().map(|p| p.acked as f64).sum();
+    let cells: Vec<TenantCell> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let u = usage.iter().find(|u| u.id == *id);
+            TenantCell {
+                id: id.clone(),
+                weight: cfg.weights[i],
+                weight_share: f64::from(cfg.weights[i]) / total_weight.max(1.0),
+                enqueued: flood[i].enqueued,
+                acked: flood[i].acked,
+                share: flood[i].acked as f64 / total_acked.max(1.0),
+                fetch_p50_us: percentile(&flood[i].fetch_lat, 50.0),
+                fetch_p99_us: percentile(&flood[i].fetch_lat, 99.0),
+                published: u.map(|u| u.published).unwrap_or(0),
+                quota_denied: u.map(|u| u.quota_denied).unwrap_or(0),
+            }
+        })
+        .collect();
+    let max_share_err = cells
+        .iter()
+        .map(|c| (c.share - c.weight_share).abs())
+        .fold(0.0, f64::max);
+    let victim_flood_p99_us = cells[victim].fetch_p99_us;
+    let victim_ratio = victim_flood_p99_us / victim_unloaded_p99_us.max(1e-9);
+    let gate = TenantGate {
+        max_share_err,
+        pass_shares: max_share_err <= 0.10,
+        victim: ids[victim].clone(),
+        victim_unloaded_p99_us,
+        victim_flood_p99_us,
+        victim_ratio,
+        pass_victim: victim_ratio <= 2.0,
+    };
+    (cells, gate)
+}
+
+/// Render the tenant fairness section as an aligned table.
+pub fn tenants_series(cells: &[TenantCell]) -> Series {
+    let mut s = Series::new(
+        "tenant fairness: delivered share vs weight share under flood",
+        "tenant",
+        &[
+            "weight",
+            "weight_share",
+            "acked",
+            "share",
+            "fetch_p50_us",
+            "fetch_p99_us",
+        ],
+    );
+    for (i, c) in cells.iter().enumerate() {
+        s.push(
+            i as f64,
+            vec![
+                f64::from(c.weight),
+                c.weight_share,
+                c.acked as f64,
+                c.share,
+                c.fetch_p50_us,
+                c.fetch_p99_us,
+            ],
+        );
+    }
+    s
+}
+
+/// One tenant cell as a JSON object (`BENCH_tenants.json` rows).
+pub fn tenant_cell_json(c: &TenantCell) -> Json {
+    Json::obj(vec![
+        ("id", Json::str(&c.id)),
+        ("weight", Json::num(f64::from(c.weight))),
+        ("weight_share", Json::num(c.weight_share)),
+        ("enqueued", Json::num(c.enqueued as f64)),
+        ("acked", Json::num(c.acked as f64)),
+        ("share", Json::num(c.share)),
+        ("fetch_p50_us", Json::num(c.fetch_p50_us)),
+        ("fetch_p99_us", Json::num(c.fetch_p99_us)),
+        ("published", Json::num(c.published as f64)),
+        ("quota_denied", Json::num(c.quota_denied as f64)),
+    ])
+}
+
+/// Human-readable tenant fairness summary.
+pub fn render_tenants(cells: &[TenantCell], gate: &TenantGate) -> String {
+    let mut out =
+        String::from("tenant fairness (every tenant flooding, weighted SRWF grants):\n");
+    for c in cells {
+        out.push_str(&format!(
+            "  {:>4} w{:>2}: {:>7} acked -> share {:.2} (owed {:.2}), fetch p50/p99 \
+             {:.0}/{:.0} us, {} published, {} quota denied\n",
+            c.id,
+            c.weight,
+            c.acked,
+            c.share,
+            c.weight_share,
+            c.fetch_p50_us,
+            c.fetch_p99_us,
+            c.published,
+            c.quota_denied,
+        ));
+    }
+    out.push_str(&format!(
+        "  gate: max share error = {:.3} ({}), victim {} grant p99 {:.0} -> {:.0} us = \
+         {:.2}x ({})\n",
+        gate.max_share_err,
+        if gate.pass_shares { "pass <= 0.10" } else { "FAIL > 0.10" },
+        gate.victim,
+        gate.victim_unloaded_p99_us,
+        gate.victim_flood_p99_us,
+        gate.victim_ratio,
+        if gate.pass_victim { "pass <= 2.0" } else { "FAIL > 2.0" },
+    ));
+    out
+}
+
+/// Write `results/<stem>.{csv,json}` plus `BENCH_tenants.json` — the
+/// multi-tenant fairness trajectory point CI gates on in full mode.
+pub fn write_tenants_outputs(
+    cells: &[TenantCell],
+    gate: &TenantGate,
+    quick: bool,
+    stem: &str,
+) -> std::io::Result<()> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    tenants_series(cells).save_csv(dir, stem)?;
+    let out = Json::obj(vec![
+        ("quick", Json::Bool(quick)),
+        ("cells", Json::arr(cells.iter().map(tenant_cell_json).collect())),
+        ("max_share_err", Json::num(gate.max_share_err)),
+        ("pass_shares", Json::Bool(gate.pass_shares)),
+        ("victim", Json::str(&gate.victim)),
+        ("victim_unloaded_p99_us", Json::num(gate.victim_unloaded_p99_us)),
+        ("victim_flood_p99_us", Json::num(gate.victim_flood_p99_us)),
+        ("victim_ratio", Json::num(gate.victim_ratio)),
+        ("pass_victim", Json::Bool(gate.pass_victim)),
+    ]);
+    std::fs::write(dir.join(format!("{stem}.json")), to_string(&out))?;
+    std::fs::write("BENCH_tenants.json", to_string(&out))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1751,6 +2161,38 @@ mod tests {
             "{cells:?}"
         );
         assert!(gate.tail_ratio > 0.0 && gate.throughput_ratio > 0.0);
+    }
+
+    #[test]
+    fn tenants_tiny_section_reports_cells_and_gate() {
+        let cfg = TenantFairnessConfig {
+            weights: vec![2, 1],
+            fetchers: 1,
+            window: 2,
+            batch: 32,
+            max_tasks: 4_000,
+            measure_ms: 250,
+            baseline_ms: 120,
+            payload: 16,
+            net_threads: 2,
+        };
+        let (cells, gate) = run_tenants(&cfg);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].id, "t0");
+        assert_eq!(cells[1].weight, 1);
+        // Both tenants made progress through their own namespaces and
+        // the broker's per-tenant ledger saw every publish.
+        for c in &cells {
+            assert!(c.enqueued > 0, "{c:?}");
+            assert!(c.acked > 0, "{c:?}");
+            assert!(c.published >= c.enqueued, "{c:?}");
+            assert_eq!(c.quota_denied, 0, "{c:?}");
+        }
+        assert_eq!(gate.victim, "t1");
+        assert!(gate.victim_unloaded_p99_us > 0.0);
+        // Shares always partition the drain, whatever the timing.
+        let total: f64 = cells.iter().map(|c| c.share).sum();
+        assert!((total - 1.0).abs() < 1e-6, "{cells:?}");
     }
 
     #[test]

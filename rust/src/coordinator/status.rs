@@ -43,13 +43,29 @@ pub fn consumer_lease_json(c: &ConsumerLease) -> Json {
 }
 
 /// One federation member's health as a JSON object (shared by the
-/// in-process and remote status paths).
+/// in-process and remote status paths). The `error` field appears only
+/// for members whose latest fan-out contribution failed — that is how a
+/// partially-aggregated report says which member it is missing.
 pub fn member_health_json(m: &MemberHealth) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("name", Json::str(m.name.as_str())),
         ("up", Json::Bool(m.up)),
         ("errors", Json::num(m.errors as f64)),
-    ])
+    ];
+    if let Some(e) = &m.error {
+        pairs.push(("error", Json::str(e.as_str())));
+    }
+    Json::obj(pairs)
+}
+
+/// Whether a tenant-usage report is worth a section of its own: a
+/// single-tenant broker synthesizes one `default` row from its global
+/// counters, which would only duplicate the totals section.
+fn multi_tenant(tenants: &[crate::broker::tenant::TenantUsage]) -> bool {
+    tenants.len() > 1
+        || tenants
+            .first()
+            .is_some_and(|t| t.id != crate::broker::tenant::DEFAULT_TENANT)
 }
 
 /// The broker-side `totals`/`durability`/`scheduler`/`leases` sections
@@ -62,7 +78,7 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
     let sched = broker.sched_stats();
     let leases = broker.lease_stats();
     let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
-    vec![
+    let mut sections = vec![
         (
             "totals",
             Json::obj(vec![
@@ -100,7 +116,18 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
                 ("consumers", Json::arr(consumers)),
             ]),
         ),
-    ]
+    ];
+    let tenants = broker.tenant_stats();
+    if multi_tenant(&tenants) {
+        // Rows go through the same shared field list the wire uses, so
+        // the status report and the `tenants` side-op cannot drift.
+        let rows: Vec<Json> = tenants
+            .iter()
+            .map(crate::broker::sideops::tenant_usage_json)
+            .collect();
+        sections.push(("tenants", Json::arr(rows)));
+    }
+    sections
 }
 
 /// The feature-store dataset section: totals plus per-study row counts,
@@ -157,11 +184,15 @@ pub fn status_report_full(
         ));
         for m in &members {
             out.push_str(&format!(
-                "  {}: {} ({} transport errors)\n",
+                "  {}: {} ({} transport errors)",
                 m.name,
                 if m.up { "up" } else { "DOWN" },
                 m.errors
             ));
+            if let Some(e) = &m.error {
+                out.push_str(&format!(" [last error: {e}]"));
+            }
+            out.push('\n');
         }
     }
     out.push_str("queues:\n");
@@ -186,6 +217,22 @@ pub fn status_report_full(
             leases.expired,
             leases.consumers.len()
         ));
+    }
+    let tenants = broker.tenant_stats();
+    if multi_tenant(&tenants) {
+        out.push_str("tenants:\n");
+        for t in &tenants {
+            out.push_str(&format!(
+                "  {}: weight={} published={} acked={} queued={} ({} bytes) denied={}\n",
+                t.id,
+                t.weight,
+                t.published,
+                t.acked,
+                t.queued_tasks,
+                t.queued_bytes,
+                t.quota_denied
+            ));
+        }
     }
     if !studies.is_empty() {
         out.push_str("studies:\n");

@@ -88,7 +88,7 @@ USAGE:
   merlin run-workers --broker HOST:PORT [--broker HOST:PORT ...]
                      --queues q1,q2 [-c N] [--idle-ms N] [--lease-ms N]
                      [--backend HOST:PORT] [--objective N]
-                     [--client-net auto|mutex|mux]
+                     [--client-net auto|mutex|mux] [--auth-token TOKEN]
       Connect N workers to a remote broker (the multi-allocation shape).
       Repeat --broker to consume a whole federation: every worker draws
       from each member that owns one of its queues (rendezvous-hash
@@ -101,14 +101,17 @@ USAGE:
       federation transport: the multiplexing pool (Linux; the default
       where available — all N workers share one wire-v4 connection per
       member, requests pipelined by correlation id) or the portable
-      mutexed client (one connection per member per worker). Also
-      accepted by status/purge and every other federated command.
+      mutexed client (one connection per member per worker). Against an
+      auth-on broker, --auth-token presents the tenant token at hello
+      (work runs in that tenant's namespace, under its quotas and
+      fair-share weight). Both flags are also accepted by status/purge
+      and every other federated command.
 
   merlin serve-broker [--addr 127.0.0.1:7777] [--wal-dir DIR]
                       [--fsync always|never|interval:MS] [--snapshot-every N]
                       [--lease-ms N] [--net auto|threaded|reactor]
                       [--max-connections N] [--idle-timeout-ms N]
-                      [--net-threads N]
+                      [--net-threads N] [--auth-tokens FILE]
       Run the standalone RabbitMQ-analog server. With --wal-dir the
       broker is durable: queue state is write-ahead logged + snapshotted
       under DIR and recovered on restart (see docs/OPERATIONS.md). With
@@ -119,20 +122,29 @@ USAGE:
       thread-per-connection fallback. --max-connections caps the fd
       table and --idle-timeout-ms sweeps silent connections (reactor
       mode; see docs/OPERATIONS.md "Network plane tuning").
+      --auth-tokens turns the broker multi-tenant: each FILE line is
+      `<token> <tenant-id> [weight=N] [rate=N] [burst=N] [max-tasks=N]
+      [max-bytes=N]`; every connection must then present a token at
+      hello, queues live in per-tenant namespaces, publishes are rate-
+      and footprint-limited per tenant, and delivery shares follow the
+      weights (see docs/OPERATIONS.md "Multi-tenant operation").
       Federation members are plain serve-broker processes — start N of
       them and list all N addresses on every producer/worker/status call.
 
   merlin status --broker HOST:PORT [--broker HOST:PORT ...]
-      Print queue depths, totals, durability counters, and the
-      lease/liveness report as JSON — aggregated across every listed
-      federation member, with per-member health alongside.
+                [--auth-token TOKEN]
+      Print queue depths, totals, durability counters, the
+      lease/liveness report, and (multi-tenant brokers) per-tenant
+      usage as JSON — aggregated across every listed federation
+      member, with per-member health (including each member's last
+      aggregation error) alongside.
 
   merlin loadgen [--members N] [--producers N] [--workers N] [--steps N]
                  [--tasks N] [--batch N] [--zipf S] [--payload-min N]
                  [--payload-max N] [--lease-ms N] [--kill-at FRAC]
                  [--scale] [--connections N1,N2,...] [--incast W,Q]
                  [--budget-bytes N] [--net-threads N] [--mux-members N]
-                 [--quick] [--seed N]
+                 [--tenants W1,W2,...] [--quick] [--seed N]
       Open-loop stress harness: spin up N federated broker members
       in-process (real TCP + wire v2/v3) and drive them with producers x
       workers over S step queues. Reports throughput and enqueue /
@@ -165,6 +177,15 @@ USAGE:
       p999 exceeds 3x its own p50 or the full herd delivers less than
       90% of the baseline herd's throughput; every mode fails if any
       cell loses tasks.
+      --tenants W1,W2,... runs the multi-tenant fairness section
+      instead: one auth-on broker with one tenant per listed weight,
+      every tenant flooding and draining its own namespaced queue at
+      once. First the weakest tenant runs alone (the unloaded grant-tail
+      baseline), then all tenants contend. Writes BENCH_tenants.json +
+      results/loadgen_tenants.{{csv,json}}. Full mode fails if any
+      tenant's delivered share lands more than 10 points off its weight
+      share, or the weakest tenant's grant p99 under the flood exceeds
+      2x its unloaded baseline.
 
   merlin serve-backend [--addr 127.0.0.1:7778] [--features-dir DIR]
                        [--features-shards N] [--fsync always|never|interval:MS]
@@ -251,10 +272,11 @@ fn client_net_from_flags(args: &[String]) -> Result<merlin::net::ClientNetMode, 
     }
 }
 
-/// Federation config from CLI flags (currently just `--client-net`).
+/// Federation config from CLI flags (`--client-net`, `--auth-token`).
 fn federation_config_from_flags(args: &[String]) -> Result<FederationConfig, i32> {
     Ok(FederationConfig {
         client_net: client_net_from_flags(args)?,
+        auth_token: flag(args, "--auth-token"),
         ..FederationConfig::default()
     })
 }
@@ -862,6 +884,7 @@ fn tcp_worker_loop(
         }
         idle = 0;
         let mut acks: Vec<u64> = Vec::with_capacity(batch.len());
+        let mut sim_us = 0u64;
         let mut stop = false;
         let mut batch = batch.into_iter();
         for d in batch.by_ref() {
@@ -906,6 +929,7 @@ fn tcp_worker_loop(
                             _ => {}
                         }
                     }
+                    sim_us += rows.iter().map(|r| r.sim_us).sum::<u64>();
                     if let (Some(sink), false) = (&results, rows.is_empty()) {
                         use merlin::data::ResultSink;
                         let batch = merlin::data::ResultBatch::from_rows(
@@ -932,6 +956,12 @@ fn tcp_worker_loop(
             }
         }
         fed.ack_batch(&acks).ok();
+        if sim_us > 0 {
+            // Per-window usage credit: the broker folds it into this
+            // connection's tenant counters (`merlin status` tenants
+            // section).
+            fed.report_usage(sim_us);
+        }
         if stop {
             // Nack-free requeue (no retry cost) of the window's
             // unprocessed remainder, instead of dropping it and relying
@@ -951,10 +981,29 @@ fn cmd_serve_broker(args: &[String]) -> i32 {
         Ok(c) => c,
         Err(code) => return code,
     };
-    let cfg = merlin::broker::BrokerConfig {
+    let mut cfg = merlin::broker::BrokerConfig {
         default_lease_ms: flag_u64(args, "--lease-ms", 0),
         ..Default::default()
     };
+    if let Some(path) = flag(args, "--auth-tokens") {
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 1;
+            }
+        };
+        match merlin::broker::parse_token_file(&text) {
+            Ok(tenants) => {
+                println!("auth on: {} tenant(s) from {path}", tenants.tenants.len());
+                cfg.tenants = tenants;
+            }
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        }
+    }
     let broker = match flag(args, "--wal-dir") {
         Some(dir) => {
             let mut dur = merlin::broker::DurabilityConfig::new(&dir);
@@ -1116,6 +1165,55 @@ fn cmd_loadgen(args: &[String]) -> i32 {
     let quick = has_flag(args, "--quick") || merlin::util::bench_quick();
     if quick {
         cfg.quicken();
+    }
+    if let Some(spec) = flag(args, "--tenants") {
+        // `--tenants W1,W2,...`: one auth-on broker, one tenant per
+        // weight — the weighted fair-share section.
+        let weights: Vec<u32> = spec
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|w| *w > 0)
+            .collect();
+        if weights.is_empty() {
+            eprintln!("bad --tenants {spec:?} (expect W1,W2,... e.g. 2,1,1)");
+            return 2;
+        }
+        let mut tcfg = loadgen::TenantFairnessConfig::default();
+        if quick {
+            tcfg.quicken();
+        }
+        tcfg.weights = weights;
+        tcfg.net_threads = flag_u64(args, "--net-threads", tcfg.net_threads as u64) as usize;
+        println!(
+            "loadgen tenant-fairness section: weights {:?}, {} fetchers/tenant, window {} \
+             ({} ms flood, {} ms baseline)\n",
+            tcfg.weights, tcfg.fetchers, tcfg.window, tcfg.measure_ms, tcfg.baseline_ms
+        );
+        let (cells, gate) = loadgen::run_tenants(&tcfg);
+        print!("{}", loadgen::render_tenants(&cells, &gate));
+        println!("\n{}", loadgen::tenants_series(&cells).table());
+        if let Err(e) = loadgen::write_tenants_outputs(&cells, &gate, quick, "loadgen_tenants") {
+            eprintln!("write results: {e}");
+        }
+        // The fairness gates are full-mode claims; quick smoke runs on
+        // starved CI cores report the ratios without failing.
+        if !quick {
+            if !gate.pass_shares {
+                eprintln!(
+                    "FAIL: tenant delivered share off its weight share by {:.3} (> 0.10)",
+                    gate.max_share_err
+                );
+                return 1;
+            }
+            if !gate.pass_victim {
+                eprintln!(
+                    "FAIL: victim grant p99 under flood is {:.2}x unloaded (> 2.0)",
+                    gate.victim_ratio
+                );
+                return 1;
+            }
+        }
+        return 0;
     }
     if let Some(spec) = flag(args, "--incast") {
         // `--incast W,Q`: W fetcher connections over Q queues against

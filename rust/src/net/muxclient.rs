@@ -55,7 +55,7 @@ use std::time::{Duration, Instant};
 
 use super::reactor::{new_eventfd, sys, Epoll};
 use crate::broker::client::BrokerClient;
-use crate::broker::wire;
+use crate::broker::wire::{self, Session};
 
 /// epoll token for the wakeup eventfd (member tokens are their index).
 const TOK_WAKE: u64 = u64::MAX - 1;
@@ -145,11 +145,10 @@ impl Waiter {
 /// attach).
 struct MemberConn {
     stream: TcpStream,
-    /// Negotiated wire version (≥ 3; ≥ 4 enables pipelining).
-    wire: u8,
-    /// Whether the member's hello advertised grant-based delivery
-    /// (receiver budgets may be sent in `PopN`).
-    grants: bool,
+    /// The member's negotiated hello session (wire ≥ 3; ≥ 4 enables
+    /// pipelining; `grants` gates budgeted `PopN`; `tenant` is the
+    /// identity the pool's credentials authenticated as).
+    session: Session,
     /// Read-accumulation buffer; reply frames are split off its front.
     inbuf: Vec<u8>,
     /// Encoded request frames not yet accepted by the socket.
@@ -169,7 +168,7 @@ struct MemberConn {
 
 impl MemberConn {
     fn pipelined(&self) -> bool {
-        self.wire >= 4
+        self.session.wire >= 4
     }
 
     fn in_flight(&self) -> usize {
@@ -416,14 +415,13 @@ impl MuxPool {
     /// on the mutexed fallback. An existing attachment for `idx` is
     /// killed first, failing its waiters.
     pub fn attach(&self, idx: usize, client: BrokerClient) -> std::io::Result<()> {
-        let wire_version = client.wire_version();
-        if wire_version < 3 {
+        let session = client.session().clone();
+        if session.wire < 3 {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::Unsupported,
-                format!("member speaks wire v{wire_version} (< 3): use the mutexed client"),
+                format!("member speaks wire v{} (< 3): use the mutexed client", session.wire),
             ));
         }
-        let grants = client.grants();
         let stream = client.into_stream()?;
         stream.set_nonblocking(true)?;
         let mut g = self.shared.members[idx].lock().unwrap();
@@ -432,8 +430,7 @@ impl MuxPool {
         self.shared.ep.add(stream.as_raw_fd(), events, idx as u64)?;
         *g = Some(MemberConn {
             stream,
-            wire: wire_version,
-            grants,
+            session,
             inbuf: Vec::new(),
             outbuf: Vec::new(),
             outpos: 0,
@@ -462,8 +459,8 @@ impl MuxPool {
         match self.shared.members[idx].lock().unwrap().as_ref() {
             Some(c) => MemberStats {
                 attached: true,
-                wire: c.wire,
-                grants: c.grants,
+                wire: c.session.wire,
+                grants: c.session.grants,
                 in_flight: c.in_flight(),
                 next_corr_id: c.next_id,
             },
@@ -602,7 +599,7 @@ mod tests {
 
     fn attach_member(pool: &MuxPool, idx: usize, addr: &str) {
         let client = BrokerClient::connect(addr).unwrap();
-        assert_eq!(client.wire_version(), 4);
+        assert_eq!(client.wire_version(), 5);
         pool.attach(idx, client).unwrap();
         let st = pool.member_stats(idx);
         assert!(st.grants, "modern member must advertise grants");

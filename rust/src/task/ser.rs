@@ -35,9 +35,14 @@ pub const WIRE_V2: u8 = 2;
 /// leading byte of a JSON document, so version sniffing is unambiguous.
 pub const V2_MAGIC: u8 = 0xB2;
 
-/// Highest connection wire version this build negotiates: correlated
-/// frames (request pipelining). See `broker::wire` for the header codec.
+/// Connection wire version adding correlated frames (request
+/// pipelining). See `broker::wire` for the header codec.
 pub const WIRE_V4: u64 = 4;
+
+/// Highest connection wire version this build negotiates: the
+/// authenticated session (hello may carry a token, the reply a tenant).
+/// Envelope bytes are still identical to v2.
+pub const WIRE_V5: u64 = 5;
 
 // NOTE: v1 numbers ride in JSON as f64, so integer fields are exact only
 // up to 2^53. Sample indices (<= 4e7 in the paper's largest study), retry

@@ -15,7 +15,7 @@ use merlin::backend::state::StateStore;
 use merlin::backend::store::Store;
 use merlin::broker::core::{Broker, BrokerConfig, SchedMode};
 use merlin::broker::net::BrokerServer;
-use merlin::broker::{FederatedClient, FederationConfig, TaskQueue};
+use merlin::broker::{FederatedClient, FederationConfig, TaskQueue, TenantConfig, TenantSpec};
 use merlin::coordinator::{orchestrate, resubmit_missing_trusting_broker, RunOptions};
 use merlin::dag::expand::wave_tasks;
 use merlin::spec::study::StudySpec;
@@ -23,10 +23,11 @@ use merlin::task::{ControlMsg, Payload, StepTemplate, TaskEnvelope, WorkSpec};
 use merlin::util::clock::RealClock;
 use merlin::worker::{run_pool_on, NullSimRunner, WorkerConfig};
 
-fn serve_members_sched(
+fn serve_members_tenants(
     n: usize,
     cfg: &merlin::net::ServeConfig,
     sched: SchedMode,
+    tenants: &TenantConfig,
 ) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
     let mut brokers = Vec::new();
     let mut servers = Vec::new();
@@ -34,6 +35,7 @@ fn serve_members_sched(
     for _ in 0..n {
         let broker = Broker::new(BrokerConfig {
             sched,
+            tenants: tenants.clone(),
             ..BrokerConfig::default()
         });
         let server =
@@ -43,6 +45,14 @@ fn serve_members_sched(
         servers.push(server);
     }
     (brokers, servers, addrs)
+}
+
+fn serve_members_sched(
+    n: usize,
+    cfg: &merlin::net::ServeConfig,
+    sched: SchedMode,
+) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+    serve_members_tenants(n, cfg, sched, &TenantConfig::default())
 }
 
 fn serve_members_with(
@@ -424,17 +434,22 @@ enum ClientMode {
 }
 
 impl ClientMode {
-    fn fed_config(self) -> FederationConfig {
+    fn fed_config(self, auth: bool) -> FederationConfig {
         FederationConfig {
             client_net: match self {
                 ClientMode::InProcess | ClientMode::Mutex => merlin::net::ClientNetMode::Mutex,
                 #[cfg(target_os = "linux")]
                 ClientMode::Mux => merlin::net::ClientNetMode::Mux,
             },
+            auth_token: auth.then(|| PARITY_TOKEN.to_string()),
             ..FederationConfig::default()
         }
     }
 }
+
+/// Token and tenant the auth-on parity cells run as.
+const PARITY_TOKEN: &str = "parity-secret";
+const PARITY_TENANT: &str = "acme";
 
 /// The wire-level assertions every server mode x client transport pair
 /// must pass identically: batch publish, status aggregation, windowed
@@ -449,16 +464,38 @@ impl ClientMode {
 /// counters must move exactly when grants are on. This is the
 /// invisibility contract — receiver-driven delivery changes tail
 /// behavior, never correctness or the wire surface old clients see.
-fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: bool) {
+///
+/// `auth` runs the identical suite against auth-required members, every
+/// handle presenting [`PARITY_TOKEN`] and operating inside the
+/// [`PARITY_TENANT`] namespace: authenticated sessions must change who
+/// the work is accounted to, never what any operation returns.
+fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: bool, auth: bool) {
     let sched = if grants { SchedMode::Srwf } else { SchedMode::Fifo };
-    let (brokers, servers, addrs) = serve_members_sched(2, &cfg, sched);
+    let tenants = if auth {
+        TenantConfig {
+            auth: true,
+            tenants: vec![TenantSpec::new(PARITY_TENANT).token(PARITY_TOKEN).weight(2)],
+        }
+    } else {
+        TenantConfig::default()
+    };
+    let (brokers, servers, addrs) = serve_members_tenants(2, &cfg, sched, &tenants);
     let connect = || match client {
         ClientMode::InProcess => {
             // Same Broker instances, no wire: the semantic baseline the
-            // two wire transports are held to.
-            FederatedClient::local(brokers.clone(), client.fed_config())
+            // two wire transports are held to. Under auth the handles
+            // are tenant-scoped exactly as a hello would scope them.
+            let members: Vec<Broker> = if auth {
+                brokers
+                    .iter()
+                    .map(|b| b.with_tenant(PARITY_TENANT).unwrap())
+                    .collect()
+            } else {
+                brokers.clone()
+            };
+            FederatedClient::local(members, client.fed_config(auth))
         }
-        _ => FederatedClient::connect(&addrs, client.fed_config()).unwrap(),
+        _ => FederatedClient::connect(&addrs, client.fed_config(auth)).unwrap(),
     };
     let fed = connect();
 
@@ -581,46 +618,167 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: 
 
 #[test]
 fn wire_parity_threaded_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, true);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, true, false);
 }
 
 #[test]
 fn wire_parity_threaded_mode_no_grants() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, false);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, false, false);
+}
+
+#[test]
+fn wire_parity_threaded_mode_auth() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::Mutex, true, true);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_reactor_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, true);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, true, false);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_reactor_mode_no_grants() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, false);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, false, false);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_reactor_mode_auth() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mutex, true, true);
 }
 
 #[test]
 fn wire_parity_in_process_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, true);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, true, false);
 }
 
 #[test]
 fn wire_parity_in_process_mode_no_grants() {
-    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, false);
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, false, false);
+}
+
+#[test]
+fn wire_parity_in_process_mode_auth() {
+    wire_parity_suite(merlin::net::ServeConfig::threaded(), ClientMode::InProcess, true, true);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_mux_mode() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, true);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, true, false);
 }
 
 #[cfg(target_os = "linux")]
 #[test]
 fn wire_parity_mux_mode_no_grants() {
-    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, false);
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, false, false);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_mux_mode_auth() {
+    wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, true, true);
+}
+
+/// Auth is a hard gate at the federation's front door: a token-less (or
+/// wrong-token) handle cannot connect to auth-required members at all
+/// (every hello is refused, so no member comes up), while the correct
+/// token brings the same fleet up instantly.
+#[test]
+fn federation_connect_requires_valid_token_when_auth_on() {
+    let tenants = TenantConfig {
+        auth: true,
+        tenants: vec![TenantSpec::new(PARITY_TENANT).token(PARITY_TOKEN)],
+    };
+    let (_brokers, servers, addrs) = serve_members_tenants(
+        2,
+        &merlin::net::ServeConfig::default(),
+        SchedMode::default(),
+        &tenants,
+    );
+    for bad in [None, Some("wrong-token")] {
+        let cfg = FederationConfig {
+            auth_token: bad.map(String::from),
+            ..FederationConfig::default()
+        };
+        let err = FederatedClient::connect(&addrs, cfg)
+            .err()
+            .expect("auth-on members must refuse this token");
+        assert!(
+            err.to_string().contains("member reachable"),
+            "every member refused: {err}"
+        );
+    }
+    // The same addresses with the right token work immediately.
+    let cfg = FederationConfig {
+        auth_token: Some(PARITY_TOKEN.into()),
+        ..FederationConfig::default()
+    };
+    let fed = FederatedClient::connect(&addrs, cfg).unwrap();
+    assert!(fed.member_health().iter().all(|m| m.up));
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+/// The aggregation-bugfix contract: a member that errors mid-fan-out is
+/// skipped, not fatal — the survivors' data still comes back, and the
+/// skipped member's failure is visible in [`merlin::broker::MemberHealth::error`]
+/// instead of being silently dropped.
+#[test]
+fn aggregation_surfaces_member_error_with_partial_results() {
+    let (_brokers, servers, addrs) = serve_members(2);
+    let mut servers: Vec<Option<BrokerServer>> = servers.into_iter().map(Some).collect();
+    let fed = FederatedClient::connect(&addrs, FederationConfig::default()).unwrap();
+
+    // One queue pinned on each member, one task in each.
+    let mut chosen: Vec<Option<String>> = vec![None, None];
+    let mut q = 0usize;
+    while chosen.iter().any(Option::is_none) {
+        let name = format!("pa.q{q}");
+        q += 1;
+        let owner = fed.owner_of(&name).expect("live owner");
+        if chosen[owner].is_none() {
+            chosen[owner] = Some(name);
+        }
+    }
+    let tasks: Vec<TaskEnvelope> = chosen
+        .iter()
+        .flatten()
+        .map(|q| {
+            TaskEnvelope::new(
+                q.clone(),
+                Payload::Control(ControlMsg::Ping { token: q.clone() }),
+            )
+        })
+        .collect();
+    fed.publish_batch(tasks).unwrap();
+    assert_eq!(fed.totals().published, 2);
+
+    // Member 0 dies hard. down_after is 3, so the next aggregation sees
+    // a transport error against a member still considered up — exactly
+    // the mid-fan-out case that used to vanish without a trace.
+    servers[0].take().unwrap().shutdown_hard();
+    let stats = fed.stats_all();
+    let survivor_queue = chosen[1].clone().unwrap();
+    assert_eq!(
+        stats.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        vec![survivor_queue.as_str()],
+        "partial aggregation returns exactly the survivor's queues"
+    );
+    assert_eq!(fed.totals().published, 1, "survivor's totals still sum");
+    let health = fed.member_health();
+    assert!(
+        health[0].error.is_some(),
+        "the skipped member's failure must be surfaced: {health:?}"
+    );
+    assert!(health[0].up, "one error is below down_after — not down-marked yet");
+    assert!(health[1].up && health[1].error.is_none());
+    for server in servers.into_iter().flatten() {
+        server.shutdown();
+    }
 }
 
 /// One-connection-at-a-time TCP delay proxy: every accepted connection

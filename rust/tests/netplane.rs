@@ -429,7 +429,7 @@ fn mux_pool_member_death_fails_waiters_without_crosstalk() {
     pool.attach(0, BrokerClient::connect(&replacement.addr.to_string()).unwrap()).unwrap();
     let fresh = pool.member_stats(0);
     assert!(fresh.attached);
-    assert_eq!(fresh.wire, 4, "replacement negotiated v4");
+    assert_eq!(fresh.wire, 5, "replacement negotiated v5");
     assert_eq!(fresh.next_corr_id, 1, "reconnect reassigns ids from scratch");
     let body = pool
         .request(0, &muxops::depth_req(), Duration::from_secs(5))

@@ -3,9 +3,13 @@
 //! randomized cases; failures report seed + case for replay.
 
 use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-use merlin::broker::core::{Broker, BrokerConfig};
+use merlin::broker::core::{Broker, BrokerConfig, BrokerError, SchedMode};
 use merlin::broker::wire;
+use merlin::broker::{TenantConfig, TenantSpec};
 use merlin::coordinator::resubmit::ranges_of;
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::hierarchy::{expand, flat, root_task};
@@ -634,5 +638,210 @@ fn prop_sharded_broker_batch_pipeline_conserves_and_orders() {
         assert_eq!(seen, n, "conservation through the batch pipeline");
         assert_eq!(broker.depth(), 0);
         assert_eq!(broker.inflight(), 0);
+    });
+}
+
+fn tenant_ping(token: String) -> TaskEnvelope {
+    TaskEnvelope::new(
+        "q",
+        Payload::Control(merlin::task::ControlMsg::Ping { token }),
+    )
+}
+
+#[test]
+fn prop_tenant_namespaces_never_leak_across_read_ops() {
+    // Isolation is absolute: whatever queue names tenants pick — here
+    // deliberately the SAME public names for everyone — every read op
+    // (depth, queue_names, stats_all, totals, fetch) sees only the
+    // calling tenant's slice, and drains conserve per tenant.
+    cases(0x7E4A47, 40, |g| {
+        let k = g.usize_in(2, 4);
+        let specs: Vec<TenantSpec> = (0..k)
+            .map(|i| TenantSpec::new(format!("t{i}")).token(format!("tok{i}")))
+            .collect();
+        let broker = Broker::new(BrokerConfig {
+            tenants: TenantConfig {
+                auth: true,
+                tenants: specs,
+            },
+            ..BrokerConfig::default()
+        });
+        let handles: Vec<Broker> = (0..k)
+            .map(|i| broker.authenticate(Some(&format!("tok{i}"))).unwrap())
+            .collect();
+        let n_queues = g.usize_in(1, 3);
+        let queues: Vec<String> = (0..n_queues).map(|i| format!("shared{i}")).collect();
+        let mut counts = vec![0usize; k];
+        let mut used: Vec<BTreeSet<String>> = vec![BTreeSet::new(); k];
+        for (i, h) in handles.iter().enumerate() {
+            let n = g.usize_in(1, 40);
+            counts[i] = n;
+            for m in 0..n {
+                let q = &queues[g.usize_in(0, n_queues - 1)];
+                used[i].insert(q.clone());
+                let t = TaskEnvelope::new(
+                    q.clone(),
+                    Payload::Control(merlin::task::ControlMsg::Ping {
+                        token: format!("t{i}-{m}"),
+                    }),
+                );
+                h.publish(t).unwrap();
+            }
+        }
+        for (i, h) in handles.iter().enumerate() {
+            assert_eq!(h.depth(), counts[i], "tenant t{i} sees only its own depth");
+            let names: BTreeSet<String> = h.queue_names().into_iter().collect();
+            assert_eq!(names, used[i], "tenant t{i} lists only its own queues");
+            let listed: u64 = h.stats_all().iter().map(|(_, s)| s.published).sum();
+            assert_eq!(listed as usize, counts[i], "stats_all scoped to t{i}");
+            assert_eq!(h.totals().published as usize, counts[i]);
+        }
+        // Drain in a rotated order so every position gets exercised:
+        // each handle receives exactly its own messages back.
+        let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+        let start = g.usize_in(0, k - 1);
+        for j in 0..k {
+            let i = (start + j) % k;
+            let h = &handles[i];
+            let c = h.register_consumer();
+            let prefix = format!("t{i}-");
+            let mut got = 0usize;
+            while let Some(d) = h.try_fetch(c, &refs, 0) {
+                match &d.task.payload {
+                    Payload::Control(merlin::task::ControlMsg::Ping { token }) => {
+                        assert!(token.starts_with(&prefix), "cross-tenant leak: {token}");
+                    }
+                    _ => unreachable!(),
+                }
+                h.ack(d.tag).unwrap();
+                got += 1;
+            }
+            assert_eq!(got, counts[i], "conservation inside tenant t{i}");
+            assert_eq!(h.depth(), 0);
+        }
+    });
+}
+
+#[test]
+fn prop_tenant_quota_binds_exactly_and_frees_on_ack() {
+    // The max-tasks quota is a gauge over resident (ready + unacked)
+    // tasks: it refuses exactly at the cap with the typed error, a
+    // compliant tenant keeps publishing through its neighbor's refusals,
+    // and acking reopens exactly the acked number of slots.
+    cases(0x9047A, 60, |g| {
+        let cap = g.u64_in(1, 30);
+        let mut capped = TenantSpec::new("capped").token("tc");
+        capped.max_queued_tasks = cap;
+        let broker = Broker::new(BrokerConfig {
+            tenants: TenantConfig {
+                auth: true,
+                tenants: vec![capped, TenantSpec::new("free").token("tf")],
+            },
+            ..BrokerConfig::default()
+        });
+        let c = broker.authenticate(Some("tc")).unwrap();
+        let f = broker.authenticate(Some("tf")).unwrap();
+        for i in 0..cap {
+            c.publish(tenant_ping(format!("{i}"))).unwrap();
+        }
+        let extra = g.u64_in(1, 10);
+        for _ in 0..extra {
+            match c.publish(tenant_ping("over".into())) {
+                Err(BrokerError::QuotaExceeded(msg)) => {
+                    assert!(msg.contains("max queued tasks"), "wrong refusal: {msg}");
+                }
+                other => panic!("expected quota refusal at cap {cap}, got {other:?}"),
+            }
+            f.publish(tenant_ping("free".into())).unwrap();
+        }
+        let usage = broker
+            .tenant_stats()
+            .into_iter()
+            .find(|t| t.id == "capped")
+            .unwrap();
+        assert_eq!(usage.quota_denied, extra, "every refusal counted");
+        assert_eq!(usage.queued_tasks, cap, "gauge sits exactly at the cap");
+        // Fetching alone frees nothing (still resident as unacked)...
+        let consumer = c.register_consumer();
+        let r = g.u64_in(1, cap) as usize;
+        let held: Vec<u64> = (0..r)
+            .map(|_| c.try_fetch(consumer, &["q"], 0).unwrap().tag)
+            .collect();
+        assert!(matches!(
+            c.publish(tenant_ping("still-over".into())),
+            Err(BrokerError::QuotaExceeded(_))
+        ));
+        // ...acking reopens exactly r slots.
+        for tag in held {
+            c.ack(tag).unwrap();
+        }
+        for i in 0..r {
+            c.publish(tenant_ping(format!("refill-{i}"))).unwrap();
+        }
+        assert!(matches!(
+            c.publish(tenant_ping("over-again".into())),
+            Err(BrokerError::QuotaExceeded(_))
+        ));
+    });
+}
+
+#[test]
+fn prop_weighted_fair_share_tracks_weights_under_contention() {
+    // Stride scheduling bounds the virtual-time spread between
+    // contending tenants to one stride, so over hundreds of deliveries
+    // the delivered shares must track the configured weights — the
+    // tolerance here is far looser than the guarantee to absorb
+    // thread-scheduling noise on starved CI cores.
+    cases(0xFA14, 3, |g| {
+        let wa = g.u64_in(2, 5) as u32;
+        let broker = Broker::new(BrokerConfig {
+            sched: SchedMode::Srwf,
+            tenants: TenantConfig {
+                auth: true,
+                tenants: vec![
+                    TenantSpec::new("a").token("ta").weight(wa),
+                    TenantSpec::new("b").token("tb"),
+                ],
+            },
+            ..BrokerConfig::default()
+        });
+        let target = 300u64;
+        for (id, tok) in [("a", "ta"), ("b", "tb")] {
+            let h = broker.authenticate(Some(tok)).unwrap();
+            let batch: Vec<TaskEnvelope> = (0..target + 50)
+                .map(|i| tenant_ping(format!("{id}{i}")))
+                .collect();
+            h.publish_batch(batch).unwrap();
+        }
+        let total = Arc::new(AtomicU64::new(0));
+        let mut counts = Vec::new();
+        let mut threads = Vec::new();
+        for tok in ["ta", "tb"] {
+            let h = broker.authenticate(Some(tok)).unwrap();
+            let total = total.clone();
+            let mine = Arc::new(AtomicU64::new(0));
+            counts.push(mine.clone());
+            threads.push(std::thread::spawn(move || {
+                let c = h.register_consumer();
+                while total.load(Ordering::SeqCst) < target {
+                    for d in h.fetch_n(c, &["q"], 0, 1, Duration::from_millis(20)) {
+                        h.ack(d.tag).unwrap();
+                        mine.fetch_add(1, Ordering::SeqCst);
+                        total.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        let da = counts[0].load(Ordering::SeqCst) as f64;
+        let db = counts[1].load(Ordering::SeqCst) as f64;
+        let share = da / (da + db);
+        let want = f64::from(wa) / (f64::from(wa) + 1.0);
+        assert!(
+            (share - want).abs() <= 0.2,
+            "weight {wa}: delivered share {share:.3} vs weight share {want:.3}"
+        );
     });
 }
