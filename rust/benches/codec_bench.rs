@@ -3,8 +3,12 @@
 //! Encodes/decodes a corpus of representative JAG step envelopes (the
 //! §3.1 bundle shape: builtin `jag` work, 10 samples per task) through
 //! both codecs and reports messages/s, MB/s, and bytes per message.
-//! Results go to stdout, `results/codec_bench.csv`, and
-//! `results/codec_bench.json` (both codecs recorded side by side).
+//! A pass-through section then compares the zero-copy task plane's
+//! encode-once blob sharing against the encode-per-hop plane it
+//! replaced (WAL record + snapshot row + delivery frame per message).
+//! Results go to stdout, `results/codec_bench.csv`,
+//! `results/codec_bench.json` (both codecs side by side), and
+//! `results/BENCH_passthrough.json`.
 
 use std::time::Instant;
 
@@ -120,6 +124,48 @@ fn main() {
         "v2 decode must beat JSON parsing"
     );
 
+    // --- pass-through: encode-once vs encode-per-hop -------------------
+    // The zero-copy task plane serializes an envelope exactly once, at
+    // admission; the WAL record, the snapshot row, and the delivery
+    // frame then all share the admission blob (Arc clone + memcpy).
+    // The plane it replaced re-encoded the envelope at each of those
+    // hops. Model both against the same corpus: per-hop work is
+    // "produce the bytes this hop persists or sends".
+    const HOPS: usize = 3; // WAL record + snapshot row + delivery frame
+
+    let t0 = Instant::now();
+    let mut per_hop_bytes = 0u64;
+    for t in &tasks {
+        for _ in 0..HOPS {
+            per_hop_bytes += std::hint::black_box(ser::encode_v2(t)).len() as u64;
+        }
+    }
+    let per_hop_dt = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut shared_bytes = 0u64;
+    for t in &tasks {
+        let raw = ser::RawTask::from_envelope(t); // the one admission encode
+        for _ in 0..HOPS {
+            shared_bytes += std::hint::black_box(raw.share()).len() as u64;
+        }
+    }
+    let shared_dt = t0.elapsed().as_secs_f64();
+
+    assert_eq!(shared_bytes, per_hop_bytes, "both planes move the same bytes");
+    let per_hop_rows_s = (n as usize * HOPS) as f64 / per_hop_dt;
+    let shared_rows_s = (n as usize * HOPS) as f64 / shared_dt;
+    let speedup = shared_rows_s / per_hop_rows_s;
+    println!(
+        "\npass-through ({HOPS} hops/envelope): encode-per-hop {:.0} rows/s, \
+         encode-once {:.0} rows/s, speedup {:.2}x",
+        per_hop_rows_s, shared_rows_s, speedup
+    );
+    assert!(
+        speedup > 1.0,
+        "sharing the admission blob must beat re-encoding per hop ({speedup:.2}x)"
+    );
+
     let dir = std::path::Path::new("results");
     s.save_csv(dir, "codec_bench").ok();
     let record = |c: &CodecStats| {
@@ -139,8 +185,16 @@ fn main() {
             Json::num(v1.bytes_per_msg / v2.bytes_per_msg),
         ),
     ]);
+    let passthrough = Json::obj(vec![
+        ("n_envelopes", Json::num(n as f64)),
+        ("hops_per_envelope", Json::num(HOPS as f64)),
+        ("encode_per_hop_rows_per_s", Json::num(per_hop_rows_s)),
+        ("encode_once_rows_per_s", Json::num(shared_rows_s)),
+        ("speedup", Json::num(speedup)),
+    ]);
     if std::fs::create_dir_all(dir).is_ok() {
         std::fs::write(dir.join("codec_bench.json"), to_string(&out)).ok();
+        std::fs::write(dir.join("BENCH_passthrough.json"), to_string(&passthrough)).ok();
     }
-    println!("\ncodec_bench OK (CSV + JSON in results/)");
+    println!("\ncodec_bench OK (CSV + JSON + BENCH_passthrough.json in results/)");
 }

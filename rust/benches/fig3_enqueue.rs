@@ -120,11 +120,10 @@ fn main() {
     // publish in parallel; on the coarse baseline every enqueue serializes
     // on one global mutex. Batch sizes >= 64 additionally amortize the
     // lock/wakeup cost per message. Serialization is excluded on both
-    // sides (publish_sized / no-encode baseline) so the comparison
-    // isolates the lock structure.
+    // sides (pre-encoded RawTask blobs / no-encode baseline) so the
+    // comparison isolates the lock structure.
     let producers = 8usize;
     let per_producer: u64 = 50_000;
-    let per_task_bytes = ser::encode(&flat::flat_tasks(&template(), 1, "q")[0]).len();
     let gen_tasks = |prefix: &str| -> Vec<Vec<TaskEnvelope>> {
         (0..producers)
             .map(|p| flat::flat_tasks(&template(), per_producer, &format!("{prefix}{p}")))
@@ -164,30 +163,32 @@ fn main() {
         (producers as u64 * per_producer) as f64 / dt
     };
     let run_sharded = |batch: usize| -> f64 {
-        let tasksets = gen_tasks("sq");
+        // Encode every task into its canonical blob before the clock
+        // starts: publish_raw admits the wire bytes as-is, so the timed
+        // region measures the lock structure, not serialization.
+        let rawsets: Vec<Vec<ser::RawTask>> = gen_tasks("sq")
+            .into_iter()
+            .map(|tasks| tasks.iter().map(ser::RawTask::from_envelope).collect())
+            .collect();
         let b = Broker::default();
         let t0 = Instant::now();
-        let handles: Vec<_> = tasksets
+        let handles: Vec<_> = rawsets
             .into_iter()
-            .map(|tasks| {
+            .map(|raws| {
                 let b = b.clone();
                 std::thread::spawn(move || {
                     if batch <= 1 {
-                        for t in tasks {
-                            b.publish_sized(t, per_task_bytes).unwrap();
+                        for r in raws {
+                            b.publish_raw(r).unwrap();
                         }
                     } else {
-                        let mut it = tasks.into_iter();
+                        let mut it = raws.into_iter();
                         loop {
-                            let chunk: Vec<(TaskEnvelope, usize)> = it
-                                .by_ref()
-                                .take(batch)
-                                .map(|t| (t, per_task_bytes))
-                                .collect();
+                            let chunk: Vec<ser::RawTask> = it.by_ref().take(batch).collect();
                             if chunk.is_empty() {
                                 break;
                             }
-                            b.publish_batch_sized(chunk).unwrap();
+                            b.publish_batch_raw(chunk).unwrap();
                         }
                     }
                 })

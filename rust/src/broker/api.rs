@@ -16,7 +16,8 @@ use std::time::Duration;
 use crate::task::TaskEnvelope;
 
 use super::core::{
-    Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+    Broker, BrokerTotals, CodecStats, Delivery, DurabilityStats, LeaseStats, QueueStats,
+    SchedStats,
 };
 
 /// Error surfaced by [`TaskQueue`] operations. Collapses the broker's
@@ -215,6 +216,13 @@ pub trait TaskQueue: Send + Sync {
         SchedStats::default()
     }
 
+    /// Zero-copy codec counters (summed across members). The default
+    /// reports all zeros — implementations backed by the blob task
+    /// plane override it.
+    fn codec_stats(&self) -> CodecStats {
+        CodecStats::default()
+    }
+
     /// Total ready messages (summed).
     fn depth(&self) -> usize;
 
@@ -350,6 +358,10 @@ impl TaskQueue for Broker {
         Broker::sched_stats(self)
     }
 
+    fn codec_stats(&self) -> CodecStats {
+        Broker::codec_stats(self)
+    }
+
     fn depth(&self) -> usize {
         Broker::depth(self)
     }
@@ -396,6 +408,15 @@ pub(crate) fn merge_sched_stats(into: &mut SchedStats, from: &SchedStats) {
     into.grant_queue_len += from.grant_queue_len;
     into.overcommit_active += from.overcommit_active;
     into.fruitless_scans += from.fruitless_scans;
+}
+
+/// Merge two [`CodecStats`] (federation aggregation helper) — all four
+/// are lifetime counters, so they sum.
+pub(crate) fn merge_codec_stats(into: &mut CodecStats, from: &CodecStats) {
+    into.saved_encodes += from.saved_encodes;
+    into.delivery_encodes += from.delivery_encodes;
+    into.transcoded_v1 += from.transcoded_v1;
+    into.rejected_blobs += from.rejected_blobs;
 }
 
 /// Merge two [`DurabilityStats`] (federation aggregation helper).

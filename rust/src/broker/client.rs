@@ -17,7 +17,9 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use super::core::{BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats};
+use super::core::{
+    BrokerTotals, CodecStats, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+};
 use super::sideops;
 use super::tenant::TenantUsage;
 use super::wire::{self, BinMsg, Frame, HelloFeatures, Session, WireError};
@@ -526,6 +528,14 @@ impl BrokerClient {
         Ok(sched_stats_from(&r))
     }
 
+    /// The server's zero-copy codec counters (saved encodes, delivery
+    /// encodes, v1 transcodes, rejected blobs). Errors against servers
+    /// that predate the zero-copy task plane.
+    pub fn codec_stats(&mut self) -> Result<CodecStats, ClientError> {
+        let r = self.call(&Json::obj(vec![("op", Json::str("codec"))]))?;
+        Ok(codec_stats_from(&r))
+    }
+
     /// Sample ranges `[lo, hi)` for (`study`, `step`) still queued or in
     /// flight on `queue` — the server-side half of recovery-aware
     /// resubmission (see
@@ -615,6 +625,11 @@ fn queue_stats_from(v: &Json) -> QueueStats {
 /// Parse a `sched` reply (shared with [`muxops`]).
 fn sched_stats_from(r: &Json) -> SchedStats {
     sideops::decode(sideops::SCHED_STATS, r)
+}
+
+/// Parse a `codec` reply (shared with [`muxops`]).
+fn codec_stats_from(r: &Json) -> CodecStats {
+    sideops::decode(sideops::CODEC_STATS, r)
 }
 
 /// Parse a `tenants` reply (shared with [`muxops`]).
@@ -965,6 +980,16 @@ pub mod muxops {
     /// Counters returned by a [`sched_req`].
     pub fn sched_rsp(body: &[u8]) -> Result<SchedStats, ClientError> {
         Ok(sched_stats_from(&json_reply(body)?))
+    }
+
+    /// `codec` (zero-copy codec counters) request.
+    pub fn codec_req() -> Vec<u8> {
+        json_body(&Json::obj(vec![("op", Json::str("codec"))]))
+    }
+
+    /// Counters returned by a [`codec_req`].
+    pub fn codec_rsp(body: &[u8]) -> Result<CodecStats, ClientError> {
+        Ok(codec_stats_from(&json_reply(body)?))
     }
 
     /// `tenants` (per-tenant usage) request.

@@ -69,7 +69,8 @@ use std::time::{Duration, Instant};
 use super::snapshot::{self, Snapshot};
 use super::tenant::{TenantConfig, TenantSpec, TenantUsage, NS_SEP};
 use super::wal::{self, DurabilityConfig, ShardWal, WalOp, WalRecord};
-use crate::task::{ser, Payload, TaskEnvelope};
+use crate::task::ser::{RawTask, TaskHeader};
+use crate::task::{ser, TaskEnvelope};
 use crate::util::hex::fnv1a;
 
 /// Number of queue shards. Power of two so the shard of a tag is a mask.
@@ -140,6 +141,12 @@ pub struct BrokerConfig {
     /// single-tenant — no namespacing, no per-tenant accounting on the
     /// hot path. See DESIGN.md "Multi-Tenant Control Plane".
     pub tenants: TenantConfig,
+    /// Ship stored blobs verbatim on binary delivery (the zero-copy
+    /// default). `false` is a test-only fallback that decodes and
+    /// re-encodes every delivered envelope — it exists so the parity
+    /// suite can prove both modes emit byte-identical frames, and every
+    /// such re-encode is counted in [`CodecStats::delivery_encodes`].
+    pub codec_passthrough: bool,
 }
 
 impl Default for BrokerConfig {
@@ -151,6 +158,7 @@ impl Default for BrokerConfig {
             sched: SchedMode::Srwf,
             overcommit_degree: 1,
             tenants: TenantConfig::default(),
+            codec_passthrough: true,
         }
     }
 }
@@ -215,10 +223,12 @@ struct Queued {
     /// Durable entry id (the WAL `Enqueue` record's LSN); 0 when the
     /// broker runs without durability.
     entry: u64,
-    /// Wire-encoded size (byte-budget accounting; approximate on
-    /// recovery, exact on publish).
+    /// Canonical wire size (`raw.wire_len()`): one number for budget,
+    /// quota, and WAL accounting, exact on publish and on recovery.
     bytes: usize,
-    task: TaskEnvelope,
+    /// The canonical blob. The queue's copy is an `Arc` share of the
+    /// same allocation the WAL record and any snapshot row hold.
+    raw: RawTask,
 }
 
 impl PartialEq for Queued {
@@ -244,6 +254,8 @@ impl Ord for Queued {
 /// A delivered-but-unacked message.
 #[derive(Debug)]
 struct InFlight {
+    /// Queue key in this shard's map — the *internal* (tenant-
+    /// namespaced) name; the blob inside `raw` keeps the public name.
     queue: String,
     consumer: u64,
     /// Durable entry id (see [`Queued::entry`]).
@@ -253,7 +265,8 @@ struct InFlight {
     /// Visibility deadline in ms since broker start (`None` = unleased:
     /// the delivery waits for ack or consumer recovery, never expires).
     lease_deadline: Option<u64>,
-    task: TaskEnvelope,
+    /// The canonical blob (Arc share of the queued entry's allocation).
+    raw: RawTask,
 }
 
 /// What a consumer receives: the envelope plus the tag to ack/nack with.
@@ -263,6 +276,30 @@ pub struct Delivery {
     pub tag: u64,
     /// The delivered task.
     pub task: TaskEnvelope,
+}
+
+/// A delivery in its canonical blob form — what the network servers
+/// consume. The blob is the same `Arc` allocation the shard queue held:
+/// serving a `PopN` is a memcpy of these bytes into the connection
+/// out-buffer, with zero `encode_v2` calls.
+#[derive(Debug, Clone)]
+pub struct RawDelivery {
+    /// Delivery tag to pass back to ack/nack/requeue.
+    pub tag: u64,
+    /// The delivered task's canonical wire-v2 blob.
+    pub raw: RawTask,
+}
+
+impl RawDelivery {
+    /// Decode into the struct-surface [`Delivery`] the in-process API
+    /// exposes. This is a *decode* for local consumers, never an encode:
+    /// the wire path skips it entirely and ships the blob.
+    pub fn into_delivery(self) -> Delivery {
+        Delivery {
+            tag: self.tag,
+            task: self.raw.decode(),
+        }
+    }
 }
 
 /// Point-in-time statistics for one queue.
@@ -309,6 +346,28 @@ pub struct SchedStats {
     /// Lifetime fetch scan passes that found nothing ready (the bounded
     /// rescan counter in [`Broker::fetch_n`], previously invisible).
     pub fruitless_scans: u64,
+}
+
+/// Point-in-time codec report (see [`Broker::codec_stats`]): how much
+/// (de)serialization the zero-copy task plane is avoiding, and whether
+/// any envelope encode still happens on the delivery path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CodecStats {
+    /// Envelope encodes avoided by sharing the admission blob: one per
+    /// WAL `Enqueue` record, snapshot row, and binary-path delivery
+    /// that would each have re-encoded the task before this plane.
+    pub saved_encodes: u64,
+    /// Envelope encodes actually performed on the delivery path. Zero
+    /// for wire-v2 consumers; counts the v1 JSON `fetch` fallback (and
+    /// the test-only struct-path mode). The loadgen full-mode gate
+    /// asserts this stays 0 under a modern fleet.
+    pub delivery_encodes: u64,
+    /// v1/JSON publishes transcoded once into the canonical blob at
+    /// admission.
+    pub transcoded_v1: u64,
+    /// Corrupt blobs refused at admission (the only place corruption
+    /// can surface — delivery never re-validates).
+    pub rejected_blobs: u64,
 }
 
 /// Lifetime totals across all queues, read from lock-free counters.
@@ -376,14 +435,11 @@ pub struct DurabilityStats {
 /// like the legacy single-heap broker.
 type WaveKey = Option<(String, String)>;
 
-/// Wave identity of a task (see [`WaveKey`]).
-fn wave_key(task: &TaskEnvelope) -> WaveKey {
-    let template = match &task.payload {
-        Payload::Step(s) => &s.template,
-        Payload::Expansion(e) => &e.template,
-        _ => return None,
-    };
-    Some((template.study_id.clone(), template.step_name.clone()))
+/// Wave identity of a task (see [`WaveKey`]), read straight off the
+/// header-only decode: `peek` materializes `(study_id, step_name)` for
+/// step and expansion payloads and leaves `wave` empty otherwise.
+fn wave_key(hdr: &TaskHeader) -> WaveKey {
+    hdr.wave.clone()
 }
 
 /// One queue's best ready message under a scheduling mode, as a value
@@ -426,7 +482,7 @@ struct QueueState {
 
 impl QueueState {
     fn push(&mut self, m: Queued) {
-        self.waves.entry(wave_key(&m.task)).or_default().push(m);
+        self.waves.entry(wave_key(m.raw.hdr())).or_default().push(m);
     }
 
     fn is_empty(&self) -> bool {
@@ -718,6 +774,11 @@ struct Inner {
     granted: AtomicU64,
     overcommit_active: AtomicUsize,
     fruitless_scans: AtomicU64,
+    /// Codec counters (see [`CodecStats`]).
+    saved_encodes: AtomicU64,
+    delivery_encodes: AtomicU64,
+    transcoded_v1: AtomicU64,
+    rejected_blobs: AtomicU64,
     /// Readiness callback `(queue, count)` invoked (outside the shard
     /// lock) whenever messages become ready — the seam an event-driven
     /// server uses to wake *its* parked connections without polling.
@@ -817,6 +878,10 @@ impl Broker {
                 granted: AtomicU64::new(0),
                 overcommit_active: AtomicUsize::new(0),
                 fruitless_scans: AtomicU64::new(0),
+                saved_encodes: AtomicU64::new(0),
+                delivery_encodes: AtomicU64::new(0),
+                transcoded_v1: AtomicU64::new(0),
+                rejected_blobs: AtomicU64::new(0),
                 ready_hook: RwLock::new(None),
                 durable,
                 wal_records: AtomicU64::new(0),
@@ -886,17 +951,26 @@ impl Broker {
                 let mut s = broker.inner.shards[si].state.lock().unwrap();
                 // BTreeMap iteration is entry-id order = original enqueue
                 // order, so FIFO-within-priority survives recovery.
-                for (entry, task) in replayed.live {
+                // Recovered blobs go back into the queues as-is — no
+                // decode + re-encode round trip; replay only peeked the
+                // headers. The queue key re-attaches the tenant
+                // namespace the entry was logged under (the blob itself
+                // holds the public name).
+                for (entry, rec) in replayed.live {
                     let seq = broker.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
-                    let bytes = ser::encode(&task).len();
-                    let q = s.queues.entry(task.queue.clone()).or_default();
+                    let internal = if rec.ns.is_empty() {
+                        rec.raw.queue().to_string()
+                    } else {
+                        format!("{}{}{}", rec.ns, NS_SEP, rec.raw.queue())
+                    };
+                    let q = s.queues.entry(internal).or_default();
                     q.stats.ready += 1;
                     q.push(Queued {
-                        priority: task.priority,
+                        priority: rec.raw.priority(),
                         seq,
                         entry,
-                        bytes,
-                        task,
+                        bytes: rec.raw.wire_len(),
+                        raw: rec.raw,
                     });
                 }
                 s.wal = Some(shard_wal);
@@ -1086,14 +1160,6 @@ impl Broker {
         }
     }
 
-    /// Strip the namespace prefix off a delivered task's queue name so
-    /// consumers always see the public name they published under.
-    fn strip_ns(task: &mut TaskEnvelope) {
-        if let Some(i) = task.queue.find(NS_SEP) {
-            task.queue = task.queue[i + NS_SEP.len_utf8()..].to_string();
-        }
-    }
-
     /// Admit `n` publishes totalling `bytes` against this tenant's
     /// quotas, updating the resident gauges on success (the publish
     /// paths keep them; completion paths decrement). On refusal nothing
@@ -1273,16 +1339,26 @@ impl Broker {
         if !due {
             return;
         }
-        let mut entries: Vec<(u64, Vec<u8>)> = Vec::new();
-        for q in s.queues.values() {
+        // Snapshot rows share the resident blobs (Arc clones — the
+        // write loop memcpys them into the file buffer); each row would
+        // have been an `encode_v2` before the zero-copy plane. The
+        // tenant namespace rides in the row, not the blob, read off the
+        // internal queue key.
+        let mut entries: Vec<(u64, String, Arc<[u8]>)> = Vec::new();
+        for (name, q) in &s.queues {
+            let ns = name.find(NS_SEP).map_or("", |i| &name[..i]);
             for m in q.iter() {
-                entries.push((m.entry, ser::encode_v2(&m.task)));
+                entries.push((m.entry, ns.to_string(), m.raw.share()));
             }
         }
         for inf in s.inflight.values() {
-            entries.push((inf.entry, ser::encode_v2(&inf.task)));
+            let ns = inf.queue.find(NS_SEP).map_or("", |i| &inf.queue[..i]);
+            entries.push((inf.entry, ns.to_string(), inf.raw.share()));
         }
-        entries.sort_unstable_by_key(|(e, _)| *e);
+        entries.sort_unstable_by_key(|(e, _, _)| *e);
+        self.inner
+            .saved_encodes
+            .fetch_add(entries.len() as u64, Ordering::Relaxed);
         let w = s.wal.as_mut().unwrap();
         let snap = Snapshot {
             shard: w.shard_index(),
@@ -1456,11 +1532,11 @@ impl Broker {
                 q.stats.lease_expired += 1;
                 q.stats.ready += 1;
                 q.push(Queued {
-                    priority: inf.task.priority,
+                    priority: inf.raw.priority(),
                     seq,
                     entry: inf.entry,
                     bytes: inf.bytes,
-                    task: inf.task,
+                    raw: inf.raw,
                 });
                 if self.inner.multi_tenant {
                     let ts = self.tstate_of_queue(&inf.queue);
@@ -1652,16 +1728,67 @@ impl Broker {
         }
     }
 
-    /// Publish one task to its queue. Size accounting uses the wire
-    /// encoding, exactly what the TCP path transmits.
-    pub fn publish(&self, task: TaskEnvelope) -> Result<(), BrokerError> {
-        let bytes = ser::encode(&task).len();
-        self.publish_sized(task, bytes)
+    /// Point-in-time zero-copy codec report (see [`CodecStats`]).
+    pub fn codec_stats(&self) -> CodecStats {
+        CodecStats {
+            saved_encodes: self.inner.saved_encodes.load(Ordering::Relaxed),
+            delivery_encodes: self.inner.delivery_encodes.load(Ordering::Relaxed),
+            transcoded_v1: self.inner.transcoded_v1.load(Ordering::Relaxed),
+            rejected_blobs: self.inner.rejected_blobs.load(Ordering::Relaxed),
+        }
     }
 
-    /// Publish with a caller-provided size (lets the in-process fast path
-    /// skip re-encoding when the caller already measured it).
-    pub fn publish_sized(&self, mut task: TaskEnvelope, bytes: usize) -> Result<(), BrokerError> {
+    /// Count encodes the blob plane avoided (WAL shares, snapshot rows,
+    /// binary deliveries shipped verbatim). Called by the wire servers.
+    pub(crate) fn note_saved_encodes(&self, n: u64) {
+        self.inner.saved_encodes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count encodes actually performed on a delivery path (v1 JSON
+    /// fetch, or the test-only struct fallback). The zero-copy gate
+    /// asserts this stays 0 for binary clients.
+    pub(crate) fn note_delivery_encodes(&self, n: u64) {
+        self.inner.delivery_encodes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count v1/JSON publishes transcoded once into the canonical blob.
+    pub(crate) fn note_transcoded_v1(&self, n: u64) {
+        self.inner.transcoded_v1.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count blobs refused at admission (truncated, bit-flipped, or
+    /// otherwise failing header validation).
+    pub(crate) fn note_rejected_blobs(&self, n: u64) {
+        self.inner.rejected_blobs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Publish one task to its queue. The envelope is encoded exactly
+    /// once into the canonical wire-v2 blob; every later hop — WAL
+    /// record, snapshot row, delivery frame — shares those bytes.
+    pub fn publish(&self, task: TaskEnvelope) -> Result<(), BrokerError> {
+        self.publish_raw(RawTask::from_envelope(&task))
+    }
+
+    /// The WAL record for a publish. The default tenant shares the blob
+    /// verbatim, so single-tenant logs are byte-identical whether or not
+    /// tenancy is compiled in; other tenants carry their namespace
+    /// alongside the unmodified blob (the bytes themselves never carry
+    /// the `<tenant>\x01` prefix).
+    fn wal_enqueue_op(&self, raw: &RawTask) -> WalOp {
+        if self.tenant == 0 {
+            WalOp::Enqueue(raw.share())
+        } else {
+            WalOp::EnqueueNs(self.tenant_id().to_string(), raw.share())
+        }
+    }
+
+    /// Publish an admission-validated blob. This is the canonical entry
+    /// point: the blob keeps the *public* queue name (tenant namespacing
+    /// lives in the queue key, never in the bytes), and all size
+    /// accounting uses the wire length — exactly what the TCP path
+    /// transmits and the WAL stores.
+    pub fn publish_raw(&self, raw: RawTask) -> Result<(), BrokerError> {
+        let bytes = raw.wire_len();
         if bytes > self.inner.cfg.max_message_bytes {
             return Err(BrokerError::MessageTooLarge {
                 bytes,
@@ -1670,13 +1797,10 @@ impl Broker {
         }
         let multi = self.inner.multi_tenant;
         if multi {
-            if task.queue.contains(NS_SEP) {
+            if raw.queue().contains(NS_SEP) {
                 return Err(BrokerError::QuotaExceeded(
                     "queue name contains a reserved control character".into(),
                 ));
-            }
-            if self.tenant != 0 {
-                task.queue = self.internal_name(&task.queue);
             }
             self.admit(1, bytes as u64)?;
         }
@@ -1686,21 +1810,22 @@ impl Broker {
             }
             return Err(e);
         }
+        let qname = self.internal_name(raw.queue());
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        let si = shard_of(&task.queue);
+        let si = shard_of(&qname);
         let shard = &self.inner.shards[si];
-        let qname = task.queue.clone();
         let wake;
         {
             let mut s = shard.state.lock().unwrap();
             // Write-ahead: the log captures the task before the queue
-            // does, so a WAL failure refuses the publish cleanly.
+            // does, so a WAL failure refuses the publish cleanly. The
+            // record shares the admission blob — no re-encode.
             let mut entry = 0u64;
             if s.wal.is_some() {
                 entry = s.wal.as_mut().unwrap().alloc();
                 let rec = WalRecord {
                     lsn: entry,
-                    op: WalOp::Enqueue(ser::encode_v2(&task)),
+                    op: self.wal_enqueue_op(&raw),
                 };
                 if let Err(e) = Self::wal_append(&mut s, &self.inner, &[rec]) {
                     self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
@@ -1709,17 +1834,18 @@ impl Broker {
                     }
                     return Err(BrokerError::Wal(e.to_string()));
                 }
+                self.inner.saved_encodes.fetch_add(1, Ordering::Relaxed);
             }
             let q = s.queues.entry(qname.clone()).or_default();
             q.stats.published += 1;
             q.stats.bytes_published += bytes as u64;
             q.stats.ready += 1;
             q.push(Queued {
-                priority: task.priority,
+                priority: raw.priority(),
                 seq,
                 entry,
                 bytes,
-                task,
+                raw,
             });
             self.maybe_snapshot(&mut s);
             // Targeted: only waiters whose filter covers this queue are
@@ -1745,32 +1871,23 @@ impl Broker {
     /// path expansion bursts and resubmission crawls take. All-or-nothing
     /// on the size and depth checks.
     pub fn publish_batch(&self, tasks: Vec<TaskEnvelope>) -> Result<(), BrokerError> {
-        let sized = tasks
-            .into_iter()
-            .map(|t| {
-                let bytes = ser::encode(&t).len();
-                (t, bytes)
-            })
-            .collect();
-        self.publish_batch_sized(sized)
+        self.publish_batch_raw(tasks.iter().map(RawTask::from_envelope).collect())
     }
 
-    /// Batch publish with caller-provided sizes (the in-process fast path
-    /// when sizes are already measured; see [`Broker::publish_sized`]).
+    /// Batch publish of admission-validated blobs — the wire servers'
+    /// path: client bytes are validated once at admission and stored
+    /// verbatim, so the WAL append below is a pure share, not an encode.
     /// On a durable broker a WAL append failure refuses the failing shard
     /// group and everything after it (earlier groups are already durable
     /// and stay queued).
-    pub fn publish_batch_sized(
-        &self,
-        mut sized: Vec<(TaskEnvelope, usize)>,
-    ) -> Result<(), BrokerError> {
-        if sized.is_empty() {
+    pub fn publish_batch_raw(&self, raws: Vec<RawTask>) -> Result<(), BrokerError> {
+        if raws.is_empty() {
             return Ok(());
         }
-        for (_, bytes) in &sized {
-            if *bytes > self.inner.cfg.max_message_bytes {
+        for raw in &raws {
+            if raw.wire_len() > self.inner.cfg.max_message_bytes {
                 return Err(BrokerError::MessageTooLarge {
-                    bytes: *bytes,
+                    bytes: raw.wire_len(),
                     limit: self.inner.cfg.max_message_bytes,
                 });
             }
@@ -1778,33 +1895,31 @@ impl Broker {
         let multi = self.inner.multi_tenant;
         let mut total_bytes = 0u64;
         if multi {
-            if sized.iter().any(|(t, _)| t.queue.contains(NS_SEP)) {
+            if raws.iter().any(|r| r.queue().contains(NS_SEP)) {
                 return Err(BrokerError::QuotaExceeded(
                     "queue name contains a reserved control character".into(),
                 ));
             }
-            if self.tenant != 0 {
-                for (t, _) in &mut sized {
-                    t.queue = self.internal_name(&t.queue);
-                }
-            }
-            total_bytes = sized.iter().map(|(_, b)| *b as u64).sum();
-            self.admit(sized.len() as u64, total_bytes)?;
+            total_bytes = raws.iter().map(|r| r.wire_len() as u64).sum();
+            self.admit(raws.len() as u64, total_bytes)?;
         }
-        if let Err(e) = self.reserve_depth(sized.len()) {
+        if let Err(e) = self.reserve_depth(raws.len()) {
             if multi {
-                self.unadmit(sized.len() as u64, total_bytes);
+                self.unadmit(raws.len() as u64, total_bytes);
             }
             return Err(e);
         }
-        let n = sized.len() as u64;
+        let n = raws.len() as u64;
         let base = self.inner.seq.fetch_add(n, Ordering::Relaxed);
-        // Group by shard, preserving input order (seq assigned in order).
-        let mut groups: Vec<Vec<(TaskEnvelope, usize, u64)>> =
+        // Group by shard of the *internal* queue name, preserving input
+        // order (seq assigned in order). The namespace lives only in the
+        // key; the blob keeps the public name.
+        let mut groups: Vec<Vec<(RawTask, String, u64)>> =
             (0..NUM_SHARDS).map(|_| Vec::new()).collect();
-        for (i, (t, bytes)) in sized.into_iter().enumerate() {
-            let si = shard_of(&t.queue);
-            groups[si].push((t, bytes, base + 1 + i as u64));
+        for (i, raw) in raws.into_iter().enumerate() {
+            let qname = self.internal_name(raw.queue());
+            let si = shard_of(&qname);
+            groups[si].push((raw, qname, base + 1 + i as u64));
         }
         for si in 0..NUM_SHARDS {
             let group = std::mem::take(&mut groups[si]);
@@ -1812,12 +1927,13 @@ impl Broker {
                 continue;
             }
             let count = group.len() as u64;
-            let gbytes: u64 = group.iter().map(|(_, b, _)| *b as u64).sum();
+            let gbytes: u64 = group.iter().map(|(r, _, _)| r.wire_len() as u64).sum();
             let shard = &self.inner.shards[si];
             {
                 let mut s = shard.state.lock().unwrap();
                 // Write-ahead: one WAL append (and at most one fsync) for
-                // the whole shard group, before any in-memory push.
+                // the whole shard group, before any in-memory push. Every
+                // record shares its admission blob — no re-encode.
                 let mut entries = vec![0u64; group.len()];
                 if s.wal.is_some() {
                     let recs: Vec<WalRecord> = {
@@ -1825,11 +1941,11 @@ impl Broker {
                         group
                             .iter()
                             .enumerate()
-                            .map(|(i, (t, _, _))| {
+                            .map(|(i, (r, _, _))| {
                                 entries[i] = w.alloc();
                                 WalRecord {
                                     lsn: entries[i],
-                                    op: WalOp::Enqueue(ser::encode_v2(t)),
+                                    op: self.wal_enqueue_op(r),
                                 }
                             })
                             .collect()
@@ -1846,26 +1962,28 @@ impl Broker {
                                 + groups[si + 1..]
                                     .iter()
                                     .flatten()
-                                    .map(|(_, b, _)| *b as u64)
+                                    .map(|(r, _, _)| r.wire_len() as u64)
                                     .sum::<u64>();
                             self.unadmit(remaining as u64, rb);
                         }
                         return Err(BrokerError::Wal(e.to_string()));
                     }
+                    self.inner.saved_encodes.fetch_add(count, Ordering::Relaxed);
                 }
                 let mut readied: HashMap<String, usize> = HashMap::new();
-                for ((t, bytes, seq), entry) in group.into_iter().zip(entries) {
-                    *readied.entry(t.queue.clone()).or_default() += 1;
-                    let q = s.queues.entry(t.queue.clone()).or_default();
+                for ((raw, qname, seq), entry) in group.into_iter().zip(entries) {
+                    *readied.entry(qname.clone()).or_default() += 1;
+                    let bytes = raw.wire_len();
+                    let q = s.queues.entry(qname).or_default();
                     q.stats.published += 1;
                     q.stats.bytes_published += bytes as u64;
                     q.stats.ready += 1;
                     q.push(Queued {
-                        priority: t.priority,
+                        priority: raw.priority(),
                         seq,
                         entry,
                         bytes,
-                        task: t,
+                        raw,
                     });
                 }
                 self.maybe_snapshot(&mut s);
@@ -1929,7 +2047,7 @@ impl Broker {
         lease_ms: u64,
         qnames: &[&str],
         budget_left: &mut u64,
-        out: &mut Vec<Delivery>,
+        out: &mut Vec<RawDelivery>,
     ) -> bool {
         let mode = self.inner.cfg.sched;
         let mut best: Option<(Candidate, &str)> = None;
@@ -1961,8 +2079,8 @@ impl Broker {
             self.inner.granted.fetch_add(1, Ordering::Relaxed);
         }
         *budget_left = budget_left.saturating_sub(msg.bytes as u64);
-        let raw = self.inner.next_tag.fetch_add(1, Ordering::Relaxed);
-        let tag = (raw << SHARD_BITS) | si as u64;
+        let tagseq = self.inner.next_tag.fetch_add(1, Ordering::Relaxed);
+        let tag = (tagseq << SHARD_BITS) | si as u64;
         let lease_deadline = (lease_ms > 0).then(|| {
             let d = self.now_ms() + lease_ms;
             s.leases.push(Reverse((d, tag)));
@@ -1980,13 +2098,12 @@ impl Broker {
                 entry: msg.entry,
                 bytes: msg.bytes,
                 lease_deadline,
-                task: msg.task.clone(),
+                raw: msg.raw.clone(),
             },
         );
         self.inner.total_ready.fetch_sub(1, Ordering::Relaxed);
         self.inner.total_inflight.fetch_add(1, Ordering::Relaxed);
         self.inner.delivered.fetch_add(1, Ordering::Relaxed);
-        let mut task = msg.task;
         if self.inner.multi_tenant {
             // Advance the owning tenant's virtual time by its stride —
             // the stride-scheduling charge the fairness gate compares.
@@ -1994,9 +2111,11 @@ impl Broker {
             ts.vtime.fetch_add(ts.stride, Ordering::Relaxed);
             ts.ready.fetch_sub(1, Ordering::Relaxed);
             ts.delivered.fetch_add(1, Ordering::Relaxed);
-            Self::strip_ns(&mut task);
+            // No envelope rewrite here: the blob never carried the
+            // namespace (it lives only in the queue key), so delivery-side
+            // stripping is a no-op by construction.
         }
-        out.push(Delivery { tag, task });
+        out.push(RawDelivery { tag, raw: msg.raw });
         true
     }
 
@@ -2009,7 +2128,7 @@ impl Broker {
         by_shard: &[(usize, Vec<&str>)],
         want: usize,
         budget_left: &mut u64,
-        out: &mut Vec<Delivery>,
+        out: &mut Vec<RawDelivery>,
     ) {
         let mode = self.inner.cfg.sched;
         if by_shard.len() == 1 {
@@ -2118,6 +2237,25 @@ impl Broker {
         budget_bytes: u64,
         timeout: Duration,
     ) -> Vec<Delivery> {
+        self.fetch_n_budgeted_raw(consumer, queues, prefetch, max_n, budget_bytes, timeout)
+            .into_iter()
+            .map(RawDelivery::into_delivery)
+            .collect()
+    }
+
+    /// [`Broker::fetch_n_budgeted`] without the decode: hands back the
+    /// stored blobs themselves. The wire servers sit on this — a `PopN`
+    /// reply is then a straight memcpy of admission-validated bytes into
+    /// the connection out-buffer, with zero `encode_v2` calls.
+    pub fn fetch_n_budgeted_raw(
+        &self,
+        consumer: u64,
+        queues: &[&str],
+        prefetch: usize,
+        max_n: usize,
+        budget_bytes: u64,
+        timeout: Duration,
+    ) -> Vec<RawDelivery> {
         if !self.inner.multi_tenant {
             return self.fetch_loop(consumer, queues, prefetch, max_n, budget_bytes, timeout);
         }
@@ -2153,7 +2291,7 @@ impl Broker {
         max_n: usize,
         budget_bytes: u64,
         timeout: Duration,
-    ) -> Vec<Delivery> {
+    ) -> Vec<RawDelivery> {
         let budget = if budget_bytes == 0 { u64::MAX } else { budget_bytes };
         let mut out = Vec::new();
         if max_n == 0 || queues.is_empty() {
@@ -2416,7 +2554,7 @@ impl Broker {
         let mut wake = Vec::new();
         {
             let mut s = shard.state.lock().unwrap();
-            let mut inf = s
+            let inf = s
                 .inflight
                 .remove(&tag)
                 .ok_or(BrokerError::UnknownDeliveryTag(tag))?;
@@ -2425,17 +2563,19 @@ impl Broker {
             let q = s.queues.entry(inf.queue.clone()).or_default();
             q.stats.unacked = q.stats.unacked.saturating_sub(1);
             let entry = inf.entry;
-            if requeue && inf.task.retries_left > 0 {
-                inf.task.retries_left -= 1;
+            if requeue && inf.raw.retries_left() > 0 {
+                // One fewer retry: splice the retries varint in place —
+                // no decode + full re-encode of the envelope.
+                let raw = inf.raw.with_retries(inf.raw.retries_left() - 1);
                 q.stats.requeued += 1;
                 q.stats.ready += 1;
                 qname = inf.queue.clone();
                 q.push(Queued {
-                    priority: inf.task.priority,
+                    priority: raw.priority(),
                     seq,
                     entry,
                     bytes: inf.bytes,
-                    task: inf.task,
+                    raw,
                 });
                 requeued = true;
                 if self.inner.multi_tenant {
@@ -2498,11 +2638,11 @@ impl Broker {
             q.stats.requeued += 1;
             q.stats.ready += 1;
             q.push(Queued {
-                priority: inf.task.priority,
+                priority: inf.raw.priority(),
                 seq,
                 entry: inf.entry,
                 bytes: inf.bytes,
-                task: inf.task,
+                raw: inf.raw,
             });
             if self.inner.multi_tenant {
                 let ts = self.tstate_of_queue(&qname);
@@ -2550,11 +2690,11 @@ impl Broker {
                     // Redelivery does NOT consume a retry (it wasn't a
                     // task failure).
                     q.push(Queued {
-                        priority: inf.task.priority,
+                        priority: inf.raw.priority(),
                         seq,
                         entry: inf.entry,
                         bytes: inf.bytes,
-                        task: inf.task,
+                        raw: inf.raw,
                     });
                     if self.inner.multi_tenant {
                         let ts = self.tstate_of_queue(&inf.queue);
@@ -2624,27 +2764,28 @@ impl Broker {
         study_id: &str,
         step_name: &str,
     ) -> Vec<(u64, u64)> {
-        let covers = |t: &TaskEnvelope| {
-            let (template, lo, hi) = match &t.payload {
-                Payload::Step(s) => (&s.template, s.lo, s.hi),
-                Payload::Expansion(e) => (&e.template, e.lo, e.hi),
-                _ => return None,
-            };
-            (template.study_id == study_id && template.step_name == step_name)
-                .then_some((lo, hi))
+        // Read straight off the header — wave and range were parsed at
+        // admission; no payload decode happens here.
+        let covers = |h: &TaskHeader| match (&h.wave, h.range) {
+            (Some((study, step)), Some(range))
+                if study == study_id && step == step_name =>
+            {
+                Some(range)
+            }
+            _ => None,
         };
         let queue = self.internal_name(queue);
         let shard = &self.inner.shards[shard_of(&queue)];
         let s = shard.state.lock().unwrap();
         let mut out = Vec::new();
         if let Some(q) = s.queues.get(&queue) {
-            out.extend(q.iter().filter_map(|m| covers(&m.task)));
+            out.extend(q.iter().filter_map(|m| covers(m.raw.hdr())));
         }
         out.extend(
             s.inflight
                 .values()
                 .filter(|inf| inf.queue == queue)
-                .filter_map(|inf| covers(&inf.task)),
+                .filter_map(|inf| covers(inf.raw.hdr())),
         );
         out.sort_unstable();
         out
@@ -3679,7 +3820,9 @@ mod tests {
     fn byte_budget_splits_at_message_boundary() {
         let b = Broker::default();
         let c = b.register_consumer();
-        let size = ser::encode(&ping("q", "aa")).len() as u64;
+        // Budget accounting is in canonical wire-v2 bytes (what the
+        // queue stores), not the JSON encoding.
+        let size = ser::encode_v2(&ping("q", "aa")).len() as u64;
         for t in ["aa", "bb", "cc"] {
             b.publish(ping("q", t)).unwrap();
         }

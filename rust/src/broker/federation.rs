@@ -57,12 +57,13 @@ use crate::task::{ser, TaskEnvelope};
 use crate::util::hex::fnv1a;
 
 use super::api::{
-    merge_durability, merge_lease_stats, merge_queue_stats, merge_sched_stats, MemberHealth,
-    QueueError, TaskQueue,
+    merge_codec_stats, merge_durability, merge_lease_stats, merge_queue_stats, merge_sched_stats,
+    MemberHealth, QueueError, TaskQueue,
 };
 use super::client::{muxops, BrokerClient, ClientError};
 use super::core::{
-    Broker, BrokerTotals, Delivery, DurabilityStats, LeaseStats, QueueStats, SchedStats,
+    Broker, BrokerTotals, CodecStats, Delivery, DurabilityStats, LeaseStats, QueueStats,
+    SchedStats,
 };
 use super::sideops;
 use super::tenant::TenantUsage;
@@ -1715,6 +1716,25 @@ impl TaskQueue for FederatedClient {
             };
             if let Some(st) = st {
                 merge_sched_stats(&mut acc, &st);
+            }
+        }
+        acc
+    }
+
+    fn codec_stats(&self) -> CodecStats {
+        let mut acc = CodecStats::default();
+        for idx in self.live_indices() {
+            let st = match self.snapshot(idx) {
+                Snapshot::Local(b) => Some(b.codec_stats()),
+                Snapshot::DeadLocal => None,
+                Snapshot::Remote => self.member_remote(idx, |c| c.codec_stats()).ok(),
+                Snapshot::Mux => {
+                    let req = muxops::codec_req();
+                    self.mux_call(idx, &req, MUX_RPC_TIMEOUT, muxops::codec_rsp).ok()
+                }
+            };
+            if let Some(st) = st {
+                merge_codec_stats(&mut acc, &st);
             }
         }
         acc

@@ -48,7 +48,7 @@ use super::core::{Broker, BrokerError};
 use super::sideops;
 use super::wire::{self, BinMsg, Frame, HelloFeatures, WireError};
 use crate::net::ServeConfig;
-use crate::task::ser::{self, task_from_json, task_to_json};
+use crate::task::ser::{self, task_from_json, task_to_json, RawTask};
 use crate::util::json::Json;
 
 #[cfg(target_os = "linux")]
@@ -348,14 +348,38 @@ impl ConnCtx {
         dispatch(&self.broker, self.consumer, req)
     }
 
-    /// One binary batch frame: auth gate, decode, dispatch.
-    fn dispatch_bin(&self, body: &[u8]) -> BinMsg {
+    /// One binary batch frame: auth gate, decode, dispatch — returning
+    /// the encoded reply body. PopN is special-cased so its reply frame
+    /// is assembled straight from the stored blobs ([`pop_reply`]);
+    /// every other op round-trips through [`BinMsg`].
+    fn dispatch_bin(&self, body: &[u8]) -> Vec<u8> {
         if !self.authed {
-            return BinMsg::Err(AUTH_REQUIRED.into());
+            return wire::encode_bin(&BinMsg::Err(AUTH_REQUIRED.into()));
         }
         match wire::decode_bin(body) {
-            Ok(m) => dispatch_bin_msg(&self.broker, self.consumer, m),
-            Err(e) => BinMsg::Err(e.to_string()),
+            Ok(BinMsg::PopN {
+                max,
+                prefetch,
+                timeout_ms,
+                queues,
+                budget,
+            }) => {
+                // Threaded path: block this connection's thread up to
+                // the client's timeout.
+                let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+                pop_reply(
+                    &self.broker,
+                    self.consumer,
+                    max,
+                    prefetch,
+                    budget,
+                    &refs,
+                    Duration::from_millis(timeout_ms),
+                )
+                .frame
+            }
+            Ok(m) => wire::encode_bin(&dispatch_bin_msg(&self.broker, m)),
+            Err(e) => wire::encode_bin(&BinMsg::Err(e.to_string())),
         }
     }
 
@@ -369,14 +393,14 @@ impl ConnCtx {
     /// as a connection-fatal desync.
     fn bin_body_reply(&mut self, body: &[u8]) -> Vec<u8> {
         if !wire::is_corr(body) {
-            return wire::encode_bin(&self.dispatch_bin(body));
+            return self.dispatch_bin(body);
         }
         let (corr_id, inner) = match wire::decode_corr(body) {
             Ok(x) => x,
             Err(e) => return wire::encode_bin(&BinMsg::Err(e.to_string())),
         };
         let reply = if inner.first().is_some_and(|b| *b >= 0x80) {
-            wire::encode_bin(&self.dispatch_bin(inner))
+            self.dispatch_bin(inner)
         } else {
             let resp = match wire::parse_json_body(inner) {
                 Ok(req) => self.dispatch_json(&req),
@@ -513,7 +537,7 @@ impl BrokerService {
                     // Never block a pool thread in fetch_n: poll, and
                     // park the frame when the client asked to wait.
                     let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-                    let reply = pop_reply(
+                    let pop = pop_reply(
                         &broker,
                         consumer,
                         max,
@@ -522,8 +546,7 @@ impl BrokerService {
                         &refs,
                         Duration::ZERO,
                     );
-                    let empty = matches!(&reply, BinMsg::Deliveries(items) if items.is_empty());
-                    if empty && timeout_ms > 0 && !last_try {
+                    if pop.count == 0 && timeout_ms > 0 && !last_try {
                         // Park under *internal* queue names: ready-hook
                         // wake credits are keyed by them, and a scoped
                         // tenant's public names would never match.
@@ -534,12 +557,15 @@ impl BrokerService {
                             queues,
                         };
                     }
-                    reply_bin(reply, WakeHint::None)
+                    ServiceReply::Reply {
+                        frame: pop.frame,
+                        wake: WakeHint::None,
+                    }
                 }
                 // No wake hints here: the ready hook installed at serve
                 // time already injected one credit per message this op
                 // made ready, so emitting a hint too would double-wake.
-                other => reply_bin(dispatch_bin_msg(&broker, consumer, other), WakeHint::None),
+                other => reply_bin(dispatch_bin_msg(&broker, other), WakeHint::None),
             }
         } else {
             let req = match wire::parse_json_body(body) {
@@ -628,10 +654,15 @@ fn fetch_reply(
     wait: Duration,
 ) -> Json {
     match broker.fetch(consumer, queues, prefetch, wait) {
-        Some(d) => wire::ok(vec![
-            ("tag", Json::num(d.tag as f64)),
-            ("task", task_to_json(&d.task)),
-        ]),
+        Some(d) => {
+            // Legacy JSON delivery has to materialize the envelope — the
+            // one delivery shape that can't ship the stored blob.
+            broker.note_delivery_encodes(1);
+            wire::ok(vec![
+                ("tag", Json::num(d.tag as f64)),
+                ("task", task_to_json(&d.task)),
+            ])
+        }
         None => wire::ok(vec![("tag", Json::Null)]),
     }
 }
@@ -640,13 +671,29 @@ fn fetch_reply(
 /// `wire::MAX_FRAME` no matter what budget the client advertised.
 const POP_REPLY_BUDGET: u64 = 48 << 20;
 
+/// A fully-encoded PopN reply frame plus its delivery count. `pop_reply`
+/// assembles the frame straight from the broker's stored blobs, so the
+/// count rides along for the reactor's empty-window park decision (it
+/// can no longer be read off a `BinMsg::Deliveries`).
+struct PopFrame {
+    frame: Vec<u8>,
+    count: usize,
+}
+
 /// One binary PopN window: up to `max` deliveries within the byte
 /// budget. `budget` is the client's advertised credit (0 = none sent —
 /// a legacy client — which gets the full server ceiling); the effective
 /// budget is its min with [`POP_REPLY_BUDGET`], handed down to
-/// [`Broker::fetch_n_budgeted`] so the scheduler never grants past what
-/// the receiver asked to absorb. Same threaded-blocks / reactor-parks
-/// split as [`fetch_reply`].
+/// [`Broker::fetch_n_budgeted_raw`] so the scheduler never grants past
+/// what the receiver asked to absorb. Same threaded-blocks /
+/// reactor-parks split as [`fetch_reply`].
+///
+/// The returned frame copies each stored envelope blob exactly once —
+/// from its `Arc` into the reply buffer — with zero `encode_v2` calls
+/// on this path (counted in `codec_stats().saved_encodes`). Setting
+/// `BrokerConfig::codec_passthrough = false` (test-only) instead
+/// decodes and re-encodes every delivery, which the parity suite uses
+/// to prove the passthrough frame is byte-identical.
 fn pop_reply(
     broker: &Broker,
     consumer: u64,
@@ -655,13 +702,13 @@ fn pop_reply(
     budget: u64,
     queues: &[&str],
     wait: Duration,
-) -> BinMsg {
+) -> PopFrame {
     let budget = if budget == 0 {
         POP_REPLY_BUDGET
     } else {
         budget.min(POP_REPLY_BUDGET)
     };
-    let got = broker.fetch_n_budgeted(
+    let got = broker.fetch_n_budgeted_raw(
         consumer,
         queues,
         prefetch as usize,
@@ -669,65 +716,88 @@ fn pop_reply(
         budget,
         wait,
     );
-    // Defense in depth on the reply frame: the scheduler budgets by the
-    // broker's stored sizes (wire blob length for network publishes,
-    // re-encode length otherwise), so re-check against the transmitted
-    // encoding. Deliveries that would overflow go straight back to the
-    // queue (no retry cost — nothing failed) for the next PopN.
-    let mut items = Vec::new();
+    // Defense in depth on the reply frame: stored size and transmitted
+    // size are both the v2 blob length now, but re-check anyway so an
+    // in-process publisher that skipped the frame cap can't wedge the
+    // connection. Deliveries that would overflow the budget go straight
+    // back to the queue (no retry cost — nothing failed) for the next
+    // PopN; untransmittable ones are dead-lettered (the resubmission
+    // crawl recovers the samples).
+    let mut items: Vec<(u64, RawTask)> = Vec::new();
     let mut total = 0u64;
     for d in got {
-        let blob = ser::encode_v2(&d.task);
-        if blob.len() as u64 > POP_REPLY_BUDGET {
-            // Not transmittable over this protocol at all (only
-            // possible via an in-process publisher, which skips
-            // the frame cap): dead-letter it so it can't wedge
-            // the connection in a redeliver loop — the
-            // resubmission crawl recovers the samples.
+        let len = d.raw.wire_len() as u64;
+        if len > POP_REPLY_BUDGET {
             broker.nack(d.tag, false).ok();
             continue;
         }
-        if !items.is_empty() && total + blob.len() as u64 > budget {
+        if !items.is_empty() && total + len > budget {
             broker.requeue(d.tag).ok();
             continue;
         }
-        total += blob.len() as u64;
-        items.push((d.tag, blob));
+        total += len;
+        items.push((d.tag, d.raw));
     }
-    BinMsg::Deliveries(items)
+    let count = items.len();
+    let frame = if broker.config().codec_passthrough {
+        let borrowed: Vec<(u64, &[u8])> =
+            items.iter().map(|(tag, raw)| (*tag, raw.bytes())).collect();
+        broker.note_saved_encodes(count as u64);
+        wire::encode_bin_deliveries(&borrowed)
+    } else {
+        // Test-only struct fallback: materialize each envelope and
+        // serialize it again, exactly like the pre-blob delivery path.
+        let rebuilt: Vec<(u64, Vec<u8>)> = items
+            .iter()
+            .map(|(tag, raw)| (*tag, ser::encode_v2(&raw.decode())))
+            .collect();
+        broker.note_delivery_encodes(count as u64);
+        wire::encode_bin(&BinMsg::Deliveries(rebuilt))
+    };
+    PopFrame { frame, count }
 }
 
-/// Decode and publish one batch of v2 task blobs. Waking parked
-/// fetchers is the broker's job: `publish_batch_sized` pushes one ready
+/// Admit and publish one batch of task blobs. This is the single
+/// transcode point of the zero-copy plane: a wire-v2 blob is validated
+/// header-only ([`RawTask::from_wire`]) and its bytes kept verbatim as
+/// the canonical representation; v1/JSON input is decoded and
+/// re-encoded exactly once, here, at the admission edge (counted in
+/// `transcoded_v1`). Malformed blobs are rejected now — never later on
+/// the delivery path — and counted in `rejected_blobs`. Waking parked
+/// fetchers is the broker's job: `publish_batch_raw` pushes one ready
 /// credit per message through the ready hook.
 fn enqueue_blobs(broker: &Broker, blobs: Vec<Vec<u8>>) -> BinMsg {
-    // Size accounting uses the v2 blob length — the bytes actually
-    // transmitted — so no re-encode is needed on this hot path.
-    let mut sized = Vec::with_capacity(blobs.len());
+    let mut raws = Vec::with_capacity(blobs.len());
+    let mut transcoded = 0u64;
     for blob in blobs {
-        match ser::decode_wire(&blob) {
-            Ok(t) => sized.push((t, blob.len())),
-            Err(e) => return BinMsg::Err(format!("bad task: {e}")),
+        let is_v2 = blob.first() == Some(&ser::V2_MAGIC);
+        match RawTask::from_wire(blob) {
+            Ok(raw) => {
+                if !is_v2 {
+                    transcoded += 1;
+                }
+                raws.push(raw);
+            }
+            Err(e) => {
+                broker.note_rejected_blobs(1);
+                return BinMsg::Err(format!("bad task: {e}"));
+            }
         }
     }
-    let n = sized.len() as u64;
-    match broker.publish_batch_sized(sized) {
+    if transcoded > 0 {
+        broker.note_transcoded_v1(transcoded);
+    }
+    let n = raws.len() as u64;
+    match broker.publish_batch_raw(raws) {
         Ok(()) => BinMsg::OkCount(n),
         Err(e) => BinMsg::Err(e.to_string()),
     }
 }
 
-/// Handle one binary batch frame (threaded path: decode + dispatch).
-fn dispatch_bin(broker: &Broker, consumer: u64, body: &[u8]) -> BinMsg {
-    match wire::decode_bin(body) {
-        Ok(m) => dispatch_bin_msg(broker, consumer, m),
-        Err(e) => BinMsg::Err(e.to_string()),
-    }
-}
-
-/// Handle one decoded binary request. PopN blocks up to the client's
-/// timeout — reactor callers special-case PopN before reaching here.
-fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
+/// Handle one decoded binary request. PopN never reaches here — both
+/// servers special-case it at the frame layer so its reply can be
+/// assembled straight from the stored blobs (see [`pop_reply`]).
+fn dispatch_bin_msg(broker: &Broker, msg: BinMsg) -> BinMsg {
     match msg {
         BinMsg::EnqueueBatch(blobs) => enqueue_blobs(broker, blobs),
         BinMsg::AckBatch(tags) => match broker.ack_batch(&tags) {
@@ -738,25 +808,8 @@ fn dispatch_bin_msg(broker: &Broker, consumer: u64, msg: BinMsg) -> BinMsg {
             let n = broker.extend_batch(&tags, Duration::from_millis(lease_ms));
             BinMsg::OkCount(n as u64)
         }
-        BinMsg::PopN {
-            max,
-            prefetch,
-            timeout_ms,
-            queues,
-            budget,
-        } => {
-            let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
-            pop_reply(
-                broker,
-                consumer,
-                max,
-                prefetch,
-                budget,
-                &refs,
-                Duration::from_millis(timeout_ms),
-            )
-        }
-        // Reply ops arriving as requests are protocol errors.
+        // Reply ops (and frame-layer PopN) arriving here are protocol
+        // errors.
         other => BinMsg::Err(format!("unexpected request {other:?}")),
     }
 }

@@ -14,7 +14,9 @@
 //! [`super::client::BrokerClient`]'s accessors are thin wrappers over
 //! the same lists.
 
-use super::core::{Broker, BrokerTotals, ConsumerLease, DurabilityStats, QueueStats, SchedStats};
+use super::core::{
+    Broker, BrokerTotals, CodecStats, ConsumerLease, DurabilityStats, QueueStats, SchedStats,
+};
 use super::tenant::TenantUsage;
 use super::wire;
 use crate::util::json::Json;
@@ -87,6 +89,18 @@ pub static SCHED_STATS: &[Field<SchedStats>] = &[
         |s, v| s.overcommit_active = v as usize,
     ),
     Field::new("fruitless_scans", |s| s.fruitless_scans, |s, v| s.fruitless_scans = v),
+];
+
+/// `codec` reply fields — the zero-copy task plane's counters.
+pub static CODEC_STATS: &[Field<CodecStats>] = &[
+    Field::new("saved_encodes", |s| s.saved_encodes, |s, v| s.saved_encodes = v),
+    Field::new(
+        "delivery_encodes",
+        |s| s.delivery_encodes,
+        |s, v| s.delivery_encodes = v,
+    ),
+    Field::new("transcoded_v1", |s| s.transcoded_v1, |s, v| s.transcoded_v1 = v),
+    Field::new("rejected_blobs", |s| s.rejected_blobs, |s, v| s.rejected_blobs = v),
 ];
 
 /// `totals` reply fields.
@@ -183,6 +197,7 @@ pub static SIDE_OPS: &[(&str, SideOp)] = &[
     ("stats", op_stats),
     ("stats_all", op_stats_all),
     ("sched", op_sched),
+    ("codec", op_codec),
     ("totals", op_totals),
     ("durability", op_durability),
     ("leases", op_leases),
@@ -225,6 +240,10 @@ fn op_stats_all(broker: &Broker, _req: &Json) -> Json {
 
 fn op_sched(broker: &Broker, _req: &Json) -> Json {
     wire::ok(encode(SCHED_STATS, &broker.sched_stats()))
+}
+
+fn op_codec(broker: &Broker, _req: &Json) -> Json {
+    wire::ok(encode(CODEC_STATS, &broker.codec_stats()))
 }
 
 fn op_totals(broker: &Broker, _req: &Json) -> Json {

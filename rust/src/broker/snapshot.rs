@@ -9,10 +9,19 @@
 //! ## File format
 //!
 //! ```text
-//! snap   := "MSNP" ver:u8(=1) body check:varint     check = fnv1a64(body)
-//! body   := shard:varint next_lsn:varint count:varint
-//!           { entry:varint len:varint v2-envelope-bytes }*
+//! snap   := "MSNP" ver:u8 body check:varint         check = fnv1a64(body)
+//! body   := shard:varint next_lsn:varint count:varint row*
+//! row    := entry:varint len:varint v2-envelope-bytes            (ver 1)
+//!         | entry:varint ns:str len:varint v2-envelope-bytes     (ver 2)
 //! ```
+//!
+//! Version 2 exists only for tenant namespaces: a shard whose live set
+//! contains at least one namespaced entry writes ver 2 rows (the
+//! namespace lives in the queue *key*, never in the envelope bytes);
+//! otherwise the writer emits exactly the ver-1 format, so
+//! single-tenant snapshot files are byte-identical to pre-tenancy
+//! builds. Row blobs are `Arc`-shared with the live queue entries —
+//! writing a snapshot serializes nothing.
 //!
 //! Writes are atomic: the file is written to `<name>.tmp`, `fsync`ed,
 //! then renamed over the live name — a crash mid-write leaves the
@@ -23,14 +32,19 @@
 
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
-use crate::task::ser::{get_uvarint, put_uvarint};
+use crate::task::ser::{get_str, get_uvarint, put_str, put_uvarint};
 use crate::util::hex::fnv1a;
 
 /// Leading magic of every snapshot file.
 pub const SNAP_MAGIC: &[u8; 4] = b"MSNP";
-/// Current snapshot format version.
+/// Base snapshot format version (no tenant namespaces).
 pub const SNAP_VERSION: u8 = 1;
+/// Namespaced format: each row carries its tenant namespace string.
+/// Written only when at least one entry is namespaced, so single-tenant
+/// files stay byte-identical to version-1 output.
+pub const SNAP_VERSION_NS: u8 = 2;
 
 /// Decoded contents of one shard snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -39,38 +53,46 @@ pub struct Snapshot {
     pub shard: u64,
     /// WAL LSN horizon: every record with a lower LSN is reflected here.
     pub next_lsn: u64,
-    /// Live tasks as (entry id, wire-v2 envelope bytes), enqueue order.
-    pub entries: Vec<(u64, Vec<u8>)>,
+    /// Live tasks as (entry id, tenant namespace, wire-v2 envelope
+    /// bytes) in enqueue order. The namespace is empty for the default
+    /// tenant; the blob is `Arc`-shared with the live queue entry.
+    pub entries: Vec<(u64, String, Arc<[u8]>)>,
 }
 
 impl Snapshot {
-    /// Serialize to the on-disk format.
+    /// Serialize to the on-disk format. Emits version 1 unless some
+    /// entry carries a tenant namespace (see [`SNAP_VERSION_NS`]).
     pub fn encode(&self) -> Vec<u8> {
+        let namespaced = self.entries.iter().any(|(_, ns, _)| !ns.is_empty());
+        let ver = if namespaced { SNAP_VERSION_NS } else { SNAP_VERSION };
         let mut body = Vec::with_capacity(32 + self.entries.len() * 64);
         put_uvarint(&mut body, self.shard);
         put_uvarint(&mut body, self.next_lsn);
         put_uvarint(&mut body, self.entries.len() as u64);
-        for (entry, blob) in &self.entries {
+        for (entry, ns, blob) in &self.entries {
             put_uvarint(&mut body, *entry);
+            if namespaced {
+                put_str(&mut body, ns);
+            }
             put_uvarint(&mut body, blob.len() as u64);
             body.extend_from_slice(blob);
         }
         let mut out = Vec::with_capacity(body.len() + 16);
         out.extend_from_slice(SNAP_MAGIC);
-        out.push(SNAP_VERSION);
+        out.push(ver);
         out.extend_from_slice(&body);
         put_uvarint(&mut out, fnv1a(&body));
         out
     }
 
-    /// Parse the on-disk format, validating magic, version, checksum,
-    /// and exact length.
+    /// Parse the on-disk format (either version), validating magic,
+    /// version, checksum, and exact length.
     pub fn decode(bytes: &[u8]) -> Result<Snapshot, String> {
         let rest = bytes
             .strip_prefix(SNAP_MAGIC.as_slice())
             .ok_or("not a snapshot file (bad magic)")?;
         let (&ver, rest) = rest.split_first().ok_or("truncated snapshot header")?;
-        if ver != SNAP_VERSION {
+        if ver != SNAP_VERSION && ver != SNAP_VERSION_NS {
             return Err(format!("unsupported snapshot version {ver}"));
         }
         // The checksum varint sits at the tail; everything between the
@@ -84,15 +106,18 @@ impl Snapshot {
         let mut entries = Vec::with_capacity((count as usize).min(4096));
         for _ in 0..count {
             let entry = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot entry: {e}"))?;
+            let ns = if ver == SNAP_VERSION_NS {
+                get_str(rest, &mut pos).map_err(|e| format!("snapshot ns: {e}"))?
+            } else {
+                String::new()
+            };
             let len = get_uvarint(rest, &mut pos)
                 .map_err(|e| format!("snapshot blob len: {e}"))? as usize;
             let end = pos.checked_add(len).ok_or("snapshot blob length overflow")?;
-            let blob = rest
-                .get(pos..end)
-                .ok_or("truncated snapshot blob")?
-                .to_vec();
+            let blob: Arc<[u8]> =
+                Arc::from(rest.get(pos..end).ok_or("truncated snapshot blob")?);
             pos = end;
-            entries.push((entry, blob));
+            entries.push((entry, ns, blob));
         }
         let body_len = pos;
         let check = get_uvarint(rest, &mut pos).map_err(|e| format!("snapshot checksum: {e}"))?;
@@ -150,17 +175,20 @@ mod tests {
     use crate::task::ser;
     use crate::task::{ControlMsg, Payload, TaskEnvelope};
 
+    fn blob(t: &str) -> Arc<[u8]> {
+        ser::encode_v2(&TaskEnvelope::new(
+            "q",
+            Payload::Control(ControlMsg::Ping { token: t.into() }),
+        ))
+        .into()
+    }
+
     fn snap() -> Snapshot {
-        let blob = |t: &str| {
-            ser::encode_v2(&TaskEnvelope::new(
-                "q",
-                Payload::Control(ControlMsg::Ping { token: t.into() }),
-            ))
-        };
+        let ns = String::new;
         Snapshot {
             shard: 3,
             next_lsn: 42,
-            entries: vec![(7, blob("a")), (9, blob("b")), (40, blob("c"))],
+            entries: vec![(7, ns(), blob("a")), (9, ns(), blob("b")), (40, ns(), blob("c"))],
         }
     }
 
@@ -174,6 +202,21 @@ mod tests {
             entries: vec![],
         };
         assert_eq!(Snapshot::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn namespaces_roundtrip_and_only_upgrade_the_version_when_present() {
+        // All-default entries: version byte stays 1, so single-tenant
+        // files are byte-identical to pre-tenancy output.
+        let plain = snap();
+        assert_eq!(plain.encode()[4], SNAP_VERSION);
+        // One namespaced entry upgrades the whole file to version 2 and
+        // survives the roundtrip.
+        let mut ns_snap = snap();
+        ns_snap.entries[1].1 = "acme".into();
+        let bytes = ns_snap.encode();
+        assert_eq!(bytes[4], SNAP_VERSION_NS);
+        assert_eq!(Snapshot::decode(&bytes).unwrap(), ns_snap);
     }
 
     #[test]

@@ -16,7 +16,17 @@
 //!           | 0x02 entry:varint                   Ack      (task completed)
 //!           | 0x03 entry:varint                   Nack     (dead-lettered)
 //!           | 0x04 entry:varint                   Requeue  (retry consumed)
+//!           | 0x05 ns:str len:varint v2-bytes     EnqueueNs (namespaced tenant)
 //! ```
+//!
+//! `EnqueueNs` exists because tenant namespacing lives in the broker's
+//! queue *key*, never in the envelope bytes: a non-default tenant's
+//! publish logs its namespace alongside the unmodified blob, and a
+//! default-tenant log contains only pre-existing ops — so single-tenant
+//! WAL files are byte-identical to those of a tenancy-unaware build.
+//! The blob in either enqueue op is the *same* `Arc` allocation the
+//! shard queue holds (see DESIGN.md "Zero-Copy Task Plane"): appending
+//! shares bytes, it does not re-encode.
 //!
 //! Each record carries its own monotonic per-shard LSN; an `Enqueue`'s
 //! LSN doubles as the durable *entry id* that later `Ack`/`Nack`/
@@ -45,10 +55,10 @@ use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::task::ser::{self, get_uvarint, put_uvarint};
-use crate::task::TaskEnvelope;
+use crate::task::ser::{self, get_uvarint, put_str, put_uvarint, RawTask};
 use crate::util::hex::fnv1a;
 
 /// When appended records are pushed to stable storage.
@@ -123,13 +133,20 @@ const OP_ENQUEUE: u8 = 0x01;
 const OP_ACK: u8 = 0x02;
 const OP_NACK: u8 = 0x03;
 const OP_REQUEUE: u8 = 0x04;
+const OP_ENQUEUE_NS: u8 = 0x05;
 
 /// The durable operation a WAL record describes.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WalOp {
     /// A task entered the queue; the record's LSN is its durable entry
-    /// id. The blob is the wire-v2 envelope as published.
-    Enqueue(Vec<u8>),
+    /// id. The blob is the wire-v2 envelope as published — shared by
+    /// `Arc` with the live queue entry, not re-encoded.
+    Enqueue(Arc<[u8]>),
+    /// [`WalOp::Enqueue`] by a non-default tenant: the tenant namespace
+    /// rides alongside the blob (the blob itself keeps the public queue
+    /// name). Never written by the default tenant, so single-tenant
+    /// logs contain no trace of tenancy.
+    EnqueueNs(String, Arc<[u8]>),
     /// The entry completed successfully and left the durable set.
     Ack(u64),
     /// The entry was dead-lettered (nack without requeue, exhausted
@@ -155,6 +172,12 @@ pub fn encode_record(out: &mut Vec<u8>, rec: &WalRecord) {
     match &rec.op {
         WalOp::Enqueue(blob) => {
             body.push(OP_ENQUEUE);
+            put_uvarint(&mut body, blob.len() as u64);
+            body.extend_from_slice(blob);
+        }
+        WalOp::EnqueueNs(ns, blob) => {
+            body.push(OP_ENQUEUE_NS);
+            put_str(&mut body, ns);
             put_uvarint(&mut body, blob.len() as u64);
             body.extend_from_slice(blob);
         }
@@ -203,9 +226,16 @@ fn decode_one(buf: &[u8], pos: &mut usize) -> Option<WalRecord> {
     let op = match kind {
         OP_ENQUEUE => {
             let blen = get_uvarint(body, &mut bp).ok()? as usize;
-            let blob = body.get(bp..bp.checked_add(blen)?)?.to_vec();
+            let blob: Arc<[u8]> = Arc::from(body.get(bp..bp.checked_add(blen)?)?);
             bp += blen;
             WalOp::Enqueue(blob)
+        }
+        OP_ENQUEUE_NS => {
+            let ns = ser::get_str(body, &mut bp).ok()?;
+            let blen = get_uvarint(body, &mut bp).ok()? as usize;
+            let blob: Arc<[u8]> = Arc::from(body.get(bp..bp.checked_add(blen)?)?);
+            bp += blen;
+            WalOp::EnqueueNs(ns, blob)
         }
         OP_ACK => WalOp::Ack(get_uvarint(body, &mut bp).ok()?),
         OP_NACK => WalOp::Nack(get_uvarint(body, &mut bp).ok()?),
@@ -241,12 +271,24 @@ pub fn decode_records(buf: &[u8]) -> DecodeOutcome {
     out
 }
 
+/// One live task recovered from snapshot + WAL: the canonical blob
+/// (allocation reused — restart does not decode + re-encode the live
+/// set) and the tenant namespace its queue key carries (empty string =
+/// default tenant).
+#[derive(Debug, Clone)]
+pub struct RecoveredTask {
+    /// Tenant namespace for the queue key; empty for the default tenant.
+    pub ns: String,
+    /// The task's canonical wire-v2 blob, header-validated.
+    pub raw: RawTask,
+}
+
 /// The durable state of one shard after composing snapshot + WAL replay.
 #[derive(Debug, Default)]
 pub struct ReplayResult {
     /// Live (neither acked nor dead-lettered) tasks by entry id, in
     /// enqueue order. Retry budgets reflect logged `Requeue` records.
-    pub live: BTreeMap<u64, TaskEnvelope>,
+    pub live: BTreeMap<u64, RecoveredTask>,
     /// The LSN the shard's WAL should continue from.
     pub next_lsn: u64,
     /// Enqueue records whose envelope blob failed to decode (corrupt
@@ -254,13 +296,14 @@ pub struct ReplayResult {
     pub undecodable: u64,
 }
 
-/// Rebuild a shard's live task set from snapshot contents (entry id →
-/// envelope blob, plus the snapshot's LSN horizon) and the WAL records
-/// appended after — or overlapping — it. Records with `lsn <
-/// snapshot_next_lsn` are skipped, which makes the crash window between
-/// snapshot rename and WAL truncation exactly idempotent.
+/// Rebuild a shard's live task set from snapshot contents (entry id,
+/// tenant namespace, envelope blob — plus the snapshot's LSN horizon)
+/// and the WAL records appended after — or overlapping — it. Records
+/// with `lsn < snapshot_next_lsn` are skipped, which makes the crash
+/// window between snapshot rename and WAL truncation exactly
+/// idempotent.
 pub fn replay(
-    snapshot_live: &[(u64, Vec<u8>)],
+    snapshot_live: &[(u64, String, Arc<[u8]>)],
     snapshot_next_lsn: u64,
     records: &[WalRecord],
 ) -> ReplayResult {
@@ -268,13 +311,20 @@ pub fn replay(
         next_lsn: snapshot_next_lsn.max(1),
         ..Default::default()
     };
-    for (entry, blob) in snapshot_live {
-        match ser::decode_wire(blob) {
-            Ok(t) => {
-                out.live.insert(*entry, t);
+    let mut admit = |live: &mut BTreeMap<u64, RecoveredTask>,
+                     undecodable: &mut u64,
+                     entry: u64,
+                     ns: &str,
+                     blob: &Arc<[u8]>| {
+        match RawTask::from_shared(blob.clone()) {
+            Ok(raw) => {
+                live.insert(entry, RecoveredTask { ns: ns.to_string(), raw });
             }
-            Err(_) => out.undecodable += 1,
+            Err(_) => *undecodable += 1,
         }
+    };
+    for (entry, ns, blob) in snapshot_live {
+        admit(&mut out.live, &mut out.undecodable, *entry, ns, blob);
     }
     for rec in records {
         if rec.lsn < snapshot_next_lsn {
@@ -282,18 +332,23 @@ pub fn replay(
         }
         out.next_lsn = out.next_lsn.max(rec.lsn + 1);
         match &rec.op {
-            WalOp::Enqueue(blob) => match ser::decode_wire(blob) {
-                Ok(t) => {
-                    out.live.insert(rec.lsn, t);
-                }
-                Err(_) => out.undecodable += 1,
-            },
+            WalOp::Enqueue(blob) => {
+                admit(&mut out.live, &mut out.undecodable, rec.lsn, "", blob);
+            }
+            WalOp::EnqueueNs(ns, blob) => {
+                admit(&mut out.live, &mut out.undecodable, rec.lsn, ns, blob);
+            }
             WalOp::Ack(e) | WalOp::Nack(e) => {
                 out.live.remove(e);
             }
             WalOp::Requeue(e) => {
                 if let Some(t) = out.live.get_mut(e) {
-                    t.retries_left = t.retries_left.saturating_sub(1);
+                    let left = t.raw.retries_left();
+                    if left > 0 {
+                        // Splice the retries varint — same as the live
+                        // nack path, no decode/re-encode.
+                        t.raw = t.raw.with_retries(left - 1);
+                    }
                 }
             }
         }
@@ -579,7 +634,7 @@ impl ShardWal {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::task::{ControlMsg, Payload};
+    use crate::task::{ControlMsg, Payload, TaskEnvelope};
 
     fn ping(token: &str) -> TaskEnvelope {
         TaskEnvelope::new(
@@ -593,7 +648,7 @@ mod tests {
     fn enqueue_rec(lsn: u64, token: &str) -> WalRecord {
         WalRecord {
             lsn,
-            op: WalOp::Enqueue(ser::encode_v2(&ping(token))),
+            op: WalOp::Enqueue(ser::encode_v2(&ping(token)).into()),
         }
     }
 
@@ -604,6 +659,10 @@ mod tests {
             WalRecord { lsn: 2, op: WalOp::Ack(1) },
             WalRecord { lsn: 3, op: WalOp::Nack(7) },
             WalRecord { lsn: 4, op: WalOp::Requeue(9) },
+            WalRecord {
+                lsn: 5,
+                op: WalOp::EnqueueNs("acme".into(), ser::encode_v2(&ping("ns")).into()),
+            },
         ];
         let mut buf = Vec::new();
         for r in &recs {
@@ -664,7 +723,7 @@ mod tests {
         let mut t = ping("x");
         t.retries_left = 3;
         let recs = vec![
-            WalRecord { lsn: 1, op: WalOp::Enqueue(ser::encode_v2(&t)) },
+            WalRecord { lsn: 1, op: WalOp::Enqueue(ser::encode_v2(&t).into()) },
             enqueue_rec(2, "y"),
             enqueue_rec(3, "z"),
             WalRecord { lsn: 4, op: WalOp::Ack(2) },
@@ -674,8 +733,37 @@ mod tests {
         let out = replay(&[], 1, &recs);
         assert_eq!(out.next_lsn, 7);
         assert_eq!(out.live.len(), 1);
-        assert_eq!(out.live[&1].retries_left, 2, "requeue consumed a retry");
+        assert_eq!(
+            out.live[&1].raw.retries_left(),
+            2,
+            "requeue consumed a retry"
+        );
+        // The spliced blob is what a fresh encode at retries=2 produces.
+        t.retries_left = 2;
+        assert_eq!(out.live[&1].raw.bytes(), &ser::encode_v2(&t)[..]);
         assert_eq!(out.undecodable, 0);
+    }
+
+    #[test]
+    fn replay_keeps_blob_allocation_and_namespace() {
+        let blob: Arc<[u8]> = ser::encode_v2(&ping("keep")).into();
+        let recs = vec![
+            WalRecord { lsn: 1, op: WalOp::Enqueue(blob.clone()) },
+            WalRecord {
+                lsn: 2,
+                op: WalOp::EnqueueNs("acme".into(), blob.clone()),
+            },
+        ];
+        let out = replay(&[], 1, &recs);
+        assert_eq!(out.live[&1].ns, "");
+        assert_eq!(out.live[&2].ns, "acme");
+        // Same allocation, not a decode + re-encode: pointer equality.
+        assert!(std::ptr::eq(
+            out.live[&1].raw.bytes().as_ptr(),
+            blob.as_ptr()
+        ));
+        // The namespaced record's blob still carries the public queue.
+        assert_eq!(out.live[&2].raw.queue(), "q");
     }
 
     #[test]
@@ -685,15 +773,18 @@ mod tests {
         // double-apply.
         let mut t = ping("snap");
         t.retries_left = 2;
-        let snap = vec![(5u64, ser::encode_v2(&t))];
+        let snap = vec![(5u64, String::new(), Arc::from(&ser::encode_v2(&t)[..]))];
         let recs = vec![
-            WalRecord { lsn: 5, op: WalOp::Enqueue(ser::encode_v2(&ping("stale"))) },
+            WalRecord {
+                lsn: 5,
+                op: WalOp::Enqueue(ser::encode_v2(&ping("stale")).into()),
+            },
             WalRecord { lsn: 7, op: WalOp::Requeue(5) }, // below horizon: skip
             WalRecord { lsn: 12, op: WalOp::Requeue(5) }, // above: apply
         ];
         let out = replay(&snap, 10, &recs);
         assert_eq!(out.live.len(), 1);
-        assert_eq!(out.live[&5].retries_left, 1);
+        assert_eq!(out.live[&5].raw.retries_left(), 1);
         assert_eq!(out.next_lsn, 13);
     }
 

@@ -503,6 +503,25 @@ pub fn encode_bin(msg: &BinMsg) -> Vec<u8> {
     out
 }
 
+/// Encode a `Deliveries` reply frame straight from borrowed blob
+/// slices, byte-identical to `encode_bin(&BinMsg::Deliveries(..))`.
+/// This is the zero-copy delivery path: the broker's stored `Arc` bytes
+/// flow into the reply without first being collected into owned
+/// `Vec<u8>`s (which is what building a [`BinMsg`] would force).
+pub fn encode_bin_deliveries(items: &[(u64, &[u8])]) -> Vec<u8> {
+    let total: usize = items.iter().map(|(_, b)| b.len() + 16).sum();
+    let mut out = Vec::with_capacity(16 + total);
+    out.push(BIN_MAGIC);
+    out.push(OP_DELIVERIES);
+    put_uvarint(&mut out, items.len() as u64);
+    for (tag, bytes) in items {
+        put_uvarint(&mut out, *tag);
+        put_uvarint(&mut out, bytes.len() as u64);
+        out.extend_from_slice(bytes);
+    }
+    out
+}
+
 fn bad(e: impl std::fmt::Display) -> WireError {
     WireError::BadFrame(e.to_string())
 }
@@ -794,6 +813,25 @@ mod tests {
             let body = encode_bin(msg);
             assert_eq!(&decode_bin(&body).unwrap(), msg);
         }
+    }
+
+    #[test]
+    fn borrowed_deliveries_encode_is_byte_identical() {
+        let owned: Vec<(u64, Vec<u8>)> = vec![
+            (9, vec![0xB2, 2, 0, 1]),
+            (u64::MAX, vec![]),
+            (0, vec![0xFF; 300]),
+        ];
+        let borrowed: Vec<(u64, &[u8])> =
+            owned.iter().map(|(t, b)| (*t, b.as_slice())).collect();
+        assert_eq!(
+            encode_bin_deliveries(&borrowed),
+            encode_bin(&BinMsg::Deliveries(owned)),
+        );
+        assert_eq!(
+            encode_bin_deliveries(&[]),
+            encode_bin(&BinMsg::Deliveries(vec![])),
+        );
     }
 
     #[test]

@@ -159,6 +159,13 @@ pub struct LoadgenReport {
     pub ack_p99_us: f64,
     /// Members that failed over during the run (chaos victims).
     pub failovers: Vec<String>,
+    /// Envelope encodes the zero-copy plane avoided, summed over the
+    /// surviving members (WAL records, snapshot rows, deliveries).
+    pub codec_saved_encodes: u64,
+    /// Envelope encodes that still happened on a delivery path, summed
+    /// over the surviving members. A wire-v2 fleet must read 0 — the
+    /// full-mode loadgen gate asserts exactly that.
+    pub codec_delivery_encodes: u64,
 }
 
 /// Zipf-or-uniform queue picker over `steps` queues.
@@ -344,6 +351,22 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> LoadgenReport {
             failovers.push(addrs[victim].clone());
         }
     }
+    // Read each surviving member's codec counters before tearing the
+    // servers down (a chaos victim's server is already gone — skip it).
+    let mut codec_saved_encodes = 0u64;
+    let mut codec_delivery_encodes = 0u64;
+    for (idx, server) in servers.lock().unwrap().iter().enumerate() {
+        if server.is_none() {
+            continue;
+        }
+        if let Some(st) = BrokerClient::connect(&addrs[idx])
+            .ok()
+            .and_then(|mut c| c.codec_stats().ok())
+        {
+            codec_saved_encodes += st.saved_encodes;
+            codec_delivery_encodes += st.delivery_encodes;
+        }
+    }
     for server in servers.lock().unwrap().iter_mut() {
         if let Some(server) = server.take() {
             server.shutdown();
@@ -379,6 +402,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> LoadgenReport {
         ack_p95_us: percentile(&ack, 95.0),
         ack_p99_us: percentile(&ack, 99.0),
         failovers,
+        codec_saved_encodes,
+        codec_delivery_encodes,
     }
 }
 
@@ -559,6 +584,11 @@ pub fn report_json(r: &LoadgenReport) -> Json {
             "failovers",
             Json::arr(r.failovers.iter().map(|f| Json::str(f.as_str())).collect()),
         ),
+        ("codec_saved_encodes", Json::num(r.codec_saved_encodes as f64)),
+        (
+            "codec_delivery_encodes",
+            Json::num(r.codec_delivery_encodes as f64),
+        ),
     ])
 }
 
@@ -567,7 +597,7 @@ pub fn render_report(r: &LoadgenReport) -> String {
     format!(
         "loadgen [{} member(s)]: {} enqueued @ {:.0}/s, {} delivered @ {:.0}/s, \
          {} acked, {} dup, {} lost\n  latency us (p50/p95/p99): enqueue-batch \
-         {:.0}/{:.0}/{:.0}, deliver {:.0}/{:.0}/{:.0}, ack-batch {:.0}/{:.0}/{:.0}\n{}",
+         {:.0}/{:.0}/{:.0}, deliver {:.0}/{:.0}/{:.0}, ack-batch {:.0}/{:.0}/{:.0}\n{}{}",
         r.members,
         r.enqueued,
         r.enqueue_per_s,
@@ -585,6 +615,10 @@ pub fn render_report(r: &LoadgenReport) -> String {
         r.ack_p50_us,
         r.ack_p95_us,
         r.ack_p99_us,
+        format!(
+            "  codec: {} encodes saved, {} delivery encodes\n",
+            r.codec_saved_encodes, r.codec_delivery_encodes
+        ),
         if r.failovers.is_empty() {
             String::new()
         } else {

@@ -76,6 +76,7 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
     let totals = broker.totals();
     let durability = broker.durability_stats();
     let sched = broker.sched_stats();
+    let codec = broker.codec_stats();
     let leases = broker.lease_stats();
     let consumers: Vec<Json> = leases.consumers.iter().map(consumer_lease_json).collect();
     let mut sections = vec![
@@ -106,6 +107,15 @@ pub fn broker_sections_json(broker: &dyn TaskQueue) -> Vec<(&'static str, Json)>
                 ("grant_queue_len", Json::num(sched.grant_queue_len as f64)),
                 ("overcommit_active", Json::num(sched.overcommit_active as f64)),
                 ("fruitless_scans", Json::num(sched.fruitless_scans as f64)),
+            ]),
+        ),
+        (
+            "codec",
+            Json::obj(vec![
+                ("saved_encodes", Json::num(codec.saved_encodes as f64)),
+                ("delivery_encodes", Json::num(codec.delivery_encodes as f64)),
+                ("transcoded_v1", Json::num(codec.transcoded_v1 as f64)),
+                ("rejected_blobs", Json::num(codec.rejected_blobs as f64)),
             ]),
         ),
         (
@@ -207,6 +217,13 @@ pub fn status_report_full(
         out.push_str(&format!(
             "scheduler: {} granted, {} waiting for grants, {} overcommitted, {} fruitless scans\n",
             sched.granted, sched.grant_queue_len, sched.overcommit_active, sched.fruitless_scans
+        ));
+    }
+    let codec = broker.codec_stats();
+    if codec.saved_encodes > 0 || codec.delivery_encodes > 0 || codec.rejected_blobs > 0 {
+        out.push_str(&format!(
+            "codec: {} encodes saved, {} delivery encodes, {} v1 transcodes, {} rejected blobs\n",
+            codec.saved_encodes, codec.delivery_encodes, codec.transcoded_v1, codec.rejected_blobs
         ));
     }
     let leases = broker.lease_stats();

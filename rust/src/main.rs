@@ -1393,12 +1393,34 @@ fn cmd_loadgen(args: &[String]) -> i32 {
             eprintln!("FAIL: 4-member aggregate is {speedup:.2}x of 1-member (< 2x target)");
             return 1;
         }
+        // Zero-copy delivery gate: the whole fleet speaks wire v2, so no
+        // member may have re-encoded an envelope on its delivery path.
+        if !quick {
+            for r in &reports {
+                if r.codec_delivery_encodes != 0 {
+                    eprintln!(
+                        "FAIL: {} delivery-path envelope encodes (expected 0: zero-copy pop)",
+                        r.codec_delivery_encodes
+                    );
+                    return 1;
+                }
+            }
+        }
         0
     } else {
         let r = loadgen::run_loadgen(&cfg);
         print!("{}", loadgen::render_report(&r));
+        let delivery_encodes = r.codec_delivery_encodes;
         if let Err(e) = loadgen::write_outputs(&[r], None, quick, "loadgen") {
             eprintln!("write results: {e}");
+        }
+        // Same zero-copy delivery gate as the scaling section: a wire-v2
+        // worker fleet must never trigger an envelope encode on pop.
+        if !quick && delivery_encodes != 0 {
+            eprintln!(
+                "FAIL: {delivery_encodes} delivery-path envelope encodes (expected 0: zero-copy pop)"
+            );
+            return 1;
         }
         0
     }

@@ -182,7 +182,13 @@ impl Conn {
     }
 
     /// Append one response frame (header + body) to the write buffer.
+    /// One exact-size reservation up front: PopN replies arrive here
+    /// pre-encoded straight from the broker's stored blobs (the
+    /// zero-copy delivery path), so this copy into the reused `outbuf`
+    /// is the only one between the shard queue and the socket — don't
+    /// let amortized doubling overshoot it on a multi-megabyte window.
     pub fn queue_reply(&mut self, body: &[u8]) {
+        self.outbuf.reserve(4 + body.len());
         self.outbuf
             .extend_from_slice(&(body.len() as u32).to_be_bytes());
         self.outbuf.extend_from_slice(body);

@@ -24,6 +24,8 @@
 //! in flight. Envelope bytes are identical across v2–v4; the version only
 //! changes what may wrap them on the socket.
 
+use std::sync::Arc;
+
 use super::*;
 use crate::util::json::{to_string, Json};
 
@@ -92,12 +94,20 @@ pub fn put_str(out: &mut Vec<u8>, s: &str) {
 }
 
 /// Read a length-prefixed UTF-8 string at `*pos`, advancing it.
+/// Validates before copying: invalid UTF-8 never allocates.
 pub fn get_str(buf: &[u8], pos: &mut usize) -> Result<String, String> {
+    Ok(get_str_ref(buf, pos)?.to_owned())
+}
+
+/// Read a length-prefixed UTF-8 string at `*pos` without copying it —
+/// the header-only decoder's way of validating strings it does not
+/// materialize.
+fn get_str_ref<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a str, String> {
     let len = get_uvarint(buf, pos)? as usize;
     let end = pos.checked_add(len).ok_or("string length overflow")?;
     let bytes = buf.get(*pos..end).ok_or("truncated string")?;
     *pos = end;
-    String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad utf-8 in string: {e}"))
+    std::str::from_utf8(bytes).map_err(|e| format!("bad utf-8 in string: {e}"))
 }
 
 fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8, String> {
@@ -495,6 +505,277 @@ pub fn decode_wire(bytes: &[u8]) -> Result<TaskEnvelope, String> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// header-only decode & the canonical in-broker blob
+// ---------------------------------------------------------------------------
+
+/// Payload kind as the header-only decoder reports it — everything the
+/// broker's routing and scheduling layers need to know about a payload
+/// without materializing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// `Payload::Expansion`.
+    Expansion,
+    /// `Payload::Step`.
+    Step,
+    /// `Payload::Aggregate`.
+    Aggregate,
+    /// `Payload::Control(ControlMsg::StopWorker)`.
+    Stop,
+    /// `Payload::Control(ControlMsg::Ping { .. })`.
+    Ping,
+}
+
+/// The routing fields of a v2 envelope, decoded without materializing
+/// the payload: queue, priority, retries, payload kind, and — for
+/// template payloads — the `(study, step)` wave key and sample range
+/// the SRWF scheduler keys on.
+///
+/// [`TaskHeader::peek`] walks the *entire* envelope with the same
+/// grammar as [`decode_v2`] (every varint parsed, every string
+/// UTF-8-validated, trailing bytes rejected), so a blob with a valid
+/// header is a blob [`decode_v2`] cannot fail on. That equivalence is
+/// what lets admission validate once and every later hop trust the
+/// bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskHeader {
+    /// Destination queue.
+    pub queue: String,
+    /// Delivery priority (higher delivers first).
+    pub priority: u8,
+    /// Remaining redelivery budget.
+    pub retries_left: u32,
+    /// Payload kind byte(s), decoded.
+    pub kind: PayloadKind,
+    /// `(study_id, step_name)` for expansion/step payloads — the wave
+    /// key the SRWF grant scheduler groups by.
+    pub wave: Option<(String, String)>,
+    /// `[lo, hi)` sample range for expansion/step payloads.
+    pub range: Option<(u64, u64)>,
+    /// Byte span of the retries varint inside the blob, for
+    /// [`RawTask::with_retries`]'s splice. Private: only meaningful
+    /// against the exact bytes this header was peeked from.
+    retries_span: (usize, usize),
+}
+
+impl TaskHeader {
+    /// Decode just the routing fields of a v2 blob, validating the
+    /// whole envelope. Accepts exactly the byte strings [`decode_v2`]
+    /// accepts and nothing else.
+    pub fn peek(buf: &[u8]) -> Result<TaskHeader, String> {
+        let mut pos = 0usize;
+        let magic = get_u8(buf, &mut pos)?;
+        if magic != V2_MAGIC {
+            return Err(format!("not a v2 envelope (leading byte {magic:#04x})"));
+        }
+        let ver = get_u8(buf, &mut pos)?;
+        if ver != WIRE_V2 {
+            return Err(format!("unsupported wire version {ver}"));
+        }
+        get_str_ref(buf, &mut pos)?; // id: validated, not materialized
+        let queue = get_str(buf, &mut pos)?;
+        let priority = get_u8(buf, &mut pos)?;
+        let retries_at = pos;
+        let retries_left = get_uvarint(buf, &mut pos)? as u32;
+        let retries_span = (retries_at, pos);
+        let mut wave = None;
+        let mut range = None;
+        let kind = match get_u8(buf, &mut pos)? {
+            P_EXPANSION => {
+                wave = Some(peek_template(buf, &mut pos)?);
+                let lo = get_uvarint(buf, &mut pos)?;
+                let hi = get_uvarint(buf, &mut pos)?;
+                get_uvarint(buf, &mut pos)?; // max_branch
+                range = Some((lo, hi));
+                PayloadKind::Expansion
+            }
+            P_STEP => {
+                wave = Some(peek_template(buf, &mut pos)?);
+                let lo = get_uvarint(buf, &mut pos)?;
+                let hi = get_uvarint(buf, &mut pos)?;
+                range = Some((lo, hi));
+                PayloadKind::Step
+            }
+            P_AGGREGATE => {
+                get_str_ref(buf, &mut pos)?; // study_id
+                get_str_ref(buf, &mut pos)?; // dir
+                get_uvarint(buf, &mut pos)?; // expected_bundles
+                PayloadKind::Aggregate
+            }
+            P_CONTROL => match get_u8(buf, &mut pos)? {
+                C_STOP => PayloadKind::Stop,
+                C_PING => {
+                    get_str_ref(buf, &mut pos)?; // token
+                    PayloadKind::Ping
+                }
+                other => return Err(format!("unknown control op byte {other:#04x}")),
+            },
+            other => return Err(format!("unknown payload kind byte {other:#04x}")),
+        };
+        if pos != buf.len() {
+            return Err(format!("trailing bytes after v2 envelope at {pos}"));
+        }
+        Ok(TaskHeader {
+            queue,
+            priority,
+            retries_left,
+            kind,
+            wave,
+            range,
+            retries_span,
+        })
+    }
+}
+
+/// Walk a template, materializing only `(study_id, step_name)` and
+/// validating (but not copying) everything else.
+fn peek_template(buf: &[u8], pos: &mut usize) -> Result<(String, String), String> {
+    let study_id = get_str(buf, pos)?;
+    let step_name = get_str(buf, pos)?;
+    match get_u8(buf, pos)? {
+        W_NULL => {
+            get_uvarint(buf, pos)?; // duration_us
+        }
+        W_SHELL => {
+            get_str_ref(buf, pos)?; // cmd
+            get_str_ref(buf, pos)?; // shell
+        }
+        W_BUILTIN => {
+            get_str_ref(buf, pos)?; // model
+        }
+        W_NOOP => {}
+        other => return Err(format!("unknown work kind byte {other:#04x}")),
+    }
+    get_uvarint(buf, pos)?; // samples_per_task
+    get_uvarint(buf, pos)?; // seed
+    Ok((study_id, step_name))
+}
+
+/// A task as the broker stores it: the canonical wire-v2 blob behind an
+/// `Arc`, plus its header-decoded routing fields.
+///
+/// One `RawTask` allocation is shared — Arc clone, no byte copy — by
+/// the shard queue entry, the in-flight record, the WAL `Enqueue`
+/// record, the snapshot row, and the delivery path, which memcpys the
+/// blob straight into the connection out-buffer. The envelope is
+/// serialized exactly once, at admission.
+///
+/// Invariant: `bytes` always satisfies [`TaskHeader::peek`] (admission
+/// constructs only through validating paths), so [`RawTask::decode`]
+/// cannot fail.
+#[derive(Debug, Clone)]
+pub struct RawTask {
+    bytes: Arc<[u8]>,
+    hdr: TaskHeader,
+}
+
+impl PartialEq for RawTask {
+    fn eq(&self, other: &Self) -> bool {
+        self.bytes == other.bytes
+    }
+}
+impl Eq for RawTask {}
+
+impl RawTask {
+    /// Admit a client-supplied wire blob as the canonical
+    /// representation. v2 bytes are validated by header peek and kept
+    /// verbatim (zero copies beyond the `Arc` wrap); v1 JSON is
+    /// transcoded once through the struct codec. Corrupt input of
+    /// either version is rejected here — never later, on delivery.
+    pub fn from_wire(bytes: Vec<u8>) -> Result<RawTask, String> {
+        match bytes.first() {
+            Some(&V2_MAGIC) => {
+                let hdr = TaskHeader::peek(&bytes)?;
+                Ok(RawTask { bytes: bytes.into(), hdr })
+            }
+            _ => Ok(Self::from_envelope(&decode_wire(&bytes)?)),
+        }
+    }
+
+    /// Re-admit a recovered blob (WAL replay, snapshot read), keeping
+    /// the existing allocation on the v2 fast path — restart does not
+    /// decode + re-encode the live set. Fallible because recovered
+    /// bytes may predate validation (a corrupt row that passed the
+    /// frame checksum); non-v2 blobs fall back to the transcode path.
+    pub fn from_shared(bytes: Arc<[u8]>) -> Result<RawTask, String> {
+        match bytes.first() {
+            Some(&V2_MAGIC) => {
+                let hdr = TaskHeader::peek(&bytes)?;
+                Ok(RawTask { bytes, hdr })
+            }
+            _ => Ok(Self::from_envelope(&decode_wire(&bytes)?)),
+        }
+    }
+
+    /// Canonicalize a decoded envelope (the in-process publish path and
+    /// the v1-transcode path): one `encode_v2`, then the header peek.
+    pub fn from_envelope(t: &TaskEnvelope) -> RawTask {
+        let bytes = encode_v2(t);
+        let hdr = TaskHeader::peek(&bytes).expect("freshly encoded v2 envelope has a valid header");
+        RawTask { bytes: bytes.into(), hdr }
+    }
+
+    /// The canonical wire-v2 bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Share the blob allocation (Arc clone, no copy) — what the WAL
+    /// record and the snapshot row hold.
+    pub fn share(&self) -> Arc<[u8]> {
+        self.bytes.clone()
+    }
+
+    /// Blob length in bytes — the task's size for every budget and
+    /// quota account (one number for WAL, wire, and memory).
+    pub fn wire_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The header-decoded routing fields.
+    pub fn hdr(&self) -> &TaskHeader {
+        &self.hdr
+    }
+
+    /// Destination queue (as published — tenant namespacing lives
+    /// outside the blob).
+    pub fn queue(&self) -> &str {
+        &self.hdr.queue
+    }
+
+    /// Delivery priority.
+    pub fn priority(&self) -> u8 {
+        self.hdr.priority
+    }
+
+    /// Remaining redelivery budget.
+    pub fn retries_left(&self) -> u32 {
+        self.hdr.retries_left
+    }
+
+    /// Materialize the envelope (in-process consumers and the v1 JSON
+    /// delivery fallback). Infallible by the type's invariant: the
+    /// bytes were header-validated at admission and `peek` accepts
+    /// exactly the language `decode_v2` accepts.
+    pub fn decode(&self) -> TaskEnvelope {
+        decode_v2(&self.bytes).expect("admission-validated blob decodes")
+    }
+
+    /// A copy of this task with the retries varint spliced to
+    /// `retries`: the nack-requeue path's way of decrementing the
+    /// budget without a decode/re-encode round trip. Allocates one new
+    /// blob (the bytes differ, so it must).
+    pub fn with_retries(&self, retries: u32) -> RawTask {
+        let (a, b) = self.hdr.retries_span;
+        let mut out = Vec::with_capacity(self.bytes.len() + 4);
+        out.extend_from_slice(&self.bytes[..a]);
+        put_uvarint(&mut out, retries as u64);
+        out.extend_from_slice(&self.bytes[b..]);
+        let hdr = TaskHeader::peek(&out).expect("retries splice preserves the grammar");
+        RawTask { bytes: out.into(), hdr }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -673,5 +954,139 @@ mod tests {
             "q-ü",
             Payload::Step(StepTask { template: t, lo: 0, hi: 1 }),
         ));
+    }
+
+    fn sample_envelopes() -> Vec<TaskEnvelope> {
+        vec![
+            TaskEnvelope::new(
+                "m.exp",
+                Payload::Expansion(ExpansionTask {
+                    template: template(),
+                    lo: 0,
+                    hi: 4_000,
+                    max_branch: 64,
+                }),
+            ),
+            TaskEnvelope::new(
+                "m.sim",
+                Payload::Step(StepTask { template: template(), lo: 40, hi: 50 }),
+            ),
+            TaskEnvelope::new(
+                "m.agg",
+                Payload::Aggregate(AggregateTask {
+                    study_id: "study-1".into(),
+                    dir: "/tmp/leaf".into(),
+                    expected_bundles: 7,
+                }),
+            ),
+            TaskEnvelope::new("m.ctl", Payload::Control(ControlMsg::StopWorker)),
+            TaskEnvelope::new(
+                "m.ctl",
+                Payload::Control(ControlMsg::Ping { token: "tk".into() }),
+            ),
+        ]
+    }
+
+    #[test]
+    fn header_peek_matches_full_decode_on_every_payload_kind() {
+        for t in sample_envelopes() {
+            let bin = encode_v2(&t);
+            let h = TaskHeader::peek(&bin).expect("peek");
+            assert_eq!(h.queue, t.queue);
+            assert_eq!(h.priority, t.priority);
+            assert_eq!(h.retries_left, t.retries_left);
+            match &t.payload {
+                Payload::Expansion(e) => {
+                    assert_eq!(h.kind, PayloadKind::Expansion);
+                    assert_eq!(
+                        h.wave,
+                        Some((e.template.study_id.clone(), e.template.step_name.clone()))
+                    );
+                    assert_eq!(h.range, Some((e.lo, e.hi)));
+                }
+                Payload::Step(s) => {
+                    assert_eq!(h.kind, PayloadKind::Step);
+                    assert_eq!(
+                        h.wave,
+                        Some((s.template.study_id.clone(), s.template.step_name.clone()))
+                    );
+                    assert_eq!(h.range, Some((s.lo, s.hi)));
+                }
+                Payload::Aggregate(_) => {
+                    assert_eq!(h.kind, PayloadKind::Aggregate);
+                    assert_eq!(h.wave, None);
+                    assert_eq!(h.range, None);
+                }
+                Payload::Control(ControlMsg::StopWorker) => assert_eq!(h.kind, PayloadKind::Stop),
+                Payload::Control(ControlMsg::Ping { .. }) => assert_eq!(h.kind, PayloadKind::Ping),
+            }
+        }
+    }
+
+    #[test]
+    fn header_peek_rejects_exactly_what_decode_v2_rejects() {
+        // Truncations, trailing bytes, and every 1-byte corruption must
+        // classify identically under the full and header-only decoders:
+        // a blob admission accepts is a blob delivery can trust.
+        let bin = encode_v2(&sample_envelopes()[1]);
+        for cut in 0..bin.len() {
+            assert_eq!(
+                decode_v2(&bin[..cut]).is_err(),
+                TaskHeader::peek(&bin[..cut]).is_err(),
+                "cut {cut}"
+            );
+        }
+        let mut padded = bin.clone();
+        padded.push(0);
+        assert!(TaskHeader::peek(&padded).unwrap_err().contains("trailing"));
+        for i in 0..bin.len() {
+            for flip in [0x01u8, 0x80] {
+                let mut bad = bin.clone();
+                bad[i] ^= flip;
+                assert_eq!(
+                    decode_v2(&bad).is_ok(),
+                    TaskHeader::peek(&bad).is_ok(),
+                    "flip {flip:#04x} at {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn raw_task_keeps_v2_bytes_verbatim_and_transcodes_v1_once() {
+        let t = &sample_envelopes()[1];
+        let bin = encode_v2(t);
+        let raw = RawTask::from_wire(bin.clone()).expect("admit v2");
+        assert_eq!(raw.bytes(), &bin[..]);
+        assert_eq!(raw.wire_len(), bin.len());
+        assert_eq!(raw.decode(), *t);
+        // v1 JSON admits through a single transcode to the same blob.
+        let from_v1 = RawTask::from_wire(encode(t).into_bytes()).expect("admit v1");
+        assert_eq!(from_v1.bytes(), &bin[..]);
+        // Two shares point at one allocation.
+        let a = raw.share();
+        let b = raw.share();
+        assert!(std::ptr::eq(a.as_ptr(), b.as_ptr()));
+        // Garbage is refused at admission.
+        assert!(RawTask::from_wire(vec![0x7f, 1, 2]).is_err());
+        assert!(RawTask::from_wire(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn with_retries_splices_only_the_retries_varint() {
+        let mut t = sample_envelopes()[0].clone();
+        t.retries_left = 300; // two-byte varint
+        let raw = RawTask::from_envelope(&t);
+        let spliced = raw.with_retries(299);
+        assert_eq!(spliced.retries_left(), 299);
+        let mut want = t.clone();
+        want.retries_left = 299;
+        assert_eq!(spliced.decode(), want);
+        assert_eq!(spliced.bytes(), encode_v2(&want));
+        // Crossing a varint width boundary (300 -> 2) shrinks the blob.
+        let narrow = raw.with_retries(2);
+        assert_eq!(narrow.wire_len(), raw.wire_len() - 1);
+        want.retries_left = 2;
+        assert_eq!(narrow.decode(), want);
     }
 }

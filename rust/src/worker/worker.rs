@@ -118,6 +118,9 @@ pub struct WorkerConfig {
     /// With a grant-scheduling broker this bounds how much task payload
     /// one refill round trip can carry; the refill window then adapts
     /// to what the scheduler actually granted (see [`Worker::run`]).
+    /// Sizes are uniformly wire-v2 envelope bytes — the broker stores,
+    /// budgets, and transmits the same canonical blob, so the bytes
+    /// granted are exactly the bytes that arrive on the socket.
     pub budget_bytes: u64,
 }
 

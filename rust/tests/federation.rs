@@ -29,6 +29,16 @@ fn serve_members_tenants(
     sched: SchedMode,
     tenants: &TenantConfig,
 ) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
+    serve_members_codec(n, cfg, sched, tenants, true)
+}
+
+fn serve_members_codec(
+    n: usize,
+    cfg: &merlin::net::ServeConfig,
+    sched: SchedMode,
+    tenants: &TenantConfig,
+    codec_passthrough: bool,
+) -> (Vec<Broker>, Vec<BrokerServer>, Vec<String>) {
     let mut brokers = Vec::new();
     let mut servers = Vec::new();
     let mut addrs = Vec::new();
@@ -36,6 +46,7 @@ fn serve_members_tenants(
         let broker = Broker::new(BrokerConfig {
             sched,
             tenants: tenants.clone(),
+            codec_passthrough,
             ..BrokerConfig::default()
         });
         let server =
@@ -470,6 +481,22 @@ const PARITY_TENANT: &str = "acme";
 /// [`PARITY_TENANT`] namespace: authenticated sessions must change who
 /// the work is accounted to, never what any operation returns.
 fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: bool, auth: bool) {
+    wire_parity_suite_codec(cfg, client, grants, auth, true);
+}
+
+/// [`wire_parity_suite`] with the codec dimension explicit: members
+/// either serve deliveries as stored blobs (`passthrough`, the
+/// production path — zero `encode_v2` calls on pop) or decode and
+/// re-encode every delivery (the test-only struct fallback). Every
+/// observable result must be identical either way; only the codec
+/// counters may differ, and they must prove which path actually ran.
+fn wire_parity_suite_codec(
+    cfg: merlin::net::ServeConfig,
+    client: ClientMode,
+    grants: bool,
+    auth: bool,
+    passthrough: bool,
+) {
     let sched = if grants { SchedMode::Srwf } else { SchedMode::Fifo };
     let tenants = if auth {
         TenantConfig {
@@ -479,7 +506,7 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: 
     } else {
         TenantConfig::default()
     };
-    let (brokers, servers, addrs) = serve_members_tenants(2, &cfg, sched, &tenants);
+    let (brokers, servers, addrs) = serve_members_codec(2, &cfg, sched, &tenants, passthrough);
     let connect = || match client {
         ClientMode::InProcess => {
             // Same Broker instances, no wire: the semantic baseline the
@@ -535,6 +562,23 @@ fn wire_parity_suite(cfg: merlin::net::ServeConfig, client: ClientMode, grants: 
         );
     } else {
         assert_eq!(sched_stats.granted, 0, "fifo members never grant: {sched_stats:?}");
+    }
+
+    // Codec counters prove which delivery codec actually served the
+    // pop: stored-blob passthrough never encodes on delivery, the
+    // struct fallback re-encodes every message — while every assertion
+    // in this suite holds identically for both. In-process handles
+    // never cross the wire, so neither counter moves.
+    let codec = fed.codec_stats();
+    if matches!(client, ClientMode::InProcess) {
+        assert_eq!(codec.saved_encodes, 0, "no wire, no blob pops: {codec:?}");
+        assert_eq!(codec.delivery_encodes, 0, "no wire, no re-encodes: {codec:?}");
+    } else if passthrough {
+        assert!(codec.saved_encodes >= 6, "blob path must have served the pop: {codec:?}");
+        assert_eq!(codec.delivery_encodes, 0, "passthrough never re-encodes: {codec:?}");
+    } else {
+        assert_eq!(codec.saved_encodes, 0, "struct fallback never ships stored blobs: {codec:?}");
+        assert!(codec.delivery_encodes >= 6, "fallback re-encodes every delivery: {codec:?}");
     }
 
     // Long-poll fetch waits for a late publisher instead of returning
@@ -680,6 +724,48 @@ fn wire_parity_mux_mode_no_grants() {
 #[test]
 fn wire_parity_mux_mode_auth() {
     wire_parity_suite(merlin::net::ServeConfig::reactor(), ClientMode::Mux, true, true);
+}
+
+// The blob-vs-struct codec dimension: members running the test-only
+// decode-and-re-encode fallback must be observably identical to the
+// stored-blob passthrough members above — same frames decoded, same
+// counters everywhere except the codec section, which must show the
+// fallback actually re-encoding. Proves the zero-copy path changes
+// *nothing* a client can see except the work the broker no longer does.
+
+#[test]
+fn wire_parity_threaded_mode_struct_fallback() {
+    wire_parity_suite_codec(
+        merlin::net::ServeConfig::threaded(),
+        ClientMode::Mutex,
+        true,
+        false,
+        false,
+    );
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_reactor_mode_struct_fallback() {
+    wire_parity_suite_codec(
+        merlin::net::ServeConfig::reactor(),
+        ClientMode::Mutex,
+        true,
+        false,
+        false,
+    );
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn wire_parity_mux_mode_struct_fallback() {
+    wire_parity_suite_codec(
+        merlin::net::ServeConfig::reactor(),
+        ClientMode::Mux,
+        true,
+        false,
+        false,
+    );
 }
 
 /// Auth is a hard gate at the federation's front door: a token-less (or

@@ -8,8 +8,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use merlin::broker::core::{Broker, BrokerConfig, BrokerError, SchedMode};
+use merlin::broker::wal::{self, DurabilityConfig, FsyncPolicy};
 use merlin::broker::wire;
-use merlin::broker::{TenantConfig, TenantSpec};
+use merlin::broker::{TenantConfig, TenantSpec, NUM_SHARDS};
 use merlin::coordinator::resubmit::ranges_of;
 use merlin::hierarchy::plan::HierarchyPlan;
 use merlin::hierarchy::{expand, flat, root_task};
@@ -237,12 +238,15 @@ fn prop_message_size_cap_is_exact() {
                 token: "x".repeat(g.usize_in(0, 3000)),
             }),
         );
-        let size = ser::encode(&t).len();
+        // The broker stores (and budgets, and ships) the canonical v2
+        // blob, so the cap binds at the v2 wire length — not the v1
+        // JSON size the struct arrived as.
+        let size = ser::encode_v2(&t).len();
         let result = broker.publish(t);
         assert_eq!(
             result.is_ok(),
             size <= limit,
-            "cap must bind exactly at the wire size ({size} vs {limit})"
+            "cap must bind exactly at the v2 wire size ({size} vs {limit})"
         );
     });
 }
@@ -313,6 +317,184 @@ fn prop_v2_decoder_rejects_random_corruption() {
         let bit = 1u8 << g.u64_in(0, 7);
         corrupt[idx] ^= bit;
         let _ = ser::decode_wire(&corrupt); // must not panic
+    });
+}
+
+/// The routing fields a header-only decode of `t`'s v2 encoding must
+/// report, derived from the struct — the oracle for `TaskHeader::peek`.
+#[allow(clippy::type_complexity)]
+fn header_fields(
+    t: &TaskEnvelope,
+) -> (String, u8, u32, ser::PayloadKind, Option<(String, String)>, Option<(u64, u64)>) {
+    let (kind, wave, range) = match &t.payload {
+        Payload::Expansion(e) => (
+            ser::PayloadKind::Expansion,
+            Some((e.template.study_id.clone(), e.template.step_name.clone())),
+            Some((e.lo, e.hi)),
+        ),
+        Payload::Step(s) => (
+            ser::PayloadKind::Step,
+            Some((s.template.study_id.clone(), s.template.step_name.clone())),
+            Some((s.lo, s.hi)),
+        ),
+        Payload::Aggregate(_) => (ser::PayloadKind::Aggregate, None, None),
+        Payload::Control(merlin::task::ControlMsg::StopWorker) => {
+            (ser::PayloadKind::Stop, None, None)
+        }
+        Payload::Control(merlin::task::ControlMsg::Ping { .. }) => {
+            (ser::PayloadKind::Ping, None, None)
+        }
+    };
+    (t.queue.clone(), t.priority, t.retries_left, kind, wave, range)
+}
+
+#[test]
+fn prop_header_peek_agrees_with_full_decode() {
+    // The admission fast path's contract: `TaskHeader::peek` accepts
+    // exactly the byte strings `decode_v2` accepts, and reports the
+    // same routing fields — on valid envelopes AND on corrupted input.
+    // This equivalence is what lets the broker validate once at
+    // admission and treat `RawTask::decode` as infallible ever after.
+    cases(0x9EE4, 400, |g| {
+        let t = merlin::testing::prop::arb::envelope(g);
+        let bin = ser::encode_v2(&t);
+        let h = ser::TaskHeader::peek(&bin).expect("peek accepts whatever decode_v2 accepts");
+        assert_eq!(
+            (h.queue.clone(), h.priority, h.retries_left, h.kind, h.wave.clone(), h.range),
+            header_fields(&t),
+            "peek must report the routing fields the full decode would"
+        );
+        // Truncations reject in both decoders (the format is
+        // length-delimited end to end)...
+        if bin.len() > 2 {
+            let cut = g.usize_in(1, bin.len() - 1);
+            assert!(ser::TaskHeader::peek(&bin[..cut]).is_err(), "peek truncated at {cut}");
+            assert!(ser::decode_v2(&bin[..cut]).is_err(), "decode truncated at {cut}");
+        }
+        // ...and a random bit flip is accepted by peek iff the full
+        // decode accepts it, with the surviving fields in agreement.
+        let mut corrupt = bin.clone();
+        let idx = g.usize_in(0, corrupt.len() - 1);
+        corrupt[idx] ^= 1u8 << g.u64_in(0, 7);
+        match (ser::TaskHeader::peek(&corrupt), ser::decode_v2(&corrupt)) {
+            (Ok(h), Ok(full)) => assert_eq!(
+                (h.queue, h.priority, h.retries_left, h.kind, h.wave, h.range),
+                header_fields(&full),
+                "peek and decode disagree on flipped byte {idx}"
+            ),
+            (Err(_), Err(_)) => {}
+            (peeked, decoded) => panic!(
+                "peek/decode language mismatch on flipped byte {idx}: peek_ok={} decode_ok={}",
+                peeked.is_ok(),
+                decoded.is_ok()
+            ),
+        }
+    });
+}
+
+#[test]
+fn prop_blob_and_struct_publish_are_indistinguishable() {
+    // The single-serialization invariant: admitting a pre-encoded v2
+    // blob (the wire path) and admitting the decoded struct (the
+    // in-process path) must leave identical bytes everywhere — the
+    // delivered frames and the write-ahead logs both.
+    cases(0xB10B, 12, |g| {
+        let open = |tag: &str, case: usize| {
+            let dir = std::env::temp_dir().join(format!(
+                "merlin-prop-codec-{tag}-{}-{case}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut cfg = DurabilityConfig::new(&dir);
+            cfg.fsync = FsyncPolicy::Never;
+            (Broker::open_durable(BrokerConfig::default(), cfg).unwrap(), dir)
+        };
+        let (a, dir_a) = open("struct", g.case);
+        let (b, dir_b) = open("blob", g.case);
+        let n = g.usize_in(1, 40);
+        let mut queues = BTreeSet::new();
+        for i in 0..n {
+            let mut t = merlin::testing::prop::arb::envelope(g);
+            t.id = format!("c{}-{i}", g.case);
+            queues.insert(t.queue.clone());
+            let blob = ser::encode_v2(&t);
+            a.publish(t).unwrap();
+            b.publish_raw(ser::RawTask::from_wire(blob).expect("valid v2 blob"))
+                .unwrap();
+        }
+        // Same delivery schedule, byte-identical blobs.
+        let refs: Vec<&str> = queues.iter().map(String::as_str).collect();
+        let ca = a.register_consumer();
+        let cb = b.register_consumer();
+        let mut seen = 0usize;
+        loop {
+            let da = a.fetch_n_budgeted_raw(ca, &refs, 0, 8, u64::MAX, Duration::ZERO);
+            let db = b.fetch_n_budgeted_raw(cb, &refs, 0, 8, u64::MAX, Duration::ZERO);
+            assert_eq!(da.len(), db.len(), "delivery schedules diverged");
+            if da.is_empty() {
+                break;
+            }
+            for (x, y) in da.iter().zip(db.iter()) {
+                assert_eq!(x.raw.bytes(), y.raw.bytes(), "delivered blobs diverged");
+            }
+            seen += da.len();
+            let tags_a: Vec<u64> = da.iter().map(|d| d.tag).collect();
+            let tags_b: Vec<u64> = db.iter().map(|d| d.tag).collect();
+            a.ack_batch(&tags_a).unwrap();
+            b.ack_batch(&tags_b).unwrap();
+        }
+        assert_eq!(seen, n, "conservation through both admission paths");
+        // And the durable trail: every shard's WAL is byte-identical.
+        drop(a);
+        drop(b);
+        for si in 0..NUM_SHARDS {
+            let wa = std::fs::read(wal::wal_path(&dir_a, si)).unwrap_or_default();
+            let wb = std::fs::read(wal::wal_path(&dir_b, si)).unwrap_or_default();
+            assert_eq!(wa, wb, "shard {si} WAL diverged between struct and blob publishes");
+        }
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    });
+}
+
+#[test]
+fn prop_corruption_is_rejected_at_admission_never_at_delivery() {
+    // The validate-once contract end to end: a damaged blob either
+    // fails `RawTask::from_wire` (admission) or is admitted as *some*
+    // valid envelope — and then the broker delivers exactly the
+    // admitted bytes, and the infallible decode cannot panic. Delivery
+    // never re-validates, so admission must be the only gate.
+    cases(0xADC7, 300, |g| {
+        let t = merlin::testing::prop::arb::envelope(g);
+        let bin = ser::encode_v2(&t);
+        // Truncations never get in.
+        if bin.len() > 2 {
+            let cut = g.usize_in(1, bin.len() - 1);
+            assert!(
+                ser::RawTask::from_wire(bin[..cut].to_vec()).is_err(),
+                "truncated blob admitted at {cut}"
+            );
+        }
+        // A bit flip either bounces at admission or yields a blob that
+        // flows to delivery untouched.
+        let mut corrupt = bin.clone();
+        let idx = g.usize_in(0, corrupt.len() - 1);
+        corrupt[idx] ^= 1u8 << g.u64_in(0, 7);
+        if let Ok(raw) = ser::RawTask::from_wire(corrupt) {
+            let admitted = raw.bytes().to_vec();
+            let q = raw.queue().to_string();
+            let broker = Broker::default();
+            if broker.publish_raw(raw).is_err() {
+                return; // size caps are an admission refusal too
+            }
+            let c = broker.register_consumer();
+            let got =
+                broker.fetch_n_budgeted_raw(c, &[q.as_str()], 0, 1, u64::MAX, Duration::ZERO);
+            assert_eq!(got.len(), 1, "admitted task must be deliverable");
+            assert_eq!(got[0].raw.bytes(), &admitted[..], "delivery altered admitted bytes");
+            let _ = got[0].raw.decode(); // must not panic: peek ≡ decode_v2
+            broker.ack(got[0].tag).unwrap();
+        }
     });
 }
 
@@ -447,7 +629,9 @@ fn prop_budgeted_fetch_never_exceeds_budget_yet_always_progresses() {
             if got.is_empty() {
                 break;
             }
-            let bytes: u64 = got.iter().map(|d| ser::encode(&d.task).len() as u64).sum();
+            // Budgets are accounted in canonical v2 blob bytes — the
+            // exact bytes a wire consumer would receive.
+            let bytes: u64 = got.iter().map(|d| ser::encode_v2(&d.task).len() as u64).sum();
             if got.len() > 1 {
                 assert!(
                     bytes <= budget,
